@@ -1,0 +1,136 @@
+//! The paper's analytical model (Sec. 3.3) fitted from *real
+//! measurements* of the tiny model pair, end to end:
+//!
+//! 1. measure per-round accepted counts -> Eq. 4 estimator -> fit
+//!    l(s) = c·s^γ (Fig. 2);
+//! 2. measure t_L(b, s) per bucket -> fit α_b·s + β (Fig. 3);
+//! 3. combine into the Eq. 7 total-time model, solve Eq. 12 for s_opt,
+//!    and compare the predicted s_opt(b) against the grid-searched
+//!    optimum from actual execution.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example analytic_model
+//! ```
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use specbatch::analytic::{AcceptanceModel, StepCostModel, TotalTimeModel};
+use specbatch::engine::{Engine, EngineConfig};
+use specbatch::model::Model;
+use specbatch::runtime::Runtime;
+use specbatch::scheduler::SpecPolicy;
+use specbatch::util::prng::Pcg64;
+
+fn main() -> Result<()> {
+    specbatch::util::logging::init_from_env();
+    let rt = Runtime::load("artifacts")?;
+    let dataset = rt.dataset()?;
+
+    // --- 1. acceptance curve from real speculative runs ---
+    let mut engine = Engine::new(
+        &rt,
+        EngineConfig {
+            record_acceptance: true,
+            stop_at_eos: false,
+            ..EngineConfig::default()
+        },
+    )?;
+    let s_probe = 6.min(rt.manifest.max_spec_len(4));
+    let mut rng = Pcg64::new(0xACC);
+    let mut samples = Vec::new();
+    for _ in 0..6 {
+        let prompts: Vec<Vec<i32>> = dataset
+            .sample_eval(&mut rng, 4)
+            .into_iter()
+            .map(|p| p.ids)
+            .collect();
+        let out = engine.generate_batch(&prompts, 32, &SpecPolicy::Fixed(s_probe))?;
+        samples.extend(out.stats.accept_samples);
+    }
+    let acceptance = AcceptanceModel::fit_samples(&samples, s_probe)?;
+    println!(
+        "l(s) ≈ {:.3}·s^{:.3} from {} samples (r² {:.3}; paper: 0.9·s^0.548)",
+        acceptance.c,
+        acceptance.gamma,
+        samples.len(),
+        acceptance.r2
+    );
+
+    // --- 2. step costs per bucket + 3. predicted vs measured s_opt ---
+    let llm = Model::new(&rt, "llm")?;
+    let ssm = Model::new(&rt, "ssm")?;
+    println!("\n{:>6} {:>12} {:>12} {:>14} {:>13}", "batch", "alpha(ms)", "beta(ms)", "predicted s*", "measured s*");
+    for &b in &rt.manifest.batch_buckets {
+        let max_s = rt.manifest.max_spec_len(b);
+        // measure t_L(b, s)
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for s in 0..=max_s {
+            let mut kv = llm.new_kv(b)?;
+            let tokens = vec![5i32; b * llm.spec.max_prompt];
+            let plens = vec![8i32; b];
+            llm.prefill(&tokens, &plens, b, &mut kv)?;
+            let feed = vec![7i32; b * (s + 1)];
+            let clamp = vec![9u32; b];
+            llm.verify(&feed, s, b, &mut kv)?; // warmup
+            kv.clamp_to(&clamp);
+            let reps = 10;
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                llm.verify(&feed, s, b, &mut kv)?;
+                kv.clamp_to(&clamp);
+            }
+            xs.push(s as f64);
+            ys.push(t0.elapsed().as_secs_f64() / reps as f64);
+        }
+        // measure t_S(b, 1): a speculate(s=1) call is ingest+1 draft
+        let t_ssm = {
+            let mut kv = ssm.new_kv(b)?;
+            let tokens = vec![5i32; b * ssm.spec.max_prompt];
+            let plens = vec![8i32; b];
+            ssm.prefill(&tokens, &plens, b, &mut kv)?;
+            let delta = vec![7i32; b * 2];
+            let dlens = vec![1i32; b];
+            let clamp = vec![9u32; b];
+            ssm.speculate(&delta, &dlens, 1, b, &mut kv)?;
+            kv.clamp_to(&clamp);
+            let reps = 10;
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                ssm.speculate(&delta, &dlens, 1, b, &mut kv)?;
+                kv.clamp_to(&clamp);
+            }
+            t0.elapsed().as_secs_f64() / reps as f64
+        };
+        let cost = StepCostModel::fit(b, &xs, &ys, t_ssm)?;
+        let model = TotalTimeModel { acceptance, cost };
+        let predicted = model.s_opt(max_s);
+
+        // measured optimum by grid search on real generation
+        let mut best = (0usize, f64::INFINITY);
+        for s in 0..=max_s {
+            let prompts: Vec<Vec<i32>> = dataset
+                .sample_eval(&mut rng, b)
+                .into_iter()
+                .map(|p| p.ids)
+                .collect();
+            let policy = if s == 0 { SpecPolicy::NoSpec } else { SpecPolicy::Fixed(s) };
+            let out = engine.generate_batch(&prompts, 16, &policy)?;
+            let lat = out.stats.per_token_latency();
+            if lat < best.1 {
+                best = (s, lat);
+            }
+        }
+        println!(
+            "{b:>6} {:>12.3} {:>12.3} {predicted:>14} {:>13}",
+            cost.alpha * 1e3,
+            cost.beta * 1e3,
+            best.0
+        );
+    }
+    println!("\n(Eq. 12 predicts s_opt from the fitted model; the measured column is");
+    println!(" the grid-searched optimum on real execution — shapes should agree)");
+    Ok(())
+}

@@ -1,0 +1,108 @@
+//! End-to-end serving driver (the repo's E2E validation run, recorded in
+//! EXPERIMENTS.md): a real server thread owning the PJRT runtime serves
+//! batched speculative requests from a real client thread generating
+//! Gamma-distributed traffic over message queues — the paper's Sec. 5.3
+//! setting, scaled to the tiny trained model pair.
+//!
+//! Runs the same trace under all four comparison points (no-spec,
+//! fixed-2, fixed-4, adaptive-with-profiling) and reports end-to-end
+//! request latency (queueing included) and throughput.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_dynamic
+//! # knobs: SPECBATCH_REQUESTS=48 SPECBATCH_INTERVAL=0.4 SPECBATCH_CV=2
+//! ```
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use specbatch::config::PolicySpec;
+use specbatch::dataset::Dataset;
+use specbatch::server::{run_experiment, ServerConfig};
+use specbatch::traffic::{Trace, TrafficPattern};
+use specbatch::util::csv::{f, Csv};
+
+fn env_f64(key: &str, default: f64) -> f64 {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() -> Result<()> {
+    specbatch::util::logging::init_from_env();
+    let artifacts = PathBuf::from("artifacts");
+    let dataset = Dataset::load(artifacts.join("dataset.json"))?;
+
+    let n_requests = env_f64("SPECBATCH_REQUESTS", 40.0) as usize;
+    let interval = env_f64("SPECBATCH_INTERVAL", 0.25);
+    let cv = env_f64("SPECBATCH_CV", 2.0);
+    let tokens = env_f64("SPECBATCH_TOKENS", 24.0) as usize;
+
+    // ONE trace shared by all comparison points (paper methodology)
+    let pattern = TrafficPattern::Stationary { interval, cv };
+    let trace = Trace::generate(&pattern, &dataset.eval, n_requests, 11);
+    println!(
+        "trace: {n_requests} requests over {:.1}s ({}), {tokens} tokens each",
+        trace.span(),
+        pattern.label()
+    );
+
+    let policies = [
+        PolicySpec::None,
+        PolicySpec::Fixed(2),
+        PolicySpec::Fixed(4),
+        PolicySpec::Adaptive,
+    ];
+    let mut csv = Csv::new(&[
+        "policy",
+        "mean_latency_s",
+        "p50_s",
+        "p90_s",
+        "p99_s",
+        "throughput_tok_s",
+    ]);
+    let mut means = Vec::new();
+    for policy in policies {
+        let label = policy.label();
+        let cfg = ServerConfig {
+            max_batch: 8,
+            max_new_tokens: tokens,
+            ..ServerConfig::default()
+        };
+        let (rec, lut) = run_experiment(artifacts.clone(), cfg, policy, None, &trace)?;
+        if let Some(lut) = lut {
+            println!("[{label}] profiled LUT: {}", lut.to_json().compact());
+        }
+        let s = rec.summary();
+        let (p50, p90, p99) = rec.percentiles();
+        let tput = rec.throughput_tokens_per_s();
+        println!(
+            "[{label:>8}] latency mean {:.3}s p50 {p50:.3}s p90 {p90:.3}s p99 {p99:.3}s | {tput:.1} tok/s",
+            s.mean
+        );
+        csv.row(&[
+            label.clone(),
+            f(s.mean),
+            f(p50),
+            f(p90),
+            f(p99),
+            f(tput),
+        ]);
+        means.push((label, s.mean));
+        rec.to_csv()
+            .write_file(format!("results/serve_dynamic_{}.csv", means.last().unwrap().0))?;
+    }
+    csv.write_file("results/serve_dynamic_summary.csv")?;
+    println!("-> results/serve_dynamic_summary.csv (+ per-policy request CSVs)");
+
+    let get = |n: &str| means.iter().find(|(m, _)| m == n).map(|(_, v)| *v).unwrap();
+    println!(
+        "\nadaptive vs no-spec: {:.2}x  | vs fixed-2: {:.2}x | vs fixed-4: {:.2}x",
+        get("no-spec") / get("adaptive"),
+        get("fixed-2") / get("adaptive"),
+        get("fixed-4") / get("adaptive"),
+    );
+    Ok(())
+}

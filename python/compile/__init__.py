@@ -1,0 +1,9 @@
+"""specbatch compile path (build-time only, never on the request path).
+
+Layers:
+  * ``kernels``  — L1 Pallas kernels + jnp oracles
+  * ``model``    — L2 OPT-style decoder with functional KV cache
+  * ``corpus``   — synthetic Markov instruction corpus + vocab + dataset
+  * ``train``    — brief Adam training of the LLM/SSM pair
+  * ``aot``      — lowers the executable matrix to HLO text + weights
+"""

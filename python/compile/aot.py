@@ -1,0 +1,290 @@
+"""AOT compile driver: corpus -> training -> HLO text + weights + manifest.
+
+Runs once at build time (`make artifacts`); the Rust coordinator is fully
+self-contained afterwards.  Outputs under ``artifacts/``:
+
+* ``manifest.json``        — models, weight tables, executable matrix,
+                             calling convention; written last (atomicity
+                             marker: its presence means the build is whole)
+* ``weights_{llm,ssm}.bin`` — flat little-endian f32 in WEIGHT_ORDER
+* ``<exe>.hlo.txt``        — one HLO-text module per (model, kind, b, s)
+* ``dataset.json``         — vocab + prompt set (profile/eval splits)
+* ``goldens.json``         — greedy continuations for Rust integration tests
+* ``cache/``               — trained-weight cache keyed by config fingerprint
+
+Interchange is HLO **text**, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import numpy as np
+
+from . import corpus as corpus_mod
+from . import engine_ref, train
+from .configs import (
+    LLM_CONFIG,
+    SSM_CONFIG,
+    ArtifactProfile,
+    ModelConfig,
+    active_profile,
+    config_fingerprint,
+    weights_fingerprint,
+)
+from .model import (
+    WEIGHT_ORDER,
+    Weights,
+    make_prefill,
+    make_speculate,
+    make_verify,
+    weight_shapes,
+)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _weight_sds(cfg: ModelConfig):
+    shapes = weight_shapes(cfg)
+    return [_sds(shapes[name], np.float32) for name in WEIGHT_ORDER]
+
+
+def lower_executable(kind: str, cfg: ModelConfig, batch: int, s: int) -> str:
+    """Lower one executable to HLO text.  Param order is the calling
+    convention recorded in the manifest."""
+    i32, f32 = np.int32, np.float32
+    kv = _sds(cfg.kv_shape(batch), f32)
+    w = _weight_sds(cfg)
+    if kind == "prefill":
+        fn = make_prefill(cfg, batch)
+        args = (_sds((batch, cfg.max_prompt), i32), _sds((batch,), i32), kv)
+    elif kind == "verify":
+        fn = make_verify(cfg, batch, s)
+        args = (_sds((batch, s + 1), i32), _sds((batch,), i32), kv)
+    elif kind == "speculate":
+        fn = make_speculate(cfg, batch, s)
+        args = (_sds((batch, 2), i32), _sds((batch,), i32), _sds((batch,), i32), kv)
+    else:
+        raise ValueError(kind)
+    lowered = jax.jit(fn).lower(*args, *w)
+    return to_hlo_text(lowered)
+
+
+def executable_matrix(profile: ArtifactProfile):
+    """Yield (name, kind, cfg, batch, s) for every executable to lower."""
+    for b in profile.batch_buckets:
+        yield f"llm_prefill_b{b}", "prefill", LLM_CONFIG, b, 0
+        yield f"ssm_prefill_b{b}", "prefill", SSM_CONFIG, b, 0
+        for s in profile.verify_lengths:
+            yield f"llm_verify_b{b}_s{s}", "verify", LLM_CONFIG, b, s
+        for s in profile.speculate_lengths:
+            yield f"ssm_speculate_b{b}_s{s}", "speculate", SSM_CONFIG, b, s
+    for b, s in profile.extra_verify:
+        yield f"llm_verify_b{b}_s{s}", "verify", LLM_CONFIG, b, s
+    for b, s in profile.extra_speculate:
+        yield f"ssm_speculate_b{b}_s{s}", "speculate", SSM_CONFIG, b, s
+
+
+def export_weights(path: str, w: Weights, cfg: ModelConfig):
+    """Flat little-endian f32 blob in WEIGHT_ORDER; returns the table."""
+    table = []
+    offset = 0
+    with open(path, "wb") as f:
+        for name in WEIGHT_ORDER:
+            arr = np.asarray(w[name], dtype="<f4")
+            expect = weight_shapes(cfg)[name]
+            if tuple(arr.shape) != tuple(expect):
+                raise AssertionError(f"{name}: {arr.shape} != {expect}")
+            f.write(arr.tobytes())
+            table.append(
+                {
+                    "name": name,
+                    "shape": list(arr.shape),
+                    "offset": offset,
+                    "numel": int(arr.size),
+                }
+            )
+            offset += arr.size * 4
+    return table, offset
+
+
+def _get_weights(cfg: ModelConfig, corpus, profile: ArtifactProfile,
+                 cache_dir: str, fingerprint: str, log=print) -> Weights:
+    # fingerprint here is the weights-only fingerprint: lowering changes
+    # do not invalidate the training cache
+    steps = (
+        profile.train_steps_llm if cfg.name == "llm" else profile.train_steps_ssm
+    )
+    cache = os.path.join(cache_dir, f"{cfg.name}_{fingerprint}.npz")  # noqa: F841 (kept name)
+    if os.path.exists(cache):
+        log(f"[aot] cached weights: {cache}")
+        return train.load_weights_npz(cache)
+    w = train.train_model(
+        cfg, corpus, steps,
+        batch=profile.train_batch, seq=profile.train_seq,
+        seed=0 if cfg.name == "llm" else 1, log=log,
+    )
+    os.makedirs(cache_dir, exist_ok=True)
+    train.save_weights_npz(cache, w)
+    return w
+
+
+def write_goldens(path: str, w_llm, w_ssm, prompts, *, n_new=24, log=print):
+    """Greedy continuations + a spec-equals-greedy cross-check, consumed by
+    the Rust integration tests."""
+    ids = [p.ids for p in prompts]
+    greedy = engine_ref.greedy_generate(w_llm, LLM_CONFIG, ids, n_new)
+    spec = engine_ref.spec_generate(
+        w_llm, LLM_CONFIG, w_ssm, SSM_CONFIG, ids, n_new, s=3
+    )
+    if spec != greedy:
+        raise AssertionError("speculative decode diverged from greedy decode")
+    payload = {
+        "n_new": n_new,
+        "cases": [
+            {"prompt": p, "greedy": g} for p, g in zip(ids, greedy)
+        ],
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f)
+    log(f"[aot] goldens: {len(ids)} prompts x {n_new} tokens (spec == greedy)")
+
+
+def build(out_dir: str, profile: ArtifactProfile, log=print) -> None:
+    t_start = time.time()
+    os.makedirs(out_dir, exist_ok=True)
+    fingerprint = config_fingerprint(profile)
+    manifest_path = os.path.join(out_dir, "manifest.json")
+
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            if json.load(f).get("fingerprint") == fingerprint:
+                log(f"[aot] artifacts up to date (fingerprint {fingerprint})")
+                return
+
+    log(f"[aot] profile={profile.name} fingerprint={fingerprint}")
+    corpus = corpus_mod.build_corpus()
+    prompts = corpus_mod.build_dataset(corpus)
+    corpus_mod.write_dataset(os.path.join(out_dir, "dataset.json"), corpus, prompts)
+    log(f"[aot] dataset: {len(prompts)} prompts")
+
+    cache_dir = os.path.join(out_dir, "cache")
+    w_fp = weights_fingerprint(profile)
+    w_llm = _get_weights(LLM_CONFIG, corpus, profile, cache_dir, w_fp, log)
+    w_ssm = _get_weights(SSM_CONFIG, corpus, profile, cache_dir, w_fp, log)
+    agree = train.agreement_rate(w_llm, LLM_CONFIG, w_ssm, SSM_CONFIG, corpus)
+    log(f"[aot] SSM/LLM argmax agreement on held-out text: {agree:.3f}")
+
+    models = {}
+    for cfg, w in ((LLM_CONFIG, w_llm), (SSM_CONFIG, w_ssm)):
+        fname = f"weights_{cfg.name}.bin"
+        table, nbytes = export_weights(os.path.join(out_dir, fname), w, cfg)
+        models[cfg.name] = {
+            "config": cfg.to_json(),
+            "weights_file": fname,
+            "weights_bytes": nbytes,
+            "weights": table,
+            "n_params": cfg.n_params(),
+        }
+        log(f"[aot] {fname}: {nbytes / 1e6:.1f} MB")
+
+    write_goldens(
+        os.path.join(out_dir, "goldens.json"), w_llm, w_ssm,
+        [p for p in prompts if p.split == "eval"][:4], log=log,
+    )
+
+    exes = []
+    matrix = list(executable_matrix(profile))
+    for i, (name, kind, cfg, b, s) in enumerate(matrix):
+        t0 = time.time()
+        text = lower_executable(kind, cfg, b, s)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        exes.append(
+            {
+                "name": name,
+                "file": fname,
+                "model": cfg.name,
+                "kind": kind,
+                "batch": b,
+                "s": s,
+            }
+        )
+        log(
+            f"[aot] [{i + 1}/{len(matrix)}] {fname} "
+            f"({len(text) / 1e3:.0f} kB, {time.time() - t0:.1f}s)"
+        )
+
+    manifest = {
+        "fingerprint": fingerprint,
+        "profile": profile.name,
+        "format_version": 3,
+        "weight_order": list(WEIGHT_ORDER),
+        "calling_convention": {
+            "prefill": ["tokens[B,P]i32", "plens[B]i32", "kv f32", "*weights"],
+            "verify": ["tokens[B,s+1]i32", "lens[B]i32", "kv f32", "*weights"],
+            "speculate": [
+                "delta[B,2]i32", "dlens[B]i32", "lens[B]i32", "kv f32", "*weights",
+            ],
+            "outputs": "(pred i32, kv' f32) as a 2-tuple",
+        },
+        "models": models,
+        "executables": exes,
+        "batch_buckets": list(profile.batch_buckets),
+        "verify_lengths": list(profile.verify_lengths),
+        "speculate_lengths": list(profile.speculate_lengths),
+        "dataset": "dataset.json",
+        "goldens": "goldens.json",
+        "agreement_rate": agree,
+    }
+    tmp = manifest_path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(manifest, f, indent=1)
+    os.replace(tmp, manifest_path)
+    log(f"[aot] done: {len(exes)} executables in {time.time() - t_start:.0f}s")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--profile",
+        default=None,
+        choices=["full", "quick"],
+        help="artifact profile (default: $SPECBATCH_PROFILE or full)",
+    )
+    args = ap.parse_args()
+    profile = (
+        active_profile()
+        if args.profile is None
+        else __import__(
+            "compile.configs", fromlist=["PROFILES"]
+        ).PROFILES[args.profile]
+    )
+    build(os.path.abspath(args.out), profile)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

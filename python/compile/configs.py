@@ -1,0 +1,174 @@
+"""Model and artifact-matrix configuration for the specbatch compile path.
+
+Two OPT-style decoder-only transformers are built at artifact time:
+
+* ``LLM_CONFIG``  — the "large" target model that verifies speculations.
+* ``SSM_CONFIG``  — the small speculative model (draft model).
+
+Dimensions are laptop-scale stand-ins for the paper's OPT-6.7B / OPT-125M
+pair (see DESIGN.md §Substitutions): the acceptance behaviour l(s) emerges
+from a *real* draft/target pair trained on the same corpus, which is the
+mechanism the paper relies on, at a size the CPU PJRT client can serve.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyperparameters of one decoder-only transformer."""
+
+    name: str
+    vocab: int          # vocabulary size (shared between LLM and SSM)
+    d_model: int        # residual width
+    n_layers: int
+    n_heads: int
+    d_head: int         # per-head width; n_heads * d_head == d_model
+    d_ff: int           # MLP hidden width
+    max_seq: int        # KV-cache capacity (prompt + generation + slack)
+    max_prompt: int     # prefill pad width
+
+    def __post_init__(self) -> None:
+        if self.n_heads * self.d_head != self.d_model:
+            raise ValueError(
+                f"{self.name}: n_heads*d_head ({self.n_heads}*{self.d_head}) "
+                f"!= d_model ({self.d_model})"
+            )
+        if self.max_prompt >= self.max_seq:
+            raise ValueError(f"{self.name}: max_prompt must be < max_seq")
+
+    @property
+    def kv_shape_per_batch(self):
+        """KV-cache shape [L, 2, B, H, S_max, d_head] without the batch dim."""
+        return (self.n_layers, 2, self.n_heads, self.max_seq, self.d_head)
+
+    def kv_shape(self, batch: int):
+        l, two, h, s, d = self.kv_shape_per_batch
+        return (l, two, batch, h, s, d)
+
+    def n_params(self) -> int:
+        """Approximate parameter count (embeddings + stacked blocks)."""
+        d, f, l, v = self.d_model, self.d_ff, self.n_layers, self.vocab
+        per_layer = 4 * d * d + 4 * d + 2 * d * f + f + d + 4 * d
+        return v * d + self.max_seq * d + l * per_layer + 2 * d
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+# Shared vocabulary between LLM and SSM (speculative decoding requires it).
+VOCAB_SIZE = 512
+MAX_SEQ = 224       # prompt (<=64) + 128 generated + speculation slack
+MAX_PROMPT = 64
+
+LLM_CONFIG = ModelConfig(
+    name="llm",
+    vocab=VOCAB_SIZE,
+    d_model=192,
+    n_layers=4,
+    n_heads=6,
+    d_head=32,
+    d_ff=768,
+    max_seq=MAX_SEQ,
+    max_prompt=MAX_PROMPT,
+)
+
+SSM_CONFIG = ModelConfig(
+    name="ssm",
+    vocab=VOCAB_SIZE,
+    d_model=96,
+    n_layers=2,
+    n_heads=3,
+    d_head=32,
+    d_ff=384,
+    max_seq=MAX_SEQ,
+    max_prompt=MAX_PROMPT,
+)
+
+
+@dataclass(frozen=True)
+class ArtifactProfile:
+    """Which (batch, speculation-length) executables to lower.
+
+    ``batch_buckets`` are the power-of-two buckets of the paper's adaptive
+    scheme (Sec. 4); arriving batches are padded up to the nearest bucket.
+    ``spec_lengths`` covers the paper's sweep (1..8 in Fig. 1; the serving
+    evaluation uses <=6).  s = 0 verify executables are the no-speculation
+    decode baseline.
+    """
+
+    name: str
+    batch_buckets: tuple
+    verify_lengths: tuple       # for llm_verify (0 == plain decode)
+    speculate_lengths: tuple    # for ssm_speculate
+    # extra (bucket, s) pairs used by the Fig.2 acceptance study
+    extra_verify: tuple = ()
+    extra_speculate: tuple = ()
+    train_steps_llm: int = 700
+    train_steps_ssm: int = 500
+    train_batch: int = 16
+    train_seq: int = 64
+
+
+FULL_PROFILE = ArtifactProfile(
+    name="full",
+    batch_buckets=(1, 2, 4, 8, 16),
+    verify_lengths=(0, 1, 2, 3, 4, 5, 6),
+    speculate_lengths=(1, 2, 3, 4, 5, 6),
+    extra_verify=((1, 8), (4, 8)),
+    extra_speculate=((1, 8), (4, 8)),
+)
+
+QUICK_PROFILE = ArtifactProfile(
+    name="quick",
+    batch_buckets=(1, 2, 4),
+    verify_lengths=(0, 1, 2, 3),
+    speculate_lengths=(1, 2, 3),
+    train_steps_llm=60,
+    train_steps_ssm=60,
+)
+
+PROFILES = {"full": FULL_PROFILE, "quick": QUICK_PROFILE}
+
+
+def active_profile() -> ArtifactProfile:
+    """Profile selected by the SPECBATCH_PROFILE env var (default: full)."""
+    return PROFILES[os.environ.get("SPECBATCH_PROFILE", "full")]
+
+
+def config_fingerprint(profile: ArtifactProfile) -> str:
+    """Stable hash of everything that invalidates the artifact bundle
+    (bump format_version on calling-convention or lowering changes)."""
+    payload = {
+        "llm": LLM_CONFIG.to_json(),
+        "ssm": SSM_CONFIG.to_json(),
+        "profile": dataclasses.asdict(profile),
+        "format_version": 6,  # v6: full-cache KV tile s_block=224 (§Perf)
+    }
+    blob = json.dumps(payload, sort_keys=True).encode()
+    return hashlib.sha256(blob).hexdigest()[:16]
+
+
+def weights_fingerprint(profile: ArtifactProfile) -> str:
+    """Hash of only what the *trained weights* depend on (model dims,
+    corpus seed, training recipe) — lowering-only changes keep the
+    multi-minute training cache warm."""
+    payload = {
+        "llm": LLM_CONFIG.to_json(),
+        "ssm": SSM_CONFIG.to_json(),
+        "train": {
+            "steps_llm": profile.train_steps_llm,
+            "steps_ssm": profile.train_steps_ssm,
+            "batch": profile.train_batch,
+            "seq": profile.train_seq,
+        },
+        "weights_version": 1,
+    }
+    blob = json.dumps(payload, sort_keys=True).encode()
+    return hashlib.sha256(blob).hexdigest()[:16]

@@ -1,0 +1,188 @@
+"""Synthetic Markov "chatbot instruction" corpus, vocabulary and dataset.
+
+Substitute for the paper's *Chatbot Instruction Prompts* HuggingFace
+dataset (no network in this environment; DESIGN.md §Substitutions).  The
+dataset's role in the paper is to provide (i) realistic prompt lengths and
+(ii) text whose predictability lets the SSM track the LLM — both are
+reproduced here by a first-order Markov chain over a 512-word vocabulary:
+
+* **easy states** (peaky next-token distribution) — both models learn the
+  argmax transition and agree, like boilerplate natural language;
+* **hard states** (near-uniform over many successors) — the models'
+  argmaxes diverge, like content words.
+
+The easy/hard mix controls the per-token acceptance probability and hence
+the shape of l(s); the measured curve stays sublinear-power (Fig. 2).
+
+Everything is deterministic given SEED so `make artifacts` is reproducible
+and the profiling/eval splits are stable across Python and Rust.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass
+from typing import List
+
+import numpy as np
+
+from .configs import VOCAB_SIZE
+
+SEED = 20231003  # arXiv submission date of the paper, for flavour
+
+PAD, BOS, EOS, UNK = 0, 1, 2, 3
+N_SPECIAL = 4
+
+# a small English word list for readable prompts; the rest of the vocab is
+# synthetic "tok###" words.
+_BASE_WORDS = """
+write a short story about the history of machine learning and explain how
+it works in simple terms please describe what makes large language models
+fast when serving many users at once summarize this article for me list
+three ways to improve inference latency on modern hardware tell us why
+speculative decoding helps small batch sizes compare batching strategies
+for transformer models give an example of adaptive scheduling policies
+draft an email to my team about the new deployment plan translate the
+following sentence into french outline the main ideas behind attention
+caches what is the best way to learn systems research today
+""".split()
+
+HARD_FRACTION = 0.25     # fraction of states with near-uniform successors
+EASY_TOPK = 6            # successor fan-out of easy states
+HARD_TOPK = 48           # successor fan-out of hard states
+EASY_PROBS = np.array([0.62, 0.16, 0.09, 0.06, 0.04, 0.03])
+
+N_OPENERS = 24           # states that can start a prompt
+
+
+@dataclass
+class Corpus:
+    vocab: List[str]            # id -> text
+    trans_next: np.ndarray      # [V, HARD_TOPK] successor ids (padded)
+    trans_prob: np.ndarray      # [V, HARD_TOPK] successor probabilities
+    openers: np.ndarray         # [N_OPENERS] opener state ids
+    hard_mask: np.ndarray       # [V] bool: True for hard states
+
+    @property
+    def vocab_size(self) -> int:
+        return len(self.vocab)
+
+
+def build_vocab() -> List[str]:
+    vocab = ["<pad>", "<bos>", "<eos>", "<unk>"]
+    seen = set(vocab)
+    for wrd in _BASE_WORDS:
+        if wrd not in seen:
+            vocab.append(wrd)
+            seen.add(wrd)
+    i = 0
+    while len(vocab) < VOCAB_SIZE:
+        vocab.append(f"tok{i:03d}")
+        i += 1
+    return vocab[:VOCAB_SIZE]
+
+
+def build_corpus(seed: int = SEED) -> Corpus:
+    rng = np.random.default_rng(seed)
+    vocab = build_vocab()
+    v = len(vocab)
+
+    trans_next = np.zeros((v, HARD_TOPK), dtype=np.int32)
+    trans_prob = np.zeros((v, HARD_TOPK), dtype=np.float64)
+    hard_mask = np.zeros(v, dtype=bool)
+
+    content = np.arange(N_SPECIAL, v, dtype=np.int32)
+    for state in range(v):
+        hard = rng.random() < HARD_FRACTION
+        hard_mask[state] = hard
+        k = HARD_TOPK if hard else EASY_TOPK
+        succ = rng.choice(content, size=k, replace=False)
+        if hard:
+            # near-uniform with mild random tilt
+            p = rng.random(k) * 0.2 + 1.0
+            p /= p.sum()
+        else:
+            p = EASY_PROBS.copy()
+        trans_next[state, :k] = succ
+        trans_prob[state, :k] = p
+
+    openers = rng.choice(content, size=N_OPENERS, replace=False)
+    return Corpus(vocab, trans_next, trans_prob, openers, hard_mask)
+
+
+def sample_walk(corpus: Corpus, rng: np.random.Generator, length: int,
+                start: int | None = None) -> np.ndarray:
+    """Sample a Markov walk of `length` tokens (the start token included)."""
+    if start is None:
+        start = int(rng.choice(corpus.openers))
+    out = np.empty(length, dtype=np.int32)
+    state = start
+    out[0] = state
+    for i in range(1, length):
+        nxt = corpus.trans_next[state]
+        p = corpus.trans_prob[state]
+        state = int(rng.choice(nxt, p=p))
+        out[i] = state
+    return out
+
+
+def sample_training_batch(corpus: Corpus, rng: np.random.Generator,
+                          batch: int, seq: int) -> np.ndarray:
+    """[batch, seq] i32 token matrix of independent walks (BOS-prefixed)."""
+    rows = np.empty((batch, seq), dtype=np.int32)
+    for b in range(batch):
+        rows[b, 0] = BOS
+        rows[b, 1:] = sample_walk(corpus, rng, seq - 1)
+    return rows
+
+
+@dataclass
+class Prompt:
+    ids: List[int]
+    text: str
+    split: str  # "profile" | "eval"
+
+
+def build_dataset(corpus: Corpus, *, n_profile: int = 500, n_eval: int = 1500,
+                  min_len: int = 4, max_len: int = 24,
+                  seed: int = SEED + 1) -> List[Prompt]:
+    """Prompt set with disjoint profiling/eval splits (paper Sec. 5.3 keeps
+    the adaptive scheme's profiling prompts disjoint from evaluation)."""
+    rng = np.random.default_rng(seed)
+    prompts: List[Prompt] = []
+    total = n_profile + n_eval
+    for i in range(total):
+        ln = int(rng.integers(min_len, max_len + 1))
+        ids = [BOS] + sample_walk(corpus, rng, ln).tolist()
+        text = " ".join(corpus.vocab[t] for t in ids[1:])
+        split = "profile" if i < n_profile else "eval"
+        prompts.append(Prompt(ids=ids, text=text, split=split))
+    return prompts
+
+
+def write_dataset(path: str, corpus: Corpus, prompts: List[Prompt]) -> None:
+    """Emit the vocab + prompt dataset consumed by the Rust coordinator."""
+    payload = {
+        "seed": SEED,
+        "vocab": corpus.vocab,
+        "special": {"pad": PAD, "bos": BOS, "eos": EOS, "unk": UNK},
+        "prompts": [
+            {"ids": p.ids, "text": p.text, "split": p.split} for p in prompts
+        ],
+    }
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(payload, f)
+    os.replace(tmp, path)
+
+
+def oracle_argmax_walk(corpus: Corpus, start: int, length: int) -> np.ndarray:
+    """The deterministic argmax continuation of the chain itself — handy in
+    tests as an upper bound on what a perfectly trained model would emit."""
+    out = np.empty(length, dtype=np.int32)
+    state = start
+    for i in range(length):
+        state = int(corpus.trans_next[state][np.argmax(corpus.trans_prob[state])])
+        out[i] = state
+    return out

@@ -1,0 +1,248 @@
+"""Python reference implementation of the batched speculative engine.
+
+This mirrors, at jnp level, exactly the state machine the Rust coordinator
+runs against the AOT executables (same lens accounting, same acceptance
+rule).  It serves three purposes:
+
+1. **Correctness oracle** — greedy speculative decoding is *lossless*: its
+   output must equal plain greedy decoding token-for-token (Algorithm 1).
+   pytest asserts this across batch sizes and speculation lengths.
+2. **Golden traces** — aot.py dumps `goldens.json` (prompt -> greedy
+   continuation) that the Rust integration tests compare against, proving
+   the HLO executables + Rust engine reproduce the Python semantics.
+3. **Acceptance measurement** — the Eq. 4 estimator of l(s) used to
+   pre-validate the Fig. 2 shape at build time.
+
+State contract (shared with Rust, see model.py docstring): per row,
+``committed`` is the list of known tokens; ``ingested = len(committed)-1``
+KV entries are valid; each forward ingests the in-flight tokens starting at
+``ingested``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import lru_cache
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import ModelConfig
+from .model import Weights, make_prefill, make_speculate, make_verify
+
+PAD = 0
+
+
+# jit-compiled entry points, cached per (cfg, batch, s, kernels) so the
+# reference engine's inner loop does not re-trace on every call
+@lru_cache(maxsize=None)
+def _jit_prefill(cfg: ModelConfig, batch: int, use_kernels: bool):
+    return jax.jit(make_prefill(cfg, batch, use_kernels=use_kernels))
+
+
+@lru_cache(maxsize=None)
+def _jit_verify(cfg: ModelConfig, batch: int, s: int, use_kernels: bool):
+    return jax.jit(make_verify(cfg, batch, s, use_kernels=use_kernels))
+
+
+@lru_cache(maxsize=None)
+def _jit_speculate(cfg: ModelConfig, batch: int, s: int, use_kernels: bool):
+    return jax.jit(make_speculate(cfg, batch, s, use_kernels=use_kernels))
+
+
+def _pad_prompts(prompts: List[List[int]], batch: int, width: int):
+    toks = np.full((batch, width), PAD, dtype=np.int32)
+    lens = np.zeros(batch, dtype=np.int32)
+    for i, p in enumerate(prompts):
+        if len(p) > width:
+            raise ValueError(f"prompt {i} longer than max_prompt ({len(p)} > {width})")
+        toks[i, : len(p)] = p
+        lens[i] = len(p)
+    return jnp.asarray(toks), jnp.asarray(lens)
+
+
+@dataclass
+class ModelState:
+    """One model's device state for a batch (KV cache + ingest counters)."""
+
+    cfg: ModelConfig
+    weights: Weights
+    kv: jnp.ndarray
+    ingested: np.ndarray  # [B] i64 valid KV entries per row
+
+    @classmethod
+    def fresh(cls, cfg: ModelConfig, weights: Weights, batch: int) -> "ModelState":
+        kv = jnp.zeros(cfg.kv_shape(batch), jnp.float32)
+        return cls(cfg, weights, kv, np.zeros(batch, dtype=np.int64))
+
+
+@dataclass
+class BatchSession:
+    """Committed tokens of each row (prompt + generated)."""
+
+    prompts: List[List[int]]
+    committed: List[List[int]] = field(default_factory=list)
+
+    def __post_init__(self):
+        if not self.committed:
+            self.committed = [list(p) for p in self.prompts]
+
+    def generated(self, row: int) -> List[int]:
+        return self.committed[row][len(self.prompts[row]):]
+
+
+def _wlist(w: Weights):
+    from .model import WEIGHT_ORDER
+
+    return [w[k] for k in WEIGHT_ORDER]
+
+
+def prefill(state: ModelState, session: BatchSession, *, use_kernels=False):
+    """Run prefill; commits the first generated token on every row."""
+    batch = len(session.prompts)
+    fn = _jit_prefill(state.cfg, batch, use_kernels)
+    toks, plens = _pad_prompts(session.prompts, batch, state.cfg.max_prompt)
+    last, state.kv = fn(toks, plens, state.kv, *_wlist(state.weights))
+    last = np.asarray(last)
+    for i in range(batch):
+        session.committed[i].append(int(last[i]))
+        state.ingested[i] = len(session.committed[i]) - 1
+    return last
+
+
+def ssm_sync_prefill(state: ModelState, session: BatchSession, *, use_kernels=False):
+    """Prefill the SSM on the prompt only (its prediction is discarded —
+    the LLM already committed the first token; the SSM just needs KV)."""
+    batch = len(session.prompts)
+    fn = _jit_prefill(state.cfg, batch, use_kernels)
+    toks, plens = _pad_prompts(session.prompts, batch, state.cfg.max_prompt)
+    _, state.kv = fn(toks, plens, state.kv, *_wlist(state.weights))
+    for i in range(batch):
+        state.ingested[i] = len(session.prompts[i])
+
+
+def verify_step(state: ModelState, session: BatchSession,
+                drafts: np.ndarray, *, use_kernels=False) -> np.ndarray:
+    """LLM verification of `s` draft tokens per row; returns accepted counts.
+
+    Feeds [last_committed, d_1..d_s]; pred[i] is the model's choice after
+    position i.  Acceptance: first index where draft != pred truncates; the
+    prediction at the truncation point is the bonus/correction token.
+    """
+    batch, s = drafts.shape
+    fn = _jit_verify(state.cfg, batch, s, use_kernels)
+    feed = np.empty((batch, s + 1), dtype=np.int32)
+    lens = np.empty(batch, dtype=np.int32)
+    for i in range(batch):
+        feed[i, 0] = session.committed[i][-1]
+        feed[i, 1:] = drafts[i]
+        lens[i] = state.ingested[i]
+    pred, state.kv = fn(jnp.asarray(feed), jnp.asarray(lens), state.kv,
+                        *_wlist(state.weights))
+    pred = np.asarray(pred)
+
+    accepted = np.zeros(batch, dtype=np.int64)
+    for i in range(batch):
+        a = 0
+        while a < s and drafts[i, a] == pred[i, a]:
+            a += 1
+        accepted[i] = a
+        new = [int(t) for t in drafts[i, :a]] + [int(pred[i, a])]
+        session.committed[i].extend(new)
+        state.ingested[i] = len(session.committed[i]) - 1
+    return accepted
+
+
+def speculate_step(state: ModelState, session: BatchSession, s: int,
+                   *, use_kernels=False) -> np.ndarray:
+    """SSM drafts `s` tokens per row after ingesting its committed delta."""
+    batch = len(session.prompts)
+    fn = _jit_speculate(state.cfg, batch, s, use_kernels)
+    delta = np.full((batch, 2), PAD, dtype=np.int32)
+    dlens = np.empty(batch, dtype=np.int32)
+    lens = np.empty(batch, dtype=np.int32)
+    for i in range(batch):
+        missing = session.committed[i][state.ingested[i]:]
+        if not 1 <= len(missing) <= 2:
+            raise AssertionError(
+                f"SSM delta invariant violated: row {i} missing {len(missing)}"
+            )
+        delta[i, : len(missing)] = missing
+        dlens[i] = len(missing)
+        lens[i] = state.ingested[i]
+    draft, state.kv = fn(jnp.asarray(delta), jnp.asarray(dlens),
+                         jnp.asarray(lens), state.kv, *_wlist(state.weights))
+    for i in range(batch):
+        # delta rows fully ingested; drafts d_1..d_{s-1} ingested by the scan
+        state.ingested[i] = int(lens[i]) + int(dlens[i]) + max(0, s - 1)
+    return np.asarray(draft)
+
+
+def ssm_rollback(state: ModelState, session: BatchSession) -> None:
+    """Clamp SSM ingest counters after verification rejected some drafts.
+
+    Stale KV entries above the clamped length are never attended and are
+    overwritten by the next ingest — mirror of the Rust engine."""
+    for i in range(len(session.prompts)):
+        state.ingested[i] = min(state.ingested[i], len(session.committed[i]) - 1)
+
+
+def greedy_generate(w: Weights, cfg: ModelConfig, prompts: List[List[int]],
+                    n_new: int, *, use_kernels=False) -> List[List[int]]:
+    """Plain autoregressive greedy decoding — the ground truth that
+    speculative decoding must reproduce exactly."""
+    batch = len(prompts)
+    session = BatchSession(prompts)
+    state = ModelState.fresh(cfg, w, batch)
+    prefill(state, session, use_kernels=use_kernels)
+    for _ in range(n_new - 1):
+        drafts = np.zeros((batch, 0), dtype=np.int32)
+        # s=0 verify == plain decode: feed only the last committed token
+        verify_step(state, session, drafts, use_kernels=use_kernels)
+    return [session.generated(i)[:n_new] for i in range(batch)]
+
+
+def spec_generate(
+    w_llm: Weights, cfg_llm: ModelConfig,
+    w_ssm: Weights, cfg_ssm: ModelConfig,
+    prompts: List[List[int]], n_new: int, s: int,
+    *, use_kernels=False, record_accepts: list | None = None,
+) -> List[List[int]]:
+    """Batched speculative decoding (Algorithm 1, batched, greedy)."""
+    batch = len(prompts)
+    session = BatchSession(prompts)
+    llm = ModelState.fresh(cfg_llm, w_llm, batch)
+    ssm = ModelState.fresh(cfg_ssm, w_ssm, batch)
+    prefill(llm, session, use_kernels=use_kernels)
+    ssm_sync_prefill(ssm, session, use_kernels=use_kernels)
+
+    while min(len(session.generated(i)) for i in range(batch)) < n_new:
+        drafts = speculate_step(ssm, session, s, use_kernels=use_kernels)
+        acc = verify_step(llm, session, drafts, use_kernels=use_kernels)
+        ssm_rollback(ssm, session)
+        if record_accepts is not None:
+            record_accepts.append(acc.copy())
+    return [session.generated(i)[:n_new] for i in range(batch)]
+
+
+def measure_acceptance(
+    w_llm: Weights, cfg_llm: ModelConfig,
+    w_ssm: Weights, cfg_ssm: ModelConfig,
+    prompts: List[List[int]], *, s: int = 8, rounds: int = 12,
+) -> np.ndarray:
+    """Per-round accepted counts for the Eq. 4 estimator of l(s)."""
+    accepts: list = []
+    spec_generate(
+        w_llm, cfg_llm, w_ssm, cfg_ssm, prompts,
+        n_new=rounds * (s + 1), s=s, record_accepts=accepts,
+    )
+    return np.concatenate([a for a in accepts]) if accepts else np.zeros(0)
+
+
+def l_of_s(accepted_samples: np.ndarray, s_max: int) -> np.ndarray:
+    """Eq. 4: l(s) ~= mean(min(l_i, s)) for s = 1..s_max."""
+    return np.array(
+        [np.minimum(accepted_samples, s).mean() for s in range(1, s_max + 1)]
+    )

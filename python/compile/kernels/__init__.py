@@ -1,0 +1,8 @@
+"""Pallas kernels (L1) and their pure-jnp oracles.
+
+``attention.verify_attention`` and ``argmax.vocab_argmax`` are the two
+kernels on the serving hot path; ``ref`` holds the ground-truth
+implementations used by pytest and by the training forward pass.
+"""
+
+from . import argmax, attention, ref  # noqa: F401

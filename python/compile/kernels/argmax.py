@@ -1,0 +1,92 @@
+"""L1 Pallas kernel: tiled row-wise argmax over the vocabulary.
+
+Greedy decoding (Algorithm 1 in the paper uses argmax acceptance) needs the
+predicted token id for every in-flight position.  Shipping full logits
+``[B, T, V]`` back to the Rust coordinator would waste host<->device
+bandwidth; instead the model emits ``i32[B, T]`` token ids computed by this
+kernel, fused into the same HLO module.
+
+TPU mapping: the vocabulary axis is streamed through VMEM in ``V_BLK``
+tiles while running (max, argmax) statistics live in scratch; tie-breaking
+is *first maximum wins* (strict ``>`` on the update) to match
+``jnp.argmax`` exactly — draft and verify paths must agree on ties or the
+acceptance rule would mis-count.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .ref import NEG_INF
+
+DEFAULT_V_BLOCK = 256
+
+
+def _argmax_kernel(
+    x_ref,      # [R_BLK, V_BLK] logits tile
+    o_ref,      # [R_BLK] i32 output block
+    m_scr,      # [R_BLK, 1] running max
+    i_scr,      # [R_BLK, 1] running argmax
+    *,
+    v_block: int,
+    n_v_blocks: int,
+):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        i_scr[...] = jnp.zeros_like(i_scr)
+
+    x = x_ref[...]
+    r = x.shape[0]
+    tile_max = x.max(axis=1, keepdims=True)                       # [R,1]
+    col = jax.lax.broadcasted_iota(jnp.int32, (r, v_block), 1)
+    # first maximum within the tile: smallest column index achieving tile_max
+    hit = jnp.where(x == tile_max, col, v_block)
+    tile_arg = hit.min(axis=1, keepdims=True) + j * v_block       # [R,1]
+
+    better = tile_max > m_scr[...]          # strict: earlier tiles win ties
+    m_scr[...] = jnp.where(better, tile_max, m_scr[...])
+    i_scr[...] = jnp.where(better, tile_arg, i_scr[...])
+
+    @pl.when(j == n_v_blocks - 1)
+    def _finalize():
+        o_ref[...] = i_scr[..., 0]
+
+
+def vocab_argmax(logits: jax.Array, *, v_block: int = DEFAULT_V_BLOCK) -> jax.Array:
+    """Pallas row argmax.  ``logits [..., V] -> i32 [...]``.
+
+    Semantics == ref.vocab_argmax_ref (first-max tie-breaking).
+    """
+    *lead, v = logits.shape
+    rows = 1
+    for d in lead:
+        rows *= d
+    x = logits.reshape(rows, v)
+    if v % v_block != 0:
+        v_block = next(
+            blk for blk in range(min(v_block, v), 0, -1) if v % blk == 0
+        )
+    n_v = v // v_block
+
+    kernel = functools.partial(_argmax_kernel, v_block=v_block, n_v_blocks=n_v)
+    out = pl.pallas_call(
+        kernel,
+        grid=(1, n_v),
+        in_specs=[pl.BlockSpec((rows, v_block), lambda i, j: (0, j))],
+        out_specs=pl.BlockSpec((rows,), lambda i, j: (0,)),
+        out_shape=jax.ShapeDtypeStruct((rows,), jnp.int32),
+        scratch_shapes=[
+            pltpu.VMEM((rows, 1), jnp.float32),
+            pltpu.VMEM((rows, 1), jnp.int32),
+        ],
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(x.astype(jnp.float32))
+    return out.reshape(tuple(lead))

@@ -1,0 +1,171 @@
+"""L1 Pallas kernel: masked verify-attention with online softmax.
+
+This is the compute hot-spot of batched speculative decoding: for every
+(batch row, head) the `T = s+1` in-flight tokens (last committed token plus
+the s speculated tokens) attend over a KV cache of up to `S_max` entries,
+with a per-row valid-length mask fused with the intra-query causal mask.
+
+Hardware adaptation (see DESIGN.md §Hardware-Adaptation): the paper's CUDA
+prototype expressed this as a threadblock-per-(b,h) masked attention with
+the score matrix staged through shared memory.  The TPU rethink:
+
+* grid ``(S_max / S_BLK,)`` — the KV cache streams HBM→VMEM in tiles while
+  the *whole* ``[B, H, T, Dh]`` query block stays VMEM-resident: at
+  serving shapes (B ≤ 16, H ≤ 8, T ≤ 9) queries are tiny, so the batched
+  block keeps the MXU fed with one big ``dot_general`` per tile instead of
+  B·H skinny matmuls.  The ``BlockSpec`` index map is the HBM↔VMEM
+  schedule CUDA did with threadblocks.
+* flash-attention style **online softmax** across KV tiles so VMEM holds
+  only the running ``(m, l, acc)`` statistics — never a ``[T, S_max]``
+  score matrix.
+* masking is positional arithmetic on ``broadcasted_iota`` (VPU-friendly,
+  no gathers); both contractions use f32 accumulation on the MXU.
+
+§Perf note: the first version used a ``(B, H, n_kv)`` grid (a literal port
+of the CUDA threadblock layout).  Under ``interpret=True`` each grid step
+pays overhead proportional to the operand count, so the per-(b,h) grid
+cost O(B²) on CPU — 200 ms/call at B=16 vs 7.9 ms for this batched grid
+(EXPERIMENTS.md §Perf).  On real TPU both layouts fit VMEM comfortably;
+the batched layout also halves grid-dispatch overhead there.
+
+The kernel runs under ``interpret=True`` — the CPU PJRT client cannot run
+Mosaic custom calls — so it lowers into plain HLO and executes anywhere.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .ref import NEG_INF
+
+# KV tile (second-minor axis of the VMEM block).  The block-shape sweep
+# (EXPERIMENTS.md §Perf: 28/56/112/224 at b ∈ {4,8,16}) picked the single
+# full-cache tile: 224 is 3-7x faster than 112 under interpret mode and
+# still fits VMEM at the largest serving bucket (b=16, h=6: k+v tiles
+# ≈ 5.5 MiB of the ~16 MiB/core budget).  The online-softmax structure is
+# kept so larger S_max configurations can tile down without code changes.
+DEFAULT_S_BLOCK = 224
+
+
+def _attention_kernel(
+    lens_ref,   # [B] i32 committed length per batch row
+    q_ref,      # [B, H, T, Dh]
+    k_ref,      # [B, H, S_BLK, Dh]
+    v_ref,      # [B, H, S_BLK, Dh]
+    o_ref,      # [B, H, T, Dh]
+    m_scr,      # [B, H, T, 1] running max
+    l_scr,      # [B, H, T, 1] running sum
+    acc_scr,    # [B, H, T, Dh] running weighted-value accumulator
+    *,
+    s_block: int,
+    n_kv_blocks: int,
+    scale: float,
+):
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[...]
+    k = k_ref[...]
+    v = v_ref[...]
+    lens = lens_ref[...]
+
+    # scores for this KV tile: one batched MXU contraction [B,H,T,S_BLK]
+    s = (
+        jax.lax.dot_general(
+            q, k, (((3,), (3,)), ((0, 1), (0, 1))),
+            preferred_element_type=jnp.float32,
+        )
+        * scale
+    )
+
+    # fused mask: cache position p visible to query i iff p <= len + i
+    pos = j * s_block + jax.lax.broadcasted_iota(jnp.int32, s.shape, 3)
+    qi = jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+    s = jnp.where(pos <= lens[:, None, None, None] + qi, s, NEG_INF)
+
+    # online softmax update
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=3, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=3, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((3,), (2,)), ((0, 1), (0, 1))),
+        preferred_element_type=jnp.float32,
+    )
+    m_scr[...] = m_new
+
+    @pl.when(j == n_kv_blocks - 1)
+    def _finalize():
+        o_ref[...] = (acc_scr[...] / l_scr[...]).astype(o_ref.dtype)
+
+
+def verify_attention(
+    q: jax.Array,      # [B, H, T, Dh]
+    k: jax.Array,      # [B, H, S_max, Dh]
+    v: jax.Array,      # [B, H, S_max, Dh]
+    lens: jax.Array,   # [B] i32
+    *,
+    s_block: int = DEFAULT_S_BLOCK,
+) -> jax.Array:
+    """Pallas masked verify-attention.  Semantics == ref.verify_attention_ref."""
+    b, h, t, dh = q.shape
+    s_max = k.shape[2]
+    if s_max % s_block != 0:
+        # fall back to the largest divisor <= requested block
+        s_block = next(
+            blk for blk in range(min(s_block, s_max), 0, -1) if s_max % blk == 0
+        )
+    n_kv = s_max // s_block
+    scale = 1.0 / (dh ** 0.5)
+
+    kernel = functools.partial(
+        _attention_kernel,
+        s_block=s_block,
+        n_kv_blocks=n_kv,
+        scale=scale,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(n_kv,),
+        in_specs=[
+            pl.BlockSpec((b,), lambda j: (0,)),
+            pl.BlockSpec((b, h, t, dh), lambda j: (0, 0, 0, 0)),
+            pl.BlockSpec((b, h, s_block, dh), lambda j: (0, 0, j, 0)),
+            pl.BlockSpec((b, h, s_block, dh), lambda j: (0, 0, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, h, t, dh), lambda j: (0, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, t, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((b, h, t, 1), jnp.float32),
+            pltpu.VMEM((b, h, t, 1), jnp.float32),
+            pltpu.VMEM((b, h, t, dh), jnp.float32),
+        ],
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(lens, q, k, v)
+
+
+def vmem_bytes(b: int, h: int, t: int, dh: int, s_block: int) -> int:
+    """Estimated VMEM residency of one grid step (f32).
+
+    q block + k/v tiles + scratch (m, l, acc) + output block.  Used by the
+    §Perf analysis to pick ``s_block`` under the ~16 MiB/core VMEM budget
+    (largest bucket b=16, h=6, t=9: ≈ 5.8 MiB at s_block=224).
+    """
+    floats = (
+        b * h * t * dh            # q
+        + 2 * b * h * s_block * dh  # k, v tiles
+        + b * h * t * (dh + 2)    # acc, m, l scratch
+        + b * h * t * dh          # o
+    )
+    return 4 * floats

@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this package
+has a reference implementation here, and ``python/tests/test_kernels.py``
+sweeps shapes/dtypes (hypothesis) asserting allclose between the two.
+
+The references are also used directly by the training forward pass (which
+does not need a KV cache) so serving and training numerics share one
+definition of masked attention.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # finite "minus infinity": keeps softmax NaN-free on fully
+                 # masked rows (padding rows have len == 0 and query 0 still
+                 # attends to itself, but tests exercise degenerate cases)
+
+
+def verify_attention_ref(
+    q: jax.Array,      # [B, H, T, Dh] queries for the T in-flight tokens
+    k: jax.Array,      # [B, H, S_max, Dh] full key cache (stale tail incl.)
+    v: jax.Array,      # [B, H, S_max, Dh]
+    lens: jax.Array,   # [B] i32: committed KV entries per row
+) -> jax.Array:
+    """Masked verify-attention: query i (absolute position lens+i) attends
+    cache positions p <= lens + i.
+
+    This single rule covers prefill (lens=0, plain causal), plain decode
+    (T=1) and speculative verification (T=s+1): the intra-query causal mask
+    and the committed-prefix mask are the same inequality.
+    """
+    b, h, t, dh = q.shape
+    s_max = k.shape[2]
+    scores = jnp.einsum("bhtd,bhsd->bhts", q, k) / jnp.sqrt(
+        jnp.asarray(dh, q.dtype)
+    )
+    pos = jnp.arange(s_max, dtype=jnp.int32)[None, None, None, :]
+    qi = jnp.arange(t, dtype=jnp.int32)[None, None, :, None]
+    mask = pos <= lens[:, None, None, None] + qi
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhts,bhsd->bhtd", probs, v)
+
+
+def vocab_argmax_ref(logits: jax.Array) -> jax.Array:
+    """Row-wise argmax over the vocabulary, first-max-wins tie breaking.
+
+    logits: [..., V] -> i32 [...].  ``jnp.argmax`` already picks the first
+    maximum, which the Pallas kernel must match exactly (greedy decoding is
+    the acceptance rule of Algorithm 1, so ties must break identically
+    between draft and verify paths).
+    """
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,299 @@
+"""L2: OPT-style decoder-only transformer with a functional KV cache.
+
+One forward definition covers every serving entry point (the paper's
+Algorithm 1 maps onto exactly three executables):
+
+* ``prefill``       — ingest the (padded) prompt, emit the first token.
+* ``verify(s)``     — LLM side: ingest ``[last_committed, d_1..d_s]`` and
+                      emit the argmax prediction at every position (the
+                      ``o_i`` of Algorithm 1, reduced to token ids by the
+                      Pallas argmax kernel).  ``s = 0`` is the plain
+                      no-speculation decode baseline.
+* ``speculate(s)``  — SSM side: ingest the <=2 newly committed tokens it
+                      has not seen (delta), then autoregressively draft
+                      ``s`` tokens with a ``lax.scan``.
+
+State contract with the Rust coordinator (see DESIGN.md):
+
+* the KV cache is an explicit parameter/result ``f32[L, 2, B, H, S_max, Dh]``
+  that stays resident on device between calls (``execute_b``);
+* ``lens[b]`` is the number of *ingested* cache entries of row ``b``; the
+  forward writes the T in-flight tokens at positions ``lens..lens+T-1`` and
+  masks attention with ``pos <= lens + i``.  Rejected speculations leave
+  stale entries above the committed length, which are (a) never attended
+  and (b) overwritten by the next call — no rollback pass is needed.
+
+Weights are *runtime parameters* (stacked per-layer tensors, ~20 arrays),
+so the HLO text stays small and one executable serves any checkpoint.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels.argmax import vocab_argmax
+from .kernels.attention import verify_attention
+from .kernels.ref import verify_attention_ref, vocab_argmax_ref
+
+Weights = Dict[str, jax.Array]
+
+# Deterministic parameter order of the AOT calling convention.  The Rust
+# manifest replicates this list; never reorder without bumping the
+# format_version in configs.config_fingerprint.
+WEIGHT_ORDER = (
+    "embed",        # [V, D]
+    "pos_embed",    # [S_max, D]
+    "ln1_scale",    # [L, D]
+    "ln1_bias",     # [L, D]
+    "wq", "bq",     # [L, D, D], [L, D]
+    "wk", "bk",
+    "wv", "bv",
+    "wo", "bo",
+    "ln2_scale",    # [L, D]
+    "ln2_bias",
+    "w_up", "b_up",     # [L, D, F], [L, F]
+    "w_down", "b_down",  # [L, F, D], [L, D]
+    "lnf_scale",    # [D]
+    "lnf_bias",     # [D]
+)
+
+
+def weight_shapes(cfg: ModelConfig) -> Dict[str, Tuple[int, ...]]:
+    """Shape table of the stacked weight tensors, in WEIGHT_ORDER."""
+    v, d, l, f, s = cfg.vocab, cfg.d_model, cfg.n_layers, cfg.d_ff, cfg.max_seq
+    return {
+        "embed": (v, d),
+        "pos_embed": (s, d),
+        "ln1_scale": (l, d),
+        "ln1_bias": (l, d),
+        "wq": (l, d, d), "bq": (l, d),
+        "wk": (l, d, d), "bk": (l, d),
+        "wv": (l, d, d), "bv": (l, d),
+        "wo": (l, d, d), "bo": (l, d),
+        "ln2_scale": (l, d),
+        "ln2_bias": (l, d),
+        "w_up": (l, d, f), "b_up": (l, f),
+        "w_down": (l, f, d), "b_down": (l, d),
+        "lnf_scale": (d,),
+        "lnf_bias": (d,),
+    }
+
+
+def init_weights(cfg: ModelConfig, key: jax.Array) -> Weights:
+    """Scaled-normal init (GPT-2 style: residual projections down-scaled)."""
+    shapes = weight_shapes(cfg)
+    w: Weights = {}
+    n_resid = 2 * cfg.n_layers  # residual-write matrices: wo, w_down
+    keys = jax.random.split(key, len(shapes))
+    for (name, shape), k in zip(shapes.items(), keys):
+        if name.startswith(("b", "ln1_bias", "ln2_bias", "lnf_bias")):
+            w[name] = jnp.zeros(shape, jnp.float32)
+        elif "scale" in name:
+            w[name] = jnp.ones(shape, jnp.float32)
+        else:
+            std = 0.02
+            if name in ("wo", "w_down"):
+                std = 0.02 / (n_resid ** 0.5)
+            w[name] = std * jax.random.normal(k, shape, jnp.float32)
+    return w
+
+
+def _layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array) -> jax.Array:
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5) * scale + bias
+
+
+def _split_heads(x: jax.Array, n_heads: int, d_head: int) -> jax.Array:
+    """[B, T, D] -> [B, H, T, Dh]"""
+    b, t, _ = x.shape
+    return x.reshape(b, t, n_heads, d_head).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x: jax.Array) -> jax.Array:
+    """[B, H, T, Dh] -> [B, T, D]"""
+    b, h, t, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, t, h * dh)
+
+
+def _write_kv(
+    cache: jax.Array,   # [B, H, S_max, Dh] one layer, one of k/v
+    new: jax.Array,     # [B, H, T, Dh]
+    lens: jax.Array,    # [B] i32
+) -> jax.Array:
+    """Write the T new entries of each row at positions lens..lens+T-1.
+
+    Windowed write: a vmapped ``dynamic_update_slice`` touches only the T
+    slots per row.  (The original masked-gather formulation rewrote the
+    whole cache — ~4 full passes over [B,H,S_max,Dh] per layer side — and
+    dominated the verify step at large batch; see EXPERIMENTS.md §Perf,
+    ~6x end-to-end.)  DUS clamps the start index into range; the engine's
+    capacity check guarantees lens + T <= S_max so clamping never fires in
+    practice.
+    """
+
+    def row_update(c, n, start):
+        # c [H, S_max, Dh], n [H, T, Dh]
+        return jax.lax.dynamic_update_slice(c, n, (0, start, 0))
+
+    return jax.vmap(row_update)(cache, new, lens)
+
+
+def forward_tokens(
+    w: Weights,
+    cfg: ModelConfig,
+    tokens: jax.Array,   # i32 [B, T] the T in-flight tokens per row
+    lens: jax.Array,     # i32 [B]   ingested cache entries per row
+    kv: jax.Array,       # f32 [L, 2, B, H, S_max, Dh]
+    *,
+    use_kernels: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """One decoder pass over T in-flight tokens with cache update.
+
+    Returns ``(pred i32[B, T], kv')`` where ``pred[b, i]`` is the argmax
+    next-token prediction at absolute position ``lens[b] + i``.
+    """
+    b, t = tokens.shape
+    attn = verify_attention if use_kernels else verify_attention_ref
+    amax = vocab_argmax if use_kernels else vocab_argmax_ref
+
+    positions = lens[:, None] + jnp.arange(t, dtype=jnp.int32)[None, :]
+    positions = jnp.clip(positions, 0, cfg.max_seq - 1)
+    x = w["embed"][tokens] + w["pos_embed"][positions]          # [B, T, D]
+
+    for layer in range(cfg.n_layers):
+        h = _layernorm(x, w["ln1_scale"][layer], w["ln1_bias"][layer])
+        q = _split_heads(h @ w["wq"][layer] + w["bq"][layer], cfg.n_heads, cfg.d_head)
+        k_new = _split_heads(h @ w["wk"][layer] + w["bk"][layer], cfg.n_heads, cfg.d_head)
+        v_new = _split_heads(h @ w["wv"][layer] + w["bv"][layer], cfg.n_heads, cfg.d_head)
+
+        k_cache = _write_kv(kv[layer, 0], k_new, lens)
+        v_cache = _write_kv(kv[layer, 1], v_new, lens)
+        kv = kv.at[layer, 0].set(k_cache).at[layer, 1].set(v_cache)
+
+        ctx = attn(q, k_cache, v_cache, lens)                   # [B, H, T, Dh]
+        x = x + _merge_heads(ctx) @ w["wo"][layer] + w["bo"][layer]
+
+        h = _layernorm(x, w["ln2_scale"][layer], w["ln2_bias"][layer])
+        h = jax.nn.gelu(h @ w["w_up"][layer] + w["b_up"][layer])
+        x = x + h @ w["w_down"][layer] + w["b_down"][layer]
+
+    x = _layernorm(x, w["lnf_scale"], w["lnf_bias"])
+    logits = x @ w["embed"].T                                   # tied head
+    pred = amax(logits)                                         # i32 [B, T]
+    return pred, kv
+
+
+def forward_train(w: Weights, cfg: ModelConfig, tokens: jax.Array) -> jax.Array:
+    """Training forward: full causal attention, no cache, returns logits.
+
+    Uses the jnp reference kernels (training never runs on the request
+    path); numerics match forward_tokens on the same committed prefix,
+    which test_model.py asserts.
+    """
+    b, t = tokens.shape
+    positions = jnp.arange(t, dtype=jnp.int32)[None, :].repeat(b, axis=0)
+    x = w["embed"][tokens] + w["pos_embed"][positions]
+    zero = jnp.zeros((b,), jnp.int32)
+
+    for layer in range(cfg.n_layers):
+        h = _layernorm(x, w["ln1_scale"][layer], w["ln1_bias"][layer])
+        q = _split_heads(h @ w["wq"][layer] + w["bq"][layer], cfg.n_heads, cfg.d_head)
+        k = _split_heads(h @ w["wk"][layer] + w["bk"][layer], cfg.n_heads, cfg.d_head)
+        v = _split_heads(h @ w["wv"][layer] + w["bv"][layer], cfg.n_heads, cfg.d_head)
+        # lens = 0 and S_max = T turns the verify mask into plain causal
+        ctx = verify_attention_ref(q, k, v, zero)
+        x = x + _merge_heads(ctx) @ w["wo"][layer] + w["bo"][layer]
+        h = _layernorm(x, w["ln2_scale"][layer], w["ln2_bias"][layer])
+        h = jax.nn.gelu(h @ w["w_up"][layer] + w["b_up"][layer])
+        x = x + h @ w["w_down"][layer] + w["b_down"][layer]
+
+    x = _layernorm(x, w["lnf_scale"], w["lnf_bias"])
+    return x @ w["embed"].T
+
+
+# ---------------------------------------------------------------------------
+# AOT entry points (the executable matrix)
+# ---------------------------------------------------------------------------
+
+def _weights_from_args(wlist) -> Weights:
+    return dict(zip(WEIGHT_ORDER, wlist))
+
+
+def make_prefill(cfg: ModelConfig, batch: int, *, use_kernels: bool = True):
+    """prefill: (tokens i32[B,P], plens i32[B], kv, *W) -> (last i32[B], kv').
+
+    ``tokens`` is the prompt padded to P = max_prompt; ``plens`` the true
+    prompt lengths.  Writes KV for all P positions (stale tail above plens
+    is overwritten by generation) and gathers the prediction at each row's
+    last real prompt token.
+    """
+
+    def prefill(tokens, plens, kv, *wlist):
+        w = _weights_from_args(wlist)
+        zero = jnp.zeros((batch,), jnp.int32)
+        pred, kv = forward_tokens(w, cfg, tokens, zero, kv, use_kernels=use_kernels)
+        last = jnp.take_along_axis(
+            pred, jnp.clip(plens[:, None] - 1, 0, cfg.max_prompt - 1), axis=1
+        )[:, 0]
+        return last, kv
+
+    return prefill
+
+
+def make_verify(cfg: ModelConfig, batch: int, s: int, *, use_kernels: bool = True):
+    """verify(s): (tokens i32[B,s+1], lens i32[B], kv, *W) -> (pred, kv').
+
+    ``tokens[:, 0]`` is the last committed-but-not-ingested token, the rest
+    are the s draft tokens.  ``pred[:, i]`` is argmax(o_i): the model's
+    next-token choice after position i.  s = 0 is the plain decode step.
+    """
+
+    def verify(tokens, lens, kv, *wlist):
+        w = _weights_from_args(wlist)
+        return forward_tokens(w, cfg, tokens, lens, kv, use_kernels=use_kernels)
+
+    return verify
+
+
+def make_speculate(cfg: ModelConfig, batch: int, s: int, *, use_kernels: bool = True):
+    """speculate(s): (delta i32[B,2], dlens i32[B], lens i32[B], kv, *W)
+    -> (draft i32[B,s], kv').
+
+    Ingests the ``dlens`` (1 or 2) newly committed tokens the SSM has not
+    seen, whose first prediction is draft token d_1, then drafts the
+    remaining s-1 tokens autoregressively under a ``lax.scan``.
+    """
+
+    def speculate(delta, dlens, lens, kv, *wlist):
+        w = _weights_from_args(wlist)
+        # ingest the delta (T=2 padded; rows with dlens==1 write one stale
+        # slot above their new length, overwritten by the scan below)
+        pred, kv = forward_tokens(w, cfg, delta, lens, kv, use_kernels=use_kernels)
+        d1 = jnp.take_along_axis(
+            pred, jnp.clip(dlens[:, None] - 1, 0, 1), axis=1
+        )[:, 0]                                                # [B]
+        cur_len = lens + dlens
+
+        def step(carry, _):
+            tok, cur_len, kv = carry
+            pred, kv = forward_tokens(
+                w, cfg, tok[:, None], cur_len, kv, use_kernels=use_kernels
+            )
+            nxt = pred[:, 0]
+            return (nxt, cur_len + 1, kv), nxt
+
+        if s > 1:
+            (_, _, kv), rest = jax.lax.scan(
+                step, (d1, cur_len, kv), None, length=s - 1
+            )
+            draft = jnp.concatenate([d1[:, None], rest.T], axis=1)  # [B, s]
+        else:
+            draft = d1[:, None]
+        return draft, kv
+
+    return speculate

@@ -1,0 +1,136 @@
+"""Brief build-time training of the LLM/SSM pair on the Markov corpus.
+
+Speculative decoding only exhibits the paper's acceptance behaviour when
+the draft model genuinely mimics the target model.  Random weights would
+give l(s) ~= 0; instead `make artifacts` trains both models for a few
+hundred Adam steps on the synthetic corpus (~1-2 minutes on CPU), after
+which the SSM reproduces the LLM's argmax on "easy" states and diverges on
+"hard" ones — the same mechanism as OPT-125M drafting for OPT-6.7B.
+
+Adam is hand-rolled (no optax in this environment).  Everything is jitted
+once and runs at build time only.
+"""
+
+from __future__ import annotations
+
+import time
+from functools import partial
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus as corpus_mod
+from .configs import ModelConfig
+from .model import Weights, forward_train, init_weights
+
+AdamState = Tuple[Weights, Weights, jax.Array]  # (m, v, step)
+
+
+def adam_init(w: Weights) -> AdamState:
+    zeros = {k: jnp.zeros_like(x) for k, x in w.items()}
+    return zeros, {k: jnp.zeros_like(x) for k, x in w.items()}, jnp.zeros((), jnp.int32)
+
+
+def adam_update(
+    w: Weights, grads: Weights, state: AdamState,
+    lr: float = 3e-3, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+) -> Tuple[Weights, AdamState]:
+    m, v, step = state
+    step = step + 1
+    t = step.astype(jnp.float32)
+    new_w, new_m, new_v = {}, {}, {}
+    for k in w:
+        new_m[k] = b1 * m[k] + (1 - b1) * grads[k]
+        new_v[k] = b2 * v[k] + (1 - b2) * grads[k] ** 2
+        m_hat = new_m[k] / (1 - b1 ** t)
+        v_hat = new_v[k] / (1 - b2 ** t)
+        new_w[k] = w[k] - lr * m_hat / (jnp.sqrt(v_hat) + eps)
+    return new_w, (new_m, new_v, step)
+
+
+def loss_fn(w: Weights, cfg: ModelConfig, tokens: jax.Array) -> jax.Array:
+    """Mean next-token cross-entropy over the batch (no padding in training
+    batches, so no masking needed)."""
+    logits = forward_train(w, cfg, tokens[:, :-1])
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+@partial(jax.jit, static_argnums=(3,))
+def _train_step(w: Weights, state: AdamState, tokens: jax.Array,
+                cfg: ModelConfig, lr: jax.Array) -> Tuple[Weights, AdamState, jax.Array]:
+    loss, grads = jax.value_and_grad(loss_fn)(w, cfg, tokens)
+    w, state = adam_update(w, grads, state, lr=lr)
+    return w, state, loss
+
+
+def lr_schedule(step: int, steps: int, peak: float = 1e-2, warmup: int = 20) -> float:
+    """Linear warmup to `peak`, then cosine decay to ~0."""
+    scale = min(1.0, (step + 1) / warmup)
+    if step > warmup:
+        scale *= 0.5 * (1.0 + np.cos(np.pi * step / steps))
+    return peak * scale
+
+
+def train_model(
+    cfg: ModelConfig,
+    corpus: "corpus_mod.Corpus",
+    steps: int,
+    *,
+    batch: int = 16,
+    seq: int = 64,
+    seed: int = 0,
+    log_every: int = 50,
+    log=print,
+) -> Weights:
+    """Train one model; returns the final weights (host numpy-backed)."""
+    rng = np.random.default_rng(corpus_mod.SEED + 17 + seed)
+    w = init_weights(cfg, jax.random.PRNGKey(seed))
+    state = adam_init(w)
+    t0 = time.time()
+    loss = None
+    for step in range(steps):
+        tokens = jnp.asarray(
+            corpus_mod.sample_training_batch(corpus, rng, batch, seq)
+        )
+        lr = jnp.asarray(lr_schedule(step, steps), jnp.float32)
+        w, state, loss = _train_step(w, state, tokens, cfg, lr)
+        if log_every and (step % log_every == 0 or step == steps - 1):
+            log(
+                f"[train {cfg.name}] step {step:4d}/{steps} "
+                f"loss {float(loss):.4f} ({time.time() - t0:.1f}s)"
+            )
+    return {k: jnp.asarray(v) for k, v in w.items()}
+
+
+def agreement_rate(
+    w_llm: Weights, cfg_llm: ModelConfig,
+    w_ssm: Weights, cfg_ssm: ModelConfig,
+    corpus: "corpus_mod.Corpus",
+    *,
+    batch: int = 16,
+    seq: int = 64,
+    seed: int = 123,
+) -> float:
+    """Fraction of held-out positions where SSM argmax == LLM argmax.
+
+    This is (roughly) the per-token acceptance probability p that shapes
+    l(s); printed by aot.py as a build sanity check (expect 0.5-0.9)."""
+    rng = np.random.default_rng(seed)
+    tokens = jnp.asarray(corpus_mod.sample_training_batch(corpus, rng, batch, seq))
+    pred_l = jnp.argmax(forward_train(w_llm, cfg_llm, tokens[:, :-1]), axis=-1)
+    pred_s = jnp.argmax(forward_train(w_ssm, cfg_ssm, tokens[:, :-1]), axis=-1)
+    return float((pred_l == pred_s).mean())
+
+
+def save_weights_npz(path: str, w: Weights) -> None:
+    np.savez(path, **{k: np.asarray(v) for k, v in w.items()})
+
+
+def load_weights_npz(path: str) -> Dict[str, jnp.ndarray]:
+    data = np.load(path)
+    return {k: jnp.asarray(data[k]) for k in data.files}

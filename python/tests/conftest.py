@@ -1,0 +1,62 @@
+"""Shared fixtures: tiny model configs (much smaller than the artifact
+models) so the pytest suite stays fast while exercising every code path,
+plus session-cached weights."""
+
+import os
+import sys
+
+import jax
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from compile.configs import ModelConfig  # noqa: E402
+
+
+TINY_LLM = ModelConfig(
+    name="llm",
+    vocab=64,
+    d_model=32,
+    n_layers=2,
+    n_heads=2,
+    d_head=16,
+    d_ff=64,
+    max_seq=48,
+    max_prompt=12,
+)
+
+TINY_SSM = ModelConfig(
+    name="ssm",
+    vocab=64,
+    d_model=16,
+    n_layers=1,
+    n_heads=1,
+    d_head=16,
+    d_ff=32,
+    max_seq=48,
+    max_prompt=12,
+)
+
+
+@pytest.fixture(scope="session")
+def tiny_llm_cfg():
+    return TINY_LLM
+
+
+@pytest.fixture(scope="session")
+def tiny_ssm_cfg():
+    return TINY_SSM
+
+
+@pytest.fixture(scope="session")
+def tiny_llm_weights():
+    from compile.model import init_weights
+
+    return init_weights(TINY_LLM, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="session")
+def tiny_ssm_weights():
+    from compile.model import init_weights
+
+    return init_weights(TINY_SSM, jax.random.PRNGKey(1))

@@ -1,0 +1,116 @@
+"""AOT pipeline: lowering produces loadable HLO text; the shipped artifact
+manifest (when present) is internally consistent with the weight blobs
+and the calling convention the Rust runtime assumes."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile.aot import executable_matrix, lower_executable, to_hlo_text
+from compile.configs import (
+    FULL_PROFILE,
+    LLM_CONFIG,
+    QUICK_PROFILE,
+    SSM_CONFIG,
+    config_fingerprint,
+)
+from compile.model import WEIGHT_ORDER, weight_shapes
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+class TestLowering:
+    def test_hlo_text_is_emitted(self, tiny_llm_cfg):
+        text = lower_executable("verify", tiny_llm_cfg, 1, 1)
+        assert "ENTRY" in text
+        assert "f32" in text
+        # weights are parameters, not constants: the text stays small
+        assert len(text) < 2_000_000
+
+    def test_all_three_kinds_lower(self, tiny_llm_cfg, tiny_ssm_cfg):
+        for kind, cfg, s in [
+            ("prefill", tiny_llm_cfg, 0),
+            ("verify", tiny_llm_cfg, 2),
+            ("speculate", tiny_ssm_cfg, 2),
+        ]:
+            text = lower_executable(kind, cfg, 2, s)
+            assert "ENTRY" in text
+
+    def test_to_hlo_text_roundtrip_simple(self):
+        import jax
+        import jax.numpy as jnp
+
+        def fn(x):
+            return (x * 2.0,)
+
+        lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((2,), jnp.float32))
+        assert "ENTRY" in to_hlo_text(lowered)
+
+
+class TestExecutableMatrix:
+    def test_full_profile_covers_serving_needs(self):
+        entries = list(executable_matrix(FULL_PROFILE))
+        names = {e[0] for e in entries}
+        # prefill for every bucket and both models
+        for b in FULL_PROFILE.batch_buckets:
+            assert f"llm_prefill_b{b}" in names
+            assert f"ssm_prefill_b{b}" in names
+            assert f"llm_verify_b{b}_s0" in names  # the no-spec baseline
+        # the Fig. 2 probes
+        assert "llm_verify_b4_s8" in names
+        assert "ssm_speculate_b4_s8" in names
+
+    def test_fingerprint_distinguishes_profiles(self):
+        assert config_fingerprint(FULL_PROFILE) != config_fingerprint(QUICK_PROFILE)
+        assert config_fingerprint(FULL_PROFILE) == config_fingerprint(FULL_PROFILE)
+
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+@needs_artifacts
+class TestShippedArtifacts:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_weight_blobs_match_tables(self, manifest):
+        for name, m in manifest["models"].items():
+            path = os.path.join(ARTIFACTS, m["weights_file"])
+            assert os.path.getsize(path) == m["weights_bytes"], name
+            assert [w["name"] for w in m["weights"]] == list(WEIGHT_ORDER)
+            cfg = LLM_CONFIG if name == "llm" else SSM_CONFIG
+            shapes = weight_shapes(cfg)
+            for w in m["weights"]:
+                assert tuple(w["shape"]) == tuple(shapes[w["name"]]), w["name"]
+
+    def test_every_declared_hlo_file_exists(self, manifest):
+        for e in manifest["executables"]:
+            path = os.path.join(ARTIFACTS, e["file"])
+            assert os.path.exists(path), e["file"]
+            with open(path) as f:
+                head = f.read(4096)
+            assert "HloModule" in head or "ENTRY" in head
+
+    def test_goldens_are_consistent(self, manifest):
+        with open(os.path.join(ARTIFACTS, manifest["goldens"])) as f:
+            goldens = json.load(f)
+        assert goldens["cases"], "no golden cases"
+        for case in goldens["cases"]:
+            assert len(case["greedy"]) == goldens["n_new"]
+            assert all(0 <= t < LLM_CONFIG.vocab for t in case["greedy"])
+
+    def test_weights_are_finite(self, manifest):
+        m = manifest["models"]["llm"]
+        blob = np.fromfile(
+            os.path.join(ARTIFACTS, m["weights_file"]), dtype="<f4"
+        )
+        assert np.isfinite(blob).all()
+        # trained weights, not zeros
+        assert np.abs(blob).mean() > 1e-3

@@ -1,0 +1,85 @@
+"""Corpus/dataset generation invariants (the substrate for acceptance
+behaviour and the shared Rust/Python dataset contract)."""
+
+import json
+
+import numpy as np
+import pytest
+
+from compile import corpus as cm
+from compile.configs import VOCAB_SIZE
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return cm.build_corpus()
+
+
+class TestVocab:
+    def test_size_and_specials(self, corpus):
+        assert corpus.vocab_size == VOCAB_SIZE
+        assert corpus.vocab[cm.PAD] == "<pad>"
+        assert corpus.vocab[cm.BOS] == "<bos>"
+        assert corpus.vocab[cm.EOS] == "<eos>"
+        assert corpus.vocab[cm.UNK] == "<unk>"
+        assert len(set(corpus.vocab)) == VOCAB_SIZE  # no duplicates
+
+
+class TestMarkovChain:
+    def test_transitions_are_valid_distributions(self, corpus):
+        sums = corpus.trans_prob.sum(axis=1)
+        np.testing.assert_allclose(sums, 1.0, rtol=1e-9)
+        # successors never point at special tokens
+        used = corpus.trans_next[corpus.trans_prob > 0]
+        assert (used >= cm.N_SPECIAL).all()
+
+    def test_hard_fraction_near_target(self, corpus):
+        frac = corpus.hard_mask.mean()
+        assert abs(frac - cm.HARD_FRACTION) < 0.08
+
+    def test_deterministic_given_seed(self):
+        a = cm.build_corpus(123)
+        b = cm.build_corpus(123)
+        c = cm.build_corpus(124)
+        np.testing.assert_array_equal(a.trans_next, b.trans_next)
+        assert not np.array_equal(a.trans_next, c.trans_next)
+
+    def test_walks_stay_in_content_vocab(self, corpus):
+        rng = np.random.default_rng(0)
+        w = cm.sample_walk(corpus, rng, 200)
+        assert (w >= cm.N_SPECIAL).all()
+        assert (w < VOCAB_SIZE).all()
+
+    def test_oracle_argmax_walk_is_deterministic(self, corpus):
+        start = int(corpus.openers[0])
+        a = cm.oracle_argmax_walk(corpus, start, 20)
+        b = cm.oracle_argmax_walk(corpus, start, 20)
+        np.testing.assert_array_equal(a, b)
+
+
+class TestDataset:
+    def test_split_sizes_and_disjoint_generation(self, corpus):
+        prompts = cm.build_dataset(corpus, n_profile=20, n_eval=30)
+        assert sum(p.split == "profile" for p in prompts) == 20
+        assert sum(p.split == "eval" for p in prompts) == 30
+        for p in prompts:
+            assert p.ids[0] == cm.BOS
+            assert 4 + 1 <= len(p.ids) <= 24 + 1
+            # text round-trips through the vocab
+            assert p.text == " ".join(corpus.vocab[t] for t in p.ids[1:])
+
+    def test_write_dataset_schema(self, corpus, tmp_path):
+        prompts = cm.build_dataset(corpus, n_profile=3, n_eval=4)
+        path = tmp_path / "dataset.json"
+        cm.write_dataset(str(path), corpus, prompts)
+        data = json.loads(path.read_text())
+        assert len(data["vocab"]) == VOCAB_SIZE
+        assert data["special"] == {"pad": 0, "bos": 1, "eos": 2, "unk": 3}
+        assert len(data["prompts"]) == 7
+        assert {p["split"] for p in data["prompts"]} == {"profile", "eval"}
+
+    def test_training_batch_shape(self, corpus):
+        rng = np.random.default_rng(1)
+        batch = cm.sample_training_batch(corpus, rng, 4, 16)
+        assert batch.shape == (4, 16)
+        assert (batch[:, 0] == cm.BOS).all()

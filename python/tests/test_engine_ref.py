@@ -1,0 +1,137 @@
+"""The reference engine's core guarantees (shared contract with Rust).
+
+The heart of the suite: greedy speculative decoding is LOSSLESS — its
+output must be byte-identical to plain greedy decoding for any draft
+model, any speculation length, any batch composition.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import engine_ref
+
+
+@pytest.fixture(scope="module")
+def prompts():
+    return [[1, 5, 9, 13], [1, 7, 8], [1, 20, 21, 22, 23, 24], [1, 2]]
+
+
+@pytest.fixture(scope="module")
+def greedy(tiny_llm_weights, tiny_llm_cfg, prompts):
+    return engine_ref.greedy_generate(
+        tiny_llm_weights, tiny_llm_cfg, prompts, 14
+    )
+
+
+class TestLosslessness:
+    @pytest.mark.parametrize("s", [1, 2, 3, 5, 7])
+    def test_spec_equals_greedy(
+        self, tiny_llm_weights, tiny_llm_cfg, tiny_ssm_weights, tiny_ssm_cfg,
+        prompts, greedy, s,
+    ):
+        out = engine_ref.spec_generate(
+            tiny_llm_weights, tiny_llm_cfg,
+            tiny_ssm_weights, tiny_ssm_cfg,
+            prompts, 14, s,
+        )
+        assert out == greedy, f"s={s} diverged"
+
+    def test_spec_equals_greedy_when_draft_is_target(
+        self, tiny_llm_weights, tiny_llm_cfg, prompts, greedy
+    ):
+        """Perfect draft model: everything accepted, output unchanged."""
+        accepts = []
+        out = engine_ref.spec_generate(
+            tiny_llm_weights, tiny_llm_cfg,
+            tiny_llm_weights, tiny_llm_cfg,
+            prompts, 14, 4, record_accepts=accepts,
+        )
+        assert out == greedy
+        # self-drafting must accept (nearly) everything
+        acc = np.concatenate(accepts)
+        assert acc.mean() > 3.9
+
+    def test_single_prompt_batch(self, tiny_llm_weights, tiny_llm_cfg,
+                                 tiny_ssm_weights, tiny_ssm_cfg):
+        p = [[1, 3, 5]]
+        g = engine_ref.greedy_generate(tiny_llm_weights, tiny_llm_cfg, p, 10)
+        s = engine_ref.spec_generate(
+            tiny_llm_weights, tiny_llm_cfg, tiny_ssm_weights, tiny_ssm_cfg,
+            p, 10, 2,
+        )
+        assert s == g
+
+
+class TestStateInvariants:
+    def test_prefill_establishes_ingested_invariant(
+        self, tiny_llm_weights, tiny_llm_cfg, tiny_ssm_weights, tiny_ssm_cfg
+    ):
+        prompts = [[1, 4], [1, 6, 7]]
+        session = engine_ref.BatchSession(prompts)
+        llm = engine_ref.ModelState.fresh(tiny_llm_cfg, tiny_llm_weights, 2)
+        ssm = engine_ref.ModelState.fresh(tiny_ssm_cfg, tiny_ssm_weights, 2)
+        engine_ref.prefill(llm, session)
+        engine_ref.ssm_sync_prefill(ssm, session)
+        for i in range(2):
+            assert llm.ingested[i] == len(session.committed[i]) - 1
+            assert ssm.ingested[i] == len(prompts[i])
+
+    def test_round_loop_invariants(
+        self, tiny_llm_weights, tiny_llm_cfg, tiny_ssm_weights, tiny_ssm_cfg
+    ):
+        prompts = [[1, 4], [1, 6, 7]]
+        session = engine_ref.BatchSession(prompts)
+        llm = engine_ref.ModelState.fresh(tiny_llm_cfg, tiny_llm_weights, 2)
+        ssm = engine_ref.ModelState.fresh(tiny_ssm_cfg, tiny_ssm_weights, 2)
+        engine_ref.prefill(llm, session)
+        engine_ref.ssm_sync_prefill(ssm, session)
+        for _ in range(5):
+            drafts = engine_ref.speculate_step(ssm, session, 3)
+            assert drafts.shape == (2, 3)
+            acc = engine_ref.verify_step(llm, session, drafts)
+            assert all(0 <= a <= 3 for a in acc)
+            engine_ref.ssm_rollback(ssm, session)
+            for i in range(2):
+                # both models: ingested == committed - 1 after each round
+                assert llm.ingested[i] == len(session.committed[i]) - 1
+                assert ssm.ingested[i] <= len(session.committed[i]) - 1
+                # committed grows by accepted + 1
+            # ssm delta for next round is 1..=2 tokens
+            for i in range(2):
+                missing = len(session.committed[i]) - ssm.ingested[i]
+                assert 1 <= missing <= 2
+
+    def test_acceptance_measurement_shapes(
+        self, tiny_llm_weights, tiny_llm_cfg, tiny_ssm_weights, tiny_ssm_cfg
+    ):
+        samples = engine_ref.measure_acceptance(
+            tiny_llm_weights, tiny_llm_cfg, tiny_ssm_weights, tiny_ssm_cfg,
+            [[1, 5, 9]], s=4, rounds=3,
+        )
+        assert samples.ndim == 1
+        assert (samples >= 0).all() and (samples <= 4).all()
+
+    def test_l_of_s_estimator_monotone(self):
+        samples = np.asarray([0, 1, 1, 2, 4, 4, 6])
+        l = engine_ref.l_of_s(samples, 6)
+        assert (np.diff(l) >= -1e-12).all()
+        assert l[0] == np.minimum(samples, 1).mean()
+
+
+class TestValidation:
+    def test_rejects_oversized_prompt(self, tiny_llm_weights, tiny_llm_cfg):
+        too_long = [[1] * (tiny_llm_cfg.max_prompt + 1)]
+        with pytest.raises(ValueError):
+            engine_ref.greedy_generate(tiny_llm_weights, tiny_llm_cfg, too_long, 4)
+
+    def test_delta_invariant_is_enforced(
+        self, tiny_llm_weights, tiny_llm_cfg, tiny_ssm_weights, tiny_ssm_cfg
+    ):
+        prompts = [[1, 4]]
+        session = engine_ref.BatchSession(prompts)
+        ssm = engine_ref.ModelState.fresh(tiny_ssm_cfg, tiny_ssm_weights, 1)
+        # ssm never prefilled: missing == full prompt > 2
+        session.committed[0].extend([5, 6, 7])
+        with pytest.raises(AssertionError):
+            engine_ref.speculate_step(ssm, session, 2)

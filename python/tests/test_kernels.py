@@ -1,0 +1,160 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes/length patterns; exact agreement is
+required for argmax (greedy acceptance depends on it) and tight allclose
+for attention.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.argmax import vocab_argmax
+from compile.kernels.attention import verify_attention, vmem_bytes
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (scale * jax.random.normal(jax.random.PRNGKey(key), shape)).astype(dtype)
+
+
+class TestVerifyAttention:
+    @settings(**SETTINGS)
+    @given(
+        b=st.integers(1, 4),
+        h=st.integers(1, 3),
+        t=st.integers(1, 9),
+        dh=st.sampled_from([8, 16, 32]),
+        s_max=st.sampled_from([32, 48, 224]),
+        data=st.data(),
+    )
+    def test_matches_reference(self, b, h, t, dh, s_max, data):
+        lens = jnp.asarray(
+            data.draw(
+                st.lists(
+                    st.integers(0, s_max - t), min_size=b, max_size=b
+                )
+            ),
+            jnp.int32,
+        )
+        q = rand(1, (b, h, t, dh))
+        k = rand(2, (b, h, s_max, dh))
+        v = rand(3, (b, h, s_max, dh))
+        out = verify_attention(q, k, v, lens)
+        expect = ref.verify_attention_ref(q, k, v, lens)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(expect), rtol=3e-5, atol=3e-5
+        )
+
+    def test_zero_length_rows_attend_only_self(self):
+        # lens = 0: query 0 attends only position 0 (itself, just written)
+        b, h, t, dh, s_max = 1, 1, 1, 8, 32
+        q = rand(4, (b, h, t, dh))
+        k = rand(5, (b, h, s_max, dh))
+        v = rand(6, (b, h, s_max, dh))
+        lens = jnp.zeros((b,), jnp.int32)
+        out = verify_attention(q, k, v, lens)
+        np.testing.assert_allclose(
+            np.asarray(out)[0, 0, 0], np.asarray(v)[0, 0, 0], rtol=1e-5, atol=1e-5
+        )
+
+    def test_stale_tail_is_never_attended(self):
+        # corrupting cache entries above lens+t must not change the output
+        b, h, t, dh, s_max = 2, 2, 3, 16, 48
+        q = rand(7, (b, h, t, dh))
+        k = rand(8, (b, h, s_max, dh))
+        v = rand(9, (b, h, s_max, dh))
+        lens = jnp.asarray([5, 11], jnp.int32)
+        base = np.asarray(verify_attention(q, k, v, lens))
+        k2 = k.at[:, :, 20:].set(1e4)
+        v2 = v.at[:, :, 20:].set(-1e4)
+        out = np.asarray(verify_attention(q, k2, v2, lens))
+        np.testing.assert_allclose(out, base, rtol=1e-5, atol=1e-5)
+
+    def test_block_size_fallback_on_non_divisor(self):
+        # s_block that does not divide s_max falls back to a divisor
+        b, h, t, dh, s_max = 1, 1, 2, 8, 36
+        q = rand(10, (b, h, t, dh))
+        k = rand(11, (b, h, s_max, dh))
+        v = rand(12, (b, h, s_max, dh))
+        lens = jnp.asarray([7], jnp.int32)
+        out = verify_attention(q, k, v, lens, s_block=32)
+        expect = ref.verify_attention_ref(q, k, v, lens)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(expect), rtol=3e-5, atol=3e-5
+        )
+
+    def test_jit_compatible(self):
+        b, h, t, dh, s_max = 2, 2, 4, 16, 64
+        fn = jax.jit(verify_attention)
+        q = rand(13, (b, h, t, dh))
+        k = rand(14, (b, h, s_max, dh))
+        v = rand(15, (b, h, s_max, dh))
+        lens = jnp.asarray([3, 9], jnp.int32)
+        np.testing.assert_allclose(
+            np.asarray(fn(q, k, v, lens)),
+            np.asarray(ref.verify_attention_ref(q, k, v, lens)),
+            rtol=3e-5,
+            atol=3e-5,
+        )
+
+    def test_vmem_estimate_is_positive_and_monotone(self):
+        assert vmem_bytes(4, 6, 4, 32, 112) > 0
+        assert vmem_bytes(4, 6, 4, 32, 224) > vmem_bytes(4, 6, 4, 32, 112)
+        # the largest serving bucket stays well under the 16 MiB VMEM budget
+        assert vmem_bytes(16, 6, 9, 32, 112) < 16 * 1024 * 1024
+
+
+class TestVocabArgmax:
+    @settings(**SETTINGS)
+    @given(
+        rows=st.integers(1, 24),
+        v=st.sampled_from([64, 512, 1000]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_reference(self, rows, v, seed):
+        x = rand(seed, (rows, v), scale=3.0)
+        np.testing.assert_array_equal(
+            np.asarray(vocab_argmax(x)), np.asarray(ref.vocab_argmax_ref(x))
+        )
+
+    @settings(**SETTINGS)
+    @given(
+        b=st.integers(1, 4),
+        t=st.integers(1, 6),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_leading_dims_preserved(self, b, t, seed):
+        x = rand(seed, (b, t, 128))
+        out = vocab_argmax(x)
+        assert out.shape == (b, t)
+        np.testing.assert_array_equal(
+            np.asarray(out), np.asarray(ref.vocab_argmax_ref(x))
+        )
+
+    def test_ties_break_to_first_across_tiles(self):
+        # identical maxima in different V-tiles: earliest index must win,
+        # matching jnp.argmax (greedy acceptance depends on this)
+        x = jnp.zeros((3, 512))
+        x = x.at[0, 10].set(7.0).at[0, 300].set(7.0)
+        x = x.at[1, 255].set(1.0).at[1, 256].set(1.0)  # tile boundary
+        x = x.at[2, 511].set(2.0)
+        out = np.asarray(vocab_argmax(x, v_block=256))
+        np.testing.assert_array_equal(out, [10, 255, 511])
+
+    def test_negative_logits(self):
+        x = -jnp.abs(rand(99, (5, 512))) - 1.0
+        np.testing.assert_array_equal(
+            np.asarray(vocab_argmax(x)), np.asarray(ref.vocab_argmax_ref(x))
+        )
+
+    def test_nondivisor_vocab_falls_back(self):
+        x = rand(100, (4, 300))
+        np.testing.assert_array_equal(
+            np.asarray(vocab_argmax(x, v_block=256)),
+            np.asarray(ref.vocab_argmax_ref(x)),
+        )

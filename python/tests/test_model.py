@@ -1,0 +1,170 @@
+"""L2 invariants of the decoder + functional KV cache."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    WEIGHT_ORDER,
+    forward_tokens,
+    forward_train,
+    init_weights,
+    make_prefill,
+    make_speculate,
+    make_verify,
+    weight_shapes,
+)
+
+
+def zeros_kv(cfg, batch):
+    return jnp.zeros(cfg.kv_shape(batch), jnp.float32)
+
+
+def wlist(w):
+    return [w[k] for k in WEIGHT_ORDER]
+
+
+class TestWeights:
+    def test_shapes_cover_weight_order(self, tiny_llm_cfg):
+        shapes = weight_shapes(tiny_llm_cfg)
+        assert list(shapes.keys()) == list(WEIGHT_ORDER)
+
+    def test_init_matches_declared_shapes(self, tiny_llm_cfg, tiny_llm_weights):
+        shapes = weight_shapes(tiny_llm_cfg)
+        for name, arr in tiny_llm_weights.items():
+            assert tuple(arr.shape) == tuple(shapes[name]), name
+            assert arr.dtype == jnp.float32
+
+    def test_param_count_close_to_estimate(self, tiny_llm_cfg, tiny_llm_weights):
+        actual = sum(int(np.prod(a.shape)) for a in tiny_llm_weights.values())
+        est = tiny_llm_cfg.n_params()
+        assert abs(actual - est) / actual < 0.05
+
+
+class TestForwardTokens:
+    def test_kernels_and_jnp_paths_agree(self, tiny_llm_cfg, tiny_llm_weights):
+        cfg, w = tiny_llm_cfg, tiny_llm_weights
+        toks = jnp.asarray([[4, 5, 6], [7, 8, 9]], jnp.int32)
+        lens = jnp.asarray([3, 10], jnp.int32)
+        kv = 0.1 * jax.random.normal(jax.random.PRNGKey(2), cfg.kv_shape(2))
+        p1, kv1 = forward_tokens(w, cfg, toks, lens, kv, use_kernels=True)
+        p2, kv2 = forward_tokens(w, cfg, toks, lens, kv, use_kernels=False)
+        np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+        np.testing.assert_allclose(
+            np.asarray(kv1), np.asarray(kv2), rtol=1e-5, atol=1e-5
+        )
+
+    def test_kv_written_exactly_at_lens_offsets(self, tiny_llm_cfg, tiny_llm_weights):
+        cfg, w = tiny_llm_cfg, tiny_llm_weights
+        toks = jnp.asarray([[4, 5], [6, 7]], jnp.int32)
+        lens = jnp.asarray([0, 5], jnp.int32)
+        kv = jnp.full(cfg.kv_shape(2), 7.0)
+        _, kv2 = forward_tokens(w, cfg, toks, lens, kv, use_kernels=False)
+        kv2 = np.asarray(kv2)
+        # row 0: positions 0..1 written, rest untouched
+        assert not np.allclose(kv2[:, :, 0, :, 0:2], 7.0)
+        assert np.allclose(kv2[:, :, 0, :, 2:], 7.0)
+        # row 1: positions 5..6 written, outside untouched
+        assert np.allclose(kv2[:, :, 1, :, :5], 7.0)
+        assert not np.allclose(kv2[:, :, 1, :, 5:7], 7.0)
+        assert np.allclose(kv2[:, :, 1, :, 7:], 7.0)
+
+    def test_incremental_equals_full_forward(self, tiny_llm_cfg, tiny_llm_weights):
+        """Token-by-token decoding with the cache must equal the training
+        forward (full causal attention) on the same sequence."""
+        cfg, w = tiny_llm_cfg, tiny_llm_weights
+        seq = jnp.asarray([[4, 9, 13, 21, 33, 7]], jnp.int32)
+        full_logits = forward_train(w, cfg, seq)
+        full_pred = np.asarray(jnp.argmax(full_logits, -1))[0]
+
+        kv = zeros_kv(cfg, 1)
+        inc_pred = []
+        for i in range(seq.shape[1]):
+            pred, kv = forward_tokens(
+                w, cfg, seq[:, i : i + 1], jnp.asarray([i], jnp.int32), kv,
+                use_kernels=False,
+            )
+            inc_pred.append(int(pred[0, 0]))
+        np.testing.assert_array_equal(inc_pred, full_pred)
+
+    def test_batched_rows_are_independent(self, tiny_llm_cfg, tiny_llm_weights):
+        """A row's output must not depend on what other rows contain."""
+        cfg, w = tiny_llm_cfg, tiny_llm_weights
+        kv2 = zeros_kv(cfg, 2)
+        toks2 = jnp.asarray([[4, 5, 6], [40, 50, 60]], jnp.int32)
+        lens2 = jnp.asarray([0, 0], jnp.int32)
+        p2, _ = forward_tokens(w, cfg, toks2, lens2, kv2, use_kernels=False)
+
+        kv1 = zeros_kv(cfg, 1)
+        p1, _ = forward_tokens(
+            w, cfg, toks2[:1], lens2[:1], kv1, use_kernels=False
+        )
+        np.testing.assert_array_equal(np.asarray(p2)[0], np.asarray(p1)[0])
+
+
+class TestEntryPoints:
+    def test_prefill_gathers_last_real_token(self, tiny_llm_cfg, tiny_llm_weights):
+        cfg, w = tiny_llm_cfg, tiny_llm_weights
+        batch = 2
+        fn = make_prefill(cfg, batch, use_kernels=False)
+        toks = jnp.zeros((batch, cfg.max_prompt), jnp.int32)
+        toks = toks.at[0, :3].set(jnp.asarray([1, 4, 9]))
+        toks = toks.at[1, :5].set(jnp.asarray([1, 7, 8, 2, 3]))
+        plens = jnp.asarray([3, 5], jnp.int32)
+        last, kv = fn(toks, plens, zeros_kv(cfg, batch), *wlist(w))
+        # cross-check: pred at position plens-1 of a raw forward
+        pred, _ = forward_tokens(
+            w, cfg, toks, jnp.zeros((batch,), jnp.int32),
+            zeros_kv(cfg, batch), use_kernels=False,
+        )
+        np.testing.assert_array_equal(
+            np.asarray(last), [np.asarray(pred)[0, 2], np.asarray(pred)[1, 4]]
+        )
+
+    def test_verify_s0_is_plain_decode(self, tiny_llm_cfg, tiny_llm_weights):
+        cfg, w = tiny_llm_cfg, tiny_llm_weights
+        fn = make_verify(cfg, 1, 0, use_kernels=False)
+        kv = zeros_kv(cfg, 1)
+        pred, kv = fn(
+            jnp.asarray([[4]], jnp.int32), jnp.asarray([0], jnp.int32), kv, *wlist(w)
+        )
+        assert pred.shape == (1, 1)
+
+    def test_speculate_draft_shape_and_dlens(self, tiny_ssm_cfg, tiny_ssm_weights):
+        cfg, w = tiny_ssm_cfg, tiny_ssm_weights
+        batch, s = 2, 3
+        fn = make_speculate(cfg, batch, s, use_kernels=False)
+        delta = jnp.asarray([[4, 0], [5, 6]], jnp.int32)
+        dlens = jnp.asarray([1, 2], jnp.int32)
+        lens = jnp.asarray([3, 7], jnp.int32)
+        draft, kv = fn(delta, dlens, lens, zeros_kv(cfg, batch), *wlist(w))
+        assert draft.shape == (batch, s)
+        assert kv.shape == tuple(cfg.kv_shape(batch))
+
+    def test_speculate_is_autoregressive_chain(self, tiny_ssm_cfg, tiny_ssm_weights):
+        """The s drafts must equal s sequential single-token decodes."""
+        cfg, w = tiny_ssm_cfg, tiny_ssm_weights
+        s = 4
+        fn = make_speculate(cfg, 1, s, use_kernels=False)
+        delta = jnp.asarray([[9, 0]], jnp.int32)
+        dlens = jnp.asarray([1], jnp.int32)
+        lens = jnp.asarray([0], jnp.int32)
+        draft, _ = fn(delta, dlens, lens, zeros_kv(cfg, 1), *wlist(w))
+        draft = np.asarray(draft)[0]
+
+        # manual chain with forward_tokens
+        kv = zeros_kv(cfg, 1)
+        pred, kv = forward_tokens(
+            w, cfg, delta[:, :1], lens, kv, use_kernels=False
+        )
+        chain = [int(pred[0, 0])]
+        cur = 1
+        for _ in range(s - 1):
+            tok = jnp.asarray([[chain[-1]]], jnp.int32)
+            pred, kv = forward_tokens(
+                w, cfg, tok, jnp.asarray([cur], jnp.int32), kv, use_kernels=False
+            )
+            chain.append(int(pred[0, 0]))
+            cur += 1
+        np.testing.assert_array_equal(draft, chain)

@@ -1,0 +1,83 @@
+//! Shared helpers for the figure-reproduction benches.
+//!
+//! Each bench is a `harness = false` binary that regenerates one of the
+//! paper's figures: it prints the same rows/series the paper reports and
+//! writes a CSV under `results/`.  Absolute numbers differ from the
+//! paper's RTX 3090 testbed (CPU PJRT + calibrated simulator, see
+//! DESIGN.md §Substitutions); the *shape* — who wins, by what factor,
+//! where the crossovers fall — is asserted in EXPERIMENTS.md.
+
+use std::path::PathBuf;
+
+use specbatch::runtime::Runtime;
+
+/// Artifacts directory, honouring `SPECBATCH_ARTIFACTS`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("SPECBATCH_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| {
+            PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+        })
+}
+
+/// Load the runtime, or explain how to build artifacts and exit 0 (so
+/// `cargo bench` stays green on a fresh checkout).
+pub fn load_runtime_or_exit() -> Runtime {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!(
+            "SKIP: no artifacts at {} — run `make artifacts` first",
+            dir.display()
+        );
+        std::process::exit(0);
+    }
+    match Runtime::load(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("failed to load artifacts: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+/// Bench scale: "quick" (CI-sized) or "full" (paper-shaped, default).
+pub fn scale() -> String {
+    std::env::var("SPECBATCH_BENCH_SCALE").unwrap_or_else(|_| "full".into())
+}
+
+pub fn is_quick() -> bool {
+    scale() == "quick"
+}
+
+/// results/ output path.
+pub fn results_path(name: &str) -> PathBuf {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("results");
+    let _ = std::fs::create_dir_all(&dir);
+    dir.join(name)
+}
+
+/// Render a small ASCII table (rows of equal length).
+pub fn print_table(header: &[String], rows: &[Vec<String>]) {
+    let ncol = header.len();
+    let mut width = vec![0usize; ncol];
+    for (i, h) in header.iter().enumerate() {
+        width[i] = h.len();
+    }
+    for row in rows {
+        for (i, c) in row.iter().enumerate() {
+            width[i] = width[i].max(c.len());
+        }
+    }
+    let line = |cells: &[String]| {
+        let mut s = String::new();
+        for (i, c) in cells.iter().enumerate() {
+            s.push_str(&format!("{:>w$}  ", c, w = width[i]));
+        }
+        s
+    };
+    println!("{}", line(header));
+    println!("{}", "-".repeat(width.iter().sum::<usize>() + 2 * ncol));
+    for row in rows {
+        println!("{}", line(row));
+    }
+}

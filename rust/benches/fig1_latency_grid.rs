@@ -1,0 +1,170 @@
+//! Fig. 1 — per-token latency vs speculation length for different batch
+//! sizes, models and GPUs; the optimal s per batch is starred.
+//!
+//! Two reproductions:
+//!
+//! 1. **Simulator at paper scale** (all six panels): OPT-1.3B/6.7B and
+//!    Llama-7B on RTX 3090, plus OPT-6.7B on RTX 4090 and A100, with the
+//!    paper's acceptance curve l(s) = 0.9·s^0.548; batch 1..32, s 1..8.
+//! 2. **Real execution** on the tiny trained pair via the CPU PJRT
+//!    client: batch buckets from the artifact matrix, s 0..6.
+//!
+//! Output: results/fig1_sim.csv, results/fig1_real.csv + ASCII tables
+//! with the per-batch optimum starred.
+
+#[allow(dead_code)]
+mod common;
+
+use specbatch::scheduler::SpecPolicy;
+use specbatch::simulator::{
+    per_token_latency, AcceptanceProcess, CostModel, GpuProfile, ModelProfile, SimConfig,
+};
+use specbatch::util::csv::{f, Csv};
+use specbatch::util::prng::Pcg64;
+
+fn main() {
+    sim_grid();
+    real_grid();
+}
+
+fn sim_grid() {
+    println!("== Fig. 1 (simulator, paper scale) ==");
+    let panels: Vec<(&str, ModelProfile, GpuProfile)> = vec![
+        ("1a", ModelProfile::OPT_1_3B, GpuProfile::RTX3090),
+        ("1b", ModelProfile::OPT_6_7B, GpuProfile::RTX3090),
+        ("1a'", ModelProfile::LLAMA_7B, GpuProfile::RTX3090),
+        ("1d", ModelProfile::OPT_6_7B, GpuProfile::RTX4090),
+        ("1c", ModelProfile::OPT_6_7B, GpuProfile::A100),
+    ];
+    let batches = [1usize, 2, 4, 8, 16, 32];
+    let slens: Vec<usize> = (0..=8).collect();
+    let mut csv = Csv::new(&[
+        "panel", "model", "gpu", "batch", "s", "per_token_latency_ms", "is_opt",
+    ]);
+    let rounds = if common::is_quick() { 100 } else { 500 };
+
+    for (panel, model, gpu) in &panels {
+        let cfg = SimConfig {
+            llm: CostModel::new(*model, *gpu),
+            ssm: CostModel::new(ModelProfile::OPT_125M, *gpu),
+            acceptance: AcceptanceProcess::paper(),
+            max_batch: 32,
+            max_new_tokens: 128,
+            host_overhead: 0.2e-3,
+            seed: 1,
+        };
+        let mut rng = Pcg64::new(42);
+        println!("\n-- panel {panel}: {} on {} --", model.name, gpu.name);
+        let mut rows = Vec::new();
+        for &b in &batches {
+            let lat: Vec<f64> = slens
+                .iter()
+                .map(|&s| per_token_latency(&cfg, b, s, 96, rounds, &mut rng) * 1e3)
+                .collect();
+            let opt = lat
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            let mut cells = vec![format!("b={b}")];
+            for (i, &l) in lat.iter().enumerate() {
+                let star = if i == opt { "*" } else { "" };
+                cells.push(format!("{l:.1}{star}"));
+                csv.row(&[
+                    panel.to_string(),
+                    model.name.to_string(),
+                    gpu.name.to_string(),
+                    b.to_string(),
+                    slens[i].to_string(),
+                    f(l),
+                    ((i == opt) as usize).to_string(),
+                ]);
+            }
+            rows.push(cells);
+        }
+        let mut header = vec!["batch".to_string()];
+        header.extend(slens.iter().map(|s| format!("s={s}")));
+        common::print_table(&header, &rows);
+    }
+    csv.write_file(common::results_path("fig1_sim.csv")).unwrap();
+    println!("\n-> results/fig1_sim.csv");
+}
+
+fn real_grid() {
+    println!("\n== Fig. 1 (real execution, tiny models on CPU PJRT) ==");
+    let rt = common::load_runtime_or_exit();
+    let dataset = rt.dataset().expect("dataset");
+    let mut engine =
+        specbatch::engine::Engine::new(&rt, specbatch::engine::EngineConfig::default())
+            .expect("engine");
+    let mut rng = Pcg64::new(3);
+    let tokens = if common::is_quick() { 12 } else { 24 };
+    let buckets: Vec<usize> = if common::is_quick() {
+        vec![1, 2, 4]
+    } else {
+        rt.manifest.batch_buckets.clone()
+    };
+    // compile everything up front: lazy compilation must not leak into
+    // the timed region (per-token latencies are tens of ms; compiles are
+    // seconds)
+    let max_b = buckets.iter().copied().max().unwrap();
+    rt.warmup(max_b, 8).expect("warmup");
+
+    let mut csv = Csv::new(&["batch", "s", "per_token_latency_ms", "mean_accepted", "is_opt"]);
+    let mut rows = Vec::new();
+    let slens: Vec<usize> = rt.manifest.verify_lengths.clone();
+    for &b in &buckets {
+        let mut lat = Vec::new();
+        let mut acc = Vec::new();
+        for &s in &slens {
+            if s > 0 && rt.manifest.max_spec_len(b) < s {
+                lat.push(f64::NAN);
+                acc.push(0.0);
+                continue;
+            }
+            let prompts: Vec<Vec<i32>> = dataset
+                .sample_eval(&mut rng, b)
+                .into_iter()
+                .map(|p| p.ids)
+                .collect();
+            let policy = if s == 0 {
+                SpecPolicy::NoSpec
+            } else {
+                SpecPolicy::Fixed(s)
+            };
+            let out = engine.generate_batch(&prompts, tokens, &policy).expect("gen");
+            lat.push(out.stats.per_token_latency() * 1e3);
+            acc.push(out.stats.mean_accepted());
+        }
+        let opt = lat
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.is_finite())
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        let mut cells = vec![format!("b={b}")];
+        for (i, &l) in lat.iter().enumerate() {
+            if l.is_nan() {
+                cells.push("-".into());
+                continue;
+            }
+            let star = if i == opt { "*" } else { "" };
+            cells.push(format!("{l:.1}{star}"));
+            csv.row(&[
+                b.to_string(),
+                slens[i].to_string(),
+                f(l),
+                f(acc[i]),
+                ((i == opt) as usize).to_string(),
+            ]);
+        }
+        rows.push(cells);
+    }
+    let mut header = vec!["batch".to_string()];
+    header.extend(slens.iter().map(|s| format!("s={s}")));
+    common::print_table(&header, &rows);
+    csv.write_file(common::results_path("fig1_real.csv")).unwrap();
+    println!("-> results/fig1_real.csv");
+}

@@ -1,0 +1,121 @@
+//! Fig. 3 — the LLM verify-step cost t_L(b, s) as a function of s for
+//! different batch sizes; approximately flat (memory-bound) until the
+//! roofline knee, then growing (the paper approximates it as linear
+//! α_b·s + β with α_b increasing in b).
+//!
+//! Two reproductions:
+//!
+//! 1. **Simulator** (paper scale: OPT-6.7B on RTX 3090, s up to 64):
+//!    shows the knee at b·(s+1) ≈ crossover — b=1 jumps near s≈64, b=8
+//!    near s≈8, exactly the paper's observation.
+//! 2. **Real execution**: wall-time of `Model::verify` on the tiny LLM
+//!    per (bucket, s), plus the fitted α_b, β per bucket.
+//!
+//! Output: results/fig3_sim.csv, results/fig3_real.csv, fitted
+//! results/fig3_alpha.csv.
+
+#[allow(dead_code)]
+mod common;
+
+use std::time::Instant;
+
+use specbatch::model::Model;
+use specbatch::simulator::{CostModel, GpuProfile, ModelProfile};
+use specbatch::util::csv::{f, Csv};
+use specbatch::util::stats::linear_fit;
+
+fn main() {
+    sim_curves();
+    real_curves();
+}
+
+fn sim_curves() {
+    println!("== Fig. 3 (simulator: OPT-6.7B on RTX 3090) ==");
+    let cm = CostModel::new(ModelProfile::OPT_6_7B, GpuProfile::RTX3090);
+    let batches = [1usize, 2, 4, 8, 16, 32];
+    let slens: Vec<usize> = vec![0, 1, 2, 4, 8, 16, 32, 48, 64];
+    let mut csv = Csv::new(&["batch", "s", "t_L_ms"]);
+    let mut rows = Vec::new();
+    for &b in &batches {
+        let mut cells = vec![format!("b={b}")];
+        for &s in &slens {
+            let t = cm.t_verify(b, s, 128) * 1e3;
+            csv.row(&[b.to_string(), s.to_string(), f(t)]);
+            cells.push(format!("{t:.1}"));
+        }
+        rows.push(cells);
+    }
+    let mut header = vec!["batch".to_string()];
+    header.extend(slens.iter().map(|s| format!("s={s}")));
+    common::print_table(&header, &rows);
+    println!(
+        "(roofline knee at b·(s+1) ≈ {:.0} tokens — cf. paper: b=1 jumps at s≈64, b=8 at s≈8)",
+        GpuProfile::RTX3090.crossover_tokens()
+    );
+    csv.write_file(common::results_path("fig3_sim.csv")).unwrap();
+    println!("-> results/fig3_sim.csv\n");
+}
+
+fn real_curves() {
+    println!("== Fig. 3 (real execution: tiny LLM verify step on CPU PJRT) ==");
+    let rt = common::load_runtime_or_exit();
+    let llm = Model::new(&rt, "llm").expect("model");
+    let buckets: Vec<usize> = if common::is_quick() {
+        vec![1, 2, 4]
+    } else {
+        rt.manifest.batch_buckets.clone()
+    };
+    let slens: Vec<usize> = rt.manifest.verify_lengths.clone();
+    let reps = if common::is_quick() { 5 } else { 20 };
+
+    let mut csv = Csv::new(&["batch", "s", "t_L_ms"]);
+    let mut alpha_csv = Csv::new(&["batch", "alpha_ms_per_s", "beta_ms", "r2"]);
+    let mut rows = Vec::new();
+    for &b in &buckets {
+        let mut cells = vec![format!("b={b}")];
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for &s in &slens {
+            if s > 0 && rt.manifest.max_spec_len(b) < s {
+                cells.push("-".into());
+                continue;
+            }
+            // fresh KV + prefill context so the verify step is realistic
+            let mut kv = llm.new_kv(b).expect("kv");
+            let p = llm.spec.max_prompt;
+            let tokens = vec![5i32; b * p];
+            let plens = vec![8i32; b];
+            llm.prefill(&tokens, &plens, b, &mut kv).expect("prefill");
+            // warmup (compile + cache touch)
+            let feed = vec![7i32; b * (s + 1)];
+            llm.verify(&feed, s, b, &mut kv).expect("verify");
+            let clamp: Vec<u32> = vec![9; b];
+            kv.clamp_to(&clamp);
+            // timed reps (re-clamping keeps state bounded)
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                llm.verify(&feed, s, b, &mut kv).expect("verify");
+                kv.clamp_to(&clamp);
+            }
+            let ms = t0.elapsed().as_secs_f64() / reps as f64 * 1e3;
+            csv.row(&[b.to_string(), s.to_string(), f(ms)]);
+            cells.push(format!("{ms:.2}"));
+            xs.push(s as f64);
+            ys.push(ms);
+        }
+        if xs.len() >= 2 {
+            let (alpha, beta, r2) = linear_fit(&xs, &ys);
+            alpha_csv.row(&[b.to_string(), f(alpha), f(beta), f(r2)]);
+            println!("b={b}: t_L(s) ≈ {alpha:.3}·s + {beta:.3} ms (r²={r2:.3})");
+        }
+        rows.push(cells);
+    }
+    let mut header = vec!["batch".to_string()];
+    header.extend(slens.iter().map(|s| format!("s={s}")));
+    common::print_table(&header, &rows);
+    csv.write_file(common::results_path("fig3_real.csv")).unwrap();
+    alpha_csv
+        .write_file(common::results_path("fig3_alpha.csv"))
+        .unwrap();
+    println!("-> results/fig3_real.csv, results/fig3_alpha.csv");
+}

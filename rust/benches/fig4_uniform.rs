@@ -1,0 +1,188 @@
+//! Fig. 4 — uniform traffic: normalized end-to-end latency of adaptive
+//! speculative decoding vs the no-speculation baseline, per fixed batch
+//! size (paper: 2.73× speedup at b=1 falling to 1.31× at b=32, 1.94× on
+//! average).
+//!
+//! Reproductions:
+//!
+//! 1. **Real execution**: profile the LUT on the profile split, then
+//!    serve eval prompts grouped into fixed-size batches with
+//!    no-spec vs the profiled optimal s; report normalized latency.
+//! 2. **Simulator at paper scale** (b up to 32, 128 tokens): same
+//!    comparison with the paper's acceptance curve.
+//!
+//! Output: results/fig4_real.csv, results/fig4_sim.csv.
+
+#[allow(dead_code)]
+mod common;
+
+use specbatch::engine::{Engine, EngineConfig};
+use specbatch::scheduler::profiler::{profile, ProfilerConfig};
+use specbatch::scheduler::SpecPolicy;
+use specbatch::simulator::{
+    batch_service_time, AcceptanceProcess, CostModel, GpuProfile, ModelProfile, SimConfig,
+};
+use specbatch::util::csv::{f, Csv};
+use specbatch::util::prng::Pcg64;
+
+fn main() {
+    real();
+    sim();
+}
+
+fn real() {
+    println!("== Fig. 4 (real execution) ==");
+    let rt = common::load_runtime_or_exit();
+    let dataset = rt.dataset().expect("dataset");
+    let mut engine = Engine::new(&rt, EngineConfig::default()).expect("engine");
+    // keep compilation out of every timed region (profiling included)
+    let max_b = rt.manifest.batch_buckets.iter().copied().max().unwrap();
+    rt.warmup(max_b, 8).expect("warmup");
+
+    // offline profiling on the profile split (the adaptive scheme)
+    let mut rng = Pcg64::new(0xADA);
+    let profile_prompts = dataset.sample_profile(&mut rng, 24);
+    let mut pcfg = ProfilerConfig::from_manifest(&rt.manifest);
+    if common::is_quick() {
+        pcfg.tokens_per_run = 8;
+        pcfg.repeats = 1;
+    }
+    let lut = profile(&mut engine, &profile_prompts, &pcfg)
+        .expect("profiling")
+        .lut;
+    println!("adaptive LUT: {}", lut.to_json().compact());
+
+    let buckets: Vec<usize> = if common::is_quick() {
+        vec![1, 2, 4]
+    } else {
+        rt.manifest.batch_buckets.clone()
+    };
+    let tokens = if common::is_quick() { 12 } else { 32 };
+    let batches_per_point = if common::is_quick() { 1 } else { 3 };
+
+    let mut csv = Csv::new(&[
+        "batch",
+        "nospec_ms_per_token",
+        "adaptive_ms_per_token",
+        "normalized_latency",
+        "speedup",
+        "s_used",
+    ]);
+    let mut rows = Vec::new();
+    let mut speedups = Vec::new();
+    let mut rng = Pcg64::new(0xF4);
+    for &b in &buckets {
+        let mut t_nospec = 0.0;
+        let mut t_adaptive = 0.0;
+        for _ in 0..batches_per_point {
+            let prompts: Vec<Vec<i32>> = dataset
+                .sample_eval(&mut rng, b)
+                .into_iter()
+                .map(|p| p.ids)
+                .collect();
+            let o1 = engine
+                .generate_batch(&prompts, tokens, &SpecPolicy::NoSpec)
+                .expect("nospec");
+            let o2 = engine
+                .generate_batch(&prompts, tokens, &SpecPolicy::Adaptive(lut.clone()))
+                .expect("adaptive");
+            t_nospec += o1.stats.per_token_latency();
+            t_adaptive += o2.stats.per_token_latency();
+        }
+        let norm = t_adaptive / t_nospec;
+        let speedup = 1.0 / norm;
+        speedups.push(speedup);
+        let s_used = lut.lookup(b);
+        csv.row(&[
+            b.to_string(),
+            f(t_nospec / batches_per_point as f64 * 1e3),
+            f(t_adaptive / batches_per_point as f64 * 1e3),
+            f(norm),
+            f(speedup),
+            s_used.to_string(),
+        ]);
+        rows.push(vec![
+            format!("b={b}"),
+            format!("{:.3}", norm),
+            format!("{speedup:.2}x"),
+            format!("s={s_used}"),
+        ]);
+    }
+    common::print_table(
+        &[
+            "batch".into(),
+            "normalized latency".into(),
+            "speedup".into(),
+            "adaptive s".into(),
+        ],
+        &rows,
+    );
+    let avg = speedups.iter().product::<f64>().powf(1.0 / speedups.len() as f64);
+    println!("geo-mean speedup: {avg:.2}x (paper: 1.94x avg, 2.73x at b=1, 1.31x at b=32)");
+    csv.write_file(common::results_path("fig4_real.csv")).unwrap();
+    println!("-> results/fig4_real.csv\n");
+}
+
+fn sim() {
+    println!("== Fig. 4 (simulator, paper scale: OPT-6.7B / RTX 3090) ==");
+    let cfg = SimConfig {
+        llm: CostModel::new(ModelProfile::OPT_6_7B, GpuProfile::RTX3090),
+        ssm: CostModel::new(ModelProfile::OPT_125M, GpuProfile::RTX3090),
+        acceptance: AcceptanceProcess::paper(),
+        max_batch: 32,
+        max_new_tokens: 128,
+        host_overhead: 0.2e-3,
+        seed: 7,
+    };
+    let lut = specbatch::simulator::simulated_lut(&cfg, &[1, 2, 4, 8, 16, 32], 8, 80);
+    println!("simulated LUT: {}", lut.to_json().compact());
+    let mut rng = Pcg64::new(0x5f4);
+    let reps = if common::is_quick() { 3 } else { 10 };
+
+    let mut csv = Csv::new(&["batch", "normalized_latency", "speedup", "s_used"]);
+    let mut rows = Vec::new();
+    let mut speedups = Vec::new();
+    for &b in &[1usize, 2, 4, 8, 16, 32] {
+        let plens = vec![16usize; b];
+        let mut t0 = 0.0;
+        let mut t1 = 0.0;
+        for _ in 0..reps {
+            t0 += batch_service_time(&cfg, &SpecPolicy::NoSpec, &plens, &mut rng).0;
+            t1 += batch_service_time(
+                &cfg,
+                &SpecPolicy::Adaptive(lut.clone()),
+                &plens,
+                &mut rng,
+            )
+            .0;
+        }
+        let norm = t1 / t0;
+        let speedup = 1.0 / norm;
+        speedups.push(speedup);
+        csv.row(&[
+            b.to_string(),
+            f(norm),
+            f(speedup),
+            lut.lookup(b).to_string(),
+        ]);
+        rows.push(vec![
+            format!("b={b}"),
+            format!("{norm:.3}"),
+            format!("{speedup:.2}x"),
+            format!("s={}", lut.lookup(b)),
+        ]);
+    }
+    common::print_table(
+        &[
+            "batch".into(),
+            "normalized latency".into(),
+            "speedup".into(),
+            "adaptive s".into(),
+        ],
+        &rows,
+    );
+    let avg = speedups.iter().product::<f64>().powf(1.0 / speedups.len() as f64);
+    println!("geo-mean speedup: {avg:.2}x (paper: 1.94x avg; 2.73x @ b=1 -> 1.31x @ b=32)");
+    csv.write_file(common::results_path("fig4_sim.csv")).unwrap();
+    println!("-> results/fig4_sim.csv");
+}

@@ -1,0 +1,127 @@
+//! Micro-benchmarks of the L3 hot path (the §Perf workhorse).
+//!
+//! Times each stage of a serving round in isolation on the real runtime:
+//! host staging, SSM speculate, LLM verify (per s), acceptance logic, and
+//! the end-to-end round; prints the engine stopwatch breakdown.  Run
+//! before/after each optimization and record deltas in EXPERIMENTS.md
+//! §Perf.
+
+#[allow(dead_code)]
+mod common;
+
+use std::time::Instant;
+
+use specbatch::engine::acceptance::accept_batch;
+use specbatch::engine::{Engine, EngineConfig};
+use specbatch::model::Model;
+use specbatch::scheduler::SpecPolicy;
+use specbatch::util::csv::{f, Csv};
+use specbatch::util::prng::Pcg64;
+
+fn main() {
+    let rt = common::load_runtime_or_exit();
+    let dataset = rt.dataset().expect("dataset");
+    let reps = if common::is_quick() { 10 } else { 50 };
+    let mut csv = Csv::new(&["section", "batch", "s", "mean_us"]);
+
+    // --- acceptance logic (pure host) ---
+    {
+        let b = 16;
+        let s = 4;
+        let mut rng = Pcg64::new(1);
+        let draft: Vec<i32> = (0..b * s).map(|_| rng.next_below(512) as i32).collect();
+        let pred: Vec<i32> = (0..b * (s + 1)).map(|_| rng.next_below(512) as i32).collect();
+        let t0 = Instant::now();
+        let iters = 100_000;
+        for _ in 0..iters {
+            std::hint::black_box(accept_batch(
+                std::hint::black_box(&draft),
+                std::hint::black_box(&pred),
+                b,
+                s,
+            ));
+        }
+        let us = t0.elapsed().as_secs_f64() / iters as f64 * 1e6;
+        println!("acceptance(b=16,s=4): {us:.3} µs");
+        csv.row(&["acceptance".into(), b.to_string(), s.to_string(), f(us)]);
+    }
+
+    // --- single verify / speculate steps ---
+    let llm = Model::new(&rt, "llm").expect("llm");
+    let ssm = Model::new(&rt, "ssm").expect("ssm");
+    for &b in &[1usize, 4, 8] {
+        if !rt.manifest.batch_buckets.contains(&b) {
+            continue;
+        }
+        for &s in &[1usize, 3] {
+            if rt.manifest.max_spec_len(b) < s {
+                continue;
+            }
+            // LLM verify
+            let mut kv = llm.new_kv(b).expect("kv");
+            let tokens = vec![5i32; b * llm.spec.max_prompt];
+            let plens = vec![8i32; b];
+            llm.prefill(&tokens, &plens, b, &mut kv).expect("prefill");
+            let feed = vec![7i32; b * (s + 1)];
+            let clamp = vec![9u32; b];
+            llm.verify(&feed, s, b, &mut kv).expect("warmup");
+            kv.clamp_to(&clamp);
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                llm.verify(&feed, s, b, &mut kv).expect("verify");
+                kv.clamp_to(&clamp);
+            }
+            let us = t0.elapsed().as_secs_f64() / reps as f64 * 1e6;
+            println!("llm_verify(b={b},s={s}): {:.1} µs", us);
+            csv.row(&["llm_verify".into(), b.to_string(), s.to_string(), f(us)]);
+
+            // SSM speculate
+            let mut kv = ssm.new_kv(b).expect("kv");
+            ssm.prefill(&tokens, &plens, b, &mut kv).expect("prefill");
+            let delta = vec![7i32; b * 2];
+            let dlens = vec![1i32; b];
+            ssm.speculate(&delta, &dlens, s, b, &mut kv).expect("warmup");
+            kv.clamp_to(&clamp);
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                ssm.speculate(&delta, &dlens, s, b, &mut kv).expect("spec");
+                kv.clamp_to(&clamp);
+            }
+            let us = t0.elapsed().as_secs_f64() / reps as f64 * 1e6;
+            println!("ssm_speculate(b={b},s={s}): {:.1} µs", us);
+            csv.row(&["ssm_speculate".into(), b.to_string(), s.to_string(), f(us)]);
+        }
+    }
+
+    // --- end-to-end round breakdown via the engine stopwatch ---
+    {
+        let mut engine = Engine::new(&rt, EngineConfig::default()).expect("engine");
+        let mut rng = Pcg64::new(9);
+        let prompts: Vec<Vec<i32>> = dataset
+            .sample_eval(&mut rng, 4)
+            .into_iter()
+            .map(|p| p.ids)
+            .collect();
+        let tokens = if common::is_quick() { 16 } else { 48 };
+        let out = engine
+            .generate_batch(&prompts, tokens, &SpecPolicy::Fixed(3))
+            .expect("gen");
+        println!(
+            "\nend-to-end b=4 s=3: {:.2} ms/token, {} rounds, {:.2} accepted/round",
+            out.stats.per_token_latency() * 1e3,
+            out.stats.rounds,
+            out.stats.mean_accepted()
+        );
+        println!("\nengine stopwatch breakdown:\n{}", engine.stopwatch.report());
+        csv.row(&[
+            "e2e_per_token".into(),
+            "4".into(),
+            "3".into(),
+            f(out.stats.per_token_latency() * 1e6),
+        ]);
+    }
+
+    csv.write_file(common::results_path("micro_hotpath.csv"))
+        .unwrap();
+    println!("-> results/micro_hotpath.csv");
+}

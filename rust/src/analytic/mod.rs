@@ -1,0 +1,308 @@
+//! The paper's analytical model of batched speculative decoding
+//! (Sec. 3.3, Table 1, Eq. 1-12).
+//!
+//! Components:
+//!
+//! * [`AcceptanceModel`] — `l(s) ≈ c·s^γ` (Eq. 5), fitted from measured
+//!   accepted-count samples via the Eq. 4 estimator + log-log regression
+//!   (Fig. 2; the paper reports `0.9·s^0.548`);
+//! * [`StepCostModel`] — `t_L(b, s) ≈ α_b·s + β` (Fig. 3) and the
+//!   per-draft SSM cost `t_S(b, 1)`;
+//! * [`TotalTimeModel`] — Eq. 7/8 total runtime, its derivative numerator
+//!   `δ` (Eq. 11), and the optimal speculation length `s_opt` (Eq. 12);
+//! * monotonicity checks used by the property tests: `δ` is increasing in
+//!   both `α_b` and `s`, hence `s_opt(b)` is non-increasing in `b` — the
+//!   paper's key claim.
+
+use anyhow::{bail, Result};
+
+use crate::util::stats::{linear_fit, power_fit};
+
+/// Eq. 4: estimate l(s) for s = 1..s_max from per-round accepted counts.
+///
+/// `samples[i]` is the number of drafts accepted in one speculative round
+/// (an observation of min(l_i, s_used)); the estimator is
+/// `l(s) ≈ mean(min(l_i, s))`.  Samples should come from rounds whose
+/// speculation length was >= s_max, otherwise l(s) is clipped too early.
+pub fn l_of_s_estimate(samples: &[u32], s_max: usize) -> Vec<f64> {
+    assert!(s_max >= 1);
+    (1..=s_max)
+        .map(|s| {
+            if samples.is_empty() {
+                0.0
+            } else {
+                samples
+                    .iter()
+                    .map(|&l| (l as usize).min(s) as f64)
+                    .sum::<f64>()
+                    / samples.len() as f64
+            }
+        })
+        .collect()
+}
+
+/// The fitted acceptance curve `l(s) = c·s^γ` (Eq. 5).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AcceptanceModel {
+    pub c: f64,
+    pub gamma: f64,
+    /// r² of the log-log fit
+    pub r2: f64,
+}
+
+impl AcceptanceModel {
+    /// The paper's measured curve (Fig. 2): 0.9·s^0.548.
+    pub fn paper() -> AcceptanceModel {
+        AcceptanceModel {
+            c: 0.9,
+            gamma: 0.548,
+            r2: 1.0,
+        }
+    }
+
+    /// Fit from an l(s) curve (index i = l(i+1)).
+    pub fn fit(l_curve: &[f64]) -> Result<AcceptanceModel> {
+        if l_curve.len() < 2 {
+            bail!("need l(s) at >= 2 speculation lengths to fit");
+        }
+        let xs: Vec<f64> = (1..=l_curve.len()).map(|s| s as f64).collect();
+        let (c, gamma, r2) = power_fit(&xs, l_curve);
+        Ok(AcceptanceModel { c, gamma, r2 })
+    }
+
+    /// Fit directly from accepted-count samples (Eq. 4 then Eq. 5).
+    pub fn fit_samples(samples: &[u32], s_max: usize) -> Result<AcceptanceModel> {
+        AcceptanceModel::fit(&l_of_s_estimate(samples, s_max))
+    }
+
+    pub fn l(&self, s: f64) -> f64 {
+        self.c * s.powf(self.gamma)
+    }
+
+    /// Sub-linearity: γ < 1 (the paper's Eq. 6 argument).
+    pub fn is_sublinear(&self) -> bool {
+        self.gamma < 1.0
+    }
+}
+
+/// `t_L(b, s) = α_b·s + β` per verify step, and `t_S(b, 1)` per draft
+/// token, for one batch size (Fig. 3 linearization).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepCostModel {
+    pub batch: usize,
+    /// marginal LLM cost per speculated token (α_b), seconds
+    pub alpha: f64,
+    /// fixed LLM cost per step (β), seconds
+    pub beta: f64,
+    /// SSM cost per drafted token, t_S(b, 1), seconds
+    pub t_ssm: f64,
+    /// r² of the linear fit
+    pub r2: f64,
+}
+
+impl StepCostModel {
+    /// Fit α_b, β from measured (s, t_L) pairs for one batch size.
+    pub fn fit(batch: usize, s_values: &[f64], t_l: &[f64], t_ssm: f64) -> Result<StepCostModel> {
+        if s_values.len() < 2 {
+            bail!("need >= 2 (s, t_L) points");
+        }
+        let (alpha, beta, r2) = linear_fit(s_values, t_l);
+        Ok(StepCostModel {
+            batch,
+            alpha,
+            beta,
+            t_ssm,
+            r2,
+        })
+    }
+
+    pub fn t_llm(&self, s: f64) -> f64 {
+        self.alpha * s + self.beta
+    }
+}
+
+/// Eq. 7/8: expected total time per generated token and the s_opt solver.
+#[derive(Debug, Clone, Copy)]
+pub struct TotalTimeModel {
+    pub acceptance: AcceptanceModel,
+    pub cost: StepCostModel,
+}
+
+impl TotalTimeModel {
+    /// Eq. 7 normalized by N: expected seconds per generated token at
+    /// speculation length s (s >= 1).
+    ///
+    /// `(t_L(b,s) + s·t_S(b,1)) / (l(s) + 1)`
+    pub fn time_per_token(&self, s: f64) -> f64 {
+        (self.cost.t_llm(s) + s * self.cost.t_ssm) / (self.acceptance.l(s) + 1.0)
+    }
+
+    /// Seconds per token without speculation (one LLM step, one token).
+    pub fn time_per_token_nospec(&self) -> f64 {
+        self.cost.beta
+    }
+
+    /// Eq. 11: δ(s) = K·α'_b·s^γ − L·s^(γ−1) + α'_b with K = (1−γ)c,
+    /// L = c·β·γ, and α'_b = α_b + t_S (the paper merges the SSM slope
+    /// into α_b).  s_opt satisfies δ(s_opt) = 0; δ is increasing in s.
+    pub fn delta(&self, s: f64) -> f64 {
+        let a = &self.acceptance;
+        let alpha = self.cost.alpha + self.cost.t_ssm;
+        let k = (1.0 - a.gamma) * a.c;
+        let l = a.c * self.cost.beta * a.gamma;
+        k * alpha * s.powf(a.gamma) - l * s.powf(a.gamma - 1.0) + alpha
+    }
+
+    /// Continuous s_opt via bisection on δ (Eq. 12), clamped to
+    /// [1, s_max].  δ increasing in s makes bisection exact.
+    pub fn s_opt_continuous(&self, s_max: f64) -> f64 {
+        let (mut lo, mut hi) = (1.0f64, s_max);
+        if self.delta(lo) >= 0.0 {
+            return lo; // already past the optimum at s=1
+        }
+        if self.delta(hi) <= 0.0 {
+            return hi; // optimum beyond the available range
+        }
+        for _ in 0..64 {
+            let mid = 0.5 * (lo + hi);
+            if self.delta(mid) < 0.0 {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        0.5 * (lo + hi)
+    }
+
+    /// Discrete s_opt: argmin over s ∈ {0, 1..s_max} of expected time per
+    /// token (0 = no speculation, Eq. 7 vs the plain-decode cost).
+    pub fn s_opt(&self, s_max: usize) -> usize {
+        let mut best = (0usize, self.time_per_token_nospec());
+        for s in 1..=s_max {
+            let t = self.time_per_token(s as f64);
+            if t < best.1 {
+                best = (s, t);
+            }
+        }
+        best.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn paper_cost(batch: usize, alpha: f64) -> StepCostModel {
+        StepCostModel {
+            batch,
+            alpha,
+            beta: 0.03,
+            t_ssm: 0.002,
+            r2: 1.0,
+        }
+    }
+
+    #[test]
+    fn eq4_estimator() {
+        // samples of l_i: 0,1,2,3 -> l(1) = mean(min(l,1)) = 1.5/4
+        let samples = [0, 1, 2, 3];
+        let l = l_of_s_estimate(&samples, 3);
+        assert!((l[0] - 0.75).abs() < 1e-12); // min(.,1): 0,1,1,1
+        assert!((l[1] - 1.25).abs() < 1e-12); // 0,1,2,2
+        assert!((l[2] - 1.5).abs() < 1e-12); // 0,1,2,3
+        // monotone non-decreasing in s
+        assert!(l[0] <= l[1] && l[1] <= l[2]);
+    }
+
+    #[test]
+    fn acceptance_fit_recovers_paper_curve() {
+        let m = AcceptanceModel::paper();
+        let curve: Vec<f64> = (1..=8).map(|s| m.l(s as f64)).collect();
+        let fit = AcceptanceModel::fit(&curve).unwrap();
+        assert!((fit.c - 0.9).abs() < 1e-9);
+        assert!((fit.gamma - 0.548).abs() < 1e-9);
+        assert!(fit.is_sublinear());
+    }
+
+    #[test]
+    fn step_cost_fit() {
+        let s = [1.0, 2.0, 4.0, 8.0];
+        let t: Vec<f64> = s.iter().map(|x| 0.004 * x + 0.03).collect();
+        let m = StepCostModel::fit(8, &s, &t, 0.001).unwrap();
+        assert!((m.alpha - 0.004).abs() < 1e-9);
+        assert!((m.beta - 0.03).abs() < 1e-9);
+        assert!((m.t_llm(3.0) - 0.042).abs() < 1e-9);
+    }
+
+    #[test]
+    fn speculation_beats_nospec_when_alpha_small() {
+        // tiny marginal verify cost: speculation must win
+        let m = TotalTimeModel {
+            acceptance: AcceptanceModel::paper(),
+            cost: paper_cost(1, 0.0005),
+        };
+        let s_opt = m.s_opt(8);
+        assert!(s_opt >= 2, "s_opt={s_opt}");
+        assert!(m.time_per_token(s_opt as f64) < m.time_per_token_nospec());
+    }
+
+    #[test]
+    fn s_opt_is_non_increasing_in_alpha() {
+        // the paper's key claim (Sec. 3.3.3): larger b (larger α_b) ->
+        // smaller optimal speculation length
+        let acceptance = AcceptanceModel::paper();
+        let mut last = usize::MAX;
+        for (i, alpha) in [0.0002, 0.001, 0.004, 0.012, 0.03].iter().enumerate() {
+            let m = TotalTimeModel {
+                acceptance,
+                cost: paper_cost(1 << i, *alpha),
+            };
+            let s = m.s_opt(8);
+            assert!(s <= last, "s_opt went up: {s} after {last}");
+            last = s;
+        }
+        // extremes actually differ
+        assert!(last <= 2);
+    }
+
+    #[test]
+    fn delta_is_increasing_in_s_and_alpha() {
+        let m = TotalTimeModel {
+            acceptance: AcceptanceModel::paper(),
+            cost: paper_cost(4, 0.002),
+        };
+        let mut prev = f64::NEG_INFINITY;
+        for s in 1..=16 {
+            let d = m.delta(s as f64);
+            assert!(d > prev, "delta not increasing at s={s}");
+            prev = d;
+        }
+        let m2 = TotalTimeModel {
+            acceptance: AcceptanceModel::paper(),
+            cost: paper_cost(4, 0.02),
+        };
+        for s in 1..=8 {
+            assert!(m2.delta(s as f64) > m.delta(s as f64));
+        }
+    }
+
+    #[test]
+    fn continuous_and_discrete_sopt_agree() {
+        let m = TotalTimeModel {
+            acceptance: AcceptanceModel::paper(),
+            cost: paper_cost(2, 0.002),
+        };
+        let sc = m.s_opt_continuous(8.0);
+        let sd = m.s_opt(8);
+        assert!(
+            (sc - sd as f64).abs() <= 1.0,
+            "continuous {sc} vs discrete {sd}"
+        );
+    }
+
+    #[test]
+    fn fit_rejects_degenerate_input() {
+        assert!(AcceptanceModel::fit(&[1.0]).is_err());
+        assert!(StepCostModel::fit(1, &[1.0], &[1.0], 0.0).is_err());
+    }
+}

@@ -1,0 +1,169 @@
+//! Typed configuration for the serving coordinator.
+//!
+//! Configs load from JSON files (see `configs/*.json` at the repo root for
+//! examples) and/or CLI flags; every field has a sensible default so the
+//! quickstart works with zero configuration.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+
+/// Top-level serving configuration (paper Sec. 5 methodology).
+#[derive(Debug, Clone)]
+pub struct ServingConfig {
+    /// Directory produced by `make artifacts`.
+    pub artifacts_dir: PathBuf,
+    /// Maximum requests merged into one batch (paper: 16, memory-bound).
+    pub max_batch: usize,
+    /// New tokens generated per request (paper: 128).
+    pub max_new_tokens: usize,
+    /// Stop early when the model emits `<eos>`.
+    pub stop_at_eos: bool,
+    /// Speculation policy: "none", "fixed:<s>", or "adaptive".
+    pub policy: PolicySpec,
+    /// Seed for everything stochastic on the serving side.
+    pub seed: u64,
+}
+
+/// Parsed policy choice (resolved into a `scheduler::SpecPolicy` once the
+/// profiler has run / the LUT is loaded).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PolicySpec {
+    None,
+    Fixed(usize),
+    Adaptive,
+}
+
+impl PolicySpec {
+    pub fn parse(s: &str) -> Result<PolicySpec> {
+        if s == "none" || s == "no-spec" {
+            Ok(PolicySpec::None)
+        } else if s == "adaptive" {
+            Ok(PolicySpec::Adaptive)
+        } else if let Some(v) = s.strip_prefix("fixed:").or_else(|| s.strip_prefix("fixed-")) {
+            Ok(PolicySpec::Fixed(v.parse()?))
+        } else {
+            bail!("bad policy {s:?}: expected none | fixed:<s> | adaptive")
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            PolicySpec::None => "no-spec".into(),
+            PolicySpec::Fixed(s) => format!("fixed-{s}"),
+            PolicySpec::Adaptive => "adaptive".into(),
+        }
+    }
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig {
+            artifacts_dir: PathBuf::from("artifacts"),
+            max_batch: 16,
+            max_new_tokens: 128,
+            stop_at_eos: true,
+            policy: PolicySpec::Adaptive,
+            seed: 0,
+        }
+    }
+}
+
+impl ServingConfig {
+    /// Load from a JSON file; missing keys keep their defaults.
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Self> {
+        let json = Json::parse_file(path)?;
+        Self::from_json(&json)
+    }
+
+    pub fn from_json(json: &Json) -> Result<Self> {
+        let mut cfg = ServingConfig::default();
+        if let Some(v) = json.get_opt("artifacts_dir")? {
+            cfg.artifacts_dir = PathBuf::from(v.as_str()?);
+        }
+        if let Some(v) = json.get_opt("max_batch")? {
+            cfg.max_batch = v.as_usize()?;
+        }
+        if let Some(v) = json.get_opt("max_new_tokens")? {
+            cfg.max_new_tokens = v.as_usize()?;
+        }
+        if let Some(v) = json.get_opt("stop_at_eos")? {
+            cfg.stop_at_eos = v.as_bool()?;
+        }
+        if let Some(v) = json.get_opt("policy")? {
+            cfg.policy = PolicySpec::parse(v.as_str()?)?;
+        }
+        if let Some(v) = json.get_opt("seed")? {
+            cfg.seed = v.as_i64()? as u64;
+        }
+        if cfg.max_batch == 0 || cfg.max_new_tokens == 0 {
+            bail!("max_batch and max_new_tokens must be positive");
+        }
+        Ok(cfg)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "artifacts_dir",
+                Json::Str(self.artifacts_dir.display().to_string()),
+            ),
+            ("max_batch", Json::Num(self.max_batch as f64)),
+            ("max_new_tokens", Json::Num(self.max_new_tokens as f64)),
+            ("stop_at_eos", Json::Bool(self.stop_at_eos)),
+            ("policy", Json::Str(self.policy.label())),
+            ("seed", Json::Num(self.seed as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_methodology() {
+        let c = ServingConfig::default();
+        assert_eq!(c.max_batch, 16);
+        assert_eq!(c.max_new_tokens, 128);
+        assert_eq!(c.policy, PolicySpec::Adaptive);
+    }
+
+    #[test]
+    fn policy_parse() {
+        assert_eq!(PolicySpec::parse("none").unwrap(), PolicySpec::None);
+        assert_eq!(PolicySpec::parse("fixed:4").unwrap(), PolicySpec::Fixed(4));
+        assert_eq!(PolicySpec::parse("adaptive").unwrap(), PolicySpec::Adaptive);
+        assert!(PolicySpec::parse("bogus").is_err());
+        assert!(PolicySpec::parse("fixed:x").is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut c = ServingConfig::default();
+        c.max_batch = 8;
+        c.policy = PolicySpec::Fixed(2);
+        c.seed = 42;
+        let j = c.to_json();
+        let c2 = ServingConfig::from_json(&j).unwrap();
+        assert_eq!(c2.max_batch, 8);
+        assert_eq!(c2.policy, PolicySpec::Fixed(2));
+        assert_eq!(c2.seed, 42);
+    }
+
+    #[test]
+    fn from_json_partial_keeps_defaults() {
+        let j = Json::parse(r#"{"max_batch": 4}"#).unwrap();
+        let c = ServingConfig::from_json(&j).unwrap();
+        assert_eq!(c.max_batch, 4);
+        assert_eq!(c.max_new_tokens, 128);
+    }
+
+    #[test]
+    fn rejects_zero_batch() {
+        let j = Json::parse(r#"{"max_batch": 0}"#).unwrap();
+        assert!(ServingConfig::from_json(&j).is_err());
+    }
+}

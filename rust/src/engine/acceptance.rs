@@ -1,0 +1,111 @@
+//! The acceptance rule of speculative decoding (Algorithm 1, greedy).
+//!
+//! Given the SSM's draft tokens and the LLM's argmax predictions at every
+//! in-flight position, compute how many drafts are accepted and which
+//! tokens get committed.  Pure host-side logic, exhaustively unit- and
+//! property-tested (testkit) because *losslessness* — speculative output
+//! must equal plain greedy output — hinges on this function.
+
+/// Result of verifying one row.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RowAcceptance {
+    /// number of draft tokens accepted (0..=s)
+    pub accepted: usize,
+    /// tokens to append to the committed sequence: the accepted drafts
+    /// plus the LLM's bonus/correction token (always non-empty)
+    pub commit: Vec<i32>,
+}
+
+/// Greedy first-mismatch acceptance for one row.
+///
+/// `draft` is `d_1..d_s` from the SSM; `pred` is `argmax(o_0)..argmax(o_s)`
+/// from the LLM, where `pred[j]` is the LLM's choice for the token *after*
+/// position j of the feed `[last_committed, d_1..d_s]`.
+///
+/// `d_{j+1}` is accepted iff it equals `pred[j]` **and** all earlier drafts
+/// were accepted (the paper: "the correctness of one speculated token
+/// relies on the correctness of its previous tokens").  The committed
+/// tokens are the accepted prefix plus `pred[a]` — a bonus token when all
+/// drafts pass, a correction otherwise.  The LLM thus always contributes
+/// exactly one token, which guarantees termination even with a useless
+/// draft model.
+pub fn accept_row(draft: &[i32], pred: &[i32]) -> RowAcceptance {
+    debug_assert_eq!(pred.len(), draft.len() + 1);
+    let mut accepted = 0;
+    while accepted < draft.len() && draft[accepted] == pred[accepted] {
+        accepted += 1;
+    }
+    let mut commit = Vec::with_capacity(accepted + 1);
+    commit.extend_from_slice(&draft[..accepted]);
+    commit.push(pred[accepted]);
+    RowAcceptance { accepted, commit }
+}
+
+/// Batched acceptance over flattened `[B, s]` drafts / `[B, s+1]` preds.
+pub fn accept_batch(draft: &[i32], pred: &[i32], batch: usize, s: usize) -> Vec<RowAcceptance> {
+    assert_eq!(draft.len(), batch * s);
+    assert_eq!(pred.len(), batch * (s + 1));
+    (0..batch)
+        .map(|i| accept_row(&draft[i * s..(i + 1) * s], &pred[i * (s + 1)..(i + 1) * (s + 1)]))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_accepted_gets_bonus() {
+        let r = accept_row(&[5, 6, 7], &[5, 6, 7, 8]);
+        assert_eq!(r.accepted, 3);
+        assert_eq!(r.commit, vec![5, 6, 7, 8]);
+    }
+
+    #[test]
+    fn first_mismatch_truncates() {
+        let r = accept_row(&[5, 6, 7], &[5, 9, 7, 8]);
+        assert_eq!(r.accepted, 1);
+        assert_eq!(r.commit, vec![5, 9]);
+    }
+
+    #[test]
+    fn immediate_mismatch_still_commits_one() {
+        let r = accept_row(&[5, 6], &[1, 2, 3]);
+        assert_eq!(r.accepted, 0);
+        assert_eq!(r.commit, vec![1]);
+    }
+
+    #[test]
+    fn later_coincidences_do_not_resurrect() {
+        // draft[1] "matches" pred[1] but draft[0] failed, so it must not
+        // count — correctness is prefix-dependent
+        let r = accept_row(&[5, 6], &[9, 6, 7]);
+        assert_eq!(r.accepted, 0);
+        assert_eq!(r.commit, vec![9]);
+    }
+
+    #[test]
+    fn zero_length_draft_is_plain_decode() {
+        let r = accept_row(&[], &[42]);
+        assert_eq!(r.accepted, 0);
+        assert_eq!(r.commit, vec![42]);
+    }
+
+    #[test]
+    fn batch_layout() {
+        let draft = [1, 2, /* row 1 */ 3, 4];
+        let pred = [1, 2, 9, /* row 1 */ 7, 4, 5];
+        let rows = accept_batch(&draft, &pred, 2, 2);
+        assert_eq!(rows[0].commit, vec![1, 2, 9]);
+        assert_eq!(rows[1].commit, vec![7]);
+    }
+
+    #[test]
+    fn commit_always_advances() {
+        // termination property: every row commits >= 1 token
+        for draft in [&[][..], &[1][..], &[1, 2, 3][..]] {
+            let pred: Vec<i32> = (10..10 + draft.len() as i32 + 1).collect();
+            assert!(!accept_row(draft, &pred).commit.is_empty());
+        }
+    }
+}

@@ -1,0 +1,475 @@
+//! The batched speculative decoding engine (the paper's Sec. 3 prototype,
+//! re-built as the L3 hot path).
+//!
+//! One [`Engine::generate_batch`] call serves one batch to completion:
+//!
+//! ```text
+//! prefill(LLM) ─ prefill(SSM, if the policy may speculate)
+//! loop:
+//!   s = policy(live batch size)
+//!   s == 0 ->  verify_s0(LLM)                      # plain batched decode
+//!   s >= 1 ->  speculate(SSM, s) -> verify(LLM, s) # Algorithm 1, batched
+//!   host: first-mismatch acceptance, commit, clamp both KV ingest counters
+//! until every live row hit max_new_tokens (or <eos>)
+//! ```
+//!
+//! State invariants (shared with `python/compile/engine_ref.py`, asserted
+//! in debug builds and by the integration tests):
+//!
+//! * per row: `ingested == committed.len() - 1` after every round for both
+//!   models (the last committed token is fed, not pre-ingested);
+//! * the SSM sees a "delta" of 1..=2 committed tokens per speculation —
+//!   rounds that skip the SSM (s = 0) grow its backlog, which
+//!   [`Engine::ssm_catch_up`] re-ingests before the next speculation;
+//! * rows that finish stay in the batch but frozen: their feeds repeat the
+//!   last committed token and their commits are discarded, so executables
+//!   keep their static shapes (the paper's prototype masks finished rows
+//!   the same way).
+
+pub mod acceptance;
+
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::model::{KvCache, Model};
+use crate::runtime::Runtime;
+use crate::scheduler::SpecPolicy;
+use crate::util::timer::Stopwatch;
+use acceptance::accept_batch;
+
+/// Engine knobs (defaults = paper Sec. 5 methodology).
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub max_new_tokens: usize,
+    pub stop_at_eos: bool,
+    pub eos_token: i32,
+    pub bos_token: i32,
+    pub pad_token: i32,
+    /// record per-round accepted counts (Fig. 2 estimator input)
+    pub record_acceptance: bool,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            max_new_tokens: 128,
+            stop_at_eos: true,
+            eos_token: 2,
+            bos_token: 1,
+            pad_token: 0,
+            record_acceptance: false,
+        }
+    }
+}
+
+/// Statistics of one `generate_batch` call.
+#[derive(Debug, Clone, Default)]
+pub struct GenStats {
+    /// decode rounds after prefill (each = <=1 SSM call + 1 LLM call)
+    pub rounds: usize,
+    pub llm_calls: usize,
+    pub ssm_calls: usize,
+    /// total draft tokens proposed / accepted (live rows only)
+    pub drafted: usize,
+    pub accepted: usize,
+    /// tokens returned to callers (sum over real rows)
+    pub useful_tokens: usize,
+    /// wall time of the whole call including prefill
+    pub wall: Duration,
+    /// wall time spent after prefill (per-token latency uses this)
+    pub decode_wall: Duration,
+    /// accepted-count samples (one per live row per speculative round)
+    pub accept_samples: Vec<u32>,
+    /// speculation length used each round
+    pub spec_lens: Vec<usize>,
+}
+
+impl GenStats {
+    /// Per-token decode latency in seconds (the paper's Fig. 1/4 metric).
+    pub fn per_token_latency(&self) -> f64 {
+        if self.useful_tokens == 0 {
+            return f64::NAN;
+        }
+        self.decode_wall.as_secs_f64() / self.useful_tokens as f64
+    }
+
+    /// Mean accepted drafts per speculative round (the l̄ of Sec. 3.3).
+    pub fn mean_accepted(&self) -> f64 {
+        if self.accept_samples.is_empty() {
+            return 0.0;
+        }
+        self.accept_samples.iter().map(|&a| a as f64).sum::<f64>()
+            / self.accept_samples.len() as f64
+    }
+}
+
+/// Output of one batch generation.
+#[derive(Debug, Clone)]
+pub struct GenOutput {
+    /// generated tokens per input prompt (prompt excluded), truncated at
+    /// `max_new_tokens` / first `<eos>`
+    pub tokens: Vec<Vec<i32>>,
+    pub stats: GenStats,
+}
+
+/// Per-row state during a batch generation.
+struct Row {
+    committed: Vec<i32>,
+    prompt_len: usize,
+    /// real request (false = bucket padding row)
+    real: bool,
+    /// frozen rows keep shapes static but stop committing
+    finished: bool,
+}
+
+impl Row {
+    fn generated(&self) -> usize {
+        self.committed.len() - self.prompt_len
+    }
+
+    fn last(&self) -> i32 {
+        *self.committed.last().expect("committed never empty")
+    }
+}
+
+/// The batched speculative decoding engine.
+pub struct Engine<'rt> {
+    rt: &'rt Runtime,
+    pub cfg: EngineConfig,
+    llm: Model<'rt>,
+    ssm: Model<'rt>,
+    /// per-section timing for the §Perf pass
+    pub stopwatch: Stopwatch,
+    /// stash for the prefill prediction between prefill() and its commit
+    last_prefill: Option<Vec<i32>>,
+}
+
+impl<'rt> Engine<'rt> {
+    pub fn new(rt: &'rt Runtime, cfg: EngineConfig) -> Result<Engine<'rt>> {
+        Ok(Engine {
+            rt,
+            cfg,
+            llm: Model::new(rt, "llm")?,
+            ssm: Model::new(rt, "ssm")?,
+            stopwatch: Stopwatch::new(),
+            last_prefill: None,
+        })
+    }
+
+    pub fn runtime(&self) -> &'rt Runtime {
+        self.rt
+    }
+
+    /// Generate up to `max_new` tokens for every prompt, as one batch.
+    pub fn generate_batch(
+        &mut self,
+        prompts: &[Vec<i32>],
+        max_new: usize,
+        policy: &SpecPolicy,
+    ) -> Result<GenOutput> {
+        let t_start = Instant::now();
+        let n = prompts.len();
+        if n == 0 {
+            bail!("generate_batch: empty prompt list");
+        }
+        let max_prompt = self.llm.spec.max_prompt;
+        for (i, p) in prompts.iter().enumerate() {
+            if p.is_empty() || p.len() > max_prompt {
+                bail!(
+                    "prompt {i} length {} out of range 1..={max_prompt}",
+                    p.len()
+                );
+            }
+        }
+        let bucket = self.rt.manifest.bucket_for(n)?;
+        let max_s = self.rt.manifest.max_spec_len(bucket);
+        let may_speculate = !matches!(policy, SpecPolicy::NoSpec) && max_s > 0;
+
+        // --- assemble rows (real + bucket padding) ---
+        let mut rows: Vec<Row> = Vec::with_capacity(bucket);
+        for p in prompts {
+            rows.push(Row {
+                committed: p.clone(),
+                prompt_len: p.len(),
+                real: true,
+                finished: false,
+            });
+        }
+        for _ in n..bucket {
+            rows.push(Row {
+                committed: vec![self.cfg.bos_token],
+                prompt_len: 1,
+                real: false,
+                finished: true, // padding rows are frozen from the start
+            });
+        }
+
+        // --- prefill ---
+        let (mut llm_kv, mut ssm_kv, _prefill_dur) =
+            self.prefill(&rows, bucket, may_speculate)?;
+
+        let mut stats = GenStats::default();
+        let mut ssm_backlog_possible = false;
+
+        // commit the prefill token
+        // (prefill() stashed it in self.last_prefill)
+        let first = self.last_prefill.take().expect("prefill token set");
+        for (row, &t) in rows.iter_mut().zip(&first) {
+            row.committed.push(t);
+        }
+        self.check_eos_and_limits(&mut rows, max_new);
+
+        let decode_start = Instant::now();
+
+        // --- decode loop ---
+        while rows.iter().any(|r| r.real && !r.finished) {
+            let live = rows.iter().filter(|r| r.real && !r.finished).count();
+            let s = policy.spec_len(live, max_s);
+            stats.spec_lens.push(s);
+            stats.rounds += 1;
+
+            if s == 0 || !may_speculate {
+                self.round_plain(&mut rows, bucket, &mut llm_kv, &mut stats)?;
+                ssm_backlog_possible = true;
+            } else {
+                let ssm_kv = ssm_kv.as_mut().expect("ssm kv exists");
+                if ssm_backlog_possible {
+                    self.ssm_catch_up(&rows, bucket, ssm_kv, &mut stats)?;
+                    ssm_backlog_possible = false;
+                }
+                self.round_speculative(&mut rows, bucket, s, &mut llm_kv, ssm_kv, &mut stats)?;
+            }
+            self.check_eos_and_limits(&mut rows, max_new);
+
+            // hard safety net: a stuck batch must not loop forever
+            if stats.rounds > 4 * (max_new + 2) {
+                bail!("decode loop exceeded round budget — state machine bug");
+            }
+        }
+        stats.decode_wall = decode_start.elapsed();
+        stats.wall = t_start.elapsed();
+
+        // --- collect outputs ---
+        let mut tokens = Vec::with_capacity(n);
+        for row in rows.iter().take(n) {
+            let gen = &row.committed[row.prompt_len..];
+            let mut out: Vec<i32> = Vec::with_capacity(max_new.min(gen.len()));
+            for &t in gen.iter().take(max_new) {
+                out.push(t);
+                if self.cfg.stop_at_eos && t == self.cfg.eos_token {
+                    break;
+                }
+            }
+            stats.useful_tokens += out.len();
+            tokens.push(out);
+        }
+        Ok(GenOutput { tokens, stats })
+    }
+
+    /// LLM (+ optional SSM) prefill over the padded prompts.
+    fn prefill(
+        &mut self,
+        rows: &[Row],
+        bucket: usize,
+        with_ssm: bool,
+    ) -> Result<(KvCache, Option<KvCache>, Duration)> {
+        let t0 = Instant::now();
+        let p = self.llm.spec.max_prompt;
+        let mut tokens = vec![self.cfg.pad_token; bucket * p];
+        let mut plens = vec![0i32; bucket];
+        for (i, row) in rows.iter().enumerate() {
+            tokens[i * p..i * p + row.prompt_len]
+                .copy_from_slice(&row.committed[..row.prompt_len]);
+            plens[i] = row.prompt_len as i32;
+        }
+        let mut llm_kv = self.llm.new_kv(bucket)?;
+        let first = self.stopwatch.time("prefill_llm", || {
+            self.llm.prefill(&tokens, &plens, bucket, &mut llm_kv)
+        })?;
+        self.last_prefill = Some(first);
+
+        let ssm_kv = if with_ssm {
+            let mut kv = self.ssm.new_kv(bucket)?;
+            // the SSM's own first prediction is discarded — it only needs KV
+            let _ = self.stopwatch.time("prefill_ssm", || {
+                self.ssm.prefill(&tokens, &plens, bucket, &mut kv)
+            })?;
+            Some(kv)
+        } else {
+            None
+        };
+        Ok((llm_kv, ssm_kv, t0.elapsed()))
+    }
+
+    /// One plain decode round (s = 0): feed the last committed token.
+    fn round_plain(
+        &mut self,
+        rows: &mut [Row],
+        bucket: usize,
+        llm_kv: &mut KvCache,
+        stats: &mut GenStats,
+    ) -> Result<()> {
+        let feed: Vec<i32> = rows.iter().map(|r| r.last()).collect();
+        let pred = self
+            .stopwatch
+            .time("verify", || self.llm.verify(&feed, 0, bucket, llm_kv))?;
+        stats.llm_calls += 1;
+        for (row, &t) in rows.iter_mut().zip(&pred) {
+            if !row.finished {
+                row.committed.push(t);
+            }
+        }
+        let clamp: Vec<u32> = rows.iter().map(|r| r.committed.len() as u32 - 1).collect();
+        llm_kv.clamp_to(&clamp);
+        Ok(())
+    }
+
+    /// One speculative round: SSM drafts s tokens, LLM verifies, host
+    /// accepts (Algorithm 1).
+    fn round_speculative(
+        &mut self,
+        rows: &mut [Row],
+        bucket: usize,
+        s: usize,
+        llm_kv: &mut KvCache,
+        ssm_kv: &mut KvCache,
+        stats: &mut GenStats,
+    ) -> Result<()> {
+        // --- SSM: delta ingest + draft ---
+        let (delta, dlens) = self.build_delta(rows, ssm_kv)?;
+        let draft = self.stopwatch.time("speculate", || {
+            self.ssm.speculate(&delta, &dlens, s, bucket, ssm_kv)
+        })?;
+        stats.ssm_calls += 1;
+
+        // --- LLM: verify ---
+        let mut feed = vec![0i32; bucket * (s + 1)];
+        for (i, row) in rows.iter().enumerate() {
+            feed[i * (s + 1)] = row.last();
+            feed[i * (s + 1) + 1..(i + 1) * (s + 1)]
+                .copy_from_slice(&draft[i * s..(i + 1) * s]);
+        }
+        let pred = self
+            .stopwatch
+            .time("verify", || self.llm.verify(&feed, s, bucket, llm_kv))?;
+        stats.llm_calls += 1;
+
+        // --- host: acceptance + commit ---
+        let results = accept_batch(&draft, &pred, bucket, s);
+        for (row, acc) in rows.iter_mut().zip(&results) {
+            if row.finished {
+                continue;
+            }
+            row.committed.extend_from_slice(&acc.commit);
+            stats.drafted += s;
+            stats.accepted += acc.accepted;
+            if self.cfg.record_acceptance && row.real {
+                stats.accept_samples.push(acc.accepted as u32);
+            }
+        }
+        if !self.cfg.record_acceptance {
+            // still track live-row acceptance for mean_accepted()
+            for (row, acc) in rows.iter().zip(&results) {
+                if !row.finished && row.real {
+                    stats.accept_samples.push(acc.accepted as u32);
+                }
+            }
+        }
+
+        // --- clamp both caches to committed-1 ---
+        let clamp: Vec<u32> = rows.iter().map(|r| r.committed.len() as u32 - 1).collect();
+        llm_kv.clamp_to(&clamp);
+        ssm_kv.clamp_to(&clamp);
+        Ok(())
+    }
+
+    /// Build the SSM delta (the 1..=2 committed tokens it has not seen).
+    fn build_delta(&self, rows: &[Row], ssm_kv: &KvCache) -> Result<(Vec<i32>, Vec<i32>)> {
+        let bucket = rows.len();
+        let mut delta = vec![self.cfg.pad_token; bucket * 2];
+        let mut dlens = vec![0i32; bucket];
+        for (i, row) in rows.iter().enumerate() {
+            let ing = ssm_kv.ingested[i] as usize;
+            let missing = row.committed.len() - ing;
+            if !(1..=2).contains(&missing) {
+                bail!(
+                    "SSM delta invariant violated on row {i}: committed {} ingested {ing}",
+                    row.committed.len()
+                );
+            }
+            for (j, &t) in row.committed[ing..].iter().enumerate() {
+                delta[i * 2 + j] = t;
+            }
+            dlens[i] = missing as i32;
+        }
+        Ok((delta, dlens))
+    }
+
+    /// Re-ingest the SSM's backlog after plain-decode rounds so the delta
+    /// invariant holds again.  Each pass ingests up to 2 tokens per row
+    /// via a throwaway `speculate(s=1)` call, then clamps the counters.
+    fn ssm_catch_up(
+        &mut self,
+        rows: &[Row],
+        bucket: usize,
+        ssm_kv: &mut KvCache,
+        stats: &mut GenStats,
+    ) -> Result<()> {
+        loop {
+            let max_missing = rows
+                .iter()
+                .enumerate()
+                .map(|(i, r)| r.committed.len() - ssm_kv.ingested[i] as usize)
+                .max()
+                .unwrap_or(0);
+            if max_missing <= 2 {
+                return Ok(());
+            }
+            let mut delta = vec![self.cfg.pad_token; bucket * 2];
+            let mut dlens = vec![0i32; bucket];
+            for (i, row) in rows.iter().enumerate() {
+                let ing = ssm_kv.ingested[i] as usize;
+                // leave at least one committed token un-ingested
+                let take = (row.committed.len() - 1 - ing).clamp(1, 2);
+                for (j, &t) in row.committed[ing..ing + take].iter().enumerate() {
+                    delta[i * 2 + j] = t;
+                }
+                dlens[i] = take as i32;
+            }
+            let _ = self.stopwatch.time("ssm_catch_up", || {
+                self.ssm.speculate(&delta, &dlens, 1, bucket, ssm_kv)
+            })?;
+            stats.ssm_calls += 1;
+            let clamp: Vec<u32> =
+                rows.iter().map(|r| r.committed.len() as u32 - 1).collect();
+            ssm_kv.clamp_to(&clamp);
+        }
+    }
+
+    /// Freeze rows that hit their budget or emitted `<eos>`.
+    fn check_eos_and_limits(&self, rows: &mut [Row], max_new: usize) {
+        for row in rows.iter_mut() {
+            if row.finished {
+                continue;
+            }
+            if row.generated() >= max_new {
+                row.finished = true;
+                continue;
+            }
+            if self.cfg.stop_at_eos {
+                let gen = &row.committed[row.prompt_len..];
+                if gen.contains(&self.cfg.eos_token) {
+                    row.finished = true;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Engine logic that does not need a Runtime is covered in
+    // acceptance.rs; end-to-end behaviour (including losslessness vs the
+    // Python goldens) lives in rust/tests/engine_integration.rs.
+}

@@ -1,0 +1,60 @@
+//! # specbatch — batched speculative decoding with adaptive speculation
+//!
+//! Rust coordinator (L3) of the three-layer reproduction of *"The Synergy
+//! of Speculative Decoding and Batching in Serving Large Language Models"*
+//! (Su, Giannoula, Pekhimenko, 2023).
+//!
+//! The layers (see DESIGN.md):
+//!
+//! * **L1** — Pallas kernels (masked verify-attention, vocab argmax),
+//!   authored in `python/compile/kernels/`, lowered into the same HLO as…
+//! * **L2** — the JAX OPT-style LLM/SSM pair (`python/compile/model.py`),
+//!   AOT-lowered to HLO text per `(kind, batch, s)` executable.
+//! * **L3** — this crate: loads the artifacts through the PJRT C API
+//!   ([`runtime`]), runs the batched speculative decoding loop
+//!   ([`engine`]), picks speculation lengths ([`scheduler`]), serves
+//!   Gamma-distributed traffic through a message queue ([`server`],
+//!   [`traffic`]) and reproduces every figure of the paper ([`simulator`],
+//!   [`analytic`], `rust/benches/`).
+//!
+//! Python never runs on the request path: after `make artifacts` the
+//! binary is self-contained.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use specbatch::prelude::*;
+//!
+//! let rt = Runtime::load("artifacts")?;
+//! let mut engine = Engine::new(&rt, EngineConfig::default())?;
+//! let out = engine.generate_batch(
+//!     &[vec![1, 5, 9]],
+//!     16,
+//!     &SpecPolicy::Fixed(3),
+//! )?;
+//! println!("{:?}", out.tokens[0]);
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+
+pub mod analytic;
+pub mod config;
+pub mod dataset;
+pub mod engine;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod scheduler;
+pub mod server;
+pub mod simulator;
+pub mod testkit;
+pub mod traffic;
+pub mod util;
+
+
+/// Most-used types in one import.
+pub mod prelude {
+    pub use crate::config::{PolicySpec, ServingConfig};
+    pub use crate::engine::{Engine, EngineConfig, GenOutput};
+    pub use crate::runtime::Runtime;
+    pub use crate::scheduler::{Lut, SpecPolicy};
+}

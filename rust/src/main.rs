@@ -1,0 +1,414 @@
+//! specbatch CLI — the L3 coordinator entrypoint.
+//!
+//! Subcommands:
+//!
+//! * `quickstart` — load artifacts, generate a few prompts, print text;
+//! * `profile`    — offline adaptive-speculation profiling (Sec. 4): grid
+//!   search (b, s), print/save the LUT;
+//! * `grid`       — real-execution per-token-latency grid (Fig. 1 on the
+//!   tiny models);
+//! * `serve`      — server+client experiment with Gamma traffic
+//!   (Sec. 5.3), reporting request latency;
+//! * `sim`        — paper-scale simulator run (choose GPU/model profiles);
+//! * `warmup`     — precompile the executable matrix;
+//! * `selfcheck`  — load everything and run a smoke generation.
+//!
+//! `specbatch <cmd> --help` prints each command's options.
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use specbatch::config::PolicySpec;
+use specbatch::dataset::Dataset;
+use specbatch::engine::{Engine, EngineConfig};
+use specbatch::runtime::Runtime;
+use specbatch::scheduler::profiler::{profile, ProfilerConfig};
+use specbatch::scheduler::SpecPolicy;
+use specbatch::server::{run_experiment, ServerConfig};
+use specbatch::simulator::{
+    simulate_trace, simulated_lut, AcceptanceProcess, CostModel, GpuProfile, ModelProfile,
+    SimConfig,
+};
+use specbatch::traffic::{Trace, TrafficPattern};
+use specbatch::util::cli::{ArgSpec, Args};
+use specbatch::util::csv::{f as fnum, Csv};
+use specbatch::util::json::Json;
+use specbatch::util::prng::Pcg64;
+use specbatch::{log_info, util};
+
+fn main() {
+    util::logging::init_from_env();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("{e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(argv: Vec<String>) -> Result<()> {
+    let Some((cmd, rest)) = argv.split_first() else {
+        bail!("{}", usage());
+    };
+    let rest = rest.to_vec();
+    match cmd.as_str() {
+        "quickstart" => cmd_quickstart(rest),
+        "profile" => cmd_profile(rest),
+        "grid" => cmd_grid(rest),
+        "serve" => cmd_serve(rest),
+        "sim" => cmd_sim(rest),
+        "warmup" => cmd_warmup(rest),
+        "selfcheck" => cmd_selfcheck(rest),
+        "--help" | "-h" | "help" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n\n{}", usage()),
+    }
+}
+
+fn usage() -> String {
+    "specbatch — batched speculative decoding with adaptive speculation length\n\
+     \n\
+     commands:\n\
+     \x20 quickstart   generate text for a few dataset prompts\n\
+     \x20 profile      offline (batch, s) grid search -> adaptive LUT\n\
+     \x20 grid         real-execution per-token latency grid (CSV)\n\
+     \x20 serve        server+client Gamma-traffic experiment\n\
+     \x20 sim          paper-scale GPU-simulator experiment\n\
+     \x20 warmup       precompile the executable matrix\n\
+     \x20 selfcheck    smoke-test artifacts + engine\n\
+     \n\
+     run `specbatch <cmd> --help` for options"
+        .to_string()
+}
+
+fn common_spec(name: &'static str, about: &'static str) -> ArgSpec {
+    ArgSpec::new(name, about).opt("artifacts", "artifacts", "artifacts directory")
+}
+
+fn load_runtime(args: &Args) -> Result<Runtime> {
+    Runtime::load(PathBuf::from(args.get("artifacts")?))
+}
+
+fn parse_policy(args: &Args, rt: &Runtime, engine: &mut Engine<'_>) -> Result<SpecPolicy> {
+    match PolicySpec::parse(args.get("policy")?)? {
+        PolicySpec::None => Ok(SpecPolicy::NoSpec),
+        PolicySpec::Fixed(s) => Ok(SpecPolicy::Fixed(s)),
+        PolicySpec::Adaptive => {
+            let dataset = rt.dataset()?;
+            let mut rng = Pcg64::new(0xADA);
+            let prompts = dataset.sample_profile(&mut rng, 24);
+            let mut pcfg = ProfilerConfig::from_manifest(&rt.manifest);
+            pcfg.tokens_per_run = 16;
+            pcfg.repeats = 1;
+            Ok(SpecPolicy::Adaptive(profile(engine, &prompts, &pcfg)?.lut))
+        }
+    }
+}
+
+fn cmd_quickstart(argv: Vec<String>) -> Result<()> {
+    let spec = common_spec("quickstart", "generate text for a few dataset prompts")
+        .opt("prompts", "3", "number of prompts")
+        .opt("tokens", "32", "new tokens per prompt")
+        .opt("policy", "fixed:3", "none | fixed:<s> | adaptive");
+    let args = spec.parse(&argv)?;
+    let rt = load_runtime(&args)?;
+    let dataset = rt.dataset()?;
+    let mut engine = Engine::new(&rt, EngineConfig::default())?;
+    let policy = parse_policy(&args, &rt, &mut engine)?;
+
+    let mut rng = Pcg64::new(7);
+    let n = args.get_usize("prompts")?;
+    let prompts = dataset.sample_eval(&mut rng, n);
+    let ids: Vec<Vec<i32>> = prompts.iter().map(|p| p.ids.clone()).collect();
+    let out = engine.generate_batch(&ids, args.get_usize("tokens")?, &policy)?;
+
+    for (p, toks) in prompts.iter().zip(&out.tokens) {
+        println!("prompt: {}", p.text);
+        println!("  -> {}", dataset.detokenize(toks));
+    }
+    let st = &out.stats;
+    println!(
+        "\npolicy {} | {} rounds | {:.2} drafts accepted/round | {:.2} ms/token",
+        policy.label(),
+        st.rounds,
+        st.mean_accepted(),
+        st.per_token_latency() * 1e3,
+    );
+    Ok(())
+}
+
+fn cmd_profile(argv: Vec<String>) -> Result<()> {
+    let spec = common_spec("profile", "grid-search (batch, s) and build the adaptive LUT")
+        .opt("tokens", "24", "tokens per measurement run")
+        .opt("repeats", "2", "measurement repeats per grid point")
+        .opt("prompts", "32", "profile prompts sampled")
+        .opt("out", "results/profile", "output prefix (CSV + LUT json)");
+    let args = spec.parse(&argv)?;
+    let rt = load_runtime(&args)?;
+    let dataset = rt.dataset()?;
+    let mut engine = Engine::new(&rt, EngineConfig::default())?;
+    let mut rng = Pcg64::new(0xADA);
+    let prompts = dataset.sample_profile(&mut rng, args.get_usize("prompts")?);
+    let mut pcfg = ProfilerConfig::from_manifest(&rt.manifest);
+    pcfg.tokens_per_run = args.get_usize("tokens")?;
+    pcfg.repeats = args.get_usize("repeats")?;
+    let result = profile(&mut engine, &prompts, &pcfg)?;
+
+    let prefix = args.get("out")?;
+    result.to_csv().write_file(format!("{prefix}_grid.csv"))?;
+    result.lut.to_json().write_file(format!("{prefix}_lut.json"))?;
+    println!("LUT: {}", result.lut.to_json().compact());
+    println!("grid -> {prefix}_grid.csv, lut -> {prefix}_lut.json");
+    Ok(())
+}
+
+fn cmd_grid(argv: Vec<String>) -> Result<()> {
+    let spec = common_spec("grid", "real-execution per-token latency grid (tiny models)")
+        .opt("buckets", "1,2,4,8", "batch buckets to measure")
+        .opt("slens", "0,1,2,3,4,5,6", "speculation lengths")
+        .opt("tokens", "24", "tokens per measurement")
+        .opt("out", "results/grid_real.csv", "output CSV");
+    let args = spec.parse(&argv)?;
+    let rt = load_runtime(&args)?;
+    let dataset = rt.dataset()?;
+    let mut engine = Engine::new(&rt, EngineConfig::default())?;
+    let mut rng = Pcg64::new(3);
+    let tokens = args.get_usize("tokens")?;
+
+    let mut csv = Csv::new(&["batch", "s", "per_token_latency_ms", "mean_accepted"]);
+    for b in args.get_usize_list("buckets")? {
+        for s in args.get_usize_list("slens")? {
+            if s > 0 && rt.manifest.max_spec_len(b) < s {
+                continue;
+            }
+            let prompts: Vec<Vec<i32>> = dataset
+                .sample_eval(&mut rng, b)
+                .into_iter()
+                .map(|p| p.ids)
+                .collect();
+            let policy = if s == 0 { SpecPolicy::NoSpec } else { SpecPolicy::Fixed(s) };
+            let out = engine.generate_batch(&prompts, tokens, &policy)?;
+            let lat = out.stats.per_token_latency() * 1e3;
+            println!(
+                "b={b} s={s}: {lat:.3} ms/token (accepted {:.2}/round)",
+                out.stats.mean_accepted()
+            );
+            csv.row(&[
+                b.to_string(),
+                s.to_string(),
+                fnum(lat),
+                fnum(out.stats.mean_accepted()),
+            ]);
+        }
+    }
+    csv.write_file(args.get("out")?)?;
+    println!("-> {}", args.get("out")?);
+    Ok(())
+}
+
+fn cmd_serve(argv: Vec<String>) -> Result<()> {
+    let spec = common_spec("serve", "server+client Gamma-traffic experiment (Sec. 5.3)")
+        .opt("policy", "adaptive", "none | fixed:<s> | adaptive")
+        .opt("requests", "64", "number of requests")
+        .opt("interval", "0.5", "mean inter-arrival seconds")
+        .opt("cv", "1.0", "coefficient of variation")
+        .opt("tokens", "32", "new tokens per request")
+        .opt("max-batch", "8", "dynamic batching cap")
+        .opt("seed", "1", "trace seed")
+        .flag("fig6", "use the alternating intense/sparse pattern")
+        .opt("out", "results/serve.csv", "per-request CSV");
+    let args = spec.parse(&argv)?;
+
+    let artifacts = PathBuf::from(args.get("artifacts")?);
+    let dataset = Dataset::load(artifacts.join("dataset.json"))?;
+    let pattern = if args.has_flag("fig6") {
+        TrafficPattern::fig6()
+    } else {
+        TrafficPattern::Stationary {
+            interval: args.get_f64("interval")?,
+            cv: args.get_f64("cv")?,
+        }
+    };
+    let trace = Trace::generate(
+        &pattern,
+        &dataset.eval,
+        args.get_usize("requests")?,
+        args.get_u64("seed")?,
+    );
+    log_info!(
+        "trace: {} requests over {:.1}s ({})",
+        trace.len(),
+        trace.span(),
+        pattern.label()
+    );
+
+    let cfg = ServerConfig {
+        max_batch: args.get_usize("max-batch")?,
+        max_new_tokens: args.get_usize("tokens")?,
+        ..ServerConfig::default()
+    };
+    let policy = PolicySpec::parse(args.get("policy")?)?;
+    let (recorder, lut) = run_experiment(artifacts, cfg, policy, None, &trace)?;
+
+    if let Some(lut) = lut {
+        println!("adaptive LUT: {}", lut.to_json().compact());
+    }
+    let s = recorder.summary();
+    let (p50, p90, p99) = recorder.percentiles();
+    println!(
+        "{} requests | latency mean {:.3}s p50 {:.3}s p90 {:.3}s p99 {:.3}s | {:.1} tok/s",
+        s.n,
+        s.mean,
+        p50,
+        p90,
+        p99,
+        recorder.throughput_tokens_per_s()
+    );
+    recorder.to_csv().write_file(args.get("out")?)?;
+    println!("-> {}", args.get("out")?);
+    Ok(())
+}
+
+fn cmd_sim(argv: Vec<String>) -> Result<()> {
+    let spec = ArgSpec::new("sim", "paper-scale GPU-simulator experiment")
+        .opt("gpu", "rtx3090", "rtx3090 | rtx4090 | a100")
+        .opt("llm", "opt-6.7b", "opt-1.3b | opt-6.7b | llama-7b")
+        .opt("ssm", "opt-125m", "draft model profile")
+        .opt("policy", "adaptive", "none | fixed:<s> | adaptive")
+        .opt("requests", "1000", "number of requests")
+        .opt("interval", "0.3", "mean inter-arrival seconds")
+        .opt("cv", "1.0", "coefficient of variation")
+        .opt("prompt-len", "16", "prompt length")
+        .opt("seed", "1", "trace seed")
+        .flag("fig6", "use the alternating intense/sparse pattern")
+        .opt("out", "results/sim.csv", "per-request CSV");
+    let args = spec.parse(&argv)?;
+    let gpu_name = args.get("gpu")?.to_string();
+    let gpu = GpuProfile::by_name(&gpu_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown gpu {gpu_name:?}"))?;
+    let llm_name = args.get("llm")?.to_string();
+    let llm = ModelProfile::by_name(&llm_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {llm_name:?}"))?;
+    let ssm_name = args.get("ssm")?.to_string();
+    let ssm = ModelProfile::by_name(&ssm_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {ssm_name:?}"))?;
+    let cfg = SimConfig {
+        llm: CostModel::new(llm, gpu),
+        ssm: CostModel::new(ssm, gpu),
+        acceptance: AcceptanceProcess::paper(),
+        max_batch: 16,
+        max_new_tokens: 128,
+        host_overhead: 0.2e-3,
+        seed: args.get_u64("seed")?,
+    };
+    let policy = match PolicySpec::parse(args.get("policy")?)? {
+        PolicySpec::None => SpecPolicy::NoSpec,
+        PolicySpec::Fixed(s) => SpecPolicy::Fixed(s),
+        PolicySpec::Adaptive => {
+            let lut = simulated_lut(&cfg, &[1, 2, 4, 8, 16], 8, 80);
+            println!("simulated LUT: {}", lut.to_json().compact());
+            SpecPolicy::Adaptive(lut)
+        }
+    };
+    let pattern = if args.has_flag("fig6") {
+        TrafficPattern::fig6()
+    } else {
+        TrafficPattern::Stationary {
+            interval: args.get_f64("interval")?,
+            cv: args.get_f64("cv")?,
+        }
+    };
+    let plen = args.get_usize("prompt-len")?;
+    let pool = vec![specbatch::dataset::Prompt {
+        ids: vec![1; plen],
+        text: String::new(),
+    }];
+    let trace = Trace::generate(&pattern, &pool, args.get_usize("requests")?, args.get_u64("seed")?);
+    let rec = simulate_trace(&cfg, &policy, &trace);
+    let s = rec.summary();
+    let (p50, p90, p99) = rec.percentiles();
+    println!(
+        "{} on {} | {} | {} requests | latency mean {:.3}s p50 {:.3}s p90 {:.3}s p99 {:.3}s",
+        llm.name,
+        gpu.name,
+        policy.label(),
+        s.n,
+        s.mean,
+        p50,
+        p90,
+        p99
+    );
+    rec.to_csv().write_file(args.get("out")?)?;
+    println!("-> {}", args.get("out")?);
+    Ok(())
+}
+
+fn cmd_warmup(argv: Vec<String>) -> Result<()> {
+    let spec = common_spec("warmup", "precompile the executable matrix")
+        .opt("max-batch", "16", "largest bucket to compile")
+        .opt("max-s", "8", "largest speculation length to compile");
+    let args = spec.parse(&argv)?;
+    let rt = load_runtime(&args)?;
+    let n = rt.warmup(args.get_usize("max-batch")?, args.get_usize("max-s")?)?;
+    let (compiled, secs) = rt.compile_stats();
+    println!("{n} executables ready ({compiled} compiled in {secs:.1}s)");
+    Ok(())
+}
+
+fn cmd_selfcheck(argv: Vec<String>) -> Result<()> {
+    let spec = common_spec("selfcheck", "smoke-test artifacts + engine");
+    let args = spec.parse(&argv)?;
+    let rt = load_runtime(&args)?;
+    println!(
+        "manifest: fingerprint {} profile {} ({} executables)",
+        rt.manifest.fingerprint,
+        rt.manifest.profile,
+        rt.manifest.executables.len()
+    );
+    println!(
+        "models: llm {} params, ssm {} params, agreement {:.3}",
+        rt.manifest.models["llm"].n_params,
+        rt.manifest.models["ssm"].n_params,
+        rt.manifest.agreement_rate
+    );
+    let dataset = rt.dataset()?;
+    println!(
+        "dataset: {} profile / {} eval prompts, vocab {}",
+        dataset.profile.len(),
+        dataset.eval.len(),
+        dataset.vocab.len()
+    );
+    let mut engine = Engine::new(
+        &rt,
+        EngineConfig {
+            stop_at_eos: false,
+            ..EngineConfig::default()
+        },
+    )?;
+    let goldens = Json::parse_file(rt.manifest.dir.join(&rt.manifest.goldens_file))?;
+    let case = &goldens.get("cases")?.as_arr()?[0];
+    let prompt: Vec<i32> = case
+        .get("prompt")?
+        .as_arr()?
+        .iter()
+        .map(|v| Ok(v.as_i64()? as i32))
+        .collect::<Result<_>>()?;
+    let expect: Vec<i32> = case
+        .get("greedy")?
+        .as_arr()?
+        .iter()
+        .map(|v| Ok(v.as_i64()? as i32))
+        .collect::<Result<_>>()?;
+    let out = engine.generate_batch(&[prompt], expect.len(), &SpecPolicy::Fixed(3))?;
+    if out.tokens[0] != expect {
+        bail!("selfcheck FAILED: engine output diverges from golden");
+    }
+    println!("selfcheck OK: speculative output matches the Python golden");
+    Ok(())
+}

@@ -1,0 +1,231 @@
+//! Request-level latency metrics and timeline bucketing.
+//!
+//! The paper's serving metric (Sec. 5.3) is end-to-end request latency
+//! `t_b - t_a`: from the client send to the server finishing the request,
+//! *including queueing delay*.  [`LatencyRecorder`] accumulates completed
+//! requests; [`timeline_groups`] reproduces Fig. 6's presentation (each
+//! point = one group of 40 consecutive requests by send time).
+
+use crate::util::csv::{f, Csv};
+use crate::util::stats::{percentile_sorted, summary, Summary};
+
+/// One completed request, in seconds on a common clock.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RequestRecord {
+    pub id: u64,
+    /// client send time (t_a)
+    pub sent_at: f64,
+    /// server pulled it into a batch
+    pub started_at: f64,
+    /// server finished generating (t_b)
+    pub finished_at: f64,
+    /// generated tokens
+    pub tokens: usize,
+    /// batch size it was served in
+    pub batch: usize,
+    /// speculation length used for (the first round of) its batch
+    pub spec_len: usize,
+}
+
+impl RequestRecord {
+    /// The paper's latency: t_b - t_a (queueing included).
+    pub fn latency(&self) -> f64 {
+        self.finished_at - self.sent_at
+    }
+
+    pub fn queue_delay(&self) -> f64 {
+        self.started_at - self.sent_at
+    }
+
+    pub fn service_time(&self) -> f64 {
+        self.finished_at - self.started_at
+    }
+}
+
+/// Accumulates completed requests and summarizes them.
+#[derive(Debug, Default, Clone)]
+pub struct LatencyRecorder {
+    records: Vec<RequestRecord>,
+}
+
+impl LatencyRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, r: RequestRecord) {
+        self.records.push(r);
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn records(&self) -> &[RequestRecord] {
+        &self.records
+    }
+
+    pub fn latencies(&self) -> Vec<f64> {
+        self.records.iter().map(|r| r.latency()).collect()
+    }
+
+    pub fn summary(&self) -> Summary {
+        summary(&self.latencies())
+    }
+
+    /// (p50, p90, p99) request latency.
+    pub fn percentiles(&self) -> (f64, f64, f64) {
+        let mut l = self.latencies();
+        l.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        (
+            percentile_sorted(&l, 50.0),
+            percentile_sorted(&l, 90.0),
+            percentile_sorted(&l, 99.0),
+        )
+    }
+
+    /// Generated tokens per second of span (first send -> last finish).
+    pub fn throughput_tokens_per_s(&self) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        let t0 = self.records.iter().map(|r| r.sent_at).fold(f64::INFINITY, f64::min);
+        let t1 = self
+            .records
+            .iter()
+            .map(|r| r.finished_at)
+            .fold(f64::NEG_INFINITY, f64::max);
+        let tokens: usize = self.records.iter().map(|r| r.tokens).sum();
+        if t1 <= t0 {
+            return f64::NAN;
+        }
+        tokens as f64 / (t1 - t0)
+    }
+
+    /// Full export (one row per request).
+    pub fn to_csv(&self) -> Csv {
+        let mut csv = Csv::new(&[
+            "id",
+            "sent_at_s",
+            "started_at_s",
+            "finished_at_s",
+            "latency_s",
+            "queue_delay_s",
+            "tokens",
+            "batch",
+            "spec_len",
+        ]);
+        let mut sorted = self.records.clone();
+        sorted.sort_by(|a, b| a.sent_at.partial_cmp(&b.sent_at).unwrap());
+        for r in &sorted {
+            csv.row(&[
+                r.id.to_string(),
+                f(r.sent_at),
+                f(r.started_at),
+                f(r.finished_at),
+                f(r.latency()),
+                f(r.queue_delay()),
+                r.tokens.to_string(),
+                r.batch.to_string(),
+                r.spec_len.to_string(),
+            ]);
+        }
+        csv
+    }
+}
+
+/// One Fig. 6 timeline point: a group of consecutive requests by send time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TimelinePoint {
+    /// send time of the first request in the group (the X axis)
+    pub t_start: f64,
+    /// mean latency of the group (the Y axis)
+    pub mean_latency: f64,
+    pub n: usize,
+}
+
+/// Group completed requests into consecutive-`group_size` buckets by send
+/// time (Fig. 6 uses groups of 40).
+pub fn timeline_groups(records: &[RequestRecord], group_size: usize) -> Vec<TimelinePoint> {
+    assert!(group_size > 0);
+    let mut sorted: Vec<&RequestRecord> = records.iter().collect();
+    sorted.sort_by(|a, b| a.sent_at.partial_cmp(&b.sent_at).unwrap());
+    sorted
+        .chunks(group_size)
+        .map(|chunk| TimelinePoint {
+            t_start: chunk[0].sent_at,
+            mean_latency: chunk.iter().map(|r| r.latency()).sum::<f64>() / chunk.len() as f64,
+            n: chunk.len(),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: u64, sent: f64, started: f64, fin: f64) -> RequestRecord {
+        RequestRecord {
+            id,
+            sent_at: sent,
+            started_at: started,
+            finished_at: fin,
+            tokens: 10,
+            batch: 2,
+            spec_len: 3,
+        }
+    }
+
+    #[test]
+    fn latency_includes_queueing() {
+        let r = rec(1, 0.0, 2.0, 5.0);
+        assert_eq!(r.latency(), 5.0);
+        assert_eq!(r.queue_delay(), 2.0);
+        assert_eq!(r.service_time(), 3.0);
+    }
+
+    #[test]
+    fn recorder_summary_and_throughput() {
+        let mut rec_ = LatencyRecorder::new();
+        rec_.push(rec(1, 0.0, 0.0, 1.0));
+        rec_.push(rec(2, 1.0, 1.5, 3.0));
+        let s = rec_.summary();
+        assert_eq!(s.n, 2);
+        assert!((s.mean - 1.5).abs() < 1e-12);
+        // 20 tokens over [0, 3] seconds
+        assert!((rec_.throughput_tokens_per_s() - 20.0 / 3.0).abs() < 1e-12);
+        let (p50, p90, p99) = rec_.percentiles();
+        assert!(p50 <= p90 && p90 <= p99);
+    }
+
+    #[test]
+    fn timeline_grouping_is_by_send_time() {
+        let records = vec![
+            rec(3, 2.0, 2.0, 4.0), // out of order on purpose
+            rec(1, 0.0, 0.0, 1.0),
+            rec(2, 1.0, 1.0, 3.0),
+        ];
+        let pts = timeline_groups(&records, 2);
+        assert_eq!(pts.len(), 2);
+        assert_eq!(pts[0].t_start, 0.0);
+        assert_eq!(pts[0].n, 2);
+        // group 0: latencies 1.0 and 2.0
+        assert!((pts[0].mean_latency - 1.5).abs() < 1e-12);
+        assert_eq!(pts[1].n, 1);
+    }
+
+    #[test]
+    fn csv_is_sorted_by_send_time() {
+        let mut r = LatencyRecorder::new();
+        r.push(rec(2, 5.0, 5.0, 6.0));
+        r.push(rec(1, 0.0, 0.0, 1.0));
+        let out = r.to_csv().to_string();
+        let lines: Vec<&str> = out.lines().collect();
+        assert!(lines[1].starts_with('1'));
+        assert!(lines[2].starts_with('2'));
+    }
+}

@@ -1,0 +1,451 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime.  Parses `artifacts/manifest.json` into typed structs and
+//! validates the invariants the engine depends on (weight table covers the
+//! declared byte span, executable matrix is well-formed, shared vocab).
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Architecture of one model (mirrors `python/compile/configs.ModelConfig`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelSpec {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub max_prompt: usize,
+}
+
+impl ModelSpec {
+    fn from_json(j: &Json) -> Result<ModelSpec> {
+        Ok(ModelSpec {
+            name: j.get("name")?.as_str()?.to_string(),
+            vocab: j.get("vocab")?.as_usize()?,
+            d_model: j.get("d_model")?.as_usize()?,
+            n_layers: j.get("n_layers")?.as_usize()?,
+            n_heads: j.get("n_heads")?.as_usize()?,
+            d_head: j.get("d_head")?.as_usize()?,
+            d_ff: j.get("d_ff")?.as_usize()?,
+            max_seq: j.get("max_seq")?.as_usize()?,
+            max_prompt: j.get("max_prompt")?.as_usize()?,
+        })
+    }
+
+    /// KV-cache element count for a given batch:
+    /// `[L, 2, B, H, S_max, d_head]`.
+    pub fn kv_numel(&self, batch: usize) -> usize {
+        self.n_layers * 2 * batch * self.n_heads * self.max_seq * self.d_head
+    }
+
+    pub fn kv_dims(&self, batch: usize) -> Vec<usize> {
+        vec![
+            self.n_layers,
+            2,
+            batch,
+            self.n_heads,
+            self.max_seq,
+            self.d_head,
+        ]
+    }
+
+    /// Dense FLOPs of one forward pass over `t` tokens (per batch row),
+    /// used by the simulator's roofline model.
+    pub fn flops_per_token(&self) -> f64 {
+        let d = self.d_model as f64;
+        let f = self.d_ff as f64;
+        let l = self.n_layers as f64;
+        let v = self.vocab as f64;
+        // qkv/o projections + MLP (x2 for mul+add) + lm head
+        2.0 * (l * (4.0 * d * d + 2.0 * d * f) + d * v)
+    }
+
+    /// Parameter bytes (f32), used by the simulator's memory-bound model.
+    pub fn param_bytes(&self) -> f64 {
+        let d = self.d_model as f64;
+        let f = self.d_ff as f64;
+        let l = self.n_layers as f64;
+        let v = self.vocab as f64;
+        4.0 * (v * d + self.max_seq as f64 * d + l * (4.0 * d * d + 2.0 * d * f))
+    }
+}
+
+/// One tensor slice in a `weights_*.bin` blob.
+#[derive(Debug, Clone)]
+pub struct WeightEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub numel: usize,
+}
+
+/// Per-model artifact bundle.
+#[derive(Debug, Clone)]
+pub struct ModelManifest {
+    pub spec: ModelSpec,
+    pub weights_file: String,
+    pub weights_bytes: usize,
+    pub weights: Vec<WeightEntry>,
+    pub n_params: usize,
+}
+
+/// Kind of AOT executable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ExeKind {
+    Prefill,
+    Verify,
+    Speculate,
+}
+
+impl ExeKind {
+    fn parse(s: &str) -> Result<ExeKind> {
+        Ok(match s {
+            "prefill" => ExeKind::Prefill,
+            "verify" => ExeKind::Verify,
+            "speculate" => ExeKind::Speculate,
+            other => bail!("unknown executable kind {other:?}"),
+        })
+    }
+}
+
+impl fmt::Display for ExeKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            ExeKind::Prefill => "prefill",
+            ExeKind::Verify => "verify",
+            ExeKind::Speculate => "speculate",
+        })
+    }
+}
+
+/// One entry of the executable matrix.
+#[derive(Debug, Clone)]
+pub struct ExeEntry {
+    pub name: String,
+    pub file: String,
+    pub model: String,
+    pub kind: ExeKind,
+    pub batch: usize,
+    pub s: usize,
+}
+
+/// Key used to look an executable up at runtime.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ExeKey {
+    pub model: String,
+    pub kind: ExeKind,
+    pub batch: usize,
+    pub s: usize,
+}
+
+/// The full parsed manifest.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub fingerprint: String,
+    pub profile: String,
+    pub weight_order: Vec<String>,
+    pub models: BTreeMap<String, ModelManifest>,
+    pub executables: BTreeMap<ExeKey, ExeEntry>,
+    pub batch_buckets: Vec<usize>,
+    pub verify_lengths: Vec<usize>,
+    pub speculate_lengths: Vec<usize>,
+    pub dataset_file: String,
+    pub goldens_file: String,
+    pub agreement_rate: f64,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let json = Json::parse_file(&path)
+            .with_context(|| format!("loading manifest {}", path.display()))?;
+        Self::from_json(&json, dir)
+    }
+
+    pub fn from_json(json: &Json, dir: PathBuf) -> Result<Manifest> {
+        let mut models = BTreeMap::new();
+        for (name, m) in json.get("models")?.as_obj()? {
+            let spec = ModelSpec::from_json(m.get("config")?)?;
+            let weights_bytes = m.get("weights_bytes")?.as_usize()?;
+            let mut weights = Vec::new();
+            let mut expect_offset = 0usize;
+            for w in m.get("weights")?.as_arr()? {
+                let e = WeightEntry {
+                    name: w.get("name")?.as_str()?.to_string(),
+                    shape: w.get_usize_vec("shape")?,
+                    offset: w.get("offset")?.as_usize()?,
+                    numel: w.get("numel")?.as_usize()?,
+                };
+                if e.offset != expect_offset {
+                    bail!("weight table of {name} has a gap at {}", e.name);
+                }
+                if e.shape.iter().product::<usize>() != e.numel {
+                    bail!("weight {} shape/numel mismatch", e.name);
+                }
+                expect_offset += e.numel * 4;
+                weights.push(e);
+            }
+            if expect_offset != weights_bytes {
+                bail!(
+                    "weight table of {name} covers {expect_offset} bytes, \
+                     blob declares {weights_bytes}"
+                );
+            }
+            models.insert(
+                name.clone(),
+                ModelManifest {
+                    spec,
+                    weights_file: m.get("weights_file")?.as_str()?.to_string(),
+                    weights_bytes,
+                    weights,
+                    n_params: m.get("n_params")?.as_usize()?,
+                },
+            );
+        }
+        if !models.contains_key("llm") || !models.contains_key("ssm") {
+            bail!("manifest must declare both llm and ssm models");
+        }
+        let (vl, vs) = (
+            models["llm"].spec.vocab,
+            models["ssm"].spec.vocab,
+        );
+        if vl != vs {
+            bail!("speculative decoding requires a shared vocab ({vl} != {vs})");
+        }
+
+        let mut executables = BTreeMap::new();
+        for e in json.get("executables")?.as_arr()? {
+            let entry = ExeEntry {
+                name: e.get("name")?.as_str()?.to_string(),
+                file: e.get("file")?.as_str()?.to_string(),
+                model: e.get("model")?.as_str()?.to_string(),
+                kind: ExeKind::parse(e.get("kind")?.as_str()?)?,
+                batch: e.get("batch")?.as_usize()?,
+                s: e.get("s")?.as_usize()?,
+            };
+            if !models.contains_key(&entry.model) {
+                bail!("executable {} references unknown model", entry.name);
+            }
+            let key = ExeKey {
+                model: entry.model.clone(),
+                kind: entry.kind,
+                batch: entry.batch,
+                s: entry.s,
+            };
+            executables.insert(key, entry);
+        }
+        if executables.is_empty() {
+            bail!("manifest declares no executables");
+        }
+
+        let weight_order: Vec<String> = json
+            .get("weight_order")?
+            .as_arr()?
+            .iter()
+            .map(|v| Ok(v.as_str()?.to_string()))
+            .collect::<Result<_>>()?;
+        for m in models.values() {
+            let names: Vec<&str> = m.weights.iter().map(|w| w.name.as_str()).collect();
+            if names != weight_order.iter().map(|s| s.as_str()).collect::<Vec<_>>() {
+                bail!("weight table order diverges from weight_order");
+            }
+        }
+
+        Ok(Manifest {
+            dir,
+            fingerprint: json.get("fingerprint")?.as_str()?.to_string(),
+            profile: json.get("profile")?.as_str()?.to_string(),
+            weight_order,
+            models,
+            executables,
+            batch_buckets: json.get_usize_vec("batch_buckets")?,
+            verify_lengths: json.get_usize_vec("verify_lengths")?,
+            speculate_lengths: json.get_usize_vec("speculate_lengths")?,
+            dataset_file: json.get("dataset")?.as_str()?.to_string(),
+            goldens_file: json.get("goldens")?.as_str()?.to_string(),
+            agreement_rate: json.get("agreement_rate")?.as_f64()?,
+        })
+    }
+
+    pub fn exe(&self, model: &str, kind: ExeKind, batch: usize, s: usize) -> Result<&ExeEntry> {
+        let key = ExeKey {
+            model: model.to_string(),
+            kind,
+            batch,
+            s,
+        };
+        self.executables.get(&key).ok_or_else(|| {
+            anyhow::anyhow!(
+                "no executable for model={model} kind={kind} batch={batch} s={s} \
+                 (available buckets {:?}, verify s {:?}) — re-run `make artifacts` \
+                 with a profile that covers it",
+                self.batch_buckets,
+                self.verify_lengths
+            )
+        })
+    }
+
+    pub fn has_exe(&self, model: &str, kind: ExeKind, batch: usize, s: usize) -> bool {
+        self.executables.contains_key(&ExeKey {
+            model: model.to_string(),
+            kind,
+            batch,
+            s,
+        })
+    }
+
+    /// Smallest compiled batch bucket that can hold `n` rows.
+    pub fn bucket_for(&self, n: usize) -> Result<usize> {
+        self.batch_buckets
+            .iter()
+            .copied()
+            .filter(|&b| b >= n)
+            .min()
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "batch of {n} exceeds the largest compiled bucket {:?}",
+                    self.batch_buckets.iter().max()
+                )
+            })
+    }
+
+    /// Largest speculation length with both verify and speculate
+    /// executables at this bucket.
+    pub fn max_spec_len(&self, bucket: usize) -> usize {
+        (1..=16)
+            .take_while(|&s| {
+                self.has_exe("llm", ExeKind::Verify, bucket, s)
+                    && self.has_exe("ssm", ExeKind::Speculate, bucket, s)
+            })
+            .last()
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn toy_manifest_json() -> Json {
+        // minimal but internally consistent manifest for parser tests
+        let weight = |name: &str, numel: usize, offset: usize| {
+            Json::obj(vec![
+                ("name", Json::Str(name.into())),
+                ("shape", Json::from_usize_slice(&[numel])),
+                ("offset", Json::Num(offset as f64)),
+                ("numel", Json::Num(numel as f64)),
+            ])
+        };
+        let model = |name: &str| {
+            Json::obj(vec![
+                (
+                    "config",
+                    Json::obj(vec![
+                        ("name", Json::Str(name.into())),
+                        ("vocab", Json::Num(16.0)),
+                        ("d_model", Json::Num(8.0)),
+                        ("n_layers", Json::Num(1.0)),
+                        ("n_heads", Json::Num(2.0)),
+                        ("d_head", Json::Num(4.0)),
+                        ("d_ff", Json::Num(16.0)),
+                        ("max_seq", Json::Num(32.0)),
+                        ("max_prompt", Json::Num(8.0)),
+                    ]),
+                ),
+                ("weights_file", Json::Str(format!("weights_{name}.bin"))),
+                ("weights_bytes", Json::Num(48.0)),
+                (
+                    "weights",
+                    Json::Arr(vec![weight("embed", 8, 0), weight("lnf_scale", 4, 32)]),
+                ),
+                ("n_params", Json::Num(12.0)),
+            ])
+        };
+        let exe = Json::obj(vec![
+            ("name", Json::Str("llm_verify_b1_s1".into())),
+            ("file", Json::Str("llm_verify_b1_s1.hlo.txt".into())),
+            ("model", Json::Str("llm".into())),
+            ("kind", Json::Str("verify".into())),
+            ("batch", Json::Num(1.0)),
+            ("s", Json::Num(1.0)),
+        ]);
+        Json::obj(vec![
+            ("fingerprint", Json::Str("abc".into())),
+            ("profile", Json::Str("test".into())),
+            (
+                "weight_order",
+                Json::Arr(vec![
+                    Json::Str("embed".into()),
+                    Json::Str("lnf_scale".into()),
+                ]),
+            ),
+            (
+                "models",
+                Json::obj(vec![("llm", model("llm")), ("ssm", model("ssm"))]),
+            ),
+            ("executables", Json::Arr(vec![exe])),
+            ("batch_buckets", Json::from_usize_slice(&[1, 2, 4])),
+            ("verify_lengths", Json::from_usize_slice(&[0, 1, 2])),
+            ("speculate_lengths", Json::from_usize_slice(&[1, 2])),
+            ("dataset", Json::Str("dataset.json".into())),
+            ("goldens", Json::Str("goldens.json".into())),
+            ("agreement_rate", Json::Num(0.7)),
+        ])
+    }
+
+    #[test]
+    fn parses_toy_manifest() {
+        let m = Manifest::from_json(&toy_manifest_json(), PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.models.len(), 2);
+        assert_eq!(m.models["llm"].spec.d_model, 8);
+        assert!(m.has_exe("llm", ExeKind::Verify, 1, 1));
+        assert!(!m.has_exe("llm", ExeKind::Verify, 2, 1));
+        assert_eq!(m.bucket_for(3).unwrap(), 4);
+        assert_eq!(m.bucket_for(1).unwrap(), 1);
+        assert!(m.bucket_for(5).is_err());
+    }
+
+    #[test]
+    fn kv_dims_match_python_layout() {
+        let m = Manifest::from_json(&toy_manifest_json(), PathBuf::from("/tmp")).unwrap();
+        let spec = &m.models["llm"].spec;
+        assert_eq!(spec.kv_dims(4), vec![1, 2, 4, 2, 32, 4]);
+        assert_eq!(spec.kv_numel(4), 1 * 2 * 4 * 2 * 32 * 4);
+    }
+
+    #[test]
+    fn rejects_gapped_weight_table() {
+        let mut j = toy_manifest_json();
+        if let Json::Obj(o) = &mut j {
+            let m = o.get_mut("models").unwrap();
+            if let Json::Obj(mo) = m {
+                let llm = mo.get_mut("llm").unwrap();
+                if let Json::Obj(l) = llm {
+                    if let Some(Json::Arr(ws)) = l.get_mut("weights") {
+                        if let Json::Obj(w1) = &mut ws[1] {
+                            w1.insert("offset".into(), Json::Num(40.0));
+                        }
+                    }
+                }
+            }
+        }
+        assert!(Manifest::from_json(&j, PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn exe_error_message_is_actionable() {
+        let m = Manifest::from_json(&toy_manifest_json(), PathBuf::from("/tmp")).unwrap();
+        let err = m.exe("llm", ExeKind::Verify, 8, 3).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+}

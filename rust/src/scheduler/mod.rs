@@ -1,0 +1,168 @@
+//! Speculation-length scheduling: the paper's contribution (Sec. 4).
+//!
+//! * [`SpecPolicy`] — `NoSpec`, `Fixed(s)`, or `Adaptive(Lut)`;
+//! * [`Lut`] — the batch-size -> optimal-s look-up table built by offline
+//!   profiling on power-of-two buckets, with the paper's interpolation
+//!   rule ("for batch sizes that are not profiled, choose the **smaller**
+//!   speculation length of the nearest two profiled batch sizes");
+//! * [`profiler`] — the offline grid search that builds the LUT.
+
+pub mod profiler;
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+
+/// Batch-size -> optimal speculation length look-up table.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Lut {
+    /// profiled (batch bucket, s_opt) pairs, keyed by bucket
+    entries: BTreeMap<usize, usize>,
+}
+
+impl Lut {
+    pub fn new(entries: BTreeMap<usize, usize>) -> Result<Lut> {
+        if entries.is_empty() {
+            bail!("LUT must have at least one profiled batch size");
+        }
+        Ok(Lut { entries })
+    }
+
+    pub fn entries(&self) -> &BTreeMap<usize, usize> {
+        &self.entries
+    }
+
+    /// Optimal speculation length for a batch size.
+    ///
+    /// Exact hits use the profiled value.  Between two profiled buckets the
+    /// paper picks the *smaller* of the two speculation lengths (Sec. 4) —
+    /// conservative, since over-speculating at large batch actively hurts
+    /// while under-speculating only forgoes some gain.  Outside the
+    /// profiled range, clamp to the nearest profiled bucket.
+    pub fn lookup(&self, batch: usize) -> usize {
+        if let Some(&s) = self.entries.get(&batch) {
+            return s;
+        }
+        let below = self.entries.range(..batch).next_back();
+        let above = self.entries.range(batch..).next();
+        match (below, above) {
+            (Some((_, &lo)), Some((_, &hi))) => lo.min(hi),
+            (Some((_, &lo)), None) => lo,
+            (None, Some((_, &hi))) => hi,
+            (None, None) => unreachable!("LUT is non-empty"),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(
+            self.entries
+                .iter()
+                .map(|(b, s)| (b.to_string(), Json::Num(*s as f64)))
+                .collect(),
+        )
+    }
+
+    pub fn from_json(json: &Json) -> Result<Lut> {
+        let mut entries = BTreeMap::new();
+        for (k, v) in json.as_obj()? {
+            entries.insert(k.parse::<usize>()?, v.as_usize()?);
+        }
+        Lut::new(entries)
+    }
+}
+
+/// The speculation policy consulted for every serving round.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SpecPolicy {
+    /// Plain batched decoding (paper's baseline).
+    NoSpec,
+    /// Fixed speculation length regardless of batch size (prior schemes).
+    Fixed(usize),
+    /// The paper's adaptive scheme: s = LUT[batch].
+    Adaptive(Lut),
+}
+
+impl SpecPolicy {
+    /// Speculation length for a round serving `batch` live requests.
+    /// `max_s` caps at what the artifact matrix provides.
+    pub fn spec_len(&self, batch: usize, max_s: usize) -> usize {
+        let s = match self {
+            SpecPolicy::NoSpec => 0,
+            SpecPolicy::Fixed(s) => *s,
+            SpecPolicy::Adaptive(lut) => lut.lookup(batch),
+        };
+        s.min(max_s)
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            SpecPolicy::NoSpec => "no-spec".into(),
+            SpecPolicy::Fixed(s) => format!("fixed-{s}"),
+            SpecPolicy::Adaptive(_) => "adaptive".into(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lut(pairs: &[(usize, usize)]) -> Lut {
+        Lut::new(pairs.iter().copied().collect()).unwrap()
+    }
+
+    #[test]
+    fn exact_bucket_hits() {
+        let l = lut(&[(1, 5), (2, 4), (4, 3), (8, 2), (16, 1)]);
+        assert_eq!(l.lookup(1), 5);
+        assert_eq!(l.lookup(8), 2);
+        assert_eq!(l.lookup(16), 1);
+    }
+
+    #[test]
+    fn between_buckets_takes_smaller_s() {
+        // paper Sec. 4: "choose the smaller speculation length of the
+        // nearest two profiled batch sizes"
+        let l = lut(&[(4, 3), (8, 2)]);
+        assert_eq!(l.lookup(5), 2);
+        assert_eq!(l.lookup(7), 2);
+        let l2 = lut(&[(4, 2), (8, 6)]);
+        assert_eq!(l2.lookup(6), 2);
+    }
+
+    #[test]
+    fn clamps_outside_range() {
+        let l = lut(&[(2, 4), (8, 2)]);
+        assert_eq!(l.lookup(1), 4);
+        assert_eq!(l.lookup(32), 2);
+    }
+
+    #[test]
+    fn policy_spec_len_caps_at_available() {
+        let adaptive = SpecPolicy::Adaptive(lut(&[(1, 6)]));
+        assert_eq!(adaptive.spec_len(1, 4), 4);
+        assert_eq!(SpecPolicy::Fixed(3).spec_len(99, 8), 3);
+        assert_eq!(SpecPolicy::NoSpec.spec_len(4, 8), 0);
+    }
+
+    #[test]
+    fn lut_json_roundtrip() {
+        let l = lut(&[(1, 5), (16, 1)]);
+        let j = l.to_json();
+        assert_eq!(Lut::from_json(&j).unwrap(), l);
+    }
+
+    #[test]
+    fn empty_lut_rejected() {
+        assert!(Lut::new(BTreeMap::new()).is_err());
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(SpecPolicy::NoSpec.label(), "no-spec");
+        assert_eq!(SpecPolicy::Fixed(2).label(), "fixed-2");
+        assert_eq!(SpecPolicy::Adaptive(lut(&[(1, 1)])).label(), "adaptive");
+    }
+}

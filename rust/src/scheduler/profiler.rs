@@ -1,0 +1,161 @@
+//! Offline profiling stage of adaptive speculative decoding (Sec. 4).
+//!
+//! Measures per-token decode latency for every (batch bucket, speculation
+//! length) pair on a sample of the **profile** split, then builds the
+//! [`Lut`] mapping each bucket to its argmin speculation length.  The
+//! search space is deliberately tiny (the paper: "the optimal speculation
+//! length is usually small (less than ten)" and "we profile batch sizes
+//! which are powers of two"), so profiling takes minutes and is amortized
+//! over a long-running service.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::dataset::Prompt;
+use crate::engine::Engine;
+use crate::log_info;
+use crate::scheduler::{Lut, SpecPolicy};
+use crate::util::csv::{f, Csv};
+
+/// Profiling knobs.
+#[derive(Debug, Clone)]
+pub struct ProfilerConfig {
+    /// buckets to profile (defaults to the artifact matrix buckets)
+    pub buckets: Vec<usize>,
+    /// speculation lengths to try (0 = no speculation is always tried)
+    pub spec_lengths: Vec<usize>,
+    /// new tokens generated per measurement batch
+    pub tokens_per_run: usize,
+    /// measurement batches per (b, s) point
+    pub repeats: usize,
+}
+
+impl ProfilerConfig {
+    pub fn from_manifest(m: &crate::runtime::Manifest) -> ProfilerConfig {
+        ProfilerConfig {
+            buckets: m.batch_buckets.clone(),
+            spec_lengths: m.verify_lengths.clone(),
+            tokens_per_run: 24,
+            repeats: 2,
+        }
+    }
+}
+
+/// One measured grid point.
+#[derive(Debug, Clone)]
+pub struct GridPoint {
+    pub batch: usize,
+    pub s: usize,
+    /// seconds per generated token (decode only)
+    pub per_token_latency: f64,
+    /// mean accepted drafts per round (0 for s = 0)
+    pub mean_accepted: f64,
+}
+
+/// Full profiling result: the grid and the derived LUT.
+#[derive(Debug, Clone)]
+pub struct ProfileResult {
+    pub grid: Vec<GridPoint>,
+    pub lut: Lut,
+}
+
+impl ProfileResult {
+    /// Optimal s per bucket (the starred points of Fig. 1).
+    pub fn optimal(&self) -> &BTreeMap<usize, usize> {
+        self.lut.entries()
+    }
+
+    /// Grid as CSV (columns: batch, s, per_token_latency_s, mean_accepted).
+    pub fn to_csv(&self) -> Csv {
+        let mut csv = Csv::new(&["batch", "s", "per_token_latency_s", "mean_accepted"]);
+        for p in &self.grid {
+            csv.row(&[
+                p.batch.to_string(),
+                p.s.to_string(),
+                f(p.per_token_latency),
+                f(p.mean_accepted),
+            ]);
+        }
+        csv
+    }
+}
+
+/// Run the profiling grid and build the LUT.
+///
+/// `prompts` must come from the profile split (disjoint from evaluation,
+/// Sec. 5.3).  Latency is decode-only per-token wall time, matching the
+/// paper's Fig. 1 metric.
+pub fn profile(
+    engine: &mut Engine<'_>,
+    prompts: &[Prompt],
+    cfg: &ProfilerConfig,
+) -> Result<ProfileResult> {
+    if prompts.is_empty() {
+        bail!("profiler needs at least one prompt");
+    }
+    // precompile the grid: compilation must not contaminate measurements
+    let max_bucket = cfg.buckets.iter().copied().max().unwrap_or(1);
+    let max_s = cfg.spec_lengths.iter().copied().max().unwrap_or(0);
+    engine.runtime().warmup(max_bucket, max_s)?;
+    let manifest = &engine.runtime().manifest;
+    let mut grid = Vec::new();
+    let mut entries = BTreeMap::new();
+
+    for &b in &cfg.buckets {
+        if !manifest.batch_buckets.contains(&b) {
+            bail!("bucket {b} not in the artifact matrix {:?}", manifest.batch_buckets);
+        }
+        let max_s = manifest.max_spec_len(b);
+        let mut best: Option<(usize, f64)> = None;
+
+        for &s in &cfg.spec_lengths {
+            if s > max_s {
+                continue;
+            }
+            let policy = if s == 0 {
+                SpecPolicy::NoSpec
+            } else {
+                SpecPolicy::Fixed(s)
+            };
+            let mut lat_sum = 0.0;
+            let mut acc_sum = 0.0;
+            let mut prompt_cursor = 0usize;
+            for _ in 0..cfg.repeats {
+                // rotate through the profile prompts deterministically
+                let batch_prompts: Vec<Vec<i32>> = (0..b)
+                    .map(|i| prompts[(prompt_cursor + i) % prompts.len()].ids.clone())
+                    .collect();
+                prompt_cursor += b;
+                let out = engine.generate_batch(&batch_prompts, cfg.tokens_per_run, &policy)?;
+                lat_sum += out.stats.per_token_latency();
+                acc_sum += out.stats.mean_accepted();
+            }
+            let lat = lat_sum / cfg.repeats as f64;
+            let acc = acc_sum / cfg.repeats as f64;
+            grid.push(GridPoint {
+                batch: b,
+                s,
+                per_token_latency: lat,
+                mean_accepted: acc,
+            });
+            log_info!(
+                "profile b={b} s={s}: {:.3} ms/token (mean accepted {acc:.2})",
+                lat * 1e3
+            );
+            if best.map_or(true, |(_, l)| lat < l) {
+                best = Some((s, lat));
+            }
+        }
+        let (s_opt, lat) = best.ok_or_else(|| {
+            anyhow::anyhow!("no feasible speculation length for bucket {b}")
+        })?;
+        log_info!("profile b={b}: s_opt={s_opt} ({:.3} ms/token)", lat * 1e3);
+        entries.insert(b, s_opt);
+    }
+
+    Ok(ProfileResult {
+        grid,
+        lut: Lut::new(entries)?,
+    })
+}

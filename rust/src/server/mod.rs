@@ -1,0 +1,308 @@
+//! Message-queue serving loop: the paper's server/client setting (Sec. 5.3).
+//!
+//! "We launch a server process and wrap the LLM inference as a service
+//! that receives requests from a message queue and responds the generated
+//! tokens via another message queue.  If there is more than one request in
+//! the queue, they will be merged as one batched request (up to a maximal
+//! batch size of 16)."
+//!
+//! Here the message queues are `std::sync::mpsc` channels and the server
+//! is a dedicated worker thread that owns the [`Runtime`] + [`Engine`]
+//! (PJRT handles are not `Send`, so the runtime is constructed *inside*
+//! the worker).  Dynamic batching is exactly the paper's rule: drain
+//! whatever is queued, cap at `max_batch`.  While a batch is being served
+//! (seconds at 128 tokens/request), new arrivals accumulate in the queue —
+//! their queueing delay is part of the measured latency.
+
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::PolicySpec;
+use crate::engine::{Engine, EngineConfig};
+use crate::log_info;
+use crate::metrics::{LatencyRecorder, RequestRecord};
+use crate::runtime::Runtime;
+use crate::scheduler::profiler::{profile, ProfilerConfig};
+use crate::scheduler::{Lut, SpecPolicy};
+use crate::traffic::Trace;
+
+/// Server knobs.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// merge cap (paper: 16, limited by GPU memory)
+    pub max_batch: usize,
+    /// tokens generated per request (paper: 128)
+    pub max_new_tokens: usize,
+    pub engine: EngineConfig,
+    /// profiling sample size when the policy is adaptive without a LUT
+    pub profile_prompts: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            max_batch: 16,
+            max_new_tokens: 128,
+            engine: EngineConfig::default(),
+            profile_prompts: 32,
+        }
+    }
+}
+
+/// A request on the inbound message queue.
+#[derive(Debug, Clone)]
+pub struct ServerRequest {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    /// send time in seconds on the experiment clock (t_a)
+    pub sent_at: f64,
+}
+
+/// A response on the outbound message queue.
+#[derive(Debug, Clone)]
+pub struct ServerResponse {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub sent_at: f64,
+    pub started_at: f64,
+    pub finished_at: f64,
+    pub batch: usize,
+    pub spec_len: usize,
+}
+
+/// Inbound queue message.
+pub enum ServerMsg {
+    Request(ServerRequest),
+    Shutdown,
+}
+
+/// Handle to a running server thread.
+pub struct ServerHandle {
+    pub requests: Sender<ServerMsg>,
+    pub responses: Receiver<ServerResponse>,
+    join: JoinHandle<Result<()>>,
+    /// LUT resolved by the worker (present once ready when adaptive)
+    lut_rx: Receiver<Option<Lut>>,
+}
+
+impl ServerHandle {
+    /// Wait for the worker to finish startup (artifact load, warmup,
+    /// optional profiling).  Returns the LUT when the policy is adaptive.
+    pub fn wait_ready(&self, timeout: Duration) -> Result<Option<Lut>> {
+        self.lut_rx
+            .recv_timeout(timeout)
+            .map_err(|_| anyhow!("server did not become ready within {timeout:?}"))
+    }
+
+    pub fn shutdown(self) -> Result<()> {
+        let _ = self.requests.send(ServerMsg::Shutdown);
+        match self.join.join() {
+            Ok(r) => r,
+            Err(_) => bail!("server thread panicked"),
+        }
+    }
+}
+
+/// Spawn the serving worker thread.
+///
+/// `epoch` anchors the experiment clock: all timestamps are seconds since
+/// it, shared with the client.  When `policy` is adaptive and `lut` is
+/// `None`, the worker runs the offline profiling stage before accepting
+/// traffic (paper Sec. 4) using the dataset's *profile* split.
+pub fn spawn_server(
+    artifacts_dir: std::path::PathBuf,
+    cfg: ServerConfig,
+    policy: PolicySpec,
+    lut: Option<Lut>,
+    epoch: Instant,
+) -> ServerHandle {
+    let (req_tx, req_rx) = channel::<ServerMsg>();
+    let (resp_tx, resp_rx) = channel::<ServerResponse>();
+    let (lut_tx, lut_rx) = channel::<Option<Lut>>();
+
+    let join = std::thread::Builder::new()
+        .name("specbatch-server".into())
+        .spawn(move || {
+            worker(
+                artifacts_dir,
+                cfg,
+                policy,
+                lut,
+                epoch,
+                req_rx,
+                resp_tx,
+                lut_tx,
+            )
+        })
+        .expect("spawning server thread");
+
+    ServerHandle {
+        requests: req_tx,
+        responses: resp_rx,
+        join,
+        lut_rx,
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker(
+    artifacts_dir: std::path::PathBuf,
+    cfg: ServerConfig,
+    policy_spec: PolicySpec,
+    lut: Option<Lut>,
+    epoch: Instant,
+    req_rx: Receiver<ServerMsg>,
+    resp_tx: Sender<ServerResponse>,
+    lut_tx: Sender<Option<Lut>>,
+) -> Result<()> {
+    let rt = Runtime::load(&artifacts_dir)?;
+    let mut engine = Engine::new(&rt, cfg.engine.clone())?;
+
+    // resolve the policy, profiling if necessary
+    let (policy, lut_used) = match policy_spec {
+        PolicySpec::None => (SpecPolicy::NoSpec, None),
+        PolicySpec::Fixed(s) => (SpecPolicy::Fixed(s), None),
+        PolicySpec::Adaptive => {
+            let lut = match lut {
+                Some(l) => l,
+                None => {
+                    let dataset = rt.dataset()?;
+                    let mut prng = crate::util::prng::Pcg64::new(0xADA);
+                    let prompts = dataset.sample_profile(&mut prng, cfg.profile_prompts);
+                    let mut pcfg = ProfilerConfig::from_manifest(&rt.manifest);
+                    pcfg.buckets.retain(|&b| b <= cfg.max_batch);
+                    log_info!("server: profiling for the adaptive LUT…");
+                    profile(&mut engine, &prompts, &pcfg)?.lut
+                }
+            };
+            log_info!("server: adaptive LUT = {}", lut.to_json().compact());
+            (SpecPolicy::Adaptive(lut.clone()), Some(lut))
+        }
+    };
+    // precompile before going live: no compilation on the request path
+    rt.warmup(cfg.max_batch, rt.manifest.verify_lengths.iter().copied().max().unwrap_or(0))?;
+    lut_tx
+        .send(lut_used)
+        .map_err(|_| anyhow!("server handle dropped before ready"))?;
+
+    let mut pending: Vec<ServerRequest> = Vec::new();
+    let mut shutdown = false;
+    while !shutdown {
+        // block for the first request, then drain whatever queued
+        if pending.is_empty() {
+            match req_rx.recv_timeout(Duration::from_millis(200)) {
+                Ok(ServerMsg::Request(r)) => pending.push(r),
+                Ok(ServerMsg::Shutdown) => break,
+                Err(RecvTimeoutError::Timeout) => continue,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        while pending.len() < cfg.max_batch {
+            match req_rx.try_recv() {
+                Ok(ServerMsg::Request(r)) => pending.push(r),
+                Ok(ServerMsg::Shutdown) => {
+                    shutdown = true;
+                    break;
+                }
+                Err(_) => break,
+            }
+        }
+
+        let batch: Vec<ServerRequest> =
+            pending.drain(..pending.len().min(cfg.max_batch)).collect();
+        if batch.is_empty() {
+            continue;
+        }
+        let started_at = epoch.elapsed().as_secs_f64();
+        let prompts: Vec<Vec<i32>> = batch.iter().map(|r| r.prompt.clone()).collect();
+        let out = engine.generate_batch(&prompts, cfg.max_new_tokens, &policy)?;
+        let finished_at = epoch.elapsed().as_secs_f64();
+        let spec_len = out.stats.spec_lens.first().copied().unwrap_or(0);
+        for (req, tokens) in batch.into_iter().zip(out.tokens) {
+            let resp = ServerResponse {
+                id: req.id,
+                tokens,
+                sent_at: req.sent_at,
+                started_at,
+                finished_at,
+                batch: prompts.len(),
+                spec_len,
+            };
+            if resp_tx.send(resp).is_err() {
+                // harness went away; stop serving
+                return Ok(());
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Replay a trace against a server in real time (the client process).
+///
+/// Sleeps until each item's `send_at`, stamps it on the experiment clock,
+/// and sends it.  Returns the number of requests sent.
+pub fn run_client(trace: &Trace, requests: &Sender<ServerMsg>, epoch: Instant) -> Result<usize> {
+    for item in &trace.items {
+        let now = epoch.elapsed().as_secs_f64();
+        if item.send_at > now {
+            std::thread::sleep(Duration::from_secs_f64(item.send_at - now));
+        }
+        let req = ServerRequest {
+            id: item.id,
+            prompt: item.prompt.ids.clone(),
+            sent_at: epoch.elapsed().as_secs_f64(),
+        };
+        requests
+            .send(ServerMsg::Request(req))
+            .map_err(|_| anyhow!("server hung up mid-trace"))?;
+    }
+    Ok(trace.items.len())
+}
+
+/// Run one full client/server experiment: spawn server, wait until ready,
+/// replay the trace, collect all responses.  Returns the latency records
+/// (and the LUT, when adaptive).
+pub fn run_experiment(
+    artifacts_dir: std::path::PathBuf,
+    cfg: ServerConfig,
+    policy: PolicySpec,
+    lut: Option<Lut>,
+    trace: &Trace,
+) -> Result<(LatencyRecorder, Option<Lut>)> {
+    let epoch = Instant::now();
+    let server = spawn_server(artifacts_dir, cfg, policy, lut, epoch);
+    let lut_used = server.wait_ready(Duration::from_secs(600))?;
+
+    let n = trace.len();
+    let tx = server.requests.clone();
+    let trace_cloned = trace.clone();
+    let client = std::thread::Builder::new()
+        .name("specbatch-client".into())
+        .spawn(move || run_client(&trace_cloned, &tx, epoch))
+        .expect("spawning client thread");
+
+    let mut recorder = LatencyRecorder::new();
+    while recorder.len() < n {
+        let resp = server
+            .responses
+            .recv_timeout(Duration::from_secs(600))
+            .map_err(|_| anyhow!("timed out waiting for responses ({}/{n})", recorder.len()))?;
+        recorder.push(RequestRecord {
+            id: resp.id,
+            sent_at: resp.sent_at,
+            started_at: resp.started_at,
+            finished_at: resp.finished_at,
+            tokens: resp.tokens.len(),
+            batch: resp.batch,
+            spec_len: resp.spec_len,
+        });
+    }
+    client
+        .join()
+        .map_err(|_| anyhow!("client thread panicked"))??;
+    server.shutdown()?;
+    Ok((recorder, lut_used))
+}

@@ -1,0 +1,139 @@
+//! Stochastic acceptance process for the simulator.
+//!
+//! Samples the number of accepted drafts per speculative round so that the
+//! expectation `E[min(L, s)]` matches a target `l(s)` curve.  Two flavours:
+//!
+//! * [`AcceptanceProcess::Geometric`] — constant per-token agreement `q`
+//!   (what a stationary draft/target pair produces; our trained tiny pair
+//!   measures q ≈ 0.7);
+//! * [`AcceptanceProcess::PowerLaw`] — matches the paper's fitted
+//!   `l(s) = c·s^γ` exactly via the survival decomposition of Eq. 6:
+//!   `P(L ≥ j) = l(j) − l(j−1)`, sampled sequentially through the
+//!   conditional probabilities `P(L ≥ j | L ≥ j−1)`.
+
+use crate::util::prng::Pcg64;
+
+#[derive(Debug, Clone)]
+pub enum AcceptanceProcess {
+    /// Each draft token independently correct with probability q (given
+    /// the prefix was correct).
+    Geometric { q: f64 },
+    /// Matches l(s) = c·s^γ (c ≤ 1 required for a valid process at j=1).
+    PowerLaw { c: f64, gamma: f64 },
+}
+
+impl AcceptanceProcess {
+    /// The paper's measured curve (Fig. 2).
+    pub fn paper() -> AcceptanceProcess {
+        AcceptanceProcess::PowerLaw {
+            c: 0.9,
+            gamma: 0.548,
+        }
+    }
+
+    /// Survival probability P(L >= j), j >= 1.
+    pub fn survival(&self, j: usize) -> f64 {
+        match *self {
+            AcceptanceProcess::Geometric { q } => q.powi(j as i32),
+            AcceptanceProcess::PowerLaw { c, gamma } => {
+                // P(L >= j) = l(j) - l(j-1); clamp into [0, 1]
+                let l = |s: f64| c * s.powf(gamma);
+                (l(j as f64) - l(j as f64 - 1.0)).clamp(0.0, 1.0)
+            }
+        }
+    }
+
+    /// Expected accepted count at speculation length s: E[min(L, s)]
+    /// = Σ_{j=1..s} P(L ≥ j) (Eq. 6).
+    pub fn expected_accepted(&self, s: usize) -> f64 {
+        (1..=s).map(|j| self.survival(j)).sum()
+    }
+
+    /// Sample one round's accepted count (0..=s).
+    pub fn sample(&self, s: usize, rng: &mut Pcg64) -> usize {
+        let mut accepted = 0;
+        while accepted < s {
+            let j = accepted + 1;
+            let cond = {
+                let s_prev = if accepted == 0 {
+                    1.0
+                } else {
+                    self.survival(accepted)
+                };
+                if s_prev <= 0.0 {
+                    0.0
+                } else {
+                    (self.survival(j) / s_prev).clamp(0.0, 1.0)
+                }
+            };
+            if rng.next_f64() < cond {
+                accepted += 1;
+            } else {
+                break;
+            }
+        }
+        accepted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn empirical_l(proc_: &AcceptanceProcess, s: usize, n: usize) -> f64 {
+        let mut rng = Pcg64::new(99);
+        (0..n).map(|_| proc_.sample(s, &mut rng)).sum::<usize>() as f64 / n as f64
+    }
+
+    #[test]
+    fn geometric_expectation_matches_formula() {
+        let p = AcceptanceProcess::Geometric { q: 0.7 };
+        // E[min(L,3)] = .7 + .49 + .343
+        assert!((p.expected_accepted(3) - 1.533).abs() < 1e-9);
+        let emp = empirical_l(&p, 3, 200_000);
+        assert!((emp - 1.533).abs() < 0.01, "empirical {emp}");
+    }
+
+    #[test]
+    fn powerlaw_matches_paper_curve() {
+        let p = AcceptanceProcess::paper();
+        for s in [1usize, 2, 4, 8] {
+            let target = 0.9 * (s as f64).powf(0.548);
+            let analytic = p.expected_accepted(s);
+            assert!(
+                (analytic - target).abs() < 1e-9,
+                "analytic l({s}) = {analytic} != {target}"
+            );
+            let emp = empirical_l(&p, s, 200_000);
+            assert!(
+                (emp - target).abs() < 0.02,
+                "empirical l({s}) = {emp} != {target}"
+            );
+        }
+    }
+
+    #[test]
+    fn survival_is_monotone_decreasing() {
+        for p in [
+            AcceptanceProcess::paper(),
+            AcceptanceProcess::Geometric { q: 0.8 },
+        ] {
+            let mut prev = 1.0;
+            for j in 1..=12 {
+                let s = p.survival(j);
+                assert!(s <= prev + 1e-12, "survival up at j={j}");
+                assert!((0.0..=1.0).contains(&s));
+                prev = s;
+            }
+        }
+    }
+
+    #[test]
+    fn sample_is_bounded() {
+        let p = AcceptanceProcess::paper();
+        let mut rng = Pcg64::new(1);
+        for _ in 0..1000 {
+            assert!(p.sample(5, &mut rng) <= 5);
+        }
+    }
+}

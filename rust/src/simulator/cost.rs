@@ -1,0 +1,193 @@
+//! Roofline step-cost model: `t_L(b, s)` and `t_S(b, 1)` for paper-scale
+//! models on the [`GpuProfile`]s.
+//!
+//! One decode/verify forward over `T` tokens × batch `b`:
+//!
+//! * memory time — the whole weight matrix streams from HBM once per step
+//!   (the paper Sec. 1: "the sequential execution paradigm requires GPUs
+//!   to load the huge weight matrices from off-chip memory in each
+//!   iteration"), plus the KV cache read;
+//! * compute time — `2·params` FLOPs per token over `b·T` tokens;
+//! * `t = max(mem, compute) + launch_overhead`.
+//!
+//! The max() is the roofline; its knee at `b·T ≈ crossover_tokens`
+//! produces exactly the flat-then-linear `t_L(b, s)` curves of Fig. 3.
+
+use super::hw::GpuProfile;
+
+/// A paper-scale model described by its bulk parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ModelProfile {
+    pub name: &'static str,
+    /// total parameters
+    pub params: f64,
+    /// bytes per parameter (2 = fp16 serving)
+    pub bytes_per_param: f64,
+    /// hidden width & layers, for the KV-cache traffic estimate
+    pub d_model: f64,
+    pub n_layers: f64,
+}
+
+impl ModelProfile {
+    pub const OPT_125M: ModelProfile = ModelProfile {
+        name: "opt-125m",
+        params: 125.0e6,
+        bytes_per_param: 2.0,
+        d_model: 768.0,
+        n_layers: 12.0,
+    };
+    pub const OPT_1_3B: ModelProfile = ModelProfile {
+        name: "opt-1.3b",
+        params: 1.3e9,
+        bytes_per_param: 2.0,
+        d_model: 2048.0,
+        n_layers: 24.0,
+    };
+    pub const OPT_6_7B: ModelProfile = ModelProfile {
+        name: "opt-6.7b",
+        params: 6.7e9,
+        bytes_per_param: 2.0,
+        d_model: 4096.0,
+        n_layers: 32.0,
+    };
+    pub const LLAMA_7B: ModelProfile = ModelProfile {
+        name: "llama-7b",
+        params: 6.74e9,
+        bytes_per_param: 2.0,
+        d_model: 4096.0,
+        n_layers: 32.0,
+    };
+
+    pub fn by_name(name: &str) -> Option<ModelProfile> {
+        match name {
+            "opt-125m" => Some(Self::OPT_125M),
+            "opt-1.3b" => Some(Self::OPT_1_3B),
+            "opt-6.7b" => Some(Self::OPT_6_7B),
+            "llama-7b" => Some(Self::LLAMA_7B),
+            _ => None,
+        }
+    }
+
+    pub fn weight_bytes(&self) -> f64 {
+        self.params * self.bytes_per_param
+    }
+
+    /// FLOPs to process one token (forward only).
+    pub fn flops_per_token(&self) -> f64 {
+        2.0 * self.params
+    }
+
+    /// KV bytes touched per token position per row.
+    pub fn kv_bytes_per_pos(&self) -> f64 {
+        2.0 * self.n_layers * self.d_model * self.bytes_per_param
+    }
+}
+
+/// Cost model binding a model to a GPU.
+#[derive(Debug, Clone, Copy)]
+pub struct CostModel {
+    pub model: ModelProfile,
+    pub gpu: GpuProfile,
+}
+
+impl CostModel {
+    pub fn new(model: ModelProfile, gpu: GpuProfile) -> CostModel {
+        CostModel { model, gpu }
+    }
+
+    /// One forward pass over `tokens_per_row` query tokens with `batch`
+    /// rows and `ctx` context length (KV read traffic).
+    pub fn forward_time(&self, batch: usize, tokens_per_row: usize, ctx: usize) -> f64 {
+        let tokens = (batch * tokens_per_row) as f64;
+        let mem = (self.model.weight_bytes()
+            + batch as f64 * ctx as f64 * self.model.kv_bytes_per_pos())
+            / self.gpu.bw();
+        let compute = tokens * self.model.flops_per_token() / self.gpu.flops();
+        mem.max(compute) + self.gpu.launch_overhead
+    }
+
+    /// `t_L(b, s)`: one verify step (s draft tokens + 1).
+    pub fn t_verify(&self, batch: usize, s: usize, ctx: usize) -> f64 {
+        self.forward_time(batch, s + 1, ctx)
+    }
+
+    /// `t_S(b, 1)`: one draft token (the SSM runs sequentially).
+    pub fn t_draft(&self, batch: usize, ctx: usize) -> f64 {
+        self.forward_time(batch, 1, ctx)
+    }
+
+    /// Prefill over a prompt of `plen` tokens.
+    pub fn t_prefill(&self, batch: usize, plen: usize) -> f64 {
+        self.forward_time(batch, plen, 0)
+    }
+
+    /// Fitted (α_b, β) of the linearized `t_L(b, s) ≈ α_b·s + β` over
+    /// s ∈ [0, s_max] (what the analytic model consumes).
+    pub fn linearize(&self, batch: usize, s_max: usize, ctx: usize) -> (f64, f64) {
+        let xs: Vec<f64> = (0..=s_max).map(|s| s as f64).collect();
+        let ys: Vec<f64> = (0..=s_max)
+            .map(|s| self.t_verify(batch, s, ctx))
+            .collect();
+        let (a, b, _) = crate::util::stats::linear_fit(&xs, &ys);
+        (a, b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m67_3090() -> CostModel {
+        CostModel::new(ModelProfile::OPT_6_7B, GpuProfile::RTX3090)
+    }
+
+    #[test]
+    fn small_batch_is_memory_bound_and_flat() {
+        let cm = m67_3090();
+        // at b=1 the verify cost barely moves from s=0 to s=7 (Fig. 3 top)
+        let t0 = cm.t_verify(1, 0, 256);
+        let t7 = cm.t_verify(1, 7, 256);
+        assert!(
+            (t7 - t0) / t0 < 0.02,
+            "b=1 should be flat: {t0} -> {t7}"
+        );
+    }
+
+    #[test]
+    fn large_batch_goes_linear_in_s() {
+        let cm = m67_3090();
+        // at b=32 the cost grows clearly with s (compute-bound regime)
+        let t0 = cm.t_verify(32, 0, 256);
+        let t7 = cm.t_verify(32, 7, 256);
+        assert!(t7 > 1.5 * t0, "b=32 should be compute-bound: {t0} -> {t7}");
+    }
+
+    #[test]
+    fn alpha_increases_with_batch() {
+        // the analytical model's premise: α_b increasing in b
+        let cm = m67_3090();
+        let mut last = -1.0;
+        for b in [1usize, 2, 4, 8, 16, 32] {
+            let (alpha, beta) = cm.linearize(b, 8, 256);
+            assert!(alpha >= last, "alpha not monotone at b={b}");
+            assert!(beta > 0.0);
+            last = alpha;
+        }
+    }
+
+    #[test]
+    fn per_token_decode_latency_is_plausible() {
+        // OPT-6.7B fp16 on 3090 ≈ 13.4 GB / ~580 GB/s ≈ 23 ms + overhead;
+        // the paper's Fig. 1b no-spec b=1 sits at tens of ms
+        let cm = m67_3090();
+        let t = cm.t_verify(1, 0, 128);
+        assert!((0.015..0.06).contains(&t), "t = {t}s");
+    }
+
+    #[test]
+    fn ssm_is_much_cheaper_than_llm() {
+        let llm = m67_3090();
+        let ssm = CostModel::new(ModelProfile::OPT_125M, GpuProfile::RTX3090);
+        assert!(ssm.t_draft(1, 128) < 0.1 * llm.t_verify(1, 0, 128));
+    }
+}

@@ -1,0 +1,89 @@
+//! Calibrated GPU simulator: paper-scale experiments without the paper's
+//! testbed (DESIGN.md §Substitutions).
+//!
+//! * [`hw`]         — RTX 3090 / RTX 4090 / A100 roofline profiles
+//! * [`cost`]       — `t_L(b, s)` / `t_S(b, 1)` step-cost model for
+//!   OPT-125M/1.3B/6.7B and Llama-7B
+//! * [`acceptance`] — stochastic draft-acceptance process matching a
+//!   target `l(s)` curve
+//! * [`des`]        — virtual-time single-server queue simulation of the
+//!   serving loop (Fig. 5/6 at paper scale)
+//!
+//! The simulator shares the *policy* code ([`crate::scheduler`]) and the
+//! *metrics* code ([`crate::metrics`]) with the real engine, so adaptive
+//! vs fixed comparisons exercise the same decision logic in both worlds.
+
+pub mod acceptance;
+pub mod cost;
+pub mod des;
+pub mod hw;
+
+pub use acceptance::AcceptanceProcess;
+pub use cost::{CostModel, ModelProfile};
+pub use des::{batch_service_time, per_token_latency, simulate_trace, SimConfig};
+pub use hw::GpuProfile;
+
+use std::collections::BTreeMap;
+
+use crate::scheduler::{Lut, SpecPolicy};
+use crate::util::prng::Pcg64;
+
+/// Build an adaptive LUT for the simulator by grid search over the cost
+/// model (the simulator-world analogue of `scheduler::profiler::profile`).
+pub fn simulated_lut(
+    cfg: &SimConfig,
+    buckets: &[usize],
+    s_max: usize,
+    ctx: usize,
+) -> Lut {
+    let mut rng = Pcg64::with_stream(cfg.seed, 0x107);
+    let mut entries = BTreeMap::new();
+    for &b in buckets {
+        let mut best = (0usize, f64::INFINITY);
+        for s in 0..=s_max {
+            let lat = per_token_latency(cfg, b, s, ctx, 600, &mut rng);
+            if lat < best.1 {
+                best = (s, lat);
+            }
+        }
+        entries.insert(b, best.0);
+    }
+    Lut::new(entries).expect("non-empty buckets")
+}
+
+/// Convenience: the four comparison points of the paper's Sec. 5.3.
+pub fn comparison_policies(lut: Lut) -> Vec<(String, SpecPolicy)> {
+    vec![
+        ("no-spec".into(), SpecPolicy::NoSpec),
+        ("fixed-2".into(), SpecPolicy::Fixed(2)),
+        ("fixed-4".into(), SpecPolicy::Fixed(4)),
+        ("adaptive".into(), SpecPolicy::Adaptive(lut)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simulated_lut_is_monotone_non_increasing() {
+        // the paper's headline: s_opt shrinks as batch grows
+        let cfg = SimConfig::paper_default(
+            CostModel::new(ModelProfile::OPT_6_7B, GpuProfile::RTX3090),
+            CostModel::new(ModelProfile::OPT_125M, GpuProfile::RTX3090),
+        );
+        let lut = simulated_lut(&cfg, &[1, 2, 4, 8, 16, 32], 8, 160);
+        let vals: Vec<usize> = [1usize, 2, 4, 8, 16, 32]
+            .iter()
+            .map(|&b| lut.lookup(b))
+            .collect();
+        for w in vals.windows(2) {
+            assert!(w[1] <= w[0], "s_opt increased with batch: {vals:?}");
+        }
+        assert!(vals[0] >= 3, "b=1 should want long speculation: {vals:?}");
+        assert!(
+            *vals.last().unwrap() <= 2,
+            "b=32 should want short speculation: {vals:?}"
+        );
+    }
+}

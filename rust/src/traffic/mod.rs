@@ -1,0 +1,252 @@
+//! Traffic generation: the paper's client model (Sec. 5.3).
+//!
+//! Inter-arrival times are Gamma-distributed with a target mean interval
+//! and coefficient of variation (CV).  Two patterns:
+//!
+//! * [`TrafficPattern::Stationary`] — fixed (interval, CV), the Fig. 5
+//!   grid sweeps interval ∈ {0.1..0.8}s and CV ∈ {0.5, 1, 2, 5};
+//! * [`TrafficPattern::Alternating`] — Fig. 6: switch between *intense*
+//!   (0.2 s) and *sparse* (1.0 s) mean intervals every 50 s, CV = 1.
+//!
+//! A generated [`Trace`] is a deterministic list of (send time, prompt)
+//! pairs, so every comparison point (no-spec / fixed-2 / fixed-4 /
+//! adaptive) replays the *identical* request sequence — the paper: "For
+//! each setting, we generate only one sequence of requests, which is used
+//! to evaluate all comparison points."
+
+use crate::dataset::Prompt;
+use crate::util::prng::{GammaIntervals, Pcg64};
+
+/// Shape of the arrival process.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TrafficPattern {
+    /// Gamma arrivals with fixed mean interval (s) and CV.
+    Stationary { interval: f64, cv: f64 },
+    /// Alternate intense/sparse mean intervals every `period` seconds
+    /// (Fig. 6: intense 0.2 s, sparse 1.0 s, period 50 s, cv 1.0).
+    Alternating {
+        intense_interval: f64,
+        sparse_interval: f64,
+        period: f64,
+        cv: f64,
+    },
+}
+
+impl TrafficPattern {
+    pub fn fig6() -> TrafficPattern {
+        TrafficPattern::Alternating {
+            intense_interval: 0.2,
+            sparse_interval: 1.0,
+            period: 50.0,
+            cv: 1.0,
+        }
+    }
+
+    /// Mean interval in effect at absolute time `t`.
+    pub fn interval_at(&self, t: f64) -> f64 {
+        match *self {
+            TrafficPattern::Stationary { interval, .. } => interval,
+            TrafficPattern::Alternating {
+                intense_interval,
+                sparse_interval,
+                period,
+                ..
+            } => {
+                let phase = (t / period).floor() as i64;
+                if phase % 2 == 0 {
+                    intense_interval
+                } else {
+                    sparse_interval
+                }
+            }
+        }
+    }
+
+    pub fn cv(&self) -> f64 {
+        match *self {
+            TrafficPattern::Stationary { cv, .. } => cv,
+            TrafficPattern::Alternating { cv, .. } => cv,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match *self {
+            TrafficPattern::Stationary { interval, cv } => {
+                format!("stationary(interval={interval}s,cv={cv})")
+            }
+            TrafficPattern::Alternating {
+                intense_interval,
+                sparse_interval,
+                period,
+                cv,
+            } => format!(
+                "alternating({intense_interval}s/{sparse_interval}s,period={period}s,cv={cv})"
+            ),
+        }
+    }
+}
+
+/// One scheduled request.
+#[derive(Debug, Clone)]
+pub struct TraceItem {
+    pub id: u64,
+    /// absolute send time in seconds from trace start
+    pub send_at: f64,
+    pub prompt: Prompt,
+}
+
+/// A deterministic request schedule.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub items: Vec<TraceItem>,
+}
+
+impl Trace {
+    /// Generate `n` requests under `pattern`, sampling prompts from `pool`.
+    ///
+    /// Interval samples are scaled to the mean in effect at the *current*
+    /// simulated time, so alternating patterns switch correctly even when
+    /// an interval straddles the phase boundary.
+    pub fn generate(
+        pattern: &TrafficPattern,
+        pool: &[Prompt],
+        n: usize,
+        seed: u64,
+    ) -> Trace {
+        assert!(!pool.is_empty(), "prompt pool must be non-empty");
+        let mut rng = Pcg64::with_stream(seed, 0x7261_6666_6963); // "raffic"
+        let cv = pattern.cv();
+        // unit-mean gamma; scaled by the phase's mean interval
+        let unit = GammaIntervals::new(1.0, cv);
+        let mut t = 0.0;
+        let mut items = Vec::with_capacity(n);
+        for id in 0..n as u64 {
+            let gap = unit.sample(&mut rng) * pattern.interval_at(t);
+            t += gap;
+            let prompt = pool[rng.next_below(pool.len())].clone();
+            items.push(TraceItem {
+                id,
+                send_at: t,
+                prompt,
+            });
+        }
+        Trace { items }
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Total span of the schedule in seconds.
+    pub fn span(&self) -> f64 {
+        self.items.last().map(|i| i.send_at).unwrap_or(0.0)
+    }
+
+    /// Scale all send times by `factor` (used to time-compress paper-scale
+    /// traces for the real-server experiments).
+    pub fn time_scaled(&self, factor: f64) -> Trace {
+        Trace {
+            items: self
+                .items
+                .iter()
+                .map(|i| TraceItem {
+                    id: i.id,
+                    send_at: i.send_at * factor,
+                    prompt: i.prompt.clone(),
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool() -> Vec<Prompt> {
+        vec![
+            Prompt {
+                ids: vec![1, 5],
+                text: "a".into(),
+            },
+            Prompt {
+                ids: vec![1, 6, 7],
+                text: "b".into(),
+            },
+        ]
+    }
+
+    #[test]
+    fn stationary_mean_interval_is_respected() {
+        let p = TrafficPattern::Stationary {
+            interval: 0.4,
+            cv: 1.0,
+        };
+        let t = Trace::generate(&p, &pool(), 4000, 7);
+        let mean_gap = t.span() / (t.len() as f64);
+        assert!(
+            (mean_gap - 0.4).abs() < 0.03,
+            "mean gap {mean_gap} != 0.4"
+        );
+        // monotone non-decreasing send times
+        for w in t.items.windows(2) {
+            assert!(w[1].send_at >= w[0].send_at);
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let p = TrafficPattern::Stationary {
+            interval: 0.2,
+            cv: 2.0,
+        };
+        let a = Trace::generate(&p, &pool(), 100, 42);
+        let b = Trace::generate(&p, &pool(), 100, 42);
+        let c = Trace::generate(&p, &pool(), 100, 43);
+        let times =
+            |t: &Trace| t.items.iter().map(|i| i.send_at).collect::<Vec<_>>();
+        assert_eq!(times(&a), times(&b));
+        assert_ne!(times(&a), times(&c));
+    }
+
+    #[test]
+    fn alternating_switches_phase() {
+        let p = TrafficPattern::fig6();
+        assert_eq!(p.interval_at(10.0), 0.2);
+        assert_eq!(p.interval_at(60.0), 1.0);
+        assert_eq!(p.interval_at(110.0), 0.2);
+        // arrivals in intense phases come much faster: count requests in
+        // the first (intense) vs second (sparse) 50 s window
+        let t = Trace::generate(&p, &pool(), 2000, 3);
+        let intense = t
+            .items
+            .iter()
+            .filter(|i| i.send_at < 50.0)
+            .count();
+        let sparse = t
+            .items
+            .iter()
+            .filter(|i| (50.0..100.0).contains(&i.send_at))
+            .count();
+        assert!(
+            intense > 3 * sparse,
+            "intense {intense} not >> sparse {sparse}"
+        );
+    }
+
+    #[test]
+    fn time_scaling() {
+        let p = TrafficPattern::Stationary {
+            interval: 1.0,
+            cv: 0.5,
+        };
+        let t = Trace::generate(&p, &pool(), 10, 1);
+        let half = t.time_scaled(0.5);
+        assert!((half.span() - t.span() * 0.5).abs() < 1e-9);
+        assert_eq!(half.len(), t.len());
+    }
+}

@@ -1,0 +1,270 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args,
+//! with typed getters, defaults, and a generated usage string.  Each
+//! subcommand in `main.rs` declares an [`ArgSpec`] so `--help` output stays
+//! accurate.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Declarative description of one option (for usage text + validation).
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// Specification of a (sub)command's arguments.
+#[derive(Debug, Clone, Default)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+impl ArgSpec {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        ArgSpec {
+            name,
+            about,
+            opts: Vec::new(),
+        }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: Some(default),
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: None,
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\noptions:\n", self.name, self.about);
+        for o in &self.opts {
+            let tail = match (&o.default, o.is_flag) {
+                (_, true) => String::new(),
+                (Some(d), _) => format!(" (default: {d})"),
+                (None, _) => " (required)".to_string(),
+            };
+            s.push_str(&format!("  --{:<22} {}{}\n", o.name, o.help, tail));
+        }
+        s
+    }
+
+    /// Parse argv against this spec.
+    pub fn parse(&self, argv: &[String]) -> Result<Args> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut flags: Vec<String> = Vec::new();
+        let mut positional: Vec<String> = Vec::new();
+
+        let known_flag = |n: &str| {
+            self.opts.iter().any(|o| o.name == n && o.is_flag)
+        };
+        let known_opt = |n: &str| {
+            self.opts.iter().any(|o| o.name == n && !o.is_flag)
+        };
+
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                bail!("{}", self.usage());
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    if !known_opt(k) {
+                        bail!("unknown option --{k}\n\n{}", self.usage());
+                    }
+                    values.insert(k.to_string(), v.to_string());
+                } else if known_flag(body) {
+                    flags.push(body.to_string());
+                } else if known_opt(body) {
+                    i += 1;
+                    let v = argv
+                        .get(i)
+                        .ok_or_else(|| anyhow!("--{body} expects a value"))?;
+                    values.insert(body.to_string(), v.clone());
+                } else {
+                    bail!("unknown option --{body}\n\n{}", self.usage());
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+
+        // defaults + required check
+        for o in &self.opts {
+            if o.is_flag {
+                continue;
+            }
+            if !values.contains_key(o.name) {
+                match o.default {
+                    Some(d) => {
+                        values.insert(o.name.to_string(), d.to_string());
+                    }
+                    None => bail!("missing required --{}\n\n{}", o.name, self.usage()),
+                }
+            }
+        }
+        Ok(Args {
+            values,
+            flags,
+            positional,
+        })
+    }
+}
+
+/// Parsed arguments with typed getters.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Result<&str> {
+        self.values
+            .get(key)
+            .map(|s| s.as_str())
+            .ok_or_else(|| anyhow!("missing --{key}"))
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<usize> {
+        self.get(key)?
+            .parse()
+            .with_context(|| format!("--{key} must be an unsigned integer"))
+    }
+
+    pub fn get_u64(&self, key: &str) -> Result<u64> {
+        self.get(key)?
+            .parse()
+            .with_context(|| format!("--{key} must be an unsigned integer"))
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<f64> {
+        self.get(key)?
+            .parse()
+            .with_context(|| format!("--{key} must be a number"))
+    }
+
+    /// Comma-separated list of unsigned integers, e.g. `--buckets 1,2,4`.
+    pub fn get_usize_list(&self, key: &str) -> Result<Vec<usize>> {
+        self.get(key)?
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.trim()
+                    .parse()
+                    .with_context(|| format!("--{key}: bad integer {s:?}"))
+            })
+            .collect()
+    }
+
+    /// Comma-separated list of floats.
+    pub fn get_f64_list(&self, key: &str) -> Result<Vec<f64>> {
+        self.get(key)?
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.trim()
+                    .parse()
+                    .with_context(|| format!("--{key}: bad number {s:?}"))
+            })
+            .collect()
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ArgSpec {
+        ArgSpec::new("test", "a test command")
+            .opt("batch", "4", "batch size")
+            .opt("rate", "0.5", "arrival rate")
+            .req("name", "a required value")
+            .flag("verbose", "log more")
+    }
+
+    fn argv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_kv_and_flags() {
+        let a = spec()
+            .parse(&argv(&["--batch", "8", "--name=run1", "--verbose", "pos"]))
+            .unwrap();
+        assert_eq!(a.get_usize("batch").unwrap(), 8);
+        assert_eq!(a.get("name").unwrap(), "run1");
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["pos"]);
+    }
+
+    #[test]
+    fn applies_defaults() {
+        let a = spec().parse(&argv(&["--name", "x"])).unwrap();
+        assert_eq!(a.get_usize("batch").unwrap(), 4);
+        assert!((a.get_f64("rate").unwrap() - 0.5).abs() < 1e-12);
+        assert!(!a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn rejects_unknown_and_missing() {
+        assert!(spec().parse(&argv(&["--name", "x", "--bogus", "1"])).is_err());
+        assert!(spec().parse(&argv(&[])).is_err()); // missing --name
+        assert!(spec().parse(&argv(&["--name"])).is_err()); // dangling value
+    }
+
+    #[test]
+    fn parses_lists() {
+        let a = spec()
+            .parse(&argv(&["--name", "x", "--batch=1"]))
+            .unwrap();
+        assert_eq!(a.get_usize_list("batch").unwrap(), vec![1]);
+        let spec2 = ArgSpec::new("t", "t").opt("cvs", "0.5,1,2,5", "cv list");
+        let b = spec2.parse(&argv(&[])).unwrap();
+        assert_eq!(b.get_f64_list("cvs").unwrap(), vec![0.5, 1.0, 2.0, 5.0]);
+    }
+
+    #[test]
+    fn help_is_an_error_with_usage() {
+        let err = spec().parse(&argv(&["--help"])).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("--batch"));
+        assert!(msg.contains("required"));
+    }
+}

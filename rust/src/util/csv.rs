@@ -1,0 +1,136 @@
+//! CSV writer for bench/experiment outputs under `results/`.
+//!
+//! Every figure-reproduction bench emits one CSV whose columns mirror the
+//! paper's axes, so plots can be regenerated with any tool.  Quoting
+//! follows RFC 4180 (only when needed).
+
+use std::fmt::Write as _;
+use std::fs;
+use std::path::Path;
+
+use anyhow::Result;
+
+/// In-memory CSV table with a fixed header.
+#[derive(Debug, Clone)]
+pub struct Csv {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Csv {
+    pub fn new(header: &[&str]) -> Self {
+        Csv {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Push a row of already-stringified cells (must match header width).
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width {} != header width {}",
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Convenience: anything Display.
+    pub fn row_display(&mut self, cells: &[&dyn std::fmt::Display]) {
+        let cells: Vec<String> = cells.iter().map(|c| format!("{c}")).collect();
+        self.row(&cells);
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        write_record(&mut out, &self.header);
+        for r in &self.rows {
+            write_record(&mut out, r);
+        }
+        out
+    }
+
+    pub fn write_file(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir)?;
+        }
+        fs::write(path, self.to_string())?;
+        Ok(())
+    }
+}
+
+fn write_record(out: &mut String, cells: &[String]) {
+    for (i, c) in cells.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        if c.contains(',') || c.contains('"') || c.contains('\n') {
+            let _ = write!(out, "\"{}\"", c.replace('"', "\"\""));
+        } else {
+            out.push_str(c);
+        }
+    }
+    out.push('\n');
+}
+
+/// Format a float with enough precision for plotting without noise.
+pub fn f(x: f64) -> String {
+    if x == 0.0 {
+        "0".to_string()
+    } else if x.abs() >= 1e6 || x.abs() < 1e-4 {
+        format!("{x:.6e}")
+    } else {
+        format!("{x:.6}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.row(&["1".into(), "2".into()]);
+        c.row_display(&[&3.5, &"x"]);
+        assert_eq!(c.to_string(), "a,b\n1,2\n3.5,x\n");
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn quotes_when_needed() {
+        let mut c = Csv::new(&["x"]);
+        c.row(&["has,comma".into()]);
+        c.row(&["has \"quote\"".into()]);
+        assert_eq!(
+            c.to_string(),
+            "x\n\"has,comma\"\n\"has \"\"quote\"\"\"\n"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn panics_on_width_mismatch() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn float_formatting() {
+        assert_eq!(f(0.0), "0");
+        assert_eq!(f(1.5), "1.500000");
+        assert!(f(1e-7).contains('e'));
+        assert!(f(2e7).contains('e'));
+    }
+}

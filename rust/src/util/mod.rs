@@ -1,0 +1,18 @@
+//! Substrate utilities, hand-rolled because the offline cargo registry
+//! only carries the `xla` crate closure (see DESIGN.md §Substitutions):
+//!
+//! * [`json`]    — JSON parser/writer (replaces serde_json)
+//! * [`prng`]    — PCG64 + Gamma/exponential/normal samplers (replaces rand)
+//! * [`cli`]     — declarative argument parser (replaces clap)
+//! * [`csv`]     — RFC-4180 CSV writer for bench outputs
+//! * [`stats`]   — summaries, percentiles, linear & power-law fits
+//! * [`logging`] — leveled stderr logger (replaces log/env_logger)
+//! * [`timer`]   — accumulating section stopwatch for the §Perf pass
+
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod logging;
+pub mod prng;
+pub mod stats;
+pub mod timer;

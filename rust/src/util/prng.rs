@@ -1,0 +1,275 @@
+//! Deterministic PRNG + distribution samplers (the `rand` crate family is
+//! unavailable offline).
+//!
+//! * [`Pcg64`] — PCG-XSL-RR 128/64: fast, statistically solid, tiny state,
+//!   streams via odd increments.  Used everywhere randomness is needed so
+//!   every experiment is reproducible from a seed recorded in its output.
+//! * Samplers: uniform, exponential, normal (Box-Muller) and **Gamma**
+//!   (Marsaglia-Tsang squeeze, with the alpha<1 boost) — the paper's client
+//!   draws request inter-arrival times from a Gamma distribution whose
+//!   shape/scale are set from the target mean interval and coefficient of
+//!   variation (Sec. 5.3).
+
+/// PCG-XSL-RR 128/64 generator.
+#[derive(Debug, Clone)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Pcg64 {
+    /// Seeded generator on the default stream.
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0xda3e_39cb_94b9_5bdb)
+    }
+
+    /// Independent stream: generators with different `stream` values are
+    /// uncorrelated even with the same seed (used to give each simulated
+    /// request source its own arrival process).
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let mut g = Pcg64 {
+            state: 0,
+            inc: ((stream as u128) << 1) | 1,
+        };
+        g.next_u64();
+        g.state = g.state.wrapping_add(seed as u128);
+        g.next_u64();
+        g
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform in [0, 1) with 53-bit resolution.
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [0, n).
+    pub fn next_below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Lemire's multiply-shift rejection-free variant is overkill here;
+        // 64-bit modulo bias at our n (< 2^20) is < 2^-44.
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Uniform integer in [lo, hi] inclusive.
+    pub fn next_range(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi);
+        lo + self.next_below(hi - lo + 1)
+    }
+
+    /// Standard exponential (mean 1).
+    pub fn next_exp(&mut self) -> f64 {
+        // inverse CDF; guard the log(0) corner
+        let u = loop {
+            let u = self.next_f64();
+            if u > 0.0 {
+                break u;
+            }
+        };
+        -u.ln()
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn next_normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.next_f64();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.next_f64();
+            return (-2.0 * u1.ln()).sqrt()
+                * (2.0 * std::f64::consts::PI * u2).cos();
+        }
+    }
+
+    /// Gamma(shape k, scale theta) via Marsaglia-Tsang.
+    pub fn next_gamma(&mut self, shape: f64, scale: f64) -> f64 {
+        assert!(shape > 0.0 && scale > 0.0, "gamma params must be positive");
+        if shape < 1.0 {
+            // boost: Gamma(k) = Gamma(k+1) * U^(1/k)
+            let u = loop {
+                let u = self.next_f64();
+                if u > 0.0 {
+                    break u;
+                }
+            };
+            return self.next_gamma(shape + 1.0, scale) * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.next_normal();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v3 = v * v * v;
+            let u = self.next_f64();
+            let x2 = x * x;
+            if u < 1.0 - 0.0331 * x2 * x2
+                || u.ln() < 0.5 * x2 + d * (1.0 - v3 + v3.ln())
+            {
+                return d * v3 * scale;
+            }
+        }
+    }
+
+    /// Shuffle a slice (Fisher-Yates).
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Pick a uniformly random element.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.next_below(xs.len())]
+    }
+}
+
+/// Inter-arrival sampler with a given mean and coefficient of variation,
+/// exactly the paper's client model (Sec. 5.3): intervals ~ Gamma with
+/// `shape = 1/CV^2`, `scale = mean * CV^2` so that E = mean, std/E = CV.
+#[derive(Debug, Clone)]
+pub struct GammaIntervals {
+    pub mean: f64,
+    pub cv: f64,
+    shape: f64,
+    scale: f64,
+}
+
+impl GammaIntervals {
+    pub fn new(mean: f64, cv: f64) -> Self {
+        assert!(mean > 0.0 && cv > 0.0);
+        let shape = 1.0 / (cv * cv);
+        GammaIntervals {
+            mean,
+            cv,
+            shape,
+            scale: mean / shape,
+        }
+    }
+
+    pub fn sample(&self, rng: &mut Pcg64) -> f64 {
+        rng.next_gamma(self.shape, self.scale)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mean_std(xs: &[f64]) -> (f64, f64) {
+        let n = xs.len() as f64;
+        let m = xs.iter().sum::<f64>() / n;
+        let var = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / n;
+        (m, var.sqrt())
+    }
+
+    #[test]
+    fn deterministic_and_stream_independent() {
+        let mut a = Pcg64::new(7);
+        let mut b = Pcg64::new(7);
+        assert_eq!(
+            (0..8).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+        let mut c = Pcg64::with_stream(7, 99);
+        assert_ne!(b.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn uniform_is_in_range_and_roughly_uniform() {
+        let mut g = Pcg64::new(1);
+        let mut buckets = [0usize; 10];
+        for _ in 0..20_000 {
+            let u = g.next_f64();
+            assert!((0.0..1.0).contains(&u));
+            buckets[(u * 10.0) as usize] += 1;
+        }
+        for &b in &buckets {
+            assert!((1600..2400).contains(&b), "bucket {b} too skewed");
+        }
+    }
+
+    #[test]
+    fn next_range_covers_bounds() {
+        let mut g = Pcg64::new(3);
+        let mut seen_lo = false;
+        let mut seen_hi = false;
+        for _ in 0..1000 {
+            let v = g.next_range(4, 6);
+            assert!((4..=6).contains(&v));
+            seen_lo |= v == 4;
+            seen_hi |= v == 6;
+        }
+        assert!(seen_lo && seen_hi);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut g = Pcg64::new(11);
+        let xs: Vec<f64> = (0..50_000).map(|_| g.next_normal()).collect();
+        let (m, s) = mean_std(&xs);
+        assert!(m.abs() < 0.02, "mean {m}");
+        assert!((s - 1.0).abs() < 0.02, "std {s}");
+    }
+
+    #[test]
+    fn exponential_moments() {
+        let mut g = Pcg64::new(13);
+        let xs: Vec<f64> = (0..50_000).map(|_| g.next_exp()).collect();
+        let (m, s) = mean_std(&xs);
+        assert!((m - 1.0).abs() < 0.03, "mean {m}");
+        assert!((s - 1.0).abs() < 0.05, "std {s}");
+    }
+
+    #[test]
+    fn gamma_matches_requested_mean_and_cv() {
+        for &(mean, cv) in &[(0.1, 0.5), (0.4, 1.0), (0.8, 2.0), (0.2, 5.0)] {
+            let gi = GammaIntervals::new(mean, cv);
+            let mut g = Pcg64::new(17);
+            let xs: Vec<f64> = (0..200_000).map(|_| gi.sample(&mut g)).collect();
+            let (m, s) = mean_std(&xs);
+            assert!(
+                (m - mean).abs() / mean < 0.05,
+                "mean {m} != {mean} (cv {cv})"
+            );
+            assert!(
+                (s / m - cv).abs() / cv < 0.10,
+                "cv {} != {cv} (mean {mean})",
+                s / m
+            );
+            assert!(xs.iter().all(|&x| x > 0.0));
+        }
+    }
+
+    #[test]
+    fn gamma_small_shape_boost_path() {
+        // cv = 5 => shape = 0.04 < 1 exercises the boost branch
+        let mut g = Pcg64::new(23);
+        let xs: Vec<f64> = (0..100_000).map(|_| g.next_gamma(0.04, 1.0)).collect();
+        let (m, _) = mean_std(&xs);
+        assert!((m - 0.04).abs() < 0.01, "mean {m}");
+    }
+
+    #[test]
+    fn shuffle_is_a_permutation() {
+        let mut g = Pcg64::new(31);
+        let mut v: Vec<usize> = (0..100).collect();
+        g.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+}

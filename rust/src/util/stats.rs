@@ -1,0 +1,194 @@
+//! Statistics helpers: summary stats, percentiles, and the least-squares
+//! fits the paper's analytical model needs (Sec. 3.3):
+//!
+//! * [`linear_fit`] — `y = a*x + b` for `t_L(b, s) ≈ α_b·s + β` (Fig. 3)
+//! * [`power_fit`]  — `y = c * x^γ` via log-log linear regression for
+//!   `l(s) ≈ c·s^γ` (Fig. 2; the paper reports `0.9·s^0.548`)
+
+/// Summary statistics over a sample.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+pub fn summary(xs: &[f64]) -> Summary {
+    if xs.is_empty() {
+        return Summary {
+            n: 0,
+            mean: f64::NAN,
+            std: f64::NAN,
+            min: f64::NAN,
+            max: f64::NAN,
+        };
+    }
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+    Summary {
+        n: xs.len(),
+        mean,
+        std: var.sqrt(),
+        min: xs.iter().cloned().fold(f64::INFINITY, f64::min),
+        max: xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+    }
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    summary(xs).mean
+}
+
+/// Percentile by linear interpolation on the sorted sample (q in [0, 100]).
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&sorted, q)
+}
+
+/// Percentile on an already sorted slice (avoids re-sorting in loops).
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let q = q.clamp(0.0, 100.0) / 100.0;
+    let idx = q * (sorted.len() - 1) as f64;
+    let lo = idx.floor() as usize;
+    let hi = idx.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let w = idx - lo as f64;
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    }
+}
+
+/// Least-squares `y = slope*x + intercept`; returns (slope, intercept, r2).
+pub fn linear_fit(xs: &[f64], ys: &[f64]) -> (f64, f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 2, "need >= 2 points for a linear fit");
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let mut sxx = 0.0;
+    let mut sxy = 0.0;
+    let mut syy = 0.0;
+    for (&x, &y) in xs.iter().zip(ys) {
+        sxx += (x - mx) * (x - mx);
+        sxy += (x - mx) * (y - my);
+        syy += (y - my) * (y - my);
+    }
+    assert!(sxx > 0.0, "degenerate x values in linear fit");
+    let slope = sxy / sxx;
+    let intercept = my - slope * mx;
+    let r2 = if syy == 0.0 { 1.0 } else { (sxy * sxy) / (sxx * syy) };
+    (slope, intercept, r2)
+}
+
+/// Least-squares power-law `y = c * x^gamma` via regression in log-log
+/// space; returns (c, gamma, r2_loglog).  Requires strictly positive data.
+pub fn power_fit(xs: &[f64], ys: &[f64]) -> (f64, f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    let (lx, ly): (Vec<f64>, Vec<f64>) = xs
+        .iter()
+        .zip(ys)
+        .filter(|(&x, &y)| x > 0.0 && y > 0.0)
+        .map(|(&x, &y)| (x.ln(), y.ln()))
+        .unzip();
+    assert!(lx.len() >= 2, "need >= 2 positive points for a power fit");
+    let (gamma, lnc, r2) = linear_fit(&lx, &ly);
+    (lnc.exp(), gamma, r2)
+}
+
+/// Exponential-moving-average smoother (used by the timeline plots).
+pub fn ema(xs: &[f64], alpha: f64) -> Vec<f64> {
+    let mut out = Vec::with_capacity(xs.len());
+    let mut acc = None;
+    for &x in xs {
+        let v = match acc {
+            None => x,
+            Some(prev) => alpha * x + (1.0 - alpha) * prev,
+        };
+        acc = Some(v);
+        out.push(v);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = summary(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert!((s.std - (1.25f64).sqrt()).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert!(summary(&[]).mean.is_nan());
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 100.0) - 100.0).abs() < 1e-12);
+        assert!((percentile(&xs, 50.0) - 50.5).abs() < 1e-9);
+        assert!((percentile(&xs, 99.0) - 99.01).abs() < 0.02);
+        // single element
+        assert_eq!(percentile(&[42.0], 75.0), 42.0);
+    }
+
+    #[test]
+    fn linear_fit_exact() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 * x + 7.0).collect();
+        let (a, b, r2) = linear_fit(&xs, &ys);
+        assert!((a - 3.0).abs() < 1e-12);
+        assert!((b - 7.0).abs() < 1e-12);
+        assert!((r2 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn linear_fit_noisy_r2_below_one() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let ys = [2.1, 3.9, 6.2, 7.8, 10.3];
+        let (a, _b, r2) = linear_fit(&xs, &ys);
+        assert!((a - 2.0).abs() < 0.15);
+        assert!(r2 > 0.99 && r2 < 1.0);
+    }
+
+    #[test]
+    fn power_fit_recovers_paper_curve() {
+        // the paper's measured acceptance curve: l(s) = 0.9 * s^0.548
+        let xs: Vec<f64> = (1..=8).map(|s| s as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|s| 0.9 * s.powf(0.548)).collect();
+        let (c, gamma, r2) = power_fit(&xs, &ys);
+        assert!((c - 0.9).abs() < 1e-9, "c={c}");
+        assert!((gamma - 0.548).abs() < 1e-9, "gamma={gamma}");
+        assert!((r2 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn power_fit_skips_nonpositive_points() {
+        let xs = [0.0, 1.0, 2.0, 4.0];
+        let ys = [0.0, 2.0, 4.0, 8.0];
+        let (c, gamma, _) = power_fit(&xs, &ys);
+        assert!((c - 2.0).abs() < 1e-9);
+        assert!((gamma - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ema_smooths() {
+        let out = ema(&[0.0, 10.0, 10.0], 0.5);
+        assert_eq!(out, vec![0.0, 5.0, 7.5]);
+        assert!(ema(&[], 0.3).is_empty());
+    }
+}

@@ -1,0 +1,112 @@
+//! Lightweight section timers for the §Perf profiling pass.
+//!
+//! [`Stopwatch`] accumulates per-section wall time across many iterations
+//! of the serving loop (ssm/llm/host-staging/acceptance/…), giving the
+//! breakdown that drives the hot-path optimization without external
+//! profilers.  Overhead is one `Instant::now()` pair per section.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Accumulating multi-section stopwatch.
+#[derive(Debug, Default, Clone)]
+pub struct Stopwatch {
+    sections: BTreeMap<&'static str, (Duration, u64)>,
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under a section label.
+    pub fn time<T>(&mut self, section: &'static str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(section, t0.elapsed());
+        out
+    }
+
+    pub fn add(&mut self, section: &'static str, d: Duration) {
+        let e = self.sections.entry(section).or_insert((Duration::ZERO, 0));
+        e.0 += d;
+        e.1 += 1;
+    }
+
+    pub fn total(&self, section: &str) -> Duration {
+        self.sections
+            .get(section)
+            .map(|(d, _)| *d)
+            .unwrap_or(Duration::ZERO)
+    }
+
+    pub fn count(&self, section: &str) -> u64 {
+        self.sections.get(section).map(|(_, c)| *c).unwrap_or(0)
+    }
+
+    pub fn merge(&mut self, other: &Stopwatch) {
+        for (k, (d, c)) in &other.sections {
+            let e = self.sections.entry(k).or_insert((Duration::ZERO, 0));
+            e.0 += *d;
+            e.1 += *c;
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.sections.clear();
+    }
+
+    /// Pretty per-section report sorted by total time, with percentages.
+    pub fn report(&self) -> String {
+        let grand: f64 = self
+            .sections
+            .values()
+            .map(|(d, _)| d.as_secs_f64())
+            .sum();
+        let mut rows: Vec<_> = self.sections.iter().collect();
+        rows.sort_by(|a, b| b.1 .0.cmp(&a.1 .0));
+        let mut out = String::from("section                     total      calls   mean       share\n");
+        for (name, (d, c)) in rows {
+            let t = d.as_secs_f64();
+            let mean = if *c > 0 { t / *c as f64 } else { 0.0 };
+            let share = if grand > 0.0 { 100.0 * t / grand } else { 0.0 };
+            out.push_str(&format!(
+                "{name:<26} {t:>9.4}s {c:>8} {:>9.3}ms {share:>6.1}%\n",
+                mean * 1e3
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_sections() {
+        let mut sw = Stopwatch::new();
+        let v = sw.time("a", || 41 + 1);
+        assert_eq!(v, 42);
+        sw.add("a", Duration::from_millis(5));
+        sw.add("b", Duration::from_millis(2));
+        assert_eq!(sw.count("a"), 2);
+        assert_eq!(sw.count("b"), 1);
+        assert!(sw.total("a") >= Duration::from_millis(5));
+        assert_eq!(sw.total("missing"), Duration::ZERO);
+        let rep = sw.report();
+        assert!(rep.contains('a') && rep.contains('b'));
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = Stopwatch::new();
+        a.add("x", Duration::from_millis(1));
+        let mut b = Stopwatch::new();
+        b.add("x", Duration::from_millis(2));
+        b.add("y", Duration::from_millis(3));
+        a.merge(&b);
+        assert_eq!(a.count("x"), 2);
+        assert_eq!(a.total("y"), Duration::from_millis(3));
+    }
+}

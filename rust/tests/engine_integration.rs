@@ -1,0 +1,211 @@
+//! End-to-end engine correctness against the Python-generated goldens.
+//!
+//! `artifacts/goldens.json` (written by aot.py) holds greedy continuations
+//! computed with the JAX reference engine.  Speculative decoding is
+//! *lossless*: for any policy, the Rust engine must reproduce those exact
+//! tokens.  This proves the whole chain — HLO executables, PJRT execution,
+//! KV-cache state machine, acceptance rule — matches the L2 semantics.
+//!
+//! Requires `make artifacts` to have run (skipped otherwise, loudly).
+
+use specbatch::engine::{Engine, EngineConfig};
+use specbatch::runtime::Runtime;
+use specbatch::scheduler::{Lut, SpecPolicy};
+use specbatch::util::json::Json;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts — run `make artifacts` first");
+        None
+    }
+}
+
+struct Golden {
+    prompt: Vec<i32>,
+    greedy: Vec<i32>,
+    n_new: usize,
+}
+
+fn load_goldens(dir: &std::path::Path) -> Vec<Golden> {
+    let json = Json::parse_file(dir.join("goldens.json")).expect("goldens parse");
+    let n_new = json.get("n_new").unwrap().as_usize().unwrap();
+    json.get("cases")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|c| Golden {
+            prompt: c
+                .get("prompt")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|v| v.as_i64().unwrap() as i32)
+                .collect(),
+            greedy: c
+                .get("greedy")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|v| v.as_i64().unwrap() as i32)
+                .collect(),
+            n_new,
+        })
+        .collect()
+}
+
+fn engine_cfg() -> EngineConfig {
+    EngineConfig {
+        // goldens were generated without EOS stopping
+        stop_at_eos: false,
+        record_acceptance: true,
+        ..EngineConfig::default()
+    }
+}
+
+#[test]
+fn speculative_decoding_is_lossless_vs_python_goldens() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).expect("runtime");
+    let mut engine = Engine::new(&rt, engine_cfg()).expect("engine");
+    let goldens = load_goldens(&dir);
+    assert!(!goldens.is_empty());
+    let n_new = goldens[0].n_new;
+    let prompts: Vec<Vec<i32>> = goldens.iter().map(|g| g.prompt.clone()).collect();
+
+    // every policy must produce the identical greedy continuation
+    let policies = [
+        SpecPolicy::NoSpec,
+        SpecPolicy::Fixed(1),
+        SpecPolicy::Fixed(3),
+        SpecPolicy::Fixed(5),
+        SpecPolicy::Adaptive(
+            Lut::new([(1, 4), (2, 3), (4, 3), (8, 2), (16, 1)].into_iter().collect()).unwrap(),
+        ),
+    ];
+    for policy in &policies {
+        let out = engine
+            .generate_batch(&prompts, n_new, policy)
+            .unwrap_or_else(|e| panic!("{}: {e}", policy.label()));
+        for (i, g) in goldens.iter().enumerate() {
+            assert_eq!(
+                out.tokens[i],
+                g.greedy,
+                "policy {} diverged from greedy on prompt {i}",
+                policy.label()
+            );
+        }
+        if let SpecPolicy::Fixed(s) = policy {
+            assert!(out.stats.rounds > 0);
+            assert!(
+                out.stats.mean_accepted() >= 0.0
+                    && out.stats.mean_accepted() <= *s as f64
+            );
+        }
+    }
+}
+
+#[test]
+fn batched_generation_matches_single_row_generation() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).expect("runtime");
+    let mut engine = Engine::new(&rt, engine_cfg()).expect("engine");
+    let goldens = load_goldens(&dir);
+    let prompts: Vec<Vec<i32>> = goldens.iter().map(|g| g.prompt.clone()).collect();
+    let n_new = 12;
+
+    // batch of 4 (padded to bucket 4) vs each prompt alone (bucket 1):
+    // batching must not change any row's output
+    let batched = engine
+        .generate_batch(&prompts, n_new, &SpecPolicy::Fixed(2))
+        .expect("batched");
+    for (i, p) in prompts.iter().enumerate() {
+        let single = engine
+            .generate_batch(std::slice::from_ref(p), n_new, &SpecPolicy::Fixed(2))
+            .expect("single");
+        assert_eq!(
+            batched.tokens[i], single.tokens[0],
+            "row {i}: batched != single"
+        );
+    }
+}
+
+#[test]
+fn odd_batch_sizes_pad_to_bucket() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).expect("runtime");
+    let mut engine = Engine::new(&rt, engine_cfg()).expect("engine");
+    let goldens = load_goldens(&dir);
+    let prompts: Vec<Vec<i32>> = goldens.iter().take(3).map(|g| g.prompt.clone()).collect();
+
+    // 3 rows pad into the 4-bucket; outputs must match the goldens prefix
+    let out = engine
+        .generate_batch(&prompts, 8, &SpecPolicy::Fixed(3))
+        .expect("gen");
+    assert_eq!(out.tokens.len(), 3);
+    for (i, g) in goldens.iter().take(3).enumerate() {
+        assert_eq!(out.tokens[i], g.greedy[..8], "row {i}");
+    }
+}
+
+#[test]
+fn eos_stops_generation_early() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).expect("runtime");
+    // pick a mid-continuation golden token as a fake EOS: generation must
+    // stop right there
+    let goldens = load_goldens(&dir);
+    let fake_eos = goldens[0].greedy[3];
+    let cfg = EngineConfig {
+        stop_at_eos: true,
+        eos_token: fake_eos,
+        record_acceptance: false,
+        ..EngineConfig::default()
+    };
+    let mut engine = Engine::new(&rt, cfg).expect("engine");
+    let out = engine
+        .generate_batch(&[goldens[0].prompt.clone()], 16, &SpecPolicy::Fixed(2))
+        .expect("gen");
+    let toks = &out.tokens[0];
+    let pos = toks.iter().position(|&t| t == fake_eos);
+    assert!(pos.is_some(), "eos token never emitted");
+    assert_eq!(pos.unwrap(), toks.len() - 1, "tokens continue past eos");
+    assert_eq!(toks[..], goldens[0].greedy[..pos.unwrap() + 1]);
+}
+
+#[test]
+fn rejects_oversized_prompts_and_batches() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).expect("runtime");
+    let mut engine = Engine::new(&rt, engine_cfg()).expect("engine");
+    let max_prompt = rt.manifest.models["llm"].spec.max_prompt;
+    let long = vec![1i32; max_prompt + 1];
+    assert!(engine
+        .generate_batch(&[long], 4, &SpecPolicy::NoSpec)
+        .is_err());
+    assert!(engine.generate_batch(&[], 4, &SpecPolicy::NoSpec).is_err());
+    let max_bucket = *rt.manifest.batch_buckets.iter().max().unwrap();
+    let too_many = vec![vec![1i32, 5]; max_bucket + 1];
+    assert!(engine
+        .generate_batch(&too_many, 4, &SpecPolicy::NoSpec)
+        .is_err());
+}
+
+#[test]
+fn kv_capacity_overflow_is_detected() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).expect("runtime");
+    let mut engine = Engine::new(&rt, engine_cfg()).expect("engine");
+    let spec = &rt.manifest.models["llm"].spec;
+    // ask for more tokens than the KV cache can hold: must error, not UB
+    let budget = spec.max_seq;
+    let out = engine.generate_batch(&[vec![1i32, 5, 9]], budget, &SpecPolicy::Fixed(2));
+    assert!(out.is_err(), "expected KV overflow error");
+    let msg = out.unwrap_err().to_string();
+    assert!(msg.contains("overflow"), "unexpected error: {msg}");
+}

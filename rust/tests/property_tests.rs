@@ -1,0 +1,293 @@
+//! Property-based tests (testkit substrate) over the pure logic of the
+//! stack: acceptance rule, scheduler LUT, analytic model, queue
+//! simulation, and the JSON substrate.  None of these need artifacts.
+
+use std::collections::BTreeMap;
+
+use specbatch::analytic::{AcceptanceModel, StepCostModel, TotalTimeModel};
+use specbatch::dataset::Prompt;
+use specbatch::engine::acceptance::{accept_batch, accept_row};
+use specbatch::scheduler::{Lut, SpecPolicy};
+use specbatch::simulator::{simulate_trace, AcceptanceProcess, CostModel, GpuProfile,
+    ModelProfile, SimConfig};
+use specbatch::testkit::{check, Gen};
+use specbatch::traffic::{Trace, TrafficPattern};
+use specbatch::util::json::Json;
+use specbatch::util::stats::{percentile, power_fit};
+
+/// Pure-host mirror of Algorithm 1: with a deterministic next-token
+/// oracle standing in for the LLM, speculative decoding with ANY draft
+/// sequence must reproduce plain greedy decoding exactly, and every
+/// round must commit at least one token.
+#[test]
+fn prop_speculative_loop_is_lossless_for_any_drafts() {
+    check("spec loop lossless", 300, |g: &mut Gen| {
+        let vocab = 32usize;
+        // deterministic oracle: next = hash(last) % vocab
+        let oracle = |last: i32| -> i32 { ((last as u64 * 2654435761 + 12345) % vocab as u64) as i32 };
+        let start = g.int(0, vocab - 1) as i32;
+        let n_new = g.int(1, 40);
+        let s = g.int(1, 8);
+
+        // ground truth: plain greedy chain
+        let mut greedy = vec![start];
+        for _ in 0..n_new {
+            greedy.push(oracle(*greedy.last().unwrap()));
+        }
+
+        // speculative loop with an arbitrary (often wrong) draft model
+        let mut committed = vec![start];
+        let mut rounds = 0;
+        while committed.len() - 1 < n_new {
+            // drafts: mix of correct and random tokens
+            let mut draft = Vec::with_capacity(s);
+            let mut cur = *committed.last().unwrap();
+            for _ in 0..s {
+                let tok = if g.bool() {
+                    oracle(cur) // correct draft
+                } else {
+                    g.int(0, vocab - 1) as i32 // junk draft
+                };
+                draft.push(tok);
+                cur = tok;
+            }
+            // the LLM's argmax at each in-flight position
+            let mut pred = Vec::with_capacity(s + 1);
+            let mut prev = *committed.last().unwrap();
+            pred.push(oracle(prev));
+            for &d in &draft {
+                prev = d;
+                pred.push(oracle(prev));
+            }
+            let acc = accept_row(&draft, &pred);
+            assert!(!acc.commit.is_empty(), "commit must be non-empty");
+            committed.extend_from_slice(&acc.commit);
+            rounds += 1;
+            if rounds > 4 * (n_new + 2) {
+                return false; // livelock
+            }
+        }
+        committed.truncate(n_new + 1);
+        committed == greedy[..n_new + 1]
+    });
+}
+
+#[test]
+fn prop_acceptance_commit_structure() {
+    check("acceptance commit structure", 500, |g: &mut Gen| {
+        let s = g.int(0, 8);
+        let b = g.int(1, 8);
+        let draft = g.tokens(b * s, b * s, 16);
+        let pred = g.tokens(b * (s + 1), b * (s + 1), 16);
+        let rows = accept_batch(&draft, &pred, b, s);
+        rows.iter().enumerate().all(|(i, r)| {
+            let d = &draft[i * s..(i + 1) * s];
+            let p = &pred[i * (s + 1)..(i + 1) * (s + 1)];
+            // commit = accepted prefix of drafts + one oracle token
+            r.commit.len() == r.accepted + 1
+                && r.commit[..r.accepted] == d[..r.accepted]
+                && r.commit[r.accepted] == p[r.accepted]
+                // accepted is exactly the first-mismatch index
+                && d[..r.accepted].iter().zip(p).all(|(a, b)| a == b)
+                && (r.accepted == s || d[r.accepted] != p[r.accepted])
+        })
+    });
+}
+
+#[test]
+fn prop_lut_lookup_respects_paper_rule() {
+    check("lut between-bucket rule", 300, |g: &mut Gen| {
+        // random monotone bucket set with random s values
+        let n = g.int(1, 6);
+        let mut entries = BTreeMap::new();
+        let mut b = 1usize;
+        for _ in 0..n {
+            entries.insert(b, g.int(0, 8));
+            b *= 2;
+        }
+        let lut = Lut::new(entries.clone()).unwrap();
+        let probe = g.int(1, 64);
+        let got = lut.lookup(probe);
+        let below = entries.range(..=probe).next_back().map(|(_, &s)| s);
+        let above = entries.range(probe..).next().map(|(_, &s)| s);
+        let expect = match (entries.get(&probe), below, above) {
+            (Some(&s), _, _) => s,
+            (None, Some(lo), Some(hi)) => lo.min(hi),
+            (None, Some(lo), None) => lo,
+            (None, None, Some(hi)) => hi,
+            (None, None, None) => unreachable!(),
+        };
+        got == expect
+    });
+}
+
+#[test]
+fn prop_policy_never_exceeds_available_executables() {
+    check("policy caps at max_s", 300, |g: &mut Gen| {
+        let max_s = g.int(0, 8);
+        let batch = g.int(1, 32);
+        let policy = match g.int(0, 2) {
+            0 => SpecPolicy::NoSpec,
+            1 => SpecPolicy::Fixed(g.int(0, 12)),
+            _ => {
+                let mut e = BTreeMap::new();
+                e.insert(1, g.int(0, 12));
+                e.insert(8, g.int(0, 12));
+                SpecPolicy::Adaptive(Lut::new(e).unwrap())
+            }
+        };
+        policy.spec_len(batch, max_s) <= max_s
+    });
+}
+
+#[test]
+fn prop_analytic_sopt_monotone_in_alpha() {
+    check("s_opt non-increasing in alpha", 200, |g: &mut Gen| {
+        let acceptance = AcceptanceModel {
+            c: g.f64(0.3, 1.0),
+            gamma: g.f64(0.2, 0.9),
+            r2: 1.0,
+        };
+        let beta = g.f64(0.005, 0.05);
+        let t_ssm = g.f64(0.0001, 0.004);
+        let mut last = usize::MAX;
+        for i in 0..5 {
+            let alpha = 1e-4 * (4.0f64).powi(i);
+            let m = TotalTimeModel {
+                acceptance,
+                cost: StepCostModel {
+                    batch: 1 << i,
+                    alpha,
+                    beta,
+                    t_ssm,
+                    r2: 1.0,
+                },
+            };
+            let s = m.s_opt(8);
+            if s > last {
+                return false;
+            }
+            last = s;
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_acceptance_process_expectation_matches_samples() {
+    check("acceptance process calibration", 30, |g: &mut Gen| {
+        let proc_ = if g.bool() {
+            AcceptanceProcess::Geometric { q: g.f64(0.2, 0.95) }
+        } else {
+            AcceptanceProcess::PowerLaw {
+                c: g.f64(0.4, 1.0),
+                gamma: g.f64(0.3, 0.9),
+            }
+        };
+        let s = g.int(1, 8);
+        let mut rng = specbatch::util::prng::Pcg64::new(g.int(0, 1 << 30) as u64);
+        let n = 30_000;
+        let emp: f64 = (0..n).map(|_| proc_.sample(s, &mut rng)).sum::<usize>() as f64 / n as f64;
+        (emp - proc_.expected_accepted(s)).abs() < 0.06
+    });
+}
+
+#[test]
+fn prop_simulated_queue_conserves_requests_in_fifo_order() {
+    check("queue conservation + FIFO", 40, |g: &mut Gen| {
+        let cfg = {
+            let mut c = SimConfig::paper_default(
+                CostModel::new(ModelProfile::OPT_6_7B, GpuProfile::RTX3090),
+                CostModel::new(ModelProfile::OPT_125M, GpuProfile::RTX3090),
+            );
+            c.max_new_tokens = g.int(4, 32);
+            c.max_batch = g.int(1, 16);
+            c
+        };
+        let pool = vec![Prompt { ids: vec![1; g.int(2, 24)], text: String::new() }];
+        let n = g.int(1, 120);
+        let trace = Trace::generate(
+            &TrafficPattern::Stationary {
+                interval: g.f64(0.01, 1.0),
+                cv: g.f64(0.3, 5.0),
+            },
+            &pool,
+            n,
+            g.int(0, 1 << 30) as u64,
+        );
+        let rec = simulate_trace(&cfg, &SpecPolicy::Fixed(g.int(1, 6)), &trace);
+        if rec.len() != n {
+            return false;
+        }
+        // FIFO: start times non-decreasing in request id
+        let mut by_id: Vec<_> = rec.records().to_vec();
+        by_id.sort_by_key(|r| r.id);
+        by_id.windows(2).all(|w| w[1].started_at >= w[0].started_at - 1e-12)
+            && by_id.iter().all(|r| {
+                r.started_at >= r.sent_at - 1e-12 && r.finished_at > r.started_at
+            })
+    });
+}
+
+#[test]
+fn prop_json_roundtrips_random_documents() {
+    fn random_json(g: &mut Gen, depth: usize) -> Json {
+        match if depth == 0 { g.int(0, 3) } else { g.int(0, 5) } {
+            0 => Json::Null,
+            1 => Json::Bool(g.bool()),
+            2 => Json::Num((g.f64(-1e6, 1e6) * 100.0).round() / 100.0),
+            3 => {
+                let n = g.int(0, 12);
+                Json::Str((0..n).map(|_| char::from(g.int(32, 126) as u8)).collect())
+            }
+            4 => Json::Arr((0..g.int(0, 4)).map(|_| random_json(g, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..g.int(0, 4))
+                    .map(|i| (format!("k{i}"), random_json(g, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    check("json roundtrip", 300, |g: &mut Gen| {
+        let v = random_json(g, 3);
+        Json::parse(&v.compact()).map(|p| p == v).unwrap_or(false)
+            && Json::parse(&v.pretty()).map(|p| p == v).unwrap_or(false)
+    });
+}
+
+#[test]
+fn prop_percentile_within_sample_bounds() {
+    check("percentile bounds", 300, |g: &mut Gen| {
+        let n = g.int(1, 100);
+        let xs: Vec<f64> = (0..n).map(|_| g.f64(-1e3, 1e3)).collect();
+        let q = g.f64(0.0, 100.0);
+        let p = percentile(&xs, q);
+        let lo = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        p >= lo - 1e-9 && p <= hi + 1e-9
+    });
+}
+
+#[test]
+fn prop_power_fit_recovers_exact_curves() {
+    check("power fit recovery", 200, |g: &mut Gen| {
+        let c = g.f64(0.1, 5.0);
+        let gamma = g.f64(-1.5, 1.5);
+        let xs: Vec<f64> = (1..=10).map(|x| x as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| c * x.powf(gamma)).collect();
+        let (cf, gf, r2) = power_fit(&xs, &ys);
+        (cf - c).abs() < 1e-6 && (gf - gamma).abs() < 1e-6 && (r2 - 1.0).abs() < 1e-9
+    });
+}
+
+#[test]
+fn prop_gamma_samples_positive_with_any_cv() {
+    check("gamma positivity", 200, |g: &mut Gen| {
+        let mut rng = specbatch::util::prng::Pcg64::new(g.int(0, 1 << 30) as u64);
+        let gi = specbatch::util::prng::GammaIntervals::new(
+            g.f64(0.01, 2.0),
+            g.f64(0.1, 6.0),
+        );
+        (0..200).all(|_| gi.sample(&mut rng) > 0.0)
+    });
+}

@@ -1,0 +1,139 @@
+//! End-to-end server/client integration over the message queues: real
+//! runtime, real worker thread, real Gamma traffic — scaled down so the
+//! test completes in seconds.
+
+use std::time::Duration;
+
+use specbatch::config::PolicySpec;
+use specbatch::dataset::Dataset;
+use specbatch::scheduler::Lut;
+use specbatch::server::{run_experiment, ServerConfig};
+use specbatch::traffic::{Trace, TrafficPattern};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts — run `make artifacts` first");
+        None
+    }
+}
+
+fn small_cfg() -> ServerConfig {
+    ServerConfig {
+        max_batch: 4,
+        max_new_tokens: 8,
+        ..ServerConfig::default()
+    }
+}
+
+#[test]
+fn serves_a_trace_and_accounts_every_request() {
+    let Some(dir) = artifacts_dir() else { return };
+    let dataset = Dataset::load(dir.join("dataset.json")).expect("dataset");
+    let trace = Trace::generate(
+        &TrafficPattern::Stationary {
+            interval: 0.05,
+            cv: 1.0,
+        },
+        &dataset.eval,
+        10,
+        3,
+    );
+    let (rec, lut) =
+        run_experiment(dir, small_cfg(), PolicySpec::Fixed(2), None, &trace)
+            .expect("experiment");
+    assert!(lut.is_none());
+    assert_eq!(rec.len(), 10);
+    // every id served exactly once
+    let mut ids: Vec<u64> = rec.records().iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..10).collect::<Vec<u64>>());
+    for r in rec.records() {
+        // causality and the paper's latency definition t_b - t_a
+        assert!(r.started_at >= r.sent_at - 1e-6, "start before send");
+        assert!(r.finished_at > r.started_at, "finish before start");
+        assert!(r.latency() >= r.service_time() - 1e-9);
+        assert_eq!(r.tokens, 8);
+        assert!(r.batch >= 1 && r.batch <= 4);
+        assert_eq!(r.spec_len, 2);
+    }
+}
+
+#[test]
+fn burst_traffic_gets_batched() {
+    let Some(dir) = artifacts_dir() else { return };
+    let dataset = Dataset::load(dir.join("dataset.json")).expect("dataset");
+    // near-simultaneous arrivals: after the first batch, the rest must
+    // merge (batch > 1 for some requests)
+    let trace = Trace::generate(
+        &TrafficPattern::Stationary {
+            interval: 0.001,
+            cv: 0.5,
+        },
+        &dataset.eval,
+        8,
+        5,
+    );
+    let (rec, _) = run_experiment(dir, small_cfg(), PolicySpec::Fixed(1), None, &trace)
+        .expect("experiment");
+    assert_eq!(rec.len(), 8);
+    let max_batch = rec.records().iter().map(|r| r.batch).max().unwrap();
+    assert!(max_batch > 1, "burst should produce merged batches");
+    assert!(max_batch <= 4, "batch cap violated");
+}
+
+#[test]
+fn adaptive_policy_profiles_then_serves() {
+    let Some(dir) = artifacts_dir() else { return };
+    let dataset = Dataset::load(dir.join("dataset.json")).expect("dataset");
+    let trace = Trace::generate(
+        &TrafficPattern::Stationary {
+            interval: 0.05,
+            cv: 1.0,
+        },
+        &dataset.eval,
+        4,
+        7,
+    );
+    let mut cfg = small_cfg();
+    cfg.profile_prompts = 4; // keep profiling quick
+    let (rec, lut) = run_experiment(dir, cfg, PolicySpec::Adaptive, None, &trace)
+        .expect("experiment");
+    assert_eq!(rec.len(), 4);
+    let lut = lut.expect("adaptive must yield a LUT");
+    for (&b, &s) in lut.entries() {
+        assert!(b >= 1);
+        assert!(s <= 8, "absurd speculation length {s} for bucket {b}");
+    }
+}
+
+#[test]
+fn precomputed_lut_skips_profiling() {
+    let Some(dir) = artifacts_dir() else { return };
+    let dataset = Dataset::load(dir.join("dataset.json")).expect("dataset");
+    let trace = Trace::generate(
+        &TrafficPattern::Stationary {
+            interval: 0.02,
+            cv: 1.0,
+        },
+        &dataset.eval,
+        4,
+        9,
+    );
+    let lut = Lut::new([(1, 3), (2, 2), (4, 2)].into_iter().collect()).unwrap();
+    let t0 = std::time::Instant::now();
+    let (rec, lut_used) = run_experiment(
+        dir,
+        small_cfg(),
+        PolicySpec::Adaptive,
+        Some(lut.clone()),
+        &trace,
+    )
+    .expect("experiment");
+    assert_eq!(rec.len(), 4);
+    assert_eq!(lut_used, Some(lut));
+    // generous bound: no profiling pass means startup stays modest
+    assert!(t0.elapsed() < Duration::from_secs(300));
+}

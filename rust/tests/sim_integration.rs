@@ -1,0 +1,178 @@
+//! Cross-validation of the three worlds that must agree on the paper's
+//! phenomena: the analytic model (Sec. 3.3), the GPU simulator, and the
+//! scheduler policy layer.  No artifacts required — this exercises the
+//! paper's *theory* end to end.
+
+use specbatch::analytic::{AcceptanceModel, StepCostModel, TotalTimeModel};
+use specbatch::dataset::Prompt;
+use specbatch::scheduler::SpecPolicy;
+use specbatch::simulator::{
+    batch_service_time, simulate_trace, simulated_lut, AcceptanceProcess, CostModel,
+    GpuProfile, ModelProfile, SimConfig,
+};
+use specbatch::traffic::{Trace, TrafficPattern};
+use specbatch::util::prng::Pcg64;
+
+fn sim_cfg() -> SimConfig {
+    SimConfig::paper_default(
+        CostModel::new(ModelProfile::OPT_6_7B, GpuProfile::RTX3090),
+        CostModel::new(ModelProfile::OPT_125M, GpuProfile::RTX3090),
+    )
+}
+
+/// The analytic s_opt (Eq. 12, fed with the simulator's own fitted α_b/β
+/// and the paper acceptance curve) must track the simulator's
+/// grid-searched optimum within ±2 across batch sizes.
+#[test]
+fn analytic_sopt_tracks_simulated_optimum() {
+    let cfg = sim_cfg();
+    let acceptance = AcceptanceModel::paper();
+    let lut = simulated_lut(&cfg, &[1, 2, 4, 8, 16, 32], 8, 96);
+    for &b in &[1usize, 2, 4, 8, 16, 32] {
+        let (alpha, beta) = cfg.llm.linearize(b, 8, 96);
+        let cost = StepCostModel {
+            batch: b,
+            alpha,
+            beta,
+            t_ssm: cfg.ssm.t_draft(b, 96),
+            r2: 1.0,
+        };
+        let model = TotalTimeModel { acceptance, cost };
+        let predicted = model.s_opt(8) as i64;
+        let simulated = lut.lookup(b) as i64;
+        assert!(
+            (predicted - simulated).abs() <= 2,
+            "b={b}: analytic s_opt {predicted} vs simulated {simulated}"
+        );
+    }
+}
+
+/// Adding the SSM's per-draft cost must never *increase* the analytic
+/// optimal speculation length.
+#[test]
+fn costlier_draft_model_shrinks_sopt() {
+    let cfg = sim_cfg();
+    let acceptance = AcceptanceModel::paper();
+    let (alpha, beta) = cfg.llm.linearize(4, 8, 96);
+    let cheap = TotalTimeModel {
+        acceptance,
+        cost: StepCostModel {
+            batch: 4,
+            alpha,
+            beta,
+            t_ssm: 0.0,
+            r2: 1.0,
+        },
+    };
+    let dear = TotalTimeModel {
+        acceptance,
+        cost: StepCostModel {
+            batch: 4,
+            alpha,
+            beta,
+            t_ssm: beta * 0.5, // absurdly expensive draft model
+            r2: 1.0,
+        },
+    };
+    assert!(dear.s_opt(8) <= cheap.s_opt(8));
+}
+
+/// Fig. 4's structure in the simulator: the adaptive speedup over
+/// no-spec shrinks monotonically-ish as batch grows, staying > 1.
+#[test]
+fn speedup_decreases_with_batch() {
+    let cfg = sim_cfg();
+    let lut = simulated_lut(&cfg, &[1, 4, 16], 8, 80);
+    let mut rng = Pcg64::new(2);
+    let mut prev = f64::INFINITY;
+    for &b in &[1usize, 4, 16] {
+        let plens = vec![16usize; b];
+        let (t0, _, _) = batch_service_time(&cfg, &SpecPolicy::NoSpec, &plens, &mut rng);
+        let (t1, _, _) = batch_service_time(
+            &cfg,
+            &SpecPolicy::Adaptive(lut.clone()),
+            &plens,
+            &mut rng,
+        );
+        let speedup = t0 / t1;
+        assert!(speedup > 1.05, "b={b}: speedup {speedup} too small");
+        assert!(
+            speedup <= prev * 1.15,
+            "b={b}: speedup {speedup} grew vs {prev}"
+        );
+        prev = speedup;
+    }
+}
+
+/// Queueing sanity at the two traffic extremes (Fig. 5's axes): intense
+/// traffic must queue, sparse must not.
+#[test]
+fn queueing_delay_appears_only_under_load() {
+    let cfg = sim_cfg();
+    let pool = vec![Prompt {
+        ids: vec![1; 16],
+        text: String::new(),
+    }];
+    let policy = SpecPolicy::Fixed(2);
+    let sparse = Trace::generate(
+        &TrafficPattern::Stationary {
+            interval: 30.0,
+            cv: 0.5,
+        },
+        &pool,
+        40,
+        1,
+    );
+    let rec = simulate_trace(&cfg, &policy, &sparse);
+    let mean_queue: f64 = rec
+        .records()
+        .iter()
+        .map(|r| r.queue_delay())
+        .sum::<f64>()
+        / rec.len() as f64;
+    assert!(mean_queue < 0.5, "sparse traffic should not queue: {mean_queue}");
+
+    let dense = Trace::generate(
+        &TrafficPattern::Stationary {
+            interval: 0.01,
+            cv: 0.5,
+        },
+        &pool,
+        40,
+        1,
+    );
+    let rec = simulate_trace(&cfg, &policy, &dense);
+    let mean_queue_dense: f64 = rec
+        .records()
+        .iter()
+        .map(|r| r.queue_delay())
+        .sum::<f64>()
+        / rec.len() as f64;
+    assert!(
+        mean_queue_dense > mean_queue * 10.0,
+        "dense traffic must queue: {mean_queue_dense} vs {mean_queue}"
+    );
+}
+
+/// The deterministic trace contract: identical seeds give identical
+/// simulated latencies (experiments are exactly reproducible).
+#[test]
+fn simulation_is_deterministic() {
+    let cfg = sim_cfg();
+    let pool = vec![Prompt {
+        ids: vec![1; 12],
+        text: String::new(),
+    }];
+    let trace = Trace::generate(
+        &TrafficPattern::fig6(),
+        &pool,
+        120,
+        13,
+    );
+    let a = simulate_trace(&cfg, &SpecPolicy::Fixed(4), &trace);
+    let b = simulate_trace(&cfg, &SpecPolicy::Fixed(4), &trace);
+    let lat = |r: &specbatch::metrics::LatencyRecorder| {
+        r.records().iter().map(|x| x.latency()).collect::<Vec<_>>()
+    };
+    assert_eq!(lat(&a), lat(&b));
+}
