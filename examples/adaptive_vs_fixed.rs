@@ -4,17 +4,28 @@
 //! split — the real-execution miniature of Fig. 4.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example adaptive_vs_fixed
+//! make artifacts && cargo run --release --features pjrt --example adaptive_vs_fixed
 //! ```
+#![cfg_attr(not(feature = "pjrt"), allow(unused_imports, dead_code))]
 
 use anyhow::Result;
 
 use specbatch::engine::{Engine, EngineConfig};
+#[cfg(feature = "pjrt")]
 use specbatch::runtime::Runtime;
 use specbatch::scheduler::profiler::{profile, ProfilerConfig};
 use specbatch::scheduler::SpecPolicy;
 use specbatch::util::prng::Pcg64;
 
+#[cfg(not(feature = "pjrt"))]
+fn main() {
+    eprintln!(
+        "adaptive_vs_fixed drives the real PJRT runtime — rebuild with \
+         --features pjrt and run `make artifacts`"
+    );
+}
+
+#[cfg(feature = "pjrt")]
 fn main() -> Result<()> {
     specbatch::util::logging::init_from_env();
     let rt = Runtime::load("artifacts")?;

@@ -9,8 +9,9 @@
 //!    optimum from actual execution.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example analytic_model
+//! make artifacts && cargo run --release --features pjrt --example analytic_model
 //! ```
+#![cfg_attr(not(feature = "pjrt"), allow(unused_imports, dead_code))]
 
 use std::time::Instant;
 
@@ -18,11 +19,22 @@ use anyhow::Result;
 
 use specbatch::analytic::{AcceptanceModel, StepCostModel, TotalTimeModel};
 use specbatch::engine::{Engine, EngineConfig};
+#[cfg(feature = "pjrt")]
 use specbatch::model::Model;
+#[cfg(feature = "pjrt")]
 use specbatch::runtime::Runtime;
 use specbatch::scheduler::SpecPolicy;
 use specbatch::util::prng::Pcg64;
 
+#[cfg(not(feature = "pjrt"))]
+fn main() {
+    eprintln!(
+        "analytic_model drives the real PJRT runtime — rebuild with \
+         --features pjrt and run `make artifacts`"
+    );
+}
+
+#[cfg(feature = "pjrt")]
 fn main() -> Result<()> {
     specbatch::util::logging::init_from_env();
     let rt = Runtime::load("artifacts")?;

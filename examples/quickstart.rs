@@ -2,16 +2,28 @@
 //! prompts with batched speculative decoding, and print acceptance stats.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example quickstart
+//! make artifacts && cargo run --release --features pjrt --example quickstart
 //! ```
+#![cfg_attr(not(feature = "pjrt"), allow(unused_imports, dead_code))]
 
 use anyhow::Result;
 
 use specbatch::engine::{Engine, EngineConfig};
+#[cfg(feature = "pjrt")]
 use specbatch::runtime::Runtime;
 use specbatch::scheduler::SpecPolicy;
 use specbatch::util::prng::Pcg64;
 
+#[cfg(not(feature = "pjrt"))]
+fn main() {
+    eprintln!(
+        "quickstart drives the real PJRT runtime — rebuild with --features pjrt \
+         and run `make artifacts` (try `--example continuous_batching` for an \
+         artifact-free demo)"
+    );
+}
+
+#[cfg(feature = "pjrt")]
 fn main() -> Result<()> {
     specbatch::util::logging::init_from_env();
     let rt = Runtime::load("artifacts")?;

@@ -9,17 +9,20 @@
 //! request latency (queueing included) and throughput.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example serve_dynamic
+//! make artifacts && cargo run --release --features pjrt --example serve_dynamic
 //! # knobs: SPECBATCH_REQUESTS=48 SPECBATCH_INTERVAL=0.4 SPECBATCH_CV=2
+//! #        SPECBATCH_MODE=continuous for round-granular batching
 //! ```
+#![cfg_attr(not(feature = "pjrt"), allow(unused_imports, dead_code))]
 
 use std::path::PathBuf;
 
 use anyhow::Result;
 
 use specbatch::config::PolicySpec;
+#[cfg(feature = "pjrt")]
 use specbatch::dataset::Dataset;
-use specbatch::server::{run_experiment, ServerConfig};
+use specbatch::server::{run_experiment, Backend, SchedulingMode, ServerConfig};
 use specbatch::traffic::{Trace, TrafficPattern};
 use specbatch::util::csv::{f, Csv};
 
@@ -30,6 +33,16 @@ fn env_f64(key: &str, default: f64) -> f64 {
         .unwrap_or(default)
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn main() {
+    eprintln!(
+        "serve_dynamic drives the real PJRT runtime — rebuild with \
+         --features pjrt and run `make artifacts` (the stub-backend server \
+         is exercised by `specbatch serve` and tests/batcher_stub.rs)"
+    );
+}
+
+#[cfg(feature = "pjrt")]
 fn main() -> Result<()> {
     specbatch::util::logging::init_from_env();
     let artifacts = PathBuf::from("artifacts");
@@ -39,6 +52,11 @@ fn main() -> Result<()> {
     let interval = env_f64("SPECBATCH_INTERVAL", 0.25);
     let cv = env_f64("SPECBATCH_CV", 2.0);
     let tokens = env_f64("SPECBATCH_TOKENS", 24.0) as usize;
+    let mode = match std::env::var("SPECBATCH_MODE").as_deref() {
+        Ok("continuous") => SchedulingMode::Continuous,
+        _ => SchedulingMode::Static,
+    };
+    println!("scheduling mode: {mode:?}");
 
     // ONE trace shared by all comparison points (paper methodology)
     let pattern = TrafficPattern::Stationary { interval, cv };
@@ -69,9 +87,11 @@ fn main() -> Result<()> {
         let cfg = ServerConfig {
             max_batch: 8,
             max_new_tokens: tokens,
+            mode,
             ..ServerConfig::default()
         };
-        let (rec, lut) = run_experiment(artifacts.clone(), cfg, policy, None, &trace)?;
+        let (rec, lut, _rounds) =
+            run_experiment(Backend::Artifacts(artifacts.clone()), cfg, policy, None, &trace)?;
         if let Some(lut) = lut {
             println!("[{label}] profiled LUT: {}", lut.to_json().compact());
         }

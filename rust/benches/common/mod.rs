@@ -9,8 +9,6 @@
 
 use std::path::PathBuf;
 
-use specbatch::runtime::Runtime;
-
 /// Artifacts directory, honouring `SPECBATCH_ARTIFACTS`.
 pub fn artifacts_dir() -> PathBuf {
     std::env::var("SPECBATCH_ARTIFACTS")
@@ -22,7 +20,8 @@ pub fn artifacts_dir() -> PathBuf {
 
 /// Load the runtime, or explain how to build artifacts and exit 0 (so
 /// `cargo bench` stays green on a fresh checkout).
-pub fn load_runtime_or_exit() -> Runtime {
+#[cfg(feature = "pjrt")]
+pub fn load_runtime_or_exit() -> specbatch::runtime::Runtime {
     let dir = artifacts_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!(
@@ -31,13 +30,23 @@ pub fn load_runtime_or_exit() -> Runtime {
         );
         std::process::exit(0);
     }
-    match Runtime::load(&dir) {
+    match specbatch::runtime::Runtime::load(&dir) {
         Ok(rt) => rt,
         Err(e) => {
             eprintln!("failed to load artifacts: {e}");
             std::process::exit(1);
         }
     }
+}
+
+/// Uniform skip message for real-execution sections in stub-only builds.
+#[cfg(not(feature = "pjrt"))]
+pub fn skip_real(section: &str) {
+    eprintln!(
+        "SKIP {section}: real execution needs a `--features pjrt` build \
+         (uncomment the `xla` dependency in rust/Cargo.toml, then run \
+         `make artifacts`); see DESIGN.md §Feature flags"
+    );
 }
 
 /// Bench scale: "quick" (CI-sized) or "full" (paper-shaped, default).

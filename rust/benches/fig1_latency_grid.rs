@@ -15,7 +15,6 @@
 #[allow(dead_code)]
 mod common;
 
-use specbatch::scheduler::SpecPolicy;
 use specbatch::simulator::{
     per_token_latency, AcceptanceProcess, CostModel, GpuProfile, ModelProfile, SimConfig,
 };
@@ -25,6 +24,11 @@ use specbatch::util::prng::Pcg64;
 fn main() {
     sim_grid();
     real_grid();
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn real_grid() {
+    common::skip_real("Fig. 1 real-execution grid");
 }
 
 fn sim_grid() {
@@ -91,7 +95,10 @@ fn sim_grid() {
     println!("\n-> results/fig1_sim.csv");
 }
 
+#[cfg(feature = "pjrt")]
 fn real_grid() {
+    use specbatch::scheduler::SpecPolicy;
+
     println!("\n== Fig. 1 (real execution, tiny models on CPU PJRT) ==");
     let rt = common::load_runtime_or_exit();
     let dataset = rt.dataset().expect("dataset");

@@ -14,12 +14,23 @@
 #[allow(dead_code)]
 mod common;
 
+#[cfg(feature = "pjrt")]
 use specbatch::analytic::{l_of_s_estimate, AcceptanceModel};
+#[cfg(feature = "pjrt")]
 use specbatch::engine::{Engine, EngineConfig};
+#[cfg(feature = "pjrt")]
 use specbatch::scheduler::SpecPolicy;
+#[cfg(feature = "pjrt")]
 use specbatch::util::csv::{f, Csv};
+#[cfg(feature = "pjrt")]
 use specbatch::util::prng::Pcg64;
 
+#[cfg(not(feature = "pjrt"))]
+fn main() {
+    common::skip_real("Fig. 2 acceptance-curve measurement");
+}
+
+#[cfg(feature = "pjrt")]
 fn main() {
     let rt = common::load_runtime_or_exit();
     let dataset = rt.dataset().expect("dataset");

@@ -17,16 +17,17 @@
 #[allow(dead_code)]
 mod common;
 
-use std::time::Instant;
-
-use specbatch::model::Model;
 use specbatch::simulator::{CostModel, GpuProfile, ModelProfile};
 use specbatch::util::csv::{f, Csv};
-use specbatch::util::stats::linear_fit;
 
 fn main() {
     sim_curves();
     real_curves();
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn real_curves() {
+    common::skip_real("Fig. 3 real-execution verify-latency curves");
 }
 
 fn sim_curves() {
@@ -56,7 +57,13 @@ fn sim_curves() {
     println!("-> results/fig3_sim.csv\n");
 }
 
+#[cfg(feature = "pjrt")]
 fn real_curves() {
+    use std::time::Instant;
+
+    use specbatch::model::Model;
+    use specbatch::util::stats::linear_fit;
+
     println!("== Fig. 3 (real execution: tiny LLM verify step on CPU PJRT) ==");
     let rt = common::load_runtime_or_exit();
     let llm = Model::new(&rt, "llm").expect("model");

@@ -16,8 +16,6 @@
 #[allow(dead_code)]
 mod common;
 
-use specbatch::engine::{Engine, EngineConfig};
-use specbatch::scheduler::profiler::{profile, ProfilerConfig};
 use specbatch::scheduler::SpecPolicy;
 use specbatch::simulator::{
     batch_service_time, AcceptanceProcess, CostModel, GpuProfile, ModelProfile, SimConfig,
@@ -30,7 +28,16 @@ fn main() {
     sim();
 }
 
+#[cfg(not(feature = "pjrt"))]
 fn real() {
+    common::skip_real("Fig. 4 real-execution comparison");
+}
+
+#[cfg(feature = "pjrt")]
+fn real() {
+    use specbatch::engine::{Engine, EngineConfig};
+    use specbatch::scheduler::profiler::{profile, ProfilerConfig};
+
     println!("== Fig. 4 (real execution) ==");
     let rt = common::load_runtime_or_exit();
     let dataset = rt.dataset().expect("dataset");

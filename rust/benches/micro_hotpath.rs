@@ -12,12 +12,46 @@ mod common;
 use std::time::Instant;
 
 use specbatch::engine::acceptance::accept_batch;
+#[cfg(feature = "pjrt")]
 use specbatch::engine::{Engine, EngineConfig};
+#[cfg(feature = "pjrt")]
 use specbatch::model::Model;
+#[cfg(feature = "pjrt")]
 use specbatch::scheduler::SpecPolicy;
 use specbatch::util::csv::{f, Csv};
 use specbatch::util::prng::Pcg64;
 
+/// Without the PJRT runtime only the pure host-side sections run.
+#[cfg(not(feature = "pjrt"))]
+fn main() {
+    let mut csv = Csv::new(&["section", "batch", "s", "mean_us"]);
+    {
+        let b = 16;
+        let s = 4;
+        let mut rng = Pcg64::new(1);
+        let draft: Vec<i32> = (0..b * s).map(|_| rng.next_below(512) as i32).collect();
+        let pred: Vec<i32> = (0..b * (s + 1)).map(|_| rng.next_below(512) as i32).collect();
+        let t0 = Instant::now();
+        let iters = 100_000;
+        for _ in 0..iters {
+            std::hint::black_box(accept_batch(
+                std::hint::black_box(&draft),
+                std::hint::black_box(&pred),
+                b,
+                s,
+            ));
+        }
+        let us = t0.elapsed().as_secs_f64() / iters as f64 * 1e6;
+        println!("acceptance(b=16,s=4): {us:.3} µs");
+        csv.row(&["acceptance".into(), b.to_string(), s.to_string(), f(us)]);
+    }
+    csv.write_file(common::results_path("micro_hotpath.csv"))
+        .unwrap();
+    common::skip_real("device-step micro-benchmarks");
+    println!("-> results/micro_hotpath.csv (host sections only)");
+}
+
+#[cfg(feature = "pjrt")]
 fn main() {
     let rt = common::load_runtime_or_exit();
     let dataset = rt.dataset().expect("dataset");

@@ -1,0 +1,481 @@
+//! Continuous (iteration-level) batching — the serving-side tentpole.
+//!
+//! The paper's server is batch-to-completion: while a batch generates its
+//! 128 tokens, new arrivals queue for seconds, and the speculation length
+//! is frozen with the batch.  [`ContinuousBatcher`] instead owns per-row
+//! request lifecycles and works at **round granularity**, in the style of
+//! iteration-level schedulers (Orca) and batched speculation on dynamic
+//! batches (BASS, arXiv:2404.15778):
+//!
+//! * **retire** — finished rows leave the batch the moment they freeze,
+//!   immediately freeing capacity;
+//! * **admit** — queued requests enter free rows at the next round
+//!   boundary instead of waiting for the whole batch to complete;
+//! * **reshape** — when queue pressure outgrows the current bucket, the
+//!   epoch is re-opened at the next larger bucket and unfinished rows are
+//!   carried over (their contexts re-ingested);
+//! * **adapt** — every round re-queries the [`SpecPolicy`] with the
+//!   *live* batch size, so `s` tracks load within a single epoch —
+//!   exactly the regime where the paper's adaptive LUT beats any fixed
+//!   speculation length.
+//!
+//! The batcher is clock-agnostic: the caller supplies `now` (real server:
+//! the experiment clock; tests: a virtual clock).  The discrete-event
+//! mirror for paper-scale sweeps lives in
+//! [`crate::simulator::des::simulate_trace_continuous`].
+
+use std::collections::VecDeque;
+
+use anyhow::{bail, Result};
+
+use crate::engine::{AdmitRequest, BatchState, Engine};
+use crate::metrics::RoundEvent;
+use crate::scheduler::SpecPolicy;
+
+/// Batcher knobs.
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// cap on concurrently live requests (paper: 16, memory-bound)
+    pub max_batch: usize,
+    /// generation budget per request
+    pub max_new_tokens: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            max_batch: 16,
+            max_new_tokens: 128,
+        }
+    }
+}
+
+/// A request waiting for admission.
+#[derive(Debug, Clone)]
+pub struct BatchRequest {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    /// client send time on the experiment clock (t_a)
+    pub sent_at: f64,
+}
+
+/// A completed request.
+#[derive(Debug, Clone)]
+pub struct FinishedRequest {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub sent_at: f64,
+    /// when the request entered a batch row (queueing ends here)
+    pub admitted_at: f64,
+    pub finished_at: f64,
+    /// live batch size right after this request's admission
+    pub batch_at_admit: usize,
+    /// speculation length the policy chose at that batch size
+    pub spec_at_admit: usize,
+}
+
+#[derive(Debug, Clone)]
+struct RowMeta {
+    id: u64,
+    sent_at: f64,
+    admitted_at: f64,
+    batch_at_admit: usize,
+    spec_at_admit: usize,
+}
+
+struct EpochState {
+    state: BatchState,
+    /// slot index -> request metadata (None = vacant slot)
+    slots: Vec<Option<RowMeta>>,
+}
+
+/// The continuous batcher: request queue + at most one active epoch.
+pub struct ContinuousBatcher {
+    cfg: BatcherConfig,
+    queue: VecDeque<BatchRequest>,
+    epoch: Option<EpochState>,
+    epoch_seq: usize,
+    /// per-round (t, epoch, live, queued, s) timeline for Fig. 6-style
+    /// plots and the metrics CSV export
+    pub timeline: Vec<RoundEvent>,
+}
+
+impl ContinuousBatcher {
+    pub fn new(cfg: BatcherConfig) -> ContinuousBatcher {
+        ContinuousBatcher {
+            cfg,
+            queue: VecDeque::new(),
+            epoch: None,
+            epoch_seq: 0,
+            timeline: Vec::new(),
+        }
+    }
+
+    /// Enqueue an arrival (admitted at the next round boundary).
+    pub fn enqueue(&mut self, req: BatchRequest) {
+        self.queue.push_back(req);
+    }
+
+    /// True while there is anything to do (live rows or queued requests).
+    pub fn has_work(&self) -> bool {
+        self.epoch.is_some() || !self.queue.is_empty()
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Live rows of the active epoch (0 when idle).
+    pub fn live_rows(&self) -> usize {
+        self.epoch.as_ref().map_or(0, |e| e.state.live_rows())
+    }
+
+    /// One round boundary: retire finished rows, admit/reshape against the
+    /// queue, then run one decode round.  Returns the requests completed
+    /// at this boundary.
+    pub fn step(
+        &mut self,
+        engine: &mut Engine<'_>,
+        policy: &SpecPolicy,
+        now: f64,
+    ) -> Result<Vec<FinishedRequest>> {
+        let mut finished = Vec::new();
+
+        // --- retire: free capacity the moment rows finish ---
+        if let Some(ep) = &mut self.epoch {
+            for retired in engine.retire_finished(&mut ep.state) {
+                let meta = ep.slots[retired.slot]
+                    .take()
+                    .expect("retired slot carries metadata");
+                finished.push(FinishedRequest {
+                    id: meta.id,
+                    tokens: retired.tokens,
+                    sent_at: meta.sent_at,
+                    admitted_at: meta.admitted_at,
+                    finished_at: now,
+                    batch_at_admit: meta.batch_at_admit,
+                    spec_at_admit: meta.spec_at_admit,
+                });
+            }
+            if !ep.state.has_live() && self.queue.is_empty() {
+                self.epoch = None;
+            }
+        }
+
+        // --- admit / reshape at the round boundary ---
+        if !self.queue.is_empty() {
+            let live = self.live_rows();
+            let want = (live + self.queue.len()).min(self.cfg.max_batch);
+            let desired_bucket = engine.limits().bucket_for_clamped(want);
+            let current_bucket = self.epoch.as_ref().map(|e| e.state.bucket());
+            match current_bucket {
+                None => {
+                    self.start_epoch(engine, policy, desired_bucket, now, Vec::new())?;
+                }
+                Some(bucket) if desired_bucket > bucket => {
+                    // reshape: carry unfinished rows into a larger bucket
+                    let old = self.epoch.take().expect("epoch present");
+                    let carry: Vec<(AdmitRequest, RowMeta)> = engine
+                        .export_rows(&old.state)
+                        .into_iter()
+                        .map(|(slot, req)| {
+                            let meta = old.slots[slot]
+                                .clone()
+                                .expect("live slot carries metadata");
+                            (req, meta)
+                        })
+                        .collect();
+                    self.start_epoch(engine, policy, desired_bucket, now, carry)?;
+                }
+                Some(_) => {
+                    self.admit_from_queue(engine, policy, now)?;
+                }
+            }
+        }
+
+        // --- one decode round ---
+        if let Some(ep) = &mut self.epoch {
+            if ep.state.has_live() {
+                let info = engine.decode_round(&mut ep.state, policy)?;
+                self.timeline.push(RoundEvent {
+                    t: now,
+                    epoch: self.epoch_seq,
+                    live: info.live,
+                    queued: self.queue.len(),
+                    s: info.s,
+                });
+            }
+        }
+        Ok(finished)
+    }
+
+    /// Open a fresh epoch at `bucket`: batch-prefill queued requests into
+    /// the leading slots, then re-admit any carried-over rows.
+    fn start_epoch(
+        &mut self,
+        engine: &mut Engine<'_>,
+        policy: &SpecPolicy,
+        bucket: usize,
+        now: f64,
+        carry: Vec<(AdmitRequest, RowMeta)>,
+    ) -> Result<()> {
+        let capacity = bucket
+            .saturating_sub(carry.len())
+            .min(self.cfg.max_batch.saturating_sub(carry.len()));
+        let n_fresh = self.queue.len().min(capacity);
+        let fresh: Vec<BatchRequest> = self.queue.drain(..n_fresh).collect();
+        debug_assert!(!fresh.is_empty() || !carry.is_empty());
+
+        // step() only opens an epoch while the queue is non-empty, and a
+        // reshape always leaves at least one slot of fresh capacity (the
+        // bucket math in step() guarantees live < max_batch), so there is
+        // always a fresh prompt to seed the prefill with.
+        if fresh.is_empty() {
+            bail!("start_epoch: nothing to admit");
+        }
+        let may_speculate = !matches!(policy, SpecPolicy::NoSpec);
+        self.epoch_seq += 1;
+        let mut slots: Vec<Option<RowMeta>> = vec![None; bucket];
+
+        let live_after = fresh.len() + carry.len();
+        let spec_now = policy.spec_len(live_after, engine.limits().max_spec_len(bucket));
+
+        let prompts: Vec<Vec<i32>> = fresh.iter().map(|r| r.prompt.clone()).collect();
+        let mut state =
+            engine.prefill_rows(&prompts, bucket, may_speculate, self.cfg.max_new_tokens)?;
+        for (i, req) in fresh.iter().enumerate() {
+            slots[i] = Some(RowMeta {
+                id: req.id,
+                sent_at: req.sent_at,
+                admitted_at: now,
+                batch_at_admit: live_after,
+                spec_at_admit: spec_now,
+            });
+        }
+
+        if !carry.is_empty() {
+            let reqs: Vec<AdmitRequest> = carry.iter().map(|(r, _)| r.clone()).collect();
+            let carried_slots = engine.admit_rows(&mut state, &reqs)?;
+            for (slot, (_, meta)) in carried_slots.into_iter().zip(carry) {
+                // carried rows keep their original admission metadata
+                slots[slot] = Some(meta);
+            }
+        }
+
+        self.epoch = Some(EpochState { state, slots });
+        Ok(())
+    }
+
+    /// Admit queued requests into the active epoch's free slots.
+    fn admit_from_queue(
+        &mut self,
+        engine: &mut Engine<'_>,
+        policy: &SpecPolicy,
+        now: f64,
+    ) -> Result<()> {
+        let ep = self.epoch.as_mut().expect("active epoch");
+        let live = ep.state.live_rows();
+        let k = ep
+            .state
+            .free_slots()
+            .min(self.queue.len())
+            .min(self.cfg.max_batch.saturating_sub(live));
+        if k == 0 {
+            return Ok(());
+        }
+        let fresh: Vec<BatchRequest> = self.queue.drain(..k).collect();
+        let reqs: Vec<AdmitRequest> = fresh
+            .iter()
+            .map(|r| AdmitRequest {
+                context: r.prompt.clone(),
+                prompt_len: r.prompt.len(),
+                max_new: self.cfg.max_new_tokens,
+            })
+            .collect();
+        let slots = engine.admit_rows(&mut ep.state, &reqs)?;
+        let live_after = ep.state.live_rows();
+        let spec_now = policy.spec_len(
+            live_after,
+            engine.limits().max_spec_len(ep.state.bucket()),
+        );
+        for (slot, req) in slots.into_iter().zip(fresh) {
+            ep.slots[slot] = Some(RowMeta {
+                id: req.id,
+                sent_at: req.sent_at,
+                admitted_at: now,
+                batch_at_admit: live_after,
+                spec_at_admit: spec_now,
+            });
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::EngineConfig;
+    use crate::testkit::stub::{StubModel, StubRole, StubSpec};
+
+    fn stub_engine() -> Engine<'static> {
+        Engine::stub(StubSpec::default(), EngineConfig::default()).unwrap()
+    }
+
+    fn chain(start: i32, n: usize) -> Vec<i32> {
+        let m = StubModel::new(StubSpec::default(), StubRole::Llm);
+        let mut out = Vec::with_capacity(n);
+        let mut cur = start;
+        for _ in 0..n {
+            cur = m.llm_next(cur);
+            out.push(cur);
+        }
+        out
+    }
+
+    fn drive(
+        batcher: &mut ContinuousBatcher,
+        engine: &mut Engine<'_>,
+        policy: &SpecPolicy,
+        arrivals: &mut Vec<(usize, BatchRequest)>, // (step index, request)
+    ) -> Vec<FinishedRequest> {
+        let mut finished = Vec::new();
+        let mut step = 0usize;
+        while batcher.has_work() || !arrivals.is_empty() {
+            arrivals.retain(|(at, req)| {
+                if *at <= step {
+                    batcher.enqueue(req.clone());
+                    false
+                } else {
+                    true
+                }
+            });
+            let now = step as f64 * 1e-3;
+            finished.extend(batcher.step(engine, policy, now).unwrap());
+            step += 1;
+            assert!(step < 10_000, "batcher failed to drain");
+        }
+        finished
+    }
+
+    #[test]
+    fn serves_every_request_losslessly_across_staggered_arrivals() {
+        let policy = SpecPolicy::Fixed(3);
+        let mut engine = stub_engine();
+        let mut batcher = ContinuousBatcher::new(BatcherConfig {
+            max_batch: 8,
+            max_new_tokens: 12,
+        });
+        let prompts: Vec<Vec<i32>> = vec![
+            vec![5, 9],
+            vec![7],
+            vec![40, 41, 42],
+            vec![11, 12],
+            vec![23],
+            vec![30, 8, 4, 19],
+        ];
+        let mut arrivals: Vec<(usize, BatchRequest)> = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                (
+                    i * 2, // staggered: arrive while earlier rows decode
+                    BatchRequest {
+                        id: i as u64,
+                        prompt: p.clone(),
+                        sent_at: i as f64 * 1e-3,
+                    },
+                )
+            })
+            .collect();
+        let finished = drive(&mut batcher, &mut engine, &policy, &mut arrivals);
+
+        assert_eq!(finished.len(), prompts.len());
+        for f in &finished {
+            let expect = chain(*prompts[f.id as usize].last().unwrap(), 12);
+            assert_eq!(f.tokens, expect, "request {} diverged", f.id);
+            assert!(f.admitted_at >= f.sent_at - 1e-9);
+            assert!(f.finished_at >= f.admitted_at);
+            assert!(f.batch_at_admit >= 1 && f.batch_at_admit <= 8);
+        }
+    }
+
+    #[test]
+    fn timeline_shows_batch_growth_within_one_epoch() {
+        // one early request, then a burst: the live batch must grow
+        // mid-epoch and the adaptive policy must change s accordingly
+        let lut = crate::scheduler::Lut::new(
+            [(1usize, 5usize), (2, 4), (4, 3), (8, 2), (16, 1)]
+                .into_iter()
+                .collect(),
+        )
+        .unwrap();
+        let policy = SpecPolicy::Adaptive(lut);
+        let mut engine = stub_engine();
+        let mut batcher = ContinuousBatcher::new(BatcherConfig {
+            max_batch: 8,
+            max_new_tokens: 24,
+        });
+        let mut arrivals: Vec<(usize, BatchRequest)> = vec![(
+            0,
+            BatchRequest {
+                id: 0,
+                prompt: vec![5],
+                sent_at: 0.0,
+            },
+        )];
+        for i in 1..6u64 {
+            arrivals.push((
+                2, // all five arrive while request 0 is mid-generation
+                BatchRequest {
+                    id: i,
+                    prompt: vec![6 + i as i32],
+                    sent_at: 1e-3,
+                },
+            ));
+        }
+        let finished = drive(&mut batcher, &mut engine, &policy, &mut arrivals);
+        assert_eq!(finished.len(), 6);
+
+        let lives: Vec<usize> = batcher.timeline.iter().map(|e| e.live).collect();
+        let specs: Vec<usize> = batcher.timeline.iter().map(|e| e.s).collect();
+        assert!(lives.iter().any(|&l| l == 1), "lives {lives:?}");
+        assert!(lives.iter().any(|&l| l > 1), "lives {lives:?}");
+        // the adaptive policy changed s as the live batch changed
+        assert!(
+            specs.iter().collect::<std::collections::BTreeSet<_>>().len() > 1,
+            "s never adapted: {specs:?}"
+        );
+        // carried rows keep generating correctly across the reshape
+        for f in &finished {
+            assert_eq!(f.tokens.len(), 24);
+        }
+    }
+
+    #[test]
+    fn respects_max_batch_under_burst() {
+        let policy = SpecPolicy::Fixed(2);
+        let mut engine = stub_engine();
+        let mut batcher = ContinuousBatcher::new(BatcherConfig {
+            max_batch: 4,
+            max_new_tokens: 8,
+        });
+        let mut arrivals: Vec<(usize, BatchRequest)> = (0..12u64)
+            .map(|i| {
+                (
+                    0usize,
+                    BatchRequest {
+                        id: i,
+                        prompt: vec![5 + i as i32],
+                        sent_at: 0.0,
+                    },
+                )
+            })
+            .collect();
+        let finished = drive(&mut batcher, &mut engine, &policy, &mut arrivals);
+        assert_eq!(finished.len(), 12);
+        assert!(batcher.timeline.iter().all(|e| e.live <= 4));
+        for f in &finished {
+            assert_eq!(f.tokens, chain(5 + f.id as i32, 8));
+        }
+    }
+}

@@ -101,6 +101,39 @@ mod tests {
     }
 
     #[test]
+    fn single_token_draft_accept_and_reject() {
+        let hit = accept_row(&[5], &[5, 8]);
+        assert_eq!(hit.accepted, 1);
+        assert_eq!(hit.commit, vec![5, 8]);
+        let miss = accept_row(&[5], &[6, 8]);
+        assert_eq!(miss.accepted, 0);
+        assert_eq!(miss.commit, vec![6]);
+    }
+
+    #[test]
+    fn batch_where_every_row_rejects_still_commits_one_each() {
+        let draft = [1, 2, 3, 4, 5, 6];
+        let pred = [9, 1, 2, 8, 3, 4, 7, 5, 6]; // first prediction differs per row
+        let rows = accept_batch(&draft, &pred, 3, 2);
+        for (i, r) in rows.iter().enumerate() {
+            assert_eq!(r.accepted, 0, "row {i}");
+            assert_eq!(r.commit.len(), 1, "row {i}");
+            assert_eq!(r.commit[0], pred[i * 3], "row {i}");
+        }
+    }
+
+    #[test]
+    fn commit_structure_invariant_holds() {
+        // commit = accepted prefix of the draft + exactly one LLM token
+        let draft = [5, 6, 7, 8];
+        let pred = [5, 6, 9, 1, 2];
+        let r = accept_row(&draft, &pred);
+        assert_eq!(r.commit.len(), r.accepted + 1);
+        assert_eq!(&r.commit[..r.accepted], &draft[..r.accepted]);
+        assert_eq!(r.commit[r.accepted], pred[r.accepted]);
+    }
+
+    #[test]
     fn commit_always_advances() {
         // termination property: every row commits >= 1 token
         for draft in [&[][..], &[1][..], &[1, 2, 3][..]] {

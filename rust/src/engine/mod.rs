@@ -1,17 +1,24 @@
 //! The batched speculative decoding engine (the paper's Sec. 3 prototype,
 //! re-built as the L3 hot path).
 //!
-//! One [`Engine::generate_batch`] call serves one batch to completion:
+//! The engine is **reentrant at round granularity**: a [`BatchState`]
+//! owns the per-row lifecycles and KV caches of one serving epoch, and
+//! the step API drives it one decode round at a time:
 //!
 //! ```text
-//! prefill(LLM) ─ prefill(SSM, if the policy may speculate)
-//! loop:
-//!   s = policy(live batch size)
-//!   s == 0 ->  verify_s0(LLM)                      # plain batched decode
-//!   s >= 1 ->  speculate(SSM, s) -> verify(LLM, s) # Algorithm 1, batched
-//!   host: first-mismatch acceptance, commit, clamp both KV ingest counters
-//! until every live row hit max_new_tokens (or <eos>)
+//! prefill_rows(prompts)            # batch prefill -> BatchState
+//! loop at round boundaries:
+//!   retire_finished(state)         # free slots the moment rows finish
+//!   admit_rows(state, queued)      # ingest new requests into free rows
+//!   decode_round(state, policy)    # s = policy(LIVE batch size), then
+//!                                  #   s == 0 -> plain verify round
+//!                                  #   s >= 1 -> speculate + verify + accept
 //! ```
+//!
+//! [`Engine::generate_batch`] (batch-to-completion, the paper's setting)
+//! and the continuous batcher ([`crate::batcher`]) are both thin drivers
+//! over this API, so the policy sees the *live* batch size every round —
+//! the regime where the paper's adaptive LUT pays off.
 //!
 //! State invariants (shared with `python/compile/engine_ref.py`, asserted
 //! in debug builds and by the integration tests):
@@ -19,22 +26,31 @@
 //! * per row: `ingested == committed.len() - 1` after every round for both
 //!   models (the last committed token is fed, not pre-ingested);
 //! * the SSM sees a "delta" of 1..=2 committed tokens per speculation —
-//!   rounds that skip the SSM (s = 0) grow its backlog, which
-//!   [`Engine::ssm_catch_up`] re-ingests before the next speculation;
-//! * rows that finish stay in the batch but frozen: their feeds repeat the
+//!   rounds that skip the SSM (s = 0) and freshly admitted rows grow its
+//!   backlog, which [`Engine::decode_round`] re-ingests via the catch-up
+//!   pass before the next speculation;
+//! * rows that finish stay frozen until retired: their feeds repeat the
 //!   last committed token and their commits are discarded, so executables
-//!   keep their static shapes (the paper's prototype masks finished rows
-//!   the same way).
+//!   keep their static shapes; [`Engine::retire_finished`] turns frozen
+//!   rows back into vacant slots (ingest counters reset to 0) that
+//!   [`Engine::admit_rows`] can refill mid-epoch.
+//!
+//! Backends: the engine runs identically on the real PJRT executables
+//! ([`Engine::new`], `--features pjrt`) and on the deterministic testkit
+//! stub pair ([`Engine::stub`], always available).
 
 pub mod acceptance;
 
+use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
-use crate::model::{KvCache, Model};
-use crate::runtime::Runtime;
+use crate::model::{Kv, ModelHandle};
+#[cfg(feature = "pjrt")]
+use crate::runtime::{ExeKind, Manifest, Runtime};
 use crate::scheduler::SpecPolicy;
+use crate::testkit::stub::{StubModel, StubRole, StubSpec};
 use crate::util::timer::Stopwatch;
 use acceptance::accept_batch;
 
@@ -46,7 +62,8 @@ pub struct EngineConfig {
     pub eos_token: i32,
     pub bos_token: i32,
     pub pad_token: i32,
-    /// record per-round accepted counts (Fig. 2 estimator input)
+    /// kept for config-file compatibility; acceptance samples are always
+    /// recorded for live real rows (the Fig. 2 estimator input)
     pub record_acceptance: bool,
 }
 
@@ -63,7 +80,18 @@ impl Default for EngineConfig {
     }
 }
 
-/// Statistics of one `generate_batch` call.
+/// One decode round as seen by the policy: the live batch size it was
+/// queried with, the speculation length it chose, and the tokens the
+/// round committed to real rows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RoundInfo {
+    pub live: usize,
+    pub s: usize,
+    pub committed: usize,
+}
+
+/// Statistics of one serving epoch (a `generate_batch` call or a
+/// continuous-batching epoch).
 #[derive(Debug, Clone, Default)]
 pub struct GenStats {
     /// decode rounds after prefill (each = <=1 SSM call + 1 LLM call)
@@ -83,6 +111,8 @@ pub struct GenStats {
     pub accept_samples: Vec<u32>,
     /// speculation length used each round
     pub spec_lens: Vec<usize>,
+    /// per-round (live batch, s, committed) timeline
+    pub per_round: Vec<RoundInfo>,
 }
 
 impl GenStats {
@@ -113,17 +143,132 @@ pub struct GenOutput {
     pub stats: GenStats,
 }
 
-/// Per-row state during a batch generation.
+/// Batch limits the engine schedules against: bucket set, per-bucket
+/// speculation/verify spans, prompt and KV capacity.  Derived from the
+/// artifact [`Manifest`] on the PJRT backend and from [`StubSpec`] on the
+/// stub backend.
+#[derive(Debug, Clone)]
+pub struct EngineLimits {
+    /// compiled batch buckets, sorted ascending
+    pub batch_buckets: Vec<usize>,
+    pub max_prompt: usize,
+    pub max_seq: usize,
+    max_spec: BTreeMap<usize, usize>,
+    max_verify: BTreeMap<usize, usize>,
+}
+
+impl EngineLimits {
+    #[cfg(feature = "pjrt")]
+    pub fn from_manifest(m: &Manifest) -> Result<EngineLimits> {
+        let spec = &m
+            .models
+            .get("llm")
+            .ok_or_else(|| anyhow::anyhow!("manifest lacks the llm model"))?
+            .spec;
+        let mut buckets = m.batch_buckets.clone();
+        buckets.sort_unstable();
+        buckets.dedup();
+        let mut max_spec = BTreeMap::new();
+        let mut max_verify = BTreeMap::new();
+        for &b in &buckets {
+            max_spec.insert(b, m.max_spec_len(b));
+            let v = (1..=16)
+                .take_while(|&s| m.has_exe("llm", ExeKind::Verify, b, s))
+                .last()
+                .unwrap_or(0);
+            max_verify.insert(b, v);
+        }
+        Ok(EngineLimits {
+            batch_buckets: buckets,
+            max_prompt: spec.max_prompt,
+            max_seq: spec.max_seq,
+            max_spec,
+            max_verify,
+        })
+    }
+
+    pub fn from_stub(spec: &StubSpec) -> EngineLimits {
+        let mut buckets = spec.batch_buckets.clone();
+        buckets.sort_unstable();
+        buckets.dedup();
+        let max_spec: BTreeMap<usize, usize> =
+            buckets.iter().map(|&b| (b, spec.max_spec)).collect();
+        let max_verify = max_spec.clone();
+        EngineLimits {
+            batch_buckets: buckets,
+            max_prompt: spec.max_prompt,
+            max_seq: spec.max_seq,
+            max_spec,
+            max_verify,
+        }
+    }
+
+    /// Smallest bucket that can hold `n` rows.
+    pub fn bucket_for(&self, n: usize) -> Result<usize> {
+        self.batch_buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= n)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "batch of {n} exceeds the largest compiled bucket {:?}",
+                    self.batch_buckets.last()
+                )
+            })
+    }
+
+    /// Like [`EngineLimits::bucket_for`], but saturates at the largest
+    /// bucket instead of failing (the batcher caps admissions itself).
+    pub fn bucket_for_clamped(&self, n: usize) -> usize {
+        self.batch_buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= n)
+            .unwrap_or_else(|| self.batch_buckets.last().copied().unwrap_or(1))
+    }
+
+    /// Largest speculation length with both verify and speculate support
+    /// at this bucket.
+    pub fn max_spec_len(&self, bucket: usize) -> usize {
+        self.max_spec.get(&bucket).copied().unwrap_or(0)
+    }
+
+    /// Largest verify span at this bucket (the admission ingest chunk).
+    pub fn max_verify_len(&self, bucket: usize) -> usize {
+        self.max_verify.get(&bucket).copied().unwrap_or(0)
+    }
+
+    /// Largest speculation length over all buckets.
+    pub fn max_spec_overall(&self) -> usize {
+        self.max_spec.values().copied().max().unwrap_or(0)
+    }
+}
+
+/// Per-slot state during a serving epoch.  A slot is either vacant
+/// (`real == false`: bucket padding / retired), live, or frozen
+/// (`finished == true`: awaiting retirement).
+#[derive(Debug, Clone)]
 struct Row {
     committed: Vec<i32>,
     prompt_len: usize,
-    /// real request (false = bucket padding row)
+    max_new: usize,
+    /// real request (false = vacant padding slot)
     real: bool,
     /// frozen rows keep shapes static but stop committing
     finished: bool,
 }
 
 impl Row {
+    fn vacant(bos: i32) -> Row {
+        Row {
+            committed: vec![bos],
+            prompt_len: 1,
+            max_new: 0,
+            real: false,
+            finished: true,
+        }
+    }
+
     fn generated(&self) -> usize {
         self.committed.len() - self.prompt_len
     }
@@ -133,35 +278,142 @@ impl Row {
     }
 }
 
+fn committed_total(rows: &[Row]) -> usize {
+    rows.iter().filter(|r| r.real).map(Row::generated).sum()
+}
+
+/// The state of one serving epoch: row lifecycles + KV caches, driven by
+/// the engine's step API one round at a time.
+pub struct BatchState {
+    bucket: usize,
+    may_speculate: bool,
+    rows: Vec<Row>,
+    llm_kv: Kv,
+    ssm_kv: Option<Kv>,
+    /// the SSM's KV is behind (plain rounds / fresh admissions); the next
+    /// speculative round runs the catch-up pass first
+    ssm_backlog: bool,
+    pub stats: GenStats,
+}
+
+impl BatchState {
+    pub fn bucket(&self) -> usize {
+        self.bucket
+    }
+
+    pub fn live_rows(&self) -> usize {
+        self.rows.iter().filter(|r| r.real && !r.finished).count()
+    }
+
+    pub fn has_live(&self) -> bool {
+        self.rows.iter().any(|r| r.real && !r.finished)
+    }
+
+    pub fn occupied_slots(&self) -> usize {
+        self.rows.iter().filter(|r| r.real).count()
+    }
+
+    pub fn free_slots(&self) -> usize {
+        self.bucket - self.occupied_slots()
+    }
+
+    /// Generated tokens of a slot so far (None when the slot is vacant).
+    pub fn generated_tokens(&self, slot: usize) -> Option<&[i32]> {
+        let row = self.rows.get(slot)?;
+        if row.real {
+            Some(&row.committed[row.prompt_len..])
+        } else {
+            None
+        }
+    }
+}
+
+/// A request handed to [`Engine::admit_rows`] at a round boundary.
+#[derive(Debug, Clone)]
+pub struct AdmitRequest {
+    /// full committed context: the prompt, plus any previously generated
+    /// tokens when re-admitting a carried-over row (epoch reshape)
+    pub context: Vec<i32>,
+    /// length of the original prompt prefix inside `context`
+    pub prompt_len: usize,
+    /// generation budget, counted from `prompt_len`
+    pub max_new: usize,
+}
+
+/// A finished row returned by [`Engine::retire_finished`].
+#[derive(Debug, Clone)]
+pub struct RetiredRow {
+    pub slot: usize,
+    /// generated tokens, truncated at `max_new` / first `<eos>`
+    pub tokens: Vec<i32>,
+}
+
 /// The batched speculative decoding engine.
 pub struct Engine<'rt> {
-    rt: &'rt Runtime,
     pub cfg: EngineConfig,
-    llm: Model<'rt>,
-    ssm: Model<'rt>,
+    limits: EngineLimits,
+    llm: ModelHandle<'rt>,
+    ssm: ModelHandle<'rt>,
     /// per-section timing for the §Perf pass
     pub stopwatch: Stopwatch,
-    /// stash for the prefill prediction between prefill() and its commit
-    last_prefill: Option<Vec<i32>>,
+    #[cfg(feature = "pjrt")]
+    rt: Option<&'rt Runtime>,
 }
 
 impl<'rt> Engine<'rt> {
+    /// Engine over the real PJRT runtime (requires `make artifacts`).
+    #[cfg(feature = "pjrt")]
     pub fn new(rt: &'rt Runtime, cfg: EngineConfig) -> Result<Engine<'rt>> {
         Ok(Engine {
-            rt,
             cfg,
-            llm: Model::new(rt, "llm")?,
-            ssm: Model::new(rt, "ssm")?,
+            limits: EngineLimits::from_manifest(&rt.manifest)?,
+            llm: ModelHandle::Pjrt(crate::model::Model::new(rt, "llm")?),
+            ssm: ModelHandle::Pjrt(crate::model::Model::new(rt, "ssm")?),
             stopwatch: Stopwatch::new(),
-            last_prefill: None,
+            rt: Some(rt),
         })
     }
 
-    pub fn runtime(&self) -> &'rt Runtime {
-        self.rt
+    /// Engine over the deterministic stub model pair — no artifacts, no
+    /// PJRT; used by the default test/CI path and the stub server mode.
+    pub fn stub(spec: StubSpec, cfg: EngineConfig) -> Result<Engine<'static>> {
+        if spec.vocab <= 4 {
+            bail!("stub vocab must exceed the 4 reserved specials");
+        }
+        if spec.batch_buckets.is_empty() {
+            bail!("stub needs at least one batch bucket");
+        }
+        if spec.max_prompt == 0 || spec.max_seq <= spec.max_prompt {
+            bail!("stub needs 0 < max_prompt < max_seq");
+        }
+        Ok(Engine {
+            cfg,
+            limits: EngineLimits::from_stub(&spec),
+            llm: ModelHandle::stub(StubModel::new(spec.clone(), StubRole::Llm)),
+            ssm: ModelHandle::stub(StubModel::new(spec, StubRole::Ssm)),
+            stopwatch: Stopwatch::new(),
+            #[cfg(feature = "pjrt")]
+            rt: None,
+        })
     }
 
-    /// Generate up to `max_new` tokens for every prompt, as one batch.
+    pub fn limits(&self) -> &EngineLimits {
+        &self.limits
+    }
+
+    /// Precompile the executable matrix up to (`max_bucket`, `max_s`).
+    /// No-op (0 executables) on the stub backend.
+    pub fn warmup(&mut self, max_bucket: usize, max_s: usize) -> Result<usize> {
+        #[cfg(feature = "pjrt")]
+        if let Some(rt) = self.rt {
+            return rt.warmup(max_bucket, max_s);
+        }
+        let _ = (max_bucket, max_s);
+        Ok(0)
+    }
+
+    /// Generate up to `max_new` tokens for every prompt, as one
+    /// batch-to-completion epoch (the paper's static-batching setting).
     pub fn generate_batch(
         &mut self,
         prompts: &[Vec<i32>],
@@ -173,86 +425,23 @@ impl<'rt> Engine<'rt> {
         if n == 0 {
             bail!("generate_batch: empty prompt list");
         }
-        let max_prompt = self.llm.spec.max_prompt;
-        for (i, p) in prompts.iter().enumerate() {
-            if p.is_empty() || p.len() > max_prompt {
-                bail!(
-                    "prompt {i} length {} out of range 1..={max_prompt}",
-                    p.len()
-                );
-            }
-        }
-        let bucket = self.rt.manifest.bucket_for(n)?;
-        let max_s = self.rt.manifest.max_spec_len(bucket);
-        let may_speculate = !matches!(policy, SpecPolicy::NoSpec) && max_s > 0;
-
-        // --- assemble rows (real + bucket padding) ---
-        let mut rows: Vec<Row> = Vec::with_capacity(bucket);
-        for p in prompts {
-            rows.push(Row {
-                committed: p.clone(),
-                prompt_len: p.len(),
-                real: true,
-                finished: false,
-            });
-        }
-        for _ in n..bucket {
-            rows.push(Row {
-                committed: vec![self.cfg.bos_token],
-                prompt_len: 1,
-                real: false,
-                finished: true, // padding rows are frozen from the start
-            });
-        }
-
-        // --- prefill ---
-        let (mut llm_kv, mut ssm_kv, _prefill_dur) =
-            self.prefill(&rows, bucket, may_speculate)?;
-
-        let mut stats = GenStats::default();
-        let mut ssm_backlog_possible = false;
-
-        // commit the prefill token
-        // (prefill() stashed it in self.last_prefill)
-        let first = self.last_prefill.take().expect("prefill token set");
-        for (row, &t) in rows.iter_mut().zip(&first) {
-            row.committed.push(t);
-        }
-        self.check_eos_and_limits(&mut rows, max_new);
+        let bucket = self.limits.bucket_for(n)?;
+        let may_speculate = !matches!(policy, SpecPolicy::NoSpec);
+        let mut st = self.prefill_rows(prompts, bucket, may_speculate, max_new)?;
 
         let decode_start = Instant::now();
-
-        // --- decode loop ---
-        while rows.iter().any(|r| r.real && !r.finished) {
-            let live = rows.iter().filter(|r| r.real && !r.finished).count();
-            let s = policy.spec_len(live, max_s);
-            stats.spec_lens.push(s);
-            stats.rounds += 1;
-
-            if s == 0 || !may_speculate {
-                self.round_plain(&mut rows, bucket, &mut llm_kv, &mut stats)?;
-                ssm_backlog_possible = true;
-            } else {
-                let ssm_kv = ssm_kv.as_mut().expect("ssm kv exists");
-                if ssm_backlog_possible {
-                    self.ssm_catch_up(&rows, bucket, ssm_kv, &mut stats)?;
-                    ssm_backlog_possible = false;
-                }
-                self.round_speculative(&mut rows, bucket, s, &mut llm_kv, ssm_kv, &mut stats)?;
-            }
-            self.check_eos_and_limits(&mut rows, max_new);
-
+        while st.has_live() {
+            self.decode_round(&mut st, policy)?;
             // hard safety net: a stuck batch must not loop forever
-            if stats.rounds > 4 * (max_new + 2) {
+            if st.stats.rounds > 4 * (max_new + 2) {
                 bail!("decode loop exceeded round budget — state machine bug");
             }
         }
-        stats.decode_wall = decode_start.elapsed();
-        stats.wall = t_start.elapsed();
+        st.stats.decode_wall = decode_start.elapsed();
 
         // --- collect outputs ---
         let mut tokens = Vec::with_capacity(n);
-        for row in rows.iter().take(n) {
+        for row in st.rows.iter().take(n) {
             let gen = &row.committed[row.prompt_len..];
             let mut out: Vec<i32> = Vec::with_capacity(max_new.min(gen.len()));
             for &t in gen.iter().take(max_new) {
@@ -261,25 +450,72 @@ impl<'rt> Engine<'rt> {
                     break;
                 }
             }
-            stats.useful_tokens += out.len();
+            st.stats.useful_tokens += out.len();
             tokens.push(out);
         }
-        Ok(GenOutput { tokens, stats })
+        st.stats.wall = t_start.elapsed();
+        Ok(GenOutput {
+            tokens,
+            stats: st.stats,
+        })
     }
 
-    /// LLM (+ optional SSM) prefill over the padded prompts.
-    fn prefill(
+    /// Batch-prefill `prompts` into a fresh [`BatchState`] at `bucket`
+    /// (prompts occupy slots `0..prompts.len()`, the rest start vacant).
+    /// Commits each row's first generated token.
+    pub fn prefill_rows(
         &mut self,
-        rows: &[Row],
+        prompts: &[Vec<i32>],
         bucket: usize,
-        with_ssm: bool,
-    ) -> Result<(KvCache, Option<KvCache>, Duration)> {
-        let t0 = Instant::now();
-        let p = self.llm.spec.max_prompt;
-        let mut tokens = vec![self.cfg.pad_token; bucket * p];
+        may_speculate: bool,
+        max_new: usize,
+    ) -> Result<BatchState> {
+        if prompts.is_empty() {
+            bail!("prefill_rows: empty prompt list");
+        }
+        if !self.limits.batch_buckets.contains(&bucket) {
+            bail!(
+                "prefill_rows: {bucket} is not a compiled batch bucket ({:?})",
+                self.limits.batch_buckets
+            );
+        }
+        if prompts.len() > bucket {
+            bail!(
+                "prefill_rows: {} prompts exceed bucket {bucket}",
+                prompts.len()
+            );
+        }
+        let max_prompt = self.limits.max_prompt;
+        for (i, p) in prompts.iter().enumerate() {
+            if p.is_empty() || p.len() > max_prompt {
+                bail!(
+                    "prompt {i} length {} out of range 1..={max_prompt}",
+                    p.len()
+                );
+            }
+        }
+        let may_speculate = may_speculate && self.limits.max_spec_len(bucket) > 0;
+
+        // --- assemble rows (real + vacant padding) ---
+        let mut rows: Vec<Row> = Vec::with_capacity(bucket);
+        for p in prompts {
+            rows.push(Row {
+                committed: p.clone(),
+                prompt_len: p.len(),
+                max_new,
+                real: true,
+                finished: false,
+            });
+        }
+        for _ in prompts.len()..bucket {
+            rows.push(Row::vacant(self.cfg.bos_token));
+        }
+
+        // --- padded prefill over both models ---
+        let mut tokens = vec![self.cfg.pad_token; bucket * max_prompt];
         let mut plens = vec![0i32; bucket];
         for (i, row) in rows.iter().enumerate() {
-            tokens[i * p..i * p + row.prompt_len]
+            tokens[i * max_prompt..i * max_prompt + row.prompt_len]
                 .copy_from_slice(&row.committed[..row.prompt_len]);
             plens[i] = row.prompt_len as i32;
         }
@@ -287,9 +523,7 @@ impl<'rt> Engine<'rt> {
         let first = self.stopwatch.time("prefill_llm", || {
             self.llm.prefill(&tokens, &plens, bucket, &mut llm_kv)
         })?;
-        self.last_prefill = Some(first);
-
-        let ssm_kv = if with_ssm {
+        let ssm_kv = if may_speculate {
             let mut kv = self.ssm.new_kv(bucket)?;
             // the SSM's own first prediction is discarded — it only needs KV
             let _ = self.stopwatch.time("prefill_ssm", || {
@@ -299,7 +533,246 @@ impl<'rt> Engine<'rt> {
         } else {
             None
         };
-        Ok((llm_kv, ssm_kv, t0.elapsed()))
+
+        // commit the prefill token
+        for (row, &t) in rows.iter_mut().zip(&first) {
+            row.committed.push(t);
+        }
+        let mut st = BatchState {
+            bucket,
+            may_speculate,
+            rows,
+            llm_kv,
+            ssm_kv,
+            ssm_backlog: false,
+            stats: GenStats::default(),
+        };
+        self.check_eos_and_limits(&mut st.rows);
+        Ok(st)
+    }
+
+    /// Run ONE decode round: query the policy with the *live* batch size,
+    /// then a plain verify round (s = 0) or a speculate/verify/accept
+    /// round (s >= 1).  Freezes rows that hit `<eos>` / their budget.
+    pub fn decode_round(&mut self, st: &mut BatchState, policy: &SpecPolicy) -> Result<RoundInfo> {
+        let live = st.live_rows();
+        if live == 0 {
+            bail!("decode_round: no live rows in the batch");
+        }
+        let max_s = self.limits.max_spec_len(st.bucket);
+        let s = if st.may_speculate {
+            policy.spec_len(live, max_s)
+        } else {
+            0
+        };
+        let before = committed_total(&st.rows);
+        st.stats.spec_lens.push(s);
+        st.stats.rounds += 1;
+
+        {
+            let BatchState {
+                bucket,
+                rows,
+                llm_kv,
+                ssm_kv,
+                ssm_backlog,
+                stats,
+                ..
+            } = st;
+            if s == 0 {
+                self.round_plain(rows, *bucket, llm_kv, stats)?;
+                *ssm_backlog = true;
+            } else {
+                let ssm_kv = ssm_kv.as_mut().expect("speculating epoch owns an SSM KV");
+                if *ssm_backlog {
+                    self.ssm_catch_up(rows, *bucket, ssm_kv, stats)?;
+                    *ssm_backlog = false;
+                }
+                self.round_speculative(rows, *bucket, s, llm_kv, ssm_kv, stats)?;
+            }
+        }
+        self.check_eos_and_limits(&mut st.rows);
+        let info = RoundInfo {
+            live,
+            s,
+            committed: committed_total(&st.rows) - before,
+        };
+        st.stats.per_round.push(info);
+        Ok(info)
+    }
+
+    /// Admit queued requests into vacant slots at a round boundary.
+    /// Contexts are ingested into the LLM KV via chunked verify calls
+    /// (frozen/live rows re-feed their last token and are clamped back);
+    /// the SSM catches up lazily before the next speculative round.
+    /// Returns the slot indices, in request order.
+    pub fn admit_rows(&mut self, st: &mut BatchState, reqs: &[AdmitRequest]) -> Result<Vec<usize>> {
+        if reqs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let vacant: Vec<usize> = st
+            .rows
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| !r.real)
+            .map(|(i, _)| i)
+            .collect();
+        if reqs.len() > vacant.len() {
+            bail!(
+                "admit_rows: {} requests for {} free slots",
+                reqs.len(),
+                vacant.len()
+            );
+        }
+        let mut slots = Vec::with_capacity(reqs.len());
+        for (req, &slot) in reqs.iter().zip(&vacant) {
+            if req.context.is_empty() {
+                bail!("admit_rows: empty context");
+            }
+            if req.prompt_len == 0 || req.prompt_len > req.context.len() {
+                bail!(
+                    "admit_rows: prompt_len {} out of range for a context of {}",
+                    req.prompt_len,
+                    req.context.len()
+                );
+            }
+            if req.context.len() + 1 > self.limits.max_seq {
+                bail!(
+                    "admit_rows: context of {} tokens exceeds the KV capacity {}",
+                    req.context.len(),
+                    self.limits.max_seq
+                );
+            }
+            st.rows[slot] = Row {
+                committed: req.context.clone(),
+                prompt_len: req.prompt_len,
+                max_new: req.max_new,
+                real: true,
+                finished: false,
+            };
+            st.llm_kv.reset_row(slot);
+            if let Some(kv) = &mut st.ssm_kv {
+                kv.reset_row(slot);
+            }
+            slots.push(slot);
+        }
+        self.ingest_admitted(st)?;
+        // freshly admitted rows put the SSM behind by a whole context
+        st.ssm_backlog = true;
+        // a re-admitted context may already contain <eos> past the prompt
+        self.check_eos_and_limits(&mut st.rows);
+        Ok(slots)
+    }
+
+    /// Collect finished rows and turn their slots vacant (KV counters
+    /// reset) so the batcher can refill them.  Returns the retired rows'
+    /// generated tokens.
+    pub fn retire_finished(&mut self, st: &mut BatchState) -> Vec<RetiredRow> {
+        let mut retired = Vec::new();
+        for (i, row) in st.rows.iter_mut().enumerate() {
+            if !(row.real && row.finished) {
+                continue;
+            }
+            let gen = &row.committed[row.prompt_len..];
+            let mut tokens: Vec<i32> = Vec::with_capacity(row.max_new.min(gen.len()));
+            for &t in gen.iter().take(row.max_new) {
+                tokens.push(t);
+                if self.cfg.stop_at_eos && t == self.cfg.eos_token {
+                    break;
+                }
+            }
+            st.stats.useful_tokens += tokens.len();
+            retired.push(RetiredRow { slot: i, tokens });
+            *row = Row::vacant(self.cfg.bos_token);
+            st.llm_kv.reset_row(i);
+            if let Some(kv) = &mut st.ssm_kv {
+                kv.reset_row(i);
+            }
+        }
+        retired
+    }
+
+    /// Export the unfinished rows of an epoch as re-admittable requests
+    /// (used by the batcher to reshape an epoch into a larger bucket).
+    pub fn export_rows(&self, st: &BatchState) -> Vec<(usize, AdmitRequest)> {
+        st.rows
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.real && !r.finished)
+            .map(|(i, r)| {
+                (
+                    i,
+                    AdmitRequest {
+                        context: r.committed.clone(),
+                        prompt_len: r.prompt_len,
+                        max_new: r.max_new,
+                    },
+                )
+            })
+            .collect()
+    }
+
+    /// Chunked LLM ingestion of admitted rows' contexts: repeated verify
+    /// calls where pending rows feed their next context chunk and every
+    /// other row re-feeds its last token (and is clamped back).
+    fn ingest_admitted(&mut self, st: &mut BatchState) -> Result<()> {
+        let max_chunk = self.limits.max_verify_len(st.bucket) + 1;
+        let cap = self.limits.max_seq;
+        loop {
+            let ing: Vec<u32> = st.llm_kv.ingested().to_vec();
+            let pending: Vec<usize> = st
+                .rows
+                .iter()
+                .enumerate()
+                .filter(|(i, r)| {
+                    r.real && !r.finished && (ing[*i] as usize) < r.committed.len() - 1
+                })
+                .map(|(i, _)| i)
+                .collect();
+            if pending.is_empty() {
+                return Ok(());
+            }
+            // the verify capacity check uses the max counter over ALL rows
+            // (non-pending counters are clamped straight back, but only
+            // after the call), so shrink the chunk when any row sits near
+            // the KV capacity — verify spans 1..=max_chunk are all
+            // compiled, shorter chunks just cost extra passes
+            let max_ing = ing.iter().copied().max().unwrap_or(0) as usize;
+            if max_ing + 1 > cap {
+                bail!(
+                    "admit_rows: KV capacity {cap} exhausted (a row has \
+                     ingested {max_ing}) — cannot ingest new contexts"
+                );
+            }
+            let chunk = max_chunk.min(cap - max_ing);
+            let bucket = st.bucket;
+            let mut feed = vec![self.cfg.pad_token; bucket * chunk];
+            let mut desired = vec![0u32; bucket];
+            for (i, row) in st.rows.iter().enumerate() {
+                let start = ing[i] as usize;
+                if pending.contains(&i) {
+                    let take = chunk.min(row.committed.len() - 1 - start);
+                    let piece = &row.committed[start..start + take];
+                    for (j, slot) in feed[i * chunk..(i + 1) * chunk].iter_mut().enumerate() {
+                        // pad the tail by repeating the last real token
+                        *slot = piece[j.min(take - 1)];
+                    }
+                    desired[i] = (start + take) as u32;
+                } else {
+                    let last = row.last();
+                    for slot in feed[i * chunk..(i + 1) * chunk].iter_mut() {
+                        *slot = last;
+                    }
+                    desired[i] = row.committed.len() as u32 - 1;
+                }
+            }
+            let s = chunk - 1;
+            let _ = self.stopwatch.time("ingest", || {
+                self.llm.verify(&feed, s, bucket, &mut st.llm_kv)
+            })?;
+            st.stats.llm_calls += 1;
+            st.llm_kv.clamp_to(&desired);
+        }
     }
 
     /// One plain decode round (s = 0): feed the last committed token.
@@ -307,10 +780,10 @@ impl<'rt> Engine<'rt> {
         &mut self,
         rows: &mut [Row],
         bucket: usize,
-        llm_kv: &mut KvCache,
+        llm_kv: &mut Kv,
         stats: &mut GenStats,
     ) -> Result<()> {
-        let feed: Vec<i32> = rows.iter().map(|r| r.last()).collect();
+        let feed: Vec<i32> = rows.iter().map(Row::last).collect();
         let pred = self
             .stopwatch
             .time("verify", || self.llm.verify(&feed, 0, bucket, llm_kv))?;
@@ -332,8 +805,8 @@ impl<'rt> Engine<'rt> {
         rows: &mut [Row],
         bucket: usize,
         s: usize,
-        llm_kv: &mut KvCache,
-        ssm_kv: &mut KvCache,
+        llm_kv: &mut Kv,
+        ssm_kv: &mut Kv,
         stats: &mut GenStats,
     ) -> Result<()> {
         // --- SSM: delta ingest + draft ---
@@ -364,16 +837,8 @@ impl<'rt> Engine<'rt> {
             row.committed.extend_from_slice(&acc.commit);
             stats.drafted += s;
             stats.accepted += acc.accepted;
-            if self.cfg.record_acceptance && row.real {
+            if row.real {
                 stats.accept_samples.push(acc.accepted as u32);
-            }
-        }
-        if !self.cfg.record_acceptance {
-            // still track live-row acceptance for mean_accepted()
-            for (row, acc) in rows.iter().zip(&results) {
-                if !row.finished && row.real {
-                    stats.accept_samples.push(acc.accepted as u32);
-                }
             }
         }
 
@@ -385,12 +850,13 @@ impl<'rt> Engine<'rt> {
     }
 
     /// Build the SSM delta (the 1..=2 committed tokens it has not seen).
-    fn build_delta(&self, rows: &[Row], ssm_kv: &KvCache) -> Result<(Vec<i32>, Vec<i32>)> {
+    fn build_delta(&self, rows: &[Row], ssm_kv: &Kv) -> Result<(Vec<i32>, Vec<i32>)> {
         let bucket = rows.len();
+        let ingested = ssm_kv.ingested();
         let mut delta = vec![self.cfg.pad_token; bucket * 2];
         let mut dlens = vec![0i32; bucket];
         for (i, row) in rows.iter().enumerate() {
-            let ing = ssm_kv.ingested[i] as usize;
+            let ing = ingested[i] as usize;
             let missing = row.committed.len() - ing;
             if !(1..=2).contains(&missing) {
                 bail!(
@@ -406,21 +872,23 @@ impl<'rt> Engine<'rt> {
         Ok((delta, dlens))
     }
 
-    /// Re-ingest the SSM's backlog after plain-decode rounds so the delta
-    /// invariant holds again.  Each pass ingests up to 2 tokens per row
-    /// via a throwaway `speculate(s=1)` call, then clamps the counters.
+    /// Re-ingest the SSM's backlog (plain-decode rounds / freshly admitted
+    /// rows) so the delta invariant holds again.  Each pass ingests up to
+    /// 2 tokens per row via a throwaway `speculate(s=1)` call, then clamps
+    /// the counters.
     fn ssm_catch_up(
         &mut self,
         rows: &[Row],
         bucket: usize,
-        ssm_kv: &mut KvCache,
+        ssm_kv: &mut Kv,
         stats: &mut GenStats,
     ) -> Result<()> {
         loop {
+            let ingested = ssm_kv.ingested();
             let max_missing = rows
                 .iter()
                 .enumerate()
-                .map(|(i, r)| r.committed.len() - ssm_kv.ingested[i] as usize)
+                .map(|(i, r)| r.committed.len() - ingested[i] as usize)
                 .max()
                 .unwrap_or(0);
             if max_missing <= 2 {
@@ -429,7 +897,7 @@ impl<'rt> Engine<'rt> {
             let mut delta = vec![self.cfg.pad_token; bucket * 2];
             let mut dlens = vec![0i32; bucket];
             for (i, row) in rows.iter().enumerate() {
-                let ing = ssm_kv.ingested[i] as usize;
+                let ing = ingested[i] as usize;
                 // leave at least one committed token un-ingested
                 let take = (row.committed.len() - 1 - ing).clamp(1, 2);
                 for (j, &t) in row.committed[ing..ing + take].iter().enumerate() {
@@ -441,19 +909,18 @@ impl<'rt> Engine<'rt> {
                 self.ssm.speculate(&delta, &dlens, 1, bucket, ssm_kv)
             })?;
             stats.ssm_calls += 1;
-            let clamp: Vec<u32> =
-                rows.iter().map(|r| r.committed.len() as u32 - 1).collect();
+            let clamp: Vec<u32> = rows.iter().map(|r| r.committed.len() as u32 - 1).collect();
             ssm_kv.clamp_to(&clamp);
         }
     }
 
     /// Freeze rows that hit their budget or emitted `<eos>`.
-    fn check_eos_and_limits(&self, rows: &mut [Row], max_new: usize) {
+    fn check_eos_and_limits(&self, rows: &mut [Row]) {
         for row in rows.iter_mut() {
             if row.finished {
                 continue;
             }
-            if row.generated() >= max_new {
+            if row.generated() >= row.max_new {
                 row.finished = true;
                 continue;
             }
@@ -469,7 +936,238 @@ impl<'rt> Engine<'rt> {
 
 #[cfg(test)]
 mod tests {
-    // Engine logic that does not need a Runtime is covered in
-    // acceptance.rs; end-to-end behaviour (including losslessness vs the
-    // Python goldens) lives in rust/tests/engine_integration.rs.
+    use super::*;
+    use crate::testkit::stub::StubModel;
+
+    fn stub_engine() -> Engine<'static> {
+        Engine::stub(StubSpec::default(), EngineConfig::default()).unwrap()
+    }
+
+    /// The greedy reference chain of the stub LLM.
+    fn chain(start: i32, n: usize) -> Vec<i32> {
+        let m = StubModel::new(StubSpec::default(), StubRole::Llm);
+        let mut out = Vec::with_capacity(n);
+        let mut cur = start;
+        for _ in 0..n {
+            cur = m.llm_next(cur);
+            out.push(cur);
+        }
+        out
+    }
+
+    #[test]
+    fn stub_generation_is_lossless_across_policies() {
+        let mut e = stub_engine();
+        let prompts = vec![vec![5, 9, 12], vec![7], vec![30, 31]];
+        let expect: Vec<Vec<i32>> = prompts
+            .iter()
+            .map(|p| chain(*p.last().unwrap(), 20))
+            .collect();
+        for policy in [
+            SpecPolicy::NoSpec,
+            SpecPolicy::Fixed(1),
+            SpecPolicy::Fixed(4),
+            SpecPolicy::Adaptive(
+                crate::scheduler::Lut::new(
+                    [(1usize, 5usize), (4, 3), (16, 1)].into_iter().collect(),
+                )
+                .unwrap(),
+            ),
+        ] {
+            let out = e.generate_batch(&prompts, 20, &policy).unwrap();
+            assert_eq!(out.tokens, expect, "policy {}", policy.label());
+            assert!(out.stats.rounds > 0);
+        }
+    }
+
+    #[test]
+    fn step_api_matches_generate_batch() {
+        let prompts = vec![vec![5, 9], vec![7, 8, 11]];
+        let policy = SpecPolicy::Fixed(3);
+        let reference = stub_engine().generate_batch(&prompts, 16, &policy).unwrap();
+
+        let mut e = stub_engine();
+        let bucket = e.limits().bucket_for(prompts.len()).unwrap();
+        let mut st = e.prefill_rows(&prompts, bucket, true, 16).unwrap();
+        while st.has_live() {
+            e.decode_round(&mut st, &policy).unwrap();
+        }
+        for (i, expect) in reference.tokens.iter().enumerate() {
+            let got = st.generated_tokens(i).unwrap();
+            assert_eq!(&got[..expect.len().min(got.len())], &expect[..]);
+        }
+    }
+
+    #[test]
+    fn per_round_timeline_records_live_and_s() {
+        let mut e = stub_engine();
+        let out = e
+            .generate_batch(&[vec![5], vec![9]], 12, &SpecPolicy::Fixed(2))
+            .unwrap();
+        assert_eq!(out.stats.per_round.len(), out.stats.rounds);
+        for r in &out.stats.per_round {
+            assert!(r.live >= 1 && r.live <= 2);
+            assert!(r.s <= 2);
+            assert!(r.committed >= 1);
+        }
+    }
+
+    #[test]
+    fn admission_mid_epoch_is_lossless() {
+        let policy = SpecPolicy::Fixed(3);
+        let p0 = vec![5, 9, 12];
+        let p1 = vec![7];
+        let p2 = vec![40, 41];
+        let expect = |p: &Vec<i32>| chain(*p.last().unwrap(), 10);
+
+        let mut e = stub_engine();
+        let mut st = e.prefill_rows(&[p0.clone()], 4, true, 10).unwrap();
+        // run a few rounds with only row 0 live
+        for _ in 0..3 {
+            if st.has_live() {
+                e.decode_round(&mut st, &policy).unwrap();
+            }
+        }
+        // admit two more requests into free slots mid-epoch
+        let reqs: Vec<AdmitRequest> = [&p1, &p2]
+            .iter()
+            .map(|p| AdmitRequest {
+                context: (*p).clone(),
+                prompt_len: p.len(),
+                max_new: 10,
+            })
+            .collect();
+        let slots = e.admit_rows(&mut st, &reqs).unwrap();
+        assert_eq!(slots.len(), 2);
+        while st.has_live() {
+            e.decode_round(&mut st, &policy).unwrap();
+        }
+        let retired = e.retire_finished(&mut st);
+        assert_eq!(retired.len(), 3);
+        let by_slot = |slot: usize| {
+            retired
+                .iter()
+                .find(|r| r.slot == slot)
+                .map(|r| r.tokens.clone())
+                .unwrap()
+        };
+        assert_eq!(by_slot(0), expect(&p0));
+        assert_eq!(by_slot(slots[0]), expect(&p1));
+        assert_eq!(by_slot(slots[1]), expect(&p2));
+        // all slots are free again
+        assert_eq!(st.free_slots(), 4);
+        assert!(!st.has_live());
+    }
+
+    #[test]
+    fn retire_frees_slots_for_reuse() {
+        let policy = SpecPolicy::Fixed(2);
+        let mut e = stub_engine();
+        let mut st = e.prefill_rows(&[vec![5]], 2, true, 4).unwrap();
+        while st.has_live() {
+            e.decode_round(&mut st, &policy).unwrap();
+        }
+        let first = e.retire_finished(&mut st);
+        assert_eq!(first.len(), 1);
+        assert_eq!(st.free_slots(), 2);
+        // admit a new request into the recycled slot and finish it
+        let slots = e
+            .admit_rows(
+                &mut st,
+                &[AdmitRequest {
+                    context: vec![9, 10],
+                    prompt_len: 2,
+                    max_new: 6,
+                }],
+            )
+            .unwrap();
+        assert_eq!(slots.len(), 1);
+        while st.has_live() {
+            e.decode_round(&mut st, &policy).unwrap();
+        }
+        let second = e.retire_finished(&mut st);
+        assert_eq!(second.len(), 1);
+        assert_eq!(second[0].tokens, chain(10, 6));
+    }
+
+    #[test]
+    fn odd_batch_pads_to_bucket_and_rejects_oversizes() {
+        let mut e = stub_engine();
+        let out = e
+            .generate_batch(
+                &[vec![5], vec![6], vec![7]],
+                6,
+                &SpecPolicy::Fixed(2),
+            )
+            .unwrap();
+        assert_eq!(out.tokens.len(), 3);
+
+        let too_long = vec![vec![4i32; e.limits().max_prompt + 1]];
+        assert!(e.generate_batch(&too_long, 4, &SpecPolicy::NoSpec).is_err());
+        assert!(e.generate_batch(&[], 4, &SpecPolicy::NoSpec).is_err());
+        let max_bucket = *e.limits().batch_buckets.last().unwrap();
+        let too_many = vec![vec![5i32, 6]; max_bucket + 1];
+        assert!(e.generate_batch(&too_many, 4, &SpecPolicy::NoSpec).is_err());
+    }
+
+    #[test]
+    fn kv_capacity_overflow_is_detected() {
+        let spec = StubSpec {
+            max_seq: 24,
+            ..StubSpec::default()
+        };
+        let mut e = Engine::stub(spec, EngineConfig::default()).unwrap();
+        let err = e
+            .generate_batch(&[vec![5, 6, 7]], 64, &SpecPolicy::Fixed(2))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("overflow"), "{err}");
+    }
+
+    #[test]
+    fn admission_near_kv_capacity_shrinks_the_ingest_chunk() {
+        // a frozen row sitting near max_seq must not make admission fail:
+        // the ingest chunk shrinks to what the capacity check allows
+        let spec = StubSpec {
+            max_seq: 40,
+            ..StubSpec::default()
+        };
+        let policy = SpecPolicy::Fixed(2);
+        let mut e = Engine::stub(spec, EngineConfig::default()).unwrap();
+        let mut st = e.prefill_rows(&[vec![5, 6, 7, 8]], 2, true, 30).unwrap();
+        while st.has_live() {
+            e.decode_round(&mut st, &policy).unwrap();
+        }
+        // do NOT retire: the frozen row keeps its high ingest counter
+        let slots = e
+            .admit_rows(
+                &mut st,
+                &[AdmitRequest {
+                    context: vec![9; 14],
+                    prompt_len: 14,
+                    max_new: 2,
+                }],
+            )
+            .unwrap();
+        while st.has_live() {
+            e.decode_round(&mut st, &policy).unwrap();
+        }
+        let retired = e.retire_finished(&mut st);
+        let new_row = retired.iter().find(|r| r.slot == slots[0]).unwrap();
+        assert_eq!(new_row.tokens, chain(9, 2));
+    }
+
+    #[test]
+    fn spec_len_respects_bucket_cap() {
+        let spec = StubSpec {
+            max_spec: 3,
+            ..StubSpec::default()
+        };
+        let mut e = Engine::stub(spec, EngineConfig::default()).unwrap();
+        let out = e
+            .generate_batch(&[vec![5]], 10, &SpecPolicy::Fixed(8))
+            .unwrap();
+        assert!(out.stats.spec_lens.iter().all(|&s| s <= 3));
+        assert_eq!(out.tokens[0], chain(5, 10));
+    }
 }

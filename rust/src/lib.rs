@@ -10,25 +10,29 @@
 //!   authored in `python/compile/kernels/`, lowered into the same HLO as…
 //! * **L2** — the JAX OPT-style LLM/SSM pair (`python/compile/model.py`),
 //!   AOT-lowered to HLO text per `(kind, batch, s)` executable.
-//! * **L3** — this crate: loads the artifacts through the PJRT C API
-//!   ([`runtime`]), runs the batched speculative decoding loop
-//!   ([`engine`]), picks speculation lengths ([`scheduler`]), serves
-//!   Gamma-distributed traffic through a message queue ([`server`],
-//!   [`traffic`]) and reproduces every figure of the paper ([`simulator`],
-//!   [`analytic`], `rust/benches/`).
+//! * **L3** — this crate: runs the batched speculative decoding loop at
+//!   round granularity ([`engine`]), schedules requests through static or
+//!   continuous batching ([`batcher`], [`server`]), picks speculation
+//!   lengths ([`scheduler`]), generates Gamma-distributed traffic
+//!   ([`traffic`]) and reproduces every figure of the paper
+//!   ([`simulator`], [`analytic`], `rust/benches/`).
 //!
-//! Python never runs on the request path: after `make artifacts` the
-//! binary is self-contained.
+//! Backends: with `--features pjrt` the engine executes the AOT artifacts
+//! through the PJRT C API ([`runtime`]; Python never runs on the request
+//! path).  The default build substitutes a deterministic stub model pair
+//! ([`testkit::stub`]) honouring the identical calling convention, so the
+//! whole serving stack builds, tests and demos without artifacts.
 //!
 //! ## Quick start
 //!
 //! ```no_run
 //! use specbatch::prelude::*;
 //!
-//! let rt = Runtime::load("artifacts")?;
-//! let mut engine = Engine::new(&rt, EngineConfig::default())?;
+//! // default build: deterministic stub pair (swap in Engine::new(&rt, …)
+//! // over a loaded Runtime with --features pjrt + `make artifacts`)
+//! let mut engine = Engine::stub(StubSpec::default(), EngineConfig::default())?;
 //! let out = engine.generate_batch(
-//!     &[vec![1, 5, 9]],
+//!     &[vec![4, 5, 9]],
 //!     16,
 //!     &SpecPolicy::Fixed(3),
 //! )?;
@@ -37,6 +41,7 @@
 //! ```
 
 pub mod analytic;
+pub mod batcher;
 pub mod config;
 pub mod dataset;
 pub mod engine;
@@ -50,11 +55,14 @@ pub mod testkit;
 pub mod traffic;
 pub mod util;
 
-
 /// Most-used types in one import.
 pub mod prelude {
+    pub use crate::batcher::{BatchRequest, BatcherConfig, ContinuousBatcher};
     pub use crate::config::{PolicySpec, ServingConfig};
-    pub use crate::engine::{Engine, EngineConfig, GenOutput};
+    pub use crate::engine::{BatchState, Engine, EngineConfig, GenOutput};
+    #[cfg(feature = "pjrt")]
     pub use crate::runtime::Runtime;
     pub use crate::scheduler::{Lut, SpecPolicy};
+    pub use crate::server::{Backend, SchedulingMode};
+    pub use crate::testkit::stub::StubSpec;
 }

@@ -8,34 +8,42 @@
 //! * `grid`       — real-execution per-token-latency grid (Fig. 1 on the
 //!   tiny models);
 //! * `serve`      — server+client experiment with Gamma traffic
-//!   (Sec. 5.3), reporting request latency;
-//! * `sim`        — paper-scale simulator run (choose GPU/model profiles);
+//!   (Sec. 5.3), static or continuous batching; runs on the stub model
+//!   pair when built without `--features pjrt`;
+//! * `sim`        — paper-scale simulator run (choose GPU/model profiles
+//!   and the scheduling mode);
 //! * `warmup`     — precompile the executable matrix;
 //! * `selfcheck`  — load everything and run a smoke generation.
 //!
-//! `specbatch <cmd> --help` prints each command's options.
-
-use std::path::PathBuf;
+//! `specbatch <cmd> --help` prints each command's options.  Commands that
+//! need real artifacts (`quickstart`, `profile`, `grid`, `warmup`,
+//! `selfcheck`) require a build with `--features pjrt`.
 
 use anyhow::{bail, Result};
 
 use specbatch::config::PolicySpec;
-use specbatch::dataset::Dataset;
-use specbatch::engine::{Engine, EngineConfig};
-use specbatch::runtime::Runtime;
-use specbatch::scheduler::profiler::{profile, ProfilerConfig};
 use specbatch::scheduler::SpecPolicy;
-use specbatch::server::{run_experiment, ServerConfig};
+use specbatch::server::{run_experiment, Backend, SchedulingMode, ServerConfig};
 use specbatch::simulator::{
-    simulate_trace, simulated_lut, AcceptanceProcess, CostModel, GpuProfile, ModelProfile,
-    SimConfig,
+    simulate_trace, simulate_trace_continuous, simulated_lut, AcceptanceProcess, CostModel,
+    GpuProfile, ModelProfile, SimConfig,
 };
 use specbatch::traffic::{Trace, TrafficPattern};
 use specbatch::util::cli::{ArgSpec, Args};
-use specbatch::util::csv::{f as fnum, Csv};
-use specbatch::util::json::Json;
-use specbatch::util::prng::Pcg64;
 use specbatch::{log_info, util};
+
+#[cfg(feature = "pjrt")]
+use specbatch::engine::{Engine, EngineConfig};
+#[cfg(feature = "pjrt")]
+use specbatch::runtime::Runtime;
+#[cfg(feature = "pjrt")]
+use specbatch::scheduler::profiler::{profile, ProfilerConfig};
+#[cfg(feature = "pjrt")]
+use specbatch::util::csv::{f as fnum, Csv};
+#[cfg(feature = "pjrt")]
+use specbatch::util::json::Json;
+#[cfg(feature = "pjrt")]
+use specbatch::util::prng::Pcg64;
 
 fn main() {
     util::logging::init_from_env();
@@ -75,26 +83,49 @@ fn usage() -> String {
     "specbatch — batched speculative decoding with adaptive speculation length\n\
      \n\
      commands:\n\
-     \x20 quickstart   generate text for a few dataset prompts\n\
-     \x20 profile      offline (batch, s) grid search -> adaptive LUT\n\
-     \x20 grid         real-execution per-token latency grid (CSV)\n\
-     \x20 serve        server+client Gamma-traffic experiment\n\
-     \x20 sim          paper-scale GPU-simulator experiment\n\
-     \x20 warmup       precompile the executable matrix\n\
-     \x20 selfcheck    smoke-test artifacts + engine\n\
+     \x20 quickstart   generate text for a few dataset prompts [pjrt]\n\
+     \x20 profile      offline (batch, s) grid search -> adaptive LUT [pjrt]\n\
+     \x20 grid         real-execution per-token latency grid (CSV) [pjrt]\n\
+     \x20 serve        server+client Gamma-traffic experiment (static|continuous)\n\
+     \x20 sim          paper-scale GPU-simulator experiment (static|continuous)\n\
+     \x20 warmup       precompile the executable matrix [pjrt]\n\
+     \x20 selfcheck    smoke-test artifacts + engine [pjrt]\n\
      \n\
      run `specbatch <cmd> --help` for options"
         .to_string()
 }
 
+fn parse_mode(s: &str) -> Result<SchedulingMode> {
+    match s {
+        "static" => Ok(SchedulingMode::Static),
+        "continuous" | "cont" => Ok(SchedulingMode::Continuous),
+        other => bail!("bad mode {other:?}: expected static | continuous"),
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_unavailable(cmd: &str, _argv: Vec<String>) -> Result<()> {
+    bail!(
+        "`{cmd}` drives the real PJRT runtime — uncomment the `xla` dependency \
+         in rust/Cargo.toml, rebuild with `--features pjrt`, and run \
+         `make artifacts` first; the default build serves the deterministic \
+         stub pair via `serve`/`sim` (see DESIGN.md §Feature flags)"
+    )
+}
+
+// ---------------------------------------------------------------- pjrt-only
+
+#[cfg(feature = "pjrt")]
 fn common_spec(name: &'static str, about: &'static str) -> ArgSpec {
     ArgSpec::new(name, about).opt("artifacts", "artifacts", "artifacts directory")
 }
 
+#[cfg(feature = "pjrt")]
 fn load_runtime(args: &Args) -> Result<Runtime> {
-    Runtime::load(PathBuf::from(args.get("artifacts")?))
+    Runtime::load(std::path::PathBuf::from(args.get("artifacts")?))
 }
 
+#[cfg(feature = "pjrt")]
 fn parse_policy(args: &Args, rt: &Runtime, engine: &mut Engine<'_>) -> Result<SpecPolicy> {
     match PolicySpec::parse(args.get("policy")?)? {
         PolicySpec::None => Ok(SpecPolicy::NoSpec),
@@ -111,6 +142,7 @@ fn parse_policy(args: &Args, rt: &Runtime, engine: &mut Engine<'_>) -> Result<Sp
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_quickstart(argv: Vec<String>) -> Result<()> {
     let spec = common_spec("quickstart", "generate text for a few dataset prompts")
         .opt("prompts", "3", "number of prompts")
@@ -143,6 +175,12 @@ fn cmd_quickstart(argv: Vec<String>) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_quickstart(argv: Vec<String>) -> Result<()> {
+    pjrt_unavailable("quickstart", argv)
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_profile(argv: Vec<String>) -> Result<()> {
     let spec = common_spec("profile", "grid-search (batch, s) and build the adaptive LUT")
         .opt("tokens", "24", "tokens per measurement run")
@@ -168,6 +206,12 @@ fn cmd_profile(argv: Vec<String>) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_profile(argv: Vec<String>) -> Result<()> {
+    pjrt_unavailable("profile", argv)
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_grid(argv: Vec<String>) -> Result<()> {
     let spec = common_spec("grid", "real-execution per-token latency grid (tiny models)")
         .opt("buckets", "1,2,4,8", "batch buckets to measure")
@@ -192,7 +236,11 @@ fn cmd_grid(argv: Vec<String>) -> Result<()> {
                 .into_iter()
                 .map(|p| p.ids)
                 .collect();
-            let policy = if s == 0 { SpecPolicy::NoSpec } else { SpecPolicy::Fixed(s) };
+            let policy = if s == 0 {
+                SpecPolicy::NoSpec
+            } else {
+                SpecPolicy::Fixed(s)
+            };
             let out = engine.generate_batch(&prompts, tokens, &policy)?;
             let lat = out.stats.per_token_latency() * 1e3;
             println!(
@@ -212,143 +260,12 @@ fn cmd_grid(argv: Vec<String>) -> Result<()> {
     Ok(())
 }
 
-fn cmd_serve(argv: Vec<String>) -> Result<()> {
-    let spec = common_spec("serve", "server+client Gamma-traffic experiment (Sec. 5.3)")
-        .opt("policy", "adaptive", "none | fixed:<s> | adaptive")
-        .opt("requests", "64", "number of requests")
-        .opt("interval", "0.5", "mean inter-arrival seconds")
-        .opt("cv", "1.0", "coefficient of variation")
-        .opt("tokens", "32", "new tokens per request")
-        .opt("max-batch", "8", "dynamic batching cap")
-        .opt("seed", "1", "trace seed")
-        .flag("fig6", "use the alternating intense/sparse pattern")
-        .opt("out", "results/serve.csv", "per-request CSV");
-    let args = spec.parse(&argv)?;
-
-    let artifacts = PathBuf::from(args.get("artifacts")?);
-    let dataset = Dataset::load(artifacts.join("dataset.json"))?;
-    let pattern = if args.has_flag("fig6") {
-        TrafficPattern::fig6()
-    } else {
-        TrafficPattern::Stationary {
-            interval: args.get_f64("interval")?,
-            cv: args.get_f64("cv")?,
-        }
-    };
-    let trace = Trace::generate(
-        &pattern,
-        &dataset.eval,
-        args.get_usize("requests")?,
-        args.get_u64("seed")?,
-    );
-    log_info!(
-        "trace: {} requests over {:.1}s ({})",
-        trace.len(),
-        trace.span(),
-        pattern.label()
-    );
-
-    let cfg = ServerConfig {
-        max_batch: args.get_usize("max-batch")?,
-        max_new_tokens: args.get_usize("tokens")?,
-        ..ServerConfig::default()
-    };
-    let policy = PolicySpec::parse(args.get("policy")?)?;
-    let (recorder, lut) = run_experiment(artifacts, cfg, policy, None, &trace)?;
-
-    if let Some(lut) = lut {
-        println!("adaptive LUT: {}", lut.to_json().compact());
-    }
-    let s = recorder.summary();
-    let (p50, p90, p99) = recorder.percentiles();
-    println!(
-        "{} requests | latency mean {:.3}s p50 {:.3}s p90 {:.3}s p99 {:.3}s | {:.1} tok/s",
-        s.n,
-        s.mean,
-        p50,
-        p90,
-        p99,
-        recorder.throughput_tokens_per_s()
-    );
-    recorder.to_csv().write_file(args.get("out")?)?;
-    println!("-> {}", args.get("out")?);
-    Ok(())
+#[cfg(not(feature = "pjrt"))]
+fn cmd_grid(argv: Vec<String>) -> Result<()> {
+    pjrt_unavailable("grid", argv)
 }
 
-fn cmd_sim(argv: Vec<String>) -> Result<()> {
-    let spec = ArgSpec::new("sim", "paper-scale GPU-simulator experiment")
-        .opt("gpu", "rtx3090", "rtx3090 | rtx4090 | a100")
-        .opt("llm", "opt-6.7b", "opt-1.3b | opt-6.7b | llama-7b")
-        .opt("ssm", "opt-125m", "draft model profile")
-        .opt("policy", "adaptive", "none | fixed:<s> | adaptive")
-        .opt("requests", "1000", "number of requests")
-        .opt("interval", "0.3", "mean inter-arrival seconds")
-        .opt("cv", "1.0", "coefficient of variation")
-        .opt("prompt-len", "16", "prompt length")
-        .opt("seed", "1", "trace seed")
-        .flag("fig6", "use the alternating intense/sparse pattern")
-        .opt("out", "results/sim.csv", "per-request CSV");
-    let args = spec.parse(&argv)?;
-    let gpu_name = args.get("gpu")?.to_string();
-    let gpu = GpuProfile::by_name(&gpu_name)
-        .ok_or_else(|| anyhow::anyhow!("unknown gpu {gpu_name:?}"))?;
-    let llm_name = args.get("llm")?.to_string();
-    let llm = ModelProfile::by_name(&llm_name)
-        .ok_or_else(|| anyhow::anyhow!("unknown model {llm_name:?}"))?;
-    let ssm_name = args.get("ssm")?.to_string();
-    let ssm = ModelProfile::by_name(&ssm_name)
-        .ok_or_else(|| anyhow::anyhow!("unknown model {ssm_name:?}"))?;
-    let cfg = SimConfig {
-        llm: CostModel::new(llm, gpu),
-        ssm: CostModel::new(ssm, gpu),
-        acceptance: AcceptanceProcess::paper(),
-        max_batch: 16,
-        max_new_tokens: 128,
-        host_overhead: 0.2e-3,
-        seed: args.get_u64("seed")?,
-    };
-    let policy = match PolicySpec::parse(args.get("policy")?)? {
-        PolicySpec::None => SpecPolicy::NoSpec,
-        PolicySpec::Fixed(s) => SpecPolicy::Fixed(s),
-        PolicySpec::Adaptive => {
-            let lut = simulated_lut(&cfg, &[1, 2, 4, 8, 16], 8, 80);
-            println!("simulated LUT: {}", lut.to_json().compact());
-            SpecPolicy::Adaptive(lut)
-        }
-    };
-    let pattern = if args.has_flag("fig6") {
-        TrafficPattern::fig6()
-    } else {
-        TrafficPattern::Stationary {
-            interval: args.get_f64("interval")?,
-            cv: args.get_f64("cv")?,
-        }
-    };
-    let plen = args.get_usize("prompt-len")?;
-    let pool = vec![specbatch::dataset::Prompt {
-        ids: vec![1; plen],
-        text: String::new(),
-    }];
-    let trace = Trace::generate(&pattern, &pool, args.get_usize("requests")?, args.get_u64("seed")?);
-    let rec = simulate_trace(&cfg, &policy, &trace);
-    let s = rec.summary();
-    let (p50, p90, p99) = rec.percentiles();
-    println!(
-        "{} on {} | {} | {} requests | latency mean {:.3}s p50 {:.3}s p90 {:.3}s p99 {:.3}s",
-        llm.name,
-        gpu.name,
-        policy.label(),
-        s.n,
-        s.mean,
-        p50,
-        p90,
-        p99
-    );
-    rec.to_csv().write_file(args.get("out")?)?;
-    println!("-> {}", args.get("out")?);
-    Ok(())
-}
-
+#[cfg(feature = "pjrt")]
 fn cmd_warmup(argv: Vec<String>) -> Result<()> {
     let spec = common_spec("warmup", "precompile the executable matrix")
         .opt("max-batch", "16", "largest bucket to compile")
@@ -361,6 +278,12 @@ fn cmd_warmup(argv: Vec<String>) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_warmup(argv: Vec<String>) -> Result<()> {
+    pjrt_unavailable("warmup", argv)
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_selfcheck(argv: Vec<String>) -> Result<()> {
     let spec = common_spec("selfcheck", "smoke-test artifacts + engine");
     let args = spec.parse(&argv)?;
@@ -410,5 +333,202 @@ fn cmd_selfcheck(argv: Vec<String>) -> Result<()> {
         bail!("selfcheck FAILED: engine output diverges from golden");
     }
     println!("selfcheck OK: speculative output matches the Python golden");
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_selfcheck(argv: Vec<String>) -> Result<()> {
+    pjrt_unavailable("selfcheck", argv)
+}
+
+// ------------------------------------------------------------- both builds
+
+/// Backend + prompt pool for `serve`: real artifacts under `pjrt`, the
+/// stub model pair (with a synthetic prompt pool) otherwise.
+#[cfg(feature = "pjrt")]
+fn serve_backend(args: &Args) -> Result<(Backend, Vec<specbatch::dataset::Prompt>)> {
+    let artifacts = std::path::PathBuf::from(args.get("artifacts")?);
+    let dataset = specbatch::dataset::Dataset::load(artifacts.join("dataset.json"))?;
+    Ok((Backend::Artifacts(artifacts), dataset.eval.clone()))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn serve_backend(args: &Args) -> Result<(Backend, Vec<specbatch::dataset::Prompt>)> {
+    let _ = args;
+    let spec = specbatch::testkit::stub::StubSpec::default();
+    let pool: Vec<specbatch::dataset::Prompt> = (4..=12usize)
+        .map(|n| specbatch::dataset::Prompt {
+            ids: (0..n).map(|k| 4 + ((k * 7 + n) % 60) as i32).collect(),
+            text: format!("stub prompt of {n} tokens"),
+        })
+        .collect();
+    Ok((Backend::Stub(spec), pool))
+}
+
+fn cmd_serve(argv: Vec<String>) -> Result<()> {
+    let spec = ArgSpec::new(
+        "serve",
+        "server+client Gamma-traffic experiment (Sec. 5.3); stub backend without --features pjrt",
+    )
+    .opt("artifacts", "artifacts", "artifacts directory (pjrt builds)")
+    .opt("policy", "adaptive", "none | fixed:<s> | adaptive")
+    .opt("mode", "static", "static | continuous")
+    .opt("requests", "64", "number of requests")
+    .opt("interval", "0.5", "mean inter-arrival seconds")
+    .opt("cv", "1.0", "coefficient of variation")
+    .opt("tokens", "32", "new tokens per request")
+    .opt("max-batch", "8", "dynamic batching cap")
+    .opt("seed", "1", "trace seed")
+    .flag("fig6", "use the alternating intense/sparse pattern")
+    .opt("out", "results/serve.csv", "per-request CSV")
+    .opt("rounds-out", "results/serve_rounds.csv", "per-round timeline CSV");
+    let args = spec.parse(&argv)?;
+
+    let mode = parse_mode(args.get("mode")?)?;
+    let (backend, pool) = serve_backend(&args)?;
+    let pattern = if args.has_flag("fig6") {
+        TrafficPattern::fig6()
+    } else {
+        TrafficPattern::Stationary {
+            interval: args.get_f64("interval")?,
+            cv: args.get_f64("cv")?,
+        }
+    };
+    let trace = Trace::generate(
+        &pattern,
+        &pool,
+        args.get_usize("requests")?,
+        args.get_u64("seed")?,
+    );
+    log_info!(
+        "trace: {} requests over {:.1}s ({})",
+        trace.len(),
+        trace.span(),
+        pattern.label()
+    );
+
+    let cfg = ServerConfig {
+        max_batch: args.get_usize("max-batch")?,
+        max_new_tokens: args.get_usize("tokens")?,
+        mode,
+        ..ServerConfig::default()
+    };
+    let policy = PolicySpec::parse(args.get("policy")?)?;
+    let (recorder, lut, rounds) = run_experiment(backend, cfg, policy, None, &trace)?;
+
+    if let Some(lut) = lut {
+        println!("adaptive LUT: {}", lut.to_json().compact());
+    }
+    let s = recorder.summary();
+    let (p50, p90, p99) = recorder.percentiles();
+    println!(
+        "{mode:?} | {} requests | latency mean {:.3}s p50 {:.3}s p90 {:.3}s p99 {:.3}s \
+         | {:.1} tok/s",
+        s.n,
+        s.mean,
+        p50,
+        p90,
+        p99,
+        recorder.throughput_tokens_per_s()
+    );
+    recorder.to_csv().write_file(args.get("out")?)?;
+    println!("-> {}", args.get("out")?);
+    if !rounds.is_empty() {
+        specbatch::metrics::rounds_to_csv(&rounds).write_file(args.get("rounds-out")?)?;
+        println!("rounds -> {}", args.get("rounds-out")?);
+    }
+    Ok(())
+}
+
+fn cmd_sim(argv: Vec<String>) -> Result<()> {
+    let spec = ArgSpec::new("sim", "paper-scale GPU-simulator experiment")
+        .opt("gpu", "rtx3090", "rtx3090 | rtx4090 | a100")
+        .opt("llm", "opt-6.7b", "opt-1.3b | opt-6.7b | llama-7b")
+        .opt("ssm", "opt-125m", "draft model profile")
+        .opt("policy", "adaptive", "none | fixed:<s> | adaptive")
+        .opt("mode", "static", "static | continuous")
+        .opt("requests", "1000", "number of requests")
+        .opt("interval", "0.3", "mean inter-arrival seconds")
+        .opt("cv", "1.0", "coefficient of variation")
+        .opt("prompt-len", "16", "prompt length")
+        .opt("seed", "1", "trace seed")
+        .flag("fig6", "use the alternating intense/sparse pattern")
+        .opt("out", "results/sim.csv", "per-request CSV")
+        .opt("rounds-out", "results/sim_rounds.csv", "per-round timeline CSV");
+    let args = spec.parse(&argv)?;
+    let mode = parse_mode(args.get("mode")?)?;
+    let gpu_name = args.get("gpu")?.to_string();
+    let gpu = GpuProfile::by_name(&gpu_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown gpu {gpu_name:?}"))?;
+    let llm_name = args.get("llm")?.to_string();
+    let llm = ModelProfile::by_name(&llm_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {llm_name:?}"))?;
+    let ssm_name = args.get("ssm")?.to_string();
+    let ssm = ModelProfile::by_name(&ssm_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {ssm_name:?}"))?;
+    let cfg = SimConfig {
+        llm: CostModel::new(llm, gpu),
+        ssm: CostModel::new(ssm, gpu),
+        acceptance: AcceptanceProcess::paper(),
+        max_batch: 16,
+        max_new_tokens: 128,
+        host_overhead: 0.2e-3,
+        seed: args.get_u64("seed")?,
+    };
+    let policy = match PolicySpec::parse(args.get("policy")?)? {
+        PolicySpec::None => SpecPolicy::NoSpec,
+        PolicySpec::Fixed(s) => SpecPolicy::Fixed(s),
+        PolicySpec::Adaptive => {
+            let lut = simulated_lut(&cfg, &[1, 2, 4, 8, 16], 8, 80);
+            println!("simulated LUT: {}", lut.to_json().compact());
+            SpecPolicy::Adaptive(lut)
+        }
+    };
+    let pattern = if args.has_flag("fig6") {
+        TrafficPattern::fig6()
+    } else {
+        TrafficPattern::Stationary {
+            interval: args.get_f64("interval")?,
+            cv: args.get_f64("cv")?,
+        }
+    };
+    let plen = args.get_usize("prompt-len")?;
+    let pool = vec![specbatch::dataset::Prompt {
+        ids: vec![1; plen],
+        text: String::new(),
+    }];
+    let trace = Trace::generate(
+        &pattern,
+        &pool,
+        args.get_usize("requests")?,
+        args.get_u64("seed")?,
+    );
+    let (rec, rounds) = match mode {
+        SchedulingMode::Static => (simulate_trace(&cfg, &policy, &trace), Vec::new()),
+        SchedulingMode::Continuous => {
+            let (rec, rounds) = simulate_trace_continuous(&cfg, &policy, &trace);
+            (rec, rounds)
+        }
+    };
+    let s = rec.summary();
+    let (p50, p90, p99) = rec.percentiles();
+    println!(
+        "{} on {} | {} | {mode:?} | {} requests | latency mean {:.3}s p50 {:.3}s \
+         p90 {:.3}s p99 {:.3}s",
+        llm.name,
+        gpu.name,
+        policy.label(),
+        s.n,
+        s.mean,
+        p50,
+        p90,
+        p99
+    );
+    rec.to_csv().write_file(args.get("out")?)?;
+    println!("-> {}", args.get("out")?);
+    if !rounds.is_empty() {
+        specbatch::metrics::rounds_to_csv(&rounds).write_file(args.get("rounds-out")?)?;
+        println!("rounds -> {}", args.get("rounds-out")?);
+    }
     Ok(())
 }

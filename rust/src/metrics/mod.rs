@@ -138,6 +138,40 @@ impl LatencyRecorder {
     }
 }
 
+/// One decode-round boundary of the serving loop, as recorded by the
+/// continuous batcher (and mirrored by the DES simulator): when it
+/// happened, which serving epoch it belonged to, how many requests were
+/// live and queued, and the speculation length the policy chose.  This is
+/// the raw material of the "s adapts to the live batch" timelines.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RoundEvent {
+    /// experiment-clock seconds of the round boundary
+    pub t: f64,
+    /// serving epoch (contiguous busy period / static batch index)
+    pub epoch: usize,
+    /// live requests when the policy was queried
+    pub live: usize,
+    /// requests waiting in the queue
+    pub queued: usize,
+    /// speculation length chosen for the round
+    pub s: usize,
+}
+
+/// Export a round timeline (columns: t_s, epoch, live, queued, s).
+pub fn rounds_to_csv(events: &[RoundEvent]) -> Csv {
+    let mut csv = Csv::new(&["t_s", "epoch", "live", "queued", "s"]);
+    for e in events {
+        csv.row(&[
+            f(e.t),
+            e.epoch.to_string(),
+            e.live.to_string(),
+            e.queued.to_string(),
+            e.s.to_string(),
+        ]);
+    }
+    csv
+}
+
 /// One Fig. 6 timeline point: a group of consecutive requests by send time.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TimelinePoint {
@@ -216,6 +250,32 @@ mod tests {
         // group 0: latencies 1.0 and 2.0
         assert!((pts[0].mean_latency - 1.5).abs() < 1e-12);
         assert_eq!(pts[1].n, 1);
+    }
+
+    #[test]
+    fn round_events_export_to_csv() {
+        let events = vec![
+            RoundEvent {
+                t: 0.1,
+                epoch: 1,
+                live: 1,
+                queued: 3,
+                s: 5,
+            },
+            RoundEvent {
+                t: 0.2,
+                epoch: 1,
+                live: 4,
+                queued: 0,
+                s: 2,
+            },
+        ];
+        let out = rounds_to_csv(&events).to_string();
+        let lines: Vec<&str> = out.lines().collect();
+        assert_eq!(lines[0], "t_s,epoch,live,queued,s");
+        assert_eq!(lines.len(), 3);
+        assert!(lines[1].ends_with(",1,1,3,5"), "{}", lines[1]);
+        assert!(lines[2].ends_with(",1,4,0,2"), "{}", lines[2]);
     }
 
     #[test]

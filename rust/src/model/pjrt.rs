@@ -1,0 +1,230 @@
+//! PJRT-backed model handles: typed wrappers over the AOT executables of
+//! one model (compiled only with `--features pjrt`).
+//!
+//! A [`Model`] binds a model name ("llm"/"ssm") to the [`Runtime`] and
+//! exposes the three entry points of the calling convention
+//! (`prefill` / `verify` / `speculate`) with host-side shape checking.
+//! The KV cache lives in a [`KvCache`]: a device buffer chained from call
+//! to call (never copied through the host on the hot path) plus the
+//! per-row *ingested* counters that drive the attention masks.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::{ExeKind, ModelSpec, Runtime};
+
+/// Device-resident KV cache for one batch, plus per-row ingest counters.
+///
+/// Invariant (see `python/compile/model.py`): `ingested[b]` cache entries
+/// of row `b` hold the K/V of the first `ingested[b]` committed tokens;
+/// entries above may be stale (rejected speculations) — they are never
+/// attended and are overwritten by the next ingest at the same offsets.
+pub struct KvCache {
+    pub buf: xla::PjRtBuffer,
+    pub batch: usize,
+    pub ingested: Vec<u32>,
+}
+
+impl KvCache {
+    /// Roll ingest counters back to `committed_len - 1` per row after a
+    /// verification round rejected some drafts.
+    pub fn clamp_to(&mut self, committed_minus_one: &[u32]) {
+        assert_eq!(committed_minus_one.len(), self.batch);
+        for (ing, &c) in self.ingested.iter_mut().zip(committed_minus_one) {
+            *ing = (*ing).min(c);
+        }
+    }
+
+    /// Forget a row entirely: continuous batching re-admits a new request
+    /// into the slot and re-ingests its context from position 0 (stale
+    /// device entries above `ingested` are never attended).
+    pub fn reset_row(&mut self, row: usize) {
+        self.ingested[row] = 0;
+    }
+}
+
+/// One model (LLM or SSM) bound to the runtime.
+pub struct Model<'rt> {
+    rt: &'rt Runtime,
+    pub name: String,
+    pub spec: ModelSpec,
+}
+
+impl<'rt> Model<'rt> {
+    pub fn new(rt: &'rt Runtime, name: &str) -> Result<Model<'rt>> {
+        let spec = rt.model_spec(name)?.clone();
+        Ok(Model {
+            rt,
+            name: name.to_string(),
+            spec,
+        })
+    }
+
+    /// Fresh zeroed KV cache for a batch bucket.
+    pub fn new_kv(&self, batch: usize) -> Result<KvCache> {
+        let buf = self.rt.f32_zeros(&self.spec.kv_dims(batch))?;
+        Ok(KvCache {
+            buf,
+            batch,
+            ingested: vec![0; batch],
+        })
+    }
+
+    fn run_step(
+        &self,
+        kind: ExeKind,
+        batch: usize,
+        s: usize,
+        i32_inputs: &[(&[i32], &[usize])],
+        kv: &mut KvCache,
+    ) -> Result<Vec<i32>> {
+        if kv.batch != batch {
+            bail!(
+                "{}: KV cache batch {} != executable batch {batch}",
+                self.name,
+                kv.batch
+            );
+        }
+        let exe = self.rt.executable(&self.name, kind, batch, s)?;
+        let staged: Vec<xla::PjRtBuffer> = i32_inputs
+            .iter()
+            .map(|(data, dims)| self.rt.i32_buffer(data, dims))
+            .collect::<Result<_>>()?;
+        let weights = self.rt.weights(&self.name)?;
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(staged.len() + 1 + weights.len());
+        args.extend(staged.iter());
+        args.push(&kv.buf);
+        args.extend(weights.iter());
+        let mut out = self.rt.run(&exe, &args, 2)?;
+        // outputs: (pred i32, kv' f32) — keep kv' on device, read pred
+        let new_kv = out.pop().unwrap();
+        let pred = self.rt.read_i32(&out.pop().unwrap())?;
+        kv.buf = new_kv;
+        Ok(pred)
+    }
+
+    /// Prefill the (padded) prompts; returns the argmax prediction at each
+    /// row's last real prompt token (i.e. the first generated token).
+    /// Marks all `P` slots ingested=plens afterwards via the caller.
+    pub fn prefill(
+        &self,
+        tokens: &[i32],
+        plens: &[i32],
+        batch: usize,
+        kv: &mut KvCache,
+    ) -> Result<Vec<i32>> {
+        let p = self.spec.max_prompt;
+        if tokens.len() != batch * p {
+            bail!(
+                "{} prefill: tokens len {} != batch {batch} x max_prompt {p}",
+                self.name,
+                tokens.len()
+            );
+        }
+        if plens.len() != batch {
+            bail!("{} prefill: plens len mismatch", self.name);
+        }
+        if plens.iter().any(|&l| l <= 0 || l as usize > p) {
+            bail!("{} prefill: prompt length out of range 1..={p}", self.name);
+        }
+        if kv.ingested.iter().any(|&i| i != 0) {
+            bail!("{} prefill: KV cache already used", self.name);
+        }
+        let last = self.run_step(
+            ExeKind::Prefill,
+            batch,
+            0,
+            &[(tokens, &[batch, p]), (plens, &[batch])],
+            kv,
+        )?;
+        for (ing, &l) in kv.ingested.iter_mut().zip(plens) {
+            *ing = l as u32;
+        }
+        Ok(last)
+    }
+
+    /// LLM verification step: feed `[last_committed, d_1..d_s]` per row,
+    /// get the argmax prediction at every position (flattened `[B, s+1]`).
+    /// `s == 0` is the plain decode step.  Ingest counters advance by
+    /// `s + 1`; the caller clamps them back per accepted counts.
+    pub fn verify(
+        &self,
+        feed: &[i32],
+        s: usize,
+        batch: usize,
+        kv: &mut KvCache,
+    ) -> Result<Vec<i32>> {
+        let t = s + 1;
+        if feed.len() != batch * t {
+            bail!(
+                "{} verify(s={s}): feed len {} != batch {batch} x {t}",
+                self.name,
+                feed.len()
+            );
+        }
+        self.check_capacity(kv, t)?;
+        let lens: Vec<i32> = kv.ingested.iter().map(|&x| x as i32).collect();
+        let pred = self.run_step(
+            ExeKind::Verify,
+            batch,
+            s,
+            &[(feed, &[batch, t]), (&lens, &[batch])],
+            kv,
+        )?;
+        for ing in kv.ingested.iter_mut() {
+            *ing += t as u32;
+        }
+        Ok(pred)
+    }
+
+    /// SSM speculation step: ingest the 1..=2 token committed delta, then
+    /// draft `s` tokens (flattened `[B, s]`).  Ingest counters advance by
+    /// `dlens + s - 1` per row (the final draft is predicted, not fed).
+    pub fn speculate(
+        &self,
+        delta: &[i32],
+        dlens: &[i32],
+        s: usize,
+        batch: usize,
+        kv: &mut KvCache,
+    ) -> Result<Vec<i32>> {
+        if s == 0 {
+            bail!("{} speculate: s must be >= 1", self.name);
+        }
+        if delta.len() != batch * 2 || dlens.len() != batch {
+            bail!("{} speculate: delta/dlens shape mismatch", self.name);
+        }
+        if dlens.iter().any(|&d| !(1..=2).contains(&d)) {
+            bail!(
+                "{} speculate: delta invariant violated (dlens must be 1..=2, got {dlens:?})",
+                self.name
+            );
+        }
+        self.check_capacity(kv, 2 + s)?;
+        let lens: Vec<i32> = kv.ingested.iter().map(|&x| x as i32).collect();
+        let draft = self.run_step(
+            ExeKind::Speculate,
+            batch,
+            s,
+            &[(delta, &[batch, 2]), (dlens, &[batch]), (&lens, &[batch])],
+            kv,
+        )?;
+        for (ing, &d) in kv.ingested.iter_mut().zip(dlens) {
+            *ing += d as u32 + (s as u32 - 1);
+        }
+        Ok(draft)
+    }
+
+    fn check_capacity(&self, kv: &KvCache, t: usize) -> Result<()> {
+        let cap = self.spec.max_seq;
+        if let Some(&max_ing) = kv.ingested.iter().max() {
+            if max_ing as usize + t > cap {
+                bail!(
+                    "{}: KV cache overflow (ingested {max_ing} + {t} > capacity {cap}) — \
+                     lower max_new_tokens or rebuild artifacts with a larger max_seq",
+                    self.name
+                );
+            }
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,249 @@
+//! The PJRT-backed [`Runtime`]: loads AOT artifacts and executes them on
+//! the CPU client (compiled only with `--features pjrt`).
+//!
+//! Responsibilities:
+//!
+//! * upload each model's weight blob to **persistent device buffers** once
+//!   at startup (weights never cross host<->device again);
+//! * lazily compile HLO-text modules on first use and cache the
+//!   [`xla::PjRtLoadedExecutable`]s (`specbatch warmup`/`Runtime::warmup`
+//!   precompiles the common set so serving never compiles on the request
+//!   path);
+//! * provide small host<->device staging helpers for token/length tensors.
+//!
+//! Threading: PJRT handles in the `xla` crate are not `Send`; a `Runtime`
+//! lives on the thread that created it (the server spawns its worker
+//! thread first and builds the `Runtime` inside it).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::ExeKey;
+use super::{ExeKind, Manifest, ModelSpec};
+use crate::dataset::Dataset;
+use crate::log_info;
+
+/// Loaded runtime: client + manifest + device-resident weights + exe cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    /// model name -> device weight buffers in manifest.weight_order
+    weights: HashMap<String, Vec<xla::PjRtBuffer>>,
+    exe_cache: RefCell<HashMap<ExeKey, Rc<xla::PjRtLoadedExecutable>>>,
+    /// cumulative (compiles, compile_seconds) for observability
+    compile_stats: RefCell<(usize, f64)>,
+}
+
+impl Runtime {
+    /// Load artifacts from `dir` (produced by `make artifacts`).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let t0 = Instant::now();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("creating PJRT CPU client: {e}"))?;
+        let mut weights = HashMap::new();
+        for (name, m) in &manifest.models {
+            let path = manifest.dir.join(&m.weights_file);
+            let blob = std::fs::read(&path)
+                .with_context(|| format!("reading weights {}", path.display()))?;
+            if blob.len() != m.weights_bytes {
+                bail!(
+                    "weight blob {} is {} bytes, manifest declares {}",
+                    path.display(),
+                    blob.len(),
+                    m.weights_bytes
+                );
+            }
+            let mut bufs = Vec::with_capacity(m.weights.len());
+            for w in &m.weights {
+                let bytes = &blob[w.offset..w.offset + w.numel * 4];
+                // NOTE: not buffer_from_host_raw_bytes — xla 0.1.6 passes the
+                // ElementType discriminant where a PrimitiveType is expected
+                // (F32 -> F16), silently halving the buffer.  The typed API
+                // converts correctly.
+                let data: Vec<f32> = bytes
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                let buf = client
+                    .buffer_from_host_buffer(&data, &w.shape, None)
+                    .map_err(|e| anyhow::anyhow!("uploading {}/{}: {e}", name, w.name))?;
+                bufs.push(buf);
+            }
+            weights.insert(name.clone(), bufs);
+        }
+        log_info!(
+            "runtime loaded: {} executables declared, {} models, {:.2}s",
+            manifest.executables.len(),
+            manifest.models.len(),
+            t0.elapsed().as_secs_f64()
+        );
+        Ok(Runtime {
+            client,
+            manifest,
+            weights,
+            exe_cache: RefCell::new(HashMap::new()),
+            compile_stats: RefCell::new((0, 0.0)),
+        })
+    }
+
+    pub fn model_spec(&self, model: &str) -> Result<&ModelSpec> {
+        self.manifest
+            .models
+            .get(model)
+            .map(|m| &m.spec)
+            .ok_or_else(|| anyhow::anyhow!("unknown model {model}"))
+    }
+
+    /// Device weight buffers of a model, in calling-convention order.
+    pub fn weights(&self, model: &str) -> Result<&[xla::PjRtBuffer]> {
+        self.weights
+            .get(model)
+            .map(|v| v.as_slice())
+            .ok_or_else(|| anyhow::anyhow!("unknown model {model}"))
+    }
+
+    /// Lazily compile (and cache) an executable.
+    pub fn executable(
+        &self,
+        model: &str,
+        kind: ExeKind,
+        batch: usize,
+        s: usize,
+    ) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        let key = ExeKey {
+            model: model.to_string(),
+            kind,
+            batch,
+            s,
+        };
+        if let Some(exe) = self.exe_cache.borrow().get(&key) {
+            return Ok(exe.clone());
+        }
+        let entry = self.manifest.exe(model, kind, batch, s)?;
+        let path = self.manifest.dir.join(&entry.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("parsing HLO {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e}", entry.name))?;
+        let dt = t0.elapsed().as_secs_f64();
+        {
+            let mut st = self.compile_stats.borrow_mut();
+            st.0 += 1;
+            st.1 += dt;
+        }
+        log_info!("compiled {} in {dt:.2}s", entry.name);
+        let exe = Rc::new(exe);
+        self.exe_cache.borrow_mut().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Precompile every executable needed to serve batches up to
+    /// `max_bucket` with speculation lengths up to `max_s` — called before
+    /// the server goes live so nothing compiles on the request path.
+    pub fn warmup(&self, max_bucket: usize, max_s: usize) -> Result<usize> {
+        let mut n = 0;
+        let buckets: Vec<usize> = self
+            .manifest
+            .batch_buckets
+            .iter()
+            .copied()
+            .filter(|&b| b <= max_bucket)
+            .collect();
+        for &b in &buckets {
+            self.executable("llm", ExeKind::Prefill, b, 0)?;
+            self.executable("ssm", ExeKind::Prefill, b, 0)?;
+            n += 2;
+            for &s in &self.manifest.verify_lengths {
+                if s <= max_s {
+                    self.executable("llm", ExeKind::Verify, b, s)?;
+                    n += 1;
+                }
+            }
+            for &s in &self.manifest.speculate_lengths {
+                if s <= max_s {
+                    self.executable("ssm", ExeKind::Speculate, b, s)?;
+                    n += 1;
+                }
+            }
+        }
+        let st = self.compile_stats.borrow();
+        log_info!(
+            "warmup: {n} executables ready ({} compiled, {:.1}s total)",
+            st.0,
+            st.1
+        );
+        Ok(n)
+    }
+
+    /// (compiled count, total compile seconds) so far.
+    pub fn compile_stats(&self) -> (usize, f64) {
+        *self.compile_stats.borrow()
+    }
+
+    /// Upload an i32 tensor.
+    pub fn i32_buffer(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow::anyhow!("staging i32{dims:?}: {e}"))
+    }
+
+    /// Upload an f32 tensor.
+    pub fn f32_buffer(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow::anyhow!("staging f32{dims:?}: {e}"))
+    }
+
+    /// Zero-initialized f32 device tensor (fresh KV caches).
+    pub fn f32_zeros(&self, dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        let numel: usize = dims.iter().product();
+        let zeros = vec![0f32; numel];
+        self.client
+            .buffer_from_host_buffer(&zeros, dims, None)
+            .map_err(|e| anyhow::anyhow!("allocating zeros f32{dims:?}: {e}"))
+    }
+
+    /// Download an i32 tensor.
+    pub fn read_i32(&self, buf: &xla::PjRtBuffer) -> Result<Vec<i32>> {
+        let lit = buf
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("reading i32 buffer: {e}"))?;
+        lit.to_vec::<i32>()
+            .map_err(|e| anyhow::anyhow!("converting literal: {e}"))
+    }
+
+    /// Run an executable on device buffers, expecting `n_out` outputs.
+    pub fn run(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[&xla::PjRtBuffer],
+        n_out: usize,
+    ) -> Result<Vec<xla::PjRtBuffer>> {
+        let mut out = exe
+            .execute_b(args)
+            .map_err(|e| anyhow::anyhow!("executing: {e}"))?;
+        if out.len() != 1 {
+            bail!("expected single-replica output, got {}", out.len());
+        }
+        let outputs = out.pop().unwrap();
+        if outputs.len() != n_out {
+            bail!("expected {n_out} outputs, got {}", outputs.len());
+        }
+        Ok(outputs)
+    }
+
+    /// Load the dataset referenced by the manifest.
+    pub fn dataset(&self) -> Result<Dataset> {
+        Dataset::load(self.manifest.dir.join(&self.manifest.dataset_file))
+    }
+}

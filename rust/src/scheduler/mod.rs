@@ -140,6 +140,35 @@ mod tests {
     }
 
     #[test]
+    fn single_entry_lut_is_constant() {
+        let l = lut(&[(4, 3)]);
+        assert_eq!(l.lookup(1), 3);
+        assert_eq!(l.lookup(4), 3);
+        assert_eq!(l.lookup(100), 3);
+    }
+
+    #[test]
+    fn boundary_probes_clamp_below_and_above_the_profiled_range() {
+        let l = lut(&[(2, 4), (16, 1)]);
+        // below the smallest profiled bucket (including batch 0)
+        assert_eq!(l.lookup(0), 4);
+        assert_eq!(l.lookup(1), 4);
+        // exactly on the edges
+        assert_eq!(l.lookup(2), 4);
+        assert_eq!(l.lookup(16), 1);
+        // far above the largest profiled bucket
+        assert_eq!(l.lookup(17), 1);
+        assert_eq!(l.lookup(usize::MAX), 1);
+    }
+
+    #[test]
+    fn between_buckets_with_equal_values_keeps_that_value() {
+        let l = lut(&[(4, 3), (8, 3)]);
+        assert_eq!(l.lookup(5), 3);
+        assert_eq!(l.lookup(7), 3);
+    }
+
+    #[test]
     fn policy_spec_len_caps_at_available() {
         let adaptive = SpecPolicy::Adaptive(lut(&[(1, 6)]));
         assert_eq!(adaptive.spec_len(1, 4), 4);

@@ -40,6 +40,16 @@ impl ProfilerConfig {
             repeats: 2,
         }
     }
+
+    /// Grid derived from the engine's limits (works on any backend).
+    pub fn from_limits(limits: &crate::engine::EngineLimits) -> ProfilerConfig {
+        ProfilerConfig {
+            buckets: limits.batch_buckets.clone(),
+            spec_lengths: (0..=limits.max_spec_overall()).collect(),
+            tokens_per_run: 24,
+            repeats: 2,
+        }
+    }
 }
 
 /// One measured grid point.
@@ -97,16 +107,19 @@ pub fn profile(
     // precompile the grid: compilation must not contaminate measurements
     let max_bucket = cfg.buckets.iter().copied().max().unwrap_or(1);
     let max_s = cfg.spec_lengths.iter().copied().max().unwrap_or(0);
-    engine.runtime().warmup(max_bucket, max_s)?;
-    let manifest = &engine.runtime().manifest;
+    engine.warmup(max_bucket, max_s)?;
+    let limits = engine.limits().clone();
     let mut grid = Vec::new();
     let mut entries = BTreeMap::new();
 
     for &b in &cfg.buckets {
-        if !manifest.batch_buckets.contains(&b) {
-            bail!("bucket {b} not in the artifact matrix {:?}", manifest.batch_buckets);
+        if !limits.batch_buckets.contains(&b) {
+            bail!(
+                "bucket {b} not in the engine's bucket set {:?}",
+                limits.batch_buckets
+            );
         }
-        let max_s = manifest.max_spec_len(b);
+        let max_s = limits.max_spec_len(b);
         let mut best: Option<(usize, f64)> = None;
 
         for &s in &cfg.spec_lengths {

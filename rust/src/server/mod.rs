@@ -1,4 +1,5 @@
-//! Message-queue serving loop: the paper's server/client setting (Sec. 5.3).
+//! Message-queue serving loop: the paper's server/client setting (Sec. 5.3),
+//! with a selectable scheduling mode.
 //!
 //! "We launch a server process and wrap the LLM inference as a service
 //! that receives requests from a message queue and responds the generated
@@ -7,27 +8,61 @@
 //! batch size of 16)."
 //!
 //! Here the message queues are `std::sync::mpsc` channels and the server
-//! is a dedicated worker thread that owns the [`Runtime`] + [`Engine`]
-//! (PJRT handles are not `Send`, so the runtime is constructed *inside*
-//! the worker).  Dynamic batching is exactly the paper's rule: drain
-//! whatever is queued, cap at `max_batch`.  While a batch is being served
-//! (seconds at 128 tokens/request), new arrivals accumulate in the queue —
-//! their queueing delay is part of the measured latency.
+//! is a dedicated worker thread that owns the engine (PJRT handles are
+//! not `Send`, so the runtime is constructed *inside* the worker).  Two
+//! scheduling modes:
+//!
+//! * [`SchedulingMode::Static`] — the paper's rule: drain whatever is
+//!   queued, serve the batch to completion, repeat.  While a batch is
+//!   served (seconds at 128 tokens/request), arrivals queue — their
+//!   queueing delay is part of the measured latency.
+//! * [`SchedulingMode::Continuous`] — the round-granular
+//!   [`ContinuousBatcher`]: arrivals are admitted into free rows at round
+//!   boundaries, finished rows retire immediately, and the speculation
+//!   policy sees the live batch size every round.
+//!
+//! The worker runs on the real PJRT artifacts ([`Backend::Artifacts`],
+//! `--features pjrt`) or on the deterministic stub pair
+//! ([`Backend::Stub`], always available).
 
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::batcher::{BatchRequest, BatcherConfig, ContinuousBatcher};
 use crate::config::PolicySpec;
 use crate::engine::{Engine, EngineConfig};
 use crate::log_info;
-use crate::metrics::{LatencyRecorder, RequestRecord};
+use crate::metrics::{LatencyRecorder, RequestRecord, RoundEvent};
+#[cfg(feature = "pjrt")]
 use crate::runtime::Runtime;
+#[cfg(feature = "pjrt")]
 use crate::scheduler::profiler::{profile, ProfilerConfig};
 use crate::scheduler::{Lut, SpecPolicy};
+use crate::simulator::{simulated_lut, CostModel, GpuProfile, ModelProfile, SimConfig};
+use crate::testkit::stub::StubSpec;
 use crate::traffic::Trace;
+
+/// What the worker thread builds its engine from.
+#[derive(Debug, Clone)]
+pub enum Backend {
+    /// Real PJRT runtime over `make artifacts` output.
+    #[cfg(feature = "pjrt")]
+    Artifacts(std::path::PathBuf),
+    /// Deterministic stub model pair — no artifacts needed.
+    Stub(StubSpec),
+}
+
+/// How queued requests are merged into device batches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulingMode {
+    /// Batch-to-completion (the paper's server).
+    Static,
+    /// Iteration-level admission/retirement via the continuous batcher.
+    Continuous,
+}
 
 /// Server knobs.
 #[derive(Debug, Clone)]
@@ -39,6 +74,7 @@ pub struct ServerConfig {
     pub engine: EngineConfig,
     /// profiling sample size when the policy is adaptive without a LUT
     pub profile_prompts: usize,
+    pub mode: SchedulingMode,
 }
 
 impl Default for ServerConfig {
@@ -48,6 +84,7 @@ impl Default for ServerConfig {
             max_new_tokens: 128,
             engine: EngineConfig::default(),
             profile_prompts: 32,
+            mode: SchedulingMode::Static,
         }
     }
 }
@@ -86,6 +123,8 @@ pub struct ServerHandle {
     join: JoinHandle<Result<()>>,
     /// LUT resolved by the worker (present once ready when adaptive)
     lut_rx: Receiver<Option<Lut>>,
+    /// per-round timeline, delivered when the worker exits
+    timeline_rx: Receiver<Vec<RoundEvent>>,
 }
 
 impl ServerHandle {
@@ -97,12 +136,14 @@ impl ServerHandle {
             .map_err(|_| anyhow!("server did not become ready within {timeout:?}"))
     }
 
-    pub fn shutdown(self) -> Result<()> {
+    /// Stop the worker and collect its per-round timeline.
+    pub fn shutdown(self) -> Result<Vec<RoundEvent>> {
         let _ = self.requests.send(ServerMsg::Shutdown);
         match self.join.join() {
-            Ok(r) => r,
+            Ok(r) => r?,
             Err(_) => bail!("server thread panicked"),
         }
+        Ok(self.timeline_rx.try_recv().unwrap_or_default())
     }
 }
 
@@ -110,10 +151,12 @@ impl ServerHandle {
 ///
 /// `epoch` anchors the experiment clock: all timestamps are seconds since
 /// it, shared with the client.  When `policy` is adaptive and `lut` is
-/// `None`, the worker runs the offline profiling stage before accepting
-/// traffic (paper Sec. 4) using the dataset's *profile* split.
+/// `None`, the worker resolves a LUT before accepting traffic: offline
+/// profiling on the dataset's *profile* split (paper Sec. 4) on the
+/// artifact backend, or the calibrated simulator's LUT on the stub
+/// backend (wall-clock profiling of a µs-fast stub is meaningless).
 pub fn spawn_server(
-    artifacts_dir: std::path::PathBuf,
+    backend: Backend,
     cfg: ServerConfig,
     policy: PolicySpec,
     lut: Option<Lut>,
@@ -122,12 +165,13 @@ pub fn spawn_server(
     let (req_tx, req_rx) = channel::<ServerMsg>();
     let (resp_tx, resp_rx) = channel::<ServerResponse>();
     let (lut_tx, lut_rx) = channel::<Option<Lut>>();
+    let (timeline_tx, timeline_rx) = channel::<Vec<RoundEvent>>();
 
     let join = std::thread::Builder::new()
         .name("specbatch-server".into())
         .spawn(move || {
             worker(
-                artifacts_dir,
+                backend,
                 cfg,
                 policy,
                 lut,
@@ -135,6 +179,7 @@ pub fn spawn_server(
                 req_rx,
                 resp_tx,
                 lut_tx,
+                timeline_tx,
             )
         })
         .expect("spawning server thread");
@@ -144,12 +189,33 @@ pub fn spawn_server(
         responses: resp_rx,
         join,
         lut_rx,
+        timeline_rx,
     }
+}
+
+/// Simulator-derived LUT for the stub backend (deterministic, fast).
+fn stub_adaptive_lut(engine: &Engine<'_>, max_batch: usize) -> Lut {
+    let sim = SimConfig::paper_default(
+        CostModel::new(ModelProfile::OPT_6_7B, GpuProfile::RTX3090),
+        CostModel::new(ModelProfile::OPT_125M, GpuProfile::RTX3090),
+    );
+    let mut buckets: Vec<usize> = engine
+        .limits()
+        .batch_buckets
+        .iter()
+        .copied()
+        .filter(|&b| b <= max_batch)
+        .collect();
+    if buckets.is_empty() {
+        buckets.push(engine.limits().batch_buckets[0]);
+    }
+    let s_max = engine.limits().max_spec_overall().max(1);
+    simulated_lut(&sim, &buckets, s_max, 80)
 }
 
 #[allow(clippy::too_many_arguments)]
 fn worker(
-    artifacts_dir: std::path::PathBuf,
+    backend: Backend,
     cfg: ServerConfig,
     policy_spec: PolicySpec,
     lut: Option<Lut>,
@@ -157,39 +223,113 @@ fn worker(
     req_rx: Receiver<ServerMsg>,
     resp_tx: Sender<ServerResponse>,
     lut_tx: Sender<Option<Lut>>,
+    timeline_tx: Sender<Vec<RoundEvent>>,
 ) -> Result<()> {
-    let rt = Runtime::load(&artifacts_dir)?;
-    let mut engine = Engine::new(&rt, cfg.engine.clone())?;
-
-    // resolve the policy, profiling if necessary
-    let (policy, lut_used) = match policy_spec {
-        PolicySpec::None => (SpecPolicy::NoSpec, None),
-        PolicySpec::Fixed(s) => (SpecPolicy::Fixed(s), None),
-        PolicySpec::Adaptive => {
-            let lut = match lut {
-                Some(l) => l,
-                None => {
-                    let dataset = rt.dataset()?;
-                    let mut prng = crate::util::prng::Pcg64::new(0xADA);
-                    let prompts = dataset.sample_profile(&mut prng, cfg.profile_prompts);
-                    let mut pcfg = ProfilerConfig::from_manifest(&rt.manifest);
-                    pcfg.buckets.retain(|&b| b <= cfg.max_batch);
-                    log_info!("server: profiling for the adaptive LUT…");
-                    profile(&mut engine, &prompts, &pcfg)?.lut
+    // announce readiness, serve, deliver the timeline — shared by both
+    // backends once the engine and policy are resolved
+    let go = |engine: &mut Engine<'_>, policy: SpecPolicy, lut_used: Option<Lut>| -> Result<()> {
+        lut_tx
+            .send(lut_used)
+            .map_err(|_| anyhow!("server handle dropped before ready"))?;
+        let timeline = serve_loop(engine, &cfg, &policy, epoch, &req_rx, &resp_tx)?;
+        let _ = timeline_tx.send(timeline);
+        Ok(())
+    };
+    match backend {
+        #[cfg(feature = "pjrt")]
+        Backend::Artifacts(artifacts_dir) => {
+            let rt = Runtime::load(&artifacts_dir)?;
+            let mut engine = Engine::new(&rt, cfg.engine.clone())?;
+            // resolve the policy, profiling if necessary
+            let (policy, lut_used) = match policy_spec {
+                PolicySpec::None => (SpecPolicy::NoSpec, None),
+                PolicySpec::Fixed(s) => (SpecPolicy::Fixed(s), None),
+                PolicySpec::Adaptive => {
+                    let lut = match lut {
+                        Some(l) => l,
+                        None => {
+                            let dataset = rt.dataset()?;
+                            let mut prng = crate::util::prng::Pcg64::new(0xADA);
+                            let prompts = dataset.sample_profile(&mut prng, cfg.profile_prompts);
+                            let mut pcfg = ProfilerConfig::from_manifest(&rt.manifest);
+                            pcfg.buckets.retain(|&b| b <= cfg.max_batch);
+                            log_info!("server: profiling for the adaptive LUT…");
+                            profile(&mut engine, &prompts, &pcfg)?.lut
+                        }
+                    };
+                    log_info!("server: adaptive LUT = {}", lut.to_json().compact());
+                    (SpecPolicy::Adaptive(lut.clone()), Some(lut))
                 }
             };
-            log_info!("server: adaptive LUT = {}", lut.to_json().compact());
-            (SpecPolicy::Adaptive(lut.clone()), Some(lut))
+            // precompile before going live: no compilation on the request path
+            rt.warmup(
+                cfg.max_batch,
+                rt.manifest.verify_lengths.iter().copied().max().unwrap_or(0),
+            )?;
+            go(&mut engine, policy, lut_used)
         }
-    };
-    // precompile before going live: no compilation on the request path
-    rt.warmup(cfg.max_batch, rt.manifest.verify_lengths.iter().copied().max().unwrap_or(0))?;
-    lut_tx
-        .send(lut_used)
-        .map_err(|_| anyhow!("server handle dropped before ready"))?;
+        Backend::Stub(spec) => {
+            let mut engine = Engine::stub(spec, cfg.engine.clone())?;
+            let (policy, lut_used) = match policy_spec {
+                PolicySpec::None => (SpecPolicy::NoSpec, None),
+                PolicySpec::Fixed(s) => (SpecPolicy::Fixed(s), None),
+                PolicySpec::Adaptive => {
+                    let lut = match lut {
+                        Some(l) => l,
+                        None => {
+                            log_info!("server: stub backend — using the simulator's LUT");
+                            stub_adaptive_lut(&engine, cfg.max_batch)
+                        }
+                    };
+                    (SpecPolicy::Adaptive(lut.clone()), Some(lut))
+                }
+            };
+            go(&mut engine, policy, lut_used)
+        }
+    }
+}
 
+fn serve_loop(
+    engine: &mut Engine<'_>,
+    cfg: &ServerConfig,
+    policy: &SpecPolicy,
+    epoch: Instant,
+    req_rx: &Receiver<ServerMsg>,
+    resp_tx: &Sender<ServerResponse>,
+) -> Result<Vec<RoundEvent>> {
+    match cfg.mode {
+        SchedulingMode::Static => serve_static(engine, cfg, policy, epoch, req_rx, resp_tx),
+        SchedulingMode::Continuous => {
+            serve_continuous(engine, cfg, policy, epoch, req_rx, resp_tx)
+        }
+    }
+}
+
+/// The paper's batch-to-completion loop: drain whatever is queued (capped
+/// at `max_batch`), serve it with `generate_batch`, respond, repeat.
+fn serve_static(
+    engine: &mut Engine<'_>,
+    cfg: &ServerConfig,
+    policy: &SpecPolicy,
+    epoch: Instant,
+    req_rx: &Receiver<ServerMsg>,
+    resp_tx: &Sender<ServerResponse>,
+) -> Result<Vec<RoundEvent>> {
+    let mut timeline: Vec<RoundEvent> = Vec::new();
     let mut pending: Vec<ServerRequest> = Vec::new();
     let mut shutdown = false;
+    let mut batch_idx = 0usize;
+    // pull everything the channel currently holds into `pending`
+    let drain = |pending: &mut Vec<ServerRequest>, shutdown: &mut bool| loop {
+        match req_rx.try_recv() {
+            Ok(ServerMsg::Request(r)) => pending.push(r),
+            Ok(ServerMsg::Shutdown) => {
+                *shutdown = true;
+                break;
+            }
+            Err(_) => break,
+        }
+    };
     while !shutdown {
         // block for the first request, then drain whatever queued
         if pending.is_empty() {
@@ -200,26 +340,32 @@ fn worker(
                 Err(RecvTimeoutError::Disconnected) => break,
             }
         }
-        while pending.len() < cfg.max_batch {
-            match req_rx.try_recv() {
-                Ok(ServerMsg::Request(r)) => pending.push(r),
-                Ok(ServerMsg::Shutdown) => {
-                    shutdown = true;
-                    break;
-                }
-                Err(_) => break,
-            }
-        }
+        drain(&mut pending, &mut shutdown);
 
         let batch: Vec<ServerRequest> =
             pending.drain(..pending.len().min(cfg.max_batch)).collect();
         if batch.is_empty() {
             continue;
         }
+        batch_idx += 1;
         let started_at = epoch.elapsed().as_secs_f64();
         let prompts: Vec<Vec<i32>> = batch.iter().map(|r| r.prompt.clone()).collect();
-        let out = engine.generate_batch(&prompts, cfg.max_new_tokens, &policy)?;
+        let out = engine.generate_batch(&prompts, cfg.max_new_tokens, policy)?;
         let finished_at = epoch.elapsed().as_secs_f64();
+        // pick up what arrived while the batch was being served, so the
+        // timeline's queue column reflects real pressure (per-round
+        // timestamps are not observable batch-to-completion — every round
+        // of the batch carries its start time)
+        drain(&mut pending, &mut shutdown);
+        for info in &out.stats.per_round {
+            timeline.push(RoundEvent {
+                t: started_at,
+                epoch: batch_idx,
+                live: info.live,
+                queued: pending.len(),
+                s: info.s,
+            });
+        }
         let spec_len = out.stats.spec_lens.first().copied().unwrap_or(0);
         for (req, tokens) in batch.into_iter().zip(out.tokens) {
             let resp = ServerResponse {
@@ -233,11 +379,96 @@ fn worker(
             };
             if resp_tx.send(resp).is_err() {
                 // harness went away; stop serving
-                return Ok(());
+                return Ok(timeline);
             }
         }
     }
-    Ok(())
+    Ok(timeline)
+}
+
+/// Map a completed batcher request onto the wire format: queueing ends at
+/// admission, so `started_at` is the admission time.
+fn to_response(fin: crate::batcher::FinishedRequest) -> ServerResponse {
+    ServerResponse {
+        id: fin.id,
+        tokens: fin.tokens,
+        sent_at: fin.sent_at,
+        started_at: fin.admitted_at,
+        finished_at: fin.finished_at,
+        batch: fin.batch_at_admit,
+        spec_len: fin.spec_at_admit,
+    }
+}
+
+/// The continuous loop: one batcher round per iteration, draining the
+/// inbound channel between rounds so arrivals admit at round boundaries.
+fn serve_continuous(
+    engine: &mut Engine<'_>,
+    cfg: &ServerConfig,
+    policy: &SpecPolicy,
+    epoch: Instant,
+    req_rx: &Receiver<ServerMsg>,
+    resp_tx: &Sender<ServerResponse>,
+) -> Result<Vec<RoundEvent>> {
+    let mut batcher = ContinuousBatcher::new(BatcherConfig {
+        max_batch: cfg.max_batch,
+        max_new_tokens: cfg.max_new_tokens,
+    });
+    let mut shutdown = false;
+    'serve: while !shutdown {
+        // drain arrivals that showed up during the last round
+        loop {
+            match req_rx.try_recv() {
+                Ok(ServerMsg::Request(r)) => batcher.enqueue(BatchRequest {
+                    id: r.id,
+                    prompt: r.prompt,
+                    sent_at: r.sent_at,
+                }),
+                Ok(ServerMsg::Shutdown) => {
+                    shutdown = true;
+                    break;
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    shutdown = true;
+                    break;
+                }
+            }
+        }
+        if !batcher.has_work() {
+            if shutdown {
+                break;
+            }
+            // idle: block for the next message
+            match req_rx.recv_timeout(Duration::from_millis(200)) {
+                Ok(ServerMsg::Request(r)) => batcher.enqueue(BatchRequest {
+                    id: r.id,
+                    prompt: r.prompt,
+                    sent_at: r.sent_at,
+                }),
+                Ok(ServerMsg::Shutdown) => break,
+                Err(RecvTimeoutError::Timeout) => continue,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+            continue;
+        }
+        let now = epoch.elapsed().as_secs_f64();
+        for fin in batcher.step(engine, policy, now)? {
+            if resp_tx.send(to_response(fin)).is_err() {
+                break 'serve;
+            }
+        }
+    }
+    // finish in-flight work after a shutdown request
+    while batcher.has_work() {
+        let now = epoch.elapsed().as_secs_f64();
+        for fin in batcher.step(engine, policy, now)? {
+            if resp_tx.send(to_response(fin)).is_err() {
+                break;
+            }
+        }
+    }
+    Ok(batcher.timeline)
 }
 
 /// Replay a trace against a server in real time (the client process).
@@ -263,17 +494,17 @@ pub fn run_client(trace: &Trace, requests: &Sender<ServerMsg>, epoch: Instant) -
 }
 
 /// Run one full client/server experiment: spawn server, wait until ready,
-/// replay the trace, collect all responses.  Returns the latency records
-/// (and the LUT, when adaptive).
+/// replay the trace, collect all responses.  Returns the latency records,
+/// the LUT (when adaptive), and the server's per-round timeline.
 pub fn run_experiment(
-    artifacts_dir: std::path::PathBuf,
+    backend: Backend,
     cfg: ServerConfig,
     policy: PolicySpec,
     lut: Option<Lut>,
     trace: &Trace,
-) -> Result<(LatencyRecorder, Option<Lut>)> {
+) -> Result<(LatencyRecorder, Option<Lut>, Vec<RoundEvent>)> {
     let epoch = Instant::now();
-    let server = spawn_server(artifacts_dir, cfg, policy, lut, epoch);
+    let server = spawn_server(backend, cfg, policy, lut, epoch);
     let lut_used = server.wait_ready(Duration::from_secs(600))?;
 
     let n = trace.len();
@@ -303,6 +534,6 @@ pub fn run_experiment(
     client
         .join()
         .map_err(|_| anyhow!("client thread panicked"))??;
-    server.shutdown()?;
-    Ok((recorder, lut_used))
+    let timeline = server.shutdown()?;
+    Ok((recorder, lut_used, timeline))
 }

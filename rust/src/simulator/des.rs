@@ -12,8 +12,17 @@
 //! stochastic [`AcceptanceProcess`]; the round structure mirrors
 //! `engine::Engine::generate_batch` exactly (prefill, then speculate/
 //! verify rounds with per-row accept counts, frozen finished rows).
+//!
+//! Two scheduling modes are modelled:
+//!
+//! * [`simulate_trace`] — the paper's batch-to-completion static batching
+//!   (drain the queue, serve, repeat);
+//! * [`simulate_trace_continuous`] — the round-granular continuous
+//!   batcher (`crate::batcher`): admissions at round boundaries,
+//!   immediate retirement, and a per-round policy query with the live
+//!   batch size.
 
-use crate::metrics::{LatencyRecorder, RequestRecord};
+use crate::metrics::{LatencyRecorder, RequestRecord, RoundEvent};
 use crate::scheduler::SpecPolicy;
 use crate::traffic::Trace;
 use crate::util::prng::Pcg64;
@@ -149,6 +158,132 @@ pub fn simulate_trace(cfg: &SimConfig, policy: &SpecPolicy, trace: &Trace) -> La
     recorder
 }
 
+/// Virtual-time mirror of the continuous batcher
+/// (`crate::batcher::ContinuousBatcher`): requests are admitted into free
+/// rows at round boundaries, finished rows retire immediately, and the
+/// policy is re-queried with the *live* batch size every round.  Returns
+/// the latency records plus the per-round (t, live, queued, s) timeline,
+/// so Fig. 5/6-style sweeps can compare static vs continuous scheduling
+/// without hardware.
+pub fn simulate_trace_continuous(
+    cfg: &SimConfig,
+    policy: &SpecPolicy,
+    trace: &Trace,
+) -> (LatencyRecorder, Vec<RoundEvent>) {
+    struct SimRow {
+        id: u64,
+        sent_at: f64,
+        admitted_at: f64,
+        plen: usize,
+        /// committed tokens (prefill counts as the first one)
+        generated: usize,
+        batch_at_admit: usize,
+        spec_at_admit: usize,
+    }
+
+    let mut rng = Pcg64::with_stream(cfg.seed, 0xC0_11);
+    let mut recorder = LatencyRecorder::new();
+    let mut rounds: Vec<RoundEvent> = Vec::new();
+    let may_speculate = !matches!(policy, SpecPolicy::NoSpec);
+    let items = &trace.items;
+    let mut live: Vec<SimRow> = Vec::new();
+    let mut next = 0usize;
+    let mut t = 0.0f64;
+    let mut epoch = 0usize;
+
+    while next < items.len() || !live.is_empty() {
+        if live.is_empty() {
+            // idle: jump to the next arrival, opening a new epoch
+            if next < items.len() && items[next].send_at > t {
+                t = items[next].send_at;
+            }
+            epoch += 1;
+        }
+
+        // --- admit everything due, up to the live-capacity cap ---
+        let mut n_admit = 0usize;
+        let mut plen_sum = 0usize;
+        let admit_t = t;
+        while next < items.len() && items[next].send_at <= t && live.len() < cfg.max_batch {
+            let plen = items[next].prompt.ids.len();
+            live.push(SimRow {
+                id: items[next].id,
+                sent_at: items[next].send_at,
+                admitted_at: admit_t,
+                plen,
+                generated: 1, // prefill commits the first token
+                batch_at_admit: 0,
+                spec_at_admit: 0,
+            });
+            plen_sum += plen;
+            n_admit += 1;
+            next += 1;
+        }
+        if n_admit > 0 {
+            let mean_plen = (plen_sum as f64 / n_admit as f64).ceil() as usize;
+            t += cfg.llm.t_prefill(n_admit, mean_plen);
+            if may_speculate {
+                t += cfg.ssm.t_prefill(n_admit, mean_plen);
+            }
+            let b = live.len();
+            let s_now = policy.spec_len(b, 8);
+            for row in live.iter_mut().rev().take(n_admit) {
+                row.batch_at_admit = b;
+                row.spec_at_admit = s_now;
+            }
+        }
+
+        // --- one decode round over the live rows ---
+        let b = live.len();
+        let ctx = live.iter().map(|r| r.plen + r.generated).sum::<usize>() / b;
+        let s = policy.spec_len(b, 8);
+        if s == 0 {
+            t += cfg.llm.t_verify(b, 0, ctx) + cfg.host_overhead;
+            for row in live.iter_mut() {
+                row.generated += 1;
+            }
+        } else {
+            t += s as f64 * cfg.ssm.t_draft(b, ctx);
+            t += cfg.llm.t_verify(b, s, ctx);
+            t += cfg.host_overhead;
+            for row in live.iter_mut() {
+                row.generated += cfg.acceptance.sample(s, &mut rng) + 1;
+            }
+        }
+        let waiting = items[next..]
+            .iter()
+            .take_while(|i| i.send_at <= t)
+            .count();
+        rounds.push(RoundEvent {
+            t,
+            epoch,
+            live: b,
+            queued: waiting,
+            s,
+        });
+
+        // --- retire finished rows immediately, freeing capacity ---
+        let mut i = 0;
+        while i < live.len() {
+            if live[i].generated >= cfg.max_new_tokens {
+                let row = live.swap_remove(i);
+                recorder.push(RequestRecord {
+                    id: row.id,
+                    sent_at: row.sent_at,
+                    started_at: row.admitted_at,
+                    finished_at: t,
+                    tokens: cfg.max_new_tokens,
+                    batch: row.batch_at_admit,
+                    spec_len: row.spec_at_admit,
+                });
+            } else {
+                i += 1;
+            }
+        }
+    }
+    (recorder, rounds)
+}
+
 /// Direct per-token latency at a fixed (batch, s) point — the Fig. 1 grid
 /// metric, without queueing.  Averages `rounds` simulated decode rounds.
 pub fn per_token_latency(
@@ -275,6 +410,58 @@ mod tests {
         assert!(
             dense > sparse,
             "queueing should raise dense-traffic latency: {dense} vs {sparse}"
+        );
+    }
+
+    #[test]
+    fn continuous_conserves_requests_and_causality() {
+        let cfg = cfg();
+        let trace = Trace::generate(
+            &TrafficPattern::Stationary {
+                interval: 0.2,
+                cv: 1.0,
+            },
+            &pool(),
+            150,
+            17,
+        );
+        let (rec, rounds) = simulate_trace_continuous(&cfg, &SpecPolicy::Fixed(2), &trace);
+        assert_eq!(rec.len(), 150);
+        let mut ids: Vec<u64> = rec.records().iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..150).collect::<Vec<u64>>());
+        for r in rec.records() {
+            assert!(r.started_at >= r.sent_at - 1e-12);
+            assert!(r.finished_at > r.started_at);
+            assert!(r.batch >= 1 && r.batch <= cfg.max_batch);
+        }
+        assert!(!rounds.is_empty());
+        assert!(rounds.iter().all(|e| e.live >= 1 && e.live <= cfg.max_batch));
+        // round times are non-decreasing
+        for w in rounds.windows(2) {
+            assert!(w[1].t >= w[0].t);
+        }
+    }
+
+    #[test]
+    fn continuous_batching_beats_static_under_load() {
+        let cfg = cfg();
+        let trace = Trace::generate(
+            &TrafficPattern::Stationary {
+                interval: 0.1,
+                cv: 1.0,
+            },
+            &pool(),
+            200,
+            21,
+        );
+        let pol = SpecPolicy::Fixed(2);
+        let static_mean = simulate_trace(&cfg, &pol, &trace).summary().mean;
+        let (cont, _) = simulate_trace_continuous(&cfg, &pol, &trace);
+        let cont_mean = cont.summary().mean;
+        assert!(
+            cont_mean < static_mean,
+            "continuous ({cont_mean:.3}s) should beat static ({static_mean:.3}s)"
         );
     }
 

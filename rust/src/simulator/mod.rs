@@ -20,7 +20,9 @@ pub mod hw;
 
 pub use acceptance::AcceptanceProcess;
 pub use cost::{CostModel, ModelProfile};
-pub use des::{batch_service_time, per_token_latency, simulate_trace, SimConfig};
+pub use des::{
+    batch_service_time, per_token_latency, simulate_trace, simulate_trace_continuous, SimConfig,
+};
 pub use hw::GpuProfile;
 
 use std::collections::BTreeMap;

@@ -17,6 +17,8 @@
 //! On failure the harness re-runs the failing case with the recorded seed
 //! and reports it, so `SPECBATCH_PT_SEED=<seed>` reproduces it exactly.
 
+pub mod stub;
+
 use crate::util::prng::Pcg64;
 
 /// Random input generator handed to each property iteration.

@@ -1,0 +1,353 @@
+//! Deterministic stub model pair: the artifact-free engine backend.
+//!
+//! The default build carries no PJRT runtime and no Python-built
+//! artifacts, yet the engine, batcher and server still need a model pair
+//! that honours the full calling convention (`prefill` / `verify` /
+//! `speculate` with per-row KV ingest counters).  [`StubModel`] provides
+//! one: a hash-chain language model whose next token depends only on the
+//! last fed token, so plain greedy decoding is the chain
+//! `t_{k+1} = H(t_k)` and *losslessness* of speculative decoding is
+//! checkable exactly.  The stub SSM agrees with the stub LLM on a
+//! configurable fraction of the token space, producing realistic partial
+//! draft acceptance.
+//!
+//! The stub honours the same state-machine contract as the real
+//! executables: ingest counters advance by the executable's full span and
+//! the caller clamps them back after acceptance; entries above
+//! `ingested` are never read, so rollback works identically.
+
+use anyhow::{bail, Result};
+
+/// Shape and limit description of the stub model pair (the stub-world
+/// analogue of the artifact manifest).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StubSpec {
+    /// vocabulary size; ids 0..=3 are reserved specials (pad/bos/eos/unk)
+    /// and are never generated
+    pub vocab: usize,
+    /// maximum prompt length accepted by the prefill path
+    pub max_prompt: usize,
+    /// KV-cache capacity per row
+    pub max_seq: usize,
+    /// batch buckets the stub "compiles" for (sorted ascending)
+    pub batch_buckets: Vec<usize>,
+    /// largest speculation length available at every bucket
+    pub max_spec: usize,
+    /// percent of the token space on which the SSM agrees with the LLM
+    pub agreement_pct: u32,
+    /// seed shaping the SSM's disagreement pattern
+    pub seed: u64,
+}
+
+impl Default for StubSpec {
+    fn default() -> Self {
+        StubSpec {
+            vocab: 64,
+            max_prompt: 16,
+            max_seq: 320,
+            batch_buckets: vec![1, 2, 4, 8, 16],
+            max_spec: 8,
+            agreement_pct: 80,
+            seed: 0xB007,
+        }
+    }
+}
+
+/// Which side of the draft/target pair a [`StubModel`] plays.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StubRole {
+    Llm,
+    Ssm,
+}
+
+/// Stub KV cache: only the per-row ingest counters carry state (the
+/// stub's predictions depend on the fed token alone, mirroring how real
+/// entries above `ingested` are never attended).
+#[derive(Debug, Clone)]
+pub struct StubKv {
+    pub batch: usize,
+    pub ingested: Vec<u32>,
+}
+
+impl StubKv {
+    /// Roll ingest counters back to `committed_len - 1` per row (same
+    /// contract as the real `KvCache::clamp_to`).
+    pub fn clamp_to(&mut self, committed_minus_one: &[u32]) {
+        assert_eq!(committed_minus_one.len(), self.batch);
+        for (ing, &c) in self.ingested.iter_mut().zip(committed_minus_one) {
+            *ing = (*ing).min(c);
+        }
+    }
+
+    /// Forget a row entirely (continuous batching re-admits into it).
+    pub fn reset_row(&mut self, row: usize) {
+        self.ingested[row] = 0;
+    }
+}
+
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+/// One deterministic stub model bound to a role.
+#[derive(Debug, Clone)]
+pub struct StubModel {
+    pub spec: StubSpec,
+    pub role: StubRole,
+}
+
+impl StubModel {
+    pub fn new(spec: StubSpec, role: StubRole) -> StubModel {
+        StubModel { spec, role }
+    }
+
+    /// The target (LLM) chain: next token after `t`, always in
+    /// `[4, vocab)` so specials are never generated.
+    pub fn llm_next(&self, t: i32) -> i32 {
+        let span = (self.spec.vocab - 4) as u64;
+        4 + (splitmix64(t as u64 ^ 0x5eed_11) % span) as i32
+    }
+
+    /// This model's own next-token function (the SSM diverges from the
+    /// LLM on a deterministic `100 - agreement_pct` percent slice of the
+    /// token space).
+    pub fn next(&self, t: i32) -> i32 {
+        let llm = self.llm_next(t);
+        match self.role {
+            StubRole::Llm => llm,
+            StubRole::Ssm => {
+                let agree =
+                    splitmix64(t as u64 ^ self.spec.seed) % 100 < self.spec.agreement_pct as u64;
+                if agree {
+                    llm
+                } else {
+                    let span = (self.spec.vocab - 4) as i32;
+                    4 + (llm - 4 + 1) % span
+                }
+            }
+        }
+    }
+
+    pub fn new_kv(&self, batch: usize) -> StubKv {
+        StubKv {
+            batch,
+            ingested: vec![0; batch],
+        }
+    }
+
+    /// Prefill the padded prompts; returns the prediction at each row's
+    /// last real prompt token and marks `plen` entries ingested.
+    pub fn prefill(
+        &self,
+        tokens: &[i32],
+        plens: &[i32],
+        batch: usize,
+        kv: &mut StubKv,
+    ) -> Result<Vec<i32>> {
+        let p = self.spec.max_prompt;
+        if tokens.len() != batch * p || plens.len() != batch {
+            bail!(
+                "stub {:?} prefill: tokens len {} / plens len {} do not match \
+                 batch {batch} x max_prompt {p}",
+                self.role,
+                tokens.len(),
+                plens.len()
+            );
+        }
+        if kv.batch != batch {
+            bail!("stub {:?} prefill: KV batch mismatch", self.role);
+        }
+        if kv.ingested.iter().any(|&i| i != 0) {
+            bail!("stub {:?} prefill: KV cache already used", self.role);
+        }
+        let mut out = Vec::with_capacity(batch);
+        for (r, (ing, &plen)) in kv.ingested.iter_mut().zip(plens).enumerate() {
+            let plen = plen as usize;
+            if plen == 0 || plen > p {
+                bail!("stub {:?} prefill: prompt length out of range 1..={p}", self.role);
+            }
+            out.push(self.next(tokens[r * p + plen - 1]));
+            *ing = plen as u32;
+        }
+        Ok(out)
+    }
+
+    /// Verify step: feed `[B, s+1]` tokens, get the prediction at every
+    /// position; ingest counters advance by `s + 1` (caller clamps).
+    pub fn verify(
+        &self,
+        feed: &[i32],
+        s: usize,
+        batch: usize,
+        kv: &mut StubKv,
+    ) -> Result<Vec<i32>> {
+        let t = s + 1;
+        if feed.len() != batch * t {
+            bail!(
+                "stub {:?} verify(s={s}): feed len {} != batch {batch} x {t}",
+                self.role,
+                feed.len()
+            );
+        }
+        if kv.batch != batch {
+            bail!("stub {:?} verify: KV batch mismatch", self.role);
+        }
+        self.check_capacity(kv, t)?;
+        let pred = feed.iter().map(|&x| self.next(x)).collect();
+        for ing in kv.ingested.iter_mut() {
+            *ing += t as u32;
+        }
+        Ok(pred)
+    }
+
+    /// Speculate step: ingest the 1..=2-token delta, then draft `s`
+    /// tokens by chaining the SSM; counters advance by `dlen + s - 1`.
+    pub fn speculate(
+        &self,
+        delta: &[i32],
+        dlens: &[i32],
+        s: usize,
+        batch: usize,
+        kv: &mut StubKv,
+    ) -> Result<Vec<i32>> {
+        if s == 0 {
+            bail!("stub {:?} speculate: s must be >= 1", self.role);
+        }
+        if delta.len() != batch * 2 || dlens.len() != batch {
+            bail!("stub {:?} speculate: delta/dlens shape mismatch", self.role);
+        }
+        if dlens.iter().any(|&d| !(1..=2).contains(&d)) {
+            bail!(
+                "stub {:?} speculate: delta invariant violated \
+                 (dlens must be 1..=2, got {dlens:?})",
+                self.role
+            );
+        }
+        if kv.batch != batch {
+            bail!("stub {:?} speculate: KV batch mismatch", self.role);
+        }
+        self.check_capacity(kv, 2 + s)?;
+        let mut draft = Vec::with_capacity(batch * s);
+        for (r, (ing, &d)) in kv.ingested.iter_mut().zip(dlens).enumerate() {
+            let d = d as usize;
+            let mut cur = delta[r * 2 + d - 1];
+            for _ in 0..s {
+                cur = self.next(cur);
+                draft.push(cur);
+            }
+            *ing += d as u32 + s as u32 - 1;
+        }
+        Ok(draft)
+    }
+
+    fn check_capacity(&self, kv: &StubKv, t: usize) -> Result<()> {
+        let cap = self.spec.max_seq;
+        if let Some(&max_ing) = kv.ingested.iter().max() {
+            if max_ing as usize + t > cap {
+                bail!(
+                    "stub {:?}: KV cache overflow (ingested {max_ing} + {t} > capacity {cap}) — \
+                     lower max_new_tokens or use a larger StubSpec::max_seq",
+                    self.role
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn llm() -> StubModel {
+        StubModel::new(StubSpec::default(), StubRole::Llm)
+    }
+
+    fn ssm() -> StubModel {
+        StubModel::new(StubSpec::default(), StubRole::Ssm)
+    }
+
+    #[test]
+    fn chain_is_deterministic_and_avoids_specials() {
+        let m = llm();
+        let mut t = 5i32;
+        for _ in 0..200 {
+            let n = m.next(t);
+            assert_eq!(n, m.next(t), "determinism");
+            assert!((4..m.spec.vocab as i32).contains(&n), "token {n} in range");
+            t = n;
+        }
+    }
+
+    #[test]
+    fn ssm_agreement_is_partial() {
+        let (l, s) = (llm(), ssm());
+        let total = l.spec.vocab as i32 - 4;
+        let agree = (4..l.spec.vocab as i32)
+            .filter(|&t| l.next(t) == s.next(t))
+            .count() as i32;
+        assert!(agree > 0, "SSM never agrees");
+        assert!(agree < total, "SSM always agrees");
+    }
+
+    #[test]
+    fn prefill_sets_counters_and_predicts_from_last_token() {
+        let m = llm();
+        let p = m.spec.max_prompt;
+        let mut kv = m.new_kv(2);
+        let mut tokens = vec![0i32; 2 * p];
+        tokens[0] = 5;
+        tokens[1] = 9;
+        tokens[p] = 7;
+        let first = m.prefill(&tokens, &[2, 1], 2, &mut kv).unwrap();
+        assert_eq!(first, vec![m.next(9), m.next(7)]);
+        assert_eq!(kv.ingested, vec![2, 1]);
+        // a second prefill on a used cache is rejected
+        assert!(m.prefill(&tokens, &[2, 1], 2, &mut kv).is_err());
+    }
+
+    #[test]
+    fn verify_advances_and_clamp_rolls_back() {
+        let m = llm();
+        let mut kv = m.new_kv(1);
+        kv.ingested[0] = 4;
+        let pred = m.verify(&[5, 6, 7], 2, 1, &mut kv).unwrap();
+        assert_eq!(pred, vec![m.next(5), m.next(6), m.next(7)]);
+        assert_eq!(kv.ingested, vec![7]);
+        kv.clamp_to(&[5]);
+        assert_eq!(kv.ingested, vec![5]);
+    }
+
+    #[test]
+    fn speculate_chains_drafts() {
+        let m = ssm();
+        let mut kv = m.new_kv(1);
+        kv.ingested[0] = 3;
+        let draft = m.speculate(&[8, 9], &[2], 3, 1, &mut kv).unwrap();
+        let d1 = m.next(9);
+        let d2 = m.next(d1);
+        let d3 = m.next(d2);
+        assert_eq!(draft, vec![d1, d2, d3]);
+        // counters advance by dlen + s - 1 = 2 + 3 - 1
+        assert_eq!(kv.ingested, vec![7]);
+        // bad dlens rejected
+        let mut kv2 = m.new_kv(1);
+        assert!(m.speculate(&[8, 9], &[3], 1, 1, &mut kv2).is_err());
+    }
+
+    #[test]
+    fn capacity_overflow_is_detected() {
+        let spec = StubSpec {
+            max_seq: 8,
+            ..StubSpec::default()
+        };
+        let m = StubModel::new(spec, StubRole::Llm);
+        let mut kv = m.new_kv(1);
+        kv.ingested[0] = 7;
+        let err = m.verify(&[5, 6], 1, 1, &mut kv).unwrap_err().to_string();
+        assert!(err.contains("overflow"), "{err}");
+    }
+}

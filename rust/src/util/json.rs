@@ -9,8 +9,6 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
-use thiserror::Error;
-
 /// A parsed JSON value.  Object keys are kept sorted (BTreeMap) so writing
 /// is deterministic — handy for golden-file tests.
 #[derive(Debug, Clone, PartialEq)]
@@ -23,19 +21,42 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum JsonError {
-    #[error("json parse error at byte {pos}: {msg}")]
-    Parse { pos: usize, msg: String },
-    #[error("json type error at {path}: expected {expected}, found {found}")]
+    Parse {
+        pos: usize,
+        msg: String,
+    },
     Type {
         path: String,
         expected: &'static str,
         found: &'static str,
     },
-    #[error("json missing key {path:?}")]
-    Missing { path: String },
+    Missing {
+        path: String,
+    },
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JsonError::Parse { pos, msg } => {
+                write!(f, "json parse error at byte {pos}: {msg}")
+            }
+            JsonError::Type {
+                path,
+                expected,
+                found,
+            } => write!(
+                f,
+                "json type error at {path}: expected {expected}, found {found}"
+            ),
+            JsonError::Missing { path } => write!(f, "json missing key {path:?}"),
+        }
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 pub type Result<T> = std::result::Result<T, JsonError>;
 

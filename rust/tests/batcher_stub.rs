@@ -1,0 +1,141 @@
+//! End-to-end server/client integration on the **stub backend**: real
+//! worker thread, real message queues, real Gamma traffic — and no
+//! artifacts, so this runs in the default build/CI.  Covers both
+//! scheduling modes and the stub adaptive-LUT fallback.
+
+use specbatch::config::PolicySpec;
+use specbatch::dataset::Prompt;
+use specbatch::server::{run_experiment, Backend, SchedulingMode, ServerConfig};
+use specbatch::testkit::stub::StubSpec;
+use specbatch::traffic::{Trace, TrafficPattern};
+
+fn pool() -> Vec<Prompt> {
+    (3..=10usize)
+        .map(|n| Prompt {
+            ids: (0..n).map(|k| 4 + ((k * 5 + n) % 50) as i32).collect(),
+            text: String::new(),
+        })
+        .collect()
+}
+
+fn stub_cfg(mode: SchedulingMode) -> ServerConfig {
+    ServerConfig {
+        max_batch: 4,
+        max_new_tokens: 8,
+        mode,
+        ..ServerConfig::default()
+    }
+}
+
+fn quick_trace(n: usize, seed: u64) -> Trace {
+    Trace::generate(
+        &TrafficPattern::Stationary {
+            interval: 0.002,
+            cv: 1.0,
+        },
+        &pool(),
+        n,
+        seed,
+    )
+}
+
+#[test]
+fn stub_server_static_accounts_every_request() {
+    let trace = quick_trace(12, 3);
+    let (rec, lut, rounds) = run_experiment(
+        Backend::Stub(StubSpec::default()),
+        stub_cfg(SchedulingMode::Static),
+        PolicySpec::Fixed(2),
+        None,
+        &trace,
+    )
+    .expect("experiment");
+    assert!(lut.is_none());
+    assert_eq!(rec.len(), 12);
+    let mut ids: Vec<u64> = rec.records().iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..12).collect::<Vec<u64>>());
+    for r in rec.records() {
+        assert!(r.started_at >= r.sent_at - 1e-6, "start before send");
+        assert!(r.finished_at > r.started_at, "finish before start");
+        assert_eq!(r.tokens, 8, "stub never emits <eos>");
+        assert!(r.batch >= 1 && r.batch <= 4);
+    }
+    // static mode also surfaces a per-round timeline
+    assert!(!rounds.is_empty());
+    assert!(rounds.iter().all(|e| e.live >= 1 && e.live <= 4));
+}
+
+#[test]
+fn stub_server_continuous_accounts_every_request_with_timeline() {
+    let trace = quick_trace(16, 7);
+    let (rec, _, rounds) = run_experiment(
+        Backend::Stub(StubSpec::default()),
+        stub_cfg(SchedulingMode::Continuous),
+        PolicySpec::Fixed(2),
+        None,
+        &trace,
+    )
+    .expect("experiment");
+    assert_eq!(rec.len(), 16);
+    let mut ids: Vec<u64> = rec.records().iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..16).collect::<Vec<u64>>());
+    for r in rec.records() {
+        assert!(r.started_at >= r.sent_at - 1e-6, "admission before send");
+        assert!(r.finished_at >= r.started_at, "finish before admission");
+        assert_eq!(r.tokens, 8);
+        assert!(r.batch >= 1 && r.batch <= 4, "live cap violated: {}", r.batch);
+        assert!(r.spec_len <= 2);
+    }
+    assert!(!rounds.is_empty(), "continuous mode records every round");
+    assert!(rounds.iter().all(|e| e.live >= 1 && e.live <= 4));
+    assert!(rounds.iter().all(|e| e.s <= 2));
+    // round times never go backwards
+    for w in rounds.windows(2) {
+        assert!(w[1].t >= w[0].t - 1e-9);
+    }
+}
+
+#[test]
+fn stub_server_adaptive_falls_back_to_the_simulated_lut() {
+    let trace = quick_trace(6, 11);
+    let (rec, lut, _) = run_experiment(
+        Backend::Stub(StubSpec::default()),
+        stub_cfg(SchedulingMode::Continuous),
+        PolicySpec::Adaptive,
+        None,
+        &trace,
+    )
+    .expect("experiment");
+    assert_eq!(rec.len(), 6);
+    let lut = lut.expect("adaptive must yield a LUT");
+    for (&b, &s) in lut.entries() {
+        assert!(b >= 1 && b <= 4, "bucket {b} beyond max_batch");
+        assert!(s <= 8, "absurd speculation length {s} for bucket {b}");
+    }
+}
+
+#[test]
+fn both_modes_generate_identical_tokens_per_request() {
+    // losslessness through the whole server stack: scheduling must never
+    // change WHAT is generated, only WHEN
+    let trace = quick_trace(10, 19);
+    let run = |mode| {
+        let (rec, _, _) = run_experiment(
+            Backend::Stub(StubSpec::default()),
+            stub_cfg(mode),
+            PolicySpec::Fixed(3),
+            None,
+            &trace,
+        )
+        .expect("experiment");
+        let mut counts: Vec<(u64, usize)> =
+            rec.records().iter().map(|r| (r.id, r.tokens)).collect();
+        counts.sort_unstable();
+        counts
+    };
+    // the stub is deterministic per prompt, so token COUNTS must agree;
+    // exact token equality is asserted at the batcher level (unit tests)
+    assert_eq!(run(SchedulingMode::Static), run(SchedulingMode::Continuous));
+}

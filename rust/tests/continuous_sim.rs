@@ -1,0 +1,120 @@
+//! The continuous-batching acceptance test: a deterministic
+//! simulator-backed replay of the Fig. 5 stationary point (mean interval
+//! 0.2 s, CV 1) under static vs continuous scheduling with the adaptive
+//! policy.  Continuous batching must achieve strictly lower mean request
+//! latency, and the per-round timeline must show the chosen `s` changing
+//! as the live batch size changes *within a single serving epoch* — the
+//! regime the paper's LUT was built for.
+
+use std::collections::BTreeSet;
+
+use specbatch::dataset::Prompt;
+use specbatch::metrics::RoundEvent;
+use specbatch::scheduler::SpecPolicy;
+use specbatch::simulator::{
+    simulate_trace, simulate_trace_continuous, simulated_lut, CostModel, GpuProfile,
+    ModelProfile, SimConfig,
+};
+use specbatch::traffic::{Trace, TrafficPattern};
+
+fn paper_cfg() -> SimConfig {
+    SimConfig::paper_default(
+        CostModel::new(ModelProfile::OPT_6_7B, GpuProfile::RTX3090),
+        CostModel::new(ModelProfile::OPT_125M, GpuProfile::RTX3090),
+    )
+}
+
+fn fig5_trace() -> Trace {
+    // prompt lengths sampled like the dataset's 4..24 range (fig5 bench)
+    let pool: Vec<Prompt> = (4..=24)
+        .map(|n| Prompt {
+            ids: vec![1; n],
+            text: String::new(),
+        })
+        .collect();
+    Trace::generate(
+        &TrafficPattern::Stationary {
+            interval: 0.2,
+            cv: 1.0,
+        },
+        &pool,
+        400,
+        5,
+    )
+}
+
+/// One epoch's rounds must show s adapting to the live batch size.
+fn epoch_with_adapting_s(rounds: &[RoundEvent]) -> Option<usize> {
+    let epochs: BTreeSet<usize> = rounds.iter().map(|e| e.epoch).collect();
+    for epoch in epochs {
+        let in_epoch: Vec<&RoundEvent> = rounds.iter().filter(|e| e.epoch == epoch).collect();
+        let lives: BTreeSet<usize> = in_epoch.iter().map(|e| e.live).collect();
+        let specs: BTreeSet<usize> = in_epoch.iter().map(|e| e.s).collect();
+        if lives.len() > 1 && specs.len() > 1 {
+            return Some(epoch);
+        }
+    }
+    None
+}
+
+#[test]
+fn fig5_stationary_continuous_beats_static_and_s_adapts_within_an_epoch() {
+    let cfg = paper_cfg();
+    let lut = simulated_lut(&cfg, &[1, 2, 4, 8, 16], 8, 80);
+    let policy = SpecPolicy::Adaptive(lut);
+    let trace = fig5_trace();
+
+    // one shared trace for both comparison points (paper methodology)
+    let static_rec = simulate_trace(&cfg, &policy, &trace);
+    let (cont_rec, rounds) = simulate_trace_continuous(&cfg, &policy, &trace);
+
+    assert_eq!(static_rec.len(), trace.len());
+    assert_eq!(cont_rec.len(), trace.len());
+
+    // (a) strictly lower mean request latency under continuous batching
+    let static_mean = static_rec.summary().mean;
+    let cont_mean = cont_rec.summary().mean;
+    assert!(
+        cont_mean < static_mean,
+        "continuous ({cont_mean:.3}s) must beat static ({static_mean:.3}s) \
+         on the Fig. 5 stationary trace"
+    );
+
+    // (b) the per-round timeline shows s changing with the live batch
+    //     size inside one serving epoch
+    let epoch = epoch_with_adapting_s(&rounds);
+    assert!(
+        epoch.is_some(),
+        "no epoch showed s adapting to the live batch size; rounds: {:?}",
+        rounds.iter().take(32).collect::<Vec<_>>()
+    );
+
+    // sanity: the adaptation goes the right way — the largest s in the
+    // adapting epoch belongs to a smaller live batch than the smallest s
+    let epoch = epoch.unwrap();
+    let in_epoch: Vec<&RoundEvent> = rounds.iter().filter(|e| e.epoch == epoch).collect();
+    let max_s_round = in_epoch.iter().max_by_key(|e| e.s).unwrap();
+    let min_s_round = in_epoch.iter().min_by_key(|e| e.s).unwrap();
+    assert!(
+        max_s_round.live <= min_s_round.live,
+        "s should shrink as the live batch grows: s={} at live={} vs s={} at live={}",
+        max_s_round.s,
+        max_s_round.live,
+        min_s_round.s,
+        min_s_round.live
+    );
+}
+
+#[test]
+fn continuous_mode_is_deterministic_per_seed() {
+    let cfg = paper_cfg();
+    let policy = SpecPolicy::Fixed(3);
+    let trace = fig5_trace();
+    let (a, rounds_a) = simulate_trace_continuous(&cfg, &policy, &trace);
+    let (b, rounds_b) = simulate_trace_continuous(&cfg, &policy, &trace);
+    let lat = |r: &specbatch::metrics::LatencyRecorder| {
+        r.records().iter().map(|x| x.latency()).collect::<Vec<_>>()
+    };
+    assert_eq!(lat(&a), lat(&b));
+    assert_eq!(rounds_a.len(), rounds_b.len());
+}

@@ -6,7 +6,10 @@
 //! tokens.  This proves the whole chain — HLO executables, PJRT execution,
 //! KV-cache state machine, acceptance rule — matches the L2 semantics.
 //!
-//! Requires `make artifacts` to have run (skipped otherwise, loudly).
+//! Requires a `--features pjrt` build and `make artifacts` (skipped
+//! otherwise, loudly).  The artifact-free equivalents run on the stub
+//! backend in the engine's unit tests and `tests/batcher_stub.rs`.
+#![cfg(feature = "pjrt")]
 
 use specbatch::engine::{Engine, EngineConfig};
 use specbatch::runtime::Runtime;

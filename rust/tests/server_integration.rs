@@ -1,13 +1,18 @@
 //! End-to-end server/client integration over the message queues: real
 //! runtime, real worker thread, real Gamma traffic — scaled down so the
 //! test completes in seconds.
+//!
+//! Requires a `--features pjrt` build and `make artifacts` (skipped
+//! otherwise, loudly).  The artifact-free equivalents run on the stub
+//! backend in `tests/batcher_stub.rs`.
+#![cfg(feature = "pjrt")]
 
 use std::time::Duration;
 
 use specbatch::config::PolicySpec;
 use specbatch::dataset::Dataset;
 use specbatch::scheduler::Lut;
-use specbatch::server::{run_experiment, ServerConfig};
+use specbatch::server::{run_experiment, Backend, SchedulingMode, ServerConfig};
 use specbatch::traffic::{Trace, TrafficPattern};
 
 fn artifacts_dir() -> Option<std::path::PathBuf> {
@@ -41,9 +46,14 @@ fn serves_a_trace_and_accounts_every_request() {
         10,
         3,
     );
-    let (rec, lut) =
-        run_experiment(dir, small_cfg(), PolicySpec::Fixed(2), None, &trace)
-            .expect("experiment");
+    let (rec, lut, _rounds) = run_experiment(
+        Backend::Artifacts(dir),
+        small_cfg(),
+        PolicySpec::Fixed(2),
+        None,
+        &trace,
+    )
+    .expect("experiment");
     assert!(lut.is_none());
     assert_eq!(rec.len(), 10);
     // every id served exactly once
@@ -76,8 +86,14 @@ fn burst_traffic_gets_batched() {
         8,
         5,
     );
-    let (rec, _) = run_experiment(dir, small_cfg(), PolicySpec::Fixed(1), None, &trace)
-        .expect("experiment");
+    let (rec, _, _) = run_experiment(
+        Backend::Artifacts(dir),
+        small_cfg(),
+        PolicySpec::Fixed(1),
+        None,
+        &trace,
+    )
+    .expect("experiment");
     assert_eq!(rec.len(), 8);
     let max_batch = rec.records().iter().map(|r| r.batch).max().unwrap();
     assert!(max_batch > 1, "burst should produce merged batches");
@@ -99,8 +115,14 @@ fn adaptive_policy_profiles_then_serves() {
     );
     let mut cfg = small_cfg();
     cfg.profile_prompts = 4; // keep profiling quick
-    let (rec, lut) = run_experiment(dir, cfg, PolicySpec::Adaptive, None, &trace)
-        .expect("experiment");
+    let (rec, lut, _) = run_experiment(
+        Backend::Artifacts(dir),
+        cfg,
+        PolicySpec::Adaptive,
+        None,
+        &trace,
+    )
+    .expect("experiment");
     assert_eq!(rec.len(), 4);
     let lut = lut.expect("adaptive must yield a LUT");
     for (&b, &s) in lut.entries() {
@@ -124,8 +146,8 @@ fn precomputed_lut_skips_profiling() {
     );
     let lut = Lut::new([(1, 3), (2, 2), (4, 2)].into_iter().collect()).unwrap();
     let t0 = std::time::Instant::now();
-    let (rec, lut_used) = run_experiment(
-        dir,
+    let (rec, lut_used, _) = run_experiment(
+        Backend::Artifacts(dir),
         small_cfg(),
         PolicySpec::Adaptive,
         Some(lut.clone()),
@@ -136,4 +158,36 @@ fn precomputed_lut_skips_profiling() {
     assert_eq!(lut_used, Some(lut));
     // generous bound: no profiling pass means startup stays modest
     assert!(t0.elapsed() < Duration::from_secs(300));
+}
+
+#[test]
+fn continuous_mode_serves_a_trace_on_artifacts() {
+    let Some(dir) = artifacts_dir() else { return };
+    let dataset = Dataset::load(dir.join("dataset.json")).expect("dataset");
+    let trace = Trace::generate(
+        &TrafficPattern::Stationary {
+            interval: 0.02,
+            cv: 1.0,
+        },
+        &dataset.eval,
+        8,
+        13,
+    );
+    let mut cfg = small_cfg();
+    cfg.mode = SchedulingMode::Continuous;
+    let (rec, _, rounds) = run_experiment(
+        Backend::Artifacts(dir),
+        cfg,
+        PolicySpec::Fixed(2),
+        None,
+        &trace,
+    )
+    .expect("experiment");
+    assert_eq!(rec.len(), 8);
+    assert!(!rounds.is_empty(), "continuous mode must record rounds");
+    for r in rec.records() {
+        assert!(r.started_at >= r.sent_at - 1e-6);
+        assert!(r.finished_at > r.started_at);
+        assert_eq!(r.tokens, 8);
+    }
 }
