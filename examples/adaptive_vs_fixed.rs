@@ -11,10 +11,10 @@
 use anyhow::Result;
 
 use specbatch::engine::{Engine, EngineConfig};
+use specbatch::policy::{Fixed, LutAdaptive, NoSpec, SpeculationPolicy};
 #[cfg(feature = "pjrt")]
 use specbatch::runtime::Runtime;
 use specbatch::scheduler::profiler::{profile, ProfilerConfig};
-use specbatch::scheduler::SpecPolicy;
 use specbatch::util::prng::Pcg64;
 
 #[cfg(not(feature = "pjrt"))]
@@ -43,11 +43,11 @@ fn main() -> Result<()> {
 
     // --- execution stage on the disjoint eval split ---
     let tokens = 24;
-    let policies: Vec<(String, SpecPolicy)> = vec![
-        ("no-spec".into(), SpecPolicy::NoSpec),
-        ("fixed-2".into(), SpecPolicy::Fixed(2)),
-        ("fixed-4".into(), SpecPolicy::Fixed(4)),
-        ("adaptive".into(), SpecPolicy::Adaptive(result.lut.clone())),
+    let mut policies: Vec<(String, Box<dyn SpeculationPolicy>)> = vec![
+        ("no-spec".into(), Box::new(NoSpec) as Box<dyn SpeculationPolicy>),
+        ("fixed-2".into(), Box::new(Fixed(2))),
+        ("fixed-4".into(), Box::new(Fixed(4))),
+        ("adaptive".into(), Box::new(LutAdaptive(result.lut.clone()))),
     ];
     println!(
         "{:>6}  {:>9} {:>9} {:>9} {:>9}   (ms/token)",
@@ -61,8 +61,8 @@ fn main() -> Result<()> {
             .collect();
         let mut cells = Vec::new();
         let mut best = (String::new(), f64::INFINITY);
-        for (name, policy) in &policies {
-            let out = engine.generate_batch(&prompts, tokens, policy)?;
+        for (name, policy) in policies.iter_mut() {
+            let out = engine.generate_batch(&prompts, tokens, policy.as_mut())?;
             let ms = out.stats.per_token_latency() * 1e3;
             if ms < best.1 {
                 best = (name.clone(), ms);

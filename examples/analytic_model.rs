@@ -21,9 +21,9 @@ use specbatch::analytic::{AcceptanceModel, StepCostModel, TotalTimeModel};
 use specbatch::engine::{Engine, EngineConfig};
 #[cfg(feature = "pjrt")]
 use specbatch::model::Model;
+use specbatch::policy::Fixed;
 #[cfg(feature = "pjrt")]
 use specbatch::runtime::Runtime;
-use specbatch::scheduler::SpecPolicy;
 use specbatch::util::prng::Pcg64;
 
 #[cfg(not(feature = "pjrt"))]
@@ -58,7 +58,7 @@ fn main() -> Result<()> {
             .into_iter()
             .map(|p| p.ids)
             .collect();
-        let out = engine.generate_batch(&prompts, 32, &SpecPolicy::Fixed(s_probe))?;
+        let out = engine.generate_batch(&prompts, 32, &mut Fixed(s_probe))?;
         samples.extend(out.stats.accept_samples);
     }
     let acceptance = AcceptanceModel::fit_samples(&samples, s_probe)?;
@@ -128,8 +128,12 @@ fn main() -> Result<()> {
                 .into_iter()
                 .map(|p| p.ids)
                 .collect();
-            let policy = if s == 0 { SpecPolicy::NoSpec } else { SpecPolicy::Fixed(s) };
-            let out = engine.generate_batch(&prompts, 16, &policy)?;
+            let mut policy: Box<dyn specbatch::policy::SpeculationPolicy> = if s == 0 {
+                Box::new(specbatch::policy::NoSpec)
+            } else {
+                Box::new(Fixed(s))
+            };
+            let out = engine.generate_batch(&prompts, 16, policy.as_mut())?;
             let lat = out.stats.per_token_latency();
             if lat < best.1 {
                 best = (s, lat);

@@ -57,17 +57,18 @@ fn stub_server_demo() -> Result<()> {
         mode: SchedulingMode::Continuous,
         ..ServerConfig::default()
     };
-    let (rec, lut, rounds) = run_experiment(
+    let out = run_experiment(
         Backend::Stub(StubSpec::default()),
         cfg,
         PolicySpec::Adaptive,
         None,
         &trace,
     )?;
-    if let Some(lut) = lut {
+    if let Some(lut) = &out.lut {
         println!("adaptive LUT: {}", lut.to_json().compact());
     }
-    let s = rec.summary();
+    let rounds = &out.timeline;
+    let s = out.recorder.summary();
     println!(
         "{} requests | mean latency {:.4}s | {} decode rounds recorded",
         s.n,
@@ -97,6 +98,7 @@ fn simulator_comparison() {
         llm: CostModel::new(ModelProfile::OPT_6_7B, GpuProfile::RTX3090),
         ssm: CostModel::new(ModelProfile::OPT_125M, GpuProfile::RTX3090),
         acceptance: AcceptanceProcess::paper(),
+        drift: None,
         max_batch: 16,
         max_new_tokens: 128,
         host_overhead: 0.2e-3,
@@ -124,9 +126,9 @@ fn simulator_comparison() {
         "{:>10} {:>14} {:>17} {:>9}",
         "policy", "static mean", "continuous mean", "gain"
     );
-    for (name, policy) in comparison_policies(lut) {
-        let m_static = simulate_trace(&cfg, &policy, &trace).summary().mean;
-        let (rec, _) = simulate_trace_continuous(&cfg, &policy, &trace);
+    for (name, mut policy) in comparison_policies(lut) {
+        let m_static = simulate_trace(&cfg, policy.as_mut(), &trace).summary().mean;
+        let (rec, _) = simulate_trace_continuous(&cfg, policy.as_mut(), &trace);
         let m_cont = rec.summary().mean;
         println!(
             "{name:>10} {m_static:>13.3}s {m_cont:>16.3}s {:>8.2}x",

@@ -1,0 +1,143 @@
+//! Online model-based speculation adapting to acceptance drift, end to
+//! end and artifact-free: a continuous-batching serve run (virtual time,
+//! paper-scale cost model) whose draft acceptance collapses mid-trace.
+//! A reporting wrapper around [`ModelBased`] prints the fitted `c`, `γ`
+//! and the chosen `s` every few hundred rounds — watch the fit track the
+//! pre-drift curve, break when the workload shifts, and re-converge.
+//!
+//! ```bash
+//! cargo run --release --example online_adaptation   # no artifacts needed
+//! ```
+
+use anyhow::Result;
+
+use specbatch::dataset::Prompt;
+use specbatch::policy::{ModelBased, RoundFeedback, SpeculationPolicy};
+use specbatch::simulator::{
+    oracle_s_opt, simulate_trace_continuous, simulated_lut, AcceptanceDrift, AcceptanceProcess,
+    CostModel, GpuProfile, ModelProfile, SimConfig,
+};
+use specbatch::traffic::{Trace, TrafficPattern};
+
+/// Wraps the online policy and narrates its fits as feedback arrives —
+/// a tiny demonstration of composing [`SpeculationPolicy`] objects.
+struct Narrated {
+    inner: ModelBased,
+    rounds: usize,
+    every: usize,
+}
+
+impl SpeculationPolicy for Narrated {
+    fn choose(&self, live: usize, max_s: usize) -> usize {
+        self.inner.choose(live, max_s)
+    }
+
+    fn observe(&mut self, fb: &RoundFeedback) {
+        self.inner.observe(fb);
+        self.rounds += 1;
+        if self.rounds % self.every == 0 {
+            match self.inner.fitted_acceptance() {
+                Some(a) => println!(
+                    "  round {:>5}: l(s) ≈ {:.3}·s^{:.3}  (r² {:.3})  live {:>2} -> s = {}",
+                    self.rounds,
+                    a.c,
+                    a.gamma,
+                    a.r2,
+                    fb.live,
+                    self.inner.choose(fb.live, 8),
+                ),
+                None => println!("  round {:>5}: cold start (LUT fallback)", self.rounds),
+            }
+        }
+    }
+
+    fn label(&self) -> String {
+        format!("narrated({})", self.inner.label())
+    }
+}
+
+fn main() -> Result<()> {
+    specbatch::util::logging::init_from_env();
+    let drift_at = 60.0;
+    let before = AcceptanceProcess::PowerLaw { c: 0.9, gamma: 0.8 };
+    let after = AcceptanceProcess::PowerLaw {
+        c: 0.6,
+        gamma: 0.05,
+    };
+
+    let mut cfg = SimConfig::paper_default(
+        CostModel::new(ModelProfile::OPT_6_7B, GpuProfile::RTX3090),
+        CostModel::new(ModelProfile::OPT_125M, GpuProfile::RTX3090),
+    );
+    cfg.acceptance = before.clone();
+    cfg.drift = Some(AcceptanceDrift {
+        at: drift_at,
+        after: after.clone(),
+    });
+
+    // the offline LUT, profiled before the drift — about to go stale
+    let lut = {
+        let mut pre = cfg.clone();
+        pre.drift = None;
+        simulated_lut(&pre, &[1, 2, 4, 8, 16], 8, 80)
+    };
+    println!("offline (soon-stale) LUT: {}", lut.to_json().compact());
+    println!(
+        "acceptance drifts at t = {drift_at}s: 0.9·s^0.8 -> 0.6·s^0.05 \
+         (drafts stop being accepted)\n"
+    );
+
+    let pool = vec![Prompt {
+        ids: vec![1; 16],
+        text: String::new(),
+    }];
+    let trace = Trace::generate(
+        &TrafficPattern::Stationary {
+            interval: 0.2,
+            cv: 1.0,
+        },
+        &pool,
+        600,
+        42,
+    );
+
+    let mut policy = Narrated {
+        inner: ModelBased::new(lut),
+        rounds: 0,
+        every: 300,
+    };
+    println!("== online fit converging over rounds ==");
+    let (rec, rounds) = simulate_trace_continuous(&cfg, &mut policy, &trace);
+
+    println!("\n== outcome ==");
+    println!(
+        "{} requests | mean latency {:.3}s over {} rounds",
+        rec.len(),
+        rec.summary().mean,
+        rounds.len()
+    );
+    if let Some(snap) = policy.inner.snapshot() {
+        println!("final fitted model: {}", snap.compact());
+    }
+
+    // chosen s vs the oracle, before and after the drift
+    let mode_s = |lo: f64, hi: f64| -> Option<usize> {
+        let mut counts = std::collections::BTreeMap::new();
+        for e in rounds.iter().filter(|e| e.t >= lo && e.t < hi) {
+            *counts.entry(e.s).or_insert(0usize) += 1;
+        }
+        counts.into_iter().max_by_key(|&(_, n)| n).map(|(s, _)| s)
+    };
+    let live_late = rounds.last().map(|e| e.live).unwrap_or(8);
+    println!(
+        "pre-drift modal s = {:?} (oracle at live=2: {})",
+        mode_s(5.0, drift_at),
+        oracle_s_opt(&cfg, &before, 2, 8, 80)
+    );
+    println!(
+        "post-drift modal s = {:?} (oracle at live={live_late}: {})",
+        mode_s(drift_at + 20.0, f64::INFINITY),
+        oracle_s_opt(&cfg, &after, live_late, 8, 80)
+    );
+    Ok(())
+}

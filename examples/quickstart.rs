@@ -9,9 +9,9 @@
 use anyhow::Result;
 
 use specbatch::engine::{Engine, EngineConfig};
+use specbatch::policy::{Fixed, NoSpec};
 #[cfg(feature = "pjrt")]
 use specbatch::runtime::Runtime;
-use specbatch::scheduler::SpecPolicy;
 use specbatch::util::prng::Pcg64;
 
 #[cfg(not(feature = "pjrt"))]
@@ -36,8 +36,8 @@ fn main() -> Result<()> {
     let ids: Vec<Vec<i32>> = prompts.iter().map(|p| p.ids.clone()).collect();
 
     // generate with speculation length 3, then compare against no-spec
-    let spec = engine.generate_batch(&ids, 32, &SpecPolicy::Fixed(3))?;
-    let plain = engine.generate_batch(&ids, 32, &SpecPolicy::NoSpec)?;
+    let spec = engine.generate_batch(&ids, 32, &mut Fixed(3))?;
+    let plain = engine.generate_batch(&ids, 32, &mut NoSpec)?;
 
     println!("== generations ==");
     for (p, toks) in prompts.iter().zip(&spec.tokens) {

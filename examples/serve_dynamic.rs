@@ -72,6 +72,7 @@ fn main() -> Result<()> {
         PolicySpec::Fixed(2),
         PolicySpec::Fixed(4),
         PolicySpec::Adaptive,
+        PolicySpec::ModelBased,
     ];
     let mut csv = Csv::new(&[
         "policy",
@@ -90,11 +91,15 @@ fn main() -> Result<()> {
             mode,
             ..ServerConfig::default()
         };
-        let (rec, lut, _rounds) =
+        let out =
             run_experiment(Backend::Artifacts(artifacts.clone()), cfg, policy, None, &trace)?;
-        if let Some(lut) = lut {
+        if let Some(lut) = &out.lut {
             println!("[{label}] profiled LUT: {}", lut.to_json().compact());
         }
+        if let Some(snapshot) = &out.policy_snapshot {
+            println!("[{label}] fitted model: {}", snapshot.compact());
+        }
+        let rec = &out.recorder;
         let s = rec.summary();
         let (p50, p90, p99) = rec.percentiles();
         let tput = rec.throughput_tokens_per_s();

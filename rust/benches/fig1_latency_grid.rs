@@ -52,6 +52,7 @@ fn sim_grid() {
             llm: CostModel::new(*model, *gpu),
             ssm: CostModel::new(ModelProfile::OPT_125M, *gpu),
             acceptance: AcceptanceProcess::paper(),
+            drift: None,
             max_batch: 32,
             max_new_tokens: 128,
             host_overhead: 0.2e-3,
@@ -97,7 +98,7 @@ fn sim_grid() {
 
 #[cfg(feature = "pjrt")]
 fn real_grid() {
-    use specbatch::scheduler::SpecPolicy;
+    use specbatch::policy::{Fixed, NoSpec, SpeculationPolicy};
 
     println!("\n== Fig. 1 (real execution, tiny models on CPU PJRT) ==");
     let rt = common::load_runtime_or_exit();
@@ -135,12 +136,14 @@ fn real_grid() {
                 .into_iter()
                 .map(|p| p.ids)
                 .collect();
-            let policy = if s == 0 {
-                SpecPolicy::NoSpec
+            let mut policy: Box<dyn SpeculationPolicy> = if s == 0 {
+                Box::new(NoSpec)
             } else {
-                SpecPolicy::Fixed(s)
+                Box::new(Fixed(s))
             };
-            let out = engine.generate_batch(&prompts, tokens, &policy).expect("gen");
+            let out = engine
+                .generate_batch(&prompts, tokens, policy.as_mut())
+                .expect("gen");
             lat.push(out.stats.per_token_latency() * 1e3);
             acc.push(out.stats.mean_accepted());
         }

@@ -19,7 +19,7 @@ use specbatch::analytic::{l_of_s_estimate, AcceptanceModel};
 #[cfg(feature = "pjrt")]
 use specbatch::engine::{Engine, EngineConfig};
 #[cfg(feature = "pjrt")]
-use specbatch::scheduler::SpecPolicy;
+use specbatch::policy::Fixed;
 #[cfg(feature = "pjrt")]
 use specbatch::util::csv::{f, Csv};
 #[cfg(feature = "pjrt")]
@@ -68,7 +68,7 @@ fn main() {
             .map(|p| p.ids)
             .collect();
         let out = engine
-            .generate_batch(&prompts, tokens, &SpecPolicy::Fixed(s_probe))
+            .generate_batch(&prompts, tokens, &mut Fixed(s_probe))
             .expect("gen");
         samples.extend(&out.stats.accept_samples);
     }

@@ -16,7 +16,7 @@
 #[allow(dead_code)]
 mod common;
 
-use specbatch::scheduler::SpecPolicy;
+use specbatch::policy::{LutAdaptive, NoSpec};
 use specbatch::simulator::{
     batch_service_time, AcceptanceProcess, CostModel, GpuProfile, ModelProfile, SimConfig,
 };
@@ -88,10 +88,10 @@ fn real() {
                 .map(|p| p.ids)
                 .collect();
             let o1 = engine
-                .generate_batch(&prompts, tokens, &SpecPolicy::NoSpec)
+                .generate_batch(&prompts, tokens, &mut NoSpec)
                 .expect("nospec");
             let o2 = engine
-                .generate_batch(&prompts, tokens, &SpecPolicy::Adaptive(lut.clone()))
+                .generate_batch(&prompts, tokens, &mut LutAdaptive(lut.clone()))
                 .expect("adaptive");
             t_nospec += o1.stats.per_token_latency();
             t_adaptive += o2.stats.per_token_latency();
@@ -136,6 +136,7 @@ fn sim() {
         llm: CostModel::new(ModelProfile::OPT_6_7B, GpuProfile::RTX3090),
         ssm: CostModel::new(ModelProfile::OPT_125M, GpuProfile::RTX3090),
         acceptance: AcceptanceProcess::paper(),
+        drift: None,
         max_batch: 32,
         max_new_tokens: 128,
         host_overhead: 0.2e-3,
@@ -154,11 +155,12 @@ fn sim() {
         let mut t0 = 0.0;
         let mut t1 = 0.0;
         for _ in 0..reps {
-            t0 += batch_service_time(&cfg, &SpecPolicy::NoSpec, &plens, &mut rng).0;
+            t0 += batch_service_time(&cfg, &mut NoSpec, &plens, 0.0, &mut rng).0;
             t1 += batch_service_time(
                 &cfg,
-                &SpecPolicy::Adaptive(lut.clone()),
+                &mut LutAdaptive(lut.clone()),
                 &plens,
+                0.0,
                 &mut rng,
             )
             .0;

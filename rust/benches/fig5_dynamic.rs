@@ -19,7 +19,6 @@
 mod common;
 
 use specbatch::dataset::Prompt;
-use specbatch::scheduler::SpecPolicy;
 use specbatch::simulator::{
     comparison_policies, simulate_trace, simulated_lut, AcceptanceProcess, CostModel,
     GpuProfile, ModelProfile, SimConfig,
@@ -32,6 +31,7 @@ fn main() {
         llm: CostModel::new(ModelProfile::OPT_6_7B, GpuProfile::RTX3090),
         ssm: CostModel::new(ModelProfile::OPT_125M, GpuProfile::RTX3090),
         acceptance: AcceptanceProcess::paper(),
+        drift: None,
         max_batch: 16,
         max_new_tokens: 128,
         host_overhead: 0.2e-3,
@@ -39,7 +39,7 @@ fn main() {
     };
     let lut = simulated_lut(&cfg, &[1, 2, 4, 8, 16], 8, 80);
     println!("simulated LUT: {}", lut.to_json().compact());
-    let policies = comparison_policies(lut);
+    let mut policies = comparison_policies(lut);
 
     let n_requests = if common::is_quick() { 200 } else { 1000 };
     let cvs = [0.5, 1.0, 2.0, 5.0];
@@ -69,8 +69,8 @@ fn main() {
             );
             let mut cells = vec![format!("{interval:.1}s")];
             let mut cell_means = Vec::new();
-            for (name, policy) in &policies {
-                let rec = simulate_trace(&cfg, policy, &trace);
+            for (name, policy) in policies.iter_mut() {
+                let rec = simulate_trace(&cfg, policy.as_mut(), &trace);
                 assert_eq!(rec.len(), n_requests);
                 let mean = rec.summary().mean;
                 let (_, _, p99) = rec.percentiles();
@@ -129,5 +129,4 @@ fn main() {
         geo(&adaptive_vs_best_fixed) > 0.97,
         "adaptive should be on par with or better than the best fixed scheme"
     );
-    let _ = SpecPolicy::NoSpec; // keep import used in quick mode
 }

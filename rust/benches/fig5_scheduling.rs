@@ -32,6 +32,7 @@ fn main() {
         llm: CostModel::new(ModelProfile::OPT_6_7B, GpuProfile::RTX3090),
         ssm: CostModel::new(ModelProfile::OPT_125M, GpuProfile::RTX3090),
         acceptance: AcceptanceProcess::paper(),
+        drift: None,
         max_batch: 16,
         max_new_tokens: 128,
         host_overhead: 0.2e-3,
@@ -39,7 +40,7 @@ fn main() {
     };
     let lut = simulated_lut(&cfg, &[1, 2, 4, 8, 16], 8, 80);
     println!("simulated LUT: {}", lut.to_json().compact());
-    let policies = comparison_policies(lut);
+    let mut policies = comparison_policies(lut);
 
     let n_requests = if common::is_quick() { 200 } else { 1000 };
     let intervals = [0.1, 0.2, 0.3, 0.4, 0.6, 0.8];
@@ -69,9 +70,9 @@ fn main() {
         );
         println!("\n-- interval {interval}s (cv 1.0, {n_requests} requests) --");
         let mut rows = Vec::new();
-        for (name, policy) in &policies {
-            let rec_static = simulate_trace(&cfg, policy, &trace);
-            let (rec_cont, _rounds) = simulate_trace_continuous(&cfg, policy, &trace);
+        for (name, policy) in policies.iter_mut() {
+            let rec_static = simulate_trace(&cfg, policy.as_mut(), &trace);
+            let (rec_cont, _rounds) = simulate_trace_continuous(&cfg, policy.as_mut(), &trace);
             let m_static = rec_static.summary().mean;
             let m_cont = rec_cont.summary().mean;
             let (_, _, p99_static) = rec_static.percentiles();

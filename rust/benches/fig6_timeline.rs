@@ -27,6 +27,7 @@ fn main() {
         llm: CostModel::new(ModelProfile::OPT_6_7B, GpuProfile::RTX3090),
         ssm: CostModel::new(ModelProfile::OPT_125M, GpuProfile::RTX3090),
         acceptance: AcceptanceProcess::paper(),
+        drift: None,
         max_batch: 16,
         max_new_tokens: 128,
         host_overhead: 0.2e-3,
@@ -34,7 +35,7 @@ fn main() {
     };
     let lut = simulated_lut(&cfg, &[1, 2, 4, 8, 16], 8, 80);
     println!("simulated LUT: {}", lut.to_json().compact());
-    let policies = comparison_policies(lut);
+    let mut policies = comparison_policies(lut);
 
     let n_requests = if common::is_quick() { 300 } else { 1000 };
     let pool: Vec<Prompt> = (4..=24)
@@ -54,8 +55,8 @@ fn main() {
     let mut csv = Csv::new(&["policy", "group_t_start_s", "group_mean_latency_s", "n"]);
     let mut means = Vec::new();
     let mut phase_means: Vec<(String, f64, f64)> = Vec::new();
-    for (name, policy) in &policies {
-        let rec = simulate_trace(&cfg, policy, &trace);
+    for (name, policy) in policies.iter_mut() {
+        let rec = simulate_trace(&cfg, policy.as_mut(), &trace);
         let groups = timeline_groups(rec.records(), 40);
         for g in &groups {
             csv.row(&[

@@ -17,7 +17,7 @@ use specbatch::engine::{Engine, EngineConfig};
 #[cfg(feature = "pjrt")]
 use specbatch::model::Model;
 #[cfg(feature = "pjrt")]
-use specbatch::scheduler::SpecPolicy;
+use specbatch::policy::Fixed;
 use specbatch::util::csv::{f, Csv};
 use specbatch::util::prng::Pcg64;
 
@@ -138,7 +138,7 @@ fn main() {
             .collect();
         let tokens = if common::is_quick() { 16 } else { 48 };
         let out = engine
-            .generate_batch(&prompts, tokens, &SpecPolicy::Fixed(3))
+            .generate_batch(&prompts, tokens, &mut Fixed(3))
             .expect("gen");
         println!(
             "\nend-to-end b=4 s=3: {:.2} ms/token, {} rounds, {:.2} accepted/round",

@@ -14,10 +14,11 @@
 //! * **reshape** — when queue pressure outgrows the current bucket, the
 //!   epoch is re-opened at the next larger bucket and unfinished rows are
 //!   carried over (their contexts re-ingested);
-//! * **adapt** — every round re-queries the [`SpecPolicy`] with the
-//!   *live* batch size, so `s` tracks load within a single epoch —
-//!   exactly the regime where the paper's adaptive LUT beats any fixed
-//!   speculation length.
+//! * **adapt** — every round re-queries the [`SpeculationPolicy`] with
+//!   the *live* batch size and feeds the round's outcome back through
+//!   its `observe` edge, so `s` tracks load within a single epoch (the
+//!   paper's LUT regime) and online policies keep learning as the
+//!   workload drifts.
 //!
 //! The batcher is clock-agnostic: the caller supplies `now` (real server:
 //! the experiment clock; tests: a virtual clock).  The discrete-event
@@ -30,7 +31,7 @@ use anyhow::{bail, Result};
 
 use crate::engine::{AdmitRequest, BatchState, Engine};
 use crate::metrics::RoundEvent;
-use crate::scheduler::SpecPolicy;
+use crate::policy::SpeculationPolicy;
 
 /// Batcher knobs.
 #[derive(Debug, Clone)]
@@ -136,7 +137,7 @@ impl ContinuousBatcher {
     pub fn step(
         &mut self,
         engine: &mut Engine<'_>,
-        policy: &SpecPolicy,
+        policy: &mut dyn SpeculationPolicy,
         now: f64,
     ) -> Result<Vec<FinishedRequest>> {
         let mut finished = Vec::new();
@@ -203,6 +204,8 @@ impl ContinuousBatcher {
                     live: info.live,
                     queued: self.queue.len(),
                     s: info.s,
+                    accepted: info.accepted,
+                    round_cost: info.round_time,
                 });
             }
         }
@@ -214,7 +217,7 @@ impl ContinuousBatcher {
     fn start_epoch(
         &mut self,
         engine: &mut Engine<'_>,
-        policy: &SpecPolicy,
+        policy: &mut dyn SpeculationPolicy,
         bucket: usize,
         now: f64,
         carry: Vec<(AdmitRequest, RowMeta)>,
@@ -233,12 +236,12 @@ impl ContinuousBatcher {
         if fresh.is_empty() {
             bail!("start_epoch: nothing to admit");
         }
-        let may_speculate = !matches!(policy, SpecPolicy::NoSpec);
+        let may_speculate = policy.wants_speculation();
         self.epoch_seq += 1;
         let mut slots: Vec<Option<RowMeta>> = vec![None; bucket];
 
         let live_after = fresh.len() + carry.len();
-        let spec_now = policy.spec_len(live_after, engine.limits().max_spec_len(bucket));
+        let spec_now = policy.choose(live_after, engine.limits().max_spec_len(bucket));
 
         let prompts: Vec<Vec<i32>> = fresh.iter().map(|r| r.prompt.clone()).collect();
         let mut state =
@@ -270,7 +273,7 @@ impl ContinuousBatcher {
     fn admit_from_queue(
         &mut self,
         engine: &mut Engine<'_>,
-        policy: &SpecPolicy,
+        policy: &mut dyn SpeculationPolicy,
         now: f64,
     ) -> Result<()> {
         let ep = self.epoch.as_mut().expect("active epoch");
@@ -294,7 +297,7 @@ impl ContinuousBatcher {
             .collect();
         let slots = engine.admit_rows(&mut ep.state, &reqs)?;
         let live_after = ep.state.live_rows();
-        let spec_now = policy.spec_len(
+        let spec_now = policy.choose(
             live_after,
             engine.limits().max_spec_len(ep.state.bucket()),
         );
@@ -315,6 +318,7 @@ impl ContinuousBatcher {
 mod tests {
     use super::*;
     use crate::engine::EngineConfig;
+    use crate::policy::{Fixed, LutAdaptive, ModelBased};
     use crate::testkit::stub::{StubModel, StubRole, StubSpec};
 
     fn stub_engine() -> Engine<'static> {
@@ -335,7 +339,7 @@ mod tests {
     fn drive(
         batcher: &mut ContinuousBatcher,
         engine: &mut Engine<'_>,
-        policy: &SpecPolicy,
+        policy: &mut dyn SpeculationPolicy,
         arrivals: &mut Vec<(usize, BatchRequest)>, // (step index, request)
     ) -> Vec<FinishedRequest> {
         let mut finished = Vec::new();
@@ -359,7 +363,7 @@ mod tests {
 
     #[test]
     fn serves_every_request_losslessly_across_staggered_arrivals() {
-        let policy = SpecPolicy::Fixed(3);
+        let mut policy = Fixed(3);
         let mut engine = stub_engine();
         let mut batcher = ContinuousBatcher::new(BatcherConfig {
             max_batch: 8,
@@ -387,7 +391,7 @@ mod tests {
                 )
             })
             .collect();
-        let finished = drive(&mut batcher, &mut engine, &policy, &mut arrivals);
+        let finished = drive(&mut batcher, &mut engine, &mut policy, &mut arrivals);
 
         assert_eq!(finished.len(), prompts.len());
         for f in &finished {
@@ -409,7 +413,7 @@ mod tests {
                 .collect(),
         )
         .unwrap();
-        let policy = SpecPolicy::Adaptive(lut);
+        let mut policy = LutAdaptive(lut);
         let mut engine = stub_engine();
         let mut batcher = ContinuousBatcher::new(BatcherConfig {
             max_batch: 8,
@@ -433,7 +437,7 @@ mod tests {
                 },
             ));
         }
-        let finished = drive(&mut batcher, &mut engine, &policy, &mut arrivals);
+        let finished = drive(&mut batcher, &mut engine, &mut policy, &mut arrivals);
         assert_eq!(finished.len(), 6);
 
         let lives: Vec<usize> = batcher.timeline.iter().map(|e| e.live).collect();
@@ -453,7 +457,7 @@ mod tests {
 
     #[test]
     fn respects_max_batch_under_burst() {
-        let policy = SpecPolicy::Fixed(2);
+        let mut policy = Fixed(2);
         let mut engine = stub_engine();
         let mut batcher = ContinuousBatcher::new(BatcherConfig {
             max_batch: 4,
@@ -471,11 +475,56 @@ mod tests {
                 )
             })
             .collect();
-        let finished = drive(&mut batcher, &mut engine, &policy, &mut arrivals);
+        let finished = drive(&mut batcher, &mut engine, &mut policy, &mut arrivals);
         assert_eq!(finished.len(), 12);
         assert!(batcher.timeline.iter().all(|e| e.live <= 4));
         for f in &finished {
             assert_eq!(f.tokens, chain(5 + f.id as i32, 8));
         }
+    }
+
+    /// Scheduling is output-invariant even under the online policy: the
+    /// ModelBased choices change WHEN tokens appear, never WHICH.
+    #[test]
+    fn model_based_policy_serves_losslessly() {
+        let lut = crate::scheduler::Lut::new(
+            [(1usize, 4usize), (4, 2), (16, 1)].into_iter().collect(),
+        )
+        .unwrap();
+        let mut policy = ModelBased::new(lut);
+        let mut engine = stub_engine();
+        let mut batcher = ContinuousBatcher::new(BatcherConfig {
+            max_batch: 4,
+            max_new_tokens: 10,
+        });
+        let mut arrivals: Vec<(usize, BatchRequest)> = (0..8u64)
+            .map(|i| {
+                (
+                    (i as usize) * 2,
+                    BatchRequest {
+                        id: i,
+                        prompt: vec![5 + i as i32, 6],
+                        sent_at: i as f64 * 1e-3,
+                    },
+                )
+            })
+            .collect();
+        let finished = drive(&mut batcher, &mut engine, &mut policy, &mut arrivals);
+        assert_eq!(finished.len(), 8);
+        for f in &finished {
+            assert_eq!(f.tokens, chain(6, 10), "request {} diverged", f.id);
+        }
+        // the feedback edge ran: the policy accumulated acceptance
+        // samples (cold start speculates via the fallback LUT, so every
+        // round reports per-row accepted counts)
+        let snap = policy.snapshot().expect("model-based always snapshots");
+        let samples = snap.get("samples").unwrap().as_f64().unwrap();
+        assert!(samples > 0.0, "observe never delivered samples: {snap:?}");
+        // the recorded timeline carries the new accepted/cost columns
+        assert!(!batcher.timeline.is_empty());
+        assert!(batcher
+            .timeline
+            .iter()
+            .any(|e| e.s > 0 && e.accepted <= e.s * e.live));
     }
 }

@@ -21,19 +21,23 @@ pub struct ServingConfig {
     pub max_new_tokens: usize,
     /// Stop early when the model emits `<eos>`.
     pub stop_at_eos: bool,
-    /// Speculation policy: "none", "fixed:<s>", or "adaptive".
+    /// Speculation policy: "none", "fixed:<s>", "adaptive", or
+    /// "model-based" (online, feedback-fitted).
     pub policy: PolicySpec,
     /// Seed for everything stochastic on the serving side.
     pub seed: u64,
 }
 
-/// Parsed policy choice (resolved into a `scheduler::SpecPolicy` once the
-/// profiler has run / the LUT is loaded).
+/// Parsed policy choice (resolved into a live `policy::SpeculationPolicy`
+/// object once the profiler has run / the LUT is loaded).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum PolicySpec {
     None,
     Fixed(usize),
+    /// offline LUT (the paper's scheme)
     Adaptive,
+    /// online model-based speculation, LUT-seeded cold start
+    ModelBased,
 }
 
 impl PolicySpec {
@@ -42,10 +46,12 @@ impl PolicySpec {
             Ok(PolicySpec::None)
         } else if s == "adaptive" {
             Ok(PolicySpec::Adaptive)
+        } else if s == "model-based" || s == "model" || s == "online" {
+            Ok(PolicySpec::ModelBased)
         } else if let Some(v) = s.strip_prefix("fixed:").or_else(|| s.strip_prefix("fixed-")) {
             Ok(PolicySpec::Fixed(v.parse()?))
         } else {
-            bail!("bad policy {s:?}: expected none | fixed:<s> | adaptive")
+            bail!("bad policy {s:?}: expected none | fixed:<s> | adaptive | model-based")
         }
     }
 
@@ -54,6 +60,7 @@ impl PolicySpec {
             PolicySpec::None => "no-spec".into(),
             PolicySpec::Fixed(s) => format!("fixed-{s}"),
             PolicySpec::Adaptive => "adaptive".into(),
+            PolicySpec::ModelBased => "model-based".into(),
         }
     }
 }
@@ -136,16 +143,33 @@ mod tests {
         assert_eq!(PolicySpec::parse("none").unwrap(), PolicySpec::None);
         assert_eq!(PolicySpec::parse("fixed:4").unwrap(), PolicySpec::Fixed(4));
         assert_eq!(PolicySpec::parse("adaptive").unwrap(), PolicySpec::Adaptive);
+        assert_eq!(
+            PolicySpec::parse("model-based").unwrap(),
+            PolicySpec::ModelBased
+        );
+        assert_eq!(PolicySpec::parse("online").unwrap(), PolicySpec::ModelBased);
         assert!(PolicySpec::parse("bogus").is_err());
         assert!(PolicySpec::parse("fixed:x").is_err());
     }
 
     #[test]
+    fn model_based_roundtrips_through_json() {
+        let c = ServingConfig {
+            policy: PolicySpec::ModelBased,
+            ..ServingConfig::default()
+        };
+        let c2 = ServingConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.policy, PolicySpec::ModelBased);
+    }
+
+    #[test]
     fn json_roundtrip() {
-        let mut c = ServingConfig::default();
-        c.max_batch = 8;
-        c.policy = PolicySpec::Fixed(2);
-        c.seed = 42;
+        let c = ServingConfig {
+            max_batch: 8,
+            policy: PolicySpec::Fixed(2),
+            seed: 42,
+            ..ServingConfig::default()
+        };
         let j = c.to_json();
         let c2 = ServingConfig::from_json(&j).unwrap();
         assert_eq!(c2.max_batch, 8);

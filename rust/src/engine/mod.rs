@@ -10,9 +10,10 @@
 //! loop at round boundaries:
 //!   retire_finished(state)         # free slots the moment rows finish
 //!   admit_rows(state, queued)      # ingest new requests into free rows
-//!   decode_round(state, policy)    # s = policy(LIVE batch size), then
+//!   decode_round(state, policy)    # s = policy.choose(LIVE batch), then
 //!                                  #   s == 0 -> plain verify round
 //!                                  #   s >= 1 -> speculate + verify + accept
+//!                                  # finally policy.observe(feedback)
 //! ```
 //!
 //! [`Engine::generate_batch`] (batch-to-completion, the paper's setting)
@@ -47,9 +48,9 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Result};
 
 use crate::model::{Kv, ModelHandle};
+use crate::policy::{RoundFeedback, SpeculationPolicy};
 #[cfg(feature = "pjrt")]
 use crate::runtime::{ExeKind, Manifest, Runtime};
-use crate::scheduler::SpecPolicy;
 use crate::testkit::stub::{StubModel, StubRole, StubSpec};
 use crate::util::timer::Stopwatch;
 use acceptance::accept_batch;
@@ -81,13 +82,20 @@ impl Default for EngineConfig {
 }
 
 /// One decode round as seen by the policy: the live batch size it was
-/// queried with, the speculation length it chose, and the tokens the
-/// round committed to real rows.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// queried with, the speculation length it chose, what the round
+/// committed/accepted, and how long it took (the raw material of the
+/// policy feedback edge).
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct RoundInfo {
     pub live: usize,
     pub s: usize,
     pub committed: usize,
+    /// drafts accepted over the live real rows (0 for plain rounds)
+    pub accepted: usize,
+    /// wall seconds the round took, including any SSM catch-up pass (the
+    /// policy feedback instead carries the catch-up-free time, which is
+    /// the clean per-s cost signal)
+    pub round_time: f64,
 }
 
 /// Statistics of one serving epoch (a `generate_batch` call or a
@@ -326,6 +334,26 @@ impl BatchState {
             None
         }
     }
+
+    /// Test hook for the KV state-machine invariants (DESIGN.md): per
+    /// slot, `(committed length, LLM ingested, SSM ingested)`.  After any
+    /// speculative round both counters equal `committed - 1`; after plain
+    /// rounds or admissions the SSM may lag (its catch-up backlog).
+    pub fn ingest_state(&self) -> Vec<(usize, u32, Option<u32>)> {
+        let llm = self.llm_kv.ingested();
+        let ssm: Option<Vec<u32>> = self.ssm_kv.as_ref().map(|kv| kv.ingested().to_vec());
+        self.rows
+            .iter()
+            .enumerate()
+            .map(|(i, r)| {
+                (
+                    r.committed.len(),
+                    llm[i],
+                    ssm.as_ref().map(|v| v[i]),
+                )
+            })
+            .collect()
+    }
 }
 
 /// A request handed to [`Engine::admit_rows`] at a round boundary.
@@ -418,7 +446,7 @@ impl<'rt> Engine<'rt> {
         &mut self,
         prompts: &[Vec<i32>],
         max_new: usize,
-        policy: &SpecPolicy,
+        policy: &mut dyn SpeculationPolicy,
     ) -> Result<GenOutput> {
         let t_start = Instant::now();
         let n = prompts.len();
@@ -426,7 +454,7 @@ impl<'rt> Engine<'rt> {
             bail!("generate_batch: empty prompt list");
         }
         let bucket = self.limits.bucket_for(n)?;
-        let may_speculate = !matches!(policy, SpecPolicy::NoSpec);
+        let may_speculate = policy.wants_speculation();
         let mut st = self.prefill_rows(prompts, bucket, may_speculate, max_new)?;
 
         let decode_start = Instant::now();
@@ -553,22 +581,36 @@ impl<'rt> Engine<'rt> {
 
     /// Run ONE decode round: query the policy with the *live* batch size,
     /// then a plain verify round (s = 0) or a speculate/verify/accept
-    /// round (s >= 1).  Freezes rows that hit `<eos>` / their budget.
-    pub fn decode_round(&mut self, st: &mut BatchState, policy: &SpecPolicy) -> Result<RoundInfo> {
+    /// round (s >= 1).  Freezes rows that hit `<eos>` / their budget and
+    /// feeds the round's outcome back to the policy
+    /// ([`SpeculationPolicy::observe`]).
+    pub fn decode_round(
+        &mut self,
+        st: &mut BatchState,
+        policy: &mut dyn SpeculationPolicy,
+    ) -> Result<RoundInfo> {
         let live = st.live_rows();
         if live == 0 {
             bail!("decode_round: no live rows in the batch");
         }
         let max_s = self.limits.max_spec_len(st.bucket);
         let s = if st.may_speculate {
-            policy.spec_len(live, max_s)
+            policy.choose(live, max_s)
         } else {
             0
         };
         let before = committed_total(&st.rows);
+        let samples_before = st.stats.accept_samples.len();
         st.stats.spec_lens.push(s);
         st.stats.rounds += 1;
 
+        // two clocks: `wall_start` covers the whole round (the timeline's
+        // accounting truth), `fit_start` begins AFTER the SSM catch-up
+        // pass — backlog drain is bookkeeping for earlier plain rounds /
+        // admissions, and billing it to this (s, time) point would bias
+        // the policy's per-s round-cost fit
+        let wall_start = Instant::now();
+        let fit_start: Instant;
         {
             let BatchState {
                 bucket,
@@ -580,6 +622,7 @@ impl<'rt> Engine<'rt> {
                 ..
             } = st;
             if s == 0 {
+                fit_start = wall_start;
                 self.round_plain(rows, *bucket, llm_kv, stats)?;
                 *ssm_backlog = true;
             } else {
@@ -588,16 +631,33 @@ impl<'rt> Engine<'rt> {
                     self.ssm_catch_up(rows, *bucket, ssm_kv, stats)?;
                     *ssm_backlog = false;
                 }
+                fit_start = Instant::now();
                 self.round_speculative(rows, *bucket, s, llm_kv, ssm_kv, stats)?;
             }
         }
+        let fit_time = fit_start.elapsed().as_secs_f64();
+        let wall_time = wall_start.elapsed().as_secs_f64();
         self.check_eos_and_limits(&mut st.rows);
+        let accepted_rows: Vec<u32> = st.stats.accept_samples[samples_before..].to_vec();
+        let committed = committed_total(&st.rows) - before;
         let info = RoundInfo {
             live,
             s,
-            committed: committed_total(&st.rows) - before,
+            committed,
+            accepted: accepted_rows.iter().map(|&a| a as usize).sum(),
+            round_time: wall_time,
         };
         st.stats.per_round.push(info);
+        policy.observe(&RoundFeedback {
+            live,
+            // the round executed at the padded bucket width, which is
+            // what its cost scales with
+            width: st.bucket,
+            s,
+            accepted: accepted_rows,
+            committed,
+            round_time: fit_time,
+        });
         Ok(info)
     }
 
@@ -937,6 +997,7 @@ impl<'rt> Engine<'rt> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::policy::{Fixed, LutAdaptive, NoSpec};
     use crate::testkit::stub::StubModel;
 
     fn stub_engine() -> Engine<'static> {
@@ -963,19 +1024,21 @@ mod tests {
             .iter()
             .map(|p| chain(*p.last().unwrap(), 20))
             .collect();
-        for policy in [
-            SpecPolicy::NoSpec,
-            SpecPolicy::Fixed(1),
-            SpecPolicy::Fixed(4),
-            SpecPolicy::Adaptive(
+        let mut policies: Vec<Box<dyn SpeculationPolicy>> = vec![
+            Box::new(NoSpec),
+            Box::new(Fixed(1)),
+            Box::new(Fixed(4)),
+            Box::new(LutAdaptive(
                 crate::scheduler::Lut::new(
                     [(1usize, 5usize), (4, 3), (16, 1)].into_iter().collect(),
                 )
                 .unwrap(),
-            ),
-        ] {
-            let out = e.generate_batch(&prompts, 20, &policy).unwrap();
-            assert_eq!(out.tokens, expect, "policy {}", policy.label());
+            )),
+        ];
+        for policy in policies.iter_mut() {
+            let label = policy.label();
+            let out = e.generate_batch(&prompts, 20, policy.as_mut()).unwrap();
+            assert_eq!(out.tokens, expect, "policy {label}");
             assert!(out.stats.rounds > 0);
         }
     }
@@ -983,14 +1046,16 @@ mod tests {
     #[test]
     fn step_api_matches_generate_batch() {
         let prompts = vec![vec![5, 9], vec![7, 8, 11]];
-        let policy = SpecPolicy::Fixed(3);
-        let reference = stub_engine().generate_batch(&prompts, 16, &policy).unwrap();
+        let reference = stub_engine()
+            .generate_batch(&prompts, 16, &mut Fixed(3))
+            .unwrap();
 
         let mut e = stub_engine();
+        let mut policy = Fixed(3);
         let bucket = e.limits().bucket_for(prompts.len()).unwrap();
         let mut st = e.prefill_rows(&prompts, bucket, true, 16).unwrap();
         while st.has_live() {
-            e.decode_round(&mut st, &policy).unwrap();
+            e.decode_round(&mut st, &mut policy).unwrap();
         }
         for (i, expect) in reference.tokens.iter().enumerate() {
             let got = st.generated_tokens(i).unwrap();
@@ -999,22 +1064,69 @@ mod tests {
     }
 
     #[test]
-    fn per_round_timeline_records_live_and_s() {
+    fn per_round_timeline_records_live_s_and_cost() {
         let mut e = stub_engine();
         let out = e
-            .generate_batch(&[vec![5], vec![9]], 12, &SpecPolicy::Fixed(2))
+            .generate_batch(&[vec![5], vec![9]], 12, &mut Fixed(2))
             .unwrap();
         assert_eq!(out.stats.per_round.len(), out.stats.rounds);
         for r in &out.stats.per_round {
             assert!(r.live >= 1 && r.live <= 2);
             assert!(r.s <= 2);
             assert!(r.committed >= 1);
+            assert!(r.accepted <= r.s * r.live);
+            assert!(r.round_time >= 0.0);
+        }
+        // the per-round accepted counts reconcile with the epoch totals
+        let total: usize = out.stats.per_round.iter().map(|r| r.accepted).sum();
+        assert_eq!(
+            total,
+            out.stats.accept_samples.iter().map(|&a| a as usize).sum::<usize>()
+        );
+    }
+
+    /// The engine drives the policy's feedback edge: one observe call per
+    /// round, with the same (live, s) the round ran with.
+    #[test]
+    fn decode_round_feeds_the_policy_back() {
+        use crate::policy::RoundFeedback;
+
+        struct Recorder {
+            inner: Fixed,
+            seen: Vec<(usize, usize, usize)>,
+        }
+        impl SpeculationPolicy for Recorder {
+            fn choose(&self, live: usize, max_s: usize) -> usize {
+                self.inner.choose(live, max_s)
+            }
+            fn observe(&mut self, fb: &RoundFeedback) {
+                if fb.s == 0 {
+                    assert!(fb.accepted.is_empty(), "plain rounds carry no samples");
+                }
+                self.seen.push((fb.live, fb.s, fb.committed));
+            }
+            fn label(&self) -> String {
+                "recorder".into()
+            }
+        }
+
+        let mut e = stub_engine();
+        let mut policy = Recorder {
+            inner: Fixed(3),
+            seen: Vec::new(),
+        };
+        let out = e.generate_batch(&[vec![5], vec![9]], 10, &mut policy).unwrap();
+        assert_eq!(policy.seen.len(), out.stats.rounds);
+        for ((live, s, committed), info) in policy.seen.iter().zip(&out.stats.per_round) {
+            assert_eq!(*live, info.live);
+            assert_eq!(*s, info.s);
+            assert_eq!(*committed, info.committed);
         }
     }
 
     #[test]
     fn admission_mid_epoch_is_lossless() {
-        let policy = SpecPolicy::Fixed(3);
+        let mut policy = Fixed(3);
         let p0 = vec![5, 9, 12];
         let p1 = vec![7];
         let p2 = vec![40, 41];
@@ -1025,7 +1137,7 @@ mod tests {
         // run a few rounds with only row 0 live
         for _ in 0..3 {
             if st.has_live() {
-                e.decode_round(&mut st, &policy).unwrap();
+                e.decode_round(&mut st, &mut policy).unwrap();
             }
         }
         // admit two more requests into free slots mid-epoch
@@ -1040,7 +1152,7 @@ mod tests {
         let slots = e.admit_rows(&mut st, &reqs).unwrap();
         assert_eq!(slots.len(), 2);
         while st.has_live() {
-            e.decode_round(&mut st, &policy).unwrap();
+            e.decode_round(&mut st, &mut policy).unwrap();
         }
         let retired = e.retire_finished(&mut st);
         assert_eq!(retired.len(), 3);
@@ -1061,11 +1173,11 @@ mod tests {
 
     #[test]
     fn retire_frees_slots_for_reuse() {
-        let policy = SpecPolicy::Fixed(2);
+        let mut policy = Fixed(2);
         let mut e = stub_engine();
         let mut st = e.prefill_rows(&[vec![5]], 2, true, 4).unwrap();
         while st.has_live() {
-            e.decode_round(&mut st, &policy).unwrap();
+            e.decode_round(&mut st, &mut policy).unwrap();
         }
         let first = e.retire_finished(&mut st);
         assert_eq!(first.len(), 1);
@@ -1083,7 +1195,7 @@ mod tests {
             .unwrap();
         assert_eq!(slots.len(), 1);
         while st.has_live() {
-            e.decode_round(&mut st, &policy).unwrap();
+            e.decode_round(&mut st, &mut policy).unwrap();
         }
         let second = e.retire_finished(&mut st);
         assert_eq!(second.len(), 1);
@@ -1097,17 +1209,17 @@ mod tests {
             .generate_batch(
                 &[vec![5], vec![6], vec![7]],
                 6,
-                &SpecPolicy::Fixed(2),
+                &mut Fixed(2),
             )
             .unwrap();
         assert_eq!(out.tokens.len(), 3);
 
         let too_long = vec![vec![4i32; e.limits().max_prompt + 1]];
-        assert!(e.generate_batch(&too_long, 4, &SpecPolicy::NoSpec).is_err());
-        assert!(e.generate_batch(&[], 4, &SpecPolicy::NoSpec).is_err());
+        assert!(e.generate_batch(&too_long, 4, &mut NoSpec).is_err());
+        assert!(e.generate_batch(&[], 4, &mut NoSpec).is_err());
         let max_bucket = *e.limits().batch_buckets.last().unwrap();
         let too_many = vec![vec![5i32, 6]; max_bucket + 1];
-        assert!(e.generate_batch(&too_many, 4, &SpecPolicy::NoSpec).is_err());
+        assert!(e.generate_batch(&too_many, 4, &mut NoSpec).is_err());
     }
 
     #[test]
@@ -1118,7 +1230,7 @@ mod tests {
         };
         let mut e = Engine::stub(spec, EngineConfig::default()).unwrap();
         let err = e
-            .generate_batch(&[vec![5, 6, 7]], 64, &SpecPolicy::Fixed(2))
+            .generate_batch(&[vec![5, 6, 7]], 64, &mut Fixed(2))
             .unwrap_err()
             .to_string();
         assert!(err.contains("overflow"), "{err}");
@@ -1132,11 +1244,11 @@ mod tests {
             max_seq: 40,
             ..StubSpec::default()
         };
-        let policy = SpecPolicy::Fixed(2);
+        let mut policy = Fixed(2);
         let mut e = Engine::stub(spec, EngineConfig::default()).unwrap();
         let mut st = e.prefill_rows(&[vec![5, 6, 7, 8]], 2, true, 30).unwrap();
         while st.has_live() {
-            e.decode_round(&mut st, &policy).unwrap();
+            e.decode_round(&mut st, &mut policy).unwrap();
         }
         // do NOT retire: the frozen row keeps its high ingest counter
         let slots = e
@@ -1150,7 +1262,7 @@ mod tests {
             )
             .unwrap();
         while st.has_live() {
-            e.decode_round(&mut st, &policy).unwrap();
+            e.decode_round(&mut st, &mut policy).unwrap();
         }
         let retired = e.retire_finished(&mut st);
         let new_row = retired.iter().find(|r| r.slot == slots[0]).unwrap();
@@ -1165,7 +1277,7 @@ mod tests {
         };
         let mut e = Engine::stub(spec, EngineConfig::default()).unwrap();
         let out = e
-            .generate_batch(&[vec![5]], 10, &SpecPolicy::Fixed(8))
+            .generate_batch(&[vec![5]], 10, &mut Fixed(8))
             .unwrap();
         assert!(out.stats.spec_lens.iter().all(|&s| s <= 3));
         assert_eq!(out.tokens[0], chain(5, 10));

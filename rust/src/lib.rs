@@ -13,9 +13,10 @@
 //! * **L3** — this crate: runs the batched speculative decoding loop at
 //!   round granularity ([`engine`]), schedules requests through static or
 //!   continuous batching ([`batcher`], [`server`]), picks speculation
-//!   lengths ([`scheduler`]), generates Gamma-distributed traffic
-//!   ([`traffic`]) and reproduces every figure of the paper
-//!   ([`simulator`], [`analytic`], `rust/benches/`).
+//!   lengths through the feedback-driven [`policy`] subsystem (offline
+//!   LUT [`scheduler`] or the online model-based policy), generates
+//!   Gamma-distributed traffic ([`traffic`]) and reproduces every figure
+//!   of the paper ([`simulator`], [`analytic`], `rust/benches/`).
 //!
 //! Backends: with `--features pjrt` the engine executes the AOT artifacts
 //! through the PJRT C API ([`runtime`]; Python never runs on the request
@@ -34,7 +35,7 @@
 //! let out = engine.generate_batch(
 //!     &[vec![4, 5, 9]],
 //!     16,
-//!     &SpecPolicy::Fixed(3),
+//!     &mut Fixed(3),
 //! )?;
 //! println!("{:?}", out.tokens[0]);
 //! # Ok::<(), anyhow::Error>(())
@@ -47,6 +48,7 @@ pub mod dataset;
 pub mod engine;
 pub mod metrics;
 pub mod model;
+pub mod policy;
 pub mod runtime;
 pub mod scheduler;
 pub mod server;
@@ -60,9 +62,12 @@ pub mod prelude {
     pub use crate::batcher::{BatchRequest, BatcherConfig, ContinuousBatcher};
     pub use crate::config::{PolicySpec, ServingConfig};
     pub use crate::engine::{BatchState, Engine, EngineConfig, GenOutput};
+    pub use crate::policy::{
+        Fixed, LutAdaptive, ModelBased, NoSpec, RoundFeedback, SpeculationPolicy,
+    };
     #[cfg(feature = "pjrt")]
     pub use crate::runtime::Runtime;
-    pub use crate::scheduler::{Lut, SpecPolicy};
+    pub use crate::scheduler::Lut;
     pub use crate::server::{Backend, SchedulingMode};
     pub use crate::testkit::stub::StubSpec;
 }

@@ -22,11 +22,11 @@
 use anyhow::{bail, Result};
 
 use specbatch::config::PolicySpec;
-use specbatch::scheduler::SpecPolicy;
+use specbatch::policy::{Fixed, LutAdaptive, ModelBased, NoSpec, SpeculationPolicy};
 use specbatch::server::{run_experiment, Backend, SchedulingMode, ServerConfig};
 use specbatch::simulator::{
-    simulate_trace, simulate_trace_continuous, simulated_lut, AcceptanceProcess, CostModel,
-    GpuProfile, ModelProfile, SimConfig,
+    simulate_trace, simulate_trace_continuous, simulated_lut, AcceptanceDrift,
+    AcceptanceProcess, CostModel, GpuProfile, ModelProfile, SimConfig,
 };
 use specbatch::traffic::{Trace, TrafficPattern};
 use specbatch::util::cli::{ArgSpec, Args};
@@ -126,20 +126,26 @@ fn load_runtime(args: &Args) -> Result<Runtime> {
 }
 
 #[cfg(feature = "pjrt")]
-fn parse_policy(args: &Args, rt: &Runtime, engine: &mut Engine<'_>) -> Result<SpecPolicy> {
-    match PolicySpec::parse(args.get("policy")?)? {
-        PolicySpec::None => Ok(SpecPolicy::NoSpec),
-        PolicySpec::Fixed(s) => Ok(SpecPolicy::Fixed(s)),
-        PolicySpec::Adaptive => {
-            let dataset = rt.dataset()?;
-            let mut rng = Pcg64::new(0xADA);
-            let prompts = dataset.sample_profile(&mut rng, 24);
-            let mut pcfg = ProfilerConfig::from_manifest(&rt.manifest);
-            pcfg.tokens_per_run = 16;
-            pcfg.repeats = 1;
-            Ok(SpecPolicy::Adaptive(profile(engine, &prompts, &pcfg)?.lut))
-        }
-    }
+fn parse_policy(
+    args: &Args,
+    rt: &Runtime,
+    engine: &mut Engine<'_>,
+) -> Result<Box<dyn SpeculationPolicy>> {
+    let profiled_lut = |engine: &mut Engine<'_>| -> Result<specbatch::scheduler::Lut> {
+        let dataset = rt.dataset()?;
+        let mut rng = Pcg64::new(0xADA);
+        let prompts = dataset.sample_profile(&mut rng, 24);
+        let mut pcfg = ProfilerConfig::from_manifest(&rt.manifest);
+        pcfg.tokens_per_run = 16;
+        pcfg.repeats = 1;
+        Ok(profile(engine, &prompts, &pcfg)?.lut)
+    };
+    Ok(match PolicySpec::parse(args.get("policy")?)? {
+        PolicySpec::None => Box::new(NoSpec),
+        PolicySpec::Fixed(s) => Box::new(Fixed(s)),
+        PolicySpec::Adaptive => Box::new(LutAdaptive(profiled_lut(engine)?)),
+        PolicySpec::ModelBased => Box::new(ModelBased::new(profiled_lut(engine)?)),
+    })
 }
 
 #[cfg(feature = "pjrt")]
@@ -147,18 +153,18 @@ fn cmd_quickstart(argv: Vec<String>) -> Result<()> {
     let spec = common_spec("quickstart", "generate text for a few dataset prompts")
         .opt("prompts", "3", "number of prompts")
         .opt("tokens", "32", "new tokens per prompt")
-        .opt("policy", "fixed:3", "none | fixed:<s> | adaptive");
+        .opt("policy", "fixed:3", "none | fixed:<s> | adaptive | model-based");
     let args = spec.parse(&argv)?;
     let rt = load_runtime(&args)?;
     let dataset = rt.dataset()?;
     let mut engine = Engine::new(&rt, EngineConfig::default())?;
-    let policy = parse_policy(&args, &rt, &mut engine)?;
+    let mut policy = parse_policy(&args, &rt, &mut engine)?;
 
     let mut rng = Pcg64::new(7);
     let n = args.get_usize("prompts")?;
     let prompts = dataset.sample_eval(&mut rng, n);
     let ids: Vec<Vec<i32>> = prompts.iter().map(|p| p.ids.clone()).collect();
-    let out = engine.generate_batch(&ids, args.get_usize("tokens")?, &policy)?;
+    let out = engine.generate_batch(&ids, args.get_usize("tokens")?, policy.as_mut())?;
 
     for (p, toks) in prompts.iter().zip(&out.tokens) {
         println!("prompt: {}", p.text);
@@ -236,12 +242,12 @@ fn cmd_grid(argv: Vec<String>) -> Result<()> {
                 .into_iter()
                 .map(|p| p.ids)
                 .collect();
-            let policy = if s == 0 {
-                SpecPolicy::NoSpec
+            let mut policy: Box<dyn SpeculationPolicy> = if s == 0 {
+                Box::new(NoSpec)
             } else {
-                SpecPolicy::Fixed(s)
+                Box::new(Fixed(s))
             };
-            let out = engine.generate_batch(&prompts, tokens, &policy)?;
+            let out = engine.generate_batch(&prompts, tokens, policy.as_mut())?;
             let lat = out.stats.per_token_latency() * 1e3;
             println!(
                 "b={b} s={s}: {lat:.3} ms/token (accepted {:.2}/round)",
@@ -328,7 +334,7 @@ fn cmd_selfcheck(argv: Vec<String>) -> Result<()> {
         .iter()
         .map(|v| Ok(v.as_i64()? as i32))
         .collect::<Result<_>>()?;
-    let out = engine.generate_batch(&[prompt], expect.len(), &SpecPolicy::Fixed(3))?;
+    let out = engine.generate_batch(&[prompt], expect.len(), &mut Fixed(3))?;
     if out.tokens[0] != expect {
         bail!("selfcheck FAILED: engine output diverges from golden");
     }
@@ -371,7 +377,7 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         "server+client Gamma-traffic experiment (Sec. 5.3); stub backend without --features pjrt",
     )
     .opt("artifacts", "artifacts", "artifacts directory (pjrt builds)")
-    .opt("policy", "adaptive", "none | fixed:<s> | adaptive")
+    .opt("policy", "adaptive", "none | fixed:<s> | adaptive | model-based")
     .opt("mode", "static", "static | continuous")
     .opt("requests", "64", "number of requests")
     .opt("interval", "0.5", "mean inter-arrival seconds")
@@ -414,13 +420,16 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         ..ServerConfig::default()
     };
     let policy = PolicySpec::parse(args.get("policy")?)?;
-    let (recorder, lut, rounds) = run_experiment(backend, cfg, policy, None, &trace)?;
+    let out = run_experiment(backend, cfg, policy, None, &trace)?;
 
-    if let Some(lut) = lut {
-        println!("adaptive LUT: {}", lut.to_json().compact());
+    if let Some(lut) = &out.lut {
+        println!("offline LUT: {}", lut.to_json().compact());
     }
-    let s = recorder.summary();
-    let (p50, p90, p99) = recorder.percentiles();
+    if let Some(snapshot) = &out.policy_snapshot {
+        println!("fitted model: {}", snapshot.compact());
+    }
+    let s = out.recorder.summary();
+    let (p50, p90, p99) = out.recorder.percentiles();
     println!(
         "{mode:?} | {} requests | latency mean {:.3}s p50 {:.3}s p90 {:.3}s p99 {:.3}s \
          | {:.1} tok/s",
@@ -429,12 +438,12 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         p50,
         p90,
         p99,
-        recorder.throughput_tokens_per_s()
+        out.recorder.throughput_tokens_per_s()
     );
-    recorder.to_csv().write_file(args.get("out")?)?;
+    out.recorder.to_csv().write_file(args.get("out")?)?;
     println!("-> {}", args.get("out")?);
-    if !rounds.is_empty() {
-        specbatch::metrics::rounds_to_csv(&rounds).write_file(args.get("rounds-out")?)?;
+    if !out.timeline.is_empty() {
+        specbatch::metrics::rounds_to_csv(&out.timeline).write_file(args.get("rounds-out")?)?;
         println!("rounds -> {}", args.get("rounds-out")?);
     }
     Ok(())
@@ -445,13 +454,16 @@ fn cmd_sim(argv: Vec<String>) -> Result<()> {
         .opt("gpu", "rtx3090", "rtx3090 | rtx4090 | a100")
         .opt("llm", "opt-6.7b", "opt-1.3b | opt-6.7b | llama-7b")
         .opt("ssm", "opt-125m", "draft model profile")
-        .opt("policy", "adaptive", "none | fixed:<s> | adaptive")
+        .opt("policy", "adaptive", "none | fixed:<s> | adaptive | model-based")
         .opt("mode", "static", "static | continuous")
         .opt("requests", "1000", "number of requests")
         .opt("interval", "0.3", "mean inter-arrival seconds")
         .opt("cv", "1.0", "coefficient of variation")
         .opt("prompt-len", "16", "prompt length")
         .opt("seed", "1", "trace seed")
+        .opt("drift-at", "0", "acceptance drift time in virtual seconds (0 = off)")
+        .opt("drift-c", "0.55", "post-drift acceptance c")
+        .opt("drift-gamma", "0.2", "post-drift acceptance gamma")
         .flag("fig6", "use the alternating intense/sparse pattern")
         .opt("out", "results/sim.csv", "per-request CSV")
         .opt("rounds-out", "results/sim_rounds.csv", "per-round timeline CSV");
@@ -466,22 +478,41 @@ fn cmd_sim(argv: Vec<String>) -> Result<()> {
     let ssm_name = args.get("ssm")?.to_string();
     let ssm = ModelProfile::by_name(&ssm_name)
         .ok_or_else(|| anyhow::anyhow!("unknown model {ssm_name:?}"))?;
+    let drift_at = args.get_f64("drift-at")?;
+    let drift = if drift_at > 0.0 {
+        Some(AcceptanceDrift {
+            at: drift_at,
+            after: AcceptanceProcess::PowerLaw {
+                c: args.get_f64("drift-c")?,
+                gamma: args.get_f64("drift-gamma")?,
+            },
+        })
+    } else {
+        None
+    };
     let cfg = SimConfig {
         llm: CostModel::new(llm, gpu),
         ssm: CostModel::new(ssm, gpu),
         acceptance: AcceptanceProcess::paper(),
+        drift,
         max_batch: 16,
         max_new_tokens: 128,
         host_overhead: 0.2e-3,
         seed: args.get_u64("seed")?,
     };
-    let policy = match PolicySpec::parse(args.get("policy")?)? {
-        PolicySpec::None => SpecPolicy::NoSpec,
-        PolicySpec::Fixed(s) => SpecPolicy::Fixed(s),
-        PolicySpec::Adaptive => {
+    let policy_spec = PolicySpec::parse(args.get("policy")?)?;
+    let mut policy: Box<dyn SpeculationPolicy> = match policy_spec {
+        PolicySpec::None => Box::new(NoSpec),
+        PolicySpec::Fixed(s) => Box::new(Fixed(s)),
+        // both LUT-seeded policies share the simulator-derived table
+        spec @ (PolicySpec::Adaptive | PolicySpec::ModelBased) => {
             let lut = simulated_lut(&cfg, &[1, 2, 4, 8, 16], 8, 80);
-            println!("simulated LUT: {}", lut.to_json().compact());
-            SpecPolicy::Adaptive(lut)
+            println!("offline LUT: {}", lut.to_json().compact());
+            if spec == PolicySpec::Adaptive {
+                Box::new(LutAdaptive(lut))
+            } else {
+                Box::new(ModelBased::new(lut))
+            }
         }
     };
     let pattern = if args.has_flag("fig6") {
@@ -504,12 +535,15 @@ fn cmd_sim(argv: Vec<String>) -> Result<()> {
         args.get_u64("seed")?,
     );
     let (rec, rounds) = match mode {
-        SchedulingMode::Static => (simulate_trace(&cfg, &policy, &trace), Vec::new()),
+        SchedulingMode::Static => (simulate_trace(&cfg, policy.as_mut(), &trace), Vec::new()),
         SchedulingMode::Continuous => {
-            let (rec, rounds) = simulate_trace_continuous(&cfg, &policy, &trace);
+            let (rec, rounds) = simulate_trace_continuous(&cfg, policy.as_mut(), &trace);
             (rec, rounds)
         }
     };
+    if let Some(snapshot) = policy.snapshot() {
+        println!("fitted model: {}", snapshot.compact());
+    }
     let s = rec.summary();
     let (p50, p90, p99) = rec.percentiles();
     println!(

@@ -155,11 +155,24 @@ pub struct RoundEvent {
     pub queued: usize,
     /// speculation length chosen for the round
     pub s: usize,
+    /// drafts accepted over the live rows (0 for plain rounds)
+    pub accepted: usize,
+    /// measured cost of the round in seconds (wall or virtual)
+    pub round_cost: f64,
 }
 
-/// Export a round timeline (columns: t_s, epoch, live, queued, s).
+/// Export a round timeline (columns: t_s, epoch, live, queued, s,
+/// accepted, round_cost_s).
 pub fn rounds_to_csv(events: &[RoundEvent]) -> Csv {
-    let mut csv = Csv::new(&["t_s", "epoch", "live", "queued", "s"]);
+    let mut csv = Csv::new(&[
+        "t_s",
+        "epoch",
+        "live",
+        "queued",
+        "s",
+        "accepted",
+        "round_cost_s",
+    ]);
     for e in events {
         csv.row(&[
             f(e.t),
@@ -167,6 +180,8 @@ pub fn rounds_to_csv(events: &[RoundEvent]) -> Csv {
             e.live.to_string(),
             e.queued.to_string(),
             e.s.to_string(),
+            e.accepted.to_string(),
+            f(e.round_cost),
         ]);
     }
     csv
@@ -261,6 +276,8 @@ mod tests {
                 live: 1,
                 queued: 3,
                 s: 5,
+                accepted: 2,
+                round_cost: 0.03,
             },
             RoundEvent {
                 t: 0.2,
@@ -268,14 +285,16 @@ mod tests {
                 live: 4,
                 queued: 0,
                 s: 2,
+                accepted: 5,
+                round_cost: 0.04,
             },
         ];
         let out = rounds_to_csv(&events).to_string();
         let lines: Vec<&str> = out.lines().collect();
-        assert_eq!(lines[0], "t_s,epoch,live,queued,s");
+        assert_eq!(lines[0], "t_s,epoch,live,queued,s,accepted,round_cost_s");
         assert_eq!(lines.len(), 3);
-        assert!(lines[1].ends_with(",1,1,3,5"), "{}", lines[1]);
-        assert!(lines[2].ends_with(",1,4,0,2"), "{}", lines[2]);
+        assert!(lines[1].contains(",1,1,3,5,2,"), "{}", lines[1]);
+        assert!(lines[2].contains(",1,4,0,2,5,"), "{}", lines[2]);
     }
 
     #[test]

@@ -1,11 +1,15 @@
-//! Speculation-length scheduling: the paper's contribution (Sec. 4).
+//! Offline speculation-length scheduling: the paper's contribution
+//! (Sec. 4).
 //!
-//! * [`SpecPolicy`] — `NoSpec`, `Fixed(s)`, or `Adaptive(Lut)`;
 //! * [`Lut`] — the batch-size -> optimal-s look-up table built by offline
 //!   profiling on power-of-two buckets, with the paper's interpolation
 //!   rule ("for batch sizes that are not profiled, choose the **smaller**
 //!   speculation length of the nearest two profiled batch sizes");
 //! * [`profiler`] — the offline grid search that builds the LUT.
+//!
+//! The round-by-round policies that consume a LUT (and the online
+//! model-based policy that supersedes it under drift) live in
+//! [`crate::policy`].
 
 pub mod profiler;
 
@@ -73,38 +77,6 @@ impl Lut {
     }
 }
 
-/// The speculation policy consulted for every serving round.
-#[derive(Debug, Clone, PartialEq, Eq)]
-pub enum SpecPolicy {
-    /// Plain batched decoding (paper's baseline).
-    NoSpec,
-    /// Fixed speculation length regardless of batch size (prior schemes).
-    Fixed(usize),
-    /// The paper's adaptive scheme: s = LUT[batch].
-    Adaptive(Lut),
-}
-
-impl SpecPolicy {
-    /// Speculation length for a round serving `batch` live requests.
-    /// `max_s` caps at what the artifact matrix provides.
-    pub fn spec_len(&self, batch: usize, max_s: usize) -> usize {
-        let s = match self {
-            SpecPolicy::NoSpec => 0,
-            SpecPolicy::Fixed(s) => *s,
-            SpecPolicy::Adaptive(lut) => lut.lookup(batch),
-        };
-        s.min(max_s)
-    }
-
-    pub fn label(&self) -> String {
-        match self {
-            SpecPolicy::NoSpec => "no-spec".into(),
-            SpecPolicy::Fixed(s) => format!("fixed-{s}"),
-            SpecPolicy::Adaptive(_) => "adaptive".into(),
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -169,14 +141,6 @@ mod tests {
     }
 
     #[test]
-    fn policy_spec_len_caps_at_available() {
-        let adaptive = SpecPolicy::Adaptive(lut(&[(1, 6)]));
-        assert_eq!(adaptive.spec_len(1, 4), 4);
-        assert_eq!(SpecPolicy::Fixed(3).spec_len(99, 8), 3);
-        assert_eq!(SpecPolicy::NoSpec.spec_len(4, 8), 0);
-    }
-
-    #[test]
     fn lut_json_roundtrip() {
         let l = lut(&[(1, 5), (16, 1)]);
         let j = l.to_json();
@@ -186,12 +150,5 @@ mod tests {
     #[test]
     fn empty_lut_rejected() {
         assert!(Lut::new(BTreeMap::new()).is_err());
-    }
-
-    #[test]
-    fn labels() {
-        assert_eq!(SpecPolicy::NoSpec.label(), "no-spec");
-        assert_eq!(SpecPolicy::Fixed(2).label(), "fixed-2");
-        assert_eq!(SpecPolicy::Adaptive(lut(&[(1, 1)])).label(), "adaptive");
     }
 }

@@ -15,7 +15,8 @@ use anyhow::{bail, Result};
 use crate::dataset::Prompt;
 use crate::engine::Engine;
 use crate::log_info;
-use crate::scheduler::{Lut, SpecPolicy};
+use crate::policy::{Fixed, NoSpec, SpeculationPolicy};
+use crate::scheduler::Lut;
 use crate::util::csv::{f, Csv};
 
 /// Profiling knobs.
@@ -126,10 +127,10 @@ pub fn profile(
             if s > max_s {
                 continue;
             }
-            let policy = if s == 0 {
-                SpecPolicy::NoSpec
+            let mut policy: Box<dyn SpeculationPolicy> = if s == 0 {
+                Box::new(NoSpec)
             } else {
-                SpecPolicy::Fixed(s)
+                Box::new(Fixed(s))
             };
             let mut lat_sum = 0.0;
             let mut acc_sum = 0.0;
@@ -140,7 +141,8 @@ pub fn profile(
                     .map(|i| prompts[(prompt_cursor + i) % prompts.len()].ids.clone())
                     .collect();
                 prompt_cursor += b;
-                let out = engine.generate_batch(&batch_prompts, cfg.tokens_per_run, &policy)?;
+                let out =
+                    engine.generate_batch(&batch_prompts, cfg.tokens_per_run, policy.as_mut())?;
                 lat_sum += out.stats.per_token_latency();
                 acc_sum += out.stats.mean_accepted();
             }

@@ -36,14 +36,16 @@ use crate::config::PolicySpec;
 use crate::engine::{Engine, EngineConfig};
 use crate::log_info;
 use crate::metrics::{LatencyRecorder, RequestRecord, RoundEvent};
+use crate::policy::{Fixed, LutAdaptive, ModelBased, NoSpec, SpeculationPolicy};
 #[cfg(feature = "pjrt")]
 use crate::runtime::Runtime;
 #[cfg(feature = "pjrt")]
 use crate::scheduler::profiler::{profile, ProfilerConfig};
-use crate::scheduler::{Lut, SpecPolicy};
+use crate::scheduler::Lut;
 use crate::simulator::{simulated_lut, CostModel, GpuProfile, ModelProfile, SimConfig};
 use crate::testkit::stub::StubSpec;
 use crate::traffic::Trace;
+use crate::util::json::Json;
 
 /// What the worker thread builds its engine from.
 #[derive(Debug, Clone)]
@@ -121,10 +123,11 @@ pub struct ServerHandle {
     pub requests: Sender<ServerMsg>,
     pub responses: Receiver<ServerResponse>,
     join: JoinHandle<Result<()>>,
-    /// LUT resolved by the worker (present once ready when adaptive)
+    /// LUT resolved by the worker (present once ready when adaptive /
+    /// model-based, where it seeds the cold-start fallback)
     lut_rx: Receiver<Option<Lut>>,
-    /// per-round timeline, delivered when the worker exits
-    timeline_rx: Receiver<Vec<RoundEvent>>,
+    /// per-round timeline + fitted-model snapshot, delivered on exit
+    report_rx: Receiver<(Vec<RoundEvent>, Option<Json>)>,
 }
 
 impl ServerHandle {
@@ -136,14 +139,15 @@ impl ServerHandle {
             .map_err(|_| anyhow!("server did not become ready within {timeout:?}"))
     }
 
-    /// Stop the worker and collect its per-round timeline.
-    pub fn shutdown(self) -> Result<Vec<RoundEvent>> {
+    /// Stop the worker and collect its per-round timeline plus the
+    /// policy's fitted-model snapshot (model-based policies only).
+    pub fn shutdown(self) -> Result<(Vec<RoundEvent>, Option<Json>)> {
         let _ = self.requests.send(ServerMsg::Shutdown);
         match self.join.join() {
             Ok(r) => r?,
             Err(_) => bail!("server thread panicked"),
         }
-        Ok(self.timeline_rx.try_recv().unwrap_or_default())
+        Ok(self.report_rx.try_recv().unwrap_or_default())
     }
 }
 
@@ -165,7 +169,7 @@ pub fn spawn_server(
     let (req_tx, req_rx) = channel::<ServerMsg>();
     let (resp_tx, resp_rx) = channel::<ServerResponse>();
     let (lut_tx, lut_rx) = channel::<Option<Lut>>();
-    let (timeline_tx, timeline_rx) = channel::<Vec<RoundEvent>>();
+    let (report_tx, report_rx) = channel::<(Vec<RoundEvent>, Option<Json>)>();
 
     let join = std::thread::Builder::new()
         .name("specbatch-server".into())
@@ -179,7 +183,7 @@ pub fn spawn_server(
                 req_rx,
                 resp_tx,
                 lut_tx,
-                timeline_tx,
+                report_tx,
             )
         })
         .expect("spawning server thread");
@@ -189,7 +193,7 @@ pub fn spawn_server(
         responses: resp_rx,
         join,
         lut_rx,
-        timeline_rx,
+        report_rx,
     }
 }
 
@@ -213,6 +217,36 @@ fn stub_adaptive_lut(engine: &Engine<'_>, max_batch: usize) -> Lut {
     simulated_lut(&sim, &buckets, s_max, 80)
 }
 
+/// Resolve a parsed [`PolicySpec`] into a live policy object, given a
+/// resolver for the offline LUT (profiling on the artifact backend, the
+/// calibrated simulator on the stub backend).  Returns the policy and
+/// the LUT it is seeded with, if any.
+fn resolve_policy(
+    spec: &PolicySpec,
+    lut: Option<Lut>,
+    resolve_lut: impl FnOnce() -> Result<Lut>,
+) -> Result<(Box<dyn SpeculationPolicy>, Option<Lut>)> {
+    Ok(match spec {
+        PolicySpec::None => (Box::new(NoSpec) as Box<dyn SpeculationPolicy>, None),
+        PolicySpec::Fixed(s) => (Box::new(Fixed(*s)), None),
+        PolicySpec::Adaptive => {
+            let lut = match lut {
+                Some(l) => l,
+                None => resolve_lut()?,
+            };
+            (Box::new(LutAdaptive(lut.clone())), Some(lut))
+        }
+        PolicySpec::ModelBased => {
+            // the LUT seeds the online policy's cold-start fallback
+            let lut = match lut {
+                Some(l) => l,
+                None => resolve_lut()?,
+            };
+            (Box::new(ModelBased::new(lut.clone())), Some(lut))
+        }
+    })
+}
+
 #[allow(clippy::too_many_arguments)]
 fn worker(
     backend: Backend,
@@ -223,16 +257,19 @@ fn worker(
     req_rx: Receiver<ServerMsg>,
     resp_tx: Sender<ServerResponse>,
     lut_tx: Sender<Option<Lut>>,
-    timeline_tx: Sender<Vec<RoundEvent>>,
+    report_tx: Sender<(Vec<RoundEvent>, Option<Json>)>,
 ) -> Result<()> {
-    // announce readiness, serve, deliver the timeline — shared by both
-    // backends once the engine and policy are resolved
-    let go = |engine: &mut Engine<'_>, policy: SpecPolicy, lut_used: Option<Lut>| -> Result<()> {
+    // announce readiness, serve, deliver timeline + model snapshot —
+    // shared by both backends once the engine and policy are resolved
+    let go = |engine: &mut Engine<'_>,
+              mut policy: Box<dyn SpeculationPolicy>,
+              lut_used: Option<Lut>|
+     -> Result<()> {
         lut_tx
             .send(lut_used)
             .map_err(|_| anyhow!("server handle dropped before ready"))?;
-        let timeline = serve_loop(engine, &cfg, &policy, epoch, &req_rx, &resp_tx)?;
-        let _ = timeline_tx.send(timeline);
+        let timeline = serve_loop(engine, &cfg, policy.as_mut(), epoch, &req_rx, &resp_tx)?;
+        let _ = report_tx.send((timeline, policy.snapshot()));
         Ok(())
     };
     match backend {
@@ -241,25 +278,21 @@ fn worker(
             let rt = Runtime::load(&artifacts_dir)?;
             let mut engine = Engine::new(&rt, cfg.engine.clone())?;
             // resolve the policy, profiling if necessary
-            let (policy, lut_used) = match policy_spec {
-                PolicySpec::None => (SpecPolicy::NoSpec, None),
-                PolicySpec::Fixed(s) => (SpecPolicy::Fixed(s), None),
-                PolicySpec::Adaptive => {
-                    let lut = match lut {
-                        Some(l) => l,
-                        None => {
-                            let dataset = rt.dataset()?;
-                            let mut prng = crate::util::prng::Pcg64::new(0xADA);
-                            let prompts = dataset.sample_profile(&mut prng, cfg.profile_prompts);
-                            let mut pcfg = ProfilerConfig::from_manifest(&rt.manifest);
-                            pcfg.buckets.retain(|&b| b <= cfg.max_batch);
-                            log_info!("server: profiling for the adaptive LUT…");
-                            profile(&mut engine, &prompts, &pcfg)?.lut
-                        }
-                    };
-                    log_info!("server: adaptive LUT = {}", lut.to_json().compact());
-                    (SpecPolicy::Adaptive(lut.clone()), Some(lut))
-                }
+            let (policy, lut_used) = {
+                let engine = &mut engine;
+                let rt = &rt;
+                let cfg = &cfg;
+                resolve_policy(&policy_spec, lut, move || {
+                    let dataset = rt.dataset()?;
+                    let mut prng = crate::util::prng::Pcg64::new(0xADA);
+                    let prompts = dataset.sample_profile(&mut prng, cfg.profile_prompts);
+                    let mut pcfg = ProfilerConfig::from_manifest(&rt.manifest);
+                    pcfg.buckets.retain(|&b| b <= cfg.max_batch);
+                    log_info!("server: profiling for the offline LUT…");
+                    let lut = profile(engine, &prompts, &pcfg)?.lut;
+                    log_info!("server: LUT = {}", lut.to_json().compact());
+                    Ok(lut)
+                })?
             };
             // precompile before going live: no compilation on the request path
             rt.warmup(
@@ -270,20 +303,10 @@ fn worker(
         }
         Backend::Stub(spec) => {
             let mut engine = Engine::stub(spec, cfg.engine.clone())?;
-            let (policy, lut_used) = match policy_spec {
-                PolicySpec::None => (SpecPolicy::NoSpec, None),
-                PolicySpec::Fixed(s) => (SpecPolicy::Fixed(s), None),
-                PolicySpec::Adaptive => {
-                    let lut = match lut {
-                        Some(l) => l,
-                        None => {
-                            log_info!("server: stub backend — using the simulator's LUT");
-                            stub_adaptive_lut(&engine, cfg.max_batch)
-                        }
-                    };
-                    (SpecPolicy::Adaptive(lut.clone()), Some(lut))
-                }
-            };
+            let (policy, lut_used) = resolve_policy(&policy_spec, lut, || {
+                log_info!("server: stub backend — using the simulator's LUT");
+                Ok(stub_adaptive_lut(&engine, cfg.max_batch))
+            })?;
             go(&mut engine, policy, lut_used)
         }
     }
@@ -292,7 +315,7 @@ fn worker(
 fn serve_loop(
     engine: &mut Engine<'_>,
     cfg: &ServerConfig,
-    policy: &SpecPolicy,
+    policy: &mut dyn SpeculationPolicy,
     epoch: Instant,
     req_rx: &Receiver<ServerMsg>,
     resp_tx: &Sender<ServerResponse>,
@@ -310,7 +333,7 @@ fn serve_loop(
 fn serve_static(
     engine: &mut Engine<'_>,
     cfg: &ServerConfig,
-    policy: &SpecPolicy,
+    policy: &mut dyn SpeculationPolicy,
     epoch: Instant,
     req_rx: &Receiver<ServerMsg>,
     resp_tx: &Sender<ServerResponse>,
@@ -364,6 +387,8 @@ fn serve_static(
                 live: info.live,
                 queued: pending.len(),
                 s: info.s,
+                accepted: info.accepted,
+                round_cost: info.round_time,
             });
         }
         let spec_len = out.stats.spec_lens.first().copied().unwrap_or(0);
@@ -405,7 +430,7 @@ fn to_response(fin: crate::batcher::FinishedRequest) -> ServerResponse {
 fn serve_continuous(
     engine: &mut Engine<'_>,
     cfg: &ServerConfig,
-    policy: &SpecPolicy,
+    policy: &mut dyn SpeculationPolicy,
     epoch: Instant,
     req_rx: &Receiver<ServerMsg>,
     resp_tx: &Sender<ServerResponse>,
@@ -493,16 +518,26 @@ pub fn run_client(trace: &Trace, requests: &Sender<ServerMsg>, epoch: Instant) -
     Ok(trace.items.len())
 }
 
+/// Everything one client/server experiment produces: per-request latency
+/// records, the offline LUT the policy was seeded with (adaptive /
+/// model-based), the server's per-round timeline, and — for online
+/// policies — the fitted-model snapshot at shutdown.
+pub struct ExperimentOutcome {
+    pub recorder: LatencyRecorder,
+    pub lut: Option<Lut>,
+    pub timeline: Vec<RoundEvent>,
+    pub policy_snapshot: Option<Json>,
+}
+
 /// Run one full client/server experiment: spawn server, wait until ready,
-/// replay the trace, collect all responses.  Returns the latency records,
-/// the LUT (when adaptive), and the server's per-round timeline.
+/// replay the trace, collect all responses.
 pub fn run_experiment(
     backend: Backend,
     cfg: ServerConfig,
     policy: PolicySpec,
     lut: Option<Lut>,
     trace: &Trace,
-) -> Result<(LatencyRecorder, Option<Lut>, Vec<RoundEvent>)> {
+) -> Result<ExperimentOutcome> {
     let epoch = Instant::now();
     let server = spawn_server(backend, cfg, policy, lut, epoch);
     let lut_used = server.wait_ready(Duration::from_secs(600))?;
@@ -534,6 +569,11 @@ pub fn run_experiment(
     client
         .join()
         .map_err(|_| anyhow!("client thread panicked"))??;
-    let timeline = server.shutdown()?;
-    Ok((recorder, lut_used, timeline))
+    let (timeline, policy_snapshot) = server.shutdown()?;
+    Ok(ExperimentOutcome {
+        recorder,
+        lut: lut_used,
+        timeline,
+        policy_snapshot,
+    })
 }

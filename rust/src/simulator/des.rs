@@ -12,6 +12,12 @@
 //! stochastic [`AcceptanceProcess`]; the round structure mirrors
 //! `engine::Engine::generate_batch` exactly (prefill, then speculate/
 //! verify rounds with per-row accept counts, frozen finished rows).
+//! Both entry points drive the policy's **feedback edge** in virtual
+//! time: after every simulated round the policy's `observe` receives the
+//! live batch, the `s` used, the sampled per-row accepted counts and the
+//! round's virtual cost — so online policies
+//! ([`crate::policy::ModelBased`]) learn inside the simulator exactly as
+//! they do on the real engine.
 //!
 //! Two scheduling modes are modelled:
 //!
@@ -21,14 +27,31 @@
 //!   batcher (`crate::batcher`): admissions at round boundaries,
 //!   immediate retirement, and a per-round policy query with the live
 //!   batch size.
+//!
+//! **Acceptance drift** ([`SimConfig::drift`]) models the non-stationary
+//! workloads of the speculative-execution literature: at a chosen
+//! virtual time the draft/target agreement curve `l(s)` switches to a
+//! different process (a workload shift, a draft model gone stale).  An
+//! offline LUT keeps serving its now-stale `s`; the online policy
+//! re-fits and re-converges — `tests/online_policy.rs` pins that payoff.
 
 use crate::metrics::{LatencyRecorder, RequestRecord, RoundEvent};
-use crate::scheduler::SpecPolicy;
+use crate::policy::{RoundFeedback, SpeculationPolicy};
 use crate::traffic::Trace;
 use crate::util::prng::Pcg64;
 
 use super::acceptance::AcceptanceProcess;
 use super::cost::CostModel;
+
+/// Mid-trace acceptance drift: from virtual time `at` on, draft
+/// acceptance follows `after` instead of `SimConfig::acceptance`.
+#[derive(Debug, Clone)]
+pub struct AcceptanceDrift {
+    /// virtual seconds at which the workload shifts
+    pub at: f64,
+    /// the post-drift acceptance process
+    pub after: AcceptanceProcess,
+}
 
 /// Simulation parameters.
 #[derive(Debug, Clone)]
@@ -36,6 +59,8 @@ pub struct SimConfig {
     pub llm: CostModel,
     pub ssm: CostModel,
     pub acceptance: AcceptanceProcess,
+    /// optional mid-trace acceptance drift scenario
+    pub drift: Option<AcceptanceDrift>,
     pub max_batch: usize,
     pub max_new_tokens: usize,
     /// host-side per-round overhead (acceptance logic, staging), seconds
@@ -49,28 +74,53 @@ impl SimConfig {
             llm,
             ssm,
             acceptance: AcceptanceProcess::paper(),
+            drift: None,
             max_batch: 16,
             max_new_tokens: 128,
             host_overhead: 0.2e-3,
             seed: 0,
         }
     }
+
+    /// Acceptance process in effect at virtual time `t`.
+    pub fn acceptance_at(&self, t: f64) -> &AcceptanceProcess {
+        match &self.drift {
+            Some(d) if t >= d.at => &d.after,
+            _ => &self.acceptance,
+        }
+    }
 }
 
-/// Simulated duration of serving one batch to completion.
+/// Virtual cost the DES charges one decode round at `(batch, s, ctx)` —
+/// the single definition shared by both simulate entry points, the
+/// Fig. 1 grid metric, and the convergence oracle
+/// (`crate::simulator::oracle_s_opt`).
+pub fn round_cost(cfg: &SimConfig, batch: usize, s: usize, ctx: usize) -> f64 {
+    if s == 0 {
+        cfg.llm.t_verify(batch, 0, ctx) + cfg.host_overhead
+    } else {
+        s as f64 * cfg.ssm.t_draft(batch, ctx)
+            + cfg.llm.t_verify(batch, s, ctx)
+            + cfg.host_overhead
+    }
+}
+
+/// Simulated duration of serving one batch to completion, starting at
+/// virtual time `start_t` (drift is evaluated against the advancing
+/// clock).  Drives the policy's `observe` edge per simulated round.
 ///
-/// Returns (service_seconds, tokens_generated).
+/// Returns (service_seconds, tokens_generated, first_spec_len).
 pub fn batch_service_time(
     cfg: &SimConfig,
-    policy: &SpecPolicy,
+    policy: &mut dyn SpeculationPolicy,
     prompt_lens: &[usize],
+    start_t: f64,
     rng: &mut Pcg64,
 ) -> (f64, usize, usize) {
     let b = prompt_lens.len();
     assert!(b >= 1);
-    let mean_prompt =
-        prompt_lens.iter().sum::<usize>() as f64 / b as f64;
-    let may_speculate = !matches!(policy, SpecPolicy::NoSpec);
+    let mean_prompt = prompt_lens.iter().sum::<usize>() as f64 / b as f64;
+    let may_speculate = policy.wants_speculation();
 
     // prefill (both models when speculating)
     let mut t = cfg.llm.t_prefill(b, mean_prompt.ceil() as usize);
@@ -83,41 +133,55 @@ pub fn batch_service_time(
     let mut first_spec_len = None;
     while generated.iter().any(|&g| g < cfg.max_new_tokens) {
         let live = generated.iter().filter(|&&g| g < cfg.max_new_tokens).count();
-        let s = policy.spec_len(live, 8);
+        let s = if may_speculate { policy.choose(live, 8) } else { 0 };
         if first_spec_len.is_none() {
             first_spec_len = Some(s);
         }
-        let ctx = mean_prompt as usize
-            + generated.iter().sum::<usize>() / b;
+        let ctx = mean_prompt as usize + generated.iter().sum::<usize>() / b;
+        let rc = round_cost(cfg, b, s, ctx);
+        let mut accepted_rows: Vec<u32> = Vec::new();
+        let mut committed = 0usize;
         if s == 0 {
-            t += cfg.llm.t_verify(b, 0, ctx) + cfg.host_overhead;
             for g in generated.iter_mut() {
                 if *g < cfg.max_new_tokens {
                     *g += 1;
+                    committed += 1;
                 }
             }
         } else {
             // SSM drafts sequentially: s single-token forwards
-            t += s as f64 * cfg.ssm.t_draft(b, ctx);
-            t += cfg.llm.t_verify(b, s, ctx);
-            t += cfg.host_overhead;
+            let acc = cfg.acceptance_at(start_t + t);
             for g in generated.iter_mut() {
                 if *g < cfg.max_new_tokens {
-                    let a = cfg.acceptance.sample(s, rng);
+                    let a = acc.sample(s, rng);
+                    accepted_rows.push(a as u32);
                     *g += a + 1;
+                    committed += a + 1;
                 }
             }
         }
+        t += rc;
+        policy.observe(&RoundFeedback {
+            live,
+            // the static batch keeps executing at its admitted width
+            // even as rows finish
+            width: b,
+            s,
+            accepted: accepted_rows,
+            committed,
+            round_time: rc,
+        });
     }
-    let tokens: usize = generated
-        .iter()
-        .map(|&g| g.min(cfg.max_new_tokens))
-        .sum();
+    let tokens: usize = generated.iter().map(|&g| g.min(cfg.max_new_tokens)).sum();
     (t, tokens, first_spec_len.unwrap_or(0))
 }
 
 /// Simulate a full trace through the single-server FIFO queue.
-pub fn simulate_trace(cfg: &SimConfig, policy: &SpecPolicy, trace: &Trace) -> LatencyRecorder {
+pub fn simulate_trace(
+    cfg: &SimConfig,
+    policy: &mut dyn SpeculationPolicy,
+    trace: &Trace,
+) -> LatencyRecorder {
     let mut rng = Pcg64::with_stream(cfg.seed, 0x5e5);
     let mut recorder = LatencyRecorder::new();
     let items = &trace.items;
@@ -130,16 +194,13 @@ pub fn simulate_trace(cfg: &SimConfig, policy: &SpecPolicy, trace: &Trace) -> La
         let start = free_at.max(items[next].send_at);
         // everything queued by `start` merges (FIFO, capped)
         let mut end = next;
-        while end < items.len()
-            && items[end].send_at <= start
-            && end - next < cfg.max_batch
-        {
+        while end < items.len() && items[end].send_at <= start && end - next < cfg.max_batch {
             end += 1;
         }
         let batch = &items[next..end];
         let prompt_lens: Vec<usize> = batch.iter().map(|i| i.prompt.ids.len()).collect();
         let (dur, _tokens, spec_len) =
-            batch_service_time(cfg, policy, &prompt_lens, &mut rng);
+            batch_service_time(cfg, policy, &prompt_lens, start, &mut rng);
         let finish = start + dur;
         for item in batch {
             recorder.push(RequestRecord {
@@ -161,13 +222,14 @@ pub fn simulate_trace(cfg: &SimConfig, policy: &SpecPolicy, trace: &Trace) -> La
 /// Virtual-time mirror of the continuous batcher
 /// (`crate::batcher::ContinuousBatcher`): requests are admitted into free
 /// rows at round boundaries, finished rows retire immediately, and the
-/// policy is re-queried with the *live* batch size every round.  Returns
-/// the latency records plus the per-round (t, live, queued, s) timeline,
-/// so Fig. 5/6-style sweeps can compare static vs continuous scheduling
-/// without hardware.
+/// policy is re-queried with the *live* batch size — and fed back the
+/// round outcome — every round.  Returns the latency records plus the
+/// per-round timeline (now carrying accepted counts and round cost), so
+/// Fig. 5/6-style sweeps can compare scheduling modes and policy
+/// adaptation without hardware.
 pub fn simulate_trace_continuous(
     cfg: &SimConfig,
-    policy: &SpecPolicy,
+    policy: &mut dyn SpeculationPolicy,
     trace: &Trace,
 ) -> (LatencyRecorder, Vec<RoundEvent>) {
     struct SimRow {
@@ -184,7 +246,7 @@ pub fn simulate_trace_continuous(
     let mut rng = Pcg64::with_stream(cfg.seed, 0xC0_11);
     let mut recorder = LatencyRecorder::new();
     let mut rounds: Vec<RoundEvent> = Vec::new();
-    let may_speculate = !matches!(policy, SpecPolicy::NoSpec);
+    let may_speculate = policy.wants_speculation();
     let items = &trace.items;
     let mut live: Vec<SimRow> = Vec::new();
     let mut next = 0usize;
@@ -226,7 +288,7 @@ pub fn simulate_trace_continuous(
                 t += cfg.ssm.t_prefill(n_admit, mean_plen);
             }
             let b = live.len();
-            let s_now = policy.spec_len(b, 8);
+            let s_now = if may_speculate { policy.choose(b, 8) } else { 0 };
             for row in live.iter_mut().rev().take(n_admit) {
                 row.batch_at_admit = b;
                 row.spec_at_admit = s_now;
@@ -236,30 +298,43 @@ pub fn simulate_trace_continuous(
         // --- one decode round over the live rows ---
         let b = live.len();
         let ctx = live.iter().map(|r| r.plen + r.generated).sum::<usize>() / b;
-        let s = policy.spec_len(b, 8);
+        let s = if may_speculate { policy.choose(b, 8) } else { 0 };
+        let rc = round_cost(cfg, b, s, ctx);
+        let mut accepted_rows: Vec<u32> = Vec::new();
+        let mut committed = 0usize;
         if s == 0 {
-            t += cfg.llm.t_verify(b, 0, ctx) + cfg.host_overhead;
             for row in live.iter_mut() {
                 row.generated += 1;
+                committed += 1;
             }
         } else {
-            t += s as f64 * cfg.ssm.t_draft(b, ctx);
-            t += cfg.llm.t_verify(b, s, ctx);
-            t += cfg.host_overhead;
+            let acc = cfg.acceptance_at(t);
             for row in live.iter_mut() {
-                row.generated += cfg.acceptance.sample(s, &mut rng) + 1;
+                let a = acc.sample(s, &mut rng);
+                accepted_rows.push(a as u32);
+                row.generated += a + 1;
+                committed += a + 1;
             }
         }
-        let waiting = items[next..]
-            .iter()
-            .take_while(|i| i.send_at <= t)
-            .count();
+        t += rc;
+        let accepted_total: usize = accepted_rows.iter().map(|&a| a as usize).sum();
+        policy.observe(&RoundFeedback {
+            live: b,
+            width: b, // continuous rounds execute at exactly the live width
+            s,
+            accepted: accepted_rows,
+            committed,
+            round_time: rc,
+        });
+        let waiting = items[next..].iter().take_while(|i| i.send_at <= t).count();
         rounds.push(RoundEvent {
             t,
             epoch,
             live: b,
             queued: waiting,
             s,
+            accepted: accepted_total,
+            round_cost: rc,
         });
 
         // --- retire finished rows immediately, freeing capacity ---
@@ -297,13 +372,10 @@ pub fn per_token_latency(
     let mut time = 0.0;
     let mut tokens = 0usize;
     for _ in 0..rounds {
+        time += round_cost(cfg, batch, s, ctx);
         if s == 0 {
-            time += cfg.llm.t_verify(batch, 0, ctx) + cfg.host_overhead;
             tokens += batch;
         } else {
-            time += s as f64 * cfg.ssm.t_draft(batch, ctx)
-                + cfg.llm.t_verify(batch, s, ctx)
-                + cfg.host_overhead;
             for _ in 0..batch {
                 tokens += cfg.acceptance.sample(s, rng) + 1;
             }
@@ -316,6 +388,7 @@ pub fn per_token_latency(
 mod tests {
     use super::*;
     use crate::dataset::Prompt;
+    use crate::policy::{Fixed, NoSpec};
     use crate::simulator::cost::ModelProfile;
     use crate::simulator::hw::GpuProfile;
     use crate::traffic::TrafficPattern;
@@ -341,9 +414,9 @@ mod tests {
         let cfg = cfg();
         let mut rng = Pcg64::new(4);
         let (t_nospec, tok0, _) =
-            batch_service_time(&cfg, &SpecPolicy::NoSpec, &[12], &mut rng);
+            batch_service_time(&cfg, &mut NoSpec, &[12], 0.0, &mut rng);
         let (t_spec, tok1, s) =
-            batch_service_time(&cfg, &SpecPolicy::Fixed(4), &[12], &mut rng);
+            batch_service_time(&cfg, &mut Fixed(4), &[12], 0.0, &mut rng);
         assert_eq!(tok0, 32);
         assert_eq!(tok1, 32);
         assert_eq!(s, 4);
@@ -365,7 +438,7 @@ mod tests {
             200,
             9,
         );
-        let rec = simulate_trace(&cfg, &SpecPolicy::Fixed(2), &trace);
+        let rec = simulate_trace(&cfg, &mut Fixed(2), &trace);
         assert_eq!(rec.len(), 200);
         let mut ids: Vec<u64> = rec.records().iter().map(|r| r.id).collect();
         ids.sort_unstable();
@@ -389,7 +462,7 @@ mod tests {
             })
             .collect();
         let trace = Trace { items };
-        let rec = simulate_trace(&cfg, &SpecPolicy::NoSpec, &trace);
+        let rec = simulate_trace(&cfg, &mut NoSpec, &trace);
         let max_batch = rec.records().iter().map(|r| r.batch).max().unwrap();
         assert!(max_batch <= 16);
         // the later requests must have waited for earlier batches
@@ -404,9 +477,8 @@ mod tests {
         let p = |interval| TrafficPattern::Stationary { interval, cv: 1.0 };
         let t_dense = Trace::generate(&p(0.05), &pool(), 150, 5);
         let t_sparse = Trace::generate(&p(2.0), &pool(), 150, 5);
-        let pol = SpecPolicy::Fixed(2);
-        let dense = simulate_trace(&cfg, &pol, &t_dense).summary().mean;
-        let sparse = simulate_trace(&cfg, &pol, &t_sparse).summary().mean;
+        let dense = simulate_trace(&cfg, &mut Fixed(2), &t_dense).summary().mean;
+        let sparse = simulate_trace(&cfg, &mut Fixed(2), &t_sparse).summary().mean;
         assert!(
             dense > sparse,
             "queueing should raise dense-traffic latency: {dense} vs {sparse}"
@@ -425,7 +497,7 @@ mod tests {
             150,
             17,
         );
-        let (rec, rounds) = simulate_trace_continuous(&cfg, &SpecPolicy::Fixed(2), &trace);
+        let (rec, rounds) = simulate_trace_continuous(&cfg, &mut Fixed(2), &trace);
         assert_eq!(rec.len(), 150);
         let mut ids: Vec<u64> = rec.records().iter().map(|r| r.id).collect();
         ids.sort_unstable();
@@ -437,10 +509,12 @@ mod tests {
         }
         assert!(!rounds.is_empty());
         assert!(rounds.iter().all(|e| e.live >= 1 && e.live <= cfg.max_batch));
-        // round times are non-decreasing
+        // round times are non-decreasing, costs positive, accepted bounded
         for w in rounds.windows(2) {
             assert!(w[1].t >= w[0].t);
         }
+        assert!(rounds.iter().all(|e| e.round_cost > 0.0));
+        assert!(rounds.iter().all(|e| e.accepted <= e.s * e.live));
     }
 
     #[test]
@@ -455,9 +529,8 @@ mod tests {
             200,
             21,
         );
-        let pol = SpecPolicy::Fixed(2);
-        let static_mean = simulate_trace(&cfg, &pol, &trace).summary().mean;
-        let (cont, _) = simulate_trace_continuous(&cfg, &pol, &trace);
+        let static_mean = simulate_trace(&cfg, &mut Fixed(2), &trace).summary().mean;
+        let (cont, _) = simulate_trace_continuous(&cfg, &mut Fixed(2), &trace);
         let cont_mean = cont.summary().mean;
         assert!(
             cont_mean < static_mean,
@@ -476,5 +549,24 @@ mod tests {
         let big_s1 = per_token_latency(&cfg, 32, 1, 128, 400, &mut rng);
         let big_s6 = per_token_latency(&cfg, 32, 6, 128, 400, &mut rng);
         assert!(big_s6 > big_s1, "b=32: s=6 ({big_s6}) !> s=1 ({big_s1})");
+    }
+
+    #[test]
+    fn acceptance_drift_switches_the_process_at_the_cut() {
+        let mut c = cfg();
+        c.drift = Some(AcceptanceDrift {
+            at: 10.0,
+            after: AcceptanceProcess::PowerLaw {
+                c: 0.5,
+                gamma: 0.1,
+            },
+        });
+        let before = c.acceptance_at(9.9).expected_accepted(4);
+        let after = c.acceptance_at(10.0).expected_accepted(4);
+        assert!(before > after, "drift must lower acceptance: {before} vs {after}");
+        assert_eq!(
+            c.acceptance_at(0.0).expected_accepted(4),
+            c.acceptance.expected_accepted(4)
+        );
     }
 }

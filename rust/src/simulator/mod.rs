@@ -21,13 +21,15 @@ pub mod hw;
 pub use acceptance::AcceptanceProcess;
 pub use cost::{CostModel, ModelProfile};
 pub use des::{
-    batch_service_time, per_token_latency, simulate_trace, simulate_trace_continuous, SimConfig,
+    batch_service_time, per_token_latency, round_cost, simulate_trace,
+    simulate_trace_continuous, AcceptanceDrift, SimConfig,
 };
 pub use hw::GpuProfile;
 
 use std::collections::BTreeMap;
 
-use crate::scheduler::{Lut, SpecPolicy};
+use crate::policy::{Fixed, LutAdaptive, NoSpec, SpeculationPolicy};
+use crate::scheduler::Lut;
 use crate::util::prng::Pcg64;
 
 /// Build an adaptive LUT for the simulator by grid search over the cost
@@ -54,13 +56,34 @@ pub fn simulated_lut(
 }
 
 /// Convenience: the four comparison points of the paper's Sec. 5.3.
-pub fn comparison_policies(lut: Lut) -> Vec<(String, SpecPolicy)> {
+pub fn comparison_policies(lut: Lut) -> Vec<(String, Box<dyn SpeculationPolicy>)> {
     vec![
-        ("no-spec".into(), SpecPolicy::NoSpec),
-        ("fixed-2".into(), SpecPolicy::Fixed(2)),
-        ("fixed-4".into(), SpecPolicy::Fixed(4)),
-        ("adaptive".into(), SpecPolicy::Adaptive(lut)),
+        ("no-spec".into(), Box::new(NoSpec) as Box<dyn SpeculationPolicy>),
+        ("fixed-2".into(), Box::new(Fixed(2))),
+        ("fixed-4".into(), Box::new(Fixed(4))),
+        ("adaptive".into(), Box::new(LutAdaptive(lut))),
     ]
+}
+
+/// Exact-expectation oracle `s_opt` at one live batch size under a given
+/// acceptance process: argmin over s ∈ {0, 1..s_max} of the expected
+/// virtual per-token round cost the DES charges.  Used by the drift
+/// tests as the ground truth an online policy must re-converge to.
+pub fn oracle_s_opt(
+    cfg: &SimConfig,
+    acceptance: &AcceptanceProcess,
+    live: usize,
+    s_max: usize,
+    ctx: usize,
+) -> usize {
+    let mut best = (0usize, round_cost(cfg, live, 0, ctx));
+    for s in 1..=s_max {
+        let per_token = round_cost(cfg, live, s, ctx) / (acceptance.expected_accepted(s) + 1.0);
+        if per_token < best.1 {
+            best = (s, per_token);
+        }
+    }
+    best.0
 }
 
 #[cfg(test)]

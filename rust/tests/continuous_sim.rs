@@ -10,7 +10,7 @@ use std::collections::BTreeSet;
 
 use specbatch::dataset::Prompt;
 use specbatch::metrics::RoundEvent;
-use specbatch::scheduler::SpecPolicy;
+use specbatch::policy::{Fixed, LutAdaptive};
 use specbatch::simulator::{
     simulate_trace, simulate_trace_continuous, simulated_lut, CostModel, GpuProfile,
     ModelProfile, SimConfig,
@@ -61,12 +61,12 @@ fn epoch_with_adapting_s(rounds: &[RoundEvent]) -> Option<usize> {
 fn fig5_stationary_continuous_beats_static_and_s_adapts_within_an_epoch() {
     let cfg = paper_cfg();
     let lut = simulated_lut(&cfg, &[1, 2, 4, 8, 16], 8, 80);
-    let policy = SpecPolicy::Adaptive(lut);
+    let mut policy = LutAdaptive(lut);
     let trace = fig5_trace();
 
     // one shared trace for both comparison points (paper methodology)
-    let static_rec = simulate_trace(&cfg, &policy, &trace);
-    let (cont_rec, rounds) = simulate_trace_continuous(&cfg, &policy, &trace);
+    let static_rec = simulate_trace(&cfg, &mut policy, &trace);
+    let (cont_rec, rounds) = simulate_trace_continuous(&cfg, &mut policy, &trace);
 
     assert_eq!(static_rec.len(), trace.len());
     assert_eq!(cont_rec.len(), trace.len());
@@ -108,10 +108,9 @@ fn fig5_stationary_continuous_beats_static_and_s_adapts_within_an_epoch() {
 #[test]
 fn continuous_mode_is_deterministic_per_seed() {
     let cfg = paper_cfg();
-    let policy = SpecPolicy::Fixed(3);
     let trace = fig5_trace();
-    let (a, rounds_a) = simulate_trace_continuous(&cfg, &policy, &trace);
-    let (b, rounds_b) = simulate_trace_continuous(&cfg, &policy, &trace);
+    let (a, rounds_a) = simulate_trace_continuous(&cfg, &mut Fixed(3), &trace);
+    let (b, rounds_b) = simulate_trace_continuous(&cfg, &mut Fixed(3), &trace);
     let lat = |r: &specbatch::metrics::LatencyRecorder| {
         r.records().iter().map(|x| x.latency()).collect::<Vec<_>>()
     };

@@ -12,8 +12,9 @@
 #![cfg(feature = "pjrt")]
 
 use specbatch::engine::{Engine, EngineConfig};
+use specbatch::policy::{Fixed, LutAdaptive, NoSpec, SpeculationPolicy};
 use specbatch::runtime::Runtime;
-use specbatch::scheduler::{Lut, SpecPolicy};
+use specbatch::scheduler::Lut;
 use specbatch::util::json::Json;
 
 fn artifacts_dir() -> Option<std::path::PathBuf> {
@@ -82,28 +83,31 @@ fn speculative_decoding_is_lossless_vs_python_goldens() {
     let prompts: Vec<Vec<i32>> = goldens.iter().map(|g| g.prompt.clone()).collect();
 
     // every policy must produce the identical greedy continuation
-    let policies = [
-        SpecPolicy::NoSpec,
-        SpecPolicy::Fixed(1),
-        SpecPolicy::Fixed(3),
-        SpecPolicy::Fixed(5),
-        SpecPolicy::Adaptive(
-            Lut::new([(1, 4), (2, 3), (4, 3), (8, 2), (16, 1)].into_iter().collect()).unwrap(),
+    let mut policies: Vec<(Option<usize>, Box<dyn SpeculationPolicy>)> = vec![
+        (None, Box::new(NoSpec)),
+        (Some(1), Box::new(Fixed(1))),
+        (Some(3), Box::new(Fixed(3))),
+        (Some(5), Box::new(Fixed(5))),
+        (
+            None,
+            Box::new(LutAdaptive(
+                Lut::new([(1, 4), (2, 3), (4, 3), (8, 2), (16, 1)].into_iter().collect())
+                    .unwrap(),
+            )),
         ),
     ];
-    for policy in &policies {
+    for (fixed_s, policy) in policies.iter_mut() {
+        let label = policy.label();
         let out = engine
-            .generate_batch(&prompts, n_new, policy)
-            .unwrap_or_else(|e| panic!("{}: {e}", policy.label()));
+            .generate_batch(&prompts, n_new, policy.as_mut())
+            .unwrap_or_else(|e| panic!("{label}: {e}"));
         for (i, g) in goldens.iter().enumerate() {
             assert_eq!(
-                out.tokens[i],
-                g.greedy,
-                "policy {} diverged from greedy on prompt {i}",
-                policy.label()
+                out.tokens[i], g.greedy,
+                "policy {label} diverged from greedy on prompt {i}"
             );
         }
-        if let SpecPolicy::Fixed(s) = policy {
+        if let Some(s) = fixed_s {
             assert!(out.stats.rounds > 0);
             assert!(
                 out.stats.mean_accepted() >= 0.0
@@ -125,11 +129,11 @@ fn batched_generation_matches_single_row_generation() {
     // batch of 4 (padded to bucket 4) vs each prompt alone (bucket 1):
     // batching must not change any row's output
     let batched = engine
-        .generate_batch(&prompts, n_new, &SpecPolicy::Fixed(2))
+        .generate_batch(&prompts, n_new, &mut Fixed(2))
         .expect("batched");
     for (i, p) in prompts.iter().enumerate() {
         let single = engine
-            .generate_batch(std::slice::from_ref(p), n_new, &SpecPolicy::Fixed(2))
+            .generate_batch(std::slice::from_ref(p), n_new, &mut Fixed(2))
             .expect("single");
         assert_eq!(
             batched.tokens[i], single.tokens[0],
@@ -148,7 +152,7 @@ fn odd_batch_sizes_pad_to_bucket() {
 
     // 3 rows pad into the 4-bucket; outputs must match the goldens prefix
     let out = engine
-        .generate_batch(&prompts, 8, &SpecPolicy::Fixed(3))
+        .generate_batch(&prompts, 8, &mut Fixed(3))
         .expect("gen");
     assert_eq!(out.tokens.len(), 3);
     for (i, g) in goldens.iter().take(3).enumerate() {
@@ -172,7 +176,7 @@ fn eos_stops_generation_early() {
     };
     let mut engine = Engine::new(&rt, cfg).expect("engine");
     let out = engine
-        .generate_batch(&[goldens[0].prompt.clone()], 16, &SpecPolicy::Fixed(2))
+        .generate_batch(&[goldens[0].prompt.clone()], 16, &mut Fixed(2))
         .expect("gen");
     let toks = &out.tokens[0];
     let pos = toks.iter().position(|&t| t == fake_eos);
@@ -188,15 +192,11 @@ fn rejects_oversized_prompts_and_batches() {
     let mut engine = Engine::new(&rt, engine_cfg()).expect("engine");
     let max_prompt = rt.manifest.models["llm"].spec.max_prompt;
     let long = vec![1i32; max_prompt + 1];
-    assert!(engine
-        .generate_batch(&[long], 4, &SpecPolicy::NoSpec)
-        .is_err());
-    assert!(engine.generate_batch(&[], 4, &SpecPolicy::NoSpec).is_err());
+    assert!(engine.generate_batch(&[long], 4, &mut NoSpec).is_err());
+    assert!(engine.generate_batch(&[], 4, &mut NoSpec).is_err());
     let max_bucket = *rt.manifest.batch_buckets.iter().max().unwrap();
     let too_many = vec![vec![1i32, 5]; max_bucket + 1];
-    assert!(engine
-        .generate_batch(&too_many, 4, &SpecPolicy::NoSpec)
-        .is_err());
+    assert!(engine.generate_batch(&too_many, 4, &mut NoSpec).is_err());
 }
 
 #[test]
@@ -207,7 +207,7 @@ fn kv_capacity_overflow_is_detected() {
     let spec = &rt.manifest.models["llm"].spec;
     // ask for more tokens than the KV cache can hold: must error, not UB
     let budget = spec.max_seq;
-    let out = engine.generate_batch(&[vec![1i32, 5, 9]], budget, &SpecPolicy::Fixed(2));
+    let out = engine.generate_batch(&[vec![1i32, 5, 9]], budget, &mut Fixed(2));
     assert!(out.is_err(), "expected KV overflow error");
     let msg = out.unwrap_err().to_string();
     assert!(msg.contains("overflow"), "unexpected error: {msg}");

@@ -1,0 +1,165 @@
+//! The feedback-driven-policy acceptance test (the tentpole payoff): on a
+//! continuous-batching trace whose draft acceptance **drifts mid-trace**,
+//! the offline LUT — profiled for the pre-drift workload and now stale —
+//! and every fixed speculation length lose to the online [`ModelBased`]
+//! policy in mean request latency, and after the drift the online policy
+//! re-converges to within ±1 of the oracle `s_opt`.
+//!
+//! Scenario: the pre-drift workload has high draft acceptance
+//! (l(s) = 0.9·s^0.8 — long speculation pays), the post-drift workload
+//! has collapsed acceptance (l(s) = 0.6·s^0.05 — barely half a draft
+//! accepted regardless of s, so the oracle drops to s = 1).  Long fixed
+//! lengths saturate the server after the drift; short fixed lengths waste
+//! the easy pre-drift speedup; the stale LUT keeps over-speculating at
+//! every batch size.  Only the online policy tracks both regimes.
+
+use specbatch::dataset::Prompt;
+use specbatch::policy::{Fixed, LutAdaptive, ModelBased, NoSpec, SpeculationPolicy};
+use specbatch::simulator::{
+    oracle_s_opt, simulate_trace_continuous, simulated_lut, AcceptanceDrift, AcceptanceProcess,
+    CostModel, GpuProfile, ModelProfile, SimConfig,
+};
+use specbatch::traffic::{Trace, TrafficPattern};
+
+const DRIFT_AT: f64 = 60.0;
+const N_REQUESTS: usize = 600;
+
+fn phase_a() -> AcceptanceProcess {
+    AcceptanceProcess::PowerLaw { c: 0.9, gamma: 0.8 }
+}
+
+fn phase_b() -> AcceptanceProcess {
+    AcceptanceProcess::PowerLaw {
+        c: 0.6,
+        gamma: 0.05,
+    }
+}
+
+/// Paper-scale config whose acceptance drifts from `phase_a` to
+/// `phase_b` at `DRIFT_AT` virtual seconds.
+fn drift_cfg() -> SimConfig {
+    let mut cfg = SimConfig::paper_default(
+        CostModel::new(ModelProfile::OPT_6_7B, GpuProfile::RTX3090),
+        CostModel::new(ModelProfile::OPT_125M, GpuProfile::RTX3090),
+    );
+    cfg.acceptance = phase_a();
+    cfg.drift = Some(AcceptanceDrift {
+        at: DRIFT_AT,
+        after: phase_b(),
+    });
+    cfg.seed = 7;
+    cfg
+}
+
+/// The LUT an offline profiling pass would have produced BEFORE the
+/// drift (built against the pre-drift acceptance only).
+fn stale_lut(cfg: &SimConfig) -> specbatch::scheduler::Lut {
+    let mut pre = cfg.clone();
+    pre.drift = None;
+    simulated_lut(&pre, &[1, 2, 4, 8, 16], 8, 80)
+}
+
+fn drift_trace() -> Trace {
+    let pool = vec![Prompt {
+        ids: vec![1; 16],
+        text: String::new(),
+    }];
+    Trace::generate(
+        &TrafficPattern::Stationary {
+            interval: 0.2,
+            cv: 1.0,
+        },
+        &pool,
+        N_REQUESTS,
+        42,
+    )
+}
+
+fn mean_latency(cfg: &SimConfig, policy: &mut dyn SpeculationPolicy, trace: &Trace) -> f64 {
+    let (rec, _) = simulate_trace_continuous(cfg, policy, trace);
+    assert_eq!(rec.len(), trace.len(), "request conservation");
+    rec.summary().mean
+}
+
+#[test]
+fn scenario_preconditions_oracle_shrinks_after_drift() {
+    let cfg = drift_cfg();
+    // pre-drift the oracle wants long speculation at small batch...
+    assert!(
+        oracle_s_opt(&cfg, &phase_a(), 1, 8, 80) >= 5,
+        "pre-drift small-batch oracle should want long speculation"
+    );
+    // ...post-drift it collapses to (near) no speculation at every batch
+    for live in [1usize, 2, 4, 8, 16] {
+        let s = oracle_s_opt(&cfg, &phase_b(), live, 8, 80);
+        assert!(s <= 2, "post-drift oracle at live={live} is {s}, expected <= 2");
+    }
+}
+
+#[test]
+fn model_based_beats_stale_lut_and_every_fixed_s_under_acceptance_drift() {
+    let cfg = drift_cfg();
+    let lut = stale_lut(&cfg);
+    let trace = drift_trace();
+
+    let model_mean = mean_latency(&cfg, &mut ModelBased::new(lut.clone()), &trace);
+    let stale_mean = mean_latency(&cfg, &mut LutAdaptive(lut.clone()), &trace);
+    let nospec_mean = mean_latency(&cfg, &mut NoSpec, &trace);
+
+    assert!(
+        model_mean < stale_mean,
+        "online policy ({model_mean:.3}s) must beat the stale LUT ({stale_mean:.3}s)"
+    );
+    assert!(
+        model_mean < nospec_mean,
+        "online policy ({model_mean:.3}s) must beat no-spec ({nospec_mean:.3}s)"
+    );
+    for s in [1usize, 2, 3, 4, 6, 8] {
+        let fixed_mean = mean_latency(&cfg, &mut Fixed(s), &trace);
+        assert!(
+            model_mean < fixed_mean,
+            "online policy ({model_mean:.3}s) must beat fixed-{s} ({fixed_mean:.3}s)"
+        );
+    }
+}
+
+#[test]
+fn model_based_reconverges_to_the_oracle_after_the_drift() {
+    let cfg = drift_cfg();
+    let lut = stale_lut(&cfg);
+    let trace = drift_trace();
+    let mut policy = ModelBased::new(lut);
+    let (rec, rounds) = simulate_trace_continuous(&cfg, &mut policy, &trace);
+    assert_eq!(rec.len(), trace.len());
+
+    // give the windowed fits time to turn over, then compare every round's
+    // chosen s against the oracle for the post-drift acceptance at that
+    // round's live batch size (ctx ~ prompt + half the generation budget)
+    let settled: Vec<_> = rounds.iter().filter(|e| e.t >= DRIFT_AT + 20.0).collect();
+    assert!(
+        settled.len() >= 50,
+        "too few post-drift rounds to judge convergence: {}",
+        settled.len()
+    );
+    let within_one = settled
+        .iter()
+        .filter(|e| {
+            let oracle = oracle_s_opt(&cfg, &phase_b(), e.live, 8, 80) as i64;
+            (e.s as i64 - oracle).abs() <= 1
+        })
+        .count();
+    let frac = within_one as f64 / settled.len() as f64;
+    assert!(
+        frac >= 0.7,
+        "only {:.0}% of post-drift rounds within +-1 of the oracle s_opt",
+        frac * 100.0
+    );
+
+    // the re-fitted acceptance curve reflects the collapsed regime
+    let acc = policy.fitted_acceptance().expect("fits are warm");
+    assert!(
+        acc.l(1.0) < 0.8,
+        "post-drift fitted l(1) = {:.3} should be far below the pre-drift 0.9",
+        acc.l(1.0)
+    );
+}

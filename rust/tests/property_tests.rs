@@ -7,7 +7,8 @@ use std::collections::BTreeMap;
 use specbatch::analytic::{AcceptanceModel, StepCostModel, TotalTimeModel};
 use specbatch::dataset::Prompt;
 use specbatch::engine::acceptance::{accept_batch, accept_row};
-use specbatch::scheduler::{Lut, SpecPolicy};
+use specbatch::policy::{Fixed, LutAdaptive, ModelBased, NoSpec, SpeculationPolicy};
+use specbatch::scheduler::Lut;
 use specbatch::simulator::{simulate_trace, AcceptanceProcess, CostModel, GpuProfile,
     ModelProfile, SimConfig};
 use specbatch::testkit::{check, Gen};
@@ -126,17 +127,71 @@ fn prop_policy_never_exceeds_available_executables() {
     check("policy caps at max_s", 300, |g: &mut Gen| {
         let max_s = g.int(0, 8);
         let batch = g.int(1, 32);
-        let policy = match g.int(0, 2) {
-            0 => SpecPolicy::NoSpec,
-            1 => SpecPolicy::Fixed(g.int(0, 12)),
-            _ => {
+        let policy: Box<dyn SpeculationPolicy> = match g.int(0, 3) {
+            0 => Box::new(NoSpec),
+            1 => Box::new(Fixed(g.int(0, 12))),
+            2 => {
                 let mut e = BTreeMap::new();
                 e.insert(1, g.int(0, 12));
                 e.insert(8, g.int(0, 12));
-                SpecPolicy::Adaptive(Lut::new(e).unwrap())
+                Box::new(LutAdaptive(Lut::new(e).unwrap()))
+            }
+            _ => {
+                let mut e = BTreeMap::new();
+                e.insert(1, g.int(0, 12));
+                e.insert(16, g.int(0, 12));
+                Box::new(ModelBased::new(Lut::new(e).unwrap()))
             }
         };
-        policy.spec_len(batch, max_s) <= max_s
+        policy.choose(batch, max_s) <= max_s
+    });
+}
+
+/// The paper's key claim, asserted through the ONLINE policy: for any
+/// fitted acceptance model with gamma < 1 and per-bucket step costs whose
+/// alpha' is non-decreasing in the bucket (the Fig. 3 premise),
+/// `ModelBased::choose` is non-increasing in the live batch size.
+#[test]
+fn prop_model_based_choose_non_increasing_in_live_batch() {
+    check("model-based choose monotone in live", 150, |g: &mut Gen| {
+        let acceptance = AcceptanceModel {
+            c: g.f64(0.3, 1.0),
+            gamma: g.f64(0.1, 0.95), // gamma < 1: the Eq. 6 regime
+            r2: 1.0,
+        };
+        let beta = g.f64(0.005, 0.05);
+        // sparse or dense fitted-bucket sets both must stay monotone
+        let buckets: Vec<usize> = if g.bool() {
+            vec![1, 2, 4, 8, 16, 32, 64]
+        } else {
+            vec![1, 4, 16, 64]
+        };
+        let mut alpha = g.f64(1e-5, 5e-4);
+        let costs: Vec<StepCostModel> = buckets
+            .iter()
+            .map(|&b| {
+                let m = StepCostModel {
+                    batch: b,
+                    alpha,
+                    beta,
+                    t_ssm: 0.0, // folded into alpha, as the online fit does
+                    r2: 1.0,
+                };
+                alpha *= 1.0 + g.f64(0.0, 2.0);
+                m
+            })
+            .collect();
+        let fallback = Lut::new([(1usize, 4usize)].into_iter().collect()).unwrap();
+        let policy = ModelBased::with_models(fallback, acceptance, &costs);
+        let mut last = usize::MAX;
+        for live in 1..=64usize {
+            let s = policy.choose(live, 8);
+            if s > last {
+                return false;
+            }
+            last = s;
+        }
+        true
     });
 }
 
@@ -215,7 +270,7 @@ fn prop_simulated_queue_conserves_requests_in_fifo_order() {
             n,
             g.int(0, 1 << 30) as u64,
         );
-        let rec = simulate_trace(&cfg, &SpecPolicy::Fixed(g.int(1, 6)), &trace);
+        let rec = simulate_trace(&cfg, &mut Fixed(g.int(1, 6)), &trace);
         if rec.len() != n {
             return false;
         }

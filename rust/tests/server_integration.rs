@@ -46,7 +46,7 @@ fn serves_a_trace_and_accounts_every_request() {
         10,
         3,
     );
-    let (rec, lut, _rounds) = run_experiment(
+    let out = run_experiment(
         Backend::Artifacts(dir),
         small_cfg(),
         PolicySpec::Fixed(2),
@@ -54,7 +54,8 @@ fn serves_a_trace_and_accounts_every_request() {
         &trace,
     )
     .expect("experiment");
-    assert!(lut.is_none());
+    assert!(out.lut.is_none());
+    let rec = &out.recorder;
     assert_eq!(rec.len(), 10);
     // every id served exactly once
     let mut ids: Vec<u64> = rec.records().iter().map(|r| r.id).collect();
@@ -86,7 +87,7 @@ fn burst_traffic_gets_batched() {
         8,
         5,
     );
-    let (rec, _, _) = run_experiment(
+    let out = run_experiment(
         Backend::Artifacts(dir),
         small_cfg(),
         PolicySpec::Fixed(1),
@@ -94,6 +95,7 @@ fn burst_traffic_gets_batched() {
         &trace,
     )
     .expect("experiment");
+    let rec = &out.recorder;
     assert_eq!(rec.len(), 8);
     let max_batch = rec.records().iter().map(|r| r.batch).max().unwrap();
     assert!(max_batch > 1, "burst should produce merged batches");
@@ -115,7 +117,7 @@ fn adaptive_policy_profiles_then_serves() {
     );
     let mut cfg = small_cfg();
     cfg.profile_prompts = 4; // keep profiling quick
-    let (rec, lut, _) = run_experiment(
+    let out = run_experiment(
         Backend::Artifacts(dir),
         cfg,
         PolicySpec::Adaptive,
@@ -123,8 +125,8 @@ fn adaptive_policy_profiles_then_serves() {
         &trace,
     )
     .expect("experiment");
-    assert_eq!(rec.len(), 4);
-    let lut = lut.expect("adaptive must yield a LUT");
+    assert_eq!(out.recorder.len(), 4);
+    let lut = out.lut.expect("adaptive must yield a LUT");
     for (&b, &s) in lut.entries() {
         assert!(b >= 1);
         assert!(s <= 8, "absurd speculation length {s} for bucket {b}");
@@ -146,7 +148,7 @@ fn precomputed_lut_skips_profiling() {
     );
     let lut = Lut::new([(1, 3), (2, 2), (4, 2)].into_iter().collect()).unwrap();
     let t0 = std::time::Instant::now();
-    let (rec, lut_used, _) = run_experiment(
+    let out = run_experiment(
         Backend::Artifacts(dir),
         small_cfg(),
         PolicySpec::Adaptive,
@@ -154,8 +156,8 @@ fn precomputed_lut_skips_profiling() {
         &trace,
     )
     .expect("experiment");
-    assert_eq!(rec.len(), 4);
-    assert_eq!(lut_used, Some(lut));
+    assert_eq!(out.recorder.len(), 4);
+    assert_eq!(out.lut, Some(lut));
     // generous bound: no profiling pass means startup stays modest
     assert!(t0.elapsed() < Duration::from_secs(300));
 }
@@ -175,7 +177,7 @@ fn continuous_mode_serves_a_trace_on_artifacts() {
     );
     let mut cfg = small_cfg();
     cfg.mode = SchedulingMode::Continuous;
-    let (rec, _, rounds) = run_experiment(
+    let out = run_experiment(
         Backend::Artifacts(dir),
         cfg,
         PolicySpec::Fixed(2),
@@ -183,6 +185,7 @@ fn continuous_mode_serves_a_trace_on_artifacts() {
         &trace,
     )
     .expect("experiment");
+    let (rec, rounds) = (&out.recorder, &out.timeline);
     assert_eq!(rec.len(), 8);
     assert!(!rounds.is_empty(), "continuous mode must record rounds");
     for r in rec.records() {

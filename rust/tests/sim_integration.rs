@@ -5,7 +5,7 @@
 
 use specbatch::analytic::{AcceptanceModel, StepCostModel, TotalTimeModel};
 use specbatch::dataset::Prompt;
-use specbatch::scheduler::SpecPolicy;
+use specbatch::policy::{Fixed, LutAdaptive, NoSpec};
 use specbatch::simulator::{
     batch_service_time, simulate_trace, simulated_lut, AcceptanceProcess, CostModel,
     GpuProfile, ModelProfile, SimConfig,
@@ -87,11 +87,12 @@ fn speedup_decreases_with_batch() {
     let mut prev = f64::INFINITY;
     for &b in &[1usize, 4, 16] {
         let plens = vec![16usize; b];
-        let (t0, _, _) = batch_service_time(&cfg, &SpecPolicy::NoSpec, &plens, &mut rng);
+        let (t0, _, _) = batch_service_time(&cfg, &mut NoSpec, &plens, 0.0, &mut rng);
         let (t1, _, _) = batch_service_time(
             &cfg,
-            &SpecPolicy::Adaptive(lut.clone()),
+            &mut LutAdaptive(lut.clone()),
             &plens,
+            0.0,
             &mut rng,
         );
         let speedup = t0 / t1;
@@ -113,7 +114,6 @@ fn queueing_delay_appears_only_under_load() {
         ids: vec![1; 16],
         text: String::new(),
     }];
-    let policy = SpecPolicy::Fixed(2);
     let sparse = Trace::generate(
         &TrafficPattern::Stationary {
             interval: 30.0,
@@ -123,7 +123,7 @@ fn queueing_delay_appears_only_under_load() {
         40,
         1,
     );
-    let rec = simulate_trace(&cfg, &policy, &sparse);
+    let rec = simulate_trace(&cfg, &mut Fixed(2), &sparse);
     let mean_queue: f64 = rec
         .records()
         .iter()
@@ -141,7 +141,7 @@ fn queueing_delay_appears_only_under_load() {
         40,
         1,
     );
-    let rec = simulate_trace(&cfg, &policy, &dense);
+    let rec = simulate_trace(&cfg, &mut Fixed(2), &dense);
     let mean_queue_dense: f64 = rec
         .records()
         .iter()
@@ -169,8 +169,8 @@ fn simulation_is_deterministic() {
         120,
         13,
     );
-    let a = simulate_trace(&cfg, &SpecPolicy::Fixed(4), &trace);
-    let b = simulate_trace(&cfg, &SpecPolicy::Fixed(4), &trace);
+    let a = simulate_trace(&cfg, &mut Fixed(4), &trace);
+    let b = simulate_trace(&cfg, &mut Fixed(4), &trace);
     let lat = |r: &specbatch::metrics::LatencyRecorder| {
         r.records().iter().map(|x| x.latency()).collect::<Vec<_>>()
     };

@@ -1,0 +1,124 @@
+//! Pins the KV state-machine invariant DESIGN.md states but nothing
+//! previously tested across admissions and epoch reshapes: after every
+//! **speculative** round, each slot satisfies
+//! `ingested == committed.len() - 1` for BOTH models (the last committed
+//! token is fed, never pre-ingested), and between speculative rounds the
+//! SSM's backlog never overtakes the LLM.  Runs on the stub backend, so
+//! it exercises the identical counter logic the PJRT path uses.
+
+use specbatch::engine::{AdmitRequest, BatchState, Engine, EngineConfig};
+use specbatch::policy::{Fixed, NoSpec};
+use specbatch::testkit::stub::StubSpec;
+
+fn stub_engine() -> Engine<'static> {
+    Engine::stub(StubSpec::default(), EngineConfig::default()).unwrap()
+}
+
+/// Both models sit exactly one token behind the committed stream.
+fn assert_caught_up(st: &BatchState, when: &str) {
+    for (slot, (committed, llm_ing, ssm_ing)) in st.ingest_state().into_iter().enumerate() {
+        assert_eq!(
+            llm_ing as usize,
+            committed - 1,
+            "{when}: LLM ingest invariant broken on slot {slot}"
+        );
+        let ssm_ing = ssm_ing.expect("speculating epoch owns an SSM KV");
+        assert_eq!(
+            ssm_ing as usize,
+            committed - 1,
+            "{when}: SSM ingest invariant broken on slot {slot}"
+        );
+    }
+}
+
+/// The SSM may lag (catch-up backlog) but never lead the LLM.
+fn assert_ssm_never_leads(st: &BatchState, when: &str) {
+    for (slot, (committed, llm_ing, ssm_ing)) in st.ingest_state().into_iter().enumerate() {
+        assert!(
+            (llm_ing as usize) <= committed - 1,
+            "{when}: LLM ingested past committed-1 on slot {slot}"
+        );
+        if let Some(ssm_ing) = ssm_ing {
+            assert!(
+                ssm_ing <= llm_ing,
+                "{when}: SSM ({ssm_ing}) ahead of LLM ({llm_ing}) on slot {slot}"
+            );
+        }
+    }
+}
+
+#[test]
+fn delta_invariant_holds_through_admissions() {
+    let mut e = stub_engine();
+    let mut policy = Fixed(2);
+    let mut st = e.prefill_rows(&[vec![5, 9], vec![7]], 4, true, 24).unwrap();
+
+    // speculative rounds keep both models exactly one behind
+    for _ in 0..3 {
+        e.decode_round(&mut st, &mut policy).unwrap();
+        assert_caught_up(&st, "after speculative round");
+    }
+
+    // a plain round (s = 0) opens an SSM backlog...
+    e.decode_round(&mut st, &mut NoSpec).unwrap();
+    assert_ssm_never_leads(&st, "after plain round");
+
+    // ...and admission mid-epoch opens one for the fresh rows too
+    let slots = e
+        .admit_rows(
+            &mut st,
+            &[AdmitRequest {
+                context: vec![30, 31, 32],
+                prompt_len: 3,
+                max_new: 24,
+            }],
+        )
+        .unwrap();
+    assert_eq!(slots.len(), 1);
+    assert_ssm_never_leads(&st, "after admission");
+
+    // the catch-up pass before the next speculative round restores the
+    // delta invariant for every slot, admitted rows included
+    e.decode_round(&mut st, &mut policy).unwrap();
+    assert_caught_up(&st, "after catch-up + speculative round");
+}
+
+#[test]
+fn delta_invariant_holds_across_an_epoch_reshape() {
+    let mut e = stub_engine();
+    let mut policy = Fixed(3);
+
+    // epoch 1 at bucket 2: generate a few tokens
+    let mut st = e.prefill_rows(&[vec![5, 9], vec![7, 8]], 2, true, 30).unwrap();
+    for _ in 0..4 {
+        e.decode_round(&mut st, &mut policy).unwrap();
+    }
+    assert_caught_up(&st, "epoch 1 steady state");
+
+    // reshape: carry the unfinished rows into a larger bucket, exactly as
+    // the continuous batcher does (prefill fresh rows, re-admit carried)
+    let carried: Vec<AdmitRequest> =
+        e.export_rows(&st).into_iter().map(|(_, req)| req).collect();
+    assert_eq!(carried.len(), 2, "both rows still mid-generation");
+    let mut st2 = e.prefill_rows(&[vec![40, 41]], 4, true, 30).unwrap();
+    let slots = e.admit_rows(&mut st2, &carried).unwrap();
+    assert_eq!(slots.len(), 2);
+
+    // carried contexts are longer than the SSM has seen: backlog, not lead
+    assert_ssm_never_leads(&st2, "after reshape admission");
+
+    // first speculative round of the reshaped epoch drains the backlog
+    e.decode_round(&mut st2, &mut policy).unwrap();
+    assert_caught_up(&st2, "after reshape catch-up round");
+
+    // and the reshaped epoch still finishes every row losslessly
+    while st2.has_live() {
+        e.decode_round(&mut st2, &mut policy).unwrap();
+        assert_caught_up(&st2, "reshaped epoch rounds");
+    }
+    let retired = e.retire_finished(&mut st2);
+    assert_eq!(retired.len(), 3);
+    for r in &retired {
+        assert_eq!(r.tokens.len(), 30, "slot {} truncated", r.slot);
+    }
+}
