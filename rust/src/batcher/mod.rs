@@ -516,10 +516,16 @@ mod tests {
         }
         // the feedback edge ran: the policy accumulated acceptance
         // samples (cold start speculates via the fallback LUT, so every
-        // round reports per-row accepted counts)
+        // round reports per-row accepted counts) — or, in the unlikely
+        // case the CUSUM detector flushed on the very last round, it at
+        // least recorded the flush
         let snap = policy.snapshot().expect("model-based always snapshots");
         let samples = snap.get("samples").unwrap().as_f64().unwrap();
-        assert!(samples > 0.0, "observe never delivered samples: {snap:?}");
+        let flushes = snap.get("drift_flushes").unwrap().as_f64().unwrap();
+        assert!(
+            samples > 0.0 || flushes > 0.0,
+            "observe never delivered samples: {snap:?}"
+        );
         // the recorded timeline carries the new accepted/cost columns
         assert!(!batcher.timeline.is_empty());
         assert!(batcher

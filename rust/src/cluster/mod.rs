@@ -1,0 +1,470 @@
+//! Sharded multi-worker cluster with speculation-aware routing.
+//!
+//! The paper's headline — the optimal speculation length `s_opt` shrinks
+//! as the batch grows — becomes a **placement** problem the moment more
+//! than one worker serves traffic: how requests are routed across shards
+//! determines each shard's live batch, which determines each shard's
+//! `s_opt` and per-round cost (Eq. 7).  This module runs N independent
+//! worker shards — each owning its own continuous batcher
+//! ([`crate::batcher`]) and [`SpeculationPolicy`] instance — behind a
+//! [`Router`]:
+//!
+//! * [`RoundRobin`] — cycle through shards in arrival order (load- and
+//!   model-oblivious, the baseline);
+//! * [`JoinShortestQueue`] — always pick the shard with the fewest
+//!   live + queued requests;
+//! * [`PowerOfTwo`] — probe two random shards, pick the lighter (the
+//!   classic two-choices load balancer: most of JSQ's benefit at O(1)
+//!   probe cost);
+//! * [`CostAware`] — greedily pick the shard whose **fitted round-cost
+//!   model** ([`ModelBased`](crate::policy::ModelBased)'s online Eq. 7
+//!   fits, surfaced through
+//!   [`SpeculationPolicy::predict_token_time`]) predicts the smallest
+//!   marginal per-token latency increase, falling back to JSQ while any
+//!   shard's fits are cold.  This is where routing and speculation
+//!   synergize: a shard sitting just below a batch-bucket edge is cheap
+//!   to top up, one just past it has already paid the larger `α'_b` and
+//!   re-solved a smaller `s` — the router reads both off the same fits
+//!   the per-shard policies learn from round feedback.
+//!
+//! Two drivers share the routing layer:
+//!
+//! * [`sim::simulate_trace_cluster`] — the DES mirror: per-shard virtual
+//!   clocks over a shared arrival stream, so routing × speculation
+//!   experiments are deterministic and run at paper scale in
+//!   milliseconds;
+//! * [`server::run_cluster_experiment`] — the real threaded path on the
+//!   stub backend: one engine + batcher + policy per worker thread, a
+//!   dispatcher thread owning the router, and per-shard response
+//!   collectors (`ServerConfig { workers, router, .. }` selects it).
+
+pub mod server;
+pub mod sim;
+
+use crate::config::RouterSpec;
+use crate::metrics::RoundEvent;
+use crate::policy::{Fixed, LutAdaptive, ModelBased, NoSpec, SpeculationPolicy};
+use crate::scheduler::Lut;
+use crate::util::json::Json;
+use crate::util::prng::Pcg64;
+
+use anyhow::{bail, Result};
+
+/// What the router sees of one shard at a routing decision.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ShardLoad {
+    pub shard: usize,
+    /// requests live in the shard's active epoch
+    pub live: usize,
+    /// requests routed to the shard but not yet admitted
+    pub queued: usize,
+    /// predicted marginal per-token latency increase of placing one more
+    /// request here (from the shard policy's fitted round-cost model;
+    /// `None` while the fits are cold)
+    pub marginal_cost: Option<f64>,
+}
+
+impl ShardLoad {
+    /// Total requests the shard is responsible for.
+    pub fn total(&self) -> usize {
+        self.live + self.queued
+    }
+}
+
+/// A request-routing strategy over shard load snapshots.
+///
+/// `route` is called once per arriving request with one [`ShardLoad`] per
+/// shard (index `i` describes shard `i`) and returns the chosen shard
+/// index.  Routers may keep state (round-robin cursor, probe RNG) but
+/// must be deterministic given their construction seed.  `Send` because
+/// the threaded cluster path moves the router into its dispatcher thread.
+pub trait Router: Send {
+    fn route(&mut self, loads: &[ShardLoad]) -> usize;
+    fn label(&self) -> String;
+}
+
+/// Cycle through the shards in arrival order.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RoundRobin {
+    next: usize,
+}
+
+impl Router for RoundRobin {
+    fn route(&mut self, loads: &[ShardLoad]) -> usize {
+        let k = self.next % loads.len();
+        self.next = self.next.wrapping_add(1);
+        k
+    }
+
+    fn label(&self) -> String {
+        "round-robin".into()
+    }
+}
+
+/// Always pick the shard with the fewest live + queued requests (ties go
+/// to the lowest shard index).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct JoinShortestQueue;
+
+impl Router for JoinShortestQueue {
+    fn route(&mut self, loads: &[ShardLoad]) -> usize {
+        loads
+            .iter()
+            .min_by_key(|l| (l.total(), l.shard))
+            .expect("route called with at least one shard")
+            .shard
+    }
+
+    fn label(&self) -> String {
+        "jsq".into()
+    }
+}
+
+/// Probe two distinct random shards, pick the lighter (first probe wins
+/// ties).  Deterministic given the construction seed.
+#[derive(Debug, Clone)]
+pub struct PowerOfTwo {
+    rng: Pcg64,
+}
+
+impl PowerOfTwo {
+    pub fn new(seed: u64) -> PowerOfTwo {
+        PowerOfTwo {
+            rng: Pcg64::with_stream(seed, 0x9072),
+        }
+    }
+}
+
+impl Router for PowerOfTwo {
+    fn route(&mut self, loads: &[ShardLoad]) -> usize {
+        let n = loads.len();
+        if n == 1 {
+            return 0;
+        }
+        let a = self.rng.next_below(n);
+        let b = {
+            let mut b = self.rng.next_below(n - 1);
+            if b >= a {
+                b += 1;
+            }
+            b
+        };
+        if loads[b].total() < loads[a].total() {
+            b
+        } else {
+            a
+        }
+    }
+
+    fn label(&self) -> String {
+        "power-of-two".into()
+    }
+}
+
+/// Greedy model-based placement: route to the shard whose fitted
+/// round-cost model predicts the smallest marginal per-token latency
+/// increase ([`ShardLoad::marginal_cost`]), breaking ties by load then
+/// index.  While **any** shard's fits are cold the router falls back to
+/// [`JoinShortestQueue`] — comparing a warm prediction against a missing
+/// one would systematically dogpile whichever side is favoured.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CostAware {
+    jsq: JoinShortestQueue,
+}
+
+impl Router for CostAware {
+    fn route(&mut self, loads: &[ShardLoad]) -> usize {
+        if loads.iter().any(|l| l.marginal_cost.is_none()) {
+            return self.jsq.route(loads);
+        }
+        loads
+            .iter()
+            .min_by(|x, y| {
+                let kx = (x.marginal_cost.unwrap(), x.total(), x.shard);
+                let ky = (y.marginal_cost.unwrap(), y.total(), y.shard);
+                kx.partial_cmp(&ky).expect("marginal costs are finite")
+            })
+            .expect("route called with at least one shard")
+            .shard
+    }
+
+    fn label(&self) -> String {
+        "cost-aware".into()
+    }
+}
+
+/// Resolve a parsed [`RouterSpec`] into a live router.  `seed` feeds the
+/// probe RNG of [`PowerOfTwo`] (the other strategies are seedless).
+pub fn build_router(spec: RouterSpec, seed: u64) -> Box<dyn Router> {
+    match spec {
+        RouterSpec::RoundRobin => Box::new(RoundRobin::default()),
+        RouterSpec::JoinShortestQueue => Box::new(JoinShortestQueue),
+        RouterSpec::PowerOfTwo => Box::new(PowerOfTwo::new(seed)),
+        RouterSpec::CostAware => Box::new(CostAware::default()),
+    }
+}
+
+/// Per-token prediction at `live`, linearly interpolated between the two
+/// nearest power-of-two bucket predictions.  The policy's fits are
+/// bucket-granular, but a greedy router comparing *marginal* costs needs
+/// a smooth curve: on the raw stair-step, crossing a bucket edge looks
+/// hugely expensive and staying inside a bucket looks free, so a burst
+/// of arrivals piles onto whichever shard crossed first.
+fn predict_interp(policy: &dyn SpeculationPolicy, live: usize) -> Option<f64> {
+    if live <= 1 {
+        return policy.predict_token_time(1);
+    }
+    // largest power of two <= live
+    let lo = (live + 1).next_power_of_two() >> 1;
+    if lo == live {
+        return policy.predict_token_time(live);
+    }
+    let hi = lo << 1;
+    let tlo = policy.predict_token_time(lo)?;
+    let thi = policy.predict_token_time(hi)?;
+    let w = (live - lo) as f64 / (hi - lo) as f64;
+    Some(tlo + w * (thi - tlo))
+}
+
+/// Marginal per-token latency increase of adding one request to a shard
+/// already carrying `load` requests, under its policy's fitted model:
+/// `(load+1)·t(load+1) − load·t(load)` — adding a request slows every
+/// resident down, so the marginal cost weights the per-token time shift
+/// by the population bearing it.  Beyond `max_batch` the shard
+/// time-shares its token throughput, so the effective per-token time
+/// scales by `load / max_batch` (otherwise queue depth would stop
+/// costing anything once the largest fitted bucket is full, and the
+/// router would bury one shard).  `None` while the policy predicts
+/// nothing (static policies, cold fits).
+pub fn marginal_cost(
+    policy: &dyn SpeculationPolicy,
+    load: usize,
+    max_batch: usize,
+) -> Option<f64> {
+    let max_batch = max_batch.max(1);
+    let t_eff = |n: usize| -> Option<f64> {
+        let t = predict_interp(policy, n.min(max_batch))?;
+        Some(t * (n as f64 / max_batch as f64).max(1.0))
+    };
+    let after = t_eff(load + 1)?;
+    if load == 0 {
+        return Some(after);
+    }
+    let now = t_eff(load)?;
+    Some(((load + 1) as f64 * after - load as f64 * now).max(0.0))
+}
+
+/// One policy instance per shard (each shard learns its own fits), all
+/// resolved from the same spec.  `lut` seeds the LUT-backed policies and
+/// is required for `Adaptive` / `ModelBased`.
+pub fn replicate_policies(
+    spec: &crate::config::PolicySpec,
+    lut: Option<&Lut>,
+    workers: usize,
+) -> Result<Vec<Box<dyn SpeculationPolicy>>> {
+    use crate::config::PolicySpec;
+    (0..workers)
+        .map(|_| -> Result<Box<dyn SpeculationPolicy>> {
+            Ok(match spec {
+                PolicySpec::None => Box::new(NoSpec),
+                PolicySpec::Fixed(s) => Box::new(Fixed(*s)),
+                PolicySpec::Adaptive => match lut {
+                    Some(l) => Box::new(LutAdaptive(l.clone())),
+                    None => bail!("adaptive policy needs an offline LUT"),
+                },
+                PolicySpec::ModelBased => match lut {
+                    Some(l) => Box::new(ModelBased::new(l.clone())),
+                    None => bail!("model-based policy needs a fallback LUT"),
+                },
+            })
+        })
+        .collect()
+}
+
+/// Per-shard slice of a cluster experiment's outcome (the breakdown
+/// attached to `server::ExperimentOutcome` and printed by the CLI).
+#[derive(Debug, Clone)]
+pub struct ShardBreakdown {
+    pub shard: usize,
+    /// requests this shard served to completion
+    pub requests: usize,
+    /// mean end-to-end latency of those requests, seconds
+    pub mean_latency: f64,
+    /// the shard's own per-round (live, s) timeline
+    pub rounds: Vec<RoundEvent>,
+    /// fitted-model snapshot at shutdown (online policies only)
+    pub policy_snapshot: Option<Json>,
+}
+
+impl ShardBreakdown {
+    /// Mean live batch over the shard's recorded rounds.
+    pub fn mean_live(&self) -> f64 {
+        if self.rounds.is_empty() {
+            return 0.0;
+        }
+        self.rounds.iter().map(|e| e.live as f64).sum::<f64>() / self.rounds.len() as f64
+    }
+
+    /// Mean chosen speculation length over the shard's recorded rounds.
+    pub fn mean_s(&self) -> f64 {
+        if self.rounds.is_empty() {
+            return 0.0;
+        }
+        self.rounds.iter().map(|e| e.s as f64).sum::<f64>() / self.rounds.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytic::{AcceptanceModel, StepCostModel};
+    use crate::config::PolicySpec;
+
+    fn loads(totals: &[usize]) -> Vec<ShardLoad> {
+        totals
+            .iter()
+            .enumerate()
+            .map(|(i, &t)| ShardLoad {
+                shard: i,
+                live: t,
+                queued: 0,
+                marginal_cost: None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = RoundRobin::default();
+        let l = loads(&[9, 0, 0]);
+        let picks: Vec<usize> = (0..6).map(|_| r.route(&l)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn jsq_picks_the_lightest_with_index_ties() {
+        let mut r = JoinShortestQueue;
+        assert_eq!(r.route(&loads(&[3, 1, 2])), 1);
+        assert_eq!(r.route(&loads(&[2, 2, 2])), 0);
+        let mut with_queue = loads(&[1, 1]);
+        with_queue[0].queued = 5;
+        assert_eq!(r.route(&with_queue), 1, "queued requests count as load");
+    }
+
+    #[test]
+    fn power_of_two_is_deterministic_and_prefers_lighter_probes() {
+        let l = loads(&[10, 0, 10, 10]);
+        let mut a = PowerOfTwo::new(7);
+        let mut b = PowerOfTwo::new(7);
+        let pa: Vec<usize> = (0..64).map(|_| a.route(&l)).collect();
+        let pb: Vec<usize> = (0..64).map(|_| b.route(&l)).collect();
+        assert_eq!(pa, pb, "same seed, same probe sequence");
+        // whenever shard 1 is probed it wins; over 64 routes with 4
+        // shards that is overwhelmingly likely to have happened
+        assert!(pa.contains(&1));
+        // shard 1 wins far more than its uniform 1/4 share
+        let hits = pa.iter().filter(|&&k| k == 1).count();
+        assert!(hits * 2 > pa.len() / 2, "two-choices should favour the idle shard");
+        // single shard short-circuits
+        assert_eq!(PowerOfTwo::new(1).route(&loads(&[4])), 0);
+    }
+
+    #[test]
+    fn cost_aware_uses_marginals_when_warm_and_jsq_when_cold() {
+        let mut r = CostAware::default();
+        // cold anywhere -> JSQ on totals
+        let mut l = loads(&[4, 2, 3]);
+        l[0].marginal_cost = Some(0.001);
+        assert_eq!(r.route(&l), 1, "one cold shard forces the JSQ fallback");
+        // all warm -> smallest marginal wins even against a lighter shard
+        let mut warm = loads(&[6, 1, 3]);
+        warm[0].marginal_cost = Some(0.0004);
+        warm[1].marginal_cost = Some(0.0030);
+        warm[2].marginal_cost = Some(0.0010);
+        assert_eq!(r.route(&warm), 0);
+        // marginal ties break by load, then index
+        let mut tied = loads(&[5, 2, 2]);
+        for s in tied.iter_mut() {
+            s.marginal_cost = Some(0.002);
+        }
+        assert_eq!(r.route(&tied), 1);
+    }
+
+    #[test]
+    fn build_router_matches_spec_labels() {
+        for spec in RouterSpec::all() {
+            let r = build_router(spec, 11);
+            assert_eq!(r.label(), spec.label());
+        }
+    }
+
+    #[test]
+    fn marginal_cost_weights_the_resident_population() {
+        let acceptance = AcceptanceModel {
+            c: 0.9,
+            gamma: 0.548,
+            r2: 1.0,
+        };
+        let costs = [
+            StepCostModel {
+                batch: 1,
+                alpha: 0.0004,
+                beta: 0.03,
+                t_ssm: 0.0,
+                r2: 1.0,
+            },
+            StepCostModel {
+                batch: 4,
+                alpha: 0.004,
+                beta: 0.03,
+                t_ssm: 0.0,
+                r2: 1.0,
+            },
+            StepCostModel {
+                batch: 16,
+                alpha: 0.02,
+                beta: 0.03,
+                t_ssm: 0.0,
+                r2: 1.0,
+            },
+        ];
+        let lut = Lut::new([(1usize, 3usize)].into_iter().collect()).unwrap();
+        let p = ModelBased::with_models(lut.clone(), acceptance, &costs);
+        // an empty shard charges exactly the first request's own time
+        let m0 = marginal_cost(&p, 0, 16).unwrap();
+        assert!((m0 - p.predict_token_time(1).unwrap()).abs() < 1e-12);
+        // moving toward the compute-bound bucket is the expensive move
+        let m_light = marginal_cost(&p, 2, 16).unwrap();
+        let m_heavy = marginal_cost(&p, 8, 16).unwrap();
+        assert!(
+            m_heavy > m_light,
+            "pushing a loaded shard toward the big bucket must cost more: \
+             {m_light} vs {m_heavy}"
+        );
+        // beyond capacity the queue keeps charging: marginals keep
+        // growing instead of saturating at the largest fitted bucket
+        let m_over = marginal_cost(&p, 24, 16).unwrap();
+        let m_deep = marginal_cost(&p, 48, 16).unwrap();
+        assert!(
+            m_deep > m_over && m_over > m_heavy,
+            "queue depth must keep costing: {m_heavy} -> {m_over} -> {m_deep}"
+        );
+        // static policies predict nothing
+        assert!(marginal_cost(&NoSpec, 3, 16).is_none());
+        assert!(marginal_cost(&ModelBased::new(lut), 3, 16).is_none(), "cold");
+    }
+
+    #[test]
+    fn replicate_policies_builds_independent_instances() {
+        let lut = Lut::new([(1usize, 4usize), (16, 1)].into_iter().collect()).unwrap();
+        let ps = replicate_policies(&PolicySpec::ModelBased, Some(&lut), 3).unwrap();
+        assert_eq!(ps.len(), 3);
+        for p in &ps {
+            assert_eq!(p.label(), "model-based");
+            assert_eq!(p.choose(1, 8), 4, "cold start follows the shared LUT");
+        }
+        assert!(replicate_policies(&PolicySpec::Adaptive, None, 2).is_err());
+        let fixed = replicate_policies(&PolicySpec::Fixed(2), None, 2).unwrap();
+        assert_eq!(fixed[0].choose(9, 8), 2);
+    }
+}

@@ -1,0 +1,447 @@
+//! The real threaded cluster path (stub backend): N worker threads, each
+//! owning its own engine + continuous batcher + policy, behind a
+//! dispatcher thread that owns the [`Router`](super::Router).
+//!
+//! Plumbing (all `std::sync::mpsc`, mirroring the single-worker server):
+//!
+//! ```text
+//! client ──ServerMsg──> dispatcher ──per-shard queues──> worker 0..N-1
+//!                           │  ▲                            │
+//!                           │  └── ShardGauge (live/queued/marginal,
+//!                           │      published at round boundaries)
+//!                           │
+//!   collector threads <──ServerResponse── workers
+//!        └──(shard, response)──> experiment harness
+//! ```
+//!
+//! The dispatcher keeps its own in-flight count per shard (sent minus
+//! completed — an upper bound on live + queued that is exact between
+//! round boundaries) and reads each worker's [`ShardGauge`] for the
+//! fitted marginal cost, so [`CostAware`](super::CostAware) routing works
+//! on the real path as in the DES, up to gauge staleness: the gauge only
+//! refreshes at round boundaries, so the dispatcher scales the published
+//! marginal by how far its in-flight count has moved past the published
+//! load, keeping bursts that arrive within one round from dogpiling the
+//! momentarily-cheapest shard.  Workers publish the gauge between
+//! rounds; the dispatcher never blocks on a worker.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::PolicySpec;
+use crate::metrics::{LatencyRecorder, RequestRecord};
+use crate::server::{
+    run_client, worker, Backend, ExperimentOutcome, SchedulingMode, ServerConfig,
+    ServerMsg, ServerResponse,
+};
+use crate::testkit::stub::StubSpec;
+use crate::traffic::Trace;
+
+use super::{build_router, ShardBreakdown, ShardLoad};
+
+/// Cold-prediction sentinel for the marginal-cost gauge slot (a real
+/// marginal cost is a finite non-negative f64, whose bits never collide
+/// with this).
+const COLD: u64 = u64::MAX;
+
+/// Lock-free load snapshot one cluster worker publishes for the
+/// dispatcher's router: live rows, queued requests, and the policy's
+/// fitted marginal per-token cost of one more request (`None` while the
+/// fits are cold).
+#[derive(Debug)]
+pub struct ShardGauge {
+    live: AtomicUsize,
+    queued: AtomicUsize,
+    marginal_bits: AtomicU64,
+}
+
+impl Default for ShardGauge {
+    fn default() -> Self {
+        ShardGauge {
+            live: AtomicUsize::new(0),
+            queued: AtomicUsize::new(0),
+            marginal_bits: AtomicU64::new(COLD),
+        }
+    }
+}
+
+impl ShardGauge {
+    pub fn publish(&self, live: usize, queued: usize, marginal: Option<f64>) {
+        self.live.store(live, Ordering::Relaxed);
+        self.queued.store(queued, Ordering::Relaxed);
+        let bits = match marginal {
+            Some(m) if m.is_finite() => m.to_bits(),
+            _ => COLD,
+        };
+        self.marginal_bits.store(bits, Ordering::Relaxed);
+    }
+
+    pub fn live(&self) -> usize {
+        self.live.load(Ordering::Relaxed)
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queued.load(Ordering::Relaxed)
+    }
+
+    pub fn marginal(&self) -> Option<f64> {
+        let bits = self.marginal_bits.load(Ordering::Relaxed);
+        (bits != COLD).then(|| f64::from_bits(bits))
+    }
+}
+
+/// Run one full client/cluster experiment on the stub backend: spawn
+/// `cfg.workers` shard workers and the dispatcher, wait until every shard
+/// is ready, replay the trace, collect all responses, then shut down and
+/// assemble per-shard breakdowns.
+pub fn run_cluster_experiment(
+    spec: StubSpec,
+    cfg: ServerConfig,
+    policy: PolicySpec,
+    lut: Option<crate::scheduler::Lut>,
+    trace: &Trace,
+) -> Result<ExperimentOutcome> {
+    let n_shards = cfg.workers;
+    if n_shards < 2 {
+        bail!("run_cluster_experiment needs workers >= 2");
+    }
+    if cfg.mode != SchedulingMode::Continuous {
+        bail!(
+            "the cluster path serves continuous mode only (per-shard \
+             batch-to-completion would starve the router of round boundaries)"
+        );
+    }
+    let epoch = Instant::now();
+
+    // --- spawn the shard workers ---
+    let mut shard_txs: Vec<Sender<ServerMsg>> = Vec::with_capacity(n_shards);
+    let mut lut_rxs = Vec::with_capacity(n_shards);
+    let mut report_rxs = Vec::with_capacity(n_shards);
+    let mut worker_joins: Vec<JoinHandle<Result<()>>> = Vec::with_capacity(n_shards);
+    let mut resp_rxs: Vec<Receiver<ServerResponse>> = Vec::with_capacity(n_shards);
+    let gauges: Vec<Arc<ShardGauge>> = (0..n_shards)
+        .map(|_| Arc::new(ShardGauge::default()))
+        .collect();
+    for k in 0..n_shards {
+        let (req_tx, req_rx) = channel::<ServerMsg>();
+        let (resp_tx, resp_rx) = channel::<ServerResponse>();
+        let (lut_tx, lut_rx) = channel();
+        let (report_tx, report_rx) = channel();
+        let w_spec = spec.clone();
+        let w_cfg = cfg.clone();
+        let w_policy = policy.clone();
+        let w_lut = lut.clone();
+        let w_gauge = Arc::clone(&gauges[k]);
+        let join = std::thread::Builder::new()
+            .name(format!("specbatch-shard-{k}"))
+            .spawn(move || {
+                worker(
+                    Backend::Stub(w_spec),
+                    w_cfg,
+                    w_policy,
+                    w_lut,
+                    epoch,
+                    req_rx,
+                    resp_tx,
+                    lut_tx,
+                    report_tx,
+                    Some(w_gauge),
+                )
+            })
+            .expect("spawning shard worker thread");
+        shard_txs.push(req_tx);
+        lut_rxs.push(lut_rx);
+        report_rxs.push(report_rx);
+        worker_joins.push(join);
+        resp_rxs.push(resp_rx);
+    }
+
+    // --- wait for every shard to finish startup ---
+    let mut lut_used = None;
+    for (k, rx) in lut_rxs.iter().enumerate() {
+        let l = rx
+            .recv_timeout(Duration::from_secs(600))
+            .map_err(|_| anyhow!("shard {k} did not become ready"))?;
+        if lut_used.is_none() {
+            lut_used = l;
+        }
+    }
+
+    // --- dispatcher: routes arrivals, fans shutdown out to the shards ---
+    let inflight: Arc<Vec<AtomicUsize>> =
+        Arc::new((0..n_shards).map(|_| AtomicUsize::new(0)).collect());
+    let (dispatch_tx, dispatch_rx) = channel::<ServerMsg>();
+    let dispatcher = {
+        // the probe seed only matters for reproducibility in the DES;
+        // the real path is wall-clock anyway
+        let mut router = build_router(cfg.router, 0);
+        let shard_txs = shard_txs.clone();
+        let gauges: Vec<Arc<ShardGauge>> = gauges.iter().map(Arc::clone).collect();
+        let inflight = Arc::clone(&inflight);
+        std::thread::Builder::new()
+            .name("specbatch-dispatcher".into())
+            .spawn(move || loop {
+                match dispatch_rx.recv() {
+                    Ok(ServerMsg::Request(r)) => {
+                        let loads: Vec<ShardLoad> = (0..shard_txs.len())
+                            .map(|k| {
+                                let live = gauges[k].live();
+                                let total = inflight[k].load(Ordering::Relaxed);
+                                // the gauge is frozen at the shard's last
+                                // round boundary; requests routed since
+                                // (total beyond the published load) must
+                                // keep raising the marginal, or a burst
+                                // arriving within one round would dogpile
+                                // the momentarily-cheapest shard
+                                let published = live + gauges[k].queued();
+                                let marginal_cost = gauges[k].marginal().map(|m| {
+                                    let staleness =
+                                        (total + 1) as f64 / (published + 1) as f64;
+                                    m * staleness.max(1.0)
+                                });
+                                ShardLoad {
+                                    shard: k,
+                                    live: live.min(total),
+                                    queued: total.saturating_sub(live),
+                                    marginal_cost,
+                                }
+                            })
+                            .collect();
+                        let k = router.route(&loads).min(shard_txs.len() - 1);
+                        inflight[k].fetch_add(1, Ordering::Relaxed);
+                        if shard_txs[k].send(ServerMsg::Request(r)).is_err() {
+                            break;
+                        }
+                    }
+                    Ok(ServerMsg::Shutdown) | Err(_) => {
+                        for tx in &shard_txs {
+                            let _ = tx.send(ServerMsg::Shutdown);
+                        }
+                        break;
+                    }
+                }
+            })
+            .expect("spawning dispatcher thread")
+    };
+
+    // --- collectors: merge per-shard responses, settle in-flight counts ---
+    let (merged_tx, merged_rx) = channel::<(usize, ServerResponse)>();
+    let collectors: Vec<JoinHandle<()>> = resp_rxs
+        .into_iter()
+        .enumerate()
+        .map(|(k, rx)| {
+            let merged_tx = merged_tx.clone();
+            let inflight = Arc::clone(&inflight);
+            std::thread::Builder::new()
+                .name(format!("specbatch-collector-{k}"))
+                .spawn(move || {
+                    while let Ok(resp) = rx.recv() {
+                        inflight[k].fetch_sub(1, Ordering::Relaxed);
+                        if merged_tx.send((k, resp)).is_err() {
+                            break;
+                        }
+                    }
+                })
+                .expect("spawning collector thread")
+        })
+        .collect();
+    drop(merged_tx);
+
+    // --- client: replay the trace against the dispatcher in real time ---
+    let n = trace.len();
+    let client_tx = dispatch_tx.clone();
+    let trace_cloned = trace.clone();
+    let client = std::thread::Builder::new()
+        .name("specbatch-client".into())
+        .spawn(move || run_client(&trace_cloned, &client_tx, epoch))
+        .expect("spawning client thread");
+
+    let mut recorder = LatencyRecorder::new();
+    while recorder.len() < n {
+        let (shard, resp) = merged_rx
+            .recv_timeout(Duration::from_secs(600))
+            .map_err(|_| anyhow!("timed out waiting for responses ({}/{n})", recorder.len()))?;
+        recorder.push(RequestRecord {
+            id: resp.id,
+            sent_at: resp.sent_at,
+            started_at: resp.started_at,
+            finished_at: resp.finished_at,
+            tokens: resp.tokens.len(),
+            batch: resp.batch,
+            spec_len: resp.spec_len,
+            shard,
+        });
+    }
+    client
+        .join()
+        .map_err(|_| anyhow!("client thread panicked"))??;
+
+    // --- shutdown: dispatcher fans out, workers report, collectors drain ---
+    let _ = dispatch_tx.send(ServerMsg::Shutdown);
+    dispatcher
+        .join()
+        .map_err(|_| anyhow!("dispatcher thread panicked"))?;
+    let mut shards = Vec::with_capacity(n_shards);
+    for (k, (join, report_rx)) in worker_joins
+        .into_iter()
+        .zip(report_rxs.into_iter())
+        .enumerate()
+    {
+        match join.join() {
+            Ok(r) => r?,
+            Err(_) => bail!("shard {k} worker thread panicked"),
+        }
+        let (rounds, policy_snapshot) = report_rx.try_recv().unwrap_or_default();
+        let served: Vec<&RequestRecord> = recorder
+            .records()
+            .iter()
+            .filter(|r| r.shard == k)
+            .collect();
+        let mean_latency = if served.is_empty() {
+            f64::NAN
+        } else {
+            served.iter().map(|r| r.latency()).sum::<f64>() / served.len() as f64
+        };
+        shards.push(ShardBreakdown {
+            shard: k,
+            requests: served.len(),
+            mean_latency,
+            rounds,
+            policy_snapshot,
+        });
+    }
+    for c in collectors {
+        let _ = c.join();
+    }
+
+    Ok(ExperimentOutcome {
+        recorder,
+        lut: lut_used,
+        timeline: Vec::new(),
+        policy_snapshot: None,
+        shards,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RouterSpec;
+    use crate::dataset::Prompt;
+    use crate::traffic::TrafficPattern;
+
+    fn pool() -> Vec<Prompt> {
+        (3..=8usize)
+            .map(|len| Prompt {
+                ids: (0..len).map(|k| 5 + (k * 3 % 40) as i32).collect(),
+                text: String::new(),
+            })
+            .collect()
+    }
+
+    fn cluster_cfg(workers: usize, router: RouterSpec) -> ServerConfig {
+        ServerConfig {
+            max_batch: 4,
+            max_new_tokens: 12,
+            mode: SchedulingMode::Continuous,
+            workers,
+            router,
+            ..ServerConfig::default()
+        }
+    }
+
+    #[test]
+    fn threaded_cluster_serves_every_request_once() {
+        let trace = Trace::generate(
+            &TrafficPattern::Stationary {
+                interval: 0.002,
+                cv: 1.0,
+            },
+            &pool(),
+            24,
+            7,
+        );
+        let out = run_cluster_experiment(
+            StubSpec::default(),
+            cluster_cfg(3, RouterSpec::RoundRobin),
+            PolicySpec::Fixed(2),
+            None,
+            &trace,
+        )
+        .unwrap();
+        assert_eq!(out.recorder.len(), 24);
+        let mut ids: Vec<u64> = out.recorder.records().iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..24).collect::<Vec<u64>>());
+        // round-robin: every shard served exactly a third of the trace
+        assert_eq!(out.shards.len(), 3);
+        for b in &out.shards {
+            assert_eq!(b.requests, 8, "shard {} count", b.shard);
+            assert!(!b.rounds.is_empty(), "shard {} recorded no rounds", b.shard);
+        }
+        assert_eq!(out.recorder.per_shard_counts(), vec![8, 8, 8]);
+    }
+
+    #[test]
+    fn threaded_cluster_rejects_static_mode_and_single_worker() {
+        let trace = Trace::generate(
+            &TrafficPattern::Stationary {
+                interval: 0.01,
+                cv: 1.0,
+            },
+            &pool(),
+            4,
+            1,
+        );
+        let mut cfg = cluster_cfg(2, RouterSpec::RoundRobin);
+        cfg.mode = SchedulingMode::Static;
+        assert!(run_cluster_experiment(
+            StubSpec::default(),
+            cfg,
+            PolicySpec::Fixed(1),
+            None,
+            &trace
+        )
+        .is_err());
+        assert!(run_cluster_experiment(
+            StubSpec::default(),
+            cluster_cfg(1, RouterSpec::RoundRobin),
+            PolicySpec::Fixed(1),
+            None,
+            &trace
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn threaded_cluster_cost_aware_with_model_based_policies() {
+        let trace = Trace::generate(
+            &TrafficPattern::Stationary {
+                interval: 0.001,
+                cv: 1.0,
+            },
+            &pool(),
+            32,
+            11,
+        );
+        let out = run_cluster_experiment(
+            StubSpec::default(),
+            cluster_cfg(2, RouterSpec::CostAware),
+            PolicySpec::ModelBased,
+            None,
+            &trace,
+        )
+        .unwrap();
+        assert_eq!(out.recorder.len(), 32);
+        assert!(out.lut.is_some(), "model-based shards resolve a fallback LUT");
+        // both shards took part and reported a policy snapshot
+        assert_eq!(out.shards.len(), 2);
+        assert!(out.shards.iter().all(|b| b.requests > 0));
+        assert!(out.shards.iter().all(|b| b.policy_snapshot.is_some()));
+    }
+}

@@ -1,0 +1,461 @@
+//! Discrete-event simulation of the sharded cluster: N per-shard virtual
+//! clocks over one shared arrival stream.
+//!
+//! Each shard mirrors [`crate::simulator::des::simulate_trace_continuous`]
+//! exactly — round-boundary admission, immediate retirement, a per-round
+//! policy query with the live batch, and the policy feedback edge driven
+//! in virtual time — but owns its **own** clock, queue, acceptance RNG
+//! stream and [`SpeculationPolicy`] instance.  The global event loop
+//! interleaves two event kinds in time order:
+//!
+//! * **arrival** — the next trace item reaches the dispatcher; the
+//!   [`Router`] sees every shard's current [`ShardLoad`] (live, queued,
+//!   and the policy's fitted marginal cost) and picks a shard, whose
+//!   queue the item joins;
+//! * **round** — the shard with the earliest next round boundary runs one
+//!   decode round (admitting its due queue first).
+//!
+//! An arrival is routed before any round that starts at or after its send
+//! time, so a routed request is admissible at the very boundary it
+//! arrived at — the same semantics as the single-worker DES.  Rounds are
+//! atomic: a round spanning the arrival's send time has already completed
+//! (and retired its finished rows) when the router looks, so routing
+//! observes each shard at its last completed round boundary.
+
+use std::collections::VecDeque;
+
+use crate::metrics::{LatencyRecorder, RequestRecord, RoundEvent};
+use crate::policy::{RoundFeedback, SpeculationPolicy};
+use crate::simulator::{round_cost, SimConfig};
+use crate::traffic::{Trace, TraceItem};
+use crate::util::prng::Pcg64;
+
+use super::{marginal_cost, Router, ShardLoad};
+
+/// Outcome of one cluster simulation: the merged latency records (each
+/// tagged with its serving shard) and the per-shard round timelines.
+pub struct ClusterReport {
+    pub recorder: LatencyRecorder,
+    /// per-shard virtual-time round timelines, indexed by shard
+    pub shard_rounds: Vec<Vec<RoundEvent>>,
+    pub router: String,
+}
+
+impl ClusterReport {
+    /// Requests served per shard (padded to the shard count, so shards
+    /// that served nothing still appear).
+    pub fn shard_requests(&self) -> Vec<usize> {
+        let mut counts = self.recorder.per_shard_counts();
+        counts.resize(self.shard_rounds.len(), 0);
+        counts
+    }
+}
+
+struct SimRow {
+    id: u64,
+    sent_at: f64,
+    admitted_at: f64,
+    plen: usize,
+    /// committed tokens (prefill counts as the first one)
+    generated: usize,
+    batch_at_admit: usize,
+    spec_at_admit: usize,
+}
+
+struct Shard {
+    /// virtual clock: the shard's next round boundary
+    t: f64,
+    queue: VecDeque<TraceItem>,
+    live: Vec<SimRow>,
+    rng: Pcg64,
+    rounds: Vec<RoundEvent>,
+    epoch: usize,
+}
+
+impl Shard {
+    /// Virtual time of the shard's next round boundary, `None` when idle
+    /// with nothing queued.
+    fn next_round_at(&self) -> Option<f64> {
+        if !self.live.is_empty() {
+            Some(self.t)
+        } else {
+            self.queue.front().map(|item| self.t.max(item.send_at))
+        }
+    }
+}
+
+/// Simulate a trace through `policies.len()` worker shards routed by
+/// `router`.  Each shard gets its own acceptance RNG stream derived from
+/// `cfg.seed`, so runs are deterministic and two routers compared on the
+/// same trace differ only through placement.
+pub fn simulate_trace_cluster(
+    cfg: &SimConfig,
+    policies: &mut [Box<dyn SpeculationPolicy>],
+    router: &mut dyn Router,
+    trace: &Trace,
+) -> ClusterReport {
+    let n_shards = policies.len();
+    assert!(n_shards >= 1, "cluster needs at least one shard");
+    let mut shards: Vec<Shard> = (0..n_shards)
+        .map(|k| Shard {
+            t: 0.0,
+            queue: VecDeque::new(),
+            live: Vec::new(),
+            rng: Pcg64::with_stream(cfg.seed, 0xC1A5_7E00 + k as u64),
+            rounds: Vec::new(),
+            epoch: 0,
+        })
+        .collect();
+    let mut recorder = LatencyRecorder::new();
+    let items = &trace.items;
+    let mut next = 0usize;
+
+    loop {
+        // earliest round boundary over shards with work
+        let mut round_at = f64::INFINITY;
+        let mut round_shard = None;
+        for (k, sh) in shards.iter().enumerate() {
+            if let Some(at) = sh.next_round_at() {
+                if at < round_at {
+                    round_at = at;
+                    round_shard = Some(k);
+                }
+            }
+        }
+        let arrival_at = items.get(next).map(|i| i.send_at).unwrap_or(f64::INFINITY);
+        if round_shard.is_none() && next >= items.len() {
+            break;
+        }
+        if arrival_at <= round_at {
+            // dispatch: the router sees every shard's load as of its
+            // last completed round boundary
+            let loads: Vec<ShardLoad> = shards
+                .iter()
+                .enumerate()
+                .map(|(k, sh)| ShardLoad {
+                    shard: k,
+                    live: sh.live.len(),
+                    queued: sh.queue.len(),
+                    marginal_cost: marginal_cost(
+                        policies[k].as_ref(),
+                        sh.live.len() + sh.queue.len(),
+                        cfg.max_batch,
+                    ),
+                })
+                .collect();
+            let k = router.route(&loads).min(n_shards - 1);
+            shards[k].queue.push_back(items[next].clone());
+            next += 1;
+        } else {
+            let k = round_shard.expect("a shard has work");
+            step_shard(cfg, &mut shards[k], policies[k].as_mut(), &mut recorder, k);
+        }
+    }
+
+    ClusterReport {
+        recorder,
+        shard_rounds: shards.into_iter().map(|sh| sh.rounds).collect(),
+        router: router.label(),
+    }
+}
+
+/// One round boundary on one shard: admit due queued requests, run one
+/// decode round in virtual time, feed the policy back, retire finished
+/// rows.  Mirrors the single-worker `simulate_trace_continuous` loop body.
+fn step_shard(
+    cfg: &SimConfig,
+    sh: &mut Shard,
+    policy: &mut dyn SpeculationPolicy,
+    recorder: &mut LatencyRecorder,
+    shard_idx: usize,
+) {
+    let may_speculate = policy.wants_speculation();
+    if sh.live.is_empty() {
+        // idle: jump to the head arrival, opening a new epoch
+        if let Some(head) = sh.queue.front() {
+            if head.send_at > sh.t {
+                sh.t = head.send_at;
+            }
+        }
+        sh.epoch += 1;
+    }
+
+    // --- admit everything due, up to the live-capacity cap ---
+    let mut n_admit = 0usize;
+    let mut plen_sum = 0usize;
+    let admit_t = sh.t;
+    while let Some(item) = sh.queue.front() {
+        if item.send_at > sh.t || sh.live.len() >= cfg.max_batch {
+            break;
+        }
+        let item = sh.queue.pop_front().expect("front just observed");
+        let plen = item.prompt.ids.len();
+        sh.live.push(SimRow {
+            id: item.id,
+            sent_at: item.send_at,
+            admitted_at: admit_t,
+            plen,
+            generated: 1, // prefill commits the first token
+            batch_at_admit: 0,
+            spec_at_admit: 0,
+        });
+        plen_sum += plen;
+        n_admit += 1;
+    }
+    if n_admit > 0 {
+        let mean_plen = (plen_sum as f64 / n_admit as f64).ceil() as usize;
+        sh.t += cfg.llm.t_prefill(n_admit, mean_plen);
+        if may_speculate {
+            sh.t += cfg.ssm.t_prefill(n_admit, mean_plen);
+        }
+        let b = sh.live.len();
+        let s_now = if may_speculate { policy.choose(b, 8) } else { 0 };
+        for row in sh.live.iter_mut().rev().take(n_admit) {
+            row.batch_at_admit = b;
+            row.spec_at_admit = s_now;
+        }
+    }
+
+    // --- one decode round over the live rows ---
+    let b = sh.live.len();
+    debug_assert!(b >= 1, "step_shard called on an idle shard");
+    let ctx = sh.live.iter().map(|r| r.plen + r.generated).sum::<usize>() / b;
+    let s = if may_speculate { policy.choose(b, 8) } else { 0 };
+    let rc = round_cost(cfg, b, s, ctx);
+    let mut accepted_rows: Vec<u32> = Vec::new();
+    let mut committed = 0usize;
+    if s == 0 {
+        for row in sh.live.iter_mut() {
+            row.generated += 1;
+            committed += 1;
+        }
+    } else {
+        let acc = cfg.acceptance_at(sh.t);
+        for row in sh.live.iter_mut() {
+            let a = acc.sample(s, &mut sh.rng);
+            accepted_rows.push(a as u32);
+            row.generated += a + 1;
+            committed += a + 1;
+        }
+    }
+    sh.t += rc;
+    let accepted_total: usize = accepted_rows.iter().map(|&a| a as usize).sum();
+    policy.observe(&RoundFeedback {
+        live: b,
+        width: b, // continuous rounds execute at exactly the live width
+        s,
+        accepted: accepted_rows,
+        committed,
+        round_time: rc,
+    });
+    sh.rounds.push(RoundEvent {
+        t: sh.t,
+        epoch: sh.epoch,
+        live: b,
+        queued: sh.queue.len(),
+        s,
+        accepted: accepted_total,
+        round_cost: rc,
+    });
+
+    // --- retire finished rows immediately, freeing capacity ---
+    let mut i = 0;
+    while i < sh.live.len() {
+        if sh.live[i].generated >= cfg.max_new_tokens {
+            let row = sh.live.swap_remove(i);
+            recorder.push(RequestRecord {
+                id: row.id,
+                sent_at: row.sent_at,
+                started_at: row.admitted_at,
+                finished_at: sh.t,
+                tokens: cfg.max_new_tokens,
+                batch: row.batch_at_admit,
+                spec_len: row.spec_at_admit,
+                shard: shard_idx,
+            });
+        } else {
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{build_router, replicate_policies};
+    use crate::config::{PolicySpec, RouterSpec};
+    use crate::dataset::Prompt;
+    use crate::policy::Fixed;
+    use crate::simulator::{
+        simulate_trace_continuous, simulated_lut, CostModel, GpuProfile, ModelProfile,
+    };
+    use crate::traffic::TrafficPattern;
+
+    fn cfg() -> SimConfig {
+        let mut c = SimConfig::paper_default(
+            CostModel::new(ModelProfile::OPT_6_7B, GpuProfile::RTX3090),
+            CostModel::new(ModelProfile::OPT_125M, GpuProfile::RTX3090),
+        );
+        c.max_new_tokens = 32; // keep tests quick
+        c
+    }
+
+    fn pool() -> Vec<Prompt> {
+        vec![Prompt {
+            ids: vec![1; 12],
+            text: String::new(),
+        }]
+    }
+
+    fn fixed_policies(n: usize, s: usize) -> Vec<Box<dyn SpeculationPolicy>> {
+        (0..n)
+            .map(|_| Box::new(Fixed(s)) as Box<dyn SpeculationPolicy>)
+            .collect()
+    }
+
+    #[test]
+    fn cluster_conserves_requests_and_causality() {
+        let cfg = cfg();
+        let trace = Trace::generate(
+            &TrafficPattern::Stationary {
+                interval: 0.1,
+                cv: 1.0,
+            },
+            &pool(),
+            200,
+            13,
+        );
+        for spec in RouterSpec::all() {
+            let mut policies = fixed_policies(4, 2);
+            let mut router = build_router(spec, 5);
+            let report =
+                simulate_trace_cluster(&cfg, &mut policies, router.as_mut(), &trace);
+            assert_eq!(report.recorder.len(), 200, "router {}", report.router);
+            let mut ids: Vec<u64> =
+                report.recorder.records().iter().map(|r| r.id).collect();
+            ids.sort_unstable();
+            assert_eq!(ids, (0..200).collect::<Vec<u64>>());
+            for r in report.recorder.records() {
+                assert!(r.started_at >= r.sent_at - 1e-12);
+                assert!(r.finished_at > r.started_at);
+                assert!(r.shard < 4);
+                assert!(r.batch >= 1 && r.batch <= cfg.max_batch);
+            }
+            assert_eq!(report.shard_rounds.len(), 4);
+            for rounds in &report.shard_rounds {
+                for w in rounds.windows(2) {
+                    assert!(w[1].t >= w[0].t, "shard clock went backwards");
+                }
+                assert!(rounds.iter().all(|e| e.live >= 1 && e.live <= cfg.max_batch));
+                assert!(rounds.iter().all(|e| e.round_cost > 0.0));
+            }
+        }
+    }
+
+    #[test]
+    fn round_robin_spreads_requests_evenly() {
+        let cfg = cfg();
+        let trace = Trace::generate(
+            &TrafficPattern::Stationary {
+                interval: 0.2,
+                cv: 1.0,
+            },
+            &pool(),
+            120,
+            3,
+        );
+        let mut policies = fixed_policies(3, 2);
+        let mut router = build_router(RouterSpec::RoundRobin, 0);
+        let report = simulate_trace_cluster(&cfg, &mut policies, router.as_mut(), &trace);
+        assert_eq!(report.shard_requests(), vec![40, 40, 40]);
+    }
+
+    #[test]
+    fn one_shard_cluster_matches_the_single_worker_des() {
+        // with N=1 every router degenerates to the single-worker
+        // continuous DES: same acceptance stream semantics, so the same
+        // latency distribution shape (clocks advance identically except
+        // for the RNG stream constant, so compare conservation + summary
+        // against a direct run on a no-randomness policy)
+        let cfg = cfg();
+        let trace = Trace::generate(
+            &TrafficPattern::Stationary {
+                interval: 0.3,
+                cv: 1.0,
+            },
+            &pool(),
+            100,
+            9,
+        );
+        let mut single = Fixed(0);
+        let (rec_single, _) = simulate_trace_continuous(&cfg, &mut single, &trace);
+        let mut policies = fixed_policies(1, 0);
+        let mut router = build_router(RouterSpec::JoinShortestQueue, 0);
+        let report = simulate_trace_cluster(&cfg, &mut policies, router.as_mut(), &trace);
+        // s = 0 rounds draw no acceptance randomness, so the two paths
+        // are bit-identical
+        assert_eq!(report.recorder.len(), rec_single.len());
+        let mean_c = report.recorder.summary().mean;
+        let mean_s = rec_single.summary().mean;
+        assert!(
+            (mean_c - mean_s).abs() < 1e-9,
+            "1-shard cluster {mean_c} != single-worker {mean_s}"
+        );
+    }
+
+    #[test]
+    fn more_workers_cut_latency_under_load() {
+        let cfg = cfg();
+        let trace = Trace::generate(
+            &TrafficPattern::Stationary {
+                interval: 0.03,
+                cv: 1.0,
+            },
+            &pool(),
+            300,
+            17,
+        );
+        let run = |n: usize| {
+            let mut policies = fixed_policies(n, 2);
+            let mut router = build_router(RouterSpec::JoinShortestQueue, 0);
+            simulate_trace_cluster(&cfg, &mut policies, router.as_mut(), &trace)
+                .recorder
+                .summary()
+                .mean
+        };
+        let one = run(1);
+        let four = run(4);
+        assert!(
+            four < 0.7 * one,
+            "4 workers ({four:.3}s) should clearly beat 1 ({one:.3}s) under load"
+        );
+    }
+
+    #[test]
+    fn model_based_cluster_warms_up_and_uses_cost_aware_routing() {
+        let cfg = cfg();
+        let lut = simulated_lut(&cfg, &[1, 2, 4, 8, 16], 8, 80);
+        let trace = Trace::generate(
+            &TrafficPattern::Stationary {
+                interval: 0.05,
+                cv: 1.0,
+            },
+            &pool(),
+            400,
+            23,
+        );
+        let mut policies =
+            replicate_policies(&PolicySpec::ModelBased, Some(&lut), 4).unwrap();
+        let mut router = build_router(RouterSpec::CostAware, 1);
+        let report = simulate_trace_cluster(&cfg, &mut policies, router.as_mut(), &trace);
+        assert_eq!(report.recorder.len(), 400);
+        // every shard saw traffic and its policy's fits warmed up
+        for (k, p) in policies.iter().enumerate() {
+            assert!(
+                p.predict_token_time(2).is_some(),
+                "shard {k} policy never warmed up"
+            );
+        }
+        assert!(report.shard_requests().iter().all(|&n| n > 0));
+    }
+}

@@ -24,6 +24,10 @@ pub struct ServingConfig {
     /// Speculation policy: "none", "fixed:<s>", "adaptive", or
     /// "model-based" (online, feedback-fitted).
     pub policy: PolicySpec,
+    /// Worker shards serving in parallel (1 = the single-worker paths).
+    pub workers: usize,
+    /// How arrivals are routed across shards when `workers > 1`.
+    pub router: RouterSpec,
     /// Seed for everything stochastic on the serving side.
     pub seed: u64,
 }
@@ -65,6 +69,58 @@ impl PolicySpec {
     }
 }
 
+/// Parsed request-routing choice for multi-worker serving (resolved into
+/// a live `cluster::Router` object by `cluster::build_router`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouterSpec {
+    /// cycle through the shards in arrival order
+    RoundRobin,
+    /// always pick the shard with the fewest live + queued requests
+    JoinShortestQueue,
+    /// probe two random shards, pick the lighter (power-of-two-choices)
+    PowerOfTwo,
+    /// pick the shard whose fitted round-cost model predicts the
+    /// smallest marginal per-token latency increase (JSQ while cold)
+    CostAware,
+}
+
+impl RouterSpec {
+    pub fn parse(s: &str) -> Result<RouterSpec> {
+        match s {
+            "round-robin" | "rr" => Ok(RouterSpec::RoundRobin),
+            "jsq" | "join-shortest-queue" | "shortest" => {
+                Ok(RouterSpec::JoinShortestQueue)
+            }
+            "power-of-two" | "p2" | "po2" => Ok(RouterSpec::PowerOfTwo),
+            "cost-aware" | "cost" => Ok(RouterSpec::CostAware),
+            other => bail!(
+                "bad router {other:?}: expected round-robin | jsq | \
+                 power-of-two | cost-aware"
+            ),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            RouterSpec::RoundRobin => "round-robin",
+            RouterSpec::JoinShortestQueue => "jsq",
+            RouterSpec::PowerOfTwo => "power-of-two",
+            RouterSpec::CostAware => "cost-aware",
+        }
+    }
+
+    /// All four routing strategies (the comparison set of the cluster
+    /// benches and examples).
+    pub fn all() -> [RouterSpec; 4] {
+        [
+            RouterSpec::RoundRobin,
+            RouterSpec::JoinShortestQueue,
+            RouterSpec::PowerOfTwo,
+            RouterSpec::CostAware,
+        ]
+    }
+}
+
 impl Default for ServingConfig {
     fn default() -> Self {
         ServingConfig {
@@ -73,6 +129,8 @@ impl Default for ServingConfig {
             max_new_tokens: 128,
             stop_at_eos: true,
             policy: PolicySpec::Adaptive,
+            workers: 1,
+            router: RouterSpec::RoundRobin,
             seed: 0,
         }
     }
@@ -102,11 +160,20 @@ impl ServingConfig {
         if let Some(v) = json.get_opt("policy")? {
             cfg.policy = PolicySpec::parse(v.as_str()?)?;
         }
+        if let Some(v) = json.get_opt("workers")? {
+            cfg.workers = v.as_usize()?;
+        }
+        if let Some(v) = json.get_opt("router")? {
+            cfg.router = RouterSpec::parse(v.as_str()?)?;
+        }
         if let Some(v) = json.get_opt("seed")? {
             cfg.seed = v.as_i64()? as u64;
         }
         if cfg.max_batch == 0 || cfg.max_new_tokens == 0 {
             bail!("max_batch and max_new_tokens must be positive");
+        }
+        if cfg.workers == 0 {
+            bail!("workers must be positive (1 = single-worker serving)");
         }
         Ok(cfg)
     }
@@ -121,6 +188,8 @@ impl ServingConfig {
             ("max_new_tokens", Json::Num(self.max_new_tokens as f64)),
             ("stop_at_eos", Json::Bool(self.stop_at_eos)),
             ("policy", Json::Str(self.policy.label())),
+            ("workers", Json::Num(self.workers as f64)),
+            ("router", Json::Str(self.router.label().into())),
             ("seed", Json::Num(self.seed as f64)),
         ])
     }
@@ -188,6 +257,46 @@ mod tests {
     #[test]
     fn rejects_zero_batch() {
         let j = Json::parse(r#"{"max_batch": 0}"#).unwrap();
+        assert!(ServingConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn router_parse_and_labels() {
+        assert_eq!(
+            RouterSpec::parse("round-robin").unwrap(),
+            RouterSpec::RoundRobin
+        );
+        assert_eq!(RouterSpec::parse("rr").unwrap(), RouterSpec::RoundRobin);
+        assert_eq!(
+            RouterSpec::parse("jsq").unwrap(),
+            RouterSpec::JoinShortestQueue
+        );
+        assert_eq!(RouterSpec::parse("p2").unwrap(), RouterSpec::PowerOfTwo);
+        assert_eq!(
+            RouterSpec::parse("cost-aware").unwrap(),
+            RouterSpec::CostAware
+        );
+        assert!(RouterSpec::parse("bogus").is_err());
+        for spec in RouterSpec::all() {
+            assert_eq!(RouterSpec::parse(spec.label()).unwrap(), spec);
+        }
+    }
+
+    #[test]
+    fn cluster_fields_roundtrip_and_validate() {
+        let c = ServingConfig {
+            workers: 4,
+            router: RouterSpec::CostAware,
+            ..ServingConfig::default()
+        };
+        let c2 = ServingConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.workers, 4);
+        assert_eq!(c2.router, RouterSpec::CostAware);
+        // defaults stay single-worker round-robin
+        let d = ServingConfig::default();
+        assert_eq!(d.workers, 1);
+        assert_eq!(d.router, RouterSpec::RoundRobin);
+        let j = Json::parse(r#"{"workers": 0}"#).unwrap();
         assert!(ServingConfig::from_json(&j).is_err());
     }
 }

@@ -14,9 +14,11 @@
 //!   round granularity ([`engine`]), schedules requests through static or
 //!   continuous batching ([`batcher`], [`server`]), picks speculation
 //!   lengths through the feedback-driven [`policy`] subsystem (offline
-//!   LUT [`scheduler`] or the online model-based policy), generates
-//!   Gamma-distributed traffic ([`traffic`]) and reproduces every figure
-//!   of the paper ([`simulator`], [`analytic`], `rust/benches/`).
+//!   LUT [`scheduler`] or the online model-based policy), shards traffic
+//!   across multiple workers with speculation-aware routing ([`cluster`]),
+//!   generates Gamma-distributed traffic ([`traffic`]) and reproduces
+//!   every figure of the paper ([`simulator`], [`analytic`],
+//!   `rust/benches/`).
 //!
 //! Backends: with `--features pjrt` the engine executes the AOT artifacts
 //! through the PJRT C API ([`runtime`]; Python never runs on the request
@@ -43,6 +45,7 @@
 
 pub mod analytic;
 pub mod batcher;
+pub mod cluster;
 pub mod config;
 pub mod dataset;
 pub mod engine;
@@ -60,7 +63,9 @@ pub mod util;
 /// Most-used types in one import.
 pub mod prelude {
     pub use crate::batcher::{BatchRequest, BatcherConfig, ContinuousBatcher};
-    pub use crate::config::{PolicySpec, ServingConfig};
+    pub use crate::cluster::sim::simulate_trace_cluster;
+    pub use crate::cluster::{build_router, replicate_policies, Router, ShardLoad};
+    pub use crate::config::{PolicySpec, RouterSpec, ServingConfig};
     pub use crate::engine::{BatchState, Engine, EngineConfig, GenOutput};
     pub use crate::policy::{
         Fixed, LutAdaptive, ModelBased, NoSpec, RoundFeedback, SpeculationPolicy,

@@ -21,7 +21,9 @@
 
 use anyhow::{bail, Result};
 
-use specbatch::config::PolicySpec;
+use specbatch::cluster::sim::simulate_trace_cluster;
+use specbatch::cluster::{build_router, replicate_policies};
+use specbatch::config::{PolicySpec, RouterSpec};
 use specbatch::policy::{Fixed, LutAdaptive, ModelBased, NoSpec, SpeculationPolicy};
 use specbatch::server::{run_experiment, Backend, SchedulingMode, ServerConfig};
 use specbatch::simulator::{
@@ -86,8 +88,10 @@ fn usage() -> String {
      \x20 quickstart   generate text for a few dataset prompts [pjrt]\n\
      \x20 profile      offline (batch, s) grid search -> adaptive LUT [pjrt]\n\
      \x20 grid         real-execution per-token latency grid (CSV) [pjrt]\n\
-     \x20 serve        server+client Gamma-traffic experiment (static|continuous)\n\
-     \x20 sim          paper-scale GPU-simulator experiment (static|continuous)\n\
+     \x20 serve        server+client Gamma-traffic experiment (static|continuous,\n\
+     \x20              --workers N for the threaded stub cluster)\n\
+     \x20 sim          paper-scale GPU-simulator experiment (static|continuous,\n\
+     \x20              --workers N --router ... for the cluster DES)\n\
      \x20 warmup       precompile the executable matrix [pjrt]\n\
      \x20 selfcheck    smoke-test artifacts + engine [pjrt]\n\
      \n\
@@ -379,11 +383,13 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
     .opt("artifacts", "artifacts", "artifacts directory (pjrt builds)")
     .opt("policy", "adaptive", "none | fixed:<s> | adaptive | model-based")
     .opt("mode", "static", "static | continuous")
+    .opt("workers", "1", "worker shards (> 1 = threaded cluster, continuous mode)")
+    .opt("router", "cost-aware", "round-robin | jsq | power-of-two | cost-aware")
     .opt("requests", "64", "number of requests")
     .opt("interval", "0.5", "mean inter-arrival seconds")
     .opt("cv", "1.0", "coefficient of variation")
     .opt("tokens", "32", "new tokens per request")
-    .opt("max-batch", "8", "dynamic batching cap")
+    .opt("max-batch", "8", "dynamic batching cap (per shard)")
     .opt("seed", "1", "trace seed")
     .flag("fig6", "use the alternating intense/sparse pattern")
     .opt("out", "results/serve.csv", "per-request CSV")
@@ -413,10 +419,14 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         pattern.label()
     );
 
+    let workers = args.get_usize("workers")?;
+    let router = RouterSpec::parse(args.get("router")?)?;
     let cfg = ServerConfig {
         max_batch: args.get_usize("max-batch")?,
         max_new_tokens: args.get_usize("tokens")?,
         mode,
+        workers,
+        router,
         ..ServerConfig::default()
     };
     let policy = PolicySpec::parse(args.get("policy")?)?;
@@ -440,6 +450,21 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         p99,
         out.recorder.throughput_tokens_per_s()
     );
+    if !out.shards.is_empty() {
+        println!("router {} over {} shards:", router.label(), out.shards.len());
+        for b in &out.shards {
+            println!(
+                "  shard {} | {:>4} requests | mean latency {:.3}s | mean live {:.1} \
+                 | mean s {:.2} | {} rounds",
+                b.shard,
+                b.requests,
+                b.mean_latency,
+                b.mean_live(),
+                b.mean_s(),
+                b.rounds.len()
+            );
+        }
+    }
     out.recorder.to_csv().write_file(args.get("out")?)?;
     println!("-> {}", args.get("out")?);
     if !out.timeline.is_empty() {
@@ -456,6 +481,8 @@ fn cmd_sim(argv: Vec<String>) -> Result<()> {
         .opt("ssm", "opt-125m", "draft model profile")
         .opt("policy", "adaptive", "none | fixed:<s> | adaptive | model-based")
         .opt("mode", "static", "static | continuous")
+        .opt("workers", "1", "worker shards (> 1 = cluster DES, continuous rounds)")
+        .opt("router", "cost-aware", "round-robin | jsq | power-of-two | cost-aware")
         .opt("requests", "1000", "number of requests")
         .opt("interval", "0.3", "mean inter-arrival seconds")
         .opt("cv", "1.0", "coefficient of variation")
@@ -501,20 +528,6 @@ fn cmd_sim(argv: Vec<String>) -> Result<()> {
         seed: args.get_u64("seed")?,
     };
     let policy_spec = PolicySpec::parse(args.get("policy")?)?;
-    let mut policy: Box<dyn SpeculationPolicy> = match policy_spec {
-        PolicySpec::None => Box::new(NoSpec),
-        PolicySpec::Fixed(s) => Box::new(Fixed(s)),
-        // both LUT-seeded policies share the simulator-derived table
-        spec @ (PolicySpec::Adaptive | PolicySpec::ModelBased) => {
-            let lut = simulated_lut(&cfg, &[1, 2, 4, 8, 16], 8, 80);
-            println!("offline LUT: {}", lut.to_json().compact());
-            if spec == PolicySpec::Adaptive {
-                Box::new(LutAdaptive(lut))
-            } else {
-                Box::new(ModelBased::new(lut))
-            }
-        }
-    };
     let pattern = if args.has_flag("fig6") {
         TrafficPattern::fig6()
     } else {
@@ -534,6 +547,83 @@ fn cmd_sim(argv: Vec<String>) -> Result<()> {
         args.get_usize("requests")?,
         args.get_u64("seed")?,
     );
+
+    let workers = args.get_usize("workers")?;
+    if workers > 1 {
+        // cluster DES: N shards with per-shard virtual clocks and policy
+        // instances, arrivals routed by the chosen strategy
+        if mode == SchedulingMode::Static {
+            log_info!("sim: cluster shards always run continuous rounds (--mode ignored)");
+        }
+        let router_spec = RouterSpec::parse(args.get("router")?)?;
+        let lut = match policy_spec {
+            PolicySpec::Adaptive | PolicySpec::ModelBased => {
+                let lut = simulated_lut(&cfg, &[1, 2, 4, 8, 16], 8, 80);
+                println!("offline LUT: {}", lut.to_json().compact());
+                Some(lut)
+            }
+            _ => None,
+        };
+        let mut policies = replicate_policies(&policy_spec, lut.as_ref(), workers)?;
+        let mut router = build_router(router_spec, args.get_u64("seed")?);
+        let report = simulate_trace_cluster(&cfg, &mut policies, router.as_mut(), &trace);
+        let s = report.recorder.summary();
+        let (p50, p90, p99) = report.recorder.percentiles();
+        println!(
+            "{} on {} | {} x{workers} | router {} | {} requests | latency mean {:.3}s \
+             p50 {:.3}s p90 {:.3}s p99 {:.3}s | {:.2} ms/token",
+            llm.name,
+            gpu.name,
+            policy_spec.label(),
+            report.router,
+            s.n,
+            s.mean,
+            p50,
+            p90,
+            p99,
+            report.recorder.mean_per_token_latency() * 1e3
+        );
+        let counts = report.shard_requests();
+        for (k, rounds) in report.shard_rounds.iter().enumerate() {
+            let mean_live = rounds.iter().map(|e| e.live as f64).sum::<f64>()
+                / rounds.len().max(1) as f64;
+            let mean_s = rounds.iter().map(|e| e.s as f64).sum::<f64>()
+                / rounds.len().max(1) as f64;
+            println!(
+                "  shard {k} | {:>5} requests | {:>6} rounds | mean live {mean_live:.1} \
+                 | mean s {mean_s:.2}",
+                counts[k],
+                rounds.len()
+            );
+        }
+        report.recorder.to_csv().write_file(args.get("out")?)?;
+        println!("-> {} (per-request, shard column)", args.get("out")?);
+        // per-shard round timelines: one file per shard, derived from
+        // the --rounds-out path
+        let rounds_out = args.get("rounds-out")?;
+        let stem = rounds_out.strip_suffix(".csv").unwrap_or(rounds_out);
+        for (k, rounds) in report.shard_rounds.iter().enumerate() {
+            let path = format!("{stem}.shard{k}.csv");
+            specbatch::metrics::rounds_to_csv(rounds).write_file(&path)?;
+            println!("rounds (shard {k}) -> {path}");
+        }
+        return Ok(());
+    }
+
+    let mut policy: Box<dyn SpeculationPolicy> = match policy_spec {
+        PolicySpec::None => Box::new(NoSpec),
+        PolicySpec::Fixed(s) => Box::new(Fixed(s)),
+        // both LUT-seeded policies share the simulator-derived table
+        spec @ (PolicySpec::Adaptive | PolicySpec::ModelBased) => {
+            let lut = simulated_lut(&cfg, &[1, 2, 4, 8, 16], 8, 80);
+            println!("offline LUT: {}", lut.to_json().compact());
+            if spec == PolicySpec::Adaptive {
+                Box::new(LutAdaptive(lut))
+            } else {
+                Box::new(ModelBased::new(lut))
+            }
+        }
+    };
     let (rec, rounds) = match mode {
         SchedulingMode::Static => (simulate_trace(&cfg, policy.as_mut(), &trace), Vec::new()),
         SchedulingMode::Continuous => {

@@ -25,6 +25,8 @@ pub struct RequestRecord {
     pub batch: usize,
     /// speculation length used for (the first round of) its batch
     pub spec_len: usize,
+    /// worker shard that served it (0 on the single-worker paths)
+    pub shard: usize,
 }
 
 impl RequestRecord {
@@ -88,6 +90,30 @@ impl LatencyRecorder {
         )
     }
 
+    /// Mean per-token request latency: each request's end-to-end latency
+    /// (queueing included) divided by its generated tokens, averaged over
+    /// requests — the cluster routing comparison metric.
+    pub fn mean_per_token_latency(&self) -> f64 {
+        if self.records.is_empty() {
+            return f64::NAN;
+        }
+        self.records
+            .iter()
+            .map(|r| r.latency() / r.tokens.max(1) as f64)
+            .sum::<f64>()
+            / self.records.len() as f64
+    }
+
+    /// Requests served per shard, indexed 0..=max shard id seen.
+    pub fn per_shard_counts(&self) -> Vec<usize> {
+        let n = self.records.iter().map(|r| r.shard + 1).max().unwrap_or(0);
+        let mut counts = vec![0usize; n];
+        for r in &self.records {
+            counts[r.shard] += 1;
+        }
+        counts
+    }
+
     /// Generated tokens per second of span (first send -> last finish).
     pub fn throughput_tokens_per_s(&self) -> f64 {
         if self.records.is_empty() {
@@ -118,6 +144,7 @@ impl LatencyRecorder {
             "tokens",
             "batch",
             "spec_len",
+            "shard",
         ]);
         let mut sorted = self.records.clone();
         sorted.sort_by(|a, b| a.sent_at.partial_cmp(&b.sent_at).unwrap());
@@ -132,6 +159,7 @@ impl LatencyRecorder {
                 r.tokens.to_string(),
                 r.batch.to_string(),
                 r.spec_len.to_string(),
+                r.shard.to_string(),
             ]);
         }
         csv
@@ -226,6 +254,7 @@ mod tests {
             tokens: 10,
             batch: 2,
             spec_len: 3,
+            shard: 0,
         }
     }
 
@@ -249,6 +278,19 @@ mod tests {
         assert!((rec_.throughput_tokens_per_s() - 20.0 / 3.0).abs() < 1e-12);
         let (p50, p90, p99) = rec_.percentiles();
         assert!(p50 <= p90 && p90 <= p99);
+        // per-token: latencies 1.0 and 2.0 over 10 tokens each
+        assert!((rec_.mean_per_token_latency() - 0.15).abs() < 1e-12);
+    }
+
+    #[test]
+    fn per_shard_counts_index_by_shard_id() {
+        let mut rec_ = LatencyRecorder::new();
+        rec_.push(rec(1, 0.0, 0.0, 1.0)); // shard 0
+        let mut r2 = rec(2, 1.0, 1.5, 3.0);
+        r2.shard = 2;
+        rec_.push(r2);
+        assert_eq!(rec_.per_shard_counts(), vec![1, 0, 1]);
+        assert!(LatencyRecorder::new().per_shard_counts().is_empty());
     }
 
     #[test]

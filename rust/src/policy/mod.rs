@@ -47,6 +47,17 @@ const MAX_SOLVE_S: usize = 12;
 /// amortized to every Nth observation.
 const ACCEPT_REFIT_EVERY: usize = 4;
 
+/// EWMA rate of the CUSUM detector's residual-variance estimate: slow
+/// enough that a changepoint raises the statistic long before the
+/// yardstick absorbs it (~50 rounds to adapt).
+const CUSUM_VAR_EWMA: f64 = 0.02;
+
+/// Probe cadence while re-identifying after a CUSUM flush: at one sample
+/// per round (live = 1) the flushed window needs `s >= 2` samples before
+/// the Eq. 5 curve has two points again, and the normal 1-in-16 probes
+/// would starve the refit long enough for the stale fit to re-alarm.
+const FLUSH_REPROBE_EVERY: usize = 4;
+
 /// Everything a policy may learn from one completed decode round.
 #[derive(Debug, Clone)]
 pub struct RoundFeedback {
@@ -81,6 +92,16 @@ pub trait SpeculationPolicy {
     /// Whether the policy can ever speculate (gates the SSM prefill).
     fn wants_speculation(&self) -> bool {
         true
+    }
+
+    /// Predicted per-token request latency (seconds) a batch of `live`
+    /// requests would see under this policy's current model of the world,
+    /// or `None` when the policy has no such model (static policies, or
+    /// an online policy that is still cold).  The cluster's cost-aware
+    /// router ([`crate::cluster`]) consults this to place new requests on
+    /// the shard where they hurt least.
+    fn predict_token_time(&self, _live: usize) -> Option<f64> {
+        None
     }
 
     fn label(&self) -> String;
@@ -162,6 +183,15 @@ pub struct ModelBasedConfig {
     /// every Nth round at a bucket probes `max(s + 1, 2)` (0 disables
     /// probing)
     pub explore_every: usize,
+    /// CUSUM drift detector slack per round, in units of the running
+    /// residual std (the normalized mean shift the detector deliberately
+    /// ignores); see `cusum_h`
+    pub cusum_k: f64,
+    /// CUSUM alarm threshold in residual-std units: when the two-sided
+    /// statistic over normalized per-round acceptance residuals crosses
+    /// it, the acceptance window is flushed so the next refit sees only
+    /// post-changepoint samples (0 disables drift detection)
+    pub cusum_h: f64,
 }
 
 impl Default for ModelBasedConfig {
@@ -173,6 +203,8 @@ impl Default for ModelBasedConfig {
             min_cost_points: 6,
             hysteresis: 0.02,
             explore_every: 16,
+            cusum_k: 0.5,
+            cusum_h: 12.0,
         }
     }
 }
@@ -197,6 +229,18 @@ pub struct ModelBased {
     cost_fit: BTreeMap<usize, StepCostModel>,
     /// total observations (amortizes the acceptance refit)
     observes: usize,
+    /// two-sided CUSUM statistics over normalized per-round acceptance
+    /// residuals
+    cusum_pos: f64,
+    cusum_neg: f64,
+    /// slow EWMA of the squared per-round residual (the normalizing
+    /// variance; None until the first residual)
+    resid_var: Option<f64>,
+    /// a flush happened and the acceptance fit has not refit since:
+    /// probe at the escalated cadence until it does
+    flush_reprobe: bool,
+    /// acceptance-window flushes triggered by the CUSUM detector
+    drift_flushes: usize,
 }
 
 impl ModelBased {
@@ -215,6 +259,11 @@ impl ModelBased {
             acceptance: None,
             cost_fit: BTreeMap::new(),
             observes: 0,
+            cusum_pos: 0.0,
+            cusum_neg: 0.0,
+            resid_var: None,
+            flush_reprobe: false,
+            drift_flushes: 0,
         }
     }
 
@@ -253,6 +302,11 @@ impl ModelBased {
     /// Committed choice for a bucket (None before the first solve).
     pub fn committed_choice(&self, bucket: usize) -> Option<usize> {
         self.current.get(&bucket).copied()
+    }
+
+    /// Acceptance-window flushes the CUSUM changepoint detector fired.
+    pub fn drift_flushes(&self) -> usize {
+        self.drift_flushes
     }
 
     /// The step-cost fit serving a bucket: exact hit, else the nearest
@@ -322,6 +376,8 @@ impl ModelBased {
                 // to the cap.  Keep the previous fit instead.
                 if fit.is_sublinear() {
                     self.acceptance = Some(fit);
+                    // the fit now reflects the post-flush window
+                    self.flush_reprobe = false;
                 }
             }
         }
@@ -372,6 +428,66 @@ impl ModelBased {
         );
     }
 
+    /// Two-sided CUSUM over **normalized** per-round acceptance
+    /// residuals: the round's mean accepted count minus what the current
+    /// fit predicts at the `s` the round used, divided by a slow running
+    /// estimate of the residual std (residual variance scales with both
+    /// the batch size and the acceptance process, so an un-normalized
+    /// statistic either false-alarms at small batch or goes deaf at
+    /// large).  An alarm means the acceptance process shifted faster
+    /// than the sliding window can track (a workload change, a draft
+    /// model gone stale), so the stale window is **flushed**: the
+    /// previous fit keeps serving until `min_acceptance_samples`
+    /// post-changepoint samples justify a fresh one, cutting
+    /// re-convergence from a full window turnover (`acceptance_window`
+    /// samples) to a warmup (`min_acceptance_samples`).
+    fn cusum_step(&mut self, fb: &RoundFeedback) {
+        if self.cfg.cusum_h <= 0.0 || fb.s == 0 || fb.accepted.is_empty() {
+            return;
+        }
+        // residuals need a reference model; while cold the window is all
+        // post-start data anyway
+        let Some(acc) = self.acceptance else {
+            return;
+        };
+        // hold the detector while the window is below the refit
+        // threshold: right after a flush the serving fit is still the
+        // pre-changepoint one, and accumulating its (large) residuals
+        // would re-alarm before the window can ever refill — at one
+        // sample per round that loop starves the refit forever
+        if self.accept_samples.len() < self.cfg.min_acceptance_samples {
+            return;
+        }
+        let observed = fb.accepted.iter().map(|&a| a as f64).sum::<f64>()
+            / fb.accepted.len() as f64;
+        let expected = acc.l(fb.s as f64).min(fb.s as f64);
+        let r = observed - expected;
+        let Some(var) = self.resid_var else {
+            // the first residual lands right after the fit installed and
+            // is often near zero; floor the initial variance at a sane
+            // acceptance-noise prior (σ = 0.2 drafts) so one lucky round
+            // cannot make every ordinary residual look like an alarm
+            self.resid_var = Some((r * r).max(0.04));
+            return;
+        };
+        let sigma = var.sqrt().max(0.05);
+        let z = r / sigma;
+        self.cusum_pos = (self.cusum_pos + z - self.cfg.cusum_k).max(0.0);
+        self.cusum_neg = (self.cusum_neg - z - self.cfg.cusum_k).max(0.0);
+        let alarm =
+            self.cusum_pos > self.cfg.cusum_h || self.cusum_neg > self.cfg.cusum_h;
+        // the variance EWMA updates after the decision, so a shift
+        // inflates the statistic before it inflates the yardstick
+        self.resid_var = Some(var + CUSUM_VAR_EWMA * (r * r - var));
+        if alarm {
+            self.accept_samples.clear();
+            self.cusum_pos = 0.0;
+            self.cusum_neg = 0.0;
+            self.flush_reprobe = true;
+            self.drift_flushes += 1;
+        }
+    }
+
     /// Re-solve the bucket's `s_opt` and commit it through hysteresis.
     fn update_choice(&mut self, bucket: usize) {
         let Some(acceptance) = self.acceptance else {
@@ -417,8 +533,14 @@ impl SpeculationPolicy for ModelBased {
             },
         };
         let rounds = self.rounds_seen.get(&bucket).copied().unwrap_or(0);
-        let probe = self.cfg.explore_every > 0
-            && rounds % self.cfg.explore_every == self.cfg.explore_every - 1;
+        // escalated cadence while re-identifying after a CUSUM flush
+        // (probing stays off if the user disabled it entirely)
+        let every = if self.flush_reprobe && self.cfg.explore_every > 0 {
+            FLUSH_REPROBE_EVERY.min(self.cfg.explore_every)
+        } else {
+            self.cfg.explore_every
+        };
+        let probe = every > 0 && rounds % every == every - 1;
         let s = if probe {
             // probes reach for s = 2 so the Eq. 4 curve keeps >= 2
             // points even from a committed s of 0/1 (a bucket parked at
@@ -435,6 +557,27 @@ impl SpeculationPolicy for ModelBased {
             base
         };
         s.min(max_s)
+    }
+
+    /// Per-token latency prediction from the current fits at the bucket a
+    /// batch of `live` requests would execute in, evaluated at the `s`
+    /// the policy would commit there — the cost-aware router's signal.
+    /// `None` while either fit is cold (the router falls back to JSQ).
+    fn predict_token_time(&self, live: usize) -> Option<f64> {
+        let bucket = ModelBased::bucket_of(live);
+        let acceptance = self.acceptance?;
+        let cost = *self.cost_for(bucket)?;
+        let model = TotalTimeModel { acceptance, cost };
+        let s = match self.current.get(&bucket) {
+            Some(&s) => s,
+            None => model.s_opt(MAX_SOLVE_S),
+        };
+        let t = if s == 0 {
+            model.time_per_token_nospec()
+        } else {
+            model.time_per_token(s as f64)
+        };
+        t.is_finite().then_some(t)
     }
 
     fn observe(&mut self, fb: &RoundFeedback) {
@@ -456,6 +599,7 @@ impl SpeculationPolicy for ModelBased {
             while self.accept_samples.len() > self.cfg.acceptance_window {
                 self.accept_samples.pop_front();
             }
+            self.cusum_step(fb);
         }
         if fb.round_time.is_finite() && fb.round_time > 0.0 {
             let pts = self.cost_points.entry(cost_bucket).or_default();
@@ -514,6 +658,7 @@ impl SpeculationPolicy for ModelBased {
             ("acceptance", acceptance),
             ("buckets", buckets),
             ("chosen_s", chosen),
+            ("drift_flushes", Json::Num(self.drift_flushes as f64)),
         ]))
     }
 }
@@ -774,6 +919,92 @@ mod tests {
         // an un-fitted in-between bucket resolves to a fitted neighbour
         let s_mid = p.choose(4, 8);
         assert!(s_mid <= s_small && s_mid >= s_big);
+    }
+
+    /// Round feedback drawn from one process, then an abrupt collapse:
+    /// the CUSUM detector must stay quiet while the process is
+    /// stationary and flush the acceptance window soon after the shift.
+    #[test]
+    fn cusum_flushes_on_an_acceptance_collapse_and_not_before() {
+        let good = AcceptanceProcess::PowerLaw { c: 0.9, gamma: 0.8 };
+        let bad = AcceptanceProcess::PowerLaw {
+            c: 0.3,
+            gamma: 0.05,
+        };
+        let mut rng = Pcg64::new(0xD21F7);
+        let mut p = ModelBased::new(lut(&[(1, 6), (8, 3)]));
+        let run = |p: &mut ModelBased,
+                   rng: &mut Pcg64,
+                   acc: &AcceptanceProcess,
+                   rounds: usize| {
+            for _ in 0..rounds {
+                let s = p.choose(8, 8).max(1);
+                let accepted: Vec<u32> =
+                    (0..8).map(|_| acc.sample(s, rng) as u32).collect();
+                let committed: usize =
+                    accepted.iter().map(|&a| a as usize + 1).sum();
+                p.observe(&RoundFeedback {
+                    live: 8,
+                    width: 8,
+                    s,
+                    accepted,
+                    committed,
+                    round_time: 0.004 * s as f64 + 0.03,
+                });
+            }
+        };
+        run(&mut p, &mut rng, &good, 200);
+        let warm_flushes = p.drift_flushes();
+        run(&mut p, &mut rng, &good, 200);
+        assert_eq!(
+            p.drift_flushes(),
+            warm_flushes,
+            "stationary feedback must not trigger the detector"
+        );
+        run(&mut p, &mut rng, &bad, 40);
+        assert!(
+            p.drift_flushes() > warm_flushes,
+            "an abrupt acceptance collapse must flush the window"
+        );
+        // the flush emptied the stale window: what remains accumulated
+        // after the changepoint
+        assert!(p.accept_samples.len() < 8 * 40);
+    }
+
+    #[test]
+    fn predict_token_time_cold_then_warm_and_monotone_in_load() {
+        let p = ModelBased::new(lut(&[(1, 3)]));
+        assert!(p.predict_token_time(4).is_none(), "cold policy predicts nothing");
+
+        let acceptance = AcceptanceModel {
+            c: 0.9,
+            gamma: 0.548,
+            r2: 1.0,
+        };
+        let costs = [
+            StepCostModel {
+                batch: 1,
+                alpha: 0.0004,
+                beta: 0.03,
+                t_ssm: 0.0,
+                r2: 1.0,
+            },
+            StepCostModel {
+                batch: 16,
+                alpha: 0.02,
+                beta: 0.03,
+                t_ssm: 0.0,
+                r2: 1.0,
+            },
+        ];
+        let p = ModelBased::with_models(lut(&[(1, 1)]), acceptance, &costs);
+        let t1 = p.predict_token_time(1).expect("warm");
+        let t16 = p.predict_token_time(16).expect("warm");
+        assert!(t1 > 0.0);
+        assert!(
+            t16 > t1,
+            "a heavier batch must predict a worse per-token time: {t1} vs {t16}"
+        );
     }
 
     #[test]

@@ -32,7 +32,9 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Result};
 
 use crate::batcher::{BatchRequest, BatcherConfig, ContinuousBatcher};
-use crate::config::PolicySpec;
+use crate::cluster::server::ShardGauge;
+use crate::cluster::ShardBreakdown;
+use crate::config::{PolicySpec, RouterSpec};
 use crate::engine::{Engine, EngineConfig};
 use crate::log_info;
 use crate::metrics::{LatencyRecorder, RequestRecord, RoundEvent};
@@ -77,6 +79,12 @@ pub struct ServerConfig {
     /// profiling sample size when the policy is adaptive without a LUT
     pub profile_prompts: usize,
     pub mode: SchedulingMode,
+    /// worker shards serving in parallel; > 1 selects the threaded
+    /// cluster path (`crate::cluster::server`, stub backend, continuous
+    /// mode), each shard owning its own engine + batcher + policy
+    pub workers: usize,
+    /// how the dispatcher routes arrivals across shards when `workers > 1`
+    pub router: RouterSpec,
 }
 
 impl Default for ServerConfig {
@@ -87,6 +95,8 @@ impl Default for ServerConfig {
             engine: EngineConfig::default(),
             profile_prompts: 32,
             mode: SchedulingMode::Static,
+            workers: 1,
+            router: RouterSpec::RoundRobin,
         }
     }
 }
@@ -184,6 +194,7 @@ pub fn spawn_server(
                 resp_tx,
                 lut_tx,
                 report_tx,
+                None,
             )
         })
         .expect("spawning server thread");
@@ -248,7 +259,7 @@ fn resolve_policy(
 }
 
 #[allow(clippy::too_many_arguments)]
-fn worker(
+pub(crate) fn worker(
     backend: Backend,
     cfg: ServerConfig,
     policy_spec: PolicySpec,
@@ -258,6 +269,7 @@ fn worker(
     resp_tx: Sender<ServerResponse>,
     lut_tx: Sender<Option<Lut>>,
     report_tx: Sender<(Vec<RoundEvent>, Option<Json>)>,
+    gauge: Option<std::sync::Arc<ShardGauge>>,
 ) -> Result<()> {
     // announce readiness, serve, deliver timeline + model snapshot —
     // shared by both backends once the engine and policy are resolved
@@ -268,7 +280,15 @@ fn worker(
         lut_tx
             .send(lut_used)
             .map_err(|_| anyhow!("server handle dropped before ready"))?;
-        let timeline = serve_loop(engine, &cfg, policy.as_mut(), epoch, &req_rx, &resp_tx)?;
+        let timeline = serve_loop(
+            engine,
+            &cfg,
+            policy.as_mut(),
+            epoch,
+            &req_rx,
+            &resp_tx,
+            gauge.as_deref(),
+        )?;
         let _ = report_tx.send((timeline, policy.snapshot()));
         Ok(())
     };
@@ -312,6 +332,7 @@ fn worker(
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn serve_loop(
     engine: &mut Engine<'_>,
     cfg: &ServerConfig,
@@ -319,11 +340,12 @@ fn serve_loop(
     epoch: Instant,
     req_rx: &Receiver<ServerMsg>,
     resp_tx: &Sender<ServerResponse>,
+    gauge: Option<&ShardGauge>,
 ) -> Result<Vec<RoundEvent>> {
     match cfg.mode {
         SchedulingMode::Static => serve_static(engine, cfg, policy, epoch, req_rx, resp_tx),
         SchedulingMode::Continuous => {
-            serve_continuous(engine, cfg, policy, epoch, req_rx, resp_tx)
+            serve_continuous(engine, cfg, policy, epoch, req_rx, resp_tx, gauge)
         }
     }
 }
@@ -427,6 +449,9 @@ fn to_response(fin: crate::batcher::FinishedRequest) -> ServerResponse {
 
 /// The continuous loop: one batcher round per iteration, draining the
 /// inbound channel between rounds so arrivals admit at round boundaries.
+/// A cluster worker passes a [`ShardGauge`] so the dispatcher's router
+/// can see this shard's load and fitted marginal cost between rounds.
+#[allow(clippy::too_many_arguments)]
 fn serve_continuous(
     engine: &mut Engine<'_>,
     cfg: &ServerConfig,
@@ -434,11 +459,22 @@ fn serve_continuous(
     epoch: Instant,
     req_rx: &Receiver<ServerMsg>,
     resp_tx: &Sender<ServerResponse>,
+    gauge: Option<&ShardGauge>,
 ) -> Result<Vec<RoundEvent>> {
     let mut batcher = ContinuousBatcher::new(BatcherConfig {
         max_batch: cfg.max_batch,
         max_new_tokens: cfg.max_new_tokens,
     });
+    let publish = |batcher: &ContinuousBatcher, policy: &dyn SpeculationPolicy| {
+        if let Some(g) = gauge {
+            let load = batcher.live_rows() + batcher.queue_len();
+            g.publish(
+                batcher.live_rows(),
+                batcher.queue_len(),
+                crate::cluster::marginal_cost(policy, load, cfg.max_batch),
+            );
+        }
+    };
     let mut shutdown = false;
     'serve: while !shutdown {
         // drain arrivals that showed up during the last round
@@ -460,6 +496,7 @@ fn serve_continuous(
                 }
             }
         }
+        publish(&batcher, &*policy);
         if !batcher.has_work() {
             if shutdown {
                 break;
@@ -483,6 +520,7 @@ fn serve_continuous(
                 break 'serve;
             }
         }
+        publish(&batcher, &*policy);
     }
     // finish in-flight work after a shutdown request
     while batcher.has_work() {
@@ -521,16 +559,21 @@ pub fn run_client(trace: &Trace, requests: &Sender<ServerMsg>, epoch: Instant) -
 /// Everything one client/server experiment produces: per-request latency
 /// records, the offline LUT the policy was seeded with (adaptive /
 /// model-based), the server's per-round timeline, and — for online
-/// policies — the fitted-model snapshot at shutdown.
+/// policies — the fitted-model snapshot at shutdown.  Cluster runs
+/// (`workers > 1`) leave `timeline`/`policy_snapshot` empty and report
+/// per-shard breakdowns instead.
 pub struct ExperimentOutcome {
     pub recorder: LatencyRecorder,
     pub lut: Option<Lut>,
     pub timeline: Vec<RoundEvent>,
     pub policy_snapshot: Option<Json>,
+    /// per-shard breakdowns (empty on the single-worker paths)
+    pub shards: Vec<ShardBreakdown>,
 }
 
 /// Run one full client/server experiment: spawn server, wait until ready,
-/// replay the trace, collect all responses.
+/// replay the trace, collect all responses.  `cfg.workers > 1` selects
+/// the threaded cluster path (stub backend, continuous mode).
 pub fn run_experiment(
     backend: Backend,
     cfg: ServerConfig,
@@ -538,6 +581,19 @@ pub fn run_experiment(
     lut: Option<Lut>,
     trace: &Trace,
 ) -> Result<ExperimentOutcome> {
+    if cfg.workers > 1 {
+        return match backend {
+            Backend::Stub(spec) => {
+                crate::cluster::server::run_cluster_experiment(spec, cfg, policy, lut, trace)
+            }
+            #[cfg(feature = "pjrt")]
+            Backend::Artifacts(_) => bail!(
+                "multi-worker serving is stub-only for now: PJRT handles are \
+                 not Send, so each artifact shard needs its own runtime \
+                 (run with the stub backend or workers = 1)"
+            ),
+        };
+    }
     let epoch = Instant::now();
     let server = spawn_server(backend, cfg, policy, lut, epoch);
     let lut_used = server.wait_ready(Duration::from_secs(600))?;
@@ -564,6 +620,7 @@ pub fn run_experiment(
             tokens: resp.tokens.len(),
             batch: resp.batch,
             spec_len: resp.spec_len,
+            shard: 0,
         });
     }
     client
@@ -575,5 +632,6 @@ pub fn run_experiment(
         lut: lut_used,
         timeline,
         policy_snapshot,
+        shards: Vec::new(),
     })
 }

@@ -211,6 +211,7 @@ pub fn simulate_trace(
                 tokens: cfg.max_new_tokens,
                 batch: batch.len(),
                 spec_len,
+                shard: 0,
             });
         }
         free_at = finish;
@@ -350,6 +351,7 @@ pub fn simulate_trace_continuous(
                     tokens: cfg.max_new_tokens,
                     batch: row.batch_at_admit,
                     spec_len: row.spec_at_admit,
+                    shard: 0,
                 });
             } else {
                 i += 1;

@@ -238,6 +238,84 @@ mod tests {
         );
     }
 
+    /// Same seed -> the identical schedule including prompt assignment;
+    /// the paper replays one sequence against every comparison point.
+    #[test]
+    fn deterministic_prompts_and_ids_per_seed() {
+        let p = TrafficPattern::fig6();
+        let a = Trace::generate(&p, &pool(), 64, 5);
+        let b = Trace::generate(&p, &pool(), 64, 5);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.items.iter().zip(&b.items) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.send_at, y.send_at);
+            assert_eq!(x.prompt.ids, y.prompt.ids);
+        }
+        // ids are the positional sequence
+        assert_eq!(
+            a.items.iter().map(|i| i.id).collect::<Vec<_>>(),
+            (0..64).collect::<Vec<u64>>()
+        );
+    }
+
+    /// `time_scaled` preserves arrival order (monotone in the original
+    /// send times) for any positive factor, and scales exactly.
+    #[test]
+    fn time_scaled_is_monotone_and_exact() {
+        let p = TrafficPattern::Stationary {
+            interval: 0.3,
+            cv: 2.0,
+        };
+        let t = Trace::generate(&p, &pool(), 200, 11);
+        for factor in [0.25, 1.0, 3.0] {
+            let scaled = t.time_scaled(factor);
+            assert_eq!(scaled.len(), t.len());
+            for w in scaled.items.windows(2) {
+                assert!(
+                    w[1].send_at >= w[0].send_at,
+                    "scaling by {factor} broke ordering"
+                );
+            }
+            for (orig, s) in t.items.iter().zip(&scaled.items) {
+                assert!((s.send_at - orig.send_at * factor).abs() < 1e-12);
+                assert_eq!(s.id, orig.id);
+            }
+        }
+    }
+
+    /// The alternating pattern switches exactly at phase boundaries and
+    /// is constant inside each phase (piecewise continuity: approaching a
+    /// boundary from the left holds the old interval, the boundary itself
+    /// starts the new one, and the cycle repeats with period 2x).
+    #[test]
+    fn interval_at_is_piecewise_constant_across_phase_boundaries() {
+        let p = TrafficPattern::fig6();
+        let eps = 1e-9;
+        // inside phases: constant
+        assert_eq!(p.interval_at(0.0), 0.2);
+        assert_eq!(p.interval_at(25.0), 0.2);
+        assert_eq!(p.interval_at(75.0), 1.0);
+        // left limit vs boundary value at every flip in two full cycles
+        for boundary in [50.0, 100.0, 150.0, 200.0] {
+            let left = p.interval_at(boundary - eps);
+            let at = p.interval_at(boundary);
+            assert_ne!(left, at, "no switch at t={boundary}");
+            assert_eq!(p.interval_at(boundary + eps), at, "unstable just past {boundary}");
+        }
+        // periodicity: shifted by a full cycle the schedule repeats
+        for t in [0.0, 10.0, 49.0, 50.0, 99.0] {
+            assert_eq!(p.interval_at(t), p.interval_at(t + 100.0));
+        }
+        // stationary patterns are constant everywhere
+        let s = TrafficPattern::Stationary {
+            interval: 0.7,
+            cv: 1.0,
+        };
+        for t in [0.0, 49.9, 50.0, 1e6] {
+            assert_eq!(s.interval_at(t), 0.7);
+        }
+    }
+
     #[test]
     fn time_scaling() {
         let p = TrafficPattern::Stationary {

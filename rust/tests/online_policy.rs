@@ -14,7 +14,9 @@
 //! every batch size.  Only the online policy tracks both regimes.
 
 use specbatch::dataset::Prompt;
-use specbatch::policy::{Fixed, LutAdaptive, ModelBased, NoSpec, SpeculationPolicy};
+use specbatch::policy::{
+    Fixed, LutAdaptive, ModelBased, ModelBasedConfig, NoSpec, SpeculationPolicy,
+};
 use specbatch::simulator::{
     oracle_s_opt, simulate_trace_continuous, simulated_lut, AcceptanceDrift, AcceptanceProcess,
     CostModel, GpuProfile, ModelProfile, SimConfig,
@@ -161,5 +163,86 @@ fn model_based_reconverges_to_the_oracle_after_the_drift() {
         acc.l(1.0) < 0.8,
         "post-drift fitted l(1) = {:.3} should be far below the pre-drift 0.9",
         acc.l(1.0)
+    );
+}
+
+/// The CUSUM satellite payoff: at SMALL batch the sliding acceptance
+/// window turns over one sample per round, so after a drift the passive
+/// fits stay contaminated for hundreds of rounds — the changepoint
+/// detector flushes the window and re-converges in a warmup instead.
+/// Sparse traffic (live mostly 1) + the same drift mechanism, comparing
+/// the detector on (default) against off (`cusum_h = 0`): in the 40
+/// virtual seconds after the drift the detector-on policy tracks the
+/// post-drift oracle clearly more often.
+#[test]
+fn cusum_flush_reconverges_faster_than_the_passive_window_at_small_batch() {
+    const SPARSE_DRIFT_AT: f64 = 120.0;
+    let mut cfg = drift_cfg();
+    cfg.drift = Some(AcceptanceDrift {
+        at: SPARSE_DRIFT_AT,
+        after: phase_b(),
+    });
+    let lut = stale_lut(&cfg);
+    let pool = vec![Prompt {
+        ids: vec![1; 16],
+        text: String::new(),
+    }];
+    let trace = Trace::generate(
+        &TrafficPattern::Stationary {
+            interval: 1.2,
+            cv: 1.0,
+        },
+        &pool,
+        400,
+        42,
+    );
+
+    let frac_tracking = |policy: &mut ModelBased| -> (f64, f64) {
+        let (rec, rounds) = simulate_trace_continuous(&cfg, policy, &trace);
+        assert_eq!(rec.len(), trace.len());
+        let window: Vec<_> = rounds
+            .iter()
+            .filter(|e| (SPARSE_DRIFT_AT..SPARSE_DRIFT_AT + 40.0).contains(&e.t))
+            .collect();
+        assert!(window.len() >= 200, "too few post-drift rounds: {}", window.len());
+        let within = window
+            .iter()
+            .filter(|e| {
+                let oracle = oracle_s_opt(&cfg, &phase_b(), e.live, 8, 80) as i64;
+                (e.s as i64 - oracle).abs() <= 1
+            })
+            .count();
+        (within as f64 / window.len() as f64, rec.summary().mean)
+    };
+
+    let mut with = ModelBased::new(lut.clone());
+    let (frac_with, mean_with) = frac_tracking(&mut with);
+    let mut without = ModelBased::with_config(
+        lut,
+        ModelBasedConfig {
+            cusum_h: 0.0, // detector off: the passive window only
+            ..ModelBasedConfig::default()
+        },
+    );
+    let (frac_without, mean_without) = frac_tracking(&mut without);
+
+    assert!(
+        with.drift_flushes() >= 1,
+        "the detector must fire on the drift"
+    );
+    assert_eq!(without.drift_flushes(), 0, "disabled detector must not fire");
+    assert!(
+        frac_with >= frac_without + 0.05,
+        "flush must re-converge clearly faster: with {frac_with:.2} vs \
+         without {frac_without:.2}"
+    );
+    assert!(
+        frac_with >= 0.85,
+        "detector-on tracking too weak right after the drift: {frac_with:.2}"
+    );
+    // the faster model pivot must not cost latency overall
+    assert!(
+        mean_with <= mean_without * 1.05,
+        "cusum flushes hurt end-to-end latency: {mean_with:.3} vs {mean_without:.3}"
     );
 }
