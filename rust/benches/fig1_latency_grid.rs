@@ -56,6 +56,8 @@ fn sim_grid() {
             max_batch: 32,
             max_new_tokens: 128,
             host_overhead: 0.2e-3,
+            kv_layout: specbatch::kvcache::KvLayout::Paged,
+            kv_block: specbatch::kvcache::DEFAULT_BLOCK_SIZE,
             seed: 1,
         };
         let mut rng = Pcg64::new(42);

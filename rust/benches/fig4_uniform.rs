@@ -140,6 +140,8 @@ fn sim() {
         max_batch: 32,
         max_new_tokens: 128,
         host_overhead: 0.2e-3,
+        kv_layout: specbatch::kvcache::KvLayout::Paged,
+        kv_block: specbatch::kvcache::DEFAULT_BLOCK_SIZE,
         seed: 7,
     };
     let lut = specbatch::simulator::simulated_lut(&cfg, &[1, 2, 4, 8, 16, 32], 8, 80);

@@ -36,6 +36,8 @@ fn main() {
         max_batch: 16,
         max_new_tokens: 128,
         host_overhead: 0.2e-3,
+        kv_layout: specbatch::kvcache::KvLayout::Paged,
+        kv_block: specbatch::kvcache::DEFAULT_BLOCK_SIZE,
         seed: 9,
     };
     let lut = simulated_lut(&cfg, &[1, 2, 4, 8, 16], 8, 80);

@@ -13,7 +13,10 @@
 //!   boundary instead of waiting for the whole batch to complete;
 //! * **reshape** — when queue pressure outgrows the current bucket, the
 //!   epoch is re-opened at the next larger bucket and unfinished rows are
-//!   carried over (their contexts re-ingested);
+//!   carried over: under the dense KV layout their contexts are
+//!   re-ingested through chunked verify calls (O(context)), under the
+//!   paged layout ([`crate::kvcache`]) their block chains are remapped
+//!   into the new epoch's tables (O(1), zero token re-ingestion);
 //! * **adapt** — every round re-queries the [`SpeculationPolicy`] with
 //!   the *live* batch size and feeds the round's outcome back through
 //!   its `observe` edge, so `s` tracks load within a single epoch (the
@@ -99,6 +102,10 @@ pub struct ContinuousBatcher {
     /// per-round (t, epoch, live, queued, s) timeline for Fig. 6-style
     /// plots and the metrics CSV export
     pub timeline: Vec<RoundEvent>,
+    /// KV-transfer totals folded in from completed epochs (see
+    /// [`ContinuousBatcher::kv_transfer_totals`])
+    reingested_total: usize,
+    remapped_total: usize,
 }
 
 impl ContinuousBatcher {
@@ -109,7 +116,29 @@ impl ContinuousBatcher {
             epoch: None,
             epoch_seq: 0,
             timeline: Vec::new(),
+            reingested_total: 0,
+            remapped_total: 0,
         }
+    }
+
+    /// Lifetime `(reingested, remapped)` context-token totals across all
+    /// epochs, active one included: how many carried tokens went back
+    /// through verify calls (dense reshapes) vs were transferred by
+    /// block-table remap (paged reshapes).  The equivalence tests pin
+    /// `reingested == 0` under the paged layout.
+    pub fn kv_transfer_totals(&self) -> (usize, usize) {
+        let (mut re, mut rm) = (self.reingested_total, self.remapped_total);
+        if let Some(ep) = &self.epoch {
+            re += ep.state.stats.reingested_tokens;
+            rm += ep.state.stats.remapped_tokens;
+        }
+        (re, rm)
+    }
+
+    /// Fold a dying epoch's transfer counters into the lifetime totals.
+    fn fold_epoch_stats(&mut self, st: &crate::engine::BatchState) {
+        self.reingested_total += st.stats.reingested_tokens;
+        self.remapped_total += st.stats.remapped_tokens;
     }
 
     /// Enqueue an arrival (admitted at the next round boundary).
@@ -143,6 +172,7 @@ impl ContinuousBatcher {
         let mut finished = Vec::new();
 
         // --- retire: free capacity the moment rows finish ---
+        let mut drained = false;
         if let Some(ep) = &mut self.epoch {
             for retired in engine.retire_finished(&mut ep.state) {
                 let meta = ep.slots[retired.slot]
@@ -158,9 +188,13 @@ impl ContinuousBatcher {
                     spec_at_admit: meta.spec_at_admit,
                 });
             }
-            if !ep.state.has_live() && self.queue.is_empty() {
-                self.epoch = None;
-            }
+            drained = !ep.state.has_live() && self.queue.is_empty();
+        }
+        if drained {
+            // the epoch is over: fold its counters and return its blocks
+            let mut ep = self.epoch.take().expect("drained epoch present");
+            self.fold_epoch_stats(&ep.state);
+            engine.release_state(&mut ep.state);
         }
 
         // --- admit / reshape at the round boundary ---
@@ -174,8 +208,14 @@ impl ContinuousBatcher {
                     self.start_epoch(engine, policy, desired_bucket, now, Vec::new())?;
                 }
                 Some(bucket) if desired_bucket > bucket => {
-                    // reshape: carry unfinished rows into a larger bucket
-                    let old = self.epoch.take().expect("epoch present");
+                    // reshape: carry unfinished rows into a larger bucket.
+                    // export_rows attaches each row's KV transfer — a
+                    // reingest marker under the dense layout, ref-held
+                    // block chains under the paged one — and the old
+                    // epoch's remaining blocks go back to the pool before
+                    // the new epoch allocates (the carried chains stay
+                    // alive through the handles' refcounts)
+                    let mut old = self.epoch.take().expect("epoch present");
                     let carry: Vec<(AdmitRequest, RowMeta)> = engine
                         .export_rows(&old.state)
                         .into_iter()
@@ -186,6 +226,8 @@ impl ContinuousBatcher {
                             (req, meta)
                         })
                         .collect();
+                    self.fold_epoch_stats(&old.state);
+                    engine.release_state(&mut old.state);
                     self.start_epoch(engine, policy, desired_bucket, now, carry)?;
                 }
                 Some(_) => {
@@ -206,6 +248,7 @@ impl ContinuousBatcher {
                     s: info.s,
                     accepted: info.accepted,
                     round_cost: info.round_time,
+                    kv_blocks: ep.state.kv_blocks_in_use(),
                 });
             }
         }
@@ -257,9 +300,9 @@ impl ContinuousBatcher {
         }
 
         if !carry.is_empty() {
-            let reqs: Vec<AdmitRequest> = carry.iter().map(|(r, _)| r.clone()).collect();
-            let carried_slots = engine.admit_rows(&mut state, &reqs)?;
-            for (slot, (_, meta)) in carried_slots.into_iter().zip(carry) {
+            let (reqs, metas): (Vec<AdmitRequest>, Vec<RowMeta>) = carry.into_iter().unzip();
+            let carried_slots = engine.admit_rows(&mut state, reqs)?;
+            for (slot, meta) in carried_slots.into_iter().zip(metas) {
                 // carried rows keep their original admission metadata
                 slots[slot] = Some(meta);
             }
@@ -289,13 +332,9 @@ impl ContinuousBatcher {
         let fresh: Vec<BatchRequest> = self.queue.drain(..k).collect();
         let reqs: Vec<AdmitRequest> = fresh
             .iter()
-            .map(|r| AdmitRequest {
-                context: r.prompt.clone(),
-                prompt_len: r.prompt.len(),
-                max_new: self.cfg.max_new_tokens,
-            })
+            .map(|r| AdmitRequest::fresh(r.prompt.clone(), r.prompt.len(), self.cfg.max_new_tokens))
             .collect();
-        let slots = engine.admit_rows(&mut ep.state, &reqs)?;
+        let slots = engine.admit_rows(&mut ep.state, reqs)?;
         let live_after = ep.state.live_rows();
         let spec_now = policy.choose(
             live_after,
@@ -481,6 +520,61 @@ mod tests {
         for f in &finished {
             assert_eq!(f.tokens, chain(5 + f.id as i32, 8));
         }
+    }
+
+    /// Paged layout through the full batcher lifecycle: a reshape remaps
+    /// carried rows (zero re-ingested tokens), outputs stay lossless, and
+    /// the drained batcher leaves the engine's block pools leak-free.
+    #[test]
+    fn paged_reshape_remaps_and_leaks_nothing() {
+        use crate::kvcache::KvLayout;
+
+        let mut policy = Fixed(3);
+        let mut engine = Engine::stub(
+            StubSpec::default(),
+            EngineConfig {
+                kv_layout: KvLayout::Paged,
+                ..EngineConfig::default()
+            },
+        )
+        .unwrap();
+        let mut batcher = ContinuousBatcher::new(BatcherConfig {
+            max_batch: 8,
+            max_new_tokens: 20,
+        });
+        // one early request, then a burst while it decodes: forces a
+        // bucket reshape with a carried row, plus mid-stream retirement
+        let mut arrivals: Vec<(usize, BatchRequest)> = vec![(
+            0,
+            BatchRequest {
+                id: 0,
+                prompt: vec![5],
+                sent_at: 0.0,
+            },
+        )];
+        for i in 1..6u64 {
+            arrivals.push((
+                3,
+                BatchRequest {
+                    id: i,
+                    prompt: vec![6 + i as i32],
+                    sent_at: 1e-3,
+                },
+            ));
+        }
+        let finished = drive(&mut batcher, &mut engine, &mut policy, &mut arrivals);
+        assert_eq!(finished.len(), 6);
+        for f in &finished {
+            let start = if f.id == 0 { 5 } else { 6 + f.id as i32 };
+            assert_eq!(f.tokens, chain(start, 20), "request {} diverged", f.id);
+        }
+        let (reingested, remapped) = batcher.kv_transfer_totals();
+        assert_eq!(reingested, 0, "paged reshape must never re-ingest");
+        assert!(remapped > 0, "the reshape should have remapped a carried row");
+        let stats = engine.kv_block_stats().expect("paged engine");
+        assert!(stats.is_leak_free(), "blocks leaked: {stats:?}");
+        // the timeline recorded real block usage
+        assert!(batcher.timeline.iter().any(|e| e.kv_blocks > 0));
     }
 
     /// Scheduling is output-invariant even under the online policy: the

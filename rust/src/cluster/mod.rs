@@ -294,6 +294,8 @@ pub struct ShardBreakdown {
     pub rounds: Vec<RoundEvent>,
     /// fitted-model snapshot at shutdown (online policies only)
     pub policy_snapshot: Option<Json>,
+    /// the shard engine's KV block accounting (paged layout only)
+    pub kv_blocks: Option<crate::kvcache::KvBlockStats>,
 }
 
 impl ShardBreakdown {

@@ -296,7 +296,7 @@ pub fn run_cluster_experiment(
             Ok(r) => r?,
             Err(_) => bail!("shard {k} worker thread panicked"),
         }
-        let (rounds, policy_snapshot) = report_rx.try_recv().unwrap_or_default();
+        let report = report_rx.try_recv().unwrap_or_default();
         let served: Vec<&RequestRecord> = recorder
             .records()
             .iter()
@@ -311,20 +311,28 @@ pub fn run_cluster_experiment(
             shard: k,
             requests: served.len(),
             mean_latency,
-            rounds,
-            policy_snapshot,
+            rounds: report.timeline,
+            policy_snapshot: report.policy_snapshot,
+            kv_blocks: report.kv_blocks,
         });
     }
     for c in collectors {
         let _ = c.join();
     }
 
+    // merge the per-shard block pools so experiment-level leak checks see
+    // the whole cluster at once
+    let kv_blocks = shards
+        .iter()
+        .filter_map(|b| b.kv_blocks)
+        .reduce(|a, b| a.merged(&b));
     Ok(ExperimentOutcome {
         recorder,
         lut: lut_used,
         timeline: Vec::new(),
         policy_snapshot: None,
         shards,
+        kv_blocks,
     })
 }
 
@@ -385,6 +393,10 @@ mod tests {
             assert!(!b.rounds.is_empty(), "shard {} recorded no rounds", b.shard);
         }
         assert_eq!(out.recorder.per_shard_counts(), vec![8, 8, 8]);
+        // under the paged layout every shard pool must come back full
+        if let Some(stats) = out.kv_blocks {
+            assert!(stats.is_leak_free(), "cluster leaked blocks: {stats:?}");
+        }
     }
 
     #[test]

@@ -26,7 +26,8 @@ use std::collections::VecDeque;
 
 use crate::metrics::{LatencyRecorder, RequestRecord, RoundEvent};
 use crate::policy::{RoundFeedback, SpeculationPolicy};
-use crate::simulator::{round_cost, SimConfig};
+use crate::simulator::des::{kv_blocks_of, sim_bucket_for};
+use crate::simulator::{reshape_cost, round_cost, SimConfig};
 use crate::traffic::{Trace, TraceItem};
 use crate::util::prng::Pcg64;
 
@@ -70,6 +71,9 @@ struct Shard {
     rng: Pcg64,
     rounds: Vec<RoundEvent>,
     epoch: usize,
+    /// padded bucket of the shard's active epoch (0 = idle); growth past
+    /// it is an epoch reshape, charged per `SimConfig::kv_layout`
+    bucket: usize,
 }
 
 impl Shard {
@@ -104,6 +108,7 @@ pub fn simulate_trace_cluster(
             rng: Pcg64::with_stream(cfg.seed, 0xC1A5_7E00 + k as u64),
             rounds: Vec::new(),
             epoch: 0,
+            bucket: 0,
         })
         .collect();
     let mut recorder = LatencyRecorder::new();
@@ -178,11 +183,13 @@ fn step_shard(
             }
         }
         sh.epoch += 1;
+        sh.bucket = 0;
     }
 
     // --- admit everything due, up to the live-capacity cap ---
     let mut n_admit = 0usize;
     let mut plen_sum = 0usize;
+    let n_before = sh.live.len();
     let admit_t = sh.t;
     while let Some(item) = sh.queue.front() {
         if item.send_at > sh.t || sh.live.len() >= cfg.max_batch {
@@ -208,6 +215,18 @@ fn step_shard(
         if may_speculate {
             sh.t += cfg.ssm.t_prefill(n_admit, mean_plen);
         }
+        // epoch reshape at a bucket growth, mirroring the single-worker
+        // DES: carried rows re-ingest under Dense, remap under Paged
+        // (bucket is monotone within an epoch, like the real batcher's)
+        let want = sim_bucket_for(sh.live.len());
+        if sh.bucket != 0 && want > sh.bucket && n_before > 0 {
+            let carried: Vec<usize> = sh.live[..n_before]
+                .iter()
+                .map(|r| r.plen + r.generated)
+                .collect();
+            sh.t += reshape_cost(cfg, &carried, sh.live.len());
+        }
+        sh.bucket = sh.bucket.max(want);
         let b = sh.live.len();
         let s_now = if may_speculate { policy.choose(b, 8) } else { 0 };
         for row in sh.live.iter_mut().rev().take(n_admit) {
@@ -256,6 +275,7 @@ fn step_shard(
         s,
         accepted: accepted_total,
         round_cost: rc,
+        kv_blocks: kv_blocks_of(cfg, sh.live.iter().map(|r| r.plen + r.generated)),
     });
 
     // --- retire finished rows immediately, freeing capacity ---
@@ -285,6 +305,7 @@ mod tests {
     use crate::cluster::{build_router, replicate_policies};
     use crate::config::{PolicySpec, RouterSpec};
     use crate::dataset::Prompt;
+    use crate::kvcache::KvLayout;
     use crate::policy::Fixed;
     use crate::simulator::{
         simulate_trace_continuous, simulated_lut, CostModel, GpuProfile, ModelProfile,
@@ -429,6 +450,46 @@ mod tests {
             four < 0.7 * one,
             "4 workers ({four:.3}s) should clearly beat 1 ({one:.3}s) under load"
         );
+    }
+
+    #[test]
+    fn cluster_shards_charge_dense_reshapes_but_not_paged_ones() {
+        let trace = Trace::generate(
+            &TrafficPattern::Stationary {
+                interval: 0.04,
+                cv: 1.0,
+            },
+            &pool(),
+            200,
+            11,
+        );
+        let run = |layout: KvLayout| {
+            let cfg = SimConfig {
+                kv_layout: layout,
+                ..cfg()
+            };
+            let mut policies = fixed_policies(2, 2);
+            let mut router = build_router(RouterSpec::JoinShortestQueue, 0);
+            simulate_trace_cluster(&cfg, &mut policies, router.as_mut(), &trace)
+        };
+        let paged = run(KvLayout::Paged);
+        let dense = run(KvLayout::Dense);
+        assert_eq!(paged.recorder.len(), 200);
+        assert_eq!(dense.recorder.len(), 200);
+        let (mp, md) = (
+            paged.recorder.summary().mean,
+            dense.recorder.summary().mean,
+        );
+        assert!(
+            md > mp * 1.01,
+            "per-shard dense reshapes should cost latency: dense {md:.3}s vs \
+             paged {mp:.3}s"
+        );
+        // paged timelines record per-shard block utilization
+        assert!(paged
+            .shard_rounds
+            .iter()
+            .any(|rounds| rounds.iter().any(|e| e.kv_blocks > 0)));
     }
 
     #[test]

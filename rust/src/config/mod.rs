@@ -8,6 +8,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Result};
 
+use crate::kvcache::KvLayout;
 use crate::util::json::Json;
 
 /// Top-level serving configuration (paper Sec. 5 methodology).
@@ -28,6 +29,9 @@ pub struct ServingConfig {
     pub workers: usize,
     /// How arrivals are routed across shards when `workers > 1`.
     pub router: RouterSpec,
+    /// KV layout: "dense" (per-slot buffers, reshape re-ingests) or
+    /// "paged" (block tables, O(1) reshape remap; stub backend only).
+    pub kv_layout: KvLayout,
     /// Seed for everything stochastic on the serving side.
     pub seed: u64,
 }
@@ -131,6 +135,7 @@ impl Default for ServingConfig {
             policy: PolicySpec::Adaptive,
             workers: 1,
             router: RouterSpec::RoundRobin,
+            kv_layout: KvLayout::Dense,
             seed: 0,
         }
     }
@@ -166,6 +171,9 @@ impl ServingConfig {
         if let Some(v) = json.get_opt("router")? {
             cfg.router = RouterSpec::parse(v.as_str()?)?;
         }
+        if let Some(v) = json.get_opt("kv_layout")? {
+            cfg.kv_layout = KvLayout::parse(v.as_str()?)?;
+        }
         if let Some(v) = json.get_opt("seed")? {
             cfg.seed = v.as_i64()? as u64;
         }
@@ -190,6 +198,7 @@ impl ServingConfig {
             ("policy", Json::Str(self.policy.label())),
             ("workers", Json::Num(self.workers as f64)),
             ("router", Json::Str(self.router.label().into())),
+            ("kv_layout", Json::Str(self.kv_layout.label().into())),
             ("seed", Json::Num(self.seed as f64)),
         ])
     }
@@ -280,6 +289,19 @@ mod tests {
         for spec in RouterSpec::all() {
             assert_eq!(RouterSpec::parse(spec.label()).unwrap(), spec);
         }
+    }
+
+    #[test]
+    fn kv_layout_roundtrips_and_defaults_dense() {
+        assert_eq!(ServingConfig::default().kv_layout, KvLayout::Dense);
+        let c = ServingConfig {
+            kv_layout: KvLayout::Paged,
+            ..ServingConfig::default()
+        };
+        let c2 = ServingConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.kv_layout, KvLayout::Paged);
+        let j = Json::parse(r#"{"kv_layout": "ragged"}"#).unwrap();
+        assert!(ServingConfig::from_json(&j).is_err());
     }
 
     #[test]

@@ -24,8 +24,11 @@
 //! State invariants (shared with `python/compile/engine_ref.py`, asserted
 //! in debug builds and by the integration tests):
 //!
-//! * per row: `ingested == committed.len() - 1` after every round for both
-//!   models (the last committed token is fed, not pre-ingested);
+//! * per row: the LLM satisfies `ingested == committed.len() - 1` after
+//!   every round (the last committed token is fed, not pre-ingested);
+//!   the SSM sits 1..=2 behind after a speculative round (2 when every
+//!   draft was accepted — its counters advance by `dlen + s - 1`, so a
+//!   full acceptance leaves the last draft and the bonus un-ingested);
 //! * the SSM sees a "delta" of 1..=2 committed tokens per speculation —
 //!   rounds that skip the SSM (s = 0) and freshly admitted rows grow its
 //!   backlog, which [`Engine::decode_round`] re-ingests via the catch-up
@@ -39,6 +42,16 @@
 //! Backends: the engine runs identically on the real PJRT executables
 //! ([`Engine::new`], `--features pjrt`) and on the deterministic testkit
 //! stub pair ([`Engine::stub`], always available).
+//!
+//! KV layouts ([`EngineConfig::kv_layout`], see [`crate::kvcache`]):
+//! under `Dense` (the seed behaviour) a carried row's context is
+//! re-ingested through chunked verify calls at every epoch reshape;
+//! under `Paged` the engine owns per-model block pools, every slot keeps
+//! a block table, and reshape admission transfers the carried chains +
+//! ingest counters instead — zero token re-ingestion, so bucket growth
+//! is O(1) in the carried context.  Both layouts commit bit-identical
+//! tokens (`rust/tests/kv_equivalence.rs`); only the call pattern and
+//! cost differ.
 
 pub mod acceptance;
 
@@ -47,6 +60,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
+use crate::kvcache::{
+    BlockChain, BlockManager, CarriedKv, KvBlockStats, KvHandle, KvLayout, DEFAULT_BLOCK_SIZE,
+};
 use crate::model::{Kv, ModelHandle};
 use crate::policy::{RoundFeedback, SpeculationPolicy};
 #[cfg(feature = "pjrt")]
@@ -66,6 +82,9 @@ pub struct EngineConfig {
     /// kept for config-file compatibility; acceptance samples are always
     /// recorded for live real rows (the Fig. 2 estimator input)
     pub record_acceptance: bool,
+    /// dense per-slot KV vs paged blocks with O(1) reshape remap
+    /// (defaults to `SPECBATCH_KV_LAYOUT` when set, else dense)
+    pub kv_layout: KvLayout,
 }
 
 impl Default for EngineConfig {
@@ -77,6 +96,7 @@ impl Default for EngineConfig {
             bos_token: 1,
             pad_token: 0,
             record_acceptance: false,
+            kv_layout: KvLayout::default_layout(),
         }
     }
 }
@@ -121,6 +141,12 @@ pub struct GenStats {
     pub spec_lens: Vec<usize>,
     /// per-round (live batch, s, committed) timeline
     pub per_round: Vec<RoundInfo>,
+    /// context tokens re-fed through chunked verify calls for carried
+    /// rows (dense-layout epoch reshapes; 0 under the paged layout)
+    pub reingested_tokens: usize,
+    /// KV entries transferred by block-table remap instead of
+    /// re-ingestion (paged-layout epoch reshapes)
+    pub remapped_tokens: usize,
 }
 
 impl GenStats {
@@ -290,6 +316,15 @@ fn committed_total(rows: &[Row]) -> usize {
     rows.iter().filter(|r| r.real).map(Row::generated).sum()
 }
 
+/// Per-slot block tables of a paged-layout epoch, one per model (indexed
+/// by slot; empty table = vacant or dense).  The block ids reference the
+/// engine-owned pools ([`Engine`] is the allocator; the state is only the
+/// table holder, so carried chains can outlive the epoch).
+struct SlotTables {
+    llm: Vec<Vec<u32>>,
+    ssm: Vec<Vec<u32>>,
+}
+
 /// The state of one serving epoch: row lifecycles + KV caches, driven by
 /// the engine's step API one round at a time.
 pub struct BatchState {
@@ -301,6 +336,8 @@ pub struct BatchState {
     /// the SSM's KV is behind (plain rounds / fresh admissions); the next
     /// speculative round runs the catch-up pass first
     ssm_backlog: bool,
+    /// paged-layout block tables (None under the dense layout)
+    tables: Option<SlotTables>,
     pub stats: GenStats,
 }
 
@@ -325,6 +362,15 @@ impl BatchState {
         self.bucket - self.occupied_slots()
     }
 
+    /// KV blocks this epoch currently holds across both model pools
+    /// (0 under the dense layout) — the per-round utilization counter
+    /// recorded into `metrics::RoundEvent`.
+    pub fn kv_blocks_in_use(&self) -> usize {
+        self.tables.as_ref().map_or(0, |t| {
+            t.llm.iter().map(Vec::len).sum::<usize>() + t.ssm.iter().map(Vec::len).sum::<usize>()
+        })
+    }
+
     /// Generated tokens of a slot so far (None when the slot is vacant).
     pub fn generated_tokens(&self, slot: usize) -> Option<&[i32]> {
         let row = self.rows.get(slot)?;
@@ -337,8 +383,10 @@ impl BatchState {
 
     /// Test hook for the KV state-machine invariants (DESIGN.md): per
     /// slot, `(committed length, LLM ingested, SSM ingested)`.  After any
-    /// speculative round both counters equal `committed - 1`; after plain
-    /// rounds or admissions the SSM may lag (its catch-up backlog).
+    /// speculative round the LLM counter equals `committed - 1` and the
+    /// SSM counter sits within the 1..=2 delta window; after plain
+    /// rounds or admissions the SSM may lag further (its catch-up
+    /// backlog).
     pub fn ingest_state(&self) -> Vec<(usize, u32, Option<u32>)> {
         let llm = self.llm_kv.ingested();
         let ssm: Option<Vec<u32>> = self.ssm_kv.as_ref().map(|kv| kv.ingested().to_vec());
@@ -357,7 +405,10 @@ impl BatchState {
 }
 
 /// A request handed to [`Engine::admit_rows`] at a round boundary.
-#[derive(Debug, Clone)]
+///
+/// Not `Clone`: a paged-layout request owns ref-counted KV block chains
+/// ([`CarriedKv::Blocks`]) whose refcounts a naive clone would not copy.
+#[derive(Debug)]
 pub struct AdmitRequest {
     /// full committed context: the prompt, plus any previously generated
     /// tokens when re-admitting a carried-over row (epoch reshape)
@@ -366,6 +417,22 @@ pub struct AdmitRequest {
     pub prompt_len: usize,
     /// generation budget, counted from `prompt_len`
     pub max_new: usize,
+    /// carried-row KV transfer: `None` for fresh admissions,
+    /// `Some(Reingest)` for dense-layout carries (context re-fed),
+    /// `Some(Blocks(..))` for paged-layout carries (block-table remap)
+    pub carried_kv: Option<CarriedKv>,
+}
+
+impl AdmitRequest {
+    /// A fresh (never-served) admission.
+    pub fn fresh(context: Vec<i32>, prompt_len: usize, max_new: usize) -> AdmitRequest {
+        AdmitRequest {
+            context,
+            prompt_len,
+            max_new,
+            carried_kv: None,
+        }
+    }
 }
 
 /// A finished row returned by [`Engine::retire_finished`].
@@ -376,6 +443,29 @@ pub struct RetiredRow {
     pub tokens: Vec<i32>,
 }
 
+/// The engine's per-model KV block pools (paged layout only).  The
+/// engine is the allocator — pools outlive any single [`BatchState`], so
+/// carried block chains survive an epoch reshape by refcount alone.
+struct KvPools {
+    llm: BlockManager,
+    ssm: BlockManager,
+}
+
+fn build_pools(limits: &EngineLimits, layout: KvLayout) -> Option<KvPools> {
+    if layout != KvLayout::Paged {
+        return None;
+    }
+    let max_bucket = limits.batch_buckets.last().copied().unwrap_or(1).max(1);
+    let per_row = limits.max_seq.div_ceil(DEFAULT_BLOCK_SIZE).max(1);
+    // x4 headroom: carried chains briefly coexist with the reshaped
+    // epoch's fresh tables, and tests drive several states per engine
+    let capacity = max_bucket * per_row * 4;
+    Some(KvPools {
+        llm: BlockManager::new(capacity, DEFAULT_BLOCK_SIZE),
+        ssm: BlockManager::new(capacity, DEFAULT_BLOCK_SIZE),
+    })
+}
+
 /// The batched speculative decoding engine.
 pub struct Engine<'rt> {
     pub cfg: EngineConfig,
@@ -384,6 +474,8 @@ pub struct Engine<'rt> {
     ssm: ModelHandle<'rt>,
     /// per-section timing for the §Perf pass
     pub stopwatch: Stopwatch,
+    /// paged-layout block pools (None under the dense layout)
+    pools: Option<KvPools>,
     #[cfg(feature = "pjrt")]
     rt: Option<&'rt Runtime>,
 }
@@ -392,12 +484,21 @@ impl<'rt> Engine<'rt> {
     /// Engine over the real PJRT runtime (requires `make artifacts`).
     #[cfg(feature = "pjrt")]
     pub fn new(rt: &'rt Runtime, cfg: EngineConfig) -> Result<Engine<'rt>> {
+        if cfg.kv_layout == KvLayout::Paged {
+            bail!(
+                "the paged KV layout is stub-only for now: PJRT KV caches \
+                 are dense per-row device buffers, so a block-table remap \
+                 would transfer counters without the cached keys/values \
+                 (run with --kv-layout dense, or the stub backend)"
+            );
+        }
         Ok(Engine {
             cfg,
             limits: EngineLimits::from_manifest(&rt.manifest)?,
             llm: ModelHandle::Pjrt(crate::model::Model::new(rt, "llm")?),
             ssm: ModelHandle::Pjrt(crate::model::Model::new(rt, "ssm")?),
             stopwatch: Stopwatch::new(),
+            pools: None,
             rt: Some(rt),
         })
     }
@@ -414,12 +515,15 @@ impl<'rt> Engine<'rt> {
         if spec.max_prompt == 0 || spec.max_seq <= spec.max_prompt {
             bail!("stub needs 0 < max_prompt < max_seq");
         }
+        let limits = EngineLimits::from_stub(&spec);
+        let pools = build_pools(&limits, cfg.kv_layout);
         Ok(Engine {
             cfg,
-            limits: EngineLimits::from_stub(&spec),
+            limits,
             llm: ModelHandle::stub(StubModel::new(spec.clone(), StubRole::Llm)),
             ssm: ModelHandle::stub(StubModel::new(spec, StubRole::Ssm)),
             stopwatch: Stopwatch::new(),
+            pools,
             #[cfg(feature = "pjrt")]
             rt: None,
         })
@@ -427,6 +531,20 @@ impl<'rt> Engine<'rt> {
 
     pub fn limits(&self) -> &EngineLimits {
         &self.limits
+    }
+
+    /// The KV layout this engine runs (see [`crate::kvcache`]).
+    pub fn kv_layout(&self) -> KvLayout {
+        self.cfg.kv_layout
+    }
+
+    /// Block-pool accounting snapshot, LLM + SSM pools merged (None under
+    /// the dense layout).  At a clean shutdown `is_leak_free()` holds —
+    /// the invariant the leak tests pin.
+    pub fn kv_block_stats(&self) -> Option<KvBlockStats> {
+        self.pools
+            .as_ref()
+            .map(|p| p.llm.stats().merged(&p.ssm.stats()))
     }
 
     /// Precompile the executable matrix up to (`max_bucket`, `max_s`).
@@ -466,6 +584,8 @@ impl<'rt> Engine<'rt> {
             }
         }
         st.stats.decode_wall = decode_start.elapsed();
+        // the epoch is over: return its blocks to the pools
+        self.release_state(&mut st);
 
         // --- collect outputs ---
         let mut tokens = Vec::with_capacity(n);
@@ -566,6 +686,10 @@ impl<'rt> Engine<'rt> {
         for (row, &t) in rows.iter_mut().zip(&first) {
             row.committed.push(t);
         }
+        let tables = self.pools.as_ref().map(|_| SlotTables {
+            llm: vec![Vec::new(); bucket],
+            ssm: vec![Vec::new(); bucket],
+        });
         let mut st = BatchState {
             bucket,
             may_speculate,
@@ -573,9 +697,11 @@ impl<'rt> Engine<'rt> {
             llm_kv,
             ssm_kv,
             ssm_backlog: false,
+            tables,
             stats: GenStats::default(),
         };
         self.check_eos_and_limits(&mut st.rows);
+        self.sync_blocks(&mut st)?;
         Ok(st)
     }
 
@@ -638,6 +764,7 @@ impl<'rt> Engine<'rt> {
         let fit_time = fit_start.elapsed().as_secs_f64();
         let wall_time = wall_start.elapsed().as_secs_f64();
         self.check_eos_and_limits(&mut st.rows);
+        self.sync_blocks(st)?;
         let accepted_rows: Vec<u32> = st.stats.accept_samples[samples_before..].to_vec();
         let committed = committed_total(&st.rows) - before;
         let info = RoundInfo {
@@ -662,11 +789,15 @@ impl<'rt> Engine<'rt> {
     }
 
     /// Admit queued requests into vacant slots at a round boundary.
-    /// Contexts are ingested into the LLM KV via chunked verify calls
-    /// (frozen/live rows re-feed their last token and are clamped back);
-    /// the SSM catches up lazily before the next speculative round.
-    /// Returns the slot indices, in request order.
-    pub fn admit_rows(&mut self, st: &mut BatchState, reqs: &[AdmitRequest]) -> Result<Vec<usize>> {
+    ///
+    /// Fresh and dense-carried contexts are ingested into the LLM KV via
+    /// chunked verify calls (frozen/live rows re-feed their last token
+    /// and are clamped back); the SSM catches up lazily before the next
+    /// speculative round.  Paged-carried rows ([`CarriedKv::Blocks`])
+    /// skip ingestion entirely: their block chains are installed into the
+    /// slot's tables and the ingest counters transferred — the reshape-
+    /// as-remap path.  Returns the slot indices, in request order.
+    pub fn admit_rows(&mut self, st: &mut BatchState, reqs: Vec<AdmitRequest>) -> Result<Vec<usize>> {
         if reqs.is_empty() {
             return Ok(Vec::new());
         }
@@ -685,7 +816,7 @@ impl<'rt> Engine<'rt> {
             );
         }
         let mut slots = Vec::with_capacity(reqs.len());
-        for (req, &slot) in reqs.iter().zip(&vacant) {
+        for (req, &slot) in reqs.into_iter().zip(vacant.iter()) {
             if req.context.is_empty() {
                 bail!("admit_rows: empty context");
             }
@@ -703,25 +834,91 @@ impl<'rt> Engine<'rt> {
                     self.limits.max_seq
                 );
             }
+            let ctx_len = req.context.len();
             st.rows[slot] = Row {
-                committed: req.context.clone(),
+                committed: req.context,
                 prompt_len: req.prompt_len,
                 max_new: req.max_new,
                 real: true,
                 finished: false,
             };
-            st.llm_kv.reset_row(slot);
-            if let Some(kv) = &mut st.ssm_kv {
-                kv.reset_row(slot);
+            match req.carried_kv {
+                Some(CarriedKv::Blocks(handle)) => {
+                    self.remap_slot(st, slot, ctx_len, handle)?;
+                }
+                Some(CarriedKv::Reingest) => {
+                    // dense carry: the whole generated-so-far context goes
+                    // back through verify calls (the reshape wall the
+                    // paged layout removes)
+                    st.stats.reingested_tokens += ctx_len - 1;
+                    st.llm_kv.reset_row(slot);
+                    if let Some(kv) = &mut st.ssm_kv {
+                        kv.reset_row(slot);
+                    }
+                }
+                None => {
+                    st.llm_kv.reset_row(slot);
+                    if let Some(kv) = &mut st.ssm_kv {
+                        kv.reset_row(slot);
+                    }
+                }
             }
             slots.push(slot);
         }
         self.ingest_admitted(st)?;
         // freshly admitted rows put the SSM behind by a whole context
+        // (remapped rows keep their counters; the catch-up pass no-ops
+        // for any row that is already within the delta invariant)
         st.ssm_backlog = true;
         // a re-admitted context may already contain <eos> past the prompt
         self.check_eos_and_limits(&mut st.rows);
+        self.sync_blocks(st)?;
         Ok(slots)
+    }
+
+    /// Install a carried row's block chains + ingest counters into `slot`
+    /// — the O(1) reshape remap.  Consumes the handle's block references.
+    fn remap_slot(
+        &mut self,
+        st: &mut BatchState,
+        slot: usize,
+        ctx_len: usize,
+        handle: KvHandle,
+    ) -> Result<()> {
+        let (Some(pools), Some(tables)) = (self.pools.as_mut(), st.tables.as_mut()) else {
+            bail!("admit_rows: a block-table handle reached a dense-layout engine");
+        };
+        if handle.llm.ingested as usize != ctx_len - 1 {
+            bail!(
+                "admit_rows: carried KV covers {} tokens for a context of {ctx_len}",
+                handle.llm.ingested
+            );
+        }
+        // swap the chains in, releasing whatever the vacant slot held
+        for id in tables.llm[slot].drain(..) {
+            pools.llm.release(id);
+        }
+        tables.llm[slot] = handle.llm.blocks;
+        st.llm_kv.set_row_ingested(slot, handle.llm.ingested);
+        st.stats.remapped_tokens += handle.llm.ingested as usize;
+        for id in tables.ssm[slot].drain(..) {
+            pools.ssm.release(id);
+        }
+        match (st.ssm_kv.as_mut(), handle.ssm) {
+            (Some(kv), Some(chain)) => {
+                tables.ssm[slot] = chain.blocks;
+                kv.set_row_ingested(slot, chain.ingested);
+            }
+            (Some(kv), None) => kv.set_row_ingested(slot, 0),
+            (None, Some(chain)) => {
+                // epoch without an SSM: drop the carried draft-side chain
+                for id in chain.blocks {
+                    pools.ssm.release(id);
+                }
+            }
+            (None, None) => {}
+        }
+        Ok(())
     }
 
     /// Collect finished rows and turn their slots vacant (KV counters
@@ -749,27 +946,90 @@ impl<'rt> Engine<'rt> {
                 kv.reset_row(i);
             }
         }
+        // retirement only rolls counters to zero, so the sync can only
+        // shrink tables (return blocks) — allocation cannot fail here
+        self.sync_blocks(st)
+            .expect("retirement only returns blocks to the pool");
         retired
     }
 
     /// Export the unfinished rows of an epoch as re-admittable requests
     /// (used by the batcher to reshape an epoch into a larger bucket).
-    pub fn export_rows(&self, st: &BatchState) -> Vec<(usize, AdmitRequest)> {
+    ///
+    /// Under the dense layout the requests carry [`CarriedKv::Reingest`]:
+    /// re-admission feeds each context back through chunked verify calls.
+    /// Under the paged layout they carry [`CarriedKv::Blocks`] — cloned,
+    /// ref-retained block chains plus the ingest counters — so
+    /// re-admission is a block-table remap with zero token re-ingestion.
+    /// Call [`Engine::release_state`] on the old state afterwards; the
+    /// retained references keep the carried chains alive in between.
+    pub fn export_rows(&mut self, st: &BatchState) -> Vec<(usize, AdmitRequest)> {
+        let llm_ing = st.llm_kv.ingested().to_vec();
+        let ssm_ing: Option<Vec<u32>> = st.ssm_kv.as_ref().map(|kv| kv.ingested().to_vec());
         st.rows
             .iter()
             .enumerate()
             .filter(|(_, r)| r.real && !r.finished)
             .map(|(i, r)| {
+                let carried_kv = match (self.pools.as_mut(), st.tables.as_ref()) {
+                    (Some(pools), Some(tables)) => {
+                        let llm = BlockChain {
+                            blocks: tables.llm[i].clone(),
+                            ingested: llm_ing[i],
+                        };
+                        for &id in &llm.blocks {
+                            pools.llm.retain(id);
+                        }
+                        let ssm = ssm_ing.as_ref().map(|ing| {
+                            let chain = BlockChain {
+                                blocks: tables.ssm[i].clone(),
+                                ingested: ing[i],
+                            };
+                            for &id in &chain.blocks {
+                                pools.ssm.retain(id);
+                            }
+                            chain
+                        });
+                        CarriedKv::Blocks(KvHandle { llm, ssm })
+                    }
+                    _ => CarriedKv::Reingest,
+                };
                 (
                     i,
                     AdmitRequest {
                         context: r.committed.clone(),
                         prompt_len: r.prompt_len,
                         max_new: r.max_new,
+                        carried_kv: Some(carried_kv),
                     },
                 )
             })
             .collect()
+    }
+
+    /// Return every block a state still holds to the pools (end of the
+    /// epoch's life: reshape hand-off, drained batcher epoch, or the end
+    /// of a `generate_batch` call).  No-op under the dense layout.
+    pub fn release_state(&mut self, st: &mut BatchState) {
+        let (Some(pools), Some(tables)) = (self.pools.as_mut(), st.tables.as_mut()) else {
+            return;
+        };
+        pools.llm.release_tables(&mut tables.llm);
+        pools.ssm.release_tables(&mut tables.ssm);
+    }
+
+    /// Bring every slot's block tables in line with its KV ingest
+    /// counters (grow = alloc, shrink = release).  The paged layout's
+    /// single accounting point, called after every state-mutating step.
+    fn sync_blocks(&mut self, st: &mut BatchState) -> Result<()> {
+        let (Some(pools), Some(tables)) = (self.pools.as_mut(), st.tables.as_mut()) else {
+            return Ok(());
+        };
+        pools.llm.sync_tables(&mut tables.llm, st.llm_kv.ingested())?;
+        if let Some(kv) = &st.ssm_kv {
+            pools.ssm.sync_tables(&mut tables.ssm, kv.ingested())?;
+        }
+        Ok(())
     }
 
     /// Chunked LLM ingestion of admitted rows' contexts: repeated verify
@@ -1143,13 +1403,9 @@ mod tests {
         // admit two more requests into free slots mid-epoch
         let reqs: Vec<AdmitRequest> = [&p1, &p2]
             .iter()
-            .map(|p| AdmitRequest {
-                context: (*p).clone(),
-                prompt_len: p.len(),
-                max_new: 10,
-            })
+            .map(|p| AdmitRequest::fresh((*p).clone(), p.len(), 10))
             .collect();
-        let slots = e.admit_rows(&mut st, &reqs).unwrap();
+        let slots = e.admit_rows(&mut st, reqs).unwrap();
         assert_eq!(slots.len(), 2);
         while st.has_live() {
             e.decode_round(&mut st, &mut policy).unwrap();
@@ -1184,14 +1440,7 @@ mod tests {
         assert_eq!(st.free_slots(), 2);
         // admit a new request into the recycled slot and finish it
         let slots = e
-            .admit_rows(
-                &mut st,
-                &[AdmitRequest {
-                    context: vec![9, 10],
-                    prompt_len: 2,
-                    max_new: 6,
-                }],
-            )
+            .admit_rows(&mut st, vec![AdmitRequest::fresh(vec![9, 10], 2, 6)])
             .unwrap();
         assert_eq!(slots.len(), 1);
         while st.has_live() {
@@ -1252,14 +1501,7 @@ mod tests {
         }
         // do NOT retire: the frozen row keeps its high ingest counter
         let slots = e
-            .admit_rows(
-                &mut st,
-                &[AdmitRequest {
-                    context: vec![9; 14],
-                    prompt_len: 14,
-                    max_new: 2,
-                }],
-            )
+            .admit_rows(&mut st, vec![AdmitRequest::fresh(vec![9; 14], 14, 2)])
             .unwrap();
         while st.has_live() {
             e.decode_round(&mut st, &mut policy).unwrap();
@@ -1267,6 +1509,32 @@ mod tests {
         let retired = e.retire_finished(&mut st);
         let new_row = retired.iter().find(|r| r.slot == slots[0]).unwrap();
         assert_eq!(new_row.tokens, chain(9, 2));
+    }
+
+    fn layout_engine(layout: KvLayout) -> Engine<'static> {
+        Engine::stub(
+            StubSpec::default(),
+            EngineConfig {
+                kv_layout: layout,
+                ..EngineConfig::default()
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn paged_generation_matches_dense_and_releases_every_block() {
+        let prompts = vec![vec![5, 9, 12], vec![7]];
+        let dense = layout_engine(KvLayout::Dense)
+            .generate_batch(&prompts, 16, &mut Fixed(3))
+            .unwrap();
+        let mut e = layout_engine(KvLayout::Paged);
+        let paged = e.generate_batch(&prompts, 16, &mut Fixed(3)).unwrap();
+        assert_eq!(dense.tokens, paged.tokens, "layouts must not change tokens");
+        let stats = e.kv_block_stats().expect("paged engine reports block stats");
+        assert!(stats.is_leak_free(), "blocks leaked: {stats:?}");
+        assert!(stats.peak_in_use > 0, "the epoch never held a block");
+        assert!(layout_engine(KvLayout::Dense).kv_block_stats().is_none());
     }
 
     #[test]

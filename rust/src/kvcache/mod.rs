@@ -1,0 +1,432 @@
+//! Paged KV-cache accounting: the block manager behind the
+//! `KvLayout::Paged` seam.
+//!
+//! The paper's synergy analysis (Eq. 7) assumes the engine can actually
+//! run the large batches where short speculation wins, but the dense KV
+//! layout makes epoch reshape O(context): every carried row's context is
+//! re-ingested through chunked verify calls (and the SSM re-ingests it
+//! two tokens at a time).  The paged layout removes that wall the way
+//! vLLM does: each slot's KV lives in fixed-size **blocks** referenced by
+//! a per-slot **block table**, so carrying a row into a larger bucket is
+//! a block-table remap — O(1) in the context length, zero token
+//! re-ingestion.
+//!
+//! ```text
+//!   epoch A (bucket 2)                 epoch B (bucket 4)
+//!   slot 0 ─ table [b3, b7]     ──►    slot 0 ─ table [b3, b7]   (remap)
+//!   slot 1 ─ table [b1]         ──►    slot 1 ─ table [b1]       (remap)
+//!                                      slot 2 ─ table [b9]       (fresh)
+//!                                      slot 3 ─ table []         (vacant)
+//!            block pool: free list ⟷ ref-counted blocks b0..bN
+//! ```
+//!
+//! [`BlockManager`] is pure bookkeeping over a free list + refcounts (on
+//! the stub backend the only per-row KV state is the ingest counter, so
+//! remapping a table and setting the counter IS the full KV transfer; on
+//! a real runtime the same tables would index device block buffers).
+//! Refcounts let a carried row's chain be owned by the exporting epoch
+//! and the admitting epoch at once, which is exactly the window an epoch
+//! reshape opens.
+//!
+//! Leak discipline: every block popped from the free list must return to
+//! it — `rust/tests/kv_equivalence.rs` asserts `free == capacity` after
+//! every end-to-end experiment, and [`BlockManager::release`] panics on a
+//! double free.
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+
+/// How per-slot KV state is organised across epoch reshapes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvLayout {
+    /// One dense KV buffer per slot: epoch reshape re-ingests carried
+    /// contexts through chunked verify calls (O(context) per reshape).
+    Dense,
+    /// Fixed-size blocks + per-slot block tables: epoch reshape is a
+    /// block-table remap (O(1), zero token re-ingestion).  Stub-only for
+    /// now (PJRT KV caches are dense per-row device buffers).
+    Paged,
+}
+
+impl KvLayout {
+    pub fn parse(s: &str) -> Result<KvLayout> {
+        match s {
+            "dense" => Ok(KvLayout::Dense),
+            "paged" => Ok(KvLayout::Paged),
+            other => bail!("bad kv layout {other:?}: expected dense | paged"),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            KvLayout::Dense => "dense",
+            KvLayout::Paged => "paged",
+        }
+    }
+
+    /// The `SPECBATCH_KV_LAYOUT` environment override, if set.  CI runs
+    /// the test suite as a two-way matrix over it, so an invalid value
+    /// fails loudly — silently falling back to dense would turn the
+    /// paged matrix leg into a second dense run.
+    pub fn from_env() -> Option<KvLayout> {
+        let v = std::env::var("SPECBATCH_KV_LAYOUT").ok()?;
+        Some(KvLayout::parse(&v).unwrap_or_else(|e| panic!("SPECBATCH_KV_LAYOUT: {e}")))
+    }
+
+    /// Default engine layout: the env override when present, else
+    /// [`KvLayout::Dense`] (the seed behaviour).
+    pub fn default_layout() -> KvLayout {
+        KvLayout::from_env().unwrap_or(KvLayout::Dense)
+    }
+}
+
+/// Tokens-per-block of the paged layout (vLLM's default block size).
+pub const DEFAULT_BLOCK_SIZE: usize = 16;
+
+/// Snapshot of one block pool's accounting (or several pools merged):
+/// the block-utilization / fragmentation counters recorded into
+/// `server::ExperimentOutcome` and printed by the CLI.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct KvBlockStats {
+    pub block_size: usize,
+    /// total blocks the pool(s) own
+    pub capacity: usize,
+    /// blocks currently allocated (capacity - free-list cardinality)
+    pub in_use: usize,
+    /// free-list cardinality; leak-free shutdown means `free == capacity`
+    pub free: usize,
+    /// high-water mark of `in_use` over the pool's lifetime
+    pub peak_in_use: usize,
+    /// lifetime alloc / free call counts (must match at shutdown)
+    pub allocs: u64,
+    pub frees: u64,
+    /// mean internal fragmentation over the recorded sync points: the
+    /// fraction of allocated block space not covered by live KV entries
+    pub mean_internal_frag: f64,
+}
+
+impl KvBlockStats {
+    /// True when every block is back on the free list.
+    pub fn is_leak_free(&self) -> bool {
+        self.free == self.capacity && self.in_use == 0 && self.allocs == self.frees
+    }
+
+    /// Pool utilization at the snapshot (allocated / capacity).
+    pub fn utilization(&self) -> f64 {
+        if self.capacity == 0 {
+            return 0.0;
+        }
+        self.in_use as f64 / self.capacity as f64
+    }
+
+    /// Merge two pools' stats (e.g. the LLM and SSM pools, or per-shard
+    /// pools of a cluster run).  Fragmentation is weighted by each side's
+    /// lifetime allocations.
+    pub fn merged(&self, other: &KvBlockStats) -> KvBlockStats {
+        let wa = self.allocs as f64;
+        let wb = other.allocs as f64;
+        let frag = if wa + wb > 0.0 {
+            (self.mean_internal_frag * wa + other.mean_internal_frag * wb) / (wa + wb)
+        } else {
+            0.0
+        };
+        KvBlockStats {
+            block_size: self.block_size.max(other.block_size),
+            capacity: self.capacity + other.capacity,
+            in_use: self.in_use + other.in_use,
+            free: self.free + other.free,
+            peak_in_use: self.peak_in_use + other.peak_in_use,
+            allocs: self.allocs + other.allocs,
+            frees: self.frees + other.frees,
+            mean_internal_frag: frag,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("block_size", Json::Num(self.block_size as f64)),
+            ("capacity", Json::Num(self.capacity as f64)),
+            ("in_use", Json::Num(self.in_use as f64)),
+            ("free", Json::Num(self.free as f64)),
+            ("peak_in_use", Json::Num(self.peak_in_use as f64)),
+            ("allocs", Json::Num(self.allocs as f64)),
+            ("frees", Json::Num(self.frees as f64)),
+            ("utilization", Json::Num(self.utilization())),
+            ("internal_frag", Json::Num(self.mean_internal_frag)),
+        ])
+    }
+}
+
+/// One ref-counted chain of blocks plus the KV ingest counter it covers —
+/// the transferable handle of a carried row's cache state.
+#[derive(Debug)]
+pub struct BlockChain {
+    pub blocks: Vec<u32>,
+    /// KV entries the chain covers (the row's ingest counter at export)
+    pub ingested: u32,
+}
+
+/// A carried row's per-model KV handle (LLM chain + optional SSM chain).
+/// Refcounts on every block are held by the handle from export until the
+/// admitting epoch installs the chains — or the engine releases them.
+#[derive(Debug)]
+pub struct KvHandle {
+    pub llm: BlockChain,
+    pub ssm: Option<BlockChain>,
+}
+
+/// How a re-admitted (carried) row transfers its KV across an epoch
+/// reshape.  Fresh admissions carry `None` — their context was never in
+/// any cache and is ingested for the first time either way.
+#[derive(Debug)]
+pub enum CarriedKv {
+    /// Dense layout: no transferable state; the context is re-ingested
+    /// through chunked verify calls (counted as re-prefilled tokens).
+    Reingest,
+    /// Paged layout: block chains + ingest counters; admission installs
+    /// them into the target slot's tables (zero token re-ingestion).
+    Blocks(KvHandle),
+}
+
+/// Fixed-size KV block pool: free-list allocation, per-block refcounts,
+/// utilization/fragmentation accounting.  Blocks are identified by dense
+/// `u32` ids; per-slot block tables are plain `Vec<u32>` owned by the
+/// engine's `BatchState`.
+#[derive(Debug)]
+pub struct BlockManager {
+    block_size: usize,
+    free: Vec<u32>,
+    refcount: Vec<u16>,
+    peak_in_use: usize,
+    allocs: u64,
+    frees: u64,
+    /// internal-fragmentation accumulators over sync points
+    frag_num: f64,
+    frag_den: f64,
+}
+
+impl BlockManager {
+    pub fn new(capacity: usize, block_size: usize) -> BlockManager {
+        assert!(block_size > 0, "block size must be positive");
+        assert!(capacity > 0, "block pool needs at least one block");
+        BlockManager {
+            block_size,
+            // LIFO free list: low ids pop first, which keeps tests readable
+            free: (0..capacity as u32).rev().collect(),
+            refcount: vec![0; capacity],
+            peak_in_use: 0,
+            allocs: 0,
+            frees: 0,
+            frag_num: 0.0,
+            frag_den: 0.0,
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.refcount.len()
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn in_use(&self) -> usize {
+        self.capacity() - self.free.len()
+    }
+
+    /// Blocks needed to cover `tokens` KV entries.
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_size)
+    }
+
+    /// Pop a free block (refcount 1).
+    pub fn alloc(&mut self) -> Result<u32> {
+        let Some(id) = self.free.pop() else {
+            bail!(
+                "KV block pool exhausted ({} blocks of {} tokens) — a state \
+                 was dropped without Engine::release_state, or max_batch × \
+                 max_seq outgrew the pool",
+                self.capacity(),
+                self.block_size
+            );
+        };
+        debug_assert_eq!(self.refcount[id as usize], 0);
+        self.refcount[id as usize] = 1;
+        self.allocs += 1;
+        self.peak_in_use = self.peak_in_use.max(self.in_use());
+        Ok(id)
+    }
+
+    /// Add a reference to an allocated block (a carried chain being
+    /// exported shares its blocks with the old epoch).
+    pub fn retain(&mut self, id: u32) {
+        let rc = &mut self.refcount[id as usize];
+        assert!(*rc > 0, "retain of a free block {id}");
+        *rc += 1;
+    }
+
+    /// Drop a reference; the block returns to the free list at zero.
+    /// Panics on a double free — the leak tests rely on that.
+    pub fn release(&mut self, id: u32) {
+        let rc = &mut self.refcount[id as usize];
+        assert!(*rc > 0, "double free of block {id}");
+        *rc -= 1;
+        if *rc == 0 {
+            self.free.push(id);
+            self.frees += 1;
+        }
+    }
+
+    /// Grow/shrink per-slot block tables to cover each slot's ingest
+    /// counter, then record a fragmentation sample.  The single sync
+    /// point the engine calls after every state-mutating operation.
+    pub fn sync_tables(&mut self, tables: &mut [Vec<u32>], ingested: &[u32]) -> Result<()> {
+        debug_assert_eq!(tables.len(), ingested.len());
+        let mut tokens = 0usize;
+        let mut blocks = 0usize;
+        for (table, &ing) in tables.iter_mut().zip(ingested) {
+            let want = self.blocks_for(ing as usize);
+            while table.len() < want {
+                let id = self.alloc()?;
+                table.push(id);
+            }
+            while table.len() > want {
+                let id = table.pop().expect("len > want >= 0");
+                self.release(id);
+            }
+            tokens += ing as usize;
+            blocks += table.len();
+        }
+        // fragmentation is sampled over the synced tables' own space (not
+        // pool-wide in_use, which transiently includes carried handles'
+        // blocks during a reshape and would overstate waste)
+        let space = (blocks * self.block_size) as f64;
+        if space > 0.0 {
+            self.frag_num += space - tokens as f64;
+            self.frag_den += space;
+        }
+        Ok(())
+    }
+
+    /// Release every block of every table (end of an epoch's life).
+    pub fn release_tables(&mut self, tables: &mut [Vec<u32>]) {
+        for table in tables.iter_mut() {
+            for id in table.drain(..) {
+                self.release(id);
+            }
+        }
+    }
+
+    pub fn stats(&self) -> KvBlockStats {
+        KvBlockStats {
+            block_size: self.block_size,
+            capacity: self.capacity(),
+            in_use: self.in_use(),
+            free: self.free_blocks(),
+            peak_in_use: self.peak_in_use,
+            allocs: self.allocs,
+            frees: self.frees,
+            mean_internal_frag: if self.frag_den > 0.0 {
+                self.frag_num / self.frag_den
+            } else {
+                0.0
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_parses_and_labels() {
+        assert_eq!(KvLayout::parse("dense").unwrap(), KvLayout::Dense);
+        assert_eq!(KvLayout::parse("paged").unwrap(), KvLayout::Paged);
+        assert!(KvLayout::parse("blocky").is_err());
+        for l in [KvLayout::Dense, KvLayout::Paged] {
+            assert_eq!(KvLayout::parse(l.label()).unwrap(), l);
+        }
+    }
+
+    #[test]
+    fn alloc_release_conserves_the_free_list() {
+        let mut m = BlockManager::new(4, 16);
+        assert_eq!(m.free_blocks(), 4);
+        let a = m.alloc().unwrap();
+        let b = m.alloc().unwrap();
+        assert_ne!(a, b);
+        assert_eq!(m.in_use(), 2);
+        m.release(a);
+        m.release(b);
+        assert_eq!(m.free_blocks(), 4);
+        assert!(m.stats().is_leak_free());
+        assert_eq!(m.stats().peak_in_use, 2);
+    }
+
+    #[test]
+    fn refcounts_defer_the_free() {
+        let mut m = BlockManager::new(2, 16);
+        let a = m.alloc().unwrap();
+        m.retain(a);
+        m.release(a);
+        assert_eq!(m.in_use(), 1, "one reference still holds the block");
+        m.release(a);
+        assert_eq!(m.free_blocks(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_panics() {
+        let mut m = BlockManager::new(2, 16);
+        let a = m.alloc().unwrap();
+        m.release(a);
+        m.release(a);
+    }
+
+    #[test]
+    fn exhaustion_is_an_error_not_a_panic() {
+        let mut m = BlockManager::new(1, 16);
+        let _a = m.alloc().unwrap();
+        assert!(m.alloc().is_err());
+    }
+
+    #[test]
+    fn sync_tables_tracks_ingest_counters() {
+        let mut m = BlockManager::new(8, 4);
+        let mut tables = vec![Vec::new(), Vec::new()];
+        // row 0 covers 5 tokens (2 blocks of 4), row 1 covers 4 (1 block)
+        m.sync_tables(&mut tables, &[5, 4]).unwrap();
+        assert_eq!(tables[0].len(), 2);
+        assert_eq!(tables[1].len(), 1);
+        assert_eq!(m.in_use(), 3);
+        // shrink row 0 back to 1 token
+        m.sync_tables(&mut tables, &[1, 4]).unwrap();
+        assert_eq!(tables[0].len(), 1);
+        assert_eq!(m.in_use(), 2);
+        // fragmentation accumulated: allocated space always >= tokens
+        let s = m.stats();
+        assert!(s.mean_internal_frag >= 0.0 && s.mean_internal_frag < 1.0);
+        m.release_tables(&mut tables);
+        assert!(m.stats().is_leak_free());
+    }
+
+    #[test]
+    fn stats_merge_adds_pools() {
+        let mut a = BlockManager::new(4, 16);
+        let b = BlockManager::new(6, 16);
+        let id = a.alloc().unwrap();
+        let merged = a.stats().merged(&b.stats());
+        assert_eq!(merged.capacity, 10);
+        assert_eq!(merged.in_use, 1);
+        assert_eq!(merged.free, 9);
+        assert!(!merged.is_leak_free());
+        a.release(id);
+        assert!(a.stats().merged(&b.stats()).is_leak_free());
+    }
+}

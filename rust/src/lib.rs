@@ -49,6 +49,7 @@ pub mod cluster;
 pub mod config;
 pub mod dataset;
 pub mod engine;
+pub mod kvcache;
 pub mod metrics;
 pub mod model;
 pub mod policy;
@@ -67,6 +68,7 @@ pub mod prelude {
     pub use crate::cluster::{build_router, replicate_policies, Router, ShardLoad};
     pub use crate::config::{PolicySpec, RouterSpec, ServingConfig};
     pub use crate::engine::{BatchState, Engine, EngineConfig, GenOutput};
+    pub use crate::kvcache::{BlockManager, KvBlockStats, KvLayout};
     pub use crate::policy::{
         Fixed, LutAdaptive, ModelBased, NoSpec, RoundFeedback, SpeculationPolicy,
     };

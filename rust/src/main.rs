@@ -24,6 +24,7 @@ use anyhow::{bail, Result};
 use specbatch::cluster::sim::simulate_trace_cluster;
 use specbatch::cluster::{build_router, replicate_policies};
 use specbatch::config::{PolicySpec, RouterSpec};
+use specbatch::kvcache::KvLayout;
 use specbatch::policy::{Fixed, LutAdaptive, ModelBased, NoSpec, SpeculationPolicy};
 use specbatch::server::{run_experiment, Backend, SchedulingMode, ServerConfig};
 use specbatch::simulator::{
@@ -390,6 +391,11 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
     .opt("cv", "1.0", "coefficient of variation")
     .opt("tokens", "32", "new tokens per request")
     .opt("max-batch", "8", "dynamic batching cap (per shard)")
+    .opt(
+        "kv-layout",
+        "dense",
+        "dense | paged (paged = O(1) epoch reshape via block tables, stub backend)",
+    )
     .opt("seed", "1", "trace seed")
     .flag("fig6", "use the alternating intense/sparse pattern")
     .opt("out", "results/serve.csv", "per-request CSV")
@@ -427,6 +433,7 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         mode,
         workers,
         router,
+        kv_layout: KvLayout::parse(args.get("kv-layout")?)?,
         ..ServerConfig::default()
     };
     let policy = PolicySpec::parse(args.get("policy")?)?;
@@ -437,6 +444,16 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
     }
     if let Some(snapshot) = &out.policy_snapshot {
         println!("fitted model: {}", snapshot.compact());
+    }
+    if let Some(kv) = &out.kv_blocks {
+        println!(
+            "kv blocks: peak {} / {} ({} tokens each, internal frag {:.1}%){}",
+            kv.peak_in_use,
+            kv.capacity,
+            kv.block_size,
+            kv.mean_internal_frag * 100.0,
+            if kv.is_leak_free() { "" } else { " — LEAKED" }
+        );
     }
     let s = out.recorder.summary();
     let (p50, p90, p99) = out.recorder.percentiles();
@@ -487,6 +504,12 @@ fn cmd_sim(argv: Vec<String>) -> Result<()> {
         .opt("interval", "0.3", "mean inter-arrival seconds")
         .opt("cv", "1.0", "coefficient of variation")
         .opt("prompt-len", "16", "prompt length")
+        .opt(
+            "kv-layout",
+            "paged",
+            "paged | dense (dense charges the chunked reshape re-ingest the \
+             engine pays without a block manager)",
+        )
         .opt("seed", "1", "trace seed")
         .opt("drift-at", "0", "acceptance drift time in virtual seconds (0 = off)")
         .opt("drift-c", "0.55", "post-drift acceptance c")
@@ -525,6 +548,8 @@ fn cmd_sim(argv: Vec<String>) -> Result<()> {
         max_batch: 16,
         max_new_tokens: 128,
         host_overhead: 0.2e-3,
+        kv_layout: KvLayout::parse(args.get("kv-layout")?)?,
+        kv_block: specbatch::kvcache::DEFAULT_BLOCK_SIZE,
         seed: args.get_u64("seed")?,
     };
     let policy_spec = PolicySpec::parse(args.get("policy")?)?;

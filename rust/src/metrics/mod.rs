@@ -187,10 +187,14 @@ pub struct RoundEvent {
     pub accepted: usize,
     /// measured cost of the round in seconds (wall or virtual)
     pub round_cost: f64,
+    /// KV blocks held at the round boundary under the paged layout (the
+    /// block-utilization counter; 0 under the dense layout and on the
+    /// batch-to-completion path, which reconstructs rounds post hoc)
+    pub kv_blocks: usize,
 }
 
 /// Export a round timeline (columns: t_s, epoch, live, queued, s,
-/// accepted, round_cost_s).
+/// accepted, round_cost_s, kv_blocks).
 pub fn rounds_to_csv(events: &[RoundEvent]) -> Csv {
     let mut csv = Csv::new(&[
         "t_s",
@@ -200,6 +204,7 @@ pub fn rounds_to_csv(events: &[RoundEvent]) -> Csv {
         "s",
         "accepted",
         "round_cost_s",
+        "kv_blocks",
     ]);
     for e in events {
         csv.row(&[
@@ -210,6 +215,7 @@ pub fn rounds_to_csv(events: &[RoundEvent]) -> Csv {
             e.s.to_string(),
             e.accepted.to_string(),
             f(e.round_cost),
+            e.kv_blocks.to_string(),
         ]);
     }
     csv
@@ -320,6 +326,7 @@ mod tests {
                 s: 5,
                 accepted: 2,
                 round_cost: 0.03,
+                kv_blocks: 2,
             },
             RoundEvent {
                 t: 0.2,
@@ -329,14 +336,20 @@ mod tests {
                 s: 2,
                 accepted: 5,
                 round_cost: 0.04,
+                kv_blocks: 9,
             },
         ];
         let out = rounds_to_csv(&events).to_string();
         let lines: Vec<&str> = out.lines().collect();
-        assert_eq!(lines[0], "t_s,epoch,live,queued,s,accepted,round_cost_s");
+        assert_eq!(
+            lines[0],
+            "t_s,epoch,live,queued,s,accepted,round_cost_s,kv_blocks"
+        );
         assert_eq!(lines.len(), 3);
         assert!(lines[1].contains(",1,1,3,5,2,"), "{}", lines[1]);
+        assert!(lines[1].ends_with(",2"), "{}", lines[1]);
         assert!(lines[2].contains(",1,4,0,2,5,"), "{}", lines[2]);
+        assert!(lines[2].ends_with(",9"), "{}", lines[2]);
     }
 
     #[test]

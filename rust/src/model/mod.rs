@@ -69,6 +69,18 @@ impl Kv {
             Kv::Stub(kv) => kv.reset_row(row),
         }
     }
+
+    /// Set a row's ingest counter directly — the paged-layout block-table
+    /// remap: the carried row's cache entries already exist (indexed by
+    /// its block chain), so admission transfers the counter instead of
+    /// re-ingesting the context.
+    pub fn set_row_ingested(&mut self, row: usize, ingested: u32) {
+        match self {
+            #[cfg(feature = "pjrt")]
+            Kv::Pjrt(kv) => kv.ingested[row] = ingested,
+            Kv::Stub(kv) => kv.ingested[row] = ingested,
+        }
+    }
 }
 
 /// A model of either backend, exposing the three-step calling convention.

@@ -36,6 +36,7 @@ use crate::cluster::server::ShardGauge;
 use crate::cluster::ShardBreakdown;
 use crate::config::{PolicySpec, RouterSpec};
 use crate::engine::{Engine, EngineConfig};
+use crate::kvcache::{KvBlockStats, KvLayout};
 use crate::log_info;
 use crate::metrics::{LatencyRecorder, RequestRecord, RoundEvent};
 use crate::policy::{Fixed, LutAdaptive, ModelBased, NoSpec, SpeculationPolicy};
@@ -85,6 +86,12 @@ pub struct ServerConfig {
     pub workers: usize,
     /// how the dispatcher routes arrivals across shards when `workers > 1`
     pub router: RouterSpec,
+    /// per-slot KV organisation: `Paged` makes epoch reshape a block-
+    /// table remap (stub backend only).  Defaults to the
+    /// `SPECBATCH_KV_LAYOUT` env override, else dense; the worker honours
+    /// an explicit non-default choice here OR on `engine.kv_layout`
+    /// (whichever deviates from the default wins)
+    pub kv_layout: KvLayout,
 }
 
 impl Default for ServerConfig {
@@ -97,6 +104,7 @@ impl Default for ServerConfig {
             mode: SchedulingMode::Static,
             workers: 1,
             router: RouterSpec::RoundRobin,
+            kv_layout: KvLayout::default_layout(),
         }
     }
 }
@@ -128,6 +136,17 @@ pub enum ServerMsg {
     Shutdown,
 }
 
+/// What a worker delivers at shutdown: its per-round timeline, the
+/// policy's fitted-model snapshot (online policies only), and the KV
+/// block-pool accounting (paged layout only — the leak tests assert
+/// `is_leak_free()` on it).
+#[derive(Debug, Default)]
+pub struct WorkerReport {
+    pub timeline: Vec<RoundEvent>,
+    pub policy_snapshot: Option<Json>,
+    pub kv_blocks: Option<KvBlockStats>,
+}
+
 /// Handle to a running server thread.
 pub struct ServerHandle {
     pub requests: Sender<ServerMsg>,
@@ -136,8 +155,8 @@ pub struct ServerHandle {
     /// LUT resolved by the worker (present once ready when adaptive /
     /// model-based, where it seeds the cold-start fallback)
     lut_rx: Receiver<Option<Lut>>,
-    /// per-round timeline + fitted-model snapshot, delivered on exit
-    report_rx: Receiver<(Vec<RoundEvent>, Option<Json>)>,
+    /// timeline + snapshot + block accounting, delivered on exit
+    report_rx: Receiver<WorkerReport>,
 }
 
 impl ServerHandle {
@@ -149,9 +168,9 @@ impl ServerHandle {
             .map_err(|_| anyhow!("server did not become ready within {timeout:?}"))
     }
 
-    /// Stop the worker and collect its per-round timeline plus the
-    /// policy's fitted-model snapshot (model-based policies only).
-    pub fn shutdown(self) -> Result<(Vec<RoundEvent>, Option<Json>)> {
+    /// Stop the worker and collect its shutdown report (per-round
+    /// timeline, fitted-model snapshot, KV block accounting).
+    pub fn shutdown(self) -> Result<WorkerReport> {
         let _ = self.requests.send(ServerMsg::Shutdown);
         match self.join.join() {
             Ok(r) => r?,
@@ -179,7 +198,7 @@ pub fn spawn_server(
     let (req_tx, req_rx) = channel::<ServerMsg>();
     let (resp_tx, resp_rx) = channel::<ServerResponse>();
     let (lut_tx, lut_rx) = channel::<Option<Lut>>();
-    let (report_tx, report_rx) = channel::<(Vec<RoundEvent>, Option<Json>)>();
+    let (report_tx, report_rx) = channel::<WorkerReport>();
 
     let join = std::thread::Builder::new()
         .name("specbatch-server".into())
@@ -268,11 +287,25 @@ pub(crate) fn worker(
     req_rx: Receiver<ServerMsg>,
     resp_tx: Sender<ServerResponse>,
     lut_tx: Sender<Option<Lut>>,
-    report_tx: Sender<(Vec<RoundEvent>, Option<Json>)>,
+    report_tx: Sender<WorkerReport>,
     gauge: Option<std::sync::Arc<ShardGauge>>,
 ) -> Result<()> {
-    // announce readiness, serve, deliver timeline + model snapshot —
-    // shared by both backends once the engine and policy are resolved
+    // two knobs can name the layout (the embedded EngineConfig and the
+    // server-level field, both defaulting to the env-driven layout); an
+    // explicit non-default choice on either wins, so setting just one of
+    // them is never silently clobbered by the other's default
+    let default_layout = KvLayout::default_layout();
+    let engine_cfg = EngineConfig {
+        kv_layout: if cfg.kv_layout != default_layout {
+            cfg.kv_layout
+        } else {
+            cfg.engine.kv_layout
+        },
+        ..cfg.engine.clone()
+    };
+    // announce readiness, serve, deliver timeline + model snapshot +
+    // block accounting — shared by both backends once the engine and
+    // policy are resolved
     let go = |engine: &mut Engine<'_>,
               mut policy: Box<dyn SpeculationPolicy>,
               lut_used: Option<Lut>|
@@ -289,14 +322,18 @@ pub(crate) fn worker(
             &resp_tx,
             gauge.as_deref(),
         )?;
-        let _ = report_tx.send((timeline, policy.snapshot()));
+        let _ = report_tx.send(WorkerReport {
+            timeline,
+            policy_snapshot: policy.snapshot(),
+            kv_blocks: engine.kv_block_stats(),
+        });
         Ok(())
     };
     match backend {
         #[cfg(feature = "pjrt")]
         Backend::Artifacts(artifacts_dir) => {
             let rt = Runtime::load(&artifacts_dir)?;
-            let mut engine = Engine::new(&rt, cfg.engine.clone())?;
+            let mut engine = Engine::new(&rt, engine_cfg)?;
             // resolve the policy, profiling if necessary
             let (policy, lut_used) = {
                 let engine = &mut engine;
@@ -322,7 +359,7 @@ pub(crate) fn worker(
             go(&mut engine, policy, lut_used)
         }
         Backend::Stub(spec) => {
-            let mut engine = Engine::stub(spec, cfg.engine.clone())?;
+            let mut engine = Engine::stub(spec, engine_cfg)?;
             let (policy, lut_used) = resolve_policy(&policy_spec, lut, || {
                 log_info!("server: stub backend — using the simulator's LUT");
                 Ok(stub_adaptive_lut(&engine, cfg.max_batch))
@@ -411,6 +448,9 @@ fn serve_static(
                 s: info.s,
                 accepted: info.accepted,
                 round_cost: info.round_time,
+                // batch-to-completion rounds are reconstructed after the
+                // epoch released its blocks; no per-round sample exists
+                kv_blocks: 0,
             });
         }
         let spec_len = out.stats.spec_lens.first().copied().unwrap_or(0);
@@ -569,6 +609,10 @@ pub struct ExperimentOutcome {
     pub policy_snapshot: Option<Json>,
     /// per-shard breakdowns (empty on the single-worker paths)
     pub shards: Vec<ShardBreakdown>,
+    /// KV block-pool accounting at shutdown (paged layout only; cluster
+    /// runs merge the per-shard pools).  A clean run is leak-free:
+    /// `free == capacity` — `rust/tests/kv_equivalence.rs` pins it.
+    pub kv_blocks: Option<KvBlockStats>,
 }
 
 /// Run one full client/server experiment: spawn server, wait until ready,
@@ -626,12 +670,13 @@ pub fn run_experiment(
     client
         .join()
         .map_err(|_| anyhow!("client thread panicked"))??;
-    let (timeline, policy_snapshot) = server.shutdown()?;
+    let report = server.shutdown()?;
     Ok(ExperimentOutcome {
         recorder,
         lut: lut_used,
-        timeline,
-        policy_snapshot,
+        timeline: report.timeline,
+        policy_snapshot: report.policy_snapshot,
         shards: Vec::new(),
+        kv_blocks: report.kv_blocks,
     })
 }

@@ -35,6 +35,7 @@
 //! offline LUT keeps serving its now-stale `s`; the online policy
 //! re-fits and re-converges — `tests/online_policy.rs` pins that payoff.
 
+use crate::kvcache::{KvLayout, DEFAULT_BLOCK_SIZE};
 use crate::metrics::{LatencyRecorder, RequestRecord, RoundEvent};
 use crate::policy::{RoundFeedback, SpeculationPolicy};
 use crate::traffic::Trace;
@@ -65,6 +66,14 @@ pub struct SimConfig {
     pub max_new_tokens: usize,
     /// host-side per-round overhead (acceptance logic, staging), seconds
     pub host_overhead: f64,
+    /// KV layout the continuous mirror charges epoch-reshape costs for:
+    /// `Dense` re-ingests every carried context at a bucket growth
+    /// (chunked verify + SSM catch-up, mirroring the engine), `Paged`
+    /// reshapes by block-table remap at zero cost.  Defaults to `Paged`
+    /// — which is also what earlier revisions implicitly idealized.
+    pub kv_layout: KvLayout,
+    /// tokens per KV block for the timeline's block-utilization column
+    pub kv_block: usize,
     pub seed: u64,
 }
 
@@ -78,6 +87,8 @@ impl SimConfig {
             max_batch: 16,
             max_new_tokens: 128,
             host_overhead: 0.2e-3,
+            kv_layout: KvLayout::Paged,
+            kv_block: DEFAULT_BLOCK_SIZE,
             seed: 0,
         }
     }
@@ -102,6 +113,58 @@ pub fn round_cost(cfg: &SimConfig, batch: usize, s: usize, ctx: usize) -> f64 {
         s as f64 * cfg.ssm.t_draft(batch, ctx)
             + cfg.llm.t_verify(batch, s, ctx)
             + cfg.host_overhead
+    }
+}
+
+/// Chunk the dense reshape re-ingest runs at: the stub engine's largest
+/// verify span + 1 (`Engine::ingest_admitted` feeds contexts this wide).
+const RESHAPE_CHUNK: usize = 9;
+
+/// The engine's batch bucket for `n` live rows (compiled buckets are
+/// powers of two).  Shared with the cluster mirror (`cluster::sim`).
+pub(crate) fn sim_bucket_for(n: usize) -> usize {
+    n.next_power_of_two().max(1)
+}
+
+/// KV blocks the live rows occupy under the paged layout (the timeline's
+/// block-utilization column; the DES models the LLM cache only).
+/// Shared with the cluster mirror (`cluster::sim`).
+pub(crate) fn kv_blocks_of(cfg: &SimConfig, ctx_lens: impl Iterator<Item = usize>) -> usize {
+    if cfg.kv_layout != KvLayout::Paged {
+        return 0;
+    }
+    ctx_lens.map(|c| c.div_ceil(cfg.kv_block.max(1))).sum()
+}
+
+/// Virtual cost of an epoch reshape carrying rows with the given context
+/// lengths into a bucket executing at `width` rows.
+///
+/// `Dense` mirrors what the engine actually pays: the LLM re-ingests the
+/// longest carried context in `RESHAPE_CHUNK`-token verify passes (all
+/// rows ingest in parallel inside each pass), and the SSM catches up two
+/// tokens per throwaway speculate call (charged here at reshape time
+/// rather than at the next speculative round — the work is the same).
+/// `Paged` reshapes by block-table remap: a handful of pointer writes,
+/// modeled as free — which also keeps the paper-default (`Paged`)
+/// numbers bit-identical to earlier revisions, where the DES implicitly
+/// idealized reshape.
+pub fn reshape_cost(cfg: &SimConfig, carried_ctx: &[usize], width: usize) -> f64 {
+    if carried_ctx.is_empty() {
+        return 0.0;
+    }
+    match cfg.kv_layout {
+        KvLayout::Paged => 0.0,
+        KvLayout::Dense => {
+            let max_ctx = carried_ctx.iter().copied().max().unwrap_or(0);
+            let mean_ctx = (carried_ctx.iter().sum::<usize>() as f64
+                / carried_ctx.len() as f64)
+                .ceil() as usize;
+            let llm_passes = max_ctx.div_ceil(RESHAPE_CHUNK);
+            let ssm_passes = max_ctx.div_ceil(2);
+            llm_passes as f64
+                * (cfg.llm.t_verify(width, RESHAPE_CHUNK - 1, mean_ctx) + cfg.host_overhead)
+                + ssm_passes as f64 * cfg.ssm.t_draft(width, mean_ctx)
+        }
     }
 }
 
@@ -253,6 +316,9 @@ pub fn simulate_trace_continuous(
     let mut next = 0usize;
     let mut t = 0.0f64;
     let mut epoch = 0usize;
+    // padded bucket of the active epoch (0 = idle); admissions that push
+    // the live batch past it trigger an epoch reshape
+    let mut cur_bucket = 0usize;
 
     while next < items.len() || !live.is_empty() {
         if live.is_empty() {
@@ -261,11 +327,13 @@ pub fn simulate_trace_continuous(
                 t = items[next].send_at;
             }
             epoch += 1;
+            cur_bucket = 0;
         }
 
         // --- admit everything due, up to the live-capacity cap ---
         let mut n_admit = 0usize;
         let mut plen_sum = 0usize;
+        let n_before = live.len();
         let admit_t = t;
         while next < items.len() && items[next].send_at <= t && live.len() < cfg.max_batch {
             let plen = items[next].prompt.ids.len();
@@ -288,6 +356,20 @@ pub fn simulate_trace_continuous(
             if may_speculate {
                 t += cfg.ssm.t_prefill(n_admit, mean_plen);
             }
+            // epoch reshape: bucket growth carries the resident rows —
+            // O(context) re-ingest under Dense, O(1) remap under Paged.
+            // The bucket is monotone within an epoch (the real batcher
+            // never shrinks an open epoch, so shrinking `live` must not
+            // set up a phantom re-growth charge later).
+            let want = sim_bucket_for(live.len());
+            if cur_bucket != 0 && want > cur_bucket && n_before > 0 {
+                let carried: Vec<usize> = live[..n_before]
+                    .iter()
+                    .map(|r| r.plen + r.generated)
+                    .collect();
+                t += reshape_cost(cfg, &carried, live.len());
+            }
+            cur_bucket = cur_bucket.max(want);
             let b = live.len();
             let s_now = if may_speculate { policy.choose(b, 8) } else { 0 };
             for row in live.iter_mut().rev().take(n_admit) {
@@ -336,6 +418,7 @@ pub fn simulate_trace_continuous(
             s,
             accepted: accepted_total,
             round_cost: rc,
+            kv_blocks: kv_blocks_of(cfg, live.iter().map(|r| r.plen + r.generated)),
         });
 
         // --- retire finished rows immediately, freeing capacity ---
@@ -551,6 +634,86 @@ mod tests {
         let big_s1 = per_token_latency(&cfg, 32, 1, 128, 400, &mut rng);
         let big_s6 = per_token_latency(&cfg, 32, 6, 128, 400, &mut rng);
         assert!(big_s6 > big_s1, "b=32: s=6 ({big_s6}) !> s=1 ({big_s1})");
+    }
+
+    #[test]
+    fn reshape_cost_is_free_under_paged_and_grows_with_context_under_dense() {
+        let mut c = cfg();
+        assert_eq!(reshape_cost(&c, &[], 8), 0.0, "no carried rows, no cost");
+        assert_eq!(c.kv_layout, KvLayout::Paged, "paper default idealizes reshape");
+        assert_eq!(
+            reshape_cost(&c, &[120, 40], 8),
+            0.0,
+            "paged reshape is a free block-table remap"
+        );
+        c.kv_layout = KvLayout::Dense;
+        let short = reshape_cost(&c, &[24], 8);
+        let long = reshape_cost(&c, &[120], 8);
+        assert!(short > 0.0);
+        assert!(
+            long > 2.0 * short,
+            "dense reshape must scale with the carried context: {short} vs {long}"
+        );
+    }
+
+    #[test]
+    fn dense_reshapes_slow_the_continuous_path_paged_does_not() {
+        // staggered heavy traffic: live batches repeatedly grow across
+        // bucket edges, so the dense layout keeps paying re-ingest
+        let trace = Trace::generate(
+            &TrafficPattern::Stationary {
+                interval: 0.05,
+                cv: 1.0,
+            },
+            &pool(),
+            150,
+            31,
+        );
+        let paged = cfg();
+        let mut dense = cfg();
+        dense.kv_layout = KvLayout::Dense;
+        let (rec_p, rounds_p) = simulate_trace_continuous(&paged, &mut Fixed(2), &trace);
+        let (rec_d, _) = simulate_trace_continuous(&dense, &mut Fixed(2), &trace);
+        assert_eq!(rec_p.len(), 150);
+        assert_eq!(rec_d.len(), 150);
+        let (mp, md) = (rec_p.summary().mean, rec_d.summary().mean);
+        assert!(
+            md > mp * 1.01,
+            "dense reshape re-ingest should cost real latency: dense {md:.3}s \
+             vs paged {mp:.3}s"
+        );
+        // the paged timeline records block utilization: every live row
+        // holds at most ceil((12 prompt + 32 generated) / 16) = 3 blocks
+        assert!(rounds_p.iter().any(|e| e.kv_blocks > 0));
+        assert!(rounds_p.iter().all(|e| e.kv_blocks <= 3 * e.live));
+    }
+
+    #[test]
+    fn layouts_agree_exactly_when_no_reshape_occurs() {
+        // arrivals so sparse every request is served alone at bucket 1:
+        // no bucket ever grows, so the two layouts charge identical costs
+        // and consume identical randomness
+        let trace = Trace::generate(
+            &TrafficPattern::Stationary {
+                interval: 10.0,
+                cv: 0.1,
+            },
+            &pool(),
+            20,
+            5,
+        );
+        let paged = cfg();
+        let mut dense = cfg();
+        dense.kv_layout = KvLayout::Dense;
+        let (rec_p, _) = simulate_trace_continuous(&paged, &mut Fixed(3), &trace);
+        let (rec_d, _) = simulate_trace_continuous(&dense, &mut Fixed(3), &trace);
+        let lat = |r: &LatencyRecorder| {
+            let mut v: Vec<(u64, f64)> =
+                r.records().iter().map(|x| (x.id, x.latency())).collect();
+            v.sort_by(|a, b| a.0.cmp(&b.0));
+            v
+        };
+        assert_eq!(lat(&rec_p), lat(&rec_d));
     }
 
     #[test]

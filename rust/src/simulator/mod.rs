@@ -21,7 +21,7 @@ pub mod hw;
 pub use acceptance::AcceptanceProcess;
 pub use cost::{CostModel, ModelProfile};
 pub use des::{
-    batch_service_time, per_token_latency, round_cost, simulate_trace,
+    batch_service_time, per_token_latency, reshape_cost, round_cost, simulate_trace,
     simulate_trace_continuous, AcceptanceDrift, SimConfig,
 };
 pub use hw::GpuProfile;

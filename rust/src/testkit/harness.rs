@@ -1,0 +1,132 @@
+//! Shared trace/experiment scaffolding for the integration tests.
+//!
+//! `tests/batcher_stub.rs`, `tests/continuous_sim.rs` and
+//! `tests/cluster_routing.rs` each used to grow their own prompt pools,
+//! paper-profile sim configs and conservation assertions; this module is
+//! the single copy they (and every newer test, e.g.
+//! `tests/kv_equivalence.rs`) pull from instead.
+
+use crate::dataset::Prompt;
+use crate::engine::EngineConfig;
+use crate::kvcache::KvLayout;
+use crate::metrics::LatencyRecorder;
+use crate::server::{ExperimentOutcome, SchedulingMode, ServerConfig};
+use crate::simulator::{CostModel, GpuProfile, ModelProfile, SimConfig};
+use crate::testkit::stub::{StubModel, StubRole, StubSpec};
+use crate::traffic::{Trace, TrafficPattern};
+
+/// The stub integration tests' prompt pool: eight token-varied prompts
+/// of 3..=10 tokens, all inside the default stub vocabulary.
+pub fn stub_prompt_pool() -> Vec<Prompt> {
+    (3..=10usize)
+        .map(|n| Prompt {
+            ids: (0..n).map(|k| 4 + ((k * 5 + n) % 50) as i32).collect(),
+            text: String::new(),
+        })
+        .collect()
+}
+
+/// A single-prompt pool of constant length (the DES tests' workload).
+pub fn const_prompt_pool(len: usize) -> Vec<Prompt> {
+    vec![Prompt {
+        ids: vec![1; len],
+        text: String::new(),
+    }]
+}
+
+/// Prompt lengths `lo..=hi` of ones — the Fig. 5 pool shape.
+pub fn ramp_prompt_pool(lo: usize, hi: usize) -> Vec<Prompt> {
+    (lo..=hi)
+        .map(|n| Prompt {
+            ids: vec![1; n],
+            text: String::new(),
+        })
+        .collect()
+}
+
+/// The paper-scale simulator profile every acceptance test compares on:
+/// OPT-6.7B target + OPT-125M draft on an RTX 3090.
+pub fn paper_sim_config(seed: u64) -> SimConfig {
+    let mut cfg = SimConfig::paper_default(
+        CostModel::new(ModelProfile::OPT_6_7B, GpuProfile::RTX3090),
+        CostModel::new(ModelProfile::OPT_125M, GpuProfile::RTX3090),
+    );
+    cfg.seed = seed;
+    cfg
+}
+
+/// Stationary Gamma traffic over `pool`.
+pub fn stationary_trace(
+    pool: &[Prompt],
+    n: usize,
+    seed: u64,
+    interval: f64,
+    cv: f64,
+) -> Trace {
+    Trace::generate(&TrafficPattern::Stationary { interval, cv }, pool, n, seed)
+}
+
+/// The Fig. 6 alternating intense/sparse pattern, optionally
+/// time-compressed (`time_scale < 1` = denser).
+pub fn fig6_trace(pool: &[Prompt], n: usize, seed: u64, time_scale: f64) -> Trace {
+    Trace::generate(&TrafficPattern::fig6(), pool, n, seed).time_scaled(time_scale)
+}
+
+/// Dense stub traffic for the e2e server tests: 2 ms mean inter-arrival
+/// over the stub prompt pool.
+pub fn quick_stub_trace(n: usize, seed: u64) -> Trace {
+    stationary_trace(&stub_prompt_pool(), n, seed, 0.002, 1.0)
+}
+
+/// The small stub server config the e2e tests run (4-row cap, 8 tokens
+/// per request) at an explicit KV layout.
+pub fn stub_server_cfg(mode: SchedulingMode, kv_layout: KvLayout) -> ServerConfig {
+    ServerConfig {
+        max_batch: 4,
+        max_new_tokens: 8,
+        mode,
+        kv_layout,
+        engine: EngineConfig {
+            kv_layout,
+            ..EngineConfig::default()
+        },
+        ..ServerConfig::default()
+    }
+}
+
+/// The greedy reference chain of the stub LLM: the exact tokens any
+/// lossless scheduling of a prompt ending in `start` must produce.
+pub fn llm_chain(spec: &StubSpec, start: i32, n: usize) -> Vec<i32> {
+    let m = StubModel::new(spec.clone(), StubRole::Llm);
+    let mut out = Vec::with_capacity(n);
+    let mut cur = start;
+    for _ in 0..n {
+        cur = m.llm_next(cur);
+        out.push(cur);
+    }
+    out
+}
+
+/// Every id `0..n` served exactly once, with causal timestamps.
+pub fn assert_conserves_ids(rec: &LatencyRecorder, n: usize) {
+    assert_eq!(rec.len(), n, "request conservation");
+    let mut ids: Vec<u64> = rec.records().iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..n as u64).collect::<Vec<u64>>());
+    for r in rec.records() {
+        assert!(r.started_at >= r.sent_at - 1e-6, "start before send");
+        assert!(r.finished_at >= r.started_at, "finish before start");
+    }
+}
+
+/// Block-accounting leak check over an experiment outcome: under the
+/// paged layout every block must be back on the free list at shutdown.
+/// (Dense outcomes carry no stats — nothing to check.)
+pub fn assert_no_block_leaks(out: &ExperimentOutcome) {
+    if let Some(stats) = &out.kv_blocks {
+        assert!(
+            stats.is_leak_free(),
+            "KV blocks leaked or double-freed: {stats:?}"
+        );
+    }
+}

@@ -17,6 +17,7 @@
 //! On failure the harness re-runs the failing case with the recorded seed
 //! and reports it, so `SPECBATCH_PT_SEED=<seed>` reproduces it exactly.
 
+pub mod harness;
 pub mod stub;
 
 use crate::util::prng::Pcg64;

@@ -1,42 +1,25 @@
 //! End-to-end server/client integration on the **stub backend**: real
 //! worker thread, real message queues, real Gamma traffic — and no
 //! artifacts, so this runs in the default build/CI.  Covers both
-//! scheduling modes and the stub adaptive-LUT fallback.
+//! scheduling modes and the stub adaptive-LUT fallback.  Shared
+//! scaffolding lives in `specbatch::testkit::harness`.
 
 use specbatch::config::PolicySpec;
-use specbatch::dataset::Prompt;
+use specbatch::kvcache::KvLayout;
 use specbatch::server::{run_experiment, Backend, SchedulingMode, ServerConfig};
+use specbatch::testkit::harness::{
+    assert_conserves_ids, assert_no_block_leaks, quick_stub_trace, stub_server_cfg,
+};
 use specbatch::testkit::stub::StubSpec;
-use specbatch::traffic::{Trace, TrafficPattern};
-
-fn pool() -> Vec<Prompt> {
-    (3..=10usize)
-        .map(|n| Prompt {
-            ids: (0..n).map(|k| 4 + ((k * 5 + n) % 50) as i32).collect(),
-            text: String::new(),
-        })
-        .collect()
-}
+use specbatch::traffic::Trace;
 
 fn stub_cfg(mode: SchedulingMode) -> ServerConfig {
-    ServerConfig {
-        max_batch: 4,
-        max_new_tokens: 8,
-        mode,
-        ..ServerConfig::default()
-    }
+    // the default layout honours the SPECBATCH_KV_LAYOUT matrix override
+    stub_server_cfg(mode, KvLayout::default_layout())
 }
 
 fn quick_trace(n: usize, seed: u64) -> Trace {
-    Trace::generate(
-        &TrafficPattern::Stationary {
-            interval: 0.002,
-            cv: 1.0,
-        },
-        &pool(),
-        n,
-        seed,
-    )
+    quick_stub_trace(n, seed)
 }
 
 #[test]
@@ -53,12 +36,8 @@ fn stub_server_static_accounts_every_request() {
     assert!(out.lut.is_none());
     assert!(out.policy_snapshot.is_none());
     let (rec, rounds) = (&out.recorder, &out.timeline);
-    assert_eq!(rec.len(), 12);
-    let mut ids: Vec<u64> = rec.records().iter().map(|r| r.id).collect();
-    ids.sort_unstable();
-    assert_eq!(ids, (0..12).collect::<Vec<u64>>());
+    assert_conserves_ids(rec, 12);
     for r in rec.records() {
-        assert!(r.started_at >= r.sent_at - 1e-6, "start before send");
         assert!(r.finished_at > r.started_at, "finish before start");
         assert_eq!(r.tokens, 8, "stub never emits <eos>");
         assert!(r.batch >= 1 && r.batch <= 4);
@@ -66,6 +45,7 @@ fn stub_server_static_accounts_every_request() {
     // static mode also surfaces a per-round timeline
     assert!(!rounds.is_empty());
     assert!(rounds.iter().all(|e| e.live >= 1 && e.live <= 4));
+    assert_no_block_leaks(&out);
 }
 
 #[test]
@@ -80,13 +60,8 @@ fn stub_server_continuous_accounts_every_request_with_timeline() {
     )
     .expect("experiment");
     let (rec, rounds) = (&out.recorder, &out.timeline);
-    assert_eq!(rec.len(), 16);
-    let mut ids: Vec<u64> = rec.records().iter().map(|r| r.id).collect();
-    ids.sort_unstable();
-    assert_eq!(ids, (0..16).collect::<Vec<u64>>());
+    assert_conserves_ids(rec, 16);
     for r in rec.records() {
-        assert!(r.started_at >= r.sent_at - 1e-6, "admission before send");
-        assert!(r.finished_at >= r.started_at, "finish before admission");
         assert_eq!(r.tokens, 8);
         assert!(r.batch >= 1 && r.batch <= 4, "live cap violated: {}", r.batch);
         assert!(r.spec_len <= 2);
@@ -101,6 +76,7 @@ fn stub_server_continuous_accounts_every_request_with_timeline() {
     }
     assert!(rounds.iter().all(|e| e.round_cost >= 0.0));
     assert!(rounds.iter().all(|e| e.accepted <= e.s * e.live));
+    assert_no_block_leaks(&out);
 }
 
 #[test]
@@ -120,6 +96,7 @@ fn stub_server_adaptive_falls_back_to_the_simulated_lut() {
         assert!(b >= 1 && b <= 4, "bucket {b} beyond max_batch");
         assert!(s <= 8, "absurd speculation length {s} for bucket {b}");
     }
+    assert_no_block_leaks(&out);
 }
 
 #[test]
@@ -158,10 +135,7 @@ fn stub_server_model_based_serves_and_reports_a_snapshot() {
         &trace,
     )
     .expect("experiment");
-    assert_eq!(out.recorder.len(), 20);
-    let mut ids: Vec<u64> = out.recorder.records().iter().map(|r| r.id).collect();
-    ids.sort_unstable();
-    assert_eq!(ids, (0..20).collect::<Vec<u64>>());
+    assert_conserves_ids(&out.recorder, 20);
     // the online policy is seeded with a cold-start LUT and reports a
     // fitted-model snapshot at shutdown
     assert!(out.lut.is_some(), "model-based must be seeded with a LUT");
@@ -174,4 +148,5 @@ fn stub_server_model_based_serves_and_reports_a_snapshot() {
     for r in out.recorder.records() {
         assert_eq!(r.tokens, 8);
     }
+    assert_no_block_leaks(&out);
 }

@@ -18,11 +18,9 @@
 use specbatch::cluster::sim::{simulate_trace_cluster, ClusterReport};
 use specbatch::cluster::{build_router, replicate_policies};
 use specbatch::config::{PolicySpec, RouterSpec};
-use specbatch::dataset::Prompt;
-use specbatch::simulator::{
-    simulated_lut, CostModel, GpuProfile, ModelProfile, SimConfig,
-};
-use specbatch::traffic::{Trace, TrafficPattern};
+use specbatch::simulator::{simulated_lut, SimConfig};
+use specbatch::testkit::harness::{const_prompt_pool, fig6_trace, paper_sim_config};
+use specbatch::traffic::Trace;
 
 const WORKERS: usize = 4;
 const N_REQUESTS: usize = 800;
@@ -32,20 +30,11 @@ const TIME_SCALE: f64 = 0.15;
 const SEEDS: [u64; 3] = [5, 12, 14];
 
 fn cfg(seed: u64) -> SimConfig {
-    let mut c = SimConfig::paper_default(
-        CostModel::new(ModelProfile::OPT_6_7B, GpuProfile::RTX3090),
-        CostModel::new(ModelProfile::OPT_125M, GpuProfile::RTX3090),
-    );
-    c.seed = seed;
-    c
+    paper_sim_config(seed)
 }
 
 fn bursty_trace(seed: u64) -> Trace {
-    let pool = vec![Prompt {
-        ids: vec![1; 16],
-        text: String::new(),
-    }];
-    Trace::generate(&TrafficPattern::fig6(), &pool, N_REQUESTS, seed).time_scaled(TIME_SCALE)
+    fig6_trace(&const_prompt_pool(16), N_REQUESTS, seed, TIME_SCALE)
 }
 
 fn run(router: RouterSpec, seed: u64) -> ClusterReport {

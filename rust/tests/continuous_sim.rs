@@ -8,39 +8,19 @@
 
 use std::collections::BTreeSet;
 
-use specbatch::dataset::Prompt;
 use specbatch::metrics::RoundEvent;
 use specbatch::policy::{Fixed, LutAdaptive};
-use specbatch::simulator::{
-    simulate_trace, simulate_trace_continuous, simulated_lut, CostModel, GpuProfile,
-    ModelProfile, SimConfig,
-};
-use specbatch::traffic::{Trace, TrafficPattern};
+use specbatch::simulator::{simulate_trace, simulate_trace_continuous, simulated_lut, SimConfig};
+use specbatch::testkit::harness::{paper_sim_config, ramp_prompt_pool, stationary_trace};
+use specbatch::traffic::Trace;
 
 fn paper_cfg() -> SimConfig {
-    SimConfig::paper_default(
-        CostModel::new(ModelProfile::OPT_6_7B, GpuProfile::RTX3090),
-        CostModel::new(ModelProfile::OPT_125M, GpuProfile::RTX3090),
-    )
+    paper_sim_config(0)
 }
 
 fn fig5_trace() -> Trace {
     // prompt lengths sampled like the dataset's 4..24 range (fig5 bench)
-    let pool: Vec<Prompt> = (4..=24)
-        .map(|n| Prompt {
-            ids: vec![1; n],
-            text: String::new(),
-        })
-        .collect();
-    Trace::generate(
-        &TrafficPattern::Stationary {
-            interval: 0.2,
-            cv: 1.0,
-        },
-        &pool,
-        400,
-        5,
-    )
+    stationary_trace(&ramp_prompt_pool(4, 24), 400, 5, 0.2, 1.0)
 }
 
 /// One epoch's rounds must show s adapting to the live batch size.

@@ -1,0 +1,293 @@
+//! Cross-layout equivalence + block-accounting acceptance tests for the
+//! paged KV block manager (`specbatch::kvcache`).
+//!
+//! The layout seam must be **observationally invisible**: under randomized
+//! admit/retire/reshape schedules over seeded traces, `Dense` and `Paged`
+//! engines must produce bit-identical generated tokens and acceptance
+//! counts — only the ingestion call pattern (and therefore cost) may
+//! differ.  On top of that, the pinned reshape test asserts the tentpole
+//! payoff directly: **zero** re-prefilled tokens across an epoch reshape
+//! under `Paged` vs a positive count under `Dense`, and the leak tests
+//! assert every block returns to the free list after every stub e2e
+//! experiment, mid-stream retirement and reshape paths included.
+
+use specbatch::config::PolicySpec;
+use specbatch::engine::{AdmitRequest, Engine, EngineConfig};
+use specbatch::kvcache::{KvBlockStats, KvLayout};
+use specbatch::metrics::RoundEvent;
+use specbatch::policy::Fixed;
+use specbatch::server::{run_experiment, Backend, SchedulingMode, ServerConfig};
+use specbatch::testkit::harness::{
+    assert_conserves_ids, quick_stub_trace, stub_server_cfg,
+};
+use specbatch::testkit::stub::StubSpec;
+use specbatch::util::prng::Pcg64;
+use specbatch::{
+    batcher::{BatchRequest, BatcherConfig, ContinuousBatcher},
+    config::RouterSpec,
+};
+
+fn engine(layout: KvLayout) -> Engine<'static> {
+    Engine::stub(
+        StubSpec::default(),
+        EngineConfig {
+            kv_layout: layout,
+            ..EngineConfig::default()
+        },
+    )
+    .unwrap()
+}
+
+// ---------------------------------------------------------------- property
+
+/// One randomized serving schedule: arrival step indices + prompts, and
+/// the batcher knobs.  Derived deterministically from a seed.
+struct Schedule {
+    max_batch: usize,
+    max_new: usize,
+    arrivals: Vec<(usize, u64, Vec<i32>)>,
+}
+
+fn random_schedule(seed: u64) -> Schedule {
+    let mut rng = Pcg64::with_stream(seed, 0xE9);
+    let n = 6 + rng.next_below(9); // 6..=14 requests
+    let max_batch = 3 + rng.next_below(6); // 3..=8 live rows
+    let max_new = 6 + rng.next_below(15); // 6..=20 tokens each
+    let mut arrivals = Vec::with_capacity(n);
+    let mut step = 0usize;
+    for id in 0..n {
+        // gaps of 0..=3 rounds: bursts (reshapes) and lulls (retirement)
+        step += rng.next_below(4);
+        let plen = 1 + rng.next_below(6);
+        let prompt: Vec<i32> = (0..plen).map(|_| 4 + rng.next_below(56) as i32).collect();
+        arrivals.push((step, id as u64, prompt));
+    }
+    Schedule {
+        max_batch,
+        max_new,
+        arrivals,
+    }
+}
+
+/// Everything observable about one layout's run of a schedule: finished
+/// tokens per request, the timeline with clock/cost columns projected
+/// out, the (reingested, remapped) totals and the block accounting.
+struct RunOutcome {
+    finished: Vec<(u64, Vec<i32>)>,
+    rounds: Vec<(usize, usize, usize, usize, usize)>,
+    reingested: usize,
+    remapped: usize,
+    kv: Option<KvBlockStats>,
+}
+
+fn run_schedule(s: &Schedule, layout: KvLayout) -> RunOutcome {
+    let mut e = engine(layout);
+    let mut policy = Fixed(3);
+    let mut batcher = ContinuousBatcher::new(BatcherConfig {
+        max_batch: s.max_batch,
+        max_new_tokens: s.max_new,
+    });
+    let mut pending = s.arrivals.clone();
+    let mut finished: Vec<(u64, Vec<i32>)> = Vec::new();
+    let mut step = 0usize;
+    while batcher.has_work() || !pending.is_empty() {
+        pending.retain(|(at, id, prompt)| {
+            if *at <= step {
+                batcher.enqueue(BatchRequest {
+                    id: *id,
+                    prompt: prompt.clone(),
+                    sent_at: *at as f64 * 1e-3,
+                });
+                false
+            } else {
+                true
+            }
+        });
+        for f in batcher.step(&mut e, &mut policy, step as f64 * 1e-3).unwrap() {
+            finished.push((f.id, f.tokens));
+        }
+        step += 1;
+        assert!(step < 10_000, "batcher failed to drain");
+    }
+    finished.sort_by_key(|(id, _)| *id);
+    let project = |e: &RoundEvent| (e.epoch, e.live, e.queued, e.s, e.accepted);
+    let (reingested, remapped) = batcher.kv_transfer_totals();
+    RunOutcome {
+        finished,
+        rounds: batcher.timeline.iter().map(project).collect(),
+        reingested,
+        remapped,
+        kv: e.kv_block_stats(),
+    }
+}
+
+/// The equivalence property over >= 3 seeds (the acceptance criterion
+/// runs five): same schedule, both layouts, bit-identical tokens and
+/// per-round acceptance counts; the carried-token totals mirror each
+/// other (dense re-ingests exactly the tokens paged remaps); and the
+/// paged pools come back leak-free every time.
+#[test]
+fn dense_and_paged_agree_on_randomized_admit_retire_reshape_schedules() {
+    // five random schedules plus one crafted burst that reshapes for
+    // certain: one long request decodes alone, then five arrivals force
+    // the epoch into a larger bucket with a carried row
+    let crafted = Schedule {
+        max_batch: 8,
+        max_new: 20,
+        arrivals: (0..6u64)
+            .map(|id| {
+                (
+                    if id == 0 { 0 } else { 3 },
+                    id,
+                    vec![5 + id as i32],
+                )
+            })
+            .collect(),
+    };
+    let schedules: Vec<Schedule> = [0x11u64, 0x22, 0x33, 0x44, 0x55]
+        .iter()
+        .map(|&s| random_schedule(s))
+        .chain(std::iter::once(crafted))
+        .collect();
+    let mut any_reshape = false;
+    for (idx, schedule) in schedules.iter().enumerate() {
+        let dense = run_schedule(schedule, KvLayout::Dense);
+        let paged = run_schedule(schedule, KvLayout::Paged);
+
+        assert_eq!(
+            dense.finished, paged.finished,
+            "schedule {idx}: generated tokens diverged between layouts"
+        );
+        assert_eq!(
+            dense.rounds, paged.rounds,
+            "schedule {idx}: round structure / acceptance counts diverged"
+        );
+        assert_eq!(
+            dense.remapped, 0,
+            "schedule {idx}: a dense run cannot remap blocks"
+        );
+        assert_eq!(
+            paged.reingested, 0,
+            "schedule {idx}: a paged run must never re-ingest carried tokens"
+        );
+        assert_eq!(
+            paged.remapped, dense.reingested,
+            "schedule {idx}: paged must transfer exactly the tokens dense re-feeds"
+        );
+        assert!(dense.kv.is_none());
+        let kv = paged.kv.expect("paged engine reports block stats");
+        assert!(kv.is_leak_free(), "schedule {idx}: leaked blocks: {kv:?}");
+        any_reshape |= dense.reingested > 0;
+    }
+    assert!(
+        any_reshape,
+        "no schedule exercised a carried reshape — the property lost its teeth"
+    );
+}
+
+// ------------------------------------------------------------ pinned reshape
+
+/// The tentpole payoff, pinned at the engine seam: an epoch reshape
+/// re-prefills a positive number of carried tokens under `Dense` and
+/// exactly zero under `Paged`, with bit-identical outputs and strictly
+/// fewer LLM calls on the paged side.
+#[test]
+fn epoch_reshape_reingests_zero_tokens_under_paged_and_more_under_dense() {
+    let run = |layout: KvLayout| {
+        let mut e = engine(layout);
+        let mut policy = Fixed(3);
+        let mut st = e
+            .prefill_rows(&[vec![5, 9], vec![7, 8]], 2, true, 24)
+            .unwrap();
+        for _ in 0..4 {
+            e.decode_round(&mut st, &mut policy).unwrap();
+        }
+        // the batcher's reshape sequence: export, release, prefill the
+        // larger bucket with a fresh row, re-admit the carried rows
+        let carried: Vec<AdmitRequest> =
+            e.export_rows(&st).into_iter().map(|(_, r)| r).collect();
+        assert_eq!(carried.len(), 2);
+        e.release_state(&mut st);
+        let mut st2 = e.prefill_rows(&[vec![40, 41]], 4, true, 24).unwrap();
+        e.admit_rows(&mut st2, carried).unwrap();
+        let reingested = st2.stats.reingested_tokens;
+        let remapped = st2.stats.remapped_tokens;
+        let admit_llm_calls = st2.stats.llm_calls;
+        while st2.has_live() {
+            e.decode_round(&mut st2, &mut policy).unwrap();
+        }
+        let mut tokens: Vec<(usize, Vec<i32>)> = e
+            .retire_finished(&mut st2)
+            .into_iter()
+            .map(|r| (r.slot, r.tokens))
+            .collect();
+        tokens.sort_by_key(|(slot, _)| *slot);
+        e.release_state(&mut st2);
+        if let Some(stats) = e.kv_block_stats() {
+            assert!(stats.is_leak_free(), "leaked blocks: {stats:?}");
+        }
+        (reingested, remapped, admit_llm_calls, tokens)
+    };
+
+    let (re_d, rm_d, calls_d, tokens_d) = run(KvLayout::Dense);
+    let (re_p, rm_p, calls_p, tokens_p) = run(KvLayout::Paged);
+
+    assert!(re_d > 0, "dense reshape must re-prefill the carried contexts");
+    assert_eq!(rm_d, 0);
+    assert_eq!(re_p, 0, "paged reshape must re-prefill exactly zero tokens");
+    assert_eq!(
+        rm_p, re_d,
+        "the remap transfers exactly the tokens dense re-feeds"
+    );
+    assert!(
+        calls_p < calls_d,
+        "paged admission must skip the ingest verify calls ({calls_p} vs {calls_d})"
+    );
+    assert_eq!(tokens_d, tokens_p, "reshape path changed the outputs");
+}
+
+// ------------------------------------------------------------------- leaks
+
+/// After every stub e2e experiment — static, continuous (mid-stream
+/// retirement + reshape), and the threaded cluster — the block pools'
+/// free-list cardinality equals their capacity: nothing leaked, nothing
+/// double-freed.
+#[test]
+fn stub_e2e_experiments_leave_every_block_on_the_free_list() {
+    for mode in [SchedulingMode::Static, SchedulingMode::Continuous] {
+        let out = run_experiment(
+            Backend::Stub(StubSpec::default()),
+            stub_server_cfg(mode, KvLayout::Paged),
+            PolicySpec::Fixed(2),
+            None,
+            &quick_stub_trace(14, 9),
+        )
+        .expect("experiment");
+        assert_conserves_ids(&out.recorder, 14);
+        let stats = out.kv_blocks.expect("paged run reports block stats");
+        assert!(stats.is_leak_free(), "{mode:?} leaked blocks: {stats:?}");
+        assert!(stats.peak_in_use > 0, "{mode:?} never allocated a block");
+    }
+
+    // the threaded cluster merges per-shard pools into one leak check
+    let cfg = ServerConfig {
+        workers: 2,
+        router: RouterSpec::RoundRobin,
+        ..stub_server_cfg(SchedulingMode::Continuous, KvLayout::Paged)
+    };
+    let out = run_experiment(
+        Backend::Stub(StubSpec::default()),
+        cfg,
+        PolicySpec::Fixed(2),
+        None,
+        &quick_stub_trace(16, 21),
+    )
+    .expect("cluster experiment");
+    assert_conserves_ids(&out.recorder, 16);
+    let stats = out.kv_blocks.expect("paged cluster reports merged stats");
+    assert!(stats.is_leak_free(), "cluster leaked blocks: {stats:?}");
+    for shard in &out.shards {
+        let s = shard.kv_blocks.expect("each shard reports its pool");
+        assert!(s.is_leak_free(), "shard {} leaked: {s:?}", shard.shard);
+    }
+}
