@@ -1,0 +1,612 @@
+//! SLO-aware request admission — the first-class lifecycle layer between
+//! arrival and the batch.
+//!
+//! The paper closes the loop from *round feedback* to the *speculation
+//! length*: [`crate::policy::ModelBased`] fits the Eq. 4/5/7 latency
+//! model online and re-solves `s_opt(live)`.  But admission stayed blind
+//! FIFO: a burst pushes every in-flight request past its latency target
+//! even while the policy is choosing the "optimal" `s`.  This module
+//! turns admission into the same kind of feedback consumer — the fitted
+//! model now decides not just *how far to speculate* but *who runs*:
+//!
+//! * [`Fifo`] — arrival order, admit everything: bit-for-bit the
+//!   pre-admission-subsystem behaviour (pinned by
+//!   `tests/slo_admission.rs`);
+//! * [`Edf`] — earliest-deadline-first: the queue is reordered by
+//!   deadline (deadline-less requests keep arrival order behind every
+//!   deadlined one), nothing is deferred or shed.  Classic
+//!   deadline-driven scheduling, model-free;
+//! * [`SloAware`] — EDF ordering plus model-predicted feasibility: each
+//!   candidate's completion is predicted from
+//!   [`SpeculationPolicy::predict_token_time`] at the post-admission
+//!   batch width.  A candidate predicted to miss its deadline at that
+//!   width is **deferred** (it re-enters consideration at the next round
+//!   boundary, when load may have dropped) — unless it could not meet the
+//!   deadline even running alone, in which case it is **shed** so its
+//!   rounds go to requests that can still make their SLOs.  A
+//!   [`SloAwareConfig::hysteresis`] slack band keeps marginal candidates
+//!   from flapping between admit and defer, and while the policy's fits
+//!   are cold (`predict_token_time` returns `None`) the controller
+//!   degrades to exactly [`Edf`].
+//!
+//! All three drivers share the layer: [`crate::batcher`] plans admission
+//! at every round boundary on the real engine, the DES mirrors it in
+//! virtual time (`crate::simulator::des`, `crate::cluster::sim`), and the
+//! threaded server resolves the controller from
+//! [`AdmissionSpec`](crate::config::AdmissionSpec) (`serve --admission`).
+//!
+//! ## The controller contract
+//!
+//! [`AdmissionController::plan`] sees the whole queue as [`Candidate`]s
+//! and returns one verdict per candidate, in admission priority order:
+//!
+//! * the verdict list must be a **permutation** of the queue indices
+//!   (every candidate judged exactly once — the property tests pin it);
+//! * `Admit` verdicts beyond the free capacity are simply queued ahead
+//!   (the driver admits the longest feasible prefix of the `Admit`s);
+//! * when `view.live == 0` the plan must admit at least one candidate
+//!   unless it sheds every one of them — an idle worker sitting on a
+//!   fully-deferred queue would never advance time.  Drivers additionally
+//!   enforce this by force-admitting the highest-priority deferred
+//!   candidate, so a misbehaving controller cannot wedge the loop;
+//! * controllers must be deterministic given their construction
+//!   parameters (the DES replays are bit-reproducible).
+
+use crate::config::AdmissionSpec;
+use crate::policy::SpeculationPolicy;
+
+/// What the controller sees of one queued request at a round boundary.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Candidate {
+    pub id: u64,
+    /// client send time on the experiment clock
+    pub sent_at: f64,
+    /// absolute deadline on the experiment clock (None = no SLO)
+    pub deadline: Option<f64>,
+    /// prompt tokens to prefill if admitted
+    pub prompt_len: usize,
+    /// generation budget still owed if admitted
+    pub tokens_left: usize,
+    /// round boundaries this candidate has already been deferred at
+    pub deferred: usize,
+}
+
+/// One admission decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    /// eligible now; admitted if a free row exists
+    Admit,
+    /// held back this boundary, reconsidered at the next one
+    Defer,
+    /// rejected: leaves the queue without ever occupying a batch row
+    Shed,
+}
+
+/// The driver-side context a plan is made against.
+pub struct AdmissionView<'a> {
+    /// experiment-clock seconds of the round boundary
+    pub now: f64,
+    /// rows currently decoding
+    pub live: usize,
+    /// concurrency cap (live + admissions never exceed it)
+    pub max_batch: usize,
+    /// the worker's speculation policy — [`SloAware`] reads its fitted
+    /// per-bucket latency model through `predict_token_time`
+    pub policy: &'a dyn SpeculationPolicy,
+}
+
+/// A queue-ordering / defer / shed strategy consulted at every round
+/// boundary (see the module docs for the contract).
+pub trait AdmissionController: Send {
+    /// Judge the queue: one `(queue_index, verdict)` per candidate, in
+    /// admission priority order.
+    fn plan(&mut self, queue: &[Candidate], view: &AdmissionView<'_>) -> Vec<(usize, Verdict)>;
+
+    fn label(&self) -> String;
+}
+
+/// Arrival-order admit-everything: the pre-subsystem behaviour.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Fifo;
+
+impl AdmissionController for Fifo {
+    fn plan(&mut self, queue: &[Candidate], _view: &AdmissionView<'_>) -> Vec<(usize, Verdict)> {
+        (0..queue.len()).map(|i| (i, Verdict::Admit)).collect()
+    }
+
+    fn label(&self) -> String {
+        "fifo".into()
+    }
+}
+
+/// Stable earliest-deadline-first priority order over the queue:
+/// deadlined candidates ascending by deadline, then every deadline-less
+/// candidate in arrival order.  Ties (equal deadlines) keep arrival
+/// order, so a deadline-free workload is ordered exactly like FIFO.
+fn edf_order(queue: &[Candidate]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..queue.len()).collect();
+    idx.sort_by(|&a, &b| {
+        let ka = queue[a].deadline.unwrap_or(f64::INFINITY);
+        let kb = queue[b].deadline.unwrap_or(f64::INFINITY);
+        ka.partial_cmp(&kb)
+            .expect("deadlines are finite")
+            .then(a.cmp(&b))
+    });
+    idx
+}
+
+/// Earliest-deadline-first admission: reorder, never defer or shed.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Edf;
+
+impl AdmissionController for Edf {
+    fn plan(&mut self, queue: &[Candidate], _view: &AdmissionView<'_>) -> Vec<(usize, Verdict)> {
+        edf_order(queue)
+            .into_iter()
+            .map(|i| (i, Verdict::Admit))
+            .collect()
+    }
+
+    fn label(&self) -> String {
+        "edf".into()
+    }
+}
+
+/// Knobs of the [`SloAware`] controller.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloAwareConfig {
+    /// slack band, as a fraction of the request's total latency budget
+    /// (`deadline - sent_at`): a candidate is only deferred/shed when its
+    /// predicted finish misses the deadline by more than this.  The
+    /// hysteresis keeps marginal candidates from flapping between admit
+    /// and defer as the fitted model jitters round to round.
+    pub hysteresis: f64,
+    /// round boundaries a candidate may be deferred before it is
+    /// force-admitted (starvation bound)
+    pub max_defer_rounds: usize,
+}
+
+impl Default for SloAwareConfig {
+    fn default() -> Self {
+        SloAwareConfig {
+            hysteresis: 0.10,
+            max_defer_rounds: 64,
+        }
+    }
+}
+
+/// Model-predicted feasibility admission (see the module docs).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SloAware {
+    pub cfg: SloAwareConfig,
+}
+
+impl SloAware {
+    pub fn with_config(cfg: SloAwareConfig) -> SloAware {
+        SloAware { cfg }
+    }
+}
+
+/// Effective per-token time a worker already holding `load` requests
+/// would serve at, from the policy's fitted model: the bucket prediction
+/// at `min(load, max_batch)`, time-shared by `load / max_batch` beyond
+/// the cap (queued requests wait their turn, so their tokens arrive that
+/// much slower).  `None` while the fits are cold.
+pub fn predicted_token_time(
+    policy: &dyn SpeculationPolicy,
+    load: usize,
+    max_batch: usize,
+) -> Option<f64> {
+    let max_batch = max_batch.max(1);
+    let t = policy.predict_token_time(load.clamp(1, max_batch))?;
+    Some(t * (load as f64 / max_batch as f64).max(1.0))
+}
+
+/// Predicted completion time of a candidate joining a worker at total
+/// load `load` (itself included), per [`predicted_token_time`].
+pub fn predicted_finish(
+    policy: &dyn SpeculationPolicy,
+    now: f64,
+    tokens_left: usize,
+    load: usize,
+    max_batch: usize,
+) -> Option<f64> {
+    let t = predicted_token_time(policy, load, max_batch)?;
+    Some(now + tokens_left as f64 * t)
+}
+
+impl AdmissionController for SloAware {
+    fn plan(&mut self, queue: &[Candidate], view: &AdmissionView<'_>) -> Vec<(usize, Verdict)> {
+        let order = edf_order(queue);
+        // cold fits degrade to EDF: comparing predictions that do not
+        // exist would either admit or shed everything blindly
+        if view.policy.predict_token_time(1).is_none() {
+            return order.into_iter().map(|i| (i, Verdict::Admit)).collect();
+        }
+        let mut plan = Vec::with_capacity(queue.len());
+        let mut admitted = 0usize;
+        for i in order {
+            let c = &queue[i];
+            let Some(deadline) = c.deadline else {
+                // no SLO: best-effort, never deferred or shed
+                plan.push((i, Verdict::Admit));
+                admitted += 1;
+                continue;
+            };
+            let budget = (deadline - c.sent_at).max(0.0);
+            let grace = self.cfg.hysteresis * budget;
+            let width = view.live + admitted + 1;
+            let predicted = |load: usize| {
+                predicted_finish(view.policy, view.now, c.tokens_left, load, view.max_batch)
+            };
+            // a policy that predicts at width 1 but not here is treated
+            // as cold for this candidate: admit (EDF behaviour)
+            let (Some(finish), Some(solo)) = (predicted(width), predicted(1)) else {
+                plan.push((i, Verdict::Admit));
+                admitted += 1;
+                continue;
+            };
+            let verdict = if finish <= deadline + grace {
+                Verdict::Admit
+            } else if solo > deadline + grace {
+                // cannot meet the SLO even running alone: spending
+                // rounds on it only drags feasible requests past their
+                // own deadlines
+                Verdict::Shed
+            } else if view.live + admitted == 0 {
+                // nothing ahead of it — deferring gains nothing and an
+                // idle worker must make progress
+                Verdict::Admit
+            } else if c.deferred >= self.cfg.max_defer_rounds {
+                // starvation bound
+                Verdict::Admit
+            } else {
+                Verdict::Defer
+            };
+            if verdict == Verdict::Admit {
+                admitted += 1;
+            }
+            plan.push((i, verdict));
+        }
+        plan
+    }
+
+    fn label(&self) -> String {
+        "slo-aware".into()
+    }
+}
+
+/// Resolve a parsed [`AdmissionSpec`] into a live controller.
+pub fn build_controller(spec: AdmissionSpec) -> Box<dyn AdmissionController> {
+    match spec {
+        AdmissionSpec::Fifo => Box::new(Fifo),
+        AdmissionSpec::Edf => Box::new(Edf),
+        AdmissionSpec::SloAware => Box::new(SloAware::default()),
+    }
+}
+
+/// One controller instance per shard (deferral counters and hysteresis
+/// state must not be shared across shards).
+pub fn replicate_controllers(
+    spec: AdmissionSpec,
+    workers: usize,
+) -> Vec<Box<dyn AdmissionController>> {
+    (0..workers).map(|_| build_controller(spec)).collect()
+}
+
+/// A plan split into its applied form: queue indices to admit (in
+/// priority order), to keep queued (in priority order), and to shed.
+/// Shared by the batcher and both DES mirrors so every driver applies a
+/// plan identically — including the idle-worker force-admit rule.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct AppliedPlan {
+    pub admit: Vec<usize>,
+    pub defer: Vec<usize>,
+    pub shed: Vec<usize>,
+}
+
+/// A plan applied to an owned queue (see [`apply_plan_to_queue`]).
+pub struct QueuePlan<T> {
+    /// the queue, admits first (in plan priority order), then defers
+    pub queue: Vec<T>,
+    /// shed entries, in plan priority order
+    pub shed: Vec<T>,
+    /// Admit verdicts — the admissible prefix of `queue`
+    pub admit_n: usize,
+    /// Defer verdicts applied at this boundary
+    pub deferred: usize,
+}
+
+/// Apply a controller's plan to an owned queue: sheds split out, the
+/// rest reordered to admits-then-defers with each defer's counter bumped
+/// via `bump_defer`, and the idle-worker progress rule enforced (via
+/// [`apply_plan`]).  A pure-FIFO plan (identity order, all Admit)
+/// returns the queue untouched, so FIFO drivers stay bit-identical.
+/// Every driver — batcher, static server, all DES mirrors — routes
+/// through this, so a plan is applied identically everywhere.
+pub fn apply_plan_to_queue<T>(
+    plan: Vec<(usize, Verdict)>,
+    queue: Vec<T>,
+    live: usize,
+    mut bump_defer: impl FnMut(&mut T),
+) -> QueuePlan<T> {
+    let n = queue.len();
+    let applied = apply_plan(plan, n, live);
+    let fifo_like = applied.shed.is_empty()
+        && applied.defer.is_empty()
+        && applied.admit.iter().copied().eq(0..n);
+    if fifo_like {
+        return QueuePlan {
+            queue,
+            shed: Vec::new(),
+            admit_n: n,
+            deferred: 0,
+        };
+    }
+    let mut items: Vec<Option<T>> = queue.into_iter().map(Some).collect();
+    let mut take = |i: usize| -> T {
+        items[i].take().expect("plan indices are unique")
+    };
+    let mut out = Vec::with_capacity(n);
+    for &i in &applied.admit {
+        out.push(take(i));
+    }
+    for &i in &applied.defer {
+        let mut t = take(i);
+        bump_defer(&mut t);
+        out.push(t);
+    }
+    let shed: Vec<T> = applied.shed.iter().map(|&i| take(i)).collect();
+    QueuePlan {
+        queue: out,
+        shed,
+        admit_n: applied.admit.len(),
+        deferred: applied.defer.len(),
+    }
+}
+
+/// Validate and split a plan (debug-asserting the permutation contract),
+/// applying the idle-worker progress rule: with no live rows, no admits
+/// and at least one deferred candidate, the highest-priority deferred
+/// candidate is promoted to admit.
+pub fn apply_plan(plan: Vec<(usize, Verdict)>, n_queue: usize, live: usize) -> AppliedPlan {
+    debug_assert_eq!(plan.len(), n_queue, "plan must judge every candidate");
+    debug_assert!(
+        {
+            let mut seen = vec![false; n_queue];
+            plan.iter().all(|&(i, _)| {
+                i < n_queue && !std::mem::replace(&mut seen[i], true)
+            })
+        },
+        "plan must be a permutation of the queue"
+    );
+    let mut out = AppliedPlan::default();
+    for (i, v) in plan {
+        match v {
+            Verdict::Admit => out.admit.push(i),
+            Verdict::Defer => out.defer.push(i),
+            Verdict::Shed => out.shed.push(i),
+        }
+    }
+    if live == 0 && out.admit.is_empty() && !out.defer.is_empty() {
+        out.admit.push(out.defer.remove(0));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytic::{AcceptanceModel, StepCostModel};
+    use crate::policy::{Fixed, ModelBased};
+    use crate::scheduler::Lut;
+
+    fn cand(id: u64, sent_at: f64, deadline: Option<f64>) -> Candidate {
+        Candidate {
+            id,
+            sent_at,
+            deadline,
+            prompt_len: 8,
+            tokens_left: 32,
+            deferred: 0,
+        }
+    }
+
+    /// A ModelBased policy with warm fits (predicts at every width).
+    fn warm_policy() -> ModelBased {
+        let acceptance = AcceptanceModel {
+            c: 0.9,
+            gamma: 0.548,
+            r2: 1.0,
+        };
+        let costs = [
+            StepCostModel {
+                batch: 1,
+                alpha: 0.0004,
+                beta: 0.03,
+                t_ssm: 0.0,
+                r2: 1.0,
+            },
+            StepCostModel {
+                batch: 16,
+                alpha: 0.02,
+                beta: 0.03,
+                t_ssm: 0.0,
+                r2: 1.0,
+            },
+        ];
+        let lut = Lut::new([(1usize, 3usize)].into_iter().collect()).unwrap();
+        ModelBased::with_models(lut, acceptance, &costs)
+    }
+
+    fn view<'a>(policy: &'a dyn SpeculationPolicy, now: f64, live: usize) -> AdmissionView<'a> {
+        AdmissionView {
+            now,
+            live,
+            max_batch: 16,
+            policy,
+        }
+    }
+
+    #[test]
+    fn fifo_admits_everything_in_arrival_order() {
+        let q = vec![cand(0, 0.0, Some(1.0)), cand(1, 0.1, Some(0.5)), cand(2, 0.2, None)];
+        let plan = Fifo.plan(&q, &view(&Fixed(2), 0.3, 0));
+        assert_eq!(
+            plan,
+            vec![(0, Verdict::Admit), (1, Verdict::Admit), (2, Verdict::Admit)]
+        );
+    }
+
+    #[test]
+    fn edf_orders_by_deadline_with_stable_ties_and_deadline_less_last() {
+        let q = vec![
+            cand(0, 0.0, Some(9.0)),
+            cand(1, 0.1, None),
+            cand(2, 0.2, Some(2.0)),
+            cand(3, 0.3, Some(2.0)),
+            cand(4, 0.4, None),
+        ];
+        let plan = Edf.plan(&q, &view(&Fixed(2), 0.5, 0));
+        let order: Vec<usize> = plan.iter().map(|&(i, _)| i).collect();
+        assert_eq!(order, vec![2, 3, 0, 1, 4]);
+        assert!(plan.iter().all(|&(_, v)| v == Verdict::Admit));
+        // no deadlines at all -> pure arrival order (FIFO-equivalent)
+        let free = vec![cand(0, 0.0, None), cand(1, 0.1, None)];
+        let plan = Edf.plan(&free, &view(&Fixed(2), 0.2, 0));
+        assert_eq!(plan.iter().map(|&(i, _)| i).collect::<Vec<_>>(), vec![0, 1]);
+    }
+
+    #[test]
+    fn slo_aware_degrades_to_edf_while_the_policy_is_cold() {
+        let q = vec![cand(0, 0.0, Some(5.0)), cand(1, 0.1, Some(1.0))];
+        // Fixed policies never predict -> cold
+        let plan = SloAware::default().plan(&q, &view(&Fixed(2), 0.2, 4));
+        let edf = Edf.plan(&q, &view(&Fixed(2), 0.2, 4));
+        assert_eq!(plan, edf);
+    }
+
+    #[test]
+    fn slo_aware_admits_feasible_defers_loaded_and_sheds_hopeless() {
+        let p = warm_policy();
+        let t1 = p.predict_token_time(1).unwrap();
+        // generous deadline: feasible even at a loaded width -> admit
+        let feasible = cand(0, 0.0, Some(1e3));
+        // hopeless: cannot finish even alone (deadline already passed
+        // relative to the solo service time) -> shed
+        let hopeless = cand(1, 0.0, Some(32.0 * t1 * 0.2));
+        let q = vec![feasible, hopeless];
+        let plan = SloAware::default().plan(&q, &view(&p, 0.0, 2));
+        let verdict = |id: usize| plan.iter().find(|&&(i, _)| i == id).unwrap().1;
+        assert_eq!(verdict(0), Verdict::Admit);
+        assert_eq!(verdict(1), Verdict::Shed);
+
+        // a candidate that misses at the crowded width but would meet
+        // alone is deferred while rows are live...
+        let t16 = predicted_token_time(&p, 16, 16).unwrap();
+        let marginal = cand(2, 0.0, Some(32.0 * (t1 + t16) / 2.0));
+        let plan = SloAware::default().plan(&[marginal], &view(&p, 0.0, 15));
+        assert_eq!(plan, vec![(0, Verdict::Defer)]);
+        // ...but admitted when the worker is idle (progress rule)
+        let plan = SloAware::default().plan(&[marginal], &view(&p, 0.0, 0));
+        assert_eq!(plan, vec![(0, Verdict::Admit)]);
+        // ...and force-admitted once the starvation bound is hit
+        let mut starved = marginal;
+        starved.deferred = SloAwareConfig::default().max_defer_rounds;
+        let plan = SloAware::default().plan(&[starved], &view(&p, 0.0, 15));
+        assert_eq!(plan, vec![(0, Verdict::Admit)]);
+    }
+
+    #[test]
+    fn slo_aware_never_defers_or_sheds_deadline_less_requests() {
+        let p = warm_policy();
+        let q: Vec<Candidate> = (0..20).map(|i| cand(i, 0.0, None)).collect();
+        let plan = SloAware::default().plan(&q, &view(&p, 0.0, 15));
+        assert!(plan.iter().all(|&(_, v)| v == Verdict::Admit));
+        // and with no deadlines the order is pure arrival order, so a
+        // deadline-free workload behaves exactly like FIFO
+        assert_eq!(
+            plan.iter().map(|&(i, _)| i).collect::<Vec<_>>(),
+            (0..20).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn hysteresis_widens_the_admit_band() {
+        let p = warm_policy();
+        // pick a deadline that the crowded-width prediction misses by
+        // less than 50% of the budget: strict config defers, loose admits
+        let t_wide = predicted_token_time(&p, 16, 16).unwrap();
+        let budget = 32.0 * t_wide / 1.2; // ~17% past the deadline
+        let c = cand(0, 0.0, Some(budget));
+        let strict = SloAware::with_config(SloAwareConfig {
+            hysteresis: 0.0,
+            ..SloAwareConfig::default()
+        });
+        let loose = SloAware::with_config(SloAwareConfig {
+            hysteresis: 0.5,
+            ..SloAwareConfig::default()
+        });
+        let v = view(&p, 0.0, 15);
+        assert_eq!(strict.clone().plan(&[c], &v), vec![(0, Verdict::Defer)]);
+        assert_eq!(loose.clone().plan(&[c], &v), vec![(0, Verdict::Admit)]);
+    }
+
+    #[test]
+    fn apply_plan_splits_and_enforces_idle_progress() {
+        let plan = vec![(1, Verdict::Defer), (0, Verdict::Shed), (2, Verdict::Defer)];
+        // live worker: defers stay defers
+        let a = apply_plan(plan.clone(), 3, 2);
+        assert_eq!(a.admit, Vec::<usize>::new());
+        assert_eq!(a.defer, vec![1, 2]);
+        assert_eq!(a.shed, vec![0]);
+        // idle worker: the highest-priority defer is promoted
+        let a = apply_plan(plan, 3, 0);
+        assert_eq!(a.admit, vec![1]);
+        assert_eq!(a.defer, vec![2]);
+        assert_eq!(a.shed, vec![0]);
+    }
+
+    #[test]
+    fn apply_plan_to_queue_rebuilds_and_keeps_fifo_untouched() {
+        // FIFO plan: the queue comes back untouched, nothing shed
+        let q = vec!["a", "b", "c"];
+        let plan = vec![(0, Verdict::Admit), (1, Verdict::Admit), (2, Verdict::Admit)];
+        let out = apply_plan_to_queue(plan, q.clone(), 1, |_| panic!("no defers"));
+        assert_eq!(out.queue, q);
+        assert!(out.shed.is_empty());
+        assert_eq!((out.admit_n, out.deferred), (3, 0));
+
+        // mixed plan: admits first in priority order, defers bumped,
+        // sheds split out
+        let mut queue = vec![(0u64, 0usize), (1, 0), (2, 0), (3, 0)];
+        queue[3].1 = 7; // pre-existing defer count survives the bump
+        let plan = vec![
+            (2, Verdict::Admit),
+            (0, Verdict::Shed),
+            (3, Verdict::Defer),
+            (1, Verdict::Admit),
+        ];
+        let out = apply_plan_to_queue(plan, queue, 2, |e| e.1 += 1);
+        assert_eq!(out.queue, vec![(2, 0), (1, 0), (3, 8)]);
+        assert_eq!(out.shed, vec![(0, 0)]);
+        assert_eq!((out.admit_n, out.deferred), (2, 1));
+    }
+
+    #[test]
+    fn build_controller_matches_spec_labels() {
+        for spec in AdmissionSpec::all() {
+            assert_eq!(build_controller(spec).label(), spec.label());
+        }
+        assert_eq!(replicate_controllers(AdmissionSpec::Edf, 3).len(), 3);
+    }
+
+    #[test]
+    fn predicted_token_time_scales_past_the_cap() {
+        let p = warm_policy();
+        let at_cap = predicted_token_time(&p, 16, 16).unwrap();
+        let over = predicted_token_time(&p, 32, 16).unwrap();
+        assert!((over - 2.0 * at_cap).abs() < 1e-12, "{over} vs {at_cap}");
+        assert!(predicted_token_time(&Fixed(2), 4, 16).is_none());
+    }
+}

@@ -32,6 +32,10 @@ use std::collections::VecDeque;
 
 use anyhow::{bail, Result};
 
+use crate::admission::{
+    apply_plan_to_queue, predicted_token_time, AdmissionController, AdmissionView, Candidate,
+    Fifo,
+};
 use crate::engine::{AdmitRequest, BatchState, Engine};
 use crate::metrics::RoundEvent;
 use crate::policy::SpeculationPolicy;
@@ -61,6 +65,20 @@ pub struct BatchRequest {
     pub prompt: Vec<i32>,
     /// client send time on the experiment clock (t_a)
     pub sent_at: f64,
+    /// absolute deadline on the experiment clock (None = no SLO)
+    pub deadline: Option<f64>,
+}
+
+impl BatchRequest {
+    /// A deadline-free request (most tests and callers).
+    pub fn new(id: u64, prompt: Vec<i32>, sent_at: f64) -> BatchRequest {
+        BatchRequest {
+            id,
+            prompt,
+            sent_at,
+            deadline: None,
+        }
+    }
 }
 
 /// A completed request.
@@ -76,6 +94,23 @@ pub struct FinishedRequest {
     pub batch_at_admit: usize,
     /// speculation length the policy chose at that batch size
     pub spec_at_admit: usize,
+    /// absolute deadline, if the request carried one
+    pub deadline: Option<f64>,
+    /// round boundaries admission control deferred it at before admitting
+    pub deferred_rounds: usize,
+}
+
+/// A request the admission controller rejected before it ever occupied a
+/// batch row (drained via [`ContinuousBatcher::take_shed`]).
+#[derive(Debug, Clone)]
+pub struct ShedRequest {
+    pub id: u64,
+    pub sent_at: f64,
+    pub deadline: Option<f64>,
+    /// experiment-clock time of the shed decision
+    pub shed_at: f64,
+    /// round boundaries it was deferred at before being shed
+    pub deferred_rounds: usize,
 }
 
 #[derive(Debug, Clone)]
@@ -85,6 +120,16 @@ struct RowMeta {
     admitted_at: f64,
     batch_at_admit: usize,
     spec_at_admit: usize,
+    deadline: Option<f64>,
+    deferred_rounds: usize,
+}
+
+/// A queued request plus its admission-control state.
+#[derive(Debug, Clone)]
+struct Queued {
+    req: BatchRequest,
+    /// round boundaries the controller has deferred this request at
+    deferred: usize,
 }
 
 struct EpochState {
@@ -93,10 +138,15 @@ struct EpochState {
     slots: Vec<Option<RowMeta>>,
 }
 
-/// The continuous batcher: request queue + at most one active epoch.
+/// The continuous batcher: request queue + at most one active epoch,
+/// with queue ordering / deferral / shedding delegated to an
+/// [`AdmissionController`] at every round boundary.
 pub struct ContinuousBatcher {
     cfg: BatcherConfig,
-    queue: VecDeque<BatchRequest>,
+    ctrl: Box<dyn AdmissionController>,
+    queue: VecDeque<Queued>,
+    /// shed requests awaiting pickup (see [`ContinuousBatcher::take_shed`])
+    shed_buf: Vec<ShedRequest>,
     epoch: Option<EpochState>,
     epoch_seq: usize,
     /// per-round (t, epoch, live, queued, s) timeline for Fig. 6-style
@@ -106,18 +156,109 @@ pub struct ContinuousBatcher {
     /// [`ContinuousBatcher::kv_transfer_totals`])
     reingested_total: usize,
     remapped_total: usize,
+    /// admission totals folded in from completed epochs (see
+    /// [`ContinuousBatcher::admission_totals`])
+    deferred_total: usize,
+    shed_total: usize,
 }
 
 impl ContinuousBatcher {
+    /// FIFO admission: bit-for-bit the pre-admission-subsystem batcher.
     pub fn new(cfg: BatcherConfig) -> ContinuousBatcher {
+        ContinuousBatcher::with_admission(cfg, Box::new(Fifo))
+    }
+
+    /// Batcher with an explicit admission controller.
+    pub fn with_admission(
+        cfg: BatcherConfig,
+        ctrl: Box<dyn AdmissionController>,
+    ) -> ContinuousBatcher {
         ContinuousBatcher {
             cfg,
+            ctrl,
             queue: VecDeque::new(),
+            shed_buf: Vec::new(),
             epoch: None,
             epoch_seq: 0,
             timeline: Vec::new(),
             reingested_total: 0,
             remapped_total: 0,
+            deferred_total: 0,
+            shed_total: 0,
+        }
+    }
+
+    /// Requests the controller has shed since the last call (the server
+    /// loop drains this after every [`ContinuousBatcher::step`] so shed
+    /// requests still get a response on the wire).
+    pub fn take_shed(&mut self) -> Vec<ShedRequest> {
+        std::mem::take(&mut self.shed_buf)
+    }
+
+    /// Lifetime `(deferral events, shed requests)` totals across all
+    /// epochs, active one included.  Deferrals count one event per
+    /// candidate per round boundary it was held back at; both are 0 under
+    /// [`Fifo`].
+    pub fn admission_totals(&self) -> (usize, usize) {
+        let (mut d, mut s) = (self.deferred_total, self.shed_total);
+        if let Some(ep) = &self.epoch {
+            d += ep.state.stats.deferrals;
+            s += ep.state.stats.sheds;
+        }
+        (d, s)
+    }
+
+    /// Deadline pressure for the cluster gauge: queued + live requests
+    /// whose SLO is already lost or predicted lost at the current load
+    /// (predictions via the policy's fitted model when warm; while cold
+    /// only already-late requests count).  Mirrors the DES twin
+    /// (`cluster::sim::Shard::slo_pressure`): queued requests owe their
+    /// full generation budget, live rows only what remains.
+    pub fn slo_pressure(&self, now: f64, policy: &dyn SpeculationPolicy) -> usize {
+        let load = self.live_rows() + self.queue.len();
+        let t_tok = predicted_token_time(policy, load, self.cfg.max_batch);
+        let late = |deadline: Option<f64>, tokens_left: usize| match deadline {
+            None => false,
+            Some(d) => match t_tok {
+                None => d < now,
+                Some(t) => now + tokens_left as f64 * t > d,
+            },
+        };
+        let late_queued = self
+            .queue
+            .iter()
+            .filter(|q| late(q.req.deadline, self.cfg.max_new_tokens))
+            .count();
+        let late_live = self.epoch.as_ref().map_or(0, |ep| {
+            ep.slots
+                .iter()
+                .enumerate()
+                .filter(|(slot, meta)| {
+                    let Some(meta) = meta else { return false };
+                    let generated =
+                        ep.state.generated_tokens(*slot).map_or(0, |t| t.len());
+                    late(
+                        meta.deadline,
+                        self.cfg.max_new_tokens.saturating_sub(generated),
+                    )
+                })
+                .count()
+        });
+        late_queued + late_live
+    }
+
+    /// Record admission outcomes into the active epoch's `GenStats`
+    /// (or the lifetime fold when no epoch is open).
+    fn note_admission(&mut self, deferrals: usize, sheds: usize) {
+        if deferrals == 0 && sheds == 0 {
+            return;
+        }
+        if let Some(ep) = &mut self.epoch {
+            ep.state.stats.deferrals += deferrals;
+            ep.state.stats.sheds += sheds;
+        } else {
+            self.deferred_total += deferrals;
+            self.shed_total += sheds;
         }
     }
 
@@ -135,15 +276,19 @@ impl ContinuousBatcher {
         (re, rm)
     }
 
-    /// Fold a dying epoch's transfer counters into the lifetime totals.
+    /// Fold a dying epoch's transfer + admission counters into the
+    /// lifetime totals.
     fn fold_epoch_stats(&mut self, st: &crate::engine::BatchState) {
         self.reingested_total += st.stats.reingested_tokens;
         self.remapped_total += st.stats.remapped_tokens;
+        self.deferred_total += st.stats.deferrals;
+        self.shed_total += st.stats.sheds;
     }
 
-    /// Enqueue an arrival (admitted at the next round boundary).
+    /// Enqueue an arrival (considered for admission at the next round
+    /// boundary).
     pub fn enqueue(&mut self, req: BatchRequest) {
-        self.queue.push_back(req);
+        self.queue.push_back(Queued { req, deferred: 0 });
     }
 
     /// True while there is anything to do (live rows or queued requests).
@@ -160,9 +305,10 @@ impl ContinuousBatcher {
         self.epoch.as_ref().map_or(0, |e| e.state.live_rows())
     }
 
-    /// One round boundary: retire finished rows, admit/reshape against the
-    /// queue, then run one decode round.  Returns the requests completed
-    /// at this boundary.
+    /// One round boundary: retire finished rows, consult the admission
+    /// controller, admit/reshape against the queue, then run one decode
+    /// round.  Returns the requests completed at this boundary; sheds
+    /// accumulate in [`ContinuousBatcher::take_shed`].
     pub fn step(
         &mut self,
         engine: &mut Engine<'_>,
@@ -186,6 +332,8 @@ impl ContinuousBatcher {
                     finished_at: now,
                     batch_at_admit: meta.batch_at_admit,
                     spec_at_admit: meta.spec_at_admit,
+                    deadline: meta.deadline,
+                    deferred_rounds: meta.deferred_rounds,
                 });
             }
             drained = !ep.state.has_live() && self.queue.is_empty();
@@ -197,15 +345,20 @@ impl ContinuousBatcher {
             engine.release_state(&mut ep.state);
         }
 
+        // --- admission plan: the controller orders the queue and rules
+        //     on deferrals/sheds; the longest feasible prefix of its
+        //     Admit verdicts is what the capacity logic below admits ---
+        let admit_n = self.plan_admission(policy, now);
+
         // --- admit / reshape at the round boundary ---
-        if !self.queue.is_empty() {
+        if admit_n > 0 {
             let live = self.live_rows();
-            let want = (live + self.queue.len()).min(self.cfg.max_batch);
+            let want = (live + admit_n).min(self.cfg.max_batch);
             let desired_bucket = engine.limits().bucket_for_clamped(want);
             let current_bucket = self.epoch.as_ref().map(|e| e.state.bucket());
             match current_bucket {
                 None => {
-                    self.start_epoch(engine, policy, desired_bucket, now, Vec::new())?;
+                    self.start_epoch(engine, policy, desired_bucket, now, Vec::new(), admit_n)?;
                 }
                 Some(bucket) if desired_bucket > bucket => {
                     // reshape: carry unfinished rows into a larger bucket.
@@ -228,10 +381,10 @@ impl ContinuousBatcher {
                         .collect();
                     self.fold_epoch_stats(&old.state);
                     engine.release_state(&mut old.state);
-                    self.start_epoch(engine, policy, desired_bucket, now, carry)?;
+                    self.start_epoch(engine, policy, desired_bucket, now, carry, admit_n)?;
                 }
                 Some(_) => {
-                    self.admit_from_queue(engine, policy, now)?;
+                    self.admit_from_queue(engine, policy, now, admit_n)?;
                 }
             }
         }
@@ -255,8 +408,58 @@ impl ContinuousBatcher {
         Ok(finished)
     }
 
-    /// Open a fresh epoch at `bucket`: batch-prefill queued requests into
-    /// the leading slots, then re-admit any carried-over rows.
+    /// Consult the admission controller over the current queue.  Sheds
+    /// leave the queue into the shed buffer, the remaining queue is
+    /// reordered to `[admits… defers…]` in plan priority order, deferral
+    /// counters bump, and the number of Admit verdicts is returned (the
+    /// prefix of the queue the capacity logic may admit this boundary).
+    ///
+    /// A FIFO plan (identity order, all Admit) leaves the queue untouched
+    /// — the pre-subsystem batcher's behaviour, bit for bit.
+    fn plan_admission(&mut self, policy: &dyn SpeculationPolicy, now: f64) -> usize {
+        if self.queue.is_empty() {
+            return 0;
+        }
+        let live = self.live_rows();
+        let candidates: Vec<Candidate> = self
+            .queue
+            .iter()
+            .map(|q| Candidate {
+                id: q.req.id,
+                sent_at: q.req.sent_at,
+                deadline: q.req.deadline,
+                prompt_len: q.req.prompt.len(),
+                tokens_left: self.cfg.max_new_tokens,
+                deferred: q.deferred,
+            })
+            .collect();
+        let view = AdmissionView {
+            now,
+            live,
+            max_batch: self.cfg.max_batch,
+            policy,
+        };
+        let plan = self.ctrl.plan(&candidates, &view);
+        let queue: Vec<Queued> = self.queue.drain(..).collect();
+        let out = apply_plan_to_queue(plan, queue, live, |q| q.deferred += 1);
+        let n_shed = out.shed.len();
+        for q in out.shed {
+            self.shed_buf.push(ShedRequest {
+                id: q.req.id,
+                sent_at: q.req.sent_at,
+                deadline: q.req.deadline,
+                shed_at: now,
+                deferred_rounds: q.deferred,
+            });
+        }
+        self.queue = out.queue.into();
+        self.note_admission(out.deferred, n_shed);
+        out.admit_n
+    }
+
+    /// Open a fresh epoch at `bucket`: batch-prefill up to `admit_n`
+    /// queued requests into the leading slots, then re-admit any
+    /// carried-over rows.
     fn start_epoch(
         &mut self,
         engine: &mut Engine<'_>,
@@ -264,12 +467,13 @@ impl ContinuousBatcher {
         bucket: usize,
         now: f64,
         carry: Vec<(AdmitRequest, RowMeta)>,
+        admit_n: usize,
     ) -> Result<()> {
         let capacity = bucket
             .saturating_sub(carry.len())
             .min(self.cfg.max_batch.saturating_sub(carry.len()));
-        let n_fresh = self.queue.len().min(capacity);
-        let fresh: Vec<BatchRequest> = self.queue.drain(..n_fresh).collect();
+        let n_fresh = admit_n.min(capacity);
+        let fresh: Vec<Queued> = self.queue.drain(..n_fresh).collect();
         debug_assert!(!fresh.is_empty() || !carry.is_empty());
 
         // step() only opens an epoch while the queue is non-empty, and a
@@ -286,16 +490,18 @@ impl ContinuousBatcher {
         let live_after = fresh.len() + carry.len();
         let spec_now = policy.choose(live_after, engine.limits().max_spec_len(bucket));
 
-        let prompts: Vec<Vec<i32>> = fresh.iter().map(|r| r.prompt.clone()).collect();
+        let prompts: Vec<Vec<i32>> = fresh.iter().map(|q| q.req.prompt.clone()).collect();
         let mut state =
             engine.prefill_rows(&prompts, bucket, may_speculate, self.cfg.max_new_tokens)?;
-        for (i, req) in fresh.iter().enumerate() {
+        for (i, q) in fresh.iter().enumerate() {
             slots[i] = Some(RowMeta {
-                id: req.id,
-                sent_at: req.sent_at,
+                id: q.req.id,
+                sent_at: q.req.sent_at,
                 admitted_at: now,
                 batch_at_admit: live_after,
                 spec_at_admit: spec_now,
+                deadline: q.req.deadline,
+                deferred_rounds: q.deferred,
             });
         }
 
@@ -312,27 +518,35 @@ impl ContinuousBatcher {
         Ok(())
     }
 
-    /// Admit queued requests into the active epoch's free slots.
+    /// Admit up to `admit_n` queued requests into the active epoch's
+    /// free slots.
     fn admit_from_queue(
         &mut self,
         engine: &mut Engine<'_>,
         policy: &mut dyn SpeculationPolicy,
         now: f64,
+        admit_n: usize,
     ) -> Result<()> {
         let ep = self.epoch.as_mut().expect("active epoch");
         let live = ep.state.live_rows();
         let k = ep
             .state
             .free_slots()
-            .min(self.queue.len())
+            .min(admit_n)
             .min(self.cfg.max_batch.saturating_sub(live));
         if k == 0 {
             return Ok(());
         }
-        let fresh: Vec<BatchRequest> = self.queue.drain(..k).collect();
+        let fresh: Vec<Queued> = self.queue.drain(..k).collect();
         let reqs: Vec<AdmitRequest> = fresh
             .iter()
-            .map(|r| AdmitRequest::fresh(r.prompt.clone(), r.prompt.len(), self.cfg.max_new_tokens))
+            .map(|q| {
+                AdmitRequest::fresh(
+                    q.req.prompt.clone(),
+                    q.req.prompt.len(),
+                    self.cfg.max_new_tokens,
+                )
+            })
             .collect();
         let slots = engine.admit_rows(&mut ep.state, reqs)?;
         let live_after = ep.state.live_rows();
@@ -340,13 +554,15 @@ impl ContinuousBatcher {
             live_after,
             engine.limits().max_spec_len(ep.state.bucket()),
         );
-        for (slot, req) in slots.into_iter().zip(fresh) {
+        for (slot, q) in slots.into_iter().zip(fresh) {
             ep.slots[slot] = Some(RowMeta {
-                id: req.id,
-                sent_at: req.sent_at,
+                id: q.req.id,
+                sent_at: q.req.sent_at,
                 admitted_at: now,
                 batch_at_admit: live_after,
                 spec_at_admit: spec_now,
+                deadline: q.req.deadline,
+                deferred_rounds: q.deferred,
             });
         }
         Ok(())
@@ -422,11 +638,7 @@ mod tests {
             .map(|(i, p)| {
                 (
                     i * 2, // staggered: arrive while earlier rows decode
-                    BatchRequest {
-                        id: i as u64,
-                        prompt: p.clone(),
-                        sent_at: i as f64 * 1e-3,
-                    },
+                    BatchRequest::new(i as u64, p.clone(), i as f64 * 1e-3),
                 )
             })
             .collect();
@@ -460,20 +672,12 @@ mod tests {
         });
         let mut arrivals: Vec<(usize, BatchRequest)> = vec![(
             0,
-            BatchRequest {
-                id: 0,
-                prompt: vec![5],
-                sent_at: 0.0,
-            },
+            BatchRequest::new(0, vec![5], 0.0),
         )];
         for i in 1..6u64 {
             arrivals.push((
                 2, // all five arrive while request 0 is mid-generation
-                BatchRequest {
-                    id: i,
-                    prompt: vec![6 + i as i32],
-                    sent_at: 1e-3,
-                },
+                BatchRequest::new(i, vec![6 + i as i32], 1e-3),
             ));
         }
         let finished = drive(&mut batcher, &mut engine, &mut policy, &mut arrivals);
@@ -506,11 +710,7 @@ mod tests {
             .map(|i| {
                 (
                     0usize,
-                    BatchRequest {
-                        id: i,
-                        prompt: vec![5 + i as i32],
-                        sent_at: 0.0,
-                    },
+                    BatchRequest::new(i, vec![5 + i as i32], 0.0),
                 )
             })
             .collect();
@@ -546,20 +746,12 @@ mod tests {
         // bucket reshape with a carried row, plus mid-stream retirement
         let mut arrivals: Vec<(usize, BatchRequest)> = vec![(
             0,
-            BatchRequest {
-                id: 0,
-                prompt: vec![5],
-                sent_at: 0.0,
-            },
+            BatchRequest::new(0, vec![5], 0.0),
         )];
         for i in 1..6u64 {
             arrivals.push((
                 3,
-                BatchRequest {
-                    id: i,
-                    prompt: vec![6 + i as i32],
-                    sent_at: 1e-3,
-                },
+                BatchRequest::new(i, vec![6 + i as i32], 1e-3),
             ));
         }
         let finished = drive(&mut batcher, &mut engine, &mut policy, &mut arrivals);
@@ -595,11 +787,7 @@ mod tests {
             .map(|i| {
                 (
                     (i as usize) * 2,
-                    BatchRequest {
-                        id: i,
-                        prompt: vec![5 + i as i32, 6],
-                        sent_at: i as f64 * 1e-3,
-                    },
+                    BatchRequest::new(i, vec![5 + i as i32, 6], i as f64 * 1e-3),
                 )
             })
             .collect();

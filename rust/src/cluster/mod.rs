@@ -62,6 +62,11 @@ pub struct ShardLoad {
     /// request here (from the shard policy's fitted round-cost model;
     /// `None` while the fits are cold)
     pub marginal_cost: Option<f64>,
+    /// deadline pressure: resident (live + queued) requests whose SLO is
+    /// already lost or predicted lost at the shard's current load (0 when
+    /// nothing carries a deadline) — the [`DeadlineAware`] router's
+    /// miss-penalty signal
+    pub slo_pressure: usize,
 }
 
 impl ShardLoad {
@@ -193,6 +198,44 @@ impl Router for CostAware {
     }
 }
 
+/// Deadline-aware cost routing: the [`CostAware`] marginal-latency argmin
+/// with each shard's marginal penalized by its [`ShardLoad::slo_pressure`]
+/// — a shard already predicted to miss deadlines is an expensive place to
+/// add work even when its raw marginal looks cheap (the new request would
+/// queue behind requests the shard must rush, and push them further
+/// past their deadlines).  While any shard's fits are cold the fallback
+/// is JSQ biased by pressure, so deadline load still spreads.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DeadlineAware;
+
+impl Router for DeadlineAware {
+    fn route(&mut self, loads: &[ShardLoad]) -> usize {
+        if loads.iter().any(|l| l.marginal_cost.is_none()) {
+            return loads
+                .iter()
+                .min_by_key(|l| (l.slo_pressure, l.total(), l.shard))
+                .expect("route called with at least one shard")
+                .shard;
+        }
+        loads
+            .iter()
+            .min_by(|x, y| {
+                let score = |l: &ShardLoad| {
+                    l.marginal_cost.unwrap() * (1.0 + l.slo_pressure as f64)
+                };
+                (score(x), x.total(), x.shard)
+                    .partial_cmp(&(score(y), y.total(), y.shard))
+                    .expect("marginal costs are finite")
+            })
+            .expect("route called with at least one shard")
+            .shard
+    }
+
+    fn label(&self) -> String {
+        "deadline".into()
+    }
+}
+
 /// Resolve a parsed [`RouterSpec`] into a live router.  `seed` feeds the
 /// probe RNG of [`PowerOfTwo`] (the other strategies are seedless).
 pub fn build_router(spec: RouterSpec, seed: u64) -> Box<dyn Router> {
@@ -201,6 +244,7 @@ pub fn build_router(spec: RouterSpec, seed: u64) -> Box<dyn Router> {
         RouterSpec::JoinShortestQueue => Box::new(JoinShortestQueue),
         RouterSpec::PowerOfTwo => Box::new(PowerOfTwo::new(seed)),
         RouterSpec::CostAware => Box::new(CostAware::default()),
+        RouterSpec::Deadline => Box::new(DeadlineAware),
     }
 }
 
@@ -296,6 +340,9 @@ pub struct ShardBreakdown {
     pub policy_snapshot: Option<Json>,
     /// the shard engine's KV block accounting (paged layout only)
     pub kv_blocks: Option<crate::kvcache::KvBlockStats>,
+    /// this shard's SLO attainment accounting (zeroed when nothing
+    /// carried a deadline)
+    pub slo: crate::metrics::SloSummary,
 }
 
 impl ShardBreakdown {
@@ -331,6 +378,7 @@ mod tests {
                 live: t,
                 queued: 0,
                 marginal_cost: None,
+                slo_pressure: 0,
             })
             .collect()
     }
@@ -385,6 +433,31 @@ mod tests {
         warm[2].marginal_cost = Some(0.0010);
         assert_eq!(r.route(&warm), 0);
         // marginal ties break by load, then index
+        let mut tied = loads(&[5, 2, 2]);
+        for s in tied.iter_mut() {
+            s.marginal_cost = Some(0.002);
+        }
+        assert_eq!(r.route(&tied), 1);
+    }
+
+    #[test]
+    fn deadline_aware_penalizes_pressured_shards() {
+        let mut r = DeadlineAware;
+        // cold anywhere -> pressure-biased JSQ: the pressured shard loses
+        // even when lighter
+        let mut l = loads(&[4, 2, 3]);
+        l[1].slo_pressure = 3;
+        assert_eq!(r.route(&l), 2, "pressure outranks raw load while cold");
+        // all warm: a cheap marginal loses once pressure scales it past a
+        // pricier but clean shard
+        let mut warm = loads(&[6, 1, 3]);
+        warm[0].marginal_cost = Some(0.0004);
+        warm[1].marginal_cost = Some(0.0010);
+        warm[2].marginal_cost = Some(0.0030);
+        assert_eq!(r.route(&warm), 0, "no pressure: cheapest marginal wins");
+        warm[0].slo_pressure = 4; // 0.0004 * 5 = 0.002 > 0.001
+        assert_eq!(r.route(&warm), 1, "pressure re-prices the cheap shard");
+        // equal scores tie-break by load then index
         let mut tied = loads(&[5, 2, 2]);
         for s in tied.iter_mut() {
             s.marginal_cost = Some(0.002);

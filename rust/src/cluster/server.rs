@@ -50,14 +50,16 @@ use super::{build_router, ShardBreakdown, ShardLoad};
 const COLD: u64 = u64::MAX;
 
 /// Lock-free load snapshot one cluster worker publishes for the
-/// dispatcher's router: live rows, queued requests, and the policy's
-/// fitted marginal per-token cost of one more request (`None` while the
-/// fits are cold).
+/// dispatcher's router: live rows, queued requests, the policy's fitted
+/// marginal per-token cost of one more request (`None` while the fits
+/// are cold), and the shard's deadline pressure (resident requests with
+/// lost or predicted-lost SLOs).
 #[derive(Debug)]
 pub struct ShardGauge {
     live: AtomicUsize,
     queued: AtomicUsize,
     marginal_bits: AtomicU64,
+    slo_pressure: AtomicUsize,
 }
 
 impl Default for ShardGauge {
@@ -66,12 +68,19 @@ impl Default for ShardGauge {
             live: AtomicUsize::new(0),
             queued: AtomicUsize::new(0),
             marginal_bits: AtomicU64::new(COLD),
+            slo_pressure: AtomicUsize::new(0),
         }
     }
 }
 
 impl ShardGauge {
-    pub fn publish(&self, live: usize, queued: usize, marginal: Option<f64>) {
+    pub fn publish(
+        &self,
+        live: usize,
+        queued: usize,
+        marginal: Option<f64>,
+        slo_pressure: usize,
+    ) {
         self.live.store(live, Ordering::Relaxed);
         self.queued.store(queued, Ordering::Relaxed);
         let bits = match marginal {
@@ -79,6 +88,7 @@ impl ShardGauge {
             _ => COLD,
         };
         self.marginal_bits.store(bits, Ordering::Relaxed);
+        self.slo_pressure.store(slo_pressure, Ordering::Relaxed);
     }
 
     pub fn live(&self) -> usize {
@@ -92,6 +102,10 @@ impl ShardGauge {
     pub fn marginal(&self) -> Option<f64> {
         let bits = self.marginal_bits.load(Ordering::Relaxed);
         (bits != COLD).then(|| f64::from_bits(bits))
+    }
+
+    pub fn slo_pressure(&self) -> usize {
+        self.slo_pressure.load(Ordering::Relaxed)
     }
 }
 
@@ -209,6 +223,7 @@ pub fn run_cluster_experiment(
                                     live: live.min(total),
                                     queued: total.saturating_sub(live),
                                     marginal_cost,
+                                    slo_pressure: gauges[k].slo_pressure(),
                                 }
                             })
                             .collect();
@@ -275,6 +290,9 @@ pub fn run_cluster_experiment(
             batch: resp.batch,
             spec_len: resp.spec_len,
             shard,
+            deadline: resp.deadline,
+            deferred_rounds: resp.deferred_rounds,
+            shed: resp.shed,
         });
     }
     client
@@ -287,6 +305,8 @@ pub fn run_cluster_experiment(
         .join()
         .map_err(|_| anyhow!("dispatcher thread panicked"))?;
     let mut shards = Vec::with_capacity(n_shards);
+    let mut deferrals = 0usize;
+    let mut sheds = 0usize;
     for (k, (join, report_rx)) in worker_joins
         .into_iter()
         .zip(report_rxs.into_iter())
@@ -297,10 +317,16 @@ pub fn run_cluster_experiment(
             Err(_) => bail!("shard {k} worker thread panicked"),
         }
         let report = report_rx.try_recv().unwrap_or_default();
-        let served: Vec<&RequestRecord> = recorder
+        deferrals += report.deferrals;
+        sheds += report.sheds;
+        let mut shard_rec = LatencyRecorder::new();
+        for r in recorder.records().iter().filter(|r| r.shard == k) {
+            shard_rec.push(*r);
+        }
+        let served: Vec<&RequestRecord> = shard_rec
             .records()
             .iter()
-            .filter(|r| r.shard == k)
+            .filter(|r| !r.shed)
             .collect();
         let mean_latency = if served.is_empty() {
             f64::NAN
@@ -314,6 +340,7 @@ pub fn run_cluster_experiment(
             rounds: report.timeline,
             policy_snapshot: report.policy_snapshot,
             kv_blocks: report.kv_blocks,
+            slo: shard_rec.slo_attainment(),
         });
     }
     for c in collectors {
@@ -333,6 +360,8 @@ pub fn run_cluster_experiment(
         policy_snapshot: None,
         shards,
         kv_blocks,
+        deferrals,
+        sheds,
     })
 }
 

@@ -5,15 +5,16 @@
 //! exactly — round-boundary admission, immediate retirement, a per-round
 //! policy query with the live batch, and the policy feedback edge driven
 //! in virtual time — but owns its **own** clock, queue, acceptance RNG
-//! stream and [`SpeculationPolicy`] instance.  The global event loop
-//! interleaves two event kinds in time order:
+//! stream, [`SpeculationPolicy`] instance and
+//! [`AdmissionController`] instance.  The global event loop interleaves
+//! two event kinds in time order:
 //!
 //! * **arrival** — the next trace item reaches the dispatcher; the
 //!   [`Router`] sees every shard's current [`ShardLoad`] (live, queued,
-//!   and the policy's fitted marginal cost) and picks a shard, whose
-//!   queue the item joins;
+//!   the policy's fitted marginal cost, and the shard's deadline
+//!   pressure) and picks a shard, whose queue the item joins;
 //! * **round** — the shard with the earliest next round boundary runs one
-//!   decode round (admitting its due queue first).
+//!   decode round (planning admission over its due queue first).
 //!
 //! An arrival is routed before any round that starts at or after its send
 //! time, so a routed request is admissible at the very boundary it
@@ -21,10 +22,20 @@
 //! atomic: a round spanning the arrival's send time has already completed
 //! (and retired its finished rows) when the router looks, so routing
 //! observes each shard at its last completed round boundary.
+//!
+//! Admission mirrors the real batcher per shard: the controller orders
+//! the due queue, deferred requests stay queued with their counters
+//! bumped, and shed requests are recorded (`RequestRecord::shed`) at the
+//! boundary that shed them.  [`simulate_trace_cluster`] keeps the
+//! pre-admission FIFO behaviour bit for bit.
 
 use std::collections::VecDeque;
 
-use crate::metrics::{LatencyRecorder, RequestRecord, RoundEvent};
+use crate::admission::{
+    apply_plan_to_queue, predicted_token_time, AdmissionController, AdmissionView, Candidate,
+    Fifo,
+};
+use crate::metrics::{LatencyRecorder, RequestRecord, RoundEvent, SloSummary};
 use crate::policy::{RoundFeedback, SpeculationPolicy};
 use crate::simulator::des::{kv_blocks_of, sim_bucket_for};
 use crate::simulator::{reshape_cost, round_cost, SimConfig};
@@ -50,6 +61,19 @@ impl ClusterReport {
         counts.resize(self.shard_rounds.len(), 0);
         counts
     }
+
+    /// Per-shard SLO attainment accounting (padded to the shard count),
+    /// via the same `LatencyRecorder::slo_attainment` the global numbers
+    /// come from — so per-shard counters always sum to the global ones.
+    pub fn shard_attainment(&self) -> Vec<SloSummary> {
+        let n = self.shard_rounds.len().max(1);
+        let mut per_shard: Vec<LatencyRecorder> =
+            (0..n).map(|_| LatencyRecorder::new()).collect();
+        for r in self.recorder.records() {
+            per_shard[r.shard.min(n - 1)].push(*r);
+        }
+        per_shard.iter().map(|rec| rec.slo_attainment()).collect()
+    }
 }
 
 struct SimRow {
@@ -61,12 +85,20 @@ struct SimRow {
     generated: usize,
     batch_at_admit: usize,
     spec_at_admit: usize,
+    deadline: Option<f64>,
+    deferred: usize,
+}
+
+/// A queued trace item plus its admission-control state.
+struct Waiting {
+    item: TraceItem,
+    deferred: usize,
 }
 
 struct Shard {
     /// virtual clock: the shard's next round boundary
     t: f64,
-    queue: VecDeque<TraceItem>,
+    queue: VecDeque<Waiting>,
     live: Vec<SimRow>,
     rng: Pcg64,
     rounds: Vec<RoundEvent>,
@@ -83,23 +115,65 @@ impl Shard {
         if !self.live.is_empty() {
             Some(self.t)
         } else {
-            self.queue.front().map(|item| self.t.max(item.send_at))
+            self.queue.front().map(|w| self.t.max(w.item.send_at))
         }
+    }
+
+    /// Deadline pressure for the router: resident requests whose SLO is
+    /// already lost or predicted lost at this shard's load (the DES twin
+    /// of `ContinuousBatcher::slo_pressure`).
+    fn slo_pressure(&self, cfg: &SimConfig, policy: &dyn SpeculationPolicy) -> usize {
+        let load = self.live.len() + self.queue.len();
+        let t_tok = predicted_token_time(policy, load, cfg.max_batch);
+        let late = |deadline: Option<f64>, tokens_left: usize| match deadline {
+            None => false,
+            Some(d) => match t_tok {
+                None => d < self.t,
+                Some(t) => self.t + tokens_left as f64 * t > d,
+            },
+        };
+        self.live
+            .iter()
+            .filter(|r| late(r.deadline, cfg.max_new_tokens.saturating_sub(r.generated)))
+            .count()
+            + self
+                .queue
+                .iter()
+                .filter(|w| late(w.item.deadline, cfg.max_new_tokens))
+                .count()
     }
 }
 
 /// Simulate a trace through `policies.len()` worker shards routed by
-/// `router`.  Each shard gets its own acceptance RNG stream derived from
-/// `cfg.seed`, so runs are deterministic and two routers compared on the
-/// same trace differ only through placement.
+/// `router`, FIFO admission on every shard (bit-for-bit the
+/// pre-admission-subsystem behaviour).
 pub fn simulate_trace_cluster(
     cfg: &SimConfig,
     policies: &mut [Box<dyn SpeculationPolicy>],
     router: &mut dyn Router,
     trace: &Trace,
 ) -> ClusterReport {
+    let mut ctrls: Vec<Box<dyn AdmissionController>> = (0..policies.len())
+        .map(|_| Box::new(Fifo) as Box<dyn AdmissionController>)
+        .collect();
+    simulate_trace_cluster_admission(cfg, policies, &mut ctrls, router, trace)
+}
+
+/// Simulate a trace through `policies.len()` worker shards routed by
+/// `router`, with one [`AdmissionController`] per shard.  Each shard gets
+/// its own acceptance RNG stream derived from `cfg.seed`, so runs are
+/// deterministic and two routers (or controllers) compared on the same
+/// trace differ only through placement/admission.
+pub fn simulate_trace_cluster_admission(
+    cfg: &SimConfig,
+    policies: &mut [Box<dyn SpeculationPolicy>],
+    ctrls: &mut [Box<dyn AdmissionController>],
+    router: &mut dyn Router,
+    trace: &Trace,
+) -> ClusterReport {
     let n_shards = policies.len();
     assert!(n_shards >= 1, "cluster needs at least one shard");
+    assert_eq!(ctrls.len(), n_shards, "one admission controller per shard");
     let mut shards: Vec<Shard> = (0..n_shards)
         .map(|k| Shard {
             t: 0.0,
@@ -146,14 +220,25 @@ pub fn simulate_trace_cluster(
                         sh.live.len() + sh.queue.len(),
                         cfg.max_batch,
                     ),
+                    slo_pressure: sh.slo_pressure(cfg, policies[k].as_ref()),
                 })
                 .collect();
             let k = router.route(&loads).min(n_shards - 1);
-            shards[k].queue.push_back(items[next].clone());
+            shards[k].queue.push_back(Waiting {
+                item: items[next].clone(),
+                deferred: 0,
+            });
             next += 1;
         } else {
             let k = round_shard.expect("a shard has work");
-            step_shard(cfg, &mut shards[k], policies[k].as_mut(), &mut recorder, k);
+            step_shard(
+                cfg,
+                &mut shards[k],
+                policies[k].as_mut(),
+                ctrls[k].as_mut(),
+                &mut recorder,
+                k,
+            );
         }
     }
 
@@ -164,13 +249,15 @@ pub fn simulate_trace_cluster(
     }
 }
 
-/// One round boundary on one shard: admit due queued requests, run one
-/// decode round in virtual time, feed the policy back, retire finished
-/// rows.  Mirrors the single-worker `simulate_trace_continuous` loop body.
+/// One round boundary on one shard: plan admission over the due queue,
+/// admit/shed accordingly, run one decode round in virtual time, feed the
+/// policy back, retire finished rows.  Mirrors the single-worker
+/// `simulate_trace_continuous` loop body.
 fn step_shard(
     cfg: &SimConfig,
     sh: &mut Shard,
     policy: &mut dyn SpeculationPolicy,
+    ctrl: &mut dyn AdmissionController,
     recorder: &mut LatencyRecorder,
     shard_idx: usize,
 ) {
@@ -178,36 +265,99 @@ fn step_shard(
     if sh.live.is_empty() {
         // idle: jump to the head arrival, opening a new epoch
         if let Some(head) = sh.queue.front() {
-            if head.send_at > sh.t {
-                sh.t = head.send_at;
+            if head.item.send_at > sh.t {
+                sh.t = head.item.send_at;
             }
         }
         sh.epoch += 1;
         sh.bucket = 0;
     }
 
-    // --- admit everything due, up to the live-capacity cap ---
+    // --- plan admission over the due prefix of the queue ---
+    let due = sh
+        .queue
+        .iter()
+        .take_while(|w| w.item.send_at <= sh.t)
+        .count();
+    let admit_n = if due > 0 {
+        let candidates: Vec<Candidate> = sh
+            .queue
+            .iter()
+            .take(due)
+            .map(|w| Candidate {
+                id: w.item.id,
+                sent_at: w.item.send_at,
+                deadline: w.item.deadline,
+                prompt_len: w.item.prompt.ids.len(),
+                tokens_left: cfg.max_new_tokens,
+                deferred: w.deferred,
+            })
+            .collect();
+        let view = AdmissionView {
+            now: sh.t,
+            live: sh.live.len(),
+            max_batch: cfg.max_batch,
+            policy,
+        };
+        let rest = sh.queue.split_off(due);
+        let due_items: Vec<Waiting> = sh.queue.drain(..).collect();
+        let out = apply_plan_to_queue(
+            ctrl.plan(&candidates, &view),
+            due_items,
+            sh.live.len(),
+            |w| w.deferred += 1,
+        );
+        for w in &out.shed {
+            recorder.push(RequestRecord {
+                id: w.item.id,
+                sent_at: w.item.send_at,
+                started_at: sh.t,
+                finished_at: sh.t,
+                tokens: 0,
+                batch: 0,
+                spec_len: 0,
+                shard: shard_idx,
+                deadline: w.item.deadline,
+                deferred_rounds: w.deferred,
+                shed: true,
+            });
+        }
+        sh.queue = out.queue.into();
+        sh.queue.extend(rest);
+        out.admit_n
+    } else {
+        0
+    };
+
+    // --- admit the planned prefix, up to the live-capacity cap ---
     let mut n_admit = 0usize;
     let mut plen_sum = 0usize;
     let n_before = sh.live.len();
     let admit_t = sh.t;
-    while let Some(item) = sh.queue.front() {
-        if item.send_at > sh.t || sh.live.len() >= cfg.max_batch {
+    while n_admit < admit_n {
+        if sh.live.len() >= cfg.max_batch {
             break;
         }
-        let item = sh.queue.pop_front().expect("front just observed");
-        let plen = item.prompt.ids.len();
+        let w = sh.queue.pop_front().expect("planned admits are queued");
+        let plen = w.item.prompt.ids.len();
         sh.live.push(SimRow {
-            id: item.id,
-            sent_at: item.send_at,
+            id: w.item.id,
+            sent_at: w.item.send_at,
             admitted_at: admit_t,
             plen,
             generated: 1, // prefill commits the first token
             batch_at_admit: 0,
             spec_at_admit: 0,
+            deadline: w.item.deadline,
+            deferred: w.deferred,
         });
         plen_sum += plen;
         n_admit += 1;
+    }
+    if sh.live.is_empty() {
+        // the whole due queue was shed and nothing was live: no round to
+        // run at this boundary
+        return;
     }
     if n_admit > 0 {
         let mean_plen = (plen_sum as f64 / n_admit as f64).ceil() as usize;
@@ -292,6 +442,9 @@ fn step_shard(
                 batch: row.batch_at_admit,
                 spec_len: row.spec_at_admit,
                 shard: shard_idx,
+                deadline: row.deadline,
+                deferred_rounds: row.deferred,
+                shed: false,
             });
         } else {
             i += 1;
@@ -361,6 +514,7 @@ mod tests {
                 assert!(r.finished_at > r.started_at);
                 assert!(r.shard < 4);
                 assert!(r.batch >= 1 && r.batch <= cfg.max_batch);
+                assert!(!r.shed, "FIFO admission never sheds");
             }
             assert_eq!(report.shard_rounds.len(), 4);
             for rounds in &report.shard_rounds {
@@ -518,5 +672,71 @@ mod tests {
             );
         }
         assert!(report.shard_requests().iter().all(|&n| n > 0));
+    }
+
+    /// Deadline-aware routing on a deadlined overload trace: requests are
+    /// conserved (sheds included) and per-shard attainment sums to the
+    /// global accounting.
+    #[test]
+    fn deadline_router_with_slo_admission_conserves_and_attains() {
+        use crate::admission::replicate_controllers;
+        use crate::config::AdmissionSpec;
+
+        let cfg = cfg();
+        let lut = simulated_lut(&cfg, &[1, 2, 4, 8, 16], 8, 80);
+        let base = Trace::generate(
+            &TrafficPattern::Stationary {
+                interval: 0.02,
+                cv: 1.5,
+            },
+            &pool(),
+            300,
+            7,
+        );
+        let trace = base.with_deadlines(&crate::traffic::SloSpec::new(1.2, 2.0), 7);
+        let run = |spec: RouterSpec| {
+            let mut policies =
+                replicate_policies(&PolicySpec::ModelBased, Some(&lut), 3).unwrap();
+            let mut ctrls = replicate_controllers(AdmissionSpec::SloAware, 3);
+            let mut router = build_router(spec, 5);
+            simulate_trace_cluster_admission(
+                &cfg,
+                &mut policies,
+                &mut ctrls,
+                router.as_mut(),
+                &trace,
+            )
+        };
+        let report = run(RouterSpec::Deadline);
+        assert_eq!(report.router, "deadline");
+        assert_eq!(report.recorder.len(), 300, "every request leaves a record");
+        let global = report.recorder.slo_attainment();
+        assert_eq!(global.deadlined, 300);
+        assert_eq!(
+            global.met + global.missed + global.shed,
+            300,
+            "attainment counters must conserve"
+        );
+        let per_shard = report.shard_attainment();
+        assert_eq!(per_shard.len(), 3);
+        assert_eq!(per_shard.iter().map(|s| s.met).sum::<usize>(), global.met);
+        assert_eq!(per_shard.iter().map(|s| s.shed).sum::<usize>(), global.shed);
+        assert_eq!(
+            per_shard.iter().map(|s| s.completed).sum::<usize>(),
+            global.completed
+        );
+        // determinism: the same run replays bit-identically
+        let again = run(RouterSpec::Deadline);
+        let lat = |r: &ClusterReport| {
+            let mut v: Vec<(u64, bool, f64)> = r
+                .recorder
+                .records()
+                .iter()
+                .map(|x| (x.id, x.shed, x.latency()))
+                .collect();
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            v
+        };
+        assert_eq!(lat(&report), lat(&again));
     }
 }

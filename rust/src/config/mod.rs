@@ -32,6 +32,16 @@ pub struct ServingConfig {
     /// KV layout: "dense" (per-slot buffers, reshape re-ingests) or
     /// "paged" (block tables, O(1) reshape remap; stub backend only).
     pub kv_layout: KvLayout,
+    /// Admission control: "fifo" (arrival order), "edf"
+    /// (deadline-ordered), or "slo" (model-predicted defer/shed).
+    pub admission: AdmissionSpec,
+    /// Median per-request latency budget in seconds (0 = requests carry
+    /// no deadlines and every controller behaves like FIFO).
+    pub slo_p50: f64,
+    /// Log-uniform spread of the sampled budgets: each request's budget
+    /// lands in `[slo_p50 / slo_scale, slo_p50 * slo_scale]` (1 = all
+    /// requests share the same budget).
+    pub slo_scale: f64,
     /// Seed for everything stochastic on the serving side.
     pub seed: u64,
 }
@@ -73,6 +83,61 @@ impl PolicySpec {
     }
 }
 
+/// Parsed admission-control choice (resolved into a live
+/// `admission::AdmissionController` by `admission::build_controller`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionSpec {
+    /// arrival order, admit everything (the pre-subsystem behaviour)
+    Fifo,
+    /// earliest-deadline-first queue ordering, never defer or shed
+    Edf,
+    /// EDF plus model-predicted feasibility: defer predicted SLO misses,
+    /// shed hopeless requests, degrade to EDF while the fits are cold
+    SloAware,
+}
+
+impl AdmissionSpec {
+    pub fn parse(s: &str) -> Result<AdmissionSpec> {
+        match s {
+            "fifo" => Ok(AdmissionSpec::Fifo),
+            "edf" | "deadline" => Ok(AdmissionSpec::Edf),
+            "slo" | "slo-aware" => Ok(AdmissionSpec::SloAware),
+            other => bail!("bad admission {other:?}: expected fifo | edf | slo"),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            AdmissionSpec::Fifo => "fifo",
+            AdmissionSpec::Edf => "edf",
+            AdmissionSpec::SloAware => "slo-aware",
+        }
+    }
+
+    /// All three controllers (the comparison set of the SLO benches).
+    pub fn all() -> [AdmissionSpec; 3] {
+        [
+            AdmissionSpec::Fifo,
+            AdmissionSpec::Edf,
+            AdmissionSpec::SloAware,
+        ]
+    }
+
+    /// The `SPECBATCH_ADMISSION` environment override, if set.  CI runs
+    /// the stub suite under both `fifo` and `slo`; with no deadlines in
+    /// a trace every controller is behaviourally FIFO, so the axis
+    /// checks exactly that invariant across the whole suite.
+    pub fn env_override() -> Option<AdmissionSpec> {
+        let v = std::env::var("SPECBATCH_ADMISSION").ok()?;
+        Some(AdmissionSpec::parse(&v).unwrap_or_else(|e| panic!("SPECBATCH_ADMISSION: {e}")))
+    }
+
+    /// Default controller: the env override, else FIFO.
+    pub fn default_spec() -> AdmissionSpec {
+        AdmissionSpec::env_override().unwrap_or(AdmissionSpec::Fifo)
+    }
+}
+
 /// Parsed request-routing choice for multi-worker serving (resolved into
 /// a live `cluster::Router` object by `cluster::build_router`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -86,6 +151,9 @@ pub enum RouterSpec {
     /// pick the shard whose fitted round-cost model predicts the
     /// smallest marginal per-token latency increase (JSQ while cold)
     CostAware,
+    /// cost-aware with the marginal penalized by each shard's predicted
+    /// SLO misses (deadline-pressure-weighted placement)
+    Deadline,
 }
 
 impl RouterSpec {
@@ -97,9 +165,10 @@ impl RouterSpec {
             }
             "power-of-two" | "p2" | "po2" => Ok(RouterSpec::PowerOfTwo),
             "cost-aware" | "cost" => Ok(RouterSpec::CostAware),
+            "deadline" | "deadline-aware" => Ok(RouterSpec::Deadline),
             other => bail!(
                 "bad router {other:?}: expected round-robin | jsq | \
-                 power-of-two | cost-aware"
+                 power-of-two | cost-aware | deadline"
             ),
         }
     }
@@ -110,17 +179,19 @@ impl RouterSpec {
             RouterSpec::JoinShortestQueue => "jsq",
             RouterSpec::PowerOfTwo => "power-of-two",
             RouterSpec::CostAware => "cost-aware",
+            RouterSpec::Deadline => "deadline",
         }
     }
 
-    /// All four routing strategies (the comparison set of the cluster
+    /// All five routing strategies (the comparison set of the cluster
     /// benches and examples).
-    pub fn all() -> [RouterSpec; 4] {
+    pub fn all() -> [RouterSpec; 5] {
         [
             RouterSpec::RoundRobin,
             RouterSpec::JoinShortestQueue,
             RouterSpec::PowerOfTwo,
             RouterSpec::CostAware,
+            RouterSpec::Deadline,
         ]
     }
 }
@@ -136,6 +207,9 @@ impl Default for ServingConfig {
             workers: 1,
             router: RouterSpec::RoundRobin,
             kv_layout: KvLayout::Dense,
+            admission: AdmissionSpec::Fifo,
+            slo_p50: 0.0,
+            slo_scale: 1.0,
             seed: 0,
         }
     }
@@ -174,6 +248,15 @@ impl ServingConfig {
         if let Some(v) = json.get_opt("kv_layout")? {
             cfg.kv_layout = KvLayout::parse(v.as_str()?)?;
         }
+        if let Some(v) = json.get_opt("admission")? {
+            cfg.admission = AdmissionSpec::parse(v.as_str()?)?;
+        }
+        if let Some(v) = json.get_opt("slo_p50")? {
+            cfg.slo_p50 = v.as_f64()?;
+        }
+        if let Some(v) = json.get_opt("slo_scale")? {
+            cfg.slo_scale = v.as_f64()?;
+        }
         if let Some(v) = json.get_opt("seed")? {
             cfg.seed = v.as_i64()? as u64;
         }
@@ -182,6 +265,9 @@ impl ServingConfig {
         }
         if cfg.workers == 0 {
             bail!("workers must be positive (1 = single-worker serving)");
+        }
+        if cfg.slo_p50 < 0.0 || cfg.slo_scale < 1.0 {
+            bail!("slo_p50 must be >= 0 and slo_scale >= 1");
         }
         Ok(cfg)
     }
@@ -199,6 +285,9 @@ impl ServingConfig {
             ("workers", Json::Num(self.workers as f64)),
             ("router", Json::Str(self.router.label().into())),
             ("kv_layout", Json::Str(self.kv_layout.label().into())),
+            ("admission", Json::Str(self.admission.label().into())),
+            ("slo_p50", Json::Num(self.slo_p50)),
+            ("slo_scale", Json::Num(self.slo_scale)),
             ("seed", Json::Num(self.seed as f64)),
         ])
     }
@@ -289,6 +378,44 @@ mod tests {
         for spec in RouterSpec::all() {
             assert_eq!(RouterSpec::parse(spec.label()).unwrap(), spec);
         }
+    }
+
+    #[test]
+    fn admission_parse_labels_and_roundtrip() {
+        assert_eq!(AdmissionSpec::parse("fifo").unwrap(), AdmissionSpec::Fifo);
+        assert_eq!(AdmissionSpec::parse("edf").unwrap(), AdmissionSpec::Edf);
+        assert_eq!(
+            AdmissionSpec::parse("deadline").unwrap(),
+            AdmissionSpec::Edf
+        );
+        assert_eq!(AdmissionSpec::parse("slo").unwrap(), AdmissionSpec::SloAware);
+        assert_eq!(
+            AdmissionSpec::parse("slo-aware").unwrap(),
+            AdmissionSpec::SloAware
+        );
+        assert!(AdmissionSpec::parse("bogus").is_err());
+        for spec in AdmissionSpec::all() {
+            assert_eq!(AdmissionSpec::parse(spec.label()).unwrap(), spec);
+        }
+        let c = ServingConfig {
+            admission: AdmissionSpec::SloAware,
+            slo_p50: 2.5,
+            slo_scale: 3.0,
+            ..ServingConfig::default()
+        };
+        let c2 = ServingConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.admission, AdmissionSpec::SloAware);
+        assert_eq!(c2.slo_p50, 2.5);
+        assert_eq!(c2.slo_scale, 3.0);
+        // defaults: FIFO, no deadlines
+        let d = ServingConfig::default();
+        assert_eq!(d.admission, AdmissionSpec::Fifo);
+        assert_eq!(d.slo_p50, 0.0);
+        // invalid SLO shapes rejected
+        let j = Json::parse(r#"{"slo_scale": 0.5}"#).unwrap();
+        assert!(ServingConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"slo_p50": -1.0}"#).unwrap();
+        assert!(ServingConfig::from_json(&j).is_err());
     }
 
     #[test]

@@ -85,6 +85,12 @@ pub struct EngineConfig {
     /// dense per-slot KV vs paged blocks with O(1) reshape remap
     /// (defaults to `SPECBATCH_KV_LAYOUT` when set, else dense)
     pub kv_layout: KvLayout,
+    /// minimum wall-clock seconds per decode round (0 = as fast as the
+    /// backend runs).  The stub pair decodes in microseconds, which makes
+    /// wall-clock SLO experiments pure scheduler-jitter noise; a small
+    /// throttle (e.g. 2 ms) pins the service rate so deadline timing is
+    /// reproducible on any machine.  No effect on virtual-time paths.
+    pub min_round_seconds: f64,
 }
 
 impl Default for EngineConfig {
@@ -97,6 +103,7 @@ impl Default for EngineConfig {
             pad_token: 0,
             record_acceptance: false,
             kv_layout: KvLayout::default_layout(),
+            min_round_seconds: 0.0,
         }
     }
 }
@@ -147,6 +154,12 @@ pub struct GenStats {
     /// KV entries transferred by block-table remap instead of
     /// re-ingestion (paged-layout epoch reshapes)
     pub remapped_tokens: usize,
+    /// admission-control defer events charged to this epoch (one per
+    /// candidate per round boundary it was held back at — the batcher's
+    /// `AdmissionController` fills these; 0 under FIFO)
+    pub deferrals: usize,
+    /// requests shed by admission control while this epoch was active
+    pub sheds: usize,
 }
 
 impl GenStats {
@@ -761,6 +774,16 @@ impl<'rt> Engine<'rt> {
                 self.round_speculative(rows, *bucket, s, llm_kv, ssm_kv, stats)?;
             }
         }
+        // wall-clock throttle: pin the service rate for reproducible
+        // deadline experiments on the µs-fast stub (no-op by default)
+        if self.cfg.min_round_seconds > 0.0 {
+            let spent = wall_start.elapsed().as_secs_f64();
+            if spent < self.cfg.min_round_seconds {
+                std::thread::sleep(std::time::Duration::from_secs_f64(
+                    self.cfg.min_round_seconds - spent,
+                ));
+            }
+        }
         let fit_time = fit_start.elapsed().as_secs_f64();
         let wall_time = wall_start.elapsed().as_secs_f64();
         self.check_eos_and_limits(&mut st.rows);
@@ -797,7 +820,11 @@ impl<'rt> Engine<'rt> {
     /// skip ingestion entirely: their block chains are installed into the
     /// slot's tables and the ingest counters transferred — the reshape-
     /// as-remap path.  Returns the slot indices, in request order.
-    pub fn admit_rows(&mut self, st: &mut BatchState, reqs: Vec<AdmitRequest>) -> Result<Vec<usize>> {
+    pub fn admit_rows(
+        &mut self,
+        st: &mut BatchState,
+        reqs: Vec<AdmitRequest>,
+    ) -> Result<Vec<usize>> {
         if reqs.is_empty() {
             return Ok(Vec::new());
         }

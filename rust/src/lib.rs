@@ -43,6 +43,7 @@
 //! # Ok::<(), anyhow::Error>(())
 //! ```
 
+pub mod admission;
 pub mod analytic;
 pub mod batcher;
 pub mod cluster;
@@ -63,10 +64,13 @@ pub mod util;
 
 /// Most-used types in one import.
 pub mod prelude {
+    pub use crate::admission::{
+        build_controller, AdmissionController, Edf, Fifo, SloAware,
+    };
     pub use crate::batcher::{BatchRequest, BatcherConfig, ContinuousBatcher};
     pub use crate::cluster::sim::simulate_trace_cluster;
     pub use crate::cluster::{build_router, replicate_policies, Router, ShardLoad};
-    pub use crate::config::{PolicySpec, RouterSpec, ServingConfig};
+    pub use crate::config::{AdmissionSpec, PolicySpec, RouterSpec, ServingConfig};
     pub use crate::engine::{BatchState, Engine, EngineConfig, GenOutput};
     pub use crate::kvcache::{BlockManager, KvBlockStats, KvLayout};
     pub use crate::policy::{

@@ -21,17 +21,19 @@
 
 use anyhow::{bail, Result};
 
-use specbatch::cluster::sim::simulate_trace_cluster;
+use specbatch::admission::{build_controller, replicate_controllers};
+use specbatch::cluster::sim::simulate_trace_cluster_admission;
 use specbatch::cluster::{build_router, replicate_policies};
-use specbatch::config::{PolicySpec, RouterSpec};
+use specbatch::config::{AdmissionSpec, PolicySpec, RouterSpec};
 use specbatch::kvcache::KvLayout;
+use specbatch::metrics::SloSummary;
 use specbatch::policy::{Fixed, LutAdaptive, ModelBased, NoSpec, SpeculationPolicy};
 use specbatch::server::{run_experiment, Backend, SchedulingMode, ServerConfig};
 use specbatch::simulator::{
-    simulate_trace, simulate_trace_continuous, simulated_lut, AcceptanceDrift,
-    AcceptanceProcess, CostModel, GpuProfile, ModelProfile, SimConfig,
+    simulate_trace_admission, simulate_trace_continuous_admission, simulated_lut,
+    AcceptanceDrift, AcceptanceProcess, CostModel, GpuProfile, ModelProfile, SimConfig,
 };
-use specbatch::traffic::{Trace, TrafficPattern};
+use specbatch::traffic::{SloSpec, Trace, TrafficPattern};
 use specbatch::util::cli::{ArgSpec, Args};
 use specbatch::{log_info, util};
 
@@ -106,6 +108,24 @@ fn parse_mode(s: &str) -> Result<SchedulingMode> {
         "continuous" | "cont" => Ok(SchedulingMode::Continuous),
         other => bail!("bad mode {other:?}: expected static | continuous"),
     }
+}
+
+/// One line of SLO attainment accounting (silent when nothing carried a
+/// deadline, so deadline-free runs print exactly what they used to).
+fn print_slo_line(slo: &SloSummary, deferrals: usize) {
+    if slo.deadlined == 0 {
+        return;
+    }
+    println!(
+        "slo: attainment {:.1}% | {} met / {} missed / {} shed of {} deadlined \
+         | {} defer events",
+        slo.attainment() * 100.0,
+        slo.met,
+        slo.missed,
+        slo.shed,
+        slo.deadlined,
+        deferrals
+    );
 }
 
 #[cfg(not(feature = "pjrt"))]
@@ -385,7 +405,7 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
     .opt("policy", "adaptive", "none | fixed:<s> | adaptive | model-based")
     .opt("mode", "static", "static | continuous")
     .opt("workers", "1", "worker shards (> 1 = threaded cluster, continuous mode)")
-    .opt("router", "cost-aware", "round-robin | jsq | power-of-two | cost-aware")
+    .opt("router", "cost-aware", "round-robin | jsq | power-of-two | cost-aware | deadline")
     .opt("requests", "64", "number of requests")
     .opt("interval", "0.5", "mean inter-arrival seconds")
     .opt("cv", "1.0", "coefficient of variation")
@@ -396,6 +416,9 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         "dense",
         "dense | paged (paged = O(1) epoch reshape via block tables, stub backend)",
     )
+    .opt("admission", "fifo", "fifo | edf | slo (queue ordering / defer / shed)")
+    .opt("slo-p50", "0", "median latency budget in seconds (0 = no deadlines)")
+    .opt("slo-scale", "1", "log-uniform budget spread factor (>= 1)")
     .opt("seed", "1", "trace seed")
     .flag("fig6", "use the alternating intense/sparse pattern")
     .opt("out", "results/serve.csv", "per-request CSV")
@@ -412,12 +435,17 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
             cv: args.get_f64("cv")?,
         }
     };
-    let trace = Trace::generate(
+    let mut trace = Trace::generate(
         &pattern,
         &pool,
         args.get_usize("requests")?,
         args.get_u64("seed")?,
     );
+    let slo_p50 = args.get_f64("slo-p50")?;
+    if slo_p50 > 0.0 {
+        let slo = SloSpec::new(slo_p50, args.get_f64("slo-scale")?);
+        trace = trace.with_deadlines(&slo, args.get_u64("seed")?);
+    }
     log_info!(
         "trace: {} requests over {:.1}s ({})",
         trace.len(),
@@ -434,6 +462,7 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         workers,
         router,
         kv_layout: KvLayout::parse(args.get("kv-layout")?)?,
+        admission: AdmissionSpec::parse(args.get("admission")?)?,
         ..ServerConfig::default()
     };
     let policy = PolicySpec::parse(args.get("policy")?)?;
@@ -467,18 +496,29 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         p99,
         out.recorder.throughput_tokens_per_s()
     );
+    print_slo_line(&out.recorder.slo_attainment(), out.deferrals);
     if !out.shards.is_empty() {
         println!("router {} over {} shards:", router.label(), out.shards.len());
         for b in &out.shards {
+            let slo = if b.slo.deadlined > 0 {
+                format!(
+                    " | attainment {:.1}% ({} shed)",
+                    b.slo.attainment() * 100.0,
+                    b.slo.shed
+                )
+            } else {
+                String::new()
+            };
             println!(
                 "  shard {} | {:>4} requests | mean latency {:.3}s | mean live {:.1} \
-                 | mean s {:.2} | {} rounds",
+                 | mean s {:.2} | {} rounds{}",
                 b.shard,
                 b.requests,
                 b.mean_latency,
                 b.mean_live(),
                 b.mean_s(),
-                b.rounds.len()
+                b.rounds.len(),
+                slo
             );
         }
     }
@@ -499,7 +539,7 @@ fn cmd_sim(argv: Vec<String>) -> Result<()> {
         .opt("policy", "adaptive", "none | fixed:<s> | adaptive | model-based")
         .opt("mode", "static", "static | continuous")
         .opt("workers", "1", "worker shards (> 1 = cluster DES, continuous rounds)")
-        .opt("router", "cost-aware", "round-robin | jsq | power-of-two | cost-aware")
+        .opt("router", "cost-aware", "round-robin | jsq | power-of-two | cost-aware | deadline")
         .opt("requests", "1000", "number of requests")
         .opt("interval", "0.3", "mean inter-arrival seconds")
         .opt("cv", "1.0", "coefficient of variation")
@@ -510,6 +550,9 @@ fn cmd_sim(argv: Vec<String>) -> Result<()> {
             "paged | dense (dense charges the chunked reshape re-ingest the \
              engine pays without a block manager)",
         )
+        .opt("admission", "fifo", "fifo | edf | slo (queue ordering / defer / shed)")
+        .opt("slo-p50", "0", "median latency budget in seconds (0 = no deadlines)")
+        .opt("slo-scale", "1", "log-uniform budget spread factor (>= 1)")
         .opt("seed", "1", "trace seed")
         .opt("drift-at", "0", "acceptance drift time in virtual seconds (0 = off)")
         .opt("drift-c", "0.55", "post-drift acceptance c")
@@ -566,12 +609,18 @@ fn cmd_sim(argv: Vec<String>) -> Result<()> {
         ids: vec![1; plen],
         text: String::new(),
     }];
-    let trace = Trace::generate(
+    let mut trace = Trace::generate(
         &pattern,
         &pool,
         args.get_usize("requests")?,
         args.get_u64("seed")?,
     );
+    let slo_p50 = args.get_f64("slo-p50")?;
+    if slo_p50 > 0.0 {
+        let slo = SloSpec::new(slo_p50, args.get_f64("slo-scale")?);
+        trace = trace.with_deadlines(&slo, args.get_u64("seed")?);
+    }
+    let admission = AdmissionSpec::parse(args.get("admission")?)?;
 
     let workers = args.get_usize("workers")?;
     if workers > 1 {
@@ -590,8 +639,15 @@ fn cmd_sim(argv: Vec<String>) -> Result<()> {
             _ => None,
         };
         let mut policies = replicate_policies(&policy_spec, lut.as_ref(), workers)?;
+        let mut ctrls = replicate_controllers(admission, workers);
         let mut router = build_router(router_spec, args.get_u64("seed")?);
-        let report = simulate_trace_cluster(&cfg, &mut policies, router.as_mut(), &trace);
+        let report = simulate_trace_cluster_admission(
+            &cfg,
+            &mut policies,
+            &mut ctrls,
+            router.as_mut(),
+            &trace,
+        );
         let s = report.recorder.summary();
         let (p50, p90, p99) = report.recorder.percentiles();
         println!(
@@ -608,15 +664,32 @@ fn cmd_sim(argv: Vec<String>) -> Result<()> {
             p99,
             report.recorder.mean_per_token_latency() * 1e3
         );
+        let defer_events = report
+            .recorder
+            .records()
+            .iter()
+            .map(|r| r.deferred_rounds)
+            .sum();
+        print_slo_line(&report.recorder.slo_attainment(), defer_events);
         let counts = report.shard_requests();
+        let attain = report.shard_attainment();
         for (k, rounds) in report.shard_rounds.iter().enumerate() {
             let mean_live = rounds.iter().map(|e| e.live as f64).sum::<f64>()
                 / rounds.len().max(1) as f64;
             let mean_s = rounds.iter().map(|e| e.s as f64).sum::<f64>()
                 / rounds.len().max(1) as f64;
+            let slo = if attain[k].deadlined > 0 {
+                format!(
+                    " | attainment {:.1}% ({} shed)",
+                    attain[k].attainment() * 100.0,
+                    attain[k].shed
+                )
+            } else {
+                String::new()
+            };
             println!(
                 "  shard {k} | {:>5} requests | {:>6} rounds | mean live {mean_live:.1} \
-                 | mean s {mean_s:.2}",
+                 | mean s {mean_s:.2}{slo}",
                 counts[k],
                 rounds.len()
             );
@@ -649,10 +722,19 @@ fn cmd_sim(argv: Vec<String>) -> Result<()> {
             }
         }
     };
+    let mut ctrl = build_controller(admission);
     let (rec, rounds) = match mode {
-        SchedulingMode::Static => (simulate_trace(&cfg, policy.as_mut(), &trace), Vec::new()),
+        SchedulingMode::Static => (
+            simulate_trace_admission(&cfg, policy.as_mut(), ctrl.as_mut(), &trace),
+            Vec::new(),
+        ),
         SchedulingMode::Continuous => {
-            let (rec, rounds) = simulate_trace_continuous(&cfg, policy.as_mut(), &trace);
+            let (rec, rounds) = simulate_trace_continuous_admission(
+                &cfg,
+                policy.as_mut(),
+                ctrl.as_mut(),
+                &trace,
+            );
             (rec, rounds)
         }
     };
@@ -662,16 +744,21 @@ fn cmd_sim(argv: Vec<String>) -> Result<()> {
     let s = rec.summary();
     let (p50, p90, p99) = rec.percentiles();
     println!(
-        "{} on {} | {} | {mode:?} | {} requests | latency mean {:.3}s p50 {:.3}s \
+        "{} on {} | {} | {} | {mode:?} | {} requests | latency mean {:.3}s p50 {:.3}s \
          p90 {:.3}s p99 {:.3}s",
         llm.name,
         gpu.name,
         policy.label(),
+        ctrl.label(),
         s.n,
         s.mean,
         p50,
         p90,
         p99
+    );
+    print_slo_line(
+        &rec.slo_attainment(),
+        rec.records().iter().map(|r| r.deferred_rounds).sum(),
     );
     rec.to_csv().write_file(args.get("out")?)?;
     println!("-> {}", args.get("out")?);

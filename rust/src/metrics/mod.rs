@@ -9,24 +9,35 @@
 use crate::util::csv::{f, Csv};
 use crate::util::stats::{percentile_sorted, summary, Summary};
 
-/// One completed request, in seconds on a common clock.
+/// One finished request — completed *or* shed by admission control — in
+/// seconds on a common clock.  Shed requests are recorded too (with
+/// `shed == true`, zero tokens and `finished_at` = the shed time), so
+/// requests that never complete stay visible in every experiment outcome
+/// instead of silently vanishing from the accounting.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct RequestRecord {
     pub id: u64,
     /// client send time (t_a)
     pub sent_at: f64,
-    /// server pulled it into a batch
+    /// server pulled it into a batch (sheds: the shed time)
     pub started_at: f64,
-    /// server finished generating (t_b)
+    /// server finished generating (t_b); sheds: the shed time
     pub finished_at: f64,
-    /// generated tokens
+    /// generated tokens (0 for shed requests)
     pub tokens: usize,
-    /// batch size it was served in
+    /// batch size it was served in (0 for shed requests)
     pub batch: usize,
     /// speculation length used for (the first round of) its batch
     pub spec_len: usize,
     /// worker shard that served it (0 on the single-worker paths)
     pub shard: usize,
+    /// absolute deadline on the common clock (None = no SLO attached)
+    pub deadline: Option<f64>,
+    /// round boundaries admission control deferred this request at
+    pub deferred_rounds: usize,
+    /// true when admission control shed the request before it ever
+    /// occupied a batch row
+    pub shed: bool,
 }
 
 impl RequestRecord {
@@ -41,6 +52,44 @@ impl RequestRecord {
 
     pub fn service_time(&self) -> f64 {
         self.finished_at - self.started_at
+    }
+
+    /// Whether the request met its SLO: `None` when it carried no
+    /// deadline, `Some(false)` for sheds and late completions.
+    pub fn slo_met(&self) -> Option<bool> {
+        self.deadline
+            .map(|d| !self.shed && self.finished_at <= d)
+    }
+}
+
+/// SLO attainment accounting over a set of request records.
+///
+/// Conservation (pinned by the property tests): every deadlined request
+/// is exactly one of met / missed / shed, i.e.
+/// `met + missed + shed_deadlined == deadlined`, and with every request
+/// deadlined, `met + missed + shed == completed + shed == total`.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SloSummary {
+    /// requests carrying a deadline (completed or shed)
+    pub deadlined: usize,
+    /// deadlined requests that completed on time
+    pub met: usize,
+    /// deadlined requests that completed late
+    pub missed: usize,
+    /// requests shed by admission control (all sheds, deadlined or not)
+    pub shed: usize,
+    /// requests that completed (with or without a deadline)
+    pub completed: usize,
+}
+
+impl SloSummary {
+    /// Fraction of deadlined requests that met their SLO; sheds count
+    /// against attainment.  NaN when nothing carried a deadline.
+    pub fn attainment(&self) -> f64 {
+        if self.deadlined == 0 {
+            return f64::NAN;
+        }
+        self.met as f64 / self.deadlined as f64
     }
 }
 
@@ -71,8 +120,41 @@ impl LatencyRecorder {
         &self.records
     }
 
+    /// Records of requests that actually completed (sheds excluded).
+    pub fn completed(&self) -> impl Iterator<Item = &RequestRecord> {
+        self.records.iter().filter(|r| !r.shed)
+    }
+
+    /// Requests shed by admission control.
+    pub fn shed_count(&self) -> usize {
+        self.records.iter().filter(|r| r.shed).count()
+    }
+
+    /// End-to-end latencies of **completed** requests; a shed request has
+    /// no service latency, only the attainment accounting sees it.
     pub fn latencies(&self) -> Vec<f64> {
-        self.records.iter().map(|r| r.latency()).collect()
+        self.completed().map(|r| r.latency()).collect()
+    }
+
+    /// SLO attainment accounting across all records, sheds included.
+    pub fn slo_attainment(&self) -> SloSummary {
+        let mut s = SloSummary::default();
+        for r in &self.records {
+            if r.shed {
+                s.shed += 1;
+            } else {
+                s.completed += 1;
+            }
+            if r.deadline.is_some() {
+                s.deadlined += 1;
+                match r.slo_met() {
+                    Some(true) => s.met += 1,
+                    Some(false) if !r.shed => s.missed += 1,
+                    _ => {}
+                }
+            }
+        }
+        s
     }
 
     pub fn summary(&self) -> Summary {
@@ -90,49 +172,67 @@ impl LatencyRecorder {
         )
     }
 
-    /// Mean per-token request latency: each request's end-to-end latency
-    /// (queueing included) divided by its generated tokens, averaged over
-    /// requests — the cluster routing comparison metric.
+    /// Mean per-token request latency over **completed** requests: each
+    /// request's end-to-end latency (queueing included) divided by its
+    /// generated tokens, averaged over requests — the cluster routing
+    /// comparison metric.  Shed requests generated nothing and used to
+    /// silently skew this with their queue delay over `max(tokens, 1)`;
+    /// they are excluded here and accounted by [`Self::slo_attainment`].
     pub fn mean_per_token_latency(&self) -> f64 {
-        if self.records.is_empty() {
+        let mut sum = 0.0;
+        let mut n = 0usize;
+        for r in self.completed() {
+            sum += r.latency() / r.tokens.max(1) as f64;
+            n += 1;
+        }
+        if n == 0 {
             return f64::NAN;
         }
-        self.records
-            .iter()
-            .map(|r| r.latency() / r.tokens.max(1) as f64)
-            .sum::<f64>()
-            / self.records.len() as f64
+        sum / n as f64
     }
 
-    /// Requests served per shard, indexed 0..=max shard id seen.
+    /// Requests **completed** per shard, indexed 0..=max shard id seen
+    /// (sheds are counted separately by [`Self::per_shard_shed_counts`],
+    /// not silently dropped).
     pub fn per_shard_counts(&self) -> Vec<usize> {
+        self.per_shard_by(|r| !r.shed)
+    }
+
+    /// Requests shed per shard, indexed 0..=max shard id seen.
+    pub fn per_shard_shed_counts(&self) -> Vec<usize> {
+        self.per_shard_by(|r| r.shed)
+    }
+
+    fn per_shard_by(&self, keep: impl Fn(&RequestRecord) -> bool) -> Vec<usize> {
         let n = self.records.iter().map(|r| r.shard + 1).max().unwrap_or(0);
         let mut counts = vec![0usize; n];
-        for r in &self.records {
+        for r in self.records.iter().filter(|r| keep(r)) {
             counts[r.shard] += 1;
         }
         counts
     }
 
-    /// Generated tokens per second of span (first send -> last finish).
+    /// Generated tokens per second of span (first send -> last finish,
+    /// completed requests only — sheds generate nothing).
     pub fn throughput_tokens_per_s(&self) -> f64 {
-        if self.records.is_empty() {
+        let mut t0 = f64::INFINITY;
+        let mut t1 = f64::NEG_INFINITY;
+        let mut tokens = 0usize;
+        for r in self.completed() {
+            t0 = t0.min(r.sent_at);
+            t1 = t1.max(r.finished_at);
+            tokens += r.tokens;
+        }
+        if !t0.is_finite() {
             return 0.0;
         }
-        let t0 = self.records.iter().map(|r| r.sent_at).fold(f64::INFINITY, f64::min);
-        let t1 = self
-            .records
-            .iter()
-            .map(|r| r.finished_at)
-            .fold(f64::NEG_INFINITY, f64::max);
-        let tokens: usize = self.records.iter().map(|r| r.tokens).sum();
         if t1 <= t0 {
             return f64::NAN;
         }
         tokens as f64 / (t1 - t0)
     }
 
-    /// Full export (one row per request).
+    /// Full export (one row per request, sheds included).
     pub fn to_csv(&self) -> Csv {
         let mut csv = Csv::new(&[
             "id",
@@ -145,6 +245,10 @@ impl LatencyRecorder {
             "batch",
             "spec_len",
             "shard",
+            "deadline_s",
+            "slo_met",
+            "deferred_rounds",
+            "shed",
         ]);
         let mut sorted = self.records.clone();
         sorted.sort_by(|a, b| a.sent_at.partial_cmp(&b.sent_at).unwrap());
@@ -160,6 +264,10 @@ impl LatencyRecorder {
                 r.batch.to_string(),
                 r.spec_len.to_string(),
                 r.shard.to_string(),
+                r.deadline.map(f).unwrap_or_default(),
+                r.slo_met().map(|m| m.to_string()).unwrap_or_default(),
+                r.deferred_rounds.to_string(),
+                r.shed.to_string(),
             ]);
         }
         csv
@@ -232,10 +340,11 @@ pub struct TimelinePoint {
 }
 
 /// Group completed requests into consecutive-`group_size` buckets by send
-/// time (Fig. 6 uses groups of 40).
+/// time (Fig. 6 uses groups of 40).  Shed requests have no service
+/// latency and are skipped.
 pub fn timeline_groups(records: &[RequestRecord], group_size: usize) -> Vec<TimelinePoint> {
     assert!(group_size > 0);
-    let mut sorted: Vec<&RequestRecord> = records.iter().collect();
+    let mut sorted: Vec<&RequestRecord> = records.iter().filter(|r| !r.shed).collect();
     sorted.sort_by(|a, b| a.sent_at.partial_cmp(&b.sent_at).unwrap());
     sorted
         .chunks(group_size)
@@ -261,6 +370,25 @@ mod tests {
             batch: 2,
             spec_len: 3,
             shard: 0,
+            deadline: None,
+            deferred_rounds: 0,
+            shed: false,
+        }
+    }
+
+    fn shed_rec(id: u64, sent: f64, shed_at: f64, deadline: f64) -> RequestRecord {
+        RequestRecord {
+            id,
+            sent_at: sent,
+            started_at: shed_at,
+            finished_at: shed_at,
+            tokens: 0,
+            batch: 0,
+            spec_len: 0,
+            shard: 0,
+            deadline: Some(deadline),
+            deferred_rounds: 2,
+            shed: true,
         }
     }
 
@@ -297,6 +425,61 @@ mod tests {
         rec_.push(r2);
         assert_eq!(rec_.per_shard_counts(), vec![1, 0, 1]);
         assert!(LatencyRecorder::new().per_shard_counts().is_empty());
+        // sheds are counted separately, not silently dropped
+        let mut s = shed_rec(3, 0.5, 0.9, 0.8);
+        s.shard = 2;
+        rec_.push(s);
+        assert_eq!(rec_.per_shard_counts(), vec![1, 0, 1]);
+        assert_eq!(rec_.per_shard_shed_counts(), vec![0, 0, 1]);
+    }
+
+    #[test]
+    fn slo_met_and_attainment_accounting() {
+        let mut r = rec(1, 0.0, 0.0, 1.0);
+        assert_eq!(r.slo_met(), None, "no deadline, no verdict");
+        r.deadline = Some(1.5);
+        assert_eq!(r.slo_met(), Some(true));
+        r.deadline = Some(0.5);
+        assert_eq!(r.slo_met(), Some(false));
+        let s = shed_rec(2, 0.0, 0.4, 0.3);
+        assert_eq!(s.slo_met(), Some(false), "sheds never meet their SLO");
+
+        let mut recd = LatencyRecorder::new();
+        let mut met = rec(1, 0.0, 0.0, 1.0);
+        met.deadline = Some(2.0);
+        let mut missed = rec(2, 0.0, 0.5, 3.0);
+        missed.deadline = Some(2.0);
+        recd.push(met);
+        recd.push(missed);
+        recd.push(rec(3, 0.0, 0.0, 1.0)); // no deadline
+        recd.push(shed_rec(4, 0.0, 0.4, 0.3));
+        let s = recd.slo_attainment();
+        assert_eq!(s.deadlined, 3);
+        assert_eq!(s.met, 1);
+        assert_eq!(s.missed, 1);
+        assert_eq!(s.shed, 1);
+        assert_eq!(s.completed, 3);
+        // conservation: every deadlined request is met, missed, or shed
+        assert_eq!(s.met + s.missed + 1, s.deadlined);
+        assert!((s.attainment() - 1.0 / 3.0).abs() < 1e-12);
+        assert!(LatencyRecorder::new().slo_attainment().attainment().is_nan());
+    }
+
+    #[test]
+    fn shed_records_stay_out_of_latency_and_throughput_stats() {
+        let mut recd = LatencyRecorder::new();
+        recd.push(rec(1, 0.0, 0.0, 1.0));
+        recd.push(rec(2, 1.0, 1.5, 3.0));
+        let clean_mean = recd.summary().mean;
+        let clean_tput = recd.throughput_tokens_per_s();
+        let clean_ptl = recd.mean_per_token_latency();
+        // a shed far in the future must not move any service-side stat
+        recd.push(shed_rec(3, 2.0, 99.0, 4.0));
+        assert_eq!(recd.shed_count(), 1);
+        assert_eq!(recd.len(), 3, "sheds stay visible in the record count");
+        assert!((recd.summary().mean - clean_mean).abs() < 1e-12);
+        assert!((recd.throughput_tokens_per_s() - clean_tput).abs() < 1e-12);
+        assert!((recd.mean_per_token_latency() - clean_ptl).abs() < 1e-12);
     }
 
     #[test]

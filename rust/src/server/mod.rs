@@ -31,10 +31,11 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::batcher::{BatchRequest, BatcherConfig, ContinuousBatcher};
+use crate::admission::{apply_plan_to_queue, build_controller, AdmissionView, Candidate};
+use crate::batcher::{BatchRequest, BatcherConfig, ContinuousBatcher, ShedRequest};
 use crate::cluster::server::ShardGauge;
 use crate::cluster::ShardBreakdown;
-use crate::config::{PolicySpec, RouterSpec};
+use crate::config::{AdmissionSpec, PolicySpec, RouterSpec};
 use crate::engine::{Engine, EngineConfig};
 use crate::kvcache::{KvBlockStats, KvLayout};
 use crate::log_info;
@@ -92,6 +93,11 @@ pub struct ServerConfig {
     /// an explicit non-default choice here OR on `engine.kv_layout`
     /// (whichever deviates from the default wins)
     pub kv_layout: KvLayout,
+    /// admission control consulted before every batch/round: queue
+    /// ordering, deferral and shedding.  Defaults to the
+    /// `SPECBATCH_ADMISSION` env override, else FIFO (with no deadlines
+    /// on the requests every controller behaves exactly like FIFO)
+    pub admission: AdmissionSpec,
 }
 
 impl Default for ServerConfig {
@@ -105,6 +111,7 @@ impl Default for ServerConfig {
             workers: 1,
             router: RouterSpec::RoundRobin,
             kv_layout: KvLayout::default_layout(),
+            admission: AdmissionSpec::default_spec(),
         }
     }
 }
@@ -116,9 +123,13 @@ pub struct ServerRequest {
     pub prompt: Vec<i32>,
     /// send time in seconds on the experiment clock (t_a)
     pub sent_at: f64,
+    /// absolute deadline on the experiment clock (None = no SLO)
+    pub deadline: Option<f64>,
 }
 
-/// A response on the outbound message queue.
+/// A response on the outbound message queue.  A shed request still gets a
+/// response (`shed == true`, no tokens) — the client-side accounting must
+/// see every request leave the system.
 #[derive(Debug, Clone)]
 pub struct ServerResponse {
     pub id: u64,
@@ -128,6 +139,12 @@ pub struct ServerResponse {
     pub finished_at: f64,
     pub batch: usize,
     pub spec_len: usize,
+    /// absolute deadline, if the request carried one
+    pub deadline: Option<f64>,
+    /// round boundaries admission control deferred the request at
+    pub deferred_rounds: usize,
+    /// true when admission control shed the request unserved
+    pub shed: bool,
 }
 
 /// Inbound queue message.
@@ -137,14 +154,18 @@ pub enum ServerMsg {
 }
 
 /// What a worker delivers at shutdown: its per-round timeline, the
-/// policy's fitted-model snapshot (online policies only), and the KV
+/// policy's fitted-model snapshot (online policies only), the KV
 /// block-pool accounting (paged layout only — the leak tests assert
-/// `is_leak_free()` on it).
+/// `is_leak_free()` on it), and the admission-control totals.
 #[derive(Debug, Default)]
 pub struct WorkerReport {
     pub timeline: Vec<RoundEvent>,
     pub policy_snapshot: Option<Json>,
     pub kv_blocks: Option<KvBlockStats>,
+    /// admission defer events (one per candidate per boundary held back)
+    pub deferrals: usize,
+    /// requests shed by admission control
+    pub sheds: usize,
 }
 
 /// Handle to a running server thread.
@@ -313,7 +334,7 @@ pub(crate) fn worker(
         lut_tx
             .send(lut_used)
             .map_err(|_| anyhow!("server handle dropped before ready"))?;
-        let timeline = serve_loop(
+        let (timeline, deferrals, sheds) = serve_loop(
             engine,
             &cfg,
             policy.as_mut(),
@@ -326,6 +347,8 @@ pub(crate) fn worker(
             timeline,
             policy_snapshot: policy.snapshot(),
             kv_blocks: engine.kv_block_stats(),
+            deferrals,
+            sheds,
         });
         Ok(())
     };
@@ -378,7 +401,7 @@ fn serve_loop(
     req_rx: &Receiver<ServerMsg>,
     resp_tx: &Sender<ServerResponse>,
     gauge: Option<&ShardGauge>,
-) -> Result<Vec<RoundEvent>> {
+) -> Result<(Vec<RoundEvent>, usize, usize)> {
     match cfg.mode {
         SchedulingMode::Static => serve_static(engine, cfg, policy, epoch, req_rx, resp_tx),
         SchedulingMode::Continuous => {
@@ -387,8 +410,29 @@ fn serve_loop(
     }
 }
 
-/// The paper's batch-to-completion loop: drain whatever is queued (capped
-/// at `max_batch`), serve it with `generate_batch`, respond, repeat.
+/// The wire response for a shed request: no tokens, timestamps at the
+/// shed decision.
+fn shed_response(shed: ShedRequest) -> ServerResponse {
+    ServerResponse {
+        id: shed.id,
+        tokens: Vec::new(),
+        sent_at: shed.sent_at,
+        started_at: shed.shed_at,
+        finished_at: shed.shed_at,
+        batch: 0,
+        spec_len: 0,
+        deadline: shed.deadline,
+        deferred_rounds: shed.deferred_rounds,
+        shed: true,
+    }
+}
+
+/// The paper's batch-to-completion loop: drain whatever is queued, let
+/// the admission controller order/shed the backlog, serve the admitted
+/// prefix (capped at `max_batch`) with `generate_batch`, respond, repeat.
+/// Batch-to-completion has no live rows at a planning point, so the
+/// controller never defers here (`SloAware` only sheds hopeless
+/// requests); FIFO admission reproduces the pre-subsystem loop exactly.
 fn serve_static(
     engine: &mut Engine<'_>,
     cfg: &ServerConfig,
@@ -396,15 +440,19 @@ fn serve_static(
     epoch: Instant,
     req_rx: &Receiver<ServerMsg>,
     resp_tx: &Sender<ServerResponse>,
-) -> Result<Vec<RoundEvent>> {
+) -> Result<(Vec<RoundEvent>, usize, usize)> {
+    let mut ctrl = build_controller(cfg.admission);
     let mut timeline: Vec<RoundEvent> = Vec::new();
-    let mut pending: Vec<ServerRequest> = Vec::new();
+    // (request, boundaries it has been deferred at)
+    let mut pending: Vec<(ServerRequest, usize)> = Vec::new();
     let mut shutdown = false;
     let mut batch_idx = 0usize;
+    let mut deferrals = 0usize;
+    let mut sheds = 0usize;
     // pull everything the channel currently holds into `pending`
-    let drain = |pending: &mut Vec<ServerRequest>, shutdown: &mut bool| loop {
+    let drain = |pending: &mut Vec<(ServerRequest, usize)>, shutdown: &mut bool| loop {
         match req_rx.try_recv() {
-            Ok(ServerMsg::Request(r)) => pending.push(r),
+            Ok(ServerMsg::Request(r)) => pending.push((r, 0)),
             Ok(ServerMsg::Shutdown) => {
                 *shutdown = true;
                 break;
@@ -416,7 +464,7 @@ fn serve_static(
         // block for the first request, then drain whatever queued
         if pending.is_empty() {
             match req_rx.recv_timeout(Duration::from_millis(200)) {
-                Ok(ServerMsg::Request(r)) => pending.push(r),
+                Ok(ServerMsg::Request(r)) => pending.push((r, 0)),
                 Ok(ServerMsg::Shutdown) => break,
                 Err(RecvTimeoutError::Timeout) => continue,
                 Err(RecvTimeoutError::Disconnected) => break,
@@ -424,14 +472,55 @@ fn serve_static(
         }
         drain(&mut pending, &mut shutdown);
 
-        let batch: Vec<ServerRequest> =
-            pending.drain(..pending.len().min(cfg.max_batch)).collect();
+        // admission plan over the whole backlog (live == 0: the previous
+        // batch ran to completion before this boundary)
+        let now = epoch.elapsed().as_secs_f64();
+        let candidates: Vec<Candidate> = pending
+            .iter()
+            .map(|(r, deferred)| Candidate {
+                id: r.id,
+                sent_at: r.sent_at,
+                deadline: r.deadline,
+                prompt_len: r.prompt.len(),
+                tokens_left: cfg.max_new_tokens,
+                deferred: *deferred,
+            })
+            .collect();
+        let view = AdmissionView {
+            now,
+            live: 0,
+            max_batch: cfg.max_batch,
+            policy,
+        };
+        let backlog: Vec<(ServerRequest, usize)> = pending.drain(..).collect();
+        let out = apply_plan_to_queue(ctrl.plan(&candidates, &view), backlog, 0, |p| p.1 += 1);
+        deferrals += out.deferred;
+        for (r, deferred) in out.shed {
+            sheds += 1;
+            let resp = shed_response(ShedRequest {
+                id: r.id,
+                sent_at: r.sent_at,
+                deadline: r.deadline,
+                shed_at: now,
+                deferred_rounds: deferred,
+            });
+            if resp_tx.send(resp).is_err() {
+                return Ok((timeline, deferrals, sheds));
+            }
+        }
+        // the admissible prefix forms the batch (capped); over-capacity
+        // admits, then defers, stay pending in order — each keeping its
+        // deferral count
+        let n_batch = out.admit_n.min(cfg.max_batch);
+        let mut rest = out.queue;
+        let batch: Vec<(ServerRequest, usize)> = rest.drain(..n_batch).collect();
+        pending.extend(rest);
         if batch.is_empty() {
             continue;
         }
         batch_idx += 1;
         let started_at = epoch.elapsed().as_secs_f64();
-        let prompts: Vec<Vec<i32>> = batch.iter().map(|r| r.prompt.clone()).collect();
+        let prompts: Vec<Vec<i32>> = batch.iter().map(|(r, _)| r.prompt.clone()).collect();
         let out = engine.generate_batch(&prompts, cfg.max_new_tokens, policy)?;
         let finished_at = epoch.elapsed().as_secs_f64();
         // pick up what arrived while the batch was being served, so the
@@ -454,7 +543,7 @@ fn serve_static(
             });
         }
         let spec_len = out.stats.spec_lens.first().copied().unwrap_or(0);
-        for (req, tokens) in batch.into_iter().zip(out.tokens) {
+        for ((req, deferred), tokens) in batch.into_iter().zip(out.tokens) {
             let resp = ServerResponse {
                 id: req.id,
                 tokens,
@@ -463,14 +552,17 @@ fn serve_static(
                 finished_at,
                 batch: prompts.len(),
                 spec_len,
+                deadline: req.deadline,
+                deferred_rounds: deferred,
+                shed: false,
             };
             if resp_tx.send(resp).is_err() {
                 // harness went away; stop serving
-                return Ok(timeline);
+                return Ok((timeline, deferrals, sheds));
             }
         }
     }
-    Ok(timeline)
+    Ok((timeline, deferrals, sheds))
 }
 
 /// Map a completed batcher request onto the wire format: queueing ends at
@@ -484,6 +576,9 @@ fn to_response(fin: crate::batcher::FinishedRequest) -> ServerResponse {
         finished_at: fin.finished_at,
         batch: fin.batch_at_admit,
         spec_len: fin.spec_at_admit,
+        deadline: fin.deadline,
+        deferred_rounds: fin.deferred_rounds,
+        shed: false,
     }
 }
 
@@ -500,20 +595,43 @@ fn serve_continuous(
     req_rx: &Receiver<ServerMsg>,
     resp_tx: &Sender<ServerResponse>,
     gauge: Option<&ShardGauge>,
-) -> Result<Vec<RoundEvent>> {
-    let mut batcher = ContinuousBatcher::new(BatcherConfig {
-        max_batch: cfg.max_batch,
-        max_new_tokens: cfg.max_new_tokens,
-    });
-    let publish = |batcher: &ContinuousBatcher, policy: &dyn SpeculationPolicy| {
+) -> Result<(Vec<RoundEvent>, usize, usize)> {
+    let mut batcher = ContinuousBatcher::with_admission(
+        BatcherConfig {
+            max_batch: cfg.max_batch,
+            max_new_tokens: cfg.max_new_tokens,
+        },
+        build_controller(cfg.admission),
+    );
+    let publish = |batcher: &ContinuousBatcher, policy: &dyn SpeculationPolicy, now: f64| {
         if let Some(g) = gauge {
             let load = batcher.live_rows() + batcher.queue_len();
             g.publish(
                 batcher.live_rows(),
                 batcher.queue_len(),
                 crate::cluster::marginal_cost(policy, load, cfg.max_batch),
+                batcher.slo_pressure(now, policy),
             );
         }
+    };
+    // one batcher round: respond to completions AND sheds (shed requests
+    // must leave the system visibly, not vanish from the accounting)
+    let round = |batcher: &mut ContinuousBatcher,
+                 engine: &mut Engine<'_>,
+                 policy: &mut dyn SpeculationPolicy,
+                 now: f64|
+     -> Result<bool> {
+        for fin in batcher.step(engine, policy, now)? {
+            if resp_tx.send(to_response(fin)).is_err() {
+                return Ok(false);
+            }
+        }
+        for shed in batcher.take_shed() {
+            if resp_tx.send(shed_response(shed)).is_err() {
+                return Ok(false);
+            }
+        }
+        Ok(true)
     };
     let mut shutdown = false;
     'serve: while !shutdown {
@@ -524,6 +642,7 @@ fn serve_continuous(
                     id: r.id,
                     prompt: r.prompt,
                     sent_at: r.sent_at,
+                    deadline: r.deadline,
                 }),
                 Ok(ServerMsg::Shutdown) => {
                     shutdown = true;
@@ -536,7 +655,7 @@ fn serve_continuous(
                 }
             }
         }
-        publish(&batcher, &*policy);
+        publish(&batcher, &*policy, epoch.elapsed().as_secs_f64());
         if !batcher.has_work() {
             if shutdown {
                 break;
@@ -547,6 +666,7 @@ fn serve_continuous(
                     id: r.id,
                     prompt: r.prompt,
                     sent_at: r.sent_at,
+                    deadline: r.deadline,
                 }),
                 Ok(ServerMsg::Shutdown) => break,
                 Err(RecvTimeoutError::Timeout) => continue,
@@ -555,23 +675,22 @@ fn serve_continuous(
             continue;
         }
         let now = epoch.elapsed().as_secs_f64();
-        for fin in batcher.step(engine, policy, now)? {
-            if resp_tx.send(to_response(fin)).is_err() {
-                break 'serve;
-            }
+        if !round(&mut batcher, engine, policy, now)? {
+            break 'serve;
         }
-        publish(&batcher, &*policy);
+        publish(&batcher, &*policy, epoch.elapsed().as_secs_f64());
     }
-    // finish in-flight work after a shutdown request
+    // finish in-flight work after a shutdown request (the controller's
+    // progress contract guarantees this drains: an idle worker either
+    // admits or sheds, never defers forever)
     while batcher.has_work() {
         let now = epoch.elapsed().as_secs_f64();
-        for fin in batcher.step(engine, policy, now)? {
-            if resp_tx.send(to_response(fin)).is_err() {
-                break;
-            }
+        if !round(&mut batcher, engine, policy, now)? {
+            break;
         }
     }
-    Ok(batcher.timeline)
+    let (deferrals, sheds) = batcher.admission_totals();
+    Ok((batcher.timeline, deferrals, sheds))
 }
 
 /// Replay a trace against a server in real time (the client process).
@@ -588,6 +707,7 @@ pub fn run_client(trace: &Trace, requests: &Sender<ServerMsg>, epoch: Instant) -
             id: item.id,
             prompt: item.prompt.ids.clone(),
             sent_at: epoch.elapsed().as_secs_f64(),
+            deadline: item.deadline,
         };
         requests
             .send(ServerMsg::Request(req))
@@ -613,6 +733,11 @@ pub struct ExperimentOutcome {
     /// runs merge the per-shard pools).  A clean run is leak-free:
     /// `free == capacity` — `rust/tests/kv_equivalence.rs` pins it.
     pub kv_blocks: Option<KvBlockStats>,
+    /// admission defer events across all workers (0 under FIFO)
+    pub deferrals: usize,
+    /// requests shed by admission control across all workers; the shed
+    /// requests themselves stay visible as records in `recorder`
+    pub sheds: usize,
 }
 
 /// Run one full client/server experiment: spawn server, wait until ready,
@@ -665,6 +790,9 @@ pub fn run_experiment(
             batch: resp.batch,
             spec_len: resp.spec_len,
             shard: 0,
+            deadline: resp.deadline,
+            deferred_rounds: resp.deferred_rounds,
+            shed: resp.shed,
         });
     }
     client
@@ -678,5 +806,7 @@ pub fn run_experiment(
         policy_snapshot: report.policy_snapshot,
         shards: Vec::new(),
         kv_blocks: report.kv_blocks,
+        deferrals: report.deferrals,
+        sheds: report.sheds,
     })
 }

@@ -35,10 +35,15 @@
 //! offline LUT keeps serving its now-stale `s`; the online policy
 //! re-fits and re-converges — `tests/online_policy.rs` pins that payoff.
 
+use std::collections::VecDeque;
+
+use crate::admission::{
+    apply_plan_to_queue, AdmissionController, AdmissionView, Candidate, Fifo,
+};
 use crate::kvcache::{KvLayout, DEFAULT_BLOCK_SIZE};
 use crate::metrics::{LatencyRecorder, RequestRecord, RoundEvent};
 use crate::policy::{RoundFeedback, SpeculationPolicy};
-use crate::traffic::Trace;
+use crate::traffic::{Trace, TraceItem};
 use crate::util::prng::Pcg64;
 
 use super::acceptance::AcceptanceProcess;
@@ -239,61 +244,159 @@ pub fn batch_service_time(
     (t, tokens, first_spec_len.unwrap_or(0))
 }
 
-/// Simulate a full trace through the single-server FIFO queue.
+/// Simulate a full trace through the single-server FIFO queue
+/// (bit-for-bit the pre-admission-subsystem behaviour).
 pub fn simulate_trace(
     cfg: &SimConfig,
     policy: &mut dyn SpeculationPolicy,
     trace: &Trace,
 ) -> LatencyRecorder {
+    simulate_trace_admission(cfg, policy, &mut Fifo, trace)
+}
+
+/// A queued trace item plus its admission-control state (the DES twin of
+/// the batcher's internal queue entry).
+struct Waiting {
+    item: TraceItem,
+    deferred: usize,
+}
+
+/// Record a shed decision at virtual time `t`.
+fn push_shed(recorder: &mut LatencyRecorder, w: &Waiting, t: f64) {
+    recorder.push(RequestRecord {
+        id: w.item.id,
+        sent_at: w.item.send_at,
+        started_at: t,
+        finished_at: t,
+        tokens: 0,
+        batch: 0,
+        spec_len: 0,
+        shard: 0,
+        deadline: w.item.deadline,
+        deferred_rounds: w.deferred,
+        shed: true,
+    });
+}
+
+/// Simulate a full trace through the single-server batch-to-completion
+/// queue with an [`AdmissionController`] ruling on every batch formation:
+/// the backlog is reordered per the plan, sheds leave the system as
+/// `shed` records, and deferred requests wait for the next formation
+/// (batch-to-completion forms batches with zero live rows, so `SloAware`
+/// only sheds hopeless requests here, mirroring `server::serve_static`).
+pub fn simulate_trace_admission(
+    cfg: &SimConfig,
+    policy: &mut dyn SpeculationPolicy,
+    ctrl: &mut dyn AdmissionController,
+    trace: &Trace,
+) -> LatencyRecorder {
     let mut rng = Pcg64::with_stream(cfg.seed, 0x5e5);
     let mut recorder = LatencyRecorder::new();
     let items = &trace.items;
-    let mut next = 0usize; // first unserved request
+    let mut next = 0usize; // first unarrived request
+    let mut waiting: VecDeque<Waiting> = VecDeque::new();
     let mut free_at = 0.0f64; // server availability
 
-    while next < items.len() {
+    while next < items.len() || !waiting.is_empty() {
         // the server starts the next batch when it is free AND at least
         // one request is waiting
-        let start = free_at.max(items[next].send_at);
-        // everything queued by `start` merges (FIFO, capped)
-        let mut end = next;
-        while end < items.len() && items[end].send_at <= start && end - next < cfg.max_batch {
-            end += 1;
+        let start = if let Some(head) = waiting.front() {
+            free_at.max(head.item.send_at)
+        } else {
+            free_at.max(items[next].send_at)
+        };
+        // everything sent by `start` joins the backlog
+        while next < items.len() && items[next].send_at <= start {
+            waiting.push_back(Waiting {
+                item: items[next].clone(),
+                deferred: 0,
+            });
+            next += 1;
         }
-        let batch = &items[next..end];
-        let prompt_lens: Vec<usize> = batch.iter().map(|i| i.prompt.ids.len()).collect();
+        // admission plan over the whole backlog (live == 0: the previous
+        // batch ran to completion)
+        let candidates: Vec<Candidate> = waiting
+            .iter()
+            .map(|w| Candidate {
+                id: w.item.id,
+                sent_at: w.item.send_at,
+                deadline: w.item.deadline,
+                prompt_len: w.item.prompt.ids.len(),
+                tokens_left: cfg.max_new_tokens,
+                deferred: w.deferred,
+            })
+            .collect();
+        let view = AdmissionView {
+            now: start,
+            live: 0,
+            max_batch: cfg.max_batch,
+            policy,
+        };
+        let queue: Vec<Waiting> = waiting.drain(..).collect();
+        let out = apply_plan_to_queue(ctrl.plan(&candidates, &view), queue, 0, |w| {
+            w.deferred += 1
+        });
+        for w in &out.shed {
+            push_shed(&mut recorder, w, start);
+        }
+        // the admissible prefix forms the batch (capped); the rest —
+        // over-capacity admits, then defers — stays queued in order
+        let n_batch = out.admit_n.min(cfg.max_batch);
+        let mut rest = out.queue;
+        let batch: Vec<Waiting> = rest.drain(..n_batch).collect();
+        waiting.extend(rest);
+        if batch.is_empty() {
+            // the whole backlog was shed: the next iteration re-anchors
+            // on the next arrival
+            continue;
+        }
+        let prompt_lens: Vec<usize> = batch.iter().map(|w| w.item.prompt.ids.len()).collect();
         let (dur, _tokens, spec_len) =
             batch_service_time(cfg, policy, &prompt_lens, start, &mut rng);
         let finish = start + dur;
-        for item in batch {
+        for w in &batch {
             recorder.push(RequestRecord {
-                id: item.id,
-                sent_at: item.send_at,
+                id: w.item.id,
+                sent_at: w.item.send_at,
                 started_at: start,
                 finished_at: finish,
                 tokens: cfg.max_new_tokens,
                 batch: batch.len(),
                 spec_len,
                 shard: 0,
+                deadline: w.item.deadline,
+                deferred_rounds: w.deferred,
+                shed: false,
             });
         }
         free_at = finish;
-        next = end;
     }
     recorder
 }
 
-/// Virtual-time mirror of the continuous batcher
-/// (`crate::batcher::ContinuousBatcher`): requests are admitted into free
-/// rows at round boundaries, finished rows retire immediately, and the
-/// policy is re-queried with the *live* batch size — and fed back the
-/// round outcome — every round.  Returns the latency records plus the
-/// per-round timeline (now carrying accepted counts and round cost), so
-/// Fig. 5/6-style sweeps can compare scheduling modes and policy
-/// adaptation without hardware.
+/// Virtual-time mirror of the continuous batcher with FIFO admission
+/// (bit-for-bit the pre-admission-subsystem behaviour).
 pub fn simulate_trace_continuous(
     cfg: &SimConfig,
     policy: &mut dyn SpeculationPolicy,
+    trace: &Trace,
+) -> (LatencyRecorder, Vec<RoundEvent>) {
+    simulate_trace_continuous_admission(cfg, policy, &mut Fifo, trace)
+}
+
+/// Virtual-time mirror of the continuous batcher
+/// (`crate::batcher::ContinuousBatcher`): requests are admitted into free
+/// rows at round boundaries — in the order, and with the deferrals and
+/// sheds, the [`AdmissionController`] rules — finished rows retire
+/// immediately, and the policy is re-queried with the *live* batch size
+/// (and fed back the round outcome) every round.  Returns the latency
+/// records (sheds included, as `shed` records) plus the per-round
+/// timeline, so Fig. 5/6-style sweeps can compare scheduling modes,
+/// policies and admission controllers without hardware.
+pub fn simulate_trace_continuous_admission(
+    cfg: &SimConfig,
+    policy: &mut dyn SpeculationPolicy,
+    ctrl: &mut dyn AdmissionController,
     trace: &Trace,
 ) -> (LatencyRecorder, Vec<RoundEvent>) {
     struct SimRow {
@@ -305,6 +408,8 @@ pub fn simulate_trace_continuous(
         generated: usize,
         batch_at_admit: usize,
         spec_at_admit: usize,
+        deadline: Option<f64>,
+        deferred: usize,
     }
 
     let mut rng = Pcg64::with_stream(cfg.seed, 0xC0_11);
@@ -313,6 +418,7 @@ pub fn simulate_trace_continuous(
     let may_speculate = policy.wants_speculation();
     let items = &trace.items;
     let mut live: Vec<SimRow> = Vec::new();
+    let mut waiting: VecDeque<Waiting> = VecDeque::new();
     let mut next = 0usize;
     let mut t = 0.0f64;
     let mut epoch = 0usize;
@@ -320,35 +426,83 @@ pub fn simulate_trace_continuous(
     // the live batch past it trigger an epoch reshape
     let mut cur_bucket = 0usize;
 
-    while next < items.len() || !live.is_empty() {
+    while next < items.len() || !live.is_empty() || !waiting.is_empty() {
         if live.is_empty() {
-            // idle: jump to the next arrival, opening a new epoch
-            if next < items.len() && items[next].send_at > t {
+            // idle: jump to the next arrival, opening a new epoch (a
+            // deferred backlog is already due, so the clock holds)
+            if waiting.is_empty() && next < items.len() && items[next].send_at > t {
                 t = items[next].send_at;
             }
             epoch += 1;
             cur_bucket = 0;
         }
 
-        // --- admit everything due, up to the live-capacity cap ---
+        // --- pull arrivals due at this boundary into the queue ---
+        while next < items.len() && items[next].send_at <= t {
+            waiting.push_back(Waiting {
+                item: items[next].clone(),
+                deferred: 0,
+            });
+            next += 1;
+        }
+
+        // --- plan admission over the queue ---
+        let admit_n = if waiting.is_empty() {
+            0
+        } else {
+            let candidates: Vec<Candidate> = waiting
+                .iter()
+                .map(|w| Candidate {
+                    id: w.item.id,
+                    sent_at: w.item.send_at,
+                    deadline: w.item.deadline,
+                    prompt_len: w.item.prompt.ids.len(),
+                    tokens_left: cfg.max_new_tokens,
+                    deferred: w.deferred,
+                })
+                .collect();
+            let view = AdmissionView {
+                now: t,
+                live: live.len(),
+                max_batch: cfg.max_batch,
+                policy,
+            };
+            let queue: Vec<Waiting> = waiting.drain(..).collect();
+            let out = apply_plan_to_queue(ctrl.plan(&candidates, &view), queue, live.len(), |w| {
+                w.deferred += 1
+            });
+            for w in &out.shed {
+                push_shed(&mut recorder, w, t);
+            }
+            waiting = out.queue.into();
+            out.admit_n
+        };
+
+        // --- admit the planned prefix, up to the live-capacity cap ---
         let mut n_admit = 0usize;
         let mut plen_sum = 0usize;
         let n_before = live.len();
         let admit_t = t;
-        while next < items.len() && items[next].send_at <= t && live.len() < cfg.max_batch {
-            let plen = items[next].prompt.ids.len();
+        while n_admit < admit_n && live.len() < cfg.max_batch {
+            let w = waiting.pop_front().expect("planned admits are queued");
+            let plen = w.item.prompt.ids.len();
             live.push(SimRow {
-                id: items[next].id,
-                sent_at: items[next].send_at,
+                id: w.item.id,
+                sent_at: w.item.send_at,
                 admitted_at: admit_t,
                 plen,
                 generated: 1, // prefill commits the first token
                 batch_at_admit: 0,
                 spec_at_admit: 0,
+                deadline: w.item.deadline,
+                deferred: w.deferred,
             });
             plen_sum += plen;
             n_admit += 1;
-            next += 1;
+        }
+        if live.is_empty() {
+            // the whole backlog was shed: nothing to run this boundary
+            continue;
         }
         if n_admit > 0 {
             let mean_plen = (plen_sum as f64 / n_admit as f64).ceil() as usize;
@@ -409,12 +563,20 @@ pub fn simulate_trace_continuous(
             committed,
             round_time: rc,
         });
-        let waiting = items[next..].iter().take_while(|i| i.send_at <= t).count();
+        // arrivals during the round join the queue now, so the timeline's
+        // queue column reflects the post-round backlog
+        while next < items.len() && items[next].send_at <= t {
+            waiting.push_back(Waiting {
+                item: items[next].clone(),
+                deferred: 0,
+            });
+            next += 1;
+        }
         rounds.push(RoundEvent {
             t,
             epoch,
             live: b,
-            queued: waiting,
+            queued: waiting.len(),
             s,
             accepted: accepted_total,
             round_cost: rc,
@@ -435,6 +597,9 @@ pub fn simulate_trace_continuous(
                     batch: row.batch_at_admit,
                     spec_len: row.spec_at_admit,
                     shard: 0,
+                    deadline: row.deadline,
+                    deferred_rounds: row.deferred,
+                    shed: false,
                 });
             } else {
                 i += 1;
@@ -543,6 +708,7 @@ mod tests {
             .map(|i| crate::traffic::TraceItem {
                 id: i,
                 send_at: 0.0,
+                deadline: None,
                 prompt: pool()[0].clone(),
             })
             .collect();

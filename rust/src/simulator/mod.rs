@@ -22,7 +22,8 @@ pub use acceptance::AcceptanceProcess;
 pub use cost::{CostModel, ModelProfile};
 pub use des::{
     batch_service_time, per_token_latency, reshape_cost, round_cost, simulate_trace,
-    simulate_trace_continuous, AcceptanceDrift, SimConfig,
+    simulate_trace_admission, simulate_trace_continuous,
+    simulate_trace_continuous_admission, AcceptanceDrift, SimConfig,
 };
 pub use hw::GpuProfile;
 

@@ -6,14 +6,16 @@
 //! the single copy they (and every newer test, e.g.
 //! `tests/kv_equivalence.rs`) pull from instead.
 
+use crate::analytic::{AcceptanceModel, StepCostModel};
 use crate::dataset::Prompt;
 use crate::engine::EngineConfig;
 use crate::kvcache::KvLayout;
 use crate::metrics::LatencyRecorder;
+use crate::policy::ModelBased;
 use crate::server::{ExperimentOutcome, SchedulingMode, ServerConfig};
-use crate::simulator::{CostModel, GpuProfile, ModelProfile, SimConfig};
+use crate::simulator::{round_cost, simulated_lut, CostModel, GpuProfile, ModelProfile, SimConfig};
 use crate::testkit::stub::{StubModel, StubRole, StubSpec};
-use crate::traffic::{Trace, TrafficPattern};
+use crate::traffic::{SloSpec, Trace, TrafficPattern};
 
 /// The stub integration tests' prompt pool: eight token-varied prompts
 /// of 3..=10 tokens, all inside the default stub vocabulary.
@@ -70,6 +72,75 @@ pub fn stationary_trace(
 /// time-compressed (`time_scale < 1` = denser).
 pub fn fig6_trace(pool: &[Prompt], n: usize, seed: u64, time_scale: f64) -> Trace {
     Trace::generate(&TrafficPattern::fig6(), pool, n, seed).time_scaled(time_scale)
+}
+
+/// A deadlined Fig. 6 trace: the bursty workload of the SLO-admission
+/// acceptance tests.  `p50`/`scale` parameterize the [`SloSpec`] budgets
+/// (sampled on a separate PRNG stream — the base schedule is the plain
+/// [`fig6_trace`], bit for bit).
+pub fn slo_fig6_trace(
+    pool: &[Prompt],
+    n: usize,
+    seed: u64,
+    time_scale: f64,
+    p50: f64,
+    scale: f64,
+) -> Trace {
+    fig6_trace(pool, n, seed, time_scale).with_deadlines(&SloSpec::new(p50, scale), seed)
+}
+
+/// A [`ModelBased`] policy pre-seeded with fits matching the simulator's
+/// own cost model at `ctx` (what the online fit converges to), so
+/// `predict_token_time` — the signal `SloAware` admission and the
+/// cost/deadline routers read — is warm and deterministic from round one.
+pub fn warm_model_based(cfg: &SimConfig, ctx: usize) -> ModelBased {
+    let buckets = [1usize, 2, 4, 8, 16];
+    let lut = simulated_lut(cfg, &buckets, 8, ctx);
+    let costs: Vec<StepCostModel> = buckets
+        .iter()
+        .map(|&b| {
+            let t1 = round_cost(cfg, b, 1, ctx);
+            let t2 = round_cost(cfg, b, 2, ctx);
+            let alpha = t2 - t1;
+            StepCostModel {
+                batch: b,
+                alpha,
+                beta: (t1 - alpha).max(1e-9),
+                t_ssm: 0.0,
+                r2: 1.0,
+            }
+        })
+        .collect();
+    ModelBased::with_models(lut, AcceptanceModel::paper(), &costs)
+}
+
+/// Every id `0..n` leaves exactly one record (completed or shed), with
+/// causal timestamps, and the attainment counters conserve:
+/// `met + missed + shed == deadlined` over the deadlined population.
+pub fn assert_slo_conserves(rec: &LatencyRecorder, n: usize) {
+    assert_eq!(rec.len(), n, "request conservation (completed + shed)");
+    let mut ids: Vec<u64> = rec.records().iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..n as u64).collect::<Vec<u64>>());
+    for r in rec.records() {
+        assert!(r.started_at >= r.sent_at - 1e-6, "start before send");
+        assert!(r.finished_at >= r.started_at, "finish before start");
+        if r.shed {
+            assert_eq!(r.tokens, 0, "shed requests generate nothing");
+        }
+    }
+    let s = rec.slo_attainment();
+    let shed_deadlined = rec
+        .records()
+        .iter()
+        .filter(|r| r.shed && r.deadline.is_some())
+        .count();
+    assert_eq!(
+        s.met + s.missed + shed_deadlined,
+        s.deadlined,
+        "attainment counters must conserve: {s:?}"
+    );
+    assert_eq!(s.completed + s.shed, n);
 }
 
 /// Dense stub traffic for the e2e server tests: 2 ms mean inter-arrival

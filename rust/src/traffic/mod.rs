@@ -86,12 +86,56 @@ impl TrafficPattern {
     }
 }
 
+/// Per-request latency-SLO sampling: each request's end-to-end budget is
+/// drawn log-uniformly from `[p50 / scale, p50 * scale]` and its deadline
+/// is `send_at + budget`.  Budgets are sampled on a **separate** PRNG
+/// stream, so attaching SLOs to a trace never perturbs the send times or
+/// prompt assignment — the same request schedule replays against every
+/// comparison point, deadlined or not (the paper's one-sequence rule).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloSpec {
+    /// median latency budget, seconds (must be > 0)
+    pub p50: f64,
+    /// log-uniform spread factor (>= 1; 1 = every budget is exactly p50)
+    pub scale: f64,
+}
+
+impl SloSpec {
+    pub fn new(p50: f64, scale: f64) -> SloSpec {
+        assert!(p50 > 0.0, "SLO p50 must be positive");
+        assert!(scale >= 1.0, "SLO scale must be >= 1");
+        SloSpec { p50, scale }
+    }
+
+    /// Budget pegged to the traffic pattern: `factor` mean inter-arrival
+    /// intervals of the pattern's *intense* phase (the phase that decides
+    /// whether SLOs survive a burst).
+    pub fn of_pattern(pattern: &TrafficPattern, factor: f64, scale: f64) -> SloSpec {
+        let interval = match *pattern {
+            TrafficPattern::Stationary { interval, .. } => interval,
+            TrafficPattern::Alternating {
+                intense_interval, ..
+            } => intense_interval,
+        };
+        SloSpec::new(interval * factor, scale)
+    }
+
+    /// One budget sample.
+    fn sample(&self, rng: &mut Pcg64) -> f64 {
+        // log-uniform over [p50/scale, p50*scale]
+        let u = rng.next_f64();
+        self.p50 * self.scale.powf(2.0 * u - 1.0)
+    }
+}
+
 /// One scheduled request.
 #[derive(Debug, Clone)]
 pub struct TraceItem {
     pub id: u64,
     /// absolute send time in seconds from trace start
     pub send_at: f64,
+    /// absolute deadline in seconds from trace start (None = no SLO)
+    pub deadline: Option<f64>,
     pub prompt: Prompt,
 }
 
@@ -127,10 +171,30 @@ impl Trace {
             items.push(TraceItem {
                 id,
                 send_at: t,
+                deadline: None,
                 prompt,
             });
         }
         Trace { items }
+    }
+
+    /// Attach per-request deadlines sampled from `slo` (see [`SloSpec`]).
+    /// The base schedule — ids, send times, prompts — is untouched, so a
+    /// deadlined trace replays the identical request sequence.
+    pub fn with_deadlines(&self, slo: &SloSpec, seed: u64) -> Trace {
+        let mut rng = Pcg64::with_stream(seed, 0x510_DEAD); // "slo deadline"
+        Trace {
+            items: self
+                .items
+                .iter()
+                .map(|i| TraceItem {
+                    id: i.id,
+                    send_at: i.send_at,
+                    deadline: Some(i.send_at + slo.sample(&mut rng)),
+                    prompt: i.prompt.clone(),
+                })
+                .collect(),
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -146,8 +210,9 @@ impl Trace {
         self.items.last().map(|i| i.send_at).unwrap_or(0.0)
     }
 
-    /// Scale all send times by `factor` (used to time-compress paper-scale
-    /// traces for the real-server experiments).
+    /// Scale all send times (and deadlines, which are absolute) by
+    /// `factor` (used to time-compress paper-scale traces for the
+    /// real-server experiments).
     pub fn time_scaled(&self, factor: f64) -> Trace {
         Trace {
             items: self
@@ -156,6 +221,7 @@ impl Trace {
                 .map(|i| TraceItem {
                     id: i.id,
                     send_at: i.send_at * factor,
+                    deadline: i.deadline.map(|d| d * factor),
                     prompt: i.prompt.clone(),
                 })
                 .collect(),
@@ -314,6 +380,50 @@ mod tests {
         for t in [0.0, 49.9, 50.0, 1e6] {
             assert_eq!(s.interval_at(t), 0.7);
         }
+    }
+
+    /// Attaching SLOs must not perturb the base schedule, budgets must
+    /// land in the configured band, and `time_scaled` must scale the
+    /// absolute deadlines along with the send times.
+    #[test]
+    fn deadlines_ride_on_top_of_the_schedule() {
+        let p = TrafficPattern::Stationary {
+            interval: 0.3,
+            cv: 1.0,
+        };
+        let base = Trace::generate(&p, &pool(), 120, 9);
+        assert!(base.items.iter().all(|i| i.deadline.is_none()));
+        let slo = SloSpec::new(2.0, 4.0);
+        let t = base.with_deadlines(&slo, 9);
+        for (b, d) in base.items.iter().zip(&t.items) {
+            assert_eq!(b.id, d.id);
+            assert_eq!(b.send_at, d.send_at);
+            assert_eq!(b.prompt.ids, d.prompt.ids);
+            let budget = d.deadline.unwrap() - d.send_at;
+            assert!(
+                (0.5..=8.0).contains(&budget),
+                "budget {budget} outside [p50/scale, p50*scale]"
+            );
+        }
+        // deterministic per seed, distinct across seeds
+        let again = base.with_deadlines(&slo, 9);
+        let other = base.with_deadlines(&slo, 10);
+        let ds = |t: &Trace| t.items.iter().map(|i| i.deadline).collect::<Vec<_>>();
+        assert_eq!(ds(&t), ds(&again));
+        assert_ne!(ds(&t), ds(&other));
+        // scale = 1 pins every budget at exactly p50
+        let fixed = base.with_deadlines(&SloSpec::new(1.5, 1.0), 3);
+        for i in &fixed.items {
+            assert!((i.deadline.unwrap() - i.send_at - 1.5).abs() < 1e-12);
+        }
+        // time_scaled scales deadlines with the clock
+        let half = t.time_scaled(0.5);
+        for (orig, s) in t.items.iter().zip(&half.items) {
+            assert!((s.deadline.unwrap() - orig.deadline.unwrap() * 0.5).abs() < 1e-12);
+        }
+        // pattern-pegged budgets read the intense phase
+        let slo6 = SloSpec::of_pattern(&TrafficPattern::fig6(), 10.0, 2.0);
+        assert!((slo6.p50 - 2.0).abs() < 1e-12);
     }
 
     #[test]

@@ -93,11 +93,7 @@ fn run_schedule(s: &Schedule, layout: KvLayout) -> RunOutcome {
     while batcher.has_work() || !pending.is_empty() {
         pending.retain(|(at, id, prompt)| {
             if *at <= step {
-                batcher.enqueue(BatchRequest {
-                    id: *id,
-                    prompt: prompt.clone(),
-                    sent_at: *at as f64 * 1e-3,
-                });
+                batcher.enqueue(BatchRequest::new(*id, prompt.clone(), *at as f64 * 1e-3));
                 false
             } else {
                 true

@@ -25,7 +25,8 @@ fn prop_speculative_loop_is_lossless_for_any_drafts() {
     check("spec loop lossless", 300, |g: &mut Gen| {
         let vocab = 32usize;
         // deterministic oracle: next = hash(last) % vocab
-        let oracle = |last: i32| -> i32 { ((last as u64 * 2654435761 + 12345) % vocab as u64) as i32 };
+        let oracle =
+            |last: i32| -> i32 { ((last as u64 * 2654435761 + 12345) % vocab as u64) as i32 };
         let start = g.int(0, vocab - 1) as i32;
         let n_new = g.int(1, 40);
         let s = g.int(1, 8);
@@ -281,6 +282,61 @@ fn prop_simulated_queue_conserves_requests_in_fifo_order() {
             && by_id.iter().all(|r| {
                 r.started_at >= r.sent_at - 1e-12 && r.finished_at > r.started_at
             })
+    });
+}
+
+/// Random deadlined traffic through the continuous DES under every
+/// admission controller: every request leaves exactly one record, and
+/// the attainment counters conserve — `met + missed + shed == n` when
+/// every request carries a deadline (completed + shed == n always).
+#[test]
+fn prop_admission_attainment_counters_conserve() {
+    use specbatch::admission::build_controller;
+    use specbatch::config::AdmissionSpec;
+    use specbatch::simulator::simulate_trace_continuous_admission;
+    use specbatch::testkit::harness::warm_model_based;
+    use specbatch::traffic::SloSpec;
+
+    check("attainment conservation", 24, |g: &mut Gen| {
+        let cfg = {
+            let mut c = SimConfig::paper_default(
+                CostModel::new(ModelProfile::OPT_6_7B, GpuProfile::RTX3090),
+                CostModel::new(ModelProfile::OPT_125M, GpuProfile::RTX3090),
+            );
+            c.max_new_tokens = g.int(4, 32);
+            c
+        };
+        let pool = vec![Prompt { ids: vec![1; g.int(2, 16)], text: String::new() }];
+        let n = g.int(1, 100);
+        let seed = g.int(0, 1 << 30) as u64;
+        let trace = Trace::generate(
+            &TrafficPattern::Stationary {
+                interval: g.f64(0.005, 0.5),
+                cv: g.f64(0.3, 3.0),
+            },
+            &pool,
+            n,
+            seed,
+        )
+        .with_deadlines(&SloSpec::new(g.f64(0.05, 3.0), g.f64(1.0, 4.0)), seed);
+        AdmissionSpec::all().into_iter().all(|spec| {
+            let mut policy = warm_model_based(&cfg, 24);
+            let mut ctrl = build_controller(spec);
+            let (rec, _) = simulate_trace_continuous_admission(
+                &cfg,
+                &mut policy,
+                ctrl.as_mut(),
+                &trace,
+            );
+            let s = rec.slo_attainment();
+            let mut ids: Vec<u64> = rec.records().iter().map(|r| r.id).collect();
+            ids.sort_unstable();
+            ids == (0..n as u64).collect::<Vec<u64>>()
+                && s.deadlined == n
+                && s.met + s.missed + s.shed == n
+                && s.completed + s.shed == n
+                && (spec != AdmissionSpec::Fifo || s.shed == 0)
+        })
     });
 }
 
