@@ -23,6 +23,7 @@ use specbatch::simulator::{
 };
 use specbatch::traffic::{Trace, TrafficPattern};
 use specbatch::util::csv::{f, Csv};
+use specbatch::util::json::Json;
 
 fn main() {
     let cfg = SimConfig {
@@ -64,6 +65,11 @@ fn main() {
     let mut rows: Vec<Vec<String>> = Vec::new();
     let mut at4: Vec<(String, f64)> = Vec::new();
     let mut rr_by_workers: Vec<(usize, f64)> = Vec::new();
+    // the CI trajectory point: 4 workers under the cost-aware router
+    let mut headline: Option<(
+        specbatch::metrics::LatencyRecorder,
+        Vec<specbatch::metrics::RoundEvent>,
+    )> = None;
     for workers in [1usize, 2, 4, 8] {
         for spec in RouterSpec::all() {
             let mut policies =
@@ -95,6 +101,12 @@ fn main() {
             ]);
             if workers == 4 {
                 at4.push((report.router.clone(), mean));
+                if spec == RouterSpec::CostAware {
+                    let mut merged: Vec<specbatch::metrics::RoundEvent> =
+                        report.shard_rounds.iter().flatten().copied().collect();
+                    merged.sort_by(|a, b| a.t.total_cmp(&b.t));
+                    headline = Some((report.recorder.clone(), merged));
+                }
             }
             if spec == RouterSpec::RoundRobin {
                 rr_by_workers.push((workers, mean));
@@ -138,4 +150,20 @@ fn main() {
     csv.write_file(common::results_path("cluster_scaling.csv"))
         .unwrap();
     println!("-> results/cluster_scaling.csv");
+
+    if let Some((recorder, rounds)) = &headline {
+        common::emit_bench(
+            "cluster_scaling",
+            recorder,
+            rounds,
+            Json::obj(vec![
+                ("bench", Json::Str("cluster_scaling".into())),
+                ("workers", Json::Num(4.0)),
+                ("router", Json::Str("cost-aware".into())),
+                ("requests", Json::Num(n_requests as f64)),
+                ("seed", Json::Num(cfg.seed as f64)),
+                ("scale", Json::Str(common::scale())),
+            ]),
+        );
+    }
 }

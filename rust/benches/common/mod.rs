@@ -9,6 +9,9 @@
 
 use std::path::PathBuf;
 
+use specbatch::metrics::{LatencyRecorder, RoundEvent};
+use specbatch::util::json::Json;
+
 /// Artifacts directory, honouring `SPECBATCH_ARTIFACTS`.
 pub fn artifacts_dir() -> PathBuf {
     std::env::var("SPECBATCH_ARTIFACTS")
@@ -63,6 +66,48 @@ pub fn results_path(name: &str) -> PathBuf {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("results");
     let _ = std::fs::create_dir_all(&dir);
     dir.join(name)
+}
+
+/// Where `BENCH_<name>.json` reports land: `SPECBATCH_RESULTS_DIR` when
+/// set (the CI bench job points it somewhere collectable), else the
+/// crate's `results/` next to the figure CSVs.
+fn bench_results_dir() -> PathBuf {
+    std::env::var("SPECBATCH_RESULTS_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("results"))
+}
+
+fn write_report(name: &str, report: &Json) {
+    let dir = bench_results_dir();
+    let _ = std::fs::create_dir_all(&dir);
+    let path = dir.join(format!("BENCH_{name}.json"));
+    match report.write_file(&path) {
+        Ok(()) => println!("bench report -> {}", path.display()),
+        // a read-only results dir must not fail the figure run itself
+        Err(e) => eprintln!("bench report write failed: {e}"),
+    }
+}
+
+/// Emit the machine-readable `BENCH_<name>.json` companion for a figure
+/// bench that produced a request recorder (and optionally a round
+/// timeline): the full `telemetry::bench` schema — latency percentiles,
+/// tokens/s, rounds/s, accepted-per-round, SLO attainment, config
+/// fingerprint + git SHA.
+pub fn emit_bench(
+    name: &str,
+    recorder: &LatencyRecorder,
+    rounds: &[RoundEvent],
+    config: Json,
+) {
+    let report = specbatch::telemetry::bench::bench_report(name, recorder, rounds, config);
+    write_report(name, &report);
+}
+
+/// Same, for grid/microbench binaries with no request recorder: the
+/// caller passes its headline numbers as a `metrics` object.
+pub fn emit_bench_custom(name: &str, metrics: Json, config: Json) {
+    let report = specbatch::telemetry::bench::bench_report_custom(name, metrics, config);
+    write_report(name, &report);
 }
 
 /// Render a small ASCII table (rows of equal length).

@@ -19,6 +19,7 @@ use specbatch::simulator::{
     per_token_latency, AcceptanceProcess, CostModel, GpuProfile, ModelProfile, SimConfig,
 };
 use specbatch::util::csv::{f, Csv};
+use specbatch::util::json::Json;
 use specbatch::util::prng::Pcg64;
 
 fn main() {
@@ -46,6 +47,8 @@ fn sim_grid() {
         "panel", "model", "gpu", "batch", "s", "per_token_latency_ms", "is_opt",
     ]);
     let rounds = if common::is_quick() { 100 } else { 500 };
+    // per-panel s_opt(b) — the monotone headline the trajectory charts
+    let mut s_opts = std::collections::BTreeMap::new();
 
     for (panel, model, gpu) in &panels {
         let cfg = SimConfig {
@@ -74,6 +77,10 @@ fn sim_grid() {
                 .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
                 .unwrap()
                 .0;
+            s_opts.insert(
+                format!("s_opt_{panel}_b{b}"),
+                Json::Num(slens[opt] as f64),
+            );
             let mut cells = vec![format!("b={b}")];
             for (i, &l) in lat.iter().enumerate() {
                 let star = if i == opt { "*" } else { "" };
@@ -96,6 +103,16 @@ fn sim_grid() {
     }
     csv.write_file(common::results_path("fig1_sim.csv")).unwrap();
     println!("\n-> results/fig1_sim.csv");
+
+    common::emit_bench_custom(
+        "fig1_latency_grid",
+        Json::Obj(s_opts),
+        Json::obj(vec![
+            ("bench", Json::Str("fig1_latency_grid".into())),
+            ("rounds", Json::Num(rounds as f64)),
+            ("scale", Json::Str(common::scale())),
+        ]),
+    );
 }
 
 #[cfg(feature = "pjrt")]

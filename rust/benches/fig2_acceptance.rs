@@ -22,12 +22,23 @@ use specbatch::engine::{Engine, EngineConfig};
 use specbatch::policy::Fixed;
 #[cfg(feature = "pjrt")]
 use specbatch::util::csv::{f, Csv};
+use specbatch::util::json::Json;
 #[cfg(feature = "pjrt")]
 use specbatch::util::prng::Pcg64;
 
 #[cfg(not(feature = "pjrt"))]
 fn main() {
     common::skip_real("Fig. 2 acceptance-curve measurement");
+    // keep the CI artifact set complete even when the measurement is
+    // impossible in this build
+    common::emit_bench_custom(
+        "fig2_acceptance",
+        Json::obj(vec![("skipped_no_pjrt", Json::Bool(true))]),
+        Json::obj(vec![
+            ("bench", Json::Str("fig2_acceptance".into())),
+            ("scale", Json::Str(common::scale())),
+        ]),
+    );
 }
 
 #[cfg(feature = "pjrt")]
@@ -107,4 +118,20 @@ fn main() {
     csv.write_file(common::results_path("fig2_acceptance.csv"))
         .unwrap();
     println!("-> results/fig2_acceptance.csv");
+
+    common::emit_bench_custom(
+        "fig2_acceptance",
+        Json::obj(vec![
+            ("fit_c", Json::Num(fit.c)),
+            ("fit_gamma", Json::Num(fit.gamma)),
+            ("fit_r2", Json::Num(fit.r2)),
+            ("samples", Json::Num(samples.len() as f64)),
+        ]),
+        Json::obj(vec![
+            ("bench", Json::Str("fig2_acceptance".into())),
+            ("s_probe", Json::Num(s_probe as f64)),
+            ("bucket", Json::Num(bucket as f64)),
+            ("scale", Json::Str(common::scale())),
+        ]),
+    );
 }

@@ -19,6 +19,7 @@ mod common;
 
 use specbatch::simulator::{CostModel, GpuProfile, ModelProfile};
 use specbatch::util::csv::{f, Csv};
+use specbatch::util::json::Json;
 
 fn main() {
     sim_curves();
@@ -55,6 +56,31 @@ fn sim_curves() {
     );
     csv.write_file(common::results_path("fig3_sim.csv")).unwrap();
     println!("-> results/fig3_sim.csv\n");
+
+    // memory-bound flatness at b=1 vs compute-bound growth at b=32
+    common::emit_bench_custom(
+        "fig3_verify_latency",
+        Json::obj(vec![
+            (
+                "crossover_tokens",
+                Json::Num(GpuProfile::RTX3090.crossover_tokens()),
+            ),
+            (
+                "b1_s8_over_s0",
+                Json::Num(cm.t_verify(1, 8, 128) / cm.t_verify(1, 0, 128)),
+            ),
+            (
+                "b32_s64_over_s0",
+                Json::Num(cm.t_verify(32, 64, 128) / cm.t_verify(32, 0, 128)),
+            ),
+        ]),
+        Json::obj(vec![
+            ("bench", Json::Str("fig3_verify_latency".into())),
+            ("model", Json::Str("opt-6.7b".into())),
+            ("gpu", Json::Str("rtx3090".into())),
+            ("scale", Json::Str(common::scale())),
+        ]),
+    );
 }
 
 #[cfg(feature = "pjrt")]

@@ -21,6 +21,7 @@ use specbatch::simulator::{
     batch_service_time, AcceptanceProcess, CostModel, GpuProfile, ModelProfile, SimConfig,
 };
 use specbatch::util::csv::{f, Csv};
+use specbatch::util::json::Json;
 use specbatch::util::prng::Pcg64;
 
 fn main() {
@@ -196,4 +197,19 @@ fn sim() {
     println!("geo-mean speedup: {avg:.2}x (paper: 1.94x avg; 2.73x @ b=1 -> 1.31x @ b=32)");
     csv.write_file(common::results_path("fig4_sim.csv")).unwrap();
     println!("-> results/fig4_sim.csv");
+
+    common::emit_bench_custom(
+        "fig4_uniform",
+        Json::obj(vec![
+            ("speedup_geo", Json::Num(avg)),
+            ("speedup_b1", Json::Num(speedups[0])),
+            ("speedup_b32", Json::Num(*speedups.last().unwrap())),
+        ]),
+        Json::obj(vec![
+            ("bench", Json::Str("fig4_uniform".into())),
+            ("reps", Json::Num(reps as f64)),
+            ("seed", Json::Num(cfg.seed as f64)),
+            ("scale", Json::Str(common::scale())),
+        ]),
+    );
 }

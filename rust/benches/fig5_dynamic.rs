@@ -25,6 +25,7 @@ use specbatch::simulator::{
 };
 use specbatch::traffic::{Trace, TrafficPattern};
 use specbatch::util::csv::{f, Csv};
+use specbatch::util::json::Json;
 
 fn main() {
     let cfg = SimConfig {
@@ -121,6 +122,31 @@ fn main() {
     csv.write_file(common::results_path("fig5_dynamic.csv"))
         .unwrap();
     println!("-> results/fig5_dynamic.csv");
+
+    common::emit_bench_custom(
+        "fig5_dynamic",
+        Json::obj(vec![
+            ("adaptive_vs_nospec_geo", Json::Num(geo(&adaptive_vs_nospec))),
+            (
+                "adaptive_vs_best_fixed_geo",
+                Json::Num(geo(&adaptive_vs_best_fixed)),
+            ),
+            (
+                "adaptive_vs_best_fixed_max",
+                Json::Num(
+                    adaptive_vs_best_fixed
+                        .iter()
+                        .cloned()
+                        .fold(f64::NEG_INFINITY, f64::max),
+                ),
+            ),
+        ]),
+        Json::obj(vec![
+            ("bench", Json::Str("fig5_dynamic".into())),
+            ("requests_per_cell", Json::Num(n_requests as f64)),
+            ("scale", Json::Str(common::scale())),
+        ]),
+    );
 
     // structural assertions (the shape the paper reports)
     assert!(

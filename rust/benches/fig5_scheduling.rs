@@ -26,6 +26,7 @@ use specbatch::simulator::{
 };
 use specbatch::traffic::{Trace, TrafficPattern};
 use specbatch::util::csv::{f, Csv};
+use specbatch::util::json::Json;
 
 fn main() {
     let cfg = SimConfig {
@@ -123,4 +124,14 @@ fn main() {
     csv.write_file(common::results_path("fig5_scheduling.csv"))
         .unwrap();
     println!("-> results/fig5_scheduling.csv");
+
+    common::emit_bench_custom(
+        "fig5_scheduling",
+        Json::obj(vec![("static_over_continuous_geo", Json::Num(geo))]),
+        Json::obj(vec![
+            ("bench", Json::Str("fig5_scheduling".into())),
+            ("requests_per_cell", Json::Num(n_requests as f64)),
+            ("scale", Json::Str(common::scale())),
+        ]),
+    );
 }

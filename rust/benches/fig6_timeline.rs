@@ -21,6 +21,7 @@ use specbatch::simulator::{
 };
 use specbatch::traffic::{Trace, TrafficPattern};
 use specbatch::util::csv::{f, Csv};
+use specbatch::util::json::Json;
 
 fn main() {
     let cfg = SimConfig {
@@ -57,6 +58,7 @@ fn main() {
     let mut csv = Csv::new(&["policy", "group_t_start_s", "group_mean_latency_s", "n"]);
     let mut means = Vec::new();
     let mut phase_means: Vec<(String, f64, f64)> = Vec::new();
+    let mut adaptive_rec = None;
     for (name, policy) in policies.iter_mut() {
         let rec = simulate_trace(&cfg, policy.as_mut(), &trace);
         let groups = timeline_groups(rec.records(), 40);
@@ -86,6 +88,25 @@ fn main() {
         };
         // phases 2 and 3 (100-150 intense, 150-200 sparse) are steady-state
         phase_means.push((name.clone(), lat_in(100.0, 150.0), lat_in(150.0, 200.0)));
+        if name == "adaptive" {
+            adaptive_rec = Some(rec);
+        }
+    }
+
+    // the CI trajectory point for this figure: the adaptive series
+    if let Some(rec) = &adaptive_rec {
+        common::emit_bench(
+            "fig6_timeline",
+            rec,
+            &[],
+            Json::obj(vec![
+                ("bench", Json::Str("fig6_timeline".into())),
+                ("policy", Json::Str("adaptive".into())),
+                ("requests", Json::Num(n_requests as f64)),
+                ("trace_seed", Json::Num(66.0)),
+                ("scale", Json::Str(common::scale())),
+            ]),
+        );
     }
 
     let rows: Vec<Vec<String>> = phase_means

@@ -29,6 +29,7 @@ use specbatch::testkit::harness::{
 };
 use specbatch::traffic::SloSpec;
 use specbatch::util::csv::{f, Csv};
+use specbatch::util::json::Json;
 
 const SEED: u64 = 7;
 
@@ -36,6 +37,9 @@ fn main() {
     let n_requests = if common::is_quick() { 150 } else { 500 };
     let intervals = [0.4, 0.2, 0.1, 0.07, 0.05, 0.035, 0.025];
     let pool = const_prompt_pool(12);
+    // attainment at the heaviest load point, per (policy, controller) —
+    // the numbers the CI trajectory charts
+    let mut heavy = std::collections::BTreeMap::new();
 
     let mut csv = Csv::new(&[
         "interval_s",
@@ -92,6 +96,12 @@ fn main() {
                     slo.shed.to_string(),
                     f(rec.summary().mean),
                 ]);
+                if interval == *intervals.last().unwrap() {
+                    heavy.insert(
+                        format!("attainment_{policy_kind}_{}", ctrl.label()),
+                        Json::Num(slo.attainment()),
+                    );
+                }
             }
         }
         println!();
@@ -99,4 +109,16 @@ fn main() {
     csv.write_file("results/fig_slo_attainment.csv")
         .expect("write results/fig_slo_attainment.csv");
     println!("-> results/fig_slo_attainment.csv");
+
+    common::emit_bench_custom(
+        "fig_slo_attainment",
+        Json::Obj(heavy),
+        Json::obj(vec![
+            ("bench", Json::Str("fig_slo_attainment".into())),
+            ("requests", Json::Num(n_requests as f64)),
+            ("seed", Json::Num(SEED as f64)),
+            ("heaviest_interval_s", Json::Num(*intervals.last().unwrap())),
+            ("scale", Json::Str(common::scale())),
+        ]),
+    );
 }

@@ -19,36 +19,50 @@ use specbatch::model::Model;
 #[cfg(feature = "pjrt")]
 use specbatch::policy::Fixed;
 use specbatch::util::csv::{f, Csv};
+use specbatch::util::json::Json;
 use specbatch::util::prng::Pcg64;
+
+/// Time the pure-host acceptance kernel (both build flavors run this).
+fn bench_acceptance(csv: &mut Csv) -> f64 {
+    let b = 16;
+    let s = 4;
+    let mut rng = Pcg64::new(1);
+    let draft: Vec<i32> = (0..b * s).map(|_| rng.next_below(512) as i32).collect();
+    let pred: Vec<i32> = (0..b * (s + 1)).map(|_| rng.next_below(512) as i32).collect();
+    let t0 = Instant::now();
+    let iters = 100_000;
+    for _ in 0..iters {
+        std::hint::black_box(accept_batch(
+            std::hint::black_box(&draft),
+            std::hint::black_box(&pred),
+            b,
+            s,
+        ));
+    }
+    let us = t0.elapsed().as_secs_f64() / iters as f64 * 1e6;
+    println!("acceptance(b=16,s=4): {us:.3} µs");
+    csv.row(&["acceptance".into(), b.to_string(), s.to_string(), f(us)]);
+    us
+}
 
 /// Without the PJRT runtime only the pure host-side sections run.
 #[cfg(not(feature = "pjrt"))]
 fn main() {
     let mut csv = Csv::new(&["section", "batch", "s", "mean_us"]);
-    {
-        let b = 16;
-        let s = 4;
-        let mut rng = Pcg64::new(1);
-        let draft: Vec<i32> = (0..b * s).map(|_| rng.next_below(512) as i32).collect();
-        let pred: Vec<i32> = (0..b * (s + 1)).map(|_| rng.next_below(512) as i32).collect();
-        let t0 = Instant::now();
-        let iters = 100_000;
-        for _ in 0..iters {
-            std::hint::black_box(accept_batch(
-                std::hint::black_box(&draft),
-                std::hint::black_box(&pred),
-                b,
-                s,
-            ));
-        }
-        let us = t0.elapsed().as_secs_f64() / iters as f64 * 1e6;
-        println!("acceptance(b=16,s=4): {us:.3} µs");
-        csv.row(&["acceptance".into(), b.to_string(), s.to_string(), f(us)]);
-    }
+    let acc_us = bench_acceptance(&mut csv);
     csv.write_file(common::results_path("micro_hotpath.csv"))
         .unwrap();
     common::skip_real("device-step micro-benchmarks");
     println!("-> results/micro_hotpath.csv (host sections only)");
+    common::emit_bench_custom(
+        "micro_hotpath",
+        Json::obj(vec![("acceptance_us", Json::Num(acc_us))]),
+        Json::obj(vec![
+            ("bench", Json::Str("micro_hotpath".into())),
+            ("sections", Json::Str("host-only".into())),
+            ("scale", Json::Str(common::scale())),
+        ]),
+    );
 }
 
 #[cfg(feature = "pjrt")]
@@ -59,26 +73,7 @@ fn main() {
     let mut csv = Csv::new(&["section", "batch", "s", "mean_us"]);
 
     // --- acceptance logic (pure host) ---
-    {
-        let b = 16;
-        let s = 4;
-        let mut rng = Pcg64::new(1);
-        let draft: Vec<i32> = (0..b * s).map(|_| rng.next_below(512) as i32).collect();
-        let pred: Vec<i32> = (0..b * (s + 1)).map(|_| rng.next_below(512) as i32).collect();
-        let t0 = Instant::now();
-        let iters = 100_000;
-        for _ in 0..iters {
-            std::hint::black_box(accept_batch(
-                std::hint::black_box(&draft),
-                std::hint::black_box(&pred),
-                b,
-                s,
-            ));
-        }
-        let us = t0.elapsed().as_secs_f64() / iters as f64 * 1e6;
-        println!("acceptance(b=16,s=4): {us:.3} µs");
-        csv.row(&["acceptance".into(), b.to_string(), s.to_string(), f(us)]);
-    }
+    let acc_us = bench_acceptance(&mut csv);
 
     // --- single verify / speculate steps ---
     let llm = Model::new(&rt, "llm").expect("llm");
@@ -128,6 +123,7 @@ fn main() {
     }
 
     // --- end-to-end round breakdown via the engine stopwatch ---
+    let e2e_us;
     {
         let mut engine = Engine::new(&rt, EngineConfig::default()).expect("engine");
         let mut rng = Pcg64::new(9);
@@ -147,15 +143,24 @@ fn main() {
             out.stats.mean_accepted()
         );
         println!("\nengine stopwatch breakdown:\n{}", engine.stopwatch.report());
-        csv.row(&[
-            "e2e_per_token".into(),
-            "4".into(),
-            "3".into(),
-            f(out.stats.per_token_latency() * 1e6),
-        ]);
+        e2e_us = out.stats.per_token_latency() * 1e6;
+        csv.row(&["e2e_per_token".into(), "4".into(), "3".into(), f(e2e_us)]);
     }
 
     csv.write_file(common::results_path("micro_hotpath.csv"))
         .unwrap();
     println!("-> results/micro_hotpath.csv");
+    common::emit_bench_custom(
+        "micro_hotpath",
+        Json::obj(vec![
+            ("acceptance_us", Json::Num(acc_us)),
+            ("e2e_us_per_token", Json::Num(e2e_us)),
+        ]),
+        Json::obj(vec![
+            ("bench", Json::Str("micro_hotpath".into())),
+            ("sections", Json::Str("full".into())),
+            ("reps", Json::Num(reps as f64)),
+            ("scale", Json::Str(common::scale())),
+        ]),
+    );
 }

@@ -33,12 +33,13 @@ use std::collections::VecDeque;
 use anyhow::{bail, Result};
 
 use crate::admission::{
-    apply_plan_to_queue, predicted_token_time, AdmissionController, AdmissionView, Candidate,
-    Fifo,
+    apply_plan_to_queue, predicted_finish, predicted_token_time, AdmissionController,
+    AdmissionView, Candidate, Fifo,
 };
 use crate::engine::{AdmitRequest, BatchState, Engine};
 use crate::metrics::RoundEvent;
 use crate::policy::SpeculationPolicy;
+use crate::telemetry::{PhaseKind, Telemetry};
 
 /// Batcher knobs.
 #[derive(Debug, Clone)]
@@ -316,6 +317,9 @@ impl ContinuousBatcher {
         now: f64,
     ) -> Result<Vec<FinishedRequest>> {
         let mut finished = Vec::new();
+        // cheap handle copy (an `Option<Arc>` bump; `None` when off) so
+        // emissions below don't fight the `&mut engine` borrows
+        let tel = engine.telemetry().clone();
 
         // --- retire: free capacity the moment rows finish ---
         let mut drained = false;
@@ -324,6 +328,18 @@ impl ContinuousBatcher {
                 let meta = ep.slots[retired.slot]
                     .take()
                     .expect("retired slot carries metadata");
+                if tel.enabled() {
+                    // deadline slack on the experiment clock; the event
+                    // timestamp on the telemetry clock like every other
+                    // threaded-path event
+                    tel.finish(
+                        tel.now(),
+                        meta.id,
+                        retired.tokens.len(),
+                        false,
+                        meta.deadline.map(|d| d - now),
+                    );
+                }
                 finished.push(FinishedRequest {
                     id: meta.id,
                     tokens: retired.tokens,
@@ -348,7 +364,11 @@ impl ContinuousBatcher {
         // --- admission plan: the controller orders the queue and rules
         //     on deferrals/sheds; the longest feasible prefix of its
         //     Admit verdicts is what the capacity logic below admits ---
-        let admit_n = self.plan_admission(policy, now);
+        let tel_adm = tel.enabled().then(|| tel.now());
+        let admit_n = self.plan_admission(policy, now, &tel);
+        if let Some(t0) = tel_adm {
+            tel.phase(t0, tel.now() - t0, PhaseKind::Admission);
+        }
 
         // --- admit / reshape at the round boundary ---
         if admit_n > 0 {
@@ -390,9 +410,15 @@ impl ContinuousBatcher {
         }
 
         // --- one decode round ---
+        engine.set_round_context(self.epoch_seq, self.queue.len());
         if let Some(ep) = &mut self.epoch {
             if ep.state.has_live() {
                 let info = engine.decode_round(&mut ep.state, policy)?;
+                if tel.tracing() {
+                    // snapshot() allocates, so only ask for it when the
+                    // sink actually records
+                    tel.policy_fit(tel.now(), policy.snapshot());
+                }
                 self.timeline.push(RoundEvent {
                     t: now,
                     epoch: self.epoch_seq,
@@ -416,7 +442,12 @@ impl ContinuousBatcher {
     ///
     /// A FIFO plan (identity order, all Admit) leaves the queue untouched
     /// — the pre-subsystem batcher's behaviour, bit for bit.
-    fn plan_admission(&mut self, policy: &dyn SpeculationPolicy, now: f64) -> usize {
+    fn plan_admission(
+        &mut self,
+        policy: &dyn SpeculationPolicy,
+        now: f64,
+        tel: &Telemetry,
+    ) -> usize {
         if self.queue.is_empty() {
             return 0;
         }
@@ -443,6 +474,32 @@ impl ContinuousBatcher {
         let queue: Vec<Queued> = self.queue.drain(..).collect();
         let out = apply_plan_to_queue(plan, queue, live, |q| q.deferred += 1);
         let n_shed = out.shed.len();
+        if tel.enabled() {
+            // per-request verdict events with predicted deadline slack
+            // at the post-plan load (what the controller's model saw)
+            let t = tel.now();
+            let load = live + out.queue.len();
+            let fin = predicted_finish(
+                policy,
+                now,
+                self.cfg.max_new_tokens,
+                load,
+                self.cfg.max_batch,
+            );
+            let slack = |deadline: Option<f64>| match (deadline, fin) {
+                (Some(d), Some(f)) => Some(d - f),
+                _ => None,
+            };
+            for q in &out.shed {
+                tel.admission(t, q.req.id, "shed", q.req.deadline, slack(q.req.deadline), q.deferred);
+                // the shed IS the request's terminal event
+                tel.finish(t, q.req.id, 0, true, q.req.deadline.map(|d| d - now));
+            }
+            for (i, q) in out.queue.iter().enumerate() {
+                let verdict = if i < out.admit_n { "admit" } else { "defer" };
+                tel.admission(t, q.req.id, verdict, q.req.deadline, slack(q.req.deadline), q.deferred);
+            }
+        }
         for q in out.shed {
             self.shed_buf.push(ShedRequest {
                 id: q.req.id,

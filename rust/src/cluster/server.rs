@@ -147,7 +147,9 @@ pub fn run_cluster_experiment(
         let (lut_tx, lut_rx) = channel();
         let (report_tx, report_rx) = channel();
         let w_spec = spec.clone();
-        let w_cfg = cfg.clone();
+        let mut w_cfg = cfg.clone();
+        // each shard's engine emits events tagged with its shard index
+        w_cfg.telemetry = cfg.telemetry.for_shard(k);
         let w_policy = policy.clone();
         let w_lut = lut.clone();
         let w_gauge = Arc::clone(&gauges[k]);
@@ -197,6 +199,7 @@ pub fn run_cluster_experiment(
         let shard_txs = shard_txs.clone();
         let gauges: Vec<Arc<ShardGauge>> = gauges.iter().map(Arc::clone).collect();
         let inflight = Arc::clone(&inflight);
+        let tel = cfg.telemetry.clone();
         std::thread::Builder::new()
             .name("specbatch-dispatcher".into())
             .spawn(move || loop {
@@ -228,6 +231,18 @@ pub fn run_cluster_experiment(
                             })
                             .collect();
                         let k = router.route(&loads).min(shard_txs.len() - 1);
+                        if tel.enabled() {
+                            // score vector the router saw: staleness-scaled
+                            // marginal cost where warm, in-flight load else
+                            let scores: Vec<f64> = loads
+                                .iter()
+                                .map(|l| {
+                                    l.marginal_cost
+                                        .unwrap_or((l.live + l.queued) as f64)
+                                })
+                                .collect();
+                            tel.route(tel.now(), r.id, k, &scores);
+                        }
                         inflight[k].fetch_add(1, Ordering::Relaxed);
                         if shard_txs[k].send(ServerMsg::Request(r)).is_err() {
                             break;

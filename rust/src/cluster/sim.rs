@@ -32,13 +32,14 @@
 use std::collections::VecDeque;
 
 use crate::admission::{
-    apply_plan_to_queue, predicted_token_time, AdmissionController, AdmissionView, Candidate,
-    Fifo,
+    apply_plan_to_queue, predicted_finish, predicted_token_time, AdmissionController,
+    AdmissionView, Candidate, Fifo,
 };
 use crate::metrics::{LatencyRecorder, RequestRecord, RoundEvent, SloSummary};
 use crate::policy::{RoundFeedback, SpeculationPolicy};
-use crate::simulator::des::{kv_blocks_of, sim_bucket_for};
+use crate::simulator::des::{emit_round_phases, kv_blocks_of, sim_bucket_for};
 use crate::simulator::{reshape_cost, round_cost, SimConfig};
+use crate::telemetry::{PhaseKind, Telemetry};
 use crate::traffic::{Trace, TraceItem};
 use crate::util::prng::Pcg64;
 
@@ -171,9 +172,28 @@ pub fn simulate_trace_cluster_admission(
     router: &mut dyn Router,
     trace: &Trace,
 ) -> ClusterReport {
+    simulate_trace_cluster_admission_tel(cfg, policies, ctrls, router, trace, &Telemetry::disabled())
+}
+
+/// [`simulate_trace_cluster_admission`] with an event stream on `tel`:
+/// routing decisions (tagged with the chosen shard, carrying the router's
+/// per-shard load scores), plus each shard's round/phase/admission/finish
+/// events through a [`Telemetry::for_shard`] handle — all stamped in
+/// **virtual time** under the same schema the threaded cluster emits in
+/// wall time.  Emission consumes no randomness: a disabled handle
+/// reproduces the plain entry point bit for bit.
+pub fn simulate_trace_cluster_admission_tel(
+    cfg: &SimConfig,
+    policies: &mut [Box<dyn SpeculationPolicy>],
+    ctrls: &mut [Box<dyn AdmissionController>],
+    router: &mut dyn Router,
+    trace: &Trace,
+    tel: &Telemetry,
+) -> ClusterReport {
     let n_shards = policies.len();
     assert!(n_shards >= 1, "cluster needs at least one shard");
     assert_eq!(ctrls.len(), n_shards, "one admission controller per shard");
+    let shard_tels: Vec<Telemetry> = (0..n_shards).map(|k| tel.for_shard(k)).collect();
     let mut shards: Vec<Shard> = (0..n_shards)
         .map(|k| Shard {
             t: 0.0,
@@ -224,6 +244,19 @@ pub fn simulate_trace_cluster_admission(
                 })
                 .collect();
             let k = router.route(&loads).min(n_shards - 1);
+            if tel.enabled() {
+                // score vector: each shard's backlog as the router saw it
+                // (fitted marginal cost where the policy is warm, plain
+                // live+queued rows otherwise)
+                let scores: Vec<f64> = loads
+                    .iter()
+                    .map(|l| {
+                        l.marginal_cost
+                            .unwrap_or((l.live + l.queued) as f64)
+                    })
+                    .collect();
+                tel.route(items[next].send_at, items[next].id, k, &scores);
+            }
             shards[k].queue.push_back(Waiting {
                 item: items[next].clone(),
                 deferred: 0,
@@ -238,6 +271,7 @@ pub fn simulate_trace_cluster_admission(
                 ctrls[k].as_mut(),
                 &mut recorder,
                 k,
+                &shard_tels[k],
             );
         }
     }
@@ -260,6 +294,7 @@ fn step_shard(
     ctrl: &mut dyn AdmissionController,
     recorder: &mut LatencyRecorder,
     shard_idx: usize,
+    tel: &Telemetry,
 ) {
     let may_speculate = policy.wants_speculation();
     if sh.live.is_empty() {
@@ -322,6 +357,27 @@ fn step_shard(
                 shed: true,
             });
         }
+        if tel.enabled() {
+            let fin = predicted_finish(
+                policy,
+                sh.t,
+                cfg.max_new_tokens,
+                sh.live.len() + out.queue.len(),
+                cfg.max_batch,
+            );
+            let slack = |d: Option<f64>| match (d, fin) {
+                (Some(d), Some(f)) => Some(d - f),
+                _ => None,
+            };
+            for w in &out.shed {
+                tel.admission(sh.t, w.item.id, "shed", w.item.deadline, slack(w.item.deadline), w.deferred);
+                tel.finish(sh.t, w.item.id, 0, true, w.item.deadline.map(|d| d - sh.t));
+            }
+            for (i, w) in out.queue.iter().enumerate() {
+                let verdict = if i < out.admit_n { "admit" } else { "defer" };
+                tel.admission(sh.t, w.item.id, verdict, w.item.deadline, slack(w.item.deadline), w.deferred);
+            }
+        }
         sh.queue = out.queue.into();
         sh.queue.extend(rest);
         out.admit_n
@@ -361,9 +417,13 @@ fn step_shard(
     }
     if n_admit > 0 {
         let mean_plen = (plen_sum as f64 / n_admit as f64).ceil() as usize;
+        let t_pre = sh.t;
         sh.t += cfg.llm.t_prefill(n_admit, mean_plen);
         if may_speculate {
             sh.t += cfg.ssm.t_prefill(n_admit, mean_plen);
+        }
+        if tel.enabled() {
+            tel.phase(t_pre, sh.t - t_pre, PhaseKind::Prefill);
         }
         // epoch reshape at a bucket growth, mirroring the single-worker
         // DES: carried rows re-ingest under Dense, remap under Paged
@@ -374,7 +434,11 @@ fn step_shard(
                 .iter()
                 .map(|r| r.plen + r.generated)
                 .collect();
-            sh.t += reshape_cost(cfg, &carried, sh.live.len());
+            let rcst = reshape_cost(cfg, &carried, sh.live.len());
+            if tel.enabled() {
+                tel.phase(sh.t, rcst, PhaseKind::Reshape);
+            }
+            sh.t += rcst;
         }
         sh.bucket = sh.bucket.max(want);
         let b = sh.live.len();
@@ -407,16 +471,19 @@ fn step_shard(
             committed += a + 1;
         }
     }
+    let t_round = sh.t;
     sh.t += rc;
     let accepted_total: usize = accepted_rows.iter().map(|&a| a as usize).sum();
-    policy.observe(&RoundFeedback {
+    let fb = RoundFeedback {
         live: b,
         width: b, // continuous rounds execute at exactly the live width
         s,
         accepted: accepted_rows,
         committed,
         round_time: rc,
-    });
+    };
+    policy.observe(&fb);
+    let kvb = kv_blocks_of(cfg, sh.live.iter().map(|r| r.plen + r.generated));
     sh.rounds.push(RoundEvent {
         t: sh.t,
         epoch: sh.epoch,
@@ -425,14 +492,30 @@ fn step_shard(
         s,
         accepted: accepted_total,
         round_cost: rc,
-        kv_blocks: kv_blocks_of(cfg, sh.live.iter().map(|r| r.plen + r.generated)),
+        kv_blocks: kvb,
     });
+    if tel.enabled() {
+        tel.round(t_round, rc, sh.epoch, b, sh.queue.len(), s, committed, &fb.accepted, kvb);
+        emit_round_phases(cfg, tel, t_round, rc, b, s, ctx);
+        if tel.tracing() {
+            tel.policy_fit(sh.t, policy.snapshot());
+        }
+    }
 
     // --- retire finished rows immediately, freeing capacity ---
     let mut i = 0;
     while i < sh.live.len() {
         if sh.live[i].generated >= cfg.max_new_tokens {
             let row = sh.live.swap_remove(i);
+            if tel.enabled() {
+                tel.finish(
+                    sh.t,
+                    row.id,
+                    cfg.max_new_tokens,
+                    false,
+                    row.deadline.map(|d| d - sh.t),
+                );
+            }
             recorder.push(RequestRecord {
                 id: row.id,
                 sent_at: row.sent_at,

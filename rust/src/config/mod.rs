@@ -9,6 +9,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Result};
 
 use crate::kvcache::KvLayout;
+use crate::telemetry::TelemetryMode;
 use crate::util::json::Json;
 
 /// Top-level serving configuration (paper Sec. 5 methodology).
@@ -42,6 +43,10 @@ pub struct ServingConfig {
     /// lands in `[slo_p50 / slo_scale, slo_p50 * slo_scale]` (1 = all
     /// requests share the same budget).
     pub slo_scale: f64,
+    /// Observability: "off" (zero-overhead default), "summary" (metric
+    /// registry only), or "trace" (metrics + structured event sink).
+    /// Defaults to the `SPECBATCH_TELEMETRY` env override, else off.
+    pub telemetry: TelemetryMode,
     /// Seed for everything stochastic on the serving side.
     pub seed: u64,
 }
@@ -210,6 +215,7 @@ impl Default for ServingConfig {
             admission: AdmissionSpec::Fifo,
             slo_p50: 0.0,
             slo_scale: 1.0,
+            telemetry: TelemetryMode::default_mode(),
             seed: 0,
         }
     }
@@ -257,6 +263,9 @@ impl ServingConfig {
         if let Some(v) = json.get_opt("slo_scale")? {
             cfg.slo_scale = v.as_f64()?;
         }
+        if let Some(v) = json.get_opt("telemetry")? {
+            cfg.telemetry = TelemetryMode::parse(v.as_str()?)?;
+        }
         if let Some(v) = json.get_opt("seed")? {
             cfg.seed = v.as_i64()? as u64;
         }
@@ -288,6 +297,7 @@ impl ServingConfig {
             ("admission", Json::Str(self.admission.label().into())),
             ("slo_p50", Json::Num(self.slo_p50)),
             ("slo_scale", Json::Num(self.slo_scale)),
+            ("telemetry", Json::Str(self.telemetry.label().into())),
             ("seed", Json::Num(self.seed as f64)),
         ])
     }
@@ -428,6 +438,23 @@ mod tests {
         let c2 = ServingConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(c2.kv_layout, KvLayout::Paged);
         let j = Json::parse(r#"{"kv_layout": "ragged"}"#).unwrap();
+        assert!(ServingConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn telemetry_mode_roundtrips_and_rejects_garbage() {
+        let c = ServingConfig {
+            telemetry: TelemetryMode::Trace,
+            ..ServingConfig::default()
+        };
+        let c2 = ServingConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.telemetry, TelemetryMode::Trace);
+        let j = Json::parse(r#"{"telemetry": "summary"}"#).unwrap();
+        assert_eq!(
+            ServingConfig::from_json(&j).unwrap().telemetry,
+            TelemetryMode::Summary
+        );
+        let j = Json::parse(r#"{"telemetry": "verbose"}"#).unwrap();
         assert!(ServingConfig::from_json(&j).is_err());
     }
 

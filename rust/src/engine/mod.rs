@@ -67,6 +67,7 @@ use crate::model::{Kv, ModelHandle};
 use crate::policy::{RoundFeedback, SpeculationPolicy};
 #[cfg(feature = "pjrt")]
 use crate::runtime::{ExeKind, Manifest, Runtime};
+use crate::telemetry::{PhaseKind, Telemetry};
 use crate::testkit::stub::{StubModel, StubRole, StubSpec};
 use crate::util::timer::Stopwatch;
 use acceptance::accept_batch;
@@ -487,6 +488,12 @@ pub struct Engine<'rt> {
     ssm: ModelHandle<'rt>,
     /// per-section timing for the §Perf pass
     pub stopwatch: Stopwatch,
+    /// observability handle (disabled by default: every emit below is a
+    /// single `Option` branch, keeping the hot path allocation-free)
+    tel: Telemetry,
+    /// (epoch, queued) the serving loop reports for telemetry round
+    /// spans — two plain stores per round, nothing when disabled
+    round_ctx: (usize, usize),
     /// paged-layout block pools (None under the dense layout)
     pools: Option<KvPools>,
     #[cfg(feature = "pjrt")]
@@ -511,6 +518,8 @@ impl<'rt> Engine<'rt> {
             llm: ModelHandle::Pjrt(crate::model::Model::new(rt, "llm")?),
             ssm: ModelHandle::Pjrt(crate::model::Model::new(rt, "ssm")?),
             stopwatch: Stopwatch::new(),
+            tel: Telemetry::disabled(),
+            round_ctx: (0, 0),
             pools: None,
             rt: Some(rt),
         })
@@ -536,6 +545,8 @@ impl<'rt> Engine<'rt> {
             llm: ModelHandle::stub(StubModel::new(spec.clone(), StubRole::Llm)),
             ssm: ModelHandle::stub(StubModel::new(spec, StubRole::Ssm)),
             stopwatch: Stopwatch::new(),
+            tel: Telemetry::disabled(),
+            round_ctx: (0, 0),
             pools,
             #[cfg(feature = "pjrt")]
             rt: None,
@@ -544,6 +555,24 @@ impl<'rt> Engine<'rt> {
 
     pub fn limits(&self) -> &EngineLimits {
         &self.limits
+    }
+
+    /// Install an observability handle (see [`crate::telemetry`]).  The
+    /// default is the disabled handle, under which every emission in the
+    /// decode loop is a single branch.
+    pub fn set_telemetry(&mut self, tel: Telemetry) {
+        self.tel = tel;
+    }
+
+    pub fn telemetry(&self) -> &Telemetry {
+        &self.tel
+    }
+
+    /// Report the (epoch, queued) context telemetry round spans carry.
+    /// Called by the serving loop driving this engine; two plain `usize`
+    /// stores, free whether or not telemetry is on.
+    pub fn set_round_context(&mut self, epoch: usize, queued: usize) {
+        self.round_ctx = (epoch, queued);
     }
 
     /// The KV layout this engine runs (see [`crate::kvcache`]).
@@ -680,6 +709,10 @@ impl<'rt> Engine<'rt> {
                 .copy_from_slice(&row.committed[..row.prompt_len]);
             plens[i] = row.prompt_len as i32;
         }
+        let tel_mark = self
+            .tel
+            .enabled()
+            .then(|| self.tel.now());
         let mut llm_kv = self.llm.new_kv(bucket)?;
         let first = self.stopwatch.time("prefill_llm", || {
             self.llm.prefill(&tokens, &plens, bucket, &mut llm_kv)
@@ -695,6 +728,9 @@ impl<'rt> Engine<'rt> {
             None
         };
 
+        if let Some(t0) = tel_mark {
+            self.tel.phase(t0, self.tel.now() - t0, PhaseKind::Prefill);
+        }
         // commit the prefill token
         for (row, &t) in rows.iter_mut().zip(&first) {
             row.committed.push(t);
@@ -743,6 +779,18 @@ impl<'rt> Engine<'rt> {
         st.stats.spec_lens.push(s);
         st.stats.rounds += 1;
 
+        // telemetry phase breakdown is *derived* from the stopwatch
+        // sections the round body already times (no double-timing): the
+        // section totals captured here, diffed after the round, are this
+        // round's catch-up/draft/verify shares
+        let tel_mark = self.tel.enabled().then(|| {
+            (
+                self.tel.now(),
+                self.stopwatch.total("ssm_catch_up"),
+                self.stopwatch.total("speculate"),
+                self.stopwatch.total("verify"),
+            )
+        });
         // two clocks: `wall_start` covers the whole round (the timeline's
         // accounting truth), `fit_start` begins AFTER the SSM catch-up
         // pass — backlog drain is bookkeeping for earlier plain rounds /
@@ -790,6 +838,42 @@ impl<'rt> Engine<'rt> {
         self.sync_blocks(st)?;
         let accepted_rows: Vec<u32> = st.stats.accept_samples[samples_before..].to_vec();
         let committed = committed_total(&st.rows) - before;
+        if let Some((t0, catch0, draft0, verify0)) = tel_mark {
+            let catch = (self.stopwatch.total("ssm_catch_up") - catch0).as_secs_f64();
+            let draft = (self.stopwatch.total("speculate") - draft0).as_secs_f64();
+            let verify = (self.stopwatch.total("verify") - verify0).as_secs_f64();
+            self.tel.round(
+                t0,
+                wall_time,
+                self.round_ctx.0,
+                live,
+                self.round_ctx.1,
+                s,
+                committed,
+                &accepted_rows,
+                st.kv_blocks_in_use(),
+            );
+            // phases laid out back-to-back in execution order; the
+            // host-side accept/commit share is the round's remainder,
+            // so the sub-spans exactly tile the round span
+            let mut t = t0;
+            for (dur, phase) in [
+                (catch, PhaseKind::CatchUp),
+                (draft, PhaseKind::Draft),
+                (verify, PhaseKind::Verify),
+            ] {
+                if dur > 0.0 {
+                    self.tel.phase(t, dur, phase);
+                    t += dur;
+                }
+            }
+            self.tel
+                .phase(t, (wall_time - (catch + draft + verify)).max(0.0), PhaseKind::Accept);
+            if let Some(kv) = self.kv_block_stats() {
+                self.tel
+                    .kv_pool(t0 + wall_time, kv.in_use, kv.capacity, kv.mean_internal_frag);
+            }
+        }
         let info = RoundInfo {
             live,
             s,
@@ -892,7 +976,13 @@ impl<'rt> Engine<'rt> {
             }
             slots.push(slot);
         }
+        let tel_mark = self.tel.enabled().then(|| self.tel.now());
         self.ingest_admitted(st)?;
+        if let Some(t0) = tel_mark {
+            // admission-time context ingest (fresh prompts + any dense
+            // carry re-ingest) — the cost the paged remap avoids
+            self.tel.phase(t0, self.tel.now() - t0, PhaseKind::Reshape);
+        }
         // freshly admitted rows put the SSM behind by a whole context
         // (remapped rows keep their counters; the catch-up pass no-ops
         // for any row that is already within the delta invariant)

@@ -58,6 +58,7 @@ pub mod runtime;
 pub mod scheduler;
 pub mod server;
 pub mod simulator;
+pub mod telemetry;
 pub mod testkit;
 pub mod traffic;
 pub mod util;
@@ -80,5 +81,6 @@ pub mod prelude {
     pub use crate::runtime::Runtime;
     pub use crate::scheduler::Lut;
     pub use crate::server::{Backend, SchedulingMode};
+    pub use crate::telemetry::{Telemetry, TelemetryMode};
     pub use crate::testkit::stub::StubSpec;
 }

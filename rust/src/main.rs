@@ -22,19 +22,21 @@
 use anyhow::{bail, Result};
 
 use specbatch::admission::{build_controller, replicate_controllers};
-use specbatch::cluster::sim::simulate_trace_cluster_admission;
+use specbatch::cluster::sim::simulate_trace_cluster_admission_tel;
 use specbatch::cluster::{build_router, replicate_policies};
 use specbatch::config::{AdmissionSpec, PolicySpec, RouterSpec};
 use specbatch::kvcache::KvLayout;
-use specbatch::metrics::SloSummary;
+use specbatch::metrics::{LatencyRecorder, RoundEvent, SloSummary};
 use specbatch::policy::{Fixed, LutAdaptive, ModelBased, NoSpec, SpeculationPolicy};
 use specbatch::server::{run_experiment, Backend, SchedulingMode, ServerConfig};
 use specbatch::simulator::{
-    simulate_trace_admission, simulate_trace_continuous_admission, simulated_lut,
+    simulate_trace_admission_tel, simulate_trace_continuous_admission_tel, simulated_lut,
     AcceptanceDrift, AcceptanceProcess, CostModel, GpuProfile, ModelProfile, SimConfig,
 };
+use specbatch::telemetry::{self, Telemetry, TelemetryMode};
 use specbatch::traffic::{SloSpec, Trace, TrafficPattern};
 use specbatch::util::cli::{ArgSpec, Args};
+use specbatch::util::json::Json;
 use specbatch::{log_info, util};
 
 #[cfg(feature = "pjrt")]
@@ -45,8 +47,6 @@ use specbatch::runtime::Runtime;
 use specbatch::scheduler::profiler::{profile, ProfilerConfig};
 #[cfg(feature = "pjrt")]
 use specbatch::util::csv::{f as fnum, Csv};
-#[cfg(feature = "pjrt")]
-use specbatch::util::json::Json;
 #[cfg(feature = "pjrt")]
 use specbatch::util::prng::Pcg64;
 
@@ -126,6 +126,66 @@ fn print_slo_line(slo: &SloSummary, deferrals: usize) {
         slo.deadlined,
         deferrals
     );
+}
+
+/// Resolve `--telemetry` into a live handle.  The default "auto" defers
+/// to `SPECBATCH_TELEMETRY` and falls back to off, so existing command
+/// lines keep the zero-overhead disabled handle.
+fn parse_telemetry(args: &Args) -> Result<Telemetry> {
+    let v = args.get("telemetry")?;
+    let mode = if v == "auto" {
+        TelemetryMode::default_mode()
+    } else {
+        TelemetryMode::parse(v)?
+    };
+    Ok(Telemetry::new(mode))
+}
+
+/// The `sim` knobs folded into the bench report's config fingerprint
+/// (shared by the single-worker and cluster branches).
+const SIM_CONFIG_KEYS: &[&str] = &[
+    "gpu", "llm", "ssm", "policy", "mode", "workers", "router", "requests", "interval", "cv",
+    "prompt-len", "kv-layout", "admission", "slo-p50", "slo-scale", "seed", "drift-at",
+    "drift-c", "drift-gamma",
+];
+
+/// Snapshot the experiment knobs into a stable JSON object for the bench
+/// report's config fingerprint (BTreeMap keys make it order-independent).
+fn cli_config_json(cmd: &str, args: &Args, keys: &[&str]) -> Json {
+    let mut pairs: Vec<(&str, Json)> = vec![("cmd", Json::Str(cmd.into()))];
+    for &k in keys {
+        if let Ok(v) = args.get(k) {
+            pairs.push((k, Json::Str(v.into())));
+        }
+    }
+    pairs.push(("fig6", Json::Bool(args.has_flag("fig6"))));
+    Json::obj(pairs)
+}
+
+/// Post-run telemetry output: write the enabled exporters under the
+/// `--telemetry-out` prefix and, when `--bench-out` names a figure, the
+/// `BENCH_<name>.json` report.  No-op (and prints nothing) when the
+/// handle is disabled, so default runs are byte-identical.
+fn finish_telemetry(
+    tel: &Telemetry,
+    prefix: &str,
+    bench_name: &str,
+    recorder: &LatencyRecorder,
+    rounds: &[RoundEvent],
+    config: Json,
+) -> Result<()> {
+    if !tel.enabled() {
+        return Ok(());
+    }
+    for path in telemetry::export::write_all(tel, prefix)? {
+        println!("telemetry -> {}", path.display());
+    }
+    if !bench_name.is_empty() {
+        let report = telemetry::bench::bench_report(bench_name, recorder, rounds, config);
+        let path = telemetry::bench::write_bench(bench_name, &report)?;
+        println!("bench -> {}", path.display());
+    }
+    Ok(())
 }
 
 #[cfg(not(feature = "pjrt"))]
@@ -422,7 +482,18 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
     .opt("seed", "1", "trace seed")
     .flag("fig6", "use the alternating intense/sparse pattern")
     .opt("out", "results/serve.csv", "per-request CSV")
-    .opt("rounds-out", "results/serve_rounds.csv", "per-round timeline CSV");
+    .opt("rounds-out", "results/serve_rounds.csv", "per-round timeline CSV")
+    .opt(
+        "telemetry",
+        "auto",
+        "off | summary | trace (auto = $SPECBATCH_TELEMETRY, else off)",
+    )
+    .opt(
+        "telemetry-out",
+        "results/serve_telemetry",
+        "exporter prefix (.prom / .trace.json / .events.jsonl)",
+    )
+    .opt("bench-out", "", "emit BENCH_<name>.json via telemetry::bench (empty = skip)");
     let args = spec.parse(&argv)?;
 
     let mode = parse_mode(args.get("mode")?)?;
@@ -455,6 +526,7 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
 
     let workers = args.get_usize("workers")?;
     let router = RouterSpec::parse(args.get("router")?)?;
+    let tel = parse_telemetry(&args)?;
     let cfg = ServerConfig {
         max_batch: args.get_usize("max-batch")?,
         max_new_tokens: args.get_usize("tokens")?,
@@ -463,6 +535,7 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         router,
         kv_layout: KvLayout::parse(args.get("kv-layout")?)?,
         admission: AdmissionSpec::parse(args.get("admission")?)?,
+        telemetry: tel.clone(),
         ..ServerConfig::default()
     };
     let policy = PolicySpec::parse(args.get("policy")?)?;
@@ -528,6 +601,21 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         specbatch::metrics::rounds_to_csv(&out.timeline).write_file(args.get("rounds-out")?)?;
         println!("rounds -> {}", args.get("rounds-out")?);
     }
+    finish_telemetry(
+        &tel,
+        args.get("telemetry-out")?,
+        args.get("bench-out")?,
+        &out.recorder,
+        &out.timeline,
+        cli_config_json(
+            "serve",
+            &args,
+            &[
+                "policy", "mode", "workers", "router", "requests", "interval", "cv", "tokens",
+                "max-batch", "kv-layout", "admission", "slo-p50", "slo-scale", "seed",
+            ],
+        ),
+    )?;
     Ok(())
 }
 
@@ -559,8 +647,20 @@ fn cmd_sim(argv: Vec<String>) -> Result<()> {
         .opt("drift-gamma", "0.2", "post-drift acceptance gamma")
         .flag("fig6", "use the alternating intense/sparse pattern")
         .opt("out", "results/sim.csv", "per-request CSV")
-        .opt("rounds-out", "results/sim_rounds.csv", "per-round timeline CSV");
+        .opt("rounds-out", "results/sim_rounds.csv", "per-round timeline CSV")
+        .opt(
+            "telemetry",
+            "auto",
+            "off | summary | trace (auto = $SPECBATCH_TELEMETRY, else off)",
+        )
+        .opt(
+            "telemetry-out",
+            "results/sim_telemetry",
+            "exporter prefix (.prom / .trace.json / .events.jsonl)",
+        )
+        .opt("bench-out", "", "emit BENCH_<name>.json via telemetry::bench (empty = skip)");
     let args = spec.parse(&argv)?;
+    let tel = parse_telemetry(&args)?;
     let mode = parse_mode(args.get("mode")?)?;
     let gpu_name = args.get("gpu")?.to_string();
     let gpu = GpuProfile::by_name(&gpu_name)
@@ -641,12 +741,13 @@ fn cmd_sim(argv: Vec<String>) -> Result<()> {
         let mut policies = replicate_policies(&policy_spec, lut.as_ref(), workers)?;
         let mut ctrls = replicate_controllers(admission, workers);
         let mut router = build_router(router_spec, args.get_u64("seed")?);
-        let report = simulate_trace_cluster_admission(
+        let report = simulate_trace_cluster_admission_tel(
             &cfg,
             &mut policies,
             &mut ctrls,
             router.as_mut(),
             &trace,
+            &tel,
         );
         let s = report.recorder.summary();
         let (p50, p90, p99) = report.recorder.percentiles();
@@ -705,6 +806,19 @@ fn cmd_sim(argv: Vec<String>) -> Result<()> {
             specbatch::metrics::rounds_to_csv(rounds).write_file(&path)?;
             println!("rounds (shard {k}) -> {path}");
         }
+        // bench reports want one merged timeline; shard clocks share the
+        // experiment origin, so a sort by round boundary suffices
+        let mut merged: Vec<RoundEvent> =
+            report.shard_rounds.iter().flatten().copied().collect();
+        merged.sort_by(|a, b| a.t.total_cmp(&b.t));
+        finish_telemetry(
+            &tel,
+            args.get("telemetry-out")?,
+            args.get("bench-out")?,
+            &report.recorder,
+            &merged,
+            cli_config_json("sim", &args, SIM_CONFIG_KEYS),
+        )?;
         return Ok(());
     }
 
@@ -725,15 +839,16 @@ fn cmd_sim(argv: Vec<String>) -> Result<()> {
     let mut ctrl = build_controller(admission);
     let (rec, rounds) = match mode {
         SchedulingMode::Static => (
-            simulate_trace_admission(&cfg, policy.as_mut(), ctrl.as_mut(), &trace),
+            simulate_trace_admission_tel(&cfg, policy.as_mut(), ctrl.as_mut(), &trace, &tel),
             Vec::new(),
         ),
         SchedulingMode::Continuous => {
-            let (rec, rounds) = simulate_trace_continuous_admission(
+            let (rec, rounds) = simulate_trace_continuous_admission_tel(
                 &cfg,
                 policy.as_mut(),
                 ctrl.as_mut(),
                 &trace,
+                &tel,
             );
             (rec, rounds)
         }
@@ -766,5 +881,13 @@ fn cmd_sim(argv: Vec<String>) -> Result<()> {
         specbatch::metrics::rounds_to_csv(&rounds).write_file(args.get("rounds-out")?)?;
         println!("rounds -> {}", args.get("rounds-out")?);
     }
+    finish_telemetry(
+        &tel,
+        args.get("telemetry-out")?,
+        args.get("bench-out")?,
+        &rec,
+        &rounds,
+        cli_config_json("sim", &args, SIM_CONFIG_KEYS),
+    )?;
     Ok(())
 }

@@ -161,10 +161,16 @@ impl LatencyRecorder {
         summary(&self.latencies())
     }
 
-    /// (p50, p90, p99) request latency.
+    /// (p50, p90, p99) request latency.  Well-defined on degenerate
+    /// runs: an empty recorder (or all-shed run) yields `(0, 0, 0)`
+    /// rather than NaN, and a single completed record yields that
+    /// record's latency for every percentile.
     pub fn percentiles(&self) -> (f64, f64, f64) {
         let mut l = self.latencies();
-        l.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        if l.is_empty() {
+            return (0.0, 0.0, 0.0);
+        }
+        l.sort_by(f64::total_cmp);
         (
             percentile_sorted(&l, 50.0),
             percentile_sorted(&l, 90.0),
@@ -251,7 +257,7 @@ impl LatencyRecorder {
             "shed",
         ]);
         let mut sorted = self.records.clone();
-        sorted.sort_by(|a, b| a.sent_at.partial_cmp(&b.sent_at).unwrap());
+        sorted.sort_by(|a, b| a.sent_at.total_cmp(&b.sent_at));
         for r in &sorted {
             csv.row(&[
                 r.id.to_string(),
@@ -341,11 +347,15 @@ pub struct TimelinePoint {
 
 /// Group completed requests into consecutive-`group_size` buckets by send
 /// time (Fig. 6 uses groups of 40).  Shed requests have no service
-/// latency and are skipped.
+/// latency and are skipped.  Degenerate inputs are well-defined: an
+/// empty record set or a zero `group_size` yields no points (a short run
+/// with fewer records than `group_size` yields one partial point).
 pub fn timeline_groups(records: &[RequestRecord], group_size: usize) -> Vec<TimelinePoint> {
-    assert!(group_size > 0);
+    if group_size == 0 {
+        return Vec::new();
+    }
     let mut sorted: Vec<&RequestRecord> = records.iter().filter(|r| !r.shed).collect();
-    sorted.sort_by(|a, b| a.sent_at.partial_cmp(&b.sent_at).unwrap());
+    sorted.sort_by(|a, b| a.sent_at.total_cmp(&b.sent_at));
     sorted
         .chunks(group_size)
         .map(|chunk| TimelinePoint {
@@ -480,6 +490,59 @@ mod tests {
         assert!((recd.summary().mean - clean_mean).abs() < 1e-12);
         assert!((recd.throughput_tokens_per_s() - clean_tput).abs() < 1e-12);
         assert!((recd.mean_per_token_latency() - clean_ptl).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles_are_well_defined_on_degenerate_runs() {
+        // empty recorder: zeros, not NaN
+        assert_eq!(LatencyRecorder::new().percentiles(), (0.0, 0.0, 0.0));
+        // all-shed run behaves like empty (no completed latencies)
+        let mut all_shed = LatencyRecorder::new();
+        all_shed.push(shed_rec(1, 0.0, 0.4, 0.3));
+        assert_eq!(all_shed.percentiles(), (0.0, 0.0, 0.0));
+
+        // single record: every percentile is that record's latency
+        let mut one = LatencyRecorder::new();
+        one.push(rec(1, 0.0, 0.0, 2.5));
+        assert_eq!(one.percentiles(), (2.5, 2.5, 2.5));
+
+        // two records (latencies 1.0 and 3.0): linear interpolation
+        let mut two = LatencyRecorder::new();
+        two.push(rec(1, 0.0, 0.0, 1.0));
+        two.push(rec(2, 0.0, 0.0, 3.0));
+        let (p50, p90, p99) = two.percentiles();
+        assert!((p50 - 2.0).abs() < 1e-12);
+        assert!((p90 - 2.8).abs() < 1e-12);
+        assert!((p99 - 2.98).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles_pinned_on_100_element_run() {
+        // latencies 1..=100 seconds
+        let mut r = LatencyRecorder::new();
+        for i in 1..=100u64 {
+            r.push(rec(i, 0.0, 0.0, i as f64));
+        }
+        let (p50, p90, p99) = r.percentiles();
+        // interpolated index q/100 * 99 over sorted [1, 100]
+        assert!((p50 - 50.5).abs() < 1e-9, "p50 {p50}");
+        assert!((p90 - 90.1).abs() < 1e-9, "p90 {p90}");
+        assert!((p99 - 99.01).abs() < 1e-9, "p99 {p99}");
+    }
+
+    #[test]
+    fn timeline_groups_degenerate_inputs() {
+        // zero group size: no points rather than a panic
+        assert!(timeline_groups(&[rec(1, 0.0, 0.0, 1.0)], 0).is_empty());
+        // empty input
+        assert!(timeline_groups(&[], 40).is_empty());
+        // fewer records than the group size: one partial point
+        let pts = timeline_groups(&[rec(1, 0.0, 0.0, 1.0)], 40);
+        assert_eq!(pts.len(), 1);
+        assert_eq!(pts[0].n, 1);
+        assert!((pts[0].mean_latency - 1.0).abs() < 1e-12);
+        // all-shed input yields no points
+        assert!(timeline_groups(&[shed_rec(1, 0.0, 0.4, 0.3)], 40).is_empty());
     }
 
     #[test]

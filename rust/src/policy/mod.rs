@@ -652,12 +652,33 @@ impl SpeculationPolicy for ModelBased {
                 .map(|(b, s)| (b.to_string(), Json::Num(*s as f64)))
                 .collect(),
         );
+        let probes = Json::Obj(
+            self.rounds_seen
+                .iter()
+                .map(|(b, n)| (b.to_string(), Json::Num(*n as f64)))
+                .collect(),
+        );
         Some(Json::obj(vec![
             ("policy", Json::Str("model-based".into())),
             ("samples", Json::Num(self.accept_samples.len() as f64)),
+            ("observes", Json::Num(self.observes as f64)),
             ("acceptance", acceptance),
             ("buckets", buckets),
             ("chosen_s", chosen),
+            ("rounds_seen", probes),
+            ("explore_every", Json::Num(self.cfg.explore_every as f64)),
+            (
+                "cusum",
+                Json::obj(vec![
+                    ("pos", Json::Num(self.cusum_pos)),
+                    ("neg", Json::Num(self.cusum_neg)),
+                    (
+                        "resid_var",
+                        self.resid_var.map_or(Json::Null, Json::Num),
+                    ),
+                    ("flush_reprobe", Json::Bool(self.flush_reprobe)),
+                ]),
+            ),
             ("drift_flushes", Json::Num(self.drift_flushes as f64)),
         ]))
     }
@@ -1027,5 +1048,15 @@ mod tests {
         assert!(snap.get("acceptance").unwrap().get_opt("c").unwrap().is_some());
         let txt = snap.compact();
         assert!(txt.contains("\"buckets\""), "{txt}");
+        // the telemetry additions: probe/CUSUM state ride along
+        assert_eq!(snap.get("observes").unwrap().as_usize().unwrap(), 200);
+        assert_eq!(
+            snap.get("rounds_seen").unwrap().get("1").unwrap().as_usize().unwrap(),
+            200
+        );
+        assert_eq!(snap.get("explore_every").unwrap().as_usize().unwrap(), 16);
+        let cusum = snap.get("cusum").unwrap();
+        assert!(cusum.get("pos").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(!cusum.get("flush_reprobe").unwrap().as_bool().unwrap());
     }
 }

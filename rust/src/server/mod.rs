@@ -31,7 +31,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::admission::{apply_plan_to_queue, build_controller, AdmissionView, Candidate};
+use crate::admission::{
+    apply_plan_to_queue, build_controller, predicted_finish, AdmissionView, Candidate,
+};
 use crate::batcher::{BatchRequest, BatcherConfig, ContinuousBatcher, ShedRequest};
 use crate::cluster::server::ShardGauge;
 use crate::cluster::ShardBreakdown;
@@ -47,6 +49,7 @@ use crate::runtime::Runtime;
 use crate::scheduler::profiler::{profile, ProfilerConfig};
 use crate::scheduler::Lut;
 use crate::simulator::{simulated_lut, CostModel, GpuProfile, ModelProfile, SimConfig};
+use crate::telemetry::Telemetry;
 use crate::testkit::stub::StubSpec;
 use crate::traffic::Trace;
 use crate::util::json::Json;
@@ -98,6 +101,11 @@ pub struct ServerConfig {
     /// `SPECBATCH_ADMISSION` env override, else FIFO (with no deadlines
     /// on the requests every controller behaves exactly like FIFO)
     pub admission: AdmissionSpec,
+    /// observability handle the worker's engine (and, `workers > 1`, the
+    /// dispatcher and every shard's engine via [`Telemetry::for_shard`])
+    /// emit on.  Defaults to the disabled handle: every emitter is an
+    /// early-return on a `None` arc, so the hot path pays nothing
+    pub telemetry: Telemetry,
 }
 
 impl Default for ServerConfig {
@@ -112,6 +120,7 @@ impl Default for ServerConfig {
             router: RouterSpec::RoundRobin,
             kv_layout: KvLayout::default_layout(),
             admission: AdmissionSpec::default_spec(),
+            telemetry: Telemetry::disabled(),
         }
     }
 }
@@ -331,6 +340,7 @@ pub(crate) fn worker(
               mut policy: Box<dyn SpeculationPolicy>,
               lut_used: Option<Lut>|
      -> Result<()> {
+        engine.set_telemetry(cfg.telemetry.clone());
         lut_tx
             .send(lut_used)
             .map_err(|_| anyhow!("server handle dropped before ready"))?;
@@ -442,6 +452,7 @@ fn serve_static(
     resp_tx: &Sender<ServerResponse>,
 ) -> Result<(Vec<RoundEvent>, usize, usize)> {
     let mut ctrl = build_controller(cfg.admission);
+    let tel = cfg.telemetry.clone();
     let mut timeline: Vec<RoundEvent> = Vec::new();
     // (request, boundaries it has been deferred at)
     let mut pending: Vec<(ServerRequest, usize)> = Vec::new();
@@ -495,8 +506,23 @@ fn serve_static(
         let backlog: Vec<(ServerRequest, usize)> = pending.drain(..).collect();
         let out = apply_plan_to_queue(ctrl.plan(&candidates, &view), backlog, 0, |p| p.1 += 1);
         deferrals += out.deferred;
+        // predicted deadline slack on the experiment clock (events are
+        // stamped on the telemetry clock, like the engine's)
+        let pred_fin = if tel.enabled() {
+            predicted_finish(&*policy, now, cfg.max_new_tokens, out.queue.len(), cfg.max_batch)
+        } else {
+            None
+        };
+        let slack = |d: Option<f64>| match (d, pred_fin) {
+            (Some(d), Some(f)) => Some(d - f),
+            _ => None,
+        };
         for (r, deferred) in out.shed {
             sheds += 1;
+            if tel.enabled() {
+                tel.admission(tel.now(), r.id, "shed", r.deadline, slack(r.deadline), deferred);
+                tel.finish(tel.now(), r.id, 0, true, r.deadline.map(|d| d - now));
+            }
             let resp = shed_response(ShedRequest {
                 id: r.id,
                 sent_at: r.sent_at,
@@ -512,6 +538,12 @@ fn serve_static(
         // admits, then defers, stay pending in order — each keeping its
         // deferral count
         let n_batch = out.admit_n.min(cfg.max_batch);
+        if tel.enabled() {
+            for (i, (r, deferred)) in out.queue.iter().enumerate() {
+                let verdict = if i < n_batch { "admit" } else { "defer" };
+                tel.admission(tel.now(), r.id, verdict, r.deadline, slack(r.deadline), *deferred);
+            }
+        }
         let mut rest = out.queue;
         let batch: Vec<(ServerRequest, usize)> = rest.drain(..n_batch).collect();
         pending.extend(rest);
@@ -519,6 +551,7 @@ fn serve_static(
             continue;
         }
         batch_idx += 1;
+        engine.set_round_context(batch_idx, pending.len());
         let started_at = epoch.elapsed().as_secs_f64();
         let prompts: Vec<Vec<i32>> = batch.iter().map(|(r, _)| r.prompt.clone()).collect();
         let out = engine.generate_batch(&prompts, cfg.max_new_tokens, policy)?;
@@ -542,8 +575,20 @@ fn serve_static(
                 kv_blocks: 0,
             });
         }
+        if tel.tracing() {
+            tel.policy_fit(tel.now(), policy.snapshot());
+        }
         let spec_len = out.stats.spec_lens.first().copied().unwrap_or(0);
         for ((req, deferred), tokens) in batch.into_iter().zip(out.tokens) {
+            if tel.enabled() {
+                tel.finish(
+                    tel.now(),
+                    req.id,
+                    tokens.len(),
+                    false,
+                    req.deadline.map(|d| d - finished_at),
+                );
+            }
             let resp = ServerResponse {
                 id: req.id,
                 tokens,

@@ -43,6 +43,7 @@ use crate::admission::{
 use crate::kvcache::{KvLayout, DEFAULT_BLOCK_SIZE};
 use crate::metrics::{LatencyRecorder, RequestRecord, RoundEvent};
 use crate::policy::{RoundFeedback, SpeculationPolicy};
+use crate::telemetry::{PhaseKind, Telemetry};
 use crate::traffic::{Trace, TraceItem};
 use crate::util::prng::Pcg64;
 
@@ -185,6 +186,35 @@ pub fn batch_service_time(
     start_t: f64,
     rng: &mut Pcg64,
 ) -> (f64, usize, usize) {
+    batch_service_time_tel(
+        cfg,
+        policy,
+        prompt_lens,
+        start_t,
+        rng,
+        &Telemetry::disabled(),
+        0,
+        0,
+    )
+}
+
+/// [`batch_service_time`] with an event stream: round spans, phase spans
+/// and counters land on `tel` in **virtual time** (`start_t`-anchored),
+/// under the same schema the threaded engine emits in wall time.
+/// `epoch`/`queued` label the round spans; emission consumes no
+/// randomness, so a disabled handle reproduces [`batch_service_time`]
+/// bit for bit.
+#[allow(clippy::too_many_arguments)]
+pub fn batch_service_time_tel(
+    cfg: &SimConfig,
+    policy: &mut dyn SpeculationPolicy,
+    prompt_lens: &[usize],
+    start_t: f64,
+    rng: &mut Pcg64,
+    tel: &Telemetry,
+    epoch: usize,
+    queued: usize,
+) -> (f64, usize, usize) {
     let b = prompt_lens.len();
     assert!(b >= 1);
     let mean_prompt = prompt_lens.iter().sum::<usize>() as f64 / b as f64;
@@ -194,6 +224,9 @@ pub fn batch_service_time(
     let mut t = cfg.llm.t_prefill(b, mean_prompt.ceil() as usize);
     if may_speculate {
         t += cfg.ssm.t_prefill(b, mean_prompt.ceil() as usize);
+    }
+    if tel.enabled() {
+        tel.phase(start_t, t, PhaseKind::Prefill);
     }
 
     // prefill commits one token per row
@@ -228,7 +261,19 @@ pub fn batch_service_time(
                 }
             }
         }
+        let t_round = start_t + t;
         t += rc;
+        if tel.enabled() {
+            let kvb = kv_blocks_of(
+                cfg,
+                prompt_lens
+                    .iter()
+                    .zip(generated.iter())
+                    .map(|(&p, &g)| p + g.min(cfg.max_new_tokens)),
+            );
+            tel.round(t_round, rc, epoch, live, queued, s, committed, &accepted_rows, kvb);
+            emit_round_phases(cfg, tel, t_round, rc, b, s, ctx);
+        }
         policy.observe(&RoundFeedback {
             live,
             // the static batch keeps executing at its admitted width
@@ -242,6 +287,36 @@ pub fn batch_service_time(
     }
     let tokens: usize = generated.iter().map(|&g| g.min(cfg.max_new_tokens)).sum();
     (t, tokens, first_spec_len.unwrap_or(0))
+}
+
+/// Decompose one simulated round into draft/verify/accept phase spans —
+/// the virtual-time twin of the engine's stopwatch-delta decomposition.
+/// The three spans tile `[t_round, t_round + rc]` exactly: accept is the
+/// remainder (host overhead) after the modeled draft and verify costs.
+/// Shared with the cluster mirror (`cluster::sim`).
+pub(crate) fn emit_round_phases(
+    cfg: &SimConfig,
+    tel: &Telemetry,
+    t_round: f64,
+    rc: f64,
+    b: usize,
+    s: usize,
+    ctx: usize,
+) {
+    let draft = if s == 0 {
+        0.0
+    } else {
+        s as f64 * cfg.ssm.t_draft(b, ctx)
+    };
+    let verify = cfg.llm.t_verify(b, s, ctx);
+    let mut pt = t_round;
+    if draft > 0.0 {
+        tel.phase(pt, draft, PhaseKind::Draft);
+        pt += draft;
+    }
+    tel.phase(pt, verify, PhaseKind::Verify);
+    pt += verify;
+    tel.phase(pt, (rc - (pt - t_round)).max(0.0), PhaseKind::Accept);
 }
 
 /// Simulate a full trace through the single-server FIFO queue
@@ -290,12 +365,29 @@ pub fn simulate_trace_admission(
     ctrl: &mut dyn AdmissionController,
     trace: &Trace,
 ) -> LatencyRecorder {
+    simulate_trace_admission_tel(cfg, policy, ctrl, trace, &Telemetry::disabled())
+}
+
+/// [`simulate_trace_admission`] with an event stream on `tel`: admission
+/// verdicts, round/phase spans (via [`batch_service_time_tel`]) and
+/// terminal finish/shed events, all stamped in **virtual time** under the
+/// same schema the threaded server emits in wall time.  Emission consumes
+/// no randomness: a disabled handle reproduces the plain entry point bit
+/// for bit.
+pub fn simulate_trace_admission_tel(
+    cfg: &SimConfig,
+    policy: &mut dyn SpeculationPolicy,
+    ctrl: &mut dyn AdmissionController,
+    trace: &Trace,
+    tel: &Telemetry,
+) -> LatencyRecorder {
     let mut rng = Pcg64::with_stream(cfg.seed, 0x5e5);
     let mut recorder = LatencyRecorder::new();
     let items = &trace.items;
     let mut next = 0usize; // first unarrived request
     let mut waiting: VecDeque<Waiting> = VecDeque::new();
     let mut free_at = 0.0f64; // server availability
+    let mut epoch = 0usize; // one epoch per formed batch
 
     while next < items.len() || !waiting.is_empty() {
         // the server starts the next batch when it is free AND at least
@@ -342,6 +434,27 @@ pub fn simulate_trace_admission(
         // the admissible prefix forms the batch (capped); the rest —
         // over-capacity admits, then defers — stays queued in order
         let n_batch = out.admit_n.min(cfg.max_batch);
+        if tel.enabled() {
+            let fin = crate::admission::predicted_finish(
+                policy,
+                start,
+                cfg.max_new_tokens,
+                out.queue.len(),
+                cfg.max_batch,
+            );
+            let slack = |d: Option<f64>| match (d, fin) {
+                (Some(d), Some(f)) => Some(d - f),
+                _ => None,
+            };
+            for w in &out.shed {
+                tel.admission(start, w.item.id, "shed", w.item.deadline, slack(w.item.deadline), w.deferred);
+                tel.finish(start, w.item.id, 0, true, w.item.deadline.map(|d| d - start));
+            }
+            for (i, w) in out.queue.iter().enumerate() {
+                let verdict = if i < n_batch { "admit" } else { "defer" };
+                tel.admission(start, w.item.id, verdict, w.item.deadline, slack(w.item.deadline), w.deferred);
+            }
+        }
         let mut rest = out.queue;
         let batch: Vec<Waiting> = rest.drain(..n_batch).collect();
         waiting.extend(rest);
@@ -350,11 +463,29 @@ pub fn simulate_trace_admission(
             // on the next arrival
             continue;
         }
+        epoch += 1;
         let prompt_lens: Vec<usize> = batch.iter().map(|w| w.item.prompt.ids.len()).collect();
-        let (dur, _tokens, spec_len) =
-            batch_service_time(cfg, policy, &prompt_lens, start, &mut rng);
+        let (dur, _tokens, spec_len) = batch_service_time_tel(
+            cfg,
+            policy,
+            &prompt_lens,
+            start,
+            &mut rng,
+            tel,
+            epoch,
+            waiting.len(),
+        );
         let finish = start + dur;
         for w in &batch {
+            if tel.enabled() {
+                tel.finish(
+                    finish,
+                    w.item.id,
+                    cfg.max_new_tokens,
+                    false,
+                    w.item.deadline.map(|d| d - finish),
+                );
+            }
             recorder.push(RequestRecord {
                 id: w.item.id,
                 sent_at: w.item.send_at,
@@ -368,6 +499,9 @@ pub fn simulate_trace_admission(
                 deferred_rounds: w.deferred,
                 shed: false,
             });
+        }
+        if tel.tracing() {
+            tel.policy_fit(finish, policy.snapshot());
         }
         free_at = finish;
     }
@@ -398,6 +532,24 @@ pub fn simulate_trace_continuous_admission(
     policy: &mut dyn SpeculationPolicy,
     ctrl: &mut dyn AdmissionController,
     trace: &Trace,
+) -> (LatencyRecorder, Vec<RoundEvent>) {
+    simulate_trace_continuous_admission_tel(cfg, policy, ctrl, trace, &Telemetry::disabled())
+}
+
+/// [`simulate_trace_continuous_admission`] with an event stream on `tel`:
+/// per-round spans with draft/verify/accept phase decomposition,
+/// prefill/reshape charges as phase spans, admission verdicts with
+/// predicted deadline slack, policy-fit snapshots (trace mode) and one
+/// terminal finish-or-shed event per request — all stamped in **virtual
+/// time** under the same schema the threaded batcher emits in wall time.
+/// Emission consumes no randomness: a disabled handle reproduces the
+/// plain entry point bit for bit.
+pub fn simulate_trace_continuous_admission_tel(
+    cfg: &SimConfig,
+    policy: &mut dyn SpeculationPolicy,
+    ctrl: &mut dyn AdmissionController,
+    trace: &Trace,
+    tel: &Telemetry,
 ) -> (LatencyRecorder, Vec<RoundEvent>) {
     struct SimRow {
         id: u64,
@@ -474,6 +626,27 @@ pub fn simulate_trace_continuous_admission(
             for w in &out.shed {
                 push_shed(&mut recorder, w, t);
             }
+            if tel.enabled() {
+                let fin = crate::admission::predicted_finish(
+                    policy,
+                    t,
+                    cfg.max_new_tokens,
+                    live.len() + out.queue.len(),
+                    cfg.max_batch,
+                );
+                let slack = |d: Option<f64>| match (d, fin) {
+                    (Some(d), Some(f)) => Some(d - f),
+                    _ => None,
+                };
+                for w in &out.shed {
+                    tel.admission(t, w.item.id, "shed", w.item.deadline, slack(w.item.deadline), w.deferred);
+                    tel.finish(t, w.item.id, 0, true, w.item.deadline.map(|d| d - t));
+                }
+                for (i, w) in out.queue.iter().enumerate() {
+                    let verdict = if i < out.admit_n { "admit" } else { "defer" };
+                    tel.admission(t, w.item.id, verdict, w.item.deadline, slack(w.item.deadline), w.deferred);
+                }
+            }
             waiting = out.queue.into();
             out.admit_n
         };
@@ -506,9 +679,13 @@ pub fn simulate_trace_continuous_admission(
         }
         if n_admit > 0 {
             let mean_plen = (plen_sum as f64 / n_admit as f64).ceil() as usize;
+            let t_pre = t;
             t += cfg.llm.t_prefill(n_admit, mean_plen);
             if may_speculate {
                 t += cfg.ssm.t_prefill(n_admit, mean_plen);
+            }
+            if tel.enabled() {
+                tel.phase(t_pre, t - t_pre, PhaseKind::Prefill);
             }
             // epoch reshape: bucket growth carries the resident rows —
             // O(context) re-ingest under Dense, O(1) remap under Paged.
@@ -521,7 +698,11 @@ pub fn simulate_trace_continuous_admission(
                     .iter()
                     .map(|r| r.plen + r.generated)
                     .collect();
-                t += reshape_cost(cfg, &carried, live.len());
+                let rcst = reshape_cost(cfg, &carried, live.len());
+                if tel.enabled() {
+                    tel.phase(t, rcst, PhaseKind::Reshape);
+                }
+                t += rcst;
             }
             cur_bucket = cur_bucket.max(want);
             let b = live.len();
@@ -553,16 +734,18 @@ pub fn simulate_trace_continuous_admission(
                 committed += a + 1;
             }
         }
+        let t_round = t;
         t += rc;
         let accepted_total: usize = accepted_rows.iter().map(|&a| a as usize).sum();
-        policy.observe(&RoundFeedback {
+        let fb = RoundFeedback {
             live: b,
             width: b, // continuous rounds execute at exactly the live width
             s,
             accepted: accepted_rows,
             committed,
             round_time: rc,
-        });
+        };
+        policy.observe(&fb);
         // arrivals during the round join the queue now, so the timeline's
         // queue column reflects the post-round backlog
         while next < items.len() && items[next].send_at <= t {
@@ -572,6 +755,7 @@ pub fn simulate_trace_continuous_admission(
             });
             next += 1;
         }
+        let kvb = kv_blocks_of(cfg, live.iter().map(|r| r.plen + r.generated));
         rounds.push(RoundEvent {
             t,
             epoch,
@@ -580,14 +764,30 @@ pub fn simulate_trace_continuous_admission(
             s,
             accepted: accepted_total,
             round_cost: rc,
-            kv_blocks: kv_blocks_of(cfg, live.iter().map(|r| r.plen + r.generated)),
+            kv_blocks: kvb,
         });
+        if tel.enabled() {
+            tel.round(t_round, rc, epoch, b, waiting.len(), s, committed, &fb.accepted, kvb);
+            emit_round_phases(cfg, tel, t_round, rc, b, s, ctx);
+            if tel.tracing() {
+                tel.policy_fit(t, policy.snapshot());
+            }
+        }
 
         // --- retire finished rows immediately, freeing capacity ---
         let mut i = 0;
         while i < live.len() {
             if live[i].generated >= cfg.max_new_tokens {
                 let row = live.swap_remove(i);
+                if tel.enabled() {
+                    tel.finish(
+                        t,
+                        row.id,
+                        cfg.max_new_tokens,
+                        false,
+                        row.deadline.map(|d| d - t),
+                    );
+                }
                 recorder.push(RequestRecord {
                     id: row.id,
                     sent_at: row.sent_at,

@@ -1,0 +1,276 @@
+//! Machine-readable bench trajectory: `BENCH_<name>.json` emission.
+//!
+//! ROADMAP item 5 asks for a perf *trajectory* — a number CI can chart
+//! per commit, not a table that scrolls out of the log.  Every figure
+//! bench and the DES drivers funnel their run through [`bench_report`] +
+//! [`write_bench`], producing one JSON per bench with the serving
+//! metrics that matter (per-token latency distribution, throughput,
+//! rounds/s, acceptance, SLO attainment), a config fingerprint so runs
+//! are only compared like-for-like, and the git SHA so the trajectory
+//! is attributable.
+//!
+//! The latency/throughput fields are derived from the *same*
+//! `LatencyRecorder`/`RoundEvent` data the experiment reports, so the
+//! JSON always agrees with the run's `ExperimentOutcome` (pinned by
+//! `rust/tests/telemetry.rs`).
+
+use crate::metrics::{LatencyRecorder, RoundEvent};
+use crate::util::json::Json;
+use crate::util::stats::percentile_sorted;
+
+/// FNV-1a 64-bit over the compact serialization: a stable fingerprint a
+/// CI chart can group runs by (same fingerprint ⇒ comparable numbers).
+pub fn config_fingerprint(config: &Json) -> String {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in config.compact().as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    format!("{h:016x}")
+}
+
+/// Best-effort commit id: `SPECBATCH_GIT_SHA` / `GITHUB_SHA` env (what CI
+/// sets), else `.git/HEAD` resolved by hand (no subprocess — the offline
+/// container has no guarantee of a `git` binary on PATH), else "unknown".
+pub fn git_sha() -> String {
+    for var in ["SPECBATCH_GIT_SHA", "GITHUB_SHA"] {
+        if let Ok(v) = std::env::var(var) {
+            let v = v.trim().to_string();
+            if !v.is_empty() {
+                return v;
+            }
+        }
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    for _ in 0..5 {
+        let head = dir.join(".git/HEAD");
+        if let Ok(text) = std::fs::read_to_string(&head) {
+            let text = text.trim();
+            if let Some(r) = text.strip_prefix("ref: ") {
+                if let Ok(sha) = std::fs::read_to_string(dir.join(".git").join(r.trim())) {
+                    return sha.trim().to_string();
+                }
+                return "unknown".into();
+            }
+            return text.to_string();
+        }
+        if !dir.pop() {
+            break;
+        }
+    }
+    "unknown".into()
+}
+
+/// Build the `BENCH_<name>.json` document from a finished run.
+///
+/// * per-token latency: each completed request's end-to-end latency over
+///   its generated tokens — `mean` is exactly
+///   [`LatencyRecorder::mean_per_token_latency`], `p50`/`p99` are the
+///   request-level distribution;
+/// * `tokens_per_s`: [`LatencyRecorder::throughput_tokens_per_s`];
+/// * `rounds_per_s` / `accepted_per_round`: from the round timeline
+///   (each `RoundEvent.t` is the round's *end*, so the span starts at
+///   `first.t - first.round_cost`);
+/// * `slo`: the attainment accounting, sheds included;
+/// * `config` + `config_fingerprint` + `git_sha`: provenance.
+pub fn bench_report(
+    name: &str,
+    recorder: &LatencyRecorder,
+    rounds: &[RoundEvent],
+    config: Json,
+) -> Json {
+    let mut per_token: Vec<f64> = recorder
+        .completed()
+        .map(|r| r.latency() / r.tokens.max(1) as f64)
+        .collect();
+    per_token.sort_by(f64::total_cmp);
+    let (span, accepted_mean) = match (rounds.first(), rounds.last()) {
+        (Some(first), Some(last)) => (
+            (last.t - first.t) + first.round_cost,
+            rounds.iter().map(|r| r.accepted as f64).sum::<f64>() / rounds.len() as f64,
+        ),
+        _ => (0.0, 0.0),
+    };
+    let rounds_per_s = if span > 0.0 {
+        rounds.len() as f64 / span
+    } else {
+        0.0
+    };
+    let slo = recorder.slo_attainment();
+    Json::obj(vec![
+        ("name", Json::Str(name.into())),
+        ("requests", Json::Num(recorder.len() as f64)),
+        ("completed", Json::Num(slo.completed as f64)),
+        ("shed", Json::Num(slo.shed as f64)),
+        (
+            "per_token_latency_s",
+            Json::obj(vec![
+                ("mean", Json::Num(recorder.mean_per_token_latency())),
+                ("p50", Json::Num(percentile_sorted(&per_token, 50.0))),
+                ("p99", Json::Num(percentile_sorted(&per_token, 99.0))),
+            ]),
+        ),
+        (
+            "tokens_per_s",
+            Json::Num(recorder.throughput_tokens_per_s()),
+        ),
+        ("rounds", Json::Num(rounds.len() as f64)),
+        ("rounds_per_s", Json::Num(rounds_per_s)),
+        ("accepted_per_round", Json::Num(accepted_mean)),
+        (
+            "slo",
+            Json::obj(vec![
+                ("deadlined", Json::Num(slo.deadlined as f64)),
+                ("met", Json::Num(slo.met as f64)),
+                ("missed", Json::Num(slo.missed as f64)),
+                ("attainment", Json::Num(slo.attainment())),
+            ]),
+        ),
+        ("config_fingerprint", Json::Str(config_fingerprint(&config))),
+        ("config", config),
+        ("git_sha", Json::Str(git_sha())),
+    ])
+}
+
+/// Build a `BENCH_<name>.json` document for a bench with no request
+/// recorder (latency grids, acceptance curves, microbenchmarks): the
+/// caller supplies its headline numbers as a `metrics` object and gets
+/// the same provenance fields (`config_fingerprint`, `config`,
+/// `git_sha`) as [`bench_report`], so the CI trajectory can chart every
+/// bench uniformly.
+pub fn bench_report_custom(name: &str, metrics: Json, config: Json) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str(name.into())),
+        ("metrics", metrics),
+        ("config_fingerprint", Json::Str(config_fingerprint(&config))),
+        ("config", config),
+        ("git_sha", Json::Str(git_sha())),
+    ])
+}
+
+/// Directory `BENCH_*.json` files land in: `SPECBATCH_RESULTS_DIR` when
+/// set (the benches point it at `rust/results/`), else `results/`.
+pub fn bench_dir() -> std::path::PathBuf {
+    std::env::var("SPECBATCH_RESULTS_DIR")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("results"))
+}
+
+/// Write `BENCH_<name>.json`; returns the path.
+pub fn write_bench(name: &str, report: &Json) -> anyhow::Result<std::path::PathBuf> {
+    let dir = bench_dir();
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!("BENCH_{name}.json"));
+    report.write_file(&path)?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::RequestRecord;
+
+    fn rec(id: u64, sent: f64, fin: f64, tokens: usize) -> RequestRecord {
+        RequestRecord {
+            id,
+            sent_at: sent,
+            started_at: sent,
+            finished_at: fin,
+            tokens,
+            batch: 1,
+            spec_len: 3,
+            shard: 0,
+            deadline: None,
+            deferred_rounds: 0,
+            shed: false,
+        }
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_order_insensitive() {
+        let a = Json::obj(vec![("x", Json::Num(1.0)), ("y", Json::Num(2.0))]);
+        let b = Json::obj(vec![("y", Json::Num(2.0)), ("x", Json::Num(1.0))]);
+        // BTreeMap keys sort, so key order in the source cannot split runs
+        assert_eq!(config_fingerprint(&a), config_fingerprint(&b));
+        let c = Json::obj(vec![("x", Json::Num(1.5)), ("y", Json::Num(2.0))]);
+        assert_ne!(config_fingerprint(&a), config_fingerprint(&c));
+        assert_eq!(config_fingerprint(&a).len(), 16);
+    }
+
+    #[test]
+    fn report_fields_match_the_recorder() {
+        let mut r = LatencyRecorder::new();
+        r.push(rec(1, 0.0, 1.0, 10)); // 0.1 s/token
+        r.push(rec(2, 1.0, 4.0, 10)); // 0.3 s/token
+        let rounds = vec![
+            RoundEvent {
+                t: 0.5,
+                epoch: 1,
+                live: 2,
+                queued: 0,
+                s: 3,
+                accepted: 4,
+                round_cost: 0.5,
+                kv_blocks: 0,
+            },
+            RoundEvent {
+                t: 1.0,
+                epoch: 1,
+                live: 2,
+                queued: 0,
+                s: 3,
+                accepted: 2,
+                round_cost: 0.5,
+                kv_blocks: 0,
+            },
+        ];
+        let cfg = Json::obj(vec![("max_batch", Json::Num(8.0))]);
+        let doc = bench_report("unit", &r, &rounds, cfg);
+        assert_eq!(doc.get("name").unwrap().as_str().unwrap(), "unit");
+        assert_eq!(doc.get("requests").unwrap().as_usize().unwrap(), 2);
+        let ptl = doc.get("per_token_latency_s").unwrap();
+        assert!(
+            (ptl.get("mean").unwrap().as_f64().unwrap()
+                - r.mean_per_token_latency())
+            .abs()
+                < 1e-12
+        );
+        assert!((ptl.get("p50").unwrap().as_f64().unwrap() - 0.2).abs() < 1e-12);
+        assert!(
+            (doc.get("tokens_per_s").unwrap().as_f64().unwrap()
+                - r.throughput_tokens_per_s())
+            .abs()
+                < 1e-12
+        );
+        // 2 rounds over span (1.0 - 0.5) + 0.5 = 1.0 s
+        assert!((doc.get("rounds_per_s").unwrap().as_f64().unwrap() - 2.0).abs() < 1e-12);
+        assert!(
+            (doc.get("accepted_per_round").unwrap().as_f64().unwrap() - 3.0).abs() < 1e-12
+        );
+        assert!(!doc
+            .get("config_fingerprint")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .is_empty());
+        assert!(!doc.get("git_sha").unwrap().as_str().unwrap().is_empty());
+        // empty round list degrades to zeros, not NaN/panic
+        let empty = bench_report("unit", &r, &[], Json::Null);
+        assert_eq!(empty.get("rounds_per_s").unwrap().as_f64().unwrap(), 0.0);
+    }
+
+    #[test]
+    fn write_bench_lands_in_the_results_dir() {
+        let dir = std::env::temp_dir().join("specbatch_bench_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        // env-var mutation is racy across test threads; call the
+        // internals directly against an explicit dir instead.
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_unit.json");
+        let doc = bench_report("unit", &LatencyRecorder::new(), &[], Json::Null);
+        doc.write_file(&path).unwrap();
+        let back = Json::parse_file(&path).unwrap();
+        assert_eq!(back.get("name").unwrap().as_str().unwrap(), "unit");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,393 @@
+//! Telemetry exporters: Chrome `trace_event` JSON, Prometheus text
+//! exposition, and JSONL event dumps.
+//!
+//! The Chrome trace loads directly in Perfetto (`ui.perfetto.dev`) or
+//! `chrome://tracing`.  Track layout: one *process* per shard (`pid` =
+//! shard index), with four *threads* per shard —
+//!
+//! | tid | track          | events                                  |
+//! |-----|----------------|-----------------------------------------|
+//! | 0   | rounds         | `ph:"X"` complete spans, one per round  |
+//! | 1   | phases         | `ph:"X"` draft/verify/accept/… sub-spans|
+//! | 2   | requests       | `ph:"i"` admission/finish/route instants|
+//! | 3   | policy         | `ph:"i"` policy-fit snapshots           |
+//!
+//! KV-pool samples become `ph:"C"` counter events so Perfetto renders a
+//! utilization track.  Timestamps are microseconds (`ts = t * 1e6`) on
+//! whichever clock produced the events — virtual time for the DES,
+//! wall time for the threaded server — the schema is identical.
+
+use super::{Event, EventKind, Histogram, Registry, Telemetry};
+use crate::util::json::Json;
+
+const TID_ROUND: usize = 0;
+const TID_PHASE: usize = 1;
+const TID_REQUEST: usize = 2;
+const TID_POLICY: usize = 3;
+
+fn us(t: f64) -> Json {
+    Json::Num((t * 1e6).round())
+}
+
+fn trace_record(
+    name: &str,
+    ph: &str,
+    ev: &Event,
+    tid: usize,
+    args: Vec<(&str, Json)>,
+) -> Json {
+    let mut pairs = vec![
+        ("name", Json::Str(name.into())),
+        ("ph", Json::Str(ph.into())),
+        ("ts", us(ev.t)),
+        ("pid", Json::Num(ev.shard as f64)),
+        ("tid", Json::Num(tid as f64)),
+        ("args", Json::obj(args)),
+    ];
+    if ph == "X" {
+        pairs.push(("dur", us(ev.dur)));
+    }
+    if ph == "i" {
+        // thread-scoped instant: renders as a tick on its own track
+        pairs.push(("s", Json::Str("t".into())));
+    }
+    Json::obj(pairs)
+}
+
+/// Render an event list as a Chrome `trace_event` document
+/// (`{"traceEvents": [...], "displayTimeUnit": "ms"}`).
+pub fn chrome_trace(events: &[Event]) -> Json {
+    let mut out: Vec<Json> = Vec::with_capacity(events.len() + 8);
+    let mut shards: Vec<usize> = events.iter().map(|e| e.shard).collect();
+    shards.sort_unstable();
+    shards.dedup();
+    // metadata: name the per-shard processes and their tracks
+    for &k in &shards {
+        out.push(Json::obj(vec![
+            ("name", Json::Str("process_name".into())),
+            ("ph", Json::Str("M".into())),
+            ("pid", Json::Num(k as f64)),
+            (
+                "args",
+                Json::obj(vec![("name", Json::Str(format!("shard {k}")))]),
+            ),
+        ]));
+        for (tid, label) in [
+            (TID_ROUND, "rounds"),
+            (TID_PHASE, "phases"),
+            (TID_REQUEST, "requests"),
+            (TID_POLICY, "policy"),
+        ] {
+            out.push(Json::obj(vec![
+                ("name", Json::Str("thread_name".into())),
+                ("ph", Json::Str("M".into())),
+                ("pid", Json::Num(k as f64)),
+                ("tid", Json::Num(tid as f64)),
+                ("args", Json::obj(vec![("name", Json::Str(label.into()))])),
+            ]));
+        }
+    }
+    for ev in events {
+        match &ev.kind {
+            EventKind::Round {
+                epoch,
+                live,
+                queued,
+                s,
+                committed,
+                accepted,
+                kv_blocks,
+            } => {
+                out.push(trace_record(
+                    &format!("round b={live} s={s}"),
+                    "X",
+                    ev,
+                    TID_ROUND,
+                    vec![
+                        ("epoch", Json::Num(*epoch as f64)),
+                        ("live", Json::Num(*live as f64)),
+                        ("queued", Json::Num(*queued as f64)),
+                        ("s", Json::Num(*s as f64)),
+                        ("committed", Json::Num(*committed as f64)),
+                        (
+                            "accepted",
+                            Json::Arr(
+                                accepted.iter().map(|&a| Json::Num(a as f64)).collect(),
+                            ),
+                        ),
+                        ("kv_blocks", Json::Num(*kv_blocks as f64)),
+                    ],
+                ));
+                // companion counter sample so Perfetto draws a KV track
+                out.push(Json::obj(vec![
+                    ("name", Json::Str("kv_blocks".into())),
+                    ("ph", Json::Str("C".into())),
+                    ("ts", us(ev.t)),
+                    ("pid", Json::Num(ev.shard as f64)),
+                    (
+                        "args",
+                        Json::obj(vec![("in_use", Json::Num(*kv_blocks as f64))]),
+                    ),
+                ]));
+            }
+            EventKind::Phase { phase } => {
+                out.push(trace_record(phase.label(), "X", ev, TID_PHASE, vec![]));
+            }
+            EventKind::Admission {
+                id,
+                verdict,
+                deadline,
+                predicted_slack,
+                deferred,
+            } => {
+                let opt = |v: &Option<f64>| v.map_or(Json::Null, Json::Num);
+                out.push(trace_record(
+                    &format!("{verdict} #{id}"),
+                    "i",
+                    ev,
+                    TID_REQUEST,
+                    vec![
+                        ("id", Json::Num(*id as f64)),
+                        ("verdict", Json::Str((*verdict).into())),
+                        ("deadline", opt(deadline)),
+                        ("predicted_slack", opt(predicted_slack)),
+                        ("deferred", Json::Num(*deferred as f64)),
+                    ],
+                ));
+            }
+            EventKind::Finish {
+                id,
+                tokens,
+                shed,
+                slack,
+            } => {
+                let name = if *shed { "shed" } else { "finish" };
+                out.push(trace_record(
+                    &format!("{name} #{id}"),
+                    "i",
+                    ev,
+                    TID_REQUEST,
+                    vec![
+                        ("id", Json::Num(*id as f64)),
+                        ("tokens", Json::Num(*tokens as f64)),
+                        ("shed", Json::Bool(*shed)),
+                        ("slack", slack.map_or(Json::Null, Json::Num)),
+                    ],
+                ));
+            }
+            EventKind::Route { id, scores } => {
+                out.push(trace_record(
+                    &format!("route #{id}"),
+                    "i",
+                    ev,
+                    TID_REQUEST,
+                    vec![
+                        ("id", Json::Num(*id as f64)),
+                        ("scores", Json::from_f64_slice(scores)),
+                    ],
+                ));
+            }
+            EventKind::PolicyFit { snapshot } => {
+                out.push(trace_record(
+                    "policy_fit",
+                    "i",
+                    ev,
+                    TID_POLICY,
+                    vec![("snapshot", snapshot.clone())],
+                ));
+            }
+            EventKind::KvPool {
+                in_use,
+                capacity,
+                frag,
+            } => {
+                out.push(Json::obj(vec![
+                    ("name", Json::Str("kv_pool".into())),
+                    ("ph", Json::Str("C".into())),
+                    ("ts", us(ev.t)),
+                    ("pid", Json::Num(ev.shard as f64)),
+                    (
+                        "args",
+                        Json::obj(vec![
+                            ("in_use", Json::Num(*in_use as f64)),
+                            ("free", Json::Num(capacity.saturating_sub(*in_use) as f64)),
+                            ("frag", Json::Num(*frag)),
+                        ]),
+                    ),
+                ]));
+            }
+        }
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(out)),
+        ("displayTimeUnit", Json::Str("ms".into())),
+    ])
+}
+
+/// Render the registry in Prometheus text exposition format (OpenMetrics
+/// subset): counters, gauges, and cumulative-`le` histograms.
+pub fn prometheus_text(reg: &Registry) -> String {
+    let mut out = String::new();
+    for (name, v) in &reg.counters {
+        out.push_str(&format!("# TYPE {name} counter\n{name} {v}\n"));
+    }
+    for (name, v) in &reg.gauges {
+        out.push_str(&format!("# TYPE {name} gauge\n{name} {v}\n"));
+    }
+    for (name, h) in &reg.histograms {
+        out.push_str(&format!("# TYPE {name} histogram\n"));
+        let mut cum = 0u64;
+        for (i, &c) in h.buckets.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            cum += c;
+            out.push_str(&format!(
+                "{name}_bucket{{le=\"{}\"}} {cum}\n",
+                Histogram::bucket_edge(i)
+            ));
+        }
+        out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {}\n", h.count));
+        out.push_str(&format!("{name}_sum {}\n", h.sum));
+        out.push_str(&format!("{name}_count {}\n", h.count));
+    }
+    out
+}
+
+/// One compact-JSON line per event.
+pub fn events_jsonl(events: &[Event]) -> String {
+    let mut out = String::new();
+    for ev in events {
+        out.push_str(&ev.to_json().compact());
+        out.push('\n');
+    }
+    out
+}
+
+/// Write every exporter for a handle under `<prefix>.{trace.json,
+/// events.jsonl, prom}`.  Returns the paths written.  No-op (empty Vec)
+/// for a disabled handle.
+pub fn write_all(tel: &Telemetry, prefix: &str) -> anyhow::Result<Vec<std::path::PathBuf>> {
+    if !tel.enabled() {
+        return Ok(vec![]);
+    }
+    let mut written = Vec::new();
+    if let Some(dir) = std::path::Path::new(prefix).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let prom = std::path::PathBuf::from(format!("{prefix}.prom"));
+    std::fs::write(&prom, prometheus_text(&tel.registry()))?;
+    written.push(prom);
+    if tel.tracing() {
+        let events = tel.events();
+        let trace = std::path::PathBuf::from(format!("{prefix}.trace.json"));
+        chrome_trace(&events).write_file(&trace)?;
+        written.push(trace);
+        let jsonl = std::path::PathBuf::from(format!("{prefix}.events.jsonl"));
+        std::fs::write(&jsonl, events_jsonl(&events))?;
+        written.push(jsonl);
+    }
+    Ok(written)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::{PhaseKind, TelemetryMode};
+
+    fn sample_handle() -> Telemetry {
+        let t = Telemetry::new(TelemetryMode::Trace);
+        t.round(0.0, 0.10, 1, 2, 1, 3, 5, &[2, 3], 8);
+        t.phase(0.00, 0.04, PhaseKind::Draft);
+        t.phase(0.04, 0.05, PhaseKind::Verify);
+        t.phase(0.09, 0.01, PhaseKind::Accept);
+        t.admission(0.10, 7, "defer", Some(1.0), Some(0.4), 1);
+        t.finish(0.12, 3, 24, false, Some(0.2));
+        t.for_shard(1).route(0.05, 9, 1, &[0.3, 0.1]);
+        t.kv_pool(0.10, 8, 32, 0.12);
+        t
+    }
+
+    #[test]
+    fn chrome_trace_schema_is_valid() {
+        let t = sample_handle();
+        let doc = chrome_trace(&t.events());
+        let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(!evs.is_empty());
+        for e in evs {
+            let ph = e.get("ph").unwrap().as_str().unwrap();
+            assert!(
+                matches!(ph, "X" | "i" | "C" | "M"),
+                "unexpected phase {ph}"
+            );
+            assert!(e.get("name").unwrap().as_str().is_ok());
+            assert!(e.get("pid").unwrap().as_usize().is_ok());
+            if ph != "M" {
+                assert!(e.get("ts").unwrap().as_f64().unwrap() >= 0.0);
+            }
+            if ph == "X" {
+                assert!(e.get("dur").unwrap().as_f64().unwrap() >= 0.0);
+            }
+        }
+        // round-trips through the parser (i.e. it is real JSON)
+        assert_eq!(Json::parse(&doc.pretty()).unwrap(), doc);
+        // both shards got process metadata
+        let meta: Vec<_> = evs
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str().unwrap() == "M")
+            .collect();
+        assert!(meta.len() >= 2 * 5, "process + 4 thread names per shard");
+    }
+
+    #[test]
+    fn prometheus_text_exposes_cumulative_buckets() {
+        let t = sample_handle();
+        let text = prometheus_text(&t.registry());
+        assert!(text.contains("# TYPE specbatch_rounds_total counter"));
+        assert!(text.contains("specbatch_rounds_total 1"));
+        assert!(text.contains("# TYPE specbatch_round_seconds histogram"));
+        assert!(text.contains("specbatch_round_seconds_bucket{le=\"+Inf\"} 1"));
+        assert!(text.contains("specbatch_round_seconds_count 1"));
+        assert!(text.contains("specbatch_kv_blocks_in_use 8"));
+        // cumulative counts never decrease
+        let mut last = 0u64;
+        for line in text.lines().filter(|l| {
+            l.starts_with("specbatch_round_seconds_bucket") && !l.contains("+Inf")
+        }) {
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= last);
+            last = v;
+        }
+    }
+
+    #[test]
+    fn jsonl_lines_parse_individually() {
+        let t = sample_handle();
+        let text = events_jsonl(&t.events());
+        let lines: Vec<_> = text.lines().collect();
+        assert_eq!(lines.len(), t.events().len());
+        for line in lines {
+            let j = Json::parse(line).unwrap();
+            assert!(j.get("ev").unwrap().as_str().is_ok());
+        }
+    }
+
+    #[test]
+    fn write_all_emits_three_files_for_trace_none_for_disabled() {
+        let dir = std::env::temp_dir().join("specbatch_export_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let prefix = dir.join("run").to_string_lossy().into_owned();
+        let t = sample_handle();
+        let written = write_all(&t, &prefix).unwrap();
+        assert_eq!(written.len(), 3);
+        for p in &written {
+            assert!(p.exists(), "{p:?} missing");
+        }
+        assert!(write_all(&Telemetry::disabled(), &prefix)
+            .unwrap()
+            .is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,848 @@
+//! Observability: a zero-overhead-when-disabled telemetry layer threaded
+//! through the whole serving stack.
+//!
+//! The paper is a *characterization study* — its central claim (the
+//! optimal speculation length depends on the batch size) came from
+//! instrumenting every round's draft/verify/accept breakdown.  This
+//! module gives the reproduction the same visibility:
+//!
+//! * a [`Telemetry`] handle — a cheap `Arc` clone whose disabled variant
+//!   ([`Telemetry::disabled`]) is a `None` inner: every emit method is a
+//!   branch on an `Option` and returns without allocating, so the decode
+//!   hot path pays nothing when observability is off (pinned by the
+//!   `micro_hotpath` bench and the determinism tests);
+//! * a **metric registry** of named counters, gauges and log-bucketed
+//!   fixed-size [`Histogram`]s (no per-sample allocation), active in
+//!   `summary` and `trace` modes;
+//! * a **structured event sink** ([`Event`]) with span-style round
+//!   events — per-round `draft`/`verify`/`accept`/`reshape`/`admission`
+//!   phases, per-row accepted counts, the chosen `s`, policy-fit
+//!   snapshots, KV-pool utilization, admission defer/shed decisions with
+//!   predicted deadline slack, and per-shard routing decisions with the
+//!   router's score vector — active in `trace` mode only;
+//! * **exporters** ([`export`]): Chrome `trace_event` JSON (Perfetto /
+//!   `chrome://tracing`), Prometheus text exposition, and JSONL dumps;
+//! * a **bench trajectory** ([`bench`]): `BENCH_<name>.json` emission so
+//!   CI uploads a machine-readable perf history (ROADMAP item 5).
+//!
+//! Determinism contract: telemetry consumes **zero PRNG draws** and
+//! never branches the serving logic — with the handle disabled, DES and
+//! server outputs are bit-identical to a build without the calls
+//! (`rust/tests/telemetry.rs` pins this across seeds).  The DES emits in
+//! virtual time, the threaded path in wall time ([`Telemetry::now`]),
+//! through the same event schema.
+//!
+//! Mode selection: `--telemetry off|summary|trace` on the CLI, or the
+//! `SPECBATCH_TELEMETRY` environment variable (the CI matrix axis).
+
+pub mod bench;
+pub mod export;
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// How much the telemetry layer records.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TelemetryMode {
+    /// no registry, no events; the handle is a no-op (`Disabled`)
+    #[default]
+    Off,
+    /// metric registry only (counters/gauges/histograms)
+    Summary,
+    /// registry + the structured event sink (exportable as a Chrome
+    /// trace / JSONL dump)
+    Trace,
+}
+
+impl TelemetryMode {
+    pub fn parse(s: &str) -> anyhow::Result<TelemetryMode> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "off" | "none" | "disabled" => Ok(TelemetryMode::Off),
+            "summary" | "metrics" => Ok(TelemetryMode::Summary),
+            "trace" | "full" => Ok(TelemetryMode::Trace),
+            other => anyhow::bail!(
+                "unknown telemetry mode {other:?} (expected off|summary|trace)"
+            ),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            TelemetryMode::Off => "off",
+            TelemetryMode::Summary => "summary",
+            TelemetryMode::Trace => "trace",
+        }
+    }
+
+    pub fn all() -> [TelemetryMode; 3] {
+        [
+            TelemetryMode::Off,
+            TelemetryMode::Summary,
+            TelemetryMode::Trace,
+        ]
+    }
+
+    /// `SPECBATCH_TELEMETRY` override, panicking on an invalid value so a
+    /// typo in a CI matrix axis fails loudly instead of silently running
+    /// without the telemetry leg (mirrors `KvLayout::from_env`).
+    pub fn env_override() -> Option<TelemetryMode> {
+        let v = std::env::var("SPECBATCH_TELEMETRY").ok()?;
+        Some(TelemetryMode::parse(&v).unwrap_or_else(|e| panic!("SPECBATCH_TELEMETRY: {e}")))
+    }
+
+    /// The mode used when a config does not pin one: the env override
+    /// when set, else `Off`.
+    pub fn default_mode() -> TelemetryMode {
+        TelemetryMode::env_override().unwrap_or(TelemetryMode::Off)
+    }
+}
+
+/// A phase inside one decode round (the span names of the Chrome trace's
+/// per-shard phase track).  Phases are emitted back-to-back inside their
+/// round span, so they nest and never overlap per shard.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PhaseKind {
+    /// batch prefill of freshly admitted rows (both models)
+    Prefill,
+    /// SSM backlog re-ingest before a speculative round
+    CatchUp,
+    /// SSM drafting (`s` single-token forwards)
+    Draft,
+    /// LLM verify call over `s + 1` positions
+    Verify,
+    /// host-side acceptance + commit
+    Accept,
+    /// epoch reshape: carried-row KV transfer into a larger bucket
+    Reshape,
+    /// admission-control planning at the round boundary
+    Admission,
+}
+
+impl PhaseKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            PhaseKind::Prefill => "prefill",
+            PhaseKind::CatchUp => "ssm_catch_up",
+            PhaseKind::Draft => "draft",
+            PhaseKind::Verify => "verify",
+            PhaseKind::Accept => "accept",
+            PhaseKind::Reshape => "reshape",
+            PhaseKind::Admission => "admission",
+        }
+    }
+}
+
+/// One structured telemetry event.  `t` is seconds on the run's clock
+/// (virtual time in the DES, [`Telemetry::now`] wall time on the
+/// threaded path); `dur` is 0 for instant events.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Event {
+    pub t: f64,
+    pub dur: f64,
+    pub shard: usize,
+    pub kind: EventKind,
+}
+
+/// The event payloads (the schema table lives in DESIGN.md §telemetry).
+#[derive(Debug, Clone, PartialEq)]
+pub enum EventKind {
+    /// one decode round: the span the phase events nest inside
+    Round {
+        epoch: usize,
+        live: usize,
+        queued: usize,
+        s: usize,
+        committed: usize,
+        /// per-row accepted draft counts (empty for plain rounds)
+        accepted: Vec<u32>,
+        kv_blocks: usize,
+    },
+    /// a sub-span of the enclosing round
+    Phase { phase: PhaseKind },
+    /// an admission-control verdict on one queued request
+    Admission {
+        id: u64,
+        /// "admit" | "defer" | "shed"
+        verdict: &'static str,
+        deadline: Option<f64>,
+        /// deadline minus the predicted finish at the current load
+        /// (None: no deadline, or the policy's fit is still cold)
+        predicted_slack: Option<f64>,
+        /// round boundaries the request had been deferred at so far
+        deferred: usize,
+    },
+    /// terminal event of a request: served (`shed: false`) or shed
+    Finish {
+        id: u64,
+        tokens: usize,
+        shed: bool,
+        /// deadline minus the actual finish time (negative = SLO miss)
+        slack: Option<f64>,
+    },
+    /// a routing decision: `Event::shard` is the chosen shard,
+    /// `scores` the router's per-shard score vector (lower = better)
+    Route { id: u64, scores: Vec<f64> },
+    /// a policy-fit snapshot (`SpeculationPolicy::snapshot`)
+    PolicyFit { snapshot: Json },
+    /// KV block-pool utilization sample
+    KvPool {
+        in_use: usize,
+        capacity: usize,
+        frag: f64,
+    },
+}
+
+impl Event {
+    /// Flat JSON form (the JSONL exporter's line format).
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("t", Json::Num(self.t)),
+            ("dur", Json::Num(self.dur)),
+            ("shard", Json::Num(self.shard as f64)),
+        ];
+        let opt = |v: Option<f64>| v.map_or(Json::Null, Json::Num);
+        match &self.kind {
+            EventKind::Round {
+                epoch,
+                live,
+                queued,
+                s,
+                committed,
+                accepted,
+                kv_blocks,
+            } => {
+                pairs.push(("ev", Json::Str("round".into())));
+                pairs.push(("epoch", Json::Num(*epoch as f64)));
+                pairs.push(("live", Json::Num(*live as f64)));
+                pairs.push(("queued", Json::Num(*queued as f64)));
+                pairs.push(("s", Json::Num(*s as f64)));
+                pairs.push(("committed", Json::Num(*committed as f64)));
+                pairs.push((
+                    "accepted",
+                    Json::Arr(accepted.iter().map(|&a| Json::Num(a as f64)).collect()),
+                ));
+                pairs.push(("kv_blocks", Json::Num(*kv_blocks as f64)));
+            }
+            EventKind::Phase { phase } => {
+                pairs.push(("ev", Json::Str("phase".into())));
+                pairs.push(("phase", Json::Str(phase.label().into())));
+            }
+            EventKind::Admission {
+                id,
+                verdict,
+                deadline,
+                predicted_slack,
+                deferred,
+            } => {
+                pairs.push(("ev", Json::Str("admission".into())));
+                pairs.push(("id", Json::Num(*id as f64)));
+                pairs.push(("verdict", Json::Str((*verdict).into())));
+                pairs.push(("deadline", opt(*deadline)));
+                pairs.push(("predicted_slack", opt(*predicted_slack)));
+                pairs.push(("deferred", Json::Num(*deferred as f64)));
+            }
+            EventKind::Finish {
+                id,
+                tokens,
+                shed,
+                slack,
+            } => {
+                pairs.push(("ev", Json::Str("finish".into())));
+                pairs.push(("id", Json::Num(*id as f64)));
+                pairs.push(("tokens", Json::Num(*tokens as f64)));
+                pairs.push(("shed", Json::Bool(*shed)));
+                pairs.push(("slack", opt(*slack)));
+            }
+            EventKind::Route { id, scores } => {
+                pairs.push(("ev", Json::Str("route".into())));
+                pairs.push(("id", Json::Num(*id as f64)));
+                pairs.push(("scores", Json::from_f64_slice(scores)));
+            }
+            EventKind::PolicyFit { snapshot } => {
+                pairs.push(("ev", Json::Str("policy_fit".into())));
+                pairs.push(("snapshot", snapshot.clone()));
+            }
+            EventKind::KvPool {
+                in_use,
+                capacity,
+                frag,
+            } => {
+                pairs.push(("ev", Json::Str("kv_pool".into())));
+                pairs.push(("in_use", Json::Num(*in_use as f64)));
+                pairs.push(("capacity", Json::Num(*capacity as f64)));
+                pairs.push(("frag", Json::Num(*frag)));
+            }
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// Number of log2 buckets a [`Histogram`] keeps.  Bucket `i` covers
+/// `[2^(i-30), 2^(i-29))` seconds: index 0 sits at ~1 ns, index 63 at
+/// ~2^33 s — far wider than any latency this system sees.
+pub const HIST_BUCKETS: usize = 64;
+const HIST_EXP_OFFSET: i32 = 30;
+
+/// Fixed-size log-bucketed histogram: recording is an array increment,
+/// never an allocation.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub buckets: [u64; HIST_BUCKETS],
+    pub count: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: [0; HIST_BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+}
+
+impl Histogram {
+    fn bucket_index(v: f64) -> usize {
+        if !(v.is_finite() && v > 0.0) {
+            return 0;
+        }
+        (v.log2().floor() as i32 + HIST_EXP_OFFSET).clamp(0, HIST_BUCKETS as i32 - 1) as usize
+    }
+
+    /// Upper edge of bucket `i` in seconds.
+    pub fn bucket_edge(i: usize) -> f64 {
+        (2.0f64).powi(i as i32 - HIST_EXP_OFFSET + 1)
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.buckets[Self::bucket_index(v)] += 1;
+        self.count += 1;
+        if v.is_finite() {
+            self.sum += v;
+            self.min = self.min.min(v);
+            self.max = self.max.max(v);
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Quantile estimate (`q` in [0, 1]) from the bucket counts: the
+    /// upper edge of the bucket where the cumulative count crosses
+    /// `q * count`, clamped to the observed min/max.  Empty → 0.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return Self::bucket_edge(i).clamp(
+                    self.min.min(self.max),
+                    self.max.max(self.min),
+                );
+            }
+        }
+        self.max
+    }
+}
+
+/// The named-metric registry (one per [`Telemetry`] handle, shared by
+/// every shard clone).
+#[derive(Debug, Clone, Default)]
+pub struct Registry {
+    pub counters: BTreeMap<&'static str, u64>,
+    pub gauges: BTreeMap<&'static str, f64>,
+    pub histograms: BTreeMap<&'static str, Histogram>,
+}
+
+struct Inner {
+    mode: TelemetryMode,
+    start: Instant,
+    metrics: Mutex<Registry>,
+    events: Mutex<Vec<Event>>,
+}
+
+/// The telemetry handle.  Cloning is an `Arc` bump; the disabled handle
+/// holds no allocation at all and every emit method returns after one
+/// `Option` branch.  `shard` tags every event this clone emits
+/// ([`Telemetry::for_shard`]).
+#[derive(Clone)]
+pub struct Telemetry {
+    shard: usize,
+    inner: Option<Arc<Inner>>,
+}
+
+impl std::fmt::Debug for Telemetry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Telemetry(mode={}, shard={})",
+            self.mode().label(),
+            self.shard
+        )
+    }
+}
+
+impl Default for Telemetry {
+    fn default() -> Self {
+        Telemetry::disabled()
+    }
+}
+
+impl Telemetry {
+    /// The no-op handle: no inner state, zero hot-path cost.
+    pub fn disabled() -> Telemetry {
+        Telemetry {
+            shard: 0,
+            inner: None,
+        }
+    }
+
+    /// A live handle at `mode` (`Off` returns the disabled handle).
+    pub fn new(mode: TelemetryMode) -> Telemetry {
+        if mode == TelemetryMode::Off {
+            return Telemetry::disabled();
+        }
+        Telemetry {
+            shard: 0,
+            inner: Some(Arc::new(Inner {
+                mode,
+                start: Instant::now(),
+                metrics: Mutex::new(Registry::default()),
+                events: Mutex::new(Vec::new()),
+            })),
+        }
+    }
+
+    /// Handle from the ambient default ([`TelemetryMode::default_mode`]).
+    pub fn from_env() -> Telemetry {
+        Telemetry::new(TelemetryMode::default_mode())
+    }
+
+    pub fn mode(&self) -> TelemetryMode {
+        self.inner
+            .as_ref()
+            .map_or(TelemetryMode::Off, |i| i.mode)
+    }
+
+    /// True when the registry records (summary or trace).
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// True when the event sink records (trace only).
+    #[inline]
+    pub fn tracing(&self) -> bool {
+        self.inner
+            .as_ref()
+            .is_some_and(|i| i.mode == TelemetryMode::Trace)
+    }
+
+    /// A clone whose events carry `shard` (same registry + sink).
+    pub fn for_shard(&self, shard: usize) -> Telemetry {
+        Telemetry {
+            shard,
+            inner: self.inner.clone(),
+        }
+    }
+
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
+
+    /// Seconds since the handle was created — the threaded path's event
+    /// clock.  0 when disabled.
+    pub fn now(&self) -> f64 {
+        self.inner
+            .as_ref()
+            .map_or(0.0, |i| i.start.elapsed().as_secs_f64())
+    }
+
+    // ---- metric registry ----
+
+    #[inline]
+    pub fn counter(&self, name: &'static str, n: u64) {
+        let Some(inner) = &self.inner else { return };
+        let mut m = inner.metrics.lock().expect("registry lock");
+        *m.counters.entry(name).or_insert(0) += n;
+    }
+
+    #[inline]
+    pub fn gauge(&self, name: &'static str, v: f64) {
+        let Some(inner) = &self.inner else { return };
+        let mut m = inner.metrics.lock().expect("registry lock");
+        m.gauges.insert(name, v);
+    }
+
+    /// Record one sample into a named histogram.
+    #[inline]
+    pub fn observe(&self, name: &'static str, v: f64) {
+        let Some(inner) = &self.inner else { return };
+        let mut m = inner.metrics.lock().expect("registry lock");
+        m.histograms.entry(name).or_default().record(v);
+    }
+
+    /// Snapshot of the registry (cloned out under the lock).
+    pub fn registry(&self) -> Registry {
+        self.inner.as_ref().map_or_else(Registry::default, |i| {
+            i.metrics.lock().expect("registry lock").clone()
+        })
+    }
+
+    // ---- event sink ----
+
+    #[inline]
+    fn push(&self, t: f64, dur: f64, kind: EventKind) {
+        let Some(inner) = &self.inner else { return };
+        if inner.mode != TelemetryMode::Trace {
+            return;
+        }
+        inner.events.lock().expect("event sink lock").push(Event {
+            t,
+            dur,
+            shard: self.shard,
+            kind,
+        });
+    }
+
+    /// One decode round (span).  Also feeds the registry: round count,
+    /// committed/accepted totals and the round-seconds histogram — so
+    /// `summary` mode aggregates without storing events.
+    #[allow(clippy::too_many_arguments)]
+    pub fn round(
+        &self,
+        t: f64,
+        dur: f64,
+        epoch: usize,
+        live: usize,
+        queued: usize,
+        s: usize,
+        committed: usize,
+        accepted: &[u32],
+        kv_blocks: usize,
+    ) {
+        if self.inner.is_none() {
+            return;
+        }
+        self.counter("specbatch_rounds_total", 1);
+        self.counter("specbatch_tokens_committed_total", committed as u64);
+        self.counter(
+            "specbatch_drafts_accepted_total",
+            accepted.iter().map(|&a| a as u64).sum(),
+        );
+        self.observe("specbatch_round_seconds", dur);
+        self.gauge("specbatch_live_rows", live as f64);
+        self.gauge("specbatch_queue_depth", queued as f64);
+        self.push(
+            t,
+            dur,
+            EventKind::Round {
+                epoch,
+                live,
+                queued,
+                s,
+                committed,
+                accepted: accepted.to_vec(),
+                kv_blocks,
+            },
+        );
+    }
+
+    /// A phase span inside the current round.
+    pub fn phase(&self, t: f64, dur: f64, phase: PhaseKind) {
+        if self.inner.is_none() {
+            return;
+        }
+        self.observe(
+            match phase {
+                PhaseKind::Prefill => "specbatch_prefill_seconds",
+                PhaseKind::CatchUp => "specbatch_ssm_catch_up_seconds",
+                PhaseKind::Draft => "specbatch_draft_seconds",
+                PhaseKind::Verify => "specbatch_verify_seconds",
+                PhaseKind::Accept => "specbatch_accept_seconds",
+                PhaseKind::Reshape => "specbatch_reshape_seconds",
+                PhaseKind::Admission => "specbatch_admission_seconds",
+            },
+            dur,
+        );
+        self.push(t, dur, EventKind::Phase { phase });
+    }
+
+    /// An admission verdict on one queued request.
+    pub fn admission(
+        &self,
+        t: f64,
+        id: u64,
+        verdict: &'static str,
+        deadline: Option<f64>,
+        predicted_slack: Option<f64>,
+        deferred: usize,
+    ) {
+        if self.inner.is_none() {
+            return;
+        }
+        self.counter(
+            match verdict {
+                "defer" => "specbatch_admission_defer_total",
+                "shed" => "specbatch_admission_shed_total",
+                _ => "specbatch_admission_admit_total",
+            },
+            1,
+        );
+        self.push(
+            t,
+            0.0,
+            EventKind::Admission {
+                id,
+                verdict,
+                deadline,
+                predicted_slack,
+                deferred,
+            },
+        );
+    }
+
+    /// Terminal event of a request (exactly one per admitted request:
+    /// the conservation property the tests pin).
+    pub fn finish(&self, t: f64, id: u64, tokens: usize, shed: bool, slack: Option<f64>) {
+        if self.inner.is_none() {
+            return;
+        }
+        self.counter(
+            if shed {
+                "specbatch_requests_shed_total"
+            } else {
+                "specbatch_requests_finished_total"
+            },
+            1,
+        );
+        if let Some(sl) = slack {
+            self.observe("specbatch_deadline_slack_seconds", sl.max(0.0));
+            if sl < 0.0 {
+                self.counter("specbatch_slo_missed_total", 1);
+            }
+        }
+        self.push(t, 0.0, EventKind::Finish {
+            id,
+            tokens,
+            shed,
+            slack,
+        });
+    }
+
+    /// A routing decision: this handle's shard tag is ignored; the event
+    /// is tagged with the *chosen* shard so it lands on that track.
+    pub fn route(&self, t: f64, id: u64, chosen: usize, scores: &[f64]) {
+        let Some(inner) = &self.inner else { return };
+        self.counter("specbatch_routed_total", 1);
+        if inner.mode != TelemetryMode::Trace {
+            return;
+        }
+        inner.events.lock().expect("event sink lock").push(Event {
+            t,
+            dur: 0.0,
+            shard: chosen,
+            kind: EventKind::Route {
+                id,
+                scores: scores.to_vec(),
+            },
+        });
+    }
+
+    /// A policy-fit snapshot (skipped when the policy reports none).
+    pub fn policy_fit(&self, t: f64, snapshot: Option<Json>) {
+        if !self.tracing() {
+            return;
+        }
+        if let Some(snapshot) = snapshot {
+            self.push(t, 0.0, EventKind::PolicyFit { snapshot });
+        }
+    }
+
+    /// A KV block-pool utilization sample.
+    pub fn kv_pool(&self, t: f64, in_use: usize, capacity: usize, frag: f64) {
+        if self.inner.is_none() {
+            return;
+        }
+        self.gauge("specbatch_kv_blocks_in_use", in_use as f64);
+        self.gauge("specbatch_kv_blocks_capacity", capacity as f64);
+        self.gauge("specbatch_kv_internal_frag", frag);
+        self.push(
+            t,
+            0.0,
+            EventKind::KvPool {
+                in_use,
+                capacity,
+                frag,
+            },
+        );
+    }
+
+    /// Snapshot of the event sink (cloned out under the lock).
+    pub fn events(&self) -> Vec<Event> {
+        self.inner.as_ref().map_or_else(Vec::new, |i| {
+            i.events.lock().expect("event sink lock").clone()
+        })
+    }
+
+    /// Drain the event sink.
+    pub fn take_events(&self) -> Vec<Event> {
+        self.inner.as_ref().map_or_else(Vec::new, |i| {
+            std::mem::take(&mut *i.events.lock().expect("event sink lock"))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_parses_and_labels_round_trip() {
+        for m in TelemetryMode::all() {
+            assert_eq!(TelemetryMode::parse(m.label()).unwrap(), m);
+        }
+        assert_eq!(
+            TelemetryMode::parse("TRACE").unwrap(),
+            TelemetryMode::Trace
+        );
+        assert!(TelemetryMode::parse("loud").is_err());
+    }
+
+    #[test]
+    fn disabled_handle_records_nothing() {
+        let t = Telemetry::disabled();
+        assert!(!t.enabled());
+        assert!(!t.tracing());
+        t.counter("c", 3);
+        t.gauge("g", 1.0);
+        t.observe("h", 0.5);
+        t.round(0.0, 0.1, 1, 2, 0, 3, 4, &[1, 2], 0);
+        t.finish(0.0, 7, 16, false, None);
+        assert!(t.registry().counters.is_empty());
+        assert!(t.events().is_empty());
+        assert_eq!(t.now(), 0.0);
+        assert_eq!(Telemetry::new(TelemetryMode::Off).mode(), TelemetryMode::Off);
+    }
+
+    #[test]
+    fn summary_mode_fills_the_registry_but_not_the_sink() {
+        let t = Telemetry::new(TelemetryMode::Summary);
+        assert!(t.enabled());
+        assert!(!t.tracing());
+        t.round(0.0, 0.01, 1, 4, 2, 3, 8, &[2, 1, 3, 2], 12);
+        t.finish(0.1, 1, 32, false, Some(0.5));
+        t.finish(0.2, 2, 0, true, Some(-0.1));
+        let reg = t.registry();
+        assert_eq!(reg.counters["specbatch_rounds_total"], 1);
+        assert_eq!(reg.counters["specbatch_tokens_committed_total"], 8);
+        assert_eq!(reg.counters["specbatch_drafts_accepted_total"], 8);
+        assert_eq!(reg.counters["specbatch_requests_finished_total"], 1);
+        assert_eq!(reg.counters["specbatch_requests_shed_total"], 1);
+        assert_eq!(reg.counters["specbatch_slo_missed_total"], 1);
+        assert_eq!(reg.gauges["specbatch_live_rows"], 4.0);
+        assert_eq!(reg.histograms["specbatch_round_seconds"].count, 1);
+        assert!(t.events().is_empty(), "summary mode stores no events");
+    }
+
+    #[test]
+    fn trace_mode_records_shard_tagged_events() {
+        let t = Telemetry::new(TelemetryMode::Trace);
+        let s1 = t.for_shard(1);
+        t.round(1.0, 0.5, 1, 2, 0, 3, 4, &[1, 2], 0);
+        s1.phase(1.0, 0.2, PhaseKind::Draft);
+        s1.route(1.2, 9, 3, &[0.5, 0.1, 0.9, 0.0]);
+        let ev = t.events();
+        assert_eq!(ev.len(), 3);
+        assert_eq!(ev[0].shard, 0);
+        assert_eq!(ev[1].shard, 1);
+        // route events land on the chosen shard's track
+        assert_eq!(ev[2].shard, 3);
+        match &ev[2].kind {
+            EventKind::Route { id, scores } => {
+                assert_eq!(*id, 9);
+                assert_eq!(scores.len(), 4);
+            }
+            other => panic!("expected route, got {other:?}"),
+        }
+        // drain empties the sink
+        assert_eq!(t.take_events().len(), 3);
+        assert!(t.events().is_empty());
+    }
+
+    #[test]
+    fn histogram_buckets_without_allocation_and_quantiles_bound() {
+        let mut h = Histogram::default();
+        assert_eq!(h.quantile(0.5), 0.0, "empty histogram quantile is 0");
+        for i in 1..=100 {
+            h.record(i as f64 * 1e-3); // 1ms..100ms
+        }
+        assert_eq!(h.count, 100);
+        assert!((h.mean() - 0.0505).abs() < 1e-9);
+        let p50 = h.quantile(0.5);
+        let p99 = h.quantile(0.99);
+        // log2 buckets: estimates are within one power of two
+        assert!(p50 >= 0.025 && p50 <= 0.1, "p50 {p50}");
+        assert!(p99 >= 0.05 && p99 <= 0.128, "p99 {p99}");
+        assert!(p50 <= p99);
+        // degenerate values neither panic nor skew the sum
+        h.record(0.0);
+        h.record(f64::NAN);
+        assert_eq!(h.count, 102);
+        // single-sample histogram pins the value via min/max clamping
+        let mut one = Histogram::default();
+        one.record(0.007);
+        assert!((one.quantile(0.5) - 0.007).abs() < 1e-12);
+        assert!((one.quantile(0.99) - 0.007).abs() < 1e-12);
+    }
+
+    #[test]
+    fn event_json_is_flat_and_typed() {
+        let e = Event {
+            t: 1.5,
+            dur: 0.25,
+            shard: 2,
+            kind: EventKind::Admission {
+                id: 42,
+                verdict: "defer",
+                deadline: Some(3.0),
+                predicted_slack: Some(-0.2),
+                deferred: 4,
+            },
+        };
+        let j = e.to_json();
+        assert_eq!(j.get("ev").unwrap().as_str().unwrap(), "admission");
+        assert_eq!(j.get("id").unwrap().as_f64().unwrap(), 42.0);
+        assert_eq!(j.get("verdict").unwrap().as_str().unwrap(), "defer");
+        assert!((j.get("predicted_slack").unwrap().as_f64().unwrap() + 0.2).abs() < 1e-12);
+        let none = Event {
+            t: 0.0,
+            dur: 0.0,
+            shard: 0,
+            kind: EventKind::Finish {
+                id: 1,
+                tokens: 8,
+                shed: false,
+                slack: None,
+            },
+        };
+        assert!(matches!(none.to_json().get("slack").unwrap(), Json::Null));
+    }
+}

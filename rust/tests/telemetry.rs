@@ -1,0 +1,489 @@
+//! Telemetry acceptance tests (ISSUE PR 6).
+//!
+//! Pins the four contracts the observability layer must keep:
+//!
+//! 1. **Invisibility** — running any DES entry point with a live
+//!    trace-mode [`Telemetry`] handle produces bit-identical results to
+//!    the plain entry point (telemetry consumes no PRNG draws and
+//!    perturbs no float arithmetic).
+//! 2. **Conservation** — every request in the trace gets exactly one
+//!    terminal `Finish` event, and the shed flags agree with the
+//!    recorder's terminal state.
+//! 3. **Phase structure** — draft/verify/accept spans nest inside their
+//!    round span, tile its duration exactly, and never overlap within a
+//!    shard (rounds don't overlap either).
+//! 4. **Export schemas** — the Chrome trace document is well-formed
+//!    `trace_event` JSON, the JSONL exporter emits one line per event,
+//!    Prometheus text carries typed families, and `BENCH_fig6.json`
+//!    written from a stub-server run matches its `ExperimentOutcome`
+//!    field for field after a parse round-trip.
+
+use std::collections::BTreeMap;
+
+use specbatch::admission::{replicate_controllers, SloAware};
+use specbatch::cluster::sim::{
+    simulate_trace_cluster_admission, simulate_trace_cluster_admission_tel,
+};
+use specbatch::cluster::{build_router, replicate_policies};
+use specbatch::config::{AdmissionSpec, PolicySpec, RouterSpec};
+use specbatch::kvcache::KvLayout;
+use specbatch::policy::Fixed;
+use specbatch::server::{run_experiment, Backend, SchedulingMode, ServerConfig};
+use specbatch::simulator::{
+    simulate_trace_admission, simulate_trace_admission_tel, simulate_trace_continuous_admission,
+    simulate_trace_continuous_admission_tel,
+};
+use specbatch::telemetry::{bench, export, Event, EventKind, PhaseKind, Telemetry, TelemetryMode};
+use specbatch::testkit::harness::{
+    const_prompt_pool, fig6_trace, paper_sim_config, slo_fig6_trace, stub_prompt_pool,
+    stub_server_cfg, warm_model_based,
+};
+use specbatch::testkit::stub::StubSpec;
+use specbatch::util::json::Json;
+
+const EPS: f64 = 1e-9;
+
+// ---------------------------------------------------------------- invisibility
+
+#[test]
+fn trace_telemetry_is_invisible_to_the_static_des() {
+    for seed in [2u64, 3, 4] {
+        let mut cfg = paper_sim_config(seed);
+        cfg.max_new_tokens = 32;
+        let trace = slo_fig6_trace(&const_prompt_pool(12), 150, seed, 0.1, 1.5, 2.0);
+
+        let off = simulate_trace_admission(
+            &cfg,
+            &mut Fixed(2),
+            &mut SloAware::default(),
+            &trace,
+        );
+        let tel = Telemetry::new(TelemetryMode::Trace);
+        let on = simulate_trace_admission_tel(
+            &cfg,
+            &mut Fixed(2),
+            &mut SloAware::default(),
+            &trace,
+            &tel,
+        );
+
+        assert_eq!(off.records(), on.records(), "seed {seed}: records diverged");
+        assert!(
+            tel.events()
+                .iter()
+                .any(|e| matches!(e.kind, EventKind::Round { .. })),
+            "seed {seed}: trace mode must record round events"
+        );
+    }
+}
+
+#[test]
+fn trace_telemetry_is_invisible_to_the_continuous_des() {
+    for seed in [2u64, 3, 4] {
+        let mut cfg = paper_sim_config(seed);
+        cfg.max_new_tokens = 32;
+        let trace = slo_fig6_trace(&const_prompt_pool(12), 200, seed, 0.1, 1.5, 2.0);
+
+        // fresh policy + controller per run: both mutate while observing
+        let mut p_off = warm_model_based(&cfg, 30);
+        let (rec_off, rounds_off) = simulate_trace_continuous_admission(
+            &cfg,
+            &mut p_off,
+            &mut SloAware::default(),
+            &trace,
+        );
+        let mut p_on = warm_model_based(&cfg, 30);
+        let tel = Telemetry::new(TelemetryMode::Trace);
+        let (rec_on, rounds_on) = simulate_trace_continuous_admission_tel(
+            &cfg,
+            &mut p_on,
+            &mut SloAware::default(),
+            &trace,
+            &tel,
+        );
+
+        assert_eq!(rec_off.records(), rec_on.records(), "seed {seed}: records");
+        assert_eq!(rounds_off, rounds_on, "seed {seed}: round timeline");
+    }
+}
+
+#[test]
+fn trace_telemetry_is_invisible_to_the_cluster_des() {
+    for seed in [2u64, 3, 4] {
+        let mut cfg = paper_sim_config(seed);
+        cfg.max_new_tokens = 32;
+        let trace = slo_fig6_trace(&const_prompt_pool(12), 200, seed, 0.1, 1.5, 2.0);
+        let workers = 3;
+
+        let run = |tel: &Telemetry| {
+            let mut policies =
+                replicate_policies(&PolicySpec::Fixed(2), None, workers).expect("no LUT needed");
+            let mut ctrls = replicate_controllers(AdmissionSpec::SloAware, workers);
+            let mut router = build_router(RouterSpec::CostAware, seed);
+            simulate_trace_cluster_admission_tel(
+                &cfg,
+                &mut policies,
+                &mut ctrls,
+                router.as_mut(),
+                &trace,
+                tel,
+            )
+        };
+        // the disabled handle IS the plain entry point (it delegates), but
+        // run both spellings so a future fork of the wrapper gets caught
+        let off = {
+            let mut policies =
+                replicate_policies(&PolicySpec::Fixed(2), None, workers).expect("no LUT needed");
+            let mut ctrls = replicate_controllers(AdmissionSpec::SloAware, workers);
+            let mut router = build_router(RouterSpec::CostAware, seed);
+            simulate_trace_cluster_admission(
+                &cfg,
+                &mut policies,
+                &mut ctrls,
+                router.as_mut(),
+                &trace,
+            )
+        };
+        let tel = Telemetry::new(TelemetryMode::Trace);
+        let on = run(&tel);
+
+        assert_eq!(
+            off.recorder.records(),
+            on.recorder.records(),
+            "seed {seed}: cluster records"
+        );
+        assert_eq!(
+            off.shard_rounds, on.shard_rounds,
+            "seed {seed}: per-shard round timelines"
+        );
+        // routing decisions were traced and carry a full score vector
+        let events = tel.events();
+        let routes: Vec<&Event> = events
+            .iter()
+            .filter(|e| matches!(e.kind, EventKind::Route { .. }))
+            .collect();
+        assert!(!routes.is_empty(), "seed {seed}: no route events traced");
+        for e in &routes {
+            let EventKind::Route { scores, .. } = &e.kind else {
+                unreachable!()
+            };
+            assert_eq!(scores.len(), workers, "score vector covers every shard");
+            assert!(e.shard < workers, "chosen shard in range");
+        }
+    }
+}
+
+// ---------------------------------------------------------------- conservation
+
+#[test]
+fn every_request_gets_exactly_one_terminal_finish_event() {
+    let seed = 4u64;
+    let mut cfg = paper_sim_config(seed);
+    cfg.max_new_tokens = 32;
+    let n = 300;
+    // overload with tight deadlines so the SLO controller sheds some
+    let trace = slo_fig6_trace(&const_prompt_pool(12), n, seed, 0.1, 1.5, 2.0);
+
+    let tel = Telemetry::new(TelemetryMode::Trace);
+    let mut policy = warm_model_based(&cfg, 30);
+    let (rec, _) = simulate_trace_continuous_admission_tel(
+        &cfg,
+        &mut policy,
+        &mut SloAware::default(),
+        &trace,
+        &tel,
+    );
+
+    let mut finishes: BTreeMap<u64, (usize, bool)> = BTreeMap::new();
+    for e in tel.events() {
+        if let EventKind::Finish { id, shed, .. } = e.kind {
+            let entry = finishes.entry(id).or_insert((0, shed));
+            entry.0 += 1;
+            entry.1 = shed;
+        }
+    }
+    assert_eq!(finishes.len(), n, "every trace id needs a terminal event");
+    for (id, (count, _)) in &finishes {
+        assert_eq!(*count, 1, "request {id}: exactly one terminal event");
+    }
+    let shed_finishes = finishes.values().filter(|(_, shed)| *shed).count();
+    assert_eq!(
+        shed_finishes,
+        rec.shed_count(),
+        "shed finish events must match the recorder"
+    );
+    assert!(shed_finishes > 0, "overload trace should shed something");
+    for r in rec.records() {
+        assert_eq!(
+            finishes[&r.id].1, r.shed,
+            "request {}: finish event disagrees with the record",
+            r.id
+        );
+    }
+}
+
+// ------------------------------------------------------------- phase structure
+
+/// `(start, end)` intervals, sorted, pairwise non-overlapping within eps.
+fn assert_disjoint(mut spans: Vec<(f64, f64)>, what: &str) {
+    spans.sort_by(|a, b| a.0.total_cmp(&b.0));
+    for w in spans.windows(2) {
+        assert!(
+            w[1].0 >= w[0].1 - EPS,
+            "{what}: [{:.6}, {:.6}] overlaps [{:.6}, {:.6}]",
+            w[1].0,
+            w[1].1,
+            w[0].0,
+            w[0].1
+        );
+    }
+}
+
+#[test]
+fn phase_spans_nest_and_tile_rounds_per_shard() {
+    let seed = 2u64;
+    let mut cfg = paper_sim_config(seed);
+    cfg.max_new_tokens = 32;
+    let trace = slo_fig6_trace(&const_prompt_pool(12), 200, seed, 0.1, 1.5, 2.0);
+    let workers = 2;
+
+    let tel = Telemetry::new(TelemetryMode::Trace);
+    let mut policies =
+        replicate_policies(&PolicySpec::Fixed(2), None, workers).expect("no LUT needed");
+    let mut ctrls = replicate_controllers(AdmissionSpec::SloAware, workers);
+    let mut router = build_router(RouterSpec::JoinShortestQueue, seed);
+    simulate_trace_cluster_admission_tel(
+        &cfg,
+        &mut policies,
+        &mut ctrls,
+        router.as_mut(),
+        &trace,
+        &tel,
+    );
+
+    let events = tel.events();
+    let is_exec_phase = |e: &Event| {
+        matches!(
+            e.kind,
+            EventKind::Phase {
+                phase: PhaseKind::Draft | PhaseKind::Verify | PhaseKind::Accept
+            }
+        )
+    };
+    for shard in 0..workers {
+        let rounds: Vec<&Event> = events
+            .iter()
+            .filter(|e| e.shard == shard && matches!(e.kind, EventKind::Round { .. }))
+            .collect();
+        let phases: Vec<&Event> = events
+            .iter()
+            .filter(|e| e.shard == shard && is_exec_phase(e))
+            .collect();
+        assert!(!rounds.is_empty(), "shard {shard} ran no rounds");
+        assert!(!phases.is_empty(), "shard {shard} has no phase spans");
+
+        assert_disjoint(
+            rounds.iter().map(|e| (e.t, e.t + e.dur)).collect(),
+            &format!("shard {shard} rounds"),
+        );
+        assert_disjoint(
+            phases.iter().map(|e| (e.t, e.t + e.dur)).collect(),
+            &format!("shard {shard} exec phases"),
+        );
+
+        // each round is tiled exactly by its draft/verify/accept spans
+        for r in &rounds {
+            let (lo, hi) = (r.t, r.t + r.dur);
+            let inner: Vec<&&Event> = phases
+                .iter()
+                .filter(|p| p.t >= lo - EPS && p.t < hi - EPS)
+                .collect();
+            assert!(
+                !inner.is_empty(),
+                "shard {shard}: round at t={lo:.6} has no phase spans"
+            );
+            let mut covered = 0.0;
+            for p in &inner {
+                assert!(
+                    p.t + p.dur <= hi + 1e-6,
+                    "shard {shard}: phase escapes its round span"
+                );
+                covered += p.dur;
+            }
+            assert!(
+                (covered - r.dur).abs() < 1e-6,
+                "shard {shard}: phases cover {covered:.9}s of a {:.9}s round",
+                r.dur
+            );
+        }
+
+        // every phase span lies inside some round span (nesting)
+        for p in &phases {
+            assert!(
+                rounds
+                    .iter()
+                    .any(|r| p.t >= r.t - EPS && p.t + p.dur <= r.t + r.dur + 1e-6),
+                "shard {shard}: orphan phase at t={:.6}",
+                p.t
+            );
+        }
+    }
+}
+
+// ------------------------------------------------------------- export schemas
+
+#[test]
+fn chrome_trace_export_is_schema_valid_and_exporters_agree() {
+    let seed = 6u64;
+    let mut cfg = paper_sim_config(seed);
+    cfg.max_new_tokens = 32;
+    let trace = fig6_trace(&const_prompt_pool(12), 80, seed, 0.1);
+
+    let tel = Telemetry::new(TelemetryMode::Trace);
+    let mut policy = warm_model_based(&cfg, 30);
+    let (_, _) = simulate_trace_continuous_admission_tel(
+        &cfg,
+        &mut policy,
+        &mut SloAware::default(),
+        &trace,
+        &tel,
+    );
+    let events = tel.events();
+    assert!(!events.is_empty());
+
+    // Chrome trace_event document: every record has name/ph/pid, spans
+    // ("X") carry ts + dur, and the whole thing survives a JSON round-trip
+    let doc = export::chrome_trace(&events);
+    let trace_events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!trace_events.is_empty());
+    let mut seen_span = false;
+    for e in trace_events {
+        let ph = e.get("ph").unwrap().as_str().unwrap();
+        assert!(
+            ["M", "X", "i", "C"].contains(&ph),
+            "unexpected phase type {ph:?}"
+        );
+        assert!(!e.get("name").unwrap().as_str().unwrap().is_empty());
+        e.get("pid").unwrap().as_usize().unwrap();
+        if ph != "M" {
+            assert!(e.get("ts").unwrap().as_f64().unwrap() >= 0.0);
+            e.get("tid").unwrap().as_usize().unwrap();
+        }
+        if ph == "X" {
+            assert!(e.get("dur").unwrap().as_f64().unwrap() >= 0.0);
+            seen_span = true;
+        }
+    }
+    assert!(seen_span, "a decode run must produce span records");
+    let reparsed = Json::parse(&doc.pretty()).expect("chrome trace must be valid JSON");
+    assert_eq!(
+        reparsed.get("traceEvents").unwrap().as_arr().unwrap().len(),
+        trace_events.len()
+    );
+
+    // JSONL: one valid JSON object per event, tagged with its kind
+    let jsonl = export::events_jsonl(&events);
+    assert_eq!(jsonl.lines().count(), events.len());
+    for line in jsonl.lines() {
+        let obj = Json::parse(line).expect("each JSONL line parses");
+        obj.get("ev").unwrap().as_str().unwrap();
+        obj.get("t").unwrap().as_f64().unwrap();
+    }
+
+    // Prometheus text: typed metric families, and the round counter a
+    // decode run must have bumped
+    let prom = export::prometheus_text(&tel.registry());
+    assert!(prom.contains("# TYPE "), "missing TYPE headers:\n{prom}");
+    assert!(
+        prom.contains("# TYPE specbatch_rounds_total counter"),
+        "missing round counter family:\n{prom}"
+    );
+}
+
+#[test]
+fn bench_fig6_report_matches_the_experiment_outcome() {
+    let tel = Telemetry::new(TelemetryMode::Trace);
+    let cfg = ServerConfig {
+        telemetry: tel.clone(),
+        ..stub_server_cfg(SchedulingMode::Continuous, KvLayout::Paged)
+    };
+    let trace = fig6_trace(&stub_prompt_pool(), 48, 11, 0.002);
+    let out = run_experiment(
+        Backend::Stub(StubSpec::default()),
+        cfg,
+        PolicySpec::Fixed(2),
+        None,
+        &trace,
+    )
+    .expect("stub experiment");
+
+    let config = Json::obj(vec![
+        ("bench", Json::Str("fig6".into())),
+        ("requests", Json::Num(48.0)),
+    ]);
+    let report = bench::bench_report("fig6", &out.recorder, &out.timeline, config);
+
+    // write + parse back: exactly what BENCH_fig6.json would contain
+    let dir = std::env::temp_dir().join(format!("specbatch_bench_fig6_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("BENCH_fig6.json");
+    report.write_file(&path).unwrap();
+    let doc = Json::parse_file(&path).unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let close = |a: f64, b: f64| (a - b).abs() <= 1e-12 * a.abs().max(b.abs()).max(1.0);
+    assert_eq!(doc.get("name").unwrap().as_str().unwrap(), "fig6");
+    assert_eq!(
+        doc.get("requests").unwrap().as_usize().unwrap(),
+        out.recorder.len()
+    );
+    let slo = out.recorder.slo_attainment();
+    assert_eq!(
+        doc.get("completed").unwrap().as_usize().unwrap(),
+        slo.completed
+    );
+    assert_eq!(doc.get("shed").unwrap().as_usize().unwrap(), slo.shed);
+    let ptl = doc.get("per_token_latency_s").unwrap();
+    assert!(close(
+        ptl.get("mean").unwrap().as_f64().unwrap(),
+        out.recorder.mean_per_token_latency()
+    ));
+    assert!(ptl.get("p50").unwrap().as_f64().unwrap() > 0.0);
+    assert!(
+        ptl.get("p99").unwrap().as_f64().unwrap()
+            >= ptl.get("p50").unwrap().as_f64().unwrap()
+    );
+    assert!(close(
+        doc.get("tokens_per_s").unwrap().as_f64().unwrap(),
+        out.recorder.throughput_tokens_per_s()
+    ));
+    assert_eq!(
+        doc.get("rounds").unwrap().as_usize().unwrap(),
+        out.timeline.len()
+    );
+    let slo_doc = doc.get("slo").unwrap();
+    assert_eq!(
+        slo_doc.get("met").unwrap().as_usize().unwrap()
+            + slo_doc.get("missed").unwrap().as_usize().unwrap(),
+        slo.deadlined
+    );
+    assert!(!doc
+        .get("config_fingerprint")
+        .unwrap()
+        .as_str()
+        .unwrap()
+        .is_empty());
+    // fingerprint is over the config only — reproducible from the doc
+    assert_eq!(
+        doc.get("config_fingerprint").unwrap().as_str().unwrap(),
+        bench::config_fingerprint(doc.get("config").unwrap())
+    );
+
+    // the live handle also saw the run: one terminal finish per request
+    let finish_count = tel
+        .events()
+        .iter()
+        .filter(|e| matches!(e.kind, EventKind::Finish { .. }))
+        .count();
+    assert_eq!(finish_count, out.recorder.len());
+}
