@@ -2,7 +2,10 @@
 //!
 //! Times each stage of a serving round in isolation on the real runtime:
 //! host staging, SSM speculate, LLM verify (per s), acceptance logic, and
-//! the end-to-end round; prints the engine stopwatch breakdown.  Run
+//! the end-to-end round; prints the engine stopwatch breakdown.  Both
+//! build flavors additionally sweep an end-to-end **rounds/s** grid on
+//! the stub backend — the zero-allocation hot-path yardstick CI's
+//! bench-regress step diffs against the committed baseline.  Run
 //! before/after each optimization and record deltas in EXPERIMENTS.md
 //! §Perf.
 
@@ -12,12 +15,11 @@ mod common;
 use std::time::Instant;
 
 use specbatch::engine::acceptance::accept_batch;
-#[cfg(feature = "pjrt")]
 use specbatch::engine::{Engine, EngineConfig};
 #[cfg(feature = "pjrt")]
 use specbatch::model::Model;
-#[cfg(feature = "pjrt")]
 use specbatch::policy::Fixed;
+use specbatch::testkit::stub::StubSpec;
 use specbatch::util::csv::{f, Csv};
 use specbatch::util::json::Json;
 use specbatch::util::prng::Pcg64;
@@ -27,8 +29,11 @@ fn bench_acceptance(csv: &mut Csv) -> f64 {
     let b = 16;
     let s = 4;
     let mut rng = Pcg64::new(1);
-    let draft: Vec<i32> = (0..b * s).map(|_| rng.next_below(512) as i32).collect();
-    let pred: Vec<i32> = (0..b * (s + 1)).map(|_| rng.next_below(512) as i32).collect();
+    // bulk-fill the token material (same draws as the sequential loop)
+    let mut raw = vec![0u32; b * s + b * (s + 1)];
+    rng.fill_below(512, &mut raw);
+    let draft: Vec<i32> = raw[..b * s].iter().map(|&v| v as i32).collect();
+    let pred: Vec<i32> = raw[b * s..].iter().map(|&v| v as i32).collect();
     let t0 = Instant::now();
     let iters = 100_000;
     for _ in 0..iters {
@@ -45,18 +50,71 @@ fn bench_acceptance(csv: &mut Csv) -> f64 {
     us
 }
 
-/// Without the PJRT runtime only the pure host-side sections run.
+/// End-to-end rounds/s on the stub backend: steady-state `decode_round`
+/// over a full (batch × spec-len) grid, no admission or retirement, so
+/// the number isolates the SoA/arena decode loop itself.  The headline
+/// cell is `rps_b32_s4`.
+fn bench_rounds_per_sec(csv: &mut Csv) -> Vec<(String, Json)> {
+    let rounds = if common::is_quick() { 30 } else { 200 };
+    let warmup = 3;
+    let mut metrics = Vec::new();
+    for &b in &[1usize, 8, 16, 32] {
+        for &s in &[0usize, 2, 4, 6] {
+            let spec = StubSpec {
+                vocab: 512,
+                max_seq: 2048,
+                batch_buckets: vec![1, 8, 16, 32],
+                ..StubSpec::default()
+            };
+            let mut engine =
+                Engine::stub(spec, EngineConfig::default()).expect("stub engine");
+            let mut policy = Fixed(s);
+            let mut rng = Pcg64::new(0x517e + b as u64);
+            let prompts: Vec<Vec<i32>> = (0..b)
+                .map(|_| (0..8).map(|_| 4 + rng.next_below(500) as i32).collect())
+                .collect();
+            // rows must outlive the timed window: commit ceiling past it
+            let max_new = (warmup + rounds) * (s + 1) + 4;
+            let mut st = engine
+                .prefill_rows(&prompts, b, s > 0, max_new)
+                .expect("prefill");
+            for _ in 0..warmup {
+                engine.decode_round(&mut st, &mut policy).expect("warmup");
+            }
+            let t0 = Instant::now();
+            for _ in 0..rounds {
+                engine.decode_round(&mut st, &mut policy).expect("round");
+            }
+            let rps = rounds as f64 / t0.elapsed().as_secs_f64();
+            println!("rounds_per_sec(b={b},s={s}): {rps:.0}");
+            csv.row(&[
+                "rounds_per_sec".into(),
+                b.to_string(),
+                s.to_string(),
+                f(rps),
+            ]);
+            metrics.push((format!("rps_b{b}_s{s}"), Json::Num(rps)));
+        }
+    }
+    metrics
+}
+
+/// Without the PJRT runtime the host-side sections and the stub-backend
+/// rounds/s grid run.
 #[cfg(not(feature = "pjrt"))]
 fn main() {
     let mut csv = Csv::new(&["section", "batch", "s", "mean_us"]);
     let acc_us = bench_acceptance(&mut csv);
+    let rps = bench_rounds_per_sec(&mut csv);
     csv.write_file(common::results_path("micro_hotpath.csv"))
         .unwrap();
     common::skip_real("device-step micro-benchmarks");
     println!("-> results/micro_hotpath.csv (host sections only)");
+    let mut metrics = vec![("acceptance_us".to_string(), Json::Num(acc_us))];
+    metrics.extend(rps);
     common::emit_bench_custom(
         "micro_hotpath",
-        Json::obj(vec![("acceptance_us", Json::Num(acc_us))]),
+        Json::Obj(metrics.into_iter().collect()),
         Json::obj(vec![
             ("bench", Json::Str("micro_hotpath".into())),
             ("sections", Json::Str("host-only".into())),
@@ -74,6 +132,9 @@ fn main() {
 
     // --- acceptance logic (pure host) ---
     let acc_us = bench_acceptance(&mut csv);
+
+    // --- stub-backend rounds/s grid (host-side hot path) ---
+    let rps = bench_rounds_per_sec(&mut csv);
 
     // --- single verify / speculate steps ---
     let llm = Model::new(&rt, "llm").expect("llm");
@@ -150,12 +211,14 @@ fn main() {
     csv.write_file(common::results_path("micro_hotpath.csv"))
         .unwrap();
     println!("-> results/micro_hotpath.csv");
+    let mut metrics = vec![
+        ("acceptance_us".to_string(), Json::Num(acc_us)),
+        ("e2e_us_per_token".to_string(), Json::Num(e2e_us)),
+    ];
+    metrics.extend(rps);
     common::emit_bench_custom(
         "micro_hotpath",
-        Json::obj(vec![
-            ("acceptance_us", Json::Num(acc_us)),
-            ("e2e_us_per_token", Json::Num(e2e_us)),
-        ]),
+        Json::Obj(metrics.into_iter().collect()),
         Json::obj(vec![
             ("bench", Json::Str("micro_hotpath".into())),
             ("sections", Json::Str("full".into())),

@@ -161,6 +161,8 @@ pub struct ContinuousBatcher {
     /// [`ContinuousBatcher::admission_totals`])
     deferred_total: usize,
     shed_total: usize,
+    /// reusable buffer for [`Engine::export_rows`] at reshape boundaries
+    export_buf: Vec<(usize, AdmitRequest)>,
 }
 
 impl ContinuousBatcher {
@@ -186,6 +188,7 @@ impl ContinuousBatcher {
             remapped_total: 0,
             deferred_total: 0,
             shed_total: 0,
+            export_buf: Vec::new(),
         }
     }
 
@@ -389,9 +392,10 @@ impl ContinuousBatcher {
                     // the new epoch allocates (the carried chains stay
                     // alive through the handles' refcounts)
                     let mut old = self.epoch.take().expect("epoch present");
-                    let carry: Vec<(AdmitRequest, RowMeta)> = engine
-                        .export_rows(&old.state)
-                        .into_iter()
+                    let mut export_buf = std::mem::take(&mut self.export_buf);
+                    engine.export_rows(&old.state, &mut export_buf);
+                    let carry: Vec<(AdmitRequest, RowMeta)> = export_buf
+                        .drain(..)
                         .map(|(slot, req)| {
                             let meta = old.slots[slot]
                                 .clone()
@@ -399,6 +403,7 @@ impl ContinuousBatcher {
                             (req, meta)
                         })
                         .collect();
+                    self.export_buf = export_buf;
                     self.fold_epoch_stats(&old.state);
                     engine.release_state(&mut old.state);
                     self.start_epoch(engine, policy, desired_bucket, now, carry, admit_n)?;

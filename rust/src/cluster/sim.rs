@@ -41,7 +41,7 @@ use crate::simulator::des::{emit_round_phases, kv_blocks_of, sim_bucket_for};
 use crate::simulator::{reshape_cost, round_cost, SimConfig};
 use crate::telemetry::{PhaseKind, Telemetry};
 use crate::traffic::{Trace, TraceItem};
-use crate::util::prng::Pcg64;
+use crate::util::prng::{DrawBuffer, Pcg64};
 
 use super::{marginal_cost, Router, ShardLoad};
 
@@ -107,6 +107,12 @@ struct Shard {
     /// padded bucket of the shard's active epoch (0 = idle); growth past
     /// it is an epoch reshape, charged per `SimConfig::kv_layout`
     bucket: usize,
+    /// round-scratch mirror of the engine's arenas: the accepted-count
+    /// buffer cycles through the policy feedback by mem::take
+    accepted: Vec<u32>,
+    /// bulk-filled acceptance draws; leftovers are consumed before the
+    /// next fill, so the per-shard stream stays exactly sequential
+    draws: DrawBuffer,
 }
 
 impl Shard {
@@ -203,6 +209,8 @@ pub fn simulate_trace_cluster_admission_tel(
             rounds: Vec::new(),
             epoch: 0,
             bucket: 0,
+            accepted: Vec::new(),
+            draws: DrawBuffer::new(),
         })
         .collect();
     let mut recorder = LatencyRecorder::new();
@@ -455,7 +463,7 @@ fn step_shard(
     let ctx = sh.live.iter().map(|r| r.plen + r.generated).sum::<usize>() / b;
     let s = if may_speculate { policy.choose(b, 8) } else { 0 };
     let rc = round_cost(cfg, b, s, ctx);
-    let mut accepted_rows: Vec<u32> = Vec::new();
+    sh.accepted.clear();
     let mut committed = 0usize;
     if s == 0 {
         for row in sh.live.iter_mut() {
@@ -464,21 +472,22 @@ fn step_shard(
         }
     } else {
         let acc = cfg.acceptance_at(sh.t);
+        sh.draws.ensure(&mut sh.rng, b * s);
         for row in sh.live.iter_mut() {
-            let a = acc.sample(s, &mut sh.rng);
-            accepted_rows.push(a as u32);
+            let a = acc.sample(s, &mut sh.draws);
+            sh.accepted.push(a as u32);
             row.generated += a + 1;
             committed += a + 1;
         }
     }
     let t_round = sh.t;
     sh.t += rc;
-    let accepted_total: usize = accepted_rows.iter().map(|&a| a as usize).sum();
+    let accepted_total: usize = sh.accepted.iter().map(|&a| a as usize).sum();
     let fb = RoundFeedback {
         live: b,
         width: b, // continuous rounds execute at exactly the live width
         s,
-        accepted: accepted_rows,
+        accepted: std::mem::take(&mut sh.accepted),
         committed,
         round_time: rc,
     };
@@ -501,6 +510,8 @@ fn step_shard(
             tel.policy_fit(sh.t, policy.snapshot());
         }
     }
+    // reclaim the feedback's accepted buffer for the shard's next round
+    sh.accepted = fb.accepted;
 
     // --- retire finished rows immediately, freeing capacity ---
     let mut i = 0;

@@ -50,6 +50,38 @@ pub fn accept_batch(draft: &[i32], pred: &[i32], batch: usize, s: usize) -> Vec<
         .collect()
 }
 
+/// Allocation-free batched acceptance into caller-owned scratch: row `i`'s
+/// committed tokens land at `commit[i*(s+1)..][..commit_len[i]]`
+/// (`commit_len[i]` = accepted + 1, matching [`accept_row`]'s commit).
+/// The hot-path twin of [`accept_batch`] — same decisions, flat output.
+pub fn accept_into(
+    draft: &[i32],
+    pred: &[i32],
+    batch: usize,
+    s: usize,
+    commit: &mut Vec<i32>,
+    commit_len: &mut Vec<u32>,
+) {
+    assert_eq!(draft.len(), batch * s);
+    assert_eq!(pred.len(), batch * (s + 1));
+    commit.clear();
+    commit.resize(batch * (s + 1), 0);
+    commit_len.clear();
+    commit_len.resize(batch, 0);
+    for i in 0..batch {
+        let d = &draft[i * s..(i + 1) * s];
+        let p = &pred[i * (s + 1)..(i + 1) * (s + 1)];
+        let mut accepted = 0;
+        while accepted < s && d[accepted] == p[accepted] {
+            accepted += 1;
+        }
+        let out = &mut commit[i * (s + 1)..][..accepted + 1];
+        out[..accepted].copy_from_slice(&d[..accepted]);
+        out[accepted] = p[accepted];
+        commit_len[i] = (accepted + 1) as u32;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -131,6 +163,26 @@ mod tests {
         assert_eq!(r.commit.len(), r.accepted + 1);
         assert_eq!(&r.commit[..r.accepted], &draft[..r.accepted]);
         assert_eq!(r.commit[r.accepted], pred[r.accepted]);
+    }
+
+    #[test]
+    fn accept_into_matches_accept_batch() {
+        // exhaustive-ish cross-check on a mixed batch: full accept,
+        // partial, immediate reject, and a later coincidence
+        let draft = [5, 6, /* r1 */ 5, 9, /* r2 */ 1, 2, /* r3 */ 4, 6];
+        let pred = [5, 6, 7, /* r1 */ 5, 8, 9, /* r2 */ 9, 2, 3, /* r3 */ 3, 6, 1];
+        let rows = accept_batch(&draft, &pred, 4, 2);
+        let (mut commit, mut commit_len) = (Vec::new(), Vec::new());
+        accept_into(&draft, &pred, 4, 2, &mut commit, &mut commit_len);
+        for (i, r) in rows.iter().enumerate() {
+            let n = commit_len[i] as usize;
+            assert_eq!(n, r.accepted + 1, "row {i} length");
+            assert_eq!(&commit[i * 3..][..n], r.commit.as_slice(), "row {i}");
+        }
+        // scratch reuse across calls must not leak stale state
+        accept_into(&draft[..2], &pred[..3], 1, 2, &mut commit, &mut commit_len);
+        assert_eq!(commit_len.len(), 1);
+        assert_eq!(&commit[..commit_len[0] as usize], rows[0].commit.as_slice());
     }
 
     #[test]

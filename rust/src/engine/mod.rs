@@ -61,7 +61,8 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Result};
 
 use crate::kvcache::{
-    BlockChain, BlockManager, CarriedKv, KvBlockStats, KvHandle, KvLayout, DEFAULT_BLOCK_SIZE,
+    BlockChain, BlockManager, CarriedKv, FlatTables, KvBlockStats, KvHandle, KvLayout,
+    DEFAULT_BLOCK_SIZE,
 };
 use crate::model::{Kv, ModelHandle};
 use crate::policy::{RoundFeedback, SpeculationPolicy};
@@ -70,7 +71,7 @@ use crate::runtime::{ExeKind, Manifest, Runtime};
 use crate::telemetry::{PhaseKind, Telemetry};
 use crate::testkit::stub::{StubModel, StubRole, StubSpec};
 use crate::util::timer::Stopwatch;
-use acceptance::accept_batch;
+use acceptance::accept_into;
 
 /// Engine knobs (defaults = paper Sec. 5 methodology).
 #[derive(Debug, Clone)]
@@ -292,51 +293,122 @@ impl EngineLimits {
     }
 }
 
-/// Per-slot state during a serving epoch.  A slot is either vacant
-/// (`real == false`: bucket padding / retired), live, or frozen
-/// (`finished == true`: awaiting retirement).
+/// Per-slot row lifecycles in structure-of-arrays layout.  A slot is
+/// either vacant (`real == false`: bucket padding / retired), live, or
+/// frozen (`finished == true`: awaiting retirement).
+///
+/// Token storage is one flat arena of `bucket * stride` i32s — slot `i`'s
+/// committed stream lives at `tokens[i*stride..][..len[i]]` — so the
+/// decode hot loop walks parallel flat vectors instead of chasing
+/// per-row `Vec`s, and committing a token is a bounds-checked store,
+/// never an allocation.  `stride = max_seq + 2` covers the longest
+/// committed stream any round can produce: the pre-verify capacity check
+/// caps ingest at `max_seq`, so `committed <= max_seq + 1` always holds.
 #[derive(Debug, Clone)]
-struct Row {
-    committed: Vec<i32>,
-    prompt_len: usize,
-    max_new: usize,
+struct RowSoa {
+    stride: usize,
+    tokens: Vec<i32>,
+    /// committed length per slot (>= 1: prompts are non-empty, vacant
+    /// slots hold a lone `<bos>`)
+    len: Vec<u32>,
+    prompt_len: Vec<u32>,
+    max_new: Vec<u32>,
     /// real request (false = vacant padding slot)
-    real: bool,
+    real: Vec<bool>,
     /// frozen rows keep shapes static but stop committing
-    finished: bool,
+    finished: Vec<bool>,
 }
 
-impl Row {
-    fn vacant(bos: i32) -> Row {
-        Row {
-            committed: vec![bos],
-            prompt_len: 1,
-            max_new: 0,
-            real: false,
-            finished: true,
+impl RowSoa {
+    fn new(bucket: usize, stride: usize, bos: i32) -> RowSoa {
+        assert!(stride > 0, "RowSoa stride must be positive");
+        let mut rows = RowSoa {
+            stride,
+            tokens: vec![0; bucket * stride],
+            len: vec![0; bucket],
+            prompt_len: vec![0; bucket],
+            max_new: vec![0; bucket],
+            real: vec![false; bucket],
+            finished: vec![true; bucket],
+        };
+        for i in 0..bucket {
+            rows.set_vacant(i, bos);
         }
+        rows
     }
 
-    fn generated(&self) -> usize {
-        self.committed.len() - self.prompt_len
+    fn n(&self) -> usize {
+        self.len.len()
     }
 
-    fn last(&self) -> i32 {
-        *self.committed.last().expect("committed never empty")
+    /// Slot `i`'s full committed stream (prompt + generated).
+    fn committed(&self, i: usize) -> &[i32] {
+        &self.tokens[i * self.stride..][..self.len[i] as usize]
+    }
+
+    /// Slot `i`'s generated suffix.
+    fn gen_tokens(&self, i: usize) -> &[i32] {
+        &self.tokens[i * self.stride..][self.prompt_len[i] as usize..self.len[i] as usize]
+    }
+
+    fn generated(&self, i: usize) -> usize {
+        (self.len[i] - self.prompt_len[i]) as usize
+    }
+
+    fn last(&self, i: usize) -> i32 {
+        self.tokens[i * self.stride + self.len[i] as usize - 1]
+    }
+
+    fn push(&mut self, i: usize, t: i32) {
+        let n = self.len[i] as usize;
+        self.tokens[i * self.stride + n] = t;
+        self.len[i] = (n + 1) as u32;
+    }
+
+    fn extend(&mut self, i: usize, ts: &[i32]) {
+        let n = self.len[i] as usize;
+        self.tokens[i * self.stride + n..][..ts.len()].copy_from_slice(ts);
+        self.len[i] = (n + ts.len()) as u32;
+    }
+
+    fn install(&mut self, i: usize, context: &[i32], prompt_len: usize, max_new: usize) {
+        self.tokens[i * self.stride..][..context.len()].copy_from_slice(context);
+        self.len[i] = context.len() as u32;
+        self.prompt_len[i] = prompt_len as u32;
+        self.max_new[i] = max_new as u32;
+        self.real[i] = true;
+        self.finished[i] = false;
+    }
+
+    fn set_vacant(&mut self, i: usize, bos: i32) {
+        self.tokens[i * self.stride] = bos;
+        self.len[i] = 1;
+        self.prompt_len[i] = 1;
+        self.max_new[i] = 0;
+        self.real[i] = false;
+        self.finished[i] = true;
+    }
+
+    fn is_live(&self, i: usize) -> bool {
+        self.real[i] && !self.finished[i]
+    }
+
+    fn committed_total(&self) -> usize {
+        (0..self.n())
+            .filter(|&i| self.real[i])
+            .map(|i| self.generated(i))
+            .sum()
     }
 }
 
-fn committed_total(rows: &[Row]) -> usize {
-    rows.iter().filter(|r| r.real).map(Row::generated).sum()
-}
-
-/// Per-slot block tables of a paged-layout epoch, one per model (indexed
-/// by slot; empty table = vacant or dense).  The block ids reference the
-/// engine-owned pools ([`Engine`] is the allocator; the state is only the
-/// table holder, so carried chains can outlive the epoch).
+/// Per-slot block tables of a paged-layout epoch, one per model (flat
+/// fixed-stride [`FlatTables`]; empty row = vacant or dense).  The block
+/// ids reference the engine-owned pools ([`Engine`] is the allocator; the
+/// state is only the table holder, so carried chains can outlive the
+/// epoch).
 struct SlotTables {
-    llm: Vec<Vec<u32>>,
-    ssm: Vec<Vec<u32>>,
+    llm: FlatTables,
+    ssm: FlatTables,
 }
 
 /// The state of one serving epoch: row lifecycles + KV caches, driven by
@@ -344,7 +416,7 @@ struct SlotTables {
 pub struct BatchState {
     bucket: usize,
     may_speculate: bool,
-    rows: Vec<Row>,
+    rows: RowSoa,
     llm_kv: Kv,
     ssm_kv: Option<Kv>,
     /// the SSM's KV is behind (plain rounds / fresh admissions); the next
@@ -361,15 +433,15 @@ impl BatchState {
     }
 
     pub fn live_rows(&self) -> usize {
-        self.rows.iter().filter(|r| r.real && !r.finished).count()
+        (0..self.rows.n()).filter(|&i| self.rows.is_live(i)).count()
     }
 
     pub fn has_live(&self) -> bool {
-        self.rows.iter().any(|r| r.real && !r.finished)
+        (0..self.rows.n()).any(|i| self.rows.is_live(i))
     }
 
     pub fn occupied_slots(&self) -> usize {
-        self.rows.iter().filter(|r| r.real).count()
+        self.rows.real.iter().filter(|&&r| r).count()
     }
 
     pub fn free_slots(&self) -> usize {
@@ -380,16 +452,15 @@ impl BatchState {
     /// (0 under the dense layout) — the per-round utilization counter
     /// recorded into `metrics::RoundEvent`.
     pub fn kv_blocks_in_use(&self) -> usize {
-        self.tables.as_ref().map_or(0, |t| {
-            t.llm.iter().map(Vec::len).sum::<usize>() + t.ssm.iter().map(Vec::len).sum::<usize>()
-        })
+        self.tables
+            .as_ref()
+            .map_or(0, |t| t.llm.total_blocks() + t.ssm.total_blocks())
     }
 
     /// Generated tokens of a slot so far (None when the slot is vacant).
     pub fn generated_tokens(&self, slot: usize) -> Option<&[i32]> {
-        let row = self.rows.get(slot)?;
-        if row.real {
-            Some(&row.committed[row.prompt_len..])
+        if slot < self.rows.n() && self.rows.real[slot] {
+            Some(self.rows.gen_tokens(slot))
         } else {
             None
         }
@@ -403,17 +474,9 @@ impl BatchState {
     /// backlog).
     pub fn ingest_state(&self) -> Vec<(usize, u32, Option<u32>)> {
         let llm = self.llm_kv.ingested();
-        let ssm: Option<Vec<u32>> = self.ssm_kv.as_ref().map(|kv| kv.ingested().to_vec());
-        self.rows
-            .iter()
-            .enumerate()
-            .map(|(i, r)| {
-                (
-                    r.committed.len(),
-                    llm[i],
-                    ssm.as_ref().map(|v| v[i]),
-                )
-            })
+        let ssm: Option<&[u32]> = self.ssm_kv.as_ref().map(|kv| kv.ingested());
+        (0..self.rows.n())
+            .map(|i| (self.rows.len[i] as usize, llm[i], ssm.map(|v| v[i])))
             .collect()
     }
 }
@@ -480,6 +543,34 @@ fn build_pools(limits: &EngineLimits, layout: KvLayout) -> Option<KvPools> {
     })
 }
 
+/// Reusable hot-path buffers owned by the engine: every per-round vector
+/// the decode loop needs, grown once to its high-water mark and reused
+/// across rounds and epochs, so steady-state `decode_round` performs
+/// zero heap allocations (pinned by `rust/tests/zero_alloc.rs` with a
+/// counting global allocator).
+#[derive(Debug, Default)]
+struct RoundScratch {
+    /// verify feed `[B, s+1]` (also the admission ingest feed)
+    feed: Vec<i32>,
+    /// SSM delta tokens `[B, 2]` + per-row delta lengths
+    delta: Vec<i32>,
+    dlens: Vec<i32>,
+    /// per-row clamp targets (`committed - 1`)
+    clamp: Vec<u32>,
+    /// LLM predictions / SSM drafts
+    pred: Vec<i32>,
+    draft: Vec<i32>,
+    /// flat acceptance output: commit tokens `[B, s+1]` + per-row lengths
+    commit: Vec<i32>,
+    commit_len: Vec<u32>,
+    /// per-real-row accepted counts of the current round; telemetry and
+    /// the policy feedback share it (`mem::take` round-trip, no clone)
+    accepted: Vec<u32>,
+    /// admission ingest: post-call clamp targets + ingest-counter snapshot
+    desired: Vec<u32>,
+    ing: Vec<u32>,
+}
+
 /// The batched speculative decoding engine.
 pub struct Engine<'rt> {
     pub cfg: EngineConfig,
@@ -488,6 +579,8 @@ pub struct Engine<'rt> {
     ssm: ModelHandle<'rt>,
     /// per-section timing for the §Perf pass
     pub stopwatch: Stopwatch,
+    /// round-scratch arenas (see [`RoundScratch`])
+    scratch: RoundScratch,
     /// observability handle (disabled by default: every emit below is a
     /// single `Option` branch, keeping the hot path allocation-free)
     tel: Telemetry,
@@ -518,6 +611,7 @@ impl<'rt> Engine<'rt> {
             llm: ModelHandle::Pjrt(crate::model::Model::new(rt, "llm")?),
             ssm: ModelHandle::Pjrt(crate::model::Model::new(rt, "ssm")?),
             stopwatch: Stopwatch::new(),
+            scratch: RoundScratch::default(),
             tel: Telemetry::disabled(),
             round_ctx: (0, 0),
             pools: None,
@@ -545,6 +639,7 @@ impl<'rt> Engine<'rt> {
             llm: ModelHandle::stub(StubModel::new(spec.clone(), StubRole::Llm)),
             ssm: ModelHandle::stub(StubModel::new(spec, StubRole::Ssm)),
             stopwatch: Stopwatch::new(),
+            scratch: RoundScratch::default(),
             tel: Telemetry::disabled(),
             round_ctx: (0, 0),
             pools,
@@ -631,8 +726,8 @@ impl<'rt> Engine<'rt> {
 
         // --- collect outputs ---
         let mut tokens = Vec::with_capacity(n);
-        for row in st.rows.iter().take(n) {
-            let gen = &row.committed[row.prompt_len..];
+        for i in 0..n {
+            let gen = st.rows.gen_tokens(i);
             let mut out: Vec<i32> = Vec::with_capacity(max_new.min(gen.len()));
             for &t in gen.iter().take(max_new) {
                 out.push(t);
@@ -686,28 +781,22 @@ impl<'rt> Engine<'rt> {
         }
         let may_speculate = may_speculate && self.limits.max_spec_len(bucket) > 0;
 
-        // --- assemble rows (real + vacant padding) ---
-        let mut rows: Vec<Row> = Vec::with_capacity(bucket);
-        for p in prompts {
-            rows.push(Row {
-                committed: p.clone(),
-                prompt_len: p.len(),
-                max_new,
-                real: true,
-                finished: false,
-            });
-        }
-        for _ in prompts.len()..bucket {
-            rows.push(Row::vacant(self.cfg.bos_token));
+        // --- assemble rows (real + vacant padding), SoA layout ---
+        // stride covers committed <= max_seq + 1 (see RowSoa docs)
+        let stride = self.limits.max_seq + 2;
+        let mut rows = RowSoa::new(bucket, stride, self.cfg.bos_token);
+        for (i, p) in prompts.iter().enumerate() {
+            rows.install(i, p, p.len(), max_new);
         }
 
         // --- padded prefill over both models ---
         let mut tokens = vec![self.cfg.pad_token; bucket * max_prompt];
         let mut plens = vec![0i32; bucket];
-        for (i, row) in rows.iter().enumerate() {
-            tokens[i * max_prompt..i * max_prompt + row.prompt_len]
-                .copy_from_slice(&row.committed[..row.prompt_len]);
-            plens[i] = row.prompt_len as i32;
+        for i in 0..bucket {
+            let plen = rows.prompt_len[i] as usize;
+            tokens[i * max_prompt..i * max_prompt + plen]
+                .copy_from_slice(&rows.committed(i)[..plen]);
+            plens[i] = plen as i32;
         }
         let tel_mark = self
             .tel
@@ -732,13 +821,23 @@ impl<'rt> Engine<'rt> {
             self.tel.phase(t0, self.tel.now() - t0, PhaseKind::Prefill);
         }
         // commit the prefill token
-        for (row, &t) in rows.iter_mut().zip(&first) {
-            row.committed.push(t);
+        for (i, &t) in first.iter().enumerate() {
+            rows.push(i, t);
         }
+        let table_stride = self.limits.max_seq.div_ceil(DEFAULT_BLOCK_SIZE).max(1);
         let tables = self.pools.as_ref().map(|_| SlotTables {
-            llm: vec![Vec::new(); bucket],
-            ssm: vec![Vec::new(); bucket],
+            llm: FlatTables::new(bucket, table_stride),
+            ssm: FlatTables::new(bucket, table_stride),
         });
+        let mut stats = GenStats::default();
+        // pre-size the per-epoch sample vectors to the decode loop's
+        // round budget so steady-state pushes never reallocate (the
+        // zero-alloc invariant); continuous-batching epochs outliving
+        // the budget fall back to amortized growth
+        let round_budget = 4 * (max_new + 2) + 1;
+        stats.spec_lens.reserve(round_budget);
+        stats.per_round.reserve(round_budget);
+        stats.accept_samples.reserve(round_budget * bucket);
         let mut st = BatchState {
             bucket,
             may_speculate,
@@ -747,7 +846,7 @@ impl<'rt> Engine<'rt> {
             ssm_kv,
             ssm_backlog: false,
             tables,
-            stats: GenStats::default(),
+            stats,
         };
         self.check_eos_and_limits(&mut st.rows);
         self.sync_blocks(&mut st)?;
@@ -774,8 +873,8 @@ impl<'rt> Engine<'rt> {
         } else {
             0
         };
-        let before = committed_total(&st.rows);
-        let samples_before = st.stats.accept_samples.len();
+        let before = st.rows.committed_total();
+        self.scratch.accepted.clear();
         st.stats.spec_lens.push(s);
         st.stats.rounds += 1;
 
@@ -836,8 +935,7 @@ impl<'rt> Engine<'rt> {
         let wall_time = wall_start.elapsed().as_secs_f64();
         self.check_eos_and_limits(&mut st.rows);
         self.sync_blocks(st)?;
-        let accepted_rows: Vec<u32> = st.stats.accept_samples[samples_before..].to_vec();
-        let committed = committed_total(&st.rows) - before;
+        let committed = st.rows.committed_total() - before;
         if let Some((t0, catch0, draft0, verify0)) = tel_mark {
             let catch = (self.stopwatch.total("ssm_catch_up") - catch0).as_secs_f64();
             let draft = (self.stopwatch.total("speculate") - draft0).as_secs_f64();
@@ -850,7 +948,7 @@ impl<'rt> Engine<'rt> {
                 self.round_ctx.1,
                 s,
                 committed,
-                &accepted_rows,
+                &self.scratch.accepted,
                 st.kv_blocks_in_use(),
             );
             // phases laid out back-to-back in execution order; the
@@ -878,20 +976,24 @@ impl<'rt> Engine<'rt> {
             live,
             s,
             committed,
-            accepted: accepted_rows.iter().map(|&a| a as usize).sum(),
+            accepted: self.scratch.accepted.iter().map(|&a| a as usize).sum(),
             round_time: wall_time,
         };
         st.stats.per_round.push(info);
-        policy.observe(&RoundFeedback {
+        // lend the accepted buffer to the feedback (no clone), then take
+        // it back so the next round reuses its capacity
+        let fb = RoundFeedback {
             live,
             // the round executed at the padded bucket width, which is
             // what its cost scales with
             width: st.bucket,
             s,
-            accepted: accepted_rows,
+            accepted: std::mem::take(&mut self.scratch.accepted),
             committed,
             round_time: fit_time,
-        });
+        };
+        policy.observe(&fb);
+        self.scratch.accepted = fb.accepted;
         Ok(info)
     }
 
@@ -912,13 +1014,7 @@ impl<'rt> Engine<'rt> {
         if reqs.is_empty() {
             return Ok(Vec::new());
         }
-        let vacant: Vec<usize> = st
-            .rows
-            .iter()
-            .enumerate()
-            .filter(|(_, r)| !r.real)
-            .map(|(i, _)| i)
-            .collect();
+        let vacant: Vec<usize> = (0..st.rows.n()).filter(|&i| !st.rows.real[i]).collect();
         if reqs.len() > vacant.len() {
             bail!(
                 "admit_rows: {} requests for {} free slots",
@@ -946,13 +1042,7 @@ impl<'rt> Engine<'rt> {
                 );
             }
             let ctx_len = req.context.len();
-            st.rows[slot] = Row {
-                committed: req.context,
-                prompt_len: req.prompt_len,
-                max_new: req.max_new,
-                real: true,
-                finished: false,
-            };
+            st.rows.install(slot, &req.context, req.prompt_len, req.max_new);
             match req.carried_kv {
                 Some(CarriedKv::Blocks(handle)) => {
                     self.remap_slot(st, slot, ctx_len, handle)?;
@@ -1011,19 +1101,21 @@ impl<'rt> Engine<'rt> {
                 handle.llm.ingested
             );
         }
-        // swap the chains in, releasing whatever the vacant slot held
-        for id in tables.llm[slot].drain(..) {
+        // swap the chains in, releasing whatever the vacant slot held —
+        // a span rewrite in the flat tables, no per-slot Vec churn
+        for &id in tables.llm.row(slot) {
             pools.llm.release(id);
         }
-        tables.llm[slot] = handle.llm.blocks;
+        tables.llm.set_row(slot, &handle.llm.blocks);
         st.llm_kv.set_row_ingested(slot, handle.llm.ingested);
         st.stats.remapped_tokens += handle.llm.ingested as usize;
-        for id in tables.ssm[slot].drain(..) {
+        for &id in tables.ssm.row(slot) {
             pools.ssm.release(id);
         }
+        tables.ssm.set_row(slot, &[]);
         match (st.ssm_kv.as_mut(), handle.ssm) {
             (Some(kv), Some(chain)) => {
-                tables.ssm[slot] = chain.blocks;
+                tables.ssm.set_row(slot, &chain.blocks);
                 kv.set_row_ingested(slot, chain.ingested);
             }
             (Some(kv), None) => kv.set_row_ingested(slot, 0),
@@ -1043,13 +1135,14 @@ impl<'rt> Engine<'rt> {
     /// generated tokens.
     pub fn retire_finished(&mut self, st: &mut BatchState) -> Vec<RetiredRow> {
         let mut retired = Vec::new();
-        for (i, row) in st.rows.iter_mut().enumerate() {
-            if !(row.real && row.finished) {
+        for i in 0..st.rows.n() {
+            if !(st.rows.real[i] && st.rows.finished[i]) {
                 continue;
             }
-            let gen = &row.committed[row.prompt_len..];
-            let mut tokens: Vec<i32> = Vec::with_capacity(row.max_new.min(gen.len()));
-            for &t in gen.iter().take(row.max_new) {
+            let gen = st.rows.gen_tokens(i);
+            let max_new = st.rows.max_new[i] as usize;
+            let mut tokens: Vec<i32> = Vec::with_capacity(max_new.min(gen.len()));
+            for &t in gen.iter().take(max_new) {
                 tokens.push(t);
                 if self.cfg.stop_at_eos && t == self.cfg.eos_token {
                     break;
@@ -1057,7 +1150,7 @@ impl<'rt> Engine<'rt> {
             }
             st.stats.useful_tokens += tokens.len();
             retired.push(RetiredRow { slot: i, tokens });
-            *row = Row::vacant(self.cfg.bos_token);
+            st.rows.set_vacant(i, self.cfg.bos_token);
             st.llm_kv.reset_row(i);
             if let Some(kv) = &mut st.ssm_kv {
                 kv.reset_row(i);
@@ -1080,48 +1173,51 @@ impl<'rt> Engine<'rt> {
     /// re-admission is a block-table remap with zero token re-ingestion.
     /// Call [`Engine::release_state`] on the old state afterwards; the
     /// retained references keep the carried chains alive in between.
-    pub fn export_rows(&mut self, st: &BatchState) -> Vec<(usize, AdmitRequest)> {
-        let llm_ing = st.llm_kv.ingested().to_vec();
-        let ssm_ing: Option<Vec<u32>> = st.ssm_kv.as_ref().map(|kv| kv.ingested().to_vec());
-        st.rows
-            .iter()
-            .enumerate()
-            .filter(|(_, r)| r.real && !r.finished)
-            .map(|(i, r)| {
-                let carried_kv = match (self.pools.as_mut(), st.tables.as_ref()) {
-                    (Some(pools), Some(tables)) => {
-                        let llm = BlockChain {
-                            blocks: tables.llm[i].clone(),
-                            ingested: llm_ing[i],
-                        };
-                        for &id in &llm.blocks {
-                            pools.llm.retain(id);
-                        }
-                        let ssm = ssm_ing.as_ref().map(|ing| {
-                            let chain = BlockChain {
-                                blocks: tables.ssm[i].clone(),
-                                ingested: ing[i],
-                            };
-                            for &id in &chain.blocks {
-                                pools.ssm.retain(id);
-                            }
-                            chain
-                        });
-                        CarriedKv::Blocks(KvHandle { llm, ssm })
+    ///
+    /// Writes into `out` (cleared first) so a reshaping caller can reuse
+    /// one buffer across epochs instead of receiving a fresh `Vec` each
+    /// time; the caller drains it.  The requests themselves own their
+    /// contexts/chains — that is the carried state, not churn.
+    pub fn export_rows(&mut self, st: &BatchState, out: &mut Vec<(usize, AdmitRequest)>) {
+        out.clear();
+        let llm_ing = st.llm_kv.ingested();
+        for i in 0..st.rows.n() {
+            if !st.rows.is_live(i) {
+                continue;
+            }
+            let carried_kv = match (self.pools.as_mut(), st.tables.as_ref()) {
+                (Some(pools), Some(tables)) => {
+                    let llm = BlockChain {
+                        blocks: tables.llm.row(i).to_vec(),
+                        ingested: llm_ing[i],
+                    };
+                    for &id in &llm.blocks {
+                        pools.llm.retain(id);
                     }
-                    _ => CarriedKv::Reingest,
-                };
-                (
-                    i,
-                    AdmitRequest {
-                        context: r.committed.clone(),
-                        prompt_len: r.prompt_len,
-                        max_new: r.max_new,
-                        carried_kv: Some(carried_kv),
-                    },
-                )
-            })
-            .collect()
+                    let ssm = st.ssm_kv.as_ref().map(|kv| {
+                        let chain = BlockChain {
+                            blocks: tables.ssm.row(i).to_vec(),
+                            ingested: kv.ingested()[i],
+                        };
+                        for &id in &chain.blocks {
+                            pools.ssm.retain(id);
+                        }
+                        chain
+                    });
+                    CarriedKv::Blocks(KvHandle { llm, ssm })
+                }
+                _ => CarriedKv::Reingest,
+            };
+            out.push((
+                i,
+                AdmitRequest {
+                    context: st.rows.committed(i).to_vec(),
+                    prompt_len: st.rows.prompt_len[i] as usize,
+                    max_new: st.rows.max_new[i] as usize,
+                    carried_kv: Some(carried_kv),
+                },
+            ));
+        }
     }
 
     /// Return every block a state still holds to the pools (end of the
@@ -1131,8 +1227,8 @@ impl<'rt> Engine<'rt> {
         let (Some(pools), Some(tables)) = (self.pools.as_mut(), st.tables.as_mut()) else {
             return;
         };
-        pools.llm.release_tables(&mut tables.llm);
-        pools.ssm.release_tables(&mut tables.ssm);
+        pools.llm.release_flat(&mut tables.llm);
+        pools.ssm.release_flat(&mut tables.ssm);
     }
 
     /// Bring every slot's block tables in line with its KV ingest
@@ -1142,9 +1238,9 @@ impl<'rt> Engine<'rt> {
         let (Some(pools), Some(tables)) = (self.pools.as_mut(), st.tables.as_mut()) else {
             return Ok(());
         };
-        pools.llm.sync_tables(&mut tables.llm, st.llm_kv.ingested())?;
+        pools.llm.sync_flat(&mut tables.llm, st.llm_kv.ingested())?;
         if let Some(kv) = &st.ssm_kv {
-            pools.ssm.sync_tables(&mut tables.ssm, kv.ingested())?;
+            pools.ssm.sync_flat(&mut tables.ssm, kv.ingested())?;
         }
         Ok(())
     }
@@ -1153,20 +1249,30 @@ impl<'rt> Engine<'rt> {
     /// calls where pending rows feed their next context chunk and every
     /// other row re-feeds its last token (and is clamped back).
     fn ingest_admitted(&mut self, st: &mut BatchState) -> Result<()> {
-        let max_chunk = self.limits.max_verify_len(st.bucket) + 1;
+        let bucket = st.bucket;
+        let max_chunk = self.limits.max_verify_len(bucket) + 1;
         let cap = self.limits.max_seq;
+        let pad = self.cfg.pad_token;
+        let Engine {
+            llm,
+            stopwatch,
+            scratch,
+            ..
+        } = self;
+        let RoundScratch {
+            feed,
+            desired,
+            ing,
+            pred,
+            ..
+        } = scratch;
+        let rows = &st.rows;
         loop {
-            let ing: Vec<u32> = st.llm_kv.ingested().to_vec();
-            let pending: Vec<usize> = st
-                .rows
-                .iter()
-                .enumerate()
-                .filter(|(i, r)| {
-                    r.real && !r.finished && (ing[*i] as usize) < r.committed.len() - 1
-                })
-                .map(|(i, _)| i)
-                .collect();
-            if pending.is_empty() {
+            ing.clear();
+            ing.extend_from_slice(st.llm_kv.ingested());
+            let is_pending =
+                |i: usize| rows.is_live(i) && (ing[i] as usize) < rows.len[i] as usize - 1;
+            if !(0..bucket).any(is_pending) {
                 return Ok(());
             }
             // the verify capacity check uses the max counter over ALL rows
@@ -1182,56 +1288,66 @@ impl<'rt> Engine<'rt> {
                 );
             }
             let chunk = max_chunk.min(cap - max_ing);
-            let bucket = st.bucket;
-            let mut feed = vec![self.cfg.pad_token; bucket * chunk];
-            let mut desired = vec![0u32; bucket];
-            for (i, row) in st.rows.iter().enumerate() {
+            feed.clear();
+            feed.resize(bucket * chunk, pad);
+            desired.clear();
+            desired.resize(bucket, 0);
+            for i in 0..bucket {
                 let start = ing[i] as usize;
-                if pending.contains(&i) {
-                    let take = chunk.min(row.committed.len() - 1 - start);
-                    let piece = &row.committed[start..start + take];
+                if is_pending(i) {
+                    let take = chunk.min(rows.len[i] as usize - 1 - start);
+                    let piece = &rows.committed(i)[start..start + take];
                     for (j, slot) in feed[i * chunk..(i + 1) * chunk].iter_mut().enumerate() {
                         // pad the tail by repeating the last real token
                         *slot = piece[j.min(take - 1)];
                     }
                     desired[i] = (start + take) as u32;
                 } else {
-                    let last = row.last();
+                    let last = rows.last(i);
                     for slot in feed[i * chunk..(i + 1) * chunk].iter_mut() {
                         *slot = last;
                     }
-                    desired[i] = row.committed.len() as u32 - 1;
+                    desired[i] = rows.len[i] - 1;
                 }
             }
             let s = chunk - 1;
-            let _ = self.stopwatch.time("ingest", || {
-                self.llm.verify(&feed, s, bucket, &mut st.llm_kv)
+            stopwatch.time("ingest", || {
+                llm.verify_into(feed, s, bucket, &mut st.llm_kv, pred)
             })?;
             st.stats.llm_calls += 1;
-            st.llm_kv.clamp_to(&desired);
+            st.llm_kv.clamp_to(desired);
         }
     }
 
     /// One plain decode round (s = 0): feed the last committed token.
     fn round_plain(
         &mut self,
-        rows: &mut [Row],
+        rows: &mut RowSoa,
         bucket: usize,
         llm_kv: &mut Kv,
         stats: &mut GenStats,
     ) -> Result<()> {
-        let feed: Vec<i32> = rows.iter().map(Row::last).collect();
-        let pred = self
-            .stopwatch
-            .time("verify", || self.llm.verify(&feed, 0, bucket, llm_kv))?;
+        let Engine {
+            llm,
+            stopwatch,
+            scratch,
+            ..
+        } = self;
+        let RoundScratch {
+            feed, pred, clamp, ..
+        } = scratch;
+        feed.clear();
+        feed.extend((0..bucket).map(|i| rows.last(i)));
+        stopwatch.time("verify", || llm.verify_into(feed, 0, bucket, llm_kv, pred))?;
         stats.llm_calls += 1;
-        for (row, &t) in rows.iter_mut().zip(&pred) {
-            if !row.finished {
-                row.committed.push(t);
+        for i in 0..bucket {
+            if !rows.finished[i] {
+                rows.push(i, pred[i]);
             }
         }
-        let clamp: Vec<u32> = rows.iter().map(|r| r.committed.len() as u32 - 1).collect();
-        llm_kv.clamp_to(&clamp);
+        clamp.clear();
+        clamp.extend((0..bucket).map(|i| rows.len[i] - 1));
+        llm_kv.clamp_to(clamp);
         Ok(())
     }
 
@@ -1239,74 +1355,73 @@ impl<'rt> Engine<'rt> {
     /// accepts (Algorithm 1).
     fn round_speculative(
         &mut self,
-        rows: &mut [Row],
+        rows: &mut RowSoa,
         bucket: usize,
         s: usize,
         llm_kv: &mut Kv,
         ssm_kv: &mut Kv,
         stats: &mut GenStats,
     ) -> Result<()> {
+        let pad = self.cfg.pad_token;
+        let Engine {
+            llm,
+            ssm,
+            stopwatch,
+            scratch,
+            ..
+        } = self;
+        let RoundScratch {
+            feed,
+            delta,
+            dlens,
+            clamp,
+            pred,
+            draft,
+            commit,
+            commit_len,
+            accepted,
+            ..
+        } = scratch;
+
         // --- SSM: delta ingest + draft ---
-        let (delta, dlens) = self.build_delta(rows, ssm_kv)?;
-        let draft = self.stopwatch.time("speculate", || {
-            self.ssm.speculate(&delta, &dlens, s, bucket, ssm_kv)
+        build_delta_into(pad, rows, ssm_kv, delta, dlens)?;
+        stopwatch.time("speculate", || {
+            ssm.speculate_into(delta, dlens, s, bucket, ssm_kv, draft)
         })?;
         stats.ssm_calls += 1;
 
         // --- LLM: verify ---
-        let mut feed = vec![0i32; bucket * (s + 1)];
-        for (i, row) in rows.iter().enumerate() {
-            feed[i * (s + 1)] = row.last();
-            feed[i * (s + 1) + 1..(i + 1) * (s + 1)]
-                .copy_from_slice(&draft[i * s..(i + 1) * s]);
+        feed.clear();
+        feed.resize(bucket * (s + 1), 0);
+        for i in 0..bucket {
+            feed[i * (s + 1)] = rows.last(i);
+            feed[i * (s + 1) + 1..(i + 1) * (s + 1)].copy_from_slice(&draft[i * s..(i + 1) * s]);
         }
-        let pred = self
-            .stopwatch
-            .time("verify", || self.llm.verify(&feed, s, bucket, llm_kv))?;
+        stopwatch.time("verify", || llm.verify_into(feed, s, bucket, llm_kv, pred))?;
         stats.llm_calls += 1;
 
         // --- host: acceptance + commit ---
-        let results = accept_batch(&draft, &pred, bucket, s);
-        for (row, acc) in rows.iter_mut().zip(&results) {
-            if row.finished {
+        accept_into(draft, pred, bucket, s, commit, commit_len);
+        for i in 0..bucket {
+            if rows.finished[i] {
                 continue;
             }
-            row.committed.extend_from_slice(&acc.commit);
+            let n = commit_len[i] as usize;
+            rows.extend(i, &commit[i * (s + 1)..][..n]);
             stats.drafted += s;
-            stats.accepted += acc.accepted;
-            if row.real {
-                stats.accept_samples.push(acc.accepted as u32);
+            stats.accepted += n - 1;
+            if rows.real[i] {
+                stats.accept_samples.push((n - 1) as u32);
+                accepted.push((n - 1) as u32);
             }
         }
 
         // --- clamp both caches to committed-1 ---
-        let clamp: Vec<u32> = rows.iter().map(|r| r.committed.len() as u32 - 1).collect();
-        llm_kv.clamp_to(&clamp);
-        ssm_kv.clamp_to(&clamp);
+        clamp.clear();
+        clamp.extend((0..bucket).map(|i| rows.len[i] - 1));
+        llm_kv.clamp_to(clamp);
+        ssm_kv.clamp_to(clamp);
         Ok(())
-    }
-
-    /// Build the SSM delta (the 1..=2 committed tokens it has not seen).
-    fn build_delta(&self, rows: &[Row], ssm_kv: &Kv) -> Result<(Vec<i32>, Vec<i32>)> {
-        let bucket = rows.len();
-        let ingested = ssm_kv.ingested();
-        let mut delta = vec![self.cfg.pad_token; bucket * 2];
-        let mut dlens = vec![0i32; bucket];
-        for (i, row) in rows.iter().enumerate() {
-            let ing = ingested[i] as usize;
-            let missing = row.committed.len() - ing;
-            if !(1..=2).contains(&missing) {
-                bail!(
-                    "SSM delta invariant violated on row {i}: committed {} ingested {ing}",
-                    row.committed.len()
-                );
-            }
-            for (j, &t) in row.committed[ing..].iter().enumerate() {
-                delta[i * 2 + j] = t;
-            }
-            dlens[i] = missing as i32;
-        }
-        Ok((delta, dlens))
     }
 
     /// Re-ingest the SSM's backlog (plain-decode rounds / freshly admitted
@@ -1315,60 +1430,102 @@ impl<'rt> Engine<'rt> {
     /// the counters.
     fn ssm_catch_up(
         &mut self,
-        rows: &[Row],
+        rows: &RowSoa,
         bucket: usize,
         ssm_kv: &mut Kv,
         stats: &mut GenStats,
     ) -> Result<()> {
+        let pad = self.cfg.pad_token;
+        let Engine {
+            ssm,
+            stopwatch,
+            scratch,
+            ..
+        } = self;
+        let RoundScratch {
+            delta,
+            dlens,
+            clamp,
+            draft,
+            ..
+        } = scratch;
         loop {
             let ingested = ssm_kv.ingested();
-            let max_missing = rows
-                .iter()
-                .enumerate()
-                .map(|(i, r)| r.committed.len() - ingested[i] as usize)
+            let max_missing = (0..bucket)
+                .map(|i| rows.len[i] as usize - ingested[i] as usize)
                 .max()
                 .unwrap_or(0);
             if max_missing <= 2 {
                 return Ok(());
             }
-            let mut delta = vec![self.cfg.pad_token; bucket * 2];
-            let mut dlens = vec![0i32; bucket];
-            for (i, row) in rows.iter().enumerate() {
+            delta.clear();
+            delta.resize(bucket * 2, pad);
+            dlens.clear();
+            dlens.resize(bucket, 0);
+            for i in 0..bucket {
                 let ing = ingested[i] as usize;
                 // leave at least one committed token un-ingested
-                let take = (row.committed.len() - 1 - ing).clamp(1, 2);
-                for (j, &t) in row.committed[ing..ing + take].iter().enumerate() {
+                let take = (rows.len[i] as usize - 1 - ing).clamp(1, 2);
+                for (j, &t) in rows.committed(i)[ing..ing + take].iter().enumerate() {
                     delta[i * 2 + j] = t;
                 }
                 dlens[i] = take as i32;
             }
-            let _ = self.stopwatch.time("ssm_catch_up", || {
-                self.ssm.speculate(&delta, &dlens, 1, bucket, ssm_kv)
+            stopwatch.time("ssm_catch_up", || {
+                ssm.speculate_into(delta, dlens, 1, bucket, ssm_kv, draft)
             })?;
             stats.ssm_calls += 1;
-            let clamp: Vec<u32> = rows.iter().map(|r| r.committed.len() as u32 - 1).collect();
-            ssm_kv.clamp_to(&clamp);
+            clamp.clear();
+            clamp.extend((0..bucket).map(|i| rows.len[i] - 1));
+            ssm_kv.clamp_to(clamp);
         }
     }
 
     /// Freeze rows that hit their budget or emitted `<eos>`.
-    fn check_eos_and_limits(&self, rows: &mut [Row]) {
-        for row in rows.iter_mut() {
-            if row.finished {
+    fn check_eos_and_limits(&self, rows: &mut RowSoa) {
+        for i in 0..rows.n() {
+            if rows.finished[i] {
                 continue;
             }
-            if row.generated() >= row.max_new {
-                row.finished = true;
+            if rows.generated(i) >= rows.max_new[i] as usize {
+                rows.finished[i] = true;
                 continue;
             }
-            if self.cfg.stop_at_eos {
-                let gen = &row.committed[row.prompt_len..];
-                if gen.contains(&self.cfg.eos_token) {
-                    row.finished = true;
-                }
+            if self.cfg.stop_at_eos && rows.gen_tokens(i).contains(&self.cfg.eos_token) {
+                rows.finished[i] = true;
             }
         }
     }
+}
+
+/// Build the SSM delta (the 1..=2 committed tokens it has not seen) into
+/// caller-owned scratch.
+fn build_delta_into(
+    pad: i32,
+    rows: &RowSoa,
+    ssm_kv: &Kv,
+    delta: &mut Vec<i32>,
+    dlens: &mut Vec<i32>,
+) -> Result<()> {
+    let bucket = rows.n();
+    let ingested = ssm_kv.ingested();
+    delta.clear();
+    delta.resize(bucket * 2, pad);
+    dlens.clear();
+    dlens.resize(bucket, 0);
+    for i in 0..bucket {
+        let ing = ingested[i] as usize;
+        let committed = rows.len[i] as usize;
+        let missing = committed - ing;
+        if !(1..=2).contains(&missing) {
+            bail!("SSM delta invariant violated on row {i}: committed {committed} ingested {ing}");
+        }
+        for (j, &t) in rows.committed(i)[ing..].iter().enumerate() {
+            delta[i * 2 + j] = t;
+        }
+        dlens[i] = missing as i32;
+    }
+    Ok(())
 }
 
 #[cfg(test)]

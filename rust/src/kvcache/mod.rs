@@ -189,6 +189,68 @@ pub enum CarriedKv {
     Blocks(KvHandle),
 }
 
+/// Flat block-table storage: every slot's table lives in one contiguous
+/// `Vec<u32>` at a fixed stride, with a per-slot length.  This is the
+/// hot-path layout (arena / `u32`-index idiom): growing or shrinking a
+/// table is a length bump, an epoch-reshape remap is a `copy_from_slice`
+/// memmove, and the steady state allocates nothing — the backing vectors
+/// are sized once at `stride = blocks_for(max_seq)` per slot.
+///
+/// The per-slot `Vec<Vec<u32>>` API on [`BlockManager`] remains for
+/// callers that want owned chains (export handles, unit tests); the
+/// engine's `BatchState` uses `FlatTables` + [`BlockManager::sync_flat`].
+#[derive(Debug, Clone)]
+pub struct FlatTables {
+    /// `rows * stride` block ids; slot `i` owns `ids[i*stride..][..len[i]]`
+    ids: Vec<u32>,
+    len: Vec<u32>,
+    stride: usize,
+}
+
+impl FlatTables {
+    /// Table storage for `rows` slots of at most `stride` blocks each.
+    pub fn new(rows: usize, stride: usize) -> FlatTables {
+        assert!(stride > 0, "flat table stride must be positive");
+        FlatTables {
+            ids: vec![0; rows * stride],
+            len: vec![0; rows],
+            stride,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.len.len()
+    }
+
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    /// Slot `i`'s live block ids.
+    pub fn row(&self, i: usize) -> &[u32] {
+        &self.ids[i * self.stride..][..self.len[i] as usize]
+    }
+
+    /// Install a chain into slot `i` (reshape remap: a bounds check and a
+    /// memmove).  The caller owns refcount accounting for both the old
+    /// and the new ids.
+    pub fn set_row(&mut self, i: usize, blocks: &[u32]) {
+        assert!(
+            blocks.len() <= self.stride,
+            "chain of {} blocks exceeds table stride {}",
+            blocks.len(),
+            self.stride
+        );
+        self.ids[i * self.stride..][..blocks.len()].copy_from_slice(blocks);
+        self.len[i] = blocks.len() as u32;
+    }
+
+    /// Blocks currently referenced across all slots.
+    pub fn total_blocks(&self) -> usize {
+        self.len.iter().map(|&l| l as usize).sum()
+    }
+}
+
 /// Fixed-size KV block pool: free-list allocation, per-block refcounts,
 /// utilization/fragmentation accounting.  Blocks are identified by dense
 /// `u32` ids; per-slot block tables are plain `Vec<u32>` owned by the
@@ -322,6 +384,53 @@ impl BlockManager {
         }
     }
 
+    /// [`BlockManager::sync_tables`] over the flat layout: grow/shrink
+    /// each slot's span to cover its ingest counter, then record a
+    /// fragmentation sample.  Zero allocations — the span storage is
+    /// pre-sized and the free list never outgrows its initial capacity.
+    pub fn sync_flat(&mut self, tables: &mut FlatTables, ingested: &[u32]) -> Result<()> {
+        debug_assert_eq!(tables.rows(), ingested.len());
+        let mut tokens = 0usize;
+        let mut blocks = 0usize;
+        let stride = tables.stride;
+        for (i, &ing) in ingested.iter().enumerate() {
+            let want = self.blocks_for(ing as usize);
+            debug_assert!(want <= stride, "ingest outgrew the table stride");
+            let base = i * stride;
+            let mut n = tables.len[i] as usize;
+            while n < want {
+                tables.ids[base + n] = self.alloc()?;
+                n += 1;
+            }
+            while n > want {
+                n -= 1;
+                self.release(tables.ids[base + n]);
+            }
+            tables.len[i] = n as u32;
+            tokens += ing as usize;
+            blocks += n;
+        }
+        // same sampling rule as sync_tables: over the synced tables' own
+        // space, so carried handles' blocks don't overstate waste
+        let space = (blocks * self.block_size) as f64;
+        if space > 0.0 {
+            self.frag_num += space - tokens as f64;
+            self.frag_den += space;
+        }
+        Ok(())
+    }
+
+    /// Release every block of a flat table set (end of an epoch's life).
+    pub fn release_flat(&mut self, tables: &mut FlatTables) {
+        for i in 0..tables.rows() {
+            let base = i * tables.stride;
+            for k in 0..tables.len[i] as usize {
+                self.release(tables.ids[base + k]);
+            }
+            tables.len[i] = 0;
+        }
+    }
+
     pub fn stats(&self) -> KvBlockStats {
         KvBlockStats {
             block_size: self.block_size,
@@ -413,6 +522,50 @@ mod tests {
         let s = m.stats();
         assert!(s.mean_internal_frag >= 0.0 && s.mean_internal_frag < 1.0);
         m.release_tables(&mut tables);
+        assert!(m.stats().is_leak_free());
+    }
+
+    #[test]
+    fn sync_flat_matches_sync_tables() {
+        // the flat layout must make identical alloc/release decisions to
+        // the Vec-of-Vec layout (same free list, same ids, same frag)
+        let mut a = BlockManager::new(8, 4);
+        let mut b = BlockManager::new(8, 4);
+        let mut vecs = vec![Vec::new(), Vec::new()];
+        let mut flat = FlatTables::new(2, 4);
+        for ing in [[5u32, 4], [9, 4], [1, 4], [0, 0]] {
+            a.sync_tables(&mut vecs, &ing).unwrap();
+            b.sync_flat(&mut flat, &ing).unwrap();
+            for i in 0..2 {
+                assert_eq!(vecs[i].as_slice(), flat.row(i), "row {i} at {ing:?}");
+            }
+            assert_eq!(a.in_use(), b.in_use());
+        }
+        assert_eq!(a.stats(), b.stats());
+        a.release_tables(&mut vecs);
+        b.release_flat(&mut flat);
+        assert!(b.stats().is_leak_free());
+        assert_eq!(flat.total_blocks(), 0);
+    }
+
+    #[test]
+    fn flat_set_row_is_a_remap() {
+        let mut m = BlockManager::new(8, 4);
+        let mut flat = FlatTables::new(2, 4);
+        m.sync_flat(&mut flat, &[9, 4]).unwrap();
+        let chain: Vec<u32> = flat.row(0).to_vec();
+        // move row 0's chain into row 1: retain, install, release old
+        for &id in &chain {
+            m.retain(id);
+        }
+        for &id in flat.row(1) {
+            m.release(id);
+        }
+        flat.set_row(1, &chain);
+        assert_eq!(flat.row(0), flat.row(1));
+        assert_eq!(flat.total_blocks(), 6);
+        m.release_flat(&mut flat);
+        // row 0 released each shared block once, row 1 the second time
         assert!(m.stats().is_leak_free());
     }
 

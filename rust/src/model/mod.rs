@@ -161,6 +161,58 @@ impl<'rt> ModelHandle<'rt> {
             _ => bail!("model/KV backend mismatch"),
         }
     }
+
+    /// [`ModelHandle::verify`] into a caller-owned buffer.  The stub
+    /// backend is allocation-free; the PJRT backend stages through its
+    /// device transfer either way, so it routes via the owning call.
+    pub fn verify_into(
+        &self,
+        feed: &[i32],
+        s: usize,
+        batch: usize,
+        kv: &mut Kv,
+        out: &mut Vec<i32>,
+    ) -> Result<()> {
+        match (self, kv) {
+            #[cfg(feature = "pjrt")]
+            (ModelHandle::Pjrt(m), Kv::Pjrt(kv)) => {
+                let pred = m.verify(feed, s, batch, kv)?;
+                out.clear();
+                out.extend_from_slice(&pred);
+                Ok(())
+            }
+            (ModelHandle::Stub(m, _), Kv::Stub(kv)) => m.verify_into(feed, s, batch, kv, out),
+            #[cfg(feature = "pjrt")]
+            _ => bail!("model/KV backend mismatch"),
+        }
+    }
+
+    /// [`ModelHandle::speculate`] into a caller-owned buffer (see
+    /// [`ModelHandle::verify_into`] for the backend split).
+    pub fn speculate_into(
+        &self,
+        delta: &[i32],
+        dlens: &[i32],
+        s: usize,
+        batch: usize,
+        kv: &mut Kv,
+        out: &mut Vec<i32>,
+    ) -> Result<()> {
+        match (self, kv) {
+            #[cfg(feature = "pjrt")]
+            (ModelHandle::Pjrt(m), Kv::Pjrt(kv)) => {
+                let draft = m.speculate(delta, dlens, s, batch, kv)?;
+                out.clear();
+                out.extend_from_slice(&draft);
+                Ok(())
+            }
+            (ModelHandle::Stub(m, _), Kv::Stub(kv)) => {
+                m.speculate_into(delta, dlens, s, batch, kv, out)
+            }
+            #[cfg(feature = "pjrt")]
+            _ => bail!("model/KV backend mismatch"),
+        }
+    }
 }
 
 #[cfg(test)]

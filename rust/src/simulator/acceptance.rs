@@ -11,7 +11,7 @@
 //!   `P(L ≥ j) = l(j) − l(j−1)`, sampled sequentially through the
 //!   conditional probabilities `P(L ≥ j | L ≥ j−1)`.
 
-use crate::util::prng::Pcg64;
+use crate::util::prng::F64Source;
 
 #[derive(Debug, Clone)]
 pub enum AcceptanceProcess {
@@ -49,8 +49,10 @@ impl AcceptanceProcess {
         (1..=s).map(|j| self.survival(j)).sum()
     }
 
-    /// Sample one round's accepted count (0..=s).
-    pub fn sample(&self, s: usize, rng: &mut Pcg64) -> usize {
+    /// Sample one round's accepted count (0..=s).  Generic over the draw
+    /// source so the DES hot loops can feed it from a per-round
+    /// [`crate::util::prng::DrawBuffer`] without touching the stream.
+    pub fn sample<R: F64Source>(&self, s: usize, rng: &mut R) -> usize {
         let mut accepted = 0;
         while accepted < s {
             let j = accepted + 1;
@@ -79,6 +81,7 @@ impl AcceptanceProcess {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prng::Pcg64;
 
     fn empirical_l(proc_: &AcceptanceProcess, s: usize, n: usize) -> f64 {
         let mut rng = Pcg64::new(99);

@@ -45,7 +45,7 @@ use crate::metrics::{LatencyRecorder, RequestRecord, RoundEvent};
 use crate::policy::{RoundFeedback, SpeculationPolicy};
 use crate::telemetry::{PhaseKind, Telemetry};
 use crate::traffic::{Trace, TraceItem};
-use crate::util::prng::Pcg64;
+use crate::util::prng::{DrawBuffer, Pcg64};
 
 use super::acceptance::AcceptanceProcess;
 use super::cost::CostModel;
@@ -232,6 +232,12 @@ pub fn batch_service_time_tel(
     // prefill commits one token per row
     let mut generated = vec![1usize; b];
     let mut first_spec_len = None;
+    // round-scratch mirrors of the engine's arenas: the accepted-count
+    // buffer cycles through the policy feedback by mem::take, and PRNG
+    // draws come in one bulk fill per round (order-preserving, and
+    // refunded at the end so the caller's stream is untouched)
+    let mut accepted_rows: Vec<u32> = Vec::new();
+    let mut draws = DrawBuffer::new();
     while generated.iter().any(|&g| g < cfg.max_new_tokens) {
         let live = generated.iter().filter(|&&g| g < cfg.max_new_tokens).count();
         let s = if may_speculate { policy.choose(live, 8) } else { 0 };
@@ -240,7 +246,7 @@ pub fn batch_service_time_tel(
         }
         let ctx = mean_prompt as usize + generated.iter().sum::<usize>() / b;
         let rc = round_cost(cfg, b, s, ctx);
-        let mut accepted_rows: Vec<u32> = Vec::new();
+        accepted_rows.clear();
         let mut committed = 0usize;
         if s == 0 {
             for g in generated.iter_mut() {
@@ -252,9 +258,10 @@ pub fn batch_service_time_tel(
         } else {
             // SSM drafts sequentially: s single-token forwards
             let acc = cfg.acceptance_at(start_t + t);
+            draws.ensure(rng, live * s);
             for g in generated.iter_mut() {
                 if *g < cfg.max_new_tokens {
-                    let a = acc.sample(s, rng);
+                    let a = acc.sample(s, &mut draws);
                     accepted_rows.push(a as u32);
                     *g += a + 1;
                     committed += a + 1;
@@ -274,17 +281,22 @@ pub fn batch_service_time_tel(
             tel.round(t_round, rc, epoch, live, queued, s, committed, &accepted_rows, kvb);
             emit_round_phases(cfg, tel, t_round, rc, b, s, ctx);
         }
-        policy.observe(&RoundFeedback {
+        let fb = RoundFeedback {
             live,
             // the static batch keeps executing at its admitted width
             // even as rows finish
             width: b,
             s,
-            accepted: accepted_rows,
+            accepted: std::mem::take(&mut accepted_rows),
             committed,
             round_time: rc,
-        });
+        };
+        policy.observe(&fb);
+        accepted_rows = fb.accepted;
     }
+    // hand unconsumed bulk draws back so the caller's generator sits at
+    // exactly the sequential-equivalent state
+    draws.refund(rng);
     let tokens: usize = generated.iter().map(|&g| g.min(cfg.max_new_tokens)).sum();
     (t, tokens, first_spec_len.unwrap_or(0))
 }
@@ -577,6 +589,10 @@ pub fn simulate_trace_continuous_admission_tel(
     // padded bucket of the active epoch (0 = idle); admissions that push
     // the live batch past it trigger an epoch reshape
     let mut cur_bucket = 0usize;
+    // round-scratch mirrors of the engine's arenas (see
+    // batch_service_time_tel): reused accepted buffer + bulk PRNG draws
+    let mut accepted_rows: Vec<u32> = Vec::new();
+    let mut draws = DrawBuffer::new();
 
     while next < items.len() || !live.is_empty() || !waiting.is_empty() {
         if live.is_empty() {
@@ -718,7 +734,7 @@ pub fn simulate_trace_continuous_admission_tel(
         let ctx = live.iter().map(|r| r.plen + r.generated).sum::<usize>() / b;
         let s = if may_speculate { policy.choose(b, 8) } else { 0 };
         let rc = round_cost(cfg, b, s, ctx);
-        let mut accepted_rows: Vec<u32> = Vec::new();
+        accepted_rows.clear();
         let mut committed = 0usize;
         if s == 0 {
             for row in live.iter_mut() {
@@ -727,8 +743,9 @@ pub fn simulate_trace_continuous_admission_tel(
             }
         } else {
             let acc = cfg.acceptance_at(t);
+            draws.ensure(&mut rng, b * s);
             for row in live.iter_mut() {
-                let a = acc.sample(s, &mut rng);
+                let a = acc.sample(s, &mut draws);
                 accepted_rows.push(a as u32);
                 row.generated += a + 1;
                 committed += a + 1;
@@ -741,7 +758,7 @@ pub fn simulate_trace_continuous_admission_tel(
             live: b,
             width: b, // continuous rounds execute at exactly the live width
             s,
-            accepted: accepted_rows,
+            accepted: std::mem::take(&mut accepted_rows),
             committed,
             round_time: rc,
         };
@@ -773,6 +790,8 @@ pub fn simulate_trace_continuous_admission_tel(
                 tel.policy_fit(t, policy.snapshot());
             }
         }
+        // reclaim the feedback's accepted buffer for the next round
+        accepted_rows = fb.accepted;
 
         // --- retire finished rows immediately, freeing capacity ---
         let mut i = 0;
@@ -806,6 +825,9 @@ pub fn simulate_trace_continuous_admission_tel(
             }
         }
     }
+    // hand unconsumed bulk draws back so the rng state matches the
+    // sequential-sampling stream exactly
+    draws.refund(&mut rng);
     (recorder, rounds)
 }
 

@@ -203,6 +203,37 @@ impl StubModel {
         Ok(pred)
     }
 
+    /// [`StubModel::verify`] into a caller-owned buffer (hot-path twin:
+    /// same validation, same counter advance, zero allocations once `out`
+    /// reached its high-water mark).
+    pub fn verify_into(
+        &self,
+        feed: &[i32],
+        s: usize,
+        batch: usize,
+        kv: &mut StubKv,
+        out: &mut Vec<i32>,
+    ) -> Result<()> {
+        let t = s + 1;
+        if feed.len() != batch * t {
+            bail!(
+                "stub {:?} verify(s={s}): feed len {} != batch {batch} x {t}",
+                self.role,
+                feed.len()
+            );
+        }
+        if kv.batch != batch {
+            bail!("stub {:?} verify: KV batch mismatch", self.role);
+        }
+        self.check_capacity(kv, t)?;
+        out.clear();
+        out.extend(feed.iter().map(|&x| self.next(x)));
+        for ing in kv.ingested.iter_mut() {
+            *ing += t as u32;
+        }
+        Ok(())
+    }
+
     /// Speculate step: ingest the 1..=2-token delta, then draft `s`
     /// tokens by chaining the SSM; counters advance by `dlen + s - 1`.
     pub fn speculate(
@@ -241,6 +272,48 @@ impl StubModel {
             *ing += d as u32 + s as u32 - 1;
         }
         Ok(draft)
+    }
+
+    /// [`StubModel::speculate`] into a caller-owned buffer (hot-path
+    /// twin: same validation, same counter advance, zero allocations once
+    /// `out` reached its high-water mark).
+    pub fn speculate_into(
+        &self,
+        delta: &[i32],
+        dlens: &[i32],
+        s: usize,
+        batch: usize,
+        kv: &mut StubKv,
+        out: &mut Vec<i32>,
+    ) -> Result<()> {
+        if s == 0 {
+            bail!("stub {:?} speculate: s must be >= 1", self.role);
+        }
+        if delta.len() != batch * 2 || dlens.len() != batch {
+            bail!("stub {:?} speculate: delta/dlens shape mismatch", self.role);
+        }
+        if dlens.iter().any(|&d| !(1..=2).contains(&d)) {
+            bail!(
+                "stub {:?} speculate: delta invariant violated \
+                 (dlens must be 1..=2, got {dlens:?})",
+                self.role
+            );
+        }
+        if kv.batch != batch {
+            bail!("stub {:?} speculate: KV batch mismatch", self.role);
+        }
+        self.check_capacity(kv, 2 + s)?;
+        out.clear();
+        for (r, (ing, &d)) in kv.ingested.iter_mut().zip(dlens).enumerate() {
+            let d = d as usize;
+            let mut cur = delta[r * 2 + d - 1];
+            for _ in 0..s {
+                cur = self.next(cur);
+                out.push(cur);
+            }
+            *ing += d as u32 + s as u32 - 1;
+        }
+        Ok(())
     }
 
     fn check_capacity(&self, kv: &StubKv, t: usize) -> Result<()> {
@@ -336,6 +409,26 @@ mod tests {
         // bad dlens rejected
         let mut kv2 = m.new_kv(1);
         assert!(m.speculate(&[8, 9], &[3], 1, 1, &mut kv2).is_err());
+    }
+
+    #[test]
+    fn into_variants_match_allocating_calls() {
+        let m = ssm();
+        let mut kv_a = m.new_kv(2);
+        let mut kv_b = m.new_kv(2);
+        kv_a.ingested = vec![3, 5];
+        kv_b.ingested = vec![3, 5];
+        let mut out = vec![99i32; 1]; // stale contents must be overwritten
+        let feed = [5, 6, 7, 8, 9, 10];
+        let pred = m.verify(&feed, 2, 2, &mut kv_a).unwrap();
+        m.verify_into(&feed, 2, 2, &mut kv_b, &mut out).unwrap();
+        assert_eq!(pred, out);
+        assert_eq!(kv_a.ingested, kv_b.ingested);
+        let delta = [8, 9, 10, 11];
+        let draft = m.speculate(&delta, &[2, 1], 3, 2, &mut kv_a).unwrap();
+        m.speculate_into(&delta, &[2, 1], 3, 2, &mut kv_b, &mut out).unwrap();
+        assert_eq!(draft, out);
+        assert_eq!(kv_a.ingested, kv_b.ingested);
     }
 
     #[test]

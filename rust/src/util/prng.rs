@@ -18,6 +18,9 @@ pub struct Pcg64 {
 }
 
 const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+/// `PCG_MULT^-1 mod 2^128` (the multiplier is odd, hence invertible):
+/// lets [`DrawBuffer::refund`] step the state transition backwards.
+const PCG_MULT_INV: u128 = 0x07dd_a22b_9397_9860_98ab_c8b0_716e_ac8d;
 
 impl Pcg64 {
     /// Seeded generator on the default stream.
@@ -57,6 +60,37 @@ impl Pcg64 {
         // Lemire's multiply-shift rejection-free variant is overkill here;
         // 64-bit modulo bias at our n (< 2^20) is < 2^-44.
         (self.next_u64() % n as u64) as usize
+    }
+
+    /// Bulk fill: `out.len()` sequential raw draws.  Bit-identical to
+    /// calling [`Pcg64::next_u64`] `out.len()` times — the hot loops use
+    /// this to amortize per-call overhead without perturbing any pinned
+    /// stream.
+    pub fn fill_u64s(&mut self, out: &mut [u64]) {
+        let mut state = self.state;
+        for slot in out.iter_mut() {
+            state = state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+            let rot = (state >> 122) as u32;
+            let xored = ((state >> 64) as u64) ^ (state as u64);
+            *slot = xored.rotate_right(rot);
+        }
+        self.state = state;
+    }
+
+    /// Bulk uniform-below fill: `out.len()` sequential draws in [0, n),
+    /// with the modulo constant hoisted out of the per-token loop.
+    /// Stream-identical to calling [`Pcg64::next_below`] per element.
+    pub fn fill_below(&mut self, n: usize, out: &mut [u32]) {
+        debug_assert!(n > 0 && n <= u32::MAX as usize);
+        let n = n as u64;
+        let mut state = self.state;
+        for slot in out.iter_mut() {
+            state = state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+            let rot = (state >> 122) as u32;
+            let xored = ((state >> 64) as u64) ^ (state as u64);
+            *slot = (xored.rotate_right(rot) % n) as u32;
+        }
+        self.state = state;
     }
 
     /// Uniform integer in [lo, hi] inclusive.
@@ -136,6 +170,94 @@ impl Pcg64 {
     }
 }
 
+/// Anything that yields uniform f64 draws in [0, 1).  Lets samplers such
+/// as `AcceptanceProcess::sample` consume either a bare [`Pcg64`] or a
+/// pre-filled [`DrawBuffer`] without changing the draw stream.
+pub trait F64Source {
+    fn next_f64(&mut self) -> f64;
+}
+
+impl F64Source for Pcg64 {
+    #[inline]
+    fn next_f64(&mut self) -> f64 {
+        Pcg64::next_f64(self)
+    }
+}
+
+/// A reusable buffer of raw PRNG draws, refilled in bulk once per round
+/// instead of pulling from the generator per token.
+///
+/// Draw-order contract: [`DrawBuffer::ensure`] keeps unconsumed draws (in
+/// order) and tops the buffer up with `fill_u64s`, so consumption through
+/// [`DrawBuffer::next_u64`] / [`F64Source::next_f64`] is **bit-identical**
+/// to calling the generator sequentially — leftovers are always spent
+/// before freshly filled draws.  That is what keeps every pinned seed in
+/// the DES stable across the batched-draw refactor.
+#[derive(Debug, Default)]
+pub struct DrawBuffer {
+    buf: Vec<u64>,
+    pos: usize,
+}
+
+impl DrawBuffer {
+    pub fn new() -> Self {
+        DrawBuffer { buf: Vec::new(), pos: 0 }
+    }
+
+    /// Number of unconsumed draws currently buffered.
+    pub fn available(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Guarantee at least `n` unconsumed draws are buffered, pulling the
+    /// shortfall from `rng` in one bulk fill.  Steady-state (buffer
+    /// already at its high-water mark) this never allocates.
+    pub fn ensure(&mut self, rng: &mut Pcg64, n: usize) {
+        let avail = self.available();
+        if avail >= n {
+            return;
+        }
+        // compact leftovers to the front, then bulk-fill the shortfall
+        self.buf.copy_within(self.pos.., 0);
+        self.buf.truncate(avail);
+        self.pos = 0;
+        let old = self.buf.len();
+        self.buf.resize(n, 0);
+        rng.fill_u64s(&mut self.buf[old..]);
+    }
+
+    /// Next buffered raw draw.  Panics on underflow — callers `ensure`
+    /// the round's worth of draws up front.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let v = self.buf[self.pos];
+        self.pos += 1;
+        v
+    }
+
+    /// Hand unconsumed draws back to the generator: steps `rng`'s state
+    /// transition backwards once per leftover draw (the PCG multiplier is
+    /// odd, hence invertible mod 2^128) and empties the buffer.  After a
+    /// refund the generator state is **exactly** what sequential draws
+    /// would have produced, so callers that share `rng` beyond a buffered
+    /// region observe no difference at all.
+    pub fn refund(&mut self, rng: &mut Pcg64) {
+        for _ in 0..self.available() {
+            rng.state = rng.state.wrapping_sub(rng.inc).wrapping_mul(PCG_MULT_INV);
+        }
+        self.buf.clear();
+        self.pos = 0;
+    }
+}
+
+impl F64Source for DrawBuffer {
+    /// Same mapping as [`Pcg64::next_f64`], applied to buffered draws.
+    #[inline]
+    fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+}
+
 /// Inter-arrival sampler with a given mean and coefficient of variation,
 /// exactly the paper's client model (Sec. 5.3): intervals ~ Gamma with
 /// `shape = 1/CV^2`, `scale = mean * CV^2` so that E = mean, std/E = CV.
@@ -185,6 +307,75 @@ mod tests {
         );
         let mut c = Pcg64::with_stream(7, 99);
         assert_ne!(b.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn fill_u64s_matches_sequential_next_u64() {
+        let mut a = Pcg64::with_stream(42, 17);
+        let mut b = Pcg64::with_stream(42, 17);
+        let seq: Vec<u64> = (0..257).map(|_| a.next_u64()).collect();
+        let mut bulk = vec![0u64; 257];
+        b.fill_u64s(&mut bulk[..100]);
+        b.fill_u64s(&mut bulk[100..101]);
+        b.fill_u64s(&mut bulk[101..]);
+        assert_eq!(seq, bulk);
+        // and the generators land in the same state
+        assert_eq!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn fill_below_matches_sequential_next_below() {
+        let mut a = Pcg64::new(5);
+        let mut b = Pcg64::new(5);
+        let seq: Vec<u32> = (0..300).map(|_| a.next_below(512) as u32).collect();
+        let mut bulk = vec![0u32; 300];
+        b.fill_below(512, &mut bulk);
+        assert_eq!(seq, bulk);
+        assert_eq!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn draw_buffer_preserves_the_sequential_stream() {
+        let mut plain = Pcg64::new(99);
+        let mut buffered = Pcg64::new(99);
+        let mut db = DrawBuffer::new();
+        let mut got = Vec::new();
+        // uneven ensure/consume cycles: leftovers must drain in order
+        // before freshly filled draws
+        for (ensure_n, take_n) in [(8, 3), (4, 6), (10, 2), (5, 5), (1, 12)] {
+            db.ensure(&mut buffered, ensure_n.max(take_n));
+            for _ in 0..take_n {
+                got.push(db.next_u64());
+            }
+        }
+        let want: Vec<u64> = (0..got.len()).map(|_| plain.next_u64()).collect();
+        assert_eq!(got, want);
+        // f64 mapping agrees with the generator's
+        db.ensure(&mut buffered, 1);
+        assert_eq!(F64Source::next_f64(&mut db), plain.next_f64());
+    }
+
+    #[test]
+    fn draw_buffer_refund_restores_the_sequential_state() {
+        let mut plain = Pcg64::with_stream(7, 3);
+        let mut buffered = Pcg64::with_stream(7, 3);
+        let mut db = DrawBuffer::new();
+        // over-fill, consume a prefix, refund the rest
+        db.ensure(&mut buffered, 40);
+        let got: Vec<u64> = (0..13).map(|_| db.next_u64()).collect();
+        db.refund(&mut buffered);
+        assert_eq!(db.available(), 0);
+        let want: Vec<u64> = (0..13).map(|_| plain.next_u64()).collect();
+        assert_eq!(got, want);
+        // the refunded generator continues exactly where sequential
+        // consumption would have left it
+        assert_eq!(
+            (0..8).map(|_| buffered.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| plain.next_u64()).collect::<Vec<_>>()
+        );
+        // refund on an empty buffer is a no-op
+        db.refund(&mut buffered);
+        assert_eq!(buffered.next_u64(), plain.next_u64());
     }
 
     #[test]

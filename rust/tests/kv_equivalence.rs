@@ -200,8 +200,9 @@ fn epoch_reshape_reingests_zero_tokens_under_paged_and_more_under_dense() {
         }
         // the batcher's reshape sequence: export, release, prefill the
         // larger bucket with a fresh row, re-admit the carried rows
-        let carried: Vec<AdmitRequest> =
-            e.export_rows(&st).into_iter().map(|(_, r)| r).collect();
+        let mut exported = Vec::new();
+        e.export_rows(&st, &mut exported);
+        let carried: Vec<AdmitRequest> = exported.into_iter().map(|(_, r)| r).collect();
         assert_eq!(carried.len(), 2);
         e.release_state(&mut st);
         let mut st2 = e.prefill_rows(&[vec![40, 41]], 4, true, 24).unwrap();

@@ -116,8 +116,9 @@ fn delta_invariant_holds_across_an_epoch_reshape() {
 
     // reshape: carry the unfinished rows into a larger bucket, exactly as
     // the continuous batcher does (prefill fresh rows, re-admit carried)
-    let carried: Vec<AdmitRequest> =
-        e.export_rows(&st).into_iter().map(|(_, req)| req).collect();
+    let mut exported = Vec::new();
+    e.export_rows(&st, &mut exported);
+    let carried: Vec<AdmitRequest> = exported.into_iter().map(|(_, req)| req).collect();
     assert_eq!(carried.len(), 2, "both rows still mid-generation");
     e.release_state(&mut st);
     let mut st2 = e.prefill_rows(&[vec![40, 41]], 4, true, 30).unwrap();
@@ -165,8 +166,9 @@ fn delta_invariant_holds_across_a_block_table_remap() {
 
     // reshape by remap: export block chains, release the old epoch,
     // install the chains into a larger bucket next to a fresh prefill
-    let carried: Vec<AdmitRequest> =
-        e.export_rows(&st).into_iter().map(|(_, req)| req).collect();
+    let mut exported = Vec::new();
+    e.export_rows(&st, &mut exported);
+    let carried: Vec<AdmitRequest> = exported.into_iter().map(|(_, req)| req).collect();
     assert_eq!(carried.len(), 2, "both rows still mid-generation");
     e.release_state(&mut st);
     let mut st2 = e.prefill_rows(&[vec![40, 41]], 4, true, 30).unwrap();

@@ -1,0 +1,329 @@
+/* C mirror of `cargo bench --bench micro_hotpath`'s stub-backend
+ * rounds/s grid — see bench_hotpath_mirror.py (which compiles and runs
+ * this) for why a mirror exists at all.
+ *
+ * Two implementations of the same decode round over the same stub model
+ * (splitmix64 Markov chain on the last token, constants from
+ * rust/src/testkit/stub.rs):
+ *
+ *   before — the pre-refactor shape: rows as an array-of-structs, each
+ *   row owning its own heap-grown token buffer, and every round
+ *   malloc'ing fresh feed/draft/pred/commit/accepted batch vectors plus
+ *   a cloned per-round stats record (the Vec-per-round churn the old
+ *   `decode_round` did);
+ *
+ *   after — the post-refactor shape: one flat token arena with a fixed
+ *   row stride (RowSoa) plus round-scratch buffers allocated once and
+ *   written in place (RoundScratch).  The round loop performs zero heap
+ *   allocations.
+ *
+ * Because this is native code with real malloc economics and the stub
+ * model costs nanoseconds per token (exactly as in Rust), the measured
+ * before/after delta isolates the allocation discipline and memory
+ * layout — the thing the PR changed.  Both variants must produce
+ * byte-identical token streams; the program aborts if they diverge.
+ *
+ * Output: one line per grid cell, "b s rps_before rps_after".
+ */
+
+#include <stdint.h>
+#include <stdio.h>
+#include <stdlib.h>
+#include <string.h>
+#include <time.h>
+
+#define VOCAB 512
+#define AGREEMENT_PCT 80
+#define STUB_SEED 0xB007ULL
+#define LLM_SALT 0x5eed11ULL
+#define PROMPT_LEN 8
+#define STRIDE 2048
+
+static uint64_t splitmix64(uint64_t x) {
+    x += 0x9e3779b97f4a7c15ULL;
+    uint64_t z = x;
+    z = (z ^ (z >> 30)) * 0xbf58476d1ce4e5b9ULL;
+    z = (z ^ (z >> 27)) * 0x94d049bb133111ebULL;
+    return z ^ (z >> 31);
+}
+
+/* stub model: next LLM token and next SSM draft token, both functions
+ * of the previous token only (rust/src/testkit/stub.rs) */
+static int32_t llm_next(int32_t t) {
+    return (int32_t)(4 + splitmix64((uint64_t)t ^ LLM_SALT) % (VOCAB - 4));
+}
+
+static int32_t ssm_next(int32_t t) {
+    int32_t llm = llm_next(t);
+    if (splitmix64((uint64_t)t ^ STUB_SEED) % 100 < AGREEMENT_PCT) {
+        return llm;
+    }
+    return 4 + (llm - 4 + 1) % (VOCAB - 4);
+}
+
+static void make_prompt(int row, uint64_t seed, int32_t *out) {
+    for (int k = 0; k < PROMPT_LEN; k++) {
+        out[k] = (int32_t)(4 + splitmix64(seed + (uint64_t)(row * 131 + k)) %
+                                   (VOCAB - 4));
+    }
+}
+
+static double now_s(void) {
+    struct timespec ts;
+    clock_gettime(CLOCK_MONOTONIC, &ts);
+    return (double)ts.tv_sec + (double)ts.tv_nsec * 1e-9;
+}
+
+static void *xmalloc(size_t n) {
+    void *p = malloc(n);
+    if (!p) {
+        fprintf(stderr, "oom\n");
+        exit(1);
+    }
+    return p;
+}
+
+/* ---- before: AoS rows + per-round Vec churn -------------------------- */
+
+typedef struct {
+    int32_t *tokens; /* per-row heap buffer, grown by doubling (Vec) */
+    int len;
+    int cap;
+} Row;
+
+typedef struct {
+    uint32_t *accepted; /* cloned per round (GenStats push) */
+} RoundStats;
+
+/* accept_row used to return an owned commit Vec per row */
+typedef struct {
+    int accepted;
+    int32_t *commit;
+    int commit_len;
+} RowAcceptance;
+
+/* Allocation inventory of the old `round_speculative` (one round):
+ *   build_delta     -> delta (b*2) + dlens (b)
+ *   stub speculate  -> draft Vec (b*s)
+ *   verify staging  -> feed vec![0; b*(s+1)]   (zeroed)
+ *   stub verify     -> pred Vec (b*(s+1))
+ *   accept_batch    -> results Vec + a commit Vec PER ROW   <- b allocs
+ *   clamp collect   -> clamp (b)
+ *   stats clone     -> accepted_rows.to_vec() (b), survives the round
+ * All but the last freed at round end.  The mirror reproduces exactly
+ * this inventory.
+ *
+ * Returns the concatenated token streams (caller frees). */
+static int32_t *run_rounds_aos(int b, int s, int rounds, uint64_t seed,
+                               int *out_total) {
+    Row *rows = xmalloc((size_t)b * sizeof(Row));
+    for (int i = 0; i < b; i++) {
+        rows[i].cap = 16;
+        rows[i].tokens = xmalloc((size_t)rows[i].cap * sizeof(int32_t));
+        make_prompt(i, seed, rows[i].tokens);
+        rows[i].len = PROMPT_LEN;
+    }
+    RoundStats *history = xmalloc((size_t)rounds * sizeof(RoundStats));
+    int w = s + 1;
+    for (int r = 0; r < rounds; r++) {
+        /* fresh batch vectors every round, freed at round end */
+        int32_t *delta = xmalloc((size_t)(b * 2) * sizeof(int32_t));
+        int32_t *dlens = xmalloc((size_t)b * sizeof(int32_t));
+        int32_t *feed = calloc((size_t)(b * w), sizeof(int32_t));
+        int32_t *draft = xmalloc((size_t)(b * s + 1) * sizeof(int32_t));
+        int32_t *pred = xmalloc((size_t)(b * w) * sizeof(int32_t));
+        RowAcceptance *results = xmalloc((size_t)b * sizeof(RowAcceptance));
+        uint32_t *clamp = xmalloc((size_t)b * sizeof(uint32_t));
+        if (!feed) {
+            exit(1);
+        }
+        for (int i = 0; i < b; i++) {
+            int32_t t = rows[i].tokens[rows[i].len - 1];
+            delta[i * 2] = t; /* build_delta: last committed tokens */
+            dlens[i] = 1;
+            feed[i * w] = t;
+            for (int j = 0; j < s; j++) {
+                t = ssm_next(t);
+                draft[i * s + j] = t;
+                feed[i * w + 1 + j] = t;
+            }
+        }
+        for (int i = 0; i < b * w; i++) {
+            pred[i] = llm_next(feed[i]);
+        }
+        for (int i = 0; i < b; i++) {
+            int a = 0;
+            while (a < s && draft[i * s + a] == pred[i * w + a]) {
+                a++;
+            }
+            /* accept_row: owned commit buffer per row */
+            results[i].accepted = a;
+            results[i].commit_len = a + 1;
+            results[i].commit = xmalloc((size_t)(a + 1) * sizeof(int32_t));
+            memcpy(results[i].commit, draft + i * s,
+                   (size_t)a * sizeof(int32_t));
+            results[i].commit[a] = pred[i * w + a];
+        }
+        for (int i = 0; i < b; i++) {
+            Row *row = &rows[i];
+            int n = results[i].commit_len;
+            while (row->len + n > row->cap) {
+                row->cap *= 2;
+                row->tokens = realloc(row->tokens,
+                                      (size_t)row->cap * sizeof(int32_t));
+            }
+            memcpy(row->tokens + row->len, results[i].commit,
+                   (size_t)n * sizeof(int32_t));
+            row->len += n;
+            clamp[i] = (uint32_t)(row->len - 1);
+        }
+        /* stats clone survives the round (accept_samples.to_vec()) */
+        history[r].accepted = xmalloc((size_t)b * sizeof(uint32_t));
+        for (int i = 0; i < b; i++) {
+            history[r].accepted[i] = (uint32_t)results[i].accepted;
+            free(results[i].commit);
+        }
+        free(delta);
+        free(dlens);
+        free(feed);
+        free(draft);
+        free(pred);
+        free(results);
+        free(clamp);
+    }
+    int total = 0;
+    for (int i = 0; i < b; i++) {
+        total += rows[i].len;
+    }
+    int32_t *out = xmalloc((size_t)total * sizeof(int32_t));
+    int at = 0;
+    for (int i = 0; i < b; i++) {
+        memcpy(out + at, rows[i].tokens, (size_t)rows[i].len * sizeof(int32_t));
+        at += rows[i].len;
+        free(rows[i].tokens);
+    }
+    for (int r = 0; r < rounds; r++) {
+        free(history[r].accepted);
+    }
+    free(history);
+    free(rows);
+    *out_total = total;
+    return out;
+}
+
+/* ---- after: flat SoA arena + reused round scratch -------------------- */
+
+static int32_t *run_rounds_soa(int b, int s, int rounds, uint64_t seed,
+                               int *out_total) {
+    /* SoA columns + scratch, allocated once (the arena high-water mark) */
+    int32_t *tokens = xmalloc((size_t)(b * STRIDE) * sizeof(int32_t));
+    int *lens = xmalloc((size_t)b * sizeof(int));
+    int w = s + 1;
+    int32_t *feed = xmalloc((size_t)(b * w) * sizeof(int32_t));
+    int32_t *draft = xmalloc((size_t)(b * s + 1) * sizeof(int32_t));
+    int32_t *pred = xmalloc((size_t)(b * w) * sizeof(int32_t));
+    uint32_t *accepted = xmalloc((size_t)b * sizeof(uint32_t));
+    uint32_t *acc_hist = xmalloc((size_t)(rounds * b) * sizeof(uint32_t));
+    for (int i = 0; i < b; i++) {
+        make_prompt(i, seed, tokens + i * STRIDE);
+        lens[i] = PROMPT_LEN;
+    }
+    for (int r = 0; r < rounds; r++) {
+        for (int i = 0; i < b; i++) {
+            int32_t t = tokens[i * STRIDE + lens[i] - 1];
+            feed[i * w] = t;
+            for (int j = 0; j < s; j++) {
+                t = ssm_next(t);
+                draft[i * s + j] = t;
+                feed[i * w + 1 + j] = t;
+            }
+        }
+        for (int i = 0; i < b * w; i++) {
+            pred[i] = llm_next(feed[i]);
+        }
+        for (int i = 0; i < b; i++) {
+            int a = 0;
+            while (a < s && draft[i * s + a] == pred[i * w + a]) {
+                a++;
+            }
+            int32_t *dst = tokens + i * STRIDE + lens[i];
+            memcpy(dst, draft + i * s, (size_t)a * sizeof(int32_t));
+            dst[a] = pred[i * w + a];
+            lens[i] += a + 1;
+            accepted[i] = (uint32_t)a;
+        }
+        memcpy(acc_hist + r * b, accepted, (size_t)b * sizeof(uint32_t));
+    }
+    int total = 0;
+    for (int i = 0; i < b; i++) {
+        total += lens[i];
+    }
+    int32_t *out = xmalloc((size_t)total * sizeof(int32_t));
+    int at = 0;
+    for (int i = 0; i < b; i++) {
+        memcpy(out + at, tokens + i * STRIDE, (size_t)lens[i] * sizeof(int32_t));
+        at += lens[i];
+    }
+    free(tokens);
+    free(lens);
+    free(feed);
+    free(draft);
+    free(pred);
+    free(accepted);
+    free(acc_hist);
+    *out_total = total;
+    return out;
+}
+
+/* ---- driver ---------------------------------------------------------- */
+
+typedef int32_t *(*variant_fn)(int, int, int, uint64_t, int *);
+
+static double best_of(variant_fn fn, int b, int s, int rounds, uint64_t seed,
+                      int reps) {
+    double best = 0.0;
+    for (int rep = 0; rep < reps; rep++) {
+        int total;
+        double t0 = now_s();
+        int32_t *out = fn(b, s, rounds, seed, &total);
+        double rps = (double)rounds / (now_s() - t0);
+        free(out);
+        if (rps > best) {
+            best = rps;
+        }
+    }
+    return best;
+}
+
+int main(int argc, char **argv) {
+    int rounds = argc > 1 ? atoi(argv[1]) : 200;
+    int reps = argc > 2 ? atoi(argv[2]) : 5;
+    int grid_b[] = {1, 8, 16, 32};
+    int grid_s[] = {0, 2, 4, 6};
+    if (rounds * 7 + PROMPT_LEN >= STRIDE) {
+        fprintf(stderr, "rounds too large for STRIDE\n");
+        return 1;
+    }
+    for (int bi = 0; bi < 4; bi++) {
+        for (int si = 0; si < 4; si++) {
+            int b = grid_b[bi], s = grid_s[si];
+            uint64_t seed = 0x517eULL + (uint64_t)b;
+            /* fidelity guard: identical committed tokens */
+            int n_aos, n_soa;
+            int32_t *aos = run_rounds_aos(b, s, rounds, seed, &n_aos);
+            int32_t *soa = run_rounds_soa(b, s, rounds, seed, &n_soa);
+            if (n_aos != n_soa ||
+                memcmp(aos, soa, (size_t)n_aos * sizeof(int32_t)) != 0) {
+                fprintf(stderr, "variant divergence at b=%d s=%d\n", b, s);
+                return 1;
+            }
+            free(aos);
+            free(soa);
+            double rps_aos = best_of(run_rounds_aos, b, s, rounds, seed, reps);
+            double rps_soa = best_of(run_rounds_soa, b, s, rounds, seed, reps);
+            printf("%d %d %.1f %.1f\n", b, s, rps_aos, rps_soa);
+            fflush(stdout);
+        }
+    }
+    return 0;
+}

@@ -1,0 +1,203 @@
+#!/usr/bin/env python3
+"""Native mirror of `cargo bench --bench micro_hotpath`'s rounds/s grid.
+
+The build container for this repo has no Rust toolchain, but the perf
+trajectory (ROADMAP item 5) needs a recorded before/after pair for the
+zero-allocation hot-path PR.  This script compiles and runs
+`bench_hotpath_mirror.c` — a C re-implementation of the stub-backend
+decode round in both its pre-refactor shape (AoS rows + per-round Vec
+churn, including the per-row commit allocation the old `accept_row`
+did) and its post-refactor shape (flat SoA token arena + reused
+round-scratch buffers, zero allocations per round).  C shares Rust's
+memory economics (real malloc, unboxed ints, ~ns stub model), so the
+measured delta isolates what the PR changed; a CPython mirror cannot
+say the same (interpreter boxing swamps allocator behavior — tried and
+rejected).
+
+The C program asserts both variants commit byte-identical tokens before
+anything is timed.
+
+Output: `BENCH_micro_hotpath.json` (after) and
+`BENCH_micro_hotpath.before.json` at the repo root, in the exact
+`telemetry::bench::bench_report_custom` schema — same field set, same
+FNV-1a config fingerprint over the Rust-compatible compact
+serialization, same `.git/HEAD` SHA resolution.  Provenance is recorded
+in `config` so `scripts/bench_regress.py` never hard-gates a
+Rust-measured number against a mirror-measured one.
+
+Usage: python3 scripts/bench_hotpath_mirror.py [--rounds N] [--reps R]
+"""
+
+import argparse
+import subprocess
+import tempfile
+from pathlib import Path
+
+MASK = (1 << 64) - 1
+GRID_B = [1, 8, 16, 32]
+GRID_S = [0, 2, 4, 6]
+HEADLINE = "rps_b32_s4"
+
+
+# --- Rust-compatible JSON writing + provenance -------------------------
+
+
+def _num(n):
+    f = float(n)
+    if f == int(f) and abs(f) < 9e15:
+        return str(int(f))
+    return repr(f)
+
+
+def compact(v) -> str:
+    """Matches rust/src/util/json.rs `Json::compact` (sorted keys)."""
+    if v is None:
+        return "null"
+    if isinstance(v, bool):
+        return "true" if v else "false"
+    if isinstance(v, (int, float)):
+        return _num(v)
+    if isinstance(v, str):
+        return '"' + v.replace("\\", "\\\\").replace('"', '\\"') + '"'
+    if isinstance(v, list):
+        return "[" + ",".join(compact(x) for x in v) + "]"
+    if isinstance(v, dict):
+        return "{" + ",".join(
+            compact(k) + ":" + compact(v[k]) for k in sorted(v)
+        ) + "}"
+    raise TypeError(type(v))
+
+
+def pretty(v, depth=0) -> str:
+    """Matches `Json::pretty` (1-space indent, sorted keys)."""
+    pad = " " * (depth + 1)
+    if isinstance(v, list) and v:
+        inner = ",\n".join(pad + pretty(x, depth + 1) for x in v)
+        return "[\n" + inner + "\n" + " " * depth + "]"
+    if isinstance(v, dict) and v:
+        inner = ",\n".join(
+            pad + compact(k) + ": " + pretty(v[k], depth + 1) for k in sorted(v)
+        )
+        return "{\n" + inner + "\n" + " " * depth + "}"
+    return compact(v)
+
+
+def fingerprint(config) -> str:
+    """FNV-1a 64 over the compact form — same as `config_fingerprint`."""
+    h = 0xCBF2_9CE4_8422_2325
+    for byte in compact(config).encode():
+        h ^= byte
+        h = (h * 0x1_0000_0001_B3) & MASK
+    return f"{h:016x}"
+
+
+def git_sha(repo_root: Path) -> str:
+    head = repo_root / ".git" / "HEAD"
+    try:
+        text = head.read_text().strip()
+    except OSError:
+        return "unknown"
+    if text.startswith("ref: "):
+        try:
+            return (repo_root / ".git" / text[5:]).read_text().strip()
+        except OSError:
+            return "unknown"
+    return text
+
+
+def bench_report_custom(name, metrics, config, repo_root):
+    return {
+        "name": name,
+        "metrics": metrics,
+        "config_fingerprint": fingerprint(config),
+        "config": config,
+        "git_sha": git_sha(repo_root),
+    }
+
+
+# --- driver ------------------------------------------------------------
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=200)
+    ap.add_argument("--reps", type=int, default=9, help="best-of reps per cell")
+    ap.add_argument("--out", type=Path, default=None)
+    args = ap.parse_args()
+    repo_root = Path(__file__).resolve().parents[1]
+    out_dir = args.out or repo_root
+    src = repo_root / "scripts" / "bench_hotpath_mirror.c"
+
+    with tempfile.TemporaryDirectory() as tmp:
+        exe = Path(tmp) / "hotpath_mirror"
+        subprocess.run(
+            ["cc", "-O2", "-Wall", "-Wextra", "-o", str(exe), str(src)],
+            check=True,
+        )
+        res = subprocess.run(
+            [str(exe), str(args.rounds), str(args.reps)],
+            check=True,
+            capture_output=True,
+            text=True,
+        )
+
+    before_metrics = {}
+    after_metrics = {}
+    for line in res.stdout.strip().splitlines():
+        b, s, rps_aos, rps_soa = line.split()
+        key = f"rps_b{b}_s{s}"
+        before_metrics[key] = float(rps_aos)
+        after_metrics[key] = float(rps_soa)
+        print(
+            f"b={int(b):>2} s={s}: before {float(rps_aos):>11.0f} r/s   "
+            f"after {float(rps_soa):>11.0f} r/s   "
+            f"({float(rps_soa) / float(rps_aos):.2f}x)"
+        )
+    want = {f"rps_b{b}_s{s}" for b in GRID_B for s in GRID_S}
+    assert set(before_metrics) == want, "mirror grid incomplete"
+
+    speedup = after_metrics[HEADLINE] / before_metrics[HEADLINE]
+    after_metrics["speedup_vs_before_b32_s4"] = round(speedup, 3)
+    print(f"\nheadline {HEADLINE}: {speedup:.2f}x (target >= 1.30x)")
+
+    base_config = {
+        "bench": "micro_hotpath",
+        "backend": "stub-mirror-c",
+        "scale": "quick",
+        "rounds": args.rounds,
+        "reps": args.reps,
+        "vocab": 512,
+        "grid_b": GRID_B,
+        "grid_s": GRID_S,
+        "provenance": (
+            "c-mirror of the stub-backend rounds/s grid -- the build "
+            "container has no Rust toolchain; CI's quick-scale bench job "
+            "regenerates the Rust-measured BENCH_micro_hotpath.json"
+        ),
+    }
+    docs = [
+        (
+            "BENCH_micro_hotpath.before.json",
+            dict(base_config, variant="aos-churn (pre-refactor hot path)"),
+            before_metrics,
+        ),
+        (
+            "BENCH_micro_hotpath.json",
+            dict(base_config, variant="soa-arena (post-refactor hot path)"),
+            after_metrics,
+        ),
+    ]
+    for fname, config, metrics in docs:
+        doc = bench_report_custom("micro_hotpath", metrics, config, repo_root)
+        path = out_dir / fname
+        path.write_text(pretty(doc) + "\n")
+        print(f"-> {path}")
+
+    if speedup < 1.3:
+        raise SystemExit(
+            f"headline speedup {speedup:.2f}x below the 1.3x acceptance bar"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+#!/usr/bin/env python3
+"""CI bench-regress gate: diff a fresh `BENCH_micro_hotpath.json` against
+the committed baseline and fail on a >15% rounds/s regression.
+
+Stdlib only.  The headline metric is `rps_b32_s4` — the largest
+(batch x spec-len) cell of the stub-backend decode grid, where the
+SoA/arena hot path matters most.
+
+Comparability rule: the two documents are hard-gated only when their
+configs describe the same measurement — same `backend` (Rust benches
+omit the key; the C mirror sets `stub-mirror-c`) and same `scale`.
+A Rust-measured number must never fail CI against a mirror-measured
+baseline (different machine, different harness): in that case, and for
+sub-threshold deltas, the script prints an advisory line and exits 0.
+
+Usage:
+    bench_regress.py FRESH COMMITTED [--key rps_b32_s4] [--threshold 0.15]
+
+Exit status: 1 on a comparable >threshold regression, else 0.
+"""
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def load(path: Path) -> dict:
+    try:
+        return json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        sys.exit(f"bench-regress: cannot read {path}: {e}")
+
+
+def provenance(doc: dict) -> tuple:
+    cfg = doc.get("config", {}) or {}
+    return (cfg.get("backend", "rust"), cfg.get("scale", "unknown"))
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("fresh", type=Path)
+    ap.add_argument("committed", type=Path)
+    ap.add_argument("--key", default="rps_b32_s4")
+    ap.add_argument("--threshold", type=float, default=0.15)
+    args = ap.parse_args()
+
+    fresh = load(args.fresh)
+    committed = load(args.committed)
+    try:
+        new = float(fresh["metrics"][args.key])
+        old = float(committed["metrics"][args.key])
+    except (KeyError, TypeError, ValueError) as e:
+        sys.exit(f"bench-regress: missing metric {args.key!r}: {e}")
+    if old <= 0.0:
+        sys.exit(f"bench-regress: committed {args.key} is non-positive ({old})")
+
+    delta = new / old - 1.0
+    fresh_prov = provenance(fresh)
+    committed_prov = provenance(committed)
+    comparable = fresh_prov == committed_prov
+
+    print(
+        f"bench-regress: {args.key} fresh={new:.1f} committed={old:.1f} "
+        f"delta={delta:+.1%} (threshold -{args.threshold:.0%})"
+    )
+    if not comparable:
+        print(
+            f"bench-regress: ADVISORY ONLY — provenance differs "
+            f"(fresh {fresh_prov}, committed {committed_prov}); once a "
+            f"Rust-measured baseline is committed this becomes gating"
+        )
+        return 0
+    if delta < -args.threshold:
+        print(
+            f"bench-regress: FAIL — {args.key} regressed {-delta:.1%} "
+            f"(> {args.threshold:.0%}) against the committed baseline"
+        )
+        return 1
+    if delta < 0:
+        print(f"bench-regress: advisory — {args.key} down {-delta:.1%}, within budget")
+    else:
+        print(f"bench-regress: OK — {args.key} improved or held")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
