@@ -39,6 +39,7 @@ use crate::admission::{
 use crate::engine::{AdmitRequest, BatchState, Engine};
 use crate::metrics::RoundEvent;
 use crate::policy::SpeculationPolicy;
+use crate::telemetry::attrib::Waterfall;
 use crate::telemetry::{PhaseKind, Telemetry};
 
 /// Batcher knobs.
@@ -68,6 +69,10 @@ pub struct BatchRequest {
     pub sent_at: f64,
     /// absolute deadline on the experiment clock (None = no SLO)
     pub deadline: Option<f64>,
+    /// seconds spent in a dispatcher before reaching this batcher's queue
+    /// (cluster paths; 0 on single-worker paths) — split out of the queue
+    /// component in the request's latency waterfall
+    pub route_hop: f64,
 }
 
 impl BatchRequest {
@@ -78,6 +83,7 @@ impl BatchRequest {
             prompt,
             sent_at,
             deadline: None,
+            route_hop: 0.0,
         }
     }
 }
@@ -99,6 +105,10 @@ pub struct FinishedRequest {
     pub deadline: Option<f64>,
     /// round boundaries admission control deferred it at before admitting
     pub deferred_rounds: usize,
+    /// sealed latency waterfall: where this request's wall time went
+    /// (queue wait, prefill, per-phase decode splits, reshape stalls);
+    /// `wf.total()` equals `finished_at - sent_at` by construction
+    pub wf: Waterfall,
 }
 
 /// A request the admission controller rejected before it ever occupied a
@@ -123,6 +133,8 @@ struct RowMeta {
     spec_at_admit: usize,
     deadline: Option<f64>,
     deferred_rounds: usize,
+    /// accruing waterfall (sealed against measured latency at retire)
+    wf: Waterfall,
 }
 
 /// A queued request plus its admission-control state.
@@ -331,16 +343,22 @@ impl ContinuousBatcher {
                 let meta = ep.slots[retired.slot]
                     .take()
                     .expect("retired slot carries metadata");
-                if tel.enabled() {
+                // seal the waterfall: whatever measured latency the
+                // accrued components don't cover lands in `other`, so the
+                // decomposition tiles `finished_at - sent_at` exactly
+                let mut wf = meta.wf;
+                wf.seal(now - meta.sent_at);
+                if tel.active() {
                     // deadline slack on the experiment clock; the event
                     // timestamp on the telemetry clock like every other
                     // threaded-path event
-                    tel.finish(
+                    tel.finish_attrib(
                         tel.now(),
                         meta.id,
                         retired.tokens.len(),
                         false,
                         meta.deadline.map(|d| d - now),
+                        Some(wf),
                     );
                 }
                 finished.push(FinishedRequest {
@@ -353,6 +371,7 @@ impl ContinuousBatcher {
                     spec_at_admit: meta.spec_at_admit,
                     deadline: meta.deadline,
                     deferred_rounds: meta.deferred_rounds,
+                    wf,
                 });
             }
             drained = !ep.state.has_live() && self.queue.is_empty();
@@ -424,10 +443,21 @@ impl ContinuousBatcher {
                     // sink actually records
                     tel.policy_fit(tel.now(), policy.snapshot());
                 }
+                // every live row sat through this round: accrue its
+                // phase split into each row's waterfall
+                for meta in ep.slots.iter_mut().flatten() {
+                    meta.wf.add_round_split(
+                        info.phases.catch_up,
+                        info.phases.draft,
+                        info.phases.verify,
+                        info.phases.accept,
+                    );
+                }
                 self.timeline.push(RoundEvent {
                     t: now,
                     epoch: self.epoch_seq,
                     live: info.live,
+                    width: info.width,
                     queued: self.queue.len(),
                     s: info.s,
                     accepted: info.accepted,
@@ -479,7 +509,7 @@ impl ContinuousBatcher {
         let queue: Vec<Queued> = self.queue.drain(..).collect();
         let out = apply_plan_to_queue(plan, queue, live, |q| q.deferred += 1);
         let n_shed = out.shed.len();
-        if tel.enabled() {
+        if tel.active() {
             // per-request verdict events with predicted deadline slack
             // at the post-plan load (what the controller's model saw)
             let t = tel.now();
@@ -497,8 +527,14 @@ impl ContinuousBatcher {
             };
             for q in &out.shed {
                 tel.admission(t, q.req.id, "shed", q.req.deadline, slack(q.req.deadline), q.deferred);
-                // the shed IS the request's terminal event
-                tel.finish(t, q.req.id, 0, true, q.req.deadline.map(|d| d - now));
+                // the shed IS the request's terminal event; its whole
+                // lifetime was queue wait (plus any dispatcher hop)
+                let mut wf = Waterfall::default();
+                wf.route_hop = q.req.route_hop;
+                wf.queue = (now - q.req.sent_at - q.req.route_hop).max(0.0);
+                wf.deferred_rounds = q.deferred;
+                wf.seal(now - q.req.sent_at);
+                tel.finish_attrib(t, q.req.id, 0, true, q.req.deadline.map(|d| d - now), Some(wf));
             }
             for (i, q) in out.queue.iter().enumerate() {
                 let verdict = if i < out.admit_n { "admit" } else { "defer" };
@@ -553,9 +589,16 @@ impl ContinuousBatcher {
         let spec_now = policy.choose(live_after, engine.limits().max_spec_len(bucket));
 
         let prompts: Vec<Vec<i32>> = fresh.iter().map(|q| q.req.prompt.clone()).collect();
+        let t_prefill = std::time::Instant::now();
         let mut state =
             engine.prefill_rows(&prompts, bucket, may_speculate, self.cfg.max_new_tokens)?;
+        let prefill_s = t_prefill.elapsed().as_secs_f64();
         for (i, q) in fresh.iter().enumerate() {
+            let mut wf = Waterfall::default();
+            wf.route_hop = q.req.route_hop;
+            wf.queue = (now - q.req.sent_at - q.req.route_hop).max(0.0);
+            wf.prefill = prefill_s;
+            wf.deferred_rounds = q.deferred;
             slots[i] = Some(RowMeta {
                 id: q.req.id,
                 sent_at: q.req.sent_at,
@@ -564,14 +607,20 @@ impl ContinuousBatcher {
                 spec_at_admit: spec_now,
                 deadline: q.req.deadline,
                 deferred_rounds: q.deferred,
+                wf,
             });
         }
 
         if !carry.is_empty() {
             let (reqs, metas): (Vec<AdmitRequest>, Vec<RowMeta>) = carry.into_iter().unzip();
+            let t_carry = std::time::Instant::now();
             let carried_slots = engine.admit_rows(&mut state, reqs)?;
-            for (slot, meta) in carried_slots.into_iter().zip(metas) {
+            // a carried row stalls through the new epoch's prefill AND its
+            // own re-admission: both belong to its reshape component
+            let reshape_s = prefill_s + t_carry.elapsed().as_secs_f64();
+            for (slot, mut meta) in carried_slots.into_iter().zip(metas) {
                 // carried rows keep their original admission metadata
+                meta.wf.reshape += reshape_s;
                 slots[slot] = Some(meta);
             }
         }
@@ -610,13 +659,22 @@ impl ContinuousBatcher {
                 )
             })
             .collect();
+        let t_admit = std::time::Instant::now();
         let slots = engine.admit_rows(&mut ep.state, reqs)?;
+        // mid-epoch admission ingests the prompt through chunked verify
+        // calls — the row's prefill, even though no fresh epoch opened
+        let admit_s = t_admit.elapsed().as_secs_f64();
         let live_after = ep.state.live_rows();
         let spec_now = policy.choose(
             live_after,
             engine.limits().max_spec_len(ep.state.bucket()),
         );
         for (slot, q) in slots.into_iter().zip(fresh) {
+            let mut wf = Waterfall::default();
+            wf.route_hop = q.req.route_hop;
+            wf.queue = (now - q.req.sent_at - q.req.route_hop).max(0.0);
+            wf.prefill = admit_s;
+            wf.deferred_rounds = q.deferred;
             ep.slots[slot] = Some(RowMeta {
                 id: q.req.id,
                 sent_at: q.req.sent_at,
@@ -625,6 +683,7 @@ impl ContinuousBatcher {
                 spec_at_admit: spec_now,
                 deadline: q.req.deadline,
                 deferred_rounds: q.deferred,
+                wf,
             });
         }
         Ok(())

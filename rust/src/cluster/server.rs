@@ -131,6 +131,10 @@ pub fn run_cluster_experiment(
         );
     }
     let epoch = Instant::now();
+    // align the telemetry clock (and the flight recorder's) with the
+    // experiment epoch before any shard handle is cloned: every shard
+    // handle shares the same inner, so all tracks rebase at once
+    cfg.telemetry.rebase_to_now();
 
     // --- spawn the shard workers ---
     let mut shard_txs: Vec<Sender<ServerMsg>> = Vec::with_capacity(n_shards);
@@ -204,7 +208,7 @@ pub fn run_cluster_experiment(
             .name("specbatch-dispatcher".into())
             .spawn(move || loop {
                 match dispatch_rx.recv() {
-                    Ok(ServerMsg::Request(r)) => {
+                    Ok(ServerMsg::Request(mut r)) => {
                         let loads: Vec<ShardLoad> = (0..shard_txs.len())
                             .map(|k| {
                                 let live = gauges[k].live();
@@ -231,7 +235,13 @@ pub fn run_cluster_experiment(
                             })
                             .collect();
                         let k = router.route(&loads).min(shard_txs.len() - 1);
-                        if tel.enabled() {
+                        // stamp the dispatcher hop — the slice of latency
+                        // spent between client send and shard enqueue —
+                        // so the shard's waterfall can split it out of
+                        // the queue component
+                        r.route_hop =
+                            (epoch.elapsed().as_secs_f64() - r.sent_at).max(0.0);
+                        if tel.active() {
                             // score vector the router saw: staleness-scaled
                             // marginal cost where warm, in-flight load else
                             let scores: Vec<f64> = loads

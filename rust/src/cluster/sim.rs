@@ -37,8 +37,11 @@ use crate::admission::{
 };
 use crate::metrics::{LatencyRecorder, RequestRecord, RoundEvent, SloSummary};
 use crate::policy::{RoundFeedback, SpeculationPolicy};
-use crate::simulator::des::{emit_round_phases, kv_blocks_of, sim_bucket_for};
+use crate::simulator::des::{
+    emit_round_phases, kv_blocks_of, round_phase_split, sim_bucket_for,
+};
 use crate::simulator::{reshape_cost, round_cost, SimConfig};
+use crate::telemetry::attrib::Waterfall;
 use crate::telemetry::{PhaseKind, Telemetry};
 use crate::traffic::{Trace, TraceItem};
 use crate::util::prng::{DrawBuffer, Pcg64};
@@ -88,6 +91,8 @@ struct SimRow {
     spec_at_admit: usize,
     deadline: Option<f64>,
     deferred: usize,
+    /// accruing latency decomposition (see the single-worker DES twin)
+    wf: Waterfall,
 }
 
 /// A queued trace item plus its admission-control state.
@@ -113,6 +118,8 @@ struct Shard {
     /// bulk-filled acceptance draws; leftovers are consumed before the
     /// next fill, so the per-shard stream stays exactly sequential
     draws: DrawBuffer,
+    /// policy drift flushes already reported to the flight recorder
+    drift_seen: usize,
 }
 
 impl Shard {
@@ -211,6 +218,7 @@ pub fn simulate_trace_cluster_admission_tel(
             bucket: 0,
             accepted: Vec::new(),
             draws: DrawBuffer::new(),
+            drift_seen: 0,
         })
         .collect();
     let mut recorder = LatencyRecorder::new();
@@ -252,7 +260,7 @@ pub fn simulate_trace_cluster_admission_tel(
                 })
                 .collect();
             let k = router.route(&loads).min(n_shards - 1);
-            if tel.enabled() {
+            if tel.active() {
                 // score vector: each shard's backlog as the router saw it
                 // (fitted marginal cost where the policy is warm, plain
                 // live+queued rows otherwise)
@@ -365,7 +373,7 @@ fn step_shard(
                 shed: true,
             });
         }
-        if tel.enabled() {
+        if tel.active() {
             let fin = predicted_finish(
                 policy,
                 sh.t,
@@ -379,7 +387,12 @@ fn step_shard(
             };
             for w in &out.shed {
                 tel.admission(sh.t, w.item.id, "shed", w.item.deadline, slack(w.item.deadline), w.deferred);
-                tel.finish(sh.t, w.item.id, 0, true, w.item.deadline.map(|d| d - sh.t));
+                // a shed request's whole lifetime was queue wait
+                let mut wf = Waterfall::default();
+                wf.queue = sh.t - w.item.send_at;
+                wf.deferred_rounds = w.deferred;
+                wf.seal(sh.t - w.item.send_at);
+                tel.finish_attrib(sh.t, w.item.id, 0, true, w.item.deadline.map(|d| d - sh.t), Some(wf));
             }
             for (i, w) in out.queue.iter().enumerate() {
                 let verdict = if i < out.admit_n { "admit" } else { "defer" };
@@ -404,6 +417,9 @@ fn step_shard(
         }
         let w = sh.queue.pop_front().expect("planned admits are queued");
         let plen = w.item.prompt.ids.len();
+        let mut wf = Waterfall::default();
+        wf.queue = admit_t - w.item.send_at;
+        wf.deferred_rounds = w.deferred;
         sh.live.push(SimRow {
             id: w.item.id,
             sent_at: w.item.send_at,
@@ -414,6 +430,7 @@ fn step_shard(
             spec_at_admit: 0,
             deadline: w.item.deadline,
             deferred: w.deferred,
+            wf,
         });
         plen_sum += plen;
         n_admit += 1;
@@ -433,6 +450,12 @@ fn step_shard(
         if tel.enabled() {
             tel.phase(t_pre, sh.t - t_pre, PhaseKind::Prefill);
         }
+        // every live row — resident rows included — sits through the
+        // prefill of the newcomers
+        let dpre = sh.t - t_pre;
+        for row in sh.live.iter_mut() {
+            row.wf.prefill += dpre;
+        }
         // epoch reshape at a bucket growth, mirroring the single-worker
         // DES: carried rows re-ingest under Dense, remap under Paged
         // (bucket is monotone within an epoch, like the real batcher's)
@@ -445,6 +468,10 @@ fn step_shard(
             let rcst = reshape_cost(cfg, &carried, sh.live.len());
             if tel.enabled() {
                 tel.phase(sh.t, rcst, PhaseKind::Reshape);
+            }
+            // the whole (grown) batch stalls through the re-ingest
+            for row in sh.live.iter_mut() {
+                row.wf.reshape += rcst;
             }
             sh.t += rcst;
         }
@@ -483,6 +510,11 @@ fn step_shard(
     let t_round = sh.t;
     sh.t += rc;
     let accepted_total: usize = sh.accepted.iter().map(|&a| a as usize).sum();
+    // every live row sits through this round: accrue its phase split
+    let (draft, verify, accept) = round_phase_split(cfg, rc, b, s, ctx);
+    for row in sh.live.iter_mut() {
+        row.wf.add_round_split(0.0, draft, verify, accept);
+    }
     let fb = RoundFeedback {
         live: b,
         width: b, // continuous rounds execute at exactly the live width
@@ -492,19 +524,27 @@ fn step_shard(
         round_time: rc,
     };
     policy.observe(&fb);
+    let flushes = policy.drift_flushes();
+    if flushes > sh.drift_seen {
+        sh.drift_seen = flushes;
+        tel.drift_flush(t_round);
+    }
     let kvb = kv_blocks_of(cfg, sh.live.iter().map(|r| r.plen + r.generated));
+    // the shard epoch's padded bucket is the executing width
+    let width = sh.bucket.max(sim_bucket_for(b));
     sh.rounds.push(RoundEvent {
         t: sh.t,
         epoch: sh.epoch,
         live: b,
+        width,
         queued: sh.queue.len(),
         s,
         accepted: accepted_total,
         round_cost: rc,
         kv_blocks: kvb,
     });
-    if tel.enabled() {
-        tel.round(t_round, rc, sh.epoch, b, sh.queue.len(), s, committed, &fb.accepted, kvb);
+    if tel.active() {
+        tel.round(t_round, rc, sh.epoch, b, width, sh.queue.len(), s, committed, &fb.accepted, kvb);
         emit_round_phases(cfg, tel, t_round, rc, b, s, ctx);
         if tel.tracing() {
             tel.policy_fit(sh.t, policy.snapshot());
@@ -518,13 +558,16 @@ fn step_shard(
     while i < sh.live.len() {
         if sh.live[i].generated >= cfg.max_new_tokens {
             let row = sh.live.swap_remove(i);
-            if tel.enabled() {
-                tel.finish(
+            if tel.active() {
+                let mut wf = row.wf;
+                wf.seal(sh.t - row.sent_at);
+                tel.finish_attrib(
                     sh.t,
                     row.id,
                     cfg.max_new_tokens,
                     false,
                     row.deadline.map(|d| d - sh.t),
+                    Some(wf),
                 );
             }
             recorder.push(RequestRecord {

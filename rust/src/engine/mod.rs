@@ -110,6 +110,27 @@ impl Default for EngineConfig {
     }
 }
 
+/// One decode round's wall time split into its execution phases
+/// (derived from the stopwatch sections the round body already times).
+/// `accept` is the remainder after catch-up/draft/verify, so the four
+/// fields tile the round's wall time exactly — the attribution
+/// invariant `rust/tests/attribution.rs` pins.  Computed every round
+/// (two map reads per field), whether or not telemetry is on, so the
+/// batcher can build per-request waterfalls at `--telemetry off`.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct RoundPhases {
+    pub catch_up: f64,
+    pub draft: f64,
+    pub verify: f64,
+    pub accept: f64,
+}
+
+impl RoundPhases {
+    pub fn total(&self) -> f64 {
+        self.catch_up + self.draft + self.verify + self.accept
+    }
+}
+
 /// One decode round as seen by the policy: the live batch size it was
 /// queried with, the speculation length it chose, what the round
 /// committed/accepted, and how long it took (the raw material of the
@@ -117,6 +138,9 @@ impl Default for EngineConfig {
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct RoundInfo {
     pub live: usize,
+    /// executing width (the padded bucket): `width - live` lanes are
+    /// padding slack in the round's waste accounting
+    pub width: usize,
     pub s: usize,
     pub committed: usize,
     /// drafts accepted over the live real rows (0 for plain rounds)
@@ -125,6 +149,8 @@ pub struct RoundInfo {
     /// policy feedback instead carries the catch-up-free time, which is
     /// the clean per-s cost signal)
     pub round_time: f64,
+    /// the round's phase split (tiles `round_time` exactly)
+    pub phases: RoundPhases,
 }
 
 /// Statistics of one serving epoch (a `generate_batch` call or a
@@ -587,6 +613,8 @@ pub struct Engine<'rt> {
     /// (epoch, queued) the serving loop reports for telemetry round
     /// spans — two plain stores per round, nothing when disabled
     round_ctx: (usize, usize),
+    /// policy drift flushes already reported to the flight recorder
+    drift_seen: usize,
     /// paged-layout block pools (None under the dense layout)
     pools: Option<KvPools>,
     #[cfg(feature = "pjrt")]
@@ -614,6 +642,7 @@ impl<'rt> Engine<'rt> {
             scratch: RoundScratch::default(),
             tel: Telemetry::disabled(),
             round_ctx: (0, 0),
+            drift_seen: 0,
             pools: None,
             rt: Some(rt),
         })
@@ -642,6 +671,7 @@ impl<'rt> Engine<'rt> {
             scratch: RoundScratch::default(),
             tel: Telemetry::disabled(),
             round_ctx: (0, 0),
+            drift_seen: 0,
             pools,
             #[cfg(feature = "pjrt")]
             rt: None,
@@ -878,18 +908,18 @@ impl<'rt> Engine<'rt> {
         st.stats.spec_lens.push(s);
         st.stats.rounds += 1;
 
-        // telemetry phase breakdown is *derived* from the stopwatch
-        // sections the round body already times (no double-timing): the
-        // section totals captured here, diffed after the round, are this
-        // round's catch-up/draft/verify shares
-        let tel_mark = self.tel.enabled().then(|| {
-            (
-                self.tel.now(),
-                self.stopwatch.total("ssm_catch_up"),
-                self.stopwatch.total("speculate"),
-                self.stopwatch.total("verify"),
-            )
-        });
+        // the phase breakdown is *derived* from the stopwatch sections
+        // the round body already times (no double-timing): the section
+        // totals captured here, diffed after the round, are this
+        // round's catch-up/draft/verify shares.  Captured every round
+        // (read-only map lookups) so `RoundInfo::phases` feeds request
+        // waterfalls even with telemetry off; the event timestamp is
+        // only taken when some sink is attached ([`Telemetry::active`]
+        // covers the always-on flight recorder too).
+        let tel_mark = self.tel.active().then(|| self.tel.now());
+        let catch0 = self.stopwatch.total("ssm_catch_up");
+        let draft0 = self.stopwatch.total("speculate");
+        let verify0 = self.stopwatch.total("verify");
         // two clocks: `wall_start` covers the whole round (the timeline's
         // accounting truth), `fit_start` begins AFTER the SSM catch-up
         // pass — backlog drain is bookkeeping for earlier plain rounds /
@@ -936,24 +966,31 @@ impl<'rt> Engine<'rt> {
         self.check_eos_and_limits(&mut st.rows);
         self.sync_blocks(st)?;
         let committed = st.rows.committed_total() - before;
-        if let Some((t0, catch0, draft0, verify0)) = tel_mark {
-            let catch = (self.stopwatch.total("ssm_catch_up") - catch0).as_secs_f64();
-            let draft = (self.stopwatch.total("speculate") - draft0).as_secs_f64();
-            let verify = (self.stopwatch.total("verify") - verify0).as_secs_f64();
+        let catch = (self.stopwatch.total("ssm_catch_up") - catch0).as_secs_f64();
+        let draft = (self.stopwatch.total("speculate") - draft0).as_secs_f64();
+        let verify = (self.stopwatch.total("verify") - verify0).as_secs_f64();
+        // the host-side accept/commit share is the round's remainder,
+        // so the four phases exactly tile the round's wall time
+        let phases = RoundPhases {
+            catch_up: catch,
+            draft,
+            verify,
+            accept: (wall_time - (catch + draft + verify)).max(0.0),
+        };
+        if let Some(t0) = tel_mark {
             self.tel.round(
                 t0,
                 wall_time,
                 self.round_ctx.0,
                 live,
+                st.bucket,
                 self.round_ctx.1,
                 s,
                 committed,
                 &self.scratch.accepted,
                 st.kv_blocks_in_use(),
             );
-            // phases laid out back-to-back in execution order; the
-            // host-side accept/commit share is the round's remainder,
-            // so the sub-spans exactly tile the round span
+            // phases laid out back-to-back in execution order
             let mut t = t0;
             for (dur, phase) in [
                 (catch, PhaseKind::CatchUp),
@@ -965,8 +1002,7 @@ impl<'rt> Engine<'rt> {
                     t += dur;
                 }
             }
-            self.tel
-                .phase(t, (wall_time - (catch + draft + verify)).max(0.0), PhaseKind::Accept);
+            self.tel.phase(t, phases.accept, PhaseKind::Accept);
             if let Some(kv) = self.kv_block_stats() {
                 self.tel
                     .kv_pool(t0 + wall_time, kv.in_use, kv.capacity, kv.mean_internal_frag);
@@ -974,10 +1010,12 @@ impl<'rt> Engine<'rt> {
         }
         let info = RoundInfo {
             live,
+            width: st.bucket,
             s,
             committed,
             accepted: self.scratch.accepted.iter().map(|&a| a as usize).sum(),
             round_time: wall_time,
+            phases,
         };
         st.stats.per_round.push(info);
         // lend the accepted buffer to the feedback (no clone), then take
@@ -994,6 +1032,14 @@ impl<'rt> Engine<'rt> {
         };
         policy.observe(&fb);
         self.scratch.accepted = fb.accepted;
+        // a CUSUM flush is exactly the moment the operator wants the
+        // surrounding rounds for — arm a flight dump (plain compare
+        // when the policy has no detector)
+        let flushes = policy.drift_flushes();
+        if flushes > self.drift_seen {
+            self.drift_seen = flushes;
+            self.tel.drift_flush(self.tel.now());
+        }
         Ok(info)
     }
 

@@ -12,6 +12,9 @@
 //!   pair when built without `--features pjrt`;
 //! * `sim`        — paper-scale simulator run (choose GPU/model profiles
 //!   and the scheduling mode);
+//! * `inspect`    — post-hoc analysis of a telemetry JSONL dump: latency
+//!   waterfalls, the batch-size × s waste surface, and the policy's
+//!   predicted-vs-realized per-token audit;
 //! * `warmup`     — precompile the executable matrix;
 //! * `selfcheck`  — load everything and run a smoke generation.
 //!
@@ -33,6 +36,7 @@ use specbatch::simulator::{
     simulate_trace_admission_tel, simulate_trace_continuous_admission_tel, simulated_lut,
     AcceptanceDrift, AcceptanceProcess, CostModel, GpuProfile, ModelProfile, SimConfig,
 };
+use specbatch::telemetry::attrib::{RoundWaste, Waterfall, WasteSurface};
 use specbatch::telemetry::{self, Telemetry, TelemetryMode};
 use specbatch::traffic::{SloSpec, Trace, TrafficPattern};
 use specbatch::util::cli::{ArgSpec, Args};
@@ -74,6 +78,7 @@ fn run(argv: Vec<String>) -> Result<()> {
         "grid" => cmd_grid(rest),
         "serve" => cmd_serve(rest),
         "sim" => cmd_sim(rest),
+        "inspect" => cmd_inspect(rest),
         "warmup" => cmd_warmup(rest),
         "selfcheck" => cmd_selfcheck(rest),
         "--help" | "-h" | "help" => {
@@ -95,6 +100,8 @@ fn usage() -> String {
      \x20              --workers N for the threaded stub cluster)\n\
      \x20 sim          paper-scale GPU-simulator experiment (static|continuous,\n\
      \x20              --workers N --router ... for the cluster DES)\n\
+     \x20 inspect      analyze a telemetry/flight JSONL dump: latency waterfalls,\n\
+     \x20              the batch-size x s waste surface, policy audit\n\
      \x20 warmup       precompile the executable matrix [pjrt]\n\
      \x20 selfcheck    smoke-test artifacts + engine [pjrt]\n\
      \n\
@@ -139,6 +146,43 @@ fn parse_telemetry(args: &Args) -> Result<Telemetry> {
         TelemetryMode::parse(v)?
     };
     Ok(Telemetry::new(mode))
+}
+
+/// Attach the always-on flight recorder when `--flight` is set.  This
+/// deliberately works with `--telemetry off`: the ring records (and the
+/// SIGUSR1 dump handler installs) regardless of the event sink.
+fn attach_flight(args: &Args, tel: Telemetry) -> Result<Telemetry> {
+    if !args.has_flag("flight") {
+        return Ok(tel);
+    }
+    let fr = telemetry::flight::FlightRecorder::new(
+        args.get_usize("flight-slots")?,
+        args.get("flight-out")?,
+    );
+    telemetry::flight::install_sigusr1();
+    Ok(tel.with_flight(fr))
+}
+
+/// Final flight dump: whatever the ring holds at exit is written, so a
+/// run that never hit an anomaly trigger still leaves its last rounds
+/// on disk for `inspect`.
+fn finish_flight(tel: &Telemetry) -> Result<()> {
+    if let Some(fr) = tel.flight() {
+        for p in fr.dump_now()? {
+            println!("flight -> {}", p.display());
+        }
+    }
+    Ok(())
+}
+
+/// The `--flight*` knobs shared by `serve` and `sim`.
+fn flight_opts(spec: ArgSpec, default_prefix: &'static str) -> ArgSpec {
+    spec.flag(
+        "flight",
+        "always-on flight recorder (records even at --telemetry off; SIGUSR1 dumps)",
+    )
+    .opt("flight-slots", "256", "flight ring capacity (rounded up to a power of two)")
+    .opt("flight-out", default_prefix, "flight dump prefix (<prefix>.<seq>.{trace.json,jsonl})")
 }
 
 /// The `sim` knobs folded into the bench report's config fingerprint
@@ -494,6 +538,7 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         "exporter prefix (.prom / .trace.json / .events.jsonl)",
     )
     .opt("bench-out", "", "emit BENCH_<name>.json via telemetry::bench (empty = skip)");
+    let spec = flight_opts(spec, "results/serve_flight");
     let args = spec.parse(&argv)?;
 
     let mode = parse_mode(args.get("mode")?)?;
@@ -526,7 +571,7 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
 
     let workers = args.get_usize("workers")?;
     let router = RouterSpec::parse(args.get("router")?)?;
-    let tel = parse_telemetry(&args)?;
+    let tel = attach_flight(&args, parse_telemetry(&args)?)?;
     let cfg = ServerConfig {
         max_batch: args.get_usize("max-batch")?,
         max_new_tokens: args.get_usize("tokens")?,
@@ -616,6 +661,7 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
             ],
         ),
     )?;
+    finish_flight(&tel)?;
     Ok(())
 }
 
@@ -659,8 +705,9 @@ fn cmd_sim(argv: Vec<String>) -> Result<()> {
             "exporter prefix (.prom / .trace.json / .events.jsonl)",
         )
         .opt("bench-out", "", "emit BENCH_<name>.json via telemetry::bench (empty = skip)");
+    let spec = flight_opts(spec, "results/sim_flight");
     let args = spec.parse(&argv)?;
-    let tel = parse_telemetry(&args)?;
+    let tel = attach_flight(&args, parse_telemetry(&args)?)?;
     let mode = parse_mode(args.get("mode")?)?;
     let gpu_name = args.get("gpu")?.to_string();
     let gpu = GpuProfile::by_name(&gpu_name)
@@ -819,6 +866,7 @@ fn cmd_sim(argv: Vec<String>) -> Result<()> {
             &merged,
             cli_config_json("sim", &args, SIM_CONFIG_KEYS),
         )?;
+        finish_flight(&tel)?;
         return Ok(());
     }
 
@@ -889,5 +937,244 @@ fn cmd_sim(argv: Vec<String>) -> Result<()> {
         &rounds,
         cli_config_json("sim", &args, SIM_CONFIG_KEYS),
     )?;
+    finish_flight(&tel)?;
+    Ok(())
+}
+
+/// `inspect` — parse a telemetry events JSONL (the `--telemetry-out`
+/// export or a flight-recorder dump: both carry the same per-line event
+/// schema) and print the three causal-attribution reports:
+///
+/// 1. the mean per-request latency **waterfall** (every component plus
+///    the sealed remainder — the components tile latency exactly);
+/// 2. the batch-size × s **waste surface** (rejected-draft and
+///    bucket-padding slots as fractions of executed slots, plus SSM
+///    catch-up seconds);
+/// 3. the **policy audit**: the last fitted-model snapshot's predicted
+///    vs realized per-token cost per bucket and the committed s ladder.
+fn cmd_inspect(argv: Vec<String>) -> Result<()> {
+    let spec = ArgSpec::new(
+        "inspect",
+        "analyze a telemetry/flight JSONL dump (waterfalls, waste surface, policy audit)",
+    )
+    .opt(
+        "events",
+        "results/serve_telemetry.events.jsonl",
+        "events JSONL: a --telemetry-out export or a flight dump",
+    );
+    let args = spec.parse(&argv)?;
+    let path = args.get("events")?;
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("inspect: cannot read {path}: {e}"))?;
+
+    let num = |j: &Json, k: &str| -> Option<f64> { j.get(k).ok()?.as_f64().ok() };
+    let idx = |j: &Json, k: &str| -> Option<usize> { j.get(k).ok()?.as_usize().ok() };
+
+    let mut finished: Vec<Waterfall> = Vec::new();
+    let mut shed = 0usize;
+    let mut surface = WasteSurface::default();
+    // the catch-up phase span of a round follows its round event in the
+    // stream, so the last round cell owns subsequent catch-up seconds
+    let mut last_cell: Option<(usize, usize)> = None;
+    let mut catch_up_total = 0.0f64;
+    let mut triggers: std::collections::BTreeMap<String, usize> = Default::default();
+    let mut snapshot: Option<Json> = None;
+    let (mut events, mut skipped) = (0usize, 0usize);
+
+    for line in text.lines().filter(|l| !l.trim().is_empty()) {
+        let Ok(j) = Json::parse(line) else {
+            skipped += 1;
+            continue;
+        };
+        let Some(ev) = j.get("ev").ok().and_then(|v| v.as_str().ok().map(String::from))
+        else {
+            skipped += 1;
+            continue;
+        };
+        events += 1;
+        match ev.as_str() {
+            "round" => {
+                let (Some(width), Some(live), Some(s), Some(dur)) = (
+                    idx(&j, "width"),
+                    idx(&j, "live"),
+                    idx(&j, "s"),
+                    num(&j, "dur"),
+                ) else {
+                    skipped += 1;
+                    continue;
+                };
+                let accepted: usize = j
+                    .get("accepted")
+                    .ok()
+                    .and_then(|a| a.as_arr().ok())
+                    .map(|a| a.iter().filter_map(|v| v.as_usize().ok()).sum())
+                    .unwrap_or(0);
+                // clamp against malformed files: the identities assume
+                // live <= width and accepted <= live*s
+                let live = live.min(width.max(1));
+                let width = width.max(live);
+                let waste = RoundWaste::from_round(width, live, s, accepted.min(live * s));
+                surface.add_round(waste, 0.0, dur);
+                last_cell = Some((WasteSurface::bucket_of(width), s));
+            }
+            "phase" => {
+                let is_catch_up = j
+                    .get("phase")
+                    .ok()
+                    .and_then(|p| p.as_str().ok().map(|s| s == "ssm_catch_up"))
+                    .unwrap_or(false);
+                if is_catch_up {
+                    let dur = num(&j, "dur").unwrap_or(0.0);
+                    catch_up_total += dur;
+                    if let Some(cell) = last_cell {
+                        if let Some(c) = surface.cells.get_mut(&cell) {
+                            c.catch_up_s += dur;
+                        }
+                    }
+                }
+            }
+            "finish" => {
+                if j.get("shed").ok().and_then(|v| v.as_bool().ok()).unwrap_or(false) {
+                    // shed waterfalls are queue-only; keep them out of
+                    // the served-request component means
+                    shed += 1;
+                } else if let Ok(Some(w)) = j.get_opt("waterfall") {
+                    if let Ok(wf) = Waterfall::from_json(w) {
+                        finished.push(wf);
+                    }
+                }
+            }
+            "policy_fit" => {
+                if let Ok(s) = j.get("snapshot") {
+                    snapshot = Some(s.clone());
+                }
+            }
+            "trigger" => {
+                if let Ok(c) = j.get("cause").and_then(|v| Ok(v.as_str()?.to_string())) {
+                    *triggers.entry(c).or_insert(0) += 1;
+                }
+            }
+            _ => {}
+        }
+    }
+    println!(
+        "{path}: {events} events ({} finishes with waterfalls, {shed} shed, {skipped} skipped)",
+        finished.len()
+    );
+
+    // --- 1. latency waterfalls ---
+    if finished.is_empty() {
+        println!("\nno finish waterfalls (re-run with --telemetry trace or --flight)");
+    } else {
+        let n = finished.len() as f64;
+        let mut totals: Vec<f64> = finished.iter().map(|w| w.total()).collect();
+        totals.sort_by(|a, b| a.total_cmp(b));
+        let pct = |q: f64| totals[((totals.len() - 1) as f64 * q).round() as usize];
+        println!(
+            "\nlatency waterfall over {} requests (mean {:.4}s, p50 {:.4}s, p99 {:.4}s)",
+            finished.len(),
+            totals.iter().sum::<f64>() / n,
+            pct(0.50),
+            pct(0.99),
+        );
+        let mean_total = (totals.iter().sum::<f64>() / n).max(1e-12);
+        let mut acc = Waterfall::default();
+        for w in &finished {
+            acc.queue += w.queue;
+            acc.prefill += w.prefill;
+            acc.catch_up += w.catch_up;
+            acc.draft += w.draft;
+            acc.verify += w.verify;
+            acc.accept += w.accept;
+            acc.reshape += w.reshape;
+            acc.route_hop += w.route_hop;
+            acc.other += w.other;
+        }
+        println!("{:>10} {:>12} {:>8}", "component", "mean s", "share");
+        for (label, sum) in acc.components() {
+            println!(
+                "{label:>10} {:>12.6} {:>7.1}%",
+                sum / n,
+                100.0 * (sum / n) / mean_total
+            );
+        }
+        let deferred: usize = finished.iter().map(|w| w.deferred_rounds).sum();
+        if deferred > 0 {
+            println!("{deferred} admission deferral rounds across finished requests");
+        }
+    }
+
+    // --- 2. the waste surface ---
+    if surface.cells.is_empty() {
+        println!("\nno round events: the waste surface needs round spans");
+    } else {
+        let (mut committed, mut rejected, mut padding) = (0u64, 0u64, 0u64);
+        for c in surface.cells.values() {
+            committed += c.committed;
+            rejected += c.rejected;
+            padding += c.padding;
+        }
+        let slots = (committed + rejected + padding).max(1);
+        println!(
+            "\n{}totals: {committed} committed / {rejected} rejected / {padding} padding \
+             of {slots} slots ({:.1}% goodput); ssm catch-up {catch_up_total:.4}s",
+            surface.render(),
+            100.0 * committed as f64 / slots as f64,
+        );
+    }
+
+    // --- 3. policy audit ---
+    if let Some(snap) = snapshot {
+        if let Ok(Some(per_token)) = snap.get_opt("per_token") {
+            if let Ok(obj) = per_token.as_obj() {
+                if !obj.is_empty() {
+                    println!(
+                        "\npolicy audit (predicted vs realized per-token seconds)"
+                    );
+                    println!(
+                        "{:>8} {:>13} {:>13} {:>8} {:>10}",
+                        "bucket", "predicted", "realized", "err", "chosen s"
+                    );
+                    let mut rows: Vec<(usize, &Json)> = obj
+                        .iter()
+                        .filter_map(|(k, v)| k.parse::<usize>().ok().map(|b| (b, v)))
+                        .collect();
+                    rows.sort_by_key(|&(b, _)| b);
+                    for (bucket, cell) in rows {
+                        let realized = num(cell, "realized_s");
+                        let predicted = num(cell, "predicted_s");
+                        let chosen = snap
+                            .get("chosen_s")
+                            .ok()
+                            .and_then(|c| idx(c, &bucket.to_string()));
+                        let err = match (predicted, realized) {
+                            (Some(p), Some(r)) if r > 0.0 => {
+                                format!("{:>+7.1}%", 100.0 * (p - r) / r)
+                            }
+                            _ => format!("{:>8}", "-"),
+                        };
+                        println!(
+                            "{bucket:>8} {:>13} {:>13} {err} {:>10}",
+                            predicted.map_or("-".into(), |p| format!("{p:.6}")),
+                            realized.map_or("-".into(), |r| format!("{r:.6}")),
+                            chosen.map_or("-".into(), |s| s.to_string()),
+                        );
+                    }
+                }
+            }
+        }
+        if let Ok(Some(d)) = snap.get_opt("drift_flushes") {
+            if let Ok(d) = d.as_usize() {
+                if d > 0 {
+                    println!("{d} CUSUM drift flushes");
+                }
+            }
+        }
+    }
+    if !triggers.is_empty() {
+        let list: Vec<String> =
+            triggers.iter().map(|(c, n)| format!("{c} x{n}")).collect();
+        println!("\nflight triggers: {}", list.join(", "));
+    }
     Ok(())
 }

@@ -293,6 +293,10 @@ pub struct RoundEvent {
     pub epoch: usize,
     /// live requests when the policy was queried
     pub live: usize,
+    /// executing width (the padded bucket, `>= live`); with `live`,
+    /// `s`, and `accepted` this makes the round's goodput/waste split
+    /// (`telemetry::attrib::RoundWaste`) recoverable from the record
+    pub width: usize,
     /// requests waiting in the queue
     pub queued: usize,
     /// speculation length chosen for the round
@@ -307,16 +311,23 @@ pub struct RoundEvent {
     pub kv_blocks: usize,
 }
 
-/// Export a round timeline (columns: t_s, epoch, live, queued, s,
-/// accepted, round_cost_s, kv_blocks).
+/// Export a round timeline (columns: t_s, epoch, live, width, queued,
+/// s, accepted, rejected, padding, round_cost_s, kv_blocks).  The
+/// `rejected`/`padding` columns are the round's mispeculation waste and
+/// bucket-padding slack in token slots, derived from the slot-tiling
+/// identity (`telemetry::attrib::RoundWaste`) so the CSV is
+/// self-describing for downstream waste-surface analysis.
 pub fn rounds_to_csv(events: &[RoundEvent]) -> Csv {
     let mut csv = Csv::new(&[
         "t_s",
         "epoch",
         "live",
+        "width",
         "queued",
         "s",
         "accepted",
+        "rejected",
+        "padding",
         "round_cost_s",
         "kv_blocks",
     ]);
@@ -325,9 +336,12 @@ pub fn rounds_to_csv(events: &[RoundEvent]) -> Csv {
             f(e.t),
             e.epoch.to_string(),
             e.live.to_string(),
+            e.width.to_string(),
             e.queued.to_string(),
             e.s.to_string(),
             e.accepted.to_string(),
+            (e.live * e.s).saturating_sub(e.accepted).to_string(),
+            (e.width.saturating_sub(e.live) * (e.s + 1)).to_string(),
             f(e.round_cost),
             e.kv_blocks.to_string(),
         ]);
@@ -568,6 +582,7 @@ mod tests {
                 t: 0.1,
                 epoch: 1,
                 live: 1,
+                width: 2,
                 queued: 3,
                 s: 5,
                 accepted: 2,
@@ -578,6 +593,7 @@ mod tests {
                 t: 0.2,
                 epoch: 1,
                 live: 4,
+                width: 4,
                 queued: 0,
                 s: 2,
                 accepted: 5,
@@ -589,12 +605,15 @@ mod tests {
         let lines: Vec<&str> = out.lines().collect();
         assert_eq!(
             lines[0],
-            "t_s,epoch,live,queued,s,accepted,round_cost_s,kv_blocks"
+            "t_s,epoch,live,width,queued,s,accepted,rejected,padding,round_cost_s,kv_blocks"
         );
         assert_eq!(lines.len(), 3);
-        assert!(lines[1].contains(",1,1,3,5,2,"), "{}", lines[1]);
+        // live 1, width 2, s 5, accepted 2 → rejected 1*5-2=3,
+        // padding (2-1)*(5+1)=6
+        assert!(lines[1].contains(",1,1,2,3,5,2,3,6,"), "{}", lines[1]);
         assert!(lines[1].ends_with(",2"), "{}", lines[1]);
-        assert!(lines[2].contains(",1,4,0,2,5,"), "{}", lines[2]);
+        // live 4, width 4, s 2, accepted 5 → rejected 3, padding 0
+        assert!(lines[2].contains(",1,4,4,0,2,5,3,0,"), "{}", lines[2]);
         assert!(lines[2].ends_with(",9"), "{}", lines[2]);
     }
 

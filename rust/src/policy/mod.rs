@@ -110,6 +110,14 @@ pub trait SpeculationPolicy {
     fn snapshot(&self) -> Option<Json> {
         None
     }
+
+    /// Cumulative acceptance-window flushes fired by the policy's drift
+    /// detector, 0 for policies without one.  Drivers poll this between
+    /// rounds: an increment is a changepoint the operator will want the
+    /// surrounding rounds for, so it arms a flight-recorder dump.
+    fn drift_flushes(&self) -> usize {
+        0
+    }
 }
 
 /// Plain batched decoding (the paper's baseline).
@@ -241,6 +249,9 @@ pub struct ModelBased {
     flush_reprobe: bool,
     /// acceptance-window flushes triggered by the CUSUM detector
     drift_flushes: usize,
+    /// per cost bucket: (total round seconds, total committed tokens) —
+    /// the *realized* per-token cost the fits can be audited against
+    realized: BTreeMap<usize, (f64, usize)>,
 }
 
 impl ModelBased {
@@ -264,6 +275,7 @@ impl ModelBased {
             resid_var: None,
             flush_reprobe: false,
             drift_flushes: 0,
+            realized: BTreeMap::new(),
         }
     }
 
@@ -307,6 +319,16 @@ impl ModelBased {
     /// Acceptance-window flushes the CUSUM changepoint detector fired.
     pub fn drift_flushes(&self) -> usize {
         self.drift_flushes
+    }
+
+    /// Measured per-token cost at a bucket: total round seconds over
+    /// total committed tokens, across every round filed there.  `None`
+    /// until the bucket has committed at least one token.
+    pub fn realized_token_time(&self, bucket: usize) -> Option<f64> {
+        self.realized
+            .get(&bucket)
+            .filter(|&&(_, n)| n > 0)
+            .map(|&(t, n)| t / n as f64)
     }
 
     /// The step-cost fit serving a bucket: exact hit, else the nearest
@@ -607,6 +629,11 @@ impl SpeculationPolicy for ModelBased {
             while pts.len() > self.cfg.cost_window {
                 pts.pop_front();
             }
+            if fb.committed > 0 {
+                let acc = self.realized.entry(cost_bucket).or_insert((0.0, 0));
+                acc.0 += fb.round_time;
+                acc.1 += fb.committed;
+            }
         }
         *self.rounds_seen.entry(live_bucket).or_insert(0) += 1;
         self.observes += 1;
@@ -658,6 +685,29 @@ impl SpeculationPolicy for ModelBased {
                 .map(|(b, n)| (b.to_string(), Json::Num(*n as f64)))
                 .collect(),
         );
+        // fitted model vs measurement, per bucket — the audit trail for
+        // the waste analysis: `inspect` compares where the *predicted*
+        // speculation crossover sits against the realized cost surface
+        let per_token = Json::Obj(
+            self.realized
+                .iter()
+                .filter(|&(_, &(_, n))| n > 0)
+                .map(|(&b, &(t, n))| {
+                    (
+                        b.to_string(),
+                        Json::obj(vec![
+                            (
+                                "predicted_s",
+                                self.predict_token_time(b)
+                                    .map_or(Json::Null, Json::Num),
+                            ),
+                            ("realized_s", Json::Num(t / n as f64)),
+                            ("committed_tokens", Json::Num(n as f64)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
         Some(Json::obj(vec![
             ("policy", Json::Str("model-based".into())),
             ("samples", Json::Num(self.accept_samples.len() as f64)),
@@ -666,6 +716,7 @@ impl SpeculationPolicy for ModelBased {
             ("buckets", buckets),
             ("chosen_s", chosen),
             ("rounds_seen", probes),
+            ("per_token", per_token),
             ("explore_every", Json::Num(self.cfg.explore_every as f64)),
             (
                 "cusum",
@@ -681,6 +732,10 @@ impl SpeculationPolicy for ModelBased {
             ),
             ("drift_flushes", Json::Num(self.drift_flushes as f64)),
         ]))
+    }
+
+    fn drift_flushes(&self) -> usize {
+        self.drift_flushes
     }
 }
 

@@ -49,6 +49,7 @@ use crate::runtime::Runtime;
 use crate::scheduler::profiler::{profile, ProfilerConfig};
 use crate::scheduler::Lut;
 use crate::simulator::{simulated_lut, CostModel, GpuProfile, ModelProfile, SimConfig};
+use crate::telemetry::attrib::Waterfall;
 use crate::telemetry::Telemetry;
 use crate::testkit::stub::StubSpec;
 use crate::traffic::Trace;
@@ -134,6 +135,10 @@ pub struct ServerRequest {
     pub sent_at: f64,
     /// absolute deadline on the experiment clock (None = no SLO)
     pub deadline: Option<f64>,
+    /// seconds the request spent in the cluster dispatcher before it was
+    /// forwarded to a shard (stamped by the dispatcher; 0 single-worker).
+    /// Surfaces as the `route_hop` waterfall component
+    pub route_hop: f64,
 }
 
 /// A response on the outbound message queue.  A shed request still gets a
@@ -508,7 +513,7 @@ fn serve_static(
         deferrals += out.deferred;
         // predicted deadline slack on the experiment clock (events are
         // stamped on the telemetry clock, like the engine's)
-        let pred_fin = if tel.enabled() {
+        let pred_fin = if tel.active() {
             predicted_finish(&*policy, now, cfg.max_new_tokens, out.queue.len(), cfg.max_batch)
         } else {
             None
@@ -519,9 +524,14 @@ fn serve_static(
         };
         for (r, deferred) in out.shed {
             sheds += 1;
-            if tel.enabled() {
+            if tel.active() {
                 tel.admission(tel.now(), r.id, "shed", r.deadline, slack(r.deadline), deferred);
-                tel.finish(tel.now(), r.id, 0, true, r.deadline.map(|d| d - now));
+                // a shed request's whole lifetime was queue wait
+                let mut wf = Waterfall::default();
+                wf.queue = now - r.sent_at;
+                wf.deferred_rounds = deferred;
+                wf.seal(now - r.sent_at);
+                tel.finish_attrib(tel.now(), r.id, 0, true, r.deadline.map(|d| d - now), Some(wf));
             }
             let resp = shed_response(ShedRequest {
                 id: r.id,
@@ -538,7 +548,7 @@ fn serve_static(
         // admits, then defers, stay pending in order — each keeping its
         // deferral count
         let n_batch = out.admit_n.min(cfg.max_batch);
-        if tel.enabled() {
+        if tel.active() {
             for (i, (r, deferred)) in out.queue.iter().enumerate() {
                 let verdict = if i < n_batch { "admit" } else { "defer" };
                 tel.admission(tel.now(), r.id, verdict, r.deadline, slack(r.deadline), *deferred);
@@ -561,11 +571,25 @@ fn serve_static(
         // timestamps are not observable batch-to-completion — every round
         // of the batch carries its start time)
         drain(&mut pending, &mut shutdown);
+        // batch-to-completion attribution: every request in the batch sat
+        // through the same prefill and every decode round, so one shared
+        // waterfall body serves the whole batch — only the queue wait
+        // (and therefore the sealed `other` residue) is per-request
+        let mut body = Waterfall::default();
+        let mut rounds_wall = 0.0f64;
         for info in &out.stats.per_round {
+            body.add_round_split(
+                info.phases.catch_up,
+                info.phases.draft,
+                info.phases.verify,
+                info.phases.accept,
+            );
+            rounds_wall += info.round_time;
             timeline.push(RoundEvent {
                 t: started_at,
                 epoch: batch_idx,
                 live: info.live,
+                width: info.width,
                 queued: pending.len(),
                 s: info.s,
                 accepted: info.accepted,
@@ -575,18 +599,25 @@ fn serve_static(
                 kv_blocks: 0,
             });
         }
+        // what generate_batch spent outside decode rounds is the prefill
+        body.prefill = ((finished_at - started_at) - rounds_wall).max(0.0);
         if tel.tracing() {
             tel.policy_fit(tel.now(), policy.snapshot());
         }
         let spec_len = out.stats.spec_lens.first().copied().unwrap_or(0);
         for ((req, deferred), tokens) in batch.into_iter().zip(out.tokens) {
-            if tel.enabled() {
-                tel.finish(
+            if tel.active() {
+                let mut wf = body;
+                wf.queue = started_at - req.sent_at;
+                wf.deferred_rounds = deferred;
+                wf.seal(finished_at - req.sent_at);
+                tel.finish_attrib(
                     tel.now(),
                     req.id,
                     tokens.len(),
                     false,
                     req.deadline.map(|d| d - finished_at),
+                    Some(wf),
                 );
             }
             let resp = ServerResponse {
@@ -605,6 +636,10 @@ fn serve_static(
                 // harness went away; stop serving
                 return Ok((timeline, deferrals, sheds));
             }
+        }
+        // batch boundary = safe point for flight-recorder dumps
+        for p in tel.flight_poll() {
+            log_info!("server: flight recorder dumped {}", p.display());
         }
     }
     Ok((timeline, deferrals, sheds))
@@ -688,6 +723,7 @@ fn serve_continuous(
                     prompt: r.prompt,
                     sent_at: r.sent_at,
                     deadline: r.deadline,
+                    route_hop: r.route_hop,
                 }),
                 Ok(ServerMsg::Shutdown) => {
                     shutdown = true;
@@ -712,6 +748,7 @@ fn serve_continuous(
                     prompt: r.prompt,
                     sent_at: r.sent_at,
                     deadline: r.deadline,
+                    route_hop: r.route_hop,
                 }),
                 Ok(ServerMsg::Shutdown) => break,
                 Err(RecvTimeoutError::Timeout) => continue,
@@ -724,6 +761,10 @@ fn serve_continuous(
             break 'serve;
         }
         publish(&batcher, &*policy, epoch.elapsed().as_secs_f64());
+        // round boundary = safe point for flight-recorder dumps
+        for p in cfg.telemetry.flight_poll() {
+            log_info!("server: flight recorder dumped {}", p.display());
+        }
     }
     // finish in-flight work after a shutdown request (the controller's
     // progress contract guarantees this drains: an idle worker either
@@ -753,6 +794,7 @@ pub fn run_client(trace: &Trace, requests: &Sender<ServerMsg>, epoch: Instant) -
             prompt: item.prompt.ids.clone(),
             sent_at: epoch.elapsed().as_secs_f64(),
             deadline: item.deadline,
+            route_hop: 0.0,
         };
         requests
             .send(ServerMsg::Request(req))
@@ -809,6 +851,11 @@ pub fn run_experiment(
         };
     }
     let epoch = Instant::now();
+    // align the telemetry clock (and the flight recorder's) with the
+    // experiment epoch so every track of the exported trace shares one
+    // time origin — shard handles clone the same inner, so this rebases
+    // all of them at once
+    cfg.telemetry.rebase_to_now();
     let server = spawn_server(backend, cfg, policy, lut, epoch);
     let lut_used = server.wait_ready(Duration::from_secs(600))?;
 

@@ -43,6 +43,7 @@ use crate::admission::{
 use crate::kvcache::{KvLayout, DEFAULT_BLOCK_SIZE};
 use crate::metrics::{LatencyRecorder, RequestRecord, RoundEvent};
 use crate::policy::{RoundFeedback, SpeculationPolicy};
+use crate::telemetry::attrib::Waterfall;
 use crate::telemetry::{PhaseKind, Telemetry};
 use crate::traffic::{Trace, TraceItem};
 use crate::util::prng::{DrawBuffer, Pcg64};
@@ -195,6 +196,7 @@ pub fn batch_service_time(
         &Telemetry::disabled(),
         0,
         0,
+        None,
     )
 }
 
@@ -204,6 +206,11 @@ pub fn batch_service_time(
 /// `epoch`/`queued` label the round spans; emission consumes no
 /// randomness, so a disabled handle reproduces [`batch_service_time`]
 /// bit for bit.
+///
+/// When `wf_out` is given, the batch's latency decomposition (prefill +
+/// per-round draft/verify/accept splits) accrues into it; every request
+/// of a batch-to-completion batch experiences the same body, so the
+/// caller stamps per-request queue wait and seals against latency.
 #[allow(clippy::too_many_arguments)]
 pub fn batch_service_time_tel(
     cfg: &SimConfig,
@@ -214,11 +221,13 @@ pub fn batch_service_time_tel(
     tel: &Telemetry,
     epoch: usize,
     queued: usize,
+    mut wf_out: Option<&mut Waterfall>,
 ) -> (f64, usize, usize) {
     let b = prompt_lens.len();
     assert!(b >= 1);
     let mean_prompt = prompt_lens.iter().sum::<usize>() as f64 / b as f64;
     let may_speculate = policy.wants_speculation();
+    let mut drift_seen = policy.drift_flushes();
 
     // prefill (both models when speculating)
     let mut t = cfg.llm.t_prefill(b, mean_prompt.ceil() as usize);
@@ -227,6 +236,9 @@ pub fn batch_service_time_tel(
     }
     if tel.enabled() {
         tel.phase(start_t, t, PhaseKind::Prefill);
+    }
+    if let Some(wf) = wf_out.as_deref_mut() {
+        wf.prefill += t;
     }
 
     // prefill commits one token per row
@@ -270,7 +282,7 @@ pub fn batch_service_time_tel(
         }
         let t_round = start_t + t;
         t += rc;
-        if tel.enabled() {
+        if tel.active() {
             let kvb = kv_blocks_of(
                 cfg,
                 prompt_lens
@@ -278,8 +290,14 @@ pub fn batch_service_time_tel(
                     .zip(generated.iter())
                     .map(|(&p, &g)| p + g.min(cfg.max_new_tokens)),
             );
-            tel.round(t_round, rc, epoch, live, queued, s, committed, &accepted_rows, kvb);
+            // the static batch keeps executing at its admitted width `b`
+            // even as rows freeze, so `b` is the padded width too
+            tel.round(t_round, rc, epoch, live, b, queued, s, committed, &accepted_rows, kvb);
             emit_round_phases(cfg, tel, t_round, rc, b, s, ctx);
+        }
+        if let Some(wf) = wf_out.as_deref_mut() {
+            let (draft, verify, accept) = round_phase_split(cfg, rc, b, s, ctx);
+            wf.add_round_split(0.0, draft, verify, accept);
         }
         let fb = RoundFeedback {
             live,
@@ -293,6 +311,11 @@ pub fn batch_service_time_tel(
         };
         policy.observe(&fb);
         accepted_rows = fb.accepted;
+        let flushes = policy.drift_flushes();
+        if flushes > drift_seen {
+            drift_seen = flushes;
+            tel.drift_flush(t);
+        }
     }
     // hand unconsumed bulk draws back so the caller's generator sits at
     // exactly the sequential-equivalent state
@@ -301,11 +324,31 @@ pub fn batch_service_time_tel(
     (t, tokens, first_spec_len.unwrap_or(0))
 }
 
-/// Decompose one simulated round into draft/verify/accept phase spans —
-/// the virtual-time twin of the engine's stopwatch-delta decomposition.
-/// The three spans tile `[t_round, t_round + rc]` exactly: accept is the
+/// Decompose one simulated round's cost `rc` into `(draft, verify,
+/// accept)` — the virtual-time twin of the engine's stopwatch-delta
+/// decomposition.  The three parts tile `rc` exactly: accept is the
 /// remainder (host overhead) after the modeled draft and verify costs.
-/// Shared with the cluster mirror (`cluster::sim`).
+/// Shared with the cluster mirror and the waterfall accrual below.
+pub(crate) fn round_phase_split(
+    cfg: &SimConfig,
+    rc: f64,
+    b: usize,
+    s: usize,
+    ctx: usize,
+) -> (f64, f64, f64) {
+    let draft = if s == 0 {
+        0.0
+    } else {
+        s as f64 * cfg.ssm.t_draft(b, ctx)
+    };
+    let verify = cfg.llm.t_verify(b, s, ctx);
+    let accept = (rc - draft - verify).max(0.0);
+    (draft, verify, accept)
+}
+
+/// Emit one simulated round's draft/verify/accept spans on `tel`, tiling
+/// `[t_round, t_round + rc]`.  Shared with the cluster mirror
+/// (`cluster::sim`).
 pub(crate) fn emit_round_phases(
     cfg: &SimConfig,
     tel: &Telemetry,
@@ -315,12 +358,7 @@ pub(crate) fn emit_round_phases(
     s: usize,
     ctx: usize,
 ) {
-    let draft = if s == 0 {
-        0.0
-    } else {
-        s as f64 * cfg.ssm.t_draft(b, ctx)
-    };
-    let verify = cfg.llm.t_verify(b, s, ctx);
+    let (draft, verify, accept) = round_phase_split(cfg, rc, b, s, ctx);
     let mut pt = t_round;
     if draft > 0.0 {
         tel.phase(pt, draft, PhaseKind::Draft);
@@ -328,7 +366,7 @@ pub(crate) fn emit_round_phases(
     }
     tel.phase(pt, verify, PhaseKind::Verify);
     pt += verify;
-    tel.phase(pt, (rc - (pt - t_round)).max(0.0), PhaseKind::Accept);
+    tel.phase(pt, accept, PhaseKind::Accept);
 }
 
 /// Simulate a full trace through the single-server FIFO queue
@@ -446,7 +484,7 @@ pub fn simulate_trace_admission_tel(
         // the admissible prefix forms the batch (capped); the rest —
         // over-capacity admits, then defers — stays queued in order
         let n_batch = out.admit_n.min(cfg.max_batch);
-        if tel.enabled() {
+        if tel.active() {
             let fin = crate::admission::predicted_finish(
                 policy,
                 start,
@@ -460,7 +498,12 @@ pub fn simulate_trace_admission_tel(
             };
             for w in &out.shed {
                 tel.admission(start, w.item.id, "shed", w.item.deadline, slack(w.item.deadline), w.deferred);
-                tel.finish(start, w.item.id, 0, true, w.item.deadline.map(|d| d - start));
+                // a shed request's whole lifetime was queue wait
+                let mut wf = Waterfall::default();
+                wf.queue = start - w.item.send_at;
+                wf.deferred_rounds = w.deferred;
+                wf.seal(start - w.item.send_at);
+                tel.finish_attrib(start, w.item.id, 0, true, w.item.deadline.map(|d| d - start), Some(wf));
             }
             for (i, w) in out.queue.iter().enumerate() {
                 let verdict = if i < n_batch { "admit" } else { "defer" };
@@ -477,6 +520,9 @@ pub fn simulate_trace_admission_tel(
         }
         epoch += 1;
         let prompt_lens: Vec<usize> = batch.iter().map(|w| w.item.prompt.ids.len()).collect();
+        // the shared latency body of this batch-to-completion batch:
+        // prefill + per-round phase splits, identical for every member
+        let mut body = Waterfall::default();
         let (dur, _tokens, spec_len) = batch_service_time_tel(
             cfg,
             policy,
@@ -486,16 +532,22 @@ pub fn simulate_trace_admission_tel(
             tel,
             epoch,
             waiting.len(),
+            Some(&mut body),
         );
         let finish = start + dur;
         for w in &batch {
-            if tel.enabled() {
-                tel.finish(
+            if tel.active() {
+                let mut wf = body;
+                wf.queue = start - w.item.send_at;
+                wf.deferred_rounds = w.deferred;
+                wf.seal(finish - w.item.send_at);
+                tel.finish_attrib(
                     finish,
                     w.item.id,
                     cfg.max_new_tokens,
                     false,
                     w.item.deadline.map(|d| d - finish),
+                    Some(wf),
                 );
             }
             recorder.push(RequestRecord {
@@ -574,6 +626,10 @@ pub fn simulate_trace_continuous_admission_tel(
         spec_at_admit: usize,
         deadline: Option<f64>,
         deferred: usize,
+        /// accruing latency decomposition: every virtual-clock advance a
+        /// live row sits through is charged to exactly one component, so
+        /// the sealed waterfall tiles the DES latency with `other == 0`
+        wf: Waterfall,
     }
 
     let mut rng = Pcg64::with_stream(cfg.seed, 0xC0_11);
@@ -593,6 +649,7 @@ pub fn simulate_trace_continuous_admission_tel(
     // batch_service_time_tel): reused accepted buffer + bulk PRNG draws
     let mut accepted_rows: Vec<u32> = Vec::new();
     let mut draws = DrawBuffer::new();
+    let mut drift_seen = policy.drift_flushes();
 
     while next < items.len() || !live.is_empty() || !waiting.is_empty() {
         if live.is_empty() {
@@ -642,7 +699,7 @@ pub fn simulate_trace_continuous_admission_tel(
             for w in &out.shed {
                 push_shed(&mut recorder, w, t);
             }
-            if tel.enabled() {
+            if tel.active() {
                 let fin = crate::admission::predicted_finish(
                     policy,
                     t,
@@ -656,7 +713,12 @@ pub fn simulate_trace_continuous_admission_tel(
                 };
                 for w in &out.shed {
                     tel.admission(t, w.item.id, "shed", w.item.deadline, slack(w.item.deadline), w.deferred);
-                    tel.finish(t, w.item.id, 0, true, w.item.deadline.map(|d| d - t));
+                    // a shed request's whole lifetime was queue wait
+                    let mut wf = Waterfall::default();
+                    wf.queue = t - w.item.send_at;
+                    wf.deferred_rounds = w.deferred;
+                    wf.seal(t - w.item.send_at);
+                    tel.finish_attrib(t, w.item.id, 0, true, w.item.deadline.map(|d| d - t), Some(wf));
                 }
                 for (i, w) in out.queue.iter().enumerate() {
                     let verdict = if i < out.admit_n { "admit" } else { "defer" };
@@ -675,6 +737,9 @@ pub fn simulate_trace_continuous_admission_tel(
         while n_admit < admit_n && live.len() < cfg.max_batch {
             let w = waiting.pop_front().expect("planned admits are queued");
             let plen = w.item.prompt.ids.len();
+            let mut wf = Waterfall::default();
+            wf.queue = admit_t - w.item.send_at;
+            wf.deferred_rounds = w.deferred;
             live.push(SimRow {
                 id: w.item.id,
                 sent_at: w.item.send_at,
@@ -685,6 +750,7 @@ pub fn simulate_trace_continuous_admission_tel(
                 spec_at_admit: 0,
                 deadline: w.item.deadline,
                 deferred: w.deferred,
+                wf,
             });
             plen_sum += plen;
             n_admit += 1;
@@ -703,6 +769,12 @@ pub fn simulate_trace_continuous_admission_tel(
             if tel.enabled() {
                 tel.phase(t_pre, t - t_pre, PhaseKind::Prefill);
             }
+            // every live row — resident rows included — sits through the
+            // prefill of the newcomers
+            let dpre = t - t_pre;
+            for row in live.iter_mut() {
+                row.wf.prefill += dpre;
+            }
             // epoch reshape: bucket growth carries the resident rows —
             // O(context) re-ingest under Dense, O(1) remap under Paged.
             // The bucket is monotone within an epoch (the real batcher
@@ -717,6 +789,11 @@ pub fn simulate_trace_continuous_admission_tel(
                 let rcst = reshape_cost(cfg, &carried, live.len());
                 if tel.enabled() {
                     tel.phase(t, rcst, PhaseKind::Reshape);
+                }
+                // the whole (grown) batch stalls while carried contexts
+                // re-ingest
+                for row in live.iter_mut() {
+                    row.wf.reshape += rcst;
                 }
                 t += rcst;
             }
@@ -754,6 +831,11 @@ pub fn simulate_trace_continuous_admission_tel(
         let t_round = t;
         t += rc;
         let accepted_total: usize = accepted_rows.iter().map(|&a| a as usize).sum();
+        // every live row sits through this round: accrue its phase split
+        let (draft, verify, accept) = round_phase_split(cfg, rc, b, s, ctx);
+        for row in live.iter_mut() {
+            row.wf.add_round_split(0.0, draft, verify, accept);
+        }
         let fb = RoundFeedback {
             live: b,
             width: b, // continuous rounds execute at exactly the live width
@@ -763,6 +845,11 @@ pub fn simulate_trace_continuous_admission_tel(
             round_time: rc,
         };
         policy.observe(&fb);
+        let flushes = policy.drift_flushes();
+        if flushes > drift_seen {
+            drift_seen = flushes;
+            tel.drift_flush(t_round);
+        }
         // arrivals during the round join the queue now, so the timeline's
         // queue column reflects the post-round backlog
         while next < items.len() && items[next].send_at <= t {
@@ -773,18 +860,22 @@ pub fn simulate_trace_continuous_admission_tel(
             next += 1;
         }
         let kvb = kv_blocks_of(cfg, live.iter().map(|r| r.plen + r.generated));
+        // the epoch's padded bucket is the executing width; rows that
+        // retired since the bucket grew leave padding slack behind
+        let width = cur_bucket.max(sim_bucket_for(b));
         rounds.push(RoundEvent {
             t,
             epoch,
             live: b,
+            width,
             queued: waiting.len(),
             s,
             accepted: accepted_total,
             round_cost: rc,
             kv_blocks: kvb,
         });
-        if tel.enabled() {
-            tel.round(t_round, rc, epoch, b, waiting.len(), s, committed, &fb.accepted, kvb);
+        if tel.active() {
+            tel.round(t_round, rc, epoch, b, width, waiting.len(), s, committed, &fb.accepted, kvb);
             emit_round_phases(cfg, tel, t_round, rc, b, s, ctx);
             if tel.tracing() {
                 tel.policy_fit(t, policy.snapshot());
@@ -798,13 +889,16 @@ pub fn simulate_trace_continuous_admission_tel(
         while i < live.len() {
             if live[i].generated >= cfg.max_new_tokens {
                 let row = live.swap_remove(i);
-                if tel.enabled() {
-                    tel.finish(
+                if tel.active() {
+                    let mut wf = row.wf;
+                    wf.seal(t - row.sent_at);
+                    tel.finish_attrib(
                         t,
                         row.id,
                         cfg.max_new_tokens,
                         false,
                         row.deadline.map(|d| d - t),
+                        Some(wf),
                     );
                 }
                 recorder.push(RequestRecord {

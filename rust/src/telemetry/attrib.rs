@@ -1,0 +1,435 @@
+//! Causal attribution: per-request latency waterfalls and per-round
+//! goodput / waste accounting.
+//!
+//! Two tiling invariants anchor this module (pinned by
+//! `rust/tests/attribution.rs`):
+//!
+//! 1. **Waterfall tiling** — a finished request's [`Waterfall`]
+//!    components sum *exactly* to its measured end-to-end latency.
+//!    Sealing ([`Waterfall::seal`]) computes `other` as the remainder,
+//!    so the identity holds by construction; the DES paths additionally
+//!    pin that `other` is ~0 (every virtual-time advance is attributed
+//!    to a named component).
+//! 2. **Slot tiling** — every decode round executes exactly
+//!    `width * (s + 1)` token slots, and [`RoundWaste`] splits them
+//!    *integer-exactly* into committed tokens (goodput), rejected
+//!    draft tokens (mispeculation waste), and bucket-padding slack:
+//!    `committed + rejected + padding == width * (s + 1)`.
+//!
+//! The second identity is the paper's Sec. 3.3 mechanism made
+//! countable: as the batch grows at fixed `s`, the verify pass prices
+//! every slot higher, so the same rejection rate wastes more compute —
+//! [`WasteSurface`] aggregates rounds into the batch-size × s surface
+//! the `inspect` subcommand prints.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// Per-request latency decomposition.  Every field is seconds of the
+/// run's clock except `deferred_rounds` (a count).  `queue` covers
+/// arrival→admission (including deferral waiting), `route_hop` the
+/// dispatcher→shard handoff on cluster paths, and `other` the sealed
+/// remainder (host scheduling, lock waits, `min_round_seconds`
+/// throttling — anything not attributable to a named phase).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Waterfall {
+    /// arrival → admission (queue wait + admission deferrals)
+    pub queue: f64,
+    /// batch prefill the request was resident for
+    pub prefill: f64,
+    /// SSM backlog catch-up residency
+    pub catch_up: f64,
+    /// drafting residency
+    pub draft: f64,
+    /// verify residency
+    pub verify: f64,
+    /// acceptance/commit residency
+    pub accept: f64,
+    /// epoch-reshape stalls the request was resident for
+    pub reshape: f64,
+    /// sealed remainder: latency minus every named component
+    pub other: f64,
+    /// cluster dispatcher → shard handoff
+    pub route_hop: f64,
+    /// admission-boundary deferrals suffered before admission
+    pub deferred_rounds: usize,
+}
+
+impl Waterfall {
+    /// Sum of every timed component (including the sealed `other`).
+    pub fn total(&self) -> f64 {
+        self.queue
+            + self.prefill
+            + self.catch_up
+            + self.draft
+            + self.verify
+            + self.accept
+            + self.reshape
+            + self.other
+            + self.route_hop
+    }
+
+    /// Sum of the named components (everything except `other`).
+    pub fn named(&self) -> f64 {
+        self.queue
+            + self.prefill
+            + self.catch_up
+            + self.draft
+            + self.verify
+            + self.accept
+            + self.reshape
+            + self.route_hop
+    }
+
+    /// Accrue one decode round's phase split (the request was resident
+    /// for the whole round, so it owns the full phase durations).
+    pub fn add_round_split(&mut self, catch_up: f64, draft: f64, verify: f64, accept: f64) {
+        self.catch_up += catch_up;
+        self.draft += draft;
+        self.verify += verify;
+        self.accept += accept;
+    }
+
+    /// Seal the waterfall against the measured end-to-end latency:
+    /// `other` becomes the exact remainder, making
+    /// [`Waterfall::total`] `== latency` an identity.  A (tiny)
+    /// negative remainder from float accumulation is kept as-is so the
+    /// identity stays exact; the tests bound its magnitude.
+    pub fn seal(&mut self, latency: f64) {
+        self.other = latency - self.named();
+    }
+
+    /// Flat JSON object (the `waterfall` key of a finish event).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("queue", Json::Num(self.queue)),
+            ("prefill", Json::Num(self.prefill)),
+            ("catch_up", Json::Num(self.catch_up)),
+            ("draft", Json::Num(self.draft)),
+            ("verify", Json::Num(self.verify)),
+            ("accept", Json::Num(self.accept)),
+            ("reshape", Json::Num(self.reshape)),
+            ("other", Json::Num(self.other)),
+            ("route_hop", Json::Num(self.route_hop)),
+            ("deferred_rounds", Json::Num(self.deferred_rounds as f64)),
+        ])
+    }
+
+    /// Parse the `to_json` form back (used by `inspect`).
+    pub fn from_json(j: &Json) -> anyhow::Result<Waterfall> {
+        let f = |k: &str| -> anyhow::Result<f64> { Ok(j.get(k)?.as_f64()?) };
+        Ok(Waterfall {
+            queue: f("queue")?,
+            prefill: f("prefill")?,
+            catch_up: f("catch_up")?,
+            draft: f("draft")?,
+            verify: f("verify")?,
+            accept: f("accept")?,
+            reshape: f("reshape")?,
+            other: f("other")?,
+            route_hop: f("route_hop")?,
+            deferred_rounds: j.get("deferred_rounds")?.as_usize()?,
+        })
+    }
+
+    /// `(label, seconds)` pairs in waterfall order (for reports).
+    pub fn components(&self) -> [(&'static str, f64); 9] {
+        [
+            ("queue", self.queue),
+            ("prefill", self.prefill),
+            ("catch_up", self.catch_up),
+            ("draft", self.draft),
+            ("verify", self.verify),
+            ("accept", self.accept),
+            ("reshape", self.reshape),
+            ("route_hop", self.route_hop),
+            ("other", self.other),
+        ]
+    }
+}
+
+/// Integer-exact slot accounting for one decode round.
+///
+/// A round at executing width `width` (the bucket) and speculation
+/// length `s` runs `width * (s + 1)` verify slots.  They split into:
+///
+/// * `committed` — tokens that advanced a sequence (accepted drafts
+///   plus the one guaranteed token per live row); goodput;
+/// * `rejected` — drafted-but-rejected tokens (`live*s - accepted`);
+///   the mispeculation waste the paper's Sec. 3.3 prices;
+/// * `padding` — slots executed for empty lanes
+///   (`(width - live) * (s + 1)`); bucket-padding slack.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RoundWaste {
+    pub width: usize,
+    pub live: usize,
+    pub s: usize,
+    pub committed: usize,
+    pub rejected: usize,
+    pub padding: usize,
+}
+
+impl RoundWaste {
+    /// Split a round's slots.  `accepted` is the summed accepted draft
+    /// count across rows (0 for a plain `s == 0` round, where the
+    /// split degenerates to `committed = live`, `rejected = 0`).
+    ///
+    /// Panics (debug) if `live > width` or `accepted > live * s` —
+    /// both would mean the caller's bookkeeping is broken.
+    pub fn from_round(width: usize, live: usize, s: usize, accepted: usize) -> RoundWaste {
+        debug_assert!(live <= width, "live {live} > width {width}");
+        debug_assert!(accepted <= live * s, "accepted {accepted} > live*s {}", live * s);
+        RoundWaste {
+            width,
+            live,
+            s,
+            committed: accepted + live,
+            rejected: live * s - accepted,
+            padding: (width - live) * (s + 1),
+        }
+    }
+
+    /// Total slots executed: `width * (s + 1)`.
+    pub fn slots(&self) -> usize {
+        self.width * (self.s + 1)
+    }
+
+    /// The tiling identity: `committed + rejected + padding == slots`.
+    pub fn tiles(&self) -> bool {
+        self.committed + self.rejected + self.padding == self.slots()
+    }
+}
+
+/// One cell of the batch-size × s waste surface.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct WasteCell {
+    pub rounds: u64,
+    pub committed: u64,
+    pub rejected: u64,
+    pub padding: u64,
+    /// SSM catch-up seconds attributed to rounds in this cell
+    pub catch_up_s: f64,
+    /// round-cost seconds in this cell
+    pub round_s: f64,
+}
+
+impl WasteCell {
+    pub fn slots(&self) -> u64 {
+        self.committed + self.rejected + self.padding
+    }
+
+    /// Rejected-draft slots as a fraction of all executed slots.
+    pub fn rejected_frac(&self) -> f64 {
+        if self.slots() == 0 {
+            0.0
+        } else {
+            self.rejected as f64 / self.slots() as f64
+        }
+    }
+
+    /// Padding slots as a fraction of all executed slots.
+    pub fn padding_frac(&self) -> f64 {
+        if self.slots() == 0 {
+            0.0
+        } else {
+            self.padding as f64 / self.slots() as f64
+        }
+    }
+}
+
+/// Aggregation of [`RoundWaste`] splits per `(width bucket, s)` cell —
+/// the paper's batch-size × speculation-length waste surface,
+/// printable as a text table by `inspect` and serializable for bench
+/// sidecars.
+#[derive(Debug, Clone, Default)]
+pub struct WasteSurface {
+    pub cells: BTreeMap<(usize, usize), WasteCell>,
+}
+
+impl WasteSurface {
+    /// Power-of-two bucket the surface keys widths by (matches the
+    /// engine's bucket ladder and `ModelBased`'s cost buckets).
+    pub fn bucket_of(width: usize) -> usize {
+        width.max(1).next_power_of_two()
+    }
+
+    /// Fold one round into the surface.
+    pub fn add_round(&mut self, waste: RoundWaste, catch_up_s: f64, round_s: f64) {
+        let cell = self
+            .cells
+            .entry((Self::bucket_of(waste.width), waste.s))
+            .or_default();
+        cell.rounds += 1;
+        cell.committed += waste.committed as u64;
+        cell.rejected += waste.rejected as u64;
+        cell.padding += waste.padding as u64;
+        cell.catch_up_s += catch_up_s;
+        cell.round_s += round_s;
+    }
+
+    /// Distinct s values present, ascending.
+    pub fn s_values(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.cells.keys().map(|&(_, s)| s).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Distinct width buckets present, ascending.
+    pub fn buckets(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.cells.keys().map(|&(b, _)| b).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Rejected-waste fraction at `(bucket, s)`, if that cell has data.
+    pub fn rejected_frac(&self, bucket: usize, s: usize) -> Option<f64> {
+        self.cells.get(&(bucket, s)).map(|c| c.rejected_frac())
+    }
+
+    /// Render the surface as an aligned text table: one row per width
+    /// bucket, one column per s, each cell `rej%/pad%` of executed
+    /// slots (the two waste species).
+    pub fn render(&self) -> String {
+        let ss = self.s_values();
+        let buckets = self.buckets();
+        let mut out = String::new();
+        out.push_str("waste surface (rejected% / padding% of executed slots)\n");
+        out.push_str(&format!("{:>8}", "width"));
+        for s in &ss {
+            out.push_str(&format!("{:>14}", format!("s={s}")));
+        }
+        out.push('\n');
+        for b in &buckets {
+            out.push_str(&format!("{:>8}", b));
+            for s in &ss {
+                match self.cells.get(&(*b, *s)) {
+                    Some(c) => out.push_str(&format!(
+                        "{:>14}",
+                        format!(
+                            "{:.1}/{:.1}",
+                            c.rejected_frac() * 100.0,
+                            c.padding_frac() * 100.0
+                        )
+                    )),
+                    None => out.push_str(&format!("{:>14}", "-")),
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// JSON form: an array of cell objects (stable order).
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.cells
+                .iter()
+                .map(|(&(bucket, s), c)| {
+                    Json::obj(vec![
+                        ("bucket", Json::Num(bucket as f64)),
+                        ("s", Json::Num(s as f64)),
+                        ("rounds", Json::Num(c.rounds as f64)),
+                        ("committed", Json::Num(c.committed as f64)),
+                        ("rejected", Json::Num(c.rejected as f64)),
+                        ("padding", Json::Num(c.padding as f64)),
+                        ("catch_up_s", Json::Num(c.catch_up_s)),
+                        ("round_s", Json::Num(c.round_s)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn waterfall_seal_makes_total_exact() {
+        let mut wf = Waterfall {
+            queue: 0.25,
+            prefill: 0.1,
+            ..Default::default()
+        };
+        wf.add_round_split(0.01, 0.02, 0.05, 0.005);
+        wf.add_round_split(0.0, 0.02, 0.05, 0.005);
+        let latency = 0.6;
+        wf.seal(latency);
+        assert_eq!(wf.total(), latency, "seal makes the tiling an identity");
+        assert!(wf.other > 0.0);
+        // re-sealing against the same latency is a no-op
+        let other = wf.other;
+        wf.seal(latency);
+        assert_eq!(wf.other, other);
+    }
+
+    #[test]
+    fn waterfall_json_round_trips() {
+        let mut wf = Waterfall {
+            queue: 1.5,
+            prefill: 0.25,
+            catch_up: 0.01,
+            draft: 0.125,
+            verify: 0.5,
+            accept: 0.0625,
+            reshape: 0.03125,
+            route_hop: 0.015625,
+            deferred_rounds: 3,
+            ..Default::default()
+        };
+        wf.seal(3.0);
+        let back = Waterfall::from_json(&wf.to_json()).unwrap();
+        assert_eq!(back, wf);
+        assert!(Waterfall::from_json(&Json::obj(vec![])).is_err());
+    }
+
+    #[test]
+    fn round_waste_tiles_integer_exactly() {
+        // speculative round: width 8, live 5, s 4, 11 drafts accepted
+        let w = RoundWaste::from_round(8, 5, 4, 11);
+        assert_eq!(w.committed, 16); // 11 accepted + 5 bonus
+        assert_eq!(w.rejected, 9); // 5*4 - 11
+        assert_eq!(w.padding, 15); // 3 empty lanes * 5 slots
+        assert_eq!(w.slots(), 40);
+        assert!(w.tiles());
+        // plain round degenerates: no drafts, no rejection
+        let p = RoundWaste::from_round(4, 3, 0, 0);
+        assert_eq!((p.committed, p.rejected, p.padding), (3, 0, 1));
+        assert!(p.tiles());
+        // full batch, perfect acceptance: zero waste
+        let f = RoundWaste::from_round(4, 4, 2, 8);
+        assert_eq!((f.rejected, f.padding), (0, 0));
+        assert_eq!(f.committed, f.slots());
+        assert!(f.tiles());
+    }
+
+    #[test]
+    fn waste_surface_aggregates_and_renders() {
+        let mut surf = WasteSurface::default();
+        // same acceptance rate at two widths: rejected fraction of
+        // *live* slots is equal, but bigger batches burn more absolute
+        // rejected tokens per round
+        surf.add_round(RoundWaste::from_round(4, 4, 3, 6), 0.0, 0.01);
+        surf.add_round(RoundWaste::from_round(32, 32, 3, 48), 0.0, 0.05);
+        assert_eq!(surf.buckets(), vec![4, 32]);
+        assert_eq!(surf.s_values(), vec![3]);
+        let small = surf.cells[&(4, 3)];
+        let big = surf.cells[&(32, 3)];
+        assert_eq!(small.rejected, 6);
+        assert_eq!(big.rejected, 48);
+        assert!(big.rejected > small.rejected, "waste grows with batch size");
+        let table = surf.render();
+        assert!(table.contains("s=3"));
+        assert!(table.contains("32"));
+        // non-power-of-two widths bucket up
+        assert_eq!(WasteSurface::bucket_of(5), 8);
+        assert_eq!(WasteSurface::bucket_of(1), 1);
+        // json form parses back
+        let j = surf.to_json();
+        assert_eq!(j.as_arr().unwrap().len(), 2);
+    }
+}

@@ -207,6 +207,7 @@ mod tests {
                 t: 0.5,
                 epoch: 1,
                 live: 2,
+                width: 2,
                 queued: 0,
                 s: 3,
                 accepted: 4,
@@ -217,6 +218,7 @@ mod tests {
                 t: 1.0,
                 epoch: 1,
                 live: 2,
+                width: 2,
                 queued: 0,
                 s: 3,
                 accepted: 2,

@@ -92,6 +92,7 @@ pub fn chrome_trace(events: &[Event]) -> Json {
             EventKind::Round {
                 epoch,
                 live,
+                width,
                 queued,
                 s,
                 committed,
@@ -106,6 +107,7 @@ pub fn chrome_trace(events: &[Event]) -> Json {
                     vec![
                         ("epoch", Json::Num(*epoch as f64)),
                         ("live", Json::Num(*live as f64)),
+                        ("width", Json::Num(*width as f64)),
                         ("queued", Json::Num(*queued as f64)),
                         ("s", Json::Num(*s as f64)),
                         ("committed", Json::Num(*committed as f64)),
@@ -160,6 +162,7 @@ pub fn chrome_trace(events: &[Event]) -> Json {
                 tokens,
                 shed,
                 slack,
+                waterfall,
             } => {
                 let name = if *shed { "shed" } else { "finish" };
                 out.push(trace_record(
@@ -172,6 +175,10 @@ pub fn chrome_trace(events: &[Event]) -> Json {
                         ("tokens", Json::Num(*tokens as f64)),
                         ("shed", Json::Bool(*shed)),
                         ("slack", slack.map_or(Json::Null, Json::Num)),
+                        (
+                            "waterfall",
+                            waterfall.map_or(Json::Null, |w| w.to_json()),
+                        ),
                     ],
                 ));
             }
@@ -215,6 +222,15 @@ pub fn chrome_trace(events: &[Event]) -> Json {
                         ]),
                     ),
                 ]));
+            }
+            EventKind::Trigger { cause } => {
+                out.push(trace_record(
+                    &format!("trigger:{cause}"),
+                    "i",
+                    ev,
+                    TID_REQUEST,
+                    vec![("cause", Json::Str((*cause).into()))],
+                ));
             }
         }
     }
@@ -299,12 +315,19 @@ mod tests {
 
     fn sample_handle() -> Telemetry {
         let t = Telemetry::new(TelemetryMode::Trace);
-        t.round(0.0, 0.10, 1, 2, 1, 3, 5, &[2, 3], 8);
+        t.round(0.0, 0.10, 1, 2, 4, 1, 3, 5, &[2, 3], 8);
         t.phase(0.00, 0.04, PhaseKind::Draft);
         t.phase(0.04, 0.05, PhaseKind::Verify);
         t.phase(0.09, 0.01, PhaseKind::Accept);
         t.admission(0.10, 7, "defer", Some(1.0), Some(0.4), 1);
         t.finish(0.12, 3, 24, false, Some(0.2));
+        let mut wf = crate::telemetry::attrib::Waterfall {
+            queue: 0.02,
+            verify: 0.05,
+            ..Default::default()
+        };
+        wf.seal(0.12);
+        t.finish_attrib(0.14, 4, 24, false, None, Some(wf));
         t.for_shard(1).route(0.05, 9, 1, &[0.3, 0.1]);
         t.kv_pool(0.10, 8, 32, 0.12);
         t

@@ -1,0 +1,752 @@
+//! Always-on flight recorder: a pre-allocated, lock-free ring of
+//! compact round/admission/route/finish records that keeps running
+//! even with `--telemetry off`, and dumps the last N records as a
+//! Chrome trace + JSONL when an anomaly trigger fires.
+//!
+//! Design constraints (pinned by `rust/tests/zero_alloc.rs` and
+//! `rust/tests/flight_recorder.rs`):
+//!
+//! * **Zero steady-state allocations.**  Every record is a fixed
+//!   [`SLOT_WORDS`]`× u64` write into a ring allocated at
+//!   construction; recording is a `fetch_add` ticket claim plus plain
+//!   atomic stores.  The counting-allocator test still reads exactly 0
+//!   over 20 decode rounds with the recorder attached.
+//! * **Multi-writer safe.**  The cluster dispatcher and a worker share
+//!   a shard's ring (route events land on the chosen shard), so each
+//!   slot is a seqlock: the claimed ticket's sequence is published odd
+//!   while the payload words are stored, even when complete.  A dump
+//!   that races a writer simply skips the torn slot — the recorder is
+//!   diagnostic, never authoritative.
+//! * **No hot-path IO.**  Triggers ([`FlightTrigger`]) only set a
+//!   pending bit; the dump itself happens in [`FlightRecorder::poll`],
+//!   which drivers call at round boundaries / loop exits.  An idle
+//!   poll is one relaxed load.
+//!
+//! Trigger table (DESIGN.md §flight-recorder): request shed, SLO-miss
+//! burst (≥ [`SLO_BURST`] consecutive missed deadlines), `ModelBased`
+//! CUSUM drift flush, KV pool exhaustion, explicit API request
+//! ([`FlightRecorder::request_dump`]), and `SIGUSR1`
+//! ([`install_sigusr1`]).
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::export;
+use super::{Event, EventKind};
+
+/// `u64` words per ring slot: seqlock word, timestamp, kind/shard tag,
+/// five payload words.
+pub const SLOT_WORDS: usize = 8;
+
+/// Default ring capacity (records per recorder).  256 rounds of
+/// history is minutes of context at serving rates while keeping the
+/// ring at 16 KiB.
+pub const DEFAULT_SLOTS: usize = 256;
+
+/// Consecutive SLO-missed finishes that arm the burst trigger.
+pub const SLO_BURST: u32 = 4;
+
+/// Compact record kinds (word 2, low byte).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FlightKind {
+    Round = 0,
+    Admission = 1,
+    Route = 2,
+    Finish = 3,
+    KvPool = 4,
+    Trigger = 5,
+}
+
+impl FlightKind {
+    fn from_code(c: u64) -> Option<FlightKind> {
+        Some(match c {
+            0 => FlightKind::Round,
+            1 => FlightKind::Admission,
+            2 => FlightKind::Route,
+            3 => FlightKind::Finish,
+            4 => FlightKind::KvPool,
+            5 => FlightKind::Trigger,
+            _ => return None,
+        })
+    }
+}
+
+/// Why a dump fired.  Each variant owns one pending bit, so a burst of
+/// coincident triggers produces a single dump naming all causes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FlightTrigger {
+    /// a request was shed
+    Shed = 0,
+    /// [`SLO_BURST`] consecutive finishes missed their deadline
+    SloMissBurst = 1,
+    /// `ModelBased` flushed its windows on CUSUM drift detection
+    DriftFlush = 2,
+    /// the KV block pool hit capacity
+    KvExhausted = 3,
+    /// explicit API request ([`FlightRecorder::request_dump`])
+    Manual = 4,
+    /// `SIGUSR1`
+    Signal = 5,
+}
+
+impl FlightTrigger {
+    pub fn label(&self) -> &'static str {
+        match self {
+            FlightTrigger::Shed => "shed",
+            FlightTrigger::SloMissBurst => "slo_miss_burst",
+            FlightTrigger::DriftFlush => "drift_flush",
+            FlightTrigger::KvExhausted => "kv_exhausted",
+            FlightTrigger::Manual => "manual",
+            FlightTrigger::Signal => "sigusr1",
+        }
+    }
+
+    fn from_code(c: u64) -> &'static str {
+        match c {
+            0 => "shed",
+            1 => "slo_miss_burst",
+            2 => "drift_flush",
+            3 => "kv_exhausted",
+            4 => "manual",
+            5 => "sigusr1",
+            _ => "unknown",
+        }
+    }
+
+    pub fn all() -> [FlightTrigger; 6] {
+        [
+            FlightTrigger::Shed,
+            FlightTrigger::SloMissBurst,
+            FlightTrigger::DriftFlush,
+            FlightTrigger::KvExhausted,
+            FlightTrigger::Manual,
+            FlightTrigger::Signal,
+        ]
+    }
+}
+
+/// One decoded ring record (the dump-time form; the ring itself stores
+/// only the packed words).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FlightRecord {
+    pub ticket: u64,
+    pub t: f64,
+    pub shard: usize,
+    pub kind: FlightKind,
+    pub payload: [u64; 5],
+}
+
+/// `Option<f64>` packed as bits: `None` is NaN (never a real slack or
+/// deadline value).
+fn opt_bits(v: Option<f64>) -> u64 {
+    v.unwrap_or(f64::NAN).to_bits()
+}
+
+fn bits_opt(b: u64) -> Option<f64> {
+    let v = f64::from_bits(b);
+    if v.is_nan() {
+        None
+    } else {
+        Some(v)
+    }
+}
+
+struct Slot {
+    words: [AtomicU64; SLOT_WORDS],
+}
+
+impl Slot {
+    fn new() -> Slot {
+        Slot {
+            words: Default::default(),
+        }
+    }
+}
+
+/// `SIGUSR1` lands here (an atomic store is async-signal-safe); the
+/// next [`FlightRecorder::poll`] converts it into a `Signal` trigger.
+static SIGNAL_DUMP: AtomicBool = AtomicBool::new(false);
+
+/// Install the `SIGUSR1` handler (Linux).  Idempotent; a no-op on
+/// non-unix targets.  The handler only flips [`SIGNAL_DUMP`]; the dump
+/// itself happens at the next poll point.
+pub fn install_sigusr1() {
+    #[cfg(target_os = "linux")]
+    {
+        const SIGUSR1: i32 = 10;
+        extern "C" {
+            fn signal(signum: i32, handler: usize) -> usize;
+        }
+        extern "C" fn on_sigusr1(_sig: i32) {
+            SIGNAL_DUMP.store(true, Ordering::Relaxed);
+        }
+        unsafe {
+            signal(SIGUSR1, on_sigusr1 as usize);
+        }
+    }
+}
+
+/// Mark a dump requested as-if by `SIGUSR1` (tests use this instead of
+/// raising a real signal).
+pub fn raise_signal_flag() {
+    SIGNAL_DUMP.store(true, Ordering::Relaxed);
+}
+
+/// The recorder: one ring shared by every shard clone of a
+/// [`super::Telemetry`] handle (records carry their shard tag).
+pub struct FlightRecorder {
+    slots: Box<[Slot]>,
+    mask: u64,
+    /// next ticket; `ticket & mask` is the slot index
+    head: AtomicU64,
+    start: Instant,
+    /// seconds subtracted from the wall clock (epoch rebase)
+    rebase: AtomicU64,
+    /// pending trigger causes (bit per [`FlightTrigger`])
+    pending: AtomicU32,
+    /// consecutive SLO-missed finishes
+    slo_streak: AtomicU32,
+    /// dump file sequence number
+    dump_seq: AtomicU64,
+    prefix: String,
+}
+
+impl std::fmt::Debug for FlightRecorder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "FlightRecorder(slots={}, recorded={}, prefix={:?})",
+            self.slots.len(),
+            self.recorded(),
+            self.prefix
+        )
+    }
+}
+
+impl FlightRecorder {
+    /// A recorder with `slots` capacity (rounded up to a power of two,
+    /// min 8) dumping to `<prefix>.<seq>.{trace.json,jsonl}`.
+    pub fn new(slots: usize, prefix: impl Into<String>) -> Arc<FlightRecorder> {
+        let n = slots.max(8).next_power_of_two();
+        Arc::new(FlightRecorder {
+            slots: (0..n).map(|_| Slot::new()).collect(),
+            mask: (n - 1) as u64,
+            head: AtomicU64::new(0),
+            start: Instant::now(),
+            rebase: AtomicU64::new(0.0f64.to_bits()),
+            pending: AtomicU32::new(0),
+            slo_streak: AtomicU32::new(0),
+            dump_seq: AtomicU64::new(0),
+            prefix: prefix.into(),
+        })
+    }
+
+    /// Ring capacity in records.
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Total records ever written (not capped at capacity).
+    pub fn recorded(&self) -> u64 {
+        self.head.load(Ordering::Relaxed)
+    }
+
+    /// Seconds on the recorder's wall clock (used as the event clock
+    /// by `Telemetry::now` when the event sink is off), minus any
+    /// epoch rebase.
+    pub fn elapsed(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() - f64::from_bits(self.rebase.load(Ordering::Relaxed))
+    }
+
+    /// Re-zero the clock at the current instant (threaded drivers call
+    /// this at their serving epoch so dump timestamps align with the
+    /// run, not recorder construction).
+    pub fn rebase_to_now(&self) {
+        self.rebase
+            .store(self.start.elapsed().as_secs_f64().to_bits(), Ordering::Relaxed);
+    }
+
+    // ---- recording (hot path: atomics only, no allocation) ----
+
+    #[inline]
+    fn write(&self, t: f64, shard: usize, kind: FlightKind, payload: [u64; 5]) {
+        let ticket = self.head.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[(ticket & self.mask) as usize];
+        let busy = ticket.wrapping_mul(2).wrapping_add(1);
+        slot.words[0].store(busy, Ordering::Release);
+        slot.words[1].store(t.to_bits(), Ordering::Relaxed);
+        slot.words[2].store(kind as u64 | ((shard as u64) << 8), Ordering::Relaxed);
+        for (i, &w) in payload.iter().enumerate() {
+            slot.words[3 + i].store(w, Ordering::Relaxed);
+        }
+        slot.words[0].store(busy.wrapping_add(1), Ordering::Release);
+    }
+
+    /// One decode round.  Counts are clamped to 16 bits each (widths
+    /// and spec lengths are tiny), epoch/kv to their own words.
+    #[allow(clippy::too_many_arguments)]
+    #[inline]
+    pub fn record_round(
+        &self,
+        t: f64,
+        shard: usize,
+        epoch: usize,
+        live: usize,
+        width: usize,
+        queued: usize,
+        s: usize,
+        committed: usize,
+        accepted: usize,
+        kv_blocks: usize,
+        dur: f64,
+    ) {
+        let pack16 = |v: usize| (v.min(0xFFFF)) as u64;
+        self.write(
+            t,
+            shard,
+            FlightKind::Round,
+            [
+                epoch as u64,
+                pack16(live) | (pack16(width) << 16) | (pack16(s) << 32) | (pack16(queued) << 48),
+                (committed as u64) | ((accepted as u64) << 32),
+                kv_blocks as u64,
+                dur.to_bits(),
+            ],
+        );
+    }
+
+    /// An admission verdict (`0` admit, `1` defer, `2` shed).
+    #[inline]
+    pub fn record_admission(
+        &self,
+        t: f64,
+        shard: usize,
+        id: u64,
+        verdict: &str,
+        deadline: Option<f64>,
+        slack: Option<f64>,
+        deferred: usize,
+    ) {
+        let code = match verdict {
+            "defer" => 1u64,
+            "shed" => 2,
+            _ => 0,
+        };
+        self.write(
+            t,
+            shard,
+            FlightKind::Admission,
+            [
+                id,
+                code | ((deferred as u64) << 8),
+                opt_bits(deadline),
+                opt_bits(slack),
+                0,
+            ],
+        );
+    }
+
+    /// A routing decision (recorded on the chosen shard's tag).
+    #[inline]
+    pub fn record_route(&self, t: f64, chosen: usize, id: u64) {
+        self.write(t, chosen, FlightKind::Route, [id, 0, 0, 0, 0]);
+    }
+
+    /// A terminal finish/shed.  Feeds the shed and SLO-miss-burst
+    /// triggers.
+    #[inline]
+    pub fn record_finish(
+        &self,
+        t: f64,
+        shard: usize,
+        id: u64,
+        tokens: usize,
+        shed: bool,
+        slack: Option<f64>,
+    ) {
+        self.write(
+            t,
+            shard,
+            FlightKind::Finish,
+            [
+                id,
+                (tokens as u64) | ((shed as u64) << 63),
+                opt_bits(slack),
+                0,
+                0,
+            ],
+        );
+        if shed {
+            self.trigger(t, shard, FlightTrigger::Shed);
+            return;
+        }
+        match slack {
+            Some(sl) if sl < 0.0 => {
+                let streak = self.slo_streak.fetch_add(1, Ordering::Relaxed) + 1;
+                if streak == SLO_BURST {
+                    self.trigger(t, shard, FlightTrigger::SloMissBurst);
+                }
+            }
+            Some(_) => self.slo_streak.store(0, Ordering::Relaxed),
+            None => {}
+        }
+    }
+
+    /// A KV pool sample; exhaustion arms the `KvExhausted` trigger.
+    #[inline]
+    pub fn record_kv_pool(&self, t: f64, shard: usize, in_use: usize, capacity: usize, frag: f64) {
+        self.write(
+            t,
+            shard,
+            FlightKind::KvPool,
+            [in_use as u64, capacity as u64, frag.to_bits(), 0, 0],
+        );
+        if capacity > 0 && in_use >= capacity {
+            self.trigger(t, shard, FlightTrigger::KvExhausted);
+        }
+    }
+
+    /// Record a trigger marker and arm its pending bit.  Recording is
+    /// allocation-free; the dump happens at the next [`poll`].
+    ///
+    /// [`poll`]: FlightRecorder::poll
+    #[inline]
+    pub fn trigger(&self, t: f64, shard: usize, cause: FlightTrigger) {
+        self.write(t, shard, FlightKind::Trigger, [cause as u64, 0, 0, 0, 0]);
+        self.pending
+            .fetch_or(1 << (cause as u32), Ordering::Release);
+    }
+
+    /// Explicitly request a dump (the API variant of `SIGUSR1`).
+    pub fn request_dump(&self, t: f64) {
+        self.trigger(t, 0, FlightTrigger::Manual);
+    }
+
+    // ---- dumping (cold path) ----
+
+    /// True when a trigger is armed (one relaxed load).
+    #[inline]
+    pub fn dump_pending(&self) -> bool {
+        self.pending.load(Ordering::Relaxed) != 0 || SIGNAL_DUMP.load(Ordering::Relaxed)
+    }
+
+    /// Dump if a trigger is armed; returns the files written (empty
+    /// when idle).  IO failures are reported to stderr and swallowed —
+    /// the recorder is diagnostic and must never take the server down.
+    pub fn poll(&self) -> Vec<PathBuf> {
+        if !self.dump_pending() {
+            return Vec::new();
+        }
+        if SIGNAL_DUMP.swap(false, Ordering::Relaxed) {
+            self.trigger(self.elapsed(), 0, FlightTrigger::Signal);
+        }
+        let causes = self.pending.swap(0, Ordering::AcqRel);
+        if causes == 0 {
+            return Vec::new();
+        }
+        match self.dump(causes) {
+            Ok(paths) => paths,
+            Err(e) => {
+                eprintln!("flight recorder: dump failed: {e}");
+                Vec::new()
+            }
+        }
+    }
+
+    /// Force a dump regardless of pending triggers (the `inspect
+    /// --flight` / shutdown path).
+    pub fn dump_now(&self) -> anyhow::Result<Vec<PathBuf>> {
+        let causes = self.pending.swap(0, Ordering::AcqRel);
+        self.dump(causes | (1 << (FlightTrigger::Manual as u32)))
+    }
+
+    fn dump(&self, causes: u32) -> anyhow::Result<Vec<PathBuf>> {
+        let seq = self.dump_seq.fetch_add(1, Ordering::Relaxed);
+        let records = self.snapshot();
+        let events = records_to_events(&records);
+        let cause_labels: Vec<&'static str> = FlightTrigger::all()
+            .into_iter()
+            .filter(|c| causes & (1 << (*c as u32)) != 0)
+            .map(|c| c.label())
+            .collect();
+        let prefix = format!("{}.{seq}", self.prefix);
+        if let Some(dir) = std::path::Path::new(&prefix).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let mut written = Vec::new();
+        let trace = PathBuf::from(format!("{prefix}.trace.json"));
+        export::chrome_trace(&events).write_file(&trace)?;
+        written.push(trace);
+        let jsonl = PathBuf::from(format!("{prefix}.jsonl"));
+        let mut body = format!(
+            "{{\"ev\":\"flight_dump\",\"t\":{},\"causes\":[{}],\"records\":{}}}\n",
+            self.elapsed(),
+            cause_labels
+                .iter()
+                .map(|c| format!("\"{c}\""))
+                .collect::<Vec<_>>()
+                .join(","),
+            records.len(),
+        );
+        body.push_str(&export::events_jsonl(&events));
+        std::fs::write(&jsonl, body)?;
+        written.push(jsonl);
+        Ok(written)
+    }
+
+    /// Seqlock-validated copy of the ring, oldest record first.  Slots
+    /// torn by a concurrent writer are skipped.
+    pub fn snapshot(&self) -> Vec<FlightRecord> {
+        let mut out = Vec::with_capacity(self.slots.len());
+        for slot in self.slots.iter() {
+            let s1 = slot.words[0].load(Ordering::Acquire);
+            if s1 == 0 || s1 & 1 == 1 {
+                continue; // never written, or mid-write
+            }
+            let mut words = [0u64; SLOT_WORDS - 1];
+            for (i, w) in words.iter_mut().enumerate() {
+                *w = slot.words[1 + i].load(Ordering::Relaxed);
+            }
+            let s2 = slot.words[0].load(Ordering::Acquire);
+            if s1 != s2 {
+                continue; // torn by a wrapping writer
+            }
+            let Some(kind) = FlightKind::from_code(words[1] & 0xFF) else {
+                continue;
+            };
+            out.push(FlightRecord {
+                ticket: s2 / 2 - 1,
+                t: f64::from_bits(words[0]),
+                shard: (words[1] >> 8) as usize,
+                kind,
+                payload: [words[2], words[3], words[4], words[5], words[6]],
+            });
+        }
+        out.sort_unstable_by_key(|r| r.ticket);
+        out
+    }
+}
+
+/// Decode ring records into the standard [`Event`] schema so the
+/// existing exporters render flight dumps (accepted-count vectors and
+/// router score vectors are not kept in the compact records and decode
+/// as empty).
+pub fn records_to_events(records: &[FlightRecord]) -> Vec<Event> {
+    records
+        .iter()
+        .map(|r| {
+            let p = r.payload;
+            let kind = match r.kind {
+                FlightKind::Round => EventKind::Round {
+                    epoch: p[0] as usize,
+                    live: (p[1] & 0xFFFF) as usize,
+                    width: ((p[1] >> 16) & 0xFFFF) as usize,
+                    queued: ((p[1] >> 48) & 0xFFFF) as usize,
+                    s: ((p[1] >> 32) & 0xFFFF) as usize,
+                    committed: (p[2] & 0xFFFF_FFFF) as usize,
+                    accepted: Vec::new(),
+                    kv_blocks: p[3] as usize,
+                },
+                FlightKind::Admission => EventKind::Admission {
+                    id: p[0],
+                    verdict: match p[1] & 0xFF {
+                        1 => "defer",
+                        2 => "shed",
+                        _ => "admit",
+                    },
+                    deadline: bits_opt(p[2]),
+                    predicted_slack: bits_opt(p[3]),
+                    deferred: (p[1] >> 8) as usize,
+                },
+                FlightKind::Route => EventKind::Route {
+                    id: p[0],
+                    scores: Vec::new(),
+                },
+                FlightKind::Finish => EventKind::Finish {
+                    id: p[0],
+                    tokens: (p[1] & !(1 << 63)) as usize,
+                    shed: p[1] >> 63 == 1,
+                    slack: bits_opt(p[2]),
+                    waterfall: None,
+                },
+                FlightKind::KvPool => EventKind::KvPool {
+                    in_use: p[0] as usize,
+                    capacity: p[1] as usize,
+                    frag: f64::from_bits(p[2]),
+                },
+                FlightKind::Trigger => EventKind::Trigger {
+                    cause: FlightTrigger::from_code(p[0]),
+                },
+            };
+            let dur = match r.kind {
+                FlightKind::Round => f64::from_bits(p[4]),
+                _ => 0.0,
+            };
+            Event {
+                t: r.t,
+                dur,
+                shard: r.shard,
+                kind,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_records_and_decodes_without_loss_below_capacity() {
+        let fr = FlightRecorder::new(64, "/tmp/specbatch_flight_unit");
+        fr.record_round(1.0, 0, 3, 5, 8, 2, 4, 16, 11, 40, 0.025);
+        fr.record_admission(1.1, 0, 42, "defer", Some(2.0), Some(-0.25), 3);
+        fr.record_route(1.2, 2, 42);
+        fr.record_finish(1.3, 0, 42, 128, false, Some(0.5));
+        fr.record_kv_pool(1.4, 1, 10, 32, 0.125);
+        let recs = fr.snapshot();
+        assert_eq!(recs.len(), 5);
+        assert_eq!(recs[0].kind, FlightKind::Round);
+        let evs = records_to_events(&recs);
+        match &evs[0].kind {
+            EventKind::Round {
+                live,
+                width,
+                s,
+                queued,
+                committed,
+                kv_blocks,
+                ..
+            } => {
+                assert_eq!((*live, *width, *s, *queued), (5, 8, 4, 2));
+                assert_eq!((*committed, *kv_blocks), (16, 40));
+                assert!((evs[0].dur - 0.025).abs() < 1e-12);
+            }
+            other => panic!("expected round, got {other:?}"),
+        }
+        match &evs[1].kind {
+            EventKind::Admission {
+                id,
+                verdict,
+                deadline,
+                predicted_slack,
+                deferred,
+            } => {
+                assert_eq!(*id, 42);
+                assert_eq!(*verdict, "defer");
+                assert_eq!(*deadline, Some(2.0));
+                assert_eq!(*predicted_slack, Some(-0.25));
+                assert_eq!(*deferred, 3);
+            }
+            other => panic!("expected admission, got {other:?}"),
+        }
+        assert_eq!(evs[2].shard, 2, "route lands on the chosen shard");
+        match &evs[3].kind {
+            EventKind::Finish {
+                tokens,
+                shed,
+                slack,
+                ..
+            } => {
+                assert_eq!(*tokens, 128);
+                assert!(!*shed);
+                assert_eq!(*slack, Some(0.5));
+            }
+            other => panic!("expected finish, got {other:?}"),
+        }
+        assert!(!fr.dump_pending(), "nothing anomalous yet");
+    }
+
+    #[test]
+    fn ring_wraps_keeping_the_newest_records() {
+        let fr = FlightRecorder::new(8, "/tmp/specbatch_flight_unit");
+        for i in 0..20u64 {
+            fr.record_route(i as f64, 0, i);
+        }
+        assert_eq!(fr.recorded(), 20);
+        let recs = fr.snapshot();
+        assert_eq!(recs.len(), 8, "ring keeps capacity records");
+        let ids: Vec<u64> = recs.iter().map(|r| r.payload[0]).collect();
+        assert_eq!(ids, (12..20).collect::<Vec<u64>>(), "newest survive, in order");
+    }
+
+    #[test]
+    fn triggers_arm_and_poll_dumps_once() {
+        let dir = std::env::temp_dir().join("specbatch_flight_trig");
+        let _ = std::fs::remove_dir_all(&dir);
+        let prefix = dir.join("fl").to_string_lossy().into_owned();
+        let fr = FlightRecorder::new(32, prefix);
+        assert!(fr.poll().is_empty(), "idle poll writes nothing");
+        // a shed arms the trigger
+        fr.record_finish(0.5, 0, 7, 0, true, None);
+        assert!(fr.dump_pending());
+        let written = fr.poll();
+        assert_eq!(written.len(), 2, "trace.json + jsonl");
+        for p in &written {
+            assert!(p.exists(), "{p:?} missing");
+        }
+        assert!(fr.poll().is_empty(), "pending cleared after dump");
+        // the dump body names its cause and parses line-by-line
+        let jsonl = written
+            .iter()
+            .find(|p| p.extension().is_some_and(|e| e == "jsonl"))
+            .unwrap();
+        let body = std::fs::read_to_string(jsonl).unwrap();
+        let first = body.lines().next().unwrap();
+        assert!(first.contains("flight_dump") && first.contains("shed"));
+        for line in body.lines() {
+            crate::util::json::Json::parse(line).unwrap();
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn slo_miss_burst_fires_after_a_streak_and_resets_on_a_hit() {
+        let fr = FlightRecorder::new(32, "/tmp/specbatch_flight_unit");
+        for i in 0..SLO_BURST - 1 {
+            fr.record_finish(i as f64, 0, i as u64, 8, false, Some(-0.1));
+        }
+        assert!(!fr.dump_pending(), "below the burst threshold");
+        fr.record_finish(9.0, 0, 99, 8, false, Some(0.3)); // hit resets
+        for i in 0..SLO_BURST - 1 {
+            fr.record_finish(10.0 + i as f64, 0, 100 + i as u64, 8, false, Some(-0.1));
+        }
+        assert!(!fr.dump_pending(), "streak reset by the met deadline");
+        fr.record_finish(20.0, 0, 200, 8, false, Some(-0.1));
+        assert!(fr.dump_pending(), "burst threshold reached");
+    }
+
+    #[test]
+    fn kv_exhaustion_and_signal_flag_arm_dumps() {
+        let dir = std::env::temp_dir().join("specbatch_flight_kv");
+        let _ = std::fs::remove_dir_all(&dir);
+        let prefix = dir.join("fl").to_string_lossy().into_owned();
+        let fr = FlightRecorder::new(16, prefix);
+        fr.record_kv_pool(1.0, 0, 31, 32, 0.0);
+        assert!(!fr.dump_pending());
+        fr.record_kv_pool(2.0, 0, 32, 32, 0.0);
+        assert!(fr.dump_pending(), "exhaustion arms the trigger");
+        assert_eq!(fr.poll().len(), 2);
+        // the signal path: flag → poll converts it into a dump
+        raise_signal_flag();
+        assert!(fr.dump_pending());
+        let written = fr.poll();
+        assert_eq!(written.len(), 2);
+        let body = std::fs::read_to_string(&written[1]).unwrap();
+        assert!(body.lines().next().unwrap().contains("sigusr1"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn elapsed_rebases_to_zero() {
+        let fr = FlightRecorder::new(8, "/tmp/specbatch_flight_unit");
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(fr.elapsed() > 0.0);
+        fr.rebase_to_now();
+        assert!(fr.elapsed() < 0.005, "clock re-zeroed at the rebase point");
+    }
+}

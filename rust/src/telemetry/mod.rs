@@ -35,14 +35,20 @@
 //! Mode selection: `--telemetry off|summary|trace` on the CLI, or the
 //! `SPECBATCH_TELEMETRY` environment variable (the CI matrix axis).
 
+pub mod attrib;
 pub mod bench;
 pub mod export;
+pub mod flight;
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::util::json::Json;
+
+use attrib::Waterfall;
+use flight::FlightRecorder;
 
 /// How much the telemetry layer records.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -153,6 +159,10 @@ pub enum EventKind {
     Round {
         epoch: usize,
         live: usize,
+        /// executing width (the bucket): `width - live` lanes are
+        /// padding slack — with `s` this makes the round's waste split
+        /// ([`attrib::RoundWaste`]) recoverable from the event alone
+        width: usize,
         queued: usize,
         s: usize,
         committed: usize,
@@ -181,6 +191,9 @@ pub enum EventKind {
         shed: bool,
         /// deadline minus the actual finish time (negative = SLO miss)
         slack: Option<f64>,
+        /// per-request latency decomposition (None when the driver
+        /// does not attribute, e.g. compact flight-recorder decodes)
+        waterfall: Option<Waterfall>,
     },
     /// a routing decision: `Event::shard` is the chosen shard,
     /// `scores` the router's per-shard score vector (lower = better)
@@ -193,6 +206,9 @@ pub enum EventKind {
         capacity: usize,
         frag: f64,
     },
+    /// a flight-recorder anomaly trigger marker
+    /// ([`flight::FlightTrigger`] label)
+    Trigger { cause: &'static str },
 }
 
 impl Event {
@@ -208,6 +224,7 @@ impl Event {
             EventKind::Round {
                 epoch,
                 live,
+                width,
                 queued,
                 s,
                 committed,
@@ -217,6 +234,7 @@ impl Event {
                 pairs.push(("ev", Json::Str("round".into())));
                 pairs.push(("epoch", Json::Num(*epoch as f64)));
                 pairs.push(("live", Json::Num(*live as f64)));
+                pairs.push(("width", Json::Num(*width as f64)));
                 pairs.push(("queued", Json::Num(*queued as f64)));
                 pairs.push(("s", Json::Num(*s as f64)));
                 pairs.push(("committed", Json::Num(*committed as f64)));
@@ -249,12 +267,17 @@ impl Event {
                 tokens,
                 shed,
                 slack,
+                waterfall,
             } => {
                 pairs.push(("ev", Json::Str("finish".into())));
                 pairs.push(("id", Json::Num(*id as f64)));
                 pairs.push(("tokens", Json::Num(*tokens as f64)));
                 pairs.push(("shed", Json::Bool(*shed)));
                 pairs.push(("slack", opt(*slack)));
+                pairs.push((
+                    "waterfall",
+                    waterfall.map_or(Json::Null, |w| w.to_json()),
+                ));
             }
             EventKind::Route { id, scores } => {
                 pairs.push(("ev", Json::Str("route".into())));
@@ -274,6 +297,10 @@ impl Event {
                 pairs.push(("in_use", Json::Num(*in_use as f64)));
                 pairs.push(("capacity", Json::Num(*capacity as f64)));
                 pairs.push(("frag", Json::Num(*frag)));
+            }
+            EventKind::Trigger { cause } => {
+                pairs.push(("ev", Json::Str("trigger".into())));
+                pairs.push(("cause", Json::Str((*cause).into())));
             }
         }
         Json::obj(pairs)
@@ -374,6 +401,10 @@ pub struct Registry {
 struct Inner {
     mode: TelemetryMode,
     start: Instant,
+    /// seconds subtracted from `start.elapsed()` by [`Telemetry::now`]
+    /// (f64 bits): the epoch rebase that aligns threaded-path event
+    /// clocks to the serving epoch instead of handle construction
+    rebase: AtomicU64,
     metrics: Mutex<Registry>,
     events: Mutex<Vec<Event>>,
 }
@@ -382,19 +413,28 @@ struct Inner {
 /// holds no allocation at all and every emit method returns after one
 /// `Option` branch.  `shard` tags every event this clone emits
 /// ([`Telemetry::for_shard`]).
+///
+/// Independently of `inner`, a handle may carry a
+/// [`flight::FlightRecorder`]: emitters feed it *before* the
+/// `inner`-is-`None` early return, so the flight ring keeps recording
+/// with `--telemetry off` (hot paths gate span bookkeeping on
+/// [`Telemetry::active`] rather than [`Telemetry::enabled`] for the
+/// same reason).
 #[derive(Clone)]
 pub struct Telemetry {
     shard: usize,
     inner: Option<Arc<Inner>>,
+    flight: Option<Arc<FlightRecorder>>,
 }
 
 impl std::fmt::Debug for Telemetry {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "Telemetry(mode={}, shard={})",
+            "Telemetry(mode={}, shard={}, flight={})",
             self.mode().label(),
-            self.shard
+            self.shard,
+            self.flight.is_some()
         )
     }
 }
@@ -411,6 +451,7 @@ impl Telemetry {
         Telemetry {
             shard: 0,
             inner: None,
+            flight: None,
         }
     }
 
@@ -424,9 +465,39 @@ impl Telemetry {
             inner: Some(Arc::new(Inner {
                 mode,
                 start: Instant::now(),
+                rebase: AtomicU64::new(0.0f64.to_bits()),
                 metrics: Mutex::new(Registry::default()),
                 events: Mutex::new(Vec::new()),
             })),
+            flight: None,
+        }
+    }
+
+    /// Attach an always-on flight recorder.  Works on any handle,
+    /// including the disabled one — that is the whole point: the ring
+    /// records even at `--telemetry off`.
+    pub fn with_flight(mut self, flight: Arc<FlightRecorder>) -> Telemetry {
+        self.flight = Some(flight);
+        self
+    }
+
+    /// The attached flight recorder, if any.
+    pub fn flight(&self) -> Option<&Arc<FlightRecorder>> {
+        self.flight.as_ref()
+    }
+
+    /// Dump the flight ring if a trigger is armed (one relaxed load
+    /// when idle / no recorder).  Returns the files written.
+    pub fn flight_poll(&self) -> Vec<std::path::PathBuf> {
+        self.flight.as_ref().map_or_else(Vec::new, |f| f.poll())
+    }
+
+    /// Arm the flight recorder's `DriftFlush` trigger: drivers call this
+    /// when the policy's drift detector fires, so the rounds surrounding
+    /// the changepoint get dumped.  No-op without a ring.
+    pub fn drift_flush(&self, t: f64) {
+        if let Some(f) = &self.flight {
+            f.trigger(t, self.shard, flight::FlightTrigger::DriftFlush);
         }
     }
 
@@ -447,6 +518,14 @@ impl Telemetry {
         self.inner.is_some()
     }
 
+    /// True when *any* sink records — registry/events or the flight
+    /// ring.  Hot paths that compute span timestamps gate on this so
+    /// the flight recorder keeps seeing rounds at `--telemetry off`.
+    #[inline]
+    pub fn active(&self) -> bool {
+        self.inner.is_some() || self.flight.is_some()
+    }
+
     /// True when the event sink records (trace only).
     #[inline]
     pub fn tracing(&self) -> bool {
@@ -455,11 +534,13 @@ impl Telemetry {
             .is_some_and(|i| i.mode == TelemetryMode::Trace)
     }
 
-    /// A clone whose events carry `shard` (same registry + sink).
+    /// A clone whose events carry `shard` (same registry + sink +
+    /// flight ring).
     pub fn for_shard(&self, shard: usize) -> Telemetry {
         Telemetry {
             shard,
             inner: self.inner.clone(),
+            flight: self.flight.clone(),
         }
     }
 
@@ -467,12 +548,33 @@ impl Telemetry {
         self.shard
     }
 
-    /// Seconds since the handle was created — the threaded path's event
-    /// clock.  0 when disabled.
+    /// Seconds since the handle was created (minus any epoch rebase) —
+    /// the threaded path's event clock.  Falls back to the flight
+    /// recorder's clock when only the ring is attached; 0 when fully
+    /// disabled.
     pub fn now(&self) -> f64 {
-        self.inner
-            .as_ref()
-            .map_or(0.0, |i| i.start.elapsed().as_secs_f64())
+        if let Some(i) = &self.inner {
+            return i.start.elapsed().as_secs_f64()
+                - f64::from_bits(i.rebase.load(Ordering::Relaxed));
+        }
+        self.flight.as_ref().map_or(0.0, |f| f.elapsed())
+    }
+
+    /// Re-zero the event clock at the current instant.  Threaded
+    /// drivers call this at their serving epoch so every shard clone —
+    /// they share one `Inner` — reports timestamps on a common,
+    /// run-relative clock and per-shard Chrome tracks align.  No-op on
+    /// the DES (virtual time) and on a fully disabled handle.
+    pub fn rebase_to_now(&self) {
+        if let Some(i) = &self.inner {
+            i.rebase.store(
+                i.start.elapsed().as_secs_f64().to_bits(),
+                Ordering::Relaxed,
+            );
+        }
+        if let Some(f) = &self.flight {
+            f.rebase_to_now();
+        }
     }
 
     // ---- metric registry ----
@@ -523,8 +625,10 @@ impl Telemetry {
     }
 
     /// One decode round (span).  Also feeds the registry: round count,
-    /// committed/accepted totals and the round-seconds histogram — so
-    /// `summary` mode aggregates without storing events.
+    /// committed/accepted totals, the waste split (rejected drafts /
+    /// padding slack, [`attrib::RoundWaste`]) and the round-seconds
+    /// histogram — so `summary` mode aggregates without storing
+    /// events.  `width` is the executing bucket (`>= live`).
     #[allow(clippy::too_many_arguments)]
     pub fn round(
         &self,
@@ -532,20 +636,42 @@ impl Telemetry {
         dur: f64,
         epoch: usize,
         live: usize,
+        width: usize,
         queued: usize,
         s: usize,
         committed: usize,
         accepted: &[u32],
         kv_blocks: usize,
     ) {
+        let accepted_total: u64 = accepted.iter().map(|&a| a as u64).sum();
+        if let Some(fl) = &self.flight {
+            fl.record_round(
+                t,
+                self.shard,
+                epoch,
+                live,
+                width,
+                queued,
+                s,
+                committed,
+                accepted_total as usize,
+                kv_blocks,
+                dur,
+            );
+        }
         if self.inner.is_none() {
             return;
         }
         self.counter("specbatch_rounds_total", 1);
         self.counter("specbatch_tokens_committed_total", committed as u64);
+        self.counter("specbatch_drafts_accepted_total", accepted_total);
         self.counter(
-            "specbatch_drafts_accepted_total",
-            accepted.iter().map(|&a| a as u64).sum(),
+            "specbatch_tokens_rejected_total",
+            (live * s) as u64 - accepted_total.min((live * s) as u64),
+        );
+        self.counter(
+            "specbatch_slots_padding_total",
+            (width.saturating_sub(live) * (s + 1)) as u64,
         );
         self.observe("specbatch_round_seconds", dur);
         self.gauge("specbatch_live_rows", live as f64);
@@ -556,6 +682,7 @@ impl Telemetry {
             EventKind::Round {
                 epoch,
                 live,
+                width,
                 queued,
                 s,
                 committed,
@@ -595,6 +722,9 @@ impl Telemetry {
         predicted_slack: Option<f64>,
         deferred: usize,
     ) {
+        if let Some(fl) = &self.flight {
+            fl.record_admission(t, self.shard, id, verdict, deadline, predicted_slack, deferred);
+        }
         if self.inner.is_none() {
             return;
         }
@@ -622,6 +752,23 @@ impl Telemetry {
     /// Terminal event of a request (exactly one per admitted request:
     /// the conservation property the tests pin).
     pub fn finish(&self, t: f64, id: u64, tokens: usize, shed: bool, slack: Option<f64>) {
+        self.finish_attrib(t, id, tokens, shed, slack, None);
+    }
+
+    /// [`Telemetry::finish`] carrying the request's sealed latency
+    /// [`Waterfall`] — the attribution form every serving driver emits.
+    pub fn finish_attrib(
+        &self,
+        t: f64,
+        id: u64,
+        tokens: usize,
+        shed: bool,
+        slack: Option<f64>,
+        waterfall: Option<Waterfall>,
+    ) {
+        if let Some(fl) = &self.flight {
+            fl.record_finish(t, self.shard, id, tokens, shed, slack);
+        }
         if self.inner.is_none() {
             return;
         }
@@ -639,17 +786,25 @@ impl Telemetry {
                 self.counter("specbatch_slo_missed_total", 1);
             }
         }
+        if let Some(wf) = &waterfall {
+            self.observe("specbatch_queue_wait_seconds", wf.queue);
+            self.observe("specbatch_decode_residency_seconds", wf.draft + wf.verify + wf.accept);
+        }
         self.push(t, 0.0, EventKind::Finish {
             id,
             tokens,
             shed,
             slack,
+            waterfall,
         });
     }
 
     /// A routing decision: this handle's shard tag is ignored; the event
     /// is tagged with the *chosen* shard so it lands on that track.
     pub fn route(&self, t: f64, id: u64, chosen: usize, scores: &[f64]) {
+        if let Some(fl) = &self.flight {
+            fl.record_route(t, chosen, id);
+        }
         let Some(inner) = &self.inner else { return };
         self.counter("specbatch_routed_total", 1);
         if inner.mode != TelemetryMode::Trace {
@@ -678,6 +833,9 @@ impl Telemetry {
 
     /// A KV block-pool utilization sample.
     pub fn kv_pool(&self, t: f64, in_use: usize, capacity: usize, frag: f64) {
+        if let Some(fl) = &self.flight {
+            fl.record_kv_pool(t, self.shard, in_use, capacity, frag);
+        }
         if self.inner.is_none() {
             return;
         }
@@ -734,7 +892,7 @@ mod tests {
         t.counter("c", 3);
         t.gauge("g", 1.0);
         t.observe("h", 0.5);
-        t.round(0.0, 0.1, 1, 2, 0, 3, 4, &[1, 2], 0);
+        t.round(0.0, 0.1, 1, 2, 2, 0, 3, 4, &[1, 2], 0);
         t.finish(0.0, 7, 16, false, None);
         assert!(t.registry().counters.is_empty());
         assert!(t.events().is_empty());
@@ -747,13 +905,17 @@ mod tests {
         let t = Telemetry::new(TelemetryMode::Summary);
         assert!(t.enabled());
         assert!(!t.tracing());
-        t.round(0.0, 0.01, 1, 4, 2, 3, 8, &[2, 1, 3, 2], 12);
+        t.round(0.0, 0.01, 1, 4, 8, 2, 3, 8, &[2, 1, 3, 2], 12);
         t.finish(0.1, 1, 32, false, Some(0.5));
         t.finish(0.2, 2, 0, true, Some(-0.1));
         let reg = t.registry();
         assert_eq!(reg.counters["specbatch_rounds_total"], 1);
         assert_eq!(reg.counters["specbatch_tokens_committed_total"], 8);
         assert_eq!(reg.counters["specbatch_drafts_accepted_total"], 8);
+        // waste split: live=4, s=3, accepted=8 → rejected 4; width 8
+        // → padding (8-4)*(3+1) = 16
+        assert_eq!(reg.counters["specbatch_tokens_rejected_total"], 4);
+        assert_eq!(reg.counters["specbatch_slots_padding_total"], 16);
         assert_eq!(reg.counters["specbatch_requests_finished_total"], 1);
         assert_eq!(reg.counters["specbatch_requests_shed_total"], 1);
         assert_eq!(reg.counters["specbatch_slo_missed_total"], 1);
@@ -766,7 +928,7 @@ mod tests {
     fn trace_mode_records_shard_tagged_events() {
         let t = Telemetry::new(TelemetryMode::Trace);
         let s1 = t.for_shard(1);
-        t.round(1.0, 0.5, 1, 2, 0, 3, 4, &[1, 2], 0);
+        t.round(1.0, 0.5, 1, 2, 2, 0, 3, 4, &[1, 2], 0);
         s1.phase(1.0, 0.2, PhaseKind::Draft);
         s1.route(1.2, 9, 3, &[0.5, 0.1, 0.9, 0.0]);
         let ev = t.events();
@@ -841,8 +1003,54 @@ mod tests {
                 tokens: 8,
                 shed: false,
                 slack: None,
+                waterfall: None,
             },
         };
         assert!(matches!(none.to_json().get("slack").unwrap(), Json::Null));
+        assert!(matches!(
+            none.to_json().get("waterfall").unwrap(),
+            Json::Null
+        ));
+        // a sealed waterfall rides along on finish events
+        let mut wf = Waterfall {
+            queue: 0.5,
+            verify: 0.25,
+            ..Default::default()
+        };
+        wf.seal(1.0);
+        let with = Event {
+            t: 1.0,
+            dur: 0.0,
+            shard: 0,
+            kind: EventKind::Finish {
+                id: 2,
+                tokens: 8,
+                shed: false,
+                slack: None,
+                waterfall: Some(wf),
+            },
+        };
+        let j = with.to_json();
+        let parsed = Waterfall::from_json(j.get("waterfall").unwrap()).unwrap();
+        assert_eq!(parsed, wf);
+        assert_eq!(parsed.total(), 1.0);
+    }
+
+    #[test]
+    fn flight_only_handle_is_active_but_records_no_registry() {
+        let fr = flight::FlightRecorder::new(16, "/tmp/specbatch_tel_flight_unit");
+        let t = Telemetry::disabled().with_flight(fr.clone());
+        assert!(!t.enabled(), "registry/event sink stay off");
+        assert!(t.active(), "but the handle is active for the ring");
+        t.round(0.5, 0.01, 1, 2, 4, 0, 3, 7, &[2, 3], 6);
+        t.finish(0.6, 9, 16, false, Some(0.1));
+        t.for_shard(1).route(0.7, 9, 1, &[0.1, 0.2]);
+        assert!(t.registry().counters.is_empty());
+        assert!(t.events().is_empty());
+        assert_eq!(fr.recorded(), 3, "the ring saw every emit");
+        assert!(t.now() >= 0.0, "clock falls back to the flight recorder");
+        // rebase works without an inner
+        t.rebase_to_now();
+        assert!(t.now() < 0.005);
     }
 }

@@ -226,6 +226,7 @@ fn threaded_stub_server_outputs_follow_the_reference_chain() {
             handle
                 .requests
                 .send(ServerMsg::Request(ServerRequest {
+                    route_hop: 0.0,
                     id: i as u64,
                     prompt: p.clone(),
                     sent_at: 0.0,

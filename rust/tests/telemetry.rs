@@ -487,3 +487,73 @@ fn bench_fig6_report_matches_the_experiment_outcome() {
         .count();
     assert_eq!(finish_count, out.recorder.len());
 }
+
+// ------------------------------------------------------------- common epoch
+
+/// The threaded cluster path rebases the telemetry clock to the
+/// experiment epoch, so every shard's track in the exported Chrome trace
+/// starts near t=0 — even when the `Telemetry` handle was created long
+/// before the run.  Without `rebase_to_now` every timestamp would carry
+/// the handle's age as a constant offset (here: an injected 300ms gap).
+#[test]
+fn threaded_cluster_traces_share_a_common_rebased_epoch() {
+    let tel = Telemetry::new(TelemetryMode::Trace);
+    // age the handle: its internal clock now reads ~0.3s
+    std::thread::sleep(std::time::Duration::from_millis(300));
+
+    let cfg = ServerConfig {
+        telemetry: tel.clone(),
+        workers: 2,
+        ..stub_server_cfg(SchedulingMode::Continuous, KvLayout::Paged)
+    };
+    let trace = fig6_trace(&stub_prompt_pool(), 32, 9, 0.002);
+    run_experiment(
+        Backend::Stub(StubSpec::default()),
+        cfg,
+        PolicySpec::Fixed(2),
+        None,
+        &trace,
+    )
+    .expect("threaded cluster experiment");
+
+    let events = tel.events();
+    assert!(!events.is_empty(), "trace mode must record the cluster run");
+    let t_min = events.iter().map(|e| e.t).fold(f64::INFINITY, f64::min);
+    assert!(
+        (0.0..0.25).contains(&t_min),
+        "trace epoch was not rebased to the run start: first event at t={t_min:.3}s \
+         (the 300ms handle age leaked into the timeline)"
+    );
+
+    // both shard tracks exist and share the origin — neither carries a
+    // private offset
+    for shard in 0..2usize {
+        let first = events
+            .iter()
+            .filter(|e| e.shard == shard && matches!(e.kind, EventKind::Round { .. }))
+            .map(|e| e.t)
+            .fold(f64::INFINITY, f64::min);
+        assert!(first.is_finite(), "shard {shard} ran no rounds");
+        assert!(
+            first < 30.0,
+            "shard {shard}: first round at t={first:.3}s is not on the run epoch"
+        );
+    }
+
+    // the Chrome export inherits the common epoch: the earliest span/
+    // instant timestamp is the rebased one (microseconds)
+    let doc = export::chrome_trace(&events);
+    let ts_min = doc
+        .get("traceEvents")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .filter(|e| e.get("ph").unwrap().as_str().unwrap() != "M")
+        .map(|e| e.get("ts").unwrap().as_f64().unwrap())
+        .fold(f64::INFINITY, f64::min);
+    assert!(
+        ts_min < 250_000.0,
+        "chrome trace ts values carry a stale epoch offset: min ts = {ts_min:.0}us"
+    );
+}

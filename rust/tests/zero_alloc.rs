@@ -17,6 +17,8 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 
 use specbatch::engine::{Engine, EngineConfig};
 use specbatch::policy::Fixed;
+use specbatch::telemetry::flight::FlightRecorder;
+use specbatch::telemetry::Telemetry;
 use specbatch::testkit::stub::StubSpec;
 
 struct CountingAlloc;
@@ -56,9 +58,9 @@ fn steady_state_decode_rounds_allocate_nothing() {
     let mut engine = Engine::stub(spec, EngineConfig::default()).expect("stub engine");
     let mut policy = Fixed(4);
     let prompts: Vec<Vec<i32>> = (0..8).map(|r| vec![5 + r as i32, 9 + r as i32]).collect();
-    // max_new bounds total commits well past warmup + timed rounds and
-    // sizes the stats reserves
-    let mut st = engine.prefill_rows(&prompts, 8, true, 200).expect("prefill");
+    // max_new bounds total commits well past BOTH timed phases below
+    // (plain + flight-recorder) and sizes the stats reserves
+    let mut st = engine.prefill_rows(&prompts, 8, true, 400).expect("prefill");
 
     // warmup: arenas grow to their high-water mark, the stopwatch inserts
     // its section entries, the SSM catch-up path runs once
@@ -75,6 +77,36 @@ fn steady_state_decode_rounds_allocate_nothing() {
         delta, 0,
         "steady-state decode rounds must not touch the heap \
          ({delta} allocator calls across 20 rounds)"
+    );
+    assert!(st.has_live(), "rows must still be mid-generation");
+
+    // --- phase 2: the always-on flight recorder rides along for free ---
+    // Attach the ring to the DISABLED handle (the `--telemetry off`
+    // shape): the emitters now run to feed the ring, and steady-state
+    // rounds must STILL not allocate — recording is fixed-slot atomics.
+    let prefix = std::env::temp_dir()
+        .join(format!("specbatch_zero_alloc_flight_{}", std::process::id()))
+        .to_string_lossy()
+        .into_owned();
+    let flight = FlightRecorder::new(64, prefix);
+    engine.set_telemetry(Telemetry::disabled().with_flight(flight.clone()));
+    for _ in 0..3 {
+        engine.decode_round(&mut st, &mut policy).expect("flight warmup round");
+    }
+    let recorded_before = flight.recorded();
+    let before = ALLOC_CALLS.load(Ordering::Relaxed);
+    for _ in 0..20 {
+        engine.decode_round(&mut st, &mut policy).expect("flight steady round");
+    }
+    let delta = ALLOC_CALLS.load(Ordering::Relaxed) - before;
+    assert_eq!(
+        delta, 0,
+        "flight-recorder decode rounds must not touch the heap \
+         ({delta} allocator calls across 20 rounds)"
+    );
+    assert!(
+        flight.recorded() >= recorded_before + 20,
+        "the ring must have seen every round"
     );
     assert!(st.has_live(), "rows must still be mid-generation");
 }

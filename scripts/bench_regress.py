@@ -13,8 +13,15 @@ A Rust-measured number must never fail CI against a mirror-measured
 baseline (different machine, different harness): in that case, and for
 sub-threshold deltas, the script prints an advisory line and exits 0.
 
+Baseline promotion: `--promote-to PATH` stages the fresh document as a
+commit-ready baseline whenever it is Rust-measured and the committed
+baseline still carries mirror provenance.  CI uploads the staged file
+as an artifact; committing it at the repo root replaces the C-mirror
+numbers and flips this gate from advisory to gating on the next run.
+
 Usage:
     bench_regress.py FRESH COMMITTED [--key rps_b32_s4] [--threshold 0.15]
+                     [--promote-to PATH]
 
 Exit status: 1 on a comparable >threshold regression, else 0.
 """
@@ -43,6 +50,13 @@ def main() -> int:
     ap.add_argument("committed", type=Path)
     ap.add_argument("--key", default="rps_b32_s4")
     ap.add_argument("--threshold", type=float, default=0.15)
+    ap.add_argument(
+        "--promote-to",
+        type=Path,
+        default=None,
+        help="stage the fresh doc as a commit-ready baseline when it is "
+        "Rust-measured and the committed baseline is still the mirror",
+    )
     args = ap.parse_args()
 
     fresh = load(args.fresh)
@@ -64,6 +78,19 @@ def main() -> int:
         f"bench-regress: {args.key} fresh={new:.1f} committed={old:.1f} "
         f"delta={delta:+.1%} (threshold -{args.threshold:.0%})"
     )
+    if args.promote_to is not None:
+        if fresh_prov[0] == "rust" and committed_prov[0] != "rust":
+            args.promote_to.write_text(json.dumps(fresh, indent=1, sort_keys=True) + "\n")
+            print(
+                f"bench-regress: staged Rust-measured baseline at "
+                f"{args.promote_to} — commit it as BENCH_micro_hotpath.json "
+                f"at the repo root to make this gate gating"
+            )
+        elif fresh_prov[0] != "rust":
+            print("bench-regress: not staging a baseline — fresh doc is not Rust-measured")
+        else:
+            print("bench-regress: baseline already Rust-measured; nothing to promote")
+
     if not comparable:
         print(
             f"bench-regress: ADVISORY ONLY — provenance differs "

@@ -1,0 +1,129 @@
+#!/usr/bin/env python3
+"""Schema validator for specbatch observability artifacts.  Stdlib only.
+
+Two modes:
+
+* default — validate `BENCH_*.json` bench reports (`telemetry::bench`
+  schema): required top-level keys, a non-empty numeric `metrics` map,
+  a `config` object, and a well-formed FNV-1a `config_fingerprint`.
+* `--events` — validate a telemetry/flight-recorder events JSONL file:
+  every line parses as a JSON object carrying `ev` + `t`; a leading
+  `flight_dump` header (flight dumps always start with one) must name
+  at least one trigger cause and a record count.
+
+Usage:
+    validate_bench.py BENCH_a.json [BENCH_b.json ...]
+    validate_bench.py --events dump.jsonl [more.jsonl ...]
+
+Exit status: 1 on the first schema violation, else 0.
+"""
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+KNOWN_EVS = {
+    "round",
+    "phase",
+    "admission",
+    "finish",
+    "route",
+    "policy_fit",
+    "kv_pool",
+    "trigger",
+    "flight_dump",
+}
+
+
+def fail(path: Path, msg: str) -> None:
+    sys.exit(f"validate-bench: {path}: {msg}")
+
+
+def validate_bench(path: Path) -> None:
+    try:
+        doc = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        fail(path, f"cannot read/parse: {e}")
+    if not isinstance(doc, dict):
+        fail(path, "top level is not an object")
+    for key in ("name", "config", "config_fingerprint", "metrics"):
+        if key not in doc:
+            fail(path, f"missing required key {key!r}")
+    if not isinstance(doc["name"], str) or not doc["name"]:
+        fail(path, "name must be a non-empty string")
+    if not isinstance(doc["config"], dict):
+        fail(path, "config must be an object")
+    fp = doc["config_fingerprint"]
+    if not (isinstance(fp, str) and len(fp) == 16 and all(c in "0123456789abcdef" for c in fp)):
+        fail(path, f"config_fingerprint {fp!r} is not 16 lowercase hex chars")
+    metrics = doc["metrics"]
+    if not isinstance(metrics, dict) or not metrics:
+        fail(path, "metrics must be a non-empty object")
+    for k, v in metrics.items():
+        if not isinstance(v, (int, float)) or isinstance(v, bool):
+            fail(path, f"metric {k!r} is not a number: {v!r}")
+        if v != v or v in (float("inf"), float("-inf")):
+            fail(path, f"metric {k!r} is not finite: {v!r}")
+    # recorder-backed reports carry the latency block; grids don't —
+    # when present it must be structurally sound
+    ptl = doc.get("per_token_latency_s")
+    if ptl is not None:
+        for q in ("mean", "p50", "p99"):
+            if not isinstance(ptl.get(q), (int, float)):
+                fail(path, f"per_token_latency_s.{q} missing or non-numeric")
+    print(f"validate-bench: OK {path} ({len(metrics)} metrics)")
+
+
+def validate_events(path: Path) -> None:
+    try:
+        lines = path.read_text().splitlines()
+    except OSError as e:
+        fail(path, f"cannot read: {e}")
+    if not lines:
+        fail(path, "empty events file")
+    n_rounds = 0
+    for i, line in enumerate(lines, 1):
+        try:
+            obj = json.loads(line)
+        except json.JSONDecodeError as e:
+            fail(path, f"line {i} is not valid JSON: {e}")
+        if not isinstance(obj, dict):
+            fail(path, f"line {i} is not an object")
+        ev = obj.get("ev")
+        if ev not in KNOWN_EVS:
+            fail(path, f"line {i}: unknown ev {ev!r}")
+        if not isinstance(obj.get("t"), (int, float)):
+            fail(path, f"line {i}: missing numeric t")
+        if i == 1 and ev == "flight_dump":
+            causes = obj.get("causes")
+            if not isinstance(causes, list) or not causes:
+                fail(path, "flight_dump header names no trigger causes")
+            if not isinstance(obj.get("records"), int):
+                fail(path, "flight_dump header missing record count")
+        if ev == "round":
+            n_rounds += 1
+    if n_rounds == 0:
+        fail(path, "no round events — the captured window is useless")
+    print(f"validate-bench: OK {path} ({len(lines)} events, {n_rounds} rounds)")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("paths", nargs="+", type=Path)
+    ap.add_argument(
+        "--events",
+        action="store_true",
+        help="validate telemetry/flight JSONL instead of bench reports",
+    )
+    args = ap.parse_args()
+    for path in args.paths:
+        if args.events:
+            validate_events(path)
+        else:
+            validate_bench(path)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
