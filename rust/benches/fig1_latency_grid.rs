@@ -55,6 +55,7 @@ fn sim_grid() {
             llm: CostModel::new(*model, *gpu),
             ssm: CostModel::new(ModelProfile::OPT_125M, *gpu),
             acceptance: AcceptanceProcess::paper(),
+            class_acceptance: Default::default(),
             drift: None,
             max_batch: 32,
             max_new_tokens: 128,

@@ -28,6 +28,7 @@ fn main() {
         llm: CostModel::new(ModelProfile::OPT_6_7B, GpuProfile::RTX3090),
         ssm: CostModel::new(ModelProfile::OPT_125M, GpuProfile::RTX3090),
         acceptance: AcceptanceProcess::paper(),
+        class_acceptance: Default::default(),
         drift: None,
         max_batch: 16,
         max_new_tokens: 128,

@@ -73,6 +73,9 @@ pub struct BatchRequest {
     /// (cluster paths; 0 on single-worker paths) — split out of the queue
     /// component in the request's latency waterfall
     pub route_hop: f64,
+    /// workload class tag (0 = default) — rides into the engine slot so
+    /// ragged policies can key per-row speculation on it
+    pub class: u8,
 }
 
 impl BatchRequest {
@@ -84,6 +87,7 @@ impl BatchRequest {
             sent_at,
             deadline: None,
             route_hop: 0.0,
+            class: 0,
         }
     }
 }
@@ -460,6 +464,7 @@ impl ContinuousBatcher {
                     width: info.width,
                     queued: self.queue.len(),
                     s: info.s,
+                    drafted: info.drafted,
                     accepted: info.accepted,
                     round_cost: info.round_time,
                     kv_blocks: ep.state.kv_blocks_in_use(),
@@ -526,7 +531,14 @@ impl ContinuousBatcher {
                 _ => None,
             };
             for q in &out.shed {
-                tel.admission(t, q.req.id, "shed", q.req.deadline, slack(q.req.deadline), q.deferred);
+                tel.admission(
+                    t,
+                    q.req.id,
+                    "shed",
+                    q.req.deadline,
+                    slack(q.req.deadline),
+                    q.deferred,
+                );
                 // the shed IS the request's terminal event; its whole
                 // lifetime was queue wait (plus any dispatcher hop)
                 let mut wf = Waterfall::default();
@@ -538,7 +550,14 @@ impl ContinuousBatcher {
             }
             for (i, q) in out.queue.iter().enumerate() {
                 let verdict = if i < out.admit_n { "admit" } else { "defer" };
-                tel.admission(t, q.req.id, verdict, q.req.deadline, slack(q.req.deadline), q.deferred);
+                tel.admission(
+                    t,
+                    q.req.id,
+                    verdict,
+                    q.req.deadline,
+                    slack(q.req.deadline),
+                    q.deferred,
+                );
             }
         }
         for q in out.shed {
@@ -594,6 +613,7 @@ impl ContinuousBatcher {
             engine.prefill_rows(&prompts, bucket, may_speculate, self.cfg.max_new_tokens)?;
         let prefill_s = t_prefill.elapsed().as_secs_f64();
         for (i, q) in fresh.iter().enumerate() {
+            state.set_class(i, q.req.class);
             let mut wf = Waterfall::default();
             wf.route_hop = q.req.route_hop;
             wf.queue = (now - q.req.sent_at - q.req.route_hop).max(0.0);
@@ -657,6 +677,7 @@ impl ContinuousBatcher {
                     q.req.prompt.len(),
                     self.cfg.max_new_tokens,
                 )
+                .with_class(q.req.class)
             })
             .collect();
         let t_admit = std::time::Instant::now();

@@ -38,9 +38,9 @@ use crate::admission::{
 use crate::metrics::{LatencyRecorder, RequestRecord, RoundEvent, SloSummary};
 use crate::policy::{RoundFeedback, SpeculationPolicy};
 use crate::simulator::des::{
-    emit_round_phases, kv_blocks_of, round_phase_split, sim_bucket_for,
+    emit_phase_tiles, kv_blocks_of, round_phase_split, round_phase_split_ragged, sim_bucket_for,
 };
-use crate::simulator::{reshape_cost, round_cost, SimConfig};
+use crate::simulator::{reshape_cost, round_cost, round_cost_ragged, SimConfig};
 use crate::telemetry::attrib::Waterfall;
 use crate::telemetry::{PhaseKind, Telemetry};
 use crate::traffic::{Trace, TraceItem};
@@ -91,6 +91,8 @@ struct SimRow {
     spec_at_admit: usize,
     deadline: Option<f64>,
     deferred: usize,
+    /// workload class tag (drives per-class acceptance + ragged `s`)
+    class: u8,
     /// accruing latency decomposition (see the single-worker DES twin)
     wf: Waterfall,
 }
@@ -118,6 +120,12 @@ struct Shard {
     /// bulk-filled acceptance draws; leftovers are consumed before the
     /// next fill, so the per-shard stream stays exactly sequential
     draws: DrawBuffer,
+    /// ragged-round scratch: per-live-row classes and draft lengths,
+    /// plus the feedback's per-row vectors (cycled by mem::take)
+    live_classes: Vec<u8>,
+    s_choice: Vec<usize>,
+    fb_s_rows: Vec<u32>,
+    fb_classes: Vec<u8>,
     /// policy drift flushes already reported to the flight recorder
     drift_seen: usize,
 }
@@ -185,7 +193,14 @@ pub fn simulate_trace_cluster_admission(
     router: &mut dyn Router,
     trace: &Trace,
 ) -> ClusterReport {
-    simulate_trace_cluster_admission_tel(cfg, policies, ctrls, router, trace, &Telemetry::disabled())
+    simulate_trace_cluster_admission_tel(
+        cfg,
+        policies,
+        ctrls,
+        router,
+        trace,
+        &Telemetry::disabled(),
+    )
 }
 
 /// [`simulate_trace_cluster_admission`] with an event stream on `tel`:
@@ -218,6 +233,10 @@ pub fn simulate_trace_cluster_admission_tel(
             bucket: 0,
             accepted: Vec::new(),
             draws: DrawBuffer::new(),
+            live_classes: Vec::new(),
+            s_choice: Vec::new(),
+            fb_s_rows: Vec::new(),
+            fb_classes: Vec::new(),
             drift_seen: 0,
         })
         .collect();
@@ -386,17 +405,38 @@ fn step_shard(
                 _ => None,
             };
             for w in &out.shed {
-                tel.admission(sh.t, w.item.id, "shed", w.item.deadline, slack(w.item.deadline), w.deferred);
+                tel.admission(
+                    sh.t,
+                    w.item.id,
+                    "shed",
+                    w.item.deadline,
+                    slack(w.item.deadline),
+                    w.deferred,
+                );
                 // a shed request's whole lifetime was queue wait
                 let mut wf = Waterfall::default();
                 wf.queue = sh.t - w.item.send_at;
                 wf.deferred_rounds = w.deferred;
                 wf.seal(sh.t - w.item.send_at);
-                tel.finish_attrib(sh.t, w.item.id, 0, true, w.item.deadline.map(|d| d - sh.t), Some(wf));
+                tel.finish_attrib(
+                    sh.t,
+                    w.item.id,
+                    0,
+                    true,
+                    w.item.deadline.map(|d| d - sh.t),
+                    Some(wf),
+                );
             }
             for (i, w) in out.queue.iter().enumerate() {
                 let verdict = if i < out.admit_n { "admit" } else { "defer" };
-                tel.admission(sh.t, w.item.id, verdict, w.item.deadline, slack(w.item.deadline), w.deferred);
+                tel.admission(
+                    sh.t,
+                    w.item.id,
+                    verdict,
+                    w.item.deadline,
+                    slack(w.item.deadline),
+                    w.deferred,
+                );
             }
         }
         sh.queue = out.queue.into();
@@ -430,6 +470,7 @@ fn step_shard(
             spec_at_admit: 0,
             deadline: w.item.deadline,
             deferred: w.deferred,
+            class: w.item.class,
             wf,
         });
         plen_sum += plen;
@@ -488,8 +529,24 @@ fn step_shard(
     let b = sh.live.len();
     debug_assert!(b >= 1, "step_shard called on an idle shard");
     let ctx = sh.live.iter().map(|r| r.plen + r.generated).sum::<usize>() / b;
-    let s = if may_speculate { policy.choose(b, 8) } else { 0 };
-    let rc = round_cost(cfg, b, s, ctx);
+    sh.live_classes.clear();
+    for r in sh.live.iter() {
+        sh.live_classes.push(r.class);
+    }
+    let classed = sh.live_classes.iter().any(|&c| c != 0);
+    if may_speculate {
+        policy.choose_ragged_into(&sh.live_classes, 8, &mut sh.s_choice);
+    } else {
+        sh.s_choice.clear();
+        sh.s_choice.resize(b, 0);
+    }
+    let s = sh.s_choice.iter().copied().max().unwrap_or(0);
+    let ragged = sh.s_choice.iter().any(|&si| si != s);
+    let rc = if ragged {
+        round_cost_ragged(cfg, b, &sh.s_choice, ctx)
+    } else {
+        round_cost(cfg, b, s, ctx)
+    };
     sh.accepted.clear();
     let mut committed = 0usize;
     if s == 0 {
@@ -498,10 +555,11 @@ fn step_shard(
             committed += 1;
         }
     } else {
-        let acc = cfg.acceptance_at(sh.t);
-        sh.draws.ensure(&mut sh.rng, b * s);
-        for row in sh.live.iter_mut() {
-            let a = acc.sample(s, &mut sh.draws);
+        let need: usize = sh.s_choice.iter().sum();
+        sh.draws.ensure(&mut sh.rng, need);
+        let t_now = sh.t;
+        for (row, &si) in sh.live.iter_mut().zip(sh.s_choice.iter()) {
+            let a = cfg.class_acceptance_at(row.class, t_now).sample(si, &mut sh.draws);
             sh.accepted.push(a as u32);
             row.generated += a + 1;
             committed += a + 1;
@@ -510,10 +568,23 @@ fn step_shard(
     let t_round = sh.t;
     sh.t += rc;
     let accepted_total: usize = sh.accepted.iter().map(|&a| a as usize).sum();
+    let drafted: usize = if s == 0 { 0 } else { sh.s_choice.iter().sum() };
     // every live row sits through this round: accrue its phase split
-    let (draft, verify, accept) = round_phase_split(cfg, rc, b, s, ctx);
+    let (draft, verify, accept) = if ragged {
+        round_phase_split_ragged(cfg, rc, b, &sh.s_choice, ctx)
+    } else {
+        round_phase_split(cfg, rc, b, s, ctx)
+    };
     for row in sh.live.iter_mut() {
         row.wf.add_round_split(0.0, draft, verify, accept);
+    }
+    sh.fb_s_rows.clear();
+    if ragged {
+        sh.fb_s_rows.extend(sh.s_choice.iter().map(|&si| si as u32));
+    }
+    sh.fb_classes.clear();
+    if classed {
+        sh.fb_classes.extend_from_slice(&sh.live_classes);
     }
     let fb = RoundFeedback {
         live: b,
@@ -522,6 +593,8 @@ fn step_shard(
         accepted: std::mem::take(&mut sh.accepted),
         committed,
         round_time: rc,
+        s_rows: std::mem::take(&mut sh.fb_s_rows),
+        classes: std::mem::take(&mut sh.fb_classes),
     };
     policy.observe(&fb);
     let flushes = policy.drift_flushes();
@@ -539,19 +612,34 @@ fn step_shard(
         width,
         queued: sh.queue.len(),
         s,
+        drafted,
         accepted: accepted_total,
         round_cost: rc,
         kv_blocks: kvb,
     });
     if tel.active() {
-        tel.round(t_round, rc, sh.epoch, b, width, sh.queue.len(), s, committed, &fb.accepted, kvb);
-        emit_round_phases(cfg, tel, t_round, rc, b, s, ctx);
+        tel.round(
+            t_round,
+            rc,
+            sh.epoch,
+            b,
+            width,
+            sh.queue.len(),
+            s,
+            committed,
+            &fb.accepted,
+            &fb.s_rows,
+            kvb,
+        );
+        emit_phase_tiles(tel, t_round, draft, verify, accept);
         if tel.tracing() {
             tel.policy_fit(sh.t, policy.snapshot());
         }
     }
-    // reclaim the feedback's accepted buffer for the shard's next round
+    // reclaim the feedback's per-row buffers for the shard's next round
     sh.accepted = fb.accepted;
+    sh.fb_s_rows = fb.s_rows;
+    sh.fb_classes = fb.classes;
 
     // --- retire finished rows immediately, freeing capacity ---
     let mut i = 0;

@@ -141,8 +141,13 @@ pub struct RoundInfo {
     /// executing width (the padded bucket): `width - live` lanes are
     /// padding slack in the round's waste accounting
     pub width: usize,
+    /// executed speculation length — the widest per-row choice on a
+    /// ragged round (the verify call pads every lane to this span)
     pub s: usize,
     pub committed: usize,
+    /// draft tokens requested over the live rows (`Σ s_i`; equals
+    /// `live * s` on uniform rounds, 0 on plain rounds)
+    pub drafted: usize,
     /// drafts accepted over the live real rows (0 for plain rounds)
     pub accepted: usize,
     /// wall seconds the round took, including any SSM catch-up pass (the
@@ -343,6 +348,9 @@ struct RowSoa {
     real: Vec<bool>,
     /// frozen rows keep shapes static but stop committing
     finished: Vec<bool>,
+    /// workload class tag (0 = default) — the ragged policies' per-row
+    /// acceptance-regime key; pure metadata to the execution path
+    class: Vec<u8>,
 }
 
 impl RowSoa {
@@ -356,6 +364,7 @@ impl RowSoa {
             max_new: vec![0; bucket],
             real: vec![false; bucket],
             finished: vec![true; bucket],
+            class: vec![0; bucket],
         };
         for i in 0..bucket {
             rows.set_vacant(i, bos);
@@ -413,6 +422,7 @@ impl RowSoa {
         self.max_new[i] = 0;
         self.real[i] = false;
         self.finished[i] = true;
+        self.class[i] = 0;
     }
 
     fn is_live(&self, i: usize) -> bool {
@@ -483,6 +493,20 @@ impl BatchState {
             .map_or(0, |t| t.llm.total_blocks() + t.ssm.total_blocks())
     }
 
+    /// Tag a slot with a workload class (0 = default).  The per-row key
+    /// ragged policies choose speculation lengths by; no effect on the
+    /// execution path itself.
+    pub fn set_class(&mut self, slot: usize, class: u8) {
+        if slot < self.rows.n() {
+            self.rows.class[slot] = class;
+        }
+    }
+
+    /// A slot's workload class tag.
+    pub fn class_of(&self, slot: usize) -> u8 {
+        self.rows.class.get(slot).copied().unwrap_or(0)
+    }
+
     /// Generated tokens of a slot so far (None when the slot is vacant).
     pub fn generated_tokens(&self, slot: usize) -> Option<&[i32]> {
         if slot < self.rows.n() && self.rows.real[slot] {
@@ -524,6 +548,9 @@ pub struct AdmitRequest {
     /// `Some(Reingest)` for dense-layout carries (context re-fed),
     /// `Some(Blocks(..))` for paged-layout carries (block-table remap)
     pub carried_kv: Option<CarriedKv>,
+    /// workload class tag (0 = default) — rides into the slot so ragged
+    /// policies can key per-row speculation on it
+    pub class: u8,
 }
 
 impl AdmitRequest {
@@ -534,7 +561,14 @@ impl AdmitRequest {
             prompt_len,
             max_new,
             carried_kv: None,
+            class: 0,
         }
+    }
+
+    /// Same admission tagged with a workload class.
+    pub fn with_class(mut self, class: u8) -> AdmitRequest {
+        self.class = class;
+        self
     }
 }
 
@@ -595,6 +629,15 @@ struct RoundScratch {
     /// admission ingest: post-call clamp targets + ingest-counter snapshot
     desired: Vec<u32>,
     ing: Vec<u32>,
+    /// ragged-round arenas: live-row classes in slot order (the policy's
+    /// ragged view, lent to the feedback when non-trivial), the per-live-
+    /// row choice, its per-slot expansion (frozen/vacant lanes ride at
+    /// the executed s), and the u32 copy telemetry/feedback carry on
+    /// non-uniform rounds (empty = uniform)
+    classes: Vec<u8>,
+    s_choice: Vec<usize>,
+    s_slot: Vec<usize>,
+    s_rows: Vec<u32>,
 }
 
 /// The batched speculative decoding engine.
@@ -883,11 +926,13 @@ impl<'rt> Engine<'rt> {
         Ok(st)
     }
 
-    /// Run ONE decode round: query the policy with the *live* batch size,
-    /// then a plain verify round (s = 0) or a speculate/verify/accept
-    /// round (s >= 1).  Freezes rows that hit `<eos>` / their budget and
-    /// feeds the round's outcome back to the policy
-    /// ([`SpeculationPolicy::observe`]).
+    /// Run ONE decode round: query the policy with the live rows' class
+    /// tags (per-row ragged choice; uniform policies broadcast), then a
+    /// plain verify round (all s_i = 0) or a speculate/verify/accept
+    /// round executed at the widest choice `s = max s_i` — rows with a
+    /// smaller s_i commit a truncated prefix (padded verify).  Freezes
+    /// rows that hit `<eos>` / their budget and feeds the round's
+    /// outcome back to the policy ([`SpeculationPolicy::observe`]).
     pub fn decode_round(
         &mut self,
         st: &mut BatchState,
@@ -898,10 +943,55 @@ impl<'rt> Engine<'rt> {
             bail!("decode_round: no live rows in the batch");
         }
         let max_s = self.limits.max_spec_len(st.bucket);
+        // gather the live rows' class tags in slot order — the policy's
+        // per-row view.  Uniform policies broadcast their scalar choice
+        // over it (the default `choose_ragged_into`), so this round is
+        // bit-identical to the scalar path for them.
+        self.scratch.classes.clear();
+        for i in 0..st.rows.n() {
+            if st.rows.is_live(i) {
+                self.scratch.classes.push(st.rows.class[i]);
+            }
+        }
         let s = if st.may_speculate {
-            policy.choose(live, max_s)
+            let RoundScratch {
+                classes, s_choice, ..
+            } = &mut self.scratch;
+            policy.choose_ragged_into(classes, max_s, s_choice);
+            debug_assert_eq!(s_choice.len(), live);
+            s_choice.iter().copied().max().unwrap_or(0)
         } else {
+            self.scratch.s_choice.clear();
+            self.scratch.s_choice.resize(live, 0);
             0
+        };
+        // the round executes at the widest per-row choice (the verify
+        // call pads every lane to s); rows that asked for less commit a
+        // truncated prefix — their surplus lanes are intra-row padding
+        let ragged = s > 0 && self.scratch.s_choice.iter().any(|&si| si != s);
+        self.scratch.s_slot.clear();
+        self.scratch.s_slot.resize(st.rows.n(), s);
+        self.scratch.s_rows.clear();
+        if ragged {
+            let RoundScratch {
+                s_choice,
+                s_slot,
+                s_rows,
+                ..
+            } = &mut self.scratch;
+            let mut li = 0usize;
+            for i in 0..st.rows.n() {
+                if st.rows.is_live(i) {
+                    s_slot[i] = s_choice[li];
+                    li += 1;
+                }
+            }
+            s_rows.extend(s_choice.iter().map(|&si| si as u32));
+        }
+        let drafted: usize = if s == 0 {
+            0
+        } else {
+            self.scratch.s_choice.iter().sum()
         };
         let before = st.rows.committed_total();
         self.scratch.accepted.clear();
@@ -988,6 +1078,7 @@ impl<'rt> Engine<'rt> {
                 s,
                 committed,
                 &self.scratch.accepted,
+                &self.scratch.s_rows,
                 st.kv_blocks_in_use(),
             );
             // phases laid out back-to-back in execution order
@@ -1013,13 +1104,17 @@ impl<'rt> Engine<'rt> {
             width: st.bucket,
             s,
             committed,
+            drafted,
             accepted: self.scratch.accepted.iter().map(|&a| a as usize).sum(),
             round_time: wall_time,
             phases,
         };
         st.stats.per_round.push(info);
-        // lend the accepted buffer to the feedback (no clone), then take
-        // it back so the next round reuses its capacity
+        // lend the accepted/s_rows/classes buffers to the feedback (no
+        // clone), then take them back so the next round reuses their
+        // capacity.  `classes` travels only when some live row is tagged
+        // — a classless round observes exactly as it did before.
+        let classed = self.scratch.classes.iter().any(|&c| c != 0);
         let fb = RoundFeedback {
             live,
             // the round executed at the padded bucket width, which is
@@ -1027,11 +1122,21 @@ impl<'rt> Engine<'rt> {
             width: st.bucket,
             s,
             accepted: std::mem::take(&mut self.scratch.accepted),
+            s_rows: std::mem::take(&mut self.scratch.s_rows),
+            classes: if classed {
+                std::mem::take(&mut self.scratch.classes)
+            } else {
+                Vec::new()
+            },
             committed,
             round_time: fit_time,
         };
         policy.observe(&fb);
         self.scratch.accepted = fb.accepted;
+        self.scratch.s_rows = fb.s_rows;
+        if classed {
+            self.scratch.classes = fb.classes;
+        }
         // a CUSUM flush is exactly the moment the operator wants the
         // surrounding rounds for — arm a flight dump (plain compare
         // when the policy has no detector)
@@ -1089,6 +1194,7 @@ impl<'rt> Engine<'rt> {
             }
             let ctx_len = req.context.len();
             st.rows.install(slot, &req.context, req.prompt_len, req.max_new);
+            st.rows.class[slot] = req.class;
             match req.carried_kv {
                 Some(CarriedKv::Blocks(handle)) => {
                     self.remap_slot(st, slot, ctx_len, handle)?;
@@ -1261,6 +1367,7 @@ impl<'rt> Engine<'rt> {
                     prompt_len: st.rows.prompt_len[i] as usize,
                     max_new: st.rows.max_new[i] as usize,
                     carried_kv: Some(carried_kv),
+                    class: st.rows.class[i],
                 },
             ));
         }
@@ -1426,6 +1533,7 @@ impl<'rt> Engine<'rt> {
             commit,
             commit_len,
             accepted,
+            s_slot,
             ..
         } = scratch;
 
@@ -1452,9 +1560,14 @@ impl<'rt> Engine<'rt> {
             if rows.finished[i] {
                 continue;
             }
-            let n = commit_len[i] as usize;
+            // ragged truncation: a row that asked for s_i < s commits at
+            // most its own s_i accepted drafts (+1 bonus/correction);
+            // whatever the padded verify proved beyond that is intra-row
+            // padding, never committed.  Uniform rounds have
+            // s_slot[i] == s, so n == commit_len[i] — the old behaviour.
+            let n = (commit_len[i] as usize).min(s_slot[i] + 1);
             rows.extend(i, &commit[i * (s + 1)..][..n]);
-            stats.drafted += s;
+            stats.drafted += s_slot[i];
             stats.accepted += n - 1;
             if rows.real[i] {
                 stats.accept_samples.push((n - 1) as u32);

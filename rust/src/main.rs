@@ -203,6 +203,7 @@ fn cli_config_json(cmd: &str, args: &Args, keys: &[&str]) -> Json {
         }
     }
     pairs.push(("fig6", Json::Bool(args.has_flag("fig6"))));
+    pairs.push(("mixed-domain", Json::Bool(args.has_flag("mixed-domain"))));
     Json::obj(pairs)
 }
 
@@ -692,6 +693,12 @@ fn cmd_sim(argv: Vec<String>) -> Result<()> {
         .opt("drift-c", "0.55", "post-drift acceptance c")
         .opt("drift-gamma", "0.2", "post-drift acceptance gamma")
         .flag("fig6", "use the alternating intense/sparse pattern")
+        .flag(
+            "mixed-domain",
+            "tag requests with two alternating workload classes and give each its \
+             own acceptance regime (geometric q=0.75 vs q=0.05) — the ragged \
+             per-row speculation showcase",
+        )
         .opt("out", "results/sim.csv", "per-request CSV")
         .opt("rounds-out", "results/sim_rounds.csv", "per-round timeline CSV")
         .opt(
@@ -730,10 +737,11 @@ fn cmd_sim(argv: Vec<String>) -> Result<()> {
     } else {
         None
     };
-    let cfg = SimConfig {
+    let mut cfg = SimConfig {
         llm: CostModel::new(llm, gpu),
         ssm: CostModel::new(ssm, gpu),
         acceptance: AcceptanceProcess::paper(),
+        class_acceptance: Default::default(),
         drift,
         max_batch: 16,
         max_new_tokens: 128,
@@ -742,6 +750,17 @@ fn cmd_sim(argv: Vec<String>) -> Result<()> {
         kv_block: specbatch::kvcache::DEFAULT_BLOCK_SIZE,
         seed: args.get_u64("seed")?,
     };
+    if args.has_flag("mixed-domain") {
+        // two acceptance regimes in one batch: class 0 drafts land often,
+        // class 1 almost never — the scenario where a ragged per-row
+        // policy beats every uniform speculation length (q matches the
+        // gated payoff test in tests/ragged_policy.rs; q -> 1 makes huge
+        // per-class s genuinely optimal and is a different story)
+        cfg.class_acceptance
+            .insert(0, AcceptanceProcess::Geometric { q: 0.75 });
+        cfg.class_acceptance
+            .insert(1, AcceptanceProcess::Geometric { q: 0.05 });
+    }
     let policy_spec = PolicySpec::parse(args.get("policy")?)?;
     let pattern = if args.has_flag("fig6") {
         TrafficPattern::fig6()
@@ -762,6 +781,9 @@ fn cmd_sim(argv: Vec<String>) -> Result<()> {
         args.get_usize("requests")?,
         args.get_u64("seed")?,
     );
+    if args.has_flag("mixed-domain") {
+        trace = trace.with_classes_alternating(2);
+    }
     let slo_p50 = args.get_f64("slo-p50")?;
     if slo_p50 > 0.0 {
         let slo = SloSpec::new(slo_p50, args.get_f64("slo-scale")?);
@@ -1009,11 +1031,17 @@ fn cmd_inspect(argv: Vec<String>) -> Result<()> {
                     .and_then(|a| a.as_arr().ok())
                     .map(|a| a.iter().filter_map(|v| v.as_usize().ok()).sum())
                     .unwrap_or(0);
+                // ragged rounds carry their drafted total (Σ s_i);
+                // older dumps without the field fall back to the
+                // uniform live * s
+                let drafted = idx(&j, "drafted").unwrap_or(live * s);
                 // clamp against malformed files: the identities assume
-                // live <= width and accepted <= live*s
+                // live <= width, drafted <= live*s, accepted <= drafted
                 let live = live.min(width.max(1));
                 let width = width.max(live);
-                let waste = RoundWaste::from_round(width, live, s, accepted.min(live * s));
+                let drafted = drafted.min(live * s);
+                let waste =
+                    RoundWaste::from_ragged_round(width, live, s, drafted, accepted.min(drafted));
                 surface.add_round(waste, 0.0, dur);
                 last_cell = Some((WasteSurface::bucket_of(width), s));
             }

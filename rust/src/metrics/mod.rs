@@ -299,8 +299,14 @@ pub struct RoundEvent {
     pub width: usize,
     /// requests waiting in the queue
     pub queued: usize,
-    /// speculation length chosen for the round
+    /// speculation length chosen for the round — the widest per-row
+    /// draft length (`s_max`) when the policy chose a ragged vector
     pub s: usize,
+    /// draft tokens actually produced over the live rows (`Σ s_i`; equal
+    /// to `live * s` on uniform rounds, 0 for plain rounds).  With
+    /// `accepted` this makes the generalized waste split exact even on
+    /// ragged rounds, where intra-row slack `(s - s_i)` is padding
+    pub drafted: usize,
     /// drafts accepted over the live rows (0 for plain rounds)
     pub accepted: usize,
     /// measured cost of the round in seconds (wall or virtual)
@@ -312,11 +318,13 @@ pub struct RoundEvent {
 }
 
 /// Export a round timeline (columns: t_s, epoch, live, width, queued,
-/// s, accepted, rejected, padding, round_cost_s, kv_blocks).  The
-/// `rejected`/`padding` columns are the round's mispeculation waste and
-/// bucket-padding slack in token slots, derived from the slot-tiling
-/// identity (`telemetry::attrib::RoundWaste`) so the CSV is
-/// self-describing for downstream waste-surface analysis.
+/// s, drafted, accepted, rejected, padding, round_cost_s, kv_blocks).
+/// The `rejected`/`padding` columns are the round's mispeculation waste
+/// and padding slack in token slots, derived from the generalized
+/// slot-tiling identity (`telemetry::attrib::RoundWaste`): `rejected =
+/// drafted - accepted` and `padding = width*(s+1) - live - drafted`, so
+/// on ragged rounds intra-row slack `(s - s_i)` lands in `padding` and
+/// the CSV stays self-describing for downstream waste-surface analysis.
 pub fn rounds_to_csv(events: &[RoundEvent]) -> Csv {
     let mut csv = Csv::new(&[
         "t_s",
@@ -325,6 +333,7 @@ pub fn rounds_to_csv(events: &[RoundEvent]) -> Csv {
         "width",
         "queued",
         "s",
+        "drafted",
         "accepted",
         "rejected",
         "padding",
@@ -339,9 +348,12 @@ pub fn rounds_to_csv(events: &[RoundEvent]) -> Csv {
             e.width.to_string(),
             e.queued.to_string(),
             e.s.to_string(),
+            e.drafted.to_string(),
             e.accepted.to_string(),
-            (e.live * e.s).saturating_sub(e.accepted).to_string(),
-            (e.width.saturating_sub(e.live) * (e.s + 1)).to_string(),
+            e.drafted.saturating_sub(e.accepted).to_string(),
+            (e.width * (e.s + 1))
+                .saturating_sub(e.live + e.drafted)
+                .to_string(),
             f(e.round_cost),
             e.kv_blocks.to_string(),
         ]);
@@ -585,6 +597,7 @@ mod tests {
                 width: 2,
                 queued: 3,
                 s: 5,
+                drafted: 5,
                 accepted: 2,
                 round_cost: 0.03,
                 kv_blocks: 2,
@@ -596,25 +609,43 @@ mod tests {
                 width: 4,
                 queued: 0,
                 s: 2,
+                drafted: 8,
                 accepted: 5,
                 round_cost: 0.04,
                 kv_blocks: 9,
+            },
+            // ragged round: 3 live rows at s_max 4 drafted only 4+2+0=6
+            // of the 3*4 uniform slots; the 6-slot shortfall is padding
+            RoundEvent {
+                t: 0.3,
+                epoch: 2,
+                live: 3,
+                width: 4,
+                queued: 1,
+                s: 4,
+                drafted: 6,
+                accepted: 4,
+                round_cost: 0.05,
+                kv_blocks: 7,
             },
         ];
         let out = rounds_to_csv(&events).to_string();
         let lines: Vec<&str> = out.lines().collect();
         assert_eq!(
             lines[0],
-            "t_s,epoch,live,width,queued,s,accepted,rejected,padding,round_cost_s,kv_blocks"
+            "t_s,epoch,live,width,queued,s,drafted,accepted,rejected,padding,round_cost_s,kv_blocks"
         );
-        assert_eq!(lines.len(), 3);
-        // live 1, width 2, s 5, accepted 2 → rejected 1*5-2=3,
-        // padding (2-1)*(5+1)=6
-        assert!(lines[1].contains(",1,1,2,3,5,2,3,6,"), "{}", lines[1]);
+        assert_eq!(lines.len(), 4);
+        // live 1, width 2, s 5, drafted 5, accepted 2 → rejected 5-2=3,
+        // padding 2*(5+1)-1-5=6
+        assert!(lines[1].contains(",1,1,2,3,5,5,2,3,6,"), "{}", lines[1]);
         assert!(lines[1].ends_with(",2"), "{}", lines[1]);
-        // live 4, width 4, s 2, accepted 5 → rejected 3, padding 0
-        assert!(lines[2].contains(",1,4,4,0,2,5,3,0,"), "{}", lines[2]);
+        // live 4, width 4, s 2, drafted 8, accepted 5 → rejected 3, padding 0
+        assert!(lines[2].contains(",1,4,4,0,2,8,5,3,0,"), "{}", lines[2]);
         assert!(lines[2].ends_with(",9"), "{}", lines[2]);
+        // ragged: rejected 6-4=2, padding 4*(4+1)-3-6=11
+        assert!(lines[3].contains(",2,3,4,1,4,6,4,2,11,"), "{}", lines[3]);
+        assert!(lines[3].ends_with(",7"), "{}", lines[3]);
     }
 
     #[test]

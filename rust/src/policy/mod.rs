@@ -59,7 +59,7 @@ const CUSUM_VAR_EWMA: f64 = 0.02;
 const FLUSH_REPROBE_EVERY: usize = 4;
 
 /// Everything a policy may learn from one completed decode round.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct RoundFeedback {
     /// live batch size the policy was queried with
     pub live: usize,
@@ -67,10 +67,18 @@ pub struct RoundFeedback {
     /// the engine; equals `live` when nothing is padded) — round cost
     /// scales with this, not with `live`
     pub width: usize,
-    /// speculation length actually used (0 = plain round)
+    /// widest speculation length actually used (0 = plain round); on a
+    /// ragged round this is `max(s_rows)`, the length execution padded to
     pub s: usize,
     /// drafts accepted per live real row (empty when `s == 0`)
     pub accepted: Vec<u32>,
+    /// per-row speculation lengths actually drafted, parallel to
+    /// `accepted`.  Empty means the round was uniform: every row drafted
+    /// exactly `s` (today's scalar path, bit-for-bit)
+    pub s_rows: Vec<u32>,
+    /// per-row class tags, parallel to `accepted`.  Empty means the
+    /// round carried no class information (everything is class 0)
+    pub classes: Vec<u8>,
     /// tokens committed to real rows this round
     pub committed: usize,
     /// measured round latency in seconds (wall or virtual)
@@ -85,6 +93,31 @@ pub trait SpeculationPolicy {
     /// Speculation length for a round serving `live` requests.  `max_s`
     /// caps at what the executable matrix provides.
     fn choose(&self, live: usize, max_s: usize) -> usize;
+
+    /// Per-row speculation lengths for a round serving `rows.len()`
+    /// requests, one entry per live row in batch order; `rows[i]` is the
+    /// row's class tag (0 = untagged).  The default broadcasts
+    /// [`choose`](Self::choose), so every policy that does not override
+    /// this is bit-identical to the scalar path; class-aware policies
+    /// ([`ModelBased`]) return genuinely ragged vectors once their
+    /// per-class fits are warm.  Execution cost is paid at
+    /// `max(s_rows)` (padded verify), so a policy only benefits from
+    /// raggedness through the shrinking draft width.
+    fn choose_ragged(&self, rows: &[u8], max_s: usize) -> Vec<usize> {
+        let mut out = Vec::with_capacity(rows.len());
+        self.choose_ragged_into(rows, max_s, &mut out);
+        out
+    }
+
+    /// Allocation-free spelling of [`choose_ragged`]: clears `out` and
+    /// fills it with one `s` per row.  Drivers on the zero-allocation
+    /// hot path reuse `out` across rounds.
+    ///
+    /// [`choose_ragged`]: Self::choose_ragged
+    fn choose_ragged_into(&self, rows: &[u8], max_s: usize, out: &mut Vec<usize>) {
+        out.clear();
+        out.resize(rows.len(), self.choose(rows.len(), max_s));
+    }
 
     /// Ingest one round of feedback (no-op for static policies).
     fn observe(&mut self, _feedback: &RoundFeedback) {}
@@ -217,6 +250,108 @@ impl Default for ModelBasedConfig {
     }
 }
 
+/// One row class's private acceptance window + Eq. 5 fit.  Class
+/// windows exist *next to* the global window: the global fit keeps
+/// serving `choose` (so classless runs are bit-identical to the
+/// pre-ragged policy), while per-class fits drive
+/// [`SpeculationPolicy::choose_ragged_into`] for mixed-class batches.
+#[derive(Debug, Clone, Default)]
+struct ClassWindow {
+    /// windowed (accepted, s_used) samples, newest at the back
+    samples: VecDeque<(u32, u32)>,
+    /// latest per-class Eq. 5 fit (None until warm) — kept for
+    /// snapshots and external inspection
+    fit: Option<AcceptanceModel>,
+    /// empirical acceptance curve: mean accepted tokens at s = 1.. —
+    /// what the per-class argmin actually consumes (see
+    /// [`class_time_per_token`] for why the parametric fit is not used
+    /// here); empty until warm
+    curve: Vec<f64>,
+    /// rounds this class contributed samples to (amortizes the refit)
+    observes: usize,
+    /// per-class committed choice — the ragged analogue of
+    /// [`ModelBased::current`].  Re-solving Eq. 7 from the raw fits on
+    /// every round would let cost-fit noise flip the class between
+    /// adjacent `s` values each refit, so the choice only moves when
+    /// the predicted improvement clears the same hysteresis band the
+    /// scalar path uses.
+    committed: Option<usize>,
+}
+
+/// Rebuild an Eq. 4/5 acceptance curve from one sample window — the
+/// same estimator [`ModelBased::refit_acceptance`] applies to the
+/// global window, extracted so per-class windows share it.  Returns a
+/// fit only when the curve has >= 2 stable points AND the fit is
+/// sublinear (Eq. 6); callers keep their previous fit otherwise.
+fn acceptance_curve(samples: &VecDeque<(u32, u32)>, min_samples: usize) -> Vec<f64> {
+    let s_hi = samples
+        .iter()
+        .map(|&(_, s_used)| s_used as usize)
+        .max()
+        .unwrap_or(0);
+    let mut curve: Vec<f64> = Vec::new();
+    for s in 1..=s_hi {
+        let mut sum = 0.0;
+        let mut n = 0usize;
+        for &(a, s_used) in samples {
+            if s_used as usize >= s {
+                sum += (a as usize).min(s) as f64;
+                n += 1;
+            }
+        }
+        // a curve point needs enough unclipped samples to be stable
+        if n * 4 < min_samples {
+            break;
+        }
+        // floor keeps the log-log regression finite when acceptance
+        // collapses entirely
+        curve.push((sum / n as f64).max(1e-3));
+    }
+    curve
+}
+
+fn fit_acceptance_window(
+    samples: &VecDeque<(u32, u32)>,
+    min_samples: usize,
+) -> Option<AcceptanceModel> {
+    let curve = acceptance_curve(samples, min_samples);
+    if curve.len() < 2 {
+        return None;
+    }
+    AcceptanceModel::fit(&curve).ok().filter(|f| f.is_sublinear())
+}
+
+/// Predicted per-token time for a class executing at integer `s`,
+/// from its **empirical** acceptance curve (mean accepted tokens at
+/// each observed `s`, flat-tailed beyond the observed support) and the
+/// bucket's step-cost fit.  The parametric Eq. 5 power fit serves the
+/// global blended window well — its optimum sits far from the verify
+/// knee — but `c·s^γ` cannot represent geometric saturation, so for a
+/// slowly-decaying class it exaggerates the tail and the argmin chases
+/// phantom tokens past the knee.  The empirical curve says exactly
+/// what was measured and assumes saturation beyond it, which makes
+/// per-token time strictly worsen past the support: the class argmin
+/// can only move up after a probe has measured the next step.
+fn class_time_per_token(curve: &[f64], cost: &StepCostModel, s: usize) -> f64 {
+    if s == 0 {
+        return cost.beta;
+    }
+    let l = curve[(s - 1).min(curve.len() - 1)];
+    (cost.beta + (cost.alpha + cost.t_ssm) * s as f64) / (l + 1.0)
+}
+
+/// Argmin of [`class_time_per_token`] over `0..=cap`.
+fn class_s_opt(curve: &[f64], cost: &StepCostModel, cap: usize) -> usize {
+    let mut best = (0, class_time_per_token(curve, cost, 0));
+    for s in 1..=cap {
+        let t = class_time_per_token(curve, cost, s);
+        if t < best.1 {
+            best = (s, t);
+        }
+    }
+    best.0
+}
+
 /// Online model-based speculation: ingests [`RoundFeedback`], maintains
 /// windowed acceptance / step-cost fits, and re-solves `s_opt(live)`
 /// with hysteresis and a cold-start fallback to an offline LUT.
@@ -252,6 +387,9 @@ pub struct ModelBased {
     /// per cost bucket: (total round seconds, total committed tokens) —
     /// the *realized* per-token cost the fits can be audited against
     realized: BTreeMap<usize, (f64, usize)>,
+    /// per row class: private acceptance window + fit, feeding the
+    /// ragged per-row decision (empty until classed feedback arrives)
+    class_acc: BTreeMap<u8, ClassWindow>,
 }
 
 impl ModelBased {
@@ -276,6 +414,7 @@ impl ModelBased {
             flush_reprobe: false,
             drift_flushes: 0,
             realized: BTreeMap::new(),
+            class_acc: BTreeMap::new(),
         }
     }
 
@@ -304,6 +443,11 @@ impl ModelBased {
     /// Latest acceptance fit, if warm.
     pub fn fitted_acceptance(&self) -> Option<AcceptanceModel> {
         self.acceptance
+    }
+
+    /// Latest per-class acceptance fit, if that class's window is warm.
+    pub fn fitted_class_acceptance(&self, class: u8) -> Option<AcceptanceModel> {
+        self.class_acc.get(&class).and_then(|w| w.fit)
     }
 
     /// Latest step-cost fit for a bucket, if warm.
@@ -342,6 +486,25 @@ impl ModelBased {
             return Some(m);
         }
         self.cost_fit.range(..bucket).next_back().map(|(_, m)| m)
+    }
+
+    /// Largest speculation length the bucket's cost window actually
+    /// measured, resolved with the same nearest-bucket fallback as
+    /// [`ModelBased::cost_for`].  The per-class Eq. 7 argmin is capped
+    /// one step past this: a cost fit is only trustworthy inside its
+    /// data support, and letting a slowly-decaying acceptance class
+    /// chase an extrapolated fit past the verify knee is how a class
+    /// gets slammed to the cap (probes extend the support one honest,
+    /// paid-for step at a time instead).
+    fn cost_support_max(&self, bucket: usize) -> Option<usize> {
+        let pts = if let Some(p) = self.cost_points.get(&bucket) {
+            Some(p)
+        } else if let Some((_, p)) = self.cost_points.range(bucket..).next() {
+            Some(p)
+        } else {
+            self.cost_points.range(..bucket).next_back().map(|(_, p)| p)
+        };
+        pts.and_then(|p| p.iter().map(|&(s, _)| s as usize).max())
     }
 
     /// Eq. 7 argmin at a bucket from the current fits (None while cold).
@@ -581,6 +744,58 @@ impl SpeculationPolicy for ModelBased {
         s.min(max_s)
     }
 
+    /// Ragged per-row decision: rows whose class has a warm private
+    /// acceptance window get their own Eq. 7 argmin (empirical
+    /// acceptance curve from the class window, step cost from the
+    /// batch bucket's global fit — cost depends on the execution
+    /// shape, not on who sits in it), committed through hysteresis at
+    /// observe time; cold classes ride the scalar `choose` result.  A single-regime
+    /// batch short-circuits to an exact broadcast of `choose`, so runs
+    /// where every row shares one class recover the uniform policy
+    /// bit-for-bit.
+    fn choose_ragged_into(&self, rows: &[u8], max_s: usize, out: &mut Vec<usize>) {
+        out.clear();
+        if rows.is_empty() {
+            return;
+        }
+        let live = rows.len();
+        let base = self.choose(live, max_s);
+        let first = rows[0];
+        if rows.iter().all(|&c| c == first) {
+            out.resize(live, base);
+            return;
+        }
+        let bucket = ModelBased::bucket_of(live);
+        let cost = self.cost_for(bucket).copied();
+        for &class in rows {
+            let mut s_class = base;
+            if let (Some(w), Some(cost)) = (self.class_acc.get(&class), cost) {
+                if !w.curve.is_empty() {
+                    // serve the hysteresis-committed choice; fall back
+                    // to a fresh solve only before the first commit
+                    s_class = w.committed.unwrap_or_else(|| {
+                        let cap = self
+                            .cost_support_max(bucket)
+                            .map_or(MAX_SOLVE_S, |hi| (hi + 1).min(MAX_SOLVE_S));
+                        class_s_opt(&w.curve, &cost, cap)
+                    });
+                    // a class parked at s = 0 stops feeding its window;
+                    // probe it on the global cadence (keyed by the
+                    // class's own observe count) so recovery stays
+                    // detectable — the same reach-for-2 rule as the
+                    // scalar probe, and the only way the empirical
+                    // curve (and thus the committed choice) can extend
+                    // one step past its current support
+                    let every = self.cfg.explore_every;
+                    if every > 0 && w.observes % every == every - 1 {
+                        s_class = (s_class + 1).max(2);
+                    }
+                }
+            }
+            out.push(s_class.min(max_s));
+        }
+    }
+
     /// Per-token latency prediction from the current fits at the bucket a
     /// batch of `live` requests would execute in, evaluated at the `s`
     /// the policy would commit there — the cost-aware router's signal.
@@ -614,25 +829,86 @@ impl SpeculationPolicy for ModelBased {
         // small-bucket fits
         let live_bucket = ModelBased::bucket_of(fb.live);
         let cost_bucket = ModelBased::bucket_of(fb.width.max(fb.live));
+        // a ragged round drafted different lengths per row: its scalar
+        // `s` is only the padding width, so the CUSUM residual (which
+        // compares the round's mean accepted count against the fit *at
+        // that s*) would be fed a mislabeled x — skip it; the per-sample
+        // acceptance path below carries the true per-row `s` and stays
+        // exact.  The cost point keeps flowing, labeled `s_max`: padded
+        // verify means the round's cost IS the cost of executing at the
+        // padding width, and without these points the per-class Eq. 7
+        // argmin would extrapolate a fit identified entirely in the
+        // flat (memory-bound) region past the verify knee — slamming a
+        // high-acceptance class to the cap and never observing the cost
+        // that choice incurs, because the resulting rounds are all
+        // ragged.  Feeding (s_max, round_time) closes that loop: an
+        // overreaching class choice shows up in the very next refit.
+        let ragged = !fb.s_rows.is_empty();
         if fb.s >= 1 {
-            for &a in &fb.accepted {
-                self.accept_samples.push_back((a, fb.s as u32));
+            for (i, &a) in fb.accepted.iter().enumerate() {
+                let s_i = fb.s_rows.get(i).copied().unwrap_or(fb.s as u32);
+                if s_i >= 1 {
+                    self.accept_samples.push_back((a, s_i));
+                }
             }
             while self.accept_samples.len() > self.cfg.acceptance_window {
                 self.accept_samples.pop_front();
             }
-            self.cusum_step(fb);
+            if !ragged {
+                self.cusum_step(fb);
+            }
         }
         if fb.round_time.is_finite() && fb.round_time > 0.0 {
-            let pts = self.cost_points.entry(cost_bucket).or_default();
-            pts.push_back((fb.s as f64, fb.round_time));
-            while pts.len() > self.cfg.cost_window {
-                pts.pop_front();
+            {
+                let pts = self.cost_points.entry(cost_bucket).or_default();
+                pts.push_back((fb.s as f64, fb.round_time));
+                while pts.len() > self.cfg.cost_window {
+                    pts.pop_front();
+                }
             }
             if fb.committed > 0 {
                 let acc = self.realized.entry(cost_bucket).or_insert((0.0, 0));
                 acc.0 += fb.round_time;
                 acc.1 += fb.committed;
+            }
+        }
+        // classed feedback additionally bins each row's sample into its
+        // class's private window, so rows in different acceptance
+        // regimes converge to different per-class fits.  Classless
+        // feedback (`classes` empty) touches none of this — the global
+        // path above is the whole story, bit-for-bit as before
+        if !fb.classes.is_empty() {
+            for (i, &a) in fb.accepted.iter().enumerate() {
+                let s_i = fb.s_rows.get(i).copied().unwrap_or(fb.s as u32);
+                if s_i == 0 {
+                    continue;
+                }
+                let class = fb.classes.get(i).copied().unwrap_or(0);
+                let w = self.class_acc.entry(class).or_default();
+                w.samples.push_back((a, s_i));
+                while w.samples.len() > self.cfg.acceptance_window {
+                    w.samples.pop_front();
+                }
+            }
+            for w in self.class_acc.values_mut() {
+                w.observes += 1;
+                if w.samples.len() < self.cfg.min_acceptance_samples {
+                    continue;
+                }
+                if !w.curve.is_empty() && w.observes % ACCEPT_REFIT_EVERY != 0 {
+                    continue;
+                }
+                let curve = acceptance_curve(&w.samples, self.cfg.min_acceptance_samples);
+                if curve.len() >= 2 {
+                    if let Some(fit) =
+                        AcceptanceModel::fit(&curve).ok().filter(|f| f.is_sublinear())
+                    {
+                        w.fit = Some(fit);
+                    }
+                }
+                if !curve.is_empty() {
+                    w.curve = curve;
+                }
             }
         }
         *self.rounds_seen.entry(live_bucket).or_insert(0) += 1;
@@ -642,6 +918,40 @@ impl SpeculationPolicy for ModelBased {
         self.update_choice(cost_bucket);
         if live_bucket != cost_bucket {
             self.update_choice(live_bucket);
+        }
+        // commit per-class choices through the same hysteresis band the
+        // scalar path uses (no-op on classless runs: `class_acc` is
+        // empty, so uniform-regime behavior is bit-identical)
+        let cost = self.cost_for(cost_bucket).copied();
+        if let Some(cost) = cost {
+            let cap = self
+                .cost_support_max(cost_bucket)
+                .map_or(MAX_SOLVE_S, |hi| (hi + 1).min(MAX_SOLVE_S));
+            for w in self.class_acc.values_mut() {
+                if w.curve.is_empty() {
+                    continue;
+                }
+                let s_new = class_s_opt(&w.curve, &cost, cap);
+                match w.committed {
+                    None => w.committed = Some(s_new),
+                    Some(cur) if s_new != cur => {
+                        // trust region: the committed choice walks at
+                        // most one step per round toward the argmin, so
+                        // every expansion is executed and measured (the
+                        // new `s_max` feeds a cost point) before the
+                        // next — a noisy refit can no longer teleport
+                        // a class across the verify knee
+                        let step = s_new.clamp(cur.saturating_sub(1), cur + 1);
+                        let better = class_time_per_token(&w.curve, &cost, cur)
+                            > class_time_per_token(&w.curve, &cost, step)
+                                * (1.0 + self.cfg.hysteresis);
+                        if step != cur && better {
+                            w.committed = Some(step);
+                        }
+                    }
+                    Some(_) => {}
+                }
+            }
         }
     }
 
@@ -708,9 +1018,39 @@ impl SpeculationPolicy for ModelBased {
                 })
                 .collect(),
         );
+        // per-class window state (empty object on classless runs)
+        let class_acceptance = Json::Obj(
+            self.class_acc
+                .iter()
+                .map(|(class, w)| {
+                    (
+                        class.to_string(),
+                        Json::obj(vec![
+                            ("samples", Json::Num(w.samples.len() as f64)),
+                            (
+                                "committed_s",
+                                w.committed
+                                    .map_or(Json::Null, |s| Json::Num(s as f64)),
+                            ),
+                            (
+                                "fit",
+                                w.fit.map_or(Json::Null, |f| {
+                                    Json::obj(vec![
+                                        ("c", Json::Num(f.c)),
+                                        ("gamma", Json::Num(f.gamma)),
+                                        ("r2", Json::Num(f.r2)),
+                                    ])
+                                }),
+                            ),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
         Some(Json::obj(vec![
             ("policy", Json::Str("model-based".into())),
             ("samples", Json::Num(self.accept_samples.len() as f64)),
+            ("class_acceptance", class_acceptance),
             ("observes", Json::Num(self.observes as f64)),
             ("acceptance", acceptance),
             ("buckets", buckets),
@@ -817,6 +1157,7 @@ mod tests {
                 accepted,
                 committed,
                 round_time: alpha * s_used as f64 + beta,
+                ..RoundFeedback::default()
             });
         }
         // once converged the window only spans s ∈ {s_opt, s_opt+1}, so
@@ -883,6 +1224,7 @@ mod tests {
                 accepted,
                 committed,
                 round_time: (0.002 * s as f64 + 0.03) * noise,
+                ..RoundFeedback::default()
             });
         }
         assert!(p.committed_choice(2).is_some(), "fits must be warm");
@@ -904,6 +1246,7 @@ mod tests {
                 accepted,
                 committed,
                 round_time: (0.002 * s as f64 + 0.03) * noise,
+                ..RoundFeedback::default()
             });
             let cur = p.committed_choice(2);
             if cur != last {
@@ -946,6 +1289,7 @@ mod tests {
                     // memory-bound-ish cost: speculation pays when drafts
                     // are accepted, barely costs when they are not
                     round_time: 0.0008 * s as f64 + 0.025,
+                    ..RoundFeedback::default()
                 });
             }
         };
@@ -1026,6 +1370,7 @@ mod tests {
                     accepted,
                     committed,
                     round_time: 0.004 * s as f64 + 0.03,
+                    ..RoundFeedback::default()
                 });
             }
         };
@@ -1097,6 +1442,7 @@ mod tests {
                 accepted: vec![1],
                 committed: 2,
                 round_time: 0.01 + 0.001 * (1 + (i % 3)) as f64,
+                ..RoundFeedback::default()
             });
         }
         let snap = p.snapshot().unwrap();
@@ -1113,5 +1459,103 @@ mod tests {
         let cusum = snap.get("cusum").unwrap();
         assert!(cusum.get("pos").unwrap().as_f64().unwrap() >= 0.0);
         assert!(!cusum.get("flush_reprobe").unwrap().as_bool().unwrap());
+    }
+
+    /// The default ragged API is an exact broadcast of `choose` for
+    /// every policy that does not override it.
+    #[test]
+    fn choose_ragged_default_broadcasts_choose() {
+        let rows = [0u8; 5];
+        assert_eq!(Fixed(3).choose_ragged(&rows, 8), vec![3; 5]);
+        assert_eq!(NoSpec.choose_ragged(&rows, 8), vec![0; 5]);
+        let l = LutAdaptive(lut(&[(1, 5), (4, 3), (8, 2)]));
+        assert_eq!(l.choose_ragged(&[0u8; 4], 8), vec![l.choose(4, 8); 4]);
+        // the `_into` spelling fills a caller-owned buffer
+        let mut buf = Vec::with_capacity(8);
+        Fixed(2).choose_ragged_into(&rows, 8, &mut buf);
+        assert_eq!(buf, vec![2; 5]);
+        Fixed(2).choose_ragged_into(&[], 8, &mut buf);
+        assert!(buf.is_empty());
+    }
+
+    /// A single-regime batch must resolve to an exact broadcast of the
+    /// scalar `choose`, cold or warm — the uniform-recovery property.
+    #[test]
+    fn model_based_single_regime_ragged_is_an_exact_broadcast() {
+        let p = ModelBased::new(lut(&[(1, 5), (4, 3), (16, 1)]));
+        for live in [1usize, 4, 16] {
+            let rows = vec![7u8; live];
+            assert_eq!(p.choose_ragged(&rows, 8), vec![p.choose(live, 8); live]);
+        }
+    }
+
+    /// Mixed-class feedback must grow per-class acceptance fits that
+    /// pull the two regimes to different per-row speculation lengths:
+    /// the high-acceptance class strictly longer than the collapsed one.
+    #[test]
+    fn per_class_windows_diverge_and_drive_ragged_choices() {
+        let hi = AcceptanceProcess::Geometric { q: 0.95 };
+        let lo = AcceptanceProcess::Geometric { q: 0.05 };
+        let mut rng = Pcg64::new(0xA11);
+        let mut p = ModelBased::new(lut(&[(1, 4), (16, 4)]));
+        let classes: Vec<u8> = (0..8).map(|i| (i % 2) as u8).collect();
+        for _ in 0..400 {
+            let s_rows = p.choose_ragged(&classes, 8);
+            let s_max = s_rows.iter().copied().max().unwrap();
+            let uniform = s_rows.iter().all(|&s| s == s_rows[0]);
+            let mut accepted = Vec::new();
+            for (i, &class) in classes.iter().enumerate() {
+                let proc_ = if class == 0 { &hi } else { &lo };
+                let a = if s_rows[i] > 0 {
+                    proc_.sample(s_rows[i], &mut rng) as u32
+                } else {
+                    0
+                };
+                accepted.push(a);
+            }
+            let committed: usize = accepted.iter().map(|&a| a as usize + 1).sum();
+            p.observe(&RoundFeedback {
+                live: 8,
+                width: 8,
+                s: s_max,
+                accepted,
+                s_rows: if uniform {
+                    Vec::new()
+                } else {
+                    s_rows.iter().map(|&s| s as u32).collect()
+                },
+                classes: classes.clone(),
+                committed,
+                round_time: 0.004 * s_max as f64 + 0.03,
+            });
+        }
+        let f0 = p.fitted_class_acceptance(0).expect("class 0 fit warm");
+        let f1 = p.fitted_class_acceptance(1).expect("class 1 fit warm");
+        assert!(
+            f0.c > f1.c + 0.3,
+            "class fits must separate the regimes: c0 = {}, c1 = {}",
+            f0.c,
+            f1.c
+        );
+        let s_rows = p.choose_ragged(&classes, 8);
+        let s0 = s_rows[0];
+        let s1 = s_rows[1];
+        assert!(
+            s0 > s1,
+            "high-acceptance rows must draft longer: s0 = {s0}, s1 = {s1} ({s_rows:?})"
+        );
+        assert!(s1 <= 2, "collapsed class must park near no-spec: {s1}");
+        // classless feedback must never touch the class windows
+        let mut q = ModelBased::new(lut(&[(1, 4)]));
+        q.observe(&RoundFeedback {
+            live: 2,
+            width: 2,
+            s: 2,
+            accepted: vec![1, 2],
+            committed: 5,
+            round_time: 0.03,
+            ..RoundFeedback::default()
+        });
+        assert!(q.fitted_class_acceptance(0).is_none());
     }
 }

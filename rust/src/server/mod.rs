@@ -139,6 +139,9 @@ pub struct ServerRequest {
     /// forwarded to a shard (stamped by the dispatcher; 0 single-worker).
     /// Surfaces as the `route_hop` waterfall component
     pub route_hop: f64,
+    /// workload class tag (0 = default) — forwarded to the batcher so
+    /// ragged policies can key per-row speculation on it
+    pub class: u8,
 }
 
 /// A response on the outbound message queue.  A shed request still gets a
@@ -592,6 +595,7 @@ fn serve_static(
                 width: info.width,
                 queued: pending.len(),
                 s: info.s,
+                drafted: info.drafted,
                 accepted: info.accepted,
                 round_cost: info.round_time,
                 // batch-to-completion rounds are reconstructed after the
@@ -724,6 +728,7 @@ fn serve_continuous(
                     sent_at: r.sent_at,
                     deadline: r.deadline,
                     route_hop: r.route_hop,
+                    class: r.class,
                 }),
                 Ok(ServerMsg::Shutdown) => {
                     shutdown = true;
@@ -749,6 +754,7 @@ fn serve_continuous(
                     sent_at: r.sent_at,
                     deadline: r.deadline,
                     route_hop: r.route_hop,
+                    class: r.class,
                 }),
                 Ok(ServerMsg::Shutdown) => break,
                 Err(RecvTimeoutError::Timeout) => continue,
@@ -795,6 +801,7 @@ pub fn run_client(trace: &Trace, requests: &Sender<ServerMsg>, epoch: Instant) -
             sent_at: epoch.elapsed().as_secs_f64(),
             deadline: item.deadline,
             route_hop: 0.0,
+            class: item.class,
         };
         requests
             .send(ServerMsg::Request(req))

@@ -35,7 +35,7 @@
 //! offline LUT keeps serving its now-stale `s`; the online policy
 //! re-fits and re-converges — `tests/online_policy.rs` pins that payoff.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 
 use crate::admission::{
     apply_plan_to_queue, AdmissionController, AdmissionView, Candidate, Fifo,
@@ -67,6 +67,13 @@ pub struct SimConfig {
     pub llm: CostModel,
     pub ssm: CostModel,
     pub acceptance: AcceptanceProcess,
+    /// per-workload-class acceptance overrides (keyed by
+    /// [`crate::traffic::TraceItem::class`]): rows of a tagged class
+    /// follow their own draft/target agreement curve, modelling e.g.
+    /// code-completion rows next to chat rows in one batch.  Classes
+    /// absent from the map — and everything, when the map is empty —
+    /// fall back to `acceptance`.
+    pub class_acceptance: BTreeMap<u8, AcceptanceProcess>,
     /// optional mid-trace acceptance drift scenario
     pub drift: Option<AcceptanceDrift>,
     pub max_batch: usize,
@@ -90,6 +97,7 @@ impl SimConfig {
             llm,
             ssm,
             acceptance: AcceptanceProcess::paper(),
+            class_acceptance: BTreeMap::new(),
             drift: None,
             max_batch: 16,
             max_new_tokens: 128,
@@ -107,6 +115,19 @@ impl SimConfig {
             _ => &self.acceptance,
         }
     }
+
+    /// Acceptance process in effect for workload class `class` at virtual
+    /// time `t`.  Drift (a global workload shift) overrides every class
+    /// after the cut; before it, tagged classes follow their
+    /// [`SimConfig::class_acceptance`] override and everything else falls
+    /// back to [`SimConfig::acceptance`] — so with an empty map this is
+    /// exactly [`SimConfig::acceptance_at`].
+    pub fn class_acceptance_at(&self, class: u8, t: f64) -> &AcceptanceProcess {
+        match &self.drift {
+            Some(d) if t >= d.at => &d.after,
+            _ => self.class_acceptance.get(&class).unwrap_or(&self.acceptance),
+        }
+    }
 }
 
 /// Virtual cost the DES charges one decode round at `(batch, s, ctx)` —
@@ -119,6 +140,58 @@ pub fn round_cost(cfg: &SimConfig, batch: usize, s: usize, ctx: usize) -> f64 {
     } else {
         s as f64 * cfg.ssm.t_draft(batch, ctx)
             + cfg.llm.t_verify(batch, s, ctx)
+            + cfg.host_overhead
+    }
+}
+
+/// Draft-phase cost of a ragged round: `s_rows[i]` draft steps for live
+/// row `i`, inside a batch executing `batch` padded lanes.  The SSM runs
+/// `max(s_rows)` sequential single-token forwards; at step `k` the lanes
+/// still drafting are the rows with `s_rows[i] > k` **plus every padding
+/// lane** (`batch - s_rows.len()` vacant or finished slots — the padded
+/// kernel executes them regardless, exactly as `round_cost` charges the
+/// full `batch` width).  Consecutive steps of equal width are grouped
+/// into one `run * t_draft(width)` term, so a uniform `s_rows` collapses
+/// to the single `s * t_draft(batch)` multiplication of [`round_cost`]
+/// and reproduces it bit for bit.
+pub(crate) fn ragged_draft_cost(
+    cfg: &SimConfig,
+    batch: usize,
+    s_rows: &[usize],
+    ctx: usize,
+) -> f64 {
+    let s_max = s_rows.iter().copied().max().unwrap_or(0);
+    let pad = batch - s_rows.len().min(batch);
+    let width_at = |k: usize| pad + s_rows.iter().filter(|&&si| si > k).count();
+    let mut draft = 0.0;
+    let mut step = 0usize;
+    while step < s_max {
+        let width = width_at(step);
+        let mut run = 1usize;
+        while step + run < s_max && width_at(step + run) == width {
+            run += 1;
+        }
+        draft += run as f64 * cfg.ssm.t_draft(width, ctx);
+        step += run;
+    }
+    draft
+}
+
+/// Virtual cost the DES charges one **ragged** decode round: per-row
+/// draft lengths `s_rows` (one entry per live row) inside a batch
+/// executing `batch` padded lanes.  Drafting shrinks with the active
+/// width per [`ragged_draft_cost`]; verification is padded to the widest
+/// row (`t_verify(batch, max(s_rows))` — one kernel over the rectangular
+/// bucket, exactly as the bucket already pads width).  A uniform
+/// `s_rows` reproduces [`round_cost`] bit for bit, operation for
+/// operation.
+pub fn round_cost_ragged(cfg: &SimConfig, batch: usize, s_rows: &[usize], ctx: usize) -> f64 {
+    let s_max = s_rows.iter().copied().max().unwrap_or(0);
+    if s_max == 0 {
+        cfg.llm.t_verify(batch, 0, ctx) + cfg.host_overhead
+    } else {
+        ragged_draft_cost(cfg, batch, s_rows, ctx)
+            + cfg.llm.t_verify(batch, s_max, ctx)
             + cfg.host_overhead
     }
 }
@@ -191,6 +264,7 @@ pub fn batch_service_time(
         cfg,
         policy,
         prompt_lens,
+        &[],
         start_t,
         rng,
         &Telemetry::disabled(),
@@ -211,11 +285,19 @@ pub fn batch_service_time(
 /// per-round draft/verify/accept splits) accrues into it; every request
 /// of a batch-to-completion batch experiences the same body, so the
 /// caller stamps per-request queue wait and seals against latency.
+///
+/// `classes` tags each row with its workload class (parallel to
+/// `prompt_lens`; empty = every row class 0).  Classed rows sample their
+/// [`SimConfig::class_acceptance`] process, and the policy's ragged API
+/// (`choose_ragged_into`) picks one draft length per live row — a
+/// uniform choice (every non-ragged policy, and `ModelBased` before its
+/// per-class fits diverge) reproduces the classless path bit for bit.
 #[allow(clippy::too_many_arguments)]
 pub fn batch_service_time_tel(
     cfg: &SimConfig,
     policy: &mut dyn SpeculationPolicy,
     prompt_lens: &[usize],
+    classes: &[u8],
     start_t: f64,
     rng: &mut Pcg64,
     tel: &Telemetry,
@@ -250,14 +332,40 @@ pub fn batch_service_time_tel(
     // refunded at the end so the caller's stream is untouched)
     let mut accepted_rows: Vec<u32> = Vec::new();
     let mut draws = DrawBuffer::new();
+    // ragged-round scratch: per-live-row classes and chosen draft
+    // lengths, plus the feedback's per-row vectors (cycled by mem::take)
+    let mut live_classes: Vec<u8> = Vec::new();
+    let mut s_choice: Vec<usize> = Vec::new();
+    let mut fb_s_rows: Vec<u32> = Vec::new();
+    let mut fb_classes: Vec<u8> = Vec::new();
+    let classed = classes.iter().any(|&c| c != 0);
     while generated.iter().any(|&g| g < cfg.max_new_tokens) {
         let live = generated.iter().filter(|&&g| g < cfg.max_new_tokens).count();
-        let s = if may_speculate { policy.choose(live, 8) } else { 0 };
+        live_classes.clear();
+        for (i, &g) in generated.iter().enumerate() {
+            if g < cfg.max_new_tokens {
+                live_classes.push(classes.get(i).copied().unwrap_or(0));
+            }
+        }
+        if may_speculate {
+            policy.choose_ragged_into(&live_classes, 8, &mut s_choice);
+        } else {
+            s_choice.clear();
+            s_choice.resize(live, 0);
+        }
+        let s = s_choice.iter().copied().max().unwrap_or(0);
+        let ragged = s_choice.iter().any(|&si| si != s);
         if first_spec_len.is_none() {
             first_spec_len = Some(s);
         }
         let ctx = mean_prompt as usize + generated.iter().sum::<usize>() / b;
-        let rc = round_cost(cfg, b, s, ctx);
+        // the static batch keeps executing at its admitted width `b` even
+        // as rows freeze, so `b` is the padded lane count
+        let rc = if ragged {
+            round_cost_ragged(cfg, b, &s_choice, ctx)
+        } else {
+            round_cost(cfg, b, s, ctx)
+        };
         accepted_rows.clear();
         let mut committed = 0usize;
         if s == 0 {
@@ -268,20 +376,38 @@ pub fn batch_service_time_tel(
                 }
             }
         } else {
-            // SSM drafts sequentially: s single-token forwards
-            let acc = cfg.acceptance_at(start_t + t);
-            draws.ensure(rng, live * s);
-            for g in generated.iter_mut() {
+            // SSM drafts sequentially: up to s_i single-token forwards
+            // per row (a row at s_i = 0 rides the round non-speculative
+            // and still commits its verify token)
+            draws.ensure(rng, s_choice.iter().sum::<usize>());
+            let mut li = 0usize;
+            for (i, g) in generated.iter_mut().enumerate() {
                 if *g < cfg.max_new_tokens {
-                    let a = acc.sample(s, &mut draws);
+                    let acc = cfg
+                        .class_acceptance_at(classes.get(i).copied().unwrap_or(0), start_t + t);
+                    let a = acc.sample(s_choice[li], &mut draws);
                     accepted_rows.push(a as u32);
                     *g += a + 1;
                     committed += a + 1;
+                    li += 1;
                 }
             }
         }
         let t_round = start_t + t;
         t += rc;
+        let (draft, verify, accept) = if ragged {
+            round_phase_split_ragged(cfg, rc, b, &s_choice, ctx)
+        } else {
+            round_phase_split(cfg, rc, b, s, ctx)
+        };
+        fb_s_rows.clear();
+        if ragged {
+            fb_s_rows.extend(s_choice.iter().map(|&si| si as u32));
+        }
+        fb_classes.clear();
+        if classed {
+            fb_classes.extend_from_slice(&live_classes);
+        }
         if tel.active() {
             let kvb = kv_blocks_of(
                 cfg,
@@ -290,13 +416,22 @@ pub fn batch_service_time_tel(
                     .zip(generated.iter())
                     .map(|(&p, &g)| p + g.min(cfg.max_new_tokens)),
             );
-            // the static batch keeps executing at its admitted width `b`
-            // even as rows freeze, so `b` is the padded width too
-            tel.round(t_round, rc, epoch, live, b, queued, s, committed, &accepted_rows, kvb);
-            emit_round_phases(cfg, tel, t_round, rc, b, s, ctx);
+            tel.round(
+                t_round,
+                rc,
+                epoch,
+                live,
+                b,
+                queued,
+                s,
+                committed,
+                &accepted_rows,
+                &fb_s_rows,
+                kvb,
+            );
+            emit_phase_tiles(tel, t_round, draft, verify, accept);
         }
         if let Some(wf) = wf_out.as_deref_mut() {
-            let (draft, verify, accept) = round_phase_split(cfg, rc, b, s, ctx);
             wf.add_round_split(0.0, draft, verify, accept);
         }
         let fb = RoundFeedback {
@@ -308,9 +443,13 @@ pub fn batch_service_time_tel(
             accepted: std::mem::take(&mut accepted_rows),
             committed,
             round_time: rc,
+            s_rows: std::mem::take(&mut fb_s_rows),
+            classes: std::mem::take(&mut fb_classes),
         };
         policy.observe(&fb);
         accepted_rows = fb.accepted;
+        fb_s_rows = fb.s_rows;
+        fb_classes = fb.classes;
         let flushes = policy.drift_flushes();
         if flushes > drift_seen {
             drift_seen = flushes;
@@ -346,6 +485,28 @@ pub(crate) fn round_phase_split(
     (draft, verify, accept)
 }
 
+/// [`round_phase_split`] for a ragged round: the draft part is the
+/// shrinking-width sum of [`ragged_draft_cost`], verify is padded to the
+/// widest row, accept is the remainder.  The tiles still sum to `rc`
+/// exactly, because [`round_cost_ragged`] is built from the same terms.
+pub(crate) fn round_phase_split_ragged(
+    cfg: &SimConfig,
+    rc: f64,
+    b: usize,
+    s_rows: &[usize],
+    ctx: usize,
+) -> (f64, f64, f64) {
+    let s_max = s_rows.iter().copied().max().unwrap_or(0);
+    let draft = if s_max == 0 {
+        0.0
+    } else {
+        ragged_draft_cost(cfg, b, s_rows, ctx)
+    };
+    let verify = cfg.llm.t_verify(b, s_max, ctx);
+    let accept = (rc - draft - verify).max(0.0);
+    (draft, verify, accept)
+}
+
 /// Emit one simulated round's draft/verify/accept spans on `tel`, tiling
 /// `[t_round, t_round + rc]`.  Shared with the cluster mirror
 /// (`cluster::sim`).
@@ -359,6 +520,20 @@ pub(crate) fn emit_round_phases(
     ctx: usize,
 ) {
     let (draft, verify, accept) = round_phase_split(cfg, rc, b, s, ctx);
+    emit_phase_tiles(tel, t_round, draft, verify, accept);
+}
+
+/// Emit an already-decomposed round as draft/verify/accept spans tiling
+/// `[t_round, t_round + draft + verify + accept]` — the shared tail of
+/// [`emit_round_phases`], reused directly where the split was already
+/// computed (ragged rounds accrue it into waterfalls anyway).
+pub(crate) fn emit_phase_tiles(
+    tel: &Telemetry,
+    t_round: f64,
+    draft: f64,
+    verify: f64,
+    accept: f64,
+) {
     let mut pt = t_round;
     if draft > 0.0 {
         tel.phase(pt, draft, PhaseKind::Draft);
@@ -497,17 +672,38 @@ pub fn simulate_trace_admission_tel(
                 _ => None,
             };
             for w in &out.shed {
-                tel.admission(start, w.item.id, "shed", w.item.deadline, slack(w.item.deadline), w.deferred);
+                tel.admission(
+                    start,
+                    w.item.id,
+                    "shed",
+                    w.item.deadline,
+                    slack(w.item.deadline),
+                    w.deferred,
+                );
                 // a shed request's whole lifetime was queue wait
                 let mut wf = Waterfall::default();
                 wf.queue = start - w.item.send_at;
                 wf.deferred_rounds = w.deferred;
                 wf.seal(start - w.item.send_at);
-                tel.finish_attrib(start, w.item.id, 0, true, w.item.deadline.map(|d| d - start), Some(wf));
+                tel.finish_attrib(
+                    start,
+                    w.item.id,
+                    0,
+                    true,
+                    w.item.deadline.map(|d| d - start),
+                    Some(wf),
+                );
             }
             for (i, w) in out.queue.iter().enumerate() {
                 let verdict = if i < n_batch { "admit" } else { "defer" };
-                tel.admission(start, w.item.id, verdict, w.item.deadline, slack(w.item.deadline), w.deferred);
+                tel.admission(
+                    start,
+                    w.item.id,
+                    verdict,
+                    w.item.deadline,
+                    slack(w.item.deadline),
+                    w.deferred,
+                );
             }
         }
         let mut rest = out.queue;
@@ -520,6 +716,7 @@ pub fn simulate_trace_admission_tel(
         }
         epoch += 1;
         let prompt_lens: Vec<usize> = batch.iter().map(|w| w.item.prompt.ids.len()).collect();
+        let classes: Vec<u8> = batch.iter().map(|w| w.item.class).collect();
         // the shared latency body of this batch-to-completion batch:
         // prefill + per-round phase splits, identical for every member
         let mut body = Waterfall::default();
@@ -527,6 +724,7 @@ pub fn simulate_trace_admission_tel(
             cfg,
             policy,
             &prompt_lens,
+            &classes,
             start,
             &mut rng,
             tel,
@@ -626,6 +824,8 @@ pub fn simulate_trace_continuous_admission_tel(
         spec_at_admit: usize,
         deadline: Option<f64>,
         deferred: usize,
+        /// workload class tag (drives per-class acceptance + ragged `s`)
+        class: u8,
         /// accruing latency decomposition: every virtual-clock advance a
         /// live row sits through is charged to exactly one component, so
         /// the sealed waterfall tiles the DES latency with `other == 0`
@@ -646,9 +846,14 @@ pub fn simulate_trace_continuous_admission_tel(
     // the live batch past it trigger an epoch reshape
     let mut cur_bucket = 0usize;
     // round-scratch mirrors of the engine's arenas (see
-    // batch_service_time_tel): reused accepted buffer + bulk PRNG draws
+    // batch_service_time_tel): reused accepted buffer + bulk PRNG draws,
+    // plus the ragged-round class/draft-length buffers
     let mut accepted_rows: Vec<u32> = Vec::new();
     let mut draws = DrawBuffer::new();
+    let mut live_classes: Vec<u8> = Vec::new();
+    let mut s_choice: Vec<usize> = Vec::new();
+    let mut fb_s_rows: Vec<u32> = Vec::new();
+    let mut fb_classes: Vec<u8> = Vec::new();
     let mut drift_seen = policy.drift_flushes();
 
     while next < items.len() || !live.is_empty() || !waiting.is_empty() {
@@ -712,17 +917,38 @@ pub fn simulate_trace_continuous_admission_tel(
                     _ => None,
                 };
                 for w in &out.shed {
-                    tel.admission(t, w.item.id, "shed", w.item.deadline, slack(w.item.deadline), w.deferred);
+                    tel.admission(
+                        t,
+                        w.item.id,
+                        "shed",
+                        w.item.deadline,
+                        slack(w.item.deadline),
+                        w.deferred,
+                    );
                     // a shed request's whole lifetime was queue wait
                     let mut wf = Waterfall::default();
                     wf.queue = t - w.item.send_at;
                     wf.deferred_rounds = w.deferred;
                     wf.seal(t - w.item.send_at);
-                    tel.finish_attrib(t, w.item.id, 0, true, w.item.deadline.map(|d| d - t), Some(wf));
+                    tel.finish_attrib(
+                        t,
+                        w.item.id,
+                        0,
+                        true,
+                        w.item.deadline.map(|d| d - t),
+                        Some(wf),
+                    );
                 }
                 for (i, w) in out.queue.iter().enumerate() {
                     let verdict = if i < out.admit_n { "admit" } else { "defer" };
-                    tel.admission(t, w.item.id, verdict, w.item.deadline, slack(w.item.deadline), w.deferred);
+                    tel.admission(
+                        t,
+                        w.item.id,
+                        verdict,
+                        w.item.deadline,
+                        slack(w.item.deadline),
+                        w.deferred,
+                    );
                 }
             }
             waiting = out.queue.into();
@@ -750,6 +976,7 @@ pub fn simulate_trace_continuous_admission_tel(
                 spec_at_admit: 0,
                 deadline: w.item.deadline,
                 deferred: w.deferred,
+                class: w.item.class,
                 wf,
             });
             plen_sum += plen;
@@ -809,8 +1036,22 @@ pub fn simulate_trace_continuous_admission_tel(
         // --- one decode round over the live rows ---
         let b = live.len();
         let ctx = live.iter().map(|r| r.plen + r.generated).sum::<usize>() / b;
-        let s = if may_speculate { policy.choose(b, 8) } else { 0 };
-        let rc = round_cost(cfg, b, s, ctx);
+        live_classes.clear();
+        live_classes.extend(live.iter().map(|r| r.class));
+        let classed = live_classes.iter().any(|&c| c != 0);
+        if may_speculate {
+            policy.choose_ragged_into(&live_classes, 8, &mut s_choice);
+        } else {
+            s_choice.clear();
+            s_choice.resize(b, 0);
+        }
+        let s = s_choice.iter().copied().max().unwrap_or(0);
+        let ragged = s_choice.iter().any(|&si| si != s);
+        let rc = if ragged {
+            round_cost_ragged(cfg, b, &s_choice, ctx)
+        } else {
+            round_cost(cfg, b, s, ctx)
+        };
         accepted_rows.clear();
         let mut committed = 0usize;
         if s == 0 {
@@ -819,10 +1060,9 @@ pub fn simulate_trace_continuous_admission_tel(
                 committed += 1;
             }
         } else {
-            let acc = cfg.acceptance_at(t);
-            draws.ensure(&mut rng, b * s);
-            for row in live.iter_mut() {
-                let a = acc.sample(s, &mut draws);
+            draws.ensure(&mut rng, s_choice.iter().sum::<usize>());
+            for (row, &si) in live.iter_mut().zip(s_choice.iter()) {
+                let a = cfg.class_acceptance_at(row.class, t).sample(si, &mut draws);
                 accepted_rows.push(a as u32);
                 row.generated += a + 1;
                 committed += a + 1;
@@ -831,10 +1071,23 @@ pub fn simulate_trace_continuous_admission_tel(
         let t_round = t;
         t += rc;
         let accepted_total: usize = accepted_rows.iter().map(|&a| a as usize).sum();
+        let drafted: usize = if s == 0 { 0 } else { s_choice.iter().sum() };
         // every live row sits through this round: accrue its phase split
-        let (draft, verify, accept) = round_phase_split(cfg, rc, b, s, ctx);
+        let (draft, verify, accept) = if ragged {
+            round_phase_split_ragged(cfg, rc, b, &s_choice, ctx)
+        } else {
+            round_phase_split(cfg, rc, b, s, ctx)
+        };
         for row in live.iter_mut() {
             row.wf.add_round_split(0.0, draft, verify, accept);
+        }
+        fb_s_rows.clear();
+        if ragged {
+            fb_s_rows.extend(s_choice.iter().map(|&si| si as u32));
+        }
+        fb_classes.clear();
+        if classed {
+            fb_classes.extend_from_slice(&live_classes);
         }
         let fb = RoundFeedback {
             live: b,
@@ -843,6 +1096,8 @@ pub fn simulate_trace_continuous_admission_tel(
             accepted: std::mem::take(&mut accepted_rows),
             committed,
             round_time: rc,
+            s_rows: std::mem::take(&mut fb_s_rows),
+            classes: std::mem::take(&mut fb_classes),
         };
         policy.observe(&fb);
         let flushes = policy.drift_flushes();
@@ -870,19 +1125,34 @@ pub fn simulate_trace_continuous_admission_tel(
             width,
             queued: waiting.len(),
             s,
+            drafted,
             accepted: accepted_total,
             round_cost: rc,
             kv_blocks: kvb,
         });
         if tel.active() {
-            tel.round(t_round, rc, epoch, b, width, waiting.len(), s, committed, &fb.accepted, kvb);
-            emit_round_phases(cfg, tel, t_round, rc, b, s, ctx);
+            tel.round(
+                t_round,
+                rc,
+                epoch,
+                b,
+                width,
+                waiting.len(),
+                s,
+                committed,
+                &fb.accepted,
+                &fb.s_rows,
+                kvb,
+            );
+            emit_phase_tiles(tel, t_round, draft, verify, accept);
             if tel.tracing() {
                 tel.policy_fit(t, policy.snapshot());
             }
         }
-        // reclaim the feedback's accepted buffer for the next round
+        // reclaim the feedback's per-row buffers for the next round
         accepted_rows = fb.accepted;
+        fb_s_rows = fb.s_rows;
+        fb_classes = fb.classes;
 
         // --- retire finished rows immediately, freeing capacity ---
         let mut i = 0;
@@ -1025,6 +1295,7 @@ mod tests {
                 id: i,
                 send_at: 0.0,
                 deadline: None,
+                class: 0,
                 prompt: pool()[0].clone(),
             })
             .collect();

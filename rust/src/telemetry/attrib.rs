@@ -151,15 +151,18 @@ impl Waterfall {
 
 /// Integer-exact slot accounting for one decode round.
 ///
-/// A round at executing width `width` (the bucket) and speculation
-/// length `s` runs `width * (s + 1)` verify slots.  They split into:
+/// A round at executing width `width` (the bucket) and executed
+/// speculation length `s` (the widest per-row choice on a ragged round)
+/// runs `width * (s + 1)` verify slots.  They split into:
 ///
 /// * `committed` — tokens that advanced a sequence (accepted drafts
 ///   plus the one guaranteed token per live row); goodput;
-/// * `rejected` — drafted-but-rejected tokens (`live*s - accepted`);
-///   the mispeculation waste the paper's Sec. 3.3 prices;
+/// * `rejected` — drafted-but-rejected tokens (`drafted - accepted`,
+///   where `drafted = Σ s_i`, `= live*s` uniform); the mispeculation
+///   waste the paper's Sec. 3.3 prices;
 /// * `padding` — slots executed for empty lanes
-///   (`(width - live) * (s + 1)`); bucket-padding slack.
+///   (`(width - live) * (s + 1)`) plus, on ragged rounds, the intra-row
+///   slack of rows that drafted less than `s` (`Σ (s - s_i)`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct RoundWaste {
     pub width: usize,
@@ -171,22 +174,38 @@ pub struct RoundWaste {
 }
 
 impl RoundWaste {
-    /// Split a round's slots.  `accepted` is the summed accepted draft
-    /// count across rows (0 for a plain `s == 0` round, where the
+    /// Split a uniform round's slots.  `accepted` is the summed accepted
+    /// draft count across rows (0 for a plain `s == 0` round, where the
     /// split degenerates to `committed = live`, `rejected = 0`).
     ///
     /// Panics (debug) if `live > width` or `accepted > live * s` —
     /// both would mean the caller's bookkeeping is broken.
     pub fn from_round(width: usize, live: usize, s: usize, accepted: usize) -> RoundWaste {
+        RoundWaste::from_ragged_round(width, live, s, live * s, accepted)
+    }
+
+    /// Split a ragged round's slots: the round executed at the widest
+    /// per-row choice `s` but only `drafted = Σ s_i` draft tokens were
+    /// requested, so `Σ (s - s_i)` of the live lanes' slots are padding
+    /// alongside the vacant-lane slack.  With `drafted == live * s`
+    /// this is exactly [`RoundWaste::from_round`].
+    pub fn from_ragged_round(
+        width: usize,
+        live: usize,
+        s: usize,
+        drafted: usize,
+        accepted: usize,
+    ) -> RoundWaste {
         debug_assert!(live <= width, "live {live} > width {width}");
-        debug_assert!(accepted <= live * s, "accepted {accepted} > live*s {}", live * s);
+        debug_assert!(drafted <= live * s, "drafted {drafted} > live*s {}", live * s);
+        debug_assert!(accepted <= drafted, "accepted {accepted} > drafted {drafted}");
         RoundWaste {
             width,
             live,
             s,
             committed: accepted + live,
-            rejected: live * s - accepted,
-            padding: (width - live) * (s + 1),
+            rejected: drafted - accepted,
+            padding: width * (s + 1) - live - drafted,
         }
     }
 
@@ -405,6 +424,38 @@ mod tests {
         assert_eq!((f.rejected, f.padding), (0, 0));
         assert_eq!(f.committed, f.slots());
         assert!(f.tiles());
+    }
+
+    #[test]
+    fn ragged_round_waste_generalizes_the_tiling_identity() {
+        // width 8, live 6, per-row s = [3, 3, 2, 1, 0, 0] -> s_max 3,
+        // drafted = 9; accepted per row [3, 1, 2, 0, 0, 0] = 6
+        let w = RoundWaste::from_ragged_round(8, 6, 3, 9, 6);
+        assert_eq!(w.committed, 12); // 6 accepted + 6 bonus
+        assert_eq!(w.rejected, 3); // 9 drafted - 6 accepted
+        // slots 8*4 = 32; padding = 2 vacant lanes * 4 slots, plus the
+        // intra-row slack Σ(s_max - s_i) = 0+0+1+2+3+3 = 9
+        assert_eq!(w.padding, 17);
+        assert_eq!(w.slots(), 32);
+        assert!(w.tiles());
+        // a uniform per-row vector reduces to from_round exactly
+        assert_eq!(
+            RoundWaste::from_ragged_round(8, 6, 3, 18, 6),
+            RoundWaste::from_round(8, 6, 3, 6)
+        );
+        // rows finishing mid-round: a row drafts s_i tokens but its
+        // budget lets it commit fewer — the driver clips its accepted
+        // count, the clipped drafts surface as rejected slots, and the
+        // identity still tiles (width 4, live 2, s = [3, 3], one row
+        // commits all 3, the finishing row only 1)
+        let fin = RoundWaste::from_ragged_round(4, 2, 3, 6, 4);
+        assert_eq!((fin.committed, fin.rejected, fin.padding), (6, 2, 8));
+        assert!(fin.tiles());
+        // all rows finish immediately (s_max > 0 but every draft
+        // rejected): the round still tiles with pure bonus commits
+        let stall = RoundWaste::from_ragged_round(4, 3, 2, 4, 0);
+        assert_eq!((stall.committed, stall.rejected, stall.padding), (3, 4, 5));
+        assert!(stall.tiles());
     }
 
     #[test]

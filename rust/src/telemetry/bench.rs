@@ -210,6 +210,7 @@ mod tests {
                 width: 2,
                 queued: 0,
                 s: 3,
+                drafted: 6,
                 accepted: 4,
                 round_cost: 0.5,
                 kv_blocks: 0,
@@ -221,6 +222,7 @@ mod tests {
                 width: 2,
                 queued: 0,
                 s: 3,
+                drafted: 6,
                 accepted: 2,
                 round_cost: 0.5,
                 kv_blocks: 0,

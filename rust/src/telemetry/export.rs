@@ -95,8 +95,10 @@ pub fn chrome_trace(events: &[Event]) -> Json {
                 width,
                 queued,
                 s,
+                drafted,
                 committed,
                 accepted,
+                s_rows,
                 kv_blocks,
             } => {
                 out.push(trace_record(
@@ -110,11 +112,18 @@ pub fn chrome_trace(events: &[Event]) -> Json {
                         ("width", Json::Num(*width as f64)),
                         ("queued", Json::Num(*queued as f64)),
                         ("s", Json::Num(*s as f64)),
+                        ("drafted", Json::Num(*drafted as f64)),
                         ("committed", Json::Num(*committed as f64)),
                         (
                             "accepted",
                             Json::Arr(
                                 accepted.iter().map(|&a| Json::Num(a as f64)).collect(),
+                            ),
+                        ),
+                        (
+                            "s_rows",
+                            Json::Arr(
+                                s_rows.iter().map(|&si| Json::Num(si as f64)).collect(),
                             ),
                         ),
                         ("kv_blocks", Json::Num(*kv_blocks as f64)),
@@ -315,7 +324,7 @@ mod tests {
 
     fn sample_handle() -> Telemetry {
         let t = Telemetry::new(TelemetryMode::Trace);
-        t.round(0.0, 0.10, 1, 2, 4, 1, 3, 5, &[2, 3], 8);
+        t.round(0.0, 0.10, 1, 2, 4, 1, 3, 5, &[2, 3], &[2, 3], 8);
         t.phase(0.00, 0.04, PhaseKind::Draft);
         t.phase(0.04, 0.05, PhaseKind::Verify);
         t.phase(0.09, 0.01, PhaseKind::Accept);

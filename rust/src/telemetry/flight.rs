@@ -285,7 +285,9 @@ impl FlightRecorder {
     }
 
     /// One decode round.  Counts are clamped to 16 bits each (widths
-    /// and spec lengths are tiny), epoch/kv to their own words.
+    /// and spec lengths are tiny), epoch to its own word; kv_blocks and
+    /// the round's drafted total (`Σ s_i`, the ragged waste input) share
+    /// a word as 32-bit halves.
     #[allow(clippy::too_many_arguments)]
     #[inline]
     pub fn record_round(
@@ -299,10 +301,12 @@ impl FlightRecorder {
         s: usize,
         committed: usize,
         accepted: usize,
+        drafted: usize,
         kv_blocks: usize,
         dur: f64,
     ) {
         let pack16 = |v: usize| (v.min(0xFFFF)) as u64;
+        let pack32 = |v: usize| (v.min(0xFFFF_FFFF)) as u64;
         self.write(
             t,
             shard,
@@ -310,8 +314,8 @@ impl FlightRecorder {
             [
                 epoch as u64,
                 pack16(live) | (pack16(width) << 16) | (pack16(s) << 32) | (pack16(queued) << 48),
-                (committed as u64) | ((accepted as u64) << 32),
-                kv_blocks as u64,
+                pack32(committed) | (pack32(accepted) << 32),
+                pack32(kv_blocks) | (pack32(drafted) << 32),
                 dur.to_bits(),
             ],
         );
@@ -547,9 +551,13 @@ pub fn records_to_events(records: &[FlightRecord]) -> Vec<Event> {
                     width: ((p[1] >> 16) & 0xFFFF) as usize,
                     queued: ((p[1] >> 48) & 0xFFFF) as usize,
                     s: ((p[1] >> 32) & 0xFFFF) as usize,
+                    drafted: (p[3] >> 32) as usize,
                     committed: (p[2] & 0xFFFF_FFFF) as usize,
                     accepted: Vec::new(),
-                    kv_blocks: p[3] as usize,
+                    // the ring stores the drafted total, not the per-row
+                    // vector (fixed-width slots); empty = not recoverable
+                    s_rows: Vec::new(),
+                    kv_blocks: (p[3] & 0xFFFF_FFFF) as usize,
                 },
                 FlightKind::Admission => EventKind::Admission {
                     id: p[0],
@@ -603,7 +611,7 @@ mod tests {
     #[test]
     fn ring_records_and_decodes_without_loss_below_capacity() {
         let fr = FlightRecorder::new(64, "/tmp/specbatch_flight_unit");
-        fr.record_round(1.0, 0, 3, 5, 8, 2, 4, 16, 11, 40, 0.025);
+        fr.record_round(1.0, 0, 3, 5, 8, 2, 4, 16, 11, 14, 40, 0.025);
         fr.record_admission(1.1, 0, 42, "defer", Some(2.0), Some(-0.25), 3);
         fr.record_route(1.2, 2, 42);
         fr.record_finish(1.3, 0, 42, 128, false, Some(0.5));
@@ -618,12 +626,14 @@ mod tests {
                 width,
                 s,
                 queued,
+                drafted,
                 committed,
                 kv_blocks,
                 ..
             } => {
                 assert_eq!((*live, *width, *s, *queued), (5, 8, 4, 2));
                 assert_eq!((*committed, *kv_blocks), (16, 40));
+                assert_eq!(*drafted, 14, "drafted rides the kv word's high half");
                 assert!((evs[0].dur - 0.025).abs() < 1e-12);
             }
             other => panic!("expected round, got {other:?}"),

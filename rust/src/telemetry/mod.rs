@@ -164,10 +164,15 @@ pub enum EventKind {
         /// ([`attrib::RoundWaste`]) recoverable from the event alone
         width: usize,
         queued: usize,
+        /// executed (widest) speculation length
         s: usize,
+        /// draft tokens requested over the live rows (`Σ s_i`)
+        drafted: usize,
         committed: usize,
         /// per-row accepted draft counts (empty for plain rounds)
         accepted: Vec<u32>,
+        /// per-row drafted lengths of a ragged round (empty = uniform)
+        s_rows: Vec<u32>,
         kv_blocks: usize,
     },
     /// a sub-span of the enclosing round
@@ -227,8 +232,10 @@ impl Event {
                 width,
                 queued,
                 s,
+                drafted,
                 committed,
                 accepted,
+                s_rows,
                 kv_blocks,
             } => {
                 pairs.push(("ev", Json::Str("round".into())));
@@ -237,10 +244,15 @@ impl Event {
                 pairs.push(("width", Json::Num(*width as f64)));
                 pairs.push(("queued", Json::Num(*queued as f64)));
                 pairs.push(("s", Json::Num(*s as f64)));
+                pairs.push(("drafted", Json::Num(*drafted as f64)));
                 pairs.push(("committed", Json::Num(*committed as f64)));
                 pairs.push((
                     "accepted",
                     Json::Arr(accepted.iter().map(|&a| Json::Num(a as f64)).collect()),
+                ));
+                pairs.push((
+                    "s_rows",
+                    Json::Arr(s_rows.iter().map(|&si| Json::Num(si as f64)).collect()),
                 ));
                 pairs.push(("kv_blocks", Json::Num(*kv_blocks as f64)));
             }
@@ -628,7 +640,10 @@ impl Telemetry {
     /// committed/accepted totals, the waste split (rejected drafts /
     /// padding slack, [`attrib::RoundWaste`]) and the round-seconds
     /// histogram — so `summary` mode aggregates without storing
-    /// events.  `width` is the executing bucket (`>= live`).
+    /// events.  `width` is the executing bucket (`>= live`); `s` is the
+    /// executed (widest) speculation length; `s_rows` carries the
+    /// per-live-row drafted lengths of a ragged round (empty = uniform,
+    /// every row drafted `s`).
     #[allow(clippy::too_many_arguments)]
     pub fn round(
         &self,
@@ -641,9 +656,17 @@ impl Telemetry {
         s: usize,
         committed: usize,
         accepted: &[u32],
+        s_rows: &[u32],
         kv_blocks: usize,
     ) {
         let accepted_total: u64 = accepted.iter().map(|&a| a as u64).sum();
+        // draft tokens requested this round: Σ s_i on ragged rounds,
+        // live * s on uniform ones (identical when s_rows broadcasts s)
+        let drafted: u64 = if s_rows.is_empty() {
+            (live * s) as u64
+        } else {
+            s_rows.iter().map(|&si| si as u64).sum()
+        };
         if let Some(fl) = &self.flight {
             fl.record_round(
                 t,
@@ -655,6 +678,7 @@ impl Telemetry {
                 s,
                 committed,
                 accepted_total as usize,
+                drafted as usize,
                 kv_blocks,
                 dur,
             );
@@ -667,11 +691,13 @@ impl Telemetry {
         self.counter("specbatch_drafts_accepted_total", accepted_total);
         self.counter(
             "specbatch_tokens_rejected_total",
-            (live * s) as u64 - accepted_total.min((live * s) as u64),
+            drafted - accepted_total.min(drafted),
         );
+        // padding generalizes to vacant-lane slack + intra-row
+        // raggedness: committed + rejected + padding == width * (s + 1)
         self.counter(
             "specbatch_slots_padding_total",
-            (width.saturating_sub(live) * (s + 1)) as u64,
+            (width * (s + 1)) as u64 - ((live as u64 + drafted).min((width * (s + 1)) as u64)),
         );
         self.observe("specbatch_round_seconds", dur);
         self.gauge("specbatch_live_rows", live as f64);
@@ -685,8 +711,10 @@ impl Telemetry {
                 width,
                 queued,
                 s,
+                drafted: drafted as usize,
                 committed,
                 accepted: accepted.to_vec(),
+                s_rows: s_rows.to_vec(),
                 kv_blocks,
             },
         );
@@ -892,7 +920,7 @@ mod tests {
         t.counter("c", 3);
         t.gauge("g", 1.0);
         t.observe("h", 0.5);
-        t.round(0.0, 0.1, 1, 2, 2, 0, 3, 4, &[1, 2], 0);
+        t.round(0.0, 0.1, 1, 2, 2, 0, 3, 4, &[1, 2], &[], 0);
         t.finish(0.0, 7, 16, false, None);
         assert!(t.registry().counters.is_empty());
         assert!(t.events().is_empty());
@@ -905,7 +933,7 @@ mod tests {
         let t = Telemetry::new(TelemetryMode::Summary);
         assert!(t.enabled());
         assert!(!t.tracing());
-        t.round(0.0, 0.01, 1, 4, 8, 2, 3, 8, &[2, 1, 3, 2], 12);
+        t.round(0.0, 0.01, 1, 4, 8, 2, 3, 8, &[2, 1, 3, 2], &[], 12);
         t.finish(0.1, 1, 32, false, Some(0.5));
         t.finish(0.2, 2, 0, true, Some(-0.1));
         let reg = t.registry();
@@ -916,6 +944,14 @@ mod tests {
         // → padding (8-4)*(3+1) = 16
         assert_eq!(reg.counters["specbatch_tokens_rejected_total"], 4);
         assert_eq!(reg.counters["specbatch_slots_padding_total"], 16);
+        // a ragged round generalizes the split: drafted Σs_i = 6 over
+        // rows that drafted (3,1,2,0) under an executed s of 3, so
+        // rejected = 6 - 5 = 1 and padding picks up the intra-row
+        // raggedness too: 8*(3+1) - 4 - 6 = 22
+        t.round(0.02, 0.01, 1, 4, 8, 2, 3, 9, &[3, 1, 1, 0], &[3, 1, 2, 0], 12);
+        let reg = t.registry();
+        assert_eq!(reg.counters["specbatch_tokens_rejected_total"], 4 + 1);
+        assert_eq!(reg.counters["specbatch_slots_padding_total"], 16 + 22);
         assert_eq!(reg.counters["specbatch_requests_finished_total"], 1);
         assert_eq!(reg.counters["specbatch_requests_shed_total"], 1);
         assert_eq!(reg.counters["specbatch_slo_missed_total"], 1);
@@ -928,7 +964,7 @@ mod tests {
     fn trace_mode_records_shard_tagged_events() {
         let t = Telemetry::new(TelemetryMode::Trace);
         let s1 = t.for_shard(1);
-        t.round(1.0, 0.5, 1, 2, 2, 0, 3, 4, &[1, 2], 0);
+        t.round(1.0, 0.5, 1, 2, 2, 0, 3, 4, &[1, 2], &[], 0);
         s1.phase(1.0, 0.2, PhaseKind::Draft);
         s1.route(1.2, 9, 3, &[0.5, 0.1, 0.9, 0.0]);
         let ev = t.events();
@@ -1042,7 +1078,7 @@ mod tests {
         let t = Telemetry::disabled().with_flight(fr.clone());
         assert!(!t.enabled(), "registry/event sink stay off");
         assert!(t.active(), "but the handle is active for the ring");
-        t.round(0.5, 0.01, 1, 2, 4, 0, 3, 7, &[2, 3], 6);
+        t.round(0.5, 0.01, 1, 2, 4, 0, 3, 7, &[2, 3], &[], 6);
         t.finish(0.6, 9, 16, false, Some(0.1));
         t.for_shard(1).route(0.7, 9, 1, &[0.1, 0.2]);
         assert!(t.registry().counters.is_empty());

@@ -136,6 +136,10 @@ pub struct TraceItem {
     pub send_at: f64,
     /// absolute deadline in seconds from trace start (None = no SLO)
     pub deadline: Option<f64>,
+    /// workload class tag (0 = default).  Classes partition requests by
+    /// acceptance regime — e.g. code-completion vs chat — and feed the
+    /// per-class acceptance windows of the ragged speculation policy
+    pub class: u8,
     pub prompt: Prompt,
 }
 
@@ -172,6 +176,7 @@ impl Trace {
                 id,
                 send_at: t,
                 deadline: None,
+                class: 0,
                 prompt,
             });
         }
@@ -191,6 +196,30 @@ impl Trace {
                     id: i.id,
                     send_at: i.send_at,
                     deadline: Some(i.send_at + slo.sample(&mut rng)),
+                    class: i.class,
+                    prompt: i.prompt.clone(),
+                })
+                .collect(),
+        }
+    }
+
+    /// Tag requests with workload classes round-robin by id
+    /// (`class = id % n_classes`).  Deterministic and schedule-preserving:
+    /// ids, send times, deadlines, and prompts are untouched, so a tagged
+    /// trace replays the identical request sequence (the paper's
+    /// one-sequence rule).  Used by the mixed-domain scenario where two
+    /// acceptance regimes share one batch.
+    pub fn with_classes_alternating(&self, n_classes: u8) -> Trace {
+        assert!(n_classes > 0, "n_classes must be >= 1");
+        Trace {
+            items: self
+                .items
+                .iter()
+                .map(|i| TraceItem {
+                    id: i.id,
+                    send_at: i.send_at,
+                    deadline: i.deadline,
+                    class: (i.id % n_classes as u64) as u8,
                     prompt: i.prompt.clone(),
                 })
                 .collect(),
@@ -222,6 +251,7 @@ impl Trace {
                     id: i.id,
                     send_at: i.send_at * factor,
                     deadline: i.deadline.map(|d| d * factor),
+                    class: i.class,
                     prompt: i.prompt.clone(),
                 })
                 .collect(),
@@ -424,6 +454,38 @@ mod tests {
         // pattern-pegged budgets read the intense phase
         let slo6 = SloSpec::of_pattern(&TrafficPattern::fig6(), 10.0, 2.0);
         assert!((slo6.p50 - 2.0).abs() < 1e-12);
+    }
+
+    /// Class tagging rides on top of the schedule exactly like deadlines:
+    /// the base schedule is untouched, tags alternate by id, and tags
+    /// survive deadline attachment and time scaling.
+    #[test]
+    fn class_tags_ride_on_top_of_the_schedule() {
+        let p = TrafficPattern::Stationary {
+            interval: 0.3,
+            cv: 1.0,
+        };
+        let base = Trace::generate(&p, &pool(), 50, 13);
+        assert!(base.items.iter().all(|i| i.class == 0));
+        let tagged = base.with_classes_alternating(2);
+        for (b, t) in base.items.iter().zip(&tagged.items) {
+            assert_eq!(b.id, t.id);
+            assert_eq!(b.send_at, t.send_at);
+            assert_eq!(b.prompt.ids, t.prompt.ids);
+            assert_eq!(t.class, (t.id % 2) as u8);
+        }
+        // tags survive deadline attachment and time scaling
+        let slo = SloSpec::new(2.0, 2.0);
+        let chained = tagged.with_deadlines(&slo, 7).time_scaled(0.5);
+        for (t, c) in tagged.items.iter().zip(&chained.items) {
+            assert_eq!(t.class, c.class);
+        }
+        // n_classes = 1 is the identity tagging
+        assert!(base
+            .with_classes_alternating(1)
+            .items
+            .iter()
+            .all(|i| i.class == 0));
     }
 
     #[test]

@@ -112,6 +112,7 @@ fn assert_round_waste_tiles(tel: &Telemetry, what: &str) -> usize {
             live,
             width,
             s,
+            drafted,
             committed,
             accepted,
             ..
@@ -122,11 +123,15 @@ fn assert_round_waste_tiles(tel: &Telemetry, what: &str) -> usize {
         let acc: usize = accepted.iter().map(|&a| a as usize).sum();
         assert!(*live <= *width, "{what}: live {live} > width {width}");
         assert!(
-            acc <= live * s,
-            "{what}: accepted {acc} > live*s = {}",
+            *drafted <= live * s,
+            "{what}: drafted {drafted} > live*s = {}",
             live * s
         );
-        let waste = RoundWaste::from_round(*width, *live, *s, acc);
+        assert!(
+            acc <= *drafted,
+            "{what}: accepted {acc} > drafted = {drafted}"
+        );
+        let waste = RoundWaste::from_ragged_round(*width, *live, *s, *drafted, acc);
         assert!(
             waste.tiles(),
             "{what}: round at t={:.6}: {} + {} + {} != {} slots",

@@ -17,21 +17,24 @@
 //! * the DES and cluster-DES replay bit-identically across reruns at
 //!   every pinned seed.
 
+use std::cell::Cell;
+use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
 use specbatch::batcher::{BatchRequest, BatcherConfig, ContinuousBatcher};
-use specbatch::cluster::sim::simulate_trace_cluster;
 use specbatch::cluster::build_router;
+use specbatch::cluster::sim::simulate_trace_cluster;
 use specbatch::config::{PolicySpec, RouterSpec};
 use specbatch::engine::{Engine, EngineConfig};
+use specbatch::kvcache::KvLayout;
 use specbatch::policy::{Fixed, NoSpec, SpeculationPolicy};
+use specbatch::scheduler::Lut;
 use specbatch::server::{spawn_server, Backend, SchedulingMode, ServerMsg, ServerRequest};
 use specbatch::simulator::{simulate_trace_continuous, AcceptanceProcess};
 use specbatch::testkit::harness::{
     const_prompt_pool, paper_sim_config, stationary_trace, stub_server_cfg,
 };
 use specbatch::testkit::stub::StubSpec;
-use specbatch::kvcache::KvLayout;
 use specbatch::util::prng::{DrawBuffer, Pcg64};
 
 const SEEDS: [u64; 3] = [2, 3, 4];
@@ -141,6 +144,14 @@ fn static_engine_matches_the_python_goldens_at_every_pinned_seed() {
 /// Drive the continuous batcher over a seeded arrival schedule and
 /// return every finished request's `(id, tokens)`, sorted by id.
 fn run_batcher(seed: u64, layout: KvLayout) -> Vec<(u64, Vec<i32>)> {
+    run_batcher_with(seed, layout, &mut Fixed(3))
+}
+
+fn run_batcher_with(
+    seed: u64,
+    layout: KvLayout,
+    policy: &mut dyn SpeculationPolicy,
+) -> Vec<(u64, Vec<i32>)> {
     let mut e = Engine::stub(
         StubSpec::default(),
         EngineConfig {
@@ -149,7 +160,6 @@ fn run_batcher(seed: u64, layout: KvLayout) -> Vec<(u64, Vec<i32>)> {
         },
     )
     .unwrap();
-    let mut policy = Fixed(3);
     let mut batcher = ContinuousBatcher::new(BatcherConfig {
         max_batch: 3,
         max_new_tokens: 10,
@@ -172,7 +182,7 @@ fn run_batcher(seed: u64, layout: KvLayout) -> Vec<(u64, Vec<i32>)> {
                 true
             }
         });
-        for f in batcher.step(&mut e, &mut policy, step as f64 * 1e-3).unwrap() {
+        for f in batcher.step(&mut e, policy, step as f64 * 1e-3).unwrap() {
             finished.push((f.id, f.tokens));
         }
         step += 1;
@@ -231,6 +241,7 @@ fn threaded_stub_server_outputs_follow_the_reference_chain() {
                     prompt: p.clone(),
                     sent_at: 0.0,
                     deadline: None,
+                    class: 0,
                 }))
                 .expect("send");
         }
@@ -332,5 +343,160 @@ fn des_and_cluster_des_replay_bit_identically_at_every_pinned_seed() {
             cluster(&cfg, &trace),
             "seed {seed}: cluster rerun"
         );
+    }
+}
+
+// ------------------------------------------- ragged-round equivalence
+
+/// Deterministic per-row, per-round speculation schedule: row `i` of
+/// round `r` drafts `(r + i) % 4` tokens (capped at `max_s`).  Adjacent
+/// rows differ, so every round with two or more live rows is genuinely
+/// ragged, and the schedule depends only on `(round, row)` — never on
+/// sampled outcomes — so reruns see the same per-row `s` vectors.
+struct RaggedSchedule {
+    round: Cell<usize>,
+}
+
+impl RaggedSchedule {
+    fn new() -> Self {
+        RaggedSchedule {
+            round: Cell::new(0),
+        }
+    }
+}
+
+impl SpeculationPolicy for RaggedSchedule {
+    fn choose(&self, _live: usize, max_s: usize) -> usize {
+        max_s.min(3)
+    }
+
+    fn choose_ragged_into(&self, rows: &[u8], max_s: usize, out: &mut Vec<usize>) {
+        let r = self.round.get();
+        self.round.set(r + 1);
+        out.clear();
+        out.extend((0..rows.len()).map(|i| ((r + i) % 4).min(max_s)));
+    }
+
+    fn label(&self) -> String {
+        "ragged-schedule".into()
+    }
+}
+
+/// Speculation is lossless row by row, so a ragged per-row schedule must
+/// leave every output **bit-identical** to the uniform policies and the
+/// Python goldens — through the static engine AND the continuous
+/// batcher (where admissions and retirement reshuffle rows mid-flight).
+#[test]
+fn ragged_schedules_keep_every_output_on_the_reference_chain() {
+    for seed in SEEDS {
+        // static engine: ragged == goldens == uniform
+        let prompts = prompts_for(seed);
+        let mut policy = RaggedSchedule::new();
+        let mut e = stub_engine();
+        let out = e.generate_batch(&prompts, 12, &mut policy).unwrap();
+        assert_eq!(out.tokens, python_goldens(seed), "seed {seed}: engine");
+
+        // continuous batcher: ragged matches the uniform Fixed(3) run
+        // token for token, id for id, on both KV layouts
+        for layout in [KvLayout::Dense, KvLayout::Paged] {
+            let ragged = run_batcher_with(seed, layout, &mut RaggedSchedule::new());
+            assert_eq!(
+                ragged,
+                run_batcher(seed, layout),
+                "seed {seed} {layout:?}: ragged batcher left the chain"
+            );
+            // and the ragged run itself replays byte-identically
+            assert_eq!(
+                ragged,
+                run_batcher_with(seed, layout, &mut RaggedSchedule::new()),
+                "seed {seed} {layout:?}: ragged rerun"
+            );
+        }
+    }
+}
+
+/// Class-tagged requests through the threaded stub server with the
+/// online model-based policy: the `class` field must ride the
+/// request → batcher → engine-slot plumbing without perturbing outputs
+/// (whatever per-row lengths the policy picks, tokens stay on chain).
+#[test]
+fn threaded_server_with_class_tagged_requests_stays_on_the_chain() {
+    for seed in SEEDS {
+        let cfg = stub_server_cfg(SchedulingMode::Continuous, KvLayout::default_layout());
+        let max_new = cfg.max_new_tokens;
+        let lut = Lut::new(BTreeMap::from([(1, 4), (2, 3), (4, 2)])).unwrap();
+        let handle = spawn_server(
+            Backend::Stub(StubSpec::default()),
+            cfg,
+            PolicySpec::ModelBased,
+            Some(lut),
+            Instant::now(),
+        );
+        handle.wait_ready(Duration::from_secs(30)).expect("ready");
+        let prompts = prompts_for(seed);
+        for (i, p) in prompts.iter().enumerate() {
+            handle
+                .requests
+                .send(ServerMsg::Request(ServerRequest {
+                    route_hop: 0.0,
+                    id: i as u64,
+                    prompt: p.clone(),
+                    sent_at: 0.0,
+                    deadline: None,
+                    // two classes interleaved inside one batch
+                    class: (i % 2) as u8,
+                }))
+                .expect("send");
+        }
+        let mut got = 0usize;
+        while got < prompts.len() {
+            let resp = handle
+                .responses
+                .recv_timeout(Duration::from_secs(30))
+                .expect("response");
+            assert!(!resp.shed, "seed {seed}: FIFO never sheds");
+            let expected = chain_ref(*prompts[resp.id as usize].last().unwrap(), max_new, 64);
+            assert_eq!(
+                resp.tokens, expected,
+                "seed {seed}: class-tagged request {} left the chain",
+                resp.id
+            );
+            got += 1;
+        }
+        handle.shutdown().expect("shutdown");
+    }
+}
+
+/// The DES under the same deterministic ragged schedule: rounds must
+/// actually be ragged (`drafted < live * s_max`) and the whole run —
+/// per-request records and the round timeline — must replay
+/// bit-identically.
+#[test]
+fn des_replays_bit_identically_under_a_ragged_schedule() {
+    for seed in SEEDS {
+        let cfg = paper_sim_config(seed);
+        let trace = stationary_trace(&const_prompt_pool(12), 60, seed, 0.05, 1.0)
+            .with_classes_alternating(2);
+
+        let run = || {
+            let mut policy = RaggedSchedule::new();
+            simulate_trace_continuous(&cfg, &mut policy, &trace)
+        };
+        let (rec_a, rounds_a) = run();
+        let (rec_b, rounds_b) = run();
+        assert_eq!(rec_a.records(), rec_b.records(), "seed {seed}: records rerun");
+        assert_eq!(rounds_a, rounds_b, "seed {seed}: rounds rerun");
+
+        let ragged = rounds_a
+            .iter()
+            .filter(|r| r.s > 0 && r.drafted < r.live * r.s)
+            .count();
+        assert!(
+            ragged > 0,
+            "seed {seed}: schedule never produced a ragged round"
+        );
+        for r in rounds_a.iter().filter(|r| r.s > 0) {
+            assert!(r.drafted <= r.live * r.s, "seed {seed}: rectangle violated");
+        }
     }
 }

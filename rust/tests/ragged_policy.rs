@@ -1,0 +1,208 @@
+//! The ragged-speculation payoff scenario (ROADMAP item 1) plus the
+//! uniform-regime identity guarantee.
+//!
+//! **Payoff**: a mixed-domain trace interleaves two acceptance regimes
+//! in one continuous batch — class 0 (3 of every 4 requests) drafts
+//! land often (geometric q = 0.75), class 1 almost never (q = 0.05).
+//! No uniform speculation length serves both: any `s` that helps
+//! class 0 burns draft and verify slots on class 1, and `s` small
+//! enough to protect class 1 starves class 0.  The ragged model-based
+//! policy learns a private acceptance curve per class and chooses
+//! per-row lengths (class 0 ≈ 2, class 1 = 0 at steady state), which
+//! must strictly beat EVERY uniform policy on mean per-token latency.
+//!
+//! The scenario is decode-dominated on purpose: 600-token prompts and
+//! 512 generated tokens keep the verify pass memory-bound (KV reads
+//! dominate) across the `s` range class 0 uses, so per-row draft
+//! lengths — not prefill or the padded verify width — decide the
+//! margin.
+//!
+//! **Identity**: a batch where every row shares one class (ANY class
+//! value) must reproduce the classless uniform policy bit for bit —
+//! same records, same round timeline.
+
+use std::collections::BTreeMap;
+
+use specbatch::dataset::Prompt;
+use specbatch::policy::{Fixed, ModelBased, ModelBasedConfig, NoSpec, SpeculationPolicy};
+use specbatch::scheduler::Lut;
+use specbatch::simulator::{
+    simulate_trace_continuous, AcceptanceProcess, CostModel, GpuProfile, ModelProfile, SimConfig,
+};
+use specbatch::traffic::{Trace, TrafficPattern};
+
+const PROMPT_LEN: usize = 600;
+const N_REQUESTS: usize = 100;
+const MAX_NEW: usize = 512;
+const INTERVAL: f64 = 1.3;
+
+/// OPT-6.7B target + OPT-1.3B draft on RTX3090 — the paper's main pair
+/// — with the two-regime class map.
+fn mixed_cfg(seed: u64) -> SimConfig {
+    let llm = CostModel::new(ModelProfile::OPT_6_7B, GpuProfile::RTX3090);
+    let ssm = CostModel::new(ModelProfile::OPT_1_3B, GpuProfile::RTX3090);
+    let mut cfg = SimConfig::paper_default(llm, ssm);
+    cfg.max_new_tokens = MAX_NEW;
+    cfg.class_acceptance
+        .insert(0, AcceptanceProcess::Geometric { q: 0.75 });
+    cfg.class_acceptance
+        .insert(1, AcceptanceProcess::Geometric { q: 0.05 });
+    cfg.seed = seed;
+    cfg
+}
+
+/// 3:1 class mix: every 4th request is the low-acceptance domain.  The
+/// skew matters — low-acceptance rows commit one token per round, so
+/// they linger and the *live* batch converges to roughly half and half.
+fn mixed_trace(seed: u64) -> Trace {
+    let pool = vec![Prompt {
+        ids: vec![1; PROMPT_LEN],
+        text: String::new(),
+    }];
+    let mut trace = Trace::generate(
+        &TrafficPattern::Stationary {
+            interval: INTERVAL,
+            cv: 1.0,
+        },
+        &pool,
+        N_REQUESTS,
+        seed,
+    );
+    for item in &mut trace.items {
+        item.class = if item.id % 4 == 3 { 1 } else { 0 };
+    }
+    trace
+}
+
+/// The offline LUT an operator would have profiled for the *blended*
+/// workload — the model-based policy's cold-start fallback.
+fn profiled_lut() -> Lut {
+    Lut::new(BTreeMap::from([(1, 4), (2, 4), (4, 3), (8, 2), (16, 2)])).unwrap()
+}
+
+fn ragged_policy() -> ModelBased {
+    // slower probe cadence: the probe's job here is keeping the
+    // per-class curves identifiable, and every class-0 probe executes
+    // a round one step past the committed choice
+    ModelBased::with_config(
+        profiled_lut(),
+        ModelBasedConfig {
+            explore_every: 32,
+            ..ModelBasedConfig::default()
+        },
+    )
+}
+
+fn mean_per_token(cfg: &SimConfig, policy: &mut dyn SpeculationPolicy, trace: &Trace) -> f64 {
+    let (rec, _) = simulate_trace_continuous(cfg, policy, trace);
+    assert_eq!(rec.len(), trace.len(), "request conservation");
+    rec.mean_per_token_latency()
+}
+
+#[test]
+fn ragged_model_based_beats_every_uniform_s_on_a_mixed_domain_trace() {
+    for seed in [2u64, 3, 4] {
+        let cfg = mixed_cfg(seed);
+        let trace = mixed_trace(seed);
+
+        let ragged = mean_per_token(&cfg, &mut ragged_policy(), &trace);
+
+        let mut uniforms: Vec<(String, f64)> =
+            vec![("no-spec".into(), mean_per_token(&cfg, &mut NoSpec, &trace))];
+        for s in 1..=4usize {
+            uniforms.push((
+                format!("fixed-{s}"),
+                mean_per_token(&cfg, &mut Fixed(s), &trace),
+            ));
+        }
+
+        for (name, uniform) in &uniforms {
+            assert!(
+                ragged < *uniform,
+                "seed {seed}: ragged model-based ({:.3} ms/tok) should beat \
+                 uniform {name} ({:.3} ms/tok)",
+                ragged * 1e3,
+                uniform * 1e3,
+            );
+        }
+    }
+}
+
+#[test]
+fn the_payoff_run_actually_exercises_ragged_rounds() {
+    let cfg = mixed_cfg(2);
+    let trace = mixed_trace(2);
+    let (_, rounds) = simulate_trace_continuous(&cfg, &mut ragged_policy(), &trace);
+    // a ragged round drafts fewer tokens than the padded rectangle
+    // `live * s_max` would imply
+    let ragged_rounds = rounds
+        .iter()
+        .filter(|r| r.s > 0 && r.drafted < r.live * r.s)
+        .count();
+    assert!(
+        ragged_rounds > 100,
+        "expected a substantial share of ragged rounds, got {ragged_rounds} of {}",
+        rounds.len()
+    );
+    // and the generalized waste identity holds on every one of them
+    for r in rounds.iter().filter(|r| r.s > 0) {
+        assert!(r.drafted <= r.live * r.s, "drafted exceeds the rectangle");
+        assert!(r.accepted <= r.drafted, "accepted exceeds drafted");
+    }
+}
+
+/// A single-class batch must recover the uniform policy bit for bit,
+/// regardless of WHICH class value tags the rows: same per-request
+/// records, same round timeline.  This pins the broadcast short-circuit
+/// in `choose_ragged` AND the per-class observation plumbing (feeding
+/// class windows must not perturb the uniform decision path).
+#[test]
+fn single_class_batches_recover_the_uniform_policy_bit_for_bit() {
+    let llm = CostModel::new(ModelProfile::OPT_6_7B, GpuProfile::RTX3090);
+    let ssm = CostModel::new(ModelProfile::OPT_1_3B, GpuProfile::RTX3090);
+    let mut base = SimConfig::paper_default(llm, ssm);
+    base.max_new_tokens = 64;
+    base.seed = 7;
+
+    let pool = vec![Prompt {
+        ids: vec![1; 32],
+        text: String::new(),
+    }];
+    let classless = Trace::generate(
+        &TrafficPattern::Stationary {
+            interval: 0.05,
+            cv: 1.0,
+        },
+        &pool,
+        60,
+        7,
+    );
+    // identical schedule, every row tagged class 1, with class 1 mapped
+    // to the same acceptance process the classless run blends to
+    let mut tagged = classless.clone();
+    for item in &mut tagged.items {
+        item.class = 1;
+    }
+    let mut tagged_cfg = base.clone();
+    tagged_cfg
+        .class_acceptance
+        .insert(1, base.acceptance.clone());
+
+    let policies: Vec<(&str, fn() -> Box<dyn SpeculationPolicy>)> = vec![
+        ("fixed-2", || Box::new(Fixed(2))),
+        ("model-based", || Box::new(ModelBased::new(profiled_lut()))),
+    ];
+    for (name, mk) in policies {
+        let (rec_a, rounds_a) = simulate_trace_continuous(&base, mk().as_mut(), &classless);
+        let (rec_b, rounds_b) = simulate_trace_continuous(&tagged_cfg, mk().as_mut(), &tagged);
+        assert_eq!(
+            rec_a.records(),
+            rec_b.records(),
+            "{name}: classless vs single-class records diverged"
+        );
+        assert_eq!(
+            rounds_a, rounds_b,
+            "{name}: classless vs single-class round timelines diverged"
+        );
+    }
+}

@@ -232,6 +232,7 @@ fn slo_aware_beats_fifo_in_the_threaded_stub_server() {
                     id: k as u64,
                     send_at,
                     deadline: Some(send_at + budget),
+                    class: 0,
                     prompt: pool[(k + seed as usize) % pool.len()].clone(),
                 }
             })

@@ -13,10 +13,11 @@
 //! thread with no concurrent allocations to blur the count.
 
 use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use specbatch::engine::{Engine, EngineConfig};
-use specbatch::policy::Fixed;
+use specbatch::policy::{Fixed, SpeculationPolicy};
 use specbatch::telemetry::flight::FlightRecorder;
 use specbatch::telemetry::Telemetry;
 use specbatch::testkit::stub::StubSpec;
@@ -48,6 +49,33 @@ unsafe impl GlobalAlloc for CountingAlloc {
 
 #[global_allocator]
 static ALLOC: CountingAlloc = CountingAlloc;
+
+/// Deterministic ragged schedule (`s_i = (round + i) % 4`): with 8 live
+/// rows every round mixes at least two distinct lengths, exercising the
+/// per-row `s_slot`/`s_rows` staging and the ragged feedback lend.  The
+/// engine hands `choose_ragged_into` its round-scratch buffer, so the
+/// `extend` below reuses warmed capacity — the policy itself is on the
+/// zero-allocation hook too.
+struct RaggedSchedule {
+    round: Cell<usize>,
+}
+
+impl SpeculationPolicy for RaggedSchedule {
+    fn choose(&self, _live: usize, max_s: usize) -> usize {
+        max_s.min(3)
+    }
+
+    fn choose_ragged_into(&self, rows: &[u8], max_s: usize, out: &mut Vec<usize>) {
+        let r = self.round.get();
+        self.round.set(r + 1);
+        out.clear();
+        out.extend((0..rows.len()).map(|i| ((r + i) % 4).min(max_s)));
+    }
+
+    fn label(&self) -> String {
+        "ragged-schedule".into()
+    }
+}
 
 #[test]
 fn steady_state_decode_rounds_allocate_nothing() {
@@ -107,6 +135,28 @@ fn steady_state_decode_rounds_allocate_nothing() {
     assert!(
         flight.recorded() >= recorded_before + 20,
         "the ring must have seen every round"
+    );
+    assert!(st.has_live(), "rows must still be mid-generation");
+
+    // --- phase 3: ragged per-row rounds are on the same hook ---
+    // Per-row `s` staging (`s_slot`/`s_rows`), the truncated-prefix
+    // commit and the ragged feedback lend must all ride the warmed
+    // arenas; the flight recorder stays attached from phase 2.
+    let mut ragged = RaggedSchedule {
+        round: Cell::new(0),
+    };
+    for _ in 0..3 {
+        engine.decode_round(&mut st, &mut ragged).expect("ragged warmup round");
+    }
+    let before = ALLOC_CALLS.load(Ordering::Relaxed);
+    for _ in 0..20 {
+        engine.decode_round(&mut st, &mut ragged).expect("ragged steady round");
+    }
+    let delta = ALLOC_CALLS.load(Ordering::Relaxed) - before;
+    assert_eq!(
+        delta, 0,
+        "ragged decode rounds must not touch the heap \
+         ({delta} allocator calls across 20 rounds)"
     );
     assert!(st.has_live(), "rows must still be mid-generation");
 }
