@@ -62,6 +62,7 @@ fn sim_grid() {
             host_overhead: 0.2e-3,
             kv_layout: specbatch::kvcache::KvLayout::Paged,
             kv_block: specbatch::kvcache::DEFAULT_BLOCK_SIZE,
+            prefix_cache: false,
             seed: 1,
         };
         let mut rng = Pcg64::new(42);

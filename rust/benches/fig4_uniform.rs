@@ -144,6 +144,7 @@ fn sim() {
         host_overhead: 0.2e-3,
         kv_layout: specbatch::kvcache::KvLayout::Paged,
         kv_block: specbatch::kvcache::DEFAULT_BLOCK_SIZE,
+        prefix_cache: false,
         seed: 7,
     };
     let lut = specbatch::simulator::simulated_lut(&cfg, &[1, 2, 4, 8, 16, 32], 8, 80);

@@ -40,6 +40,7 @@ fn main() {
         host_overhead: 0.2e-3,
         kv_layout: specbatch::kvcache::KvLayout::Paged,
         kv_block: specbatch::kvcache::DEFAULT_BLOCK_SIZE,
+        prefix_cache: false,
         seed: 9,
     };
     let lut = simulated_lut(&cfg, &[1, 2, 4, 8, 16], 8, 80);

@@ -109,6 +109,9 @@ pub struct FinishedRequest {
     pub deadline: Option<f64>,
     /// round boundaries admission control deferred it at before admitting
     pub deferred_rounds: usize,
+    /// when the row's first generated token was committed (the round
+    /// boundary its prefill/ingest completed at) — TTFT numerator
+    pub first_token_at: Option<f64>,
     /// sealed latency waterfall: where this request's wall time went
     /// (queue wait, prefill, per-phase decode splits, reshape stalls);
     /// `wf.total()` equals `finished_at - sent_at` by construction
@@ -137,6 +140,8 @@ struct RowMeta {
     spec_at_admit: usize,
     deadline: Option<f64>,
     deferred_rounds: usize,
+    /// stamped at the first round boundary the row has ≥ 1 generated token
+    first_token_at: Option<f64>,
     /// accruing waterfall (sealed against measured latency at retire)
     wf: Waterfall,
 }
@@ -375,6 +380,7 @@ impl ContinuousBatcher {
                     spec_at_admit: meta.spec_at_admit,
                     deadline: meta.deadline,
                     deferred_rounds: meta.deferred_rounds,
+                    first_token_at: meta.first_token_at,
                     wf,
                 });
             }
@@ -448,14 +454,22 @@ impl ContinuousBatcher {
                     tel.policy_fit(tel.now(), policy.snapshot());
                 }
                 // every live row sat through this round: accrue its
-                // phase split into each row's waterfall
-                for meta in ep.slots.iter_mut().flatten() {
+                // phase split into each row's waterfall, and stamp the
+                // first round boundary the row holds a generated token
+                // (fresh prefills commit theirs this same boundary)
+                for (slot, meta) in ep.slots.iter_mut().enumerate() {
+                    let Some(meta) = meta else { continue };
                     meta.wf.add_round_split(
                         info.phases.catch_up,
                         info.phases.draft,
                         info.phases.verify,
                         info.phases.accept,
                     );
+                    if meta.first_token_at.is_none()
+                        && ep.state.generated_tokens(slot).map_or(0, |t| t.len()) > 0
+                    {
+                        meta.first_token_at = Some(now);
+                    }
                 }
                 self.timeline.push(RoundEvent {
                     t: now,
@@ -627,6 +641,7 @@ impl ContinuousBatcher {
                 spec_at_admit: spec_now,
                 deadline: q.req.deadline,
                 deferred_rounds: q.deferred,
+                first_token_at: None,
                 wf,
             });
         }
@@ -704,6 +719,7 @@ impl ContinuousBatcher {
                 spec_at_admit: spec_now,
                 deadline: q.req.deadline,
                 deferred_rounds: q.deferred,
+                first_token_at: None,
                 wf,
             });
         }
@@ -905,6 +921,9 @@ mod tests {
         let (reingested, remapped) = batcher.kv_transfer_totals();
         assert_eq!(reingested, 0, "paged reshape must never re-ingest");
         assert!(remapped > 0, "the reshape should have remapped a carried row");
+        // the prefix cache (env-enabled runs) holds block refs by design;
+        // leak-freedom is asserted after a full eviction
+        engine.clear_prefix_cache();
         let stats = engine.kv_block_stats().expect("paged engine");
         assert!(stats.is_leak_free(), "blocks leaked: {stats:?}");
         // the timeline recorded real block usage

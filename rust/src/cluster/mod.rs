@@ -340,6 +340,10 @@ pub struct ShardBreakdown {
     pub policy_snapshot: Option<Json>,
     /// the shard engine's KV block accounting (paged layout only)
     pub kv_blocks: Option<crate::kvcache::KvBlockStats>,
+    /// the shard engine's prefix-cache counters (paged layout with the
+    /// prefix cache enabled only) — each shard keys its own trie, so
+    /// cross-shard routing dilutes hit rates unless arrivals are sticky
+    pub prefix: Option<crate::kvcache::prefix::PrefixStats>,
     /// this shard's SLO attainment accounting (zeroed when nothing
     /// carried a deadline)
     pub slo: crate::metrics::SloSummary,

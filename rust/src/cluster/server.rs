@@ -318,6 +318,7 @@ pub fn run_cluster_experiment(
             deadline: resp.deadline,
             deferred_rounds: resp.deferred_rounds,
             shed: resp.shed,
+            first_token_at: resp.first_token_at,
         });
     }
     client
@@ -365,6 +366,7 @@ pub fn run_cluster_experiment(
             rounds: report.timeline,
             policy_snapshot: report.policy_snapshot,
             kv_blocks: report.kv_blocks,
+            prefix: report.prefix,
             slo: shard_rec.slo_attainment(),
         });
     }
@@ -378,6 +380,10 @@ pub fn run_cluster_experiment(
         .iter()
         .filter_map(|b| b.kv_blocks)
         .reduce(|a, b| a.merged(&b));
+    let prefix = shards
+        .iter()
+        .filter_map(|b| b.prefix)
+        .reduce(|a, b| a.merged(&b));
     Ok(ExperimentOutcome {
         recorder,
         lut: lut_used,
@@ -385,6 +391,7 @@ pub fn run_cluster_experiment(
         policy_snapshot: None,
         shards,
         kv_blocks,
+        prefix,
         deferrals,
         sheds,
     })

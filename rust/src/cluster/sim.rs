@@ -35,10 +35,12 @@ use crate::admission::{
     apply_plan_to_queue, predicted_finish, predicted_token_time, AdmissionController,
     AdmissionView, Candidate, Fifo,
 };
+use crate::kvcache::prefix::PrefixStats;
 use crate::metrics::{LatencyRecorder, RequestRecord, RoundEvent, SloSummary};
 use crate::policy::{RoundFeedback, SpeculationPolicy};
 use crate::simulator::des::{
     emit_phase_tiles, kv_blocks_of, round_phase_split, round_phase_split_ragged, sim_bucket_for,
+    SimPrefix,
 };
 use crate::simulator::{reshape_cost, round_cost, round_cost_ragged, SimConfig};
 use crate::telemetry::attrib::Waterfall;
@@ -55,6 +57,10 @@ pub struct ClusterReport {
     /// per-shard virtual-time round timelines, indexed by shard
     pub shard_rounds: Vec<Vec<RoundEvent>>,
     pub router: String,
+    /// per-shard prefix-sharing counters merged into one line (`Some`
+    /// when [`SimConfig::prefix_cache`] is on; each shard owns a private
+    /// cache, exactly like the threaded cluster's workers)
+    pub prefix: Option<PrefixStats>,
 }
 
 impl ClusterReport {
@@ -93,6 +99,9 @@ struct SimRow {
     deferred: usize,
     /// workload class tag (drives per-class acceptance + ragged `s`)
     class: u8,
+    /// virtual time the row's first token committed (end of its
+    /// admission prefill — "prefill commits the first token")
+    first_token_at: Option<f64>,
     /// accruing latency decomposition (see the single-worker DES twin)
     wf: Waterfall,
 }
@@ -128,6 +137,12 @@ struct Shard {
     fb_classes: Vec<u8>,
     /// policy drift flushes already reported to the flight recorder
     drift_seen: usize,
+    /// the shard's private prefix-sharing mirror (`Some` when
+    /// `SimConfig::prefix_cache` is on)
+    prefix: Option<SimPrefix>,
+    /// prompts admitted at the current boundary, pending post-prefill
+    /// registration into the prefix mirror
+    admitted_ids: Vec<Vec<i32>>,
 }
 
 impl Shard {
@@ -238,6 +253,12 @@ pub fn simulate_trace_cluster_admission_tel(
             fb_s_rows: Vec::new(),
             fb_classes: Vec::new(),
             drift_seen: 0,
+            prefix: if cfg.prefix_cache {
+                Some(SimPrefix::new(cfg.kv_block.max(1)))
+            } else {
+                None
+            },
+            admitted_ids: Vec::new(),
         })
         .collect();
     let mut recorder = LatencyRecorder::new();
@@ -311,10 +332,17 @@ pub fn simulate_trace_cluster_admission_tel(
         }
     }
 
+    // drain the per-shard caches (leak-audited) and roll their counters
+    // up into one cluster-level line, like the threaded cluster does
+    let prefix = shards
+        .iter_mut()
+        .filter_map(|sh| sh.prefix.take().map(SimPrefix::finish))
+        .reduce(|a, b| a.merged(&b));
     ClusterReport {
         recorder,
         shard_rounds: shards.into_iter().map(|sh| sh.rounds).collect(),
         router: router.label(),
+        prefix,
     }
 }
 
@@ -390,6 +418,7 @@ fn step_shard(
                 deadline: w.item.deadline,
                 deferred_rounds: w.deferred,
                 shed: true,
+                first_token_at: None,
             });
         }
         if tel.active() {
@@ -449,14 +478,25 @@ fn step_shard(
     // --- admit the planned prefix, up to the live-capacity cap ---
     let mut n_admit = 0usize;
     let mut plen_sum = 0usize;
+    // prompt tokens the LLM actually prefills (prefix hits shrink a
+    // row's span to its unmatched suffix; == plen_sum when off)
+    let mut prefill_sum = 0usize;
     let n_before = sh.live.len();
     let admit_t = sh.t;
     while n_admit < admit_n {
         if sh.live.len() >= cfg.max_batch {
             break;
         }
-        let w = sh.queue.pop_front().expect("planned admits are queued");
+        let mut w = sh.queue.pop_front().expect("planned admits are queued");
         let plen = w.item.prompt.ids.len();
+        let saved = match sh.prefix.as_mut() {
+            Some(p) => {
+                let saved = p.lookup_saved(&w.item.prompt.ids);
+                sh.admitted_ids.push(std::mem::take(&mut w.item.prompt.ids));
+                saved
+            }
+            None => 0,
+        };
         let mut wf = Waterfall::default();
         wf.queue = admit_t - w.item.send_at;
         wf.deferred_rounds = w.deferred;
@@ -471,9 +511,11 @@ fn step_shard(
             deadline: w.item.deadline,
             deferred: w.deferred,
             class: w.item.class,
+            first_token_at: None,
             wf,
         });
         plen_sum += plen;
+        prefill_sum += plen - saved;
         n_admit += 1;
     }
     if sh.live.is_empty() {
@@ -483,13 +525,24 @@ fn step_shard(
     }
     if n_admit > 0 {
         let mean_plen = (plen_sum as f64 / n_admit as f64).ceil() as usize;
+        let mean_prefill = (prefill_sum as f64 / n_admit as f64).ceil() as usize;
         let t_pre = sh.t;
-        sh.t += cfg.llm.t_prefill(n_admit, mean_plen);
+        sh.t += cfg.llm.t_prefill(n_admit, mean_prefill);
         if may_speculate {
+            // the SSM's dense cache is private: it ingests the full
+            // prompts even when the LLM mapped shared blocks
             sh.t += cfg.ssm.t_prefill(n_admit, mean_plen);
         }
         if tel.enabled() {
             tel.phase(t_pre, sh.t - t_pre, PhaseKind::Prefill);
+        }
+        // the newcomers' prompts are prefilled now: register them for
+        // later arrivals (map-at-admit / insert-after-prefill, the
+        // engine's order — batchmates never hit each other)
+        if let Some(p) = sh.prefix.as_mut() {
+            for ids in sh.admitted_ids.drain(..) {
+                p.register(&ids);
+            }
         }
         // every live row — resident rows included — sits through the
         // prefill of the newcomers
@@ -497,6 +550,8 @@ fn step_shard(
         for row in sh.live.iter_mut() {
             row.wf.prefill += dpre;
         }
+        // the newcomers' first tokens committed with this prefill
+        let t_first = sh.t;
         // epoch reshape at a bucket growth, mirroring the single-worker
         // DES: carried rows re-ingest under Dense, remap under Paged
         // (bucket is monotone within an epoch, like the real batcher's)
@@ -522,6 +577,7 @@ fn step_shard(
         for row in sh.live.iter_mut().rev().take(n_admit) {
             row.batch_at_admit = b;
             row.spec_at_admit = s_now;
+            row.first_token_at = Some(t_first);
         }
     }
 
@@ -670,6 +726,7 @@ fn step_shard(
                 deadline: row.deadline,
                 deferred_rounds: row.deferred,
                 shed: false,
+                first_token_at: row.first_token_at,
             });
         } else {
             i += 1;

@@ -60,6 +60,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
+use crate::kvcache::prefix::{PrefixCache, PrefixStats};
 use crate::kvcache::{
     BlockChain, BlockManager, CarriedKv, FlatTables, KvBlockStats, KvHandle, KvLayout,
     DEFAULT_BLOCK_SIZE,
@@ -72,6 +73,14 @@ use crate::telemetry::{PhaseKind, Telemetry};
 use crate::testkit::stub::{StubModel, StubRole, StubSpec};
 use crate::util::timer::Stopwatch;
 use acceptance::accept_into;
+
+/// `SPECBATCH_PREFIX_CACHE=on|off` — the [`EngineConfig::prefix_cache`]
+/// default (anything other than `on`/`1`/`true` reads as off).
+pub fn prefix_cache_from_env() -> bool {
+    std::env::var("SPECBATCH_PREFIX_CACHE")
+        .map(|v| matches!(v.as_str(), "on" | "1" | "true"))
+        .unwrap_or(false)
+}
 
 /// Engine knobs (defaults = paper Sec. 5 methodology).
 #[derive(Debug, Clone)]
@@ -87,6 +96,13 @@ pub struct EngineConfig {
     /// dense per-slot KV vs paged blocks with O(1) reshape remap
     /// (defaults to `SPECBATCH_KV_LAYOUT` when set, else dense)
     pub kv_layout: KvLayout,
+    /// prefix-sharing KV cache over the paged block pool: admissions
+    /// whose prompt hits a cached prefix map those blocks read-only and
+    /// prefill only the suffix (see [`crate::kvcache::prefix`]).
+    /// Defaults to `SPECBATCH_PREFIX_CACHE` (`on`/`off`) when set, else
+    /// off.  Requires the `Paged` layout — ignored under `Dense`, so
+    /// env-driven CI matrices stay valid on every leg.
+    pub prefix_cache: bool,
     /// minimum wall-clock seconds per decode round (0 = as fast as the
     /// backend runs).  The stub pair decodes in microseconds, which makes
     /// wall-clock SLO experiments pure scheduler-jitter noise; a small
@@ -105,6 +121,7 @@ impl Default for EngineConfig {
             pad_token: 0,
             record_acceptance: false,
             kv_layout: KvLayout::default_layout(),
+            prefix_cache: prefix_cache_from_env(),
             min_round_seconds: 0.0,
         }
     }
@@ -660,6 +677,9 @@ pub struct Engine<'rt> {
     drift_seen: usize,
     /// paged-layout block pools (None under the dense layout)
     pools: Option<KvPools>,
+    /// prefix-sharing index over the LLM block pool (None unless
+    /// `cfg.prefix_cache` under the paged layout)
+    prefix: Option<PrefixCache>,
     #[cfg(feature = "pjrt")]
     rt: Option<&'rt Runtime>,
 }
@@ -687,6 +707,7 @@ impl<'rt> Engine<'rt> {
             round_ctx: (0, 0),
             drift_seen: 0,
             pools: None,
+            prefix: None,
             rt: Some(rt),
         })
     }
@@ -705,6 +726,10 @@ impl<'rt> Engine<'rt> {
         }
         let limits = EngineLimits::from_stub(&spec);
         let pools = build_pools(&limits, cfg.kv_layout);
+        // the prefix index shares blocks through the LLM pool, so it
+        // exists only where the pool does (paged layout)
+        let prefix = (cfg.prefix_cache && pools.is_some())
+            .then(|| PrefixCache::new(DEFAULT_BLOCK_SIZE));
         Ok(Engine {
             cfg,
             limits,
@@ -716,6 +741,7 @@ impl<'rt> Engine<'rt> {
             round_ctx: (0, 0),
             drift_seen: 0,
             pools,
+            prefix,
             #[cfg(feature = "pjrt")]
             rt: None,
         })
@@ -755,6 +781,84 @@ impl<'rt> Engine<'rt> {
         self.pools
             .as_ref()
             .map(|p| p.llm.stats().merged(&p.ssm.stats()))
+    }
+
+    /// Cumulative prefix-sharing counters (None when the prefix cache is
+    /// off or the layout is dense).
+    pub fn prefix_stats(&self) -> Option<PrefixStats> {
+        self.prefix.as_ref().map(|c| c.stats())
+    }
+
+    /// True when admissions consult the prefix index.
+    pub fn prefix_enabled(&self) -> bool {
+        self.prefix.is_some()
+    }
+
+    /// Return every cached prefix chain to the pool (shutdown / leak
+    /// audit: after this plus releasing all batch states, the free list
+    /// is back at capacity).  No-op when the cache is off.
+    pub fn clear_prefix_cache(&mut self) {
+        if let (Some(cache), Some(pools)) = (self.prefix.as_mut(), self.pools.as_mut()) {
+            cache.evict_all(&mut pools.llm);
+        }
+    }
+
+    /// Longest cached prefix of `tokens`: a retained block chain ready
+    /// to install read-only into a slot's table, with a partially filled
+    /// shared tail already replaced copy-on-write (the caller's suffix
+    /// ingest writes into that block immediately).  None on a miss or
+    /// when the cache is off.
+    fn map_prefix(&mut self, tokens: &[i32]) -> Result<Option<(Vec<u32>, usize)>> {
+        let (Some(cache), Some(pools)) = (self.prefix.as_mut(), self.pools.as_mut()) else {
+            return Ok(None);
+        };
+        if tokens.is_empty() {
+            return Ok(None);
+        }
+        let Some(mut m) = cache.lookup(tokens, &mut pools.llm) else {
+            return Ok(None);
+        };
+        if m.tokens % DEFAULT_BLOCK_SIZE != 0 {
+            let tail = *m.blocks.last().expect("a partial tail implies a block");
+            match cache.cow_tail(&mut pools.llm, tail) {
+                Ok(fresh) => {
+                    *m.blocks.last_mut().expect("a partial tail implies a block") = fresh;
+                }
+                Err(e) => {
+                    for &b in &m.blocks {
+                        pools.llm.release(b);
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        Ok(Some((m.blocks, m.tokens)))
+    }
+
+    /// Register freshly ingested prompt spans into the prefix index: for
+    /// each slot, the prompt prefix its KV actually covers (the ingest
+    /// counter, capped at the prompt length).  Spans already cached are
+    /// deduplicated inside the trie.  No-op when the cache is off.
+    fn insert_prefixes(&mut self, st: &BatchState, slots: &[usize]) {
+        let (Some(cache), Some(pools), Some(tables)) = (
+            self.prefix.as_mut(),
+            self.pools.as_mut(),
+            st.tables.as_ref(),
+        ) else {
+            return;
+        };
+        let ing = st.llm_kv.ingested();
+        for &i in slots {
+            let span = (st.rows.prompt_len[i] as usize).min(ing[i] as usize);
+            if span == 0 {
+                continue;
+            }
+            cache.insert(
+                &st.rows.committed(i)[..span],
+                tables.llm.row(i),
+                &mut pools.llm,
+            );
+        }
     }
 
     /// Precompile the executable matrix up to (`max_bucket`, `max_s`).
@@ -862,14 +966,35 @@ impl<'rt> Engine<'rt> {
             rows.install(i, p, p.len(), max_new);
         }
 
-        // --- padded prefill over both models ---
+        // --- prefix-cache map (paged + cache on): the longest cached
+        // prefix of each prompt rides in as a read-only block chain and
+        // the prefill below feeds only the suffix.  The lookup is capped
+        // at plen-1 so at least one token remains to feed (its last-token
+        // prediction is the row's first committed token either way).
+        let mut mapped: Vec<usize> = vec![0; bucket];
+        let mut chains: Vec<Option<Vec<u32>>> = (0..bucket).map(|_| None).collect();
+        if self.prefix.is_some() {
+            for (i, p) in prompts.iter().enumerate() {
+                if p.len() < 2 {
+                    continue;
+                }
+                if let Some((chain, m)) = self.map_prefix(&p[..p.len() - 1])? {
+                    mapped[i] = m;
+                    chains[i] = Some(chain);
+                }
+            }
+        }
+
+        // --- padded prefill over both models (mapped rows: suffix only) ---
         let mut tokens = vec![self.cfg.pad_token; bucket * max_prompt];
         let mut plens = vec![0i32; bucket];
         for i in 0..bucket {
             let plen = rows.prompt_len[i] as usize;
-            tokens[i * max_prompt..i * max_prompt + plen]
-                .copy_from_slice(&rows.committed(i)[..plen]);
-            plens[i] = plen as i32;
+            let skip = mapped[i];
+            let feed_len = plen - skip;
+            tokens[i * max_prompt..i * max_prompt + feed_len]
+                .copy_from_slice(&rows.committed(i)[skip..plen]);
+            plens[i] = feed_len as i32;
         }
         let tel_mark = self
             .tel
@@ -879,7 +1004,7 @@ impl<'rt> Engine<'rt> {
         let first = self.stopwatch.time("prefill_llm", || {
             self.llm.prefill(&tokens, &plens, bucket, &mut llm_kv)
         })?;
-        let ssm_kv = if may_speculate {
+        let mut ssm_kv = if may_speculate {
             let mut kv = self.ssm.new_kv(bucket)?;
             // the SSM's own first prediction is discarded — it only needs KV
             let _ = self.stopwatch.time("prefill_ssm", || {
@@ -897,11 +1022,35 @@ impl<'rt> Engine<'rt> {
         for (i, &t) in first.iter().enumerate() {
             rows.push(i, t);
         }
+        // mapped rows: the suffix prefill left the LLM counter at the
+        // suffix length — the mapped chain covers the rest, so the full
+        // prompt is ingested.  No draft-side blocks are cached: rewind
+        // the SSM to zero and let the catch-up pass rebuild it.
+        let mut any_mapped = false;
+        for (i, &m) in mapped.iter().enumerate() {
+            if m == 0 {
+                continue;
+            }
+            any_mapped = true;
+            llm_kv.set_row_ingested(i, rows.prompt_len[i]);
+            if let Some(kv) = ssm_kv.as_mut() {
+                kv.set_row_ingested(i, 0);
+            }
+        }
         let table_stride = self.limits.max_seq.div_ceil(DEFAULT_BLOCK_SIZE).max(1);
-        let tables = self.pools.as_ref().map(|_| SlotTables {
+        let mut tables = self.pools.as_ref().map(|_| SlotTables {
             llm: FlatTables::new(bucket, table_stride),
             ssm: FlatTables::new(bucket, table_stride),
         });
+        // install the mapped chains before the sync below grows each
+        // table to its counter (the chains transfer their references)
+        if let Some(t) = tables.as_mut() {
+            for (i, chain) in chains.iter().enumerate() {
+                if let Some(chain) = chain {
+                    t.llm.set_row(i, chain);
+                }
+            }
+        }
         let mut stats = GenStats::default();
         // pre-size the per-epoch sample vectors to the decode loop's
         // round budget so steady-state pushes never reallocate (the
@@ -917,12 +1066,17 @@ impl<'rt> Engine<'rt> {
             rows,
             llm_kv,
             ssm_kv,
-            ssm_backlog: false,
+            // mapped rows rewound their SSM counters: catch up lazily
+            ssm_backlog: any_mapped,
             tables,
             stats,
         };
         self.check_eos_and_limits(&mut st.rows);
         self.sync_blocks(&mut st)?;
+        if self.prefix.is_some() {
+            let fresh: Vec<usize> = (0..prompts.len()).collect();
+            self.insert_prefixes(&st, &fresh);
+        }
         Ok(st)
     }
 
@@ -1095,8 +1249,15 @@ impl<'rt> Engine<'rt> {
             }
             self.tel.phase(t, phases.accept, PhaseKind::Accept);
             if let Some(kv) = self.kv_block_stats() {
-                self.tel
-                    .kv_pool(t0 + wall_time, kv.in_use, kv.capacity, kv.mean_internal_frag);
+                let ps = self.prefix_stats().unwrap_or_default();
+                self.tel.kv_pool_prefix(
+                    t0 + wall_time,
+                    kv.in_use,
+                    kv.capacity,
+                    kv.mean_internal_frag,
+                    ps.prefix_hits,
+                    ps.prefill_tokens_saved,
+                );
             }
         }
         let info = RoundInfo {
@@ -1174,6 +1335,9 @@ impl<'rt> Engine<'rt> {
             );
         }
         let mut slots = Vec::with_capacity(reqs.len());
+        // fresh admissions that should register their prompt span in the
+        // prefix index once their context is ingested (cache on only)
+        let mut fresh: Vec<usize> = Vec::new();
         for (req, &slot) in reqs.into_iter().zip(vacant.iter()) {
             if req.context.is_empty() {
                 bail!("admit_rows: empty context");
@@ -1214,6 +1378,25 @@ impl<'rt> Engine<'rt> {
                     if let Some(kv) = &mut st.ssm_kv {
                         kv.reset_row(slot);
                     }
+                    if self.prefix.is_some() {
+                        // prefix lookup at admit time: the longest cached
+                        // prefix of the prompt installs as a read-only
+                        // chain + counter transfer, and the chunked
+                        // ingest below feeds only the suffix (capped at
+                        // ctx-1 so one token is always left to feed)
+                        let cap = req.prompt_len.min(ctx_len - 1);
+                        if cap > 0 {
+                            if let Some((chain, m)) = self.map_prefix(&req.context[..cap])? {
+                                let tables = st
+                                    .tables
+                                    .as_mut()
+                                    .expect("prefix cache implies paged tables");
+                                tables.llm.set_row(slot, &chain);
+                                st.llm_kv.set_row_ingested(slot, m as u32);
+                            }
+                        }
+                        fresh.push(slot);
+                    }
                 }
             }
             slots.push(slot);
@@ -1232,6 +1415,9 @@ impl<'rt> Engine<'rt> {
         // a re-admitted context may already contain <eos> past the prompt
         self.check_eos_and_limits(&mut st.rows);
         self.sync_blocks(st)?;
+        // fresh prompts now have their KV in place: register their spans
+        // so later admissions can share them
+        self.insert_prefixes(st, &fresh);
         Ok(slots)
     }
 
@@ -1391,7 +1577,23 @@ impl<'rt> Engine<'rt> {
         let (Some(pools), Some(tables)) = (self.pools.as_mut(), st.tables.as_mut()) else {
             return Ok(());
         };
-        pools.llm.sync_flat(&mut tables.llm, st.llm_kv.ingested())?;
+        // LLM pool pressure is the one reclamation trigger for cached
+        // prefix chains: evict LRU entries and retry (sync_flat commits
+        // partial growth before erroring, so the retry is exact)
+        loop {
+            match pools.llm.sync_flat(&mut tables.llm, st.llm_kv.ingested()) {
+                Ok(()) => break,
+                Err(e) => {
+                    let evicted = self
+                        .prefix
+                        .as_mut()
+                        .is_some_and(|c| c.evict_lru(&mut pools.llm));
+                    if !evicted {
+                        return Err(e);
+                    }
+                }
+            }
+        }
         if let Some(kv) = &st.ssm_kv {
             pools.ssm.sync_flat(&mut tables.ssm, kv.ingested())?;
         }
@@ -1964,6 +2166,7 @@ mod tests {
         let mut e = layout_engine(KvLayout::Paged);
         let paged = e.generate_batch(&prompts, 16, &mut Fixed(3)).unwrap();
         assert_eq!(dense.tokens, paged.tokens, "layouts must not change tokens");
+        e.clear_prefix_cache(); // cached prefix blocks are not leaks
         let stats = e.kv_block_stats().expect("paged engine reports block stats");
         assert!(stats.is_leak_free(), "blocks leaked: {stats:?}");
         assert!(stats.peak_in_use > 0, "the epoch never held a block");

@@ -37,6 +37,8 @@ use anyhow::{bail, Result};
 
 use crate::util::json::Json;
 
+pub mod prefix;
+
 /// How per-slot KV state is organised across epoch reshapes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum KvLayout {
@@ -399,8 +401,20 @@ impl BlockManager {
             let base = i * stride;
             let mut n = tables.len[i] as usize;
             while n < want {
-                tables.ids[base + n] = self.alloc()?;
-                n += 1;
+                // commit partial growth before propagating exhaustion, so
+                // a caller that frees pool space (prefix-cache eviction)
+                // can re-invoke the sync without leaking the blocks this
+                // pass already allocated
+                match self.alloc() {
+                    Ok(id) => {
+                        tables.ids[base + n] = id;
+                        n += 1;
+                    }
+                    Err(e) => {
+                        tables.len[i] = n as u32;
+                        return Err(e);
+                    }
+                }
             }
             while n > want {
                 n -= 1;

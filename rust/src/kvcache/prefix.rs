@@ -1,0 +1,611 @@
+//! Prefix-sharing index over the paged KV pool: a trie keyed on
+//! prompt-token-ID content at block granularity, mapping to refcounted
+//! block ids in a [`BlockManager`] pool.
+//!
+//! The cache is a *second owner* of KV blocks.  A row that prefills a
+//! prompt donates its block chain to the index ([`PrefixCache::insert`]
+//! retains every newly registered block); a later request whose prompt
+//! starts with the same tokens maps those blocks read-only
+//! ([`PrefixCache::lookup`] bumps refcounts and hands back the chain) and
+//! the engine prefills only the unmatched suffix.  Shared tail blocks
+//! that are about to be written are replaced copy-on-write
+//! ([`PrefixCache::cow_tail`]).  Unreferenced-by-rows chains stay in the
+//! trie as an LRU reserve and are reclaimed only under pool pressure
+//! ([`PrefixCache::evict_until_free`]); after [`PrefixCache::evict_all`]
+//! plus releasing every row-held reference, the pool's free list returns
+//! to capacity (the leak invariant `rust/tests/prefix_sharing.rs` pins).
+//!
+//! ## Trie shape
+//!
+//! Every node owns exactly one block and the token content it caches:
+//! a *full* node keys `block_size` tokens and may have children; a
+//! *partial* node keys `1..block_size` tokens (a partially filled tail
+//! block) and is always a leaf.  Lookup greedily walks full-block
+//! matches and may finish on one partial leaf whose whole key matches;
+//! the matched token count is therefore `16*k + t` with `t` the partial
+//! key length (0 when the walk ended on a full node).  Sibling partial
+//! leaves of different lengths may coexist (inserted by prompts that
+//! diverge inside one block); lookup picks the longest matching one,
+//! which is unique because exact keys are deduplicated on insert.
+
+use crate::kvcache::BlockManager;
+use crate::util::json::Json;
+use anyhow::Result;
+
+/// Counters of one prefix index (cumulative over its lifetime).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PrefixStats {
+    /// admission-time lookups performed
+    pub lookups: u64,
+    /// lookups that matched >= 1 block
+    pub prefix_hits: u64,
+    /// lookups that matched nothing
+    pub prefix_misses: u64,
+    /// prompt tokens whose prefill was skipped via mapped blocks
+    pub prefill_tokens_saved: u64,
+    /// blocks newly registered into the trie by inserts
+    pub inserted_blocks: u64,
+    /// shared tail blocks replaced copy-on-write
+    pub cow_copies: u64,
+    /// cached blocks reclaimed under pool pressure
+    pub evictions: u64,
+    /// blocks the trie currently holds a reference to
+    pub cached_blocks: usize,
+}
+
+impl PrefixStats {
+    /// Fraction of lookups that hit (0 when no lookups ran).
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups == 0 {
+            0.0
+        } else {
+            self.prefix_hits as f64 / self.lookups as f64
+        }
+    }
+
+    /// Merge counters from another index (per-shard caches roll up into
+    /// one cluster-level line).
+    pub fn merged(&self, other: &PrefixStats) -> PrefixStats {
+        PrefixStats {
+            lookups: self.lookups + other.lookups,
+            prefix_hits: self.prefix_hits + other.prefix_hits,
+            prefix_misses: self.prefix_misses + other.prefix_misses,
+            prefill_tokens_saved: self.prefill_tokens_saved + other.prefill_tokens_saved,
+            inserted_blocks: self.inserted_blocks + other.inserted_blocks,
+            cow_copies: self.cow_copies + other.cow_copies,
+            evictions: self.evictions + other.evictions,
+            cached_blocks: self.cached_blocks + other.cached_blocks,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("lookups", Json::Num(self.lookups as f64)),
+            ("prefix_hits", Json::Num(self.prefix_hits as f64)),
+            ("prefix_misses", Json::Num(self.prefix_misses as f64)),
+            (
+                "prefill_tokens_saved",
+                Json::Num(self.prefill_tokens_saved as f64),
+            ),
+            ("inserted_blocks", Json::Num(self.inserted_blocks as f64)),
+            ("cow_copies", Json::Num(self.cow_copies as f64)),
+            ("evictions", Json::Num(self.evictions as f64)),
+            ("cached_blocks", Json::Num(self.cached_blocks as f64)),
+            ("hit_rate", Json::Num(self.hit_rate())),
+        ])
+    }
+}
+
+/// The result of a successful lookup: a retained block chain covering
+/// the first `tokens` prompt tokens.  The caller owns one reference on
+/// every id in `blocks` and must hand them to a row table (whose sync
+/// releases them at retirement) or release them itself.
+#[derive(Debug)]
+pub struct PrefixMatch {
+    pub blocks: Vec<u32>,
+    pub tokens: usize,
+}
+
+/// One trie node: the block it owns, the token content that block
+/// caches, and its LRU stamp.  Slab-allocated; `live == false` slots
+/// are on the free list for reuse.
+#[derive(Debug)]
+struct Node {
+    key: Vec<i32>,
+    block: u32,
+    parent: usize,
+    children: Vec<usize>,
+    stamp: u64,
+    live: bool,
+}
+
+const ROOT: usize = 0;
+
+/// The prefix index.  It does not own the pool — every mutating call
+/// takes the [`BlockManager`] so retain/release/alloc stay in the one
+/// accounting domain the leak tests audit.
+#[derive(Debug)]
+pub struct PrefixCache {
+    block_size: usize,
+    nodes: Vec<Node>,
+    free_nodes: Vec<usize>,
+    /// logical LRU clock, bumped once per lookup/insert
+    clock: u64,
+    stats: PrefixStats,
+}
+
+impl PrefixCache {
+    pub fn new(block_size: usize) -> PrefixCache {
+        assert!(block_size > 0, "prefix cache needs a positive block size");
+        PrefixCache {
+            block_size,
+            nodes: vec![Node {
+                key: Vec::new(),
+                block: u32::MAX,
+                parent: usize::MAX,
+                children: Vec::new(),
+                stamp: 0,
+                live: true,
+            }],
+            free_nodes: Vec::new(),
+            clock: 0,
+            stats: PrefixStats::default(),
+        }
+    }
+
+    pub fn stats(&self) -> PrefixStats {
+        self.stats
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    /// Blocks currently registered in the trie.
+    pub fn cached_blocks(&self) -> usize {
+        self.stats.cached_blocks
+    }
+
+    /// Longest cached prefix of `tokens` (pass the prompt already capped
+    /// to the mappable span — the engine caps at `prompt_len - 1` so at
+    /// least one suffix token remains to prefill).  On a hit, every
+    /// returned block is retained on behalf of the caller.
+    pub fn lookup(&mut self, tokens: &[i32], mgr: &mut BlockManager) -> Option<PrefixMatch> {
+        self.clock += 1;
+        self.stats.lookups += 1;
+        let bs = self.block_size;
+        let mut cur = ROOT;
+        let mut consumed = 0usize;
+        let mut blocks: Vec<u32> = Vec::new();
+        loop {
+            let rest = &tokens[consumed..];
+            if rest.is_empty() {
+                break;
+            }
+            // prefer the full-block child (unique per key: dedup on insert)
+            let full = self.nodes[cur].children.iter().copied().find(|&c| {
+                let k = &self.nodes[c].key;
+                k.len() == bs && rest.len() >= bs && rest[..bs] == k[..]
+            });
+            if let Some(c) = full {
+                self.nodes[c].stamp = self.clock;
+                blocks.push(self.nodes[c].block);
+                consumed += bs;
+                cur = c;
+                continue;
+            }
+            // else the longest partial leaf whose whole key matches
+            let mut best_node = None;
+            let mut best_len = 0usize;
+            for &c in &self.nodes[cur].children {
+                let k = &self.nodes[c].key;
+                if k.len() < bs
+                    && k.len() <= rest.len()
+                    && k.len() > best_len
+                    && rest[..k.len()] == k[..]
+                {
+                    best_node = Some(c);
+                    best_len = k.len();
+                }
+            }
+            if let Some(c) = best_node {
+                self.nodes[c].stamp = self.clock;
+                blocks.push(self.nodes[c].block);
+                consumed += best_len;
+            }
+            break;
+        }
+        if consumed == 0 {
+            self.stats.prefix_misses += 1;
+            return None;
+        }
+        for &b in &blocks {
+            mgr.retain(b);
+        }
+        self.stats.prefix_hits += 1;
+        self.stats.prefill_tokens_saved += consumed as u64;
+        Some(PrefixMatch {
+            blocks,
+            tokens: consumed,
+        })
+    }
+
+    /// Register a prompt span whose KV lives in `chain` (the row's block
+    /// table, covering at least `blocks_for(tokens.len())` blocks, block
+    /// `i` caching `tokens[i*16 .. (i+1)*16]`).  Newly registered blocks
+    /// are retained (the trie becomes a co-owner); spans already cached
+    /// are deduplicated and only LRU-touched.  A partial tail chunk
+    /// becomes a leaf; nothing nests under it.
+    pub fn insert(&mut self, tokens: &[i32], chain: &[u32], mgr: &mut BlockManager) {
+        if tokens.is_empty() {
+            return;
+        }
+        self.clock += 1;
+        let bs = self.block_size;
+        let n_blocks = tokens.len().div_ceil(bs);
+        debug_assert!(
+            chain.len() >= n_blocks,
+            "prefix insert: chain of {} blocks cannot cover {} tokens",
+            chain.len(),
+            tokens.len()
+        );
+        let mut cur = ROOT;
+        for b in 0..n_blocks.min(chain.len()) {
+            let chunk = &tokens[b * bs..((b + 1) * bs).min(tokens.len())];
+            let existing = self.nodes[cur]
+                .children
+                .iter()
+                .copied()
+                .find(|&c| self.nodes[c].key == chunk);
+            if let Some(c) = existing {
+                self.nodes[c].stamp = self.clock;
+                if chunk.len() < bs {
+                    return; // partial leaf already cached
+                }
+                cur = c;
+                continue;
+            }
+            let node = self.new_node(chunk, chain[b], cur);
+            mgr.retain(chain[b]);
+            self.stats.inserted_blocks += 1;
+            self.stats.cached_blocks += 1;
+            if chunk.len() < bs {
+                return; // partial tails are leaves
+            }
+            cur = node;
+        }
+    }
+
+    /// Copy-on-write replacement of a shared, partially filled tail
+    /// block: allocate a fresh block (evicting LRU cache entries if the
+    /// pool is exhausted), release the caller's reference on `shared`,
+    /// and return the fresh id.  On the stub backend the "memcpy" of the
+    /// tail's prefix portion is pure bookkeeping — KV content is virtual
+    /// — but the refcount choreography is exactly the real one.
+    pub fn cow_tail(&mut self, mgr: &mut BlockManager, shared: u32) -> Result<u32> {
+        let fresh = loop {
+            match mgr.alloc() {
+                Ok(id) => break id,
+                Err(e) => {
+                    if !self.evict_lru(mgr) {
+                        return Err(e.context("prefix COW: pool exhausted and cache empty"));
+                    }
+                }
+            }
+        };
+        mgr.release(shared);
+        self.stats.cow_copies += 1;
+        Ok(fresh)
+    }
+
+    /// Reclaim the least-recently-used leaf (release its block, unlink
+    /// it).  Interior nodes become evictable once their subtree is gone.
+    /// Returns false when the trie is empty.
+    pub fn evict_lru(&mut self, mgr: &mut BlockManager) -> bool {
+        let mut best: Option<(usize, u64)> = None;
+        for (i, n) in self.nodes.iter().enumerate().skip(1) {
+            if n.live && n.children.is_empty() {
+                let older = match best {
+                    None => true,
+                    Some((_, s)) => n.stamp < s,
+                };
+                if older {
+                    best = Some((i, n.stamp));
+                }
+            }
+        }
+        let Some((i, _)) = best else {
+            return false;
+        };
+        let block = self.nodes[i].block;
+        let parent = self.nodes[i].parent;
+        self.nodes[parent].children.retain(|&c| c != i);
+        self.nodes[i].live = false;
+        self.nodes[i].key.clear();
+        self.nodes[i].children.clear();
+        self.free_nodes.push(i);
+        mgr.release(block);
+        self.stats.evictions += 1;
+        self.stats.cached_blocks -= 1;
+        true
+    }
+
+    /// Evict LRU entries until the pool has at least `need` free blocks
+    /// (the only reclamation trigger: pool pressure).  Returns false if
+    /// the cache drained before reaching the target.
+    pub fn evict_until_free(&mut self, mgr: &mut BlockManager, need: usize) -> bool {
+        while mgr.free_blocks() < need {
+            if !self.evict_lru(mgr) {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Drop every cached chain (shutdown / leak audit).  Afterwards the
+    /// trie holds no block references; once rows release theirs too, the
+    /// pool free list is back at capacity.
+    pub fn evict_all(&mut self, mgr: &mut BlockManager) {
+        while self.evict_lru(mgr) {}
+    }
+
+    fn new_node(&mut self, key: &[i32], block: u32, parent: usize) -> usize {
+        let node = Node {
+            key: key.to_vec(),
+            block,
+            parent,
+            children: Vec::new(),
+            stamp: self.clock,
+            live: true,
+        };
+        let idx = match self.free_nodes.pop() {
+            Some(i) => {
+                self.nodes[i] = node;
+                i
+            }
+            None => {
+                self.nodes.push(node);
+                self.nodes.len() - 1
+            }
+        };
+        self.nodes[parent].children.push(idx);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const BS: usize = 16;
+
+    fn pool(cap: usize) -> BlockManager {
+        BlockManager::new(cap, BS)
+    }
+
+    /// Simulate a row prefilling `tokens`: allocate the chain the row's
+    /// table would hold (the row's own references).
+    fn prefill_chain(mgr: &mut BlockManager, tokens: &[i32]) -> Vec<u32> {
+        (0..tokens.len().div_ceil(BS))
+            .map(|_| mgr.alloc().expect("pool has room"))
+            .collect()
+    }
+
+    fn toks(start: i32, n: usize) -> Vec<i32> {
+        (0..n as i32).map(|i| start + i).collect()
+    }
+
+    #[test]
+    fn full_block_prefixes_match_and_misses_count() {
+        let mut mgr = pool(64);
+        let mut cache = PrefixCache::new(BS);
+        let prompt = toks(10, 40); // 2 full blocks + 8-token tail
+        let chain = prefill_chain(&mut mgr, &prompt);
+        cache.insert(&prompt, &chain, &mut mgr);
+        assert_eq!(cache.cached_blocks(), 3);
+
+        // identical prompt: 2 full blocks + the whole partial tail
+        let m = cache.lookup(&prompt, &mut mgr).expect("hit");
+        assert_eq!(m.tokens, 40);
+        assert_eq!(m.blocks, chain);
+
+        // shared first block only
+        let mut half = toks(10, 16);
+        half.extend(toks(500, 10));
+        let m2 = cache.lookup(&half, &mut mgr).expect("hit");
+        assert_eq!(m2.tokens, 16);
+        assert_eq!(m2.blocks, chain[..1]);
+
+        // disjoint prompt: miss
+        assert!(cache.lookup(&toks(900, 20), &mut mgr).is_none());
+        let s = cache.stats();
+        assert_eq!((s.lookups, s.prefix_hits, s.prefix_misses), (3, 2, 1));
+        assert_eq!(s.prefill_tokens_saved, 56);
+
+        // release the map references + the row chain + the cache
+        for b in m.blocks.iter().chain(m2.blocks.iter()).chain(chain.iter()) {
+            mgr.release(*b);
+        }
+        cache.evict_all(&mut mgr);
+        assert!(mgr.stats().is_leak_free());
+    }
+
+    #[test]
+    fn partial_tail_requires_the_whole_key() {
+        let mut mgr = pool(64);
+        let mut cache = PrefixCache::new(BS);
+        let mut a = toks(0, 16);
+        a.extend(toks(100, 6)); // tail of 6
+        let chain = prefill_chain(&mut mgr, &a);
+        cache.insert(&a, &chain, &mut mgr);
+
+        // same full block, tail diverges after 3 tokens: only the full
+        // block matches (partial keys match whole or not at all)
+        let mut b = toks(0, 16);
+        b.extend(toks(100, 3));
+        b.extend(toks(700, 5));
+        let m = cache.lookup(&b, &mut mgr).expect("hit");
+        assert_eq!(m.tokens, 16);
+        for id in m.blocks.iter().chain(chain.iter()) {
+            mgr.release(*id);
+        }
+        cache.evict_all(&mut mgr);
+        assert!(mgr.stats().is_leak_free());
+    }
+
+    #[test]
+    fn sibling_partial_leaves_pick_the_longest_match() {
+        let mut mgr = pool(64);
+        let mut cache = PrefixCache::new(BS);
+        let short = toks(40, 4);
+        let long = toks(40, 9); // same first 4 tokens, longer tail
+        let c_short = prefill_chain(&mut mgr, &short);
+        let c_long = prefill_chain(&mut mgr, &long);
+        cache.insert(&short, &c_short, &mut mgr);
+        cache.insert(&long, &c_long, &mut mgr);
+        assert_eq!(cache.cached_blocks(), 2);
+
+        let m = cache.lookup(&toks(40, 12), &mut mgr).expect("hit");
+        assert_eq!(m.tokens, 9, "longest matching partial leaf wins");
+        assert_eq!(m.blocks, c_long);
+        for id in m.blocks.iter().chain(&c_short).chain(&c_long) {
+            mgr.release(*id);
+        }
+        cache.evict_all(&mut mgr);
+        assert!(mgr.stats().is_leak_free());
+    }
+
+    #[test]
+    fn insert_deduplicates_shared_spans() {
+        let mut mgr = pool(64);
+        let mut cache = PrefixCache::new(BS);
+        let shared = toks(7, 32);
+        let mut a = shared.clone();
+        a.extend(toks(200, 5));
+        let mut b = shared.clone();
+        b.extend(toks(300, 5));
+        let ca = prefill_chain(&mut mgr, &a);
+        let cb = prefill_chain(&mut mgr, &b);
+        cache.insert(&a, &ca, &mut mgr);
+        let before = cache.stats().inserted_blocks;
+        cache.insert(&b, &cb, &mut mgr);
+        // b re-walks the two shared full blocks (dedup) and adds only its
+        // own 5-token tail
+        assert_eq!(cache.stats().inserted_blocks, before + 1);
+        assert_eq!(cache.cached_blocks(), 4);
+        for id in ca.iter().chain(&cb) {
+            mgr.release(*id);
+        }
+        cache.evict_all(&mut mgr);
+        assert!(mgr.stats().is_leak_free());
+    }
+
+    #[test]
+    fn cow_tail_swaps_the_reference_and_counts() {
+        let mut mgr = pool(8);
+        let mut cache = PrefixCache::new(BS);
+        let prompt = toks(3, 20); // 1 full + 4-token tail
+        let chain = prefill_chain(&mut mgr, &prompt);
+        cache.insert(&prompt, &chain, &mut mgr);
+
+        let m = cache.lookup(&prompt, &mut mgr).expect("hit");
+        let shared_tail = m.blocks[1];
+        let fresh = cache.cow_tail(&mut mgr, shared_tail).expect("pool has room");
+        assert_ne!(fresh, shared_tail);
+        assert_eq!(cache.stats().cow_copies, 1);
+
+        // the mapped row now owns [shared full, fresh tail]
+        mgr.release(m.blocks[0]);
+        mgr.release(fresh);
+        for id in &chain {
+            mgr.release(*id);
+        }
+        cache.evict_all(&mut mgr);
+        assert!(mgr.stats().is_leak_free());
+    }
+
+    #[test]
+    fn cow_tail_evicts_under_pressure_instead_of_failing() {
+        let mut mgr = pool(4);
+        let mut cache = PrefixCache::new(BS);
+        let a = toks(0, 30); // 2 blocks
+        let ca = prefill_chain(&mut mgr, &a);
+        cache.insert(&a, &ca, &mut mgr);
+        let b = toks(400, 25); // 2 more: pool now full
+        let cb = prefill_chain(&mut mgr, &b);
+        cache.insert(&b, &cb, &mut mgr);
+        assert_eq!(mgr.free_blocks(), 0);
+        // rows retired: only the cache still references the 4 blocks
+        for id in ca.iter().chain(&cb) {
+            mgr.release(*id);
+        }
+
+        let m = cache.lookup(&a, &mut mgr).expect("hit");
+        let fresh = cache
+            .cow_tail(&mut mgr, m.blocks[1])
+            .expect("eviction makes room");
+        assert!(cache.stats().evictions >= 1, "pressure reclaimed LRU");
+        mgr.release(m.blocks[0]);
+        mgr.release(fresh);
+        cache.evict_all(&mut mgr);
+        assert!(mgr.stats().is_leak_free());
+    }
+
+    #[test]
+    fn lru_eviction_reclaims_oldest_leaves_first_and_leak_frees() {
+        let mut mgr = pool(32);
+        let mut cache = PrefixCache::new(BS);
+        let old = toks(0, 20);
+        let newer = toks(500, 20);
+        let c_old = prefill_chain(&mut mgr, &old);
+        let c_new = prefill_chain(&mut mgr, &newer);
+        cache.insert(&old, &c_old, &mut mgr);
+        cache.insert(&newer, &c_new, &mut mgr);
+        for id in c_old.iter().chain(&c_new) {
+            mgr.release(*id);
+        }
+        // touch `old` so `newer` becomes LRU
+        let m = cache.lookup(&old, &mut mgr).expect("hit");
+        for id in &m.blocks {
+            mgr.release(*id);
+        }
+
+        assert!(cache.evict_lru(&mut mgr));
+        assert_eq!(cache.cached_blocks(), 3);
+        // the evicted leaf is `newer`'s 4-token tail: a fresh lookup of
+        // `newer` now matches only its full block, while `old` still
+        // matches end to end
+        let m_new = cache.lookup(&newer, &mut mgr).expect("full block remains");
+        assert_eq!(m_new.tokens, 16);
+        let m2 = cache.lookup(&old, &mut mgr).expect("old chain survives");
+        assert_eq!(m2.tokens, 20);
+        for id in m_new.blocks.iter().chain(&m2.blocks) {
+            mgr.release(*id);
+        }
+        cache.evict_all(&mut mgr);
+        assert_eq!(cache.cached_blocks(), 0);
+        let s = mgr.stats();
+        assert!(s.is_leak_free(), "free list back to capacity: {s:?}");
+    }
+
+    #[test]
+    fn evict_until_free_stops_at_the_target() {
+        let mut mgr = pool(6);
+        let mut cache = PrefixCache::new(BS);
+        for start in [0, 1000, 2000] {
+            let p = toks(start, 20); // 2 blocks each
+            let c = prefill_chain(&mut mgr, &p);
+            cache.insert(&p, &c, &mut mgr);
+            for id in &c {
+                mgr.release(*id);
+            }
+        }
+        assert_eq!(mgr.free_blocks(), 0);
+        assert!(cache.evict_until_free(&mut mgr, 2));
+        assert!(mgr.free_blocks() >= 2);
+        assert!(cache.cached_blocks() <= 4);
+        // demanding more than capacity drains the cache and reports it
+        assert!(!cache.evict_until_free(&mut mgr, 7));
+        assert!(mgr.stats().is_leak_free());
+    }
+}

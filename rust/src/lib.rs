@@ -73,6 +73,7 @@ pub mod prelude {
     pub use crate::cluster::{build_router, replicate_policies, Router, ShardLoad};
     pub use crate::config::{AdmissionSpec, PolicySpec, RouterSpec, ServingConfig};
     pub use crate::engine::{BatchState, Engine, EngineConfig, GenOutput};
+    pub use crate::kvcache::prefix::{PrefixCache, PrefixStats};
     pub use crate::kvcache::{BlockManager, KvBlockStats, KvLayout};
     pub use crate::policy::{
         Fixed, LutAdaptive, ModelBased, NoSpec, RoundFeedback, SpeculationPolicy,

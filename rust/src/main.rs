@@ -28,17 +28,20 @@ use specbatch::admission::{build_controller, replicate_controllers};
 use specbatch::cluster::sim::simulate_trace_cluster_admission_tel;
 use specbatch::cluster::{build_router, replicate_policies};
 use specbatch::config::{AdmissionSpec, PolicySpec, RouterSpec};
+use specbatch::engine::prefix_cache_from_env;
+use specbatch::kvcache::prefix::PrefixStats;
 use specbatch::kvcache::KvLayout;
 use specbatch::metrics::{LatencyRecorder, RoundEvent, SloSummary};
 use specbatch::policy::{Fixed, LutAdaptive, ModelBased, NoSpec, SpeculationPolicy};
 use specbatch::server::{run_experiment, Backend, SchedulingMode, ServerConfig};
 use specbatch::simulator::{
-    simulate_trace_admission_tel, simulate_trace_continuous_admission_tel, simulated_lut,
-    AcceptanceDrift, AcceptanceProcess, CostModel, GpuProfile, ModelProfile, SimConfig,
+    simulate_trace_admission_tel_prefix, simulate_trace_continuous_admission_tel_prefix,
+    simulated_lut, AcceptanceDrift, AcceptanceProcess, CostModel, GpuProfile, ModelProfile,
+    SimConfig,
 };
 use specbatch::telemetry::attrib::{RoundWaste, Waterfall, WasteSurface};
 use specbatch::telemetry::{self, Telemetry, TelemetryMode};
-use specbatch::traffic::{SloSpec, Trace, TrafficPattern};
+use specbatch::traffic::{SharedPrefixSpec, SloSpec, Trace, TrafficPattern};
 use specbatch::util::cli::{ArgSpec, Args};
 use specbatch::util::json::Json;
 use specbatch::{log_info, util};
@@ -190,7 +193,7 @@ fn flight_opts(spec: ArgSpec, default_prefix: &'static str) -> ArgSpec {
 const SIM_CONFIG_KEYS: &[&str] = &[
     "gpu", "llm", "ssm", "policy", "mode", "workers", "router", "requests", "interval", "cv",
     "prompt-len", "kv-layout", "admission", "slo-p50", "slo-scale", "seed", "drift-at",
-    "drift-c", "drift-gamma",
+    "drift-c", "drift-gamma", "prefix-cache", "tenants", "templates",
 ];
 
 /// Snapshot the experiment knobs into a stable JSON object for the bench
@@ -204,7 +207,74 @@ fn cli_config_json(cmd: &str, args: &Args, keys: &[&str]) -> Json {
     }
     pairs.push(("fig6", Json::Bool(args.has_flag("fig6"))));
     pairs.push(("mixed-domain", Json::Bool(args.has_flag("mixed-domain"))));
+    pairs.push(("shared-prefix", Json::Bool(args.has_flag("shared-prefix"))));
     Json::obj(pairs)
+}
+
+/// The prefix-sharing knobs shared by `serve` and `sim`.
+fn prefix_opts(spec: ArgSpec) -> ArgSpec {
+    spec.opt(
+        "prefix-cache",
+        "auto",
+        "auto | on | off — share KV blocks across identical prompt prefixes \
+         (auto = $SPECBATCH_PREFIX_CACHE, else off; needs --kv-layout paged)",
+    )
+    .flag(
+        "shared-prefix",
+        "multi-tenant traffic: every prompt becomes a Zipf-weighted \
+         (tenant, template) system prefix plus a tiny unique user tail",
+    )
+    .opt("tenants", "4", "shared-prefix tenant count")
+    .opt("templates", "4", "shared-prefix templates per tenant")
+}
+
+/// Resolve `--prefix-cache auto|on|off`; `auto` defers to the
+/// environment.  Sharing needs a block table, so a dense layout forces
+/// the cache off — explicitly asking for both is an error.
+fn resolve_prefix_cache(args: &Args, layout: KvLayout) -> Result<bool> {
+    let raw = args.get("prefix-cache")?;
+    let on = match raw {
+        "auto" => prefix_cache_from_env(),
+        "on" => true,
+        "off" => false,
+        other => bail!("--prefix-cache must be auto|on|off, got {other:?}"),
+    };
+    if on && layout == KvLayout::Dense {
+        if raw == "on" {
+            bail!("--prefix-cache on needs --kv-layout paged (dense has no block table to share)");
+        }
+        return Ok(false); // env said on, layout can't: silently degrade
+    }
+    Ok(on)
+}
+
+/// `--shared-prefix` layers the multi-tenant template structure onto an
+/// already generated trace (arrival times and deadlines are untouched).
+fn apply_shared_prefix(args: &Args, trace: Trace) -> Result<Trace> {
+    if !args.has_flag("shared-prefix") {
+        return Ok(trace);
+    }
+    let spec = SharedPrefixSpec {
+        tenants: args.get_usize("tenants")?,
+        templates: args.get_usize("templates")?,
+        ..SharedPrefixSpec::default()
+    };
+    Ok(trace.with_shared_prefix(&spec, args.get_u64("seed")?))
+}
+
+fn print_prefix_stats(stats: &Option<PrefixStats>) {
+    if let Some(p) = stats {
+        println!(
+            "prefix cache: {:.1}% hit rate over {} lookups | {} prefill tokens saved \
+             | {} cow copies | {} evictions | {} blocks cached at shutdown",
+            p.hit_rate() * 100.0,
+            p.lookups,
+            p.prefill_tokens_saved,
+            p.cow_copies,
+            p.evictions,
+            p.cached_blocks
+        );
+    }
 }
 
 /// Post-run telemetry output: write the enabled exporters under the
@@ -539,6 +609,7 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         "exporter prefix (.prom / .trace.json / .events.jsonl)",
     )
     .opt("bench-out", "", "emit BENCH_<name>.json via telemetry::bench (empty = skip)");
+    let spec = prefix_opts(spec);
     let spec = flight_opts(spec, "results/serve_flight");
     let args = spec.parse(&argv)?;
 
@@ -558,6 +629,7 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         args.get_usize("requests")?,
         args.get_u64("seed")?,
     );
+    trace = apply_shared_prefix(&args, trace)?;
     let slo_p50 = args.get_f64("slo-p50")?;
     if slo_p50 > 0.0 {
         let slo = SloSpec::new(slo_p50, args.get_f64("slo-scale")?);
@@ -573,13 +645,15 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
     let workers = args.get_usize("workers")?;
     let router = RouterSpec::parse(args.get("router")?)?;
     let tel = attach_flight(&args, parse_telemetry(&args)?)?;
+    let kv_layout = KvLayout::parse(args.get("kv-layout")?)?;
     let cfg = ServerConfig {
         max_batch: args.get_usize("max-batch")?,
         max_new_tokens: args.get_usize("tokens")?,
         mode,
         workers,
         router,
-        kv_layout: KvLayout::parse(args.get("kv-layout")?)?,
+        kv_layout,
+        prefix_cache: resolve_prefix_cache(&args, kv_layout)?,
         admission: AdmissionSpec::parse(args.get("admission")?)?,
         telemetry: tel.clone(),
         ..ServerConfig::default()
@@ -603,6 +677,7 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
             if kv.is_leak_free() { "" } else { " — LEAKED" }
         );
     }
+    print_prefix_stats(&out.prefix);
     let s = out.recorder.summary();
     let (p50, p90, p99) = out.recorder.percentiles();
     println!(
@@ -659,6 +734,7 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
             &[
                 "policy", "mode", "workers", "router", "requests", "interval", "cv", "tokens",
                 "max-batch", "kv-layout", "admission", "slo-p50", "slo-scale", "seed",
+                "prefix-cache", "tenants", "templates",
             ],
         ),
     )?;
@@ -712,6 +788,7 @@ fn cmd_sim(argv: Vec<String>) -> Result<()> {
             "exporter prefix (.prom / .trace.json / .events.jsonl)",
         )
         .opt("bench-out", "", "emit BENCH_<name>.json via telemetry::bench (empty = skip)");
+    let spec = prefix_opts(spec);
     let spec = flight_opts(spec, "results/sim_flight");
     let args = spec.parse(&argv)?;
     let tel = attach_flight(&args, parse_telemetry(&args)?)?;
@@ -737,6 +814,7 @@ fn cmd_sim(argv: Vec<String>) -> Result<()> {
     } else {
         None
     };
+    let kv_layout = KvLayout::parse(args.get("kv-layout")?)?;
     let mut cfg = SimConfig {
         llm: CostModel::new(llm, gpu),
         ssm: CostModel::new(ssm, gpu),
@@ -746,8 +824,9 @@ fn cmd_sim(argv: Vec<String>) -> Result<()> {
         max_batch: 16,
         max_new_tokens: 128,
         host_overhead: 0.2e-3,
-        kv_layout: KvLayout::parse(args.get("kv-layout")?)?,
+        kv_layout,
         kv_block: specbatch::kvcache::DEFAULT_BLOCK_SIZE,
+        prefix_cache: resolve_prefix_cache(&args, kv_layout)?,
         seed: args.get_u64("seed")?,
     };
     if args.has_flag("mixed-domain") {
@@ -784,6 +863,7 @@ fn cmd_sim(argv: Vec<String>) -> Result<()> {
     if args.has_flag("mixed-domain") {
         trace = trace.with_classes_alternating(2);
     }
+    trace = apply_shared_prefix(&args, trace)?;
     let slo_p50 = args.get_f64("slo-p50")?;
     if slo_p50 > 0.0 {
         let slo = SloSpec::new(slo_p50, args.get_f64("slo-scale")?);
@@ -841,6 +921,7 @@ fn cmd_sim(argv: Vec<String>) -> Result<()> {
             .map(|r| r.deferred_rounds)
             .sum();
         print_slo_line(&report.recorder.slo_attainment(), defer_events);
+        print_prefix_stats(&report.prefix);
         let counts = report.shard_requests();
         let attain = report.shard_attainment();
         for (k, rounds) in report.shard_rounds.iter().enumerate() {
@@ -907,21 +988,24 @@ fn cmd_sim(argv: Vec<String>) -> Result<()> {
         }
     };
     let mut ctrl = build_controller(admission);
-    let (rec, rounds) = match mode {
-        SchedulingMode::Static => (
-            simulate_trace_admission_tel(&cfg, policy.as_mut(), ctrl.as_mut(), &trace, &tel),
-            Vec::new(),
-        ),
-        SchedulingMode::Continuous => {
-            let (rec, rounds) = simulate_trace_continuous_admission_tel(
+    let (rec, rounds, prefix_stats) = match mode {
+        SchedulingMode::Static => {
+            let (rec, ps) = simulate_trace_admission_tel_prefix(
                 &cfg,
                 policy.as_mut(),
                 ctrl.as_mut(),
                 &trace,
                 &tel,
             );
-            (rec, rounds)
+            (rec, Vec::new(), ps)
         }
+        SchedulingMode::Continuous => simulate_trace_continuous_admission_tel_prefix(
+            &cfg,
+            policy.as_mut(),
+            ctrl.as_mut(),
+            &trace,
+            &tel,
+        ),
     };
     if let Some(snapshot) = policy.snapshot() {
         println!("fitted model: {}", snapshot.compact());
@@ -945,6 +1029,7 @@ fn cmd_sim(argv: Vec<String>) -> Result<()> {
         &rec.slo_attainment(),
         rec.records().iter().map(|r| r.deferred_rounds).sum(),
     );
+    print_prefix_stats(&prefix_stats);
     rec.to_csv().write_file(args.get("out")?)?;
     println!("-> {}", args.get("out")?);
     if !rounds.is_empty() {

@@ -38,6 +38,11 @@ pub struct RequestRecord {
     /// true when admission control shed the request before it ever
     /// occupied a batch row
     pub shed: bool,
+    /// when the first generated token was committed, on the common clock
+    /// (None for shed requests and paths that don't track it) — TTFT is
+    /// the headline metric prefix sharing moves: a prefix hit skips most
+    /// of the prefill, which lands entirely before the first token
+    pub first_token_at: Option<f64>,
 }
 
 impl RequestRecord {
@@ -52,6 +57,12 @@ impl RequestRecord {
 
     pub fn service_time(&self) -> f64 {
         self.finished_at - self.started_at
+    }
+
+    /// Time to first token: `first_token_at - sent_at` (queueing
+    /// included), `None` where the first-token instant wasn't tracked.
+    pub fn ttft(&self) -> Option<f64> {
+        self.first_token_at.map(|t| t - self.sent_at)
     }
 
     /// Whether the request met its SLO: `None` when it carried no
@@ -134,6 +145,36 @@ impl LatencyRecorder {
     /// no service latency, only the attainment accounting sees it.
     pub fn latencies(&self) -> Vec<f64> {
         self.completed().map(|r| r.latency()).collect()
+    }
+
+    /// TTFTs of completed requests that tracked their first-token instant
+    /// (shed requests never commit a token).
+    pub fn ttfts(&self) -> Vec<f64> {
+        self.completed().filter_map(|r| r.ttft()).collect()
+    }
+
+    /// Mean TTFT over completed requests; NaN when nothing tracked it.
+    pub fn mean_ttft(&self) -> f64 {
+        let t = self.ttfts();
+        if t.is_empty() {
+            return f64::NAN;
+        }
+        t.iter().sum::<f64>() / t.len() as f64
+    }
+
+    /// (p50, p90, p99) TTFT, zeros on runs that tracked none (mirrors
+    /// [`Self::percentiles`]'s degenerate-run convention).
+    pub fn ttft_percentiles(&self) -> (f64, f64, f64) {
+        let mut t = self.ttfts();
+        if t.is_empty() {
+            return (0.0, 0.0, 0.0);
+        }
+        t.sort_by(f64::total_cmp);
+        (
+            percentile_sorted(&t, 50.0),
+            percentile_sorted(&t, 90.0),
+            percentile_sorted(&t, 99.0),
+        )
     }
 
     /// SLO attainment accounting across all records, sheds included.
@@ -247,6 +288,7 @@ impl LatencyRecorder {
             "finished_at_s",
             "latency_s",
             "queue_delay_s",
+            "ttft_s",
             "tokens",
             "batch",
             "spec_len",
@@ -266,6 +308,7 @@ impl LatencyRecorder {
                 f(r.finished_at),
                 f(r.latency()),
                 f(r.queue_delay()),
+                r.ttft().map(f).unwrap_or_default(),
                 r.tokens.to_string(),
                 r.batch.to_string(),
                 r.spec_len.to_string(),
@@ -409,6 +452,7 @@ mod tests {
             deadline: None,
             deferred_rounds: 0,
             shed: false,
+            first_token_at: Some(started),
         }
     }
 
@@ -425,6 +469,7 @@ mod tests {
             deadline: Some(deadline),
             deferred_rounds: 2,
             shed: true,
+            first_token_at: None,
         }
     }
 
@@ -499,6 +544,27 @@ mod tests {
         assert_eq!(s.met + s.missed + 1, s.deadlined);
         assert!((s.attainment() - 1.0 / 3.0).abs() < 1e-12);
         assert!(LatencyRecorder::new().slo_attainment().attainment().is_nan());
+    }
+
+    #[test]
+    fn ttft_tracks_first_token_and_skips_untracked_records() {
+        let mut recd = LatencyRecorder::new();
+        let mut a = rec(1, 0.0, 2.0, 5.0); // rec() stamps first token at start
+        a.first_token_at = Some(3.0);
+        recd.push(a);
+        assert_eq!(a.ttft(), Some(3.0));
+        let mut b = rec(2, 1.0, 1.0, 4.0);
+        b.first_token_at = None; // untracked path: no TTFT contribution
+        recd.push(b);
+        recd.push(shed_rec(3, 0.0, 0.4, 0.3)); // sheds never count
+        assert_eq!(recd.ttfts(), vec![3.0]);
+        assert!((recd.mean_ttft() - 3.0).abs() < 1e-12);
+        assert_eq!(recd.ttft_percentiles(), (3.0, 3.0, 3.0));
+        assert!(LatencyRecorder::new().mean_ttft().is_nan());
+        assert_eq!(LatencyRecorder::new().ttft_percentiles(), (0.0, 0.0, 0.0));
+        // the CSV export carries the ttft_s column
+        let out = recd.to_csv().to_string();
+        assert!(out.lines().next().unwrap().contains("ttft_s"));
     }
 
     #[test]

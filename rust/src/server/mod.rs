@@ -38,7 +38,8 @@ use crate::batcher::{BatchRequest, BatcherConfig, ContinuousBatcher, ShedRequest
 use crate::cluster::server::ShardGauge;
 use crate::cluster::ShardBreakdown;
 use crate::config::{AdmissionSpec, PolicySpec, RouterSpec};
-use crate::engine::{Engine, EngineConfig};
+use crate::engine::{prefix_cache_from_env, Engine, EngineConfig};
+use crate::kvcache::prefix::PrefixStats;
 use crate::kvcache::{KvBlockStats, KvLayout};
 use crate::log_info;
 use crate::metrics::{LatencyRecorder, RequestRecord, RoundEvent};
@@ -102,6 +103,11 @@ pub struct ServerConfig {
     /// `SPECBATCH_ADMISSION` env override, else FIFO (with no deadlines
     /// on the requests every controller behaves exactly like FIFO)
     pub admission: AdmissionSpec,
+    /// prefix-sharing KV cache (paged layout only).  Same resolution rule
+    /// as `kv_layout`: defaults to the `SPECBATCH_PREFIX_CACHE` env
+    /// override, and an explicit non-default choice here OR on
+    /// `engine.prefix_cache` wins
+    pub prefix_cache: bool,
     /// observability handle the worker's engine (and, `workers > 1`, the
     /// dispatcher and every shard's engine via [`Telemetry::for_shard`])
     /// emit on.  Defaults to the disabled handle: every emitter is an
@@ -121,6 +127,7 @@ impl Default for ServerConfig {
             router: RouterSpec::RoundRobin,
             kv_layout: KvLayout::default_layout(),
             admission: AdmissionSpec::default_spec(),
+            prefix_cache: prefix_cache_from_env(),
             telemetry: Telemetry::disabled(),
         }
     }
@@ -162,6 +169,10 @@ pub struct ServerResponse {
     pub deferred_rounds: usize,
     /// true when admission control shed the request unserved
     pub shed: bool,
+    /// experiment-clock instant the first generated token was committed
+    /// (end of the request's prefill; `None` for shed requests) — the
+    /// numerator of TTFT = `first_token_at - sent_at`
+    pub first_token_at: Option<f64>,
 }
 
 /// Inbound queue message.
@@ -179,6 +190,10 @@ pub struct WorkerReport {
     pub timeline: Vec<RoundEvent>,
     pub policy_snapshot: Option<Json>,
     pub kv_blocks: Option<KvBlockStats>,
+    /// prefix-cache counters, snapshotted before the shutdown
+    /// `clear_prefix_cache` that returns shared blocks to the pool (so
+    /// `kv_blocks.is_leak_free()` keeps meaning "no block unaccounted")
+    pub prefix: Option<PrefixStats>,
     /// admission defer events (one per candidate per boundary held back)
     pub deferrals: usize,
     /// requests shed by admission control
@@ -333,11 +348,17 @@ pub(crate) fn worker(
     // explicit non-default choice on either wins, so setting just one of
     // them is never silently clobbered by the other's default
     let default_layout = KvLayout::default_layout();
+    let default_prefix = prefix_cache_from_env();
     let engine_cfg = EngineConfig {
         kv_layout: if cfg.kv_layout != default_layout {
             cfg.kv_layout
         } else {
             cfg.engine.kv_layout
+        },
+        prefix_cache: if cfg.prefix_cache != default_prefix {
+            cfg.prefix_cache
+        } else {
+            cfg.engine.prefix_cache
         },
         ..cfg.engine.clone()
     };
@@ -361,10 +382,16 @@ pub(crate) fn worker(
             &resp_tx,
             gauge.as_deref(),
         )?;
+        // snapshot the prefix counters, then drop the cache's block
+        // references: after a full eviction the pool must be back at
+        // capacity, which is exactly what the leak asserts check
+        let prefix = engine.prefix_stats();
+        engine.clear_prefix_cache();
         let _ = report_tx.send(WorkerReport {
             timeline,
             policy_snapshot: policy.snapshot(),
             kv_blocks: engine.kv_block_stats(),
+            prefix,
             deferrals,
             sheds,
         });
@@ -442,6 +469,7 @@ fn shed_response(shed: ShedRequest) -> ServerResponse {
         deadline: shed.deadline,
         deferred_rounds: shed.deferred_rounds,
         shed: true,
+        first_token_at: None,
     }
 }
 
@@ -605,6 +633,9 @@ fn serve_static(
         }
         // what generate_batch spent outside decode rounds is the prefill
         body.prefill = ((finished_at - started_at) - rounds_wall).max(0.0);
+        // batch-to-completion commits every row's first token when the
+        // shared prefill finishes
+        let first_token_at = started_at + body.prefill;
         if tel.tracing() {
             tel.policy_fit(tel.now(), policy.snapshot());
         }
@@ -635,6 +666,7 @@ fn serve_static(
                 deadline: req.deadline,
                 deferred_rounds: deferred,
                 shed: false,
+                first_token_at: Some(first_token_at),
             };
             if resp_tx.send(resp).is_err() {
                 // harness went away; stop serving
@@ -663,6 +695,7 @@ fn to_response(fin: crate::batcher::FinishedRequest) -> ServerResponse {
         deadline: fin.deadline,
         deferred_rounds: fin.deferred_rounds,
         shed: false,
+        first_token_at: fin.first_token_at,
     }
 }
 
@@ -827,6 +860,9 @@ pub struct ExperimentOutcome {
     /// runs merge the per-shard pools).  A clean run is leak-free:
     /// `free == capacity` — `rust/tests/kv_equivalence.rs` pins it.
     pub kv_blocks: Option<KvBlockStats>,
+    /// prefix-sharing cache counters at shutdown (paged layout with the
+    /// cache enabled only; cluster runs merge the per-shard caches)
+    pub prefix: Option<PrefixStats>,
     /// admission defer events across all workers (0 under FIFO)
     pub deferrals: usize,
     /// requests shed by admission control across all workers; the shed
@@ -892,6 +928,7 @@ pub fn run_experiment(
             deadline: resp.deadline,
             deferred_rounds: resp.deferred_rounds,
             shed: resp.shed,
+            first_token_at: resp.first_token_at,
         });
     }
     client
@@ -905,6 +942,7 @@ pub fn run_experiment(
         policy_snapshot: report.policy_snapshot,
         shards: Vec::new(),
         kv_blocks: report.kv_blocks,
+        prefix: report.prefix,
         deferrals: report.deferrals,
         sheds: report.sheds,
     })

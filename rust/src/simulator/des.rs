@@ -40,7 +40,8 @@ use std::collections::{BTreeMap, VecDeque};
 use crate::admission::{
     apply_plan_to_queue, AdmissionController, AdmissionView, Candidate, Fifo,
 };
-use crate::kvcache::{KvLayout, DEFAULT_BLOCK_SIZE};
+use crate::kvcache::prefix::{PrefixCache, PrefixStats};
+use crate::kvcache::{BlockManager, KvLayout, DEFAULT_BLOCK_SIZE};
 use crate::metrics::{LatencyRecorder, RequestRecord, RoundEvent};
 use crate::policy::{RoundFeedback, SpeculationPolicy};
 use crate::telemetry::attrib::Waterfall;
@@ -88,6 +89,15 @@ pub struct SimConfig {
     pub kv_layout: KvLayout,
     /// tokens per KV block for the timeline's block-utilization column
     pub kv_block: usize,
+    /// admission-time prefix-sharing mirror: when on, a prompt whose
+    /// leading blocks were already served maps them from the shared
+    /// cache and the LLM prefill charge covers only the unmatched
+    /// suffix (the engine's `PrefixCache` payoff in virtual time; the
+    /// SSM still ingests the full prompt — its dense cache is private).
+    /// Off by default: the paper pipeline and every pinned baseline
+    /// predate sharing, and with it off the charges are bit-identical
+    /// to earlier revisions.
+    pub prefix_cache: bool,
     pub seed: u64,
 }
 
@@ -104,6 +114,7 @@ impl SimConfig {
             host_overhead: 0.2e-3,
             kv_layout: KvLayout::Paged,
             kv_block: DEFAULT_BLOCK_SIZE,
+            prefix_cache: false,
             seed: 0,
         }
     }
@@ -127,6 +138,99 @@ impl SimConfig {
             Some(d) if t >= d.at => &d.after,
             _ => self.class_acceptance.get(&class).unwrap_or(&self.acceptance),
         }
+    }
+}
+
+/// Blocks backing the DES prefix mirror's pool: generous enough that a
+/// trace-scale working set fits and eviction only triggers under real
+/// template churn (the engine-level tests pin the pressure path).
+const SIM_PREFIX_POOL_BLOCKS: usize = 4096;
+
+/// The DES twin of the engine's admission-time prefix sharing: a real
+/// [`PrefixCache`] over a private [`BlockManager`], consulted once per
+/// admitted row.  Rows are virtual — no KV is read — so a mapped chain
+/// is released back immediately and only the *matched token count*
+/// feeds the timing model (the LLM prefill charge shrinks to the
+/// unmatched suffix).  Registration donates a freshly allocated chain
+/// to the trie and drops the row's own references, mirroring an
+/// immediately retired row; the refcount choreography is exactly the
+/// engine's, so the same leak invariant holds (`finish` asserts it).
+pub(crate) struct SimPrefix {
+    cache: PrefixCache,
+    mgr: BlockManager,
+}
+
+impl SimPrefix {
+    pub(crate) fn new(block: usize) -> SimPrefix {
+        SimPrefix {
+            cache: PrefixCache::new(block),
+            mgr: BlockManager::new(SIM_PREFIX_POOL_BLOCKS, block),
+        }
+    }
+
+    /// Prompt tokens whose prefill a cached prefix covers (0 on a miss).
+    /// The mappable span is capped at `len - 1` — at least one suffix
+    /// token must prefill, exactly as the engine caps it.
+    pub(crate) fn lookup_saved(&mut self, ids: &[i32]) -> usize {
+        if ids.len() < 2 {
+            return 0;
+        }
+        match self.cache.lookup(&ids[..ids.len() - 1], &mut self.mgr) {
+            Some(m) => {
+                for &b in &m.blocks {
+                    self.mgr.release(b);
+                }
+                m.tokens
+            }
+            None => 0,
+        }
+    }
+
+    /// Register a freshly prefilled prompt for later arrivals.  Allocates
+    /// the chain the row's table would hold (evicting LRU entries under
+    /// pool pressure), donates it to the trie, releases the row's own
+    /// references.  Skipped silently when eviction cannot make room.
+    pub(crate) fn register(&mut self, ids: &[i32]) {
+        if ids.len() < 2 {
+            return;
+        }
+        let n_blocks = ids.len().div_ceil(self.cache.block_size());
+        let mut chain = Vec::with_capacity(n_blocks);
+        for _ in 0..n_blocks {
+            loop {
+                match self.mgr.alloc() {
+                    Ok(id) => {
+                        chain.push(id);
+                        break;
+                    }
+                    Err(_) => {
+                        if !self.cache.evict_lru(&mut self.mgr) {
+                            for &id in &chain {
+                                self.mgr.release(id);
+                            }
+                            return;
+                        }
+                    }
+                }
+            }
+        }
+        self.cache.insert(ids, &chain, &mut self.mgr);
+        for &id in &chain {
+            self.mgr.release(id);
+        }
+    }
+
+    /// Drain the cache and return its lifetime counters; debug-asserts
+    /// the pool's leak invariant (free list back at capacity).
+    pub(crate) fn finish(mut self) -> PrefixStats {
+        let stats = self.cache.stats();
+        self.cache.evict_all(&mut self.mgr);
+        debug_assert!(
+            self.mgr.stats().is_leak_free(),
+            "DES prefix mirror leaked blocks: {:?}",
+            self.mgr.stats()
+        );
+        stats
     }
 }
 
@@ -265,6 +369,7 @@ pub fn batch_service_time(
         policy,
         prompt_lens,
         &[],
+        None,
         start_t,
         rng,
         &Telemetry::disabled(),
@@ -292,12 +397,20 @@ pub fn batch_service_time(
 /// (`choose_ragged_into`) picks one draft length per live row — a
 /// uniform choice (every non-ragged policy, and `ModelBased` before its
 /// per-class fits diverge) reproduces the classless path bit for bit.
+///
+/// `prefill_lens` overrides the per-row token span the **LLM** prefill
+/// is charged for (parallel to `prompt_lens`): the prefix-sharing
+/// mirror passes each row's unmatched suffix here, while context
+/// lengths — and the SSM prefill, whose dense cache is private — keep
+/// following the full `prompt_lens`.  `None` charges the full prompts,
+/// bit for bit the pre-sharing behaviour.
 #[allow(clippy::too_many_arguments)]
 pub fn batch_service_time_tel(
     cfg: &SimConfig,
     policy: &mut dyn SpeculationPolicy,
     prompt_lens: &[usize],
     classes: &[u8],
+    prefill_lens: Option<&[usize]>,
     start_t: f64,
     rng: &mut Pcg64,
     tel: &Telemetry,
@@ -308,11 +421,15 @@ pub fn batch_service_time_tel(
     let b = prompt_lens.len();
     assert!(b >= 1);
     let mean_prompt = prompt_lens.iter().sum::<usize>() as f64 / b as f64;
+    let prefill_lens = prefill_lens.unwrap_or(prompt_lens);
+    debug_assert_eq!(prefill_lens.len(), b, "one prefill span per row");
+    let mean_prefill = prefill_lens.iter().sum::<usize>() as f64 / b as f64;
     let may_speculate = policy.wants_speculation();
     let mut drift_seen = policy.drift_flushes();
 
-    // prefill (both models when speculating)
-    let mut t = cfg.llm.t_prefill(b, mean_prompt.ceil() as usize);
+    // prefill (both models when speculating; the LLM charge covers only
+    // the rows' unmapped spans, the SSM always ingests the full prompt)
+    let mut t = cfg.llm.t_prefill(b, mean_prefill.ceil() as usize);
     if may_speculate {
         t += cfg.ssm.t_prefill(b, mean_prompt.ceil() as usize);
     }
@@ -575,6 +692,7 @@ fn push_shed(recorder: &mut LatencyRecorder, w: &Waiting, t: f64) {
         deadline: w.item.deadline,
         deferred_rounds: w.deferred,
         shed: true,
+        first_token_at: None,
     });
 }
 
@@ -606,6 +724,26 @@ pub fn simulate_trace_admission_tel(
     trace: &Trace,
     tel: &Telemetry,
 ) -> LatencyRecorder {
+    simulate_trace_admission_tel_prefix(cfg, policy, ctrl, trace, tel).0
+}
+
+/// [`simulate_trace_admission_tel`] returning the prefix-sharing
+/// mirror's lifetime counters next to the records: `Some` when
+/// [`SimConfig::prefix_cache`] is on (hit rate, prefill tokens saved),
+/// `None` when off.  The records themselves are identical to the plain
+/// entry point's.
+pub fn simulate_trace_admission_tel_prefix(
+    cfg: &SimConfig,
+    policy: &mut dyn SpeculationPolicy,
+    ctrl: &mut dyn AdmissionController,
+    trace: &Trace,
+    tel: &Telemetry,
+) -> (LatencyRecorder, Option<PrefixStats>) {
+    let mut prefix = if cfg.prefix_cache {
+        Some(SimPrefix::new(cfg.kv_block.max(1)))
+    } else {
+        None
+    };
     let mut rng = Pcg64::with_stream(cfg.seed, 0x5e5);
     let mut recorder = LatencyRecorder::new();
     let items = &trace.items;
@@ -717,6 +855,17 @@ pub fn simulate_trace_admission_tel(
         epoch += 1;
         let prompt_lens: Vec<usize> = batch.iter().map(|w| w.item.prompt.ids.len()).collect();
         let classes: Vec<u8> = batch.iter().map(|w| w.item.class).collect();
+        // prefix sharing: map each row's cached leading blocks read-only,
+        // so the LLM prefills only the unmatched suffix
+        let prefill_lens: Option<Vec<usize>> = prefix.as_mut().map(|p| {
+            batch
+                .iter()
+                .map(|w| {
+                    let ids = &w.item.prompt.ids;
+                    ids.len() - p.lookup_saved(ids)
+                })
+                .collect()
+        });
         // the shared latency body of this batch-to-completion batch:
         // prefill + per-round phase splits, identical for every member
         let mut body = Waterfall::default();
@@ -725,6 +874,7 @@ pub fn simulate_trace_admission_tel(
             policy,
             &prompt_lens,
             &classes,
+            prefill_lens.as_deref(),
             start,
             &mut rng,
             tel,
@@ -732,6 +882,14 @@ pub fn simulate_trace_admission_tel(
             waiting.len(),
             Some(&mut body),
         );
+        // the batch's prompts are prefilled now: register them for
+        // later arrivals (batchmates never hit each other — exactly the
+        // engine's map-at-admit / insert-after-prefill order)
+        if let Some(p) = prefix.as_mut() {
+            for w in &batch {
+                p.register(&w.item.prompt.ids);
+            }
+        }
         let finish = start + dur;
         for w in &batch {
             if tel.active() {
@@ -760,6 +918,7 @@ pub fn simulate_trace_admission_tel(
                 deadline: w.item.deadline,
                 deferred_rounds: w.deferred,
                 shed: false,
+                first_token_at: Some(start + body.prefill),
             });
         }
         if tel.tracing() {
@@ -767,7 +926,7 @@ pub fn simulate_trace_admission_tel(
         }
         free_at = finish;
     }
-    recorder
+    (recorder, prefix.map(SimPrefix::finish))
 }
 
 /// Virtual-time mirror of the continuous batcher with FIFO admission
@@ -813,6 +972,21 @@ pub fn simulate_trace_continuous_admission_tel(
     trace: &Trace,
     tel: &Telemetry,
 ) -> (LatencyRecorder, Vec<RoundEvent>) {
+    let (rec, rounds, _) =
+        simulate_trace_continuous_admission_tel_prefix(cfg, policy, ctrl, trace, tel);
+    (rec, rounds)
+}
+
+/// [`simulate_trace_continuous_admission_tel`] returning the
+/// prefix-sharing mirror's lifetime counters next to the records:
+/// `Some` when [`SimConfig::prefix_cache`] is on, `None` when off.
+pub fn simulate_trace_continuous_admission_tel_prefix(
+    cfg: &SimConfig,
+    policy: &mut dyn SpeculationPolicy,
+    ctrl: &mut dyn AdmissionController,
+    trace: &Trace,
+    tel: &Telemetry,
+) -> (LatencyRecorder, Vec<RoundEvent>, Option<PrefixStats>) {
     struct SimRow {
         id: u64,
         sent_at: f64,
@@ -826,12 +1000,23 @@ pub fn simulate_trace_continuous_admission_tel(
         deferred: usize,
         /// workload class tag (drives per-class acceptance + ragged `s`)
         class: u8,
+        /// virtual time the row's first token committed (end of its
+        /// admission prefill — "prefill commits the first token")
+        first_token_at: Option<f64>,
         /// accruing latency decomposition: every virtual-clock advance a
         /// live row sits through is charged to exactly one component, so
         /// the sealed waterfall tiles the DES latency with `other == 0`
         wf: Waterfall,
     }
 
+    let mut prefix = if cfg.prefix_cache {
+        Some(SimPrefix::new(cfg.kv_block.max(1)))
+    } else {
+        None
+    };
+    // prompts admitted at the current boundary, pending post-prefill
+    // registration into the prefix mirror
+    let mut admitted_ids: Vec<Vec<i32>> = Vec::new();
     let mut rng = Pcg64::with_stream(cfg.seed, 0xC0_11);
     let mut recorder = LatencyRecorder::new();
     let mut rounds: Vec<RoundEvent> = Vec::new();
@@ -958,11 +1143,22 @@ pub fn simulate_trace_continuous_admission_tel(
         // --- admit the planned prefix, up to the live-capacity cap ---
         let mut n_admit = 0usize;
         let mut plen_sum = 0usize;
+        // prompt tokens the LLM actually prefills (prefix hits shrink a
+        // row's span to its unmatched suffix; == plen_sum when off)
+        let mut prefill_sum = 0usize;
         let n_before = live.len();
         let admit_t = t;
         while n_admit < admit_n && live.len() < cfg.max_batch {
-            let w = waiting.pop_front().expect("planned admits are queued");
+            let mut w = waiting.pop_front().expect("planned admits are queued");
             let plen = w.item.prompt.ids.len();
+            let saved = match prefix.as_mut() {
+                Some(p) => {
+                    let saved = p.lookup_saved(&w.item.prompt.ids);
+                    admitted_ids.push(std::mem::take(&mut w.item.prompt.ids));
+                    saved
+                }
+                None => 0,
+            };
             let mut wf = Waterfall::default();
             wf.queue = admit_t - w.item.send_at;
             wf.deferred_rounds = w.deferred;
@@ -977,9 +1173,11 @@ pub fn simulate_trace_continuous_admission_tel(
                 deadline: w.item.deadline,
                 deferred: w.deferred,
                 class: w.item.class,
+                first_token_at: None,
                 wf,
             });
             plen_sum += plen;
+            prefill_sum += plen - saved;
             n_admit += 1;
         }
         if live.is_empty() {
@@ -988,13 +1186,24 @@ pub fn simulate_trace_continuous_admission_tel(
         }
         if n_admit > 0 {
             let mean_plen = (plen_sum as f64 / n_admit as f64).ceil() as usize;
+            let mean_prefill = (prefill_sum as f64 / n_admit as f64).ceil() as usize;
             let t_pre = t;
-            t += cfg.llm.t_prefill(n_admit, mean_plen);
+            t += cfg.llm.t_prefill(n_admit, mean_prefill);
             if may_speculate {
+                // the SSM's dense cache is private: it ingests the full
+                // prompts even when the LLM mapped shared blocks
                 t += cfg.ssm.t_prefill(n_admit, mean_plen);
             }
             if tel.enabled() {
                 tel.phase(t_pre, t - t_pre, PhaseKind::Prefill);
+            }
+            // the newcomers' prompts are prefilled now: register them
+            // for later arrivals (map-at-admit / insert-after-prefill,
+            // the engine's order — batchmates never hit each other)
+            if let Some(p) = prefix.as_mut() {
+                for ids in admitted_ids.drain(..) {
+                    p.register(&ids);
+                }
             }
             // every live row — resident rows included — sits through the
             // prefill of the newcomers
@@ -1002,6 +1211,8 @@ pub fn simulate_trace_continuous_admission_tel(
             for row in live.iter_mut() {
                 row.wf.prefill += dpre;
             }
+            // the newcomers' first tokens committed with this prefill
+            let t_first = t;
             // epoch reshape: bucket growth carries the resident rows —
             // O(context) re-ingest under Dense, O(1) remap under Paged.
             // The bucket is monotone within an epoch (the real batcher
@@ -1030,6 +1241,7 @@ pub fn simulate_trace_continuous_admission_tel(
             for row in live.iter_mut().rev().take(n_admit) {
                 row.batch_at_admit = b;
                 row.spec_at_admit = s_now;
+                row.first_token_at = Some(t_first);
             }
         }
 
@@ -1183,6 +1395,7 @@ pub fn simulate_trace_continuous_admission_tel(
                     deadline: row.deadline,
                     deferred_rounds: row.deferred,
                     shed: false,
+                    first_token_at: row.first_token_at,
                 });
             } else {
                 i += 1;
@@ -1192,7 +1405,7 @@ pub fn simulate_trace_continuous_admission_tel(
     // hand unconsumed bulk draws back so the rng state matches the
     // sequential-sampling stream exactly
     draws.refund(&mut rng);
-    (recorder, rounds)
+    (recorder, rounds, prefix.map(SimPrefix::finish))
 }
 
 /// Direct per-token latency at a fixed (batch, s) point — the Fig. 1 grid

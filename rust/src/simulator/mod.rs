@@ -23,8 +23,9 @@ pub use cost::{CostModel, ModelProfile};
 pub use des::{
     batch_service_time, batch_service_time_tel, per_token_latency, reshape_cost, round_cost,
     round_cost_ragged, simulate_trace, simulate_trace_admission, simulate_trace_admission_tel,
-    simulate_trace_continuous, simulate_trace_continuous_admission,
-    simulate_trace_continuous_admission_tel, AcceptanceDrift, SimConfig,
+    simulate_trace_admission_tel_prefix, simulate_trace_continuous,
+    simulate_trace_continuous_admission, simulate_trace_continuous_admission_tel,
+    simulate_trace_continuous_admission_tel_prefix, AcceptanceDrift, SimConfig,
 };
 pub use hw::GpuProfile;
 

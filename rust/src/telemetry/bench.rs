@@ -97,6 +97,7 @@ pub fn bench_report(
         0.0
     };
     let slo = recorder.slo_attainment();
+    let (ttft_p50, _, ttft_p99) = recorder.ttft_percentiles();
     Json::obj(vec![
         ("name", Json::Str(name.into())),
         ("requests", Json::Num(recorder.len() as f64)),
@@ -108,6 +109,14 @@ pub fn bench_report(
                 ("mean", Json::Num(recorder.mean_per_token_latency())),
                 ("p50", Json::Num(percentile_sorted(&per_token, 50.0))),
                 ("p99", Json::Num(percentile_sorted(&per_token, 99.0))),
+            ]),
+        ),
+        (
+            "ttft_s",
+            Json::obj(vec![
+                ("mean", Json::Num(recorder.mean_ttft())),
+                ("p50", Json::Num(ttft_p50)),
+                ("p99", Json::Num(ttft_p99)),
             ]),
         ),
         (
@@ -183,6 +192,7 @@ mod tests {
             deadline: None,
             deferred_rounds: 0,
             shed: false,
+            first_token_at: Some(sent),
         }
     }
 

@@ -216,6 +216,8 @@ pub fn chrome_trace(events: &[Event]) -> Json {
                 in_use,
                 capacity,
                 frag,
+                prefix_hits,
+                prefill_saved,
             } => {
                 out.push(Json::obj(vec![
                     ("name", Json::Str("kv_pool".into())),
@@ -228,6 +230,8 @@ pub fn chrome_trace(events: &[Event]) -> Json {
                             ("in_use", Json::Num(*in_use as f64)),
                             ("free", Json::Num(capacity.saturating_sub(*in_use) as f64)),
                             ("frag", Json::Num(*frag)),
+                            ("prefix_hits", Json::Num(*prefix_hits as f64)),
+                            ("prefill_saved", Json::Num(*prefill_saved as f64)),
                         ]),
                     ),
                 ]));

@@ -401,11 +401,34 @@ impl FlightRecorder {
     /// A KV pool sample; exhaustion arms the `KvExhausted` trigger.
     #[inline]
     pub fn record_kv_pool(&self, t: f64, shard: usize, in_use: usize, capacity: usize, frag: f64) {
+        self.record_kv_pool_prefix(t, shard, in_use, capacity, frag, 0, 0);
+    }
+
+    /// [`record_kv_pool`](Self::record_kv_pool) carrying the pool's
+    /// cumulative prefix-sharing counters in the record's spare payload
+    /// slots (0 when the prefix cache is off).
+    #[inline]
+    pub fn record_kv_pool_prefix(
+        &self,
+        t: f64,
+        shard: usize,
+        in_use: usize,
+        capacity: usize,
+        frag: f64,
+        prefix_hits: u64,
+        prefill_saved: u64,
+    ) {
         self.write(
             t,
             shard,
             FlightKind::KvPool,
-            [in_use as u64, capacity as u64, frag.to_bits(), 0, 0],
+            [
+                in_use as u64,
+                capacity as u64,
+                frag.to_bits(),
+                prefix_hits,
+                prefill_saved,
+            ],
         );
         if capacity > 0 && in_use >= capacity {
             self.trigger(t, shard, FlightTrigger::KvExhausted);
@@ -585,6 +608,8 @@ pub fn records_to_events(records: &[FlightRecord]) -> Vec<Event> {
                     in_use: p[0] as usize,
                     capacity: p[1] as usize,
                     frag: f64::from_bits(p[2]),
+                    prefix_hits: p[3],
+                    prefill_saved: p[4],
                 },
                 FlightKind::Trigger => EventKind::Trigger {
                     cause: FlightTrigger::from_code(p[0]),

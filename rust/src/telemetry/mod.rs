@@ -205,11 +205,14 @@ pub enum EventKind {
     Route { id: u64, scores: Vec<f64> },
     /// a policy-fit snapshot (`SpeculationPolicy::snapshot`)
     PolicyFit { snapshot: Json },
-    /// KV block-pool utilization sample
+    /// KV block-pool utilization sample (cumulative prefix-sharing
+    /// counters ride along: 0 when the prefix cache is off)
     KvPool {
         in_use: usize,
         capacity: usize,
         frag: f64,
+        prefix_hits: u64,
+        prefill_saved: u64,
     },
     /// a flight-recorder anomaly trigger marker
     /// ([`flight::FlightTrigger`] label)
@@ -304,11 +307,15 @@ impl Event {
                 in_use,
                 capacity,
                 frag,
+                prefix_hits,
+                prefill_saved,
             } => {
                 pairs.push(("ev", Json::Str("kv_pool".into())));
                 pairs.push(("in_use", Json::Num(*in_use as f64)));
                 pairs.push(("capacity", Json::Num(*capacity as f64)));
                 pairs.push(("frag", Json::Num(*frag)));
+                pairs.push(("prefix_hits", Json::Num(*prefix_hits as f64)));
+                pairs.push(("prefill_saved", Json::Num(*prefill_saved as f64)));
             }
             EventKind::Trigger { cause } => {
                 pairs.push(("ev", Json::Str("trigger".into())));
@@ -861,8 +868,31 @@ impl Telemetry {
 
     /// A KV block-pool utilization sample.
     pub fn kv_pool(&self, t: f64, in_use: usize, capacity: usize, frag: f64) {
+        self.kv_pool_prefix(t, in_use, capacity, frag, 0, 0);
+    }
+
+    /// A KV block-pool sample carrying the pool's cumulative
+    /// prefix-sharing counters (hits and prefill tokens saved so far) —
+    /// the prefix-cache-aware variant of [`Telemetry::kv_pool`].
+    pub fn kv_pool_prefix(
+        &self,
+        t: f64,
+        in_use: usize,
+        capacity: usize,
+        frag: f64,
+        prefix_hits: u64,
+        prefill_saved: u64,
+    ) {
         if let Some(fl) = &self.flight {
-            fl.record_kv_pool(t, self.shard, in_use, capacity, frag);
+            fl.record_kv_pool_prefix(
+                t,
+                self.shard,
+                in_use,
+                capacity,
+                frag,
+                prefix_hits,
+                prefill_saved,
+            );
         }
         if self.inner.is_none() {
             return;
@@ -870,6 +900,10 @@ impl Telemetry {
         self.gauge("specbatch_kv_blocks_in_use", in_use as f64);
         self.gauge("specbatch_kv_blocks_capacity", capacity as f64);
         self.gauge("specbatch_kv_internal_frag", frag);
+        if prefix_hits > 0 || prefill_saved > 0 {
+            self.gauge("specbatch_prefix_hits", prefix_hits as f64);
+            self.gauge("specbatch_prefix_prefill_saved", prefill_saved as f64);
+        }
         self.push(
             t,
             0.0,
@@ -877,6 +911,8 @@ impl Telemetry {
                 in_use,
                 capacity,
                 frag,
+                prefix_hits,
+                prefill_saved,
             },
         );
     }

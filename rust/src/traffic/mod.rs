@@ -128,6 +128,74 @@ impl SloSpec {
     }
 }
 
+/// Multi-tenant shared-prefix workload shape: every request's prompt is
+/// rebuilt as `tenant system prompt ++ template body ++ fresh user
+/// suffix`.  Tenants are drawn uniformly; templates within a tenant
+/// follow a Zipf popularity law (a few templates dominate, the regime
+/// where a prefix cache pays).  All prompt material is a deterministic
+/// function of (tenant, template) except the user suffix, so requests of
+/// the same (tenant, template) share `system_len + template_len` leading
+/// tokens exactly — what the prefix trie deduplicates block-for-block.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SharedPrefixSpec {
+    /// tenants, each with its own system prompt (uniform assignment)
+    pub tenants: usize,
+    /// prompt templates per tenant (Zipf popularity)
+    pub templates: usize,
+    /// tokens in a tenant's system prompt
+    pub system_len: usize,
+    /// tokens in a template body
+    pub template_len: usize,
+    /// fresh (randomly sampled) per-request suffix tokens
+    pub user_len: usize,
+    /// Zipf exponent for template popularity (0 = uniform)
+    pub zipf: f64,
+    /// token-id space: generated ids land in `[4, vocab)`, matching the
+    /// stub's reserved specials (pad/bos/eos/unk at 0..=3)
+    pub vocab: usize,
+}
+
+impl Default for SharedPrefixSpec {
+    fn default() -> Self {
+        // 96 shared leading tokens = 6 full 16-token KV blocks per
+        // (tenant, template), over a 4-token unique tail
+        SharedPrefixSpec {
+            tenants: 4,
+            templates: 4,
+            system_len: 48,
+            template_len: 48,
+            user_len: 4,
+            zipf: 1.2,
+            vocab: 64,
+        }
+    }
+}
+
+impl SharedPrefixSpec {
+    /// Length of every rebuilt prompt.
+    pub fn prompt_len(&self) -> usize {
+        self.system_len + self.template_len + self.user_len
+    }
+
+    /// Tokens two same-(tenant, template) prompts share.
+    pub fn shared_len(&self) -> usize {
+        self.system_len + self.template_len
+    }
+}
+
+/// Deterministic token in `[4, vocab)` from a (stream, lane, position)
+/// triple — how tenant system prompts and template bodies are minted
+/// without a PRNG (their content must be a pure function of identity).
+fn prefix_token(stream: u64, lane: u64, pos: u64, vocab: usize) -> i32 {
+    let h = stream
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ lane.wrapping_mul(0xC2B2_AE3D_27D4_EB4F)
+        ^ pos.wrapping_mul(0x1656_67B1_9E37_79F9);
+    // avalanche so neighbouring positions don't correlate
+    let h = (h ^ (h >> 33)).wrapping_mul(0xFF51_AFD7_ED55_8CCD);
+    4 + (h % (vocab as u64 - 4)) as i32
+}
+
 /// One scheduled request.
 #[derive(Debug, Clone)]
 pub struct TraceItem {
@@ -224,6 +292,67 @@ impl Trace {
                 })
                 .collect(),
         }
+    }
+
+    /// Rebuild every prompt as a multi-tenant shared-prefix prompt (see
+    /// [`SharedPrefixSpec`]).  Layered like [`Trace::with_deadlines`]: a
+    /// **separate** PRNG stream samples tenant/template/user-suffix, and
+    /// ids, send times, deadlines and classes are untouched, so the same
+    /// arrival schedule replays cache-on vs cache-off (the paper's
+    /// one-sequence rule).
+    pub fn with_shared_prefix(&self, spec: &SharedPrefixSpec, seed: u64) -> Trace {
+        assert!(spec.tenants > 0, "need at least one tenant");
+        assert!(spec.templates > 0, "need at least one template");
+        assert!(spec.user_len > 0, "each request needs a unique suffix");
+        assert!(spec.vocab > 4, "vocab must clear the reserved specials");
+        let mut rng = Pcg64::with_stream(seed, 0x7072_6566_6978); // "prefix"
+        // Zipf popularity over templates: weight(rank j) = 1/(j+1)^zipf
+        let weights: Vec<f64> = (0..spec.templates)
+            .map(|j| 1.0 / ((j + 1) as f64).powf(spec.zipf))
+            .collect();
+        let total: f64 = weights.iter().sum();
+        let items = self
+            .items
+            .iter()
+            .map(|i| {
+                let tenant = rng.next_below(spec.tenants);
+                let mut u = rng.next_f64() * total;
+                let mut template = spec.templates - 1;
+                for (j, w) in weights.iter().enumerate() {
+                    if u < *w {
+                        template = j;
+                        break;
+                    }
+                    u -= *w;
+                }
+                let mut ids = Vec::with_capacity(spec.prompt_len());
+                for k in 0..spec.system_len {
+                    ids.push(prefix_token(0xA11CE, tenant as u64, k as u64, spec.vocab));
+                }
+                for k in 0..spec.template_len {
+                    ids.push(prefix_token(
+                        0xB0B0 + tenant as u64,
+                        template as u64,
+                        k as u64,
+                        spec.vocab,
+                    ));
+                }
+                for _ in 0..spec.user_len {
+                    ids.push(4 + rng.next_below(spec.vocab - 4) as i32);
+                }
+                TraceItem {
+                    id: i.id,
+                    send_at: i.send_at,
+                    deadline: i.deadline,
+                    class: i.class,
+                    prompt: Prompt {
+                        ids,
+                        text: format!("tenant{tenant}/template{template}"),
+                    },
+                }
+            })
+            .collect();
+        Trace { items }
     }
 
     pub fn len(&self) -> usize {
@@ -486,6 +615,75 @@ mod tests {
             .items
             .iter()
             .all(|i| i.class == 0));
+    }
+
+    /// The shared-prefix rebuild rides on top of the schedule (ids, send
+    /// times, deadlines, classes untouched), produces identical leading
+    /// tokens within a (tenant, template) bucket, distinct system prompts
+    /// across tenants, and a Zipf-skewed template popularity.
+    #[test]
+    fn shared_prefix_rides_on_top_of_the_schedule() {
+        let p = TrafficPattern::Stationary {
+            interval: 0.05,
+            cv: 1.0,
+        };
+        let base = Trace::generate(&p, &pool(), 400, 21).with_deadlines(&SloSpec::new(2.0, 2.0), 4);
+        let spec = SharedPrefixSpec::default();
+        let t = base.with_shared_prefix(&spec, 21);
+        assert_eq!(t.len(), base.len());
+        for (b, s) in base.items.iter().zip(&t.items) {
+            assert_eq!(b.id, s.id);
+            assert_eq!(b.send_at, s.send_at);
+            assert_eq!(b.deadline, s.deadline);
+            assert_eq!(b.class, s.class);
+            assert_eq!(s.prompt.ids.len(), spec.prompt_len());
+            assert!(s.prompt.ids.iter().all(|&id| (4..64).contains(&id)));
+        }
+        // deterministic per seed, distinct across seeds
+        let again = base.with_shared_prefix(&spec, 21);
+        let other = base.with_shared_prefix(&spec, 22);
+        let ids = |t: &Trace| {
+            t.items
+                .iter()
+                .map(|i| i.prompt.ids.clone())
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(ids(&t), ids(&again));
+        assert_ne!(ids(&t), ids(&other));
+
+        // same (tenant, template) ⇒ identical shared span, unique tails
+        use std::collections::HashMap;
+        let mut by_bucket: HashMap<&str, Vec<&TraceItem>> = HashMap::new();
+        for i in &t.items {
+            by_bucket.entry(i.prompt.text.as_str()).or_default().push(i);
+        }
+        let shared = spec.shared_len();
+        for group in by_bucket.values().filter(|g| g.len() > 1) {
+            let head = &group[0].prompt.ids[..shared];
+            for i in &group[1..] {
+                assert_eq!(&i.prompt.ids[..shared], head, "shared span diverged");
+            }
+        }
+        // tenants got distinct system prompts
+        let sys: std::collections::BTreeSet<Vec<i32>> = t
+            .items
+            .iter()
+            .map(|i| i.prompt.ids[..spec.system_len].to_vec())
+            .collect();
+        assert!(sys.len() > 1, "all tenants share one system prompt");
+        // Zipf skew: rank-0 templates outnumber rank-(last) templates
+        let count = |suffix: &str| {
+            t.items
+                .iter()
+                .filter(|i| i.prompt.text.ends_with(suffix))
+                .count()
+        };
+        assert!(
+            count("template0") > count("template3"),
+            "template popularity is not skewed: {} vs {}",
+            count("template0"),
+            count("template3")
+        );
     }
 
     #[test]

@@ -108,6 +108,7 @@ fn run_schedule(s: &Schedule, layout: KvLayout) -> RunOutcome {
     finished.sort_by_key(|(id, _)| *id);
     let project = |e: &RoundEvent| (e.epoch, e.live, e.queued, e.s, e.accepted);
     let (reingested, remapped) = batcher.kv_transfer_totals();
+    e.clear_prefix_cache(); // cached prefix blocks are not leaks
     RunOutcome {
         finished,
         rounds: batcher.timeline.iter().map(project).collect(),

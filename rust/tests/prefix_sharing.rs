@@ -1,0 +1,382 @@
+//! Prefix-sharing acceptance tests (ISSUE PR 10 tentpole).
+//!
+//! Pins the four contracts of the prefix-sharing KV cache:
+//!
+//! 1. **Output transparency** — the cache is a pure prefill optimisation:
+//!    a paged stub engine generates bit-identical tokens with the cache
+//!    on and off, including on warm re-runs that map every shared block.
+//! 2. **Leak invariant** — after any interleaving of admit / COW /
+//!    retire / evict, releasing the row references and draining the trie
+//!    returns the pool free list to capacity (randomised schedules over
+//!    several seeds; a double release would trip the manager's refcount
+//!    accounting long before the final audit).
+//! 3. **DES payoff gate** — on the multi-tenant shared-prefix workload
+//!    (seeds {2, 3, 4}) the admission-time mirror cuts charged prefill
+//!    tokens by >= 10x and strictly improves mean TTFT vs the same trace
+//!    served without sharing.
+//! 4. **Off == baseline** — with `prefix_cache: false` the `_prefix` DES
+//!    entry points return no stats and exactly the plain variants'
+//!    output, so every pre-existing pinned-seed result is untouched.
+
+use specbatch::admission::Fifo;
+use specbatch::config::{AdmissionSpec, PolicySpec, RouterSpec};
+use specbatch::admission::replicate_controllers;
+use specbatch::cluster::sim::simulate_trace_cluster_admission_tel;
+use specbatch::cluster::{build_router, replicate_policies};
+use specbatch::engine::{Engine, EngineConfig};
+use specbatch::kvcache::prefix::PrefixCache;
+use specbatch::kvcache::{BlockManager, KvLayout, DEFAULT_BLOCK_SIZE};
+use specbatch::policy::Fixed;
+use specbatch::simulator::{
+    simulate_trace_continuous_admission_tel, simulate_trace_continuous_admission_tel_prefix,
+    AcceptanceProcess, CostModel, GpuProfile, ModelProfile, SimConfig,
+};
+use specbatch::telemetry::Telemetry;
+use specbatch::testkit::stub::StubSpec;
+use specbatch::traffic::{SharedPrefixSpec, Trace, TrafficPattern};
+use specbatch::util::prng::Pcg64;
+
+const BS: usize = DEFAULT_BLOCK_SIZE;
+
+// ------------------------------------------------------ output transparency
+
+fn stub_engine(prefix_cache: bool) -> Engine<'static> {
+    Engine::stub(
+        StubSpec {
+            max_prompt: 64,
+            ..StubSpec::default()
+        },
+        EngineConfig {
+            kv_layout: KvLayout::Paged,
+            prefix_cache,
+            ..EngineConfig::default()
+        },
+    )
+    .unwrap()
+}
+
+/// Four prompts sharing a two-block system prefix with distinct tails —
+/// plus one disjoint prompt so misses run through the same epoch.
+fn shared_prompts() -> Vec<Vec<i32>> {
+    let system: Vec<i32> = (0..2 * BS as i32).map(|i| 5 + (i % 50)).collect();
+    let mut prompts: Vec<Vec<i32>> = (0..4)
+        .map(|t| {
+            let mut p = system.clone();
+            p.extend((0..6).map(|i| 7 + t * 9 + i));
+            p
+        })
+        .collect();
+    prompts.push((0..20).map(|i| 60 - (i % 40)).collect());
+    prompts
+}
+
+#[test]
+fn cache_on_generates_bit_identical_tokens() {
+    let prompts = shared_prompts();
+    let cold = stub_engine(false)
+        .generate_batch(&prompts, 24, &mut Fixed(3))
+        .unwrap();
+
+    let mut e = stub_engine(true);
+    assert!(e.prefix_enabled());
+    let first = e.generate_batch(&prompts, 24, &mut Fixed(3)).unwrap();
+    assert_eq!(cold.tokens, first.tokens, "cold pass must not change tokens");
+
+    // warm pass: every shared block now maps; output still identical
+    let second = e.generate_batch(&prompts, 24, &mut Fixed(3)).unwrap();
+    assert_eq!(cold.tokens, second.tokens, "warm pass must not change tokens");
+    let stats = e.prefix_stats().expect("enabled engine reports stats");
+    assert!(stats.prefix_hits > 0, "warm pass should map shared blocks");
+    assert!(stats.prefill_tokens_saved as usize >= 2 * BS);
+
+    // leak audit: the trie's references are the only outstanding ones
+    e.clear_prefix_cache();
+    let kv = e.kv_block_stats().expect("paged engine");
+    assert!(kv.is_leak_free(), "blocks leaked: {kv:?}");
+}
+
+#[test]
+fn disabled_engine_reports_no_prefix_state() {
+    let mut e = stub_engine(false);
+    assert!(!e.prefix_enabled());
+    assert!(e.prefix_stats().is_none());
+    e.generate_batch(&shared_prompts(), 8, &mut Fixed(2)).unwrap();
+    assert!(e.prefix_stats().is_none());
+}
+
+// ----------------------------------------------------------- leak invariant
+
+/// One randomised admit/COW/retire/evict schedule against the real
+/// cache + pool pair, with row-held references tracked on the side the
+/// way an engine block table would hold them.
+fn run_schedule(seed: u64, cap: usize, ops: usize) {
+    let mut mgr = BlockManager::new(cap, BS);
+    let mut cache = PrefixCache::new(BS);
+    let mut rng = Pcg64::new(seed);
+    let mut rows: Vec<Vec<u32>> = Vec::new();
+
+    // two tenant groups x four templates: 40-token prompts, the first
+    // 32 shared within a group
+    let prompts: Vec<Vec<i32>> = (0..8)
+        .map(|t| {
+            let mut p: Vec<i32> = (0..2 * BS as i32).map(|i| 5 + (t % 2) * 31 + i).collect();
+            p.extend((0..8).map(|i| 300 + t * 11 + i));
+            p
+        })
+        .collect();
+
+    for _ in 0..ops {
+        match rng.next_u64() % 10 {
+            // admit: lookup, COW a mid-block tail, prefill the suffix,
+            // register the chain (the engine's exact choreography)
+            0..=5 => {
+                let p = &prompts[(rng.next_u64() as usize) % prompts.len()];
+                let mappable = &p[..p.len() - 1];
+                let (mut owned, covered) = match cache.lookup(mappable, &mut mgr) {
+                    Some(m) => (m.blocks, m.tokens),
+                    None => (Vec::new(), 0),
+                };
+                let mut aborted = false;
+                if covered % BS != 0 {
+                    // shared partially filled tail is about to be written
+                    let shared = owned.pop().expect("partial coverage has a tail");
+                    match cache.cow_tail(&mut mgr, shared) {
+                        Ok(fresh) => owned.push(fresh),
+                        Err(_) => aborted = true,
+                    }
+                }
+                let total = p.len().div_ceil(BS);
+                while !aborted && owned.len() < total {
+                    match mgr.alloc() {
+                        Ok(id) => owned.push(id),
+                        Err(_) => {
+                            if !cache.evict_lru(&mut mgr) {
+                                aborted = true;
+                            }
+                        }
+                    }
+                }
+                if aborted {
+                    for b in owned.drain(..) {
+                        mgr.release(b);
+                    }
+                    continue;
+                }
+                cache.insert(p, &owned, &mut mgr);
+                rows.push(owned);
+            }
+            // retire a random row
+            6..=7 => {
+                if !rows.is_empty() {
+                    let i = (rng.next_u64() as usize) % rows.len();
+                    for b in rows.swap_remove(i) {
+                        mgr.release(b);
+                    }
+                }
+            }
+            // spontaneous LRU eviction
+            8 => {
+                cache.evict_lru(&mut mgr);
+            }
+            // pressure: demand some free headroom
+            _ => {
+                cache.evict_until_free(&mut mgr, 1 + (rng.next_u64() as usize) % 4);
+            }
+        }
+        // running consistency: the pool's books must always balance
+        let s = mgr.stats();
+        assert_eq!(s.in_use + s.free, s.capacity, "seed {seed}: {s:?}");
+    }
+
+    for row in rows.drain(..) {
+        for b in row {
+            mgr.release(b);
+        }
+    }
+    cache.evict_all(&mut mgr);
+    assert_eq!(cache.cached_blocks(), 0, "seed {seed}: trie not drained");
+    assert_eq!(
+        mgr.free_blocks(),
+        cap,
+        "seed {seed}: free list short of capacity"
+    );
+    let s = mgr.stats();
+    assert!(s.is_leak_free(), "seed {seed}: {s:?}");
+}
+
+#[test]
+fn random_admit_cow_retire_evict_schedules_are_leak_free() {
+    for seed in 0..12u64 {
+        // tight pool: evictions and allocation pressure both fire
+        run_schedule(seed, 24, 300);
+        // roomy pool: the LRU reserve grows and drains via evict_all
+        run_schedule(seed + 100, 96, 300);
+    }
+}
+
+// ---------------------------------------------------------- DES payoff gate
+
+fn payoff_cfg(seed: u64, prefix_cache: bool) -> SimConfig {
+    SimConfig {
+        llm: CostModel::new(ModelProfile::OPT_6_7B, GpuProfile::RTX3090),
+        ssm: CostModel::new(ModelProfile::OPT_125M, GpuProfile::RTX3090),
+        acceptance: AcceptanceProcess::paper(),
+        class_acceptance: Default::default(),
+        drift: None,
+        max_batch: 16,
+        max_new_tokens: 32,
+        host_overhead: 0.2e-3,
+        kv_layout: KvLayout::Paged,
+        kv_block: DEFAULT_BLOCK_SIZE,
+        prefix_cache,
+        seed,
+    }
+}
+
+fn shared_trace(seed: u64, n: usize) -> Trace {
+    let pool = vec![specbatch::dataset::Prompt {
+        ids: vec![1; 8],
+        text: String::new(),
+    }];
+    let pattern = TrafficPattern::Stationary {
+        interval: 0.05,
+        cv: 1.0,
+    };
+    Trace::generate(&pattern, &pool, n, seed)
+        .with_shared_prefix(&SharedPrefixSpec::default(), seed)
+}
+
+#[test]
+fn shared_prefix_traffic_cuts_prefill_10x_and_improves_ttft() {
+    for seed in [2u64, 3, 4] {
+        // enough requests that the 16 cold (tenant, template) misses are
+        // amortised well past the 10x bar (~200 would only reach ~9x)
+        let trace = shared_trace(seed, 600);
+        let total_plen: usize = trace.items.iter().map(|it| it.prompt.ids.len()).sum();
+
+        let (rec_off, _, stats_off) = simulate_trace_continuous_admission_tel_prefix(
+            &payoff_cfg(seed, false),
+            &mut Fixed(2),
+            &mut Fifo,
+            &trace,
+            &Telemetry::disabled(),
+        );
+        assert!(stats_off.is_none(), "cache off must not build an index");
+
+        let (rec_on, _, stats_on) = simulate_trace_continuous_admission_tel_prefix(
+            &payoff_cfg(seed, true),
+            &mut Fixed(2),
+            &mut Fifo,
+            &trace,
+            &Telemetry::disabled(),
+        );
+        let stats = stats_on.expect("cache on returns stats");
+
+        let charged_off = total_plen as f64;
+        let charged_on = charged_off - stats.prefill_tokens_saved as f64;
+        assert!(charged_on > 0.0, "seed {seed}: over-saving is impossible");
+        let cut = charged_off / charged_on;
+        assert!(
+            cut >= 10.0,
+            "seed {seed}: prefill cut {cut:.2}x below the 10x bar \
+             ({charged_off} -> {charged_on} tokens)"
+        );
+        assert!(stats.hit_rate() > 0.8, "seed {seed}: {stats:?}");
+
+        let (ttft_off, ttft_on) = (rec_off.mean_ttft(), rec_on.mean_ttft());
+        assert!(
+            ttft_on < ttft_off,
+            "seed {seed}: TTFT must strictly improve ({ttft_on:.4}s vs {ttft_off:.4}s)"
+        );
+        // sharing is a prefill discount; batch regrouping at the earlier
+        // round boundaries allows tiny per-request wiggle, not regressions
+        assert!(rec_on.summary().mean <= rec_off.summary().mean * 1.05);
+        assert_eq!(rec_on.len(), rec_off.len());
+    }
+}
+
+#[test]
+fn cluster_shards_roll_their_prefix_stats_into_the_report() {
+    let seed = 3u64;
+    let trace = shared_trace(seed, 300);
+    let workers = 2;
+    let mut policies =
+        replicate_policies(&PolicySpec::Fixed(2), None, workers).expect("no LUT needed");
+    let mut ctrls = replicate_controllers(AdmissionSpec::Fifo, workers);
+    let mut router = build_router(RouterSpec::RoundRobin, seed);
+    let report = simulate_trace_cluster_admission_tel(
+        &payoff_cfg(seed, true),
+        &mut policies,
+        &mut ctrls,
+        router.as_mut(),
+        &trace,
+        &Telemetry::disabled(),
+    );
+    let stats = report.prefix.expect("per-shard caches merge into one line");
+    assert!(stats.lookups >= trace.len() as u64);
+    assert!(stats.prefix_hits > 0, "{stats:?}");
+    assert!(stats.prefill_tokens_saved > 0, "{stats:?}");
+
+    // cache off: no stats object at all
+    let mut policies =
+        replicate_policies(&PolicySpec::Fixed(2), None, workers).expect("no LUT needed");
+    let mut ctrls = replicate_controllers(AdmissionSpec::Fifo, workers);
+    let mut router = build_router(RouterSpec::RoundRobin, seed);
+    let report_off = simulate_trace_cluster_admission_tel(
+        &payoff_cfg(seed, false),
+        &mut policies,
+        &mut ctrls,
+        router.as_mut(),
+        &trace,
+        &Telemetry::disabled(),
+    );
+    assert!(report_off.prefix.is_none());
+}
+
+// --------------------------------------------------------- off == baseline
+
+#[test]
+fn prefix_entry_points_with_cache_off_match_the_plain_variants() {
+    for seed in [2u64, 3, 4] {
+        let cfg = payoff_cfg(seed, false);
+        let trace = shared_trace(seed, 150);
+        let (rec_a, rounds_a) = simulate_trace_continuous_admission_tel(
+            &cfg,
+            &mut Fixed(2),
+            &mut Fifo,
+            &trace,
+            &Telemetry::disabled(),
+        );
+        let (rec_b, rounds_b, stats) = simulate_trace_continuous_admission_tel_prefix(
+            &cfg,
+            &mut Fixed(2),
+            &mut Fifo,
+            &trace,
+            &Telemetry::disabled(),
+        );
+        assert!(stats.is_none());
+        assert_eq!(rounds_a.len(), rounds_b.len());
+        assert_eq!(rec_a.len(), rec_b.len());
+        for (a, b) in rec_a.records().iter().zip(rec_b.records()) {
+            assert_eq!(a.latency().to_bits(), b.latency().to_bits(), "seed {seed}");
+        }
+    }
+}
+
+// ----------------------------------------------------- shared-prefix trace
+
+#[test]
+fn with_shared_prefix_is_deterministic_and_shaped_as_specified() {
+    let spec = SharedPrefixSpec::default();
+    let a = shared_trace(7, 100);
+    let b = shared_trace(7, 100);
+    for (x, y) in a.items.iter().zip(&b.items) {
+        assert_eq!(x.prompt.ids, y.prompt.ids, "same seed, same prompts");
+    }
+    for it in &a.items {
+        assert_eq!(it.prompt.ids.len(), spec.prompt_len());
+    }
+    // distinct user tails keep prompts from being outright duplicates
+    // while the shared span stays block-aligned cacheable
+    assert!(spec.shared_len() >= 2 * DEFAULT_BLOCK_SIZE);
+}

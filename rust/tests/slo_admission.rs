@@ -350,6 +350,7 @@ fn shed_requests_never_occupy_kv_blocks() {
         let (_, sheds) = batcher.admission_totals();
         assert_eq!(sheds, 4);
         if layout == KvLayout::Paged {
+            engine.clear_prefix_cache(); // cached prefix blocks are not leaks
             let stats = engine.kv_block_stats().expect("paged engine");
             assert!(stats.is_leak_free(), "blocks leaked under {layout:?}: {stats:?}");
         } else {
